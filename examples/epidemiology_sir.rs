@@ -1,0 +1,96 @@
+//! Epidemiology use case (§3.1/§3.4, Fig. 5 left): distributed spatial SIR
+//! run verified against the analytic Kermack–McKendrick ODE, including the
+//! paper's two-line distributed-results pattern (`SumOverAllRanks` — here
+//! the launcher's cross-rank stat combination — and rank-0-only file
+//! output).
+//!
+//! ```bash
+//! cargo run --release --example epidemiology_sir
+//! ```
+
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::models::analytic::{nrmse, pearson, sir_ode, SirParams};
+use teraagent::models::epidemiology::Epidemiology;
+use teraagent::space::BoundaryCondition;
+use teraagent::vis::export::write_stats_csv;
+
+fn main() {
+    let cfg = SimConfig {
+        name: "epidemiology".into(),
+        num_agents: 10_000,
+        iterations: 120,
+        space_half_extent: 32.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Toroidal,
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    println!("=== SIR epidemiology across {} ranks ===", cfg.mode.ranks());
+    let model_probe = Epidemiology::new(&cfg);
+    let (beta_guess, gamma) = (
+        // Effective contact rate: mean neighbors within radius × p_inf.
+        {
+            let vol = (2.0 * cfg.space_half_extent).powi(3);
+            let density = cfg.num_agents as f64 / vol;
+            let sphere = 4.0 / 3.0 * std::f64::consts::PI * cfg.interaction_radius.powi(3);
+            density * sphere * model_probe.infection_prob
+        },
+        1.0 / model_probe.recovery_iters as f64,
+    );
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+
+    // Rank-0-only output (the engine already combined stats across ranks).
+    let names = ["susceptible", "infected", "recovered"];
+    write_stats_csv("output/sir_simulated.csv", &names, &result.stats_history).unwrap();
+
+    // Analytic reference: β fitted over a grid around the well-mixed
+    // estimate (the spatial process has a lower effective contact rate;
+    // the verification claim is that the dynamics live in the SIR family).
+    let first = &result.stats_history[0];
+    let sim_r_fit: Vec<f64> = result.stats_history.iter().map(|s| s[2]).collect();
+    let mut best = (f64::NEG_INFINITY, beta_guess);
+    for k in 0..40 {
+        let b = beta_guess * (0.3 + 0.05 * k as f64);
+        let trial = sir_ode(first[0], first[1], first[2], SirParams { beta: b, gamma }, 1.0, cfg.iterations - 1);
+        let r: Vec<f64> = trial.iter().map(|x| x[2]).collect();
+        let c = pearson(&sim_r_fit, &r);
+        if c > best.0 {
+            best = (c, b);
+        }
+    }
+    let beta_fit = best.1;
+    println!("beta: well-mixed estimate {beta_guess:.3}, fitted {beta_fit:.3}");
+    let ode = sir_ode(
+        first[0],
+        first[1],
+        first[2],
+        SirParams { beta: beta_fit, gamma },
+        1.0,
+        cfg.iterations - 1,
+    );
+    let ode_rows: Vec<Vec<f64>> = ode.iter().map(|r| r.to_vec()).collect();
+    write_stats_csv("output/sir_analytic.csv", &names, &ode_rows).unwrap();
+
+    println!("iter |  sim S     sim I     sim R  |  ode S     ode I     ode R");
+    for i in (0..cfg.iterations).step_by(15) {
+        let s = &result.stats_history[i];
+        let o = &ode[i];
+        println!(
+            "{i:>4} | {:>7.0} {:>8.0} {:>8.0} | {:>7.0} {:>8.0} {:>8.0}",
+            s[0], s[1], s[2], o[0], o[1], o[2]
+        );
+    }
+    // Shape agreement (Fig. 5's "TeraAgent produces the same results").
+    let sim_r: Vec<f64> = result.stats_history.iter().map(|s| s[2]).collect();
+    let ode_r: Vec<f64> = ode.iter().map(|r| r[2]).collect();
+    let err = nrmse(&ode_r, &sim_r);
+    let corr = pearson(&ode_r, &sim_r);
+    println!("\nR-curve shape vs analytic ODE: NRMSE={err:.3} pearson={corr:.4}");
+    println!("(spatial SIR deviates from the well-mixed ODE by design; shape must match)");
+    let total: f64 = result.stats_history.last().unwrap().iter().sum();
+    assert_eq!(total as usize, cfg.num_agents, "population conserved");
+    assert!(corr > 0.97, "recovered-curve shape must track the ODE: {corr}");
+    assert!(err < 0.2, "NRMSE too large: {err}");
+    println!("epidemiology_sir OK (CSV in output/)");
+}

@@ -1,0 +1,70 @@
+"""AOT export: lower the L2 models to HLO text for the rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowering uses ``return_tuple=True``; the rust side unwraps with
+``to_tuple``. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--n", type=int, default=model.AOT_N)
+    p.add_argument("--k", type=int, default=model.AOT_K)
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    mech_path = os.path.join(args.out_dir, "mechanics.hlo.txt")
+    n = export(model.mechanics_step, model.mechanics_example_args(args.n, args.k), mech_path)
+    print(f"wrote {n} chars to {mech_path}")
+
+    sir_path = os.path.join(args.out_dir, "sir.hlo.txt")
+    n = export(model.sir_step, model.sir_example_args(args.n), sir_path)
+    print(f"wrote {n} chars to {sir_path}")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(
+            "mechanics.hlo.txt: mechanics_step "
+            f"N={args.n} K={args.k} dtype=f32 "
+            "inputs=pos(N,3),diam(N),npos(N,K,3),ndiam(N,K),mask(N,K),params(4) "
+            "outputs=disp(N,3),new_pos(N,3)\n"
+            "sir.hlo.txt: sir_step "
+            f"N={args.n} dtype=f32 "
+            "inputs=state(N,2),n_infected(N),rand(N),params(2) outputs=state(N,2)\n"
+        )
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""L1 — Pallas kernel: pairwise mechanical-interaction forces.
+
+The compute hot-spot of every iteration of a BioDynaMo/TeraAgent-style
+simulation is the per-agent neighbor force loop (`CalculateDisplacement`):
+for each agent, accumulate sphere contact forces against its K gathered
+neighbors and integrate one explicit Euler step.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper is CPU/MPI — there
+is no CUDA kernel to port — so the hot loop is expressed as a Pallas kernel
+tiled along the agent batch dimension. Each grid step loads one
+``(BLOCK_N, K)`` tile of gathered neighbor attributes into VMEM and does
+vectorized VPU arithmetic (the kernel is memory-bound; the MXU is not the
+target unit). ``interpret=True`` is mandatory on CPU: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Force model (shared verbatim with the rust native oracle in
+``rust/src/runtime/mechanics.rs`` and the jnp reference in ``ref.py``)::
+
+    delta    = pos_i - npos_j
+    dist     = sqrt(sum(delta^2) + EPS)
+    r_sum    = 0.5 * (diam_i + ndiam_j)
+    overlap  = r_sum - dist
+    valid_j  = mask_j > 0                      # 0 marks padding slots
+    f_mag    = K_REP * max(overlap, 0) * valid_j
+               - K_ADH * max(min(dist - r_sum, r_sum), 0) * mask_j
+    force_i += f_mag * delta / dist
+    disp_i   = clamp(DT * force_i, -MAX_DISP, MAX_DISP)
+
+The mask doubles as the *per-pair adhesion scale*: 1.0 is plain adhesion,
+values in (0, 1) weaken it (differential adhesion — the mechanism behind
+the cell-sorting benchmark: same-type pairs get mask 1.0, cross-type pairs
+a smaller value), and 0 disables the pair entirely (padding). Params are
+passed as a ``(4,)`` tensor ``[k_rep, k_adh, dt, max_disp]`` so the same
+compiled artifact serves all model configurations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Distance epsilon preventing 0/0 for coincident agents.
+EPS = 1e-12
+
+# Default tile size along the agent batch dimension. 128 keeps the VMEM
+# footprint of one tile at K=16 around (128*16*4 + 128*16*3*4)*4B ≈ 130 KiB
+# — far under the ~16 MiB VMEM budget, leaving room for double buffering.
+BLOCK_N = 128
+
+
+def _force_tile(pos, diam, npos, ndiam, mask, params):
+    """Shared tile math: works on (B,3)/(B,)/(B,K,3)/(B,K)/(B,K) arrays."""
+    k_rep, k_adh, dt, max_disp = params[0], params[1], params[2], params[3]
+    delta = pos[:, None, :] - npos  # (B, K, 3)
+    dist = jnp.sqrt(jnp.sum(delta * delta, axis=-1) + EPS)  # (B, K)
+    r_sum = 0.5 * (diam[:, None] + ndiam)  # (B, K)
+    overlap = r_sum - dist
+    valid = (mask > 0.0).astype(pos.dtype)  # padding gate
+    f_rep = k_rep * jnp.maximum(overlap, 0.0)
+    f_adh = k_adh * jnp.maximum(jnp.minimum(dist - r_sum, r_sum), 0.0)
+    f_mag = f_rep * valid - f_adh * mask  # (B, K); mask scales adhesion
+    unit = delta / dist[:, :, None]
+    force = jnp.sum(f_mag[:, :, None] * unit, axis=1)  # (B, 3)
+    disp = dt * force
+    return jnp.clip(disp, -max_disp, max_disp)
+
+
+def _kernel(pos_ref, diam_ref, npos_ref, ndiam_ref, mask_ref, params_ref, out_ref):
+    """Pallas kernel body for one (BLOCK_N, K) tile."""
+    out_ref[...] = _force_tile(
+        pos_ref[...],
+        diam_ref[...],
+        npos_ref[...],
+        ndiam_ref[...],
+        mask_ref[...],
+        params_ref[...],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_forces(pos, diam, npos, ndiam, mask, params, *, block_n=BLOCK_N):
+    """Compute per-agent displacements with the Pallas kernel.
+
+    Args:
+      pos:    (N, 3) f32 agent positions.
+      diam:   (N,)   f32 agent diameters.
+      npos:   (N, K, 3) f32 gathered neighbor positions.
+      ndiam:  (N, K) f32 gathered neighbor diameters.
+      mask:   (N, K) f32 neighbor validity (1.0 valid / 0.0 padding).
+      params: (4,)   f32 [k_rep, k_adh, dt, max_disp].
+      block_n: tile size along N; N must be a multiple.
+
+    Returns:
+      (N, 3) f32 displacements.
+    """
+    n, k = mask.shape
+    block_n = min(block_n, n)  # small batches run as a single tile
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+            # Params broadcast to every tile.
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 3), pos.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(pos, diam, npos, ndiam, mask, params)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the Pallas kernel — the CORE correctness signal.
+
+Implements exactly the force model documented in ``pairwise.py`` with
+plain jax.numpy (no pallas), so pytest/hypothesis can assert
+``pairwise_forces == mechanics_ref`` across shapes, dtypes and inputs.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+def mechanics_ref(pos, diam, npos, ndiam, mask, params):
+    """Reference displacement computation. Shapes as in pairwise_forces."""
+    k_rep, k_adh, dt, max_disp = params[0], params[1], params[2], params[3]
+    delta = pos[:, None, :] - npos
+    dist = jnp.sqrt(jnp.sum(delta * delta, axis=-1) + EPS)
+    r_sum = 0.5 * (diam[:, None] + ndiam)
+    overlap = r_sum - dist
+    valid = (mask > 0.0).astype(pos.dtype)
+    f_rep = k_rep * jnp.maximum(overlap, 0.0)
+    f_adh = k_adh * jnp.maximum(jnp.minimum(dist - r_sum, r_sum), 0.0)
+    f_mag = f_rep * valid - f_adh * mask
+    unit = delta / dist[:, :, None]
+    force = jnp.sum(f_mag[:, :, None] * unit, axis=1)
+    disp = dt * force
+    return jnp.clip(disp, -max_disp, max_disp)
+
+
+def sir_ref(state, n_infected_neighbors, rand, params):
+    """Reference for the SIR transition step (see model.sir_step)."""
+    prob, recovery_iters = params[0], params[1]
+    susceptible = state[:, 0] == 0.0
+    infected = state[:, 0] == 1.0
+    p_inf = 1.0 - jnp.power(1.0 - prob, n_infected_neighbors)
+    becomes_infected = susceptible & (rand < p_inf) & (n_infected_neighbors > 0)
+    timer = state[:, 1] + jnp.where(infected, 1.0, 0.0)
+    recovers = infected & (timer >= recovery_iters)
+    new_code = jnp.where(
+        becomes_infected, 1.0, jnp.where(recovers, 2.0, state[:, 0])
+    )
+    new_timer = jnp.where(becomes_infected | recovers, 0.0, timer)
+    return jnp.stack([new_code, new_timer], axis=1)

@@ -1,0 +1,82 @@
+"""L2 — the JAX compute graph lowered to the AOT artifacts.
+
+Two model variants, one compiled executable each (the rust runtime loads
+one HLO module per variant, §"one compiled executable per model variant"):
+
+* ``mechanics_step`` — the agent mechanics update. Calls the L1 Pallas
+  kernel (``kernels.pairwise``); its HLO lowers *into the same module*, so
+  the rust side runs kernel + graph as one PJRT executable.
+* ``sir_step`` — the epidemiology state transition (plain jnp; the
+  contribution of this model is branch-y integer work, not a kernel).
+
+Fixed AOT shapes (rust pads batches): N = 2048 agents, K = 16 neighbors.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise
+
+# AOT batch geometry — must match rust/src/runtime/mechanics.rs.
+AOT_N = 2048
+AOT_K = 16
+
+
+def mechanics_step(pos, diam, npos, ndiam, mask, params):
+    """One mechanics update for a padded agent batch.
+
+    Returns the per-agent displacement and the new positions (the fused
+    integration saves one round trip through the runtime).
+    """
+    disp = pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, params)
+    return disp, pos + disp
+
+
+def sir_step(state, n_infected_neighbors, rand, params):
+    """One SIR transition for a padded agent batch.
+
+    Args:
+      state: (N, 2) f32 — [:,0] compartment code (0=S, 1=I, 2=R),
+             [:,1] iterations-infected timer.
+      n_infected_neighbors: (N,) f32 infected neighbor counts.
+      rand: (N,) f32 uniform randoms from the rust side (keeps the
+            compiled artifact deterministic and RNG ownership in rust).
+      params: (2,) f32 [infection_prob, recovery_iters].
+
+    Returns:
+      (N, 2) f32 new state.
+    """
+    prob, recovery_iters = params[0], params[1]
+    susceptible = state[:, 0] == 0.0
+    infected = state[:, 0] == 1.0
+    p_inf = 1.0 - jnp.power(1.0 - prob, n_infected_neighbors)
+    becomes_infected = susceptible & (rand < p_inf) & (n_infected_neighbors > 0)
+    timer = state[:, 1] + jnp.where(infected, 1.0, 0.0)
+    recovers = infected & (timer >= recovery_iters)
+    new_code = jnp.where(
+        becomes_infected, 1.0, jnp.where(recovers, 2.0, state[:, 0])
+    )
+    new_timer = jnp.where(becomes_infected | recovers, 0.0, timer)
+    return jnp.stack([new_code, new_timer], axis=1)
+
+
+def mechanics_example_args(n=AOT_N, k=AOT_K, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of mechanics_step."""
+    return (
+        jax.ShapeDtypeStruct((n, 3), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((n, k, 3), dtype),
+        jax.ShapeDtypeStruct((n, k), dtype),
+        jax.ShapeDtypeStruct((n, k), dtype),
+        jax.ShapeDtypeStruct((4,), dtype),
+    )
+
+
+def sir_example_args(n=AOT_N, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of sir_step."""
+    return (
+        jax.ShapeDtypeStruct((n, 2), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((n,), dtype),
+        jax.ShapeDtypeStruct((2,), dtype),
+    )

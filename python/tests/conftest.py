@@ -1,0 +1,7 @@
+"""Test configuration: enable 64-bit mode so explicit f64 inputs stay f64
+(jax silently downcasts to f32 otherwise). All f32 tests pass explicit
+float32 arrays, so they are unaffected."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

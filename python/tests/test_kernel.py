@@ -1,0 +1,217 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes, and input distributions; every case
+asserts `assert_allclose(pallas, ref)`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise
+from compile.kernels.ref import mechanics_ref
+
+DEFAULT_PARAMS = np.array([2.0, 0.4, 0.1, 5.0], dtype=np.float32)
+
+
+def make_inputs(rng, n, k, dtype=np.float32, scale=50.0, diam_max=12.0):
+    pos = rng.uniform(-scale, scale, size=(n, 3)).astype(dtype)
+    diam = rng.uniform(0.5, diam_max, size=(n,)).astype(dtype)
+    npos = rng.uniform(-scale, scale, size=(n, k, 3)).astype(dtype)
+    ndiam = rng.uniform(0.5, diam_max, size=(n, k)).astype(dtype)
+    # Mask doubles as the per-pair adhesion scale: mix padding (0),
+    # weakened cross-type adhesion (0.2), and full adhesion (1.0).
+    mask = rng.choice([0.0, 0.2, 1.0], size=(n, k), p=[0.3, 0.2, 0.5]).astype(dtype)
+    return pos, diam, npos, ndiam, mask
+
+
+def run_both(pos, diam, npos, ndiam, mask, params, block_n):
+    got = pairwise.pairwise_forces(
+        pos, diam, npos, ndiam, mask, params, block_n=block_n
+    )
+    want = mechanics_ref(pos, diam, npos, ndiam, mask, params)
+    return np.asarray(got), np.asarray(want)
+
+
+class TestKernelVsRef:
+    def test_basic_f32(self):
+        rng = np.random.default_rng(0)
+        args = make_inputs(rng, 256, 16)
+        got, want = run_both(*args, DEFAULT_PARAMS, 128)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        rng = np.random.default_rng(1)
+        args = make_inputs(rng, 64, 8)
+        got, want = run_both(*args, DEFAULT_PARAMS, 64)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_f64(self):
+        rng = np.random.default_rng(2)
+        args = make_inputs(rng, 128, 4, dtype=np.float64)
+        got, want = run_both(*args, DEFAULT_PARAMS.astype(np.float64), 64)
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block_n=st.sampled_from([8, 16, 32, 64]),
+        k=st.integers(1, 24),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shape_sweep(self, n_blocks, block_n, k, seed):
+        rng = np.random.default_rng(seed)
+        n = n_blocks * block_n
+        args = make_inputs(rng, n, k)
+        got, want = run_both(*args, DEFAULT_PARAMS, block_n)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        k_rep=st.floats(0.0, 10.0),
+        k_adh=st.floats(0.0, 2.0),
+        dt=st.floats(0.001, 1.0),
+        max_disp=st.floats(0.01, 10.0),
+    )
+    def test_param_sweep(self, seed, k_rep, k_adh, dt, max_disp):
+        rng = np.random.default_rng(seed)
+        params = np.array([k_rep, k_adh, dt, max_disp], dtype=np.float32)
+        args = make_inputs(rng, 64, 16)
+        got, want = run_both(*args, params, 32)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_dense_overlapping_cluster(self, seed):
+        # The physically interesting regime: everything overlaps.
+        rng = np.random.default_rng(seed)
+        args = make_inputs(rng, 64, 16, scale=3.0, diam_max=8.0)
+        got, want = run_both(*args, DEFAULT_PARAMS, 32)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestKernelPhysics:
+    def test_zero_mask_zero_displacement(self):
+        rng = np.random.default_rng(3)
+        pos, diam, npos, ndiam, _ = make_inputs(rng, 128, 16)
+        mask = np.zeros((128, 16), dtype=np.float32)
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        np.testing.assert_allclose(got, 0.0, atol=1e-7)
+
+    def test_overlapping_pair_repels(self):
+        # Two overlapping unit spheres: displacement pushes them apart.
+        n, k = pairwise.BLOCK_N, 1
+        pos = np.zeros((n, 3), dtype=np.float32)
+        pos[0] = [0.0, 0.0, 0.0]
+        diam = np.full((n,), 10.0, dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        npos[0, 0] = [4.0, 0.0, 0.0]  # dist 4 < r_sum 10 -> overlap
+        ndiam = np.full((n, k), 10.0, dtype=np.float32)
+        mask = np.zeros((n, k), dtype=np.float32)
+        mask[0, 0] = 1.0
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        assert got[0, 0] < 0.0, "agent must be pushed away from the neighbor"
+        np.testing.assert_allclose(got[1:], 0.0, atol=1e-7)
+
+    def test_separated_pair_attracts_within_adhesion_range(self):
+        n, k = pairwise.BLOCK_N, 1
+        pos = np.zeros((n, 3), dtype=np.float32)
+        diam = np.full((n,), 10.0, dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        npos[0, 0] = [12.0, 0.0, 0.0]  # dist 12 > r_sum 10 -> adhesion zone
+        ndiam = np.full((n, k), 10.0, dtype=np.float32)
+        mask = np.zeros((n, k), dtype=np.float32)
+        mask[0, 0] = 1.0
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        assert got[0, 0] > 0.0, "agent must be pulled toward the neighbor"
+
+    def test_displacement_clamped(self):
+        n, k = pairwise.BLOCK_N, 1
+        params = np.array([1000.0, 0.0, 1.0, 0.25], dtype=np.float32)
+        pos = np.zeros((n, 3), dtype=np.float32)
+        diam = np.full((n,), 10.0, dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        npos[:, 0, 0] = 0.5
+        ndiam = np.full((n, k), 10.0, dtype=np.float32)
+        mask = np.ones((n, k), dtype=np.float32)
+        got = np.asarray(pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, params))
+        assert np.all(np.abs(got) <= 0.25 + 1e-6)
+
+    def test_coincident_agents_finite(self):
+        # Exactly coincident positions must not produce NaN (EPS guard).
+        n, k = pairwise.BLOCK_N, 2
+        pos = np.zeros((n, 3), dtype=np.float32)
+        diam = np.ones((n,), dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        ndiam = np.ones((n, k), dtype=np.float32)
+        mask = np.ones((n, k), dtype=np.float32)
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        assert np.all(np.isfinite(got))
+
+    def test_pair_forces_antisymmetric(self):
+        # i seeing j and j seeing i must produce opposite displacements.
+        n, k = pairwise.BLOCK_N, 1
+        pos = np.zeros((n, 3), dtype=np.float32)
+        pos[0] = [0.0, 0.0, 0.0]
+        pos[1] = [6.0, 0.0, 0.0]
+        diam = np.full((n,), 10.0, dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        npos[0, 0] = pos[1]
+        npos[1, 0] = pos[0]
+        ndiam = np.full((n, k), 10.0, dtype=np.float32)
+        mask = np.zeros((n, k), dtype=np.float32)
+        mask[0, 0] = 1.0
+        mask[1, 0] = 1.0
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        np.testing.assert_allclose(got[0], -got[1], rtol=1e-5, atol=1e-6)
+
+    def test_block_tiling_invariant(self):
+        # The same inputs give identical results for any tile size.
+        rng = np.random.default_rng(4)
+        args = make_inputs(rng, 128, 8)
+        outs = [
+            np.asarray(pairwise.pairwise_forces(*args, DEFAULT_PARAMS, block_n=b))
+            for b in (16, 32, 64, 128)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(outs[0], o, rtol=1e-6, atol=1e-7)
+
+    def test_differential_adhesion_scales_attraction(self):
+        # Same geometry, different adhesion scale: weaker mask -> weaker
+        # pull, but identical repulsion behaviour (scale gates only the
+        # adhesive term).
+        n, k = pairwise.BLOCK_N, 1
+        pos = np.zeros((n, 3), dtype=np.float32)
+        diam = np.full((n,), 10.0, dtype=np.float32)
+        npos = np.zeros((n, k, 3), dtype=np.float32)
+        npos[0, 0] = [12.0, 0.0, 0.0]  # adhesion zone
+        npos[1, 0] = [12.0, 0.0, 0.0]
+        ndiam = np.full((n, k), 10.0, dtype=np.float32)
+        mask = np.zeros((n, k), dtype=np.float32)
+        mask[0, 0] = 1.0
+        mask[1, 0] = 0.2
+        pos[1] = [0.0, 0.0, 0.0]
+        got = np.asarray(
+            pairwise.pairwise_forces(pos, diam, npos, ndiam, mask, DEFAULT_PARAMS)
+        )
+        assert got[0, 0] > got[1, 0] > 0.0
+        np.testing.assert_allclose(got[1, 0], 0.2 * got[0, 0], rtol=1e-5)
+
+    def test_rejects_non_multiple_block(self):
+        rng = np.random.default_rng(5)
+        args = make_inputs(rng, 100, 4)
+        with pytest.raises(AssertionError):
+            pairwise.pairwise_forces(*args, DEFAULT_PARAMS, block_n=64)

@@ -1,0 +1,99 @@
+"""L2 model tests: shapes, SIR transition semantics, fused integration."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import sir_ref
+
+SIR_PARAMS = np.array([0.2, 5.0], dtype=np.float32)
+
+
+def test_mechanics_step_shapes():
+    n, k = 256, 16
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(-10, 10, (n, 3)).astype(np.float32)
+    diam = np.ones((n,), np.float32)
+    npos = rng.uniform(-10, 10, (n, k, 3)).astype(np.float32)
+    ndiam = np.ones((n, k), np.float32)
+    mask = np.ones((n, k), np.float32)
+    params = np.array([2.0, 0.4, 0.1, 5.0], np.float32)
+    disp, new_pos = model.mechanics_step(pos, diam, npos, ndiam, mask, params)
+    assert disp.shape == (n, 3)
+    assert new_pos.shape == (n, 3)
+    np.testing.assert_allclose(np.asarray(new_pos), pos + np.asarray(disp), rtol=1e-6)
+
+
+def test_example_args_match_aot_geometry():
+    args = model.mechanics_example_args()
+    assert args[0].shape == (model.AOT_N, 3)
+    assert args[2].shape == (model.AOT_N, model.AOT_K, 3)
+    sargs = model.sir_example_args()
+    assert sargs[0].shape == (model.AOT_N, 2)
+
+
+class TestSirStep:
+    def run(self, state, n_inf, rand, params=SIR_PARAMS):
+        return np.asarray(
+            model.sir_step(
+                jnp.asarray(state), jnp.asarray(n_inf), jnp.asarray(rand), jnp.asarray(params)
+            )
+        )
+
+    def test_susceptible_with_no_infected_neighbors_stays(self):
+        state = np.zeros((4, 2), np.float32)
+        out = self.run(state, np.zeros(4, np.float32), np.zeros(4, np.float32))
+        np.testing.assert_array_equal(out[:, 0], 0.0)
+
+    def test_susceptible_infects_when_rand_below_prob(self):
+        state = np.zeros((2, 2), np.float32)
+        n_inf = np.array([3.0, 3.0], np.float32)
+        # p = 1-(1-0.2)^3 = 0.488
+        rand = np.array([0.1, 0.9], np.float32)
+        out = self.run(state, n_inf, rand)
+        assert out[0, 0] == 1.0, "low rand -> infected"
+        assert out[1, 0] == 0.0, "high rand -> stays susceptible"
+
+    def test_infected_timer_increments_and_recovers(self):
+        state = np.array([[1.0, 0.0], [1.0, 4.0]], np.float32)
+        out = self.run(state, np.zeros(2, np.float32), np.ones(2, np.float32))
+        assert out[0, 0] == 1.0 and out[0, 1] == 1.0, "timer increments"
+        assert out[1, 0] == 2.0 and out[1, 1] == 0.0, "recovers at threshold"
+
+    def test_recovered_is_absorbing(self):
+        state = np.array([[2.0, 0.0]], np.float32)
+        out = self.run(state, np.array([10.0], np.float32), np.array([0.0], np.float32))
+        assert out[0, 0] == 2.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 256))
+    def test_matches_ref(self, seed, n):
+        rng = np.random.default_rng(seed)
+        state = np.stack(
+            [
+                rng.integers(0, 3, n).astype(np.float32),
+                rng.integers(0, 6, n).astype(np.float32),
+            ],
+            axis=1,
+        )
+        n_inf = rng.integers(0, 8, n).astype(np.float32)
+        rand = rng.uniform(size=n).astype(np.float32)
+        got = self.run(state, n_inf, rand)
+        want = np.asarray(
+            sir_ref(jnp.asarray(state), jnp.asarray(n_inf), jnp.asarray(rand), jnp.asarray(SIR_PARAMS))
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_codes_stay_valid(self, seed):
+        rng = np.random.default_rng(seed)
+        n = 64
+        state = np.stack(
+            [rng.integers(0, 3, n).astype(np.float32), np.zeros(n, np.float32)], axis=1
+        )
+        n_inf = rng.integers(0, 5, n).astype(np.float32)
+        rand = rng.uniform(size=n).astype(np.float32)
+        out = self.run(state, n_inf, rand)
+        assert set(np.unique(out[:, 0])) <= {0.0, 1.0, 2.0}

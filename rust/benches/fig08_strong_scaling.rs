@@ -1,0 +1,58 @@
+//! Fig. 8 — strong scaling: fixed problem size, growing rank counts.
+//!
+//! Paper (Snellius, problem sized to fill one node): near-linear speedup
+//! to 8 nodes, tapering at 16 from load imbalance and slowest-rank waits.
+//!
+//! Testbed note: 1 physical core, so the speedup is computed on the
+//! modeled parallel runtime (per-iteration critical path of per-rank CPU
+//! time + the InfiniBand network model) — see DESIGN.md substitutions.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::comm::NetworkModel;
+use teraagent::config::{BalanceMethod, ParallelMode, SimConfig};
+use teraagent::models;
+
+fn run(ranks: usize) -> f64 {
+    let cfg = SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 24_000,
+        iterations: 6,
+        space_half_extent: 64.0,
+        interaction_radius: 10.0,
+        network: NetworkModel::infiniband(),
+        balance_method: BalanceMethod::Rcb,
+        balance_every: 0,
+        mode: if ranks == 1 {
+            ParallelMode::OpenMp { threads: 1 }
+        } else {
+            ParallelMode::MpiOnly { ranks }
+        },
+        ..Default::default()
+    };
+    let r = models::run_by_name(&cfg).unwrap();
+    assert_eq!(r.final_agents, 24_000);
+    r.report.parallel_runtime_secs
+}
+
+fn main() {
+    header(
+        "Fig. 8: strong scaling, 24k agents, ranks 1..16",
+        "paper: good scaling to 8 nodes, taper at 16 (load imbalance / slowest-rank wait)",
+    );
+    row_strs(&["ranks", "runtime", "speedup", "efficiency"]);
+    let t1 = run(1);
+    for ranks in [1usize, 2, 4, 8, 16] {
+        let t = if ranks == 1 { t1 } else { run(ranks) };
+        let speedup = t1 / t;
+        row(&[
+            format!("{ranks}"),
+            fmt_secs(t),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", speedup / ranks as f64 * 100.0),
+        ]);
+    }
+    println!("\nfig08_strong_scaling done");
+}

@@ -1,0 +1,58 @@
+//! Fig. 9 — weak scaling: fixed agents *per rank*, growing rank counts.
+//!
+//! Paper (10^8 agents/node, up to 128 nodes / 24 576 cores): after an
+//! initial rise, per-iteration runtime plateaus — the signature of a
+//! scalable halo-exchange design.
+//!
+//! Testbed note: modeled parallel runtime on 1 core; space grows with the
+//! rank count so per-rank density (and thus per-rank work) is constant.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::comm::NetworkModel;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::models;
+
+const AGENTS_PER_RANK: usize = 4_000;
+
+fn run(ranks: usize) -> f64 {
+    // Constant density: volume ∝ ranks -> half extent ∝ cbrt(ranks).
+    let half = 40.0 * (ranks as f64).cbrt();
+    let cfg = SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: AGENTS_PER_RANK * ranks,
+        iterations: 6,
+        space_half_extent: half,
+        interaction_radius: 10.0,
+        network: NetworkModel::infiniband(),
+        mode: if ranks == 1 {
+            ParallelMode::OpenMp { threads: 1 }
+        } else {
+            ParallelMode::MpiOnly { ranks }
+        },
+        ..Default::default()
+    };
+    let r = models::run_by_name(&cfg).unwrap();
+    r.report.parallel_runtime_secs
+}
+
+fn main() {
+    header(
+        "Fig. 9: weak scaling, 4k agents/rank, ranks 1..16",
+        "paper: initial rise then plateau (scalable halo exchange)",
+    );
+    row_strs(&["ranks", "agents", "runtime", "vs 1 rank"]);
+    let t1 = run(1);
+    for ranks in [1usize, 2, 4, 8, 16] {
+        let t = if ranks == 1 { t1 } else { run(ranks) };
+        row(&[
+            format!("{ranks}"),
+            format!("{}", AGENTS_PER_RANK * ranks),
+            fmt_secs(t),
+            format!("{:.2}x", t / t1),
+        ]);
+    }
+    println!("\nfig09_weak_scaling done");
+}

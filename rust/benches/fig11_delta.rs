@@ -1,0 +1,100 @@
+//! Fig. 11 — data-transfer minimization: TA IO baseline vs +LZ4 vs
+//! +LZ4+delta, on both interconnect models.
+//!
+//! Paper: LZ4 shrinks messages 3.0–5.2×, delta another 1.1–3.5×; the
+//! distribution operation speeds up to 11×; on the fast InfiniBand fabric
+//! delta's runtime benefit disappears (overheads outweigh), while agent
+//! operations slow slightly from agent reordering; reference memory
+//! overhead is small (median 3%).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::comm::NetworkModel;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::io::Compression;
+use teraagent::metrics::{Counter, Op};
+use teraagent::models;
+
+struct Outcome {
+    wire: u64,
+    raw: u64,
+    distribution_secs: f64,
+    agent_ops_secs: f64,
+    runtime: f64,
+    mem: u64,
+}
+
+fn run(name: &str, compression: Compression, network: NetworkModel) -> Outcome {
+    let cfg = SimConfig {
+        name: name.into(),
+        num_agents: 4_000,
+        iterations: 8,
+        space_half_extent: 40.0,
+        interaction_radius: if name == "epidemiology" { 2.0 } else { 10.0 },
+        boundary: if name == "epidemiology" {
+            teraagent::space::BoundaryCondition::Toroidal
+        } else {
+            teraagent::space::BoundaryCondition::Closed
+        },
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        compression,
+        network,
+        ..Default::default()
+    };
+    let r = models::run_by_name(&cfg).unwrap();
+    Outcome {
+        wire: r.report.counter_total(Counter::BytesSentWire),
+        raw: r.report.counter_total(Counter::BytesSentRaw),
+        distribution_secs: r.report.op_total(Op::AuraUpdate)
+            + r.report.op_total(Op::Migration)
+            + r.report.op_total(Op::Compress)
+            + r.report.op_total(Op::Decompress)
+            + r.report.network_secs,
+        agent_ops_secs: r.report.op_total(Op::AgentOps),
+        runtime: r.report.parallel_runtime_secs + r.report.network_secs,
+        mem: r.report.total_peak_mem_bytes,
+    }
+}
+
+fn main() {
+    for network in [NetworkModel::gige(), NetworkModel::infiniband()] {
+        header(
+            &format!("Fig. 11 on {} network model", network.name),
+            "paper: msg size -3.0-5.2x (lz4) further 1.1-3.5x (delta); distribution up to 11x; \
+             delta helps on GigE, not on InfiniBand",
+        );
+        row_strs(&[
+            "simulation", "config", "msg size", "vs base", "distr time", "distr spd",
+            "agent ops", "runtime", "mem ratio",
+        ]);
+        for name in models::BENCHMARKS {
+            let base = run(name, Compression::None, network);
+            for (label, comp) in [
+                ("ta_io", Compression::None),
+                ("+lz4", Compression::Lz4),
+                ("+lz4+delta", Compression::Lz4Delta { period: 8 }),
+            ] {
+                let o = if matches!(comp, Compression::None) {
+                    Outcome { ..run(name, comp, network) }
+                } else {
+                    run(name, comp, network)
+                };
+                row(&[
+                    name.to_string(),
+                    label.to_string(),
+                    fmt_bytes(o.wire),
+                    format!("{:.2}x", base.wire as f64 / o.wire.max(1) as f64),
+                    fmt_secs(o.distribution_secs),
+                    format!("{:.2}x", base.distribution_secs / o.distribution_secs.max(1e-9)),
+                    fmt_secs(o.agent_ops_secs),
+                    fmt_secs(o.runtime),
+                    format!("{:.3}", o.mem as f64 / base.mem.max(1) as f64),
+                ]);
+                let _ = o.raw;
+            }
+        }
+    }
+    println!("\nfig11_delta done");
+}

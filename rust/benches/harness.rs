@@ -1,0 +1,71 @@
+//! Shared mini-bench harness (no `criterion` offline). Each bench binary
+//! (`harness = false`) prints the rows/series of the paper table/figure it
+//! regenerates; EXPERIMENTS.md records paper-vs-measured.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Measure a closure: warmup runs, then `samples` timed runs; returns
+/// seconds per run (median, mean, min).
+pub fn measure<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement { median, mean, min: times[0], samples }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub samples: usize,
+}
+
+/// Section header.
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n=== {title} ===");
+    println!("    reproduces: {paper_ref}");
+}
+
+/// Aligned table row.
+pub fn row(cols: &[String]) {
+    let line: Vec<String> = cols.iter().map(|c| format!("{c:>14}")).collect();
+    println!("  {}", line.join(" |"));
+}
+
+pub fn row_strs(cols: &[&str]) {
+    row(&cols.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+}
+
+/// Format seconds compactly.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}us", s * 1e6)
+    }
+}
+
+/// Format bytes compactly.
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 20 {
+        format!("{:.2}MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2}KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}

@@ -1,0 +1,58 @@
+//! §3.8 — comparison with Biocellion: agent updates per second per core
+//! on the cell-clustering workload.
+//!
+//! Paper: TeraAgent reaches 7.56e5 updates/s/core (1.72e9 cells, 144
+//! cores, 15.8 s/iter); Biocellion's published number is 9.42e4 (4096
+//! Opteron cores) — an 8× efficiency advantage. We measure our
+//! updates/s/core on the same workload shape (per-rank CPU time as the
+//! core-second denominator) and report the ratio against Biocellion's
+//! published figure, exactly as the paper does (Biocellion is not open
+//! source).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::metrics::Counter;
+use teraagent::models;
+
+const PAPER_TERAAGENT: f64 = 7.56e5;
+const PAPER_BIOCELLION: f64 = 9.42e4;
+
+fn main() {
+    header(
+        "§3.8: agent update rate per CPU core (cell clustering)",
+        "paper: TeraAgent 7.56e5 vs Biocellion 9.42e4 updates/s/core (8x)",
+    );
+    row_strs(&["config", "agents", "updates/s/core", "vs biocellion", "vs paper-ta"]);
+    for (label, agents, mode) in [
+        ("openmp 1x1", 30_000usize, ParallelMode::OpenMp { threads: 1 }),
+        ("hybrid 2x2", 30_000, ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 2 }),
+        ("mpi-only 4", 30_000, ParallelMode::MpiOnly { ranks: 4 }),
+    ] {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: agents,
+            iterations: 5,
+            space_half_extent: 70.0,
+            interaction_radius: 10.0,
+            mode,
+            ..Default::default()
+        };
+        let r = models::run_by_name(&cfg).unwrap();
+        let updates = r.report.counter_total(Counter::AgentUpdates) as f64;
+        // Core-seconds: total CPU time actually consumed across ranks —
+        // the honest denominator on a timeshared single-core box.
+        let rate = updates / r.report.total_cpu_secs.max(1e-9);
+        let per_core = rate / 1.0; // total_cpu_secs already aggregates cores
+        row(&[
+            label.to_string(),
+            format!("{agents}"),
+            format!("{per_core:.3e}"),
+            format!("{:.1}x", per_core / PAPER_BIOCELLION),
+            format!("{:.2}x", per_core / PAPER_TERAAGENT),
+        ]);
+    }
+    println!("\ntab_biocellion done");
+}

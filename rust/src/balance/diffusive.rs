@@ -1,0 +1,211 @@
+//! Diffusive load balancing (§2.4.5): "neighboring ranks exchange
+//! partition boxes. Ranks whose runtime exceeds the local average send
+//! boxes to neighbors that were faster than the local average."
+//!
+//! One diffusive step is cheap and local — no mass migration — at the cost
+//! of slower convergence than a global RCB repartition.
+
+use crate::space::PartitionGrid;
+
+/// One box hand-off decided by a diffusive step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BoxTransfer {
+    pub box_index: usize,
+    pub from: u32,
+    pub to: u32,
+}
+
+/// Compute one diffusive balancing step.
+///
+/// `runtimes[r]` is rank r's last-iteration runtime. For every rank whose
+/// runtime exceeds the average over {itself} ∪ neighbors by
+/// `threshold` (relative), border boxes are offered to the fastest
+/// below-average neighbor — at most `max_boxes_per_step` per rank, least
+/// weighted first (cheap to move, fine-grained rebalancing).
+pub fn diffusive_step(
+    grid: &PartitionGrid,
+    runtimes: &[f64],
+    threshold: f64,
+    max_boxes_per_step: usize,
+) -> Vec<BoxTransfer> {
+    let mut transfers = Vec::new();
+    let nranks = runtimes.len() as u32;
+    for rank in 0..nranks {
+        let neighbors = grid.neighbor_ranks(rank);
+        if neighbors.is_empty() {
+            continue;
+        }
+        let mut local: Vec<u32> = neighbors.clone();
+        local.push(rank);
+        let avg: f64 =
+            local.iter().map(|&r| runtimes[r as usize]).sum::<f64>() / local.len() as f64;
+        if runtimes[rank as usize] <= avg * (1.0 + threshold) {
+            continue; // not overloaded relative to the neighborhood
+        }
+        // Fastest below-average neighbor is the receiver.
+        let Some(&to) = neighbors
+            .iter()
+            .filter(|&&r| runtimes[r as usize] < avg)
+            .min_by(|&&a, &&b| runtimes[a as usize].partial_cmp(&runtimes[b as usize]).unwrap())
+        else {
+            continue;
+        };
+        // Border boxes of `rank` adjacent to `to`, least weight first.
+        let mut border: Vec<usize> = grid
+            .boxes_of_rank(rank)
+            .into_iter()
+            .filter(|&b| box_touches_rank(grid, b, to))
+            .collect();
+        border.sort_by(|&a, &b| grid.weight_of(a).partial_cmp(&grid.weight_of(b)).unwrap());
+        for b in border.into_iter().take(max_boxes_per_step) {
+            transfers.push(BoxTransfer { box_index: b, from: rank, to });
+        }
+    }
+    transfers
+}
+
+/// Is box `b` (owned by someone else) face/edge/corner-adjacent to a box
+/// of `rank`?
+fn box_touches_rank(grid: &PartitionGrid, b: usize, rank: u32) -> bool {
+    let c = grid.unflat(b);
+    let dims = grid.dims();
+    for dz in -1i64..=1 {
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                if dx == 0 && dy == 0 && dz == 0 {
+                    continue;
+                }
+                let nx = c[0] as i64 + dx;
+                let ny = c[1] as i64 + dy;
+                let nz = c[2] as i64 + dz;
+                if nx < 0
+                    || ny < 0
+                    || nz < 0
+                    || nx >= dims[0] as i64
+                    || ny >= dims[1] as i64
+                    || nz >= dims[2] as i64
+                {
+                    continue;
+                }
+                if grid.owner_of_box(grid.flat([nx as usize, ny as usize, nz as usize])) == rank {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+/// Apply transfers to the grid (all ranks apply the same list, keeping the
+/// replicated map consistent).
+pub fn apply_transfers(grid: &mut PartitionGrid, transfers: &[BoxTransfer]) {
+    for t in transfers {
+        debug_assert_eq!(grid.owner_of_box(t.box_index), t.from);
+        grid.set_owner(t.box_index, t.to);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Aabb, PartitionGrid};
+    use crate::util::Vec3;
+
+    /// 4x1x1 boxes, ranks 0|0|1|1.
+    fn grid2() -> PartitionGrid {
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(40.0, 10.0, 10.0)), 10.0);
+        g.set_owner(0, 0);
+        g.set_owner(1, 0);
+        g.set_owner(2, 1);
+        g.set_owner(3, 1);
+        g
+    }
+
+    #[test]
+    fn balanced_ranks_do_nothing() {
+        let g = grid2();
+        let t = diffusive_step(&g, &[1.0, 1.0], 0.1, 2);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn overloaded_rank_sends_border_box_to_faster_neighbor() {
+        let mut g = grid2();
+        g.set_weight(0, 5.0);
+        g.set_weight(1, 1.0);
+        let t = diffusive_step(&g, &[2.0, 0.5], 0.1, 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].from, 0);
+        assert_eq!(t[0].to, 1);
+        // The transferred box must touch rank 1's territory: box 1.
+        assert_eq!(t[0].box_index, 1);
+    }
+
+    #[test]
+    fn lightest_border_boxes_move_first() {
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(40.0, 20.0, 10.0)), 10.0);
+        // 4x2 boxes, left half rank 0, right half rank 1.
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_owner(i, if c[0] < 2 { 0 } else { 1 });
+        }
+        // Two border boxes for rank 0 (x=1, y=0/1) with different weights.
+        let b_light = g.flat([1, 0, 0]);
+        let b_heavy = g.flat([1, 1, 0]);
+        g.set_weight(b_light, 0.1);
+        g.set_weight(b_heavy, 9.0);
+        let t = diffusive_step(&g, &[3.0, 0.5], 0.1, 1);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].box_index, b_light);
+    }
+
+    #[test]
+    fn apply_transfers_updates_ownership() {
+        let mut g = grid2();
+        let t = vec![BoxTransfer { box_index: 1, from: 0, to: 1 }];
+        apply_transfers(&mut g, &t);
+        assert_eq!(g.owner_of_box(1), 1);
+        assert_eq!(g.box_count_of_rank(0), 1);
+        assert_eq!(g.box_count_of_rank(1), 3);
+    }
+
+    #[test]
+    fn repeated_steps_converge_weights() {
+        // Rank 0 owns everything; runtimes proportional to owned weight.
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(80.0, 10.0, 10.0)), 10.0);
+        for i in 0..g.num_boxes() {
+            g.set_owner(i, 0);
+            g.set_weight(i, 1.0);
+        }
+        // Give rank 1 a toe-hold (the rightmost box) so it is a neighbor.
+        g.set_owner(7, 1);
+        for _ in 0..20 {
+            let runtimes: Vec<f64> = (0..2)
+                .map(|r| {
+                    g.boxes_of_rank(r).iter().map(|&b| g.weight_of(b)).sum::<f64>()
+                })
+                .collect();
+            let t = diffusive_step(&g, &runtimes, 0.05, 1);
+            if t.is_empty() {
+                break;
+            }
+            apply_transfers(&mut g, &t);
+        }
+        let w0: f64 = g.boxes_of_rank(0).iter().map(|&b| g.weight_of(b)).sum();
+        let w1: f64 = g.boxes_of_rank(1).iter().map(|&b| g.weight_of(b)).sum();
+        assert!((w0 - w1).abs() <= 1.0 + 1e-9, "w0={w0} w1={w1}");
+    }
+
+    #[test]
+    fn max_boxes_per_step_caps_movement() {
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(40.0, 40.0, 10.0)), 10.0);
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_owner(i, if c[0] < 2 { 0 } else { 1 });
+            g.set_weight(i, 1.0);
+        }
+        let t = diffusive_step(&g, &[10.0, 0.1], 0.1, 3);
+        assert!(t.len() <= 3);
+        assert!(!t.is_empty());
+    }
+}

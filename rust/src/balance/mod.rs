@@ -1,0 +1,17 @@
+//! Load balancing (§2.4.5): assign partition boxes to ranks so every rank
+//! takes equally long per iteration while minimizing distributed overhead.
+//!
+//! Two method classes, as in the paper:
+//! * [`rcb`] — **global**: recursive coordinate bisection over the
+//!   weighted box set (the paper's STK + Zoltan2 default). May produce a
+//!   partitioning far from the previous one, causing mass migrations.
+//! * [`diffusive`] — **local**: ranks whose last-iteration runtime exceeds
+//!   the neighborhood average push border boxes to faster neighbors;
+//!   cheap, incremental, no mass migration.
+
+pub mod diffusive;
+pub mod rcb;
+pub mod weights;
+
+pub use diffusive::diffusive_step;
+pub use rcb::rcb_partition;

@@ -1,0 +1,203 @@
+//! Recursive coordinate bisection (the Zoltan2 default algorithm the
+//! paper selects, §2.4.5).
+//!
+//! Input: the partition grid's box centers and weights. Output: an
+//! ownership vector assigning each box to one of `nranks` ranks such that
+//! the per-rank weight sums are near-uniform. The recursion splits the
+//! current box set along its longest axis at the weighted median, dividing
+//! the rank budget proportionally (handles non-power-of-two rank counts).
+
+use crate::space::PartitionGrid;
+
+/// Compute an RCB ownership assignment for `grid` over `nranks` ranks.
+/// Boxes with zero weight are given a small epsilon so empty space is
+/// still spread across ranks (bounding future in-migration).
+pub fn rcb_partition(grid: &PartitionGrid, nranks: u32) -> Vec<u32> {
+    assert!(nranks >= 1);
+    let n = grid.num_boxes();
+    let mut items: Vec<(usize, [f64; 3], f64)> = (0..n)
+        .map(|i| {
+            let c = grid.box_center(i);
+            let w = grid.weight_of(i).max(1e-9);
+            (i, [c.x, c.y, c.z], w)
+        })
+        .collect();
+    let mut owners = vec![0u32; n];
+    rcb_recurse(&mut items, 0, nranks, &mut owners);
+    owners
+}
+
+fn rcb_recurse(items: &mut [(usize, [f64; 3], f64)], first_rank: u32, nranks: u32, owners: &mut [u32]) {
+    if nranks <= 1 || items.len() <= 1 {
+        for (i, _, _) in items.iter() {
+            owners[*i] = first_rank;
+        }
+        return;
+    }
+    // Longest axis of the current set's bounding box.
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for (_, c, _) in items.iter() {
+        for d in 0..3 {
+            lo[d] = lo[d].min(c[d]);
+            hi[d] = hi[d].max(c[d]);
+        }
+    }
+    let axis = (0..3).max_by(|&a, &b| (hi[a] - lo[a]).partial_cmp(&(hi[b] - lo[b])).unwrap()).unwrap();
+    items.sort_by(|a, b| a.1[axis].partial_cmp(&b.1[axis]).unwrap());
+    // Split the rank budget and find the matching weighted cut.
+    let left_ranks = nranks / 2;
+    let right_ranks = nranks - left_ranks;
+    let total_w: f64 = items.iter().map(|(_, _, w)| w).sum();
+    let target = total_w * left_ranks as f64 / nranks as f64;
+    let mut acc = 0.0;
+    let mut cut = 0;
+    for (k, (_, _, w)) in items.iter().enumerate() {
+        if acc + w / 2.0 >= target && k > 0 {
+            break;
+        }
+        acc += w;
+        cut = k + 1;
+    }
+    // Keep both sides non-empty when possible.
+    let cut = cut.clamp(1.min(items.len() - 1), items.len() - 1);
+    let (left, right) = items.split_at_mut(cut);
+    rcb_recurse(left, first_rank, left_ranks, owners);
+    rcb_recurse(right, first_rank + left_ranks, right_ranks, owners);
+}
+
+/// Load-imbalance factor of an assignment: max rank weight / mean rank
+/// weight (1.0 = perfect).
+pub fn imbalance(grid: &PartitionGrid, owners: &[u32], nranks: u32) -> f64 {
+    let mut per_rank = vec![0.0f64; nranks as usize];
+    for (i, &o) in owners.iter().enumerate() {
+        per_rank[o as usize] += grid.weight_of(i);
+    }
+    let total: f64 = per_rank.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let mean = total / nranks as f64;
+    per_rank.iter().fold(0.0f64, |m, &w| m.max(w)) / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::{Aabb, PartitionGrid};
+    use crate::util::{Rng, Vec3};
+
+    fn grid(n_per_axis: usize) -> PartitionGrid {
+        PartitionGrid::new(
+            Aabb::new(Vec3::ZERO, Vec3::splat(n_per_axis as f64 * 10.0)),
+            10.0,
+        )
+    }
+
+    #[test]
+    fn covers_all_boxes_exactly_once() {
+        let mut g = grid(4);
+        for i in 0..g.num_boxes() {
+            g.set_weight(i, 1.0);
+        }
+        let owners = rcb_partition(&g, 8);
+        assert_eq!(owners.len(), 64);
+        // Every rank gets exactly 8 boxes with uniform weights.
+        for r in 0..8u32 {
+            assert_eq!(owners.iter().filter(|&&o| o == r).count(), 8, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn uniform_weights_near_perfect_balance() {
+        let mut g = grid(8);
+        for i in 0..g.num_boxes() {
+            g.set_weight(i, 1.0);
+        }
+        for nranks in [2u32, 3, 4, 5, 7, 16] {
+            let owners = rcb_partition(&g, nranks);
+            let f = imbalance(&g, &owners, nranks);
+            assert!(f < 1.15, "nranks={nranks} imbalance={f}");
+            // All ranks used.
+            for r in 0..nranks {
+                assert!(owners.contains(&r), "rank {r} unused for nranks={nranks}");
+            }
+        }
+    }
+
+    #[test]
+    fn skewed_weights_still_balance() {
+        // All weight concentrated in one octant (a clustered simulation).
+        let mut g = grid(8);
+        for i in 0..g.num_boxes() {
+            let c = g.box_center(i);
+            let w = if c.x < 40.0 && c.y < 40.0 && c.z < 40.0 { 100.0 } else { 0.01 };
+            g.set_weight(i, w);
+        }
+        let owners = rcb_partition(&g, 8);
+        let f = imbalance(&g, &owners, 8);
+        assert!(f < 1.5, "imbalance={f}");
+    }
+
+    #[test]
+    fn random_weights_property() {
+        let mut rng = Rng::new(0xBEEF);
+        for trial in 0..10 {
+            let mut g = grid(6);
+            for i in 0..g.num_boxes() {
+                g.set_weight(i, rng.uniform_range(0.0, 10.0));
+            }
+            let nranks = 1 + rng.index(12) as u32;
+            let owners = rcb_partition(&g, nranks);
+            // Total cover + only valid ranks.
+            assert_eq!(owners.len(), g.num_boxes());
+            assert!(owners.iter().all(|&o| o < nranks), "trial {trial}");
+            let f = imbalance(&g, &owners, nranks);
+            assert!(f < 2.5, "trial {trial} nranks={nranks} imbalance={f}");
+        }
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let g = grid(3);
+        let owners = rcb_partition(&g, 1);
+        assert!(owners.iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn rcb_produces_spatially_contiguous_halves_for_two_ranks() {
+        let mut g = grid(4);
+        for i in 0..g.num_boxes() {
+            g.set_weight(i, 1.0);
+        }
+        let owners = rcb_partition(&g, 2);
+        // With uniform weights the 2-way split is a half-space cut: the
+        // sets of x-coordinates of the two ranks must not interleave on
+        // the split axis. Check contiguity via bounding boxes overlapping
+        // at most at the cut plane.
+        let b0 = {
+            let mut min = Vec3::splat(f64::INFINITY);
+            let mut max = Vec3::splat(f64::NEG_INFINITY);
+            for i in 0..g.num_boxes() {
+                if owners[i] == 0 {
+                    min = min.min(g.box_aabb(i).min);
+                    max = max.max(g.box_aabb(i).max);
+                }
+            }
+            Aabb::new(min, max)
+        };
+        let b1 = {
+            let mut min = Vec3::splat(f64::INFINITY);
+            let mut max = Vec3::splat(f64::NEG_INFINITY);
+            for i in 0..g.num_boxes() {
+                if owners[i] == 1 {
+                    min = min.min(g.box_aabb(i).min);
+                    max = max.max(g.box_aabb(i).max);
+                }
+            }
+            Aabb::new(min, max)
+        };
+        let overlap = b0.intersection(&b1).volume();
+        assert!(overlap < 1e-9, "rank volumes must not overlap: {overlap}");
+    }
+}

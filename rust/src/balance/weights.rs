@@ -1,0 +1,82 @@
+//! Box-weight computation (§2.4.5): "we apply a weight field on the
+//! partitioning grid and set the weight of each partitioning box based on
+//! the number of agents contained and scale it by the runtime of the last
+//! iteration."
+
+use crate::space::{NeighborSearchGrid, PartitionGrid};
+
+/// Recompute this rank's owned-box weights from the NSG occupancy and the
+/// last-iteration runtime. Returns a full-length weight vector (zeros for
+/// boxes of other ranks) suitable for summing across ranks.
+pub fn compute_box_weights(
+    grid: &PartitionGrid,
+    nsg: &NeighborSearchGrid,
+    my_rank: u32,
+    last_iteration_secs: f64,
+) -> Vec<f64> {
+    let mut weights = vec![0.0f64; grid.num_boxes()];
+    let mut my_agents = 0u64;
+    // Count owned agents per box.
+    for b in grid.boxes_of_rank(my_rank) {
+        let aabb = grid.box_aabb(b);
+        let mut count = 0u64;
+        nsg.for_each_in_region(&aabb, |entry, _| {
+            if matches!(entry, crate::space::NsgEntry::Owned(_)) {
+                count += 1;
+            }
+        });
+        weights[b] = count as f64;
+        my_agents += count;
+    }
+    // Scale by per-agent runtime so heterogeneous agent costs are captured.
+    if my_agents > 0 && last_iteration_secs > 0.0 {
+        let per_agent = last_iteration_secs / my_agents as f64;
+        for b in grid.boxes_of_rank(my_rank) {
+            weights[b] *= per_agent;
+        }
+    }
+    weights
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::LocalId;
+    use crate::space::{Aabb, NsgEntry, PartitionGrid};
+    use crate::util::Vec3;
+
+    #[test]
+    fn weights_count_owned_agents_scaled_by_runtime() {
+        let mut grid = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(20.0, 10.0, 10.0)), 10.0);
+        grid.set_owner(0, 0);
+        grid.set_owner(1, 1);
+        let mut nsg = NeighborSearchGrid::new(grid.whole(), 10.0);
+        // 3 agents in box 0 (rank 0), 1 in box 1 (rank 1), plus one aura
+        // entry that must not count.
+        nsg.add(NsgEntry::Owned(LocalId::new(0, 0)), Vec3::new(1.0, 1.0, 1.0));
+        nsg.add(NsgEntry::Owned(LocalId::new(1, 0)), Vec3::new(2.0, 1.0, 1.0));
+        nsg.add(NsgEntry::Owned(LocalId::new(2, 0)), Vec3::new(3.0, 1.0, 1.0));
+        nsg.add(NsgEntry::Owned(LocalId::new(3, 0)), Vec3::new(15.0, 1.0, 1.0));
+        nsg.add(NsgEntry::Aura(0), Vec3::new(4.0, 1.0, 1.0));
+        let w0 = compute_box_weights(&grid, &nsg, 0, 6.0);
+        // Rank 0: 3 agents, 6s -> 2 s/agent -> box weight 6.0.
+        assert!((w0[0] - 6.0).abs() < 1e-12);
+        assert_eq!(w0[1], 0.0, "other rank's boxes must stay zero");
+        let w1 = compute_box_weights(&grid, &nsg, 1, 2.0);
+        assert!((w1[1] - 2.0).abs() < 1e-12);
+        // Merging recreates the global field.
+        let merged: Vec<f64> = w0.iter().zip(&w1).map(|(a, b)| a + b).collect();
+        assert!((merged[0] - 6.0).abs() < 1e-12);
+        assert!((merged[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_runtime_gives_agent_counts() {
+        let mut grid = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(10.0, 10.0, 10.0)), 10.0);
+        grid.set_owner(0, 0);
+        let mut nsg = NeighborSearchGrid::new(grid.whole(), 10.0);
+        nsg.add(NsgEntry::Owned(LocalId::new(0, 0)), Vec3::new(1.0, 1.0, 1.0));
+        let w = compute_box_weights(&grid, &nsg, 0, 0.0);
+        assert_eq!(w[0], 1.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Command-line interface (no `clap` offline; a small self-contained
+//! parser). `teraagent run --sim epidemiology --ranks 4 ...` — see
+//! [`usage`] for the full surface.
+
+use crate::comm::NetworkModel;
+use crate::config::{BalanceMethod, ParallelMode, SimConfig, VisConfig};
+use crate::io::{Compression, SerializerKind};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug)]
+pub struct Cli {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+/// Usage text.
+pub fn usage() -> String {
+    "\
+teraagent — distributed agent-based simulation engine
+
+USAGE:
+  teraagent run [FLAGS]          run a simulation
+  teraagent info                 print engine/runtime information
+  teraagent help                 this text
+
+FLAGS (run):
+  --config <file.toml>      load a config file (flags below override it)
+  --sim <name>              cell_clustering | cell_proliferation |
+                            epidemiology | oncology
+  --agents <n>              number of agents
+  --iterations <n>          iterations to simulate
+  --mode <m>                openmp | mpi-hybrid | mpi-only
+  --ranks <n>               MPI ranks (simulated)
+  --threads <n>             threads per rank
+  --serializer <s>          ta_io | root_io
+  --compression <c>         none | lz4 | lz4+delta
+  --network <n>             ideal | infiniband | gige
+  --balance <b>             rcb | diffusive | off
+  --balance-every <n>       rebalance cadence (0 = off)
+  --sort-every <n>          agent-sorting cadence (0 = off)
+  --pjrt                    run mechanics through the AOT PJRT artifact
+  --seed <n>                RNG seed
+  --radius <f>              interaction radius
+  --half-extent <f>         space half extent
+  --vis-every <n>           render a frame every n iterations
+  --export-frames           write PPM frames to output/frames/
+"
+    .to_string()
+}
+
+/// Parse argv (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli, String> {
+    let mut it = args.iter();
+    let command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+    let mut flags = BTreeMap::new();
+    while let Some(arg) = it.next() {
+        let Some(name) = arg.strip_prefix("--") else {
+            return Err(format!("unexpected argument {arg:?}"));
+        };
+        // Boolean flags.
+        if matches!(name, "pjrt" | "export-frames" | "single-precision") {
+            flags.insert(name.to_string(), "true".to_string());
+            continue;
+        }
+        let value = it.next().ok_or_else(|| format!("--{name} needs a value"))?;
+        flags.insert(name.to_string(), value.clone());
+    }
+    Ok(Cli { command, flags })
+}
+
+/// Build a [`SimConfig`] from parsed flags (and optional config file).
+pub fn config_from_flags(flags: &BTreeMap<String, String>) -> Result<SimConfig, String> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        SimConfig::from_toml(&text)?
+    } else {
+        SimConfig::default()
+    };
+    let geti = |k: &str| -> Result<Option<usize>, String> {
+        flags
+            .get(k)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{k}: bad number {v:?}")))
+            .transpose()
+    };
+    let getf = |k: &str| -> Result<Option<f64>, String> {
+        flags
+            .get(k)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{k}: bad number {v:?}")))
+            .transpose()
+    };
+    if let Some(v) = flags.get("sim") {
+        cfg.name = v.clone();
+    }
+    if let Some(v) = geti("agents")? {
+        cfg.num_agents = v;
+    }
+    if let Some(v) = geti("iterations")? {
+        cfg.iterations = v;
+    }
+    if let Some(v) = geti("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = getf("radius")? {
+        cfg.interaction_radius = v;
+    }
+    if let Some(v) = getf("half-extent")? {
+        cfg.space_half_extent = v;
+    }
+    let ranks = geti("ranks")?.unwrap_or(cfg.mode.ranks());
+    let threads = geti("threads")?.unwrap_or(cfg.mode.threads_per_rank());
+    let mode_name = flags
+        .get("mode")
+        .map(String::as_str)
+        .unwrap_or(cfg.mode.name());
+    cfg.mode = match mode_name {
+        "openmp" => ParallelMode::OpenMp { threads },
+        "mpi-hybrid" => ParallelMode::MpiHybrid { ranks, threads_per_rank: threads },
+        "mpi-only" => ParallelMode::MpiOnly { ranks },
+        other => return Err(format!("--mode: unknown {other:?}")),
+    };
+    if let Some(v) = flags.get("serializer") {
+        cfg.serializer = SerializerKind::parse(v).ok_or(format!("--serializer: {v:?}"))?;
+    }
+    if let Some(v) = flags.get("compression") {
+        cfg.compression = Compression::parse(v).ok_or(format!("--compression: {v:?}"))?;
+    }
+    if let Some(v) = flags.get("network") {
+        cfg.network = NetworkModel::parse(v).ok_or(format!("--network: {v:?}"))?;
+    }
+    if let Some(v) = flags.get("balance") {
+        cfg.balance_method = BalanceMethod::parse(v).ok_or(format!("--balance: {v:?}"))?;
+    }
+    if let Some(v) = geti("balance-every")? {
+        cfg.balance_every = v;
+    }
+    if let Some(v) = geti("sort-every")? {
+        cfg.sort_every = v;
+    }
+    if flags.contains_key("pjrt") {
+        cfg.use_pjrt = true;
+    }
+    if flags.contains_key("single-precision") {
+        cfg.single_precision = true;
+    }
+    if let Some(v) = geti("vis-every")? {
+        let mut vc = cfg.vis.unwrap_or_default();
+        vc.every = v.max(1);
+        vc.export = flags.contains_key("export-frames");
+        cfg.vis = Some(vc);
+    } else if flags.contains_key("export-frames") {
+        cfg.vis = Some(VisConfig { export: true, ..Default::default() });
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let cli = parse(&argv("run --sim epidemiology --ranks 4 --pjrt")).unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.flags["sim"], "epidemiology");
+        assert_eq!(cli.flags["ranks"], "4");
+        assert_eq!(cli.flags["pjrt"], "true");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&argv("run --ranks")).is_err());
+        assert!(parse(&argv("run stray")).is_err());
+    }
+
+    #[test]
+    fn config_from_flags_full() {
+        let cli = parse(&argv(
+            "run --sim oncology --agents 500 --iterations 7 --mode mpi-only --ranks 8 \
+             --serializer root_io --compression lz4 --network gige --balance diffusive \
+             --balance-every 3 --sort-every 5 --seed 9 --radius 4.5 --half-extent 80 \
+             --vis-every 2",
+        ))
+        .unwrap();
+        let cfg = config_from_flags(&cli.flags).unwrap();
+        assert_eq!(cfg.name, "oncology");
+        assert_eq!(cfg.num_agents, 500);
+        assert_eq!(cfg.iterations, 7);
+        assert_eq!(cfg.mode, ParallelMode::MpiOnly { ranks: 8 });
+        assert_eq!(cfg.serializer, SerializerKind::RootIo);
+        assert_eq!(cfg.network.name, "gige");
+        assert_eq!(cfg.balance_method, BalanceMethod::Diffusive);
+        assert_eq!(cfg.balance_every, 3);
+        assert_eq!(cfg.sort_every, 5);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.interaction_radius, 4.5);
+        assert_eq!(cfg.space_half_extent, 80.0);
+        assert_eq!(cfg.vis.unwrap().every, 2);
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        let cli = parse(&argv("run --mode weird")).unwrap();
+        assert!(config_from_flags(&cli.flags).is_err());
+        let cli = parse(&argv("run --compression weird")).unwrap();
+        assert!(config_from_flags(&cli.flags).is_err());
+    }
+
+    #[test]
+    fn delta_with_root_io_rejected_via_validate() {
+        let cli =
+            parse(&argv("run --serializer root_io --compression lz4+delta")).unwrap();
+        assert!(config_from_flags(&cli.flags).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_all_commands() {
+        let u = usage();
+        assert!(u.contains("run"));
+        assert!(u.contains("--serializer"));
+        assert!(u.contains("lz4+delta"));
+    }
+}

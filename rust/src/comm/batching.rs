@@ -1,0 +1,185 @@
+//! Large-message batching (§2.4.3: "we transmit large messages in smaller
+//! batches to reduce the memory needed for transmission buffers,
+//! compression, and serialization").
+//!
+//! A payload larger than the configured chunk size is split into numbered
+//! chunks carried under [`tags::CHUNK`]-style framing; the receiver
+//! reassembles them in order. Framing: `[msg_id u32][chunk u32][total u32]
+//! [bytes...]`.
+
+use super::mpi::{Communicator, Tag};
+use std::collections::HashMap;
+
+/// Default chunk size (1 MiB) — bounds peak transmission-buffer memory.
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+
+const FRAME_HEADER: usize = 12;
+
+/// Sender side: split `data` into frames and send them to `dst` on `tag`.
+/// `msg_id` must be unique per (sender, receiver, tag) stream position —
+/// the engine uses its iteration counter.
+pub fn send_batched(
+    comm: &mut Communicator,
+    dst: u32,
+    tag: Tag,
+    msg_id: u32,
+    data: &[u8],
+    chunk_bytes: usize,
+) -> usize {
+    let chunk_bytes = chunk_bytes.max(1);
+    let total = data.len().div_ceil(chunk_bytes).max(1) as u32;
+    for (i, chunk) in data.chunks(chunk_bytes.max(1)).enumerate() {
+        let mut frame = Vec::with_capacity(FRAME_HEADER + chunk.len());
+        frame.extend_from_slice(&msg_id.to_le_bytes());
+        frame.extend_from_slice(&(i as u32).to_le_bytes());
+        frame.extend_from_slice(&total.to_le_bytes());
+        frame.extend_from_slice(chunk);
+        comm.isend(dst, tag, frame);
+    }
+    if data.is_empty() {
+        // Zero-length messages still need one frame so the receiver can
+        // match the stream position.
+        let mut frame = Vec::with_capacity(FRAME_HEADER);
+        frame.extend_from_slice(&msg_id.to_le_bytes());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        frame.extend_from_slice(&1u32.to_le_bytes());
+        comm.isend(dst, tag, frame);
+        return 1;
+    }
+    total as usize
+}
+
+/// Receiver-side reassembly buffer for interleaved chunked streams.
+#[derive(Debug, Default)]
+pub struct Reassembler {
+    /// (src, tag, msg_id) -> (received chunks, total)
+    partial: HashMap<(u32, Tag, u32), (Vec<Option<Vec<u8>>>, u32)>,
+}
+
+impl Reassembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one received frame; returns the full payload once complete.
+    pub fn feed(&mut self, src: u32, tag: Tag, frame: Vec<u8>) -> Option<(u32, Vec<u8>)> {
+        assert!(frame.len() >= FRAME_HEADER, "short chunk frame");
+        let msg_id = u32::from_le_bytes(frame[0..4].try_into().unwrap());
+        let chunk = u32::from_le_bytes(frame[4..8].try_into().unwrap());
+        let total = u32::from_le_bytes(frame[8..12].try_into().unwrap());
+        let body = frame[FRAME_HEADER..].to_vec();
+        let key = (src, tag, msg_id);
+        let entry = self
+            .partial
+            .entry(key)
+            .or_insert_with(|| (vec![None; total as usize], total));
+        assert_eq!(entry.1, total, "inconsistent chunk totals");
+        assert!(entry.0[chunk as usize].is_none(), "duplicate chunk");
+        entry.0[chunk as usize] = Some(body);
+        if entry.0.iter().all(|c| c.is_some()) {
+            let (chunks, _) = self.partial.remove(&key).unwrap();
+            let mut out = Vec::new();
+            for c in chunks {
+                out.extend_from_slice(&c.unwrap());
+            }
+            Some((msg_id, out))
+        } else {
+            None
+        }
+    }
+
+    /// Receive a complete batched message from `src` on `tag` (blocking).
+    pub fn recv_batched(&mut self, comm: &mut Communicator, src: u32, tag: Tag) -> (u32, Vec<u8>) {
+        loop {
+            let m = comm.recv(Some(src), Some(tag));
+            if let Some(done) = self.feed(m.src, m.tag, m.data) {
+                return done;
+            }
+        }
+    }
+
+    /// Number of incomplete streams (diagnostics).
+    pub fn pending(&self) -> usize {
+        self.partial.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::mpi::MpiWorld;
+    use crate::comm::network::NetworkModel;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_chunk_round_trip() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let n = send_batched(&mut tx, 1, 7, 1, b"hello", 1024);
+        assert_eq!(n, 1);
+        let mut re = Reassembler::new();
+        let (id, data) = re.recv_batched(&mut rx, 0, 7);
+        assert_eq!(id, 1);
+        assert_eq!(data, b"hello");
+        assert_eq!(re.pending(), 0);
+    }
+
+    #[test]
+    fn multi_chunk_round_trip() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let mut rng = Rng::new(5);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        let n = send_batched(&mut tx, 1, 7, 42, &data, 1024);
+        assert_eq!(n, 10);
+        let mut re = Reassembler::new();
+        let (id, got) = re.recv_batched(&mut rx, 0, 7);
+        assert_eq!(id, 42);
+        assert_eq!(got, data);
+    }
+
+    #[test]
+    fn empty_message_still_frames() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        send_batched(&mut tx, 1, 7, 9, &[], 1024);
+        let mut re = Reassembler::new();
+        let (id, got) = re.recv_batched(&mut rx, 0, 7);
+        assert_eq!(id, 9);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn interleaved_streams_reassemble_independently() {
+        let world = MpiWorld::new(3, NetworkModel::ideal());
+        let mut a = world.communicator(0);
+        let mut b = world.communicator(1);
+        let mut rx = world.communicator(2);
+        let da = vec![1u8; 3000];
+        let db = vec![2u8; 3000];
+        send_batched(&mut a, 2, 7, 1, &da, 1000);
+        send_batched(&mut b, 2, 7, 1, &db, 1000);
+        let mut re = Reassembler::new();
+        let mut done = Vec::new();
+        while done.len() < 2 {
+            let m = rx.recv(None, Some(7));
+            if let Some((_, data)) = re.feed(m.src, m.tag, m.data) {
+                done.push((m.src, data));
+            }
+        }
+        done.sort_by_key(|(s, _)| *s);
+        assert_eq!(done[0].1, da);
+        assert_eq!(done[1].1, db);
+    }
+
+    #[test]
+    fn world_handle_is_shareable() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let w2 = Arc::clone(&world);
+        assert_eq!(w2.size(), 2);
+    }
+}

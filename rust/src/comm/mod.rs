@@ -1,0 +1,18 @@
+//! Cross-rank communication (§2.4.3).
+//!
+//! The paper runs on MPI; this environment has no MPI or cluster, so
+//! [`mpi`] provides an in-process *simulated MPI*: each rank is an OS
+//! thread, ranks share nothing except the transport, and every cross-rank
+//! byte goes through explicit serialized messages — keeping the
+//! serialization/compression costs the paper measures fully real. The
+//! [`network`] model charges simulated wire time per message so that
+//! interconnect-sensitivity experiments (InfiniBand vs Gigabit Ethernet,
+//! Fig. 11) are reproducible. [`batching`] splits large messages into
+//! bounded chunks (§2.4.3's transmission-buffer memory cap).
+
+pub mod batching;
+pub mod mpi;
+pub mod network;
+
+pub use mpi::{Communicator, MpiWorld, RecvMsg, Tag};
+pub use network::NetworkModel;

@@ -1,0 +1,497 @@
+//! In-process simulated MPI.
+//!
+//! Semantics follow the subset of MPI the engine needs (§2.4.3):
+//! non-blocking point-to-point (`isend` / `try_recv` ≈ `MPI_Isend` +
+//! `MPI_Probe`/`MPI_Irecv`), blocking matched receive, barrier, and the
+//! collectives (`allgather`, `allreduce`, `alltoallv`) used by
+//! distributed initialization, load balancing and result reduction.
+//!
+//! Each rank owns a [`Communicator`] handle; mailboxes are per-rank
+//! mutex-protected queues with condvar wakeups. Message payloads are
+//! opaque byte vectors — all typing happens in the serialization layer,
+//! exactly as with real MPI buffers. Every transfer is charged simulated
+//! network seconds per the configured [`NetworkModel`].
+
+use super::network::NetworkModel;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Message tag. The engine uses distinct tags per protocol step.
+pub type Tag = u32;
+
+/// Well-known tags.
+pub mod tags {
+    use super::Tag;
+    pub const AURA: Tag = 1;
+    pub const MIGRATION: Tag = 2;
+    pub const BALANCE: Tag = 3;
+    pub const CONTROL: Tag = 4;
+    pub const CHUNK: Tag = 5;
+    /// Per-round all-to-all tags live above this base.
+    pub const ALLTOALL_BASE: Tag = 0x4000_0000;
+
+    /// Tag for the all-to-all exchange of `round`.
+    pub fn alltoall_round(round: u32) -> Tag {
+        ALLTOALL_BASE + round
+    }
+}
+
+/// A received message.
+#[derive(Debug, Clone)]
+pub struct RecvMsg {
+    pub src: u32,
+    pub tag: Tag,
+    pub data: Vec<u8>,
+}
+
+#[derive(Debug)]
+struct Envelope {
+    src: u32,
+    tag: Tag,
+    data: Vec<u8>,
+}
+
+#[derive(Debug, Default)]
+struct Mailbox {
+    queue: VecDeque<Envelope>,
+}
+
+/// One collective rendezvous slot.
+#[derive(Debug, Default)]
+struct CollectiveSlot {
+    round: u64,
+    deposits: Vec<Option<Vec<u8>>>,
+    /// Count of ranks that picked up the result of the current round.
+    collected: usize,
+    results: Option<Vec<Vec<u8>>>,
+}
+
+/// Shared world state.
+pub struct MpiWorld {
+    size: usize,
+    mailboxes: Vec<(Mutex<Mailbox>, Condvar)>,
+    barrier: std::sync::Barrier,
+    collective: Mutex<CollectiveSlot>,
+    collective_cv: Condvar,
+    network: NetworkModel,
+    /// Total wire bytes moved (all ranks).
+    pub total_wire_bytes: AtomicU64,
+    /// Total messages.
+    pub total_messages: AtomicU64,
+}
+
+impl MpiWorld {
+    /// Create a world with `size` ranks over the given network model.
+    pub fn new(size: usize, network: NetworkModel) -> Arc<MpiWorld> {
+        assert!(size >= 1);
+        Arc::new(MpiWorld {
+            size,
+            mailboxes: (0..size).map(|_| (Mutex::new(Mailbox::default()), Condvar::new())).collect(),
+            barrier: std::sync::Barrier::new(size),
+            collective: Mutex::new(CollectiveSlot {
+                round: 0,
+                deposits: vec![None; size],
+                collected: 0,
+                results: None,
+            }),
+            collective_cv: Condvar::new(),
+            network,
+            total_wire_bytes: AtomicU64::new(0),
+            total_messages: AtomicU64::new(0),
+        })
+    }
+
+    /// Handle for `rank`.
+    pub fn communicator(self: &Arc<Self>, rank: u32) -> Communicator {
+        assert!((rank as usize) < self.size);
+        Communicator { world: Arc::clone(self), rank, network_secs: 0.0 }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+}
+
+/// Per-rank communicator handle.
+pub struct Communicator {
+    world: Arc<MpiWorld>,
+    rank: u32,
+    /// Simulated network seconds charged to this rank.
+    pub network_secs: f64,
+}
+
+impl Communicator {
+    #[inline]
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.world.size
+    }
+
+    /// Non-blocking send (completes immediately in-process; the network
+    /// model charges the simulated wire time to the sender).
+    pub fn isend(&mut self, dst: u32, tag: Tag, data: Vec<u8>) {
+        assert!((dst as usize) < self.world.size, "invalid destination rank {dst}");
+        let bytes = data.len();
+        self.network_secs += self.world.network.transfer_secs(bytes);
+        self.world.total_wire_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.world.total_messages.fetch_add(1, Ordering::Relaxed);
+        let (lock, cv) = &self.world.mailboxes[dst as usize];
+        let mut mb = lock.lock().unwrap();
+        mb.queue.push_back(Envelope { src: self.rank, tag, data });
+        cv.notify_all();
+    }
+
+    /// Probe: is a matching message available? (src/tag `None` = ANY).
+    pub fn probe(&self, src: Option<u32>, tag: Option<Tag>) -> Option<(u32, Tag, usize)> {
+        let (lock, _) = &self.world.mailboxes[self.rank as usize];
+        let mb = lock.lock().unwrap();
+        mb.queue
+            .iter()
+            .find(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
+            .map(|e| (e.src, e.tag, e.data.len()))
+    }
+
+    /// Non-blocking matched receive.
+    pub fn try_recv(&mut self, src: Option<u32>, tag: Option<Tag>) -> Option<RecvMsg> {
+        let (lock, _) = &self.world.mailboxes[self.rank as usize];
+        let mut mb = lock.lock().unwrap();
+        let idx = mb
+            .queue
+            .iter()
+            .position(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))?;
+        let e = mb.queue.remove(idx).unwrap();
+        Some(RecvMsg { src: e.src, tag: e.tag, data: e.data })
+    }
+
+    /// Blocking matched receive.
+    pub fn recv(&mut self, src: Option<u32>, tag: Option<Tag>) -> RecvMsg {
+        let (lock, cv) = &self.world.mailboxes[self.rank as usize];
+        let mut mb = lock.lock().unwrap();
+        loop {
+            if let Some(idx) = mb
+                .queue
+                .iter()
+                .position(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
+            {
+                let e = mb.queue.remove(idx).unwrap();
+                return RecvMsg { src: e.src, tag: e.tag, data: e.data };
+            }
+            mb = cv.wait(mb).unwrap();
+        }
+    }
+
+    /// Cancel (drain) all pending messages with `tag` — the paper's
+    /// "obsolete speculative receives are cancelled" after rebalancing.
+    pub fn cancel_pending(&mut self, tag: Tag) -> usize {
+        let (lock, _) = &self.world.mailboxes[self.rank as usize];
+        let mut mb = lock.lock().unwrap();
+        let before = mb.queue.len();
+        mb.queue.retain(|e| e.tag != tag);
+        before - mb.queue.len()
+    }
+
+    /// Barrier over all ranks.
+    pub fn barrier(&self) {
+        self.world.barrier.wait();
+    }
+
+    /// All-gather: every rank contributes `data`, returns all
+    /// contributions indexed by rank. Ranks must call collectives in the
+    /// same order (standard MPI contract).
+    pub fn allgather(&mut self, data: Vec<u8>) -> Vec<Vec<u8>> {
+        let size = self.world.size;
+        let bytes = data.len();
+        // Simulated cost: ring allgather moves (size-1) messages per rank.
+        if size > 1 {
+            self.network_secs += self.world.network.transfer_secs(bytes) * (size - 1) as f64;
+        }
+        let mut slot = self.world.collective.lock().unwrap();
+        let my_round = slot.round;
+        slot.deposits[self.rank as usize] = Some(data);
+        if slot.deposits.iter().all(|d| d.is_some()) {
+            // Last depositor publishes results and advances the round.
+            let results: Vec<Vec<u8>> =
+                slot.deposits.iter_mut().map(|d| d.take().unwrap()).collect();
+            slot.results = Some(results);
+            slot.collected = 0;
+            self.world.collective_cv.notify_all();
+        } else {
+            while slot.results.is_none() || slot.round != my_round {
+                slot = self.world.collective_cv.wait(slot).unwrap();
+                if slot.round != my_round {
+                    break;
+                }
+            }
+        }
+        let out = slot.results.as_ref().expect("collective results missing").clone();
+        slot.collected += 1;
+        if slot.collected == size {
+            slot.results = None;
+            slot.round += 1;
+            self.world.collective_cv.notify_all();
+        } else {
+            // Wait for round completion to prevent a fast rank from
+            // entering the next collective early and clobbering deposits.
+            while slot.round == my_round && slot.results.is_some() {
+                slot = self.world.collective_cv.wait(slot).unwrap();
+            }
+        }
+        out
+    }
+
+    /// Sum-allreduce over f64 values ("SumOverAllRanks" of §3.4).
+    pub fn allreduce_sum_f64(&mut self, values: &[f64]) -> Vec<f64> {
+        let mut bytes = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let all = self.allgather(bytes);
+        let mut out = vec![0.0; values.len()];
+        for contrib in all {
+            for (i, chunk) in contrib.chunks_exact(8).enumerate() {
+                out[i] += f64::from_bits(u64::from_le_bytes(chunk.try_into().unwrap()));
+            }
+        }
+        out
+    }
+
+    /// Sum-allreduce over u64 counters.
+    pub fn allreduce_sum_u64(&mut self, values: &[u64]) -> Vec<u64> {
+        let mut bytes = Vec::with_capacity(values.len() * 8);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let all = self.allgather(bytes);
+        let mut out = vec![0u64; values.len()];
+        for contrib in all {
+            for (i, chunk) in contrib.chunks_exact(8).enumerate() {
+                out[i] += u64::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        out
+    }
+
+    /// Max-allreduce over one f64.
+    pub fn allreduce_max_f64(&mut self, value: f64) -> f64 {
+        let all = self.allgather(value.to_bits().to_le_bytes().to_vec());
+        all.iter()
+            .map(|b| f64::from_bits(u64::from_le_bytes(b[..8].try_into().unwrap())))
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// All-to-all variable: `per_dst[d]` goes to rank `d`; returns the
+    /// messages received, indexed by source (the agent-migration /
+    /// collective-lookup primitive).
+    ///
+    /// `round` disambiguates successive exchanges: ranks are NOT barrier-
+    /// synchronized between iterations, so a fast rank's round-`r+1`
+    /// message may arrive while a slow rank is still collecting round `r`.
+    /// The round is folded into the message tag, so mismatched messages
+    /// simply wait in the mailbox.
+    pub fn alltoallv(&mut self, per_dst: Vec<Vec<u8>>, round: u32) -> Vec<Vec<u8>> {
+        assert_eq!(per_dst.len(), self.world.size);
+        let tag = tags::alltoall_round(round);
+        for (d, data) in per_dst.into_iter().enumerate() {
+            if d as u32 == self.rank {
+                // Local loopback: deliver directly without network charge.
+                let (lock, cv) = &self.world.mailboxes[d];
+                let mut mb = lock.lock().unwrap();
+                mb.queue.push_back(Envelope { src: self.rank, tag, data });
+                cv.notify_all();
+            } else {
+                self.isend(d as u32, tag, data);
+            }
+        }
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; self.world.size];
+        let mut received = 0;
+        while received < self.world.size {
+            let m = self.recv(None, Some(tag));
+            assert!(out[m.src as usize].is_none(), "duplicate alltoallv message from {}", m.src);
+            out[m.src as usize] = Some(m.data);
+            received += 1;
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn spawn_ranks<F>(size: usize, f: F) -> Vec<thread::JoinHandle<()>>
+    where
+        F: Fn(Communicator) + Send + Sync + 'static,
+    {
+        let world = MpiWorld::new(size, NetworkModel::ideal());
+        let f = Arc::new(f);
+        (0..size)
+            .map(|r| {
+                let comm = world.communicator(r as u32);
+                let f = Arc::clone(&f);
+                thread::spawn(move || f(comm))
+            })
+            .collect()
+    }
+
+    fn join(hs: Vec<thread::JoinHandle<()>>) {
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn point_to_point_send_recv() {
+        join(spawn_ranks(2, |mut c| {
+            if c.rank() == 0 {
+                c.isend(1, tags::AURA, vec![1, 2, 3]);
+            } else {
+                let m = c.recv(Some(0), Some(tags::AURA));
+                assert_eq!(m.data, vec![1, 2, 3]);
+                assert_eq!(m.src, 0);
+            }
+        }));
+    }
+
+    #[test]
+    fn probe_and_try_recv() {
+        join(spawn_ranks(2, |mut c| {
+            if c.rank() == 0 {
+                c.isend(1, tags::MIGRATION, vec![9; 100]);
+            } else {
+                // Spin until probe sees it.
+                loop {
+                    if let Some((src, tag, len)) = c.probe(None, None) {
+                        assert_eq!((src, tag, len), (0, tags::MIGRATION, 100));
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                let m = c.try_recv(Some(0), Some(tags::MIGRATION)).unwrap();
+                assert_eq!(m.data.len(), 100);
+                assert!(c.try_recv(None, None).is_none());
+            }
+        }));
+    }
+
+    #[test]
+    fn tag_matching_is_selective() {
+        join(spawn_ranks(2, |mut c| {
+            if c.rank() == 0 {
+                c.isend(1, tags::AURA, vec![1]);
+                c.isend(1, tags::MIGRATION, vec![2]);
+            } else {
+                // Receive MIGRATION first although AURA arrived first.
+                let m = c.recv(None, Some(tags::MIGRATION));
+                assert_eq!(m.data, vec![2]);
+                let a = c.recv(None, Some(tags::AURA));
+                assert_eq!(a.data, vec![1]);
+            }
+        }));
+    }
+
+    #[test]
+    fn cancel_pending_drops_messages() {
+        join(spawn_ranks(2, |mut c| {
+            if c.rank() == 0 {
+                c.isend(1, tags::AURA, vec![1]);
+                c.isend(1, tags::AURA, vec![2]);
+                c.isend(1, tags::CONTROL, vec![3]);
+                c.barrier();
+            } else {
+                c.barrier(); // ensure all sends arrived
+                let dropped = c.cancel_pending(tags::AURA);
+                assert_eq!(dropped, 2);
+                let m = c.try_recv(None, None).unwrap();
+                assert_eq!(m.tag, tags::CONTROL);
+            }
+        }));
+    }
+
+    #[test]
+    fn allgather_collects_all() {
+        join(spawn_ranks(4, |mut c| {
+            let all = c.allgather(vec![c.rank() as u8; 3]);
+            assert_eq!(all.len(), 4);
+            for (r, d) in all.iter().enumerate() {
+                assert_eq!(d, &vec![r as u8; 3]);
+            }
+        }));
+    }
+
+    #[test]
+    fn allgather_repeated_rounds() {
+        join(spawn_ranks(3, |mut c| {
+            for round in 0..20u8 {
+                let all = c.allgather(vec![c.rank() as u8, round]);
+                for (r, d) in all.iter().enumerate() {
+                    assert_eq!(d, &vec![r as u8, round], "round {round}");
+                }
+            }
+        }));
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        join(spawn_ranks(4, |mut c| {
+            let sums = c.allreduce_sum_f64(&[1.0, c.rank() as f64]);
+            assert_eq!(sums[0], 4.0);
+            assert_eq!(sums[1], 0.0 + 1.0 + 2.0 + 3.0);
+            let us = c.allreduce_sum_u64(&[10]);
+            assert_eq!(us[0], 40);
+            let mx = c.allreduce_max_f64(c.rank() as f64);
+            assert_eq!(mx, 3.0);
+        }));
+    }
+
+    #[test]
+    fn alltoallv_exchanges() {
+        join(spawn_ranks(3, |mut c| {
+            let me = c.rank();
+            let per_dst: Vec<Vec<u8>> = (0..3).map(|d| vec![me as u8, d as u8]).collect();
+            let got = c.alltoallv(per_dst, 7);
+            assert_eq!(got.len(), 3);
+            for (src, d) in got.iter().enumerate() {
+                assert_eq!(d, &vec![src as u8, me as u8]);
+            }
+        }));
+    }
+
+    #[test]
+    fn network_time_is_charged() {
+        let world = MpiWorld::new(2, NetworkModel::gige());
+        let mut c0 = world.communicator(0);
+        let mut c1 = world.communicator(1);
+        c0.isend(1, tags::AURA, vec![0; 125_000]); // 1 Mbit -> ~1 ms + latency
+        let m = c1.recv(Some(0), None);
+        assert_eq!(m.data.len(), 125_000);
+        assert!(c0.network_secs > 0.0009, "network_secs = {}", c0.network_secs);
+        assert_eq!(world.total_messages.load(Ordering::Relaxed), 1);
+        assert_eq!(world.total_wire_bytes.load(Ordering::Relaxed), 125_000);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::AtomicUsize;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let world = MpiWorld::new(4, NetworkModel::ideal());
+        let hs: Vec<_> = (0..4)
+            .map(|r| {
+                let c = world.communicator(r);
+                let counter = Arc::clone(&counter);
+                thread::spawn(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                    c.barrier();
+                    // After the barrier every increment must be visible.
+                    assert_eq!(counter.load(Ordering::SeqCst), 4);
+                })
+            })
+            .collect();
+        join(hs);
+    }
+}

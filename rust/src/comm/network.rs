@@ -1,0 +1,95 @@
+//! Interconnect cost model.
+//!
+//! The paper evaluates on two fabrics: Snellius InfiniBand (200 Gb/s
+//! in-rack / 100 Gb/s across racks, microsecond latency) and System B's
+//! Gigabit Ethernet. Delta encoding pays off on the slow fabric and not on
+//! the fast one (§3.11) — a pure bytes×(latency, bandwidth) effect, which
+//! this model reproduces: each message is charged
+//! `latency + bytes / bandwidth` seconds of *simulated* network time,
+//! accumulated per rank and reported next to wall time.
+
+/// Latency/bandwidth model of one link class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetworkModel {
+    /// One-way message latency in seconds.
+    pub latency_s: f64,
+    /// Bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+    pub name: &'static str,
+}
+
+impl NetworkModel {
+    /// Ideal fabric: zero cost (pure wall-clock runs).
+    pub fn ideal() -> Self {
+        NetworkModel { latency_s: 0.0, bandwidth_bps: f64::INFINITY, name: "ideal" }
+    }
+
+    /// InfiniBand HDR-class fabric (Snellius genoa partition: 200 Gb/s
+    /// within a rack; we use the conservative cross-rack 100 Gb/s).
+    pub fn infiniband() -> Self {
+        NetworkModel { latency_s: 2e-6, bandwidth_bps: 100e9 / 8.0, name: "infiniband" }
+    }
+
+    /// Gigabit Ethernet (System B): ~50 µs latency, 1 Gb/s.
+    pub fn gige() -> Self {
+        NetworkModel { latency_s: 50e-6, bandwidth_bps: 1e9 / 8.0, name: "gige" }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ideal" => Some(Self::ideal()),
+            "infiniband" | "ib" => Some(Self::infiniband()),
+            "gige" | "ethernet" => Some(Self::gige()),
+            _ => None,
+        }
+    }
+
+    /// Simulated seconds to transfer one message of `bytes`.
+    #[inline]
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        if self.bandwidth_bps.is_infinite() {
+            return self.latency_s;
+        }
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_free() {
+        let m = NetworkModel::ideal();
+        assert_eq!(m.transfer_secs(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn gige_slower_than_infiniband() {
+        let bytes = 10 * 1024 * 1024;
+        let ib = NetworkModel::infiniband().transfer_secs(bytes);
+        let ge = NetworkModel::gige().transfer_secs(bytes);
+        assert!(ge > 50.0 * ib, "gige {ge} vs ib {ib}");
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetworkModel::gige();
+        let small = m.transfer_secs(64);
+        assert!((small - m.latency_s) / m.latency_s < 0.02);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let m = NetworkModel::gige();
+        let t = m.transfer_secs(125_000_000); // 1 Gb -> ~1 s
+        assert!((t - 1.0).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn parse_presets() {
+        assert_eq!(NetworkModel::parse("ib").unwrap().name, "infiniband");
+        assert_eq!(NetworkModel::parse("gige").unwrap().name, "gige");
+        assert!(NetworkModel::parse("x").is_none());
+    }
+}

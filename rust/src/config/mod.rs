@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser ([`toml`]) and the typed
+//! simulation configuration ([`schema::SimConfig`]) consumed by the
+//! launcher and CLI.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{BalanceMethod, ParallelMode, SimConfig, VisConfig};
+pub use toml::TomlDoc;

@@ -1,0 +1,388 @@
+//! The typed simulation configuration.
+//!
+//! Covers the engine knobs the paper exposes: parallelization mode
+//! (§2.5: OpenMP / MPI-hybrid / MPI-only — switching requires no
+//! recompilation), serializer and compression choice (Figs. 10/11),
+//! partition-box factor (§2.4.1), load-balancing method and cadence
+//! (§2.4.5), network model, and the §3.9 memory-reduction knobs.
+
+use super::toml::TomlDoc;
+use crate::comm::NetworkModel;
+use crate::io::{Compression, SerializerKind};
+use crate::runtime::MechanicsParams;
+use crate::space::BoundaryCondition;
+
+/// Parallelization mode (§2.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Single rank, shared-memory thread pool — the BioDynaMo baseline.
+    OpenMp { threads: usize },
+    /// One rank per "NUMA domain", several threads each.
+    MpiHybrid { ranks: usize, threads_per_rank: usize },
+    /// One rank per "core", single-threaded ranks.
+    MpiOnly { ranks: usize },
+}
+
+impl ParallelMode {
+    pub fn ranks(&self) -> usize {
+        match self {
+            ParallelMode::OpenMp { .. } => 1,
+            ParallelMode::MpiHybrid { ranks, .. } => *ranks,
+            ParallelMode::MpiOnly { ranks } => *ranks,
+        }
+    }
+
+    pub fn threads_per_rank(&self) -> usize {
+        match self {
+            ParallelMode::OpenMp { threads } => *threads,
+            ParallelMode::MpiHybrid { threads_per_rank, .. } => *threads_per_rank,
+            ParallelMode::MpiOnly { .. } => 1,
+        }
+    }
+
+    /// Total "cores" in use (the §3.8 normalization denominator).
+    pub fn cores(&self) -> usize {
+        self.ranks() * self.threads_per_rank()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParallelMode::OpenMp { .. } => "openmp",
+            ParallelMode::MpiHybrid { .. } => "mpi-hybrid",
+            ParallelMode::MpiOnly { .. } => "mpi-only",
+        }
+    }
+}
+
+/// Load-balancing method (§2.4.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BalanceMethod {
+    /// Global recursive coordinate bisection.
+    Rcb,
+    /// Local diffusive box exchange.
+    Diffusive,
+    /// No rebalancing after initialization.
+    Off,
+}
+
+impl BalanceMethod {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rcb" => Some(BalanceMethod::Rcb),
+            "diffusive" => Some(BalanceMethod::Diffusive),
+            "off" | "none" => Some(BalanceMethod::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BalanceMethod::Rcb => "rcb",
+            BalanceMethod::Diffusive => "diffusive",
+            BalanceMethod::Off => "off",
+        }
+    }
+}
+
+/// In-situ visualization settings (§3.6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VisConfig {
+    /// Render one frame every `every` iterations.
+    pub every: usize,
+    pub width: usize,
+    pub height: usize,
+    /// Write PPM frames to disk (export mode) instead of keeping them
+    /// in memory (pure in-situ timing).
+    pub export: bool,
+}
+
+impl Default for VisConfig {
+    fn default() -> Self {
+        VisConfig { every: 1, width: 400, height: 400, export: false }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub name: String,
+    pub seed: u64,
+    pub iterations: usize,
+    pub num_agents: usize,
+    /// Whole-space half extent (cube centered on the origin).
+    pub space_half_extent: f64,
+    pub interaction_radius: f64,
+    pub boundary: BoundaryCondition,
+    pub mode: ParallelMode,
+    pub serializer: SerializerKind,
+    pub compression: Compression,
+    pub network: NetworkModel,
+    /// Partition box edge = `partition_factor` × NSG cell (§2.4.1).
+    pub partition_factor: f64,
+    pub balance_method: BalanceMethod,
+    /// Rebalance every N iterations (0 = never).
+    pub balance_every: usize,
+    /// Agent sorting cadence (0 = never).
+    pub sort_every: usize,
+    /// Execute mechanics through the AOT PJRT artifact.
+    pub use_pjrt: bool,
+    pub mechanics: MechanicsParams,
+    pub vis: Option<VisConfig>,
+    /// Transport chunk size for large messages (§2.4.3).
+    pub chunk_bytes: usize,
+    /// §3.9 memory-reduction knob: single-precision agent payloads.
+    pub single_precision: bool,
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            name: "cell_clustering".into(),
+            seed: 42,
+            iterations: 10,
+            num_agents: 10_000,
+            space_half_extent: 100.0,
+            interaction_radius: 10.0,
+            boundary: BoundaryCondition::Closed,
+            mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 2 },
+            serializer: SerializerKind::TaIo,
+            compression: Compression::Lz4,
+            network: NetworkModel::ideal(),
+            partition_factor: 3.0,
+            balance_method: BalanceMethod::Rcb,
+            balance_every: 0,
+            sort_every: 0,
+            use_pjrt: false,
+            mechanics: MechanicsParams::default(),
+            vis: None,
+            chunk_bytes: crate::comm::batching::DEFAULT_CHUNK_BYTES,
+            single_precision: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Load from a TOML-subset document (missing keys keep defaults).
+    pub fn from_toml(text: &str) -> Result<SimConfig, String> {
+        let doc = TomlDoc::parse(text).map_err(|e| e.to_string())?;
+        let mut c = SimConfig::default();
+        if let Some(v) = doc.str("name") {
+            c.name = v.into();
+        }
+        if let Some(v) = doc.int("seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = doc.int("iterations") {
+            c.iterations = v as usize;
+        }
+        if let Some(v) = doc.int("num_agents") {
+            c.num_agents = v as usize;
+        }
+        if let Some(v) = doc.float("space_half_extent") {
+            c.space_half_extent = v;
+        }
+        if let Some(v) = doc.float("interaction_radius") {
+            c.interaction_radius = v;
+        }
+        if let Some(v) = doc.str("boundary") {
+            c.boundary = BoundaryCondition::parse(v).ok_or(format!("bad boundary {v:?}"))?;
+        }
+        let mode = doc.str("engine.mode").unwrap_or("mpi-hybrid");
+        let ranks = doc.int("engine.ranks").unwrap_or(2) as usize;
+        let threads = doc.int("engine.threads").unwrap_or(2) as usize;
+        c.mode = match mode {
+            "openmp" => ParallelMode::OpenMp { threads },
+            "mpi-hybrid" => ParallelMode::MpiHybrid { ranks, threads_per_rank: threads },
+            "mpi-only" => ParallelMode::MpiOnly { ranks },
+            other => return Err(format!("bad engine.mode {other:?}")),
+        };
+        if let Some(v) = doc.str("io.serializer") {
+            c.serializer = SerializerKind::parse(v).ok_or(format!("bad serializer {v:?}"))?;
+        }
+        if let Some(v) = doc.str("io.compression") {
+            c.compression = Compression::parse(v).ok_or(format!("bad compression {v:?}"))?;
+        }
+        if let Some(v) = doc.str("io.network") {
+            c.network = NetworkModel::parse(v).ok_or(format!("bad network {v:?}"))?;
+        }
+        if let Some(v) = doc.int("io.chunk_kib") {
+            c.chunk_bytes = (v as usize) * 1024;
+        }
+        if let Some(v) = doc.float("engine.partition_factor") {
+            c.partition_factor = v;
+        }
+        if let Some(v) = doc.str("engine.balance") {
+            c.balance_method = BalanceMethod::parse(v).ok_or(format!("bad balance {v:?}"))?;
+        }
+        if let Some(v) = doc.int("engine.balance_every") {
+            c.balance_every = v as usize;
+        }
+        if let Some(v) = doc.int("engine.sort_every") {
+            c.sort_every = v as usize;
+        }
+        if let Some(v) = doc.bool("engine.pjrt") {
+            c.use_pjrt = v;
+        }
+        if let Some(v) = doc.bool("engine.single_precision") {
+            c.single_precision = v;
+        }
+        if let Some(v) = doc.str("engine.artifacts_dir") {
+            c.artifacts_dir = v.into();
+        }
+        if let Some(v) = doc.float("mechanics.k_rep") {
+            c.mechanics.k_rep = v as f32;
+        }
+        if let Some(v) = doc.float("mechanics.k_adh") {
+            c.mechanics.k_adh = v as f32;
+        }
+        if let Some(v) = doc.float("mechanics.dt") {
+            c.mechanics.dt = v as f32;
+        }
+        if let Some(v) = doc.float("mechanics.max_disp") {
+            c.mechanics.max_disp = v as f32;
+        }
+        if doc.keys().any(|k| k.starts_with("vis.")) || doc.bool("vis.enabled") == Some(true) {
+            let mut vc = VisConfig::default();
+            if let Some(v) = doc.int("vis.every") {
+                vc.every = v as usize;
+            }
+            if let Some(v) = doc.int("vis.width") {
+                vc.width = v as usize;
+            }
+            if let Some(v) = doc.int("vis.height") {
+                vc.height = v as usize;
+            }
+            if let Some(v) = doc.bool("vis.export") {
+                vc.export = v;
+            }
+            c.vis = Some(vc);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.interaction_radius <= 0.0 {
+            return Err("interaction_radius must be positive".into());
+        }
+        if self.space_half_extent <= 0.0 {
+            return Err("space_half_extent must be positive".into());
+        }
+        if self.partition_factor < 1.0 {
+            return Err("partition_factor must be >= 1 (box >= NSG cell)".into());
+        }
+        if self.mode.ranks() == 0 || self.mode.threads_per_rank() == 0 {
+            return Err("ranks/threads must be positive".into());
+        }
+        if self.serializer == SerializerKind::RootIo
+            && matches!(self.compression, Compression::Lz4Delta { .. })
+        {
+            return Err("delta encoding requires the TA IO serializer".into());
+        }
+        Ok(())
+    }
+
+    /// The whole simulation space.
+    pub fn whole_space(&self) -> crate::space::Aabb {
+        crate::space::Aabb::cube(self.space_half_extent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_round_trip_from_toml() {
+        let c = SimConfig::from_toml(
+            r#"
+name = "epidemiology"
+seed = 7
+iterations = 50
+num_agents = 1000
+space_half_extent = 60.0
+interaction_radius = 2.0
+boundary = "toroidal"
+
+[engine]
+mode = "mpi-only"
+ranks = 4
+partition_factor = 2.0
+balance = "diffusive"
+balance_every = 5
+sort_every = 10
+pjrt = true
+single_precision = true
+
+[io]
+serializer = "ta_io"
+compression = "lz4+delta"
+network = "gige"
+chunk_kib = 256
+
+[mechanics]
+k_rep = 3.0
+dt = 0.05
+
+[vis]
+every = 2
+width = 100
+height = 80
+export = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.name, "epidemiology");
+        assert_eq!(c.mode, ParallelMode::MpiOnly { ranks: 4 });
+        assert_eq!(c.boundary, BoundaryCondition::Toroidal);
+        assert!(matches!(c.compression, Compression::Lz4Delta { .. }));
+        assert_eq!(c.network.name, "gige");
+        assert_eq!(c.chunk_bytes, 256 * 1024);
+        assert_eq!(c.balance_method, BalanceMethod::Diffusive);
+        assert_eq!(c.balance_every, 5);
+        assert!(c.use_pjrt);
+        assert!(c.single_precision);
+        assert_eq!(c.mechanics.k_rep, 3.0);
+        assert_eq!(c.mechanics.dt, 0.05);
+        let v = c.vis.unwrap();
+        assert_eq!((v.every, v.width, v.height, v.export), (2, 100, 80, true));
+    }
+
+    #[test]
+    fn rejects_delta_with_root_io() {
+        let err = SimConfig::from_toml(
+            "[io]\nserializer = \"root_io\"\ncompression = \"lz4+delta\"\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("delta"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_enum_values() {
+        assert!(SimConfig::from_toml("boundary = \"weird\"").is_err());
+        assert!(SimConfig::from_toml("[engine]\nmode = \"weird\"").is_err());
+        assert!(SimConfig::from_toml("[io]\nnetwork = \"weird\"").is_err());
+    }
+
+    #[test]
+    fn rejects_small_partition_factor() {
+        let err = SimConfig::from_toml("[engine]\npartition_factor = 0.5").unwrap_err();
+        assert!(err.contains("partition_factor"));
+    }
+
+    #[test]
+    fn mode_core_math() {
+        assert_eq!(ParallelMode::OpenMp { threads: 8 }.cores(), 8);
+        assert_eq!(ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 2 }.cores(), 8);
+        assert_eq!(ParallelMode::MpiOnly { ranks: 8 }.cores(), 8);
+        assert_eq!(ParallelMode::MpiOnly { ranks: 8 }.ranks(), 8);
+    }
+}

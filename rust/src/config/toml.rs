@@ -1,0 +1,215 @@
+//! Minimal TOML-subset parser (no `serde`/`toml` crates offline).
+//!
+//! Supported: `[section]` headers, `key = value` with string (`"…"`),
+//! integer, float, and boolean values, `#` comments, blank lines. Keys are
+//! addressed as `"section.key"` (top-level keys have no prefix).
+
+use std::collections::BTreeMap;
+
+/// A parsed document: flat map from dotted key to raw value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    values: BTreeMap<String, Value>,
+}
+
+/// A TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Parse errors with line numbers.
+#[derive(Debug, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl TomlDoc {
+    /// Parse a document.
+    pub fn parse(text: &str) -> Result<TomlDoc, ParseError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |message: &str| ParseError { line: lineno + 1, message: message.into() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    return Err(err("unterminated section header"));
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(err("expected `key = value`"));
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .ok_or_else(|| err(&format!("cannot parse value {:?}", &line[eq + 1..])))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.values.get(key)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.values.get(key)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "cell_clustering"
+seed = 42
+[engine]
+ranks = 4            # inline comment
+threads = 2
+radius = 2.5
+pjrt = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("name"), Some("cell_clustering"));
+        assert_eq!(doc.int("seed"), Some(42));
+        assert_eq!(doc.int("engine.ranks"), Some(4));
+        assert_eq!(doc.float("engine.radius"), Some(2.5));
+        assert_eq!(doc.bool("engine.pjrt"), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.float("x"), Some(3.0));
+        assert_eq!(doc.int("x"), Some(3));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let doc = TomlDoc::parse(r##"tag = "a#b" # real comment"##).unwrap();
+        assert_eq!(doc.str("tag"), Some("a#b"));
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = TomlDoc::parse("a = -7\nb = -2.5\nc = 1e3").unwrap();
+        assert_eq!(doc.int("a"), Some(-7));
+        assert_eq!(doc.float("b"), Some(-2.5));
+        assert_eq!(doc.float("c"), Some(1000.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = TomlDoc::parse("x = @@").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn type_mismatch_returns_none() {
+        let doc = TomlDoc::parse("x = 1").unwrap();
+        assert_eq!(doc.str("x"), None);
+        assert_eq!(doc.bool("x"), None);
+        assert_eq!(doc.int("missing"), None);
+    }
+
+    #[test]
+    fn later_values_override() {
+        let doc = TomlDoc::parse("x = 1\nx = 2").unwrap();
+        assert_eq!(doc.int("x"), Some(2));
+    }
+}

@@ -1,0 +1,318 @@
+//! The agent data model.
+//!
+//! An [`Agent`] is a fixed-layout header (ids, position, diameter, kind
+//! payload) plus a variable-length list of [`Behavior`]s — the same
+//! block-tree shape (Fig. 2A of the paper: agent node with 0..n behavior
+//! children) that [TeraAgent IO](crate::io::ta_io) serializes by in-order
+//! traversal. "Polymorphism" (the paper's virtual classes) is enum-based:
+//! [`AgentKind`] carries the per-class payload, and its discriminant plays
+//! the role of the *class id written in place of the vtable pointer*.
+
+use super::ids::{AgentPointer, GlobalId, LocalId};
+use crate::util::Vec3;
+
+/// Cell type for the clustering / sorting models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellType {
+    A,
+    B,
+}
+
+impl CellType {
+    pub fn code(self) -> u8 {
+        match self {
+            CellType::A => 0,
+            CellType::B => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> CellType {
+        if c == 0 { CellType::A } else { CellType::B }
+    }
+}
+
+/// SIR compartment for the epidemiology model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SirState {
+    Susceptible,
+    Infected,
+    Recovered,
+}
+
+impl SirState {
+    pub fn code(self) -> u8 {
+        match self {
+            SirState::Susceptible => 0,
+            SirState::Infected => 1,
+            SirState::Recovered => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> SirState {
+        match c {
+            0 => SirState::Susceptible,
+            1 => SirState::Infected,
+            _ => SirState::Recovered,
+        }
+    }
+}
+
+/// Per-class agent payload (the "most derived class" of the paper).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AgentKind {
+    /// Plain spherical cell used by clustering / proliferation.
+    Cell {
+        cell_type: CellType,
+        /// Adhesion coefficient towards same-type neighbors.
+        adhesion: f64,
+    },
+    /// Proliferating cell: grows, divides above a volume threshold.
+    GrowingCell {
+        volume: f64,
+        growth_rate: f64,
+        division_volume: f64,
+    },
+    /// A person in the epidemiology model.
+    Person {
+        state: SirState,
+        /// Iterations since infection (0 when not infected).
+        infected_for: u32,
+    },
+    /// Tumor cell for the oncology model.
+    TumorCell {
+        /// Cell-cycle progress in [0, 1); division at 1.
+        cycle: f64,
+        /// Probability per iteration to be quiescent (no growth).
+        quiescent: bool,
+    },
+}
+
+impl AgentKind {
+    /// Stable class id — written to the wire in place of the vtable pointer.
+    pub fn class_id(&self) -> u16 {
+        match self {
+            AgentKind::Cell { .. } => 1,
+            AgentKind::GrowingCell { .. } => 2,
+            AgentKind::Person { .. } => 3,
+            AgentKind::TumorCell { .. } => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AgentKind::Cell { .. } => "Cell",
+            AgentKind::GrowingCell { .. } => "GrowingCell",
+            AgentKind::Person { .. } => "Person",
+            AgentKind::TumorCell { .. } => "TumorCell",
+        }
+    }
+}
+
+/// A behavior attached to an agent (the paper's behavior objects; the
+/// variable-length children of the agent's block tree).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Behavior {
+    /// Deterministic diameter growth up to a maximum.
+    Growth { rate: f64, max_diameter: f64 },
+    /// Division when volume exceeds a threshold (GrowingCell).
+    Divide,
+    /// Brownian random walk.
+    RandomWalk { speed: f64 },
+    /// SIR infection dynamics (Person).
+    Infection {
+        radius: f64,
+        prob: f64,
+        recovery_iters: u32,
+    },
+    /// Tumor growth + division cycle (TumorCell).
+    TumorGrowth { cycle_rate: f64, max_diameter: f64 },
+}
+
+impl Behavior {
+    /// Stable class id for serialization.
+    pub fn class_id(&self) -> u16 {
+        match self {
+            Behavior::Growth { .. } => 1,
+            Behavior::Divide => 2,
+            Behavior::RandomWalk { .. } => 3,
+            Behavior::Infection { .. } => 4,
+            Behavior::TumorGrowth { .. } => 5,
+        }
+    }
+}
+
+/// An agent: fixed-layout header + behavior list (+ optional const pointer
+/// to another agent, exercising the [`AgentPointer`] indirection).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Agent {
+    /// Local identifier on the owning rank; reassigned on migration.
+    pub local_id: LocalId,
+    /// Global identifier, generated lazily (UNSET until first transfer).
+    pub global_id: GlobalId,
+    pub position: Vec3,
+    pub diameter: f64,
+    pub kind: AgentKind,
+    pub behaviors: Vec<Behavior>,
+    /// Optional reference to another agent (e.g. mother cell); const-only.
+    pub neighbor_ref: AgentPointer,
+}
+
+impl Agent {
+    /// New cell of the given type at a position.
+    pub fn cell(position: Vec3, diameter: f64, cell_type: CellType) -> Agent {
+        Agent {
+            local_id: LocalId::INVALID,
+            global_id: GlobalId::UNSET,
+            position,
+            diameter,
+            kind: AgentKind::Cell { cell_type, adhesion: 0.4 },
+            behaviors: Vec::new(),
+            neighbor_ref: AgentPointer::NULL,
+        }
+    }
+
+    /// New growing/dividing cell.
+    pub fn growing_cell(position: Vec3, diameter: f64) -> Agent {
+        let volume = sphere_volume(diameter);
+        Agent {
+            local_id: LocalId::INVALID,
+            global_id: GlobalId::UNSET,
+            position,
+            diameter,
+            kind: AgentKind::GrowingCell {
+                volume,
+                growth_rate: volume * 0.05,
+                division_volume: volume * 2.0,
+            },
+            behaviors: vec![Behavior::Growth { rate: 1.0, max_diameter: diameter * 2.0 }, Behavior::Divide],
+            neighbor_ref: AgentPointer::NULL,
+        }
+    }
+
+    /// New person for the epidemiology model.
+    pub fn person(position: Vec3, state: SirState) -> Agent {
+        Agent {
+            local_id: LocalId::INVALID,
+            global_id: GlobalId::UNSET,
+            position,
+            diameter: 1.0,
+            kind: AgentKind::Person { state, infected_for: 0 },
+            behaviors: vec![
+                Behavior::RandomWalk { speed: 1.0 },
+                Behavior::Infection { radius: 1.0, prob: 0.05, recovery_iters: 50 },
+            ],
+            neighbor_ref: AgentPointer::NULL,
+        }
+    }
+
+    /// New tumor cell.
+    pub fn tumor_cell(position: Vec3, diameter: f64) -> Agent {
+        Agent {
+            local_id: LocalId::INVALID,
+            global_id: GlobalId::UNSET,
+            position,
+            diameter,
+            kind: AgentKind::TumorCell { cycle: 0.0, quiescent: false },
+            behaviors: vec![Behavior::TumorGrowth { cycle_rate: 0.04, max_diameter: diameter * 1.26 }],
+            neighbor_ref: AgentPointer::NULL,
+        }
+    }
+
+    /// Sphere volume from the current diameter.
+    pub fn volume(&self) -> f64 {
+        sphere_volume(self.diameter)
+    }
+
+    /// Approximate heap size of this agent (header + behavior block).
+    pub fn approx_bytes(&self) -> u64 {
+        (std::mem::size_of::<Agent>() + self.behaviors.capacity() * std::mem::size_of::<Behavior>())
+            as u64
+    }
+}
+
+/// Volume of a sphere with the given diameter.
+#[inline]
+pub fn sphere_volume(diameter: f64) -> f64 {
+    std::f64::consts::PI / 6.0 * diameter * diameter * diameter
+}
+
+/// Diameter of a sphere with the given volume.
+#[inline]
+pub fn sphere_diameter(volume: f64) -> f64 {
+    (6.0 * volume / std::f64::consts::PI).cbrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_kind() {
+        let c = Agent::cell(Vec3::ZERO, 10.0, CellType::B);
+        assert_eq!(c.kind.class_id(), 1);
+        assert!(matches!(c.kind, AgentKind::Cell { cell_type: CellType::B, .. }));
+        let g = Agent::growing_cell(Vec3::ZERO, 10.0);
+        assert_eq!(g.kind.class_id(), 2);
+        assert_eq!(g.behaviors.len(), 2);
+        let p = Agent::person(Vec3::ZERO, SirState::Infected);
+        assert_eq!(p.kind.class_id(), 3);
+        let t = Agent::tumor_cell(Vec3::ZERO, 10.0);
+        assert_eq!(t.kind.class_id(), 4);
+    }
+
+    #[test]
+    fn class_ids_are_distinct() {
+        let kinds = [
+            Agent::cell(Vec3::ZERO, 1.0, CellType::A).kind.class_id(),
+            Agent::growing_cell(Vec3::ZERO, 1.0).kind.class_id(),
+            Agent::person(Vec3::ZERO, SirState::Susceptible).kind.class_id(),
+            Agent::tumor_cell(Vec3::ZERO, 1.0).kind.class_id(),
+        ];
+        let mut sorted = kinds.to_vec();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), kinds.len());
+    }
+
+    #[test]
+    fn sphere_volume_diameter_round_trip() {
+        let d = 12.34;
+        let v = sphere_volume(d);
+        assert!((sphere_diameter(v) - d).abs() < 1e-9);
+        // unit sphere: d=2 -> 4/3 π
+        assert!((sphere_volume(2.0) - 4.0 / 3.0 * std::f64::consts::PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sir_codes_round_trip() {
+        for s in [SirState::Susceptible, SirState::Infected, SirState::Recovered] {
+            assert_eq!(SirState::from_code(s.code()), s);
+        }
+        for t in [CellType::A, CellType::B] {
+            assert_eq!(CellType::from_code(t.code()), t);
+        }
+    }
+
+    #[test]
+    fn approx_bytes_counts_behaviors() {
+        let mut a = Agent::cell(Vec3::ZERO, 1.0, CellType::A);
+        let base = a.approx_bytes();
+        a.behaviors.push(Behavior::Divide);
+        assert!(a.approx_bytes() > base);
+    }
+
+    #[test]
+    fn behavior_class_ids_distinct() {
+        let ids = [
+            Behavior::Growth { rate: 0.0, max_diameter: 0.0 }.class_id(),
+            Behavior::Divide.class_id(),
+            Behavior::RandomWalk { speed: 0.0 }.class_id(),
+            Behavior::Infection { radius: 0.0, prob: 0.0, recovery_iters: 0 }.class_id(),
+            Behavior::TumorGrowth { cycle_rate: 0.0, max_diameter: 0.0 }.class_id(),
+        ];
+        let mut s = ids.to_vec();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), ids.len());
+    }
+}

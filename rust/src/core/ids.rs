@@ -1,0 +1,181 @@
+//! Agent identifiers (§2.5 of the paper).
+//!
+//! BioDynaMo addresses agents through a *local* identifier
+//! `⟨index, reuse_counter⟩`: `index` slots into a vector-based map (cheap,
+//! lock-free adds/removes to distinct elements) and `reuse_counter`
+//! disambiguates reuse of a freed slot. Distribution breaks the "indices are
+//! almost contiguous" invariant (migrated/aura agents arrive with foreign
+//! indices), so TeraAgent adds a *global* identifier `⟨rank, counter⟩` that
+//! is constant for the agent's lifetime and is generated lazily — only when
+//! an agent first crosses a rank boundary or is checkpointed.
+
+use std::fmt;
+
+/// Local identifier: unique among *active* agents of one rank.
+///
+/// Invariant: at any time at most one active agent holds a given `index`;
+/// when a slot is reused, `reuse` is incremented, so the full pair is unique
+/// across the rank's history.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LocalId {
+    pub index: u32,
+    pub reuse: u32,
+}
+
+impl LocalId {
+    pub const INVALID: LocalId = LocalId { index: u32::MAX, reuse: u32::MAX };
+
+    #[inline]
+    pub fn new(index: u32, reuse: u32) -> Self {
+        LocalId { index, reuse }
+    }
+
+    #[inline]
+    pub fn is_valid(self) -> bool {
+        self != LocalId::INVALID
+    }
+
+    /// Pack into a u64 (index in the high half, reuse in the low half).
+    #[inline]
+    pub fn pack(self) -> u64 {
+        ((self.index as u64) << 32) | self.reuse as u64
+    }
+
+    #[inline]
+    pub fn unpack(v: u64) -> Self {
+        LocalId { index: (v >> 32) as u32, reuse: v as u32 }
+    }
+}
+
+impl fmt::Display for LocalId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "L⟨{},{}⟩", self.index, self.reuse)
+    }
+}
+
+/// Global identifier: `⟨creating rank, strictly increasing counter⟩`.
+/// Constant for the whole simulation; never reused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct GlobalId {
+    pub rank: u32,
+    pub counter: u64,
+}
+
+impl GlobalId {
+    /// Sentinel "not yet assigned" value. Global ids are generated on
+    /// demand (first migration / aura transfer / checkpoint).
+    pub const UNSET: GlobalId = GlobalId { rank: u32::MAX, counter: u64::MAX };
+
+    #[inline]
+    pub fn new(rank: u32, counter: u64) -> Self {
+        GlobalId { rank, counter }
+    }
+
+    #[inline]
+    pub fn is_set(self) -> bool {
+        self != GlobalId::UNSET
+    }
+}
+
+impl fmt::Display for GlobalId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "G⟨r{},{}⟩", self.rank, self.counter)
+    }
+}
+
+/// Issues global identifiers for one rank.
+#[derive(Clone, Debug)]
+pub struct GlobalIdSource {
+    rank: u32,
+    next: u64,
+}
+
+impl GlobalIdSource {
+    pub fn new(rank: u32) -> Self {
+        GlobalIdSource { rank, next: 0 }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> GlobalId {
+        let id = GlobalId::new(self.rank, self.next);
+        self.next += 1;
+        id
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.next
+    }
+}
+
+/// Smart pointer to another agent (§2.2, observation 1).
+///
+/// Stores the pointee's *global* identifier instead of a raw address, so
+/// serializing an `AgentPointer` reduces to serializing the id; the raw
+/// reference is re-obtained from the [`ResourceManager`] map on access.
+/// Only `const` (read) access is exposed, matching the paper's restriction
+/// that avoids merging divergent replicas across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AgentPointer {
+    pub target: GlobalId,
+}
+
+impl AgentPointer {
+    pub const NULL: AgentPointer = AgentPointer { target: GlobalId::UNSET };
+
+    #[inline]
+    pub fn to(target: GlobalId) -> Self {
+        AgentPointer { target }
+    }
+
+    #[inline]
+    pub fn is_null(self) -> bool {
+        !self.target.is_set()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_id_pack_round_trip() {
+        let id = LocalId::new(0xDEAD_BEEF, 42);
+        assert_eq!(LocalId::unpack(id.pack()), id);
+    }
+
+    #[test]
+    fn local_id_invalid_flag() {
+        assert!(!LocalId::INVALID.is_valid());
+        assert!(LocalId::new(0, 0).is_valid());
+    }
+
+    #[test]
+    fn global_id_source_strictly_increasing() {
+        let mut src = GlobalIdSource::new(3);
+        let a = src.next();
+        let b = src.next();
+        assert_eq!(a.rank, 3);
+        assert_eq!(b.counter, a.counter + 1);
+        assert_eq!(src.issued(), 2);
+    }
+
+    #[test]
+    fn global_id_unset_sentinel() {
+        assert!(!GlobalId::UNSET.is_set());
+        assert!(GlobalId::new(0, 0).is_set());
+    }
+
+    #[test]
+    fn agent_pointer_null() {
+        assert!(AgentPointer::NULL.is_null());
+        let p = AgentPointer::to(GlobalId::new(1, 7));
+        assert!(!p.is_null());
+        assert_eq!(p.target, GlobalId::new(1, 7));
+    }
+
+    #[test]
+    fn ids_are_ordered() {
+        assert!(LocalId::new(1, 0) < LocalId::new(2, 0));
+        assert!(GlobalId::new(0, 5) < GlobalId::new(1, 0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Agent substrate: identifiers, the agent data model, behaviors, and the
+//! per-rank [`ResourceManager`] that owns agent storage.
+
+pub mod agent;
+pub mod compact;
+pub mod ids;
+pub mod resource_manager;
+
+pub use agent::{Agent, AgentKind, Behavior, CellType, SirState};
+pub use ids::{AgentPointer, GlobalId, LocalId};
+pub use resource_manager::ResourceManager;

@@ -1,0 +1,369 @@
+//! Per-rank agent storage (the paper's `ResourceManager`).
+//!
+//! Owned agents live in a slot vector indexed by the *local id*'s `index`
+//! field — the "vector-based unordered map" of §2.5. Freed slots go to a
+//! free list; reuse bumps the slot's `reuse` counter so stale `LocalId`s
+//! can never alias a new agent. Aura (ghost) agents received from neighbor
+//! ranks are stored separately and rebuilt every iteration. A
+//! `GlobalId → slot` map supports [`AgentPointer`](super::ids::AgentPointer)
+//! resolution and delta-encoding reference matching.
+
+use super::agent::Agent;
+use super::ids::{GlobalId, GlobalIdSource, LocalId};
+use crate::util::Vec3;
+use std::collections::HashMap;
+
+/// Per-rank agent container.
+#[derive(Debug)]
+pub struct ResourceManager {
+    /// Slot vector: `slots[local_id.index]`.
+    slots: Vec<Option<Agent>>,
+    /// Current reuse counter per slot (incremented on free).
+    reuse: Vec<u32>,
+    /// Free slot indices available for reuse.
+    free: Vec<u32>,
+    /// Number of live (owned) agents.
+    live: usize,
+    /// Aura agents (read-only copies of neighbor-rank agents).
+    aura: Vec<Agent>,
+    /// GlobalId -> owned slot index, for pointer resolution.
+    global_map: HashMap<GlobalId, u32>,
+    /// Issues global ids on demand.
+    pub id_source: GlobalIdSource,
+}
+
+impl ResourceManager {
+    pub fn new(rank: u32) -> Self {
+        ResourceManager {
+            slots: Vec::new(),
+            reuse: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            aura: Vec::new(),
+            global_map: HashMap::new(),
+            id_source: GlobalIdSource::new(rank),
+        }
+    }
+
+    /// Number of live owned agents.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Number of slots (capacity view; includes holes).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Add an agent, assigning its local id. Returns the id.
+    pub fn add(&mut self, mut agent: Agent) -> LocalId {
+        let index = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.slots.push(None);
+                self.reuse.push(0);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let id = LocalId::new(index, self.reuse[index as usize]);
+        agent.local_id = id;
+        if agent.global_id.is_set() {
+            self.global_map.insert(agent.global_id, index);
+        }
+        debug_assert!(self.slots[index as usize].is_none());
+        self.slots[index as usize] = Some(agent);
+        self.live += 1;
+        id
+    }
+
+    /// Remove an agent by local id; returns it if the id was live.
+    pub fn remove(&mut self, id: LocalId) -> Option<Agent> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
+            return None;
+        }
+        let agent = self.slots[idx].take()?;
+        // Bump reuse so stale ids can't resolve; recycle the slot.
+        self.reuse[idx] = self.reuse[idx].wrapping_add(1);
+        self.free.push(id.index);
+        self.live -= 1;
+        if agent.global_id.is_set() {
+            self.global_map.remove(&agent.global_id);
+        }
+        Some(agent)
+    }
+
+    /// Borrow an agent by local id (None if stale or freed).
+    #[inline]
+    pub fn get(&self, id: LocalId) -> Option<&Agent> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
+            return None;
+        }
+        self.slots[idx].as_ref()
+    }
+
+    /// Mutably borrow an agent by local id.
+    #[inline]
+    pub fn get_mut(&mut self, id: LocalId) -> Option<&mut Agent> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
+            return None;
+        }
+        self.slots[idx].as_mut()
+    }
+
+    /// Resolve an agent by *global* id (owned agents only). This is the
+    /// `AgentPointer` indirection: global id -> map -> reference.
+    pub fn get_by_global(&self, gid: GlobalId) -> Option<&Agent> {
+        let idx = *self.global_map.get(&gid)?;
+        self.slots[idx as usize].as_ref()
+    }
+
+    /// Ensure the agent has a global id (generated on demand, §2.5) and
+    /// return it.
+    pub fn ensure_global_id(&mut self, id: LocalId) -> Option<GlobalId> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
+            return None;
+        }
+        // Split borrow: take id_source before the slot borrow.
+        let agent = self.slots[idx].as_mut()?;
+        if !agent.global_id.is_set() {
+            agent.global_id = self.id_source.next();
+            self.global_map.insert(agent.global_id, id.index);
+        }
+        Some(agent.global_id)
+    }
+
+    /// Iterate live owned agents.
+    pub fn iter(&self) -> impl Iterator<Item = &Agent> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Iterate live owned agents mutably.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Agent> {
+        self.slots.iter_mut().filter_map(|s| s.as_mut())
+    }
+
+    /// Live local ids (snapshot).
+    pub fn ids(&self) -> Vec<LocalId> {
+        self.iter().map(|a| a.local_id).collect()
+    }
+
+    // ----- aura ------------------------------------------------------------
+
+    /// Replace the aura set (rebuilt each iteration, §2.2.1 Deallocation).
+    pub fn set_aura(&mut self, agents: Vec<Agent>) {
+        self.aura = agents;
+    }
+
+    pub fn clear_aura(&mut self) {
+        self.aura.clear();
+    }
+
+    pub fn aura(&self) -> &[Agent] {
+        &self.aura
+    }
+
+    pub fn aura_mut(&mut self) -> &mut Vec<Agent> {
+        &mut self.aura
+    }
+
+    // ----- sorting ----------------------------------------------------------
+
+    /// Agent sorting (§2.5): reorder agents so that agents close in space
+    /// are close in memory (Morton order), improving cache hit rate. All
+    /// agents move to fresh slots; local ids are reassigned; this is also
+    /// the point where buffers of migrated-in agents are compacted away
+    /// (the paper's deferred-deallocation story).
+    pub fn sort_by_position(&mut self, origin: Vec3, cell: f64) {
+        let mut agents: Vec<Agent> = self
+            .slots
+            .iter_mut()
+            .filter_map(|s| s.take())
+            .collect();
+        agents.sort_by_key(|a| morton3(a.position - origin, cell));
+        // Rebuild storage from scratch; reuse counters keep increasing per
+        // slot so stale ids remain invalid.
+        for r in self.reuse.iter_mut() {
+            *r = r.wrapping_add(1);
+        }
+        self.slots.clear();
+        self.slots.resize_with(agents.len(), || None);
+        self.reuse.resize(agents.len().max(self.reuse.len()), 0);
+        self.free.clear();
+        self.global_map.clear();
+        self.live = 0;
+        let reuse_snapshot: Vec<u32> = self.reuse.clone();
+        for (i, mut a) in agents.into_iter().enumerate() {
+            let id = LocalId::new(i as u32, reuse_snapshot[i]);
+            a.local_id = id;
+            if a.global_id.is_set() {
+                self.global_map.insert(a.global_id, i as u32);
+            }
+            self.slots[i] = Some(a);
+            self.live += 1;
+        }
+    }
+
+    /// Approximate live bytes of this container (for memory accounting).
+    pub fn approx_bytes(&self) -> u64 {
+        let slot_bytes = self.slots.capacity() * std::mem::size_of::<Option<Agent>>();
+        let aux = self.reuse.capacity() * 4
+            + self.free.capacity() * 4
+            + self.global_map.len() * (std::mem::size_of::<GlobalId>() + 8);
+        let behaviors: usize = self
+            .iter()
+            .map(|a| a.behaviors.capacity() * std::mem::size_of::<super::agent::Behavior>())
+            .sum();
+        let aura = self.aura.capacity() * std::mem::size_of::<Agent>();
+        (slot_bytes + aux + behaviors + aura) as u64
+    }
+}
+
+/// 3D Morton (Z-order) key of a position quantized to `cell`-sized bins.
+/// 21 bits per axis (enough for 2M cells per axis).
+pub fn morton3(p: Vec3, cell: f64) -> u64 {
+    let q = |v: f64| -> u64 {
+        let i = (v / cell).max(0.0) as u64;
+        i.min((1 << 21) - 1)
+    };
+    interleave3(q(p.x)) | (interleave3(q(p.y)) << 1) | (interleave3(q(p.z)) << 2)
+}
+
+/// Spread the low 21 bits of `v` so consecutive bits are 3 apart.
+fn interleave3(mut v: u64) -> u64 {
+    v &= 0x1F_FFFF;
+    v = (v | (v << 32)) & 0x1F00000000FFFF;
+    v = (v | (v << 16)) & 0x1F0000FF0000FF;
+    v = (v | (v << 8)) & 0x100F00F00F00F00F;
+    v = (v | (v << 4)) & 0x10C30C30C30C30C3;
+    v = (v | (v << 2)) & 0x1249249249249249;
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+
+    fn mk(pos: Vec3) -> Agent {
+        Agent::cell(pos, 10.0, CellType::A)
+    }
+
+    #[test]
+    fn add_get_remove() {
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add(mk(Vec3::new(1.0, 2.0, 3.0)));
+        assert_eq!(rm.len(), 1);
+        assert_eq!(rm.get(id).unwrap().position, Vec3::new(1.0, 2.0, 3.0));
+        let a = rm.remove(id).unwrap();
+        assert_eq!(a.local_id, id);
+        assert_eq!(rm.len(), 0);
+        assert!(rm.get(id).is_none());
+    }
+
+    #[test]
+    fn slot_reuse_bumps_counter() {
+        let mut rm = ResourceManager::new(0);
+        let id1 = rm.add(mk(Vec3::ZERO));
+        rm.remove(id1).unwrap();
+        let id2 = rm.add(mk(Vec3::ZERO));
+        assert_eq!(id1.index, id2.index, "slot should be reused");
+        assert_ne!(id1.reuse, id2.reuse, "reuse counter must differ");
+        assert!(rm.get(id1).is_none(), "stale id must not resolve");
+        assert!(rm.get(id2).is_some());
+    }
+
+    #[test]
+    fn stale_id_mutation_refused() {
+        let mut rm = ResourceManager::new(0);
+        let id1 = rm.add(mk(Vec3::ZERO));
+        rm.remove(id1);
+        rm.add(mk(Vec3::ZERO));
+        assert!(rm.get_mut(id1).is_none());
+        assert!(rm.remove(id1).is_none());
+    }
+
+    #[test]
+    fn global_id_on_demand() {
+        let mut rm = ResourceManager::new(7);
+        let id = rm.add(mk(Vec3::ZERO));
+        assert!(!rm.get(id).unwrap().global_id.is_set());
+        let gid = rm.ensure_global_id(id).unwrap();
+        assert_eq!(gid.rank, 7);
+        // Idempotent.
+        assert_eq!(rm.ensure_global_id(id).unwrap(), gid);
+        assert_eq!(rm.get_by_global(gid).unwrap().local_id, id);
+    }
+
+    #[test]
+    fn iter_counts_live_only() {
+        let mut rm = ResourceManager::new(0);
+        let a = rm.add(mk(Vec3::ZERO));
+        let _b = rm.add(mk(Vec3::ZERO));
+        rm.remove(a);
+        assert_eq!(rm.iter().count(), 1);
+        assert_eq!(rm.len(), 1);
+    }
+
+    #[test]
+    fn aura_replaced_wholesale() {
+        let mut rm = ResourceManager::new(0);
+        rm.set_aura(vec![mk(Vec3::ZERO), mk(Vec3::ZERO)]);
+        assert_eq!(rm.aura().len(), 2);
+        rm.set_aura(vec![mk(Vec3::ZERO)]);
+        assert_eq!(rm.aura().len(), 1);
+        rm.clear_aura();
+        assert!(rm.aura().is_empty());
+    }
+
+    #[test]
+    fn sort_preserves_agents_and_invalidates_old_ids() {
+        let mut rm = ResourceManager::new(0);
+        let mut ids = Vec::new();
+        for i in 0..50 {
+            ids.push(rm.add(mk(Vec3::new((50 - i) as f64, 0.0, 0.0))));
+        }
+        let gid = rm.ensure_global_id(ids[10]).unwrap();
+        rm.sort_by_position(Vec3::ZERO, 1.0);
+        assert_eq!(rm.len(), 50);
+        // Old ids are stale now.
+        assert!(rm.get(ids[0]).is_none());
+        // Global id still resolves.
+        assert!(rm.get_by_global(gid).is_some());
+        // Positions are sorted along x (Morton of (x,0,0) is monotone in x).
+        let xs: Vec<f64> = rm.iter().map(|a| a.position.x).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(xs, sorted);
+    }
+
+    #[test]
+    fn morton_orders_locality() {
+        // Near points should compare closer than far points along the curve.
+        let a = morton3(Vec3::new(0.0, 0.0, 0.0), 1.0);
+        let b = morton3(Vec3::new(1.0, 0.0, 0.0), 1.0);
+        let far = morton3(Vec3::new(1000.0, 1000.0, 1000.0), 1.0);
+        assert!(b > a);
+        assert!(far > b);
+        // Negative coordinates clamp to 0, never panic.
+        let _ = morton3(Vec3::new(-5.0, -5.0, -5.0), 1.0);
+    }
+
+    #[test]
+    fn approx_bytes_nonzero_when_populated() {
+        let mut rm = ResourceManager::new(0);
+        for _ in 0..10 {
+            rm.add(mk(Vec3::ZERO));
+        }
+        assert!(rm.approx_bytes() > 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Checkpoint / restore (the paper's backup path, §2.5).
+//!
+//! BioDynaMo/TeraAgent can back up whole simulations to disk and resume
+//! them; in the distributed engine this is also where local→global
+//! identifier translation happens ("if the agent ... is written to disk
+//! as part of a backup or checkpoint"). A checkpoint is one TA IO message
+//! per rank plus a small header (iteration, rank, agent count) — the same
+//! serialization path as the wire, so the format is exercised end-to-end.
+
+use crate::core::agent::Agent;
+use crate::core::resource_manager::ResourceManager;
+use crate::io::buffer::AlignedBuf;
+use crate::io::ta_io;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: u32 = 0x5441_4350; // "TACP"
+const VERSION: u32 = 1;
+
+/// Checkpoint metadata.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CheckpointInfo {
+    pub rank: u32,
+    pub iteration: u64,
+    pub agents: u64,
+}
+
+/// Write one rank's agents to `<dir>/rank_<rank>_iter_<iteration>.tacp`.
+/// Global-id translation happens here: every agent gets a global id if it
+/// does not have one yet (§2.5).
+pub fn write_checkpoint(
+    dir: impl AsRef<Path>,
+    rank: u32,
+    iteration: u64,
+    rm: &mut ResourceManager,
+) -> std::io::Result<PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let ids = rm.ids();
+    for id in &ids {
+        rm.ensure_global_id(*id);
+    }
+    let agents: Vec<&Agent> = ids.iter().map(|id| rm.get(*id).unwrap()).collect();
+    let payload = ta_io::serialize(agents.iter().copied());
+    let path = dir.join(format!("rank_{rank:04}_iter_{iteration:08}.tacp"));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    f.write_all(&MAGIC.to_le_bytes())?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&rank.to_le_bytes())?;
+    f.write_all(&iteration.to_le_bytes())?;
+    f.write_all(&(agents.len() as u64).to_le_bytes())?;
+    f.write_all(payload.as_slice())?;
+    f.flush()?;
+    Ok(path)
+}
+
+/// Read a checkpoint file back into (info, agents).
+pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInfo, Vec<Agent>)> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut head = [0u8; 4 + 4 + 4 + 8 + 8];
+    f.read_exact(&mut head)?;
+    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if magic != MAGIC || version != VERSION {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad checkpoint header: magic={magic:#x} version={version}"),
+        ));
+    }
+    let info = CheckpointInfo {
+        rank: u32::from_le_bytes(head[8..12].try_into().unwrap()),
+        iteration: u64::from_le_bytes(head[12..20].try_into().unwrap()),
+        agents: u64::from_le_bytes(head[20..28].try_into().unwrap()),
+    };
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+    let view = ta_io::TaView::parse(AlignedBuf::from_bytes(&payload))
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    let agents = view.materialize_all();
+    if agents.len() as u64 != info.agents {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("agent count mismatch: header {} payload {}", info.agents, agents.len()),
+        ));
+    }
+    Ok((info, agents))
+}
+
+/// Restore agents into a fresh ResourceManager (fresh local ids; global
+/// ids preserved — the constant identifier of §2.5).
+pub fn restore_into(rm: &mut ResourceManager, agents: Vec<Agent>) {
+    for a in agents {
+        rm.add(a);
+    }
+}
+
+/// List checkpoint files for an iteration, ordered by rank.
+pub fn find_checkpoints(dir: impl AsRef<Path>, iteration: u64) -> std::io::Result<Vec<PathBuf>> {
+    let suffix = format!("_iter_{iteration:08}.tacp");
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(&suffix)))
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::{CellType, SirState};
+    use crate::util::Vec3;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("teraagent_ckpt_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn populate(rm: &mut ResourceManager, n: usize) {
+        for i in 0..n {
+            let pos = Vec3::new(i as f64, 2.0 * i as f64, -(i as f64));
+            let a = match i % 3 {
+                0 => Agent::cell(pos, 5.0, CellType::B),
+                1 => Agent::person(pos, SirState::Infected),
+                _ => Agent::tumor_cell(pos, 3.0),
+            };
+            rm.add(a);
+        }
+    }
+
+    #[test]
+    fn round_trip_preserves_agents_and_assigns_global_ids() {
+        let dir = tmpdir("rt");
+        let mut rm = ResourceManager::new(3);
+        populate(&mut rm, 50);
+        let path = write_checkpoint(&dir, 3, 17, &mut rm).unwrap();
+        // Translation happened: every agent now has a global id.
+        assert!(rm.iter().all(|a| a.global_id.is_set()));
+        let (info, agents) = read_checkpoint(&path).unwrap();
+        assert_eq!(info, CheckpointInfo { rank: 3, iteration: 17, agents: 50 });
+        assert_eq!(agents.len(), 50);
+        // Same multiset of (global id, position, kind).
+        let key = |a: &Agent| (a.global_id, a.position.x.to_bits(), a.kind.class_id());
+        let mut want: Vec<_> = rm.iter().map(key).collect();
+        let mut got: Vec<_> = agents.iter().map(key).collect();
+        want.sort();
+        got.sort();
+        assert_eq!(want, got);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_into_fresh_manager() {
+        let dir = tmpdir("restore");
+        let mut rm = ResourceManager::new(0);
+        populate(&mut rm, 20);
+        let path = write_checkpoint(&dir, 0, 5, &mut rm).unwrap();
+        let (_, agents) = read_checkpoint(&path).unwrap();
+        let mut fresh = ResourceManager::new(0);
+        restore_into(&mut fresh, agents);
+        assert_eq!(fresh.len(), 20);
+        // Global ids still resolve (constant across restore).
+        let gid = rm.iter().next().unwrap().global_id;
+        assert!(fresh.get_by_global(gid).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("rank_0000_iter_00000000.tacp");
+        std::fs::write(&path, b"not a checkpoint at all........").unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = tmpdir("trunc");
+        let mut rm = ResourceManager::new(1);
+        populate(&mut rm, 10);
+        let path = write_checkpoint(&dir, 1, 2, &mut rm).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_checkpoints_filters_by_iteration() {
+        let dir = tmpdir("find");
+        let mut rm0 = ResourceManager::new(0);
+        let mut rm1 = ResourceManager::new(1);
+        populate(&mut rm0, 5);
+        populate(&mut rm1, 5);
+        write_checkpoint(&dir, 0, 7, &mut rm0).unwrap();
+        write_checkpoint(&dir, 1, 7, &mut rm1).unwrap();
+        write_checkpoint(&dir, 0, 8, &mut rm0).unwrap();
+        let found = find_checkpoints(&dir, 7).unwrap();
+        assert_eq!(found.len(), 2);
+        assert!(found[0].to_str().unwrap().contains("rank_0000"));
+        assert!(found[1].to_str().unwrap().contains("rank_0001"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn distributed_checkpoint_restores_whole_population() {
+        // 2 ranks checkpoint; restore the union into one manager (the
+        // "resume on different rank count" capability).
+        let dir = tmpdir("dist");
+        let mut rm0 = ResourceManager::new(0);
+        let mut rm1 = ResourceManager::new(1);
+        populate(&mut rm0, 30);
+        populate(&mut rm1, 25);
+        write_checkpoint(&dir, 0, 3, &mut rm0).unwrap();
+        write_checkpoint(&dir, 1, 3, &mut rm1).unwrap();
+        let mut merged = ResourceManager::new(0);
+        for p in find_checkpoints(&dir, 3).unwrap() {
+            let (_, agents) = read_checkpoint(&p).unwrap();
+            restore_into(&mut merged, agents);
+        }
+        assert_eq!(merged.len(), 55);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

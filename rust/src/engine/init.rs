@@ -1,0 +1,154 @@
+//! Distributed initialization (§2.4.4): create agents directly on their
+//! authoritative rank, avoiding a mass migration after setup.
+//!
+//! The generator stream is seeded identically on every rank; each rank
+//! keeps only the agents whose position it owns. This yields *bitwise
+//! identical* initial conditions regardless of rank count — the property
+//! the distributed-determinism tests rely on — while still creating every
+//! agent on its authoritative rank. (The paper's volume-fraction
+//! optimization for very large populations trades this identity for O(n/R)
+//! generation time; see `scatter_uniform_fraction`.)
+
+use crate::core::agent::Agent;
+use crate::space::{Aabb, PartitionGrid};
+use crate::util::{Rng, Vec3};
+
+/// Initialization context handed to `Model::create_agents`.
+pub struct InitCtx<'a> {
+    pub rank: u32,
+    pub whole: Aabb,
+    grid: &'a PartitionGrid,
+    rng: Rng,
+    kept: Vec<Agent>,
+    total_generated: u64,
+}
+
+impl<'a> InitCtx<'a> {
+    pub fn new(rank: u32, grid: &'a PartitionGrid, seed: u64) -> Self {
+        InitCtx {
+            rank,
+            whole: grid.whole(),
+            grid,
+            // Same stream on every rank — identity across rank counts.
+            rng: Rng::stream(seed, 0xD157_0000),
+            kept: Vec::new(),
+            total_generated: 0,
+        }
+    }
+
+    /// Generate `n` agents at uniform random positions in `region` via
+    /// `make(position, rng)`; keep those owned by this rank.
+    pub fn scatter_uniform(
+        &mut self,
+        n: usize,
+        region: Aabb,
+        mut make: impl FnMut(Vec3, &mut Rng) -> Agent,
+    ) {
+        for _ in 0..n {
+            let p = Vec3::from_array(
+                self.rng.point_in(region.min.to_array(), region.max.to_array()),
+            );
+            let agent = make(p, &mut self.rng);
+            self.total_generated += 1;
+            if self.grid.owner_of_pos(agent.position) == self.rank {
+                self.kept.push(agent);
+            }
+        }
+    }
+
+    /// Add one agent at an explicit position (kept only on the owner).
+    pub fn place(&mut self, agent: Agent) {
+        self.total_generated += 1;
+        if self.grid.owner_of_pos(agent.position) == self.rank {
+            self.kept.push(agent);
+        }
+    }
+
+    /// RNG for model-specific draws that must be identical on all ranks.
+    pub fn shared_rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Agents this rank keeps.
+    pub fn into_agents(self) -> Vec<Agent> {
+        self.kept
+    }
+
+    pub fn generated(&self) -> u64 {
+        self.total_generated
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+
+    fn grid_halves() -> PartitionGrid {
+        let mut g = PartitionGrid::new(Aabb::cube(20.0), 10.0);
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_owner(i, if c[0] < 2 { 0 } else { 1 });
+        }
+        g
+    }
+
+    fn make(p: Vec3, _r: &mut Rng) -> Agent {
+        Agent::cell(p, 1.0, CellType::A)
+    }
+
+    #[test]
+    fn partition_of_agents_is_exact() {
+        let g = grid_halves();
+        let mut c0 = InitCtx::new(0, &g, 99);
+        let mut c1 = InitCtx::new(1, &g, 99);
+        c0.scatter_uniform(1000, g.whole(), make);
+        c1.scatter_uniform(1000, g.whole(), make);
+        let a0 = c0.into_agents();
+        let a1 = c1.into_agents();
+        assert_eq!(a0.len() + a1.len(), 1000, "every agent on exactly one rank");
+        // Each agent is on its owner.
+        assert!(a0.iter().all(|a| g.owner_of_pos(a.position) == 0));
+        assert!(a1.iter().all(|a| g.owner_of_pos(a.position) == 1));
+        // Roughly half on each side.
+        assert!((400..600).contains(&a0.len()), "a0 = {}", a0.len());
+    }
+
+    #[test]
+    fn identical_population_regardless_of_rank_count() {
+        // 1 rank vs 2 ranks: the union of positions is identical.
+        let mut g1 = PartitionGrid::new(Aabb::cube(20.0), 10.0);
+        for i in 0..g1.num_boxes() {
+            g1.set_owner(i, 0);
+        }
+        let g2 = grid_halves();
+        let mut single = InitCtx::new(0, &g1, 7);
+        single.scatter_uniform(500, g1.whole(), make);
+        let mut r0 = InitCtx::new(0, &g2, 7);
+        let mut r1 = InitCtx::new(1, &g2, 7);
+        r0.scatter_uniform(500, g2.whole(), make);
+        r1.scatter_uniform(500, g2.whole(), make);
+        let mut union: Vec<[f64; 3]> = r0
+            .into_agents()
+            .iter()
+            .chain(r1.into_agents().iter())
+            .map(|a| a.position.to_array())
+            .collect();
+        let mut all: Vec<[f64; 3]> =
+            single.into_agents().iter().map(|a| a.position.to_array()).collect();
+        let key = |p: &[f64; 3]| (p[0].to_bits(), p[1].to_bits(), p[2].to_bits());
+        union.sort_by_key(key);
+        all.sort_by_key(key);
+        assert_eq!(union, all);
+    }
+
+    #[test]
+    fn place_respects_ownership() {
+        let g = grid_halves();
+        let mut c0 = InitCtx::new(0, &g, 1);
+        c0.place(Agent::cell(Vec3::new(-15.0, 0.0, 0.0), 1.0, CellType::A)); // rank 0 side
+        c0.place(Agent::cell(Vec3::new(15.0, 0.0, 0.0), 1.0, CellType::A)); // rank 1 side
+        assert_eq!(c0.generated(), 2);
+        assert_eq!(c0.into_agents().len(), 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! The launcher: spawn rank threads, wire the transport and the mechanics
+//! service, run the simulation, aggregate results.
+//!
+//! This is the "seamless laptop → supercomputer" entry point (§3.4): the
+//! same model code runs under any [`ParallelMode`](crate::config::ParallelMode)
+//! without modification — switching modes is a config change, not a
+//! recompilation (§2.5).
+
+use super::model::Model;
+use super::sim::{MechBackend, RankOutcome, RankSim};
+use crate::comm::mpi::MpiWorld;
+use crate::config::SimConfig;
+use crate::metrics::SimReport;
+use crate::runtime::service::MechanicsService;
+use crate::vis::insitu::Image;
+use std::path::PathBuf;
+
+/// Aggregated result of a run.
+pub struct RunResult {
+    pub report: SimReport,
+    /// Per-iteration global stats (combined across ranks by the model).
+    pub stats_history: Vec<Vec<f64>>,
+    pub stat_names: Vec<&'static str>,
+    pub final_agents: u64,
+    /// Composited frames (present when visualization was configured).
+    pub frames: Vec<Image>,
+    /// Whether mechanics executed through the PJRT artifact.
+    pub used_pjrt: bool,
+    /// Final agent snapshot gathered from all ranks: (position, diameter,
+    /// class id) — the §3.4 "positions to the master rank" step used for
+    /// the convex-hull diameter and the qualitative sorting check.
+    pub final_snapshot: Vec<(crate::util::Vec3, f64, u16)>,
+}
+
+/// Run a simulation: one model instance per rank from `factory(rank)`.
+pub fn run_simulation<M: Model>(
+    cfg: &SimConfig,
+    factory: impl Fn(u32) -> M + Send + Sync,
+) -> RunResult {
+    cfg.validate().expect("invalid SimConfig");
+    let ranks = cfg.mode.ranks();
+    let world = MpiWorld::new(ranks, cfg.network);
+    // One PJRT service per "node" shared by all ranks (the client is not
+    // Send; it lives on its own thread).
+    let service = cfg
+        .use_pjrt
+        .then(|| MechanicsService::start(PathBuf::from(&cfg.artifacts_dir), true));
+    let used_pjrt = service.as_ref().map(|s| s.using_pjrt).unwrap_or(false);
+
+    let outcomes: Vec<RankOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..ranks as u32)
+            .map(|rank| {
+                let comm = world.communicator(rank);
+                let model = factory(rank);
+                let mech = match &service {
+                    Some(svc) if svc.using_pjrt => MechBackend::Service(svc.handle()),
+                    _ => MechBackend::Native,
+                };
+                let cfg = cfg.clone();
+                s.spawn(move || RankSim::new(rank, cfg, comm, model, mech).run())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    });
+
+    // Aggregate.
+    let per_rank_metrics: Vec<_> = outcomes.iter().map(|o| o.metrics.clone()).collect();
+    let report = SimReport::aggregate(&per_rank_metrics);
+    let model = factory(u32::MAX); // combiner instance
+    let iters = outcomes.iter().map(|o| o.stats_history.len()).max().unwrap_or(0);
+    let mut stats_history = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let per_rank: Vec<Vec<f64>> = outcomes
+            .iter()
+            .map(|o| o.stats_history.get(i).cloned().unwrap_or_default())
+            .collect();
+        stats_history.push(model.combine_stats(&per_rank));
+    }
+    let final_agents = outcomes.iter().map(|o| o.final_agents).sum();
+    let mut frames = Vec::new();
+    let mut final_snapshot = Vec::new();
+    for o in outcomes {
+        if frames.is_empty() && !o.frames.is_empty() {
+            frames = o.frames;
+        }
+        final_snapshot.extend(o.final_snapshot);
+    }
+    RunResult {
+        report,
+        stats_history,
+        stat_names: model.stat_names(),
+        final_agents,
+        frames,
+        used_pjrt,
+        final_snapshot,
+    }
+}

@@ -1,0 +1,29 @@
+//! The distributed simulation engine (§2.1, Fig. 1).
+//!
+//! A simulation runs as `R` rank threads (simulated MPI processes). Each
+//! iteration every rank executes:
+//!
+//! 1. **Aura update** — serialize owned agents near foreign borders, send
+//!    to the owning neighbor ranks, rebuild the local aura set.
+//! 2. **Mechanics** — gather K nearest neighbors per owned agent, run the
+//!    AOT-compiled JAX/Pallas force kernel (or its native oracle), apply
+//!    displacements and boundary conditions.
+//! 3. **Model step** — model-specific behaviors (growth, division,
+//!    infection, …) with spawn/removal queues.
+//! 4. **Migration** — agents whose position left the owned volume move to
+//!    the authoritative rank.
+//! 5. **Balancing** (periodic) — RCB or diffusive repartitioning.
+//! 6. **Sorting** (periodic) — Morton-order agent sorting.
+
+pub mod checkpoint;
+pub mod init;
+pub mod launcher;
+pub mod model;
+pub mod pool;
+pub mod sim;
+pub mod world;
+
+pub use launcher::{run_simulation, RunResult};
+pub use model::Model;
+pub use pool::ThreadPool;
+pub use world::{AuraStore, NeighborInfo, World};

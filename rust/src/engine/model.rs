@@ -1,0 +1,71 @@
+//! The `Model` trait: what a simulation author writes.
+//!
+//! Mirrors the paper's user-facing programming model (§3.4 "seamless
+//! transition"): a model defines its agents, behaviors and statistics and
+//! is *completely unaware of distribution* — the engine supplies aura
+//! agents transparently through the neighbor queries, migrates agents, and
+//! sums statistics across ranks (the paper's `SumOverAllRanks`).
+
+use super::init::InitCtx;
+use super::world::World;
+use crate::core::agent::AgentKind;
+use crate::runtime::MechanicsParams;
+
+/// A simulation model. One instance per rank (construct via the factory
+/// passed to [`run_simulation`](super::launcher::run_simulation)).
+/// `Sync` is required because read-only hooks (`adhesion_scale`) are
+/// called from the rank's thread pool during the mechanics gather.
+pub trait Model: Send + Sync + 'static {
+    fn name(&self) -> &'static str;
+
+    /// Maximum interaction distance (sets the NSG cell and aura width).
+    fn interaction_radius(&self) -> f64;
+
+    /// Whether the engine should run the mechanical-force phase (the
+    /// JAX/Pallas kernel) each iteration.
+    fn uses_mechanics(&self) -> bool {
+        true
+    }
+
+    fn mechanics_params(&self) -> MechanicsParams {
+        MechanicsParams::default()
+    }
+
+    /// Per-pair adhesion scale in (0, 1]; 1.0 = full adhesion. This is the
+    /// differential-adhesion hook behind the cell-sorting benchmark.
+    fn adhesion_scale(&self, _a: &AgentKind, _b: &AgentKind) -> f32 {
+        1.0
+    }
+
+    /// Create the initial agents (§2.4.4 distributed initialization: the
+    /// context only keeps agents whose position this rank owns, so agents
+    /// are born on their authoritative rank without a mass migration).
+    fn create_agents(&self, ctx: &mut InitCtx);
+
+    /// Model-specific per-iteration behaviors (growth, division,
+    /// infection, …). Mechanics has already run when this is called.
+    fn step(&mut self, world: &mut World);
+
+    /// Rank-local statistics recorded at the end of each iteration. The
+    /// launcher combines them across ranks via [`Model::combine_stats`].
+    fn local_stats(&self, _world: &World) -> Vec<f64> {
+        Vec::new()
+    }
+
+    /// Combine per-rank stats into the global record (default: sum).
+    fn combine_stats(&self, per_rank: &[Vec<f64>]) -> Vec<f64> {
+        let width = per_rank.iter().map(|v| v.len()).max().unwrap_or(0);
+        let mut out = vec![0.0; width];
+        for v in per_rank {
+            for (i, x) in v.iter().enumerate() {
+                out[i] += x;
+            }
+        }
+        out
+    }
+
+    /// Names for the stat columns (reporting).
+    fn stat_names(&self) -> Vec<&'static str> {
+        Vec::new()
+    }
+}

@@ -1,0 +1,137 @@
+//! Scoped thread pool for intra-rank ("OpenMP-style") parallelism.
+//!
+//! The offline toolchain has no `rayon`; this is a minimal fork-join
+//! helper over `std::thread::scope`. One pool per rank provides the
+//! shared-memory parallelism of the paper's MPI-hybrid mode.
+
+/// A fixed-width fork-join pool (stateless; threads are scoped per call,
+/// which keeps rank threads independent and avoids cross-rank sharing).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        ThreadPool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over near-equal contiguous chunks of `0..len` in parallel;
+    /// returns per-chunk results in order. `f(chunk_index, start, end)`.
+    pub fn map_chunks<R: Send>(
+        &self,
+        len: usize,
+        f: impl Fn(usize, usize, usize) -> R + Sync,
+    ) -> Vec<R> {
+        self.map_chunks_timed(len, f).0
+    }
+
+    /// Like [`map_chunks`](Self::map_chunks), additionally returning the
+    /// *critical-path CPU seconds* of the parallel region: the maximum
+    /// worker-thread CPU time. Worker CPU is invisible to the calling
+    /// thread's `CLOCK_THREAD_CPUTIME_ID`, so the engine adds this to its
+    /// per-iteration CPU accounting (the single-core-testbed parallel
+    /// runtime model; see DESIGN.md).
+    pub fn map_chunks_timed<R: Send>(
+        &self,
+        len: usize,
+        f: impl Fn(usize, usize, usize) -> R + Sync,
+    ) -> (Vec<R>, f64) {
+        if len == 0 {
+            return (Vec::new(), 0.0);
+        }
+        let nchunks = self.threads.min(len);
+        let chunk = len.div_ceil(nchunks);
+        if nchunks == 1 {
+            // Inline on the caller: its own CPU clock sees the work.
+            return (vec![f(0, 0, len)], 0.0);
+        }
+        let mut out: Vec<(Option<R>, f64)> = (0..nchunks).map(|_| (None, 0.0)).collect();
+        std::thread::scope(|s| {
+            let f = &f;
+            let mut handles = Vec::with_capacity(nchunks);
+            for (ci, slot) in out.iter_mut().enumerate() {
+                let start = ci * chunk;
+                let end = ((ci + 1) * chunk).min(len);
+                handles.push(s.spawn(move || {
+                    let t = crate::util::timing::CpuTimer::start();
+                    slot.0 = Some(f(ci, start, end));
+                    slot.1 = t.elapsed_secs();
+                }));
+            }
+            for h in handles {
+                h.join().expect("pool worker panicked");
+            }
+        });
+        let critical = out.iter().map(|(_, c)| *c).fold(0.0, f64::max);
+        (out.into_iter().map(|(o, _)| o.unwrap()).collect(), critical)
+    }
+
+    /// Parallel-for over `0..len`, discarding results.
+    pub fn for_chunks(&self, len: usize, f: impl Fn(usize, usize, usize) + Sync) {
+        self.map_chunks(len, |ci, s, e| {
+            f(ci, s, e);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_all_indices_once() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        pool.for_chunks(1000, |_, s, e| {
+            for i in s..e {
+                hits.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+        assert_eq!(sum.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn map_chunks_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let parts = pool.map_chunks(10, |ci, s, e| (ci, s, e));
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], (0, 0, 4));
+        assert_eq!(parts[1], (1, 4, 8));
+        assert_eq!(parts[2], (2, 8, 10));
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let parts = pool.map_chunks(5, |_, s, e| e - s);
+        assert_eq!(parts, vec![5]);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(4);
+        assert!(pool.map_chunks(0, |_, _, _| ()).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let pool = ThreadPool::new(16);
+        let parts = pool.map_chunks(3, |_, s, e| (s, e));
+        assert_eq!(parts.len(), 3);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.threads(), 1);
+    }
+}

@@ -1,0 +1,614 @@
+//! The per-rank simulation: state and the iteration loop (Fig. 1).
+
+use super::init::InitCtx;
+use super::model::Model;
+use super::pool::ThreadPool;
+use super::world::{AuraStore, World};
+use crate::balance::{diffusive, rcb, weights};
+use crate::comm::batching::{send_batched, Reassembler};
+use crate::comm::mpi::{tags, Communicator};
+use crate::config::{BalanceMethod, SimConfig};
+use crate::core::agent::Agent;
+use crate::core::ids::LocalId;
+use crate::core::resource_manager::ResourceManager;
+use crate::io::codec::Codec;
+use crate::io::Compression;
+use crate::metrics::{Counter, Op, RankMetrics};
+use crate::runtime::mechanics::{native_mechanics, MechanicsBatch, AOT_K, AOT_N};
+use crate::runtime::service::MechanicsHandle;
+use crate::runtime::MechanicsParams;
+use crate::space::{NeighborSearchGrid, NsgEntry, PartitionGrid};
+use crate::util::{Rng, Timer, Vec3};
+use crate::vis::insitu::{color_of_kind, render_agents, Image};
+use crate::vis::provider::{PartitionGridOverlay, VisualizationProvider};
+
+/// Mechanics backend held by a rank: inline native math, or the shared
+/// PJRT service thread.
+pub enum MechBackend {
+    Native,
+    Service(MechanicsHandle),
+}
+
+impl MechBackend {
+    fn compute(&self, batch: &MechanicsBatch, p: MechanicsParams) -> Vec<Vec3> {
+        match self {
+            MechBackend::Native => native_mechanics(batch, p),
+            MechBackend::Service(h) => h.compute(batch.clone(), p),
+        }
+    }
+}
+
+/// Result returned by each rank thread.
+pub struct RankOutcome {
+    pub metrics: RankMetrics,
+    /// Per-iteration rank-local stats (model-defined).
+    pub stats_history: Vec<Vec<f64>>,
+    pub final_agents: u64,
+    /// Composited frames (rank 0 only).
+    pub frames: Vec<Image>,
+    /// Final snapshot of this rank's agents: (position, diameter,
+    /// class id). Used by verification/hull post-processing — the
+    /// "transmit agent positions to the master rank" step of §3.4.
+    pub final_snapshot: Vec<(Vec3, f64, u16)>,
+}
+
+/// One rank's simulation state.
+pub struct RankSim<M: Model> {
+    pub rank: u32,
+    cfg: SimConfig,
+    comm: Communicator,
+    grid: PartitionGrid,
+    nsg: NeighborSearchGrid,
+    rm: ResourceManager,
+    aura: AuraStore,
+    /// NSG entries added for the current aura (cleared each iteration).
+    codec: Codec,
+    /// Codec for one-shot transfers (migration): delta disabled.
+    migration_codec: Codec,
+    reassembler: Reassembler,
+    pool: ThreadPool,
+    rng: Rng,
+    pub metrics: RankMetrics,
+    model: M,
+    mech: MechBackend,
+    iteration: u64,
+    /// Monotone all-to-all round counter: the call sequence is identical
+    /// on every rank, so equal counters pair up the same logical exchange
+    /// even when ranks drift apart between barrier-free iterations.
+    a2a_round: u32,
+    /// Critical-path CPU of pool-parallel regions this iteration.
+    pool_cpu_secs: f64,
+    last_iteration_secs: f64,
+    stats_history: Vec<Vec<f64>>,
+    frames: Vec<Image>,
+}
+
+impl<M: Model> RankSim<M> {
+    /// Build rank state: partition the space, distribute initial agents.
+    pub fn new(rank: u32, cfg: SimConfig, comm: Communicator, model: M, mech: MechBackend) -> Self {
+        let whole = cfg.whole_space();
+        let radius = model.interaction_radius();
+        let box_len = radius * cfg.partition_factor;
+        let mut grid = PartitionGrid::new(whole, box_len);
+        // Initial partition: uniform-weight RCB over all ranks (identical
+        // deterministic result on every rank).
+        for i in 0..grid.num_boxes() {
+            grid.set_weight(i, 1.0);
+        }
+        let owners = rcb::rcb_partition(&grid, comm.size() as u32);
+        grid.set_owners(owners);
+        grid.clear_weights();
+
+        let nsg = NeighborSearchGrid::new(whole, radius);
+        let rm = ResourceManager::new(rank);
+
+        // Distributed initialization (§2.4.4).
+        let mut ctx = InitCtx::new(rank, &grid, cfg.seed);
+        model.create_agents(&mut ctx);
+        let agents = ctx.into_agents();
+        let mut sim = RankSim {
+            rank,
+            migration_codec: Codec::new(
+                cfg.serializer,
+                match cfg.compression {
+                    Compression::Lz4Delta { .. } => Compression::Lz4,
+                    other => other,
+                },
+            ),
+            codec: Codec::new(cfg.serializer, cfg.compression),
+            reassembler: Reassembler::new(),
+            pool: ThreadPool::new(cfg.mode.threads_per_rank()),
+            rng: Rng::stream(cfg.seed, 0xFA57_0000 + rank as u64),
+            metrics: RankMetrics::new(),
+            model,
+            mech,
+            iteration: 0,
+            a2a_round: 0,
+            pool_cpu_secs: 0.0,
+            last_iteration_secs: 0.0,
+            stats_history: Vec::new(),
+            frames: Vec::new(),
+            comm,
+            grid,
+            nsg,
+            aura: AuraStore::new(),
+            rm,
+            cfg,
+        };
+        for a in agents {
+            let id = sim.rm.add(a);
+            let pos = sim.rm.get(id).unwrap().position;
+            sim.nsg.add(NsgEntry::Owned(id), pos);
+        }
+        sim
+    }
+
+    pub fn agent_count(&self) -> usize {
+        self.rm.len()
+    }
+
+    /// Run the configured number of iterations.
+    pub fn run(mut self) -> RankOutcome {
+        for _ in 0..self.cfg.iterations {
+            self.iterate();
+        }
+        RankOutcome {
+            final_agents: self.rm.len() as u64,
+            final_snapshot: self
+                .rm
+                .iter()
+                .map(|a| (a.position, a.diameter, a.kind.class_id()))
+                .collect(),
+            metrics: self.take_metrics(),
+            stats_history: std::mem::take(&mut self.stats_history),
+            frames: std::mem::take(&mut self.frames),
+        }
+    }
+
+    fn take_metrics(&mut self) -> RankMetrics {
+        self.metrics.network_secs = self.comm.network_secs;
+        std::mem::take(&mut self.metrics)
+    }
+
+    /// One simulation iteration (Fig. 1 steps 1–4 + periodic services).
+    pub fn iterate(&mut self) {
+        let iter_timer = Timer::start();
+        let cpu_timer = crate::util::timing::CpuTimer::start();
+        self.pool_cpu_secs = 0.0;
+        self.aura_update();
+        if self.model.uses_mechanics() {
+            self.mechanics_phase();
+        }
+        self.model_phase();
+        self.migration_phase();
+        if self.cfg.balance_every > 0
+            && self.iteration > 0
+            && self.iteration % self.cfg.balance_every as u64 == 0
+            && self.cfg.balance_method != BalanceMethod::Off
+        {
+            self.balance_phase();
+        }
+        if self.cfg.sort_every > 0 && self.iteration > 0 && self.iteration % self.cfg.sort_every as u64 == 0
+        {
+            self.sort_phase();
+        }
+        if let Some(vis) = self.cfg.vis {
+            if self.iteration % vis.every as u64 == 0 {
+                self.visualization_phase();
+            }
+        }
+        self.record_stats();
+        self.update_memory_accounting();
+        self.iteration += 1;
+        self.last_iteration_secs = iter_timer.elapsed_secs();
+        self.metrics.iteration_secs.push(self.last_iteration_secs);
+        self.metrics
+            .iteration_cpu_secs
+            .push(cpu_timer.elapsed_secs() + self.pool_cpu_secs);
+    }
+
+    // -------------------------------------------------------------------
+    // Step 1: aura update
+    // -------------------------------------------------------------------
+
+    fn aura_update(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        self.nsg.clear_aura();
+        self.aura.clear();
+        let radius = self.model.interaction_radius();
+        let me = self.rank;
+        let neighbors = self.grid.neighbor_ranks(me);
+
+        // Select aura agents per destination (§2.1: exact radius bands,
+        // narrower than the partition box).
+        let mut per_dest: Vec<(u32, Vec<LocalId>)> =
+            neighbors.iter().map(|&r| (r, Vec::new())).collect();
+        for a in self.rm.iter() {
+            let targets = self.grid.ranks_within(a.position, radius, me);
+            for t in targets {
+                if let Some(slot) = per_dest.iter_mut().find(|(r, _)| *r == t) {
+                    slot.1.push(a.local_id);
+                }
+            }
+        }
+        // Global-id translation happens here (§2.5: only when an agent is
+        // actually transferred).
+        for (_, ids) in &per_dest {
+            for &id in ids {
+                self.rm.ensure_global_id(id);
+            }
+        }
+        // Encode + send one (batched) message per neighbor.
+        for (dest, ids) in &per_dest {
+            let agents: Vec<&Agent> = ids.iter().map(|&id| self.rm.get(id).unwrap()).collect();
+            self.metrics.count(Counter::AuraAgentsSent, agents.len() as u64);
+            let (wire, es) = self.codec.encode((*dest, tags::AURA), agents.iter().copied());
+            self.metrics.add_op(Op::Serialize, es.serialize_secs);
+            self.metrics.add_op(Op::Compress, es.compress_secs);
+            self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
+            self.metrics.count(Counter::BytesSentWire, wire.len() as u64);
+            self.metrics.count(Counter::MessagesSent, 1);
+            self.metrics.timed_cpu(Op::Transfer, || {
+                send_batched(
+                    &mut self.comm,
+                    *dest,
+                    tags::AURA,
+                    self.iteration as u32,
+                    &wire,
+                    self.cfg.chunk_bytes,
+                )
+            });
+        }
+        // Receive from every neighbor; register aura agents in the NSG.
+        for &src in &neighbors {
+            let (_, wire) = self.metrics.timed_cpu(Op::Transfer, || {
+                self.reassembler.recv_batched(&mut self.comm, src, tags::AURA)
+            });
+            let (decoded, ds) = self.codec.decode((src, tags::AURA), &wire);
+            self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
+            self.metrics.add_op(Op::Decompress, ds.decompress_secs);
+            let range = self.aura.add_source(decoded);
+            for i in range {
+                self.nsg.add(NsgEntry::Aura(i), self.aura.position(i));
+            }
+        }
+        self.metrics.add_op(Op::AuraUpdate, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Step 2: mechanics via the AOT kernel
+    // -------------------------------------------------------------------
+
+    fn mechanics_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        let params = self.model.mechanics_params();
+        let radius = self.model.interaction_radius();
+        let ids: Vec<LocalId> = self.rm.ids();
+        let n = ids.len();
+        if n == 0 {
+            self.metrics.add_op(Op::AgentOps, t.elapsed_secs());
+            return;
+        }
+        // Gather neighbor batches in parallel (read-only phase).
+        let rm = &self.rm;
+        let nsg = &self.nsg;
+        let aura = &self.aura;
+        let model = &self.model;
+        let ids_ref = &ids;
+        // Chunk granularity is independent of the AOT batch size so every
+        // pool thread gets work even for small populations; each chunk
+        // packs its own (padded) batches tagged with their id offset.
+        let (batch_groups, pool_cpu) = self.pool.map_chunks_timed(n, |_, cs, ce| {
+            let mut out: Vec<(usize, MechanicsBatch)> =
+                Vec::with_capacity((ce - cs).div_ceil(AOT_N));
+            let mut start = cs;
+            while start < ce {
+                let end = (start + AOT_N).min(ce);
+                let mut batch = MechanicsBatch::new(AOT_N, AOT_K);
+                batch.live = end - start;
+                // Scratch reused across agents in this batch.
+                let mut scratch: Vec<(f64, Vec3, f64, f32)> = Vec::with_capacity(32);
+                for (row, &id) in ids_ref[start..end].iter().enumerate() {
+                    let agent = rm.get(id).expect("live id");
+                    batch.set_agent(row, agent.position, agent.diameter);
+                    scratch.clear();
+                    nsg.for_each_neighbor(
+                        agent.position,
+                        radius,
+                        Some(NsgEntry::Owned(id)),
+                        |entry, pos, d2| {
+                            let (diam, kind) = match entry {
+                                NsgEntry::Owned(nid) => {
+                                    let na = rm.get(nid).expect("live neighbor");
+                                    (na.diameter, na.kind)
+                                }
+                                NsgEntry::Aura(ai) => (aura.diameter(ai), aura.kind(ai)),
+                            };
+                            let adh = model.adhesion_scale(&agent.kind, &kind);
+                            scratch.push((d2, pos, diam, adh));
+                        },
+                    );
+                    // Deterministic neighbor order: nearest first, ties by
+                    // position — independent of rank count / NSG layout.
+                    scratch.sort_by(|a, b| {
+                        a.0.partial_cmp(&b.0)
+                            .unwrap()
+                            .then(a.1.x.partial_cmp(&b.1.x).unwrap())
+                            .then(a.1.y.partial_cmp(&b.1.y).unwrap())
+                            .then(a.1.z.partial_cmp(&b.1.z).unwrap())
+                    });
+                    for (j, (_, pos, diam, adh)) in scratch.iter().take(AOT_K).enumerate() {
+                        batch.set_neighbor(row, j, *pos, *diam, (*adh).max(1e-6));
+                    }
+                }
+                out.push((start, batch));
+                start = end;
+            }
+            out
+        });
+        // Pool-worker CPU is invisible to the rank thread's CPU clock;
+        // charge the parallel region's critical path to this iteration.
+        self.pool_cpu_secs += pool_cpu;
+        let batches: Vec<(usize, MechanicsBatch)> =
+            batch_groups.into_iter().flatten().collect();
+
+        // Execute (PJRT service or native) and apply displacements.
+        for (start, batch) in &batches {
+            let disp = self.mech.compute(batch, params);
+            for row in 0..batch.live {
+                let id = ids[start + row];
+                let d = disp[row];
+                if d == Vec3::ZERO {
+                    continue;
+                }
+                let pos = self.rm.get(id).unwrap().position + d;
+                let pos = self.cfg.boundary.apply(pos, &self.grid.whole());
+                self.rm.get_mut(id).unwrap().position = pos;
+                self.nsg.update_position(NsgEntry::Owned(id), pos);
+            }
+        }
+        self.metrics.count(Counter::AgentUpdates, n as u64);
+        self.metrics.add_op(Op::AgentOps, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Step 3: model behaviors
+    // -------------------------------------------------------------------
+
+    fn model_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        let mut world = World::new(
+            self.rank,
+            self.iteration,
+            &mut self.rm,
+            &mut self.nsg,
+            &self.aura,
+            &mut self.rng,
+            self.cfg.whole_space(),
+            self.cfg.boundary,
+            self.model.interaction_radius(),
+            self.pool,
+        );
+        self.model.step(&mut world);
+        let pool_cpu = world.take_pool_cpu();
+        let World { spawns, removals, .. } = world;
+        self.pool_cpu_secs += pool_cpu;
+        if !self.model.uses_mechanics() {
+            self.metrics.count(Counter::AgentUpdates, self.rm.len() as u64);
+        }
+        for id in removals {
+            if self.rm.remove(id).is_some() {
+                self.nsg.remove(NsgEntry::Owned(id));
+            }
+        }
+        for agent in spawns {
+            let id = self.rm.add(agent);
+            let pos = self.rm.get(id).unwrap().position;
+            self.nsg.add(NsgEntry::Owned(id), pos);
+        }
+        self.metrics.add_op(Op::AgentOps, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Step 4: migration
+    // -------------------------------------------------------------------
+
+    fn migration_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        let me = self.rank;
+        let size = self.comm.size();
+        // Who leaves? (The replicated partition map makes the owner lookup
+        // local — the paper's collective-lookup fallback is unnecessary.)
+        let leaving: Vec<(u32, LocalId)> = self
+            .rm
+            .iter()
+            .filter_map(|a| {
+                let owner = self.grid.owner_of_pos(a.position);
+                (owner != me).then_some((owner, a.local_id))
+            })
+            .collect();
+        let mut per_dest: Vec<Vec<Agent>> = vec![Vec::new(); size];
+        for (dest, id) in leaving {
+            self.rm.ensure_global_id(id);
+            let agent = self.rm.remove(id).expect("migrating agent");
+            self.nsg.remove(NsgEntry::Owned(id));
+            per_dest[dest as usize].push(agent);
+        }
+        let migrated: u64 = per_dest.iter().map(|v| v.len() as u64).sum();
+        self.metrics.count(Counter::AgentsMigratedOut, migrated);
+        // Exchange (all-to-all; empty payloads for idle pairs).
+        let payloads: Vec<Vec<u8>> = per_dest
+            .iter()
+            .enumerate()
+            .map(|(d, agents)| {
+                if d == me as usize {
+                    return Vec::new();
+                }
+                let (wire, es) =
+                    self.migration_codec.encode((d as u32, tags::MIGRATION), agents.iter());
+                self.metrics.add_op(Op::Serialize, es.serialize_secs);
+                self.metrics.add_op(Op::Compress, es.compress_secs);
+                self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
+                self.metrics.count(Counter::BytesSentWire, wire.len() as u64);
+                wire
+            })
+            .collect();
+        let round = self.a2a_round;
+        self.a2a_round += 1;
+        let received =
+            self.metrics.timed_cpu(Op::Transfer, || self.comm.alltoallv(payloads, round));
+        for (src, wire) in received.into_iter().enumerate() {
+            if wire.is_empty() {
+                continue;
+            }
+            let (decoded, ds) = self
+                .migration_codec
+                .decode((src as u32, tags::MIGRATION), &wire);
+            self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
+            self.metrics.add_op(Op::Decompress, ds.decompress_secs);
+            // Migrated agents are moved out of the buffer into owned
+            // storage (they get fresh local ids here — the local/global
+            // id translation of §2.5).
+            for agent in decoded.into_agents() {
+                let id = self.rm.add(agent);
+                let pos = self.rm.get(id).unwrap().position;
+                self.nsg.add(NsgEntry::Owned(id), pos);
+            }
+        }
+        self.metrics.add_op(Op::Migration, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Periodic: load balancing
+    // -------------------------------------------------------------------
+
+    fn balance_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        // Weight field: owned agents per box × per-agent runtime (§2.4.5).
+        let local = weights::compute_box_weights(&self.grid, &self.nsg, self.rank, self.last_iteration_secs);
+        let global = self.comm.allreduce_sum_f64(&local);
+        for (i, w) in global.iter().enumerate() {
+            self.grid.set_weight(i, *w);
+        }
+        let before: Vec<u32> = self.grid.owners().to_vec();
+        match self.cfg.balance_method {
+            BalanceMethod::Rcb => {
+                let owners = rcb::rcb_partition(&self.grid, self.comm.size() as u32);
+                self.grid.set_owners(owners);
+            }
+            BalanceMethod::Diffusive => {
+                let runtimes = self.comm.allreduce_sum_f64(&{
+                    let mut v = vec![0.0; self.comm.size()];
+                    v[self.rank as usize] = self.last_iteration_secs;
+                    v
+                });
+                let transfers = diffusive::diffusive_step(&self.grid, &runtimes, 0.05, 4);
+                diffusive::apply_transfers(&mut self.grid, &transfers);
+            }
+            BalanceMethod::Off => {}
+        }
+        let moved = before
+            .iter()
+            .zip(self.grid.owners())
+            .filter(|(a, b)| a != b)
+            .count() as u64;
+        self.metrics.count(Counter::BoxesRebalanced, moved);
+        // Obsolete speculative receives for the old neighbor set (§2.4.3).
+        if moved > 0 {
+            self.comm.cancel_pending(tags::AURA);
+        }
+        self.metrics.add_op(Op::Balancing, t.elapsed_secs());
+        // Hand off agents whose boxes changed owner.
+        if moved > 0 {
+            self.migration_phase();
+        }
+    }
+
+    // -------------------------------------------------------------------
+    // Periodic: agent sorting (§2.5)
+    // -------------------------------------------------------------------
+
+    fn sort_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        self.rm
+            .sort_by_position(self.grid.whole().min, self.model.interaction_radius());
+        // Local ids changed: rebuild the NSG's owned entries. (This is
+        // also the point where deserialized-buffer memory is reclaimed —
+        // the §2.2.1 deallocation story.)
+        let whole = self.grid.whole();
+        let mut nsg = NeighborSearchGrid::new(whole, self.model.interaction_radius());
+        for a in self.rm.iter() {
+            nsg.add(NsgEntry::Owned(a.local_id), a.position);
+        }
+        self.nsg = nsg;
+        self.metrics.add_op(Op::NsgUpdate, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Periodic: in-situ visualization (§3.6)
+    // -------------------------------------------------------------------
+
+    fn visualization_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        let vis = self.cfg.vis.unwrap();
+        let whole = self.grid.whole();
+        // Per-rank geometry pass (this is the dominant, rank-parallel cost).
+        let tile = render_agents(
+            vis.width,
+            vis.height,
+            &whole,
+            self.rm
+                .iter()
+                .map(|a| (a.position, a.diameter, color_of_kind(&a.kind))),
+        );
+        // Sort-last compositing on rank 0.
+        let tiles = self.comm.allgather(tile.to_bytes());
+        if self.rank == 0 {
+            let mut frame = Image::new(vis.width, vis.height);
+            for bytes in &tiles {
+                frame.composite(&Image::from_bytes(bytes));
+            }
+            PartitionGridOverlay { grid: &self.grid }.render(&mut frame, &whole);
+            if vis.export {
+                let dir = std::path::Path::new("output/frames");
+                std::fs::create_dir_all(dir).ok();
+                frame
+                    .write_ppm(dir.join(format!("frame_{:06}.ppm", self.iteration)))
+                    .ok();
+            }
+            self.frames.push(frame);
+        }
+        self.metrics.add_op(Op::Visualization, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+
+    fn record_stats(&mut self) {
+        let world = World::new(
+            self.rank,
+            self.iteration,
+            &mut self.rm,
+            &mut self.nsg,
+            &self.aura,
+            &mut self.rng,
+            self.cfg.whole_space(),
+            self.cfg.boundary,
+            self.model.interaction_radius(),
+            self.pool,
+        );
+        let stats = self.model.local_stats(&world);
+        self.pool_cpu_secs += world.take_pool_cpu();
+        self.stats_history.push(stats);
+    }
+
+    fn update_memory_accounting(&mut self) {
+        let live = self.rm.approx_bytes()
+            + self.nsg.approx_bytes()
+            + self.grid.approx_bytes()
+            + self.aura.approx_bytes()
+            + self.codec.reference_bytes();
+        if live > self.metrics.peak_mem_bytes {
+            self.metrics.peak_mem_bytes = live;
+        }
+    }
+}

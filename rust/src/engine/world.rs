@@ -1,0 +1,380 @@
+//! The per-rank world view handed to models, plus the aura store.
+//!
+//! [`AuraStore`] keeps received aura messages in their zero-copy TA IO
+//! form: neighbor attribute reads go straight into the receive buffers
+//! (the paper's "agents accessed directly from the received buffer").
+//! Only the ROOT IO baseline materializes owned copies.
+
+use crate::core::agent::{Agent, AgentKind};
+use crate::core::ids::LocalId;
+use crate::core::resource_manager::ResourceManager;
+use crate::io::codec::Decoded;
+use crate::io::ta_io::TaView;
+use crate::space::{Aabb, BoundaryCondition, NeighborSearchGrid, NsgEntry};
+use crate::util::{Rng, Vec3};
+
+/// Aura agents received this iteration, in zero-copy or owned form.
+#[derive(Default)]
+pub struct AuraStore {
+    views: Vec<TaView>,
+    owned: Vec<Vec<Agent>>,
+    /// Flattened index: aura id -> (source index, slot, is_view).
+    index: Vec<(u32, u32, bool)>,
+}
+
+impl AuraStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all aura data (start of each iteration; the paper's
+    /// rebuilt-every-iteration aura lifecycle).
+    pub fn clear(&mut self) {
+        self.views.clear();
+        self.owned.clear();
+        self.index.clear();
+    }
+
+    /// Ingest one decoded message; returns the flat aura ids assigned to
+    /// its agents (placeholder-free by construction).
+    pub fn add_source(&mut self, decoded: Decoded) -> std::ops::Range<u32> {
+        let start = self.index.len() as u32;
+        match decoded {
+            Decoded::View(view) => {
+                let src = self.views.len() as u32;
+                for slot in 0..view.len() {
+                    if !view.agent(slot).is_placeholder() {
+                        self.index.push((src, slot as u32, true));
+                    }
+                }
+                self.views.push(view);
+            }
+            Decoded::Owned(agents) => {
+                let src = self.owned.len() as u32;
+                for slot in 0..agents.len() {
+                    self.index.push((src, slot as u32, false));
+                }
+                self.owned.push(agents);
+            }
+        }
+        start..self.index.len() as u32
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Position of aura agent `i` (zero-copy for TA IO sources).
+    pub fn position(&self, i: u32) -> Vec3 {
+        let (src, slot, is_view) = self.index[i as usize];
+        if is_view {
+            Vec3::from_array(self.views[src as usize].agent(slot as usize).position)
+        } else {
+            self.owned[src as usize][slot as usize].position
+        }
+    }
+
+    pub fn diameter(&self, i: u32) -> f64 {
+        let (src, slot, is_view) = self.index[i as usize];
+        if is_view {
+            self.views[src as usize].agent(slot as usize).diameter
+        } else {
+            self.owned[src as usize][slot as usize].diameter
+        }
+    }
+
+    pub fn kind(&self, i: u32) -> AgentKind {
+        let (src, slot, is_view) = self.index[i as usize];
+        if is_view {
+            self.views[src as usize].agent(slot as usize).kind()
+        } else {
+            self.owned[src as usize][slot as usize].kind
+        }
+    }
+
+    /// Bytes held by the aura buffers (memory accounting).
+    pub fn approx_bytes(&self) -> u64 {
+        let views: usize = self.views.iter().map(|v| v.buffer_bytes()).sum();
+        let owned: usize = self
+            .owned
+            .iter()
+            .map(|v| v.len() * std::mem::size_of::<Agent>())
+            .sum();
+        (views + owned + self.index.len() * 12) as u64
+    }
+}
+
+/// Read-only neighbor record produced by [`World::neighbors_of`].
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborInfo {
+    pub pos: Vec3,
+    pub diameter: f64,
+    pub kind: AgentKind,
+    /// Squared distance from the query center.
+    pub dist_sq: f64,
+}
+
+/// The per-rank world handed to `Model::step`.
+pub struct World<'a> {
+    pub rank: u32,
+    pub iteration: u64,
+    pub rm: &'a mut ResourceManager,
+    pub nsg: &'a mut NeighborSearchGrid,
+    pub aura: &'a AuraStore,
+    pub rng: &'a mut Rng,
+    pub whole: Aabb,
+    pub boundary: BoundaryCondition,
+    pub interaction_radius: f64,
+    /// Agents queued for creation (applied after the model step).
+    pub spawns: Vec<Agent>,
+    /// Agents queued for removal.
+    pub removals: Vec<LocalId>,
+    /// Intra-rank thread pool (the paper's OpenMP parallelism): models use
+    /// [`World::par_chunks`] for read-only phases.
+    pub pool: crate::engine::pool::ThreadPool,
+    /// Critical-path CPU seconds of pool regions run by the model (f64
+    /// bits; atomic so read-only parallel closures can stay `Sync`).
+    pool_cpu_bits: std::sync::atomic::AtomicU64,
+}
+
+impl<'a> World<'a> {
+    /// Construct a world view (engine-internal).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: u32,
+        iteration: u64,
+        rm: &'a mut ResourceManager,
+        nsg: &'a mut NeighborSearchGrid,
+        aura: &'a AuraStore,
+        rng: &'a mut Rng,
+        whole: Aabb,
+        boundary: BoundaryCondition,
+        interaction_radius: f64,
+        pool: crate::engine::pool::ThreadPool,
+    ) -> Self {
+        World {
+            rank,
+            iteration,
+            rm,
+            nsg,
+            aura,
+            rng,
+            whole,
+            boundary,
+            interaction_radius,
+            spawns: Vec::new(),
+            removals: Vec::new(),
+            pool,
+            pool_cpu_bits: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Read-only fork-join over `0..len` using the rank's thread pool;
+    /// `f(chunk, start, end, &World)`. The region's critical-path CPU is
+    /// recorded for the engine's parallel-runtime model.
+    pub fn par_chunks<R: Send>(
+        &self,
+        len: usize,
+        f: impl Fn(usize, usize, usize, &World) -> R + Sync,
+    ) -> Vec<R> {
+        let (out, cpu) = self.pool.map_chunks_timed(len, |c, s, e| f(c, s, e, self));
+        let bits = self.pool_cpu_bits.load(std::sync::atomic::Ordering::Relaxed);
+        let acc = f64::from_bits(bits) + cpu;
+        self.pool_cpu_bits
+            .store(acc.to_bits(), std::sync::atomic::Ordering::Relaxed);
+        out
+    }
+
+    /// Pool CPU charged by the model through [`World::par_chunks`].
+    pub fn take_pool_cpu(&self) -> f64 {
+        let bits = self
+            .pool_cpu_bits
+            .swap(0, std::sync::atomic::Ordering::Relaxed);
+        f64::from_bits(bits)
+    }
+    /// Neighbor records within `radius` of `center`, excluding `exclude`.
+    /// Results are sorted by distance (then position) so iteration order
+    /// is deterministic regardless of rank count or NSG layout.
+    pub fn neighbors_of(&self, center: Vec3, radius: f64, exclude: Option<LocalId>) -> Vec<NeighborInfo> {
+        let mut out = Vec::new();
+        let ex = exclude.map(NsgEntry::Owned);
+        self.nsg.for_each_neighbor(center, radius, ex, |entry, pos, d2| {
+            let info = match entry {
+                NsgEntry::Owned(id) => {
+                    let a = self.rm.get(id).expect("NSG entry points at freed agent");
+                    NeighborInfo { pos, diameter: a.diameter, kind: a.kind, dist_sq: d2 }
+                }
+                NsgEntry::Aura(i) => NeighborInfo {
+                    pos,
+                    diameter: self.aura.diameter(i),
+                    kind: self.aura.kind(i),
+                    dist_sq: d2,
+                },
+            };
+            out.push(info);
+        });
+        out.sort_by(|a, b| {
+            a.dist_sq
+                .partial_cmp(&b.dist_sq)
+                .unwrap()
+                .then(a.pos.x.partial_cmp(&b.pos.x).unwrap())
+                .then(a.pos.y.partial_cmp(&b.pos.y).unwrap())
+                .then(a.pos.z.partial_cmp(&b.pos.z).unwrap())
+        });
+        out
+    }
+
+    /// Count neighbors satisfying a predicate (no allocation).
+    pub fn count_neighbors_where(
+        &self,
+        center: Vec3,
+        radius: f64,
+        exclude: Option<LocalId>,
+        mut pred: impl FnMut(&AgentKind) -> bool,
+    ) -> usize {
+        let mut n = 0;
+        let ex = exclude.map(NsgEntry::Owned);
+        self.nsg.for_each_neighbor(center, radius, ex, |entry, _, _| {
+            let kind = match entry {
+                NsgEntry::Owned(id) => self.rm.get(id).expect("stale NSG entry").kind,
+                NsgEntry::Aura(i) => self.aura.kind(i),
+            };
+            if pred(&kind) {
+                n += 1;
+            }
+        });
+        n
+    }
+
+    /// Move an owned agent, applying the boundary condition and updating
+    /// the NSG incrementally.
+    pub fn move_agent(&mut self, id: LocalId, new_pos: Vec3) {
+        let pos = self.boundary.apply(new_pos, &self.whole);
+        if let Some(a) = self.rm.get_mut(id) {
+            a.position = pos;
+            self.nsg.update_position(NsgEntry::Owned(id), pos);
+        }
+    }
+
+    /// Queue a spawn (applied by the engine after the model step).
+    pub fn spawn(&mut self, mut agent: Agent) {
+        agent.position = self.boundary.apply(agent.position, &self.whole);
+        self.spawns.push(agent);
+    }
+
+    /// Queue a removal.
+    pub fn remove(&mut self, id: LocalId) {
+        self.removals.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::{CellType, SirState};
+    use crate::core::ids::GlobalId;
+    use crate::io::ta_io;
+
+    fn aura_from_agents(agents: &[Agent]) -> AuraStore {
+        let mut store = AuraStore::new();
+        let buf = ta_io::serialize(agents.iter());
+        let view = ta_io::TaView::parse(buf).unwrap();
+        store.add_source(Decoded::View(view));
+        store
+    }
+
+    #[test]
+    fn aura_store_zero_copy_reads() {
+        let mut a = Agent::cell(Vec3::new(1.0, 2.0, 3.0), 7.0, CellType::B);
+        a.global_id = GlobalId::new(1, 1);
+        let mut b = Agent::person(Vec3::new(4.0, 5.0, 6.0), SirState::Infected);
+        b.global_id = GlobalId::new(1, 2);
+        let store = aura_from_agents(&[a, b]);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.position(0), Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(store.diameter(0), 7.0);
+        assert!(matches!(store.kind(1), AgentKind::Person { state: SirState::Infected, .. }));
+        assert!(store.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn aura_store_owned_path() {
+        let mut store = AuraStore::new();
+        let a = Agent::cell(Vec3::new(9.0, 9.0, 9.0), 2.0, CellType::A);
+        store.add_source(Decoded::Owned(vec![a]));
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.position(0), Vec3::new(9.0, 9.0, 9.0));
+        store.clear();
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn world_neighbor_query_merges_owned_and_aura() {
+        let mut rm = ResourceManager::new(0);
+        let whole = Aabb::cube(50.0);
+        let mut nsg = NeighborSearchGrid::new(whole, 10.0);
+        let id = rm.add(Agent::cell(Vec3::ZERO, 5.0, CellType::A));
+        nsg.add(NsgEntry::Owned(id), Vec3::ZERO);
+        let near = rm.add(Agent::cell(Vec3::new(3.0, 0.0, 0.0), 5.0, CellType::B));
+        nsg.add(NsgEntry::Owned(near), Vec3::new(3.0, 0.0, 0.0));
+        let mut aura_agent = Agent::cell(Vec3::new(0.0, 4.0, 0.0), 6.0, CellType::A);
+        aura_agent.global_id = GlobalId::new(1, 0);
+        let aura = aura_from_agents(&[aura_agent]);
+        nsg.add(NsgEntry::Aura(0), Vec3::new(0.0, 4.0, 0.0));
+        let mut rng = Rng::new(1);
+        let world = World::new(
+            0,
+            0,
+            &mut rm,
+            &mut nsg,
+            &aura,
+            &mut rng,
+            whole,
+            BoundaryCondition::Closed,
+            10.0,
+            crate::engine::pool::ThreadPool::new(2),
+        );
+        let n = world.neighbors_of(Vec3::ZERO, 10.0, Some(id));
+        assert_eq!(n.len(), 2);
+        // Sorted by distance: owned at 3.0 first, aura at 4.0 second.
+        assert_eq!(n[0].pos, Vec3::new(3.0, 0.0, 0.0));
+        assert_eq!(n[1].diameter, 6.0);
+        let count = world.count_neighbors_where(Vec3::ZERO, 10.0, Some(id), |k| {
+            matches!(k, AgentKind::Cell { cell_type: CellType::A, .. })
+        });
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn move_agent_applies_boundary_and_updates_nsg() {
+        let mut rm = ResourceManager::new(0);
+        let whole = Aabb::cube(10.0);
+        let mut nsg = NeighborSearchGrid::new(whole, 5.0);
+        let id = rm.add(Agent::cell(Vec3::ZERO, 1.0, CellType::A));
+        nsg.add(NsgEntry::Owned(id), Vec3::ZERO);
+        let aura = AuraStore::new();
+        let mut rng = Rng::new(1);
+        let mut world = World::new(
+            0,
+            0,
+            &mut rm,
+            &mut nsg,
+            &aura,
+            &mut rng,
+            whole,
+            BoundaryCondition::Closed,
+            5.0,
+            crate::engine::pool::ThreadPool::new(2),
+        );
+        world.move_agent(id, Vec3::new(100.0, 0.0, 0.0)); // clamps to edge
+        let pos = world.rm.get(id).unwrap().position;
+        assert!(pos.x < 10.0 && pos.x > 9.99);
+        // NSG reflects the new position.
+        let found = world.nsg.neighbors_of(pos, 0.01, None);
+        assert_eq!(found.len(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! 8-byte-aligned byte buffers.
+//!
+//! TeraAgent IO reinterprets the receive buffer as typed memory blocks
+//! (f64/u64 fields), which requires 8-byte alignment. A plain `Vec<u8>`
+//! gives no alignment guarantee, so [`AlignedBuf`] stores `u64` words and
+//! exposes byte views.
+
+/// A growable byte buffer whose storage is 8-byte aligned.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        AlignedBuf { words: Vec::with_capacity(bytes.div_ceil(8)), len: 0 }
+    }
+
+    /// Construct from raw bytes (copies once into aligned storage).
+    pub fn from_bytes(bytes: &[u8]) -> Self {
+        let mut b = Self::with_capacity(bytes.len());
+        b.extend_from_slice(bytes);
+        b
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.words.capacity() * 8
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // Safe: u64 storage is always valid as bytes; len <= words.len()*8.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr() as *mut u8, self.len) }
+    }
+
+    /// Base pointer (8-byte aligned).
+    #[inline]
+    pub fn as_ptr(&self) -> *const u8 {
+        self.words.as_ptr() as *const u8
+    }
+
+    #[inline]
+    pub fn as_mut_ptr(&mut self) -> *mut u8 {
+        self.words.as_mut_ptr() as *mut u8
+    }
+
+    /// Set the length to `bytes`, zero-filling any newly exposed storage.
+    pub fn resize(&mut self, bytes: usize) {
+        let words = bytes.div_ceil(8);
+        if words > self.words.len() {
+            self.words.resize(words, 0);
+        }
+        self.len = bytes;
+    }
+
+    /// Set the length to `bytes` WITHOUT zero-filling the interior — for
+    /// writers that overwrite the whole range immediately (the TA IO
+    /// serializer's single-allocation fast path). Only the final partial
+    /// word is zeroed so trailing padding bytes stay defined.
+    pub fn resize_for_overwrite(&mut self, bytes: usize) {
+        let words = bytes.div_ceil(8);
+        if words > self.words.capacity() {
+            self.words.reserve(words - self.words.len());
+        }
+        // Safety: u64 has no invalid bit patterns; the caller contract is
+        // to overwrite [0, bytes) before reading. The final word is zeroed
+        // so bytes in [bytes, words*8) are always defined.
+        unsafe {
+            self.words.set_len(words);
+        }
+        if bytes % 8 != 0 {
+            if let Some(w) = self.words.last_mut() {
+                *w = 0;
+            }
+        }
+        self.len = bytes;
+    }
+
+    /// Append raw bytes.
+    pub fn extend_from_slice(&mut self, bytes: &[u8]) {
+        let old = self.len;
+        self.resize(old + bytes.len());
+        self.as_mut_slice()[old..].copy_from_slice(bytes);
+    }
+
+    /// Append `n` zero bytes and return the offset where they start.
+    pub fn extend_zeroed(&mut self, n: usize) -> usize {
+        let old = self.len;
+        self.resize(old + n);
+        old
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Copy out to a plain Vec (e.g. to hand to a transport).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for AlignedBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_eight() {
+        let mut b = AlignedBuf::with_capacity(3);
+        b.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(b.as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn extend_and_read_back() {
+        let mut b = AlignedBuf::new();
+        b.extend_from_slice(&[1, 2, 3]);
+        b.extend_from_slice(&[4, 5]);
+        assert_eq!(b.as_slice(), &[1, 2, 3, 4, 5]);
+        assert_eq!(b.len(), 5);
+    }
+
+    #[test]
+    fn resize_zero_fills() {
+        let mut b = AlignedBuf::from_bytes(&[9, 9]);
+        b.resize(10);
+        assert_eq!(&b.as_slice()[2..], &[0u8; 8]);
+        b.resize(1);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn extend_zeroed_returns_offset() {
+        let mut b = AlignedBuf::from_bytes(&[7]);
+        let off = b.extend_zeroed(4);
+        assert_eq!(off, 1);
+        assert_eq!(b.len(), 5);
+        assert_eq!(&b.as_slice()[1..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn from_bytes_round_trip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let b = AlignedBuf::from_bytes(&data);
+        assert_eq!(b.to_vec(), data);
+    }
+
+    #[test]
+    fn mutation_through_slice() {
+        let mut b = AlignedBuf::from_bytes(&[0, 0, 0]);
+        b.as_mut_slice()[1] = 42;
+        assert_eq!(b.as_slice(), &[0, 42, 0]);
+    }
+}

@@ -1,0 +1,354 @@
+//! The configurable (de)serialization + compression pipeline used by the
+//! engine for every cross-rank transfer, reproducing the configurations
+//! the paper benchmarks:
+//!
+//! * Fig. 10 — serializer: **TA IO** vs **ROOT IO** (both uncompressed).
+//! * Fig. 11 — TA IO baseline vs **+LZ4** vs **+LZ4+delta**.
+//!
+//! Wire envelope: `[serializer u8][delta-kind u8][raw_len u32 LE][payload]`.
+//! Delta encoding is only defined on top of TA IO (it operates on the
+//! block layout); ROOT IO supports plain LZ4.
+
+use super::buffer::AlignedBuf;
+use super::delta::{DeltaDecoder, DeltaEncoder, DeltaKind};
+use super::{lz4, root_io, ta_io};
+use crate::core::agent::Agent;
+use std::collections::HashMap;
+
+/// Which serializer to run (Fig. 10's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SerializerKind {
+    TaIo,
+    RootIo,
+}
+
+impl SerializerKind {
+    pub fn code(self) -> u8 {
+        match self {
+            SerializerKind::TaIo => 1,
+            SerializerKind::RootIo => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ta_io" | "taio" | "ta" => Some(SerializerKind::TaIo),
+            "root_io" | "rootio" | "root" => Some(SerializerKind::RootIo),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SerializerKind::TaIo => "ta_io",
+            SerializerKind::RootIo => "root_io",
+        }
+    }
+}
+
+/// Compression configuration (Fig. 11's comparison axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    None,
+    Lz4,
+    /// LZ4 over delta-encoded payloads; `period` = reference refresh.
+    Lz4Delta { period: u32 },
+}
+
+impl Compression {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Compression::None),
+            "lz4" => Some(Compression::Lz4),
+            "lz4+delta" | "delta" => Some(Compression::Lz4Delta { period: 16 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::Lz4 => "lz4",
+            Compression::Lz4Delta { .. } => "lz4+delta",
+        }
+    }
+}
+
+/// Per-message encode statistics (feed the Fig. 10/11 counters).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodeStats {
+    /// Serialized payload size before compression.
+    pub raw_bytes: usize,
+    /// Bytes handed to the transport.
+    pub wire_bytes: usize,
+    pub serialize_secs: f64,
+    pub compress_secs: f64,
+}
+
+/// Per-message decode statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    pub deserialize_secs: f64,
+    pub decompress_secs: f64,
+}
+
+/// Decoded message: a zero-copy view (TA IO) or owned agents (ROOT IO).
+pub enum Decoded {
+    View(ta_io::TaView),
+    Owned(Vec<Agent>),
+}
+
+impl Decoded {
+    /// Materialize into owned agents (copies out of the view if needed).
+    pub fn into_agents(self) -> Vec<Agent> {
+        match self {
+            Decoded::View(v) => v.materialize_all(),
+            Decoded::Owned(a) => a,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Decoded::View(v) => v.len(),
+            Decoded::Owned(a) => a.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A channel key: (peer rank, message tag).
+pub type ChannelKey = (u32, u32);
+
+/// Stateful codec for one rank: owns the per-channel delta references.
+pub struct Codec {
+    pub serializer: SerializerKind,
+    pub compression: Compression,
+    encoders: HashMap<ChannelKey, DeltaEncoder>,
+    decoders: HashMap<ChannelKey, DeltaDecoder>,
+}
+
+impl Codec {
+    pub fn new(serializer: SerializerKind, compression: Compression) -> Self {
+        Codec { serializer, compression, encoders: HashMap::new(), decoders: HashMap::new() }
+    }
+
+    /// Encode agents for transmission on (peer, tag).
+    pub fn encode<'a>(
+        &mut self,
+        key: ChannelKey,
+        agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+    ) -> (Vec<u8>, EncodeStats) {
+        let mut stats = EncodeStats::default();
+        let t0 = std::time::Instant::now();
+        let (delta_kind, payload): (DeltaKind, Vec<u8>) = match self.serializer {
+            SerializerKind::RootIo => (DeltaKind::Full, root_io::serialize(agents)),
+            SerializerKind::TaIo => match self.compression {
+                Compression::Lz4Delta { period } => {
+                    let enc = self
+                        .encoders
+                        .entry(key)
+                        .or_insert_with(|| DeltaEncoder::new(period));
+                    let (k, buf) = enc.encode(agents);
+                    (k, buf.to_vec())
+                }
+                _ => (DeltaKind::Full, ta_io::serialize(agents).to_vec()),
+            },
+        };
+        stats.serialize_secs = t0.elapsed().as_secs_f64();
+        stats.raw_bytes = payload.len();
+
+        let t1 = std::time::Instant::now();
+        let (compressed, body): (bool, Vec<u8>) = match self.compression {
+            Compression::None => (false, payload),
+            Compression::Lz4 | Compression::Lz4Delta { .. } => {
+                (true, lz4::compress(&payload))
+            }
+        };
+        stats.compress_secs = t1.elapsed().as_secs_f64();
+
+        let mut wire = Vec::with_capacity(body.len() + 8);
+        wire.push(self.serializer.code());
+        wire.push(delta_kind.code() | if compressed { 0x80 } else { 0 });
+        wire.extend_from_slice(&(stats.raw_bytes as u32).to_le_bytes());
+        wire.extend_from_slice(&body);
+        stats.wire_bytes = wire.len();
+        (wire, stats)
+    }
+
+    /// Decode a message received on (peer, tag).
+    pub fn decode(&mut self, key: ChannelKey, wire: &[u8]) -> (Decoded, DecodeStats) {
+        let mut stats = DecodeStats::default();
+        assert!(wire.len() >= 6, "wire message too short");
+        let ser = wire[0];
+        let kind_byte = wire[1];
+        let compressed = kind_byte & 0x80 != 0;
+        let delta_kind = DeltaKind::from_code(kind_byte & 0x7F);
+        let raw_len = u32::from_le_bytes(wire[2..6].try_into().unwrap()) as usize;
+        let body = &wire[6..];
+
+        let t0 = std::time::Instant::now();
+        let payload: Vec<u8> = if compressed {
+            lz4::decompress(body, raw_len).expect("corrupt LZ4 payload")
+        } else {
+            body.to_vec()
+        };
+        stats.decompress_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let decoded = if ser == SerializerKind::RootIo.code() {
+            Decoded::Owned(root_io::deserialize(&payload).expect("corrupt ROOT IO payload"))
+        } else {
+            let buf = AlignedBuf::from_bytes(&payload);
+            match delta_kind {
+                DeltaKind::Full if !matches!(self.compression, Compression::Lz4Delta { .. }) => {
+                    Decoded::View(ta_io::TaView::parse(buf).expect("corrupt TA IO payload"))
+                }
+                _ => {
+                    let dec = self.decoders.entry(key).or_insert_with(DeltaDecoder::new);
+                    Decoded::View(dec.decode(delta_kind, buf).expect("corrupt delta payload"))
+                }
+            }
+        };
+        stats.deserialize_secs = t1.elapsed().as_secs_f64();
+        (decoded, stats)
+    }
+
+    /// Bytes held by delta references (Fig. 11c's memory overhead).
+    pub fn reference_bytes(&self) -> u64 {
+        self.encoders.values().map(|e| e.reference_bytes()).sum::<u64>()
+            + self.decoders.values().map(|d| d.reference_bytes()).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+    use crate::core::ids::GlobalId;
+    use crate::util::{Rng, Vec3};
+
+    fn agents(n: usize, seed: u64) -> Vec<Agent> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut a = Agent::cell(
+                    Vec3::new(rng.uniform_range(0.0, 100.0), rng.uniform_range(0.0, 100.0), 0.0),
+                    10.0,
+                    CellType::A,
+                );
+                a.global_id = GlobalId::new(0, i as u64);
+                a
+            })
+            .collect()
+    }
+
+    fn round_trip(ser: SerializerKind, comp: Compression) {
+        let mut tx = Codec::new(ser, comp);
+        let mut rx = Codec::new(ser, comp);
+        let mut ags = agents(50, 42);
+        for iter in 0..5 {
+            // small drift between iterations
+            for a in ags.iter_mut() {
+                a.position.x += 0.1;
+            }
+            let (wire, es) = tx.encode((1, 0), ags.iter());
+            assert!(es.wire_bytes > 0 && es.raw_bytes > 0);
+            let (decoded, _) = rx.decode((0, 0), &wire);
+            let got = decoded.into_agents();
+            assert_eq!(got.len(), ags.len(), "iter {iter}");
+            let mut want: Vec<_> = ags.iter().map(|a| (a.global_id, a.position)).collect();
+            want.sort_by_key(|(g, _)| *g);
+            let mut have: Vec<_> = got.iter().map(|a| (a.global_id, a.position)).collect();
+            have.sort_by_key(|(g, _)| *g);
+            assert_eq!(want, have, "iter {iter}");
+        }
+    }
+
+    #[test]
+    fn ta_io_none() {
+        round_trip(SerializerKind::TaIo, Compression::None);
+    }
+
+    #[test]
+    fn ta_io_lz4() {
+        round_trip(SerializerKind::TaIo, Compression::Lz4);
+    }
+
+    #[test]
+    fn ta_io_lz4_delta() {
+        round_trip(SerializerKind::TaIo, Compression::Lz4Delta { period: 3 });
+    }
+
+    #[test]
+    fn root_io_none() {
+        round_trip(SerializerKind::RootIo, Compression::None);
+    }
+
+    #[test]
+    fn root_io_lz4() {
+        round_trip(SerializerKind::RootIo, Compression::Lz4);
+    }
+
+    #[test]
+    fn delta_reduces_wire_size_on_stable_stream() {
+        let mut plain = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut delta = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 100 });
+        let ags = agents(500, 7);
+        // Warm both channels.
+        let (w0, _) = plain.encode((1, 0), ags.iter());
+        delta.encode((1, 0), ags.iter());
+        // Steady state: identical payload (gradual change limit).
+        let (w1, _) = plain.encode((1, 0), ags.iter());
+        let (w2, s2) = delta.encode((1, 0), ags.iter());
+        assert!(w2.len() < w1.len() / 3, "delta {} vs lz4 {} (w0 {})", w2.len(), w1.len(), w0.len());
+        assert!(s2.raw_bytes > 0);
+    }
+
+    #[test]
+    fn stats_measure_time() {
+        let mut c = Codec::new(SerializerKind::RootIo, Compression::Lz4);
+        let ags = agents(2000, 9);
+        let (wire, es) = c.encode((1, 0), ags.iter());
+        assert!(es.serialize_secs > 0.0);
+        assert!(es.compress_secs > 0.0);
+        let (_, ds) = c.decode((0, 0), &wire);
+        assert!(ds.deserialize_secs > 0.0);
+    }
+
+    #[test]
+    fn reference_bytes_visible_for_delta_only() {
+        let mut none = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut delta = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 4 });
+        let ags = agents(100, 3);
+        none.encode((1, 0), ags.iter());
+        delta.encode((1, 0), ags.iter());
+        assert_eq!(none.reference_bytes(), 0);
+        assert!(delta.reference_bytes() > 0);
+    }
+
+    #[test]
+    fn channels_are_independent() {
+        let mut c = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 10 });
+        let a1 = agents(20, 1);
+        let a2 = agents(30, 2);
+        c.encode((1, 0), a1.iter());
+        c.encode((2, 0), a2.iter());
+        let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 10 });
+        // Interleaved decode on distinct channels must not cross-talk.
+        let (w1, _) = c.encode((1, 0), a1.iter());
+        let (w2, _) = c.encode((2, 0), a2.iter());
+        // Need the references first:
+        let mut c2 = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 10 });
+        let (f1, _) = c2.encode((1, 0), a1.iter());
+        let (f2, _) = c2.encode((2, 0), a2.iter());
+        rx.decode((1, 0), &f1);
+        rx.decode((2, 0), &f2);
+        let (d1, _) = rx.decode((1, 0), &w1);
+        let (d2, _) = rx.decode((2, 0), &w2);
+        assert_eq!(d1.len(), 20);
+        assert_eq!(d2.len(), 30);
+    }
+}

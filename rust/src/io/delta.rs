@@ -1,0 +1,527 @@
+//! Delta encoding of aura messages (§2.3, Fig. 4).
+//!
+//! Agent-based simulation is iterative: between consecutive iterations an
+//! agent's attributes change only gradually (positions drift, types don't
+//! change). Each (sender, receiver) channel therefore keeps a shared
+//! *reference* message; the sender transmits only the byte-wise difference
+//! against it, which is near-zero almost everywhere and compresses
+//! extremely well with LZ4.
+//!
+//! Pipeline per Fig. 4:
+//! * **(B) match & reorder** — the sender reorders the message *at the
+//!   agent-pointer level* to the reference's agent order (matching by
+//!   global id). Agents present in the reference but missing from the
+//!   message become placeholder slots (the "null pointer" that cannot
+//!   occur at this tree depth); new agents are appended at the end. No
+//!   order side-channel is needed because the receiver holds the same
+//!   reference.
+//! * **(C) diff** — the TA IO traversal writes `message − reference`
+//!   (wrapping byte subtraction) for matched slots and raw bytes for
+//!   appended agents.
+//! * **(D) restore + defragment** — the receiver adds the reference back,
+//!   drops placeholder slots (defragmentation; the original order is *not*
+//!   restored — reordering does not affect simulation correctness), and
+//!   hands a normal TA IO buffer to higher-level code.
+//!
+//! At a configurable period sender and receiver refresh the reference
+//! (a `Full` message), bounding drift after migrations/churn.
+
+use super::buffer::AlignedBuf;
+use super::ta_io::{self, AgentBlock, BehaviorBlock, TaView};
+use crate::core::agent::Agent;
+use crate::core::ids::GlobalId;
+use std::collections::HashMap;
+
+/// Message kind transmitted in front of the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaKind {
+    /// Payload is a plain TA IO message; both sides store it as the new
+    /// reference.
+    Full,
+    /// Payload is a diff against the stored reference.
+    Delta,
+}
+
+impl DeltaKind {
+    pub fn code(self) -> u8 {
+        match self {
+            DeltaKind::Full => 0,
+            DeltaKind::Delta => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> DeltaKind {
+        if c == 0 { DeltaKind::Full } else { DeltaKind::Delta }
+    }
+}
+
+/// One agent slot in block form.
+type Slot = (AgentBlock, Vec<BehaviorBlock>);
+
+/// Reference message stored by both channel ends: the agent slots in
+/// reference order plus a global-id index.
+#[derive(Clone, Debug, Default)]
+pub struct Reference {
+    slots: Vec<Slot>,
+    index: HashMap<GlobalId, usize>,
+}
+
+impl Reference {
+    fn from_slots(slots: Vec<Slot>) -> Reference {
+        let index = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, (ab, _))| !ab.is_placeholder())
+            .map(|(i, (ab, _))| (ab.global_id(), i))
+            .collect();
+        Reference { slots, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Approximate bytes held (the memory cost Fig. 11c reports).
+    pub fn approx_bytes(&self) -> u64 {
+        let blocks: usize = self
+            .slots
+            .iter()
+            .map(|(_, b)| ta_io::AGENT_BLOCK_BYTES + b.capacity() * ta_io::BEHAVIOR_BLOCK_BYTES)
+            .sum();
+        (blocks + self.index.len() * 24) as u64
+    }
+}
+
+/// Sender-side channel state.
+#[derive(Debug, Default)]
+pub struct DeltaEncoder {
+    reference: Option<Reference>,
+    /// Messages since the last reference refresh.
+    since_refresh: u32,
+    /// Refresh period (a `Full` message every `period` sends; 0 = always
+    /// full, i.e. delta disabled).
+    pub period: u32,
+}
+
+impl DeltaEncoder {
+    pub fn new(period: u32) -> Self {
+        DeltaEncoder { reference: None, since_refresh: 0, period }
+    }
+
+    /// Encode agents for this channel. Returns the kind tag and payload.
+    pub fn encode<'a>(
+        &mut self,
+        agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+    ) -> (DeltaKind, AlignedBuf) {
+        let need_full = self.period == 0
+            || self.reference.is_none()
+            || self.since_refresh >= self.period;
+        if need_full {
+            let buf = ta_io::serialize(agents.clone());
+            // Store the new reference (parse our own message — cheap, it
+            // is just the block index pass).
+            let view = TaView::parse(buf.clone()).expect("self-produced message must parse");
+            let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
+            self.reference = Some(Reference::from_slots(slots));
+            self.since_refresh = 1;
+            return (DeltaKind::Full, buf);
+        }
+        let reference = self.reference.as_ref().unwrap();
+        // (B) match & reorder to reference order.
+        let mut slots: Vec<Option<Slot>> = vec![None; reference.len()];
+        let mut appended: Vec<Slot> = Vec::new();
+        for a in agents {
+            let ab = AgentBlock::from_agent(a);
+            let bbs: Vec<BehaviorBlock> =
+                a.behaviors.iter().map(BehaviorBlock::from_behavior).collect();
+            match reference.index.get(&ab.global_id()) {
+                Some(&i) if slots[i].is_none() => slots[i] = Some((ab, bbs)),
+                _ => appended.push((ab, bbs)),
+            }
+        }
+        // Placeholders for reference agents missing from the message.
+        let ordered: Vec<Slot> = slots
+            .into_iter()
+            .map(|s| s.unwrap_or((AgentBlock::PLACEHOLDER, Vec::new())))
+            .chain(appended)
+            .collect();
+        // (C) serialize the reordered message, then subtract the reference
+        // bytes slot-by-slot.
+        let mut buf = ta_io::serialize_blocks(&ordered);
+        subtract_reference(&mut buf, reference);
+        self.since_refresh += 1;
+        (DeltaKind::Delta, buf)
+    }
+
+    pub fn reference_bytes(&self) -> u64 {
+        self.reference.as_ref().map(|r| r.approx_bytes()).unwrap_or(0)
+    }
+}
+
+/// Receiver-side channel state.
+#[derive(Debug, Default)]
+pub struct DeltaDecoder {
+    reference: Option<Reference>,
+}
+
+impl DeltaDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decode a payload received with `kind`. Returns a plain TA IO view
+    /// (defragmented: placeholder slots removed).
+    pub fn decode(&mut self, kind: DeltaKind, buf: AlignedBuf) -> Result<TaView, ta_io::TaError> {
+        match kind {
+            DeltaKind::Full => {
+                let view = TaView::parse(buf)?;
+                let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
+                self.reference = Some(Reference::from_slots(slots));
+                Ok(view)
+            }
+            DeltaKind::Delta => {
+                let reference = self
+                    .reference
+                    .as_ref()
+                    .expect("delta message received before any reference");
+                let mut buf = buf;
+                add_reference(&mut buf, reference);
+                let view = TaView::parse(buf)?;
+                // (D) defragment: drop placeholders.
+                let kept: Vec<Slot> = (0..view.len())
+                    .map(|i| view.blocks(i))
+                    .filter(|(ab, _)| !ab.is_placeholder())
+                    .collect();
+                TaView::parse(ta_io::serialize_blocks(&kept))
+            }
+        }
+    }
+
+    pub fn reference_bytes(&self) -> u64 {
+        self.reference.as_ref().map(|r| r.approx_bytes()).unwrap_or(0)
+    }
+}
+
+/// Byte-wise `message -= reference` over matched slots. Slots beyond the
+/// reference (appended agents) and the header are left raw.
+fn subtract_reference(buf: &mut AlignedBuf, reference: &Reference) {
+    apply_reference(buf, reference, true);
+}
+
+/// Byte-wise `message += reference` (inverse of [`subtract_reference`]).
+fn add_reference(buf: &mut AlignedBuf, reference: &Reference) {
+    apply_reference(buf, reference, false);
+}
+
+fn apply_reference(buf: &mut AlignedBuf, reference: &Reference, encode: bool) {
+    let op: fn(u8, u8) -> u8 = if encode { u8::wrapping_sub } else { u8::wrapping_add };
+    // Walk the message's slots in tandem with the reference. The message
+    // was serialized in reference order, so slot i aligns with reference
+    // slot i for i < reference.len().
+    //
+    // Placeholders and class changes make the *behavior count* of a
+    // message slot differ from the reference slot; the diff is applied to
+    // the agent block always, and to behavior bytes only up to the shared
+    // prefix, keeping encode/decode exactly inverse. The message's true
+    // behavior count is readable from the raw (un-diffed) field: before
+    // the op when encoding, after the op when decoding.
+    let mut off = ta_io::HEADER_BYTES;
+    let total = buf.len();
+    let base = buf.as_mut_slice();
+    for (ref_ab, ref_bbs) in &reference.slots {
+        if off + ta_io::AGENT_BLOCK_BYTES > total {
+            break;
+        }
+        let count_field_off = off + 4; // n_behaviors field offset in AgentBlock
+        let read_count = |b: &[u8]| {
+            u32::from_le_bytes(b[count_field_off..count_field_off + 4].try_into().unwrap())
+        };
+        let count_before = read_count(base);
+        // Diff the agent block against the reference block bytes.
+        let ref_bytes = unsafe {
+            std::slice::from_raw_parts(
+                ref_ab as *const AgentBlock as *const u8,
+                ta_io::AGENT_BLOCK_BYTES,
+            )
+        };
+        for k in 0..ta_io::AGENT_BLOCK_BYTES {
+            base[off + k] = op(base[off + k], ref_bytes[k]);
+        }
+        let msg_count = if encode { count_before } else { read_count(base) };
+        off += ta_io::AGENT_BLOCK_BYTES;
+        // Diff behavior blocks over the shared prefix.
+        let shared = (msg_count as usize).min(ref_bbs.len());
+        for bb in ref_bbs.iter().take(shared) {
+            let bb_bytes = unsafe {
+                std::slice::from_raw_parts(
+                    bb as *const BehaviorBlock as *const u8,
+                    ta_io::BEHAVIOR_BLOCK_BYTES,
+                )
+            };
+            for k in 0..ta_io::BEHAVIOR_BLOCK_BYTES {
+                base[off + k] = op(base[off + k], bb_bytes[k]);
+            }
+            off += ta_io::BEHAVIOR_BLOCK_BYTES;
+        }
+        // Message-only behaviors stay raw.
+        off += (msg_count as usize - shared) * ta_io::BEHAVIOR_BLOCK_BYTES;
+        if off > total {
+            break;
+        }
+    }
+}
+
+/// Count the zero bytes of a buffer — the compressibility signal delta
+/// encoding creates (diagnostics for Fig. 11a).
+pub fn zero_fraction(buf: &[u8]) -> f64 {
+    if buf.is_empty() {
+        return 0.0;
+    }
+    buf.iter().filter(|&&b| b == 0).count() as f64 / buf.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::{Agent, CellType};
+    use crate::util::{Rng, Vec3};
+
+    fn make_agents(n: usize, seed: u64) -> Vec<Agent> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut a = Agent::cell(
+                    Vec3::new(rng.uniform_range(0.0, 100.0), rng.uniform_range(0.0, 100.0), 0.0),
+                    10.0,
+                    if i % 2 == 0 { CellType::A } else { CellType::B },
+                );
+                a.global_id = GlobalId::new(0, i as u64);
+                a.behaviors.push(crate::core::agent::Behavior::RandomWalk { speed: 1.0 });
+                a
+            })
+            .collect()
+    }
+
+    fn drift(agents: &mut [Agent], rng: &mut Rng, amount: f64) {
+        for a in agents.iter_mut() {
+            a.position += Vec3::new(
+                rng.uniform_range(-amount, amount),
+                rng.uniform_range(-amount, amount),
+                0.0,
+            );
+        }
+    }
+
+    fn ids(view: &TaView) -> Vec<GlobalId> {
+        let mut v: Vec<GlobalId> =
+            view.materialize_all().iter().map(|a| a.global_id).collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn first_message_is_full() {
+        let agents = make_agents(10, 1);
+        let mut enc = DeltaEncoder::new(8);
+        let (kind, _) = enc.encode(agents.iter());
+        assert_eq!(kind, DeltaKind::Full);
+    }
+
+    #[test]
+    fn second_message_is_delta_and_round_trips() {
+        let mut agents = make_agents(20, 2);
+        let mut enc = DeltaEncoder::new(8);
+        let mut dec = DeltaDecoder::new();
+        let (k1, b1) = enc.encode(agents.iter());
+        dec.decode(k1, b1).unwrap();
+        let mut rng = Rng::new(3);
+        drift(&mut agents, &mut rng, 0.5);
+        let (k2, b2) = enc.encode(agents.iter());
+        assert_eq!(k2, DeltaKind::Delta);
+        let view = dec.decode(k2, b2).unwrap();
+        let restored = view.materialize_all();
+        assert_eq!(restored.len(), agents.len());
+        let mut want: Vec<_> = agents.iter().map(|a| (a.global_id, a.position)).collect();
+        want.sort_by_key(|(g, _)| *g);
+        let mut got: Vec<_> = restored.iter().map(|a| (a.global_id, a.position)).collect();
+        got.sort_by_key(|(g, _)| *g);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn delta_buffer_is_mostly_zeros_for_small_drift() {
+        let mut agents = make_agents(100, 4);
+        let mut enc = DeltaEncoder::new(100);
+        enc.encode(agents.iter());
+        // No drift at all: everything but the header should diff to zero.
+        let (kind, buf) = enc.encode(agents.iter());
+        assert_eq!(kind, DeltaKind::Delta);
+        assert!(
+            zero_fraction(buf.as_slice()) > 0.95,
+            "zero fraction = {}",
+            zero_fraction(buf.as_slice())
+        );
+        // Which means LZ4 crushes it (Fig. 11a's message-size reduction).
+        let lz = crate::io::lz4::compress(buf.as_slice());
+        assert!(lz.len() < buf.len() / 20);
+        // Sanity: identical agents decode identically.
+        let mut dec = DeltaDecoder::new();
+        let (k1, b1) = DeltaEncoder::new(100).encode(agents.iter());
+        dec.decode(k1, b1).unwrap();
+        let view = dec.decode(kind, buf).unwrap();
+        drift(&mut agents, &mut Rng::new(5), 0.0);
+        assert_eq!(view.materialize_all().len(), agents.len());
+    }
+
+    #[test]
+    fn handles_removed_agents_via_placeholders() {
+        let agents = make_agents(10, 6);
+        let mut enc = DeltaEncoder::new(100);
+        let mut dec = DeltaDecoder::new();
+        let (k1, b1) = enc.encode(agents.iter());
+        dec.decode(k1, b1).unwrap();
+        // Drop agents 2 and 7.
+        let reduced: Vec<Agent> = agents
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != 2 && *i != 7)
+            .map(|(_, a)| a.clone())
+            .collect();
+        let (k2, b2) = enc.encode(reduced.iter());
+        assert_eq!(k2, DeltaKind::Delta);
+        let view = dec.decode(k2, b2).unwrap();
+        assert_eq!(view.len(), reduced.len(), "placeholders must be defragmented away");
+        let got = ids(&view);
+        let mut want: Vec<GlobalId> = reduced.iter().map(|a| a.global_id).collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn handles_new_agents_appended() {
+        let agents = make_agents(10, 7);
+        let mut enc = DeltaEncoder::new(100);
+        let mut dec = DeltaDecoder::new();
+        let (k1, b1) = enc.encode(agents.iter());
+        dec.decode(k1, b1).unwrap();
+        let mut extended = agents.clone();
+        let mut extra = Agent::cell(Vec3::new(55.0, 55.0, 0.0), 10.0, CellType::A);
+        extra.global_id = GlobalId::new(1, 999);
+        extended.push(extra);
+        let (k2, b2) = enc.encode(extended.iter());
+        let view = dec.decode(k2, b2).unwrap();
+        assert_eq!(view.len(), extended.len());
+        let got = ids(&view);
+        assert!(got.contains(&GlobalId::new(1, 999)));
+    }
+
+    #[test]
+    fn handles_churn_removed_and_added_and_reordered() {
+        let agents = make_agents(30, 8);
+        let mut enc = DeltaEncoder::new(100);
+        let mut dec = DeltaDecoder::new();
+        let (k1, b1) = enc.encode(agents.iter());
+        dec.decode(k1, b1).unwrap();
+        // Shuffle order, drop a third, add five new.
+        let mut rng = Rng::new(9);
+        let mut msg: Vec<Agent> = agents.iter().skip(10).cloned().collect();
+        rng.shuffle(&mut msg);
+        for j in 0..5 {
+            let mut a = Agent::cell(Vec3::new(j as f64, 0.0, 0.0), 10.0, CellType::B);
+            a.global_id = GlobalId::new(2, j as u64);
+            msg.push(a);
+        }
+        let (k2, b2) = enc.encode(msg.iter());
+        let view = dec.decode(k2, b2).unwrap();
+        let got = ids(&view);
+        let mut want: Vec<GlobalId> = msg.iter().map(|a| a.global_id).collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn reference_refresh_period_respected() {
+        let agents = make_agents(5, 10);
+        let mut enc = DeltaEncoder::new(3);
+        let kinds: Vec<DeltaKind> = (0..7).map(|_| enc.encode(agents.iter()).0).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                DeltaKind::Full,
+                DeltaKind::Delta,
+                DeltaKind::Delta,
+                DeltaKind::Full,
+                DeltaKind::Delta,
+                DeltaKind::Delta,
+                DeltaKind::Full,
+            ]
+        );
+    }
+
+    #[test]
+    fn period_zero_disables_delta() {
+        let agents = make_agents(5, 11);
+        let mut enc = DeltaEncoder::new(0);
+        for _ in 0..3 {
+            assert_eq!(enc.encode(agents.iter()).0, DeltaKind::Full);
+        }
+    }
+
+    #[test]
+    fn multi_iteration_stream_consistency() {
+        // Simulate 20 iterations of drifting agents with churn over one
+        // channel; each decoded message must equal the sent set.
+        let mut agents = make_agents(40, 12);
+        let mut enc = DeltaEncoder::new(5);
+        let mut dec = DeltaDecoder::new();
+        let mut rng = Rng::new(13);
+        let mut next_gid = 1000u64;
+        for iter in 0..20 {
+            drift(&mut agents, &mut rng, 0.3);
+            if iter % 3 == 1 && !agents.is_empty() {
+                agents.remove(rng.index(agents.len()));
+            }
+            if iter % 4 == 2 {
+                let mut a = Agent::cell(Vec3::new(1.0, 1.0, 0.0), 10.0, CellType::A);
+                a.global_id = GlobalId::new(3, next_gid);
+                next_gid += 1;
+                agents.push(a);
+            }
+            let (k, b) = enc.encode(agents.iter());
+            let view = dec.decode(k, b).unwrap();
+            let got = ids(&view);
+            let mut want: Vec<GlobalId> = agents.iter().map(|a| a.global_id).collect();
+            want.sort();
+            assert_eq!(got, want, "iteration {iter}");
+            // Positions too.
+            let restored = view.materialize_all();
+            for r in &restored {
+                let orig = agents.iter().find(|a| a.global_id == r.global_id).unwrap();
+                assert_eq!(orig.position, r.position, "iteration {iter}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_memory_is_tracked() {
+        let agents = make_agents(50, 14);
+        let mut enc = DeltaEncoder::new(10);
+        assert_eq!(enc.reference_bytes(), 0);
+        enc.encode(agents.iter());
+        assert!(enc.reference_bytes() > 0);
+        let mut dec = DeltaDecoder::new();
+        let (k, b) = DeltaEncoder::new(10).encode(agents.iter());
+        dec.decode(k, b).unwrap();
+        assert!(dec.reference_bytes() > 0);
+    }
+
+    #[test]
+    fn zero_fraction_helper() {
+        assert_eq!(zero_fraction(&[]), 0.0);
+        assert_eq!(zero_fraction(&[0, 0, 1, 1]), 0.5);
+    }
+}

@@ -1,0 +1,363 @@
+//! From-scratch LZ4 *block format* codec (§3.11 uses LZ4 [Collet] for
+//! message compression; the reference C library is unavailable offline, so
+//! this is a clean-room implementation of the documented block format).
+//!
+//! Format recap (https://github.com/lz4/lz4/blob/dev/doc/lz4_Block_format.md):
+//! a block is a sequence of *sequences*: `token | literal-length+ |
+//! literals | match-offset (u16 LE) | match-length+`, where the token's
+//! high nibble is the literal length (15 = more length bytes follow) and
+//! the low nibble is match length − 4. End-of-block rules: the last
+//! sequence is literals-only, the last 5 bytes are always literals, and no
+//! match may start within the last 12 bytes.
+//!
+//! The compressor is the classic greedy hash-table matcher (single probe,
+//! like LZ4_compress_default). The decompressor is bounds-checked.
+
+/// Compression error (compressor itself cannot fail; kept for symmetry).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Lz4Error {
+    /// Input ended in the middle of a sequence.
+    Truncated,
+    /// A match offset points before the start of the output.
+    BadOffset,
+    /// Declared decompressed size exceeded.
+    OutputOverflow,
+}
+
+impl std::fmt::Display for Lz4Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for Lz4Error {}
+
+const MIN_MATCH: usize = 4;
+/// No match may start within this many bytes of the input end.
+const MF_LIMIT: usize = 12;
+/// The last five bytes must be literals.
+const LAST_LITERALS: usize = 5;
+const MAX_HASH_LOG: u32 = 16;
+const MAX_OFFSET: usize = 65_535;
+
+/// Hash-table size adapted to the input: zeroing a 256 KiB table would
+/// dominate small aura messages (§Perf iteration 3 in EXPERIMENTS.md).
+#[inline]
+fn hash_log_for(n: usize) -> u32 {
+    let want = usize::BITS - n.max(256).leading_zeros(); // ~log2(n)+1
+    want.min(MAX_HASH_LOG)
+}
+
+#[inline]
+fn hash4(v: u32, hash_log: u32) -> usize {
+    // Fibonacci hashing of the 4-byte sequence.
+    ((v.wrapping_mul(2654435761)) >> (32 - hash_log)) as usize
+}
+
+#[inline]
+fn read_u32(buf: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]])
+}
+
+/// Compress `input` into LZ4 block format.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + 32);
+    if n == 0 {
+        // A single empty-literals token terminates the block.
+        out.push(0);
+        return out;
+    }
+    if n < MF_LIMIT + 1 {
+        emit_final_literals(&mut out, input);
+        return out;
+    }
+
+    let hash_log = hash_log_for(n);
+    let mut table = vec![0u32; 1 << hash_log]; // position + 1; 0 = empty
+    let mut anchor = 0usize; // start of pending literals
+    let mut i = 0usize;
+    let match_limit = n - MF_LIMIT; // last position where a match may start
+
+    while i < match_limit {
+        let seq = read_u32(input, i);
+        let h = hash4(seq, hash_log);
+        let candidate = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if candidate != 0 {
+            let cand = candidate - 1;
+            if i - cand <= MAX_OFFSET && read_u32(input, cand) == seq {
+                // Extend the match forward, respecting the end margin.
+                let max_len = n - LAST_LITERALS - i;
+                let mut len = MIN_MATCH;
+                while len < max_len && input[cand + len] == input[i + len] {
+                    len += 1;
+                }
+                emit_sequence(&mut out, &input[anchor..i], (i - cand) as u16, len);
+                i += len;
+                anchor = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_final_literals(&mut out, &input[anchor..]);
+    out
+}
+
+/// Emit one sequence: literals + match.
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: u16, match_len: usize) {
+    debug_assert!(match_len >= MIN_MATCH);
+    debug_assert!(offset > 0);
+    let lit_len = literals.len();
+    let ml = match_len - MIN_MATCH;
+    let token = ((lit_len.min(15) as u8) << 4) | (ml.min(15) as u8);
+    out.push(token);
+    if lit_len >= 15 {
+        emit_len(out, lit_len - 15);
+    }
+    out.extend_from_slice(literals);
+    out.extend_from_slice(&offset.to_le_bytes());
+    if ml >= 15 {
+        emit_len(out, ml - 15);
+    }
+}
+
+/// Final literals-only sequence.
+fn emit_final_literals(out: &mut Vec<u8>, literals: &[u8]) {
+    let lit_len = literals.len();
+    let token = (lit_len.min(15) as u8) << 4;
+    out.push(token);
+    if lit_len >= 15 {
+        emit_len(out, lit_len - 15);
+    }
+    out.extend_from_slice(literals);
+}
+
+/// LZ4 length continuation: 255-bytes until a byte < 255.
+fn emit_len(out: &mut Vec<u8>, mut rest: usize) {
+    while rest >= 255 {
+        out.push(255);
+        rest -= 255;
+    }
+    out.push(rest as u8);
+}
+
+/// Decompress an LZ4 block. `max_out` bounds the output size (the caller
+/// transmits the raw size alongside the block).
+pub fn decompress(input: &[u8], max_out: usize) -> Result<Vec<u8>, Lz4Error> {
+    let mut out: Vec<u8> = Vec::with_capacity(max_out.min(1 << 20));
+    let mut i = 0usize;
+    let n = input.len();
+    loop {
+        if i >= n {
+            // A block must end with a literals-only sequence; running off
+            // the end without one means truncation — except the
+            // degenerate empty block handled by the token read below.
+            return Err(Lz4Error::Truncated);
+        }
+        let token = input[i];
+        i += 1;
+        // Literal length.
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len += read_len(input, &mut i)?;
+        }
+        if i + lit_len > n {
+            return Err(Lz4Error::Truncated);
+        }
+        if out.len() + lit_len > max_out {
+            return Err(Lz4Error::OutputOverflow);
+        }
+        out.extend_from_slice(&input[i..i + lit_len]);
+        i += lit_len;
+        if i == n {
+            return Ok(out); // literals-only terminal sequence
+        }
+        // Match part.
+        if i + 2 > n {
+            return Err(Lz4Error::Truncated);
+        }
+        let offset = u16::from_le_bytes([input[i], input[i + 1]]) as usize;
+        i += 2;
+        if offset == 0 || offset > out.len() {
+            return Err(Lz4Error::BadOffset);
+        }
+        let mut match_len = (token & 0x0F) as usize;
+        if match_len == 15 {
+            match_len += read_len(input, &mut i)?;
+        }
+        match_len += MIN_MATCH;
+        if out.len() + match_len > max_out {
+            return Err(Lz4Error::OutputOverflow);
+        }
+        // Overlapping copy (byte-by-byte semantics are part of the format:
+        // offset 1 replicates the previous byte).
+        let start = out.len() - offset;
+        for k in 0..match_len {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+}
+
+fn read_len(input: &[u8], i: &mut usize) -> Result<usize, Lz4Error> {
+    let mut total = 0usize;
+    loop {
+        if *i >= input.len() {
+            return Err(Lz4Error::Truncated);
+        }
+        let b = input[*i];
+        *i += 1;
+        total += b as usize;
+        if b != 255 {
+            return Ok(total);
+        }
+    }
+}
+
+/// Convenience: compression ratio raw/compressed.
+pub fn ratio(raw: usize, compressed: usize) -> f64 {
+    if compressed == 0 {
+        return 0.0;
+    }
+    raw as f64 / compressed as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn round_trip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data, "round trip failed for len={}", data.len());
+    }
+
+    #[test]
+    fn empty_input() {
+        round_trip(&[]);
+        assert_eq!(compress(&[]), vec![0]);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        for n in 1..=16 {
+            let data: Vec<u8> = (0..n as u8).collect();
+            round_trip(&data);
+        }
+    }
+
+    #[test]
+    fn incompressible_random() {
+        // xoshiro output is incompressible; round trip must still hold and
+        // expansion must be bounded (token overhead only).
+        let mut rng = crate::util::Rng::new(1);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() <= data.len() + data.len() / 255 + 16);
+        round_trip(&data);
+    }
+
+    #[test]
+    fn highly_compressible_runs() {
+        let data = vec![7u8; 100_000];
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 100, "run compression ratio too low: {}", c.len());
+        round_trip(&data);
+    }
+
+    #[test]
+    fn repeated_pattern() {
+        let pattern = b"the quick brown fox jumps over the lazy dog. ";
+        let mut data = Vec::new();
+        for _ in 0..200 {
+            data.extend_from_slice(pattern);
+        }
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 5);
+        round_trip(&data);
+    }
+
+    #[test]
+    fn long_literal_runs_use_length_continuation() {
+        // >15 literals forces the 255-continuation path.
+        let mut rng = crate::util::Rng::new(2);
+        let data: Vec<u8> = (0..400).map(|_| rng.next_u64() as u8).collect();
+        round_trip(&data);
+        // And a long match (>15+4).
+        let mut d2 = vec![0u8; 1000];
+        d2.extend((0..100).map(|_| rng.next_u64() as u8));
+        round_trip(&d2);
+    }
+
+    #[test]
+    fn overlapping_match_offset_one() {
+        // RLE via offset-1 matches is the classic overlap case.
+        let mut data = vec![42u8];
+        data.extend(std::iter::repeat(42u8).take(300));
+        round_trip(&data);
+    }
+
+    #[test]
+    fn known_vector_decodes() {
+        // Hand-built block: literals "abcd", match offset 4 len 8
+        // (replicates "abcd" twice), then final literals "xy".
+        // token1: lit_len=4, match_len=8-4=4 -> 0x44
+        let block = [
+            0x44, b'a', b'b', b'c', b'd', 0x04, 0x00, // seq 1
+            0x20, b'x', b'y', // final literals
+        ];
+        let out = decompress(&block, 64).unwrap();
+        assert_eq!(out, b"abcdabcdabcdxy");
+    }
+
+    #[test]
+    fn rejects_truncated_and_bad_offsets() {
+        let c = compress(b"hello hello hello hello hello hello");
+        assert!(decompress(&c[..c.len() - 2], 100).is_err());
+        // Bad offset: match pointing before output start.
+        let bad = [0x14, b'a', 0x05, 0x00, 0x00];
+        assert_eq!(decompress(&bad, 100).unwrap_err(), Lz4Error::BadOffset);
+        // Zero offset is illegal.
+        let zero = [0x14, b'a', 0x00, 0x00, 0x00];
+        assert_eq!(decompress(&zero, 100).unwrap_err(), Lz4Error::BadOffset);
+    }
+
+    #[test]
+    fn output_overflow_detected() {
+        let data = vec![1u8; 1000];
+        let c = compress(&data);
+        assert_eq!(decompress(&c, 10).unwrap_err(), Lz4Error::OutputOverflow);
+    }
+
+    #[test]
+    fn prop_round_trip_random() {
+        check("lz4 round trip random bytes", 48, |g: &mut Gen| {
+            let data = g.vec_u8(0..=4096);
+            let c = compress(&data);
+            let d = decompress(&c, data.len()).unwrap();
+            assert_eq!(d, data);
+        });
+    }
+
+    #[test]
+    fn prop_round_trip_compressible() {
+        check("lz4 round trip run data", 48, |g: &mut Gen| {
+            let data = g.vec_u8_runs(0..=8192);
+            let c = compress(&data);
+            let d = decompress(&c, data.len()).unwrap();
+            assert_eq!(d, data);
+            if data.len() > 512 {
+                assert!(c.len() < data.len(), "run data must compress");
+            }
+        });
+    }
+
+    #[test]
+    fn ratio_helper() {
+        assert_eq!(ratio(100, 50), 2.0);
+        assert_eq!(ratio(100, 0), 0.0);
+    }
+}

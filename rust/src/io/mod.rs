@@ -1,0 +1,23 @@
+//! Serialization stack (§2.2–2.3) — the paper's core systems contribution.
+//!
+//! * [`ta_io`] — **TeraAgent IO**: layout-stable block serialization with
+//!   zero-copy, mutable-in-place deserialization and delete-interception
+//!   accounting.
+//! * [`root_io`] — the **ROOT IO baseline**: a generic, self-describing
+//!   serializer that honestly performs the four costs TA IO avoids
+//!   (pointer dedup, schema records, endianness normalization,
+//!   allocate-per-object deserialization).
+//! * [`lz4`] — from-scratch LZ4 block-format codec.
+//! * [`delta`] — delta encoding against a per-channel reference message.
+//! * [`codec`] — the configurable sender/receiver pipeline
+//!   (TA IO | ROOT IO) × (none | LZ4 | LZ4+delta) used by the engine.
+
+pub mod buffer;
+pub mod codec;
+pub mod delta;
+pub mod lz4;
+pub mod root_io;
+pub mod ta_io;
+
+pub use buffer::AlignedBuf;
+pub use codec::{Codec, Compression, SerializerKind};

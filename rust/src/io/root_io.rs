@@ -1,0 +1,569 @@
+//! ROOT IO baseline serializer (§2.2 / §3.10 comparison target).
+//!
+//! A faithful stand-in for the generic serialization work that ROOT I/O
+//! performs and that TeraAgent IO deliberately avoids. For every message it
+//! really executes the four costs from the paper's observations:
+//!
+//! 1. **Pointer deduplication** — a map of already-written object ids;
+//!    repeated references become back-references, and deserialization
+//!    re-links them to a single instance.
+//! 2. **Self-describing schema** — each message carries class descriptors
+//!    (names, field names, type tags, schema version), and every field
+//!    value is preceded by a type tag that is checked on read (schema
+//!    evolution hook).
+//! 3. **Endianness normalization** — all multi-byte values are converted
+//!    to big-endian wire order on write and back on read, regardless of
+//!    host order (ROOT's portable streaming).
+//! 4. **Allocate-per-object deserialization** — reading builds every agent
+//!    and behavior vector as a fresh heap allocation; there is no
+//!    zero-copy path.
+//!
+//! The point is an honest *relative* comparison: both serializers move the
+//! same logical agent payload; this one pays the generic machinery.
+
+use crate::core::agent::{Agent, AgentKind, Behavior, CellType, SirState};
+use crate::core::ids::{AgentPointer, GlobalId, LocalId};
+use crate::util::Vec3;
+use std::collections::HashMap;
+
+/// Wire type tags (checked on every field read).
+mod tag {
+    pub const U8: u8 = 1;
+    pub const U16: u8 = 2;
+    pub const U32: u8 = 3;
+    pub const U64: u8 = 4;
+    pub const F64: u8 = 5;
+    pub const OBJ: u8 = 6;
+    pub const BACKREF: u8 = 7;
+    pub const NULL: u8 = 8;
+    pub const VEC: u8 = 9;
+}
+
+const SCHEMA_VERSION: u16 = 4;
+const MESSAGE_MAGIC: u32 = 0x524F_4F54; // "ROOT"
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RootError {
+    Truncated,
+    BadMagic,
+    TypeMismatch { expected: u8, got: u8 },
+    UnknownClass(String),
+    BadBackref(u32),
+}
+
+impl std::fmt::Display for RootError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for RootError {}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    out: Vec<u8>,
+    /// Pointer-dedup table: object id -> stream index.
+    seen: HashMap<GlobalId, u32>,
+    next_stream_index: u32,
+    /// Streamer-info registry — ROOT resolves the streamer for every
+    /// object by *class name* (`TClass::GetClass` + `TStreamerInfo`),
+    /// which we model with a string-keyed lookup per streamed object.
+    streamers: HashMap<String, u16>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        let mut streamers = HashMap::new();
+        for name in [
+            "Agent",
+            "Behavior::Growth",
+            "Behavior::Divide",
+            "Behavior::RandomWalk",
+            "Behavior::Infection",
+            "Behavior::TumorGrowth",
+        ] {
+            streamers.insert(name.to_string(), SCHEMA_VERSION);
+        }
+        Writer { out: Vec::new(), seen: HashMap::new(), next_stream_index: 0, streamers }
+    }
+
+    /// Per-object streamer resolution (cost 2/4: reflection machinery).
+    /// Returns the class version that is written ahead of the object.
+    fn resolve_streamer(&self, class_name: &str) -> u16 {
+        *self
+            .streamers
+            .get(class_name)
+            .unwrap_or_else(|| panic!("no streamer for {class_name}"))
+    }
+
+    /// Begin a ROOT-style object record: byte-count placeholder + class
+    /// version word (TBuffer::WriteVersion). Returns the patch position.
+    fn begin_object(&mut self, class_name: &str) -> usize {
+        let version = self.resolve_streamer(class_name);
+        let pos = self.out.len();
+        self.out.extend_from_slice(&0u32.to_be_bytes()); // byte count, patched
+        self.out.extend_from_slice(&version.to_be_bytes());
+        pos
+    }
+
+    /// Back-patch the byte count (TBuffer::SetByteCount).
+    fn end_object(&mut self, pos: usize) {
+        let count = (self.out.len() - pos - 4) as u32;
+        self.out[pos..pos + 4].copy_from_slice(&count.to_be_bytes());
+    }
+
+    // All scalars go out big-endian (cost 3).
+    fn u8(&mut self, v: u8) {
+        self.out.push(tag::U8);
+        self.out.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.out.push(tag::U16);
+        self.out.extend_from_slice(&v.to_be_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.out.push(tag::U32);
+        self.out.extend_from_slice(&v.to_be_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.out.push(tag::U64);
+        self.out.extend_from_slice(&v.to_be_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.out.push(tag::F64);
+        self.out.extend_from_slice(&v.to_bits().to_be_bytes());
+    }
+    fn raw_u32(&mut self, v: u32) {
+        self.out.extend_from_slice(&v.to_be_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.raw_u32(s.len() as u32);
+        self.out.extend_from_slice(s.as_bytes());
+    }
+
+    /// Self-describing class descriptor (cost 2).
+    fn class_descriptor(&mut self, name: &str, fields: &[(&str, u8)]) {
+        self.str(name);
+        self.raw_u32(SCHEMA_VERSION as u32);
+        self.raw_u32(fields.len() as u32);
+        for (fname, ftag) in fields {
+            self.str(fname);
+            self.out.push(*ftag);
+        }
+    }
+}
+
+fn agent_fields() -> Vec<(&'static str, u8)> {
+    vec![
+        ("class_id", tag::U16),
+        ("global_id", tag::U64),
+        ("position", tag::VEC),
+        ("diameter", tag::F64),
+        ("payload", tag::VEC),
+        ("behaviors", tag::VEC),
+        ("neighbor_ref", tag::OBJ),
+    ]
+}
+
+/// Serialize agents with the generic streamer.
+pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent>) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.raw_u32(MESSAGE_MAGIC);
+    // Schema section: descriptors for every class that may appear.
+    w.raw_u32(6); // descriptor count
+    w.class_descriptor("Agent", &agent_fields());
+    w.class_descriptor("Behavior::Growth", &[("rate", tag::F64), ("max_diameter", tag::F64)]);
+    w.class_descriptor("Behavior::Divide", &[]);
+    w.class_descriptor("Behavior::RandomWalk", &[("speed", tag::F64)]);
+    w.class_descriptor(
+        "Behavior::Infection",
+        &[("radius", tag::F64), ("prob", tag::F64), ("recovery_iters", tag::U32)],
+    );
+    w.class_descriptor(
+        "Behavior::TumorGrowth",
+        &[("cycle_rate", tag::F64), ("max_diameter", tag::F64)],
+    );
+    w.raw_u32(agents.len() as u32);
+    for a in agents {
+        write_agent(&mut w, a);
+    }
+    w.out
+}
+
+fn write_agent(w: &mut Writer, a: &Agent) {
+    w.out.push(tag::OBJ);
+    // Pointer-dedup registration (cost 1): agents are objects with identity.
+    let stream_index = w.next_stream_index;
+    w.next_stream_index += 1;
+    if a.global_id.is_set() {
+        w.seen.insert(a.global_id, stream_index);
+    }
+    // Streamer resolution + byte-count framing (costs 2/4).
+    let obj = w.begin_object("Agent");
+    w.u16(a.kind.class_id());
+    w.u32(a.global_id.rank);
+    w.u64(a.global_id.counter);
+    w.f64(a.position.x);
+    w.f64(a.position.y);
+    w.f64(a.position.z);
+    w.f64(a.diameter);
+    match a.kind {
+        AgentKind::Cell { cell_type, adhesion } => {
+            w.u8(cell_type.code());
+            w.f64(adhesion);
+        }
+        AgentKind::GrowingCell { volume, growth_rate, division_volume } => {
+            w.f64(volume);
+            w.f64(growth_rate);
+            w.f64(division_volume);
+        }
+        AgentKind::Person { state, infected_for } => {
+            w.u8(state.code());
+            w.u32(infected_for);
+        }
+        AgentKind::TumorCell { cycle, quiescent } => {
+            w.f64(cycle);
+            w.u8(quiescent as u8);
+        }
+    }
+    // Behavior vector: each element is an object with its own streamer
+    // lookup and byte-count record (polymorphic container streaming).
+    w.out.push(tag::VEC);
+    w.raw_u32(a.behaviors.len() as u32);
+    for b in &a.behaviors {
+        let bobj = w.begin_object(behavior_class_name(b));
+        w.u16(b.class_id());
+        match *b {
+            Behavior::Growth { rate, max_diameter } => {
+                w.f64(rate);
+                w.f64(max_diameter);
+            }
+            Behavior::Divide => {}
+            Behavior::RandomWalk { speed } => w.f64(speed),
+            Behavior::Infection { radius, prob, recovery_iters } => {
+                w.f64(radius);
+                w.f64(prob);
+                w.u32(recovery_iters);
+            }
+            Behavior::TumorGrowth { cycle_rate, max_diameter } => {
+                w.f64(cycle_rate);
+                w.f64(max_diameter);
+            }
+        }
+        w.end_object(bobj);
+    }
+    // Agent reference with dedup: already-seen targets become back-refs.
+    if a.neighbor_ref.is_null() {
+        w.out.push(tag::NULL);
+    } else if let Some(&idx) = w.seen.get(&a.neighbor_ref.target) {
+        w.out.push(tag::BACKREF);
+        w.raw_u32(idx);
+    } else {
+        // Forward reference: stream the id itself.
+        w.out.push(tag::OBJ);
+        w.u32(a.neighbor_ref.target.rank);
+        w.u64(a.neighbor_ref.target.counter);
+    }
+    w.end_object(obj);
+}
+
+/// Class name of a behavior (the string ROOT would resolve streamers by).
+fn behavior_class_name(b: &Behavior) -> &'static str {
+    match b {
+        Behavior::Growth { .. } => "Behavior::Growth",
+        Behavior::Divide => "Behavior::Divide",
+        Behavior::RandomWalk { .. } => "Behavior::RandomWalk",
+        Behavior::Infection { .. } => "Behavior::Infection",
+        Behavior::TumorGrowth { .. } => "Behavior::TumorGrowth",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// stream index -> global id, for back-reference resolution.
+    objects: Vec<GlobalId>,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0, objects: Vec::new() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], RootError> {
+        if self.pos + n > self.buf.len() {
+            return Err(RootError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn expect_tag(&mut self, expected: u8) -> Result<(), RootError> {
+        let got = self.take(1)?[0];
+        if got != expected {
+            return Err(RootError::TypeMismatch { expected, got });
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8, RootError> {
+        self.expect_tag(tag::U8)?;
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, RootError> {
+        self.expect_tag(tag::U16)?;
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, RootError> {
+        self.expect_tag(tag::U32)?;
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, RootError> {
+        self.expect_tag(tag::U64)?;
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, RootError> {
+        self.expect_tag(tag::F64)?;
+        Ok(f64::from_bits(u64::from_be_bytes(self.take(8)?.try_into().unwrap())))
+    }
+    fn raw_u32(&mut self) -> Result<u32, RootError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String, RootError> {
+        let n = self.raw_u32()? as usize;
+        let s = self.take(n)?;
+        Ok(String::from_utf8_lossy(s).into_owned())
+    }
+
+    /// Consume an object record header: byte count + class version
+    /// (TBuffer::ReadVersion), validating both — the read-side half of the
+    /// reflection machinery.
+    fn begin_object(&mut self) -> Result<(), RootError> {
+        let count = self.raw_u32()? as usize;
+        if self.pos + count > self.buf.len() {
+            return Err(RootError::Truncated);
+        }
+        let version = u16::from_be_bytes(self.take(2)?.try_into().unwrap());
+        if version > SCHEMA_VERSION {
+            return Err(RootError::UnknownClass(format!("version {version}")));
+        }
+        Ok(())
+    }
+
+    /// Parse and validate a class descriptor (schema-evolution hook: the
+    /// reader walks the declared fields and checks version compatibility).
+    fn class_descriptor(&mut self) -> Result<(), RootError> {
+        let name = self.str()?;
+        let version = self.raw_u32()?;
+        if version > SCHEMA_VERSION as u32 {
+            return Err(RootError::UnknownClass(name));
+        }
+        let nfields = self.raw_u32()?;
+        for _ in 0..nfields {
+            let _fname = self.str()?;
+            let _ftag = self.take(1)?[0];
+        }
+        Ok(())
+    }
+}
+
+/// Deserialize a message produced by [`serialize`]. Every agent and every
+/// behavior vector is a fresh allocation (cost 4).
+pub fn deserialize(buf: &[u8]) -> Result<Vec<Agent>, RootError> {
+    let mut r = Reader::new(buf);
+    if r.raw_u32()? != MESSAGE_MAGIC {
+        return Err(RootError::BadMagic);
+    }
+    let descriptors = r.raw_u32()?;
+    for _ in 0..descriptors {
+        r.class_descriptor()?;
+    }
+    let n = r.raw_u32()? as usize;
+    let mut agents = Vec::with_capacity(n);
+    for _ in 0..n {
+        agents.push(read_agent(&mut r)?);
+    }
+    Ok(agents)
+}
+
+fn read_agent(r: &mut Reader) -> Result<Agent, RootError> {
+    r.expect_tag(tag::OBJ)?;
+    r.begin_object()?;
+    let class_id = r.u16()?;
+    let gid = GlobalId::new(r.u32()?, r.u64()?);
+    r.objects.push(gid);
+    let position = Vec3::new(r.f64()?, r.f64()?, r.f64()?);
+    let diameter = r.f64()?;
+    let kind = match class_id {
+        1 => AgentKind::Cell { cell_type: CellType::from_code(r.u8()?), adhesion: r.f64()? },
+        2 => AgentKind::GrowingCell {
+            volume: r.f64()?,
+            growth_rate: r.f64()?,
+            division_volume: r.f64()?,
+        },
+        3 => AgentKind::Person { state: SirState::from_code(r.u8()?), infected_for: r.u32()? },
+        4 => AgentKind::TumorCell { cycle: r.f64()?, quiescent: r.u8()? != 0 },
+        other => return Err(RootError::UnknownClass(format!("agent#{other}"))),
+    };
+    r.expect_tag(tag::VEC)?;
+    let nb = r.raw_u32()? as usize;
+    let mut behaviors = Vec::with_capacity(nb);
+    for _ in 0..nb {
+        r.begin_object()?;
+        let bid = r.u16()?;
+        behaviors.push(match bid {
+            1 => Behavior::Growth { rate: r.f64()?, max_diameter: r.f64()? },
+            2 => Behavior::Divide,
+            3 => Behavior::RandomWalk { speed: r.f64()? },
+            4 => Behavior::Infection {
+                radius: r.f64()?,
+                prob: r.f64()?,
+                recovery_iters: r.u32()?,
+            },
+            5 => Behavior::TumorGrowth { cycle_rate: r.f64()?, max_diameter: r.f64()? },
+            other => return Err(RootError::UnknownClass(format!("behavior#{other}"))),
+        });
+    }
+    let marker = r.take(1)?[0];
+    let neighbor_ref = match marker {
+        tag::NULL => AgentPointer::NULL,
+        tag::BACKREF => {
+            let idx = r.raw_u32()?;
+            let gid = *r
+                .objects
+                .get(idx as usize)
+                .ok_or(RootError::BadBackref(idx))?;
+            AgentPointer::to(gid)
+        }
+        tag::OBJ => AgentPointer::to(GlobalId::new(r.u32()?, r.u64()?)),
+        got => return Err(RootError::TypeMismatch { expected: tag::OBJ, got }),
+    };
+    Ok(Agent {
+        local_id: LocalId::INVALID,
+        global_id: gid,
+        position,
+        diameter,
+        kind,
+        behaviors,
+        neighbor_ref,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::Agent;
+
+    fn sample() -> Vec<Agent> {
+        let mut a = Agent::cell(Vec3::new(1.0, 2.0, 3.0), 10.0, CellType::A);
+        a.global_id = GlobalId::new(0, 1);
+        let mut b = Agent::person(Vec3::new(4.0, 5.0, 6.0), SirState::Recovered);
+        b.global_id = GlobalId::new(0, 2);
+        b.neighbor_ref = AgentPointer::to(a.global_id); // backref
+        let mut c = Agent::growing_cell(Vec3::new(7.0, 8.0, 9.0), 12.0);
+        c.global_id = GlobalId::new(1, 3);
+        c.neighbor_ref = AgentPointer::to(GlobalId::new(9, 99)); // forward ref
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn round_trip() {
+        let agents = sample();
+        let buf = serialize(agents.iter());
+        let restored = deserialize(&buf).unwrap();
+        assert_eq!(agents.len(), restored.len());
+        for (o, r) in agents.iter().zip(&restored) {
+            assert_eq!(o.global_id, r.global_id);
+            assert_eq!(o.position, r.position);
+            assert_eq!(o.kind, r.kind);
+            assert_eq!(o.behaviors, r.behaviors);
+            assert_eq!(o.neighbor_ref, r.neighbor_ref);
+        }
+    }
+
+    #[test]
+    fn backref_resolves_to_same_identity() {
+        let agents = sample();
+        let buf = serialize(agents.iter());
+        let restored = deserialize(&buf).unwrap();
+        // b's pointer target equals a's id after dedup resolution.
+        assert_eq!(restored[1].neighbor_ref.target, restored[0].global_id);
+    }
+
+    #[test]
+    fn message_is_self_describing() {
+        // Schema strings are physically in the message (cost 2).
+        let buf = serialize(sample().iter());
+        let hay = String::from_utf8_lossy(&buf);
+        assert!(hay.contains("Agent"));
+        assert!(hay.contains("Behavior::Infection"));
+        assert!(hay.contains("recovery_iters"));
+    }
+
+    #[test]
+    fn values_are_big_endian_on_wire() {
+        let mut a = Agent::cell(Vec3::ZERO, 0.0, CellType::A);
+        a.global_id = GlobalId::new(0x0102_0304, 0);
+        let buf = serialize([&a].into_iter().cloned().collect::<Vec<_>>().iter());
+        // The rank 0x01020304 must appear big-endian somewhere after the
+        // schema; search for the byte pattern.
+        assert!(
+            buf.windows(4).any(|w| w == [0x01, 0x02, 0x03, 0x04]),
+            "expected big-endian rank bytes on the wire"
+        );
+    }
+
+    #[test]
+    fn type_mismatch_detected() {
+        let agents = sample();
+        let mut buf = serialize(agents.iter());
+        // Find the first F64 tag after the schema and corrupt it.
+        let schema_end = {
+            // agent count sits right before the first OBJ tag; find "OBJ".
+            buf.iter().position(|&b| b == tag::OBJ).unwrap()
+        };
+        let f64_pos = buf[schema_end..].iter().position(|&b| b == tag::F64).unwrap() + schema_end;
+        buf[f64_pos] = tag::U8;
+        assert!(deserialize(&buf).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let buf = serialize(sample().iter());
+        assert_eq!(deserialize(&buf[..buf.len() - 3]).unwrap_err(), RootError::Truncated);
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut buf = serialize(sample().iter());
+        buf[0] ^= 0xFF;
+        assert_eq!(deserialize(&buf).unwrap_err(), RootError::BadMagic);
+    }
+
+    #[test]
+    fn empty_message_round_trip() {
+        let agents: Vec<Agent> = vec![];
+        let buf = serialize(agents.iter());
+        assert!(deserialize(&buf).unwrap().is_empty());
+    }
+
+    #[test]
+    fn wire_is_larger_than_ta_io() {
+        // The generic format pays tags + schema; sanity-check the overhead
+        // direction that Fig. 10d reports as roughly equivalent payload but
+        // the runtime cost dominating elsewhere. (Schema is per-message,
+        // tags per field.)
+        let agents = sample();
+        let root = serialize(agents.iter()).len();
+        let ta = crate::io::ta_io::serialize(agents.iter()).len();
+        assert!(root > ta / 2, "root={root} ta={ta}"); // same order of magnitude
+    }
+}

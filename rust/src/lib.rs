@@ -1,0 +1,51 @@
+//! # TeraAgent-RS
+//!
+//! A distributed agent-based simulation engine, reproducing
+//! *"TeraAgent: A Distributed Agent-Based Simulation Engine for Simulating
+//! Half a Trillion Agents"* (CS.DC 2025).
+//!
+//! The engine executes a single agent-based simulation across many *ranks*
+//! (the paper's MPI processes; here isolated OS threads connected by a
+//! simulated MPI transport). The simulation space is divided by a
+//! [partitioning grid](space::partition) into mutually exclusive volumes;
+//! each rank is authoritative for its volume and the agents inside it.
+//! Every iteration performs:
+//!
+//! 1. **Aura update** — agents near rank boundaries are serialized with
+//!    [TeraAgent IO](io::ta_io) (optionally [delta-encoded](io::delta) and
+//!    [LZ4-compressed](io::lz4)) and exchanged with neighbor ranks.
+//! 2. **Agent operations** — each agent's behaviors run against its local
+//!    environment (neighbors from the [NSG](space::nsg), including aura
+//!    agents). The mechanical hot-spot optionally executes through an
+//!    AOT-compiled JAX/Pallas kernel via [runtime].
+//! 3. **Agent migration** — agents that left the local volume are moved to
+//!    the new authoritative rank.
+//! 4. **Load balancing** — periodic [RCB](balance::rcb) or
+//!    [diffusive](balance::diffusive) repartitioning.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index.
+
+pub mod balance;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod io;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod space;
+pub mod util;
+pub mod vis;
+
+/// Library version string (matches `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Floating point scalar used for agent attributes.
+///
+/// The paper's extreme-scale run (§3.9) switches to single precision to
+/// halve the per-agent memory footprint; we default to `f64` and expose the
+/// same knob through [`config::SimConfig::single_precision`] (implemented by
+/// the `core::agent::Real` storage type).
+pub type Real = f64;

@@ -1,0 +1,94 @@
+//! The `teraagent` launcher binary.
+//!
+//! `teraagent run --sim cell_clustering --ranks 4 --threads 2 --pjrt`
+//! runs a benchmark simulation under the configured parallelization mode
+//! and prints the aggregated report — the same engine the examples and
+//! benches drive programmatically.
+
+use teraagent::cli;
+use teraagent::models;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match cli::parse(&args) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli::usage());
+            std::process::exit(2);
+        }
+    };
+    match parsed.command.as_str() {
+        "help" | "--help" | "-h" => print!("{}", cli::usage()),
+        "info" => info(),
+        "run" => run(&parsed.flags),
+        other => {
+            eprintln!("error: unknown command {other:?}\n\n{}", cli::usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    println!("teraagent v{}", teraagent::VERSION);
+    match teraagent::runtime::PjrtRuntime::cpu() {
+        Ok(rt) => println!(
+            "PJRT: platform={} devices={}",
+            rt.platform(),
+            rt.device_count()
+        ),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    for name in models::BENCHMARKS {
+        println!("model: {name}");
+    }
+}
+
+fn run(flags: &std::collections::BTreeMap<String, String>) {
+    let cfg = match cli::config_from_flags(flags) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "running {} | agents={} iterations={} mode={} ranks={} threads={} \
+         serializer={} compression={} network={} pjrt={}",
+        cfg.name,
+        cfg.num_agents,
+        cfg.iterations,
+        cfg.mode.name(),
+        cfg.mode.ranks(),
+        cfg.mode.threads_per_rank(),
+        cfg.serializer.name(),
+        cfg.compression.name(),
+        cfg.network.name,
+        cfg.use_pjrt,
+    );
+    let result = match models::run_by_name(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!("{}", result.report.render());
+    if !result.stat_names.is_empty() {
+        println!("stats ({}):", result.stat_names.join(", "));
+        let n = result.stats_history.len();
+        for (i, row) in result.stats_history.iter().enumerate() {
+            if i < 3 || i >= n.saturating_sub(3) {
+                let vals: Vec<String> = row.iter().map(|v| format!("{v:.2}")).collect();
+                println!("  iter {i:>4}: {}", vals.join("  "));
+            } else if i == 3 {
+                println!("  ...");
+            }
+        }
+    }
+    println!(
+        "final agents: {} | updates/s/core: {:.3e} | pjrt: {}",
+        result.final_agents,
+        result.report.updates_per_sec_per_core(cfg.mode.cores()),
+        result.used_pjrt,
+    );
+}

@@ -1,0 +1,114 @@
+//! Structure-level memory accounting.
+//!
+//! The paper normalizes memory consumption across engine configurations
+//! (Figs. 6, 10, 11). Instead of hooking the global allocator (fragile with
+//! PJRT's own allocations), each big structure reports its live bytes to a
+//! [`MemoryTracker`]; the per-rank peak is what the reports plot. The
+//! tracker also reads `/proc/self/statm` for a whole-process RSS sanity
+//! figure where available.
+
+use std::collections::BTreeMap;
+
+/// Tracks live bytes per labelled structure and the overall peak.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryTracker {
+    live: BTreeMap<&'static str, u64>,
+    total_live: u64,
+    peak: u64,
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the live byte count for a structure (overwrite semantics — the
+    /// structures recompute their footprint after resizing).
+    pub fn set(&mut self, label: &'static str, bytes: u64) {
+        let prev = self.live.insert(label, bytes).unwrap_or(0);
+        self.total_live = self.total_live - prev + bytes;
+        if self.total_live > self.peak {
+            self.peak = self.total_live;
+        }
+    }
+
+    /// Add to the live byte count for a structure.
+    pub fn add(&mut self, label: &'static str, bytes: u64) {
+        let v = self.live.get(label).copied().unwrap_or(0);
+        self.set(label, v + bytes);
+    }
+
+    /// Subtract from the live byte count (saturating).
+    pub fn sub(&mut self, label: &'static str, bytes: u64) {
+        let v = self.live.get(label).copied().unwrap_or(0);
+        self.set(label, v.saturating_sub(bytes));
+    }
+
+    pub fn live(&self, label: &'static str) -> u64 {
+        self.live.get(label).copied().unwrap_or(0)
+    }
+
+    pub fn total_live(&self) -> u64 {
+        self.total_live
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Breakdown of live bytes by structure.
+    pub fn breakdown(&self) -> Vec<(&'static str, u64)> {
+        self.live.iter().map(|(k, v)| (*k, *v)).collect()
+    }
+}
+
+/// Whole-process resident set size in bytes (Linux), or None elsewhere.
+pub fn process_rss_bytes() -> Option<u64> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    let rss_pages: u64 = statm.split_whitespace().nth(1)?.parse().ok()?;
+    Some(rss_pages * 4096)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_add_sub_and_peak() {
+        let mut t = MemoryTracker::new();
+        t.set("agents", 100);
+        t.set("nsg", 50);
+        assert_eq!(t.total_live(), 150);
+        assert_eq!(t.peak(), 150);
+        t.sub("agents", 60);
+        assert_eq!(t.live("agents"), 40);
+        assert_eq!(t.total_live(), 90);
+        assert_eq!(t.peak(), 150); // peak is sticky
+        t.add("nsg", 200);
+        assert_eq!(t.peak(), 290);
+    }
+
+    #[test]
+    fn sub_saturates() {
+        let mut t = MemoryTracker::new();
+        t.set("x", 10);
+        t.sub("x", 100);
+        assert_eq!(t.live("x"), 0);
+    }
+
+    #[test]
+    fn breakdown_lists_labels() {
+        let mut t = MemoryTracker::new();
+        t.set("a", 1);
+        t.set("b", 2);
+        let b = t.breakdown();
+        assert_eq!(b, vec![("a", 1), ("b", 2)]);
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        if let Some(rss) = process_rss_bytes() {
+            assert!(rss > 0);
+        }
+    }
+}

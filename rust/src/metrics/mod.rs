@@ -1,0 +1,379 @@
+//! Per-rank metric collection and cross-rank aggregation.
+//!
+//! Every rank owns a [`RankMetrics`] (no sharing, no atomics on the hot
+//! path). After the run, the launcher aggregates them into a [`SimReport`]
+//! whose fields map one-to-one onto the quantities the paper plots:
+//! simulation runtime, per-operation breakdown (aura update / agent ops /
+//! migration / balancing), serialization and deserialization time, message
+//! bytes before and after compression, and a memory estimate.
+
+pub mod mem;
+
+pub use mem::MemoryTracker;
+
+use crate::util::stats;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// The operations the engine distinguishes when timing an iteration.
+/// `Distribution` in the paper subsumes `AuraUpdate` + `Migration`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Op {
+    /// Exchange of border-region agents with neighbor ranks.
+    AuraUpdate,
+    /// The model's behaviors over all owned agents (the "agent operations").
+    AgentOps,
+    /// Moving agents whose position left the owned volume.
+    Migration,
+    /// Load balancing (partitioning updates + box transfers).
+    Balancing,
+    /// Packing agents into byte buffers (TeraAgent IO or baseline).
+    Serialize,
+    /// Unpacking received byte buffers.
+    Deserialize,
+    /// Compression (LZ4 and/or delta encoding), sender side.
+    Compress,
+    /// Decompression / delta restore, receiver side.
+    Decompress,
+    /// Neighbor-search-grid maintenance.
+    NsgUpdate,
+    /// In-situ visualization rendering.
+    Visualization,
+    /// Time blocked in the transport (waiting on sends/receives).
+    Transfer,
+}
+
+impl Op {
+    pub const ALL: [Op; 11] = [
+        Op::AuraUpdate,
+        Op::AgentOps,
+        Op::Migration,
+        Op::Balancing,
+        Op::Serialize,
+        Op::Deserialize,
+        Op::Compress,
+        Op::Decompress,
+        Op::NsgUpdate,
+        Op::Visualization,
+        Op::Transfer,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::AuraUpdate => "aura_update",
+            Op::AgentOps => "agent_ops",
+            Op::Migration => "migration",
+            Op::Balancing => "balancing",
+            Op::Serialize => "serialize",
+            Op::Deserialize => "deserialize",
+            Op::Compress => "compress",
+            Op::Decompress => "decompress",
+            Op::NsgUpdate => "nsg_update",
+            Op::Visualization => "visualization",
+            Op::Transfer => "transfer",
+        }
+    }
+}
+
+/// Counter kinds tracked per rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Counter {
+    /// Bytes handed to the transport after (optional) compression.
+    BytesSentWire,
+    /// Bytes of the serialized payload before compression.
+    BytesSentRaw,
+    /// Number of messages sent.
+    MessagesSent,
+    /// Agents migrated away from this rank.
+    AgentsMigratedOut,
+    /// Aura agents sent.
+    AuraAgentsSent,
+    /// Agents updated (one per agent per iteration).
+    AgentUpdates,
+    /// Partition boxes moved by load balancing.
+    BoxesRebalanced,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 7] = [
+        Counter::BytesSentWire,
+        Counter::BytesSentRaw,
+        Counter::MessagesSent,
+        Counter::AgentsMigratedOut,
+        Counter::AuraAgentsSent,
+        Counter::AgentUpdates,
+        Counter::BoxesRebalanced,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::BytesSentWire => "bytes_sent_wire",
+            Counter::BytesSentRaw => "bytes_sent_raw",
+            Counter::MessagesSent => "messages_sent",
+            Counter::AgentsMigratedOut => "agents_migrated_out",
+            Counter::AuraAgentsSent => "aura_agents_sent",
+            Counter::AgentUpdates => "agent_updates",
+            Counter::BoxesRebalanced => "boxes_rebalanced",
+        }
+    }
+}
+
+/// Metric sink owned by a single rank.
+#[derive(Clone, Debug, Default)]
+pub struct RankMetrics {
+    op_secs: BTreeMap<Op, f64>,
+    counters: BTreeMap<Counter, u64>,
+    /// Wall-clock seconds of each completed iteration.
+    pub iteration_secs: Vec<f64>,
+    /// Thread-CPU seconds of each completed iteration. On the single-core
+    /// testbed this is the honest per-rank cost (immune to timesharing);
+    /// the scaling model in [`SimReport::parallel_runtime_secs`] builds on
+    /// it.
+    pub iteration_cpu_secs: Vec<f64>,
+    /// Simulated network seconds charged by the interconnect model.
+    pub network_secs: f64,
+    /// Peak tracked memory (bytes) — see [`MemoryTracker`].
+    pub peak_mem_bytes: u64,
+}
+
+impl RankMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to the bucket for `op`.
+    #[inline]
+    pub fn add_op(&mut self, op: Op, secs: f64) {
+        *self.op_secs.entry(op).or_insert(0.0) += secs;
+    }
+
+    /// Time a closure into the bucket for `op` (wall clock).
+    #[inline]
+    pub fn timed<T>(&mut self, op: Op, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add_op(op, start.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Time a closure into the bucket for `op` using *thread CPU time* —
+    /// the honest per-rank cost on the timeshared single-core testbed
+    /// (blocked waits and descheduling do not count). The engine uses this
+    /// for all compute phases; see DESIGN.md substitutions.
+    #[inline]
+    pub fn timed_cpu<T>(&mut self, op: Op, f: impl FnOnce() -> T) -> T {
+        let start = crate::util::timing::CpuTimer::start();
+        let out = f();
+        self.add_op(op, start.elapsed_secs());
+        out
+    }
+
+    #[inline]
+    pub fn count(&mut self, c: Counter, n: u64) {
+        *self.counters.entry(c).or_insert(0) += n;
+    }
+
+    pub fn op_secs(&self, op: Op) -> f64 {
+        self.op_secs.get(&op).copied().unwrap_or(0.0)
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters.get(&c).copied().unwrap_or(0)
+    }
+
+    /// Total simulation runtime = sum of iteration times.
+    pub fn runtime_secs(&self) -> f64 {
+        self.iteration_secs.iter().sum()
+    }
+}
+
+/// Aggregated view over all ranks of a run.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    /// Number of ranks that produced metrics.
+    pub ranks: usize,
+    /// Simulated iterations.
+    pub iterations: usize,
+    /// Wall-clock runtime of the whole run (max over ranks).
+    pub runtime_secs: f64,
+    /// Per-op totals summed over ranks.
+    pub op_totals: BTreeMap<Op, f64>,
+    /// Per-op maxima across ranks (critical-path view).
+    pub op_max: BTreeMap<Op, f64>,
+    /// Counter totals summed over ranks.
+    pub counter_totals: BTreeMap<Counter, u64>,
+    /// Sum of per-rank peak memory.
+    pub total_peak_mem_bytes: u64,
+    /// Max over ranks of simulated-network seconds.
+    pub network_secs: f64,
+    /// Median iteration time across all ranks' iterations.
+    pub median_iteration_secs: f64,
+    /// Modeled parallel runtime: `Σ_iter max_rank cpu[r][iter]` plus the
+    /// simulated network time — what the run would take with one dedicated
+    /// core per rank thread (single-core testbed substitution, DESIGN.md).
+    pub parallel_runtime_secs: f64,
+    /// Total CPU seconds across all ranks (the work metric).
+    pub total_cpu_secs: f64,
+}
+
+impl SimReport {
+    /// Aggregate per-rank metrics into a report.
+    pub fn aggregate(per_rank: &[RankMetrics]) -> SimReport {
+        let mut rep = SimReport {
+            ranks: per_rank.len(),
+            ..Default::default()
+        };
+        let mut all_iters = Vec::new();
+        for m in per_rank {
+            rep.iterations = rep.iterations.max(m.iteration_secs.len());
+            rep.runtime_secs = rep.runtime_secs.max(m.runtime_secs());
+            rep.network_secs = rep.network_secs.max(m.network_secs);
+            rep.total_peak_mem_bytes += m.peak_mem_bytes;
+            for op in Op::ALL {
+                let s = m.op_secs(op);
+                *rep.op_totals.entry(op).or_insert(0.0) += s;
+                let e = rep.op_max.entry(op).or_insert(0.0);
+                if s > *e {
+                    *e = s;
+                }
+            }
+            for c in Counter::ALL {
+                *rep.counter_totals.entry(c).or_insert(0) += m.counter(c);
+            }
+            all_iters.extend_from_slice(&m.iteration_secs);
+        }
+        rep.median_iteration_secs = stats::median(&all_iters);
+        // Parallel model: per-iteration barrier, critical path = slowest
+        // rank's CPU time each iteration.
+        let iters = rep.iterations;
+        let mut parallel = 0.0;
+        for i in 0..iters {
+            let mut slowest = 0.0f64;
+            for m in per_rank {
+                if let Some(&c) = m.iteration_cpu_secs.get(i) {
+                    slowest = slowest.max(c);
+                }
+            }
+            parallel += slowest;
+        }
+        rep.parallel_runtime_secs = parallel + rep.network_secs;
+        rep.total_cpu_secs = per_rank
+            .iter()
+            .map(|m| m.iteration_cpu_secs.iter().sum::<f64>())
+            .sum();
+        rep
+    }
+
+    pub fn op_total(&self, op: Op) -> f64 {
+        self.op_totals.get(&op).copied().unwrap_or(0.0)
+    }
+
+    pub fn counter_total(&self, c: Counter) -> u64 {
+        self.counter_totals.get(&c).copied().unwrap_or(0)
+    }
+
+    /// Agent updates per second per "core" (thread). The §3.8 Biocellion
+    /// metric: total agent updates / (runtime × cores).
+    pub fn updates_per_sec_per_core(&self, cores: usize) -> f64 {
+        let updates = self.counter_total(Counter::AgentUpdates) as f64;
+        if self.runtime_secs <= 0.0 || cores == 0 {
+            return 0.0;
+        }
+        updates / (self.runtime_secs * cores as f64)
+    }
+
+    /// Human-readable multi-line report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "ranks={} iterations={} runtime={:.4}s median_iter={:.5}s mem={:.1}MiB net={:.4}s\n",
+            self.ranks,
+            self.iterations,
+            self.runtime_secs,
+            self.median_iteration_secs,
+            self.total_peak_mem_bytes as f64 / (1024.0 * 1024.0),
+            self.network_secs,
+        ));
+        for op in Op::ALL {
+            let t = self.op_total(op);
+            if t > 0.0 {
+                out.push_str(&format!(
+                    "  op {:<14} total={:>9.4}s max_rank={:>9.4}s\n",
+                    op.name(),
+                    t,
+                    self.op_max.get(&op).copied().unwrap_or(0.0)
+                ));
+            }
+        }
+        for c in Counter::ALL {
+            let v = self.counter_total(c);
+            if v > 0 {
+                out.push_str(&format!("  ctr {:<19} {}\n", c.name(), v));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        let mut m = RankMetrics::new();
+        m.timed(Op::AgentOps, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        m.timed(Op::AgentOps, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(m.op_secs(Op::AgentOps) >= 0.003);
+        assert_eq!(m.op_secs(Op::Migration), 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = RankMetrics::new();
+        m.count(Counter::BytesSentWire, 100);
+        m.count(Counter::BytesSentWire, 50);
+        assert_eq!(m.counter(Counter::BytesSentWire), 150);
+    }
+
+    #[test]
+    fn aggregate_sums_and_maxes() {
+        let mut a = RankMetrics::new();
+        a.add_op(Op::AuraUpdate, 1.0);
+        a.count(Counter::MessagesSent, 3);
+        a.iteration_secs = vec![0.5, 0.5];
+        let mut b = RankMetrics::new();
+        b.add_op(Op::AuraUpdate, 2.0);
+        b.count(Counter::MessagesSent, 4);
+        b.iteration_secs = vec![1.0, 1.0];
+        let rep = SimReport::aggregate(&[a, b]);
+        assert_eq!(rep.ranks, 2);
+        assert_eq!(rep.op_total(Op::AuraUpdate), 3.0);
+        assert_eq!(rep.op_max[&Op::AuraUpdate], 2.0);
+        assert_eq!(rep.counter_total(Counter::MessagesSent), 7);
+        assert_eq!(rep.runtime_secs, 2.0);
+        assert_eq!(rep.iterations, 2);
+    }
+
+    #[test]
+    fn updates_per_core_metric() {
+        let mut a = RankMetrics::new();
+        a.count(Counter::AgentUpdates, 1000);
+        a.iteration_secs = vec![2.0];
+        let rep = SimReport::aggregate(&[a]);
+        assert_eq!(rep.updates_per_sec_per_core(5), 100.0);
+        assert_eq!(rep.updates_per_sec_per_core(0), 0.0);
+    }
+
+    #[test]
+    fn render_contains_sections() {
+        let mut a = RankMetrics::new();
+        a.add_op(Op::Serialize, 0.5);
+        a.count(Counter::BytesSentRaw, 10);
+        a.iteration_secs = vec![1.0];
+        let rep = SimReport::aggregate(&[a]);
+        let text = rep.render();
+        assert!(text.contains("serialize"));
+        assert!(text.contains("bytes_sent_raw"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Analytic references for the Fig. 5 correctness verification.
+//!
+//! * [`sir_ode`] — the Kermack–McKendrick SIR ODE integrated with RK4;
+//!   the epidemiology simulation's aggregate curves must match its shape.
+//! * [`gompertz`] — the Gompertz growth law used as the experimental-data
+//!   stand-in for the tumor-spheroid diameter curve.
+
+/// SIR ODE parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SirParams {
+    /// Transmission rate β (per contact per unit time).
+    pub beta: f64,
+    /// Recovery rate γ (1 / infectious period).
+    pub gamma: f64,
+}
+
+/// Integrate the SIR ODE with RK4; returns (S, I, R) per step, starting
+/// from the initial condition at index 0.
+pub fn sir_ode(s0: f64, i0: f64, r0: f64, p: SirParams, dt: f64, steps: usize) -> Vec<[f64; 3]> {
+    let n = s0 + i0 + r0;
+    let deriv = |s: f64, i: f64| -> [f64; 3] {
+        let inf = p.beta * s * i / n;
+        [-inf, inf - p.gamma * i, p.gamma * i]
+    };
+    let mut out = Vec::with_capacity(steps + 1);
+    let (mut s, mut i, mut r) = (s0, i0, r0);
+    out.push([s, i, r]);
+    for _ in 0..steps {
+        let k1 = deriv(s, i);
+        let k2 = deriv(s + 0.5 * dt * k1[0], i + 0.5 * dt * k1[1]);
+        let k3 = deriv(s + 0.5 * dt * k2[0], i + 0.5 * dt * k2[1]);
+        let k4 = deriv(s + dt * k3[0], i + dt * k3[1]);
+        s += dt / 6.0 * (k1[0] + 2.0 * k2[0] + 2.0 * k3[0] + k4[0]);
+        i += dt / 6.0 * (k1[1] + 2.0 * k2[1] + 2.0 * k3[1] + k4[1]);
+        r += dt / 6.0 * (k1[2] + 2.0 * k2[2] + 2.0 * k3[2] + k4[2]);
+        out.push([s, i, r]);
+    }
+    out
+}
+
+/// Gompertz growth: `y(t) = a * exp(-b * exp(-c t))`.
+pub fn gompertz(a: f64, b: f64, c: f64, t: f64) -> f64 {
+    a * (-b * (-c * t).exp()).exp()
+}
+
+/// Normalized root-mean-square error between two curves (shape metric
+/// used in EXPERIMENTS.md; lower is better, 0 = identical).
+pub fn nrmse(reference: &[f64], measured: &[f64]) -> f64 {
+    assert_eq!(reference.len(), measured.len());
+    if reference.is_empty() {
+        return 0.0;
+    }
+    let mse: f64 = reference
+        .iter()
+        .zip(measured)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / reference.len() as f64;
+    let range = reference.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - reference.iter().cloned().fold(f64::INFINITY, f64::min);
+    if range <= 0.0 {
+        return mse.sqrt();
+    }
+    mse.sqrt() / range
+}
+
+/// Pearson correlation of two curves (second shape metric).
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sir_conserves_population() {
+        let curve = sir_ode(990.0, 10.0, 0.0, SirParams { beta: 0.4, gamma: 0.1 }, 0.5, 200);
+        for row in &curve {
+            let total = row[0] + row[1] + row[2];
+            assert!((total - 1000.0).abs() < 1e-6, "{row:?}");
+            assert!(row.iter().all(|&v| v >= -1e-9));
+        }
+    }
+
+    #[test]
+    fn sir_epidemic_peaks_and_declines() {
+        let curve = sir_ode(990.0, 10.0, 0.0, SirParams { beta: 0.5, gamma: 0.1 }, 0.5, 400);
+        let i: Vec<f64> = curve.iter().map(|r| r[1]).collect();
+        let peak = i.iter().cloned().fold(0.0, f64::max);
+        assert!(peak > 100.0, "peak = {peak}");
+        assert!(*i.last().unwrap() < peak / 10.0, "epidemic must die out");
+        // S monotone decreasing, R monotone increasing.
+        assert!(curve.windows(2).all(|w| w[1][0] <= w[0][0] + 1e-9));
+        assert!(curve.windows(2).all(|w| w[1][2] >= w[0][2] - 1e-9));
+    }
+
+    #[test]
+    fn sir_r0_below_one_no_epidemic() {
+        let curve = sir_ode(990.0, 10.0, 0.0, SirParams { beta: 0.05, gamma: 0.1 }, 0.5, 400);
+        let peak = curve.iter().map(|r| r[1]).fold(0.0, f64::max);
+        assert!(peak <= 10.0 + 1e-9, "no outbreak when R0 < 1: peak = {peak}");
+    }
+
+    #[test]
+    fn gompertz_saturates() {
+        let early = gompertz(100.0, 5.0, 0.1, 0.0);
+        let mid = gompertz(100.0, 5.0, 0.1, 30.0);
+        let late = gompertz(100.0, 5.0, 0.1, 200.0);
+        assert!(early < mid && mid < late);
+        assert!((late - 100.0).abs() < 1.0, "approaches the asymptote: {late}");
+    }
+
+    #[test]
+    fn nrmse_and_pearson_basics() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(nrmse(&a, &a), 0.0);
+        assert!((pearson(&a, &a) - 1.0).abs() < 1e-12);
+        let b = [4.0, 3.0, 2.0, 1.0];
+        assert!((pearson(&a, &b) + 1.0).abs() < 1e-12);
+        let shifted = [1.5, 2.5, 3.5, 4.5];
+        assert!(nrmse(&a, &shifted) > 0.0);
+        assert!((pearson(&a, &shifted) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,185 @@
+//! Cell clustering / cell sorting (§3.1, Fig. 3, Fig. 5 right).
+//!
+//! Two cell types scattered uniformly; differential adhesion (same-type
+//! pairs adhere strongly, cross-type pairs weakly) makes same-type
+//! clusters *emerge* from purely local mechanics — the classic Steinberg
+//! sorting experiment. The model itself is mechanics-only; everything
+//! happens in the engine's kernel phase via
+//! [`Model::adhesion_scale`].
+
+use crate::config::SimConfig;
+use crate::core::agent::{Agent, AgentKind, CellType};
+use crate::engine::init::InitCtx;
+use crate::engine::model::Model;
+use crate::engine::world::World;
+use crate::runtime::MechanicsParams;
+
+/// Cross-type adhesion fraction (same-type is 1.0).
+pub const CROSS_TYPE_ADHESION: f32 = 0.15;
+
+pub struct CellClustering {
+    num_agents: usize,
+    diameter: f64,
+    radius: f64,
+    mechanics: MechanicsParams,
+}
+
+impl CellClustering {
+    pub fn new(cfg: &SimConfig) -> Self {
+        CellClustering {
+            num_agents: cfg.num_agents,
+            diameter: cfg.interaction_radius * 0.6,
+            radius: cfg.interaction_radius,
+            mechanics: cfg.mechanics,
+        }
+    }
+}
+
+impl Model for CellClustering {
+    fn name(&self) -> &'static str {
+        "cell_clustering"
+    }
+
+    fn interaction_radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn mechanics_params(&self) -> MechanicsParams {
+        self.mechanics
+    }
+
+    fn adhesion_scale(&self, a: &AgentKind, b: &AgentKind) -> f32 {
+        match (a, b) {
+            (
+                AgentKind::Cell { cell_type: ta, .. },
+                AgentKind::Cell { cell_type: tb, .. },
+            ) if ta == tb => 1.0,
+            _ => CROSS_TYPE_ADHESION,
+        }
+    }
+
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let d = self.diameter;
+        let whole = ctx.whole;
+        ctx.scatter_uniform(self.num_agents, whole, |pos, rng| {
+            let t = if rng.chance(0.5) { CellType::A } else { CellType::B };
+            Agent::cell(pos, d, t)
+        });
+    }
+
+    fn step(&mut self, _world: &mut World) {
+        // Mechanics-only model: sorting emerges from differential adhesion.
+    }
+
+    fn local_stats(&self, world: &World) -> Vec<f64> {
+        // Segregation index inputs: per owned agent, the fraction of
+        // same-type neighbors. Summed across ranks; the global index is
+        // sum_same_frac / n_with_neighbors. Thread-parallel (this is as
+        // expensive as the mechanics gather).
+        let ids = world.rm.ids();
+        let radius = self.radius;
+        let partials = world.par_chunks(ids.len(), |_, s, e, w| {
+            let mut acc = [0.0f64; 4];
+            for &id in &ids[s..e] {
+                let (pos, my_type) = {
+                    let a = w.rm.get(id).unwrap();
+                    let t = match a.kind {
+                        AgentKind::Cell { cell_type, .. } => cell_type,
+                        _ => continue,
+                    };
+                    (a.position, t)
+                };
+                if my_type == CellType::A {
+                    acc[0] += 1.0;
+                } else {
+                    acc[1] += 1.0;
+                }
+                let mut same = 0usize;
+                let mut total = 0usize;
+                let _ = w.count_neighbors_where(pos, radius, Some(id), |k| {
+                    if let AgentKind::Cell { cell_type, .. } = k {
+                        total += 1;
+                        if *cell_type == my_type {
+                            same += 1;
+                        }
+                    }
+                    false
+                });
+                if total > 0 {
+                    acc[2] += same as f64 / total as f64;
+                    acc[3] += 1.0;
+                }
+            }
+            acc
+        });
+        let mut out = [0.0f64; 4];
+        for p in partials {
+            for i in 0..4 {
+                out[i] += p[i];
+            }
+        }
+        out.to_vec()
+    }
+
+    fn stat_names(&self) -> Vec<&'static str> {
+        vec!["type_a", "type_b", "sum_same_frac", "with_neighbors"]
+    }
+}
+
+/// Global segregation index from a combined stats row: mean same-type
+/// neighbor fraction in [0, 1]; 0.5 = random mixing, →1 = fully sorted.
+pub fn segregation_index(stats: &[f64]) -> f64 {
+    if stats.len() < 4 || stats[3] == 0.0 {
+        return 0.0;
+    }
+    stats[2] / stats[3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::AgentKind;
+
+    fn cfg() -> SimConfig {
+        SimConfig { num_agents: 500, iterations: 3, ..Default::default() }
+    }
+
+    #[test]
+    fn adhesion_is_differential() {
+        let m = CellClustering::new(&cfg());
+        let a = AgentKind::Cell { cell_type: CellType::A, adhesion: 0.4 };
+        let b = AgentKind::Cell { cell_type: CellType::B, adhesion: 0.4 };
+        assert_eq!(m.adhesion_scale(&a, &a), 1.0);
+        assert_eq!(m.adhesion_scale(&a, &b), CROSS_TYPE_ADHESION);
+        assert_eq!(m.adhesion_scale(&b, &a), CROSS_TYPE_ADHESION);
+    }
+
+    #[test]
+    fn segregation_index_math() {
+        assert_eq!(segregation_index(&[10.0, 10.0, 15.0, 20.0]), 0.75);
+        assert_eq!(segregation_index(&[0.0, 0.0, 0.0, 0.0]), 0.0);
+        assert_eq!(segregation_index(&[]), 0.0);
+    }
+
+    #[test]
+    fn sorting_emerges_single_rank() {
+        // A short single-rank run must strictly increase segregation.
+        use crate::config::ParallelMode;
+        let mut cfg = cfg();
+        cfg.num_agents = 400;
+        cfg.iterations = 50;
+        cfg.space_half_extent = 25.0;
+        cfg.interaction_radius = 10.0;
+        cfg.mechanics.k_adh = 1.2;
+        cfg.mechanics.dt = 0.2;
+        cfg.mode = ParallelMode::OpenMp { threads: 2 };
+        let result = crate::engine::launcher::run_simulation(&cfg, |_| CellClustering::new(&cfg));
+        let first = segregation_index(&result.stats_history[0]);
+        let last = segregation_index(result.stats_history.last().unwrap());
+        assert!(
+            last > first + 0.05,
+            "segregation should rise: first={first:.3} last={last:.3}"
+        );
+        assert_eq!(result.final_agents, 400);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cell proliferation (§3.1): cells grow and divide, the population and
+//! its occupied volume expand over time. Exercises agent *creation* on the
+//! distributed engine (spawns must land in the owner's NSG and migrate
+//! correctly when daughters cross borders).
+
+use crate::config::SimConfig;
+use crate::core::agent::{sphere_diameter, sphere_volume, Agent, AgentKind};
+use crate::engine::init::InitCtx;
+use crate::engine::model::Model;
+use crate::engine::world::World;
+use crate::runtime::MechanicsParams;
+use crate::util::Vec3;
+
+pub struct CellProliferation {
+    num_agents: usize,
+    diameter: f64,
+    radius: f64,
+    mechanics: MechanicsParams,
+    /// Fraction of max volume growth per iteration.
+    pub growth_rate: f64,
+    /// Division probability per iteration once at division volume.
+    pub division_prob: f64,
+    /// Hard cap so runaway growth cannot explode test runtimes.
+    pub max_agents: usize,
+}
+
+impl CellProliferation {
+    pub fn new(cfg: &SimConfig) -> Self {
+        CellProliferation {
+            num_agents: cfg.num_agents,
+            diameter: cfg.interaction_radius * 0.5,
+            radius: cfg.interaction_radius,
+            mechanics: cfg.mechanics,
+            growth_rate: 0.08,
+            division_prob: 0.8,
+            max_agents: cfg.num_agents * 64,
+        }
+    }
+}
+
+impl Model for CellProliferation {
+    fn name(&self) -> &'static str {
+        "cell_proliferation"
+    }
+
+    fn interaction_radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn mechanics_params(&self) -> MechanicsParams {
+        self.mechanics
+    }
+
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let d = self.diameter;
+        // Seed population concentrated in the inner half of the space so
+        // growth has somewhere to go (and migrations actually happen).
+        // Half extent (not a tighter octant) keeps the initial density
+        // moderate — a very dense blob makes every neighbor query O(n).
+        let region = crate::space::Aabb::new(ctx.whole.min * 0.5, ctx.whole.max * 0.5);
+        ctx.scatter_uniform(self.num_agents, region, |pos, _| Agent::growing_cell(pos, d));
+    }
+
+    fn step(&mut self, world: &mut World) {
+        let ids = world.rm.ids();
+        let at_cap = world.rm.len() >= self.max_agents;
+        for id in ids {
+            // Read phase.
+            let Some(a) = world.rm.get(id) else { continue };
+            let AgentKind::GrowingCell { volume, growth_rate: _, division_volume } = a.kind
+            else {
+                continue;
+            };
+            let pos = a.position;
+            let grown = volume + self.growth_rate * division_volume;
+            let divide = grown >= division_volume && !at_cap && world.rng.chance(self.division_prob);
+            // Write phase.
+            if divide {
+                // Mother keeps half the volume; daughter gets the rest,
+                // displaced by ~one radius in a random direction.
+                let half = grown / 2.0;
+                let d = sphere_diameter(half);
+                let dir = Vec3::new(world.rng.normal(), world.rng.normal(), world.rng.normal())
+                    .normalized();
+                let daughter_pos = pos + dir * (d * 0.5);
+                {
+                    let a = world.rm.get_mut(id).unwrap();
+                    a.diameter = d;
+                    if let AgentKind::GrowingCell { volume, .. } = &mut a.kind {
+                        *volume = half;
+                    }
+                }
+                let mut daughter = Agent::growing_cell(daughter_pos, d);
+                if let AgentKind::GrowingCell { volume, division_volume: dv, .. } =
+                    &mut daughter.kind
+                {
+                    *volume = half;
+                    *dv = division_volume;
+                }
+                world.spawn(daughter);
+            } else {
+                let a = world.rm.get_mut(id).unwrap();
+                a.diameter = sphere_diameter(grown.min(division_volume));
+                if let AgentKind::GrowingCell { volume, .. } = &mut a.kind {
+                    *volume = grown.min(division_volume);
+                }
+            }
+        }
+    }
+
+    fn local_stats(&self, world: &World) -> Vec<f64> {
+        let mut count = 0.0;
+        let mut total_volume = 0.0;
+        for a in world.rm.iter() {
+            count += 1.0;
+            total_volume += sphere_volume(a.diameter);
+        }
+        vec![count, total_volume]
+    }
+
+    fn stat_names(&self) -> Vec<&'static str> {
+        vec!["agents", "total_volume"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+    use crate::engine::launcher::run_simulation;
+
+    #[test]
+    fn population_grows() {
+        let cfg = SimConfig {
+            name: "cell_proliferation".into(),
+            num_agents: 100,
+            iterations: 12,
+            space_half_extent: 60.0,
+            interaction_radius: 10.0,
+            mode: ParallelMode::OpenMp { threads: 2 },
+            ..Default::default()
+        };
+        let result = run_simulation(&cfg, |_| CellProliferation::new(&cfg));
+        assert!(
+            result.final_agents > 150,
+            "population should grow: {}",
+            result.final_agents
+        );
+        // Monotone non-decreasing counts.
+        let counts: Vec<f64> = result.stats_history.iter().map(|s| s[0]).collect();
+        assert!(counts.windows(2).all(|w| w[1] >= w[0]), "{counts:?}");
+        // Volume grows too.
+        assert!(result.stats_history.last().unwrap()[1] > result.stats_history[0][1]);
+    }
+
+    #[test]
+    fn distributed_run_matches_conservation() {
+        // 4 ranks: spawned agents must all survive migration/aura churn.
+        let cfg = SimConfig {
+            name: "cell_proliferation".into(),
+            num_agents: 100,
+            iterations: 8,
+            space_half_extent: 60.0,
+            interaction_radius: 10.0,
+            mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+            ..Default::default()
+        };
+        let result = run_simulation(&cfg, |_| CellProliferation::new(&cfg));
+        let last = result.stats_history.last().unwrap();
+        assert_eq!(last[0] as u64, result.final_agents);
+        assert!(result.final_agents >= 100);
+    }
+}

@@ -1,0 +1,190 @@
+//! Epidemiology (§3.1, Fig. 5 left): a spatial SIR model. Persons random-
+//! walk through the space; infection spreads within a radius; infected
+//! agents recover after a fixed number of iterations. The aggregate
+//! S/I/R curves are verified against the analytic SIR ODE
+//! ([`analytic::sir_ode`](super::analytic::sir_ode)).
+//!
+//! This model exercises the engine paths that mechanics-centric models do
+//! not: `uses_mechanics = false` (pure behavior phase), heavy reliance on
+//! *aura correctness* (infection across rank borders), and per-iteration
+//! migrations from the random walk.
+
+use crate::config::SimConfig;
+use crate::core::agent::{Agent, AgentKind, SirState};
+use crate::engine::init::InitCtx;
+use crate::engine::model::Model;
+use crate::engine::world::World;
+use crate::util::Vec3;
+
+pub struct Epidemiology {
+    num_agents: usize,
+    radius: f64,
+    pub walk_speed: f64,
+    pub infection_prob: f64,
+    pub recovery_iters: u32,
+    pub initial_infected: usize,
+}
+
+impl Epidemiology {
+    pub fn new(cfg: &SimConfig) -> Self {
+        Epidemiology {
+            num_agents: cfg.num_agents,
+            radius: cfg.interaction_radius,
+            walk_speed: cfg.interaction_radius * 0.4,
+            infection_prob: 0.30,
+            recovery_iters: 30,
+            initial_infected: (cfg.num_agents / 100).max(1),
+        }
+    }
+}
+
+impl Model for Epidemiology {
+    fn name(&self) -> &'static str {
+        "epidemiology"
+    }
+
+    fn interaction_radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let infected = self.initial_infected;
+        let n = self.num_agents;
+        let whole = ctx.whole;
+        let mut made = 0usize;
+        ctx.scatter_uniform(n, whole, |pos, _| {
+            let state = if made < infected { SirState::Infected } else { SirState::Susceptible };
+            made += 1;
+            Agent::person(pos, state)
+        });
+    }
+
+    fn step(&mut self, world: &mut World) {
+        let ids = world.rm.ids();
+        // Read phase: decisions from the *pre-step* state (synchronous
+        // update, like the reference ODE).
+        struct Decision {
+            id: crate::core::ids::LocalId,
+            new_pos: Vec3,
+            new_state: SirState,
+            new_timer: u32,
+        }
+        let mut decisions = Vec::with_capacity(ids.len());
+        for id in ids {
+            let Some(a) = world.rm.get(id) else { continue };
+            let AgentKind::Person { state, infected_for } = a.kind else { continue };
+            let pos = a.position;
+            // Random walk (isotropic).
+            let step = Vec3::new(world.rng.normal(), world.rng.normal(), world.rng.normal())
+                * (self.walk_speed / 3f64.sqrt());
+            let (new_state, new_timer) = match state {
+                SirState::Susceptible => {
+                    let n_inf = world.count_neighbors_where(pos, self.radius, Some(id), |k| {
+                        matches!(k, AgentKind::Person { state: SirState::Infected, .. })
+                    });
+                    // P(infection) = 1 - (1-p)^n, as in the AOT sir_step.
+                    let p = 1.0 - (1.0 - self.infection_prob).powi(n_inf as i32);
+                    if n_inf > 0 && world.rng.chance(p) {
+                        (SirState::Infected, 0)
+                    } else {
+                        (SirState::Susceptible, 0)
+                    }
+                }
+                SirState::Infected => {
+                    // Geometric recovery with mean `recovery_iters` — the
+                    // discrete analog of the ODE's exponential rate γ, so
+                    // aggregate curves live in the Kermack–McKendrick
+                    // family the Fig. 5 verification compares against.
+                    if world.rng.chance(1.0 / self.recovery_iters as f64) {
+                        (SirState::Recovered, 0)
+                    } else {
+                        (SirState::Infected, infected_for + 1)
+                    }
+                }
+                SirState::Recovered => (SirState::Recovered, 0),
+            };
+            decisions.push(Decision { id, new_pos: pos + step, new_state, new_timer });
+        }
+        // Write phase.
+        for d in decisions {
+            world.move_agent(d.id, d.new_pos);
+            if let Some(a) = world.rm.get_mut(d.id) {
+                a.kind = AgentKind::Person { state: d.new_state, infected_for: d.new_timer };
+            }
+        }
+    }
+
+    fn local_stats(&self, world: &World) -> Vec<f64> {
+        let (mut s, mut i, mut r) = (0.0, 0.0, 0.0);
+        for a in world.rm.iter() {
+            if let AgentKind::Person { state, .. } = a.kind {
+                match state {
+                    SirState::Susceptible => s += 1.0,
+                    SirState::Infected => i += 1.0,
+                    SirState::Recovered => r += 1.0,
+                }
+            }
+        }
+        vec![s, i, r]
+    }
+
+    fn stat_names(&self) -> Vec<&'static str> {
+        vec!["susceptible", "infected", "recovered"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+    use crate::engine::launcher::run_simulation;
+    use crate::space::BoundaryCondition;
+
+    fn cfg(ranks: usize) -> SimConfig {
+        SimConfig {
+            name: "epidemiology".into(),
+            num_agents: 2000,
+            iterations: 60,
+            space_half_extent: 18.0,
+            interaction_radius: 2.0,
+            boundary: BoundaryCondition::Toroidal,
+            mode: if ranks == 1 {
+                ParallelMode::OpenMp { threads: 2 }
+            } else {
+                ParallelMode::MpiHybrid { ranks, threads_per_rank: 1 }
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn epidemic_progresses_and_conserves_population() {
+        let c = cfg(1);
+        let result = run_simulation(&c, |_| Epidemiology::new(&c));
+        for row in &result.stats_history {
+            let total = row[0] + row[1] + row[2];
+            assert_eq!(total as usize, 2000, "SIR must conserve population: {row:?}");
+        }
+        let last = result.stats_history.last().unwrap();
+        assert!(last[2] > 100.0, "epidemic should produce recoveries: {last:?}");
+        // Susceptibles monotonically non-increasing.
+        let s: Vec<f64> = result.stats_history.iter().map(|r| r[0]).collect();
+        assert!(s.windows(2).all(|w| w[1] <= w[0]), "{s:?}");
+    }
+
+    #[test]
+    fn distributed_epidemic_crosses_rank_borders() {
+        // With 4 ranks the infection must spread beyond the seed rank —
+        // only possible through correct aura exchange.
+        let c = cfg(4);
+        let result = run_simulation(&c, |_| Epidemiology::new(&c));
+        let last = result.stats_history.last().unwrap();
+        assert_eq!((last[0] + last[1] + last[2]) as usize, 2000);
+        let attack_rate = (2000.0 - last[0]) / 2000.0;
+        assert!(attack_rate > 0.3, "epidemic should spread widely: {attack_rate}");
+    }
+}

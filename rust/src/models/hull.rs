@@ -1,0 +1,358 @@
+//! 3D convex hull (quickhull) — the libqhull replacement (§3.4).
+//!
+//! The tumor-spheroid evaluation measures the diameter from the convex
+//! hull volume assuming a spherical shape. The paper used libqhull (not
+//! distributed); positions are gathered to the master rank, which runs
+//! this implementation. The approximate bounding-box method used for very
+//! large populations lives in the oncology model's `combine_stats`.
+
+use crate::util::Vec3;
+
+/// A hull face: indices into the point array + outward normal and offset.
+#[derive(Clone, Debug)]
+struct Face {
+    a: usize,
+    b: usize,
+    c: usize,
+    normal: Vec3,
+    offset: f64,
+    /// Points in front of (outside) this face.
+    outside: Vec<usize>,
+}
+
+impl Face {
+    fn new(a: usize, b: usize, c: usize, pts: &[Vec3], interior: Vec3) -> Face {
+        let normal = (pts[b] - pts[a]).cross(pts[c] - pts[a]);
+        // Orient outward (away from the interior reference point).
+        let (a, b, normal) = if normal.dot(interior - pts[a]) > 0.0 {
+            (b, a, -normal)
+        } else {
+            (a, b, normal)
+        };
+        let offset = normal.dot(pts[a]);
+        Face { a, b, c, normal, offset, outside: Vec::new() }
+    }
+
+    #[inline]
+    fn dist(&self, p: Vec3) -> f64 {
+        self.normal.dot(p) - self.offset
+    }
+}
+
+/// Convex hull result.
+#[derive(Clone, Debug)]
+pub struct Hull {
+    pub points: Vec<Vec3>,
+    /// Triangles as point indices (outward-oriented).
+    pub faces: Vec<[usize; 3]>,
+}
+
+impl Hull {
+    /// Enclosed volume via the divergence theorem over the triangle fan.
+    pub fn volume(&self) -> f64 {
+        let mut v = 0.0;
+        for f in &self.faces {
+            let (a, b, c) = (self.points[f[0]], self.points[f[1]], self.points[f[2]]);
+            v += a.dot(b.cross(c));
+        }
+        (v / 6.0).abs()
+    }
+
+    /// Surface area.
+    pub fn area(&self) -> f64 {
+        self.faces
+            .iter()
+            .map(|f| {
+                let (a, b, c) = (self.points[f[0]], self.points[f[1]], self.points[f[2]]);
+                (b - a).cross(c - a).norm() * 0.5
+            })
+            .sum()
+    }
+
+    /// Diameter of the volume-equivalent sphere — the paper's measurement.
+    pub fn equivalent_diameter(&self) -> f64 {
+        crate::core::agent::sphere_diameter(self.volume())
+    }
+}
+
+const EPS: f64 = 1e-9;
+
+/// Compute the convex hull of a point set with quickhull.
+/// Returns `None` for degenerate inputs (< 4 points or all coplanar).
+pub fn quickhull(points: &[Vec3]) -> Option<Hull> {
+    let n = points.len();
+    if n < 4 {
+        return None;
+    }
+    // Initial simplex: extreme points on x, then farthest point from the
+    // line, then farthest from the plane.
+    let (mut imin, mut imax) = (0, 0);
+    for (i, p) in points.iter().enumerate() {
+        if p.x < points[imin].x {
+            imin = i;
+        }
+        if p.x > points[imax].x {
+            imax = i;
+        }
+    }
+    if points[imin].distance(points[imax]) < EPS {
+        return None;
+    }
+    let (p0, p1) = (points[imin], points[imax]);
+    let dir = (p1 - p0).normalized();
+    let mut i2 = usize::MAX;
+    let mut best = EPS;
+    for (i, p) in points.iter().enumerate() {
+        let d = ((*p - p0) - dir * (*p - p0).dot(dir)).norm();
+        if d > best {
+            best = d;
+            i2 = i;
+        }
+    }
+    if i2 == usize::MAX {
+        return None; // collinear
+    }
+    let plane_n = (p1 - p0).cross(points[i2] - p0).normalized();
+    let mut i3 = usize::MAX;
+    best = EPS;
+    for (i, p) in points.iter().enumerate() {
+        let d = plane_n.dot(*p - p0).abs();
+        if d > best {
+            best = d;
+            i3 = i;
+        }
+    }
+    if i3 == usize::MAX {
+        return None; // coplanar
+    }
+    let simplex = [imin, imax, i2, i3];
+    let interior = (points[imin] + points[imax] + points[i2] + points[i3]) * 0.25;
+
+    let mut faces: Vec<Face> = vec![
+        Face::new(simplex[0], simplex[1], simplex[2], points, interior),
+        Face::new(simplex[0], simplex[1], simplex[3], points, interior),
+        Face::new(simplex[0], simplex[2], simplex[3], points, interior),
+        Face::new(simplex[1], simplex[2], simplex[3], points, interior),
+    ];
+    // Assign points to faces.
+    for i in 0..n {
+        if simplex.contains(&i) {
+            continue;
+        }
+        for f in faces.iter_mut() {
+            if f.dist(points[i]) > EPS {
+                f.outside.push(i);
+                break;
+            }
+        }
+    }
+
+    // Iteratively expand.
+    loop {
+        // Find a face with outside points.
+        let Some(fi) = faces.iter().position(|f| !f.outside.is_empty()) else {
+            break;
+        };
+        // Farthest outside point of that face.
+        let &far = faces[fi]
+            .outside
+            .iter()
+            .max_by(|&&a, &&b| {
+                faces[fi].dist(points[a]).partial_cmp(&faces[fi].dist(points[b])).unwrap()
+            })
+            .unwrap();
+        // Visible faces from `far`.
+        let visible: Vec<usize> =
+            (0..faces.len()).filter(|&i| faces[i].dist(points[far]) > EPS).collect();
+        // Horizon edges: edges of visible faces shared with non-visible.
+        let mut horizon: Vec<(usize, usize)> = Vec::new();
+        let mut edge_count: std::collections::HashMap<(usize, usize), usize> =
+            std::collections::HashMap::new();
+        for &vi in &visible {
+            let f = &faces[vi];
+            for (u, v) in [(f.a, f.b), (f.b, f.c), (f.c, f.a)] {
+                let key = (u.min(v), u.max(v));
+                *edge_count.entry(key).or_insert(0) += 1;
+            }
+        }
+        for &vi in &visible {
+            let f = &faces[vi];
+            for (u, v) in [(f.a, f.b), (f.b, f.c), (f.c, f.a)] {
+                let key = (u.min(v), u.max(v));
+                if edge_count[&key] == 1 {
+                    horizon.push((u, v));
+                }
+            }
+        }
+        // Orphaned points from removed faces.
+        let mut orphans: Vec<usize> = Vec::new();
+        for &vi in &visible {
+            orphans.extend(faces[vi].outside.iter().copied());
+        }
+        orphans.retain(|&i| i != far);
+        orphans.sort();
+        orphans.dedup();
+        // Remove visible faces (descending index).
+        let mut vis_sorted = visible.clone();
+        vis_sorted.sort_unstable_by(|a, b| b.cmp(a));
+        for vi in vis_sorted {
+            faces.swap_remove(vi);
+        }
+        // New faces from horizon to `far`.
+        for (u, v) in horizon {
+            let mut nf = Face::new(u, v, far, points, interior);
+            // Reassign orphans.
+            for &o in &orphans {
+                if nf.dist(points[o]) > EPS {
+                    nf.outside.push(o);
+                }
+            }
+            faces.push(nf);
+        }
+        // Drop orphans claimed by new faces from further consideration:
+        // each orphan may appear in several faces' lists; the loop above
+        // processes one face at a time, so duplicates only cost time, not
+        // correctness (they are behind all remaining faces once hulled).
+        // Remove duplicates now:
+        let mut claimed: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        for f in faces.iter_mut() {
+            f.outside.retain(|&o| claimed.insert(o));
+        }
+    }
+
+    Some(Hull {
+        points: points.to_vec(),
+        faces: faces.iter().map(|f| [f.a, f.b, f.c]).collect(),
+    })
+}
+
+/// Tumor-diameter measurement from gathered positions: convex hull volume
+/// → volume-equivalent sphere diameter (§3.4 exact method). Falls back to
+/// bounding box for degenerate sets.
+pub fn tumor_diameter(points: &[Vec3], cell_diameter: f64) -> f64 {
+    match quickhull(points) {
+        Some(h) => h.equivalent_diameter() + cell_diameter,
+        None => {
+            let mut min = Vec3::splat(f64::INFINITY);
+            let mut max = Vec3::splat(f64::NEG_INFINITY);
+            for p in points {
+                min = min.min(*p);
+                max = max.max(*p);
+            }
+            if points.is_empty() {
+                return 0.0;
+            }
+            let e = max - min;
+            (e.x + e.y + e.z) / 3.0 + cell_diameter
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn tetrahedron_volume() {
+        let pts = vec![
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+        ];
+        let h = quickhull(&pts).unwrap();
+        assert_eq!(h.faces.len(), 4);
+        assert!((h.volume() - 1.0 / 6.0).abs() < 1e-9, "{}", h.volume());
+    }
+
+    #[test]
+    fn cube_volume_and_interior_points_ignored() {
+        let mut pts = Vec::new();
+        for x in [0.0, 2.0] {
+            for y in [0.0, 2.0] {
+                for z in [0.0, 2.0] {
+                    pts.push(Vec3::new(x, y, z));
+                }
+            }
+        }
+        // Interior points must not change the hull.
+        pts.push(Vec3::new(1.0, 1.0, 1.0));
+        pts.push(Vec3::new(0.5, 1.5, 0.7));
+        let h = quickhull(&pts).unwrap();
+        assert!((h.volume() - 8.0).abs() < 1e-9, "volume = {}", h.volume());
+        assert!((h.area() - 24.0).abs() < 1e-9, "area = {}", h.area());
+    }
+
+    #[test]
+    fn sphere_points_approximate_sphere_volume() {
+        let mut rng = Rng::new(11);
+        let r = 5.0;
+        let pts: Vec<Vec3> = (0..500)
+            .map(|_| {
+                let v = Vec3::new(rng.normal(), rng.normal(), rng.normal()).normalized();
+                v * r
+            })
+            .collect();
+        let h = quickhull(&pts).unwrap();
+        let sphere_vol = 4.0 / 3.0 * std::f64::consts::PI * r * r * r;
+        let err = (h.volume() - sphere_vol).abs() / sphere_vol;
+        assert!(err < 0.05, "hull {} vs sphere {} (err {err})", h.volume(), sphere_vol);
+        // Equivalent diameter ≈ 2r.
+        assert!((h.equivalent_diameter() - 2.0 * r).abs() < 0.3);
+    }
+
+    #[test]
+    fn degenerate_inputs_return_none() {
+        assert!(quickhull(&[]).is_none());
+        assert!(quickhull(&[Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0)]).is_none());
+        // Collinear.
+        let line: Vec<Vec3> = (0..10).map(|i| Vec3::new(i as f64, 0.0, 0.0)).collect();
+        assert!(quickhull(&line).is_none());
+        // Coplanar.
+        let mut plane = Vec::new();
+        for x in 0..4 {
+            for y in 0..4 {
+                plane.push(Vec3::new(x as f64, y as f64, 0.0));
+            }
+        }
+        assert!(quickhull(&plane).is_none());
+    }
+
+    #[test]
+    fn random_points_hull_contains_all() {
+        let mut rng = Rng::new(22);
+        let pts: Vec<Vec3> = (0..200)
+            .map(|_| Vec3::new(rng.uniform_range(-3.0, 3.0), rng.uniform_range(-3.0, 3.0), rng.uniform_range(-3.0, 3.0)))
+            .collect();
+        let h = quickhull(&pts).unwrap();
+        // Every point must be behind (or on) every face.
+        for f in &h.faces {
+            let (a, b, c) = (h.points[f[0]], h.points[f[1]], h.points[f[2]]);
+            let centroid: Vec3 = pts.iter().fold(Vec3::ZERO, |s, p| s + *p) / pts.len() as f64;
+            let mut n = (b - a).cross(c - a);
+            if n.dot(centroid - a) > 0.0 {
+                n = -n;
+            }
+            for p in &pts {
+                assert!(n.dot(*p - a) < 1e-6, "point outside hull face");
+            }
+        }
+    }
+
+    #[test]
+    fn tumor_diameter_fallbacks() {
+        assert_eq!(tumor_diameter(&[], 1.0), 0.0);
+        // Collinear -> bbox fallback.
+        let line: Vec<Vec3> = (0..5).map(|i| Vec3::new(i as f64 * 3.0, 0.0, 0.0)).collect();
+        let d = tumor_diameter(&line, 1.0);
+        assert!((d - (4.0 + 1.0)).abs() < 1e-9, "d = {d}");
+        // Proper ball.
+        let mut rng = Rng::new(33);
+        let pts: Vec<Vec3> = (0..300)
+            .map(|_| Vec3::new(rng.normal(), rng.normal(), rng.normal()).normalized() * 4.0)
+            .collect();
+        let d = tumor_diameter(&pts, 1.0);
+        assert!((d - 9.0).abs() < 0.5, "d = {d}");
+    }
+}

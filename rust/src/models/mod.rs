@@ -1,0 +1,37 @@
+//! The paper's benchmark simulations (§3.1, from BioDynaMo's suite):
+//! cell clustering (sorting), cell proliferation, epidemiology (SIR), and
+//! oncology (tumor spheroid growth). Plus the analytic references used for
+//! the Fig. 5 correctness verification and the convex-hull machinery for
+//! the tumor-diameter measurement.
+
+pub mod analytic;
+pub mod cell_clustering;
+pub mod cell_proliferation;
+pub mod epidemiology;
+pub mod hull;
+pub mod oncology;
+
+pub use cell_clustering::CellClustering;
+pub use cell_proliferation::CellProliferation;
+pub use epidemiology::Epidemiology;
+pub use oncology::TumorSpheroid;
+
+use crate::config::SimConfig;
+use crate::engine::launcher::{run_simulation, RunResult};
+
+/// Run a benchmark by name (the CLI / bench entry point).
+pub fn run_by_name(cfg: &SimConfig) -> Result<RunResult, String> {
+    match cfg.name.as_str() {
+        "cell_clustering" => Ok(run_simulation(cfg, |_| CellClustering::new(cfg))),
+        "cell_proliferation" => Ok(run_simulation(cfg, |_| CellProliferation::new(cfg))),
+        "epidemiology" => Ok(run_simulation(cfg, |_| Epidemiology::new(cfg))),
+        "oncology" => Ok(run_simulation(cfg, |_| TumorSpheroid::new(cfg))),
+        other => Err(format!(
+            "unknown simulation {other:?}; available: cell_clustering, cell_proliferation, epidemiology, oncology"
+        )),
+    }
+}
+
+/// All benchmark names (for sweeps over the suite).
+pub const BENCHMARKS: [&str; 4] =
+    ["cell_clustering", "cell_proliferation", "epidemiology", "oncology"];

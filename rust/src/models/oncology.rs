@@ -1,0 +1,211 @@
+//! Oncology (§3.1, Fig. 5 middle): tumor-spheroid growth. Tumor cells
+//! cycle and divide; cells in dense neighborhoods turn quiescent
+//! (contact inhibition), so growth happens at the spheroid rim — producing
+//! the sub-exponential diameter curve that the paper verifies against
+//! experimental data (we verify the same qualitative shape against a
+//! fitted Gompertz reference, see [`analytic`](super::analytic)).
+
+use crate::config::SimConfig;
+use crate::core::agent::{Agent, AgentKind};
+use crate::engine::init::InitCtx;
+use crate::engine::model::Model;
+use crate::engine::world::World;
+use crate::runtime::MechanicsParams;
+use crate::util::Vec3;
+
+pub struct TumorSpheroid {
+    num_agents: usize,
+    pub cell_diameter: f64,
+    radius: f64,
+    mechanics: MechanicsParams,
+    /// Cycle progress per iteration for proliferative cells.
+    pub cycle_rate: f64,
+    /// Neighbor count at/above which a cell turns quiescent.
+    pub quiescence_neighbors: usize,
+    pub max_agents: usize,
+}
+
+impl TumorSpheroid {
+    pub fn new(cfg: &SimConfig) -> Self {
+        TumorSpheroid {
+            num_agents: cfg.num_agents,
+            cell_diameter: cfg.interaction_radius * 0.55,
+            radius: cfg.interaction_radius,
+            mechanics: cfg.mechanics,
+            cycle_rate: 0.25,
+            quiescence_neighbors: 8,
+            max_agents: cfg.num_agents * 256,
+        }
+    }
+
+    /// Radius used for the contact-inhibition neighbor count: contact
+    /// scale (~1.2 cell diameters), NOT the full interaction radius —
+    /// otherwise rim cells with free space would count far-away interior
+    /// cells and the whole spheroid would stall quiescent.
+    pub fn quiescence_radius(&self) -> f64 {
+        self.cell_diameter * 1.2
+    }
+}
+
+impl Model for TumorSpheroid {
+    fn name(&self) -> &'static str {
+        "oncology"
+    }
+
+    fn interaction_radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn mechanics_params(&self) -> MechanicsParams {
+        self.mechanics
+    }
+
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        // Dense seed ball at the origin.
+        let d = self.cell_diameter;
+        let seed_r = d * (self.num_agents as f64).cbrt() * 0.6;
+        let region = crate::space::Aabb::cube(seed_r.max(d));
+        ctx.scatter_uniform(self.num_agents, region, |pos, _| Agent::tumor_cell(pos, d));
+    }
+
+    fn step(&mut self, world: &mut World) {
+        let ids = world.rm.ids();
+        let at_cap = world.rm.len() >= self.max_agents;
+        struct Decision {
+            id: crate::core::ids::LocalId,
+            quiescent: bool,
+            cycle: f64,
+            divide: bool,
+        }
+        let mut decisions = Vec::with_capacity(ids.len());
+        for id in ids {
+            let Some(a) = world.rm.get(id) else { continue };
+            let AgentKind::TumorCell { cycle, .. } = a.kind else { continue };
+            let pos = a.position;
+            let neighbor_count =
+                world.count_neighbors_where(pos, self.quiescence_radius(), Some(id), |k| {
+                    matches!(k, AgentKind::TumorCell { .. })
+                });
+            let quiescent = neighbor_count >= self.quiescence_neighbors;
+            let new_cycle = if quiescent { cycle } else { cycle + self.cycle_rate };
+            let divide = new_cycle >= 1.0 && !at_cap;
+            decisions.push(Decision { id, quiescent, cycle: new_cycle, divide });
+        }
+        for d in decisions {
+            if d.divide {
+                let (pos, diameter) = {
+                    let a = world.rm.get(d.id).unwrap();
+                    (a.position, a.diameter)
+                };
+                let dir = Vec3::new(world.rng.normal(), world.rng.normal(), world.rng.normal())
+                    .normalized();
+                let mut daughter = Agent::tumor_cell(pos + dir * (diameter * 0.5), diameter);
+                if let AgentKind::TumorCell { cycle, .. } = &mut daughter.kind {
+                    *cycle = 0.0;
+                }
+                world.spawn(daughter);
+                if let Some(a) = world.rm.get_mut(d.id) {
+                    a.kind = AgentKind::TumorCell { cycle: 0.0, quiescent: false };
+                }
+            } else if let Some(a) = world.rm.get_mut(d.id) {
+                a.kind = AgentKind::TumorCell { cycle: d.cycle, quiescent: d.quiescent };
+            }
+        }
+    }
+
+    fn local_stats(&self, world: &World) -> Vec<f64> {
+        // Count + bounding extents (min/max encoded for combine).
+        let mut count = 0.0;
+        let mut quiescent = 0.0;
+        let mut min = Vec3::splat(f64::INFINITY);
+        let mut max = Vec3::splat(f64::NEG_INFINITY);
+        for a in world.rm.iter() {
+            if let AgentKind::TumorCell { quiescent: q, .. } = a.kind {
+                count += 1.0;
+                if q {
+                    quiescent += 1.0;
+                }
+                min = min.min(a.position);
+                max = max.max(a.position);
+            }
+        }
+        // Encode maxima as negatives so the default "sum" combine cannot
+        // be used accidentally — combine_stats below handles this layout.
+        vec![count, quiescent, min.x, min.y, min.z, max.x, max.y, max.z]
+    }
+
+    fn combine_stats(&self, per_rank: &[Vec<f64>]) -> Vec<f64> {
+        let mut count = 0.0;
+        let mut quiescent = 0.0;
+        let mut min = Vec3::splat(f64::INFINITY);
+        let mut max = Vec3::splat(f64::NEG_INFINITY);
+        for v in per_rank.iter().filter(|v| v.len() == 8) {
+            if v[0] == 0.0 {
+                continue;
+            }
+            count += v[0];
+            quiescent += v[1];
+            min = min.min(Vec3::new(v[2], v[3], v[4]));
+            max = max.max(Vec3::new(v[5], v[6], v[7]));
+        }
+        let diameter = if count > 0.0 {
+            // Approximate method (§3.4): enclosing bounding box.
+            let e = max - min;
+            (e.x + e.y + e.z) / 3.0 + self.cell_diameter
+        } else {
+            0.0
+        };
+        vec![count, quiescent, diameter]
+    }
+
+    fn stat_names(&self) -> Vec<&'static str> {
+        vec!["cells", "quiescent", "diameter_bbox"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+    use crate::engine::launcher::run_simulation;
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            name: "oncology".into(),
+            num_agents: 60,
+            iterations: 20,
+            space_half_extent: 60.0,
+            interaction_radius: 10.0,
+            mode: ParallelMode::OpenMp { threads: 2 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spheroid_grows_subexponentially() {
+        let c = cfg();
+        let result = run_simulation(&c, |_| TumorSpheroid::new(&c));
+        let counts: Vec<f64> = result.stats_history.iter().map(|s| s[0]).collect();
+        let diameters: Vec<f64> = result.stats_history.iter().map(|s| s[2]).collect();
+        assert!(counts.last().unwrap() > &counts[0], "{counts:?}");
+        assert!(diameters.last().unwrap() > &diameters[2], "{diameters:?}");
+        // Contact inhibition appears: some quiescent cells by the end.
+        assert!(result.stats_history.last().unwrap()[1] > 0.0);
+        // Sub-exponential: late growth rate (per iteration, relative)
+        // lower than early.
+        let early = counts[5] / counts[1];
+        let late = counts[19] / counts[15];
+        assert!(late < early, "early x{early:.2} late x{late:.2}");
+    }
+
+    #[test]
+    fn distributed_spheroid_consistent_counts() {
+        let mut c = cfg();
+        c.mode = ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 };
+        c.iterations = 10;
+        let result = run_simulation(&c, |_| TumorSpheroid::new(&c));
+        let last = result.stats_history.last().unwrap();
+        assert_eq!(last[0] as u64, result.final_agents);
+        assert!(last[2] > 0.0, "diameter must be positive");
+    }
+}

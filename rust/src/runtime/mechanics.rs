@@ -1,0 +1,322 @@
+//! The mechanics hot path: batched execution of the AOT-compiled
+//! JAX/Pallas force kernel, plus a bit-exact native oracle.
+//!
+//! The engine gathers every owned agent's K nearest neighbors from the
+//! NSG into fixed-shape padded batches (AOT geometry N=2048, K=16 — must
+//! match `python/compile/model.py`) and runs them through the PJRT
+//! executable. [`native_mechanics`] implements the identical force model
+//! in rust (same formula, f32 arithmetic) and serves as (a) the
+//! correctness oracle for integration tests and (b) the fallback when
+//! artifacts are absent.
+
+use super::pjrt::{literal_f32, LoadedModule, PjrtRuntime};
+use crate::util::Vec3;
+use anyhow::Result;
+use std::path::Path;
+
+/// AOT batch geometry; keep in sync with python/compile/model.py.
+pub const AOT_N: usize = 2048;
+pub const AOT_K: usize = 16;
+
+/// Distance epsilon matching kernels/pairwise.py.
+const EPS: f32 = 1e-12;
+
+/// Force-model parameters `[k_rep, k_adh, dt, max_disp]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MechanicsParams {
+    pub k_rep: f32,
+    pub k_adh: f32,
+    pub dt: f32,
+    pub max_disp: f32,
+}
+
+impl Default for MechanicsParams {
+    fn default() -> Self {
+        MechanicsParams { k_rep: 2.0, k_adh: 0.4, dt: 0.1, max_disp: 5.0 }
+    }
+}
+
+impl MechanicsParams {
+    pub fn to_array(self) -> [f32; 4] {
+        [self.k_rep, self.k_adh, self.dt, self.max_disp]
+    }
+}
+
+/// A padded batch of agents with gathered neighbors (flat f32 storage laid
+/// out exactly as the artifact inputs).
+#[derive(Clone, Debug)]
+pub struct MechanicsBatch {
+    pub n: usize,
+    pub k: usize,
+    /// (N,3) agent positions.
+    pub pos: Vec<f32>,
+    /// (N,) diameters.
+    pub diam: Vec<f32>,
+    /// (N,K,3) neighbor positions.
+    pub npos: Vec<f32>,
+    /// (N,K) neighbor diameters.
+    pub ndiam: Vec<f32>,
+    /// (N,K) validity mask.
+    pub mask: Vec<f32>,
+    /// Number of real (non-padding) agents at the front of the batch.
+    pub live: usize,
+}
+
+impl MechanicsBatch {
+    /// Empty batch of the AOT geometry.
+    pub fn new(n: usize, k: usize) -> Self {
+        MechanicsBatch {
+            n,
+            k,
+            pos: vec![0.0; n * 3],
+            diam: vec![1.0; n],
+            npos: vec![0.0; n * k * 3],
+            ndiam: vec![0.0; n * k],
+            mask: vec![0.0; n * k],
+            live: 0,
+        }
+    }
+
+    /// Reset for reuse without reallocating.
+    pub fn clear(&mut self) {
+        self.pos.iter_mut().for_each(|v| *v = 0.0);
+        self.diam.iter_mut().for_each(|v| *v = 1.0);
+        self.npos.iter_mut().for_each(|v| *v = 0.0);
+        self.ndiam.iter_mut().for_each(|v| *v = 0.0);
+        self.mask.iter_mut().for_each(|v| *v = 0.0);
+        self.live = 0;
+    }
+
+    /// Set agent `i`'s own attributes.
+    pub fn set_agent(&mut self, i: usize, pos: Vec3, diam: f64) {
+        self.pos[i * 3] = pos.x as f32;
+        self.pos[i * 3 + 1] = pos.y as f32;
+        self.pos[i * 3 + 2] = pos.z as f32;
+        self.diam[i] = diam as f32;
+    }
+
+    /// Set neighbor slot `j` of agent `i`. `adh_scale` is the per-pair
+    /// adhesion weight (1.0 = full adhesion; must be > 0 to mark the slot
+    /// valid — use e.g. 1e-6 for "repulsion only").
+    pub fn set_neighbor(&mut self, i: usize, j: usize, pos: Vec3, diam: f64, adh_scale: f32) {
+        debug_assert!(adh_scale > 0.0);
+        let b = (i * self.k + j) * 3;
+        self.npos[b] = pos.x as f32;
+        self.npos[b + 1] = pos.y as f32;
+        self.npos[b + 2] = pos.z as f32;
+        self.ndiam[i * self.k + j] = diam as f32;
+        self.mask[i * self.k + j] = adh_scale;
+    }
+}
+
+/// Native (rust) implementation of the identical force model — the
+/// correctness oracle and artifact-free fallback.
+pub fn native_mechanics(batch: &MechanicsBatch, p: MechanicsParams) -> Vec<Vec3> {
+    let (n, k) = (batch.n, batch.k);
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let pi = [batch.pos[i * 3], batch.pos[i * 3 + 1], batch.pos[i * 3 + 2]];
+        let di = batch.diam[i];
+        let mut force = [0.0f32; 3];
+        for j in 0..k {
+            let m = batch.mask[i * k + j];
+            if m == 0.0 {
+                continue;
+            }
+            let b = (i * k + j) * 3;
+            let delta = [pi[0] - batch.npos[b], pi[1] - batch.npos[b + 1], pi[2] - batch.npos[b + 2]];
+            let dist = (delta[0] * delta[0] + delta[1] * delta[1] + delta[2] * delta[2] + EPS).sqrt();
+            let r_sum = 0.5 * (di + batch.ndiam[i * k + j]);
+            let overlap = r_sum - dist;
+            // Mask doubles as the per-pair adhesion scale (differential
+            // adhesion); any positive value enables repulsion fully.
+            let f_rep = p.k_rep * overlap.max(0.0);
+            let f_adh = p.k_adh * (dist - r_sum).min(r_sum).max(0.0);
+            let f_mag = f_rep - f_adh * m;
+            for d in 0..3 {
+                force[d] += f_mag * delta[d] / dist;
+            }
+        }
+        let clamp = |v: f32| (p.dt * v).clamp(-p.max_disp, p.max_disp);
+        out.push(Vec3::new(clamp(force[0]) as f64, clamp(force[1]) as f64, clamp(force[2]) as f64));
+    }
+    out
+}
+
+/// Engine handle: PJRT-backed when artifacts are available, native
+/// otherwise.
+pub enum MechanicsEngine {
+    Native,
+    Pjrt { module: LoadedModule, params_literal_shape: usize },
+}
+
+impl MechanicsEngine {
+    /// Load the PJRT path from `artifacts/mechanics.hlo.txt` (falling back
+    /// to the native path if the artifact or client is unavailable).
+    pub fn load(runtime: Option<&PjrtRuntime>, artifacts_dir: impl AsRef<Path>) -> Self {
+        let path = artifacts_dir.as_ref().join("mechanics.hlo.txt");
+        if let Some(rt) = runtime {
+            if path.exists() {
+                match rt.load(&path) {
+                    Ok(module) => {
+                        return MechanicsEngine::Pjrt { module, params_literal_shape: 4 }
+                    }
+                    Err(e) => eprintln!("mechanics artifact load failed ({e}); using native path"),
+                }
+            }
+        }
+        MechanicsEngine::Native
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, MechanicsEngine::Pjrt { .. })
+    }
+
+    /// Compute displacements for a batch.
+    pub fn compute(&self, batch: &MechanicsBatch, p: MechanicsParams) -> Result<Vec<Vec3>> {
+        match self {
+            MechanicsEngine::Native => Ok(native_mechanics(batch, p)),
+            MechanicsEngine::Pjrt { module, .. } => {
+                let n = batch.n as i64;
+                let k = batch.k as i64;
+                let inputs = [
+                    literal_f32(&batch.pos, &[n, 3])?,
+                    literal_f32(&batch.diam, &[n])?,
+                    literal_f32(&batch.npos, &[n, k, 3])?,
+                    literal_f32(&batch.ndiam, &[n, k])?,
+                    literal_f32(&batch.mask, &[n, k])?,
+                    literal_f32(&p.to_array(), &[4])?,
+                ];
+                let out = module.run(&inputs)?;
+                let disp = out[0].to_vec::<f32>()?;
+                Ok((0..batch.n)
+                    .map(|i| {
+                        Vec3::new(
+                            disp[i * 3] as f64,
+                            disp[i * 3 + 1] as f64,
+                            disp[i * 3 + 2] as f64,
+                        )
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_batch(n: usize, k: usize, seed: u64) -> MechanicsBatch {
+        let mut rng = Rng::new(seed);
+        let mut b = MechanicsBatch::new(n, k);
+        b.live = n;
+        for i in 0..n {
+            b.set_agent(
+                i,
+                Vec3::new(
+                    rng.uniform_range(-50.0, 50.0),
+                    rng.uniform_range(-50.0, 50.0),
+                    rng.uniform_range(-50.0, 50.0),
+                ),
+                rng.uniform_range(1.0, 12.0),
+            );
+            for j in 0..k {
+                if rng.chance(0.7) {
+                    b.set_neighbor(
+                        i,
+                        j,
+                        Vec3::new(
+                            rng.uniform_range(-50.0, 50.0),
+                            rng.uniform_range(-50.0, 50.0),
+                            rng.uniform_range(-50.0, 50.0),
+                        ),
+                        rng.uniform_range(1.0, 12.0),
+                        if rng.chance(0.5) { 1.0 } else { 0.2 },
+                    );
+                }
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn native_zero_mask_gives_zero() {
+        let b = MechanicsBatch::new(16, 4);
+        let out = native_mechanics(&b, MechanicsParams::default());
+        assert!(out.iter().all(|v| *v == Vec3::ZERO));
+    }
+
+    #[test]
+    fn native_overlap_repels() {
+        let mut b = MechanicsBatch::new(4, 2);
+        b.set_agent(0, Vec3::ZERO, 10.0);
+        b.set_neighbor(0, 0, Vec3::new(4.0, 0.0, 0.0), 10.0, 1.0);
+        let out = native_mechanics(&b, MechanicsParams::default());
+        assert!(out[0].x < 0.0, "must push away: {:?}", out[0]);
+        assert_eq!(out[1], Vec3::ZERO);
+    }
+
+    #[test]
+    fn native_adhesion_attracts() {
+        let mut b = MechanicsBatch::new(4, 2);
+        b.set_agent(0, Vec3::ZERO, 10.0);
+        b.set_neighbor(0, 0, Vec3::new(12.0, 0.0, 0.0), 10.0, 1.0);
+        let out = native_mechanics(&b, MechanicsParams::default());
+        assert!(out[0].x > 0.0, "must pull toward: {:?}", out[0]);
+    }
+
+    #[test]
+    fn native_clamps_displacement() {
+        let mut b = MechanicsBatch::new(2, 1);
+        b.set_agent(0, Vec3::ZERO, 10.0);
+        b.set_neighbor(0, 0, Vec3::new(0.1, 0.0, 0.0), 10.0, 1.0);
+        let p = MechanicsParams { k_rep: 1e6, k_adh: 0.0, dt: 1.0, max_disp: 0.5 };
+        let out = native_mechanics(&b, p);
+        assert!(out[0].norm() <= 0.5 * 3f64.sqrt() + 1e-9);
+        assert!(out[0].x.abs() <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn batch_reuse_clears_state() {
+        let mut b = random_batch(8, 4, 1);
+        b.clear();
+        assert!(b.mask.iter().all(|&m| m == 0.0));
+        assert_eq!(b.live, 0);
+        let out = native_mechanics(&b, MechanicsParams::default());
+        assert!(out.iter().all(|v| *v == Vec3::ZERO));
+    }
+
+    #[test]
+    fn pjrt_matches_native_oracle() {
+        // The L3<->L1 integration check: AOT artifact numerics == native.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("mechanics.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let eng = MechanicsEngine::load(Some(&rt), &dir);
+        assert!(eng.is_pjrt());
+        let b = random_batch(AOT_N, AOT_K, 42);
+        let p = MechanicsParams::default();
+        let got = eng.compute(&b, p).unwrap();
+        let want = native_mechanics(&b, p);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g - *w).norm() < 1e-4,
+                "agent {i}: pjrt {g:?} vs native {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_falls_back_to_native() {
+        let eng = MechanicsEngine::load(None, "/nonexistent");
+        assert!(!eng.is_pjrt());
+        let b = random_batch(8, 4, 3);
+        assert_eq!(eng.compute(&b, MechanicsParams::default()).unwrap().len(), 8);
+    }
+}

@@ -1,0 +1,14 @@
+//! AOT runtime: load and execute the JAX/Pallas-compiled HLO artifacts via
+//! the PJRT C API (the `xla` crate). Python never runs on this path — the
+//! artifacts in `artifacts/*.hlo.txt` are produced once by
+//! `python/compile/aot.py` (`make artifacts`) and the rust binary is
+//! self-contained afterwards.
+
+pub mod mechanics;
+pub mod pjrt;
+pub mod service;
+pub mod sir;
+
+pub use mechanics::{MechanicsBatch, MechanicsEngine, MechanicsParams};
+pub use pjrt::{LoadedModule, PjrtRuntime};
+pub use service::{MechanicsHandle, MechanicsService};

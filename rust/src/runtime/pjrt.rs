@@ -1,0 +1,142 @@
+//! PJRT client wrapper: HLO text → compiled executable → execution.
+//!
+//! Interchange format is HLO *text*, not serialized `HloModuleProto`: jax
+//! ≥ 0.5 emits protos with 64-bit instruction ids which the crate's
+//! xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Lowering used
+//! `return_tuple=True`, so outputs arrive as one tuple literal.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Process-wide PJRT CPU client. One per process; executables are cheap
+/// handles on top.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it into an executable.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled model variant ready for execution.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedModule {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with literal inputs, returning the elements of the output
+    /// tuple (lowering used `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // Lowering used return_tuple=True, so the output is always a tuple.
+        Ok(tuple.to_tuple().context("decomposing result tuple")?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    let expected: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expected as usize == data.len(),
+        "shape {:?} incompatible with {} elements",
+        dims,
+        data.len()
+    );
+    Ok(lit.reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("mechanics.hlo.txt").exists()
+    }
+
+    #[test]
+    fn cpu_client_starts() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_run_mechanics_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let m = rt.load(artifacts_dir().join("mechanics.hlo.txt")).unwrap();
+        let n = 2048usize;
+        let k = 16usize;
+        let pos = literal_f32(&vec![0.0; n * 3], &[n as i64, 3]).unwrap();
+        let diam = literal_f32(&vec![1.0; n], &[n as i64]).unwrap();
+        let npos = literal_f32(&vec![0.0; n * k * 3], &[n as i64, k as i64, 3]).unwrap();
+        let ndiam = literal_f32(&vec![1.0; n * k], &[n as i64, k as i64]).unwrap();
+        let mask = literal_f32(&vec![0.0; n * k], &[n as i64, k as i64]).unwrap();
+        let params = literal_f32(&[2.0, 0.4, 0.1, 5.0], &[4]).unwrap();
+        let out = m.run(&[pos, diam, npos, ndiam, mask, params]).unwrap();
+        assert_eq!(out.len(), 2, "mechanics returns (disp, new_pos)");
+        let disp = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(disp.len(), n * 3);
+        // Zero mask -> zero displacement.
+        assert!(disp.iter().all(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.load("/nonexistent/file.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).is_ok());
+    }
+}

@@ -1,0 +1,152 @@
+//! Mechanics service: a dedicated thread owning the (non-`Send`) PJRT
+//! client and compiled executable, serving batch requests from all rank
+//! threads over channels.
+//!
+//! This mirrors a real deployment where one accelerator per node is shared
+//! by the node's ranks. Rank threads hold a cloneable [`MechanicsHandle`];
+//! Python is never involved — the service executes the AOT artifact.
+
+use super::mechanics::{native_mechanics, MechanicsBatch, MechanicsEngine, MechanicsParams};
+use super::pjrt::PjrtRuntime;
+use crate::util::Vec3;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+
+enum Request {
+    Compute { batch: MechanicsBatch, params: MechanicsParams, reply: mpsc::Sender<Vec<Vec3>> },
+    Shutdown,
+}
+
+/// Handle held by rank threads. Cloneable and `Send`.
+#[derive(Clone)]
+pub struct MechanicsHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl MechanicsHandle {
+    /// Synchronously compute displacements for a batch.
+    pub fn compute(&self, batch: MechanicsBatch, params: MechanicsParams) -> Vec<Vec3> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Compute { batch, params, reply: reply_tx })
+            .expect("mechanics service is down");
+        reply_rx.recv().expect("mechanics service dropped the reply")
+    }
+}
+
+/// The service: owns the worker thread.
+pub struct MechanicsService {
+    tx: mpsc::Sender<Request>,
+    join: Option<thread::JoinHandle<()>>,
+    /// Whether the worker ended up on the PJRT path.
+    pub using_pjrt: bool,
+}
+
+impl MechanicsService {
+    /// Start the service. With `use_pjrt`, the worker creates the PJRT CPU
+    /// client and loads `artifacts/mechanics.hlo.txt`; on any failure it
+    /// falls back to the native oracle (and reports `using_pjrt = false`).
+    pub fn start(artifacts_dir: PathBuf, use_pjrt: bool) -> MechanicsService {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<bool>();
+        let join = thread::Builder::new()
+            .name("mechanics-service".into())
+            .spawn(move || {
+                let engine = if use_pjrt {
+                    match PjrtRuntime::cpu() {
+                        Ok(rt) => MechanicsEngine::load(Some(&rt), &artifacts_dir),
+                        Err(e) => {
+                            eprintln!("PJRT client failed ({e}); native mechanics fallback");
+                            MechanicsEngine::Native
+                        }
+                    }
+                } else {
+                    MechanicsEngine::Native
+                };
+                let _ = ready_tx.send(engine.is_pjrt());
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Compute { batch, params, reply } => {
+                            let out = engine
+                                .compute(&batch, params)
+                                .unwrap_or_else(|_| native_mechanics(&batch, params));
+                            let _ = reply.send(out);
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning mechanics service");
+        let using_pjrt = ready_rx.recv().unwrap_or(false);
+        MechanicsService { tx, join: Some(join), using_pjrt }
+    }
+
+    pub fn handle(&self) -> MechanicsHandle {
+        MechanicsHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for MechanicsService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_service_round_trip() {
+        let svc = MechanicsService::start(PathBuf::from("/nonexistent"), false);
+        assert!(!svc.using_pjrt);
+        let h = svc.handle();
+        let mut b = MechanicsBatch::new(8, 2);
+        b.set_agent(0, Vec3::ZERO, 10.0);
+        b.set_neighbor(0, 0, Vec3::new(4.0, 0.0, 0.0), 10.0, 1.0);
+        let out = h.compute(b, MechanicsParams::default());
+        assert_eq!(out.len(), 8);
+        assert!(out[0].x < 0.0);
+    }
+
+    #[test]
+    fn concurrent_requests_from_many_threads() {
+        let svc = MechanicsService::start(PathBuf::from("/nonexistent"), false);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    for _ in 0..10 {
+                        let mut b = MechanicsBatch::new(4, 1);
+                        b.set_agent(0, Vec3::new(t as f64, 0.0, 0.0), 10.0);
+                        b.set_neighbor(0, 0, Vec3::new(t as f64 + 4.0, 0.0, 0.0), 10.0, 1.0);
+                        let out = h.compute(b, MechanicsParams::default());
+                        assert!(out[0].x < 0.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pjrt_service_if_artifacts_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("mechanics.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let svc = MechanicsService::start(dir, true);
+        assert!(svc.using_pjrt);
+        let h = svc.handle();
+        let b = MechanicsBatch::new(super::super::mechanics::AOT_N, super::super::mechanics::AOT_K);
+        let out = h.compute(b, MechanicsParams::default());
+        assert_eq!(out.len(), super::super::mechanics::AOT_N);
+    }
+}

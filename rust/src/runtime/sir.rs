@@ -1,0 +1,191 @@
+//! The second compiled model variant: the SIR transition step
+//! (`artifacts/sir.hlo.txt`, lowered from `python/compile/model.py::sir_step`).
+//!
+//! Demonstrates the "one compiled executable per model variant" runtime
+//! design: a different artifact, loaded by the same PJRT wrapper, with a
+//! bit-exact native oracle. Inputs per agent: compartment code + infection
+//! timer, infected-neighbor count (computed rust-side from the NSG), and a
+//! uniform random draw (RNG stays in rust so the artifact is pure).
+
+use super::pjrt::{literal_f32, LoadedModule, PjrtRuntime};
+use anyhow::Result;
+use std::path::Path;
+
+/// SIR parameters `[infection_prob, recovery_iters]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SirParams {
+    pub infection_prob: f32,
+    pub recovery_iters: f32,
+}
+
+/// A padded SIR batch (flat f32 layout matching the artifact).
+#[derive(Clone, Debug)]
+pub struct SirBatch {
+    pub n: usize,
+    /// (N,2): [:,0] code (0=S,1=I,2=R), [:,1] timer.
+    pub state: Vec<f32>,
+    /// (N,) infected-neighbor counts.
+    pub n_infected: Vec<f32>,
+    /// (N,) uniform randoms in [0,1).
+    pub rand: Vec<f32>,
+    pub live: usize,
+}
+
+impl SirBatch {
+    pub fn new(n: usize) -> Self {
+        SirBatch {
+            n,
+            state: vec![0.0; n * 2],
+            n_infected: vec![0.0; n],
+            // rand=1.0 on padding rows -> never infects.
+            rand: vec![1.0; n],
+            live: 0,
+        }
+    }
+
+    pub fn set(&mut self, i: usize, code: f32, timer: f32, n_inf: f32, rand: f32) {
+        self.state[i * 2] = code;
+        self.state[i * 2 + 1] = timer;
+        self.n_infected[i] = n_inf;
+        self.rand[i] = rand;
+    }
+}
+
+/// Native oracle: exactly the math of `model.sir_step`.
+pub fn native_sir(batch: &SirBatch, p: SirParams) -> Vec<(f32, f32)> {
+    let mut out = Vec::with_capacity(batch.n);
+    for i in 0..batch.n {
+        let code = batch.state[i * 2];
+        let timer = batch.state[i * 2 + 1];
+        let n_inf = batch.n_infected[i];
+        let rand = batch.rand[i];
+        let susceptible = code == 0.0;
+        let infected = code == 1.0;
+        let p_inf = 1.0 - (1.0 - p.infection_prob).powf(n_inf);
+        let becomes_infected = susceptible && rand < p_inf && n_inf > 0.0;
+        let new_timer = timer + if infected { 1.0 } else { 0.0 };
+        let recovers = infected && new_timer >= p.recovery_iters;
+        let new_code = if becomes_infected {
+            1.0
+        } else if recovers {
+            2.0
+        } else {
+            code
+        };
+        let new_timer = if becomes_infected || recovers { 0.0 } else { new_timer };
+        out.push((new_code, new_timer));
+    }
+    out
+}
+
+/// SIR execution engine: PJRT artifact or native oracle.
+pub enum SirEngine {
+    Native,
+    Pjrt(LoadedModule),
+}
+
+impl SirEngine {
+    pub fn load(runtime: Option<&PjrtRuntime>, artifacts_dir: impl AsRef<Path>) -> Self {
+        let path = artifacts_dir.as_ref().join("sir.hlo.txt");
+        if let Some(rt) = runtime {
+            if path.exists() {
+                match rt.load(&path) {
+                    Ok(module) => return SirEngine::Pjrt(module),
+                    Err(e) => eprintln!("sir artifact load failed ({e}); using native path"),
+                }
+            }
+        }
+        SirEngine::Native
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, SirEngine::Pjrt(_))
+    }
+
+    /// Compute the next (code, timer) per agent.
+    pub fn compute(&self, batch: &SirBatch, p: SirParams) -> Result<Vec<(f32, f32)>> {
+        match self {
+            SirEngine::Native => Ok(native_sir(batch, p)),
+            SirEngine::Pjrt(module) => {
+                let n = batch.n as i64;
+                let inputs = [
+                    literal_f32(&batch.state, &[n, 2])?,
+                    literal_f32(&batch.n_infected, &[n])?,
+                    literal_f32(&batch.rand, &[n])?,
+                    literal_f32(&[p.infection_prob, p.recovery_iters], &[2])?,
+                ];
+                let out = module.run(&inputs)?;
+                let state = out[0].to_vec::<f32>()?;
+                Ok((0..batch.n).map(|i| (state[i * 2], state[i * 2 + 1])).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const P: SirParams = SirParams { infection_prob: 0.2, recovery_iters: 5.0 };
+
+    #[test]
+    fn native_transitions() {
+        let mut b = SirBatch::new(4);
+        b.set(0, 0.0, 0.0, 3.0, 0.1); // S with infected neighbors, low rand -> I
+        b.set(1, 0.0, 0.0, 3.0, 0.99); // high rand -> stays S
+        b.set(2, 1.0, 4.0, 0.0, 0.5); // I at threshold -> R
+        b.set(3, 2.0, 0.0, 9.0, 0.0); // R absorbing
+        let out = native_sir(&b, P);
+        assert_eq!(out[0].0, 1.0);
+        assert_eq!(out[1].0, 0.0);
+        assert_eq!(out[2], (2.0, 0.0));
+        assert_eq!(out[3].0, 2.0);
+    }
+
+    #[test]
+    fn susceptible_without_infected_neighbors_never_infects() {
+        let mut b = SirBatch::new(8);
+        for i in 0..8 {
+            b.set(i, 0.0, 0.0, 0.0, 0.0); // rand 0 but no infected neighbors
+        }
+        let out = native_sir(&b, P);
+        assert!(out.iter().all(|(c, _)| *c == 0.0));
+    }
+
+    #[test]
+    fn pjrt_matches_native_oracle() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("sir.hlo.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::cpu().unwrap();
+        let eng = SirEngine::load(Some(&rt), &dir);
+        assert!(eng.is_pjrt());
+        let n = 2048;
+        let mut b = SirBatch::new(n);
+        let mut rng = Rng::new(99);
+        b.live = n;
+        for i in 0..n {
+            b.set(
+                i,
+                rng.index(3) as f32,
+                rng.index(6) as f32,
+                rng.index(8) as f32,
+                rng.uniform() as f32,
+            );
+        }
+        let got = eng.compute(&b, P).unwrap();
+        let want = native_sir(&b, P);
+        assert_eq!(got, want, "PJRT sir_step must match the native oracle exactly");
+    }
+
+    #[test]
+    fn engine_falls_back_to_native() {
+        let eng = SirEngine::load(None, "/nonexistent");
+        assert!(!eng.is_pjrt());
+        let b = SirBatch::new(4);
+        assert_eq!(eng.compute(&b, P).unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,123 @@
+//! Space boundary conditions (§2.5 modularity: the
+//! `SpaceBoundaryCondition` interface with "open", "closed", and
+//! "toroidal" implementations).
+
+use super::space::Aabb;
+use crate::util::Vec3;
+
+/// What happens when an agent's position leaves the whole simulation space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BoundaryCondition {
+    /// Agents may leave the domain freely (the engine keeps simulating them
+    /// in the outermost partition boxes).
+    Open,
+    /// Positions are clamped to the domain (reflecting walls without
+    /// momentum flip — BioDynaMo's "closed" semantics).
+    Closed,
+    /// Positions wrap around periodically.
+    Toroidal,
+}
+
+impl BoundaryCondition {
+    /// Apply the boundary condition to a position.
+    pub fn apply(self, p: Vec3, whole: &Aabb) -> Vec3 {
+        match self {
+            BoundaryCondition::Open => p,
+            BoundaryCondition::Closed => {
+                // Clamp strictly inside (max edge is exclusive).
+                let eps = 1e-9;
+                let hi = whole.max - Vec3::splat(eps);
+                p.clamp(whole.min, hi)
+            }
+            BoundaryCondition::Toroidal => {
+                let e = whole.extent();
+                let wrap = |v: f64, lo: f64, len: f64| -> f64 {
+                    if len <= 0.0 {
+                        return lo;
+                    }
+                    let mut t = (v - lo) % len;
+                    if t < 0.0 {
+                        t += len;
+                    }
+                    lo + t
+                };
+                Vec3::new(
+                    wrap(p.x, whole.min.x, e.x),
+                    wrap(p.y, whole.min.y, e.y),
+                    wrap(p.z, whole.min.z, e.z),
+                )
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BoundaryCondition> {
+        match s {
+            "open" => Some(BoundaryCondition::Open),
+            "closed" => Some(BoundaryCondition::Closed),
+            "toroidal" => Some(BoundaryCondition::Toroidal),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BoundaryCondition::Open => "open",
+            BoundaryCondition::Closed => "closed",
+            BoundaryCondition::Toroidal => "toroidal",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> Aabb {
+        Aabb::new(Vec3::ZERO, Vec3::splat(10.0))
+    }
+
+    #[test]
+    fn open_leaves_positions() {
+        let p = Vec3::new(-5.0, 20.0, 3.0);
+        assert_eq!(BoundaryCondition::Open.apply(p, &space()), p);
+    }
+
+    #[test]
+    fn closed_clamps_inside() {
+        let p = Vec3::new(-5.0, 20.0, 3.0);
+        let q = BoundaryCondition::Closed.apply(p, &space());
+        assert!(space().contains(q), "clamped point must be inside: {q:?}");
+        assert_eq!(q.z, 3.0);
+        assert_eq!(q.x, 0.0);
+        assert!(q.y < 10.0 && q.y > 9.999);
+    }
+
+    #[test]
+    fn toroidal_wraps_both_sides() {
+        let bc = BoundaryCondition::Toroidal;
+        assert_eq!(bc.apply(Vec3::new(12.0, 0.0, 0.0), &space()).x, 2.0);
+        assert_eq!(bc.apply(Vec3::new(-3.0, 0.0, 0.0), &space()).x, 7.0);
+        // Multiple wraps.
+        assert!((bc.apply(Vec3::new(25.0, 0.0, 0.0), &space()).x - 5.0).abs() < 1e-12);
+        // Inside points unchanged.
+        let p = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(bc.apply(p, &space()), p);
+    }
+
+    #[test]
+    fn toroidal_result_always_inside() {
+        let bc = BoundaryCondition::Toroidal;
+        for i in -30..30 {
+            let p = Vec3::new(i as f64 * 1.7, i as f64 * -2.3, i as f64 * 0.9);
+            assert!(space().contains(bc.apply(p, &space())), "i={i}");
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for bc in [BoundaryCondition::Open, BoundaryCondition::Closed, BoundaryCondition::Toroidal] {
+            assert_eq!(BoundaryCondition::parse(bc.name()), Some(bc));
+        }
+        assert_eq!(BoundaryCondition::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Simulation space: bounds, boundary conditions, the uniform
+//! neighbor-search grid (NSG), and the distributed partitioning grid.
+
+pub mod boundary;
+pub mod nsg;
+pub mod partition;
+pub mod space;
+
+pub use boundary::BoundaryCondition;
+pub use nsg::{NeighborSearchGrid, NsgEntry};
+pub use partition::PartitionGrid;
+pub use space::{Aabb, SimulationSpace};

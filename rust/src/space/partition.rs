@@ -1,0 +1,388 @@
+//! The partitioning grid (§2.1, §2.4.1): domain decomposition of the whole
+//! simulation space into *partitioning boxes*, each owned by exactly one
+//! rank. Box edge length is a configurable multiple of the NSG cell size —
+//! the paper's memory/granularity trade-off parameter (§2.4.1): larger
+//! boxes need less partitioning memory but coarsen load-balancing
+//! decisions.
+//!
+//! Every rank holds a replica of the box→rank ownership map (our
+//! stand-in for STK; the paper's "collective lookup" fallback for
+//! non-locally-available boxes is unnecessary when the map is replicated —
+//! see DESIGN.md substitutions). Aura membership is computed exactly: an
+//! agent is sent to rank `r` iff a box owned by `r` intersects the sphere
+//! (agent position, interaction radius).
+
+use super::space::Aabb;
+use crate::util::Vec3;
+
+/// Rank id type used throughout the engine.
+pub type RankId = u32;
+
+/// The replicated partitioning grid.
+#[derive(Clone, Debug)]
+pub struct PartitionGrid {
+    whole: Aabb,
+    box_len: f64,
+    dims: [usize; 3],
+    /// Owner rank per box, row-major (x fastest).
+    owner: Vec<RankId>,
+    /// Load weight per box (agent count × last-iteration runtime factor).
+    weight: Vec<f64>,
+}
+
+impl PartitionGrid {
+    /// Build a grid over `whole` with boxes of edge `box_len`
+    /// (= `factor × nsg_cell`), all initially owned by rank 0.
+    pub fn new(whole: Aabb, box_len: f64) -> Self {
+        assert!(box_len > 0.0);
+        let e = whole.extent();
+        let dims = [
+            ((e.x / box_len).ceil() as usize).max(1),
+            ((e.y / box_len).ceil() as usize).max(1),
+            ((e.z / box_len).ceil() as usize).max(1),
+        ];
+        let n = dims[0] * dims[1] * dims[2];
+        PartitionGrid {
+            whole,
+            box_len,
+            dims,
+            owner: vec![0; n],
+            weight: vec![0.0; n],
+        }
+    }
+
+    pub fn whole(&self) -> Aabb {
+        self.whole
+    }
+
+    pub fn box_len(&self) -> f64 {
+        self.box_len
+    }
+
+    pub fn dims(&self) -> [usize; 3] {
+        self.dims
+    }
+
+    /// Total number of boxes.
+    pub fn num_boxes(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Box coordinates containing a position (clamped to the grid).
+    #[inline]
+    pub fn coords_of(&self, p: Vec3) -> [usize; 3] {
+        let rel = p - self.whole.min;
+        let cv = |v: f64, d: usize| -> usize {
+            if v <= 0.0 {
+                0
+            } else {
+                ((v / self.box_len) as usize).min(d - 1)
+            }
+        };
+        [cv(rel.x, self.dims[0]), cv(rel.y, self.dims[1]), cv(rel.z, self.dims[2])]
+    }
+
+    /// Flat box index from coordinates.
+    #[inline]
+    pub fn flat(&self, c: [usize; 3]) -> usize {
+        (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
+    }
+
+    /// Coordinates from flat index.
+    #[inline]
+    pub fn unflat(&self, i: usize) -> [usize; 3] {
+        let x = i % self.dims[0];
+        let y = (i / self.dims[0]) % self.dims[1];
+        let z = i / (self.dims[0] * self.dims[1]);
+        [x, y, z]
+    }
+
+    /// Flat box index containing a position.
+    #[inline]
+    pub fn box_of(&self, p: Vec3) -> usize {
+        self.flat(self.coords_of(p))
+    }
+
+    /// Axis-aligned bounds of a box.
+    pub fn box_aabb(&self, i: usize) -> Aabb {
+        let c = self.unflat(i);
+        let min = self.whole.min
+            + Vec3::new(
+                c[0] as f64 * self.box_len,
+                c[1] as f64 * self.box_len,
+                c[2] as f64 * self.box_len,
+            );
+        Aabb::new(min, min + Vec3::splat(self.box_len))
+    }
+
+    /// Center of a box (RCB input).
+    pub fn box_center(&self, i: usize) -> Vec3 {
+        self.box_aabb(i).center()
+    }
+
+    #[inline]
+    pub fn owner_of_box(&self, i: usize) -> RankId {
+        self.owner[i]
+    }
+
+    /// The rank authoritative for a position.
+    #[inline]
+    pub fn owner_of_pos(&self, p: Vec3) -> RankId {
+        self.owner[self.box_of(p)]
+    }
+
+    pub fn set_owner(&mut self, i: usize, r: RankId) {
+        self.owner[i] = r;
+    }
+
+    /// Bulk-assign the ownership map (from a balancer run).
+    pub fn set_owners(&mut self, owners: Vec<RankId>) {
+        assert_eq!(owners.len(), self.owner.len());
+        self.owner = owners;
+    }
+
+    pub fn owners(&self) -> &[RankId] {
+        &self.owner
+    }
+
+    /// Flat indices of the boxes owned by `rank`.
+    pub fn boxes_of_rank(&self, rank: RankId) -> Vec<usize> {
+        self.owner
+            .iter()
+            .enumerate()
+            .filter(|(_, &o)| o == rank)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Number of boxes owned by `rank`.
+    pub fn box_count_of_rank(&self, rank: RankId) -> usize {
+        self.owner.iter().filter(|&&o| o == rank).count()
+    }
+
+    /// Bounding box of a rank's owned volume (None if it owns nothing).
+    pub fn rank_bounds(&self, rank: RankId) -> Option<Aabb> {
+        let mut bounds: Option<Aabb> = None;
+        for i in 0..self.num_boxes() {
+            if self.owner[i] == rank {
+                let b = self.box_aabb(i);
+                bounds = Some(match bounds {
+                    None => b,
+                    Some(acc) => Aabb::new(acc.min.min(b.min), acc.max.max(b.max)),
+                });
+            }
+        }
+        bounds
+    }
+
+    /// Ranks (≠ `exclude`) owning any box intersecting the sphere
+    /// (`center`, `radius`) — the exact aura recipient set for an agent.
+    pub fn ranks_within(&self, center: Vec3, radius: f64, exclude: RankId) -> Vec<RankId> {
+        let lo = self.coords_of(center - Vec3::splat(radius));
+        let hi = self.coords_of(center + Vec3::splat(radius));
+        let mut out: Vec<RankId> = Vec::new();
+        for cz in lo[2]..=hi[2] {
+            for cy in lo[1]..=hi[1] {
+                for cx in lo[0]..=hi[0] {
+                    let i = self.flat([cx, cy, cz]);
+                    let r = self.owner[i];
+                    if r == exclude || out.contains(&r) {
+                        continue;
+                    }
+                    if self.box_aabb(i).intersects_sphere(center, radius) {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Ranks owning boxes face/edge/corner-adjacent to any box of `rank`
+    /// (the neighbor set for diffusive balancing and speculative receives).
+    pub fn neighbor_ranks(&self, rank: RankId) -> Vec<RankId> {
+        let mut out: Vec<RankId> = Vec::new();
+        for i in 0..self.num_boxes() {
+            if self.owner[i] != rank {
+                continue;
+            }
+            let c = self.unflat(i);
+            for dz in -1i64..=1 {
+                for dy in -1i64..=1 {
+                    for dx in -1i64..=1 {
+                        let nx = c[0] as i64 + dx;
+                        let ny = c[1] as i64 + dy;
+                        let nz = c[2] as i64 + dz;
+                        if nx < 0
+                            || ny < 0
+                            || nz < 0
+                            || nx >= self.dims[0] as i64
+                            || ny >= self.dims[1] as i64
+                            || nz >= self.dims[2] as i64
+                        {
+                            continue;
+                        }
+                        let o = self.owner[self.flat([nx as usize, ny as usize, nz as usize])];
+                        if o != rank && !out.contains(&o) {
+                            out.push(o);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    // ----- weights (load-balancer input) ------------------------------------
+
+    pub fn set_weight(&mut self, i: usize, w: f64) {
+        self.weight[i] = w;
+    }
+
+    pub fn weight_of(&self, i: usize) -> f64 {
+        self.weight[i]
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weight
+    }
+
+    /// Merge weights from all ranks (element-wise sum — each rank reports
+    /// weights only for boxes it owns, so the sum is exact).
+    pub fn merge_weights(&mut self, other: &[f64]) {
+        assert_eq!(other.len(), self.weight.len());
+        for (w, o) in self.weight.iter_mut().zip(other) {
+            *w += o;
+        }
+    }
+
+    pub fn clear_weights(&mut self) {
+        self.weight.iter_mut().for_each(|w| *w = 0.0);
+    }
+
+    /// Approximate live bytes of the replicated grid.
+    pub fn approx_bytes(&self) -> u64 {
+        (self.owner.capacity() * std::mem::size_of::<RankId>()
+            + self.weight.capacity() * std::mem::size_of::<f64>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid4() -> PartitionGrid {
+        // 40³ space, box_len 10 -> 4x4x4 = 64 boxes.
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::splat(40.0)), 10.0);
+        // Split ownership in x: x<20 -> rank 0, else rank 1.
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_owner(i, if c[0] < 2 { 0 } else { 1 });
+        }
+        g
+    }
+
+    #[test]
+    fn dims_and_flat_round_trip() {
+        let g = grid4();
+        assert_eq!(g.dims(), [4, 4, 4]);
+        assert_eq!(g.num_boxes(), 64);
+        for i in 0..64 {
+            assert_eq!(g.flat(g.unflat(i)), i);
+        }
+    }
+
+    #[test]
+    fn ownership_partition_is_exclusive_and_total() {
+        let g = grid4();
+        assert_eq!(g.box_count_of_rank(0) + g.box_count_of_rank(1), 64);
+        assert_eq!(g.box_count_of_rank(0), 32);
+    }
+
+    #[test]
+    fn owner_of_pos() {
+        let g = grid4();
+        assert_eq!(g.owner_of_pos(Vec3::new(5.0, 5.0, 5.0)), 0);
+        assert_eq!(g.owner_of_pos(Vec3::new(25.0, 5.0, 5.0)), 1);
+        // Clamping: outside positions resolve to edge boxes.
+        assert_eq!(g.owner_of_pos(Vec3::new(-100.0, 0.0, 0.0)), 0);
+        assert_eq!(g.owner_of_pos(Vec3::new(100.0, 0.0, 0.0)), 1);
+    }
+
+    #[test]
+    fn box_aabb_tiles_space() {
+        let g = grid4();
+        let mut vol = 0.0;
+        for i in 0..g.num_boxes() {
+            vol += g.box_aabb(i).volume();
+        }
+        assert!((vol - g.whole().volume()).abs() < 1e-9);
+        // Box 0 starts at the space min.
+        assert_eq!(g.box_aabb(0).min, Vec3::ZERO);
+    }
+
+    #[test]
+    fn aura_recipients_only_near_border() {
+        let g = grid4();
+        // Far from the x=20 border: no recipients.
+        assert!(g.ranks_within(Vec3::new(5.0, 20.0, 20.0), 2.0, 0).is_empty());
+        // Within radius of the border: rank 1 is a recipient.
+        assert_eq!(g.ranks_within(Vec3::new(19.0, 20.0, 20.0), 2.0, 0), vec![1]);
+        // Border agent of rank 1 sends to rank 0.
+        assert_eq!(g.ranks_within(Vec3::new(21.0, 20.0, 20.0), 2.0, 1), vec![0]);
+        // Radius smaller than distance to border: empty.
+        assert!(g.ranks_within(Vec3::new(17.0, 20.0, 20.0), 1.0, 0).is_empty());
+    }
+
+    #[test]
+    fn aura_band_is_radius_not_box_width() {
+        // The paper stresses aura regions are narrower than the box when
+        // box_len > radius (Fig. 1 zoom). An agent 3 units from the border
+        // with radius 2 must NOT be sent although it is in a border box.
+        let g = grid4();
+        assert!(g.ranks_within(Vec3::new(17.0, 5.0, 5.0), 2.0, 0).is_empty());
+        assert_eq!(g.ranks_within(Vec3::new(18.5, 5.0, 5.0), 2.0, 0), vec![1]);
+    }
+
+    #[test]
+    fn neighbor_ranks_symmetric() {
+        let g = grid4();
+        assert_eq!(g.neighbor_ranks(0), vec![1]);
+        assert_eq!(g.neighbor_ranks(1), vec![0]);
+    }
+
+    #[test]
+    fn rank_bounds_cover_owned_boxes() {
+        let g = grid4();
+        let b0 = g.rank_bounds(0).unwrap();
+        assert_eq!(b0.min, Vec3::ZERO);
+        assert_eq!(b0.max, Vec3::new(20.0, 40.0, 40.0));
+        assert!(g.rank_bounds(9).is_none());
+    }
+
+    #[test]
+    fn weights_merge() {
+        let mut g = grid4();
+        g.set_weight(3, 2.0);
+        let mut other = vec![0.0; g.num_boxes()];
+        other[3] = 1.0;
+        other[5] = 4.0;
+        g.merge_weights(&other);
+        assert_eq!(g.weight_of(3), 3.0);
+        assert_eq!(g.weight_of(5), 4.0);
+        g.clear_weights();
+        assert_eq!(g.weight_of(3), 0.0);
+    }
+
+    #[test]
+    fn corner_sphere_reaches_multiple_ranks() {
+        // 2x1x1 boxes owned by ranks 0..=1; a sphere at the corner between
+        // them reaches the other rank.
+        let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::new(20.0, 10.0, 10.0)), 10.0);
+        g.set_owner(0, 0);
+        g.set_owner(1, 1);
+        let rs = g.ranks_within(Vec3::new(9.5, 5.0, 5.0), 1.0, 0);
+        assert_eq!(rs, vec![1]);
+    }
+}

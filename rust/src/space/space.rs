@@ -1,0 +1,154 @@
+//! Axis-aligned bounds and the `SimulationSpace` interface (§2.5,
+//! modularity improvements: "gather information about whole and local
+//! simulation space in one place").
+
+use crate::util::Vec3;
+
+/// Axis-aligned bounding box, `min` inclusive, `max` exclusive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub min: Vec3,
+    pub max: Vec3,
+}
+
+impl Aabb {
+    pub fn new(min: Vec3, max: Vec3) -> Self {
+        Aabb { min, max }
+    }
+
+    /// Cube centered on the origin with the given half-extent.
+    pub fn cube(half: f64) -> Self {
+        Aabb::new(Vec3::splat(-half), Vec3::splat(half))
+    }
+
+    #[inline]
+    pub fn extent(&self) -> Vec3 {
+        self.max - self.min
+    }
+
+    #[inline]
+    pub fn center(&self) -> Vec3 {
+        (self.min + self.max) * 0.5
+    }
+
+    #[inline]
+    pub fn volume(&self) -> f64 {
+        let e = self.extent();
+        (e.x * e.y * e.z).max(0.0)
+    }
+
+    /// Point containment (min-inclusive, max-exclusive).
+    #[inline]
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.min.x
+            && p.x < self.max.x
+            && p.y >= self.min.y
+            && p.y < self.max.y
+            && p.z >= self.min.z
+            && p.z < self.max.z
+    }
+
+    /// Overlap test (exclusive max edges).
+    #[inline]
+    pub fn intersects(&self, o: &Aabb) -> bool {
+        self.min.x < o.max.x
+            && o.min.x < self.max.x
+            && self.min.y < o.max.y
+            && o.min.y < self.max.y
+            && self.min.z < o.max.z
+            && o.min.z < self.max.z
+    }
+
+    /// Intersection box (may have non-positive extent if disjoint).
+    pub fn intersection(&self, o: &Aabb) -> Aabb {
+        Aabb::new(self.min.max(o.min), self.max.min(o.max))
+    }
+
+    /// Grow equally in all directions.
+    pub fn inflate(&self, by: f64) -> Aabb {
+        Aabb::new(self.min - Vec3::splat(by), self.max + Vec3::splat(by))
+    }
+
+    /// Squared distance from a point to this box (0 if inside).
+    pub fn distance_sq_to(&self, p: Vec3) -> f64 {
+        let c = p.clamp(self.min, self.max);
+        c.distance_sq(p)
+    }
+
+    /// Does the sphere (center, radius) intersect this box?
+    #[inline]
+    pub fn intersects_sphere(&self, center: Vec3, radius: f64) -> bool {
+        self.distance_sq_to(center) <= radius * radius
+    }
+}
+
+/// Whole- and local-space view for one rank.
+#[derive(Clone, Debug)]
+pub struct SimulationSpace {
+    /// The global simulation domain.
+    pub whole: Aabb,
+    /// The volume this rank is currently authoritative for (the union of
+    /// its partition boxes; kept as a bounding box for fast checks, exact
+    /// ownership is per-box via the partition grid).
+    pub local_bounds: Aabb,
+    /// Maximum agent interaction distance (the modeler-set radius).
+    pub interaction_radius: f64,
+}
+
+impl SimulationSpace {
+    pub fn new(whole: Aabb, interaction_radius: f64) -> Self {
+        SimulationSpace { whole, local_bounds: whole, interaction_radius }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contains_half_open() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::splat(10.0));
+        assert!(b.contains(Vec3::ZERO));
+        assert!(!b.contains(Vec3::splat(10.0)));
+        assert!(b.contains(Vec3::splat(9.999)));
+        assert!(!b.contains(Vec3::new(-0.001, 5.0, 5.0)));
+    }
+
+    #[test]
+    fn volume_and_center() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::new(2.0, 3.0, 4.0));
+        assert_eq!(b.volume(), 24.0);
+        assert_eq!(b.center(), Vec3::new(1.0, 1.5, 2.0));
+        assert_eq!(b.extent(), Vec3::new(2.0, 3.0, 4.0));
+    }
+
+    #[test]
+    fn intersection_logic() {
+        let a = Aabb::new(Vec3::ZERO, Vec3::splat(5.0));
+        let b = Aabb::new(Vec3::splat(4.0), Vec3::splat(9.0));
+        let c = Aabb::new(Vec3::splat(6.0), Vec3::splat(7.0));
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+        let i = a.intersection(&b);
+        assert_eq!(i.min, Vec3::splat(4.0));
+        assert_eq!(i.max, Vec3::splat(5.0));
+        assert!(i.volume() > 0.0);
+        assert!(a.intersection(&c).volume() == 0.0);
+    }
+
+    #[test]
+    fn sphere_box_distance() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::splat(1.0));
+        assert_eq!(b.distance_sq_to(Vec3::splat(0.5)), 0.0);
+        assert_eq!(b.distance_sq_to(Vec3::new(2.0, 0.5, 0.5)), 1.0);
+        assert!(b.intersects_sphere(Vec3::new(1.9, 0.5, 0.5), 1.0));
+        assert!(!b.intersects_sphere(Vec3::new(2.1, 0.5, 0.5), 1.0));
+    }
+
+    #[test]
+    fn inflate_grows_symmetrically() {
+        let b = Aabb::cube(1.0).inflate(0.5);
+        assert_eq!(b.min, Vec3::splat(-1.5));
+        assert_eq!(b.max, Vec3::splat(1.5));
+    }
+}

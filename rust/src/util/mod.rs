@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, statistics,
+//! 3-vector math, timing, and a property-test runner.
+//!
+//! These exist in-repo because the offline toolchain provides no `rand`,
+//! `rayon`, `criterion`, or `proptest`; see DESIGN.md §2 (substitutions).
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timing;
+pub mod vec3;
+
+pub use rng::Rng;
+pub use stats::{summarize, Summary};
+pub use timing::{time_it, Timer};
+pub use vec3::Vec3;

@@ -1,0 +1,123 @@
+//! Wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple scope timer: `let t = Timer::start(); ...; t.elapsed_secs()`.
+#[derive(Clone, Copy, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    #[inline]
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    #[inline]
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    #[inline]
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart the timer and return the elapsed seconds since the previous
+    /// start (lap timing).
+    #[inline]
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// CPU time consumed by the *calling thread* (seconds).
+///
+/// The evaluation testbed has a single CPU core, so wall-clock time of R
+/// timesharing rank threads cannot show scaling. Per-thread CPU time is
+/// immune to descheduling: a rank's measured CPU seconds are what it would
+/// cost on a dedicated core. The scaling experiments (Figs. 8/9) model
+/// parallel runtime as `Σ_iter max_rank cpu[r][iter] + network model` —
+/// see DESIGN.md substitutions.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return 0.0;
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// CPU lap timer over [`thread_cpu_secs`].
+#[derive(Clone, Copy, Debug)]
+pub struct CpuTimer {
+    start: f64,
+}
+
+impl CpuTimer {
+    pub fn start() -> Self {
+        CpuTimer { start: thread_cpu_secs() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        (thread_cpu_secs() - self.start).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_secs() >= 0.004);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let first = t.lap();
+        let second = t.elapsed_secs();
+        assert!(first >= 0.004);
+        assert!(second < first);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_time_advances_under_load() {
+        let t = CpuTimer::start();
+        // Busy work the optimizer cannot remove.
+        let mut acc = 0u64;
+        for i in 0..3_000_000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed_secs() > 0.0);
+    }
+
+    #[test]
+    fn thread_cpu_time_ignores_sleep() {
+        let t = CpuTimer::start();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(t.elapsed_secs() < 0.02, "sleep must not count as CPU time");
+    }
+}

@@ -1,0 +1,91 @@
+//! Export-mode visualization: write simulation state to disk for offline
+//! rendering (ParaView's default workflow with BioDynaMo, §3.6).
+//!
+//! Agents are written as CSV (positions, diameter, kind) — the format any
+//! external tool can ingest — plus the composited PPM frames when in-situ
+//! rendering is also on. An exodus-style binary writer is unnecessary for
+//! the reproduction; CSV keeps the experiment self-contained.
+
+use crate::core::agent::Agent;
+use std::io::Write;
+use std::path::Path;
+
+/// Write one iteration's agents to `<dir>/agents_<iter>.csv`.
+pub fn write_agents_csv(
+    dir: impl AsRef<Path>,
+    iteration: u64,
+    agents: impl Iterator<Item = Agent>,
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("agents_{iteration:06}.csv"));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "x,y,z,diameter,kind,class_id")?;
+    for a in agents {
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            a.position.x,
+            a.position.y,
+            a.position.z,
+            a.diameter,
+            a.kind.name(),
+            a.kind.class_id()
+        )?;
+    }
+    f.flush()?;
+    Ok(path)
+}
+
+/// Write a stats history as CSV with a header.
+pub fn write_stats_csv(
+    path: impl AsRef<Path>,
+    names: &[&str],
+    rows: &[Vec<f64>],
+) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "iteration,{}", names.join(","))?;
+    for (i, row) in rows.iter().enumerate() {
+        let vals: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{i},{}", vals.join(","))?;
+    }
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+    use crate::util::Vec3;
+
+    #[test]
+    fn csv_export_round_trip() {
+        let dir = std::env::temp_dir().join("teraagent_vis_test");
+        let agents = vec![
+            Agent::cell(Vec3::new(1.0, 2.0, 3.0), 4.0, CellType::A),
+            Agent::person(Vec3::new(5.0, 6.0, 7.0), crate::core::agent::SirState::Infected),
+        ];
+        let path = write_agents_csv(&dir, 3, agents.into_iter()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("x,y,z,diameter,kind,class_id\n"));
+        assert!(text.contains("1,2,3,4,Cell,1"));
+        assert!(text.contains("Person"));
+        assert!(path.to_str().unwrap().contains("agents_000003"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stats_csv_has_header_and_rows() {
+        let path = std::env::temp_dir().join("teraagent_stats_test.csv");
+        write_stats_csv(&path, &["s", "i", "r"], &[vec![99.0, 1.0, 0.0], vec![95.0, 4.0, 1.0]])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iteration,s,i,r\n"));
+        assert!(text.contains("0,99,1,0"));
+        assert!(text.contains("1,95,4,1"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,274 @@
+//! Software rasterizer for in-situ rendering.
+//!
+//! Orthographic projection of the simulation's x/y plane; agents render as
+//! filled depth-shaded circles. Deliberately does real per-agent work
+//! (projection, z-sorted splatting) so the in-situ cost profile matches
+//! what Fig. 7 measures: per-rank geometry processing dominating, scaling
+//! with ranks rather than threads.
+
+use crate::core::agent::AgentKind;
+use crate::space::Aabb;
+use crate::util::Vec3;
+
+/// A simple RGB8 image.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major RGB triples.
+    pub rgb: Vec<u8>,
+    /// Depth buffer (camera z per pixel) used for compositing.
+    pub depth: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Image {
+            width,
+            height,
+            rgb: vec![0; width * height * 3],
+            depth: vec![f32::NEG_INFINITY; width * height],
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, z: f32, color: [u8; 3]) {
+        let i = y * self.width + x;
+        if z >= self.depth[i] {
+            self.depth[i] = z;
+            self.rgb[i * 3] = color[0];
+            self.rgb[i * 3 + 1] = color[1];
+            self.rgb[i * 3 + 2] = color[2];
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.rgb[i], self.rgb[i + 1], self.rgb[i + 2]]
+    }
+
+    /// Sort-last compositing: merge another rank's tile by depth.
+    pub fn composite(&mut self, other: &Image) {
+        assert_eq!((self.width, self.height), (other.width, other.height));
+        for i in 0..self.depth.len() {
+            if other.depth[i] > self.depth[i] {
+                self.depth[i] = other.depth[i];
+                self.rgb[i * 3..i * 3 + 3].copy_from_slice(&other.rgb[i * 3..i * 3 + 3]);
+            }
+        }
+    }
+
+    /// Serialize to binary PPM (P6).
+    pub fn to_ppm(&self) -> Vec<u8> {
+        let mut out = format!("P6\n{} {}\n255\n", self.width, self.height).into_bytes();
+        out.extend_from_slice(&self.rgb);
+        out
+    }
+
+    /// Write a PPM file.
+    pub fn write_ppm(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_ppm())
+    }
+
+    /// Pack rgb+depth for transport (compositing across ranks).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.rgb.len() + self.depth.len() * 4);
+        out.extend_from_slice(&(self.width as u32).to_le_bytes());
+        out.extend_from_slice(&(self.height as u32).to_le_bytes());
+        out.extend_from_slice(&self.rgb);
+        for d in &self.depth {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Image {
+        let w = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let h = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let rgb = bytes[8..8 + w * h * 3].to_vec();
+        let mut depth = Vec::with_capacity(w * h);
+        let mut off = 8 + w * h * 3;
+        for _ in 0..w * h {
+            depth.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        Image { width: w, height: h, rgb, depth }
+    }
+
+    /// Count non-background pixels (test/diagnostic helper).
+    pub fn lit_pixels(&self) -> usize {
+        self.rgb.chunks(3).filter(|c| c[0] != 0 || c[1] != 0 || c[2] != 0).count()
+    }
+}
+
+/// Color palette per agent kind (cell types get distinct colors so the
+/// cell-sorting figure is visually checkable).
+pub fn color_of_kind(kind: &AgentKind) -> [u8; 3] {
+    use crate::core::agent::{CellType, SirState};
+    match kind {
+        AgentKind::Cell { cell_type: CellType::A, .. } => [230, 80, 60],
+        AgentKind::Cell { cell_type: CellType::B, .. } => [60, 120, 230],
+        AgentKind::GrowingCell { .. } => [90, 200, 90],
+        AgentKind::Person { state, .. } => match state {
+            SirState::Susceptible => [90, 160, 90],
+            SirState::Infected => [230, 60, 60],
+            SirState::Recovered => [120, 120, 200],
+        },
+        AgentKind::TumorCell { quiescent, .. } => {
+            if *quiescent {
+                [150, 110, 60]
+            } else {
+                [240, 180, 60]
+            }
+        }
+    }
+}
+
+/// Rasterize agents into a fresh tile (orthographic x/y projection,
+/// z-depth shading).
+pub fn render_agents(
+    width: usize,
+    height: usize,
+    world: &Aabb,
+    agents: impl Iterator<Item = (Vec3, f64, [u8; 3])>,
+) -> Image {
+    let mut img = Image::new(width, height);
+    let ext = world.extent();
+    let sx = width as f64 / ext.x.max(1e-12);
+    let sy = height as f64 / ext.y.max(1e-12);
+    let zmin = world.min.z;
+    let zext = ext.z.max(1e-12);
+    for (pos, diameter, base) in agents {
+        let cx = (pos.x - world.min.x) * sx;
+        let cy = (pos.y - world.min.y) * sy;
+        let r = (diameter * 0.5 * sx.min(sy)).max(0.5);
+        let z = pos.z as f32;
+        // Depth shading: nearer (larger z) is brighter.
+        let shade = (0.55 + 0.45 * ((pos.z - zmin) / zext)).clamp(0.0, 1.0);
+        let color = [
+            (base[0] as f64 * shade) as u8,
+            (base[1] as f64 * shade) as u8,
+            (base[2] as f64 * shade) as u8,
+        ];
+        let x0 = ((cx - r).floor().max(0.0)) as usize;
+        let x1 = ((cx + r).ceil().min(width as f64 - 1.0)) as usize;
+        let y0 = ((cy - r).floor().max(0.0)) as usize;
+        let y1 = ((cy + r).ceil().min(height as f64 - 1.0)) as usize;
+        if x0 > x1 || y0 > y1 || cx + r < 0.0 || cy + r < 0.0 {
+            continue;
+        }
+        let r2 = r * r;
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let dx = x as f64 + 0.5 - cx;
+                let dy = y as f64 + 0.5 - cy;
+                if dx * dx + dy * dy <= r2 {
+                    img.set(x, y, z, color);
+                }
+            }
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+
+    fn world() -> Aabb {
+        Aabb::new(Vec3::ZERO, Vec3::splat(100.0))
+    }
+
+    #[test]
+    fn renders_a_circle() {
+        let img = render_agents(
+            100,
+            100,
+            &world(),
+            [(Vec3::new(50.0, 50.0, 50.0), 10.0, [255u8, 0, 0])].into_iter(),
+        );
+        assert!(img.lit_pixels() > 50, "lit = {}", img.lit_pixels());
+        // Center pixel is red-ish.
+        let c = img.get(50, 50);
+        assert!(c[0] > 100 && c[1] == 0);
+        // Far corner is background.
+        assert_eq!(img.get(5, 5), [0, 0, 0]);
+    }
+
+    #[test]
+    fn depth_ordering_front_wins() {
+        let img = render_agents(
+            50,
+            50,
+            &world(),
+            [
+                (Vec3::new(50.0, 50.0, 10.0), 20.0, [255u8, 0, 0]), // behind
+                (Vec3::new(50.0, 50.0, 90.0), 20.0, [0u8, 0, 255]), // front
+            ]
+            .into_iter(),
+        );
+        let c = img.get(25, 25);
+        assert!(c[2] > 0 && c[0] == 0, "front agent must win: {c:?}");
+    }
+
+    #[test]
+    fn composite_merges_by_depth() {
+        let a = render_agents(
+            40,
+            40,
+            &world(),
+            [(Vec3::new(25.0, 50.0, 10.0), 30.0, [255u8, 0, 0])].into_iter(),
+        );
+        let mut b = render_agents(
+            40,
+            40,
+            &world(),
+            [(Vec3::new(75.0, 50.0, 10.0), 30.0, [0u8, 255, 0])].into_iter(),
+        );
+        b.composite(&a);
+        assert!(b.lit_pixels() >= a.lit_pixels());
+        // Both halves present.
+        assert!(b.get(10, 20)[0] > 0);
+        assert!(b.get(30, 20)[1] > 0);
+    }
+
+    #[test]
+    fn image_bytes_round_trip() {
+        let img = render_agents(
+            16,
+            12,
+            &world(),
+            [(Vec3::new(50.0, 50.0, 0.0), 30.0, [1u8, 2, 3])].into_iter(),
+        );
+        let back = Image::from_bytes(&img.to_bytes());
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn ppm_header_and_size() {
+        let img = Image::new(7, 5);
+        let ppm = img.to_ppm();
+        assert!(ppm.starts_with(b"P6\n7 5\n255\n"));
+        assert_eq!(ppm.len(), 11 + 7 * 5 * 3);
+    }
+
+    #[test]
+    fn offscreen_agents_ignored() {
+        let img = render_agents(
+            20,
+            20,
+            &world(),
+            [(Vec3::new(-500.0, -500.0, 0.0), 10.0, [255u8, 255, 255])].into_iter(),
+        );
+        assert_eq!(img.lit_pixels(), 0);
+    }
+
+    #[test]
+    fn kind_colors_distinct() {
+        let a = color_of_kind(&AgentKind::Cell { cell_type: CellType::A, adhesion: 0.0 });
+        let b = color_of_kind(&AgentKind::Cell { cell_type: CellType::B, adhesion: 0.0 });
+        assert_ne!(a, b);
+    }
+}

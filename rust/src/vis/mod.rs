@@ -1,0 +1,20 @@
+//! Visualization (§3.6): the ParaView-interoperability stand-in.
+//!
+//! ParaView offers an *export* mode (write state to disk, visualize later)
+//! and an *in situ* mode (render while the simulation runs). The paper
+//! shows in-situ rendering scales with the number of MPI ranks, not
+//! threads — BioDynaMo (one rank) could not exploit it, TeraAgent can
+//! (Fig. 7, 39×).
+//!
+//! [`insitu`] reproduces that architecture: every rank rasterizes its own
+//! agents into an image tile (the per-rank geometry pass that dominates
+//! cost), tiles are composited sort-last into the final frame.
+//! [`provider`] is the `VisualizationProvider` interface (§2.5 modularity)
+//! used to render extra information such as the partitioning grid.
+
+pub mod export;
+pub mod insitu;
+pub mod provider;
+
+pub use insitu::{color_of_kind, render_agents, Image};
+pub use provider::{PartitionGridOverlay, VisualizationProvider};

@@ -1,0 +1,83 @@
+//! The `VisualizationProvider` interface (§2.5 modularity improvements):
+//! render additional information besides agents and fields. The paper uses
+//! an implementation of this interface to draw the partitioning grid
+//! (visible in its Fig. 5); [`PartitionGridOverlay`] does the same here.
+
+use super::insitu::Image;
+use crate::space::{Aabb, PartitionGrid};
+
+/// Renders auxiliary content on top of a composited frame.
+pub trait VisualizationProvider {
+    fn name(&self) -> &'static str;
+    /// Draw onto `img`, which covers `world` in the x/y plane.
+    fn render(&self, img: &mut Image, world: &Aabb);
+}
+
+/// Draws partition-box borders, colored by owning rank.
+pub struct PartitionGridOverlay<'a> {
+    pub grid: &'a PartitionGrid,
+}
+
+impl<'a> VisualizationProvider for PartitionGridOverlay<'a> {
+    fn name(&self) -> &'static str {
+        "partition_grid"
+    }
+
+    fn render(&self, img: &mut Image, world: &Aabb) {
+        let ext = world.extent();
+        let sx = img.width as f64 / ext.x.max(1e-12);
+        let sy = img.height as f64 / ext.y.max(1e-12);
+        let dims = self.grid.dims();
+        // Vertical lines at box borders.
+        for bx in 0..=dims[0] {
+            let wx = self.grid.whole().min.x + bx as f64 * self.grid.box_len();
+            let x = ((wx - world.min.x) * sx) as usize;
+            if x >= img.width {
+                continue;
+            }
+            for y in 0..img.height {
+                img.set(x, y, f32::INFINITY, [40, 40, 40]);
+            }
+        }
+        for by in 0..=dims[1] {
+            let wy = self.grid.whole().min.y + by as f64 * self.grid.box_len();
+            let y = ((wy - world.min.y) * sy) as usize;
+            if y >= img.height {
+                continue;
+            }
+            for x in 0..img.width {
+                img.set(x, y, f32::INFINITY, [40, 40, 40]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Vec3;
+
+    #[test]
+    fn overlay_draws_grid_lines() {
+        let world = Aabb::new(Vec3::ZERO, Vec3::splat(40.0));
+        let grid = PartitionGrid::new(world, 10.0);
+        let mut img = Image::new(40, 40);
+        let overlay = PartitionGridOverlay { grid: &grid };
+        assert_eq!(overlay.name(), "partition_grid");
+        overlay.render(&mut img, &world);
+        // Grid lines at x = 0, 10, 20, 30 world units -> px 0, 10, 20, 30.
+        assert_eq!(img.get(10, 5), [40, 40, 40]);
+        assert_eq!(img.get(5, 20), [40, 40, 40]);
+        assert_eq!(img.get(5, 5), [0, 0, 0]);
+    }
+
+    #[test]
+    fn overlay_wins_depth_test() {
+        let world = Aabb::new(Vec3::ZERO, Vec3::splat(40.0));
+        let grid = PartitionGrid::new(world, 10.0);
+        let mut img = Image::new(40, 40);
+        img.set(10, 10, 100.0, [255, 0, 0]);
+        PartitionGridOverlay { grid: &grid }.render(&mut img, &world);
+        assert_eq!(img.get(10, 10), [40, 40, 40], "overlay uses infinite depth");
+    }
+}

@@ -1,0 +1,78 @@
+//! Codec transparency: the serializer/compression choice (the Fig. 10/11
+//! axes) must never change simulation results — only its performance.
+//! Cell clustering is deterministic, so the final positions must be
+//! *bitwise identical* across all codec configurations.
+
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::io::{Compression, SerializerKind};
+use teraagent::metrics::Counter;
+use teraagent::models::cell_clustering::CellClustering;
+
+fn run(serializer: SerializerKind, compression: Compression) -> (Vec<[u64; 3]>, u64, u64) {
+    let cfg = SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 1_200,
+        iterations: 10,
+        space_half_extent: 35.0,
+        interaction_radius: 10.0,
+        seed: 99,
+        mode: ParallelMode::MpiHybrid { ranks: 3, threads_per_rank: 1 },
+        serializer,
+        compression,
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| CellClustering::new(&cfg));
+    let mut pos: Vec<[u64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    pos.sort();
+    (
+        pos,
+        result.report.counter_total(Counter::BytesSentRaw),
+        result.report.counter_total(Counter::BytesSentWire),
+    )
+}
+
+#[test]
+fn all_codec_configs_produce_identical_simulations() {
+    let (reference, _, _) = run(SerializerKind::TaIo, Compression::None);
+    for (s, c) in [
+        (SerializerKind::TaIo, Compression::Lz4),
+        (SerializerKind::TaIo, Compression::Lz4Delta { period: 4 }),
+        (SerializerKind::RootIo, Compression::None),
+        (SerializerKind::RootIo, Compression::Lz4),
+    ] {
+        let (pos, _, _) = run(s, c);
+        assert_eq!(
+            pos, reference,
+            "codec {}/{} changed the simulation",
+            s.name(),
+            c.name()
+        );
+    }
+}
+
+#[test]
+fn lz4_reduces_wire_bytes() {
+    let (_, raw_none, wire_none) = run(SerializerKind::TaIo, Compression::None);
+    let (_, raw_lz4, wire_lz4) = run(SerializerKind::TaIo, Compression::Lz4);
+    assert_eq!(raw_none, raw_lz4, "raw payload identical");
+    assert!(wire_none >= raw_none, "uncompressed wire ≈ raw + envelope");
+    assert!(
+        (wire_lz4 as f64) < 0.7 * wire_none as f64,
+        "LZ4 must compress: {wire_lz4} vs {wire_none}"
+    );
+}
+
+#[test]
+fn delta_reduces_wire_bytes_further() {
+    let (_, _, wire_lz4) = run(SerializerKind::TaIo, Compression::Lz4);
+    let (_, _, wire_delta) = run(SerializerKind::TaIo, Compression::Lz4Delta { period: 4 });
+    assert!(
+        (wire_delta as f64) < wire_lz4 as f64,
+        "delta must shrink steady-state traffic: {wire_delta} vs {wire_lz4}"
+    );
+}

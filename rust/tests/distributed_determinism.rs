@@ -1,0 +1,140 @@
+//! Distribution-transparency tests (the heart of the paper's correctness
+//! claim, §3.3): running the same model on 1, 2, or 4 ranks must produce
+//! the same simulation.
+//!
+//! Cell clustering is RNG-free after initialization and the engine
+//! gathers mechanics neighbors in a deterministic order, so the per-agent
+//! trajectories are *identical* across rank counts up to floating-point
+//! associativity — we compare the sorted final position multisets within
+//! a tight tolerance, and the stats histories exactly in structure.
+
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::models::cell_clustering::CellClustering;
+use teraagent::models::epidemiology::Epidemiology;
+use teraagent::space::BoundaryCondition;
+
+fn clustering_cfg(mode: ParallelMode) -> SimConfig {
+    SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 1_500,
+        iterations: 12,
+        space_half_extent: 40.0,
+        interaction_radius: 10.0,
+        seed: 2024,
+        mode,
+        ..Default::default()
+    }
+}
+
+fn final_positions(cfg: &SimConfig) -> Vec<[f64; 3]> {
+    let result = run_simulation(cfg, |_| CellClustering::new(cfg));
+    assert_eq!(result.final_agents as usize, cfg.num_agents);
+    let mut pos: Vec<[f64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| p.to_array())
+        .collect();
+    pos.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pos
+}
+
+fn assert_positions_match(a: &[[f64; 3]], b: &[[f64; 3]], tol: f64, label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: agent counts differ");
+    for (i, (pa, pb)) in a.iter().zip(b).enumerate() {
+        for d in 0..3 {
+            assert!(
+                (pa[d] - pb[d]).abs() < tol,
+                "{label}: agent {i} axis {d}: {} vs {}",
+                pa[d],
+                pb[d]
+            );
+        }
+    }
+}
+
+#[test]
+fn one_vs_two_ranks_identical() {
+    let p1 = final_positions(&clustering_cfg(ParallelMode::OpenMp { threads: 1 }));
+    let p2 = final_positions(&clustering_cfg(ParallelMode::MpiHybrid {
+        ranks: 2,
+        threads_per_rank: 1,
+    }));
+    assert_positions_match(&p1, &p2, 1e-6, "1 vs 2 ranks");
+}
+
+#[test]
+fn two_vs_four_ranks_identical() {
+    let p2 = final_positions(&clustering_cfg(ParallelMode::MpiHybrid {
+        ranks: 2,
+        threads_per_rank: 1,
+    }));
+    let p4 = final_positions(&clustering_cfg(ParallelMode::MpiOnly { ranks: 4 }));
+    assert_positions_match(&p2, &p4, 1e-6, "2 vs 4 ranks");
+}
+
+#[test]
+fn threads_do_not_change_results() {
+    let a = final_positions(&clustering_cfg(ParallelMode::MpiHybrid {
+        ranks: 2,
+        threads_per_rank: 1,
+    }));
+    let b = final_positions(&clustering_cfg(ParallelMode::MpiHybrid {
+        ranks: 2,
+        threads_per_rank: 4,
+    }));
+    assert_positions_match(&a, &b, 1e-9, "1 vs 4 threads per rank");
+}
+
+#[test]
+fn same_seed_same_run_exactly() {
+    let cfg = clustering_cfg(ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 2 });
+    let a = final_positions(&cfg);
+    let b = final_positions(&cfg);
+    assert_eq!(a, b, "replay must be bitwise identical");
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut c1 = clustering_cfg(ParallelMode::OpenMp { threads: 1 });
+    let mut c2 = clustering_cfg(ParallelMode::OpenMp { threads: 1 });
+    c1.seed = 1;
+    c2.seed = 2;
+    let a = final_positions(&c1);
+    let b = final_positions(&c2);
+    assert!(a.iter().zip(&b).any(|(x, y)| x != y), "seeds must matter");
+}
+
+#[test]
+fn epidemiology_population_statistics_stable_across_ranks() {
+    // RNG-bearing models cannot be bitwise identical across rank counts
+    // (per-rank streams), but the aggregate epidemic must be statistically
+    // equivalent: same attack-rate ballpark and exact conservation.
+    let run = |ranks: usize| {
+        let cfg = SimConfig {
+            name: "epidemiology".into(),
+            num_agents: 3_000,
+            iterations: 50,
+            space_half_extent: 20.0,
+            interaction_radius: 2.0,
+            boundary: BoundaryCondition::Toroidal,
+            seed: 7,
+            mode: if ranks == 1 {
+                ParallelMode::OpenMp { threads: 1 }
+            } else {
+                ParallelMode::MpiHybrid { ranks, threads_per_rank: 1 }
+            },
+            ..Default::default()
+        };
+        let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+        for row in &result.stats_history {
+            assert_eq!((row[0] + row[1] + row[2]) as usize, 3_000, "conservation");
+        }
+        let last = result.stats_history.last().unwrap().clone();
+        (3_000.0 - last[0]) / 3_000.0 // attack rate
+    };
+    let a1 = run(1);
+    let a4 = run(4);
+    assert!(a1 > 0.5 && a4 > 0.5, "epidemic must take off: {a1} {a4}");
+    assert!((a1 - a4).abs() < 0.15, "attack rates must agree: {a1} vs {a4}");
+}

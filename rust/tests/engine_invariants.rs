@@ -1,0 +1,147 @@
+//! Engine invariants under churn: load balancing, agent sorting, boundary
+//! conditions and heavy migration must never lose, duplicate, or corrupt
+//! agents.
+
+use teraagent::config::{BalanceMethod, ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::metrics::Counter;
+use teraagent::models::cell_clustering::CellClustering;
+use teraagent::models::cell_proliferation::CellProliferation;
+use teraagent::models::epidemiology::Epidemiology;
+use teraagent::space::BoundaryCondition;
+
+fn epi_cfg() -> SimConfig {
+    SimConfig {
+        name: "epidemiology".into(),
+        num_agents: 2_000,
+        iterations: 30,
+        space_half_extent: 20.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Toroidal,
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn migration_conserves_population_with_rcb_balancing() {
+    let mut cfg = epi_cfg();
+    cfg.balance_method = BalanceMethod::Rcb;
+    cfg.balance_every = 5;
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+    assert_eq!(result.final_agents, 2_000);
+    for (i, row) in result.stats_history.iter().enumerate() {
+        assert_eq!((row[0] + row[1] + row[2]) as u64, 2_000, "iteration {i}");
+    }
+    // Balancing actually moved boxes at least once.
+    let moved = result.report.counter_total(Counter::BoxesRebalanced);
+    assert!(moved > 0, "RCB should have rebalanced something");
+}
+
+#[test]
+fn migration_conserves_population_with_diffusive_balancing() {
+    let mut cfg = epi_cfg();
+    cfg.balance_method = BalanceMethod::Diffusive;
+    cfg.balance_every = 4;
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+    assert_eq!(result.final_agents, 2_000);
+}
+
+#[test]
+fn agent_sorting_preserves_simulation() {
+    // Same clustering run with and without periodic agent sorting must be
+    // identical: sorting only reorders memory.
+    let base = SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 800,
+        iterations: 12,
+        space_half_extent: 30.0,
+        interaction_radius: 10.0,
+        seed: 5,
+        mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let sorted_cfg = SimConfig { sort_every: 3, ..base.clone() };
+    let a = run_simulation(&base, |_| CellClustering::new(&base));
+    let b = run_simulation(&sorted_cfg, |_| CellClustering::new(&sorted_cfg));
+    let key = |r: &teraagent::engine::launcher::RunResult| {
+        let mut v: Vec<[u64; 3]> = r
+            .final_snapshot
+            .iter()
+            .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(key(&a), key(&b), "agent sorting changed simulation results");
+}
+
+#[test]
+fn proliferation_under_balancing_is_consistent() {
+    let cfg = SimConfig {
+        name: "cell_proliferation".into(),
+        num_agents: 150,
+        iterations: 10,
+        space_half_extent: 60.0,
+        interaction_radius: 10.0,
+        balance_method: BalanceMethod::Rcb,
+        balance_every: 3,
+        sort_every: 4,
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| CellProliferation::new(&cfg));
+    // Count in stats equals actual survivors.
+    assert_eq!(result.stats_history.last().unwrap()[0] as u64, result.final_agents);
+    assert!(result.final_agents > 150, "population must grow");
+}
+
+#[test]
+fn all_positions_inside_closed_boundary() {
+    let cfg = SimConfig {
+        name: "epidemiology".into(),
+        num_agents: 1_000,
+        iterations: 20,
+        space_half_extent: 10.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Closed,
+        mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 1 },
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+    let whole = cfg.whole_space();
+    for (p, _, _) in &result.final_snapshot {
+        assert!(whole.contains(*p), "agent escaped closed boundary: {p:?}");
+    }
+}
+
+#[test]
+fn toroidal_positions_inside_domain() {
+    let cfg = SimConfig {
+        name: "epidemiology".into(),
+        num_agents: 1_000,
+        iterations: 20,
+        space_half_extent: 10.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Toroidal,
+        mode: ParallelMode::MpiOnly { ranks: 3 },
+        ..Default::default()
+    };
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+    let whole = cfg.whole_space();
+    for (p, _, _) in &result.final_snapshot {
+        assert!(whole.contains(*p), "agent escaped toroidal domain: {p:?}");
+    }
+    assert_eq!(result.final_agents, 1_000);
+}
+
+#[test]
+fn migration_counter_nonzero_for_mobile_agents() {
+    let cfg = epi_cfg();
+    let result = run_simulation(&cfg, |_| Epidemiology::new(&cfg));
+    assert!(
+        result.report.counter_total(Counter::AgentsMigratedOut) > 0,
+        "random walkers must cross rank borders"
+    );
+    assert!(result.report.counter_total(Counter::AuraAgentsSent) > 0);
+}

@@ -1,0 +1,71 @@
+//! L3 ↔ L2/L1 integration: a full simulation through the AOT-compiled
+//! JAX/Pallas mechanics artifact must match the native-oracle run.
+//! Both paths implement the identical f32 force model, so trajectories
+//! agree to within accumulation-order noise.
+//!
+//! Skipped (with a notice) when `make artifacts` has not been run.
+
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation;
+use teraagent::models::cell_clustering::CellClustering;
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/mechanics.hlo.txt")
+        .exists()
+}
+
+fn cfg(use_pjrt: bool) -> SimConfig {
+    SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 2_500, // > AOT_N to exercise multi-batch padding
+        iterations: 6,
+        space_half_extent: 40.0,
+        interaction_radius: 10.0,
+        seed: 31,
+        use_pjrt,
+        mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 1 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_simulation_matches_native_oracle() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let native_cfg = cfg(false);
+    let pjrt_cfg = cfg(true);
+    let native = run_simulation(&native_cfg, |_| CellClustering::new(&native_cfg));
+    let pjrt = run_simulation(&pjrt_cfg, |_| CellClustering::new(&pjrt_cfg));
+    assert!(pjrt.used_pjrt, "artifact must actually be used");
+    assert!(!native.used_pjrt);
+    assert_eq!(native.final_agents, pjrt.final_agents);
+    let sort_key = |r: &teraagent::engine::launcher::RunResult| {
+        let mut v: Vec<[f64; 3]> =
+            r.final_snapshot.iter().map(|(p, _, _)| p.to_array()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    };
+    let a = sort_key(&native);
+    let b = sort_key(&pjrt);
+    let mut max_err = 0.0f64;
+    for (pa, pb) in a.iter().zip(&b) {
+        for d in 0..3 {
+            max_err = max_err.max((pa[d] - pb[d]).abs());
+        }
+    }
+    // f32 kernel, 6 integration steps: tiny accumulation differences from
+    // XLA fusion order are acceptable; trajectories must stay glued.
+    assert!(max_err < 1e-2, "PJRT vs native max position error {max_err}");
+}
+
+#[test]
+fn pjrt_flag_without_artifacts_falls_back() {
+    let mut c = cfg(true);
+    c.artifacts_dir = "/nonexistent".into();
+    let result = run_simulation(&c, |_| CellClustering::new(&c));
+    assert!(!result.used_pjrt, "must fall back to native");
+    assert_eq!(result.final_agents, 2_500);
+}
