@@ -1,0 +1,292 @@
+//! NSG / gather micro-benchmark: the spatial hot path in isolation.
+//!
+//! Measures the flat-arena NSG (handle tables + pooled buckets + SoA
+//! mirror) against the seed implementation (`Vec<Vec<_>>` cells +
+//! `HashMap` index) on the four per-iteration operations — incremental
+//! position update, 27-cell neighbor query, aura add/clear cycle, bulk
+//! build — plus the mechanics K-nearest gather reading agent attributes
+//! through the `ResourceManager` SoA columns vs. `Vec<Option<Agent>>`
+//! chasing. Emits `BENCH_nsg.json` at the repo root; the acceptance bar
+//! for the arena rewrite is ≥ 2x on update + query at 100k agents.
+
+#[path = "harness.rs"]
+mod harness;
+#[path = "support/nsg_baseline.rs"]
+mod nsg_baseline;
+
+use harness::*;
+use nsg_baseline::BaselineGrid;
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::core::ids::LocalId;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::space::{Aabb, NeighborSearchGrid, NsgEntry};
+use teraagent::util::{Rng, Vec3};
+
+const N_AGENTS: usize = 100_000;
+const N_AURA: usize = 10_000;
+const RADIUS: f64 = 10.0;
+const SIDE: f64 = 400.0;
+const K: usize = 16;
+
+struct Workload {
+    /// Initial agent positions (slot i <-> LocalId(i, 0)).
+    pos: Vec<Vec3>,
+    /// Displaced positions for the incremental-update phase.
+    moved: Vec<Vec3>,
+    /// Aura positions for the add/clear cycle.
+    aura: Vec<Vec3>,
+}
+
+fn workload() -> Workload {
+    let mut rng = Rng::new(0x5EED_516);
+    let rnd = |rng: &mut Rng| Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3]));
+    let pos: Vec<Vec3> = (0..N_AGENTS).map(|_| rnd(&mut rng)).collect();
+    // Small displacements: most stay in-cell, some cross (the mechanics
+    // step profile).
+    let moved = pos
+        .iter()
+        .map(|p| {
+            let d = Vec3::new(
+                rng.uniform_range(-3.0, 3.0),
+                rng.uniform_range(-3.0, 3.0),
+                rng.uniform_range(-3.0, 3.0),
+            );
+            (*p + d).clamp(Vec3::ZERO, Vec3::splat(SIDE - 1e-9))
+        })
+        .collect();
+    let aura = (0..N_AURA).map(|_| rnd(&mut rng)).collect();
+    Workload { pos, moved, aura }
+}
+
+fn bounds() -> Aabb {
+    Aabb::new(Vec3::ZERO, Vec3::splat(SIDE))
+}
+
+fn oid(i: usize) -> NsgEntry {
+    NsgEntry::Owned(LocalId::new(i as u32, 0))
+}
+
+#[derive(Clone, Copy)]
+struct Series {
+    build: f64,
+    update: f64,
+    query: f64,
+    aura_cycle: f64,
+}
+
+fn run_arena(w: &Workload) -> (Series, u64) {
+    let build = measure(1, 3, || {
+        let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+        for (i, p) in w.pos.iter().enumerate() {
+            g.add(oid(i), *p);
+        }
+        g.len() as u64
+    });
+    let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+    for (i, p) in w.pos.iter().enumerate() {
+        g.add(oid(i), *p);
+    }
+    // Incremental update: move everything out and back (2N updates/run).
+    let update = measure(1, 5, || {
+        for (i, p) in w.moved.iter().enumerate() {
+            g.update_position(oid(i), *p);
+        }
+        for (i, p) in w.pos.iter().enumerate() {
+            g.update_position(oid(i), *p);
+        }
+    });
+    let mut checksum = 0u64;
+    let query = measure(1, 5, || {
+        let mut hits = 0u64;
+        for p in &w.pos {
+            g.for_each_neighbor(*p, RADIUS, None, |_, _, _| hits += 1);
+        }
+        checksum = hits;
+        hits
+    });
+    let aura_cycle = measure(1, 5, || {
+        for (i, p) in w.aura.iter().enumerate() {
+            g.add(NsgEntry::Aura(i as u32), *p);
+        }
+        g.clear_aura();
+    });
+    (
+        Series {
+            build: build.median,
+            update: update.median,
+            query: query.median,
+            aura_cycle: aura_cycle.median,
+        },
+        checksum,
+    )
+}
+
+fn run_baseline(w: &Workload) -> (Series, u64) {
+    let build = measure(1, 3, || {
+        let mut g = BaselineGrid::new(bounds(), RADIUS);
+        for (i, p) in w.pos.iter().enumerate() {
+            g.add(oid(i), *p);
+        }
+        g.len() as u64
+    });
+    let mut g = BaselineGrid::new(bounds(), RADIUS);
+    for (i, p) in w.pos.iter().enumerate() {
+        g.add(oid(i), *p);
+    }
+    let update = measure(1, 5, || {
+        for (i, p) in w.moved.iter().enumerate() {
+            g.update_position(oid(i), *p);
+        }
+        for (i, p) in w.pos.iter().enumerate() {
+            g.update_position(oid(i), *p);
+        }
+    });
+    let mut checksum = 0u64;
+    let query = measure(1, 5, || {
+        let mut hits = 0u64;
+        for p in &w.pos {
+            g.for_each_neighbor(*p, RADIUS, None, |_, _, _| hits += 1);
+        }
+        checksum = hits;
+        hits
+    });
+    let aura_cycle = measure(1, 5, || {
+        for (i, p) in w.aura.iter().enumerate() {
+            g.add(NsgEntry::Aura(i as u32), *p);
+        }
+        g.clear_aura();
+    });
+    (
+        Series {
+            build: build.median,
+            update: update.median,
+            query: query.median,
+            aura_cycle: aura_cycle.median,
+        },
+        checksum,
+    )
+}
+
+/// Mechanics K-nearest gather throughput: SoA columns vs AoS chasing.
+/// Both run on the arena NSG so the delta isolates the attribute reads.
+fn run_gather(w: &Workload) -> (f64, f64) {
+    let mut rm = ResourceManager::new(0);
+    let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+    let mut ids: Vec<LocalId> = Vec::with_capacity(N_AGENTS);
+    for p in &w.pos {
+        let id = rm.add(Agent::cell(*p, RADIUS * 0.6, CellType::A));
+        g.add(NsgEntry::Owned(id), *p);
+        ids.push(id);
+    }
+    let mut scratch: Vec<(f64, Vec3, f64)> = Vec::with_capacity(64);
+    let gather = |use_soa: bool, scratch: &mut Vec<(f64, Vec3, f64)>| -> u64 {
+        let mut picked = 0u64;
+        for &id in &ids {
+            let pos = if use_soa {
+                rm.col_position(id.index)
+            } else {
+                rm.get(id).unwrap().position
+            };
+            scratch.clear();
+            g.for_each_neighbor(pos, RADIUS, Some(NsgEntry::Owned(id)), |entry, npos, d2| {
+                let diam = match entry {
+                    NsgEntry::Owned(nid) => {
+                        if use_soa {
+                            rm.col_diameter(nid.index)
+                        } else {
+                            rm.get(nid).unwrap().diameter
+                        }
+                    }
+                    NsgEntry::Aura(_) => unreachable!(),
+                };
+                scratch.push((d2, npos, diam));
+            });
+            scratch.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            picked += scratch.len().min(K) as u64;
+        }
+        picked
+    };
+    let aos = measure(1, 3, || gather(false, &mut scratch));
+    let soa = measure(1, 3, || gather(true, &mut scratch));
+    (soa.median, aos.median)
+}
+
+fn ratio(base: f64, new: f64) -> f64 {
+    if new > 0.0 {
+        base / new
+    } else {
+        f64::INFINITY
+    }
+}
+
+fn main() {
+    header("nsg_micro — spatial core micro-benchmark", "§2.5 (NSG), ROADMAP perf trajectory");
+    let w = workload();
+
+    let (base, base_hits) = run_baseline(&w);
+    let (arena, arena_hits) = run_arena(&w);
+    assert_eq!(
+        base_hits, arena_hits,
+        "baseline and arena NSG disagree on query results"
+    );
+    let (gather_soa, gather_aos) = run_gather(&w);
+
+    row_strs(&["op", "seed", "arena", "speedup"]);
+    let print_row = |op: &str, b: f64, a: f64| {
+        row(&[op.to_string(), fmt_secs(b), fmt_secs(a), format!("{:.2}x", ratio(b, a))]);
+    };
+    print_row("build 100k", base.build, arena.build);
+    print_row("update 2x100k", base.update, arena.update);
+    print_row("query 100k", base.query, arena.query);
+    print_row("aura 10k+clear", base.aura_cycle, arena.aura_cycle);
+    print_row("gather (aos->soa)", gather_aos, gather_soa);
+    println!("  query checksum: {arena_hits} neighbor visits");
+
+    // ops/sec for the trajectory file (update counts 2N ops per run).
+    let json = format!(
+        r#"{{
+  "bench": "nsg_micro",
+  "agents": {N_AGENTS},
+  "aura": {N_AURA},
+  "radius": {RADIUS},
+  "seed": {{
+    "build_s": {:.6e}, "update_s": {:.6e}, "query_s": {:.6e}, "aura_cycle_s": {:.6e},
+    "update_ops_per_s": {:.3e}, "query_ops_per_s": {:.3e}
+  }},
+  "arena": {{
+    "build_s": {:.6e}, "update_s": {:.6e}, "query_s": {:.6e}, "aura_cycle_s": {:.6e},
+    "update_ops_per_s": {:.3e}, "query_ops_per_s": {:.3e}
+  }},
+  "gather": {{ "aos_s": {:.6e}, "soa_s": {:.6e}, "speedup": {:.3} }},
+  "speedup": {{
+    "build": {:.3}, "update": {:.3}, "query": {:.3}, "aura_cycle": {:.3}
+  }},
+  "query_checksum": {arena_hits}
+}}
+"#,
+        base.build,
+        base.update,
+        base.query,
+        base.aura_cycle,
+        2.0 * N_AGENTS as f64 / base.update,
+        N_AGENTS as f64 / base.query,
+        arena.build,
+        arena.update,
+        arena.query,
+        arena.aura_cycle,
+        2.0 * N_AGENTS as f64 / arena.update,
+        N_AGENTS as f64 / arena.query,
+        gather_aos,
+        gather_soa,
+        ratio(gather_aos, gather_soa),
+        ratio(base.build, arena.build),
+        ratio(base.update, arena.update),
+        ratio(base.query, arena.query),
+        ratio(base.aura_cycle, arena.aura_cycle),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_nsg.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("  wrote {}", out.display()),
+        Err(e) => eprintln!("  could not write {}: {e}", out.display()),
+    }
+}

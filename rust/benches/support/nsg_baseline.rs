@@ -1,0 +1,141 @@
+//! The pre-arena NSG implementation (`Vec<Vec<Slot>>` cells + a
+//! `HashMap<NsgEntry, (cell, slot)>` index), kept verbatim as the
+//! benchmark baseline so `nsg_micro` measures the arena rewrite against
+//! the exact seed data structure.
+
+#![allow(dead_code)]
+
+use std::collections::HashMap;
+use teraagent::space::{Aabb, NsgEntry};
+use teraagent::util::Vec3;
+
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    entry: NsgEntry,
+    pos: Vec3,
+}
+
+/// Seed implementation: per-cell heap vectors, hash-indexed updates.
+#[derive(Debug)]
+pub struct BaselineGrid {
+    bounds: Aabb,
+    cell: f64,
+    dims: [usize; 3],
+    cells: Vec<Vec<Slot>>,
+    index: HashMap<NsgEntry, (u32, u32)>,
+}
+
+impl BaselineGrid {
+    pub fn new(bounds: Aabb, cell: f64) -> Self {
+        assert!(cell > 0.0);
+        let e = bounds.extent();
+        let dims = [
+            ((e.x / cell).ceil() as usize).max(1),
+            ((e.y / cell).ceil() as usize).max(1),
+            ((e.z / cell).ceil() as usize).max(1),
+        ];
+        let n = dims[0] * dims[1] * dims[2];
+        BaselineGrid { bounds, cell, dims, cells: vec![Vec::new(); n], index: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    #[inline]
+    fn coords_of(&self, p: Vec3) -> [usize; 3] {
+        let rel = p - self.bounds.min;
+        let cv = |v: f64, d: usize| -> usize {
+            if v <= 0.0 {
+                0
+            } else {
+                ((v / self.cell) as usize).min(d - 1)
+            }
+        };
+        [cv(rel.x, self.dims[0]), cv(rel.y, self.dims[1]), cv(rel.z, self.dims[2])]
+    }
+
+    #[inline]
+    fn cell_index(&self, c: [usize; 3]) -> usize {
+        (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
+    }
+
+    pub fn add(&mut self, entry: NsgEntry, pos: Vec3) {
+        let ci = self.cell_index(self.coords_of(pos));
+        let slot = self.cells[ci].len() as u32;
+        self.cells[ci].push(Slot { entry, pos });
+        self.index.insert(entry, (ci as u32, slot));
+    }
+
+    pub fn remove(&mut self, entry: NsgEntry) -> bool {
+        let Some((ci, slot)) = self.index.remove(&entry) else {
+            return false;
+        };
+        let (ci, slot) = (ci as usize, slot as usize);
+        let cell = &mut self.cells[ci];
+        cell.swap_remove(slot);
+        if slot < cell.len() {
+            let moved = cell[slot].entry;
+            self.index.insert(moved, (ci as u32, slot as u32));
+        }
+        true
+    }
+
+    pub fn update_position(&mut self, entry: NsgEntry, new_pos: Vec3) {
+        let Some(&(ci, slot)) = self.index.get(&entry) else {
+            self.add(entry, new_pos);
+            return;
+        };
+        let new_ci = self.cell_index(self.coords_of(new_pos)) as u32;
+        if new_ci == ci {
+            self.cells[ci as usize][slot as usize].pos = new_pos;
+        } else {
+            self.remove(entry);
+            self.add(entry, new_pos);
+        }
+    }
+
+    pub fn clear_aura(&mut self) {
+        let aura_entries: Vec<NsgEntry> = self
+            .index
+            .keys()
+            .filter(|e| matches!(e, NsgEntry::Aura(_)))
+            .copied()
+            .collect();
+        for e in aura_entries {
+            self.remove(e);
+        }
+    }
+
+    pub fn for_each_neighbor(
+        &self,
+        center: Vec3,
+        radius: f64,
+        exclude: Option<NsgEntry>,
+        mut f: impl FnMut(NsgEntry, Vec3, f64),
+    ) {
+        let r2 = radius * radius;
+        let lo = self.coords_of(center - Vec3::splat(radius));
+        let hi = self.coords_of(center + Vec3::splat(radius));
+        for cz in lo[2]..=hi[2] {
+            for cy in lo[1]..=hi[1] {
+                for cx in lo[0]..=hi[0] {
+                    let ci = self.cell_index([cx, cy, cz]);
+                    for s in &self.cells[ci] {
+                        if Some(s.entry) == exclude {
+                            continue;
+                        }
+                        let d2 = s.pos.distance_sq(center);
+                        if d2 <= r2 {
+                            f(s.entry, s.pos, d2);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

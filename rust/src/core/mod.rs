@@ -8,4 +8,4 @@ pub mod resource_manager;
 
 pub use agent::{Agent, AgentKind, Behavior, CellType, SirState};
 pub use ids::{AgentPointer, GlobalId, LocalId};
-pub use resource_manager::ResourceManager;
+pub use resource_manager::{AgentRefMut, ResourceManager};

@@ -7,11 +7,69 @@
 //! ranks are stored separately and rebuilt every iteration. A
 //! `GlobalId → slot` map supports [`AgentPointer`](super::ids::AgentPointer)
 //! resolution and delta-encoding reference matching.
+//!
+//! # SoA hot-path mirror
+//!
+//! The per-iteration spatial hot path (mechanics gather, neighbor-attribute
+//! reads) only needs three attributes per agent: position, diameter and
+//! kind (the kind payload carries the adhesion coefficient). Chasing them
+//! through `Vec<Option<Agent>>` costs an `Option` branch plus a 100+-byte
+//! stride per access, so the manager keeps a structure-of-arrays mirror —
+//! contiguous `pos`/`diam`/`kind` columns indexed by slot — and serves hot
+//! reads from it ([`positions`](ResourceManager::positions),
+//! [`col_position`](ResourceManager::col_position), …).
+//!
+//! The mirror is synchronized at every mutation point: `add`, the
+//! [`set_position`](ResourceManager::set_position) fast path, and
+//! `sort_by_position` write it directly, while [`get_mut`]
+//! (ResourceManager::get_mut) returns an [`AgentRefMut`] guard that writes
+//! the three columns back when dropped — models can keep mutating agents
+//! through it without knowing the mirror exists. Columns of freed slots
+//! hold stale values by design; they are only read through live `LocalId`s
+//! (the NSG handle protocol guarantees liveness on the query path).
 
-use super::agent::Agent;
+use super::agent::{Agent, AgentKind, CellType};
 use super::ids::{GlobalId, GlobalIdSource, LocalId};
 use crate::util::Vec3;
 use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+
+/// Column filler for never-written slots (only live slots are ever read).
+const KIND_FILL: AgentKind = AgentKind::Cell { cell_type: CellType::A, adhesion: 0.0 };
+
+/// Mutable agent borrow that writes the hot-path SoA columns back on drop,
+/// so arbitrary model mutations keep the mirror coherent.
+pub struct AgentRefMut<'a> {
+    agent: &'a mut Agent,
+    pos: &'a mut Vec3,
+    diam: &'a mut f64,
+    kind: &'a mut AgentKind,
+}
+
+impl Deref for AgentRefMut<'_> {
+    type Target = Agent;
+
+    #[inline]
+    fn deref(&self) -> &Agent {
+        self.agent
+    }
+}
+
+impl DerefMut for AgentRefMut<'_> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut Agent {
+        self.agent
+    }
+}
+
+impl Drop for AgentRefMut<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        *self.pos = self.agent.position;
+        *self.diam = self.agent.diameter;
+        *self.kind = self.agent.kind;
+    }
+}
 
 /// Per-rank agent container.
 #[derive(Debug)]
@@ -24,6 +82,10 @@ pub struct ResourceManager {
     free: Vec<u32>,
     /// Number of live (owned) agents.
     live: usize,
+    /// SoA mirror of the hot attributes, indexed by slot.
+    pos_col: Vec<Vec3>,
+    diam_col: Vec<f64>,
+    kind_col: Vec<AgentKind>,
     /// Aura agents (read-only copies of neighbor-rank agents).
     aura: Vec<Agent>,
     /// GlobalId -> owned slot index, for pointer resolution.
@@ -39,6 +101,9 @@ impl ResourceManager {
             reuse: Vec::new(),
             free: Vec::new(),
             live: 0,
+            pos_col: Vec::new(),
+            diam_col: Vec::new(),
+            kind_col: Vec::new(),
             aura: Vec::new(),
             global_map: HashMap::new(),
             id_source: GlobalIdSource::new(rank),
@@ -68,6 +133,9 @@ impl ResourceManager {
             None => {
                 self.slots.push(None);
                 self.reuse.push(0);
+                self.pos_col.push(Vec3::ZERO);
+                self.diam_col.push(0.0);
+                self.kind_col.push(KIND_FILL);
                 (self.slots.len() - 1) as u32
             }
         };
@@ -77,6 +145,9 @@ impl ResourceManager {
             self.global_map.insert(agent.global_id, index);
         }
         debug_assert!(self.slots[index as usize].is_none());
+        self.pos_col[index as usize] = agent.position;
+        self.diam_col[index as usize] = agent.diameter;
+        self.kind_col[index as usize] = agent.kind;
         self.slots[index as usize] = Some(agent);
         self.live += 1;
         id
@@ -89,7 +160,9 @@ impl ResourceManager {
             return None;
         }
         let agent = self.slots[idx].take()?;
-        // Bump reuse so stale ids can't resolve; recycle the slot.
+        // Bump reuse so stale ids can't resolve; recycle the slot. (The
+        // SoA columns keep their now-stale values; only live ids read
+        // them.)
         self.reuse[idx] = self.reuse[idx].wrapping_add(1);
         self.free.push(id.index);
         self.live -= 1;
@@ -109,15 +182,82 @@ impl ResourceManager {
         self.slots[idx].as_ref()
     }
 
-    /// Mutably borrow an agent by local id.
+    /// Mutably borrow an agent by local id. The returned guard derefs to
+    /// `Agent` and flushes the hot-path columns when dropped.
     #[inline]
-    pub fn get_mut(&mut self, id: LocalId) -> Option<&mut Agent> {
+    pub fn get_mut(&mut self, id: LocalId) -> Option<AgentRefMut<'_>> {
         let idx = id.index as usize;
         if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
             return None;
         }
-        self.slots[idx].as_mut()
+        let agent = self.slots[idx].as_mut()?;
+        Some(AgentRefMut {
+            agent,
+            pos: &mut self.pos_col[idx],
+            diam: &mut self.diam_col[idx],
+            kind: &mut self.kind_col[idx],
+        })
     }
+
+    /// O(1) position write-through: updates the agent and the `pos`
+    /// column without materializing a guard (the mechanics apply loop and
+    /// `World::move_agent` fast path). Returns `false` for stale ids.
+    #[inline]
+    pub fn set_position(&mut self, id: LocalId, pos: Vec3) -> bool {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
+            return false;
+        }
+        match self.slots[idx].as_mut() {
+            Some(a) => {
+                a.position = pos;
+                self.pos_col[idx] = pos;
+                true
+            }
+            None => false,
+        }
+    }
+
+    // ----- SoA mirror reads ------------------------------------------------
+
+    /// Contiguous position column (indexed by slot; stale for holes).
+    #[inline]
+    pub fn positions(&self) -> &[Vec3] {
+        &self.pos_col
+    }
+
+    /// Contiguous diameter column (indexed by slot; stale for holes).
+    #[inline]
+    pub fn diameters(&self) -> &[f64] {
+        &self.diam_col
+    }
+
+    /// Contiguous kind column (indexed by slot; stale for holes). The
+    /// kind payload carries the per-class adhesion coefficient.
+    #[inline]
+    pub fn kinds(&self) -> &[AgentKind] {
+        &self.kind_col
+    }
+
+    /// Position of the agent in slot `index` (must be live).
+    #[inline]
+    pub fn col_position(&self, index: u32) -> Vec3 {
+        self.pos_col[index as usize]
+    }
+
+    /// Diameter of the agent in slot `index` (must be live).
+    #[inline]
+    pub fn col_diameter(&self, index: u32) -> f64 {
+        self.diam_col[index as usize]
+    }
+
+    /// Kind of the agent in slot `index` (must be live).
+    #[inline]
+    pub fn col_kind(&self, index: u32) -> AgentKind {
+        self.kind_col[index as usize]
+    }
+
+    // -----------------------------------------------------------------------
 
     /// Resolve an agent by *global* id (owned agents only). This is the
     /// `AgentPointer` indirection: global id -> map -> reference.
@@ -147,14 +287,18 @@ impl ResourceManager {
         self.slots.iter().filter_map(|s| s.as_ref())
     }
 
-    /// Iterate live owned agents mutably.
-    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Agent> {
-        self.slots.iter_mut().filter_map(|s| s.as_mut())
-    }
-
-    /// Live local ids (snapshot).
+    /// Live local ids (snapshot, slot order).
     pub fn ids(&self) -> Vec<LocalId> {
         self.iter().map(|a| a.local_id).collect()
+    }
+
+    /// Append live local ids into `out` (slot order) — the
+    /// allocation-free variant for per-iteration scratch reuse.
+    pub fn collect_ids(&self, out: &mut Vec<LocalId>) {
+        out.reserve(self.live); // no-op once the buffer reached steady state
+        for a in self.iter() {
+            out.push(a.local_id);
+        }
     }
 
     // ----- aura ------------------------------------------------------------
@@ -182,7 +326,9 @@ impl ResourceManager {
     /// are close in memory (Morton order), improving cache hit rate. All
     /// agents move to fresh slots; local ids are reassigned; this is also
     /// the point where buffers of migrated-in agents are compacted away
-    /// (the paper's deferred-deallocation story).
+    /// (the paper's deferred-deallocation story). The SoA mirror is
+    /// rebuilt in the same pass, so after sorting the hot columns stream
+    /// in Morton order too.
     pub fn sort_by_position(&mut self, origin: Vec3, cell: f64) {
         let mut agents: Vec<Agent> = self
             .slots
@@ -198,6 +344,12 @@ impl ResourceManager {
         self.slots.clear();
         self.slots.resize_with(agents.len(), || None);
         self.reuse.resize(agents.len().max(self.reuse.len()), 0);
+        self.pos_col.clear();
+        self.pos_col.resize(agents.len(), Vec3::ZERO);
+        self.diam_col.clear();
+        self.diam_col.resize(agents.len(), 0.0);
+        self.kind_col.clear();
+        self.kind_col.resize(agents.len(), KIND_FILL);
         self.free.clear();
         self.global_map.clear();
         self.live = 0;
@@ -208,6 +360,9 @@ impl ResourceManager {
             if a.global_id.is_set() {
                 self.global_map.insert(a.global_id, i as u32);
             }
+            self.pos_col[i] = a.position;
+            self.diam_col[i] = a.diameter;
+            self.kind_col[i] = a.kind;
             self.slots[i] = Some(a);
             self.live += 1;
         }
@@ -218,6 +373,9 @@ impl ResourceManager {
         let slot_bytes = self.slots.capacity() * std::mem::size_of::<Option<Agent>>();
         let aux = self.reuse.capacity() * 4
             + self.free.capacity() * 4
+            + self.pos_col.capacity() * std::mem::size_of::<Vec3>()
+            + self.diam_col.capacity() * 8
+            + self.kind_col.capacity() * std::mem::size_of::<AgentKind>()
             + self.global_map.len() * (std::mem::size_of::<GlobalId>() + 8);
         let behaviors: usize = self
             .iter()
@@ -290,6 +448,7 @@ mod tests {
         rm.add(mk(Vec3::ZERO));
         assert!(rm.get_mut(id1).is_none());
         assert!(rm.remove(id1).is_none());
+        assert!(!rm.set_position(id1, Vec3::splat(1.0)));
     }
 
     #[test]
@@ -344,6 +503,11 @@ mod tests {
         let mut sorted = xs.clone();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(xs, sorted);
+        // The SoA mirror was rebuilt in the same order.
+        for a in rm.iter() {
+            assert_eq!(rm.col_position(a.local_id.index), a.position);
+            assert_eq!(rm.col_diameter(a.local_id.index), a.diameter);
+        }
     }
 
     #[test]
@@ -365,5 +529,72 @@ mod tests {
             rm.add(mk(Vec3::ZERO));
         }
         assert!(rm.approx_bytes() > 0);
+    }
+
+    // ----- SoA mirror coherence --------------------------------------------
+
+    #[test]
+    fn soa_mirror_tracks_add_and_set_position() {
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add(mk(Vec3::new(1.0, 2.0, 3.0)));
+        assert_eq!(rm.col_position(id.index), Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(rm.col_diameter(id.index), 10.0);
+        assert!(rm.set_position(id, Vec3::new(4.0, 5.0, 6.0)));
+        assert_eq!(rm.col_position(id.index), Vec3::new(4.0, 5.0, 6.0));
+        assert_eq!(rm.get(id).unwrap().position, Vec3::new(4.0, 5.0, 6.0));
+        assert_eq!(rm.positions().len(), rm.slot_count());
+        assert_eq!(rm.diameters().len(), rm.slot_count());
+        assert_eq!(rm.kinds().len(), rm.slot_count());
+    }
+
+    #[test]
+    fn soa_mirror_flushes_on_guard_drop() {
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add(mk(Vec3::ZERO));
+        {
+            let mut a = rm.get_mut(id).unwrap();
+            a.position = Vec3::new(7.0, 8.0, 9.0);
+            a.diameter = 3.5;
+            a.kind = AgentKind::Cell { cell_type: CellType::B, adhesion: 0.9 };
+        } // guard drop flushes the columns
+        assert_eq!(rm.col_position(id.index), Vec3::new(7.0, 8.0, 9.0));
+        assert_eq!(rm.col_diameter(id.index), 3.5);
+        assert!(matches!(
+            rm.col_kind(id.index),
+            AgentKind::Cell { cell_type: CellType::B, .. }
+        ));
+        // A second mutation through a fresh guard also flushes.
+        {
+            let mut a = rm.get_mut(id).unwrap();
+            a.diameter = 4.25;
+        }
+        assert_eq!(rm.col_diameter(id.index), 4.25);
+    }
+
+    #[test]
+    fn soa_mirror_after_slot_recycling() {
+        let mut rm = ResourceManager::new(0);
+        let a = rm.add(mk(Vec3::splat(1.0)));
+        rm.remove(a).unwrap();
+        let b = rm.add(mk(Vec3::splat(2.0)));
+        assert_eq!(a.index, b.index);
+        assert_eq!(rm.col_position(b.index), Vec3::splat(2.0));
+    }
+
+    #[test]
+    fn collect_ids_reuses_buffer() {
+        let mut rm = ResourceManager::new(0);
+        for _ in 0..5 {
+            rm.add(mk(Vec3::ZERO));
+        }
+        let mut buf = Vec::new();
+        rm.collect_ids(&mut buf);
+        assert_eq!(buf.len(), 5);
+        let cap = buf.capacity();
+        buf.clear();
+        rm.collect_ids(&mut buf);
+        assert_eq!(buf.len(), 5);
+        assert_eq!(buf.capacity(), cap, "steady-state collect must not realloc");
+        assert_eq!(buf, rm.ids());
     }
 }

@@ -77,6 +77,44 @@ impl ThreadPool {
             f(ci, s, e);
         });
     }
+
+    /// Parallel for-each over mutable items: workers receive disjoint
+    /// contiguous sub-slices of `items`, so per-item scratch (e.g. reused
+    /// mechanics gather batches) can be mutated in place without locking.
+    /// `f(item_index, &mut item)`. Returns the region's critical-path CPU
+    /// seconds (see [`map_chunks_timed`](Self::map_chunks_timed)).
+    pub fn for_each_mut_timed<T: Send>(
+        &self,
+        items: &mut [T],
+        f: impl Fn(usize, &mut T) + Sync,
+    ) -> f64 {
+        let len = items.len();
+        if len == 0 {
+            return 0.0;
+        }
+        let chunk = len.div_ceil(self.threads.min(len));
+        if chunk >= len {
+            // Inline on the caller: its own CPU clock sees the work.
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return 0.0;
+        }
+        let mut cpu: Vec<f64> = vec![0.0; len.div_ceil(chunk)];
+        std::thread::scope(|s| {
+            let f = &f;
+            for ((ci, sub), cpu_slot) in items.chunks_mut(chunk).enumerate().zip(cpu.iter_mut()) {
+                s.spawn(move || {
+                    let t = crate::util::timing::CpuTimer::start();
+                    for (k, item) in sub.iter_mut().enumerate() {
+                        f(ci * chunk + k, item);
+                    }
+                    *cpu_slot = t.elapsed_secs();
+                });
+            }
+        });
+        cpu.into_iter().fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -133,5 +171,23 @@ mod tests {
     fn zero_threads_clamps_to_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_item_once() {
+        for threads in [1, 3, 16] {
+            let pool = ThreadPool::new(threads);
+            let mut items: Vec<u64> = vec![0; 37];
+            pool.for_each_mut_timed(&mut items, |i, item| {
+                *item += i as u64 + 1;
+            });
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(*item, i as u64 + 1, "item {i} with {threads} threads");
+            }
+        }
+        // Empty input is a no-op.
+        let pool = ThreadPool::new(4);
+        let mut empty: Vec<u64> = Vec::new();
+        assert_eq!(pool.for_each_mut_timed(&mut empty, |_, _| ()), 0.0);
     }
 }

@@ -14,7 +14,7 @@ use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::Codec;
 use crate::io::Compression;
 use crate::metrics::{Counter, Op, RankMetrics};
-use crate::runtime::mechanics::{native_mechanics, MechanicsBatch, AOT_K, AOT_N};
+use crate::runtime::mechanics::{native_mechanics, GatherSlot, MechanicsBatch, AOT_K, AOT_N};
 use crate::runtime::service::MechanicsHandle;
 use crate::runtime::MechanicsParams;
 use crate::space::{NeighborSearchGrid, NsgEntry, PartitionGrid};
@@ -81,6 +81,23 @@ pub struct RankSim<M: Model> {
     last_iteration_secs: f64,
     stats_history: Vec<Vec<f64>>,
     frames: Vec<Image>,
+    // --- per-iteration scratch, reused across iterations so the steady
+    // --- state allocates nothing (capacity-reuse only):
+    /// Snapshot of live local ids (slot order).
+    ids_scratch: Vec<LocalId>,
+    /// Mechanics gather batches + neighbor scratch, one per AOT_N group.
+    gather: Vec<GatherSlot>,
+    /// Aura recipients: (neighbor rank, selected agent ids).
+    aura_per_dest: Vec<(u32, Vec<LocalId>)>,
+    /// Per-agent aura target ranks (`ranks_within_into` scratch).
+    rank_scratch: Vec<u32>,
+    /// Cached neighbor-rank set; invalidated when rebalancing moves boxes.
+    neighbors_cache: Vec<u32>,
+    neighbors_dirty: bool,
+    /// Migration scratch: (destination rank, leaving id) and the
+    /// per-destination agent buffers.
+    migration_leaving: Vec<(u32, LocalId)>,
+    migration_per_dest: Vec<Vec<Agent>>,
 }
 
 impl<M: Model> RankSim<M> {
@@ -128,6 +145,14 @@ impl<M: Model> RankSim<M> {
             last_iteration_secs: 0.0,
             stats_history: Vec::new(),
             frames: Vec::new(),
+            ids_scratch: Vec::new(),
+            gather: Vec::new(),
+            aura_per_dest: Vec::new(),
+            rank_scratch: Vec::new(),
+            neighbors_cache: Vec::new(),
+            neighbors_dirty: true,
+            migration_leaving: Vec::new(),
+            migration_per_dest: Vec::new(),
             comm,
             grid,
             nsg,
@@ -217,20 +242,34 @@ impl<M: Model> RankSim<M> {
         self.aura.clear();
         let radius = self.model.interaction_radius();
         let me = self.rank;
-        let neighbors = self.grid.neighbor_ranks(me);
+        if self.neighbors_dirty {
+            self.neighbors_cache = self.grid.neighbor_ranks(me);
+            self.neighbors_dirty = false;
+        }
 
         // Select aura agents per destination (§2.1: exact radius bands,
-        // narrower than the partition box).
-        let mut per_dest: Vec<(u32, Vec<LocalId>)> =
-            neighbors.iter().map(|&r| (r, Vec::new())).collect();
+        // narrower than the partition box). All scratch is reused across
+        // iterations; only a neighbor-set change rebuilds the map.
+        let mut per_dest = std::mem::take(&mut self.aura_per_dest);
+        if per_dest.len() != self.neighbors_cache.len()
+            || per_dest.iter().zip(&self.neighbors_cache).any(|((r, _), &n)| *r != n)
+        {
+            per_dest = self.neighbors_cache.iter().map(|&r| (r, Vec::new())).collect();
+        } else {
+            for (_, ids) in per_dest.iter_mut() {
+                ids.clear();
+            }
+        }
+        let mut targets = std::mem::take(&mut self.rank_scratch);
         for a in self.rm.iter() {
-            let targets = self.grid.ranks_within(a.position, radius, me);
-            for t in targets {
+            self.grid.ranks_within_into(a.position, radius, me, &mut targets);
+            for &t in &targets {
                 if let Some(slot) = per_dest.iter_mut().find(|(r, _)| *r == t) {
                     slot.1.push(a.local_id);
                 }
             }
         }
+        self.rank_scratch = targets;
         // Global-id translation happens here (§2.5: only when an agent is
         // actually transferred).
         for (_, ids) in &per_dest {
@@ -238,11 +277,14 @@ impl<M: Model> RankSim<M> {
                 self.rm.ensure_global_id(id);
             }
         }
-        // Encode + send one (batched) message per neighbor.
+        // Encode + send one (batched) message per neighbor. The encoder
+        // iterates agent storage directly — no per-message `Vec<&Agent>`.
         for (dest, ids) in &per_dest {
-            let agents: Vec<&Agent> = ids.iter().map(|&id| self.rm.get(id).unwrap()).collect();
-            self.metrics.count(Counter::AuraAgentsSent, agents.len() as u64);
-            let (wire, es) = self.codec.encode((*dest, tags::AURA), agents.iter().copied());
+            let rm = &self.rm;
+            self.metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
+            let (wire, es) = self
+                .codec
+                .encode((*dest, tags::AURA), ids.iter().map(|&id| rm.get(id).unwrap()));
             self.metrics.add_op(Op::Serialize, es.serialize_secs);
             self.metrics.add_op(Op::Compress, es.compress_secs);
             self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
@@ -259,8 +301,9 @@ impl<M: Model> RankSim<M> {
                 )
             });
         }
+        self.aura_per_dest = per_dest;
         // Receive from every neighbor; register aura agents in the NSG.
-        for &src in &neighbors {
+        for &src in &self.neighbors_cache {
             let (_, wire) = self.metrics.timed_cpu(Op::Transfer, || {
                 self.reassembler.recv_batched(&mut self.comm, src, tags::AURA)
             });
@@ -283,88 +326,94 @@ impl<M: Model> RankSim<M> {
         let t = crate::util::timing::CpuTimer::start();
         let params = self.model.mechanics_params();
         let radius = self.model.interaction_radius();
-        let ids: Vec<LocalId> = self.rm.ids();
-        let n = ids.len();
+        self.ids_scratch.clear();
+        self.rm.collect_ids(&mut self.ids_scratch);
+        let n = self.ids_scratch.len();
         if n == 0 {
             self.metrics.add_op(Op::AgentOps, t.elapsed_secs());
             return;
         }
-        // Gather neighbor batches in parallel (read-only phase).
-        let rm = &self.rm;
-        let nsg = &self.nsg;
-        let aura = &self.aura;
-        let model = &self.model;
-        let ids_ref = &ids;
-        // Chunk granularity is independent of the AOT batch size so every
-        // pool thread gets work even for small populations; each chunk
-        // packs its own (padded) batches tagged with their id offset.
-        let (batch_groups, pool_cpu) = self.pool.map_chunks_timed(n, |_, cs, ce| {
-            let mut out: Vec<(usize, MechanicsBatch)> =
-                Vec::with_capacity((ce - cs).div_ceil(AOT_N));
-            let mut start = cs;
-            while start < ce {
-                let end = (start + AOT_N).min(ce);
-                let mut batch = MechanicsBatch::new(AOT_N, AOT_K);
-                batch.live = end - start;
-                // Scratch reused across agents in this batch.
-                let mut scratch: Vec<(f64, Vec3, f64, f32)> = Vec::with_capacity(32);
-                for (row, &id) in ids_ref[start..end].iter().enumerate() {
-                    let agent = rm.get(id).expect("live id");
-                    batch.set_agent(row, agent.position, agent.diameter);
-                    scratch.clear();
+        // One (padded) gather slot per AOT_N group; the pool grows to the
+        // population high-water mark and is reused every iteration, so
+        // the gather performs no steady-state allocation.
+        let nb = n.div_ceil(AOT_N);
+        while self.gather.len() < nb {
+            self.gather.push(GatherSlot::new(AOT_N, AOT_K));
+        }
+        let pool = self.pool;
+        {
+            // Gather neighbor batches in parallel (read-only over agent
+            // state): agent and neighbor attributes stream from the
+            // ResourceManager's SoA columns instead of Vec<Option<Agent>>.
+            let rm = &self.rm;
+            let nsg = &self.nsg;
+            let aura = &self.aura;
+            let model = &self.model;
+            let ids = &self.ids_scratch;
+            let pool_cpu = pool.for_each_mut_timed(&mut self.gather[..nb], |bi, slot| {
+                let start = bi * AOT_N;
+                let end = (start + AOT_N).min(n);
+                slot.batch.clear();
+                slot.batch.live = end - start;
+                for (row, &id) in ids[start..end].iter().enumerate() {
+                    debug_assert!(rm.get(id).is_some(), "stale id in mechanics snapshot");
+                    let pos = rm.col_position(id.index);
+                    let kind = rm.col_kind(id.index);
+                    slot.batch.set_agent(row, pos, rm.col_diameter(id.index));
+                    slot.scratch.clear();
                     nsg.for_each_neighbor(
-                        agent.position,
+                        pos,
                         radius,
                         Some(NsgEntry::Owned(id)),
-                        |entry, pos, d2| {
-                            let (diam, kind) = match entry {
+                        |entry, npos, d2| {
+                            let (diam, nkind) = match entry {
                                 NsgEntry::Owned(nid) => {
-                                    let na = rm.get(nid).expect("live neighbor");
-                                    (na.diameter, na.kind)
+                                    debug_assert!(rm.get(nid).is_some(), "stale NSG neighbor");
+                                    (rm.col_diameter(nid.index), rm.col_kind(nid.index))
                                 }
                                 NsgEntry::Aura(ai) => (aura.diameter(ai), aura.kind(ai)),
                             };
-                            let adh = model.adhesion_scale(&agent.kind, &kind);
-                            scratch.push((d2, pos, diam, adh));
+                            let adh = model.adhesion_scale(&kind, &nkind);
+                            slot.scratch.push((d2, npos, diam, adh));
                         },
                     );
                     // Deterministic neighbor order: nearest first, ties by
                     // position — independent of rank count / NSG layout.
-                    scratch.sort_by(|a, b| {
+                    slot.scratch.sort_by(|a, b| {
                         a.0.partial_cmp(&b.0)
                             .unwrap()
                             .then(a.1.x.partial_cmp(&b.1.x).unwrap())
                             .then(a.1.y.partial_cmp(&b.1.y).unwrap())
                             .then(a.1.z.partial_cmp(&b.1.z).unwrap())
                     });
-                    for (j, (_, pos, diam, adh)) in scratch.iter().take(AOT_K).enumerate() {
-                        batch.set_neighbor(row, j, *pos, *diam, (*adh).max(1e-6));
+                    for (j, (_, pos, diam, adh)) in slot.scratch.iter().take(AOT_K).enumerate() {
+                        slot.batch.set_neighbor(row, j, *pos, *diam, (*adh).max(1e-6));
                     }
                 }
-                out.push((start, batch));
-                start = end;
-            }
-            out
-        });
-        // Pool-worker CPU is invisible to the rank thread's CPU clock;
-        // charge the parallel region's critical path to this iteration.
-        self.pool_cpu_secs += pool_cpu;
-        let batches: Vec<(usize, MechanicsBatch)> =
-            batch_groups.into_iter().flatten().collect();
+            });
+            // Pool-worker CPU is invisible to the rank thread's CPU clock;
+            // charge the parallel region's critical path to this iteration.
+            self.pool_cpu_secs += pool_cpu;
+        }
 
-        // Execute (PJRT service or native) and apply displacements.
-        for (start, batch) in &batches {
-            let disp = self.mech.compute(batch, params);
-            for row in 0..batch.live {
-                let id = ids[start + row];
+        // Execute (PJRT service or native) and apply displacements
+        // through the O(1) position write-through.
+        let whole = self.grid.whole();
+        for (bi, slot) in self.gather[..nb].iter().enumerate() {
+            let disp = self.mech.compute(&slot.batch, params);
+            for row in 0..slot.batch.live {
+                let id = self.ids_scratch[bi * AOT_N + row];
                 let d = disp[row];
                 if d == Vec3::ZERO {
                     continue;
                 }
-                let pos = self.rm.get(id).unwrap().position + d;
-                let pos = self.cfg.boundary.apply(pos, &self.grid.whole());
-                self.rm.get_mut(id).unwrap().position = pos;
-                self.nsg.update_position(NsgEntry::Owned(id), pos);
+                let pos = self.rm.col_position(id.index) + d;
+                let pos = self.cfg.boundary.apply(pos, &whole);
+                // Guarded like World::move_agent: a stale id must never
+                // reach the NSG's add-if-unknown path.
+                if self.rm.set_position(id, pos) {
+                    self.nsg.update_position(NsgEntry::Owned(id), pos);
+                }
             }
         }
         self.metrics.count(Counter::AgentUpdates, n as u64);
@@ -419,21 +468,27 @@ impl<M: Model> RankSim<M> {
         let size = self.comm.size();
         // Who leaves? (The replicated partition map makes the owner lookup
         // local — the paper's collective-lookup fallback is unnecessary.)
-        let leaving: Vec<(u32, LocalId)> = self
-            .rm
-            .iter()
-            .filter_map(|a| {
-                let owner = self.grid.owner_of_pos(a.position);
-                (owner != me).then_some((owner, a.local_id))
-            })
-            .collect();
-        let mut per_dest: Vec<Vec<Agent>> = vec![Vec::new(); size];
-        for (dest, id) in leaving {
+        // Scratch buffers persist across iterations; in the common
+        // nobody-leaves case this whole phase is allocation-free.
+        let mut leaving = std::mem::take(&mut self.migration_leaving);
+        leaving.clear();
+        for a in self.rm.iter() {
+            let owner = self.grid.owner_of_pos(a.position);
+            if owner != me {
+                leaving.push((owner, a.local_id));
+            }
+        }
+        let mut per_dest = std::mem::take(&mut self.migration_per_dest);
+        if per_dest.len() != size {
+            per_dest = (0..size).map(|_| Vec::new()).collect();
+        }
+        for (dest, id) in leaving.drain(..) {
             self.rm.ensure_global_id(id);
             let agent = self.rm.remove(id).expect("migrating agent");
             self.nsg.remove(NsgEntry::Owned(id));
             per_dest[dest as usize].push(agent);
         }
+        self.migration_leaving = leaving;
         let migrated: u64 = per_dest.iter().map(|v| v.len() as u64).sum();
         self.metrics.count(Counter::AgentsMigratedOut, migrated);
         // Exchange (all-to-all; empty payloads for idle pairs).
@@ -453,6 +508,12 @@ impl<M: Model> RankSim<M> {
                 wire
             })
             .collect();
+        // Drop the migrated-out agents now; the buffers keep their
+        // capacity for the next iteration.
+        for v in per_dest.iter_mut() {
+            v.clear();
+        }
+        self.migration_per_dest = per_dest;
         let round = self.a2a_round;
         self.a2a_round += 1;
         let received =
@@ -513,9 +574,11 @@ impl<M: Model> RankSim<M> {
             .filter(|(a, b)| a != b)
             .count() as u64;
         self.metrics.count(Counter::BoxesRebalanced, moved);
-        // Obsolete speculative receives for the old neighbor set (§2.4.3).
+        // Obsolete speculative receives for the old neighbor set (§2.4.3),
+        // and the cached neighbor-rank set must be recomputed.
         if moved > 0 {
             self.comm.cancel_pending(tags::AURA);
+            self.neighbors_dirty = true;
         }
         self.metrics.add_op(Op::Balancing, t.elapsed_secs());
         // Hand off agents whose boxes changed owner.

@@ -204,9 +204,17 @@ impl<'a> World<'a> {
         let ex = exclude.map(NsgEntry::Owned);
         self.nsg.for_each_neighbor(center, radius, ex, |entry, pos, d2| {
             let info = match entry {
+                // Owned attributes come from the SoA mirror: the NSG handle
+                // protocol guarantees the entry is live, so the column read
+                // is branch-free and streams contiguous memory.
                 NsgEntry::Owned(id) => {
-                    let a = self.rm.get(id).expect("NSG entry points at freed agent");
-                    NeighborInfo { pos, diameter: a.diameter, kind: a.kind, dist_sq: d2 }
+                    debug_assert!(self.rm.get(id).is_some(), "NSG entry points at freed agent");
+                    NeighborInfo {
+                        pos,
+                        diameter: self.rm.col_diameter(id.index),
+                        kind: self.rm.col_kind(id.index),
+                        dist_sq: d2,
+                    }
                 }
                 NsgEntry::Aura(i) => NeighborInfo {
                     pos,
@@ -240,7 +248,10 @@ impl<'a> World<'a> {
         let ex = exclude.map(NsgEntry::Owned);
         self.nsg.for_each_neighbor(center, radius, ex, |entry, _, _| {
             let kind = match entry {
-                NsgEntry::Owned(id) => self.rm.get(id).expect("stale NSG entry").kind,
+                NsgEntry::Owned(id) => {
+                    debug_assert!(self.rm.get(id).is_some(), "NSG entry points at freed agent");
+                    self.rm.col_kind(id.index)
+                }
                 NsgEntry::Aura(i) => self.aura.kind(i),
             };
             if pred(&kind) {
@@ -254,8 +265,7 @@ impl<'a> World<'a> {
     /// the NSG incrementally.
     pub fn move_agent(&mut self, id: LocalId, new_pos: Vec3) {
         let pos = self.boundary.apply(new_pos, &self.whole);
-        if let Some(a) = self.rm.get_mut(id) {
-            a.position = pos;
+        if self.rm.set_position(id, pos) {
             self.nsg.update_position(NsgEntry::Owned(id), pos);
         }
     }

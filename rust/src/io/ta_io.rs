@@ -483,12 +483,17 @@ impl TaView {
         self.agent(i).to_agent(self.behaviors(i))
     }
 
-    /// Materialize all non-placeholder agents.
+    /// Materialize all non-placeholder agents. Pre-reserves for the full
+    /// message length (placeholders are rare), avoiding growth reallocs
+    /// on the migration receive path.
     pub fn materialize_all(&self) -> Vec<Agent> {
-        (0..self.len())
-            .filter(|&i| !self.agent(i).is_placeholder())
-            .map(|i| self.materialize(i))
-            .collect()
+        let mut out = Vec::with_capacity(self.len());
+        out.extend(
+            (0..self.len())
+                .filter(|&i| !self.agent(i).is_placeholder())
+                .map(|i| self.materialize(i)),
+        );
+        out
     }
 
     /// Release the blocks of agent `i` (the intercepted `delete`).

@@ -84,7 +84,7 @@ impl Model for CellProliferation {
                     .normalized();
                 let daughter_pos = pos + dir * (d * 0.5);
                 {
-                    let a = world.rm.get_mut(id).unwrap();
+                    let mut a = world.rm.get_mut(id).unwrap();
                     a.diameter = d;
                     if let AgentKind::GrowingCell { volume, .. } = &mut a.kind {
                         *volume = half;
@@ -99,7 +99,7 @@ impl Model for CellProliferation {
                 }
                 world.spawn(daughter);
             } else {
-                let a = world.rm.get_mut(id).unwrap();
+                let mut a = world.rm.get_mut(id).unwrap();
                 a.diameter = sphere_diameter(grown.min(division_volume));
                 if let AgentKind::GrowingCell { volume, .. } = &mut a.kind {
                     *volume = grown.min(division_volume);

@@ -112,7 +112,7 @@ impl Model for Epidemiology {
         // Write phase.
         for d in decisions {
             world.move_agent(d.id, d.new_pos);
-            if let Some(a) = world.rm.get_mut(d.id) {
+            if let Some(mut a) = world.rm.get_mut(d.id) {
                 a.kind = AgentKind::Person { state: d.new_state, infected_for: d.new_timer };
             }
         }

@@ -104,10 +104,10 @@ impl Model for TumorSpheroid {
                     *cycle = 0.0;
                 }
                 world.spawn(daughter);
-                if let Some(a) = world.rm.get_mut(d.id) {
+                if let Some(mut a) = world.rm.get_mut(d.id) {
                     a.kind = AgentKind::TumorCell { cycle: 0.0, quiescent: false };
                 }
-            } else if let Some(a) = world.rm.get_mut(d.id) {
+            } else if let Some(mut a) = world.rm.get_mut(d.id) {
                 a.kind = AgentKind::TumorCell { cycle: d.cycle, quiescent: d.quiescent };
             }
         }

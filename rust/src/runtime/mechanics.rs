@@ -77,13 +77,14 @@ impl MechanicsBatch {
         }
     }
 
-    /// Reset for reuse without reallocating.
+    /// Reset for reuse without reallocating. `fill` lowers to `memset`,
+    /// unlike the element-wise loop it replaces.
     pub fn clear(&mut self) {
-        self.pos.iter_mut().for_each(|v| *v = 0.0);
-        self.diam.iter_mut().for_each(|v| *v = 1.0);
-        self.npos.iter_mut().for_each(|v| *v = 0.0);
-        self.ndiam.iter_mut().for_each(|v| *v = 0.0);
-        self.mask.iter_mut().for_each(|v| *v = 0.0);
+        self.pos.fill(0.0);
+        self.diam.fill(1.0);
+        self.npos.fill(0.0);
+        self.ndiam.fill(0.0);
+        self.mask.fill(0.0);
         self.live = 0;
     }
 
@@ -106,6 +107,25 @@ impl MechanicsBatch {
         self.npos[b + 2] = pos.z as f32;
         self.ndiam[i * self.k + j] = diam as f32;
         self.mask[i * self.k + j] = adh_scale;
+    }
+}
+
+/// A neighbor candidate gathered from the NSG before K-nearest
+/// truncation: (distance², position, diameter, adhesion scale).
+pub type NeighborCandidate = (f64, Vec3, f64, f32);
+
+/// Reusable per-batch gather state: one AOT batch plus the neighbor
+/// scratch used while selecting each agent's K nearest. The engine keeps
+/// a pool of these across iterations so the mechanics gather performs no
+/// steady-state allocation.
+pub struct GatherSlot {
+    pub batch: MechanicsBatch,
+    pub scratch: Vec<NeighborCandidate>,
+}
+
+impl GatherSlot {
+    pub fn new(n: usize, k: usize) -> Self {
+        GatherSlot { batch: MechanicsBatch::new(n, k), scratch: Vec::with_capacity(64) }
     }
 }
 

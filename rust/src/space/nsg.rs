@@ -1,20 +1,63 @@
-//! Uniform neighbor-search grid (NSG) with incremental updates.
+//! Uniform neighbor-search grid (NSG) with incremental updates, backed by
+//! a cache-resident bucket arena instead of `Vec<Vec<_>>` + `HashMap`.
 //!
 //! BioDynaMo's optimized uniform grid required a full rebuild per
 //! iteration; distribution additionally needs the NSG to answer
 //! "which agents lie in this sub-volume" for aura selection, migrations and
 //! load balancing, making rebuilds prohibitive (§2.5). This implementation
 //! therefore supports *incremental* addition, removal and position update
-//! of single agents, plus region queries.
+//! of single agents, plus region queries — and every steady-state operation
+//! is hash-free, allocation-free and O(1).
 //!
-//! Entries carry a copy of the agent position so queries never chase the
-//! agent storage; the engine keeps entry positions in sync through
-//! [`NeighborSearchGrid::update_position`].
+//! # Arena layout
+//!
+//! Entries live in pooled fixed-capacity **buckets** (`BUCKET_CAP` packed
+//! slots each); a cell is a short chain of buckets, so a 27-cell neighbor
+//! query streams a handful of contiguous 32-byte slots per cell instead of
+//! chasing one heap `Vec` per cell. Owned and aura entries are segregated:
+//!
+//! * **Owned entries** (`NsgEntry::Owned`) use buckets from a persistent
+//!   arena with a free list. Per cell, `owned_head..owned_tail` is a
+//!   doubly-linked bucket chain; every bucket except the tail is full, the
+//!   tail holds `1..=BUCKET_CAP` slots. Removal back-fills the hole with
+//!   the chain's last slot (cell-local swap-remove), so chains stay packed.
+//! * **Aura entries** (`NsgEntry::Aura`) use buckets from a bump arena
+//!   that is reset *wholesale* each iteration: [`clear_aura`] only clears
+//!   the `aura_head` of cells that actually received aura entries (tracked
+//!   in a side list) and rewinds the bump cursor — no per-entry removal,
+//!   no hashing, no deallocation.
+//!
+//! # Handle tables (the `HashMap` replacement)
+//!
+//! Incremental updates resolve entries through two dense tables indexed
+//! directly by identifier — O(1) array loads, never a hash:
+//!
+//! * `owned_handles[local_id.index] = (reuse, bucket·CAP+slot)`. The stored
+//!   `reuse` counter rejects stale [`LocalId`]s, mirroring the
+//!   `ResourceManager` slot-reuse protocol.
+//! * `aura_handles[aura_index] = bucket·CAP+slot` (truncated wholesale by
+//!   [`clear_aura`]).
+//!
+//! # Invariants
+//!
+//! 1. At most one live entry per owned slot `index`; re-adding an index
+//!    with a newer `reuse` retires the stale entry first.
+//! 2. A handle is `NIL` iff the entry is absent; otherwise it points at
+//!    the unique packed slot holding the entry, and that slot's
+//!    `(index, reuse)` / `aura` field points back at the handle.
+//! 3. Non-tail owned buckets are always full; empty buckets are returned
+//!    to the free list immediately, so query walks never visit dead space
+//!    (aura tombstones from explicit `remove` are the one exception and
+//!    are skipped by key; the engine never takes that path).
+//! 4. Entry positions are a denormalized copy owned by the grid; the
+//!    engine keeps them in sync via [`NeighborSearchGrid::update_position`]
+//!    (queries never chase agent storage).
+//!
+//! [`clear_aura`]: NeighborSearchGrid::clear_aura
 
 use super::space::Aabb;
 use crate::core::ids::LocalId;
 use crate::util::Vec3;
-use std::collections::HashMap;
 
 /// What an NSG entry points at: an owned agent (by local id) or an aura
 /// agent (by index into the rank's aura vector).
@@ -24,10 +67,82 @@ pub enum NsgEntry {
     Aura(u32),
 }
 
+/// Sentinel for "no bucket / no slot / absent handle".
+const NIL: u32 = u32::MAX;
+
+/// Packed slots per bucket. With 32-byte owned slots a bucket spans four
+/// cache lines; most cells fit in a single bucket at the paper's target
+/// density (~tens of agents per interaction radius³).
+const BUCKET_CAP: usize = 8;
+
+/// Packed owned slot: position copy + the `LocalId` pair.
 #[derive(Clone, Copy, Debug)]
-struct Slot {
-    entry: NsgEntry,
+struct OwnedSlot {
     pos: Vec3,
+    index: u32,
+    reuse: u32,
+}
+
+const EMPTY_OWNED_SLOT: OwnedSlot = OwnedSlot { pos: Vec3::ZERO, index: NIL, reuse: 0 };
+
+#[derive(Clone, Copy, Debug)]
+struct OwnedBucket {
+    len: u32,
+    next: u32,
+    prev: u32,
+    slots: [OwnedSlot; BUCKET_CAP],
+}
+
+const EMPTY_OWNED_BUCKET: OwnedBucket =
+    OwnedBucket { len: 0, next: NIL, prev: NIL, slots: [EMPTY_OWNED_SLOT; BUCKET_CAP] };
+
+/// Packed aura slot; `aura == NIL` marks a tombstone (explicit `remove`).
+#[derive(Clone, Copy, Debug)]
+struct AuraSlot {
+    pos: Vec3,
+    aura: u32,
+}
+
+const EMPTY_AURA_SLOT: AuraSlot = AuraSlot { pos: Vec3::ZERO, aura: NIL };
+
+#[derive(Clone, Copy, Debug)]
+struct AuraBucket {
+    len: u32,
+    next: u32,
+    slots: [AuraSlot; BUCKET_CAP],
+}
+
+const EMPTY_AURA_BUCKET: AuraBucket =
+    AuraBucket { len: 0, next: NIL, slots: [EMPTY_AURA_SLOT; BUCKET_CAP] };
+
+/// Per-cell chain heads.
+#[derive(Clone, Copy, Debug)]
+struct CellHead {
+    owned_head: u32,
+    owned_tail: u32,
+    aura_head: u32,
+}
+
+const EMPTY_CELL: CellHead = CellHead { owned_head: NIL, owned_tail: NIL, aura_head: NIL };
+
+/// Dense handle-table entry for owned agents (indexed by `LocalId::index`).
+#[derive(Clone, Copy, Debug)]
+struct OwnedHandle {
+    reuse: u32,
+    /// `bucket * BUCKET_CAP + slot`, or `NIL` when absent.
+    slot_ref: u32,
+}
+
+const EMPTY_HANDLE: OwnedHandle = OwnedHandle { reuse: 0, slot_ref: NIL };
+
+#[inline]
+fn unpack(slot_ref: u32) -> (usize, usize) {
+    ((slot_ref as usize) / BUCKET_CAP, (slot_ref as usize) % BUCKET_CAP)
+}
+
+#[inline]
+fn pack(bucket: usize, slot: usize) -> u32 {
+    (bucket * BUCKET_CAP + slot) as u32
 }
 
 /// Uniform grid over (a margin-inflated copy of) the local bounds.
@@ -36,9 +151,20 @@ pub struct NeighborSearchGrid {
     bounds: Aabb,
     cell: f64,
     dims: [usize; 3],
-    cells: Vec<Vec<Slot>>,
-    /// entry -> (cell index, slot index) for O(1) incremental updates.
-    index: HashMap<NsgEntry, (u32, u32)>,
+    cells: Vec<CellHead>,
+    // Owned side: persistent arena + free list + dense handle table.
+    owned_buckets: Vec<OwnedBucket>,
+    owned_free: Vec<u32>,
+    owned_handles: Vec<OwnedHandle>,
+    owned_len: usize,
+    // Aura side: bump arena reset wholesale each iteration.
+    aura_buckets: Vec<AuraBucket>,
+    aura_used: usize,
+    aura_handles: Vec<u32>,
+    /// Cells whose `aura_head` is live this iteration (the O(1)-per-cell
+    /// reset list for `clear_aura`).
+    aura_cells: Vec<u32>,
+    aura_len: usize,
 }
 
 impl NeighborSearchGrid {
@@ -58,8 +184,16 @@ impl NeighborSearchGrid {
             bounds,
             cell,
             dims,
-            cells: vec![Vec::new(); n],
-            index: HashMap::new(),
+            cells: vec![EMPTY_CELL; n],
+            owned_buckets: Vec::new(),
+            owned_free: Vec::new(),
+            owned_handles: Vec::new(),
+            owned_len: 0,
+            aura_buckets: Vec::new(),
+            aura_used: 0,
+            aura_handles: Vec::new(),
+            aura_cells: Vec::new(),
+            aura_len: 0,
         }
     }
 
@@ -77,11 +211,11 @@ impl NeighborSearchGrid {
 
     /// Number of entries currently stored.
     pub fn len(&self) -> usize {
-        self.index.len()
+        self.owned_len + self.aura_len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.index.is_empty()
+        self.len() == 0
     }
 
     /// Grid coordinates of a position (clamped to the grid, so positions
@@ -104,60 +238,245 @@ impl NeighborSearchGrid {
         (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
     }
 
-    /// Insert an entry. Panics in debug builds if the entry already exists.
-    pub fn add(&mut self, entry: NsgEntry, pos: Vec3) {
-        debug_assert!(!self.index.contains_key(&entry), "duplicate NSG entry {entry:?}");
-        let ci = self.cell_index(self.coords_of(pos));
-        let slot = self.cells[ci].len() as u32;
-        self.cells[ci].push(Slot { entry, pos });
-        self.index.insert(entry, (ci as u32, slot));
+    #[inline]
+    fn cell_of(&self, p: Vec3) -> usize {
+        self.cell_index(self.coords_of(p))
     }
 
-    /// Remove an entry (no-op if absent). Swap-remove keeps cells dense.
-    pub fn remove(&mut self, entry: NsgEntry) -> bool {
-        let Some((ci, slot)) = self.index.remove(&entry) else {
-            return false;
-        };
-        let (ci, slot) = (ci as usize, slot as usize);
-        let cell = &mut self.cells[ci];
-        cell.swap_remove(slot);
-        if slot < cell.len() {
-            // Fix up the index of the entry that moved into `slot`.
-            let moved = cell[slot].entry;
-            self.index.insert(moved, (ci as u32, slot as u32));
+    /// Insert an entry. Panics in debug builds if the entry already exists.
+    pub fn add(&mut self, entry: NsgEntry, pos: Vec3) {
+        match entry {
+            NsgEntry::Owned(id) => self.add_owned(id.index, id.reuse, pos),
+            NsgEntry::Aura(i) => self.add_aura(i, pos),
         }
-        true
+    }
+
+    /// Remove an entry (no-op if absent, returning `false`). The cell's
+    /// bucket chain stays packed via a cell-local swap-remove.
+    pub fn remove(&mut self, entry: NsgEntry) -> bool {
+        match entry {
+            NsgEntry::Owned(id) => self.remove_owned(id.index, id.reuse),
+            NsgEntry::Aura(i) => self.remove_aura(i),
+        }
     }
 
     /// Update an entry's position incrementally, moving it between cells
-    /// only when required.
+    /// only when required. Unknown entries are added (supports lazy
+    /// engine flows).
     pub fn update_position(&mut self, entry: NsgEntry, new_pos: Vec3) {
-        let Some(&(ci, slot)) = self.index.get(&entry) else {
-            // Unknown entries are added (supports lazy engine flows).
-            self.add(entry, new_pos);
-            return;
-        };
-        let new_ci = self.cell_index(self.coords_of(new_pos)) as u32;
-        if new_ci == ci {
-            self.cells[ci as usize][slot as usize].pos = new_pos;
-        } else {
-            self.remove(entry);
-            self.add(entry, new_pos);
+        match entry {
+            NsgEntry::Owned(id) => {
+                let idx = id.index as usize;
+                let h = if idx < self.owned_handles.len() {
+                    self.owned_handles[idx]
+                } else {
+                    EMPTY_HANDLE
+                };
+                if h.slot_ref == NIL || h.reuse != id.reuse {
+                    self.add_owned(id.index, id.reuse, new_pos);
+                    return;
+                }
+                let (b, s) = unpack(h.slot_ref);
+                let old_ci = self.cell_of(self.owned_buckets[b].slots[s].pos);
+                if old_ci == self.cell_of(new_pos) {
+                    self.owned_buckets[b].slots[s].pos = new_pos;
+                } else {
+                    self.remove_owned(id.index, id.reuse);
+                    self.add_owned(id.index, id.reuse, new_pos);
+                }
+            }
+            NsgEntry::Aura(i) => {
+                let idx = i as usize;
+                let r = if idx < self.aura_handles.len() { self.aura_handles[idx] } else { NIL };
+                if r == NIL {
+                    self.add_aura(i, new_pos);
+                    return;
+                }
+                let (b, s) = unpack(r);
+                let old_ci = self.cell_of(self.aura_buckets[b].slots[s].pos);
+                if old_ci == self.cell_of(new_pos) {
+                    self.aura_buckets[b].slots[s].pos = new_pos;
+                } else {
+                    self.remove_aura(i);
+                    self.add_aura(i, new_pos);
+                }
+            }
         }
     }
 
     /// Remove all aura entries (the aura is rebuilt every iteration).
+    /// O(cells that held aura entries): clears each such cell's chain
+    /// head, rewinds the bump arena and truncates the handle table —
+    /// no per-entry work, no hashing, no deallocation.
     pub fn clear_aura(&mut self) {
-        let aura_entries: Vec<NsgEntry> = self
-            .index
-            .keys()
-            .filter(|e| matches!(e, NsgEntry::Aura(_)))
-            .copied()
-            .collect();
-        for e in aura_entries {
-            self.remove(e);
+        for &ci in &self.aura_cells {
+            self.cells[ci as usize].aura_head = NIL;
+        }
+        self.aura_cells.clear();
+        self.aura_used = 0;
+        self.aura_handles.clear();
+        self.aura_len = 0;
+    }
+
+    // ----- owned arena internals -------------------------------------------
+
+    fn add_owned(&mut self, index: u32, reuse: u32, pos: Vec3) {
+        let idx = index as usize;
+        if idx >= self.owned_handles.len() {
+            self.owned_handles.resize(idx + 1, EMPTY_HANDLE);
+        }
+        let h = self.owned_handles[idx];
+        debug_assert!(
+            h.slot_ref == NIL || h.reuse != reuse,
+            "duplicate NSG entry Owned(L⟨{index},{reuse}⟩)"
+        );
+        if h.slot_ref != NIL {
+            // A stale generation of this slot index is still present
+            // (invariant 1): retire it so index -> handle stays unique.
+            self.remove_owned(index, h.reuse);
+        }
+        let ci = self.cell_of(pos);
+        let slot_ref = self.owned_push(ci, OwnedSlot { pos, index, reuse });
+        self.owned_handles[idx] = OwnedHandle { reuse, slot_ref };
+        self.owned_len += 1;
+    }
+
+    /// Append a slot to cell `ci`'s chain tail; returns its packed ref.
+    fn owned_push(&mut self, ci: usize, slot: OwnedSlot) -> u32 {
+        let tail = self.cells[ci].owned_tail;
+        let b = if tail == NIL {
+            let b = self.alloc_owned_bucket();
+            self.cells[ci].owned_head = b;
+            self.cells[ci].owned_tail = b;
+            b
+        } else if self.owned_buckets[tail as usize].len as usize == BUCKET_CAP {
+            let b = self.alloc_owned_bucket();
+            self.owned_buckets[b as usize].prev = tail;
+            self.owned_buckets[tail as usize].next = b;
+            self.cells[ci].owned_tail = b;
+            b
+        } else {
+            tail
+        };
+        let bucket = &mut self.owned_buckets[b as usize];
+        let s = bucket.len as usize;
+        bucket.slots[s] = slot;
+        bucket.len += 1;
+        pack(b as usize, s)
+    }
+
+    fn alloc_owned_bucket(&mut self) -> u32 {
+        match self.owned_free.pop() {
+            Some(b) => {
+                let bucket = &mut self.owned_buckets[b as usize];
+                bucket.len = 0;
+                bucket.next = NIL;
+                bucket.prev = NIL;
+                b
+            }
+            None => {
+                self.owned_buckets.push(EMPTY_OWNED_BUCKET);
+                (self.owned_buckets.len() - 1) as u32
+            }
         }
     }
+
+    fn remove_owned(&mut self, index: u32, reuse: u32) -> bool {
+        let idx = index as usize;
+        if idx >= self.owned_handles.len() {
+            return false;
+        }
+        let h = self.owned_handles[idx];
+        if h.slot_ref == NIL || h.reuse != reuse {
+            return false;
+        }
+        let (b, s) = unpack(h.slot_ref);
+        let ci = self.cell_of(self.owned_buckets[b].slots[s].pos);
+        // Back-fill the hole with the last slot of this cell's chain so
+        // buckets stay packed (invariant 3).
+        let tail = self.cells[ci].owned_tail as usize;
+        let last = self.owned_buckets[tail].len as usize - 1;
+        if (tail, last) != (b, s) {
+            let moved = self.owned_buckets[tail].slots[last];
+            self.owned_buckets[b].slots[s] = moved;
+            self.owned_handles[moved.index as usize].slot_ref = pack(b, s);
+        }
+        self.owned_buckets[tail].len -= 1;
+        if self.owned_buckets[tail].len == 0 {
+            let prev = self.owned_buckets[tail].prev;
+            if prev == NIL {
+                self.cells[ci].owned_head = NIL;
+                self.cells[ci].owned_tail = NIL;
+            } else {
+                self.owned_buckets[prev as usize].next = NIL;
+                self.cells[ci].owned_tail = prev;
+            }
+            self.owned_free.push(tail as u32);
+        }
+        self.owned_handles[idx].slot_ref = NIL;
+        self.owned_len -= 1;
+        true
+    }
+
+    // ----- aura arena internals --------------------------------------------
+
+    fn add_aura(&mut self, aura: u32, pos: Vec3) {
+        let idx = aura as usize;
+        if idx >= self.aura_handles.len() {
+            self.aura_handles.resize(idx + 1, NIL);
+        }
+        debug_assert!(self.aura_handles[idx] == NIL, "duplicate NSG entry Aura({aura})");
+        let ci = self.cell_of(pos);
+        let head = self.cells[ci].aura_head;
+        let b = if head == NIL || self.aura_buckets[head as usize].len as usize == BUCKET_CAP {
+            let nb = self.alloc_aura_bucket();
+            self.aura_buckets[nb as usize].next = head;
+            if head == NIL {
+                self.aura_cells.push(ci as u32);
+            }
+            self.cells[ci].aura_head = nb;
+            nb
+        } else {
+            head
+        };
+        let bucket = &mut self.aura_buckets[b as usize];
+        let s = bucket.len as usize;
+        bucket.slots[s] = AuraSlot { pos, aura };
+        bucket.len += 1;
+        self.aura_handles[idx] = pack(b as usize, s);
+        self.aura_len += 1;
+    }
+
+    fn alloc_aura_bucket(&mut self) -> u32 {
+        let b = self.aura_used;
+        if b < self.aura_buckets.len() {
+            let bucket = &mut self.aura_buckets[b];
+            bucket.len = 0;
+            bucket.next = NIL;
+        } else {
+            self.aura_buckets.push(EMPTY_AURA_BUCKET);
+        }
+        self.aura_used += 1;
+        b as u32
+    }
+
+    /// Individual aura removal leaves a tombstone (`aura == NIL`) that
+    /// queries skip; the slot is reclaimed by the next `clear_aura`. The
+    /// engine's aura lifecycle (bulk add, bulk clear) never takes this
+    /// path — it exists for API symmetry and tests.
+    fn remove_aura(&mut self, aura: u32) -> bool {
+        let idx = aura as usize;
+        if idx >= self.aura_handles.len() || self.aura_handles[idx] == NIL {
+            return false;
+        }
+        let (b, s) = unpack(self.aura_handles[idx]);
+        self.aura_buckets[b].slots[s].aura = NIL;
+        self.aura_handles[idx] = NIL;
+        self.aura_len -= 1;
+        true
+    }
+
+    // ----- queries ----------------------------------------------------------
 
     /// Visit every entry within `radius` of `center` (excluding
     /// `exclude`, typically the querying agent itself).
@@ -169,6 +488,12 @@ impl NeighborSearchGrid {
         mut f: impl FnMut(NsgEntry, Vec3, f64),
     ) {
         let r2 = radius * radius;
+        // Decompose the exclusion so the inner loops compare plain u32s.
+        let (ex_index, ex_reuse, ex_aura) = match exclude {
+            Some(NsgEntry::Owned(id)) => (id.index, id.reuse, NIL),
+            Some(NsgEntry::Aura(i)) => (NIL, 0, i),
+            None => (NIL, 0, NIL),
+        };
         // The grid cell may be larger than the radius; compute the cell
         // range covering the query sphere.
         let lo = self.coords_of(center - Vec3::splat(radius));
@@ -176,15 +501,34 @@ impl NeighborSearchGrid {
         for cz in lo[2]..=hi[2] {
             for cy in lo[1]..=hi[1] {
                 for cx in lo[0]..=hi[0] {
-                    let ci = self.cell_index([cx, cy, cz]);
-                    for s in &self.cells[ci] {
-                        if Some(s.entry) == exclude {
-                            continue;
+                    let head = self.cells[self.cell_index([cx, cy, cz])];
+                    let mut b = head.owned_head;
+                    while b != NIL {
+                        let bucket = &self.owned_buckets[b as usize];
+                        for s in &bucket.slots[..bucket.len as usize] {
+                            if s.index == ex_index && s.reuse == ex_reuse {
+                                continue;
+                            }
+                            let d2 = s.pos.distance_sq(center);
+                            if d2 <= r2 {
+                                f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos, d2);
+                            }
                         }
-                        let d2 = s.pos.distance_sq(center);
-                        if d2 <= r2 {
-                            f(s.entry, s.pos, d2);
+                        b = bucket.next;
+                    }
+                    let mut b = head.aura_head;
+                    while b != NIL {
+                        let bucket = &self.aura_buckets[b as usize];
+                        for s in &bucket.slots[..bucket.len as usize] {
+                            if s.aura == NIL || s.aura == ex_aura {
+                                continue;
+                            }
+                            let d2 = s.pos.distance_sq(center);
+                            if d2 <= r2 {
+                                f(NsgEntry::Aura(s.aura), s.pos, d2);
+                            }
                         }
+                        b = bucket.next;
                     }
                 }
             }
@@ -210,11 +554,26 @@ impl NeighborSearchGrid {
         for cz in lo[2]..=hi[2] {
             for cy in lo[1]..=hi[1] {
                 for cx in lo[0]..=hi[0] {
-                    let ci = self.cell_index([cx, cy, cz]);
-                    for s in &self.cells[ci] {
-                        if region.contains(s.pos) {
-                            f(s.entry, s.pos);
+                    let head = self.cells[self.cell_index([cx, cy, cz])];
+                    let mut b = head.owned_head;
+                    while b != NIL {
+                        let bucket = &self.owned_buckets[b as usize];
+                        for s in &bucket.slots[..bucket.len as usize] {
+                            if region.contains(s.pos) {
+                                f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos);
+                            }
                         }
+                        b = bucket.next;
+                    }
+                    let mut b = head.aura_head;
+                    while b != NIL {
+                        let bucket = &self.aura_buckets[b as usize];
+                        for s in &bucket.slots[..bucket.len as usize] {
+                            if s.aura != NIL && region.contains(s.pos) {
+                                f(NsgEntry::Aura(s.aura), s.pos);
+                            }
+                        }
+                        b = bucket.next;
                     }
                 }
             }
@@ -232,17 +591,34 @@ impl NeighborSearchGrid {
     /// memory consumption of the neighbor search grid" knob shows up as
     /// cell-size factor choices in the engine config).
     pub fn approx_bytes(&self) -> u64 {
-        let cells: usize = self.cells.iter().map(|c| c.capacity() * std::mem::size_of::<Slot>()).sum();
-        let base = self.cells.capacity() * std::mem::size_of::<Vec<Slot>>();
-        let index = self.index.len() * (std::mem::size_of::<NsgEntry>() + 12);
-        (cells + base + index) as u64
+        let cells = self.cells.capacity() * std::mem::size_of::<CellHead>();
+        let owned = self.owned_buckets.capacity() * std::mem::size_of::<OwnedBucket>()
+            + self.owned_handles.capacity() * std::mem::size_of::<OwnedHandle>()
+            + self.owned_free.capacity() * 4;
+        let aura = self.aura_buckets.capacity() * std::mem::size_of::<AuraBucket>()
+            + self.aura_handles.capacity() * 4
+            + self.aura_cells.capacity() * 4;
+        (cells + owned + aura) as u64
+    }
+
+    /// Arena occupancy: (owned buckets in use, owned buckets free, aura
+    /// buckets at the bump high-water mark). Exposed for capacity-reuse
+    /// assertions in tests and the micro-benchmark.
+    pub fn bucket_stats(&self) -> (usize, usize, usize) {
+        (
+            self.owned_buckets.len() - self.owned_free.len(),
+            self.owned_free.len(),
+            self.aura_buckets.len(),
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, Gen};
     use crate::util::Rng;
+    use std::collections::HashMap;
 
     fn grid() -> NeighborSearchGrid {
         NeighborSearchGrid::new(Aabb::new(Vec3::ZERO, Vec3::splat(100.0)), 10.0)
@@ -276,7 +652,7 @@ mod tests {
     #[test]
     fn remove_and_swap_fixup() {
         let mut g = grid();
-        // Three entries in the same cell to exercise swap_remove fix-up.
+        // Three entries in the same cell to exercise swap-remove fix-up.
         g.add(oid(0), Vec3::new(1.0, 1.0, 1.0));
         g.add(oid(1), Vec3::new(2.0, 1.0, 1.0));
         g.add(oid(2), Vec3::new(3.0, 1.0, 1.0));
@@ -398,5 +774,296 @@ mod tests {
             expect.sort();
             assert_eq!(got, expect, "center={c:?} r={r}");
         }
+    }
+
+    // ----- arena-specific coverage -----------------------------------------
+
+    #[test]
+    fn bucket_overflow_chains_one_cell() {
+        // Pack 3× BUCKET_CAP entries into a single cell, then drain them.
+        let mut g = grid();
+        let n = (3 * BUCKET_CAP) as u32;
+        for i in 0..n {
+            g.add(oid(i), Vec3::new(1.0 + 0.01 * i as f64, 1.0, 1.0));
+        }
+        assert_eq!(g.len(), n as usize);
+        let found = g.neighbors_of(Vec3::new(1.0, 1.0, 1.0), 2.0, None);
+        assert_eq!(found.len(), n as usize);
+        // Remove from the middle: chains must stay packed and complete.
+        for i in (0..n).step_by(2) {
+            assert!(g.remove(oid(i)));
+        }
+        let found = g.neighbors_of(Vec3::new(1.0, 1.0, 1.0), 2.0, None);
+        assert_eq!(found.len(), (n / 2) as usize);
+        for (e, _, _) in &found {
+            match e {
+                NsgEntry::Owned(id) => assert_eq!(id.index % 2, 1),
+                _ => unreachable!(),
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_capacity() {
+        // The engine's per-iteration cycle (aura add + clear, position
+        // updates there-and-back, remove + re-add churn) repeated with the
+        // same per-iteration workload must not grow the arenas after a
+        // warm-up (allocation-free steady state, capacity reuse only).
+        let mut rng = Rng::new(7);
+        let home: Vec<Vec3> =
+            (0..64).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [100.0; 3]))).collect();
+        let away: Vec<Vec3> =
+            (0..64).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [100.0; 3]))).collect();
+        let aura_pos: Vec<Vec3> =
+            (0..256).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [100.0; 3]))).collect();
+        let mut g = grid();
+        for (i, p) in home.iter().enumerate() {
+            g.add(oid(i as u32), *p);
+        }
+        let churn = |g: &mut NeighborSearchGrid| {
+            for (i, p) in aura_pos.iter().enumerate() {
+                g.add(NsgEntry::Aura(i as u32), *p);
+            }
+            for (i, p) in away.iter().enumerate() {
+                g.update_position(oid(i as u32), *p);
+            }
+            for (i, p) in home.iter().enumerate() {
+                g.update_position(oid(i as u32), *p);
+            }
+            for i in 0..16u32 {
+                assert!(g.remove(oid(i)));
+            }
+            for i in 0..16u32 {
+                g.add(oid(i), home[i as usize]);
+            }
+            g.clear_aura();
+        };
+        churn(&mut g);
+        churn(&mut g); // second warm-up settles the free-list high water
+        let bytes = g.approx_bytes();
+        let stats = g.bucket_stats();
+        for _ in 0..20 {
+            churn(&mut g);
+        }
+        assert_eq!(g.approx_bytes(), bytes, "steady-state iteration grew the arena");
+        let after = g.bucket_stats();
+        assert_eq!(stats.0 + stats.1, after.0 + after.1, "owned bucket pool grew");
+        assert_eq!(stats.2, after.2, "aura bump arena grew");
+    }
+
+    #[test]
+    fn clear_aura_preserves_owned_handles() {
+        // Regression: clear_aura must leave owned entries AND their handle
+        // table intact — owned removal/update must still work afterwards.
+        let mut g = grid();
+        for i in 0..20 {
+            g.add(oid(i), Vec3::new(1.0 + i as f64 * 4.9, 2.0, 2.0));
+        }
+        for i in 0..50 {
+            g.add(NsgEntry::Aura(i), Vec3::new(1.0 + (i % 20) as f64 * 4.9, 2.5, 2.0));
+        }
+        g.clear_aura();
+        assert_eq!(g.len(), 20);
+        // Handles survived: incremental ops still resolve every entry.
+        for i in 0..20 {
+            g.update_position(oid(i), Vec3::new(1.0 + i as f64 * 4.9, 7.0, 2.0));
+        }
+        assert_eq!(g.len(), 20);
+        for i in 0..20 {
+            assert!(g.remove(oid(i)), "owned handle lost after clear_aura");
+        }
+        assert!(g.is_empty());
+        // Aura handles are reset: stale aura removes are no-ops, re-adding
+        // the same aura indices works.
+        assert!(!g.remove(NsgEntry::Aura(0)));
+        g.add(NsgEntry::Aura(0), Vec3::new(1.0, 1.0, 1.0));
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn aura_remove_tombstone_skipped() {
+        let mut g = grid();
+        g.add(NsgEntry::Aura(0), Vec3::new(1.0, 1.0, 1.0));
+        g.add(NsgEntry::Aura(1), Vec3::new(1.5, 1.0, 1.0));
+        assert!(g.remove(NsgEntry::Aura(0)));
+        assert!(!g.remove(NsgEntry::Aura(0)));
+        assert_eq!(g.len(), 1);
+        let n = g.neighbors_of(Vec3::new(1.0, 1.0, 1.0), 3.0, None);
+        assert_eq!(n.len(), 1);
+        assert_eq!(n[0].0, NsgEntry::Aura(1));
+        // Update of a live aura entry across cells.
+        g.update_position(NsgEntry::Aura(1), Vec3::new(44.0, 44.0, 44.0));
+        assert_eq!(g.neighbors_of(Vec3::new(44.0, 44.0, 44.0), 1.0, None).len(), 1);
+    }
+
+    #[test]
+    fn stale_owned_generation_is_replaced() {
+        // Re-adding a slot index with a bumped reuse counter (the
+        // ResourceManager recycling protocol) retires the stale entry.
+        let mut g = grid();
+        g.add(NsgEntry::Owned(LocalId::new(3, 0)), Vec3::new(1.0, 1.0, 1.0));
+        g.add(NsgEntry::Owned(LocalId::new(3, 1)), Vec3::new(90.0, 90.0, 90.0));
+        assert_eq!(g.len(), 1);
+        assert!(g.neighbors_of(Vec3::new(1.0, 1.0, 1.0), 2.0, None).is_empty());
+        let n = g.neighbors_of(Vec3::new(90.0, 90.0, 90.0), 1.0, None);
+        assert_eq!(n.len(), 1);
+        assert_eq!(n[0].0, NsgEntry::Owned(LocalId::new(3, 1)));
+        // Stale-generation remove is refused.
+        assert!(!g.remove(NsgEntry::Owned(LocalId::new(3, 0))));
+        assert!(g.remove(NsgEntry::Owned(LocalId::new(3, 1))));
+    }
+
+    // ----- randomized property suite vs a brute-force oracle ---------------
+
+    /// Brute-force mirror of the NSG: plain dense tables, O(n²) queries.
+    #[derive(Default)]
+    struct Oracle {
+        owned: Vec<Option<(u32, Vec3)>>, // index -> (reuse, pos)
+        aura: Vec<Option<Vec3>>,
+    }
+
+    impl Oracle {
+        fn entries(&self) -> Vec<(NsgEntry, Vec3)> {
+            let mut out = Vec::new();
+            for (i, e) in self.owned.iter().enumerate() {
+                if let Some((reuse, p)) = e {
+                    out.push((NsgEntry::Owned(LocalId::new(i as u32, *reuse)), *p));
+                }
+            }
+            for (i, p) in self.aura.iter().enumerate() {
+                if let Some(p) = p {
+                    out.push((NsgEntry::Aura(i as u32), *p));
+                }
+            }
+            out
+        }
+
+        fn neighbors(&self, c: Vec3, r: f64, exclude: Option<NsgEntry>) -> Vec<NsgEntry> {
+            self.entries()
+                .into_iter()
+                .filter(|(e, p)| Some(*e) != exclude && p.distance_sq(c) <= r * r)
+                .map(|(e, _)| e)
+                .collect()
+        }
+    }
+
+    fn sort_entries(mut v: Vec<NsgEntry>) -> Vec<NsgEntry> {
+        v.sort_by_key(|e| match e {
+            NsgEntry::Owned(id) => (0u8, id.index, id.reuse),
+            NsgEntry::Aura(i) => (1u8, *i, 0),
+        });
+        v
+    }
+
+    #[test]
+    fn property_interleaved_ops_match_oracle() {
+        check("nsg == brute-force oracle", 24, |g: &mut Gen| {
+            let side = g.f64_in(30.0, 80.0);
+            let cell = g.f64_in(3.0, 15.0);
+            let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(side));
+            let mut nsg = NeighborSearchGrid::new(bounds, cell);
+            let mut oracle = Oracle::default();
+            let ops = g.usize_in(500..=2000);
+            let max_owned = 128usize;
+            let max_aura = 64usize;
+            for _ in 0..ops {
+                let lo = [-5.0; 3];
+                let hi = [side + 5.0; 3];
+                match g.usize_in(0..=9) {
+                    // add/replace an owned generation
+                    0 | 1 | 2 => {
+                        let i = g.usize_in(0..=max_owned - 1);
+                        if oracle.owned.len() <= i {
+                            oracle.owned.resize(i + 1, None);
+                        }
+                        let reuse = match oracle.owned[i] {
+                            Some((r, _)) => {
+                                // retire the live generation first, as the
+                                // ResourceManager protocol does
+                                nsg.remove(NsgEntry::Owned(LocalId::new(i as u32, r)));
+                                r + 1
+                            }
+                            None => 0,
+                        };
+                        let p = Vec3::from_array(g.rng().point_in(lo, hi));
+                        nsg.add(NsgEntry::Owned(LocalId::new(i as u32, reuse)), p);
+                        oracle.owned[i] = Some((reuse, p));
+                    }
+                    // remove owned (possibly absent / stale)
+                    3 | 4 => {
+                        let i = g.usize_in(0..=max_owned - 1);
+                        let live = oracle.owned.get(i).copied().flatten();
+                        let do_remove = g.bool();
+                        match live {
+                            Some((r, _)) if do_remove => {
+                                assert!(nsg.remove(NsgEntry::Owned(LocalId::new(i as u32, r))));
+                                oracle.owned[i] = None;
+                            }
+                            _ => {
+                                // stale or absent: must be a no-op
+                                let r = live.map(|(r, _)| r + 1).unwrap_or(9999);
+                                assert!(!nsg.remove(NsgEntry::Owned(LocalId::new(i as u32, r))));
+                            }
+                        }
+                    }
+                    // move owned
+                    5 | 6 => {
+                        let i = g.usize_in(0..=max_owned - 1);
+                        if let Some(Some((r, _))) = oracle.owned.get(i) {
+                            let r = *r;
+                            let p = Vec3::from_array(g.rng().point_in(lo, hi));
+                            nsg.update_position(NsgEntry::Owned(LocalId::new(i as u32, r)), p);
+                            oracle.owned[i] = Some((r, p));
+                        }
+                    }
+                    // add aura (fresh index only, like the engine)
+                    7 | 8 => {
+                        let i = oracle.aura.len();
+                        if i < max_aura {
+                            let p = Vec3::from_array(g.rng().point_in(lo, hi));
+                            nsg.add(NsgEntry::Aura(i as u32), p);
+                            oracle.aura.push(Some(p));
+                        }
+                    }
+                    // clear aura (rebuilt-every-iteration lifecycle)
+                    _ => {
+                        nsg.clear_aura();
+                        oracle.aura.clear();
+                    }
+                }
+            }
+            // Final invariant: sizes agree.
+            assert_eq!(nsg.len(), oracle.entries().len());
+            // Query sweep, with and without exclusions.
+            for _ in 0..25 {
+                let c = Vec3::from_array(g.rng().point_in([-5.0; 3], [side + 5.0; 3]));
+                let r = g.f64_in(0.5, side / 2.0);
+                let exclude = match g.usize_in(0..=2) {
+                    0 => None,
+                    _ => oracle.entries().first().map(|(e, _)| *e),
+                };
+                let got = sort_entries(
+                    nsg.neighbors_of(c, r, exclude).into_iter().map(|(e, _, _)| e).collect(),
+                );
+                let want = sort_entries(oracle.neighbors(c, r, exclude));
+                assert_eq!(got, want, "center={c:?} r={r} exclude={exclude:?}");
+            }
+            // Region queries against the same oracle.
+            for _ in 0..10 {
+                let a = Vec3::from_array(g.rng().point_in([0.0; 3], [side; 3]));
+                let b = Vec3::from_array(g.rng().point_in([0.0; 3], [side; 3]));
+                let region = Aabb::new(a.min(b), a.max(b));
+                let got = sort_entries(nsg.in_region(&region));
+                let want = sort_entries(
+                    oracle
+                        .entries()
+                        .into_iter()
+                        .filter(|(_, p)| region.contains(*p))
+                        .map(|(e, _)| e)
+                        .collect(),
+                );
+                assert_eq!(got, want, "region={region:?}");
+            }
+        });
     }
 }

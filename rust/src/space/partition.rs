@@ -178,9 +178,24 @@ impl PartitionGrid {
     /// Ranks (≠ `exclude`) owning any box intersecting the sphere
     /// (`center`, `radius`) — the exact aura recipient set for an agent.
     pub fn ranks_within(&self, center: Vec3, radius: f64, exclude: RankId) -> Vec<RankId> {
+        let mut out: Vec<RankId> = Vec::new();
+        self.ranks_within_into(center, radius, exclude, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`ranks_within`](Self::ranks_within):
+    /// clears and refills `out`, so the aura-selection loop can reuse one
+    /// scratch buffer for every agent of an iteration.
+    pub fn ranks_within_into(
+        &self,
+        center: Vec3,
+        radius: f64,
+        exclude: RankId,
+        out: &mut Vec<RankId>,
+    ) {
+        out.clear();
         let lo = self.coords_of(center - Vec3::splat(radius));
         let hi = self.coords_of(center + Vec3::splat(radius));
-        let mut out: Vec<RankId> = Vec::new();
         for cz in lo[2]..=hi[2] {
             for cy in lo[1]..=hi[1] {
                 for cx in lo[0]..=hi[0] {
@@ -195,7 +210,6 @@ impl PartitionGrid {
                 }
             }
         }
-        out
     }
 
     /// Ranks owning boxes face/edge/corner-adjacent to any box of `rank`
