@@ -1,0 +1,371 @@
+//! Exchange micro-benchmark: the cross-rank serialization hot path in
+//! isolation (§2.2–2.3, Fig. 10/11; ROADMAP "Aura SoA" / zero-copy
+//! exchange fast path).
+//!
+//! Compares, at a 100k-agent aura message with delta encoding on and off:
+//! * **encode** — seed per-agent `rm.get` + block pushes (and the seed
+//!   `HashMap`-reorder delta pipeline) vs the SoA-direct columnar writer
+//!   (and the incremental-match, SWAR-diff delta encoder) into reused
+//!   buffers;
+//! * **decode** — seed decompress-to-Vec + copy-parse (and re-serialize
+//!   defragmentation) vs pooled in-place decode.
+//!
+//! A counting global allocator verifies the acceptance bar: after
+//! warm-up, one full aura exchange iteration (encode → wire → decode →
+//! recycle) on the fast path performs **zero** heap allocations.
+//! Emits `BENCH_exchange.json` at the repo root.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::core::ids::LocalId;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::io::codec::Codec;
+use teraagent::io::delta::{seed, DeltaDecoder, DeltaEncoder, DeltaKind};
+use teraagent::io::ta_io::{self, TaView, ViewPool};
+use teraagent::io::{lz4, AlignedBuf, Compression, SerializerKind};
+use teraagent::util::{Rng, Vec3};
+
+// ---------------------------------------------------------------------------
+// Counting allocator
+// ---------------------------------------------------------------------------
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Workload
+// ---------------------------------------------------------------------------
+
+const N_AGENTS: usize = 100_000;
+const SIDE: f64 = 400.0;
+
+struct Workload {
+    rm: ResourceManager,
+    ids: Vec<LocalId>,
+    /// Two position sets to flip between iterations (realistic drift).
+    pos_a: Vec<Vec3>,
+    pos_b: Vec<Vec3>,
+}
+
+fn workload() -> Workload {
+    let mut rng = Rng::new(0xE8C4_A6E);
+    let mut rm = ResourceManager::new(0);
+    let mut ids = Vec::with_capacity(N_AGENTS);
+    let mut pos_a = Vec::with_capacity(N_AGENTS);
+    let mut pos_b = Vec::with_capacity(N_AGENTS);
+    for _ in 0..N_AGENTS {
+        let p = Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3]));
+        let id = rm.add(Agent::cell(p, 8.0, CellType::A));
+        rm.ensure_global_id(id).unwrap();
+        ids.push(id);
+        pos_a.push(p);
+        pos_b.push(p + Vec3::new(
+            rng.uniform_range(-0.5, 0.5),
+            rng.uniform_range(-0.5, 0.5),
+            rng.uniform_range(-0.5, 0.5),
+        ));
+    }
+    Workload { rm, ids, pos_a, pos_b }
+}
+
+fn drift(w: &mut Workload, flip: bool) {
+    let src = if flip { &w.pos_b } else { &w.pos_a };
+    for (i, &id) in w.ids.iter().enumerate() {
+        assert!(w.rm.set_position(id, src[i]));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Seed vs fast paths (io layer, delta on/off)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Default)]
+struct PathTimes {
+    encode_seed: f64,
+    encode_fast: f64,
+    decode_seed: f64,
+    decode_fast: f64,
+}
+
+/// Delta-off: plain TA IO + LZ4.
+fn run_plain(w: &mut Workload) -> PathTimes {
+    let mut t = PathTimes::default();
+
+    // Seed encode: per-agent reads + fresh buffers + compress-to-Vec.
+    let enc_seed = |w: &Workload| -> Vec<u8> {
+        let rm = &w.rm;
+        let buf = ta_io::serialize(w.ids.iter().map(|&id| rm.get(id).unwrap()));
+        lz4::compress(buf.as_slice())
+    };
+    t.encode_seed = measure(1, 5, || enc_seed(w)).median;
+
+    // Fast encode: columns → reused payload, compress appended to reused
+    // wire.
+    let mut payload = AlignedBuf::new();
+    let mut wire: Vec<u8> = Vec::new();
+    let mut lz = lz4::Lz4Scratch::new();
+    {
+        // warm capacities
+        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        wire.clear();
+        lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
+    }
+    t.encode_fast = measure(1, 5, || {
+        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        wire.clear();
+        lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
+        wire.len()
+    })
+    .median;
+
+    let raw_len = payload.len();
+    let compressed = wire.clone();
+
+    // Seed decode: decompress to Vec, copy into aligned storage, parse
+    // with a fresh offset index.
+    t.decode_seed = measure(1, 5, || {
+        let raw = lz4::decompress(&compressed, raw_len).unwrap();
+        let view = TaView::parse(AlignedBuf::from_bytes(&raw)).unwrap();
+        view.len()
+    })
+    .median;
+
+    // Fast decode: decompress in place into a pooled aligned buffer,
+    // parse with pooled offsets, recycle.
+    let mut pool = ViewPool::new();
+    t.decode_fast = measure(1, 5, || {
+        let mut buf = pool.take_buf();
+        lz4::decompress_into(&compressed, raw_len, &mut buf).unwrap();
+        let view = TaView::parse_with(buf, pool.take_offsets()).unwrap();
+        let n = view.len();
+        pool.put_view(view);
+        n
+    })
+    .median;
+    t
+}
+
+/// Delta-on: TA IO + delta + LZ4 on a drifting population (steady-state
+/// Delta messages; period high enough that no refresh lands mid-sample).
+fn run_delta(w: &mut Workload) -> PathTimes {
+    let mut t = PathTimes::default();
+    let period = 1_000_000;
+
+    // --- encode, seed pipeline
+    let mut enc = seed::SeedDeltaEncoder::new(period);
+    enc.encode(w.ids.iter().map(|&id| w.rm.get(id).unwrap())); // reference
+    let mut flip = false;
+    t.encode_seed = measure(1, 5, || {
+        drift(w, flip);
+        flip = !flip;
+        let rm = &w.rm;
+        let (_, buf) = enc.encode(w.ids.iter().map(|&id| rm.get(id).unwrap()));
+        lz4::compress(buf.as_slice()).len()
+    })
+    .median;
+
+    // --- encode, fast pipeline
+    let mut enc_fast = DeltaEncoder::new(period);
+    let mut payload = AlignedBuf::new();
+    let mut wire: Vec<u8> = Vec::new();
+    let mut lz = lz4::Lz4Scratch::new();
+    enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+    let mut flip = false;
+    t.encode_fast = measure(1, 5, || {
+        drift(w, flip);
+        flip = !flip;
+        enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        wire.clear();
+        lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
+        wire.len()
+    })
+    .median;
+
+    // --- decode: build one representative (Full, Delta) pair per side.
+    let mk_stream = |w: &mut Workload| -> (AlignedBuf, AlignedBuf) {
+        let mut e = DeltaEncoder::new(period);
+        drift(w, false);
+        let (_, full) = e.encode(w.ids.iter().map(|&id| w.rm.get(id).unwrap()));
+        drift(w, true);
+        let (k, delta) = e.encode(w.ids.iter().map(|&id| w.rm.get(id).unwrap()));
+        assert_eq!(k, DeltaKind::Delta);
+        (full, delta)
+    };
+    let (full, delta) = mk_stream(w);
+
+    // Seed decode: byte-at-a-time restore + re-serialize defragmentation.
+    let mut dec_seed = seed::SeedDeltaDecoder::new();
+    dec_seed.decode(DeltaKind::Full, full.clone()).unwrap();
+    t.decode_seed = measure(1, 5, || {
+        let view = dec_seed.decode(DeltaKind::Delta, delta.clone()).unwrap();
+        view.len()
+    })
+    .median;
+
+    // Fast decode: SWAR restore + in-place defragmentation, pooled.
+    let mut dec_fast = DeltaDecoder::new();
+    let mut pool = ViewPool::new();
+    let v = dec_fast.decode_pooled(DeltaKind::Full, full.clone(), &mut pool).unwrap();
+    pool.put_view(v);
+    t.decode_fast = measure(1, 5, || {
+        let mut buf = pool.take_buf();
+        buf.set_from_slice(delta.as_slice());
+        let view = dec_fast.decode_pooled(DeltaKind::Delta, buf, &mut pool).unwrap();
+        let n = view.len();
+        pool.put_view(view);
+        n
+    })
+    .median;
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Steady-state allocation assertion (codec level, full exchange loop)
+// ---------------------------------------------------------------------------
+
+/// One full aura exchange iteration over the codec: drift → SoA-direct
+/// encode (delta + LZ4) → wire → pooled decode → recycle.
+fn exchange_iteration(
+    w: &mut Workload,
+    tx: &mut Codec,
+    rx: &mut Codec,
+    wire: &mut Vec<u8>,
+    pool: &mut ViewPool,
+    flip: bool,
+) -> usize {
+    drift(w, flip);
+    tx.encode_rm_into((1, 1), &w.rm, &w.ids, wire);
+    let (decoded, _) = rx.decode_pooled((0, 1), wire, pool);
+    let n = decoded.len();
+    decoded.recycle_into(pool);
+    n
+}
+
+fn alloc_assertion(w: &mut Workload) -> (u64, u64) {
+    let mut tx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 1_000_000 });
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 1_000_000 });
+    let mut wire = Vec::new();
+    let mut pool = ViewPool::new();
+    // Warm-up: reference refresh + capacity high-water marks.
+    for i in 0..4 {
+        exchange_iteration(w, &mut tx, &mut rx, &mut wire, &mut pool, i % 2 == 0);
+    }
+    // Measure steady-state Delta iterations.
+    let before = allocs();
+    let mut n = 0;
+    for i in 0..3 {
+        n += exchange_iteration(w, &mut tx, &mut rx, &mut wire, &mut pool, i % 2 == 1);
+    }
+    let steady = allocs() - before;
+    assert_eq!(n, 3 * N_AGENTS, "exchange dropped agents");
+
+    // Also report (not assert) a refresh iteration's allocations.
+    let mut tx2 = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 2 });
+    let mut rx2 = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 2 });
+    // Kind sequence for period 2: F D F D F D — six warm iterations end
+    // on a Delta, so the measured seventh is a Full (refresh).
+    for i in 0..6 {
+        exchange_iteration(w, &mut tx2, &mut rx2, &mut wire, &mut pool, i % 2 == 0);
+    }
+    let before = allocs();
+    exchange_iteration(w, &mut tx2, &mut rx2, &mut wire, &mut pool, true); // refresh (Full)
+    let refresh = allocs() - before;
+    (steady, refresh)
+}
+
+// ---------------------------------------------------------------------------
+
+fn ratio(base: f64, new: f64) -> f64 {
+    if new > 0.0 { base / new } else { f64::INFINITY }
+}
+
+fn main() {
+    header(
+        "exchange_micro — zero-copy exchange fast path",
+        "§2.2–2.3 (TA IO + delta), Fig. 10/11, ROADMAP Aura SoA",
+    );
+    let mut w = workload();
+
+    let plain = run_plain(&mut w);
+    let delta = run_delta(&mut w);
+    let (steady_allocs, refresh_allocs) = alloc_assertion(&mut w);
+
+    row_strs(&["op", "seed", "fast", "speedup"]);
+    let pr = |op: &str, s: f64, f: f64| {
+        row(&[op.to_string(), fmt_secs(s), fmt_secs(f), format!("{:.2}x", ratio(s, f))]);
+    };
+    pr("encode 100k", plain.encode_seed, plain.encode_fast);
+    pr("decode 100k", plain.decode_seed, plain.decode_fast);
+    pr("encode 100k +delta", delta.encode_seed, delta.encode_fast);
+    pr("decode 100k +delta", delta.decode_seed, delta.decode_fast);
+    println!("  steady-state allocations / iteration (fast path): {steady_allocs}");
+    println!("  reference-refresh iteration allocations:          {refresh_allocs}");
+    assert_eq!(
+        steady_allocs, 0,
+        "aura exchange fast path must be allocation-free after warm-up"
+    );
+
+    let json = format!(
+        r#"{{
+  "bench": "exchange_micro",
+  "agents": {N_AGENTS},
+  "plain": {{
+    "encode_seed_s": {:.6e}, "encode_fast_s": {:.6e}, "encode_speedup": {:.3},
+    "decode_seed_s": {:.6e}, "decode_fast_s": {:.6e}, "decode_speedup": {:.3}
+  }},
+  "delta": {{
+    "encode_seed_s": {:.6e}, "encode_fast_s": {:.6e}, "encode_speedup": {:.3},
+    "decode_seed_s": {:.6e}, "decode_fast_s": {:.6e}, "decode_speedup": {:.3}
+  }},
+  "steady_state_allocs_per_iteration": {steady_allocs},
+  "refresh_iteration_allocs": {refresh_allocs}
+}}
+"#,
+        plain.encode_seed,
+        plain.encode_fast,
+        ratio(plain.encode_seed, plain.encode_fast),
+        plain.decode_seed,
+        plain.decode_fast,
+        ratio(plain.decode_seed, plain.decode_fast),
+        delta.encode_seed,
+        delta.encode_fast,
+        ratio(delta.encode_seed, delta.encode_fast),
+        delta.decode_seed,
+        delta.decode_fast,
+        ratio(delta.decode_seed, delta.decode_fast),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_exchange.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("  wrote {}", out.display()),
+        Err(e) => eprintln!("  could not write {}: {e}", out.display()),
+    }
+}

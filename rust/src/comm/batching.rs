@@ -18,6 +18,11 @@ const FRAME_HEADER: usize = 12;
 /// Sender side: split `data` into frames and send them to `dst` on `tag`.
 /// `msg_id` must be unique per (sender, receiver, tag) stream position —
 /// the engine uses its iteration counter.
+///
+/// The caller keeps ownership of `data` (the codec's reused wire buffer);
+/// each frame is a scatter-gather send of the stack header plus a chunk
+/// slice, so the payload is never staged through an intermediate frame
+/// buffer.
 pub fn send_batched(
     comm: &mut Communicator,
     dst: u32,
@@ -28,23 +33,21 @@ pub fn send_batched(
 ) -> usize {
     let chunk_bytes = chunk_bytes.max(1);
     let total = data.len().div_ceil(chunk_bytes).max(1) as u32;
-    for (i, chunk) in data.chunks(chunk_bytes.max(1)).enumerate() {
-        let mut frame = Vec::with_capacity(FRAME_HEADER + chunk.len());
-        frame.extend_from_slice(&msg_id.to_le_bytes());
-        frame.extend_from_slice(&(i as u32).to_le_bytes());
-        frame.extend_from_slice(&total.to_le_bytes());
-        frame.extend_from_slice(chunk);
-        comm.isend(dst, tag, frame);
-    }
+    let header = |chunk: u32| -> [u8; FRAME_HEADER] {
+        let mut h = [0u8; FRAME_HEADER];
+        h[0..4].copy_from_slice(&msg_id.to_le_bytes());
+        h[4..8].copy_from_slice(&chunk.to_le_bytes());
+        h[8..12].copy_from_slice(&total.to_le_bytes());
+        h
+    };
     if data.is_empty() {
         // Zero-length messages still need one frame so the receiver can
         // match the stream position.
-        let mut frame = Vec::with_capacity(FRAME_HEADER);
-        frame.extend_from_slice(&msg_id.to_le_bytes());
-        frame.extend_from_slice(&0u32.to_le_bytes());
-        frame.extend_from_slice(&1u32.to_le_bytes());
-        comm.isend(dst, tag, frame);
+        comm.isend_parts(dst, tag, &[&header(0)]);
         return 1;
+    }
+    for (i, chunk) in data.chunks(chunk_bytes).enumerate() {
+        comm.isend_parts(dst, tag, &[&header(i as u32), chunk]);
     }
     total as usize
 }
@@ -63,11 +66,31 @@ impl Reassembler {
 
     /// Feed one received frame; returns the full payload once complete.
     pub fn feed(&mut self, src: u32, tag: Tag, frame: Vec<u8>) -> Option<(u32, Vec<u8>)> {
+        let mut out = Vec::new();
+        self.feed_into(src, tag, frame, &mut out).map(|id| (id, out))
+    }
+
+    /// Feed one received frame, assembling the completed payload into a
+    /// caller-owned buffer (cleared first; capacity reused across
+    /// messages). The single-chunk common case copies the frame body
+    /// straight into `out` without touching the partial-stream map.
+    pub fn feed_into(
+        &mut self,
+        src: u32,
+        tag: Tag,
+        frame: Vec<u8>,
+        out: &mut Vec<u8>,
+    ) -> Option<u32> {
         assert!(frame.len() >= FRAME_HEADER, "short chunk frame");
         let msg_id = u32::from_le_bytes(frame[0..4].try_into().unwrap());
         let chunk = u32::from_le_bytes(frame[4..8].try_into().unwrap());
         let total = u32::from_le_bytes(frame[8..12].try_into().unwrap());
-        let body = frame[FRAME_HEADER..].to_vec();
+        if total == 1 {
+            debug_assert_eq!(chunk, 0);
+            out.clear();
+            out.extend_from_slice(&frame[FRAME_HEADER..]);
+            return Some(msg_id);
+        }
         let key = (src, tag, msg_id);
         let entry = self
             .partial
@@ -75,14 +98,16 @@ impl Reassembler {
             .or_insert_with(|| (vec![None; total as usize], total));
         assert_eq!(entry.1, total, "inconsistent chunk totals");
         assert!(entry.0[chunk as usize].is_none(), "duplicate chunk");
-        entry.0[chunk as usize] = Some(body);
+        // Move the frame in whole (body offset recorded implicitly by the
+        // fixed header size) — no per-chunk copy until assembly.
+        entry.0[chunk as usize] = Some(frame);
         if entry.0.iter().all(|c| c.is_some()) {
             let (chunks, _) = self.partial.remove(&key).unwrap();
-            let mut out = Vec::new();
+            out.clear();
             for c in chunks {
-                out.extend_from_slice(&c.unwrap());
+                out.extend_from_slice(&c.unwrap()[FRAME_HEADER..]);
             }
-            Some((msg_id, out))
+            Some(msg_id)
         } else {
             None
         }
@@ -90,10 +115,24 @@ impl Reassembler {
 
     /// Receive a complete batched message from `src` on `tag` (blocking).
     pub fn recv_batched(&mut self, comm: &mut Communicator, src: u32, tag: Tag) -> (u32, Vec<u8>) {
+        let mut out = Vec::new();
+        let id = self.recv_batched_into(comm, src, tag, &mut out);
+        (id, out)
+    }
+
+    /// [`Reassembler::recv_batched`] into a caller-owned buffer, for the
+    /// allocation-free aura receive path.
+    pub fn recv_batched_into(
+        &mut self,
+        comm: &mut Communicator,
+        src: u32,
+        tag: Tag,
+        out: &mut Vec<u8>,
+    ) -> u32 {
         loop {
             let m = comm.recv(Some(src), Some(tag));
-            if let Some(done) = self.feed(m.src, m.tag, m.data) {
-                return done;
+            if let Some(id) = self.feed_into(m.src, m.tag, m.data, out) {
+                return id;
             }
         }
     }
@@ -174,6 +213,27 @@ mod tests {
         done.sort_by_key(|(s, _)| *s);
         assert_eq!(done[0].1, da);
         assert_eq!(done[1].1, db);
+    }
+
+    #[test]
+    fn recv_batched_into_reuses_buffer() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let mut re = Reassembler::new();
+        let mut out = Vec::new();
+        for round in 0u32..4 {
+            let data = vec![round as u8; 2500];
+            send_batched(&mut tx, 1, 7, round, &data, 1000);
+            let id = re.recv_batched_into(&mut rx, 0, 7, &mut out);
+            assert_eq!(id, round);
+            assert_eq!(out, data);
+        }
+        let cap = out.capacity();
+        send_batched(&mut tx, 1, 7, 9, &[1, 2, 3], 1000);
+        re.recv_batched_into(&mut rx, 0, 7, &mut out);
+        assert_eq!(out, vec![1, 2, 3]);
+        assert_eq!(out.capacity(), cap, "steady-state receive must not realloc");
     }
 
     #[test]

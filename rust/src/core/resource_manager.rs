@@ -28,8 +28,9 @@
 //! hold stale values by design; they are only read through live `LocalId`s
 //! (the NSG handle protocol guarantees liveness on the query path).
 
-use super::agent::{Agent, AgentKind, CellType};
-use super::ids::{GlobalId, GlobalIdSource, LocalId};
+use super::agent::{Agent, AgentKind, Behavior, CellType};
+use super::ids::{AgentPointer, GlobalId, GlobalIdSource, LocalId};
+use crate::io::ta_io::ColumnSource;
 use crate::util::Vec3;
 use std::collections::HashMap;
 use std::ops::{Deref, DerefMut};
@@ -44,6 +45,9 @@ pub struct AgentRefMut<'a> {
     pos: &'a mut Vec3,
     diam: &'a mut f64,
     kind: &'a mut AgentKind,
+    gid: &'a mut GlobalId,
+    nref: &'a mut AgentPointer,
+    nbeh: &'a mut u32,
 }
 
 impl Deref for AgentRefMut<'_> {
@@ -68,6 +72,9 @@ impl Drop for AgentRefMut<'_> {
         *self.pos = self.agent.position;
         *self.diam = self.agent.diameter;
         *self.kind = self.agent.kind;
+        *self.gid = self.agent.global_id;
+        *self.nref = self.agent.neighbor_ref;
+        *self.nbeh = self.agent.behaviors.len() as u32;
     }
 }
 
@@ -86,6 +93,12 @@ pub struct ResourceManager {
     pos_col: Vec<Vec3>,
     diam_col: Vec<f64>,
     kind_col: Vec<AgentKind>,
+    /// Exchange-path mirror columns: global id, agent reference and
+    /// behavior count — everything the columnar TA IO writer needs to
+    /// assemble an `AgentBlock` without reading the `Agent` struct.
+    gid_col: Vec<GlobalId>,
+    ref_col: Vec<AgentPointer>,
+    nbeh_col: Vec<u32>,
     /// Aura agents (read-only copies of neighbor-rank agents).
     aura: Vec<Agent>,
     /// GlobalId -> owned slot index, for pointer resolution.
@@ -104,6 +117,9 @@ impl ResourceManager {
             pos_col: Vec::new(),
             diam_col: Vec::new(),
             kind_col: Vec::new(),
+            gid_col: Vec::new(),
+            ref_col: Vec::new(),
+            nbeh_col: Vec::new(),
             aura: Vec::new(),
             global_map: HashMap::new(),
             id_source: GlobalIdSource::new(rank),
@@ -136,6 +152,9 @@ impl ResourceManager {
                 self.pos_col.push(Vec3::ZERO);
                 self.diam_col.push(0.0);
                 self.kind_col.push(KIND_FILL);
+                self.gid_col.push(GlobalId::UNSET);
+                self.ref_col.push(AgentPointer::NULL);
+                self.nbeh_col.push(0);
                 (self.slots.len() - 1) as u32
             }
         };
@@ -148,6 +167,9 @@ impl ResourceManager {
         self.pos_col[index as usize] = agent.position;
         self.diam_col[index as usize] = agent.diameter;
         self.kind_col[index as usize] = agent.kind;
+        self.gid_col[index as usize] = agent.global_id;
+        self.ref_col[index as usize] = agent.neighbor_ref;
+        self.nbeh_col[index as usize] = agent.behaviors.len() as u32;
         self.slots[index as usize] = Some(agent);
         self.live += 1;
         id
@@ -196,6 +218,9 @@ impl ResourceManager {
             pos: &mut self.pos_col[idx],
             diam: &mut self.diam_col[idx],
             kind: &mut self.kind_col[idx],
+            gid: &mut self.gid_col[idx],
+            nref: &mut self.ref_col[idx],
+            nbeh: &mut self.nbeh_col[idx],
         })
     }
 
@@ -257,6 +282,27 @@ impl ResourceManager {
         self.kind_col[index as usize]
     }
 
+    /// Column view for the TA IO SoA-direct encoder. Slots of freed
+    /// agents hold stale values; callers index only through live ids.
+    #[inline]
+    pub fn columns(&self) -> ColumnSource<'_> {
+        ColumnSource {
+            pos: &self.pos_col,
+            diam: &self.diam_col,
+            kind: &self.kind_col,
+            gid: &self.gid_col,
+            nref: &self.ref_col,
+            nbeh: &self.nbeh_col,
+        }
+    }
+
+    /// Behavior slice of the agent in slot `index` (empty for holes) —
+    /// the variable-length tail the columnar writer resolves per agent.
+    #[inline]
+    pub fn behaviors_of_slot(&self, index: u32) -> &[Behavior] {
+        self.slots[index as usize].as_ref().map_or(&[], |a| &a.behaviors[..])
+    }
+
     // -----------------------------------------------------------------------
 
     /// Resolve an agent by *global* id (owned agents only). This is the
@@ -278,6 +324,7 @@ impl ResourceManager {
         if !agent.global_id.is_set() {
             agent.global_id = self.id_source.next();
             self.global_map.insert(agent.global_id, id.index);
+            self.gid_col[idx] = agent.global_id;
         }
         Some(agent.global_id)
     }
@@ -350,6 +397,12 @@ impl ResourceManager {
         self.diam_col.resize(agents.len(), 0.0);
         self.kind_col.clear();
         self.kind_col.resize(agents.len(), KIND_FILL);
+        self.gid_col.clear();
+        self.gid_col.resize(agents.len(), GlobalId::UNSET);
+        self.ref_col.clear();
+        self.ref_col.resize(agents.len(), AgentPointer::NULL);
+        self.nbeh_col.clear();
+        self.nbeh_col.resize(agents.len(), 0);
         self.free.clear();
         self.global_map.clear();
         self.live = 0;
@@ -363,6 +416,9 @@ impl ResourceManager {
             self.pos_col[i] = a.position;
             self.diam_col[i] = a.diameter;
             self.kind_col[i] = a.kind;
+            self.gid_col[i] = a.global_id;
+            self.ref_col[i] = a.neighbor_ref;
+            self.nbeh_col[i] = a.behaviors.len() as u32;
             self.slots[i] = Some(a);
             self.live += 1;
         }
@@ -376,6 +432,9 @@ impl ResourceManager {
             + self.pos_col.capacity() * std::mem::size_of::<Vec3>()
             + self.diam_col.capacity() * 8
             + self.kind_col.capacity() * std::mem::size_of::<AgentKind>()
+            + self.gid_col.capacity() * std::mem::size_of::<GlobalId>()
+            + self.ref_col.capacity() * std::mem::size_of::<AgentPointer>()
+            + self.nbeh_col.capacity() * 4
             + self.global_map.len() * (std::mem::size_of::<GlobalId>() + 8);
         let behaviors: usize = self
             .iter()
@@ -579,6 +638,35 @@ mod tests {
         let b = rm.add(mk(Vec3::splat(2.0)));
         assert_eq!(a.index, b.index);
         assert_eq!(rm.col_position(b.index), Vec3::splat(2.0));
+    }
+
+    #[test]
+    fn exchange_columns_track_mutations() {
+        let mut rm = ResourceManager::new(4);
+        let id = rm.add(mk(Vec3::ZERO));
+        let cols = rm.columns();
+        assert_eq!(cols.gid[id.index as usize], crate::core::ids::GlobalId::UNSET);
+        assert_eq!(cols.nbeh[id.index as usize], 0);
+        // ensure_global_id writes through to the gid column.
+        let gid = rm.ensure_global_id(id).unwrap();
+        assert_eq!(rm.columns().gid[id.index as usize], gid);
+        // Guard drop flushes behaviors count and neighbor ref.
+        let target = crate::core::ids::GlobalId::new(1, 9);
+        {
+            let mut a = rm.get_mut(id).unwrap();
+            a.behaviors.push(crate::core::agent::Behavior::Divide);
+            a.neighbor_ref = AgentPointer::to(target);
+        }
+        assert_eq!(rm.columns().nbeh[id.index as usize], 1);
+        assert_eq!(rm.columns().nref[id.index as usize].target, target);
+        assert_eq!(rm.behaviors_of_slot(id.index).len(), 1);
+        // Sorting rebuilds the exchange columns coherently.
+        rm.sort_by_position(Vec3::ZERO, 1.0);
+        let a = rm.iter().next().unwrap();
+        let idx = a.local_id.index as usize;
+        assert_eq!(rm.columns().gid[idx], gid);
+        assert_eq!(rm.columns().nbeh[idx], 1);
+        assert_eq!(rm.columns().nref[idx].target, target);
     }
 
     #[test]

@@ -12,9 +12,10 @@ use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::Codec;
+use crate::io::ta_io::ViewPool;
 use crate::io::Compression;
 use crate::metrics::{Counter, Op, RankMetrics};
-use crate::runtime::mechanics::{native_mechanics, GatherSlot, MechanicsBatch, AOT_K, AOT_N};
+use crate::runtime::mechanics::{native_mechanics_into, GatherSlot, MechanicsBatch, AOT_K, AOT_N};
 use crate::runtime::service::MechanicsHandle;
 use crate::runtime::MechanicsParams;
 use crate::space::{NeighborSearchGrid, NsgEntry, PartitionGrid};
@@ -30,10 +31,14 @@ pub enum MechBackend {
 }
 
 impl MechBackend {
-    fn compute(&self, batch: &MechanicsBatch, p: MechanicsParams) -> Vec<Vec3> {
+    /// Compute displacements into a caller-owned buffer (the gather
+    /// slot's reused `disp` vector — ROADMAP "displacement out-buffers"):
+    /// the native path writes in place, the service path refills the
+    /// buffer from its reply.
+    fn compute_into(&self, batch: &MechanicsBatch, p: MechanicsParams, out: &mut Vec<Vec3>) {
         match self {
-            MechBackend::Native => native_mechanics(batch, p),
-            MechBackend::Service(h) => h.compute(batch.clone(), p),
+            MechBackend::Native => native_mechanics_into(batch, p, out),
+            MechBackend::Service(h) => h.compute_into(batch, p, out),
         }
     }
 }
@@ -98,6 +103,14 @@ pub struct RankSim<M: Model> {
     /// per-destination agent buffers.
     migration_leaving: Vec<(u32, LocalId)>,
     migration_per_dest: Vec<Vec<Agent>>,
+    /// Migration ingest scratch (agents drained out of decoded views).
+    migration_ingest: Vec<Agent>,
+    /// Recycler for receive buffers + view offset indices: buffers cycle
+    /// pool → decode → aura store → pool, so the exchange path allocates
+    /// nothing in steady state.
+    view_pool: ViewPool,
+    /// Reused wire buffer for aura encode/receive.
+    wire_scratch: Vec<u8>,
 }
 
 impl<M: Model> RankSim<M> {
@@ -153,6 +166,9 @@ impl<M: Model> RankSim<M> {
             neighbors_dirty: true,
             migration_leaving: Vec::new(),
             migration_per_dest: Vec::new(),
+            migration_ingest: Vec::new(),
+            view_pool: ViewPool::new(),
+            wire_scratch: Vec::new(),
             comm,
             grid,
             nsg,
@@ -239,7 +255,9 @@ impl<M: Model> RankSim<M> {
     fn aura_update(&mut self) {
         let t = crate::util::timing::CpuTimer::start();
         self.nsg.clear_aura();
-        self.aura.clear();
+        // Last iteration's receive buffers go back to the pool — the
+        // in-buffer aura storage cycles instead of reallocating.
+        self.aura.recycle_into(&mut self.view_pool);
         let radius = self.model.interaction_radius();
         let me = self.rank;
         if self.neighbors_dirty {
@@ -277,14 +295,14 @@ impl<M: Model> RankSim<M> {
                 self.rm.ensure_global_id(id);
             }
         }
-        // Encode + send one (batched) message per neighbor. The encoder
-        // iterates agent storage directly — no per-message `Vec<&Agent>`.
+        // Encode + send one (batched) message per neighbor, streaming the
+        // selected agents straight out of the SoA columns into the reused
+        // wire buffer (no `Agent` reads, no steady-state allocation), and
+        // framing chunks around that same buffer.
+        let mut wire = std::mem::take(&mut self.wire_scratch);
         for (dest, ids) in &per_dest {
-            let rm = &self.rm;
             self.metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
-            let (wire, es) = self
-                .codec
-                .encode((*dest, tags::AURA), ids.iter().map(|&id| rm.get(id).unwrap()));
+            let es = self.codec.encode_rm_into((*dest, tags::AURA), &self.rm, ids, &mut wire);
             self.metrics.add_op(Op::Serialize, es.serialize_secs);
             self.metrics.add_op(Op::Compress, es.compress_secs);
             self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
@@ -302,12 +320,14 @@ impl<M: Model> RankSim<M> {
             });
         }
         self.aura_per_dest = per_dest;
-        // Receive from every neighbor; register aura agents in the NSG.
+        // Receive from every neighbor; decode in place (pooled buffers,
+        // in-buffer delta restore) and register aura agents in the NSG.
         for &src in &self.neighbors_cache {
-            let (_, wire) = self.metrics.timed_cpu(Op::Transfer, || {
-                self.reassembler.recv_batched(&mut self.comm, src, tags::AURA)
+            self.metrics.timed_cpu(Op::Transfer, || {
+                self.reassembler.recv_batched_into(&mut self.comm, src, tags::AURA, &mut wire)
             });
-            let (decoded, ds) = self.codec.decode((src, tags::AURA), &wire);
+            let (decoded, ds) =
+                self.codec.decode_pooled((src, tags::AURA), &wire, &mut self.view_pool);
             self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
             self.metrics.add_op(Op::Decompress, ds.decompress_secs);
             let range = self.aura.add_source(decoded);
@@ -315,6 +335,7 @@ impl<M: Model> RankSim<M> {
                 self.nsg.add(NsgEntry::Aura(i), self.aura.position(i));
             }
         }
+        self.wire_scratch = wire;
         self.metrics.add_op(Op::AuraUpdate, t.elapsed_secs());
     }
 
@@ -360,7 +381,12 @@ impl<M: Model> RankSim<M> {
                     let pos = rm.col_position(id.index);
                     let kind = rm.col_kind(id.index);
                     slot.batch.set_agent(row, pos, rm.col_diameter(id.index));
-                    slot.scratch.clear();
+                    // Bounded K-nearest selection (max-heap): candidates
+                    // stream through a K-entry heap in deterministic
+                    // total order — nearest first, ties by position —
+                    // independent of rank count / NSG layout; the
+                    // per-agent sort over all candidates is gone.
+                    slot.knn.clear();
                     nsg.for_each_neighbor(
                         pos,
                         radius,
@@ -374,19 +400,10 @@ impl<M: Model> RankSim<M> {
                                 NsgEntry::Aura(ai) => (aura.diameter(ai), aura.kind(ai)),
                             };
                             let adh = model.adhesion_scale(&kind, &nkind);
-                            slot.scratch.push((d2, npos, diam, adh));
+                            slot.knn.push((d2, npos, diam, adh));
                         },
                     );
-                    // Deterministic neighbor order: nearest first, ties by
-                    // position — independent of rank count / NSG layout.
-                    slot.scratch.sort_by(|a, b| {
-                        a.0.partial_cmp(&b.0)
-                            .unwrap()
-                            .then(a.1.x.partial_cmp(&b.1.x).unwrap())
-                            .then(a.1.y.partial_cmp(&b.1.y).unwrap())
-                            .then(a.1.z.partial_cmp(&b.1.z).unwrap())
-                    });
-                    for (j, (_, pos, diam, adh)) in slot.scratch.iter().take(AOT_K).enumerate() {
+                    for (j, (_, pos, diam, adh)) in slot.knn.sorted().iter().enumerate() {
                         slot.batch.set_neighbor(row, j, *pos, *diam, (*adh).max(1e-6));
                     }
                 }
@@ -396,14 +413,16 @@ impl<M: Model> RankSim<M> {
             self.pool_cpu_secs += pool_cpu;
         }
 
-        // Execute (PJRT service or native) and apply displacements
-        // through the O(1) position write-through.
+        // Execute (PJRT service or native) into each slot's reused
+        // displacement out-buffer and apply through the O(1) position
+        // write-through.
         let whole = self.grid.whole();
-        for (bi, slot) in self.gather[..nb].iter().enumerate() {
-            let disp = self.mech.compute(&slot.batch, params);
+        let mech = &self.mech;
+        for (bi, slot) in self.gather[..nb].iter_mut().enumerate() {
+            mech.compute_into(&slot.batch, params, &mut slot.disp);
             for row in 0..slot.batch.live {
                 let id = self.ids_scratch[bi * AOT_N + row];
-                let d = disp[row];
+                let d = slot.disp[row];
                 if d == Vec3::ZERO {
                     continue;
                 }
@@ -518,24 +537,31 @@ impl<M: Model> RankSim<M> {
         self.a2a_round += 1;
         let received =
             self.metrics.timed_cpu(Op::Transfer, || self.comm.alltoallv(payloads, round));
+        let mut ingest = std::mem::take(&mut self.migration_ingest);
         for (src, wire) in received.into_iter().enumerate() {
             if wire.is_empty() {
                 continue;
             }
-            let (decoded, ds) = self
-                .migration_codec
-                .decode((src as u32, tags::MIGRATION), &wire);
+            let (decoded, ds) = self.migration_codec.decode_pooled(
+                (src as u32, tags::MIGRATION),
+                &wire,
+                &mut self.view_pool,
+            );
             self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
             self.metrics.add_op(Op::Decompress, ds.decompress_secs);
             // Migrated agents are moved out of the buffer into owned
             // storage (they get fresh local ids here — the local/global
-            // id translation of §2.5).
-            for agent in decoded.into_agents() {
+            // id translation of §2.5); the decode buffer goes straight
+            // back to the pool, and the ingest scratch is reused.
+            ingest.clear();
+            decoded.drain_agents_into(&mut ingest, &mut self.view_pool);
+            for agent in ingest.drain(..) {
                 let id = self.rm.add(agent);
                 let pos = self.rm.get(id).unwrap().position;
                 self.nsg.add(NsgEntry::Owned(id), pos);
             }
         }
+        self.migration_ingest = ingest;
         self.metrics.add_op(Op::Migration, t.elapsed_secs());
     }
 
@@ -669,7 +695,8 @@ impl<M: Model> RankSim<M> {
             + self.nsg.approx_bytes()
             + self.grid.approx_bytes()
             + self.aura.approx_bytes()
-            + self.codec.reference_bytes();
+            + self.codec.reference_bytes()
+            + self.view_pool.approx_bytes();
         if live > self.metrics.peak_mem_bytes {
             self.metrics.peak_mem_bytes = live;
         }

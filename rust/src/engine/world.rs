@@ -1,25 +1,34 @@
 //! The per-rank world view handed to models, plus the aura store.
 //!
-//! [`AuraStore`] keeps received aura messages in their zero-copy TA IO
-//! form: neighbor attribute reads go straight into the receive buffers
-//! (the paper's "agents accessed directly from the received buffer").
+//! [`AuraStore`] keeps received aura messages alive in their zero-copy
+//! TA IO form (the paper's "agents accessed directly from the received
+//! buffer") and, at ingest, mirrors the three hot attributes —
+//! position, diameter, kind — into flat SoA columns read straight out of
+//! the receive buffer. Neighbor loops then stream aura agents exactly
+//! like owned ones: a contiguous column read instead of a per-entry
+//! `(source, slot, is_view)` indirection plus an enum decode per access.
 //! Only the ROOT IO baseline materializes owned copies.
 
 use crate::core::agent::{Agent, AgentKind};
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::Decoded;
-use crate::io::ta_io::TaView;
+use crate::io::ta_io::{TaView, ViewPool};
 use crate::space::{Aabb, BoundaryCondition, NeighborSearchGrid, NsgEntry};
 use crate::util::{Rng, Vec3};
 
-/// Aura agents received this iteration, in zero-copy or owned form.
+/// Aura agents received this iteration: the live receive buffers plus
+/// flat hot-attribute columns indexed by aura id.
 #[derive(Default)]
 pub struct AuraStore {
+    /// Receive buffers kept alive for the iteration (in-buffer storage).
     views: Vec<TaView>,
+    /// Owned agents from the ROOT IO baseline path.
     owned: Vec<Vec<Agent>>,
-    /// Flattened index: aura id -> (source index, slot, is_view).
-    index: Vec<(u32, u32, bool)>,
+    /// Flat SoA mirror of the hot attributes, one entry per aura agent.
+    pos: Vec<Vec3>,
+    diam: Vec<f64>,
+    kind: Vec<AgentKind>,
 }
 
 impl AuraStore {
@@ -28,75 +37,91 @@ impl AuraStore {
     }
 
     /// Drop all aura data (start of each iteration; the paper's
-    /// rebuilt-every-iteration aura lifecycle).
+    /// rebuilt-every-iteration aura lifecycle). Column capacity is kept;
+    /// view buffers are freed — prefer [`AuraStore::recycle_into`] on the
+    /// hot path so they return to the decode pool instead.
     pub fn clear(&mut self) {
         self.views.clear();
         self.owned.clear();
-        self.index.clear();
+        self.pos.clear();
+        self.diam.clear();
+        self.kind.clear();
+    }
+
+    /// [`AuraStore::clear`], recycling the spent receive buffers into the
+    /// decode pool — the steady state moves buffers in a closed loop
+    /// (pool → decode → aura → pool) and allocates nothing.
+    pub fn recycle_into(&mut self, pool: &mut ViewPool) {
+        for view in self.views.drain(..) {
+            pool.put_view(view);
+        }
+        self.owned.clear();
+        self.pos.clear();
+        self.diam.clear();
+        self.kind.clear();
     }
 
     /// Ingest one decoded message; returns the flat aura ids assigned to
-    /// its agents (placeholder-free by construction).
+    /// its agents (placeholder-free by construction). Hot attributes are
+    /// mirrored into the SoA columns directly from the receive buffer —
+    /// no `Agent` is materialized.
     pub fn add_source(&mut self, decoded: Decoded) -> std::ops::Range<u32> {
-        let start = self.index.len() as u32;
+        let start = self.pos.len() as u32;
         match decoded {
             Decoded::View(view) => {
-                let src = self.views.len() as u32;
+                self.pos.reserve(view.len());
+                self.diam.reserve(view.len());
+                self.kind.reserve(view.len());
                 for slot in 0..view.len() {
-                    if !view.agent(slot).is_placeholder() {
-                        self.index.push((src, slot as u32, true));
+                    let ab = view.agent(slot);
+                    if !ab.is_placeholder() {
+                        self.pos.push(Vec3::from_array(ab.position));
+                        self.diam.push(ab.diameter);
+                        self.kind.push(ab.kind());
                     }
                 }
                 self.views.push(view);
             }
             Decoded::Owned(agents) => {
-                let src = self.owned.len() as u32;
-                for slot in 0..agents.len() {
-                    self.index.push((src, slot as u32, false));
+                self.pos.reserve(agents.len());
+                self.diam.reserve(agents.len());
+                self.kind.reserve(agents.len());
+                for a in &agents {
+                    self.pos.push(a.position);
+                    self.diam.push(a.diameter);
+                    self.kind.push(a.kind);
                 }
                 self.owned.push(agents);
             }
         }
-        start..self.index.len() as u32
+        start..self.pos.len() as u32
     }
 
     pub fn len(&self) -> usize {
-        self.index.len()
+        self.pos.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.index.is_empty()
+        self.pos.is_empty()
     }
 
-    /// Position of aura agent `i` (zero-copy for TA IO sources).
+    /// Position of aura agent `i` (flat column read).
+    #[inline]
     pub fn position(&self, i: u32) -> Vec3 {
-        let (src, slot, is_view) = self.index[i as usize];
-        if is_view {
-            Vec3::from_array(self.views[src as usize].agent(slot as usize).position)
-        } else {
-            self.owned[src as usize][slot as usize].position
-        }
+        self.pos[i as usize]
     }
 
+    #[inline]
     pub fn diameter(&self, i: u32) -> f64 {
-        let (src, slot, is_view) = self.index[i as usize];
-        if is_view {
-            self.views[src as usize].agent(slot as usize).diameter
-        } else {
-            self.owned[src as usize][slot as usize].diameter
-        }
+        self.diam[i as usize]
     }
 
+    #[inline]
     pub fn kind(&self, i: u32) -> AgentKind {
-        let (src, slot, is_view) = self.index[i as usize];
-        if is_view {
-            self.views[src as usize].agent(slot as usize).kind()
-        } else {
-            self.owned[src as usize][slot as usize].kind
-        }
+        self.kind[i as usize]
     }
 
-    /// Bytes held by the aura buffers (memory accounting).
+    /// Bytes held by the aura buffers + columns (memory accounting).
     pub fn approx_bytes(&self) -> u64 {
         let views: usize = self.views.iter().map(|v| v.buffer_bytes()).sum();
         let owned: usize = self
@@ -104,7 +129,10 @@ impl AuraStore {
             .iter()
             .map(|v| v.len() * std::mem::size_of::<Agent>())
             .sum();
-        (views + owned + self.index.len() * 12) as u64
+        let cols = self.pos.capacity() * std::mem::size_of::<Vec3>()
+            + self.diam.capacity() * 8
+            + self.kind.capacity() * std::mem::size_of::<AgentKind>();
+        (views + owned + cols) as u64
     }
 }
 
@@ -309,6 +337,18 @@ mod tests {
         assert_eq!(store.diameter(0), 7.0);
         assert!(matches!(store.kind(1), AgentKind::Person { state: SirState::Infected, .. }));
         assert!(store.approx_bytes() > 0);
+    }
+
+    #[test]
+    fn aura_store_recycles_buffers_to_pool() {
+        let mut a = Agent::cell(Vec3::new(1.0, 2.0, 3.0), 7.0, CellType::B);
+        a.global_id = GlobalId::new(1, 1);
+        let mut store = aura_from_agents(&[a]);
+        assert_eq!(store.len(), 1);
+        let mut pool = crate::io::ta_io::ViewPool::new();
+        store.recycle_into(&mut pool);
+        assert!(store.is_empty());
+        assert!(pool.approx_bytes() > 0, "buffers must land in the pool");
     }
 
     #[test]

@@ -114,6 +114,46 @@ impl AlignedBuf {
         self.len = 0;
     }
 
+    /// Shrink the logical length to `bytes` (no-op if already shorter).
+    /// Storage is retained for reuse.
+    pub fn truncate(&mut self, bytes: usize) {
+        if bytes < self.len {
+            self.len = bytes;
+        }
+    }
+
+    /// Replace the contents with `bytes`, reusing existing capacity — the
+    /// steady-state-allocation-free alternative to [`AlignedBuf::from_bytes`]
+    /// for per-channel buffers that cycle every iteration.
+    pub fn set_from_slice(&mut self, bytes: &[u8]) {
+        self.resize_for_overwrite(bytes.len());
+        self.as_mut_slice().copy_from_slice(bytes);
+    }
+
+    /// View the byte range `[off, off + len)` as u64 words. Both bounds
+    /// must be 8-byte multiples — which every TA IO block boundary is
+    /// (header, agent and behavior blocks are all 8-byte-sized) — so the
+    /// delta layer can diff/restore in word-sized chunks.
+    #[inline]
+    pub fn words(&self, off: usize, len: usize) -> &[u64] {
+        debug_assert_eq!(off % 8, 0);
+        debug_assert_eq!(len % 8, 0);
+        // Bound by the *logical* length (rounded up to the final partial
+        // word) — a range into recycled storage beyond the current
+        // message must fail here, not read stale bytes.
+        assert!(off + len <= self.len.div_ceil(8) * 8, "word range out of bounds");
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().add(off / 8), len / 8) }
+    }
+
+    /// Mutable u64 view of `[off, off + len)` (see [`AlignedBuf::words`]).
+    #[inline]
+    pub fn words_mut(&mut self, off: usize, len: usize) -> &mut [u64] {
+        debug_assert_eq!(off % 8, 0);
+        debug_assert_eq!(len % 8, 0);
+        assert!(off + len <= self.len.div_ceil(8) * 8, "word range out of bounds");
+        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr().add(off / 8), len / 8) }
+    }
+
     /// Copy out to a plain Vec (e.g. to hand to a transport).
     pub fn to_vec(&self) -> Vec<u8> {
         self.as_slice().to_vec()
@@ -177,5 +217,35 @@ mod tests {
         let mut b = AlignedBuf::from_bytes(&[0, 0, 0]);
         b.as_mut_slice()[1] = 42;
         assert_eq!(b.as_slice(), &[0, 42, 0]);
+    }
+
+    #[test]
+    fn set_from_slice_reuses_capacity() {
+        let mut b = AlignedBuf::with_capacity(64);
+        b.set_from_slice(&[1; 64]);
+        let cap = b.capacity();
+        b.set_from_slice(&[2; 32]);
+        assert_eq!(b.len(), 32);
+        assert_eq!(b.capacity(), cap, "shrinking set must not reallocate");
+        assert_eq!(b.as_slice(), &[2; 32]);
+    }
+
+    #[test]
+    fn truncate_shrinks_only() {
+        let mut b = AlignedBuf::from_bytes(&[5; 24]);
+        b.truncate(16);
+        assert_eq!(b.len(), 16);
+        b.truncate(100);
+        assert_eq!(b.len(), 16);
+    }
+
+    #[test]
+    fn word_views_cover_byte_ranges() {
+        let mut b = AlignedBuf::new();
+        b.extend_from_slice(&(0u64.to_le_bytes()));
+        b.extend_from_slice(&(0x0102_0304_0506_0708u64.to_le_bytes()));
+        assert_eq!(b.words(8, 8), &[0x0102_0304_0506_0708]);
+        b.words_mut(0, 8)[0] = u64::MAX;
+        assert_eq!(&b.as_slice()[..8], &[0xFF; 8]);
     }
 }

@@ -11,8 +11,12 @@
 
 use super::buffer::AlignedBuf;
 use super::delta::{DeltaDecoder, DeltaEncoder, DeltaKind};
+use super::lz4::Lz4Scratch;
+use super::ta_io::{AgentRows, TaView, ViewPool};
 use super::{lz4, root_io, ta_io};
 use crate::core::agent::Agent;
+use crate::core::ids::LocalId;
+use crate::core::resource_manager::ResourceManager;
 use std::collections::HashMap;
 
 /// Which serializer to run (Fig. 10's comparison axis).
@@ -107,6 +111,27 @@ impl Decoded {
         }
     }
 
+    /// Drain the agents into a caller-owned vector and recycle the view's
+    /// storage — the migration ingest path: the per-message `Vec<Agent>`
+    /// and the view's buffer/offset allocations disappear; only each
+    /// agent's own behavior vector remains (inherent to owning it).
+    pub fn drain_agents_into(self, out: &mut Vec<Agent>, pool: &mut ViewPool) {
+        match self {
+            Decoded::View(v) => {
+                v.materialize_all_into(out);
+                pool.put_view(v);
+            }
+            Decoded::Owned(mut a) => out.append(&mut a),
+        }
+    }
+
+    /// Recycle the backing storage without materializing (aura teardown).
+    pub fn recycle_into(self, pool: &mut ViewPool) {
+        if let Decoded::View(v) = self {
+            pool.put_view(v);
+        }
+    }
+
     pub fn len(&self) -> usize {
         match self {
             Decoded::View(v) => v.len(),
@@ -122,64 +147,223 @@ impl Decoded {
 /// A channel key: (peer rank, message tag).
 pub type ChannelKey = (u32, u32);
 
-/// Stateful codec for one rank: owns the per-channel delta references.
+/// Per-(peer, tag) sender state: the delta encoder, a reused payload
+/// buffer (the delta encoder's reference double-buffers against it on
+/// refresh: the payload bytes become the reference copy, the buffer's
+/// capacity keeps cycling), and the LZ4 match-table scratch.
+#[derive(Default)]
+struct TxChannel {
+    delta: DeltaEncoder,
+    payload: AlignedBuf,
+    lz: Lz4Scratch,
+}
+
+/// Assemble the wire envelope + (optionally compressed) body into a
+/// caller-owned vector: `[serializer u8][delta-kind u8][raw_len u32 LE]
+/// [payload]`. Compression appends directly after the envelope — no
+/// intermediate compressed buffer exists.
+fn finish_wire(
+    compression: Compression,
+    ser_code: u8,
+    kind: DeltaKind,
+    payload: &[u8],
+    lz: &mut Lz4Scratch,
+    wire: &mut Vec<u8>,
+    stats: &mut EncodeStats,
+) {
+    stats.raw_bytes = payload.len();
+    let compressed = !matches!(compression, Compression::None);
+    wire.clear();
+    // Worst-case LZ4 expansion bound, so appending the compressed body
+    // never grows the buffer mid-stream.
+    wire.reserve(payload.len() + payload.len() / 255 + 24);
+    wire.push(ser_code);
+    wire.push(kind.code() | if compressed { 0x80 } else { 0 });
+    wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    if compressed {
+        let t1 = std::time::Instant::now();
+        lz4::compress_into(payload, wire, lz);
+        stats.compress_secs = t1.elapsed().as_secs_f64();
+    } else {
+        // The raw-body copy is transport staging, not compression work —
+        // keep it out of the Op::Compress bucket like the seed pipeline.
+        wire.extend_from_slice(payload);
+    }
+    stats.wire_bytes = wire.len();
+}
+
+/// Stateful codec for one rank: owns the per-channel delta references and
+/// reused encode buffers.
 pub struct Codec {
     pub serializer: SerializerKind,
     pub compression: Compression,
-    encoders: HashMap<ChannelKey, DeltaEncoder>,
-    decoders: HashMap<ChannelKey, DeltaDecoder>,
+    tx: HashMap<ChannelKey, TxChannel>,
+    rx: HashMap<ChannelKey, DeltaDecoder>,
 }
 
 impl Codec {
     pub fn new(serializer: SerializerKind, compression: Compression) -> Self {
-        Codec { serializer, compression, encoders: HashMap::new(), decoders: HashMap::new() }
+        Codec { serializer, compression, tx: HashMap::new(), rx: HashMap::new() }
     }
 
-    /// Encode agents for transmission on (peer, tag).
+    /// Encode agents for transmission on (peer, tag). Allocates the wire
+    /// vector; the hot paths use [`Codec::encode_into`] /
+    /// [`Codec::encode_rm_into`] with reused buffers instead.
     pub fn encode<'a>(
         &mut self,
         key: ChannelKey,
         agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
     ) -> (Vec<u8>, EncodeStats) {
+        let mut wire = Vec::new();
+        let stats = self.encode_into(key, agents, &mut wire);
+        (wire, stats)
+    }
+
+    /// Encode borrowed agents into a caller-owned wire buffer (the
+    /// migration path: agents have already been moved out of the store).
+    pub fn encode_into<'a>(
+        &mut self,
+        key: ChannelKey,
+        agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+        wire: &mut Vec<u8>,
+    ) -> EncodeStats {
         let mut stats = EncodeStats::default();
         let t0 = std::time::Instant::now();
-        let (delta_kind, payload): (DeltaKind, Vec<u8>) = match self.serializer {
-            SerializerKind::RootIo => (DeltaKind::Full, root_io::serialize(agents)),
-            SerializerKind::TaIo => match self.compression {
-                Compression::Lz4Delta { period } => {
-                    let enc = self
-                        .encoders
-                        .entry(key)
-                        .or_insert_with(|| DeltaEncoder::new(period));
-                    let (k, buf) = enc.encode(agents);
-                    (k, buf.to_vec())
-                }
-                _ => (DeltaKind::Full, ta_io::serialize(agents).to_vec()),
-            },
-        };
-        stats.serialize_secs = t0.elapsed().as_secs_f64();
-        stats.raw_bytes = payload.len();
-
-        let t1 = std::time::Instant::now();
-        let (compressed, body): (bool, Vec<u8>) = match self.compression {
-            Compression::None => (false, payload),
-            Compression::Lz4 | Compression::Lz4Delta { .. } => {
-                (true, lz4::compress(&payload))
+        let compression = self.compression;
+        match self.serializer {
+            SerializerKind::RootIo => {
+                let payload = root_io::serialize(agents);
+                stats.serialize_secs = t0.elapsed().as_secs_f64();
+                let ch = self.tx.entry(key).or_default();
+                finish_wire(
+                    compression,
+                    SerializerKind::RootIo.code(),
+                    DeltaKind::Full,
+                    &payload,
+                    &mut ch.lz,
+                    wire,
+                    &mut stats,
+                );
             }
-        };
-        stats.compress_secs = t1.elapsed().as_secs_f64();
+            SerializerKind::TaIo => {
+                let ch = self.tx.entry(key).or_default();
+                let kind = match compression {
+                    Compression::Lz4Delta { period } => {
+                        ch.delta.period = period;
+                        let list: Vec<&Agent> = agents.collect();
+                        ch.delta.encode_rows(&AgentRows(&list), &mut ch.payload)
+                    }
+                    _ => {
+                        ta_io::serialize_into(agents, &mut ch.payload);
+                        DeltaKind::Full
+                    }
+                };
+                stats.serialize_secs = t0.elapsed().as_secs_f64();
+                let TxChannel { payload, lz, .. } = ch;
+                finish_wire(
+                    compression,
+                    SerializerKind::TaIo.code(),
+                    kind,
+                    payload.as_slice(),
+                    lz,
+                    wire,
+                    &mut stats,
+                );
+            }
+        }
+        stats
+    }
 
-        let mut wire = Vec::with_capacity(body.len() + 8);
-        wire.push(self.serializer.code());
-        wire.push(delta_kind.code() | if compressed { 0x80 } else { 0 });
-        wire.extend_from_slice(&(stats.raw_bytes as u32).to_le_bytes());
-        wire.extend_from_slice(&body);
-        stats.wire_bytes = wire.len();
-        (wire, stats)
+    /// The aura fast path: encode the agents selected by `ids` straight
+    /// out of the `ResourceManager` SoA columns into a caller-owned wire
+    /// buffer. No `Agent` structs are read or built, serialization writes
+    /// into the channel's reused payload buffer, and compression appends
+    /// directly to `wire` — zero steady-state allocation end to end.
+    /// Wire bytes are identical to [`Codec::encode`] over the same agents
+    /// in the same order.
+    pub fn encode_rm_into(
+        &mut self,
+        key: ChannelKey,
+        rm: &ResourceManager,
+        ids: &[LocalId],
+        wire: &mut Vec<u8>,
+    ) -> EncodeStats {
+        let mut stats = EncodeStats::default();
+        let t0 = std::time::Instant::now();
+        let compression = self.compression;
+        match self.serializer {
+            SerializerKind::RootIo => {
+                // The generic baseline honestly keeps its per-object walk.
+                let payload =
+                    root_io::serialize(ids.iter().map(|&id| rm.get(id).expect("stale aura id")));
+                stats.serialize_secs = t0.elapsed().as_secs_f64();
+                let ch = self.tx.entry(key).or_default();
+                finish_wire(
+                    compression,
+                    SerializerKind::RootIo.code(),
+                    DeltaKind::Full,
+                    &payload,
+                    &mut ch.lz,
+                    wire,
+                    &mut stats,
+                );
+            }
+            SerializerKind::TaIo => {
+                let ch = self.tx.entry(key).or_default();
+                let cols = rm.columns();
+                let kind = match compression {
+                    Compression::Lz4Delta { period } => {
+                        ch.delta.period = period;
+                        ch.delta.encode_cols_into(
+                            &cols,
+                            ids,
+                            |s| rm.behaviors_of_slot(s),
+                            &mut ch.payload,
+                        )
+                    }
+                    _ => {
+                        ta_io::serialize_columns_into(
+                            &cols,
+                            ids,
+                            |s| rm.behaviors_of_slot(s),
+                            &mut ch.payload,
+                        );
+                        DeltaKind::Full
+                    }
+                };
+                stats.serialize_secs = t0.elapsed().as_secs_f64();
+                let TxChannel { payload, lz, .. } = ch;
+                finish_wire(
+                    compression,
+                    SerializerKind::TaIo.code(),
+                    kind,
+                    payload.as_slice(),
+                    lz,
+                    wire,
+                    &mut stats,
+                );
+            }
+        }
+        stats
     }
 
     /// Decode a message received on (peer, tag).
     pub fn decode(&mut self, key: ChannelKey, wire: &[u8]) -> (Decoded, DecodeStats) {
+        let mut pool = ViewPool::new();
+        self.decode_pooled(key, wire, &mut pool)
+    }
+
+    /// [`Codec::decode`] drawing buffers from (and eventually returning
+    /// them to, via [`Decoded::recycle_into`] / `AuraStore`) a pool: the
+    /// wire body is decompressed or copied **once** into an aligned
+    /// buffer, delta restore and defragmentation happen in place, and the
+    /// returned view serves reads from those very bytes.
+    pub fn decode_pooled(
+        &mut self,
+        key: ChannelKey,
+        wire: &[u8],
+        pool: &mut ViewPool,
+    ) -> (Decoded, DecodeStats) {
         let mut stats = DecodeStats::default();
         assert!(wire.len() >= 6, "wire message too short");
         let ser = wire[0];
@@ -190,25 +374,34 @@ impl Codec {
         let body = &wire[6..];
 
         let t0 = std::time::Instant::now();
-        let payload: Vec<u8> = if compressed {
-            lz4::decompress(body, raw_len).expect("corrupt LZ4 payload")
+        let mut payload = pool.take_buf();
+        if compressed {
+            lz4::decompress_into(body, raw_len, &mut payload).expect("corrupt LZ4 payload");
         } else {
-            body.to_vec()
-        };
+            payload.set_from_slice(body);
+        }
         stats.decompress_secs = t0.elapsed().as_secs_f64();
 
         let t1 = std::time::Instant::now();
         let decoded = if ser == SerializerKind::RootIo.code() {
-            Decoded::Owned(root_io::deserialize(&payload).expect("corrupt ROOT IO payload"))
+            let agents =
+                root_io::deserialize(payload.as_slice()).expect("corrupt ROOT IO payload");
+            pool.put_buf(payload);
+            Decoded::Owned(agents)
         } else {
-            let buf = AlignedBuf::from_bytes(&payload);
             match delta_kind {
                 DeltaKind::Full if !matches!(self.compression, Compression::Lz4Delta { .. }) => {
-                    Decoded::View(ta_io::TaView::parse(buf).expect("corrupt TA IO payload"))
+                    Decoded::View(
+                        TaView::parse_with(payload, pool.take_offsets())
+                            .expect("corrupt TA IO payload"),
+                    )
                 }
                 _ => {
-                    let dec = self.decoders.entry(key).or_insert_with(DeltaDecoder::new);
-                    Decoded::View(dec.decode(delta_kind, buf).expect("corrupt delta payload"))
+                    let dec = self.rx.entry(key).or_insert_with(DeltaDecoder::new);
+                    Decoded::View(
+                        dec.decode_pooled(delta_kind, payload, pool)
+                            .expect("corrupt delta payload"),
+                    )
                 }
             }
         };
@@ -218,8 +411,8 @@ impl Codec {
 
     /// Bytes held by delta references (Fig. 11c's memory overhead).
     pub fn reference_bytes(&self) -> u64 {
-        self.encoders.values().map(|e| e.reference_bytes()).sum::<u64>()
-            + self.decoders.values().map(|d| d.reference_bytes()).sum::<u64>()
+        self.tx.values().map(|c| c.delta.reference_bytes()).sum::<u64>()
+            + self.rx.values().map(|d| d.reference_bytes()).sum::<u64>()
     }
 }
 
@@ -327,6 +520,59 @@ mod tests {
         delta.encode((1, 0), ags.iter());
         assert_eq!(none.reference_bytes(), 0);
         assert!(delta.reference_bytes() > 0);
+    }
+
+    #[test]
+    fn rm_fast_path_wire_identical_to_iterator_path() {
+        use crate::core::resource_manager::ResourceManager;
+        for comp in [Compression::None, Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let mut ags = agents(40, 17);
+            let mut rm = ResourceManager::new(0);
+            let ids: Vec<_> = ags.iter().map(|a| rm.add(a.clone())).collect();
+            let mut by_iter = Codec::new(SerializerKind::TaIo, comp);
+            let mut by_cols = Codec::new(SerializerKind::TaIo, comp);
+            let mut wire_iter = Vec::new();
+            let mut wire_cols = Vec::new();
+            for iter in 0..6 {
+                for (a, &id) in ags.iter_mut().zip(&ids) {
+                    a.position.x += 0.25;
+                    assert!(rm.set_position(id, a.position));
+                }
+                by_iter.encode_into((1, 0), ags.iter(), &mut wire_iter);
+                by_cols.encode_rm_into((1, 0), &rm, &ids, &mut wire_cols);
+                assert_eq!(wire_iter, wire_cols, "{}: iteration {iter}", comp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_decode_round_trips_and_recycles() {
+        use crate::io::ta_io::ViewPool;
+        let mut tx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 4 });
+        let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 4 });
+        let mut ags = agents(30, 23);
+        let mut pool = ViewPool::new();
+        for iter in 0..10 {
+            for a in ags.iter_mut() {
+                a.position.y += 0.5;
+            }
+            let (wire, _) = tx.encode((1, 0), ags.iter());
+            let (decoded, _) = rx.decode_pooled((0, 0), &wire, &mut pool);
+            assert_eq!(decoded.len(), ags.len(), "iter {iter}");
+            let got = decoded.into_agents();
+            let mut want: Vec<_> = ags.iter().map(|a| (a.global_id, a.position)).collect();
+            want.sort_by_key(|(g, _)| *g);
+            let mut have: Vec<_> = got.iter().map(|a| (a.global_id, a.position)).collect();
+            have.sort_by_key(|(g, _)| *g);
+            assert_eq!(want, have, "iter {iter}");
+        }
+        // Recycle path: drain + reuse.
+        let (wire, _) = tx.encode((1, 0), ags.iter());
+        let (decoded, _) = rx.decode_pooled((0, 0), &wire, &mut pool);
+        let mut drained = Vec::new();
+        decoded.drain_agents_into(&mut drained, &mut pool);
+        assert_eq!(drained.len(), ags.len());
+        assert!(pool.approx_bytes() > 0, "view storage must return to the pool");
     }
 
     #[test]

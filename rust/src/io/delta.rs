@@ -25,11 +25,40 @@
 //!
 //! At a configurable period sender and receiver refresh the reference
 //! (a `Full` message), bounding drift after migrations/churn.
+//!
+//! # Fast path (this implementation)
+//!
+//! The production encoder/decoder keep the reference as the **raw bytes of
+//! the last `Full` message** plus a per-slot offset index, instead of
+//! re-materialized `(AgentBlock, Vec<BehaviorBlock>)` slots:
+//!
+//! * Matching is *incremental*: a persistent generation-stamped
+//!   `GlobalId → slot` table lives for the reference's lifetime and is
+//!   upserted-then-retained on refresh, and per-message slot occupancy is
+//!   a generation stamp (`slot_gen`) instead of a freshly allocated
+//!   `Vec<Option<Slot>>` — the per-message `HashMap` rebuild is gone and
+//!   the steady state allocates nothing.
+//! * The reordered message is written straight into a caller-owned
+//!   [`AlignedBuf`] through the [`RowSource`] abstraction (columns or
+//!   borrowed agents), and the diff/restore run in u64 chunks with SWAR
+//!   byte-lane arithmetic — byte-for-byte the same wire format as the
+//!   byte-at-a-time loop, eight bytes per step. Every TA IO block
+//!   boundary is 8-byte aligned, which is what makes the chunking legal.
+//! * The receiver restores and **defragments in place** (a forward
+//!   `copy_within` compaction) instead of re-serializing surviving
+//!   blocks, then parses the same buffer.
+//!
+//! The seed (PR-1-era) implementation is preserved verbatim in
+//! [`seed`] as the equivalence oracle and benchmark baseline; tests
+//! assert both produce byte-identical wire messages.
 
 use super::buffer::AlignedBuf;
-use super::ta_io::{self, AgentBlock, BehaviorBlock, TaView};
-use crate::core::agent::Agent;
-use crate::core::ids::GlobalId;
+use super::ta_io::{
+    self, write_header, AgentBlock, AgentRows, ColumnSource, RowSource, TaView, ViewPool,
+    AGENT_BLOCK_BYTES, BEHAVIOR_BLOCK_BYTES, HEADER_BYTES,
+};
+use crate::core::agent::{Agent, Behavior};
+use crate::core::ids::{GlobalId, LocalId};
 use std::collections::HashMap;
 
 /// Message kind transmitted in front of the payload.
@@ -55,117 +84,273 @@ impl DeltaKind {
     }
 }
 
-/// One agent slot in block form.
-type Slot = (AgentBlock, Vec<BehaviorBlock>);
+// ---------------------------------------------------------------------------
+// SWAR byte-lane arithmetic
+// ---------------------------------------------------------------------------
 
-/// Reference message stored by both channel ends: the agent slots in
-/// reference order plus a global-id index.
-#[derive(Clone, Debug, Default)]
-pub struct Reference {
-    slots: Vec<Slot>,
-    index: HashMap<GlobalId, usize>,
+const HI: u64 = 0x8080_8080_8080_8080;
+
+/// Lane-wise wrapping byte subtraction of eight bytes at once. Forcing
+/// the minuend's high bits set and the subtrahend's clear makes per-lane
+/// borrows impossible; the xor term restores the true high bits.
+#[inline]
+fn swar_sub64(x: u64, y: u64) -> u64 {
+    ((x | HI) - (y & !HI)) ^ ((x ^ !y) & HI)
 }
 
-impl Reference {
-    fn from_slots(slots: Vec<Slot>) -> Reference {
-        let index = slots
-            .iter()
-            .enumerate()
-            .filter(|(_, (ab, _))| !ab.is_placeholder())
-            .map(|(i, (ab, _))| (ab.global_id(), i))
-            .collect();
-        Reference { slots, index }
-    }
+/// Lane-wise wrapping byte addition (inverse of [`swar_sub64`]).
+#[inline]
+fn swar_add64(x: u64, y: u64) -> u64 {
+    ((x & !HI) + (y & !HI)) ^ ((x ^ y) & HI)
+}
 
-    pub fn len(&self) -> usize {
-        self.slots.len()
+#[inline]
+fn swar_sub(dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = swar_sub64(*d, *s);
     }
+}
 
-    pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+#[inline]
+fn swar_add(dst: &mut [u64], src: &[u64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = swar_add64(*d, *s);
+    }
+}
+
+#[inline]
+fn read_u32_le(bytes: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// Reference message (shared shape between encoder and decoder)
+// ---------------------------------------------------------------------------
+
+/// Match-table entry: the agent's slot in the reference, stamped with the
+/// refresh generation that last saw it (stale entries are retained away).
+#[derive(Clone, Copy, Debug)]
+struct MatchEntry {
+    slot: u32,
+    stamp: u64,
+}
+
+/// One channel end's reference: the raw bytes of the last `Full` message
+/// plus a per-slot offset/behavior-count index, and (sender only) the
+/// persistent id→slot match table.
+#[derive(Debug, Default)]
+struct RefMessage {
+    bytes: AlignedBuf,
+    /// Agent-block byte offset per slot.
+    offsets: Vec<u32>,
+    /// Behavior count per slot.
+    nbeh: Vec<u32>,
+    /// Sender-side incremental match table (empty on the decoder).
+    index: HashMap<GlobalId, MatchEntry>,
+}
+
+impl RefMessage {
+    fn len(&self) -> usize {
+        self.offsets.len()
     }
 
     /// Approximate bytes held (the memory cost Fig. 11c reports).
-    pub fn approx_bytes(&self) -> u64 {
-        let blocks: usize = self
-            .slots
-            .iter()
-            .map(|(_, b)| ta_io::AGENT_BLOCK_BYTES + b.capacity() * ta_io::BEHAVIOR_BLOCK_BYTES)
-            .sum();
-        (blocks + self.index.len() * 24) as u64
+    fn approx_bytes(&self) -> u64 {
+        (self.bytes.capacity()
+            + self.offsets.capacity() * 4
+            + self.nbeh.capacity() * 4
+            + self.index.len() * (std::mem::size_of::<GlobalId>() + 16)) as u64
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sender
+// ---------------------------------------------------------------------------
 
 /// Sender-side channel state.
 #[derive(Debug, Default)]
 pub struct DeltaEncoder {
-    reference: Option<Reference>,
+    reference: Option<RefMessage>,
     /// Messages since the last reference refresh.
     since_refresh: u32,
     /// Refresh period (a `Full` message every `period` sends; 0 = always
     /// full, i.e. delta disabled).
     pub period: u32,
+    /// Per-message generation for slot occupancy (replaces the seed's
+    /// fresh `Vec<Option<Slot>>` per message).
+    msg_gen: u64,
+    /// Per-refresh generation for match-table retention.
+    refresh_gen: u64,
+    /// Scratch: matched agent index per reference slot (valid iff
+    /// `slot_gen[s] == msg_gen`).
+    slot_agent: Vec<u32>,
+    slot_gen: Vec<u64>,
+    /// Scratch: message indices of agents absent from the reference.
+    appended: Vec<u32>,
 }
 
 impl DeltaEncoder {
     pub fn new(period: u32) -> Self {
-        DeltaEncoder { reference: None, since_refresh: 0, period }
+        DeltaEncoder { period, ..Default::default() }
     }
 
-    /// Encode agents for this channel. Returns the kind tag and payload.
+    /// Encode agents for this channel (compatibility entry point; the
+    /// migration path and tests use it). Allocates the returned buffer;
+    /// the engine's aura hot path uses [`DeltaEncoder::encode_rows`] with
+    /// a reused buffer instead.
     pub fn encode<'a>(
         &mut self,
         agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
     ) -> (DeltaKind, AlignedBuf) {
-        let need_full = self.period == 0
-            || self.reference.is_none()
-            || self.since_refresh >= self.period;
+        let list: Vec<&Agent> = agents.collect();
+        let mut out = AlignedBuf::new();
+        let kind = self.encode_rows(&AgentRows(&list), &mut out);
+        (kind, out)
+    }
+
+    /// Columnar fast path: encode the agents selected by `ids` straight
+    /// out of the SoA columns into `out` (capacity reused across
+    /// iterations).
+    pub fn encode_cols_into<'a, F: Fn(u32) -> &'a [Behavior]>(
+        &mut self,
+        cols: &ColumnSource<'a>,
+        ids: &'a [LocalId],
+        behaviors: F,
+        out: &mut AlignedBuf,
+    ) -> DeltaKind {
+        self.encode_rows(&ta_io::ColumnRows { cols: *cols, ids, behaviors }, out)
+    }
+
+    /// Core: encode `rows` into `out`, returning the message kind. Wire
+    /// output is byte-identical to the seed pipeline (reorder →
+    /// serialize → subtract).
+    pub fn encode_rows<R: RowSource>(&mut self, rows: &R, out: &mut AlignedBuf) -> DeltaKind {
+        let need_full =
+            self.period == 0 || self.reference.is_none() || self.since_refresh >= self.period;
         if need_full {
-            let buf = ta_io::serialize(agents.clone());
-            // Store the new reference (parse our own message — cheap, it
-            // is just the block index pass).
-            let view = TaView::parse(buf.clone()).expect("self-produced message must parse");
-            let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
-            self.reference = Some(Reference::from_slots(slots));
+            ta_io::serialize_rows_into(rows, out);
+            self.refresh_reference(rows, out);
             self.since_refresh = 1;
-            return (DeltaKind::Full, buf);
+            return DeltaKind::Full;
         }
-        let reference = self.reference.as_ref().unwrap();
-        // (B) match & reorder to reference order.
-        let mut slots: Vec<Option<Slot>> = vec![None; reference.len()];
-        let mut appended: Vec<Slot> = Vec::new();
-        for a in agents {
-            let ab = AgentBlock::from_agent(a);
-            let bbs: Vec<BehaviorBlock> =
-                a.behaviors.iter().map(BehaviorBlock::from_behavior).collect();
-            match reference.index.get(&ab.global_id()) {
-                Some(&i) if slots[i].is_none() => slots[i] = Some((ab, bbs)),
-                _ => appended.push((ab, bbs)),
+
+        // (B) match against the persistent table, generation-stamped.
+        let DeltaEncoder { reference, msg_gen, slot_agent, slot_gen, appended, .. } = self;
+        let rf = reference.as_ref().unwrap();
+        *msg_gen += 1;
+        let stamp = *msg_gen;
+        slot_agent.resize(rf.len(), 0);
+        slot_gen.resize(rf.len(), 0);
+        appended.clear();
+        for i in 0..rows.len() {
+            match rf.index.get(&rows.gid(i)) {
+                Some(e) if slot_gen[e.slot as usize] != stamp => {
+                    slot_gen[e.slot as usize] = stamp;
+                    slot_agent[e.slot as usize] = i as u32;
+                }
+                _ => appended.push(i as u32),
             }
         }
-        // Placeholders for reference agents missing from the message.
-        let ordered: Vec<Slot> = slots
-            .into_iter()
-            .map(|s| s.unwrap_or((AgentBlock::PLACEHOLDER, Vec::new())))
-            .chain(appended)
-            .collect();
-        // (C) serialize the reordered message, then subtract the reference
-        // bytes slot-by-slot.
-        let mut buf = ta_io::serialize_blocks(&ordered);
-        subtract_reference(&mut buf, reference);
+
+        // Exact-size pass over the reordered layout.
+        let mut total = HEADER_BYTES;
+        let mut blocks = 0u32;
+        for s in 0..rf.len() {
+            if slot_gen[s] == stamp {
+                let i = slot_agent[s] as usize;
+                total += rows.row_bytes(i);
+                blocks += rows.row_blocks(i);
+            } else {
+                total += AGENT_BLOCK_BYTES; // placeholder
+                blocks += 1;
+            }
+        }
+        for &i in appended.iter() {
+            total += rows.row_bytes(i as usize);
+            blocks += rows.row_blocks(i as usize);
+        }
+        out.resize_for_overwrite(total);
+
+        // (C) write each slot and immediately subtract the reference bytes
+        // over the shared prefix (agent block + min(behavior counts)), in
+        // u64 chunks.
+        let mut off = HEADER_BYTES;
+        for s in 0..rf.len() {
+            let ref_off = rf.offsets[s] as usize;
+            if slot_gen[s] == stamp {
+                let i = slot_agent[s] as usize;
+                unsafe { rows.write_row(i, out.as_mut_ptr().add(off)) };
+                let shared = AGENT_BLOCK_BYTES
+                    + rows.n_behaviors(i).min(rf.nbeh[s]) as usize * BEHAVIOR_BLOCK_BYTES;
+                swar_sub(out.words_mut(off, shared), rf.bytes.words(ref_off, shared));
+                off += rows.row_bytes(i);
+            } else {
+                let pb = AgentBlock::PLACEHOLDER;
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        &pb as *const AgentBlock as *const u8,
+                        out.as_mut_ptr().add(off),
+                        AGENT_BLOCK_BYTES,
+                    );
+                }
+                swar_sub(
+                    out.words_mut(off, AGENT_BLOCK_BYTES),
+                    rf.bytes.words(ref_off, AGENT_BLOCK_BYTES),
+                );
+                off += AGENT_BLOCK_BYTES;
+            }
+        }
+        // Appended agents stay raw (no reference slot to diff against).
+        for &i in appended.iter() {
+            unsafe { rows.write_row(i as usize, out.as_mut_ptr().add(off)) };
+            off += rows.row_bytes(i as usize);
+        }
+        debug_assert_eq!(off, total);
+        write_header(out, (rf.len() + appended.len()) as u32, blocks, 0);
         self.since_refresh += 1;
-        (DeltaKind::Delta, buf)
+        DeltaKind::Delta
+    }
+
+    /// Store `msg` (a freshly serialized Full message over `rows`) as the
+    /// new reference, updating the match table incrementally: upsert the
+    /// present ids with the new refresh stamp, then retain away the rest.
+    fn refresh_reference<R: RowSource>(&mut self, rows: &R, msg: &AlignedBuf) {
+        self.refresh_gen += 1;
+        let stamp = self.refresh_gen;
+        let rf = self.reference.get_or_insert_with(RefMessage::default);
+        rf.bytes.set_from_slice(msg.as_slice());
+        rf.offsets.clear();
+        rf.nbeh.clear();
+        let mut off = HEADER_BYTES;
+        for i in 0..rows.len() {
+            rf.offsets.push(off as u32);
+            rf.nbeh.push(rows.n_behaviors(i));
+            // Duplicate global ids keep the last occurrence, like the
+            // seed's HashMap collect.
+            rf.index.insert(rows.gid(i), MatchEntry { slot: i as u32, stamp });
+            off += rows.row_bytes(i);
+        }
+        rf.index.retain(|_, e| e.stamp == stamp);
     }
 
     pub fn reference_bytes(&self) -> u64 {
         self.reference.as_ref().map(|r| r.approx_bytes()).unwrap_or(0)
+            + (self.slot_agent.capacity() * 4
+                + self.slot_gen.capacity() * 8
+                + self.appended.capacity() * 4) as u64
     }
 }
+
+// ---------------------------------------------------------------------------
+// Receiver
+// ---------------------------------------------------------------------------
 
 /// Receiver-side channel state.
 #[derive(Debug, Default)]
 pub struct DeltaDecoder {
-    reference: Option<Reference>,
+    reference: Option<RefMessage>,
 }
 
 impl DeltaDecoder {
@@ -176,27 +361,69 @@ impl DeltaDecoder {
     /// Decode a payload received with `kind`. Returns a plain TA IO view
     /// (defragmented: placeholder slots removed).
     pub fn decode(&mut self, kind: DeltaKind, buf: AlignedBuf) -> Result<TaView, ta_io::TaError> {
+        let mut pool = ViewPool::new();
+        self.decode_pooled(kind, buf, &mut pool)
+    }
+
+    /// [`DeltaDecoder::decode`] drawing the view's offset index from a
+    /// pool — combined with recycled buffers this makes the receive path
+    /// allocation-free after warm-up. Restore and defragmentation both
+    /// happen **in place** in `buf`: the decoded agents live in the very
+    /// bytes that came off the wire.
+    pub fn decode_pooled(
+        &mut self,
+        kind: DeltaKind,
+        buf: AlignedBuf,
+        pool: &mut ViewPool,
+    ) -> Result<TaView, ta_io::TaError> {
         match kind {
             DeltaKind::Full => {
-                let view = TaView::parse(buf)?;
-                let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
-                self.reference = Some(Reference::from_slots(slots));
+                let view = TaView::parse_with(buf, pool.take_offsets())?;
+                let rf = self.reference.get_or_insert_with(RefMessage::default);
+                rf.bytes.set_from_slice(view.raw());
+                rf.offsets.clear();
+                rf.offsets.extend_from_slice(view.offsets());
+                rf.nbeh.clear();
+                rf.nbeh.extend((0..view.len()).map(|i| view.agent(i).n_behaviors));
+                rf.index.clear();
                 Ok(view)
             }
             DeltaKind::Delta => {
-                let reference = self
+                let rf = self
                     .reference
                     .as_ref()
                     .expect("delta message received before any reference");
                 let mut buf = buf;
-                add_reference(&mut buf, reference);
-                let view = TaView::parse(buf)?;
-                // (D) defragment: drop placeholders.
-                let kept: Vec<Slot> = (0..view.len())
-                    .map(|i| view.blocks(i))
-                    .filter(|(ab, _)| !ab.is_placeholder())
-                    .collect();
-                TaView::parse(ta_io::serialize_blocks(&kept))
+                // Restore: add the reference back over the shared prefix
+                // of each slot, in u64 chunks. The message's true behavior
+                // count is readable after the agent block is restored.
+                let total = buf.len();
+                let mut off = HEADER_BYTES;
+                for s in 0..rf.len() {
+                    if off + AGENT_BLOCK_BYTES > total {
+                        break;
+                    }
+                    let ref_off = rf.offsets[s] as usize;
+                    swar_add(
+                        buf.words_mut(off, AGENT_BLOCK_BYTES),
+                        rf.bytes.words(ref_off, AGENT_BLOCK_BYTES),
+                    );
+                    let msg_nbeh = read_u32_le(buf.as_slice(), off + 4) as usize;
+                    let shared = msg_nbeh.min(rf.nbeh[s] as usize) * BEHAVIOR_BLOCK_BYTES;
+                    if off + AGENT_BLOCK_BYTES + shared <= total {
+                        swar_add(
+                            buf.words_mut(off + AGENT_BLOCK_BYTES, shared),
+                            rf.bytes.words(ref_off + AGENT_BLOCK_BYTES, shared),
+                        );
+                    }
+                    off += AGENT_BLOCK_BYTES + msg_nbeh * BEHAVIOR_BLOCK_BYTES;
+                    if off > total {
+                        break;
+                    }
+                }
+                // (D) defragment in place, then hand out a normal view.
+                defragment(&mut buf)?;
+                TaView::parse_with(buf, pool.take_offsets())
             }
         }
     }
@@ -206,73 +433,38 @@ impl DeltaDecoder {
     }
 }
 
-/// Byte-wise `message -= reference` over matched slots. Slots beyond the
-/// reference (appended agents) and the header are left raw.
-fn subtract_reference(buf: &mut AlignedBuf, reference: &Reference) {
-    apply_reference(buf, reference, true);
-}
-
-/// Byte-wise `message += reference` (inverse of [`subtract_reference`]).
-fn add_reference(buf: &mut AlignedBuf, reference: &Reference) {
-    apply_reference(buf, reference, false);
-}
-
-fn apply_reference(buf: &mut AlignedBuf, reference: &Reference, encode: bool) {
-    let op: fn(u8, u8) -> u8 = if encode { u8::wrapping_sub } else { u8::wrapping_add };
-    // Walk the message's slots in tandem with the reference. The message
-    // was serialized in reference order, so slot i aligns with reference
-    // slot i for i < reference.len().
-    //
-    // Placeholders and class changes make the *behavior count* of a
-    // message slot differ from the reference slot; the diff is applied to
-    // the agent block always, and to behavior bytes only up to the shared
-    // prefix, keeping encode/decode exactly inverse. The message's true
-    // behavior count is readable from the raw (un-diffed) field: before
-    // the op when encoding, after the op when decoding.
-    let mut off = ta_io::HEADER_BYTES;
+/// Compact away placeholder slots with a forward `copy_within` sweep and
+/// rewrite the header counts. Errors if the block walk does not land
+/// exactly on the buffer end (truncated/corrupt message).
+fn defragment(buf: &mut AlignedBuf) -> Result<(), ta_io::TaError> {
     let total = buf.len();
-    let base = buf.as_mut_slice();
-    for (ref_ab, ref_bbs) in &reference.slots {
-        if off + ta_io::AGENT_BLOCK_BYTES > total {
-            break;
+    let mut read = HEADER_BYTES;
+    let mut write = HEADER_BYTES;
+    let mut agents = 0u32;
+    let mut blocks = 0u32;
+    while read + AGENT_BLOCK_BYTES <= total {
+        let class_id = u16::from_le_bytes(buf.as_slice()[read..read + 2].try_into().unwrap());
+        let nbeh = read_u32_le(buf.as_slice(), read + 4) as usize;
+        let len = AGENT_BLOCK_BYTES + nbeh * BEHAVIOR_BLOCK_BYTES;
+        if read + len > total {
+            return Err(ta_io::TaError::Truncated);
         }
-        let count_field_off = off + 4; // n_behaviors field offset in AgentBlock
-        let read_count = |b: &[u8]| {
-            u32::from_le_bytes(b[count_field_off..count_field_off + 4].try_into().unwrap())
-        };
-        let count_before = read_count(base);
-        // Diff the agent block against the reference block bytes.
-        let ref_bytes = unsafe {
-            std::slice::from_raw_parts(
-                ref_ab as *const AgentBlock as *const u8,
-                ta_io::AGENT_BLOCK_BYTES,
-            )
-        };
-        for k in 0..ta_io::AGENT_BLOCK_BYTES {
-            base[off + k] = op(base[off + k], ref_bytes[k]);
-        }
-        let msg_count = if encode { count_before } else { read_count(base) };
-        off += ta_io::AGENT_BLOCK_BYTES;
-        // Diff behavior blocks over the shared prefix.
-        let shared = (msg_count as usize).min(ref_bbs.len());
-        for bb in ref_bbs.iter().take(shared) {
-            let bb_bytes = unsafe {
-                std::slice::from_raw_parts(
-                    bb as *const BehaviorBlock as *const u8,
-                    ta_io::BEHAVIOR_BLOCK_BYTES,
-                )
-            };
-            for k in 0..ta_io::BEHAVIOR_BLOCK_BYTES {
-                base[off + k] = op(base[off + k], bb_bytes[k]);
+        if class_id != 0 {
+            if write != read {
+                buf.as_mut_slice().copy_within(read..read + len, write);
             }
-            off += ta_io::BEHAVIOR_BLOCK_BYTES;
+            write += len;
+            agents += 1;
+            blocks += 1 + (nbeh > 0) as u32;
         }
-        // Message-only behaviors stay raw.
-        off += (msg_count as usize - shared) * ta_io::BEHAVIOR_BLOCK_BYTES;
-        if off > total {
-            break;
-        }
+        read += len;
     }
+    if read != total {
+        return Err(ta_io::TaError::Truncated);
+    }
+    buf.truncate(write);
+    write_header(buf, agents, blocks, 0);
+    Ok(())
 }
 
 /// Count the zero bytes of a buffer — the compressibility signal delta
@@ -282,6 +474,202 @@ pub fn zero_fraction(buf: &[u8]) -> f64 {
         return 0.0;
     }
     buf.iter().filter(|&&b| b == 0).count() as f64 / buf.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Seed implementation (preserved)
+// ---------------------------------------------------------------------------
+
+/// The seed (pre-fast-path) delta pipeline, preserved verbatim as the
+/// equivalence oracle and the `benches/exchange_micro.rs` baseline: it
+/// rebuilds a `HashMap`-indexed slot reference per refresh, reorders into
+/// freshly allocated `(AgentBlock, Vec<BehaviorBlock>)` slots per message
+/// and diffs byte-at-a-time.
+pub mod seed {
+    use super::super::buffer::AlignedBuf;
+    use super::super::ta_io::{self, AgentBlock, BehaviorBlock, TaView};
+    use super::DeltaKind;
+    use crate::core::agent::Agent;
+    use crate::core::ids::GlobalId;
+    use std::collections::HashMap;
+
+    /// One agent slot in block form.
+    type Slot = (AgentBlock, Vec<BehaviorBlock>);
+
+    /// Reference message stored by both channel ends: the agent slots in
+    /// reference order plus a global-id index.
+    #[derive(Clone, Debug, Default)]
+    pub struct Reference {
+        slots: Vec<Slot>,
+        index: HashMap<GlobalId, usize>,
+    }
+
+    impl Reference {
+        fn from_slots(slots: Vec<Slot>) -> Reference {
+            let index = slots
+                .iter()
+                .enumerate()
+                .filter(|(_, (ab, _))| !ab.is_placeholder())
+                .map(|(i, (ab, _))| (ab.global_id(), i))
+                .collect();
+            Reference { slots, index }
+        }
+
+        pub fn len(&self) -> usize {
+            self.slots.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.slots.is_empty()
+        }
+    }
+
+    /// Seed sender-side channel state.
+    #[derive(Debug, Default)]
+    pub struct SeedDeltaEncoder {
+        reference: Option<Reference>,
+        since_refresh: u32,
+        pub period: u32,
+    }
+
+    impl SeedDeltaEncoder {
+        pub fn new(period: u32) -> Self {
+            SeedDeltaEncoder { reference: None, since_refresh: 0, period }
+        }
+
+        /// Encode agents for this channel. Returns the kind tag and payload.
+        pub fn encode<'a>(
+            &mut self,
+            agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+        ) -> (DeltaKind, AlignedBuf) {
+            let need_full = self.period == 0
+                || self.reference.is_none()
+                || self.since_refresh >= self.period;
+            if need_full {
+                let buf = ta_io::serialize(agents.clone());
+                let view = TaView::parse(buf.clone()).expect("self-produced message must parse");
+                let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
+                self.reference = Some(Reference::from_slots(slots));
+                self.since_refresh = 1;
+                return (DeltaKind::Full, buf);
+            }
+            let reference = self.reference.as_ref().unwrap();
+            // (B) match & reorder to reference order.
+            let mut slots: Vec<Option<Slot>> = vec![None; reference.len()];
+            let mut appended: Vec<Slot> = Vec::new();
+            for a in agents {
+                let ab = AgentBlock::from_agent(a);
+                let bbs: Vec<BehaviorBlock> =
+                    a.behaviors.iter().map(BehaviorBlock::from_behavior).collect();
+                match reference.index.get(&ab.global_id()) {
+                    Some(&i) if slots[i].is_none() => slots[i] = Some((ab, bbs)),
+                    _ => appended.push((ab, bbs)),
+                }
+            }
+            // Placeholders for reference agents missing from the message.
+            let ordered: Vec<Slot> = slots
+                .into_iter()
+                .map(|s| s.unwrap_or((AgentBlock::PLACEHOLDER, Vec::new())))
+                .chain(appended)
+                .collect();
+            // (C) serialize the reordered message, then subtract the
+            // reference bytes slot-by-slot.
+            let mut buf = ta_io::serialize_blocks(&ordered);
+            apply_reference(&mut buf, reference, true);
+            self.since_refresh += 1;
+            (DeltaKind::Delta, buf)
+        }
+    }
+
+    /// Seed receiver-side channel state.
+    #[derive(Debug, Default)]
+    pub struct SeedDeltaDecoder {
+        reference: Option<Reference>,
+    }
+
+    impl SeedDeltaDecoder {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        /// Decode a payload received with `kind`.
+        pub fn decode(
+            &mut self,
+            kind: DeltaKind,
+            buf: AlignedBuf,
+        ) -> Result<TaView, ta_io::TaError> {
+            match kind {
+                DeltaKind::Full => {
+                    let view = TaView::parse(buf)?;
+                    let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
+                    self.reference = Some(Reference::from_slots(slots));
+                    Ok(view)
+                }
+                DeltaKind::Delta => {
+                    let reference = self
+                        .reference
+                        .as_ref()
+                        .expect("delta message received before any reference");
+                    let mut buf = buf;
+                    apply_reference(&mut buf, reference, false);
+                    let view = TaView::parse(buf)?;
+                    // (D) defragment: drop placeholders.
+                    let kept: Vec<Slot> = (0..view.len())
+                        .map(|i| view.blocks(i))
+                        .filter(|(ab, _)| !ab.is_placeholder())
+                        .collect();
+                    TaView::parse(ta_io::serialize_blocks(&kept))
+                }
+            }
+        }
+    }
+
+    /// Byte-wise `message ∓= reference` over matched slots. Slots beyond
+    /// the reference (appended agents) and the header are left raw.
+    fn apply_reference(buf: &mut AlignedBuf, reference: &Reference, encode: bool) {
+        let op: fn(u8, u8) -> u8 = if encode { u8::wrapping_sub } else { u8::wrapping_add };
+        let mut off = ta_io::HEADER_BYTES;
+        let total = buf.len();
+        let base = buf.as_mut_slice();
+        for (ref_ab, ref_bbs) in &reference.slots {
+            if off + ta_io::AGENT_BLOCK_BYTES > total {
+                break;
+            }
+            let count_field_off = off + 4; // n_behaviors field offset
+            let read_count = |b: &[u8]| {
+                u32::from_le_bytes(b[count_field_off..count_field_off + 4].try_into().unwrap())
+            };
+            let count_before = read_count(base);
+            let ref_bytes = unsafe {
+                std::slice::from_raw_parts(
+                    ref_ab as *const AgentBlock as *const u8,
+                    ta_io::AGENT_BLOCK_BYTES,
+                )
+            };
+            for k in 0..ta_io::AGENT_BLOCK_BYTES {
+                base[off + k] = op(base[off + k], ref_bytes[k]);
+            }
+            let msg_count = if encode { count_before } else { read_count(base) };
+            off += ta_io::AGENT_BLOCK_BYTES;
+            let shared = (msg_count as usize).min(ref_bbs.len());
+            for bb in ref_bbs.iter().take(shared) {
+                let bb_bytes = unsafe {
+                    std::slice::from_raw_parts(
+                        bb as *const BehaviorBlock as *const u8,
+                        ta_io::BEHAVIOR_BLOCK_BYTES,
+                    )
+                };
+                for k in 0..ta_io::BEHAVIOR_BLOCK_BYTES {
+                    base[off + k] = op(base[off + k], bb_bytes[k]);
+                }
+                off += ta_io::BEHAVIOR_BLOCK_BYTES;
+            }
+            off += (msg_count as usize - shared) * ta_io::BEHAVIOR_BLOCK_BYTES;
+            if off > total {
+                break;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +709,26 @@ mod tests {
             view.materialize_all().iter().map(|a| a.global_id).collect();
         v.sort();
         v
+    }
+
+    #[test]
+    fn swar_ops_match_bytewise() {
+        let mut rng = Rng::new(77);
+        for _ in 0..1000 {
+            let x = rng.next_u64();
+            let y = rng.next_u64();
+            let xb = x.to_le_bytes();
+            let yb = y.to_le_bytes();
+            let mut sub = [0u8; 8];
+            let mut add = [0u8; 8];
+            for k in 0..8 {
+                sub[k] = xb[k].wrapping_sub(yb[k]);
+                add[k] = xb[k].wrapping_add(yb[k]);
+            }
+            assert_eq!(swar_sub64(x, y), u64::from_le_bytes(sub));
+            assert_eq!(swar_add64(x, y), u64::from_le_bytes(add));
+            assert_eq!(swar_add64(swar_sub64(x, y), y), x, "sub/add must be inverse");
+        }
     }
 
     #[test]
@@ -503,6 +911,98 @@ mod tests {
                 let orig = agents.iter().find(|a| a.global_id == r.global_id).unwrap();
                 assert_eq!(orig.position, r.position, "iteration {iter}");
             }
+        }
+    }
+
+    #[test]
+    fn fast_encoder_wire_identical_to_seed() {
+        // The fast path must be indistinguishable on the wire from the
+        // seed pipeline across a churning multi-iteration stream.
+        let mut agents = make_agents(40, 21);
+        let mut fast = DeltaEncoder::new(4);
+        let mut slow = seed::SeedDeltaEncoder::new(4);
+        let mut rng = Rng::new(22);
+        let mut next_gid = 5000u64;
+        for iter in 0..16 {
+            drift(&mut agents, &mut rng, 0.4);
+            if iter % 3 == 0 && agents.len() > 5 {
+                agents.remove(rng.index(agents.len()));
+            }
+            if iter % 5 == 1 {
+                let mut a = Agent::cell(Vec3::new(2.0, 2.0, 0.0), 10.0, CellType::B);
+                a.global_id = GlobalId::new(1, next_gid);
+                next_gid += 1;
+                agents.push(a);
+            }
+            if iter % 4 == 3 {
+                rng.shuffle(&mut agents);
+            }
+            let (kf, bf) = fast.encode(agents.iter());
+            let (ks, bs) = slow.encode(agents.iter());
+            assert_eq!(kf, ks, "iteration {iter}: kind diverged");
+            assert_eq!(bf.as_slice(), bs.as_slice(), "iteration {iter}: wire bytes diverged");
+        }
+    }
+
+    #[test]
+    fn fast_decoder_accepts_seed_stream_and_vice_versa() {
+        let mut agents = make_agents(25, 31);
+        let mut enc_fast = DeltaEncoder::new(6);
+        let mut enc_seed = seed::SeedDeltaEncoder::new(6);
+        let mut dec_fast = DeltaDecoder::new();
+        let mut dec_seed = seed::SeedDeltaDecoder::new();
+        let mut rng = Rng::new(32);
+        for iter in 0..12 {
+            drift(&mut agents, &mut rng, 0.2);
+            if iter == 5 {
+                agents.remove(0);
+            }
+            // Seed-encoded stream into the fast decoder.
+            let (k, b) = enc_seed.encode(agents.iter());
+            let fast_view = dec_fast.decode(k, b).unwrap();
+            // Fast-encoded stream into the seed decoder.
+            let (k2, b2) = enc_fast.encode(agents.iter());
+            let seed_view = dec_seed.decode(k2, b2).unwrap();
+            assert_eq!(ids(&fast_view), ids(&seed_view), "iteration {iter}");
+            assert_eq!(
+                fast_view.raw(),
+                seed_view.raw(),
+                "iteration {iter}: decoded buffers diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_match_table_survives_refresh_churn() {
+        // Heavy churn across multiple refresh cycles: the retained match
+        // table must never match a departed agent or miss a present one.
+        let mut agents = make_agents(30, 41);
+        let mut enc = DeltaEncoder::new(3);
+        let mut dec = DeltaDecoder::new();
+        let mut rng = Rng::new(42);
+        let mut next_gid = 9000u64;
+        for iter in 0..30 {
+            // Replace ~20% of the population every iteration.
+            for _ in 0..(agents.len() / 5).max(1) {
+                if agents.len() > 3 {
+                    agents.remove(rng.index(agents.len()));
+                }
+                let mut a = Agent::cell(
+                    Vec3::new(rng.uniform_range(0.0, 50.0), 0.0, 0.0),
+                    10.0,
+                    CellType::A,
+                );
+                a.global_id = GlobalId::new(2, next_gid);
+                next_gid += 1;
+                agents.push(a);
+            }
+            drift(&mut agents, &mut rng, 0.5);
+            let (k, b) = enc.encode(agents.iter());
+            let view = dec.decode(k, b).unwrap();
+            let got = ids(&view);
+            let mut want: Vec<GlobalId> = agents.iter().map(|a| a.global_id).collect();
+            want.sort();
+            assert_eq!(got, want, "iteration {iter}");
         }
     }
 

@@ -59,22 +59,49 @@ fn read_u32(buf: &[u8], i: usize) -> u32 {
     u32::from_le_bytes([buf[i], buf[i + 1], buf[i + 2], buf[i + 3]])
 }
 
+/// Reusable compressor state: the match hash table, retained across
+/// messages so the per-channel steady state allocates nothing.
+#[derive(Debug, Default)]
+pub struct Lz4Scratch {
+    table: Vec<u32>,
+}
+
+impl Lz4Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cleared table of `1 << hash_log` entries (capacity reused).
+    fn table(&mut self, hash_log: u32) -> &mut [u32] {
+        self.table.clear();
+        self.table.resize(1 << hash_log, 0);
+        &mut self.table
+    }
+}
+
 /// Compress `input` into LZ4 block format.
 pub fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 32);
+    compress_into(input, &mut out, &mut Lz4Scratch::new());
+    out
+}
+
+/// [`compress`] appending to a caller-owned output vector with a reused
+/// match table — the allocation-free per-channel encode path.
+pub fn compress_into(input: &[u8], out: &mut Vec<u8>, scratch: &mut Lz4Scratch) {
     let n = input.len();
-    let mut out = Vec::with_capacity(n / 2 + 32);
     if n == 0 {
         // A single empty-literals token terminates the block.
         out.push(0);
-        return out;
+        return;
     }
     if n < MF_LIMIT + 1 {
-        emit_final_literals(&mut out, input);
-        return out;
+        emit_final_literals(out, input);
+        return;
     }
 
     let hash_log = hash_log_for(n);
-    let mut table = vec![0u32; 1 << hash_log]; // position + 1; 0 = empty
+    let table = scratch.table(hash_log); // position + 1; 0 = empty
     let mut anchor = 0usize; // start of pending literals
     let mut i = 0usize;
     let match_limit = n - MF_LIMIT; // last position where a match may start
@@ -93,7 +120,7 @@ pub fn compress(input: &[u8]) -> Vec<u8> {
                 while len < max_len && input[cand + len] == input[i + len] {
                     len += 1;
                 }
-                emit_sequence(&mut out, &input[anchor..i], (i - cand) as u16, len);
+                emit_sequence(out, &input[anchor..i], (i - cand) as u16, len);
                 i += len;
                 anchor = i;
                 continue;
@@ -101,8 +128,7 @@ pub fn compress(input: &[u8]) -> Vec<u8> {
         }
         i += 1;
     }
-    emit_final_literals(&mut out, &input[anchor..]);
-    out
+    emit_final_literals(out, &input[anchor..]);
 }
 
 /// Emit one sequence: literals + match.
@@ -141,6 +167,71 @@ fn emit_len(out: &mut Vec<u8>, mut rest: usize) {
         rest -= 255;
     }
     out.push(rest as u8);
+}
+
+/// Decompress an LZ4 block straight into an aligned buffer sized exactly
+/// `raw_len` (the wire envelope transmits the raw size, so the output
+/// size is known up front). The buffer's capacity is reused across
+/// messages and the result is 8-byte aligned — the TA IO view can
+/// reinterpret it in place without a second copy.
+pub fn decompress_into(
+    input: &[u8],
+    raw_len: usize,
+    out: &mut super::buffer::AlignedBuf,
+) -> Result<(), Lz4Error> {
+    out.resize_for_overwrite(raw_len);
+    let dst = out.as_mut_slice();
+    let n = input.len();
+    let mut i = 0usize;
+    let mut o = 0usize;
+    loop {
+        if i >= n {
+            return Err(Lz4Error::Truncated);
+        }
+        let token = input[i];
+        i += 1;
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len += read_len(input, &mut i)?;
+        }
+        if i + lit_len > n {
+            return Err(Lz4Error::Truncated);
+        }
+        if o + lit_len > raw_len {
+            return Err(Lz4Error::OutputOverflow);
+        }
+        dst[o..o + lit_len].copy_from_slice(&input[i..i + lit_len]);
+        o += lit_len;
+        i += lit_len;
+        if i == n {
+            // Terminal literals-only sequence: the declared size must be
+            // produced exactly.
+            return if o == raw_len { Ok(()) } else { Err(Lz4Error::Truncated) };
+        }
+        if i + 2 > n {
+            return Err(Lz4Error::Truncated);
+        }
+        let offset = u16::from_le_bytes([input[i], input[i + 1]]) as usize;
+        i += 2;
+        if offset == 0 || offset > o {
+            return Err(Lz4Error::BadOffset);
+        }
+        let mut match_len = (token & 0x0F) as usize;
+        if match_len == 15 {
+            match_len += read_len(input, &mut i)?;
+        }
+        match_len += MIN_MATCH;
+        if o + match_len > raw_len {
+            return Err(Lz4Error::OutputOverflow);
+        }
+        // Overlapping copy: forward byte order is part of the format
+        // (offset 1 replicates the previous byte).
+        let start = o - offset;
+        for k in 0..match_len {
+            dst[o + k] = dst[start + k];
+        }
+        o += match_len;
+    }
 }
 
 /// Decompress an LZ4 block. `max_out` bounds the output size (the caller
@@ -359,5 +450,35 @@ mod tests {
     fn ratio_helper() {
         assert_eq!(ratio(100, 50), 2.0);
         assert_eq!(ratio(100, 0), 0.0);
+    }
+
+    #[test]
+    fn compress_into_matches_compress_and_reuses_scratch() {
+        let mut scratch = Lz4Scratch::new();
+        let mut out = Vec::new();
+        let mut rng = crate::util::Rng::new(9);
+        for len in [0usize, 5, 100, 5000, 20_000] {
+            let data: Vec<u8> = (0..len).map(|k| (rng.next_u64() as u8) & 0x0F | (k % 7) as u8).collect();
+            out.clear();
+            compress_into(&data, &mut out, &mut scratch);
+            assert_eq!(out, compress(&data), "len {len}");
+        }
+    }
+
+    #[test]
+    fn decompress_into_round_trips_aligned() {
+        use crate::io::buffer::AlignedBuf;
+        let mut rng = crate::util::Rng::new(10);
+        let mut out = AlignedBuf::new();
+        for len in [0usize, 3, 17, 1000, 9000] {
+            let data: Vec<u8> = (0..len).map(|_| (rng.next_u64() as u8) % 5).collect();
+            let c = compress(&data);
+            decompress_into(&c, data.len(), &mut out).unwrap();
+            assert_eq!(out.as_slice(), &data[..], "len {len}");
+        }
+        // Declared-size mismatch is rejected.
+        let c = compress(&[1u8; 100]);
+        assert!(decompress_into(&c, 99, &mut out).is_err());
+        assert!(decompress_into(&c, 101, &mut out).is_err());
     }
 }

@@ -2,15 +2,33 @@
 //!
 //! * [`ta_io`] — **TeraAgent IO**: layout-stable block serialization with
 //!   zero-copy, mutable-in-place deserialization and delete-interception
-//!   accounting.
+//!   accounting. Two encoders share one wire format: the seed per-agent
+//!   walker ([`ta_io::serialize`]) and the **SoA-direct columnar writer**
+//!   ([`ta_io::serialize_columns_into`]), which streams the
+//!   `ResourceManager`'s `pos`/`diam`/`kind`/`gid`/`ref` columns for a
+//!   per-destination id list into a reused [`AlignedBuf`] without
+//!   touching an `Agent` struct — byte-identical output, proven by
+//!   property tests. [`ta_io::ViewPool`] recycles receive buffers and
+//!   view offset indices so the steady-state exchange allocates nothing.
 //! * [`root_io`] — the **ROOT IO baseline**: a generic, self-describing
 //!   serializer that honestly performs the four costs TA IO avoids
 //!   (pointer dedup, schema records, endianness normalization,
 //!   allocate-per-object deserialization).
-//! * [`lz4`] — from-scratch LZ4 block-format codec.
+//! * [`lz4`] — from-scratch LZ4 block-format codec, with scratch-reusing
+//!   [`lz4::compress_into`] / in-place [`lz4::decompress_into`] variants.
 //! * [`delta`] — delta encoding against a per-channel reference message.
+//!   The production pipeline keeps the reference as raw bytes, matches
+//!   incrementally through a generation-stamped id→slot table, diffs and
+//!   restores in u64 SWAR chunks and defragments in place; the seed
+//!   pipeline survives in [`delta::seed`] as the equivalence oracle.
 //! * [`codec`] — the configurable sender/receiver pipeline
 //!   (TA IO | ROOT IO) × (none | LZ4 | LZ4+delta) used by the engine.
+//!   Per-channel buffer ownership: each tx channel owns its payload
+//!   `AlignedBuf` (double-buffered against the delta reference on
+//!   refresh) and LZ4 scratch; callers own the wire vectors
+//!   ([`codec::Codec::encode_rm_into`] and friends write into them), and
+//!   the receive side draws aligned buffers from a caller-held
+//!   [`ta_io::ViewPool`] that the `AuraStore` recycles into.
 
 pub mod buffer;
 pub mod codec;

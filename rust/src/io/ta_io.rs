@@ -132,7 +132,29 @@ impl AgentBlock {
 
     /// Encode an agent header (behaviors are written separately).
     pub fn from_agent(a: &Agent) -> AgentBlock {
-        let (payload, payload_u) = match a.kind {
+        Self::from_parts(
+            &a.kind,
+            a.global_id,
+            a.position,
+            a.diameter,
+            a.neighbor_ref,
+            a.behaviors.len() as u32,
+        )
+    }
+
+    /// Build a block from the hot attributes alone — the entry point for
+    /// the columnar fast path, which never touches an `Agent` struct.
+    /// `from_agent` delegates here, so both paths are byte-identical by
+    /// construction.
+    pub fn from_parts(
+        kind: &AgentKind,
+        gid: GlobalId,
+        position: Vec3,
+        diameter: f64,
+        neighbor_ref: AgentPointer,
+        n_behaviors: u32,
+    ) -> AgentBlock {
+        let (payload, payload_u) = match *kind {
             AgentKind::Cell { cell_type, adhesion } => {
                 ([adhesion, 0.0, 0.0], cell_type.code() as u64)
             }
@@ -147,19 +169,19 @@ impl AgentBlock {
             }
         };
         AgentBlock {
-            class_id: a.kind.class_id(),
+            class_id: kind.class_id(),
             flags: 0,
-            n_behaviors: a.behaviors.len() as u32,
-            gid_rank: a.global_id.rank,
+            n_behaviors,
+            gid_rank: gid.rank,
             _pad: 0,
-            gid_counter: a.global_id.counter,
-            position: a.position.to_array(),
-            diameter: a.diameter,
+            gid_counter: gid.counter,
+            position: position.to_array(),
+            diameter,
             payload,
             payload_u,
-            ref_rank: a.neighbor_ref.target.rank,
+            ref_rank: neighbor_ref.target.rank,
             _pad2: 0,
-            ref_counter: a.neighbor_ref.target.counter,
+            ref_counter: neighbor_ref.target.counter,
         }
     }
 
@@ -247,13 +269,24 @@ impl BehaviorBlock {
 /// `copy_nonoverlapping` block writes — this is where the paper's 110×
 /// serialization speedup over the generic baseline comes from.
 pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent> + Clone) -> AlignedBuf {
+    let mut buf = AlignedBuf::new();
+    serialize_into(agents, &mut buf);
+    buf
+}
+
+/// [`serialize`] into a caller-owned buffer whose capacity is reused
+/// across messages — the per-channel variant for allocation-free steady
+/// state.
+pub fn serialize_into<'a>(
+    agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+    buf: &mut AlignedBuf,
+) {
     // Exact-size pass (cheap: one length read per agent).
     let total: usize = HEADER_BYTES
         + agents
             .clone()
             .map(|a| AGENT_BLOCK_BYTES + a.behaviors.len() * BEHAVIOR_BLOCK_BYTES)
             .sum::<usize>();
-    let mut buf = AlignedBuf::with_capacity(total);
     buf.resize_for_overwrite(total);
     let base = buf.as_mut_ptr();
     let mut off = HEADER_BYTES;
@@ -288,8 +321,193 @@ pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent> + Clone) -
         agent_count += 1;
     }
     debug_assert_eq!(off, total);
-    write_header(&mut buf, agent_count, block_count, 0);
-    buf
+    write_header(buf, agent_count, block_count, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Columnar (SoA-direct) serialization
+// ---------------------------------------------------------------------------
+
+/// Borrowed view over the hot-attribute columns of an agent store,
+/// indexed by *slot*. The `ResourceManager` SoA mirror produces one of
+/// these; the columnar writer streams blocks straight out of the columns
+/// without assembling (or even reading) an `Agent` struct.
+#[derive(Clone, Copy)]
+pub struct ColumnSource<'a> {
+    pub pos: &'a [Vec3],
+    pub diam: &'a [f64],
+    pub kind: &'a [AgentKind],
+    pub gid: &'a [GlobalId],
+    pub nref: &'a [AgentPointer],
+    /// Behavior-child count per slot (mirrors `agent.behaviors.len()`).
+    pub nbeh: &'a [u32],
+}
+
+/// A random-access source of wire rows (one row = agent block + behavior
+/// child blocks). Shared by the plain columnar writer and the delta
+/// layer's reorder stage, which needs to emit rows in reference order.
+pub trait RowSource {
+    fn len(&self) -> usize;
+    fn gid(&self, i: usize) -> GlobalId;
+    fn n_behaviors(&self, i: usize) -> u32;
+
+    #[inline]
+    fn row_bytes(&self, i: usize) -> usize {
+        AGENT_BLOCK_BYTES + self.n_behaviors(i) as usize * BEHAVIOR_BLOCK_BYTES
+    }
+
+    /// Blocks contributed by row `i` to the header's expected-delete count
+    /// (agent block + one behavior-vector block when non-empty).
+    #[inline]
+    fn row_blocks(&self, i: usize) -> u32 {
+        1 + (self.n_behaviors(i) > 0) as u32
+    }
+
+    /// Write the agent block and its behavior blocks at `dst`.
+    ///
+    /// # Safety
+    /// `dst` must be valid for `row_bytes(i)` bytes of writes.
+    unsafe fn write_row(&self, i: usize, dst: *mut u8);
+}
+
+/// Rows drawn from SoA columns for an id list (the aura fast path: the
+/// per-destination selection indexes the columns by `LocalId::index`).
+/// `behaviors` resolves a slot's behavior slice — the only per-agent
+/// indirection left; the fixed-size block streams purely from columns.
+pub struct ColumnRows<'a, F> {
+    pub cols: ColumnSource<'a>,
+    pub ids: &'a [LocalId],
+    pub behaviors: F,
+}
+
+impl<'a, F: Fn(u32) -> &'a [Behavior]> RowSource for ColumnRows<'a, F> {
+    #[inline]
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    #[inline]
+    fn gid(&self, i: usize) -> GlobalId {
+        self.cols.gid[self.ids[i].index as usize]
+    }
+
+    #[inline]
+    fn n_behaviors(&self, i: usize) -> u32 {
+        self.cols.nbeh[self.ids[i].index as usize]
+    }
+
+    unsafe fn write_row(&self, i: usize, dst: *mut u8) {
+        let s = self.ids[i].index as usize;
+        let ab = AgentBlock::from_parts(
+            &self.cols.kind[s],
+            self.cols.gid[s],
+            self.cols.pos[s],
+            self.cols.diam[s],
+            self.cols.nref[s],
+            self.cols.nbeh[s],
+        );
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                &ab as *const AgentBlock as *const u8,
+                dst,
+                AGENT_BLOCK_BYTES,
+            );
+        }
+        let bs = (self.behaviors)(self.ids[i].index);
+        debug_assert_eq!(bs.len() as u32, self.cols.nbeh[s], "behavior column out of sync");
+        let mut off = AGENT_BLOCK_BYTES;
+        for b in bs {
+            let bb = BehaviorBlock::from_behavior(b);
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    &bb as *const BehaviorBlock as *const u8,
+                    dst.add(off),
+                    BEHAVIOR_BLOCK_BYTES,
+                );
+            }
+            off += BEHAVIOR_BLOCK_BYTES;
+        }
+    }
+}
+
+/// Rows drawn from a slice of borrowed agents (the compatibility path for
+/// callers that hold owned `Agent`s, e.g. migration).
+pub struct AgentRows<'a>(pub &'a [&'a Agent]);
+
+impl RowSource for AgentRows<'_> {
+    #[inline]
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    #[inline]
+    fn gid(&self, i: usize) -> GlobalId {
+        self.0[i].global_id
+    }
+
+    #[inline]
+    fn n_behaviors(&self, i: usize) -> u32 {
+        self.0[i].behaviors.len() as u32
+    }
+
+    unsafe fn write_row(&self, i: usize, dst: *mut u8) {
+        let a = self.0[i];
+        let ab = AgentBlock::from_agent(a);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                &ab as *const AgentBlock as *const u8,
+                dst,
+                AGENT_BLOCK_BYTES,
+            );
+        }
+        let mut off = AGENT_BLOCK_BYTES;
+        for b in &a.behaviors {
+            let bb = BehaviorBlock::from_behavior(b);
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    &bb as *const BehaviorBlock as *const u8,
+                    dst.add(off),
+                    BEHAVIOR_BLOCK_BYTES,
+                );
+            }
+            off += BEHAVIOR_BLOCK_BYTES;
+        }
+    }
+}
+
+/// Serialize rows in order into `buf` — byte-identical to [`serialize`]
+/// over the same agents. Single exact-size pass, then straight-line block
+/// writes; no allocation when `buf` capacity suffices.
+pub fn serialize_rows_into<R: RowSource>(rows: &R, buf: &mut AlignedBuf) {
+    let n = rows.len();
+    let mut total = HEADER_BYTES;
+    let mut block_count = 0u32;
+    for i in 0..n {
+        total += rows.row_bytes(i);
+        block_count += rows.row_blocks(i);
+    }
+    buf.resize_for_overwrite(total);
+    let base = buf.as_mut_ptr();
+    let mut off = HEADER_BYTES;
+    for i in 0..n {
+        unsafe { rows.write_row(i, base.add(off)) };
+        off += rows.row_bytes(i);
+    }
+    debug_assert_eq!(off, total);
+    write_header(buf, n as u32, block_count, 0);
+}
+
+/// SoA-direct encode: stream the agents selected by `ids` out of the hot
+/// columns into `buf`. This is the zero-copy aura fast path — no `Agent`
+/// reads, no per-field pushes, wire output byte-identical to
+/// [`serialize`] over the same agents in the same order.
+pub fn serialize_columns_into<'a, F: Fn(u32) -> &'a [Behavior]>(
+    cols: &ColumnSource<'a>,
+    ids: &'a [LocalId],
+    behaviors: F,
+    buf: &mut AlignedBuf,
+) {
+    serialize_rows_into(&ColumnRows { cols: *cols, ids, behaviors }, buf);
 }
 
 /// Serialize from pre-built blocks (used by the delta layer's reorder
@@ -315,7 +533,7 @@ pub fn serialize_blocks(slots: &[(AgentBlock, Vec<BehaviorBlock>)]) -> AlignedBu
     buf
 }
 
-fn write_header(buf: &mut AlignedBuf, agent_count: u32, block_count: u32, flags: u8) {
+pub(crate) fn write_header(buf: &mut AlignedBuf, agent_count: u32, block_count: u32, flags: u8) {
     let h = Header {
         magic: MAGIC,
         version: FORMAT_VERSION,
@@ -385,6 +603,13 @@ pub struct TaView {
 impl TaView {
     /// Validate the header and index the blocks (the single pass).
     pub fn parse(buf: AlignedBuf) -> Result<TaView, TaError> {
+        Self::parse_with(buf, Vec::new())
+    }
+
+    /// [`TaView::parse`] reusing a pooled offset index (cleared, then
+    /// refilled) — the allocation-free receive path. On error the buffers
+    /// are dropped; recover them beforehand if they must survive.
+    pub fn parse_with(buf: AlignedBuf, mut offsets: Vec<u32>) -> Result<TaView, TaError> {
         if buf.len() < HEADER_BYTES {
             return Err(TaError::TooShort);
         }
@@ -399,7 +624,8 @@ impl TaView {
             // Observation 3: same-endian clusters — fail loudly otherwise.
             return Err(TaError::EndianMismatch);
         }
-        let mut offsets = Vec::with_capacity(h.agent_count as usize);
+        offsets.clear();
+        offsets.reserve(h.agent_count as usize);
         let mut off = HEADER_BYTES;
         for _ in 0..h.agent_count {
             if off + AGENT_BLOCK_BYTES > buf.len() {
@@ -487,13 +713,22 @@ impl TaView {
     /// message length (placeholders are rare), avoiding growth reallocs
     /// on the migration receive path.
     pub fn materialize_all(&self) -> Vec<Agent> {
-        let mut out = Vec::with_capacity(self.len());
+        let mut out = Vec::new();
+        self.materialize_all_into(&mut out);
+        out
+    }
+
+    /// [`TaView::materialize_all`] appending into a caller-owned vector
+    /// whose capacity persists across iterations (the migration ingest
+    /// scratch). Each agent still owns its behavior vector — that
+    /// allocation is inherent to moving the agent out of the buffer.
+    pub fn materialize_all_into(&self, out: &mut Vec<Agent>) {
+        out.reserve(self.len());
         out.extend(
             (0..self.len())
                 .filter(|&i| !self.agent(i).is_placeholder())
                 .map(|i| self.materialize(i)),
         );
-        out
     }
 
     /// Release the blocks of agent `i` (the intercepted `delete`).
@@ -523,6 +758,65 @@ impl TaView {
     /// Access the underlying buffer bytes.
     pub fn raw(&self) -> &[u8] {
         self.buf.as_slice()
+    }
+
+    /// Byte offsets of the agent blocks (slot order).
+    pub fn offsets(&self) -> &[u32] {
+        &self.agent_offsets
+    }
+
+    /// Decompose into the backing buffer and offset index so both can be
+    /// recycled through a [`ViewPool`] once the view's agents are dead.
+    pub fn into_parts(self) -> (AlignedBuf, Vec<u32>) {
+        (self.buf, self.agent_offsets)
+    }
+}
+
+/// Recycler for the receive path: spent views give back their aligned
+/// buffer and offset index here, and the decoder draws replacements from
+/// it — after warm-up the aura exchange performs no steady-state
+/// allocation (the §2.2.1 "buffer reclaimable when every block is
+/// released" lifecycle, with the memory actually reused).
+#[derive(Debug, Default)]
+pub struct ViewPool {
+    bufs: Vec<AlignedBuf>,
+    offs: Vec<Vec<u32>>,
+}
+
+impl ViewPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn take_buf(&mut self) -> AlignedBuf {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    pub fn take_offsets(&mut self) -> Vec<u32> {
+        self.offs.pop().unwrap_or_default()
+    }
+
+    pub fn put_buf(&mut self, mut buf: AlignedBuf) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+
+    pub fn put_offsets(&mut self, mut offs: Vec<u32>) {
+        offs.clear();
+        self.offs.push(offs);
+    }
+
+    /// Recycle a spent view's storage.
+    pub fn put_view(&mut self, view: TaView) {
+        let (buf, offs) = view.into_parts();
+        self.put_buf(buf);
+        self.put_offsets(offs);
+    }
+
+    /// Bytes parked in the pool (memory accounting).
+    pub fn approx_bytes(&self) -> u64 {
+        (self.bufs.iter().map(|b| b.capacity()).sum::<usize>()
+            + self.offs.iter().map(|o| o.capacity() * 4).sum::<usize>()) as u64
     }
 }
 
@@ -686,6 +980,107 @@ mod tests {
             .collect();
         let from_blocks = serialize_blocks(&slots);
         assert_eq!(direct.as_slice(), from_blocks.as_slice());
+    }
+
+    /// Build a column set mirroring `agents` (slot i = agent i) — what the
+    /// ResourceManager SoA mirror maintains incrementally.
+    fn columns_of(agents: &[Agent]) -> (Vec<Vec3>, Vec<f64>, Vec<AgentKind>, Vec<GlobalId>, Vec<AgentPointer>, Vec<u32>) {
+        (
+            agents.iter().map(|a| a.position).collect(),
+            agents.iter().map(|a| a.diameter).collect(),
+            agents.iter().map(|a| a.kind).collect(),
+            agents.iter().map(|a| a.global_id).collect(),
+            agents.iter().map(|a| a.neighbor_ref).collect(),
+            agents.iter().map(|a| a.behaviors.len() as u32).collect(),
+        )
+    }
+
+    fn column_encode(agents: &[Agent], ids: &[LocalId]) -> AlignedBuf {
+        let (pos, diam, kind, gid, nref, nbeh) = columns_of(agents);
+        let cols = ColumnSource {
+            pos: &pos,
+            diam: &diam,
+            kind: &kind,
+            gid: &gid,
+            nref: &nref,
+            nbeh: &nbeh,
+        };
+        let mut buf = AlignedBuf::new();
+        serialize_columns_into(&cols, ids, |s| &agents[s as usize].behaviors[..], &mut buf);
+        buf
+    }
+
+    #[test]
+    fn columnar_encode_is_byte_identical() {
+        let agents = sample_agents();
+        let ids: Vec<LocalId> = (0..agents.len()).map(|i| LocalId::new(i as u32, 0)).collect();
+        let direct = serialize(agents.iter());
+        let cols = column_encode(&agents, &ids);
+        assert_eq!(direct.as_slice(), cols.as_slice());
+    }
+
+    #[test]
+    fn columnar_encode_respects_id_selection_order() {
+        let agents = sample_agents();
+        // Send a subset in shuffled order, as the per-destination aura
+        // selection does.
+        let ids = [LocalId::new(2, 0), LocalId::new(0, 0), LocalId::new(3, 0)];
+        let selected: Vec<&Agent> = ids.iter().map(|id| &agents[id.index as usize]).collect();
+        let direct = serialize(selected.iter().copied());
+        let cols = column_encode(&agents, &ids);
+        assert_eq!(direct.as_slice(), cols.as_slice());
+    }
+
+    #[test]
+    fn prop_columnar_matches_seed_encoder() {
+        check("columnar vs seed encode", 32, |g: &mut Gen| {
+            let n = g.usize_in(0..=60);
+            let mut agents = Vec::new();
+            for i in 0..n {
+                let pos = Vec3::new(g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3));
+                let mut a = match g.usize_in(0..=3) {
+                    0 => Agent::cell(pos, g.f64_in(0.1, 50.0), if g.bool() { CellType::A } else { CellType::B }),
+                    1 => Agent::growing_cell(pos, g.f64_in(0.1, 50.0)),
+                    2 => Agent::person(pos, SirState::from_code(g.usize_in(0..=2) as u8)),
+                    _ => Agent::tumor_cell(pos, g.f64_in(0.1, 50.0)),
+                };
+                if g.bool() {
+                    a.global_id = GlobalId::new(g.usize_in(0..=7) as u32, i as u64);
+                }
+                if g.bool() {
+                    a.neighbor_ref = AgentPointer::to(GlobalId::new(1, g.u64() % 100));
+                }
+                agents.push(a);
+            }
+            // Random subset, random order.
+            let mut ids: Vec<LocalId> =
+                (0..n).filter(|_| g.bool()).map(|i| LocalId::new(i as u32, 0)).collect();
+            if !ids.is_empty() {
+                let k = g.usize_in(0..=ids.len() - 1);
+                ids.rotate_left(k);
+            }
+            let selected: Vec<&Agent> = ids.iter().map(|id| &agents[id.index as usize]).collect();
+            let direct = serialize(selected.iter().copied());
+            let cols = column_encode(&agents, &ids);
+            assert_eq!(direct.as_slice(), cols.as_slice());
+        });
+    }
+
+    #[test]
+    fn view_pool_recycles_storage() {
+        let agents = sample_agents();
+        let mut pool = ViewPool::new();
+        let view = TaView::parse_with(serialize(agents.iter()), pool.take_offsets()).unwrap();
+        assert_eq!(view.len(), agents.len());
+        pool.put_view(view);
+        assert!(pool.approx_bytes() > 0);
+        // The next parse reuses the recycled buffer + offsets.
+        let mut buf = pool.take_buf();
+        let cap = buf.capacity();
+        buf.set_from_slice(serialize(agents.iter()).as_slice());
+        assert_eq!(buf.capacity(), cap);
+        let view2 = TaView::parse_with(buf, pool.take_offsets()).unwrap();
+        assert_eq!(view2.len(), agents.len());
     }
 
     #[test]

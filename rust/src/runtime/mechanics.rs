@@ -114,26 +114,146 @@ impl MechanicsBatch {
 /// truncation: (distance², position, diameter, adhesion scale).
 pub type NeighborCandidate = (f64, Vec3, f64, f32);
 
-/// Reusable per-batch gather state: one AOT batch plus the neighbor
-/// scratch used while selecting each agent's K nearest. The engine keeps
-/// a pool of these across iterations so the mechanics gather performs no
-/// steady-state allocation.
+/// Deterministic total order over candidates: distance² first, position
+/// components next, diameter/adhesion as final tie-breakers. The order
+/// depends only on candidate values — never on NSG layout or rank count —
+/// so the selected K-set is reproducible across decompositions.
+#[inline]
+fn cand_cmp(a: &NeighborCandidate, b: &NeighborCandidate) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap()
+        .then_with(|| a.1.x.partial_cmp(&b.1.x).unwrap())
+        .then_with(|| a.1.y.partial_cmp(&b.1.y).unwrap())
+        .then_with(|| a.1.z.partial_cmp(&b.1.z).unwrap())
+        .then_with(|| a.2.partial_cmp(&b.2).unwrap())
+        .then_with(|| a.3.partial_cmp(&b.3).unwrap())
+}
+
+/// Bounded K-nearest selection (ROADMAP "gather-kernel fusion"): a
+/// fixed-capacity max-heap keeps the K smallest candidates seen so far,
+/// so selection is O(n log K) streaming instead of collect-all +
+/// `sort_by` — the per-agent sort disappears from the mechanics profile
+/// and the candidate scratch never grows beyond K entries.
+pub struct KNearest {
+    cap: usize,
+    /// Max-heap under [`cand_cmp`]: the root is the worst kept candidate.
+    heap: Vec<NeighborCandidate>,
+}
+
+impl KNearest {
+    pub fn new(cap: usize) -> Self {
+        KNearest { cap, heap: Vec::with_capacity(cap) }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Offer a candidate; keeps it only if it is among the K nearest.
+    #[inline]
+    pub fn push(&mut self, c: NeighborCandidate) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.heap.len() < self.cap {
+            self.heap.push(c);
+            self.sift_up(self.heap.len() - 1);
+        } else if cand_cmp(&c, &self.heap[0]).is_lt() {
+            self.heap[0] = c;
+            self.sift_down();
+        }
+    }
+
+    /// Sort the kept candidates ascending (nearest first) and return
+    /// them. The heap shape is destroyed; call [`KNearest::clear`] before
+    /// reusing. K is small (the AOT kernel's 16), so this final sort is a
+    /// few swaps, not the O(n log n) over every NSG candidate it replaces.
+    pub fn sorted(&mut self) -> &[NeighborCandidate] {
+        self.heap.sort_by(cand_cmp);
+        &self.heap
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if cand_cmp(&self.heap[i], &self.heap[parent]).is_gt() {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self) {
+        let len = self.heap.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < len && cand_cmp(&self.heap[l], &self.heap[largest]).is_gt() {
+                largest = l;
+            }
+            if r < len && cand_cmp(&self.heap[r], &self.heap[largest]).is_gt() {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+/// Reusable per-batch gather state: one AOT batch, the bounded K-nearest
+/// selector, and the displacement out-buffer the backend writes into.
+/// The engine keeps a pool of these across iterations so the mechanics
+/// phase performs no steady-state allocation.
 pub struct GatherSlot {
     pub batch: MechanicsBatch,
-    pub scratch: Vec<NeighborCandidate>,
+    pub knn: KNearest,
+    /// Caller-owned displacement output (ROADMAP "displacement
+    /// out-buffers"): `MechBackend::compute_into` fills it in place.
+    pub disp: Vec<Vec3>,
 }
 
 impl GatherSlot {
     pub fn new(n: usize, k: usize) -> Self {
-        GatherSlot { batch: MechanicsBatch::new(n, k), scratch: Vec::with_capacity(64) }
+        GatherSlot {
+            batch: MechanicsBatch::new(n, k),
+            knn: KNearest::new(k),
+            disp: Vec::with_capacity(n),
+        }
     }
 }
 
 /// Native (rust) implementation of the identical force model — the
 /// correctness oracle and artifact-free fallback.
 pub fn native_mechanics(batch: &MechanicsBatch, p: MechanicsParams) -> Vec<Vec3> {
+    let mut out = Vec::new();
+    native_mechanics_into(batch, p, &mut out);
+    out
+}
+
+/// [`native_mechanics`] writing into a caller-owned buffer (cleared
+/// first; capacity reused across batches), so the mechanics phase
+/// allocates nothing in steady state.
+pub fn native_mechanics_into(batch: &MechanicsBatch, p: MechanicsParams, out: &mut Vec<Vec3>) {
     let (n, k) = (batch.n, batch.k);
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     for i in 0..n {
         let pi = [batch.pos[i * 3], batch.pos[i * 3 + 1], batch.pos[i * 3 + 2]];
         let di = batch.diam[i];
@@ -160,7 +280,6 @@ pub fn native_mechanics(batch: &MechanicsBatch, p: MechanicsParams) -> Vec<Vec3>
         let clamp = |v: f32| (p.dt * v).clamp(-p.max_disp, p.max_disp);
         out.push(Vec3::new(clamp(force[0]) as f64, clamp(force[1]) as f64, clamp(force[2]) as f64));
     }
-    out
 }
 
 /// Engine handle: PJRT-backed when artifacts are available, native
@@ -218,6 +337,29 @@ impl MechanicsEngine {
                         )
                     })
                     .collect())
+            }
+        }
+    }
+
+    /// [`MechanicsEngine::compute`] into a caller-owned buffer. The
+    /// native path writes in place; the PJRT path unavoidably produces a
+    /// device literal and copies it out.
+    pub fn compute_into(
+        &self,
+        batch: &MechanicsBatch,
+        p: MechanicsParams,
+        out: &mut Vec<Vec3>,
+    ) -> Result<()> {
+        match self {
+            MechanicsEngine::Native => {
+                native_mechanics_into(batch, p, out);
+                Ok(())
+            }
+            MechanicsEngine::Pjrt { .. } => {
+                let v = self.compute(batch, p)?;
+                out.clear();
+                out.extend_from_slice(&v);
+                Ok(())
             }
         }
     }
@@ -296,6 +438,61 @@ mod tests {
         let out = native_mechanics(&b, p);
         assert!(out[0].norm() <= 0.5 * 3f64.sqrt() + 1e-9);
         assert!(out[0].x.abs() <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn knearest_matches_sort_and_truncate() {
+        let mut rng = Rng::new(55);
+        for case in 0..200 {
+            let k = 1 + (case % 20);
+            let n = rng.index(60);
+            let cands: Vec<NeighborCandidate> = (0..n)
+                .map(|_| {
+                    (
+                        rng.uniform_range(0.0, 100.0),
+                        Vec3::new(
+                            rng.uniform_range(-10.0, 10.0),
+                            rng.uniform_range(-10.0, 10.0),
+                            rng.uniform_range(-10.0, 10.0),
+                        ),
+                        rng.uniform_range(1.0, 12.0),
+                        if rng.chance(0.5) { 1.0 } else { 0.2 },
+                    )
+                })
+                .collect();
+            // Oracle: full sort then truncate (the seed selection).
+            let mut want = cands.clone();
+            want.sort_by(cand_cmp);
+            want.truncate(k);
+            // Heap selection.
+            let mut knn = KNearest::new(k);
+            for c in &cands {
+                knn.push(*c);
+            }
+            assert_eq!(knn.sorted(), &want[..], "case {case} (k={k}, n={n})");
+            knn.clear();
+            assert!(knn.is_empty());
+        }
+    }
+
+    #[test]
+    fn knearest_zero_capacity_keeps_nothing() {
+        let mut knn = KNearest::new(0);
+        knn.push((1.0, Vec3::ZERO, 1.0, 1.0));
+        assert_eq!(knn.len(), 0);
+        assert!(knn.sorted().is_empty());
+    }
+
+    #[test]
+    fn native_mechanics_into_reuses_buffer() {
+        let b = random_batch(16, 4, 7);
+        let mut out = Vec::new();
+        native_mechanics_into(&b, MechanicsParams::default(), &mut out);
+        assert_eq!(out, native_mechanics(&b, MechanicsParams::default()));
+        let cap = out.capacity();
+        native_mechanics_into(&b, MechanicsParams::default(), &mut out);
+        assert_eq!(out.capacity(), cap, "steady-state compute must not realloc");
+        assert_eq!(out.len(), 16);
     }
 
     #[test]

@@ -33,6 +33,21 @@ impl MechanicsHandle {
             .expect("mechanics service is down");
         reply_rx.recv().expect("mechanics service dropped the reply")
     }
+
+    /// [`MechanicsHandle::compute`] writing into a caller-owned buffer.
+    /// The channel protocol inherently ships an owned batch and reply;
+    /// this keeps the *caller's* side allocation-stable so the engine's
+    /// displacement out-buffer contract holds for both backends.
+    pub fn compute_into(
+        &self,
+        batch: &MechanicsBatch,
+        params: MechanicsParams,
+        out: &mut Vec<Vec3>,
+    ) {
+        let v = self.compute(batch.clone(), params);
+        out.clear();
+        out.extend_from_slice(&v);
+    }
 }
 
 /// The service: owns the worker thread.
