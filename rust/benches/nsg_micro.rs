@@ -1,13 +1,17 @@
 //! NSG / gather micro-benchmark: the spatial hot path in isolation.
 //!
-//! Measures the flat-arena NSG (handle tables + pooled buckets + SoA
-//! mirror) against the seed implementation (`Vec<Vec<_>>` cells +
-//! `HashMap` index) on the four per-iteration operations — incremental
-//! position update, 27-cell neighbor query, aura add/clear cycle, bulk
-//! build — plus the mechanics K-nearest gather reading agent attributes
-//! through the `ResourceManager` SoA columns vs. `Vec<Option<Agent>>`
-//! chasing. Emits `BENCH_nsg.json` at the repo root; the acceptance bar
-//! for the arena rewrite is ≥ 2x on update + query at 100k agents.
+//! Measures the flat-arena NSG (Morton cell indexing + handle tables +
+//! pooled buckets + SoA mirror) against the seed implementation
+//! (row-major `Vec<Vec<_>>` cells + `HashMap` index) on the
+//! per-iteration operations — incremental position update, 27-cell
+//! stencil query, aura add/clear cycle, bulk build — plus the
+//! post-sort **wholesale rebuild** (seed-style serial re-add vs the
+//! Morton-sharded parallel `rebuild_owned` at 1/2/8 threads) and the
+//! stencil query over a Morton-sorted population, and the mechanics
+//! K-nearest gather reading agent attributes through the
+//! `ResourceManager` SoA columns vs. `Vec<Option<Agent>>` chasing.
+//! Emits `BENCH_nsg.json` at the repo root; the acceptance bar for the
+//! arena rewrite is ≥ 2x on update + query at 100k agents.
 
 #[path = "harness.rs"]
 mod harness;
@@ -18,7 +22,8 @@ use harness::*;
 use nsg_baseline::BaselineGrid;
 use teraagent::core::agent::{Agent, CellType};
 use teraagent::core::ids::LocalId;
-use teraagent::core::resource_manager::ResourceManager;
+use teraagent::core::resource_manager::{morton3_in_grid, ResourceManager};
+use teraagent::engine::pool::ThreadPool;
 use teraagent::space::{Aabb, NeighborSearchGrid, NsgEntry};
 use teraagent::util::{Rng, Vec3};
 
@@ -211,6 +216,56 @@ fn run_gather(w: &Workload) -> (f64, f64) {
     (soa.median, aos.median)
 }
 
+/// Post-sort wholesale rebuild: seed-style serial re-add into a fresh
+/// grid (what `sort_phase` did before PR 3) vs the Morton-sharded
+/// parallel `rebuild_owned` at 1, 2 and 8 threads, both over the same
+/// Morton-sorted snapshot. Also returns the stencil-query time over the
+/// rebuilt (sorted, bucket-sequential) arena for the locality row.
+fn run_rebuild(w: &Workload) -> (f64, [f64; 3], f64, u64) {
+    let probe = NeighborSearchGrid::new(bounds(), RADIUS);
+    let (cell, dims) = (probe.cell_size(), probe.dims());
+    let mut pos = w.pos.clone();
+    pos.sort_by_key(|p| morton3_in_grid(*p, cell, dims));
+    let ids: Vec<LocalId> = (0..N_AGENTS).map(|i| LocalId::new(i as u32, 0)).collect();
+    let serial = measure(1, 5, || {
+        let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+        for (i, p) in pos.iter().enumerate() {
+            g.add(oid(i), *p);
+        }
+        g.len() as u64
+    });
+    let mut parallel = [0.0f64; 3];
+    for (k, threads) in [1usize, 2, 8].into_iter().enumerate() {
+        let pool = ThreadPool::new(threads);
+        let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+        parallel[k] = measure(1, 5, || {
+            g.rebuild_owned(&ids, &pos, &pool);
+            // The rows must measure the sharded path, not a silent
+            // serial fallback (sort-key drift would show up here).
+            assert!(g.last_rebuild_was_parallel(), "{threads}-thread rebuild fell back");
+            g.len() as u64
+        })
+        .median;
+    }
+    // Stencil sweep over the sorted arena: agents in Morton order query
+    // their own neighborhood, so consecutive queries touch adjacent
+    // cells and near-sequential buckets.
+    let pool = ThreadPool::new(1);
+    let mut g = NeighborSearchGrid::new(bounds(), RADIUS);
+    g.rebuild_owned(&ids, &pos, &pool);
+    assert!(g.last_rebuild_was_parallel(), "sorted-arena rebuild fell back");
+    let mut hits = 0u64;
+    let sorted_query = measure(1, 5, || {
+        let mut h = 0u64;
+        for p in &pos {
+            g.for_each_neighbor(*p, RADIUS, None, |_, _, _| h += 1);
+        }
+        hits = h;
+        h
+    });
+    (serial.median, parallel, sorted_query.median, hits)
+}
+
 fn ratio(base: f64, new: f64) -> f64 {
     if new > 0.0 {
         base / new
@@ -230,6 +285,11 @@ fn main() {
         "baseline and arena NSG disagree on query results"
     );
     let (gather_soa, gather_aos) = run_gather(&w);
+    let (rebuild_serial, rebuild_par, stencil_sorted, stencil_hits) = run_rebuild(&w);
+    assert_eq!(
+        stencil_hits, arena_hits,
+        "sorted-arena stencil sweep disagrees with unsorted arena"
+    );
 
     row_strs(&["op", "seed", "arena", "speedup"]);
     let print_row = |op: &str, b: f64, a: f64| {
@@ -241,6 +301,26 @@ fn main() {
     print_row("aura 10k+clear", base.aura_cycle, arena.aura_cycle);
     print_row("gather (aos->soa)", gather_aos, gather_soa);
     println!("  query checksum: {arena_hits} neighbor visits");
+
+    row_strs(&["rebuild 100k", "serial", "morton-par", "speedup"]);
+    let pr = |label: &str, par: f64| {
+        row(&[
+            label.to_string(),
+            fmt_secs(rebuild_serial),
+            fmt_secs(par),
+            format!("{:.2}x", ratio(rebuild_serial, par)),
+        ]);
+    };
+    pr("1 thread", rebuild_par[0]);
+    pr("2 threads", rebuild_par[1]);
+    pr("8 threads", rebuild_par[2]);
+    row_strs(&["stencil query", "row-major", "morton-sorted", "speedup"]);
+    row(&[
+        "100k sweep".to_string(),
+        fmt_secs(base.query),
+        fmt_secs(stencil_sorted),
+        format!("{:.2}x", ratio(base.query, stencil_sorted)),
+    ]);
 
     // ops/sec for the trajectory file (update counts 2N ops per run).
     let json = format!(
@@ -258,6 +338,13 @@ fn main() {
     "update_ops_per_s": {:.3e}, "query_ops_per_s": {:.3e}
   }},
   "gather": {{ "aos_s": {:.6e}, "soa_s": {:.6e}, "speedup": {:.3} }},
+  "rebuild": {{
+    "serial_s": {:.6e}, "parallel_t1_s": {:.6e}, "parallel_t2_s": {:.6e},
+    "parallel_t8_s": {:.6e}, "speedup_t8": {:.3}
+  }},
+  "stencil_query": {{
+    "row_major_s": {:.6e}, "morton_sorted_s": {:.6e}, "speedup": {:.3}
+  }},
   "speedup": {{
     "build": {:.3}, "update": {:.3}, "query": {:.3}, "aura_cycle": {:.3}
   }},
@@ -279,6 +366,14 @@ fn main() {
         gather_aos,
         gather_soa,
         ratio(gather_aos, gather_soa),
+        rebuild_serial,
+        rebuild_par[0],
+        rebuild_par[1],
+        rebuild_par[2],
+        ratio(rebuild_serial, rebuild_par[2]),
+        base.query,
+        stencil_sorted,
+        ratio(base.query, stencil_sorted),
         ratio(base.build, arena.build),
         ratio(base.update, arena.update),
         ratio(base.query, arena.query),

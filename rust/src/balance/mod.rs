@@ -8,6 +8,15 @@
 //! * [`diffusive`] — **local**: ranks whose last-iteration runtime exceeds
 //!   the neighborhood average push border boxes to faster neighbors;
 //!   cheap, incremental, no mass migration.
+//!
+//! The weight field comes from [`weights::compute_box_weights`]: owned
+//! agents per box (counted through NSG region queries) scaled by the
+//! rank's last iteration runtime, allreduced so every rank repartitions
+//! the same global field deterministically. The engine triggers either
+//! method from `RankSim::balance_phase` every `balance_every`
+//! iterations; when boxes change owner, affected agents are handed off
+//! through the regular migration path and the cached neighbor-rank set
+//! is invalidated.
 
 pub mod diffusive;
 pub mod rcb;

@@ -9,6 +9,16 @@
 //! interconnect-sensitivity experiments (InfiniBand vs Gigabit Ethernet,
 //! Fig. 11) are reproducible. [`batching`] splits large messages into
 //! bounded chunks (§2.4.3's transmission-buffer memory cap).
+//!
+//! Message framing: every engine transfer is `(peer, tag)`-addressed
+//! ([`mpi::tags`] — aura, migration, control), chunked by
+//! [`batching::send_batched`] on the way out and reassembled into a
+//! caller-reused buffer by [`batching::Reassembler`] on the way in.
+//! All-to-all rounds carry a monotone round counter so barrier-free
+//! ranks pair up the same logical exchange even when they drift apart.
+//! Transport buffers are owned `Vec`s in the in-process mailboxes — see
+//! ROADMAP "shared-memory transport frames" for the planned zero-copy
+//! wire.
 
 pub mod batching;
 pub mod mpi;

@@ -79,6 +79,30 @@ impl Drop for AgentRefMut<'_> {
 }
 
 /// Per-rank agent container.
+///
+/// # Example: add, read through the SoA mirror, sort
+///
+/// ```
+/// use teraagent::core::agent::{Agent, CellType};
+/// use teraagent::core::resource_manager::ResourceManager;
+/// use teraagent::util::Vec3;
+///
+/// let mut rm = ResourceManager::new(0);
+/// let id = rm.add(Agent::cell(Vec3::new(30.0, 2.0, 2.0), 10.0, CellType::A));
+/// let _far = rm.add(Agent::cell(Vec3::new(90.0, 2.0, 2.0), 10.0, CellType::B));
+///
+/// // Hot reads come from the contiguous SoA columns…
+/// assert_eq!(rm.col_position(id.index), Vec3::new(30.0, 2.0, 2.0));
+/// // …which mutations through the write-back guard keep coherent.
+/// rm.get_mut(id).unwrap().diameter = 12.5;
+/// assert_eq!(rm.col_diameter(id.index), 12.5);
+///
+/// // The periodic Morton sort (§2.5) reassigns local ids: stale ids
+/// // stop resolving, agents and global ids survive.
+/// rm.sort_by_position(Vec3::ZERO, 10.0);
+/// assert!(rm.get(id).is_none());
+/// assert_eq!(rm.len(), 2);
+/// ```
 #[derive(Debug)]
 pub struct ResourceManager {
     /// Slot vector: `slots[local_id.index]`.
@@ -377,12 +401,30 @@ impl ResourceManager {
     /// rebuilt in the same pass, so after sorting the hot columns stream
     /// in Morton order too.
     pub fn sort_by_position(&mut self, origin: Vec3, cell: f64) {
+        self.resort(|a| morton3(a.position - origin, cell));
+    }
+
+    /// [`sort_by_position`](Self::sort_by_position) with the quantized
+    /// coordinates **clamped to `dims`** — the exact cell mapping of a
+    /// `NeighborSearchGrid` with the same origin, cell size and logical
+    /// dims (see [`morton3_in_grid`]). After this sort, slot order is
+    /// non-decreasing in the grid's Morton cell index even for positions
+    /// at or beyond the far domain edge, which is the precondition for
+    /// the grid's parallel wholesale rebuild
+    /// (`NeighborSearchGrid::rebuild_owned`).
+    pub fn sort_by_grid(&mut self, origin: Vec3, cell: f64, dims: [usize; 3]) {
+        self.resort(|a| morton3_in_grid(a.position - origin, cell, dims));
+    }
+
+    /// Shared resort body: drain, order by `key`, rebuild storage and the
+    /// SoA mirror from scratch.
+    fn resort(&mut self, key: impl Fn(&Agent) -> u64) {
         let mut agents: Vec<Agent> = self
             .slots
             .iter_mut()
             .filter_map(|s| s.take())
             .collect();
-        agents.sort_by_key(|a| morton3(a.position - origin, cell));
+        agents.sort_by_key(|a| key(a));
         // Rebuild storage from scratch; reuse counters keep increasing per
         // slot so stale ids remain invalid.
         for r in self.reuse.iter_mut() {
@@ -453,6 +495,38 @@ pub fn morton3(p: Vec3, cell: f64) -> u64 {
         i.min((1 << 21) - 1)
     };
     interleave3(q(p.x)) | (interleave3(q(p.y)) << 1) | (interleave3(q(p.z)) << 2)
+}
+
+/// Per-axis grid bin of a coordinate relative to the grid origin: the
+/// **single** quantizer shared by the agent sort key
+/// ([`morton3_in_grid`]) and the NSG's cell map
+/// (`space::nsg::CellMap::coords_of`). The parallel NSG rebuild's fast
+/// path requires those two to agree bit-for-bit — slot order must be
+/// non-decreasing in cell index after `sort_by_grid` — so the formula
+/// lives in exactly one place. Do not fork it.
+#[inline]
+pub fn grid_axis_bin(v: f64, cell: f64, d: usize) -> usize {
+    if v <= 0.0 {
+        0
+    } else {
+        ((v / cell) as usize).min(d - 1)
+    }
+}
+
+/// [`morton3`] with each axis quantized by [`grid_axis_bin`] — the exact
+/// cell coordinate of a `NeighborSearchGrid` with the same origin, cell
+/// size and logical dims — so ordering by this key orders agents by
+/// their grid cell's Morton index. `p` is the position *relative to the
+/// grid origin* (`position - bounds.min`), as in [`morton3`]. Axes are
+/// additionally saturated at the 21-bit interleave width (the NSG caps
+/// its dims there too, so the saturation never diverges from the grid).
+pub fn morton3_in_grid(p: Vec3, cell: f64, dims: [usize; 3]) -> u64 {
+    let q = |v: f64, d: usize| -> u64 {
+        (grid_axis_bin(v, cell, d) as u64).min((1 << 21) - 1)
+    };
+    interleave3(q(p.x, dims[0]))
+        | (interleave3(q(p.y, dims[1])) << 1)
+        | (interleave3(q(p.z, dims[2])) << 2)
 }
 
 /// Spread the low 21 bits of `v` so consecutive bits are 3 apart.

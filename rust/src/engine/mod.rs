@@ -13,7 +13,16 @@
 //! 4. **Migration** — agents whose position left the owned volume move to
 //!    the authoritative rank.
 //! 5. **Balancing** (periodic) — RCB or diffusive repartitioning.
-//! 6. **Sorting** (periodic) — Morton-order agent sorting.
+//! 6. **Sorting** (periodic) — Morton-order agent sorting along the NSG's
+//!    own cell curve, followed by the parallel wholesale NSG rebuild
+//!    ([`crate::space::NeighborSearchGrid::rebuild_owned`]).
+//!
+//! Intra-rank parallelism (the paper's OpenMP axis) is a scoped fork-join
+//! [`pool::ThreadPool`] per rank; every parallel region — mechanics
+//! gather, aura encode, NSG rebuild, model [`World::par_chunks`] — is
+//! bit-deterministic regardless of thread count, which keeps the
+//! MPI-hybrid modes distribution-transparent (§3.3). See
+//! `ARCHITECTURE.md` for the end-to-end iteration walkthrough.
 
 pub mod checkpoint;
 pub mod init;

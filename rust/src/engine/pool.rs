@@ -44,22 +44,48 @@ impl ThreadPool {
         if len == 0 {
             return (Vec::new(), 0.0);
         }
+        // Uniform boundaries, then the shared fork-join body.
         let nchunks = self.threads.min(len);
         let chunk = len.div_ceil(nchunks);
-        if nchunks == 1 {
-            // Inline on the caller: its own CPU clock sees the work.
-            return (vec![f(0, 0, len)], 0.0);
+        let bounds: Vec<usize> = (0..=nchunks).map(|i| (i * chunk).min(len)).collect();
+        self.map_parts_timed(&bounds, f)
+    }
+
+    /// Fork-join over caller-chosen contiguous partition boundaries:
+    /// `bounds = [b0, b1, …, bP]` describes `P` parts `b(i)..b(i+1)`
+    /// (non-decreasing; empty parts are allowed and still invoked).
+    /// Unlike [`map_chunks`](Self::map_chunks), part boundaries are
+    /// data-dependent — e.g. slot ranges cut at Morton-cell changes for
+    /// the parallel NSG rebuild
+    /// ([`NeighborSearchGrid::rebuild_owned`]). Callers should size `P`
+    /// to ≈ [`threads`](Self::threads); one worker is spawned per part.
+    /// Returns per-part results in order plus the region's critical-path
+    /// CPU seconds (see [`map_chunks_timed`](Self::map_chunks_timed)).
+    ///
+    /// [`NeighborSearchGrid::rebuild_owned`]: crate::space::NeighborSearchGrid::rebuild_owned
+    pub fn map_parts_timed<R: Send>(
+        &self,
+        bounds: &[usize],
+        f: impl Fn(usize, usize, usize) -> R + Sync,
+    ) -> (Vec<R>, f64) {
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "part bounds must be sorted");
+        let parts = bounds.len().saturating_sub(1);
+        if parts == 0 {
+            return (Vec::new(), 0.0);
         }
-        let mut out: Vec<(Option<R>, f64)> = (0..nchunks).map(|_| (None, 0.0)).collect();
+        if parts == 1 {
+            // Inline on the caller: its own CPU clock sees the work.
+            return (vec![f(0, bounds[0], bounds[1])], 0.0);
+        }
+        let mut out: Vec<(Option<R>, f64)> = (0..parts).map(|_| (None, 0.0)).collect();
         std::thread::scope(|s| {
             let f = &f;
-            let mut handles = Vec::with_capacity(nchunks);
-            for (ci, slot) in out.iter_mut().enumerate() {
-                let start = ci * chunk;
-                let end = ((ci + 1) * chunk).min(len);
+            let mut handles = Vec::with_capacity(parts);
+            for (pi, slot) in out.iter_mut().enumerate() {
+                let (start, end) = (bounds[pi], bounds[pi + 1]);
                 handles.push(s.spawn(move || {
                     let t = crate::util::timing::CpuTimer::start();
-                    slot.0 = Some(f(ci, start, end));
+                    slot.0 = Some(f(pi, start, end));
                     slot.1 = t.elapsed_secs();
                 }));
             }
@@ -171,6 +197,20 @@ mod tests {
     fn zero_threads_clamps_to_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn map_parts_respects_custom_boundaries() {
+        let pool = ThreadPool::new(4);
+        // Uneven, data-dependent boundaries with an empty middle part.
+        let bounds = [0usize, 3, 3, 10, 11];
+        let (parts, _) = pool.map_parts_timed(&bounds, |pi, s, e| (pi, s, e));
+        assert_eq!(parts, vec![(0, 0, 3), (1, 3, 3), (2, 3, 10), (3, 10, 11)]);
+        // Degenerate inputs.
+        let (none, cpu) = pool.map_parts_timed(&[], |_, _, _| ());
+        assert!(none.is_empty() && cpu == 0.0);
+        let (one, _) = pool.map_parts_timed(&[2, 7], |_, s, e| e - s);
+        assert_eq!(one, vec![5]);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::config::{BalanceMethod, SimConfig};
 use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
-use crate::io::codec::Codec;
+use crate::io::codec::{AuraEncodeJob, Codec};
 use crate::io::ta_io::ViewPool;
 use crate::io::Compression;
 use crate::metrics::{Counter, Op, RankMetrics};
@@ -94,6 +94,9 @@ pub struct RankSim<M: Model> {
     gather: Vec<GatherSlot>,
     /// Aura recipients: (neighbor rank, selected agent ids).
     aura_per_dest: Vec<(u32, Vec<LocalId>)>,
+    /// Per-destination wire buffers + stats for the parallel aura encode
+    /// (aligned with `aura_per_dest`; wire capacity reused).
+    aura_jobs: Vec<AuraEncodeJob>,
     /// Per-agent aura target ranks (`ranks_within_into` scratch).
     rank_scratch: Vec<u32>,
     /// Cached neighbor-rank set; invalidated when rebalancing moves boxes.
@@ -161,6 +164,7 @@ impl<M: Model> RankSim<M> {
             ids_scratch: Vec::new(),
             gather: Vec::new(),
             aura_per_dest: Vec::new(),
+            aura_jobs: Vec::new(),
             rank_scratch: Vec::new(),
             neighbors_cache: Vec::new(),
             neighbors_dirty: true,
@@ -295,18 +299,25 @@ impl<M: Model> RankSim<M> {
                 self.rm.ensure_global_id(id);
             }
         }
-        // Encode + send one (batched) message per neighbor, streaming the
-        // selected agents straight out of the SoA columns into the reused
-        // wire buffer (no `Agent` reads, no steady-state allocation), and
-        // framing chunks around that same buffer.
-        let mut wire = std::mem::take(&mut self.wire_scratch);
-        for (dest, ids) in &per_dest {
+        // Encode every destination in parallel on the rank's pool
+        // (ROADMAP "parallel aura encode"): the per-destination encodes
+        // are independent — each streams the selected agents straight out
+        // of the SoA columns through its own channel's delta reference
+        // and payload buffer into its own reused wire buffer — so they
+        // fan out as pool jobs while staying byte-identical to the serial
+        // path. The sends below then stream the finished wires in
+        // destination order, keeping the exchange deterministic for any
+        // thread count.
+        let mut jobs = std::mem::take(&mut self.aura_jobs);
+        let encode_cpu =
+            self.codec.encode_rm_parallel(tags::AURA, &self.rm, &per_dest, &mut jobs, &self.pool);
+        self.pool_cpu_secs += encode_cpu;
+        for ((dest, ids), job) in per_dest.iter().zip(&jobs) {
             self.metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
-            let es = self.codec.encode_rm_into((*dest, tags::AURA), &self.rm, ids, &mut wire);
-            self.metrics.add_op(Op::Serialize, es.serialize_secs);
-            self.metrics.add_op(Op::Compress, es.compress_secs);
-            self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
-            self.metrics.count(Counter::BytesSentWire, wire.len() as u64);
+            self.metrics.add_op(Op::Serialize, job.stats.serialize_secs);
+            self.metrics.add_op(Op::Compress, job.stats.compress_secs);
+            self.metrics.count(Counter::BytesSentRaw, job.stats.raw_bytes as u64);
+            self.metrics.count(Counter::BytesSentWire, job.wire.len() as u64);
             self.metrics.count(Counter::MessagesSent, 1);
             self.metrics.timed_cpu(Op::Transfer, || {
                 send_batched(
@@ -314,14 +325,16 @@ impl<M: Model> RankSim<M> {
                     *dest,
                     tags::AURA,
                     self.iteration as u32,
-                    &wire,
+                    &job.wire,
                     self.cfg.chunk_bytes,
                 )
             });
         }
+        self.aura_jobs = jobs;
         self.aura_per_dest = per_dest;
         // Receive from every neighbor; decode in place (pooled buffers,
         // in-buffer delta restore) and register aura agents in the NSG.
+        let mut wire = std::mem::take(&mut self.wire_scratch);
         for &src in &self.neighbors_cache {
             self.metrics.timed_cpu(Op::Transfer, || {
                 self.reassembler.recv_batched_into(&mut self.comm, src, tags::AURA, &mut wire)
@@ -619,17 +632,28 @@ impl<M: Model> RankSim<M> {
 
     fn sort_phase(&mut self) {
         let t = crate::util::timing::CpuTimer::start();
+        // Sort with the NSG's own quantization — origin, cell size and
+        // per-axis clamped dims — so slot order lands exactly in
+        // ascending Morton cell order, the precondition for the parallel
+        // wholesale rebuild below.
         self.rm
-            .sort_by_position(self.grid.whole().min, self.model.interaction_radius());
-        // Local ids changed: rebuild the NSG's owned entries. (This is
-        // also the point where deserialized-buffer memory is reclaimed —
-        // the §2.2.1 deallocation story.)
-        let whole = self.grid.whole();
-        let mut nsg = NeighborSearchGrid::new(whole, self.model.interaction_radius());
-        for a in self.rm.iter() {
-            nsg.add(NsgEntry::Owned(a.local_id), a.position);
-        }
-        self.nsg = nsg;
+            .sort_by_grid(self.grid.whole().min, self.nsg.cell_size(), self.nsg.dims());
+        // Local ids changed: rebuild the NSG's owned entries in place —
+        // workers bin disjoint Morton cell ranges and the arenas keep
+        // their capacity (the seed path allocated a brand-new grid here
+        // every sort; the §2.2.1 buffer-memory reclamation now happens
+        // continuously through the ViewPool recycle loop instead).
+        self.ids_scratch.clear();
+        self.rm.collect_ids(&mut self.ids_scratch);
+        let cpu = self.nsg.rebuild_owned(&self.ids_scratch, self.rm.positions(), &self.pool);
+        // sort_by_grid uses the grid's own quantization, so the sharded
+        // path must engage; a fallback here means the sort key and the
+        // cell map drifted apart (see morton3_in_grid).
+        debug_assert!(
+            self.nsg.last_rebuild_was_parallel() || self.rm.is_empty(),
+            "post-sort NSG rebuild unexpectedly took the serial fallback"
+        );
+        self.pool_cpu_secs += cpu;
         self.metrics.add_op(Op::NsgUpdate, t.elapsed_secs());
     }
 

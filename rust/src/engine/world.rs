@@ -8,6 +8,14 @@
 //! like owned ones: a contiguous column read instead of a per-entry
 //! `(source, slot, is_view)` indirection plus an enum decode per access.
 //! Only the ROOT IO baseline materializes owned copies.
+//!
+//! [`World`] is the façade models program against: neighbor queries
+//! resolve through the Morton-indexed NSG and read attributes from the
+//! `ResourceManager` / [`AuraStore`] SoA columns, mutations go through
+//! spawn/removal queues and the boundary-applying
+//! [`World::move_agent`], and read-only phases can fork-join on the
+//! rank's pool via [`World::par_chunks`] (results are deterministic for
+//! any thread count — see `ARCHITECTURE.md`, "Determinism contract").
 
 use crate::core::agent::{Agent, AgentKind};
 use crate::core::ids::LocalId;

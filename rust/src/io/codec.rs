@@ -17,6 +17,7 @@ use super::{lz4, root_io, ta_io};
 use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
+use crate::engine::pool::ThreadPool;
 use std::collections::HashMap;
 
 /// Which serializer to run (Fig. 10's comparison axis).
@@ -181,15 +182,98 @@ fn finish_wire(
     wire.push(kind.code() | if compressed { 0x80 } else { 0 });
     wire.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     if compressed {
-        let t1 = std::time::Instant::now();
+        // Thread-CPU clock, not wall clock: encodes may run on pool
+        // workers that time-slice against each other, and the Fig. 10/11
+        // op breakdowns must not count preemption stalls.
+        let t1 = crate::util::timing::CpuTimer::start();
         lz4::compress_into(payload, wire, lz);
-        stats.compress_secs = t1.elapsed().as_secs_f64();
+        stats.compress_secs = t1.elapsed_secs();
     } else {
         // The raw-body copy is transport staging, not compression work —
         // keep it out of the Op::Compress bucket like the seed pipeline.
         wire.extend_from_slice(payload);
     }
     stats.wire_bytes = wire.len();
+}
+
+/// Per-destination output slot for [`Codec::encode_rm_parallel`]: the
+/// reused wire buffer plus that message's encode stats.
+#[derive(Default)]
+pub struct AuraEncodeJob {
+    pub wire: Vec<u8>,
+    pub stats: EncodeStats,
+}
+
+/// Encode the agents selected by `ids` on one already-created channel —
+/// the body of [`Codec::encode_rm_into`], split out so
+/// [`Codec::encode_rm_parallel`] can run it on pool workers over
+/// disjoint channels. Everything it mutates is per-channel state, so
+/// encodes on different channels are independent and the output bytes
+/// cannot depend on which worker (or how many) ran them.
+fn encode_one_rm(
+    serializer: SerializerKind,
+    compression: Compression,
+    ch: &mut TxChannel,
+    rm: &ResourceManager,
+    ids: &[LocalId],
+    wire: &mut Vec<u8>,
+) -> EncodeStats {
+    let mut stats = EncodeStats::default();
+    // Thread-CPU clock (see `finish_wire`): this body runs on pool
+    // workers under `encode_rm_parallel`.
+    let t0 = crate::util::timing::CpuTimer::start();
+    match serializer {
+        SerializerKind::RootIo => {
+            // The generic baseline honestly keeps its per-object walk.
+            let payload =
+                root_io::serialize(ids.iter().map(|&id| rm.get(id).expect("stale aura id")));
+            stats.serialize_secs = t0.elapsed_secs();
+            finish_wire(
+                compression,
+                SerializerKind::RootIo.code(),
+                DeltaKind::Full,
+                &payload,
+                &mut ch.lz,
+                wire,
+                &mut stats,
+            );
+        }
+        SerializerKind::TaIo => {
+            let cols = rm.columns();
+            let kind = match compression {
+                Compression::Lz4Delta { period } => {
+                    ch.delta.period = period;
+                    ch.delta.encode_cols_into(
+                        &cols,
+                        ids,
+                        |s| rm.behaviors_of_slot(s),
+                        &mut ch.payload,
+                    )
+                }
+                _ => {
+                    ta_io::serialize_columns_into(
+                        &cols,
+                        ids,
+                        |s| rm.behaviors_of_slot(s),
+                        &mut ch.payload,
+                    );
+                    DeltaKind::Full
+                }
+            };
+            stats.serialize_secs = t0.elapsed_secs();
+            let TxChannel { payload, lz, .. } = ch;
+            finish_wire(
+                compression,
+                SerializerKind::TaIo.code(),
+                kind,
+                payload.as_slice(),
+                lz,
+                wire,
+                &mut stats,
+            );
+        }
+    }
+    stats
 }
 
 /// Stateful codec for one rank: owns the per-channel delta references and
@@ -288,63 +372,80 @@ impl Codec {
         ids: &[LocalId],
         wire: &mut Vec<u8>,
     ) -> EncodeStats {
-        let mut stats = EncodeStats::default();
-        let t0 = std::time::Instant::now();
+        let serializer = self.serializer;
         let compression = self.compression;
-        match self.serializer {
-            SerializerKind::RootIo => {
-                // The generic baseline honestly keeps its per-object walk.
-                let payload =
-                    root_io::serialize(ids.iter().map(|&id| rm.get(id).expect("stale aura id")));
-                stats.serialize_secs = t0.elapsed().as_secs_f64();
-                let ch = self.tx.entry(key).or_default();
-                finish_wire(
-                    compression,
-                    SerializerKind::RootIo.code(),
-                    DeltaKind::Full,
-                    &payload,
-                    &mut ch.lz,
-                    wire,
-                    &mut stats,
-                );
+        let ch = self.tx.entry(key).or_default();
+        encode_one_rm(serializer, compression, ch, rm, ids, wire)
+    }
+
+    /// Run one [`Codec::encode_rm_into`] per destination **in parallel**
+    /// on the rank's thread pool (ROADMAP "parallel aura encode"): the
+    /// per-destination encodes are independent — each touches only its
+    /// own channel's delta reference, payload buffer and LZ4 scratch —
+    /// so they fan out as pool jobs while the caller afterwards drains
+    /// `jobs` and issues the sends in destination order. Wire bytes are
+    /// byte-identical to the serial path for every thread count, because
+    /// the per-channel encode body is literally the same code over the
+    /// same per-channel state.
+    ///
+    /// `jobs` is caller-owned scratch aligned with `dests` (wire-buffer
+    /// capacity is reused across iterations). The dispatch itself builds
+    /// two transient `dests.len()`-element vectors of channel handles per
+    /// call — bounded by the neighbor-rank count (≤ 26 for box-shaped
+    /// partitions), never by data volume; the payload/wire buffers all
+    /// cycle. Returns the region's critical-path CPU seconds for the
+    /// engine's parallel-runtime accounting.
+    pub fn encode_rm_parallel(
+        &mut self,
+        tag: u32,
+        rm: &ResourceManager,
+        dests: &[(u32, Vec<LocalId>)],
+        jobs: &mut Vec<AuraEncodeJob>,
+        pool: &ThreadPool,
+    ) -> f64 {
+        jobs.resize_with(dests.len(), AuraEncodeJob::default);
+        if dests.is_empty() {
+            return 0.0;
+        }
+        for (dest, _) in dests {
+            self.tx.entry((*dest, tag)).or_default();
+        }
+        // Disjoint `&mut` channel refs, reordered to match `dests` (the
+        // map hands them out disjointly by construction; destinations
+        // must be unique, as neighbor-rank sets are).
+        let mut chans: Vec<Option<&mut TxChannel>> = Vec::new();
+        chans.resize_with(dests.len(), || None);
+        for (key, ch) in self.tx.iter_mut() {
+            if key.1 != tag {
+                continue;
             }
-            SerializerKind::TaIo => {
-                let ch = self.tx.entry(key).or_default();
-                let cols = rm.columns();
-                let kind = match compression {
-                    Compression::Lz4Delta { period } => {
-                        ch.delta.period = period;
-                        ch.delta.encode_cols_into(
-                            &cols,
-                            ids,
-                            |s| rm.behaviors_of_slot(s),
-                            &mut ch.payload,
-                        )
-                    }
-                    _ => {
-                        ta_io::serialize_columns_into(
-                            &cols,
-                            ids,
-                            |s| rm.behaviors_of_slot(s),
-                            &mut ch.payload,
-                        );
-                        DeltaKind::Full
-                    }
-                };
-                stats.serialize_secs = t0.elapsed().as_secs_f64();
-                let TxChannel { payload, lz, .. } = ch;
-                finish_wire(
-                    compression,
-                    SerializerKind::TaIo.code(),
-                    kind,
-                    payload.as_slice(),
-                    lz,
-                    wire,
-                    &mut stats,
-                );
+            if let Some(i) = dests.iter().position(|(d, _)| *d == key.0) {
+                debug_assert!(chans[i].is_none(), "duplicate destination in aura encode batch");
+                chans[i] = Some(ch);
             }
         }
-        stats
+        struct Work<'a> {
+            ids: &'a [LocalId],
+            ch: &'a mut TxChannel,
+            wire: &'a mut Vec<u8>,
+            stats: &'a mut EncodeStats,
+        }
+        let mut work: Vec<Work<'_>> = chans
+            .into_iter()
+            .zip(dests)
+            .zip(jobs.iter_mut())
+            .map(|((ch, (_, ids)), job)| Work {
+                ids,
+                ch: ch.expect("channel created above"),
+                wire: &mut job.wire,
+                stats: &mut job.stats,
+            })
+            .collect();
+        let serializer = self.serializer;
+        let compression = self.compression;
+        pool.for_each_mut_timed(&mut work, |_, w| {
+            *w.stats = encode_one_rm(serializer, compression, w.ch, rm, w.ids, w.wire);
+        })
     }
 
     /// Decode a message received on (peer, tag).
@@ -541,6 +642,55 @@ mod tests {
                 by_iter.encode_into((1, 0), ags.iter(), &mut wire_iter);
                 by_cols.encode_rm_into((1, 0), &rm, &ids, &mut wire_cols);
                 assert_eq!(wire_iter, wire_cols, "{}: iteration {iter}", comp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_encode_bytes_identical_to_serial_at_any_thread_count() {
+        use crate::core::resource_manager::ResourceManager;
+        use crate::engine::pool::ThreadPool;
+        for comp in [Compression::None, Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let mut ags = agents(60, 31);
+            let mut rm = ResourceManager::new(0);
+            let ids: Vec<_> = ags.iter().map(|a| rm.add(a.clone())).collect();
+            // Three destinations with overlapping id subsets, as the aura
+            // selection produces.
+            let dests: Vec<(u32, Vec<_>)> = vec![
+                (1, ids[..40].to_vec()),
+                (2, ids[20..].to_vec()),
+                (5, ids.iter().copied().step_by(3).collect()),
+            ];
+            let mut serial = Codec::new(SerializerKind::TaIo, comp);
+            let mut codecs: Vec<Codec> =
+                (0..3).map(|_| Codec::new(SerializerKind::TaIo, comp)).collect();
+            let mut jobs_per_codec: Vec<Vec<AuraEncodeJob>> = vec![Vec::new(), Vec::new(), Vec::new()];
+            for iter in 0..6 {
+                for (a, &id) in ags.iter_mut().zip(&ids) {
+                    a.position.x += 0.5;
+                    assert!(rm.set_position(id, a.position));
+                }
+                // Reference: the serial per-destination path.
+                let mut want: Vec<Vec<u8>> = Vec::new();
+                for (dest, sel) in &dests {
+                    let mut wire = Vec::new();
+                    serial.encode_rm_into((*dest, 7), &rm, sel, &mut wire);
+                    want.push(wire);
+                }
+                // Parallel path at 1, 2 and 8 threads: bytes must match
+                // exactly, including the evolving delta references.
+                for (ti, threads) in [1usize, 2, 8].into_iter().enumerate() {
+                    let pool = ThreadPool::new(threads);
+                    codecs[ti].encode_rm_parallel(7, &rm, &dests, &mut jobs_per_codec[ti], &pool);
+                    for (j, job) in jobs_per_codec[ti].iter().enumerate() {
+                        assert_eq!(
+                            job.wire, want[j],
+                            "{}: iter {iter}, dest {j}, {threads} threads",
+                            comp.name()
+                        );
+                        assert!(job.stats.raw_bytes > 0);
+                    }
+                }
             }
         }
     }

@@ -23,12 +23,30 @@
 //!   pipeline survives in [`delta::seed`] as the equivalence oracle.
 //! * [`codec`] — the configurable sender/receiver pipeline
 //!   (TA IO | ROOT IO) × (none | LZ4 | LZ4+delta) used by the engine.
-//!   Per-channel buffer ownership: each tx channel owns its payload
-//!   `AlignedBuf` (double-buffered against the delta reference on
+//!   Per-channel buffer ownership: each `(peer, tag)` tx channel owns its
+//!   payload `AlignedBuf` (double-buffered against the delta reference on
 //!   refresh) and LZ4 scratch; callers own the wire vectors
-//!   ([`codec::Codec::encode_rm_into`] and friends write into them), and
-//!   the receive side draws aligned buffers from a caller-held
-//!   [`ta_io::ViewPool`] that the `AuraStore` recycles into.
+//!   ([`codec::Codec::encode_rm_into`] and friends write into them).
+//!   Because all sender state is per-channel, the per-destination aura
+//!   encodes fan out on the rank's thread pool
+//!   ([`codec::Codec::encode_rm_parallel`]) with byte-identical output
+//!   at any thread count.
+//!
+//! # Receive path (zero-copy end to end)
+//!
+//! A received wire message is decompressed **once** into an aligned
+//! buffer drawn from a caller-held [`ta_io::ViewPool`]
+//! ([`codec::Codec::decode_pooled`]); delta restore and placeholder
+//! defragmentation happen in place; the resulting [`ta_io::TaView`]
+//! serves agent reads from those very bytes. For the aura, the engine's
+//! `AuraStore` (`engine::world`) mirrors the three hot attributes into
+//! flat columns straight from the view and keeps the buffer alive for
+//! the iteration, then recycles it into the same pool
+//! (`AuraStore::recycle_into`) — buffers cycle pool → decode → aura →
+//! pool, so the steady-state exchange allocates nothing. Migration
+//! ingest instead drains owned `Agent`s out of the view
+//! ([`codec::Decoded::drain_agents_into`]) and recycles the storage
+//! immediately.
 
 pub mod buffer;
 pub mod codec;

@@ -13,7 +13,9 @@
 //!
 //! 1. **Aura update** — agents near rank boundaries are serialized with
 //!    [TeraAgent IO](io::ta_io) (optionally [delta-encoded](io::delta) and
-//!    [LZ4-compressed](io::lz4)) and exchanged with neighbor ranks.
+//!    [LZ4-compressed](io::lz4)) and exchanged with neighbor ranks; the
+//!    per-destination encodes run in parallel on the rank's
+//!    [thread pool](engine::pool).
 //! 2. **Agent operations** — each agent's behaviors run against its local
 //!    environment (neighbors from the [NSG](space::nsg), including aura
 //!    agents). The mechanical hot-spot optionally executes through an
@@ -22,8 +24,16 @@
 //!    the new authoritative rank.
 //! 4. **Load balancing** — periodic [RCB](balance::rcb) or
 //!    [diffusive](balance::diffusive) repartitioning.
+//! 5. **Agent sorting** (periodic, §2.5) — agents reorder along the Morton
+//!    curve shared with the [NSG](space::nsg)'s Z-order cell indexing
+//!    ([`sort_by_grid`](core::resource_manager::ResourceManager::sort_by_grid)),
+//!    and the spatial index is rebuilt wholesale in parallel
+//!    ([`rebuild_owned`](space::NeighborSearchGrid::rebuild_owned)).
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index.
+//! A paper-to-code map — which module implements which design element of
+//! the paper, plus an end-to-end walkthrough of one iteration — lives in
+//! `ARCHITECTURE.md` at the repo root. `DESIGN.md` holds the full system
+//! inventory and the experiment index.
 
 pub mod balance;
 pub mod cli;

@@ -3,6 +3,17 @@
 //! artifacts in `artifacts/*.hlo.txt` are produced once by
 //! `python/compile/aot.py` (`make artifacts`) and the rust binary is
 //! self-contained afterwards.
+//!
+//! * [`mechanics`] — the fixed-shape gather/batch layer feeding the
+//!   kernel: `MechanicsBatch` (AOT_N agents × AOT_K neighbor pads), the
+//!   bounded-heap `KNearest` selection with a layout-independent total
+//!   order (what makes the gather deterministic for any NSG layout or
+//!   thread count), and the native oracle `native_mechanics_into`.
+//! * [`pjrt`] — artifact loading and execution through the PJRT C API.
+//! * [`service`] — a dedicated thread owning the (non-`Send`) PJRT
+//!   runtime; rank threads talk to it through a cloneable
+//!   [`MechanicsHandle`] channel.
+//! * [`sir`] — the epidemiology state-transition kernel service.
 
 pub mod mechanics;
 pub mod pjrt;

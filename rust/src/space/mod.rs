@@ -1,5 +1,20 @@
 //! Simulation space: bounds, boundary conditions, the uniform
 //! neighbor-search grid (NSG), and the distributed partitioning grid.
+//!
+//! Two grids with different jobs coexist (§2.1 vs §2.5):
+//!
+//! * [`partition::PartitionGrid`] divides the **whole** simulation space
+//!   into coarse partitioning boxes assigned to ranks — ownership,
+//!   aura-band rank lookup, load-balancing weight field. Replicated on
+//!   every rank, so owner lookups are local.
+//! * [`nsg::NeighborSearchGrid`] is the per-rank **spatial index** for
+//!   neighbor queries: Morton-indexed cells over a flat bucket arena,
+//!   updated incrementally every iteration and rebuilt wholesale (in
+//!   parallel) after the periodic Morton agent sort.
+//!
+//! [`space::SimulationSpace`] carries the whole/local bounds and the
+//! interaction radius; [`boundary::BoundaryCondition`] applies the
+//! closed/toroidal/open edge rules.
 
 pub mod boundary;
 pub mod nsg;

@@ -38,6 +38,44 @@
 //! * `aura_handles[aura_index] = bucket·CAP+slot` (truncated wholesale by
 //!   [`clear_aura`]).
 //!
+//! # Morton (Z-order) cell indexing
+//!
+//! Cell indices are **Morton codes**, not row-major offsets: the grid
+//! coordinate bits are interleaved (x₀y₀z₀x₁y₁z₁…, axes with fewer bits
+//! dropping out at high levels), so cells that are close in space are
+//! close in the cell table and in the bucket arena. Two things fall out:
+//!
+//! * A 3×3×3 neighbor stencil resolves to a handful of short contiguous
+//!   index runs instead of 9 widely separated row strides; queries visit
+//!   the stencil cells in ascending Morton order (see `visit_cells`), so
+//!   chain walks stream the cell table mostly forward.
+//! * [`ResourceManager::sort_by_grid`] orders agents by the *same* curve
+//!   (same origin, quantization and per-axis clamp — see
+//!   [`morton3_in_grid`]), so after the periodic sort, slot order, cell
+//!   order and bucket order all coincide and the wholesale
+//!   [`rebuild_owned`] can bin slot ranges straight onto cell ranges.
+//!
+//! Per-axis dimensions are padded to powers of two (the Morton index
+//! range is `2^(bx+by+bz)`), trading ≤ 8× cell-table head slack — heads
+//! are 12 bytes — for an index that is three table lookups and two ORs.
+//! Extreme domains degrade rather than fail: axes cap at 2^21 cells
+//! (matching the sort key's interleave width) and the cell edge doubles
+//! until the padded index fits 31 bits — coarser/merged cells scan more
+//! candidates per query but stay correct, since the cell edge only ever
+//! grows past the interaction radius.
+//!
+//! # Parallel rebuild
+//!
+//! [`rebuild_owned`] rebuilds the owned side wholesale after the periodic
+//! agent sort (§2.5) on the rank's [`ThreadPool`], BioDynaMo-style: slot
+//! ranges are cut at Morton-cell boundaries, each worker fills **private**
+//! bucket chains for its disjoint cell range, and the shards are spliced
+//! into the shared arena by rebasing chain links — no locks, no atomics.
+//! Every cell's chain is filled in ascending slot order by exactly one
+//! worker, so the resulting chains (and therefore all query results) are
+//! bit-identical for every thread count, and identical to serial
+//! insertion.
+//!
 //! # Invariants
 //!
 //! 1. At most one live entry per owned slot `index`; re-adding an index
@@ -54,9 +92,15 @@
 //!    (queries never chase agent storage).
 //!
 //! [`clear_aura`]: NeighborSearchGrid::clear_aura
+//! [`rebuild_owned`]: NeighborSearchGrid::rebuild_owned
+//! [`ResourceManager::sort_by_grid`]: crate::core::resource_manager::ResourceManager::sort_by_grid
+//! [`morton3_in_grid`]: crate::core::resource_manager::morton3_in_grid
+//! [`ThreadPool`]: crate::engine::pool::ThreadPool
 
 use super::space::Aabb;
 use crate::core::ids::LocalId;
+use crate::core::resource_manager::grid_axis_bin;
+use crate::engine::pool::ThreadPool;
 use crate::util::Vec3;
 
 /// What an NSG entry points at: an owned agent (by local id) or an aura
@@ -145,12 +189,191 @@ fn pack(bucket: usize, slot: usize) -> u32 {
     (bucket * BUCKET_CAP + slot) as u32
 }
 
-/// Uniform grid over (a margin-inflated copy of) the local bounds.
+/// Interleave bits needed to address `d` cells along one axis.
+fn bits_for(d: usize) -> u32 {
+    if d <= 1 {
+        0
+    } else {
+        usize::BITS - (d - 1).leading_zeros()
+    }
+}
+
+/// Morton shuffle table for one axis: entry `c` is coordinate `c` with
+/// its bits spread to the axis's interleave positions, so a cell index is
+/// the OR of three table entries. Bit level `i` of an axis lands after
+/// every lower level's bits (each axis with more than `i` levels
+/// contributes one per level) and after the same-level bits of axes
+/// ordered before it (x before y before z) — the standard Morton layout
+/// with exhausted axes squeezed out. Squeezing removes bit positions that
+/// are zero for every cell in the box, so index *order* matches the full
+/// 21-bit-per-axis [`morton3`] key order on the clamped domain (the
+/// property [`NeighborSearchGrid::rebuild_owned`] relies on), while the
+/// index *range* stays dense: the map is a bijection onto
+/// `0..2^(bx+by+bz)`.
+///
+/// [`morton3`]: crate::core::resource_manager::morton3
+fn axis_table(axis: usize, dim: usize, bits: [u32; 3]) -> Vec<u32> {
+    // Destination bit position for each source bit level of `axis`.
+    let mut dest = [0u32; 32];
+    let mut cursor = 0u32;
+    let max_bits = bits[0].max(bits[1]).max(bits[2]);
+    for level in 0..max_bits {
+        for (a, &b) in bits.iter().enumerate() {
+            if level < b {
+                if a == axis {
+                    dest[level as usize] = cursor;
+                }
+                cursor += 1;
+            }
+        }
+    }
+    (0..dim)
+        .map(|c| {
+            let mut m = 0u32;
+            for (level, &d) in dest.iter().enumerate().take(bits[axis] as usize) {
+                if (c >> level) & 1 == 1 {
+                    m |= 1 << d;
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+/// Geometry + Z-order index map of the grid: positions → grid
+/// coordinates → Morton cell indices. Split out of the grid so parallel
+/// passes can share it (`&CellMap` is `Sync`) while the arenas are being
+/// rebuilt.
 #[derive(Debug)]
-pub struct NeighborSearchGrid {
+struct CellMap {
     bounds: Aabb,
     cell: f64,
     dims: [usize; 3],
+    mx: Vec<u32>,
+    my: Vec<u32>,
+    mz: Vec<u32>,
+    /// Padded (power-of-two per axis) cell-table size, `2^(bx+by+bz)`.
+    n_cells: usize,
+}
+
+impl CellMap {
+    fn new(bounds: Aabb, cell: f64) -> Self {
+        assert!(cell > 0.0, "NSG cell size must be positive");
+        let e = bounds.extent();
+        // Axes are capped at 2^21 cells — the Morton key width per axis
+        // (`morton3_in_grid` saturates there too, keeping the sort key
+        // and the cell map aligned). Positions beyond the cap merge into
+        // the outermost cells, exactly like the out-of-bounds clamp. If
+        // the padded index still exceeds 31 bits (a compact multi-GB
+        // grid), the cell edge is doubled until it fits: cells only ever
+        // grow past the interaction radius, so the 27-stencil stays
+        // correct — queries just scan denser cells. Either degradation
+        // trades speed for footprint instead of refusing to run.
+        const AXIS_MAX: usize = 1 << 21;
+        let mut cell = cell;
+        let (dims, bits, total) = loop {
+            let dims = [
+                ((e.x / cell).ceil() as usize).clamp(1, AXIS_MAX),
+                ((e.y / cell).ceil() as usize).clamp(1, AXIS_MAX),
+                ((e.z / cell).ceil() as usize).clamp(1, AXIS_MAX),
+            ];
+            let bits = [bits_for(dims[0]), bits_for(dims[1]), bits_for(dims[2])];
+            let total = bits[0] + bits[1] + bits[2];
+            if total <= 31 {
+                break (dims, bits, total);
+            }
+            cell *= 2.0;
+        };
+        CellMap {
+            bounds,
+            cell,
+            dims,
+            mx: axis_table(0, dims[0], bits),
+            my: axis_table(1, dims[1], bits),
+            mz: axis_table(2, dims[2], bits),
+            n_cells: 1usize << total,
+        }
+    }
+
+    /// Grid coordinates of a position (clamped to the grid, so positions
+    /// slightly outside land in the outermost cells). Quantization is
+    /// [`grid_axis_bin`] — the one formula shared with the agent sort
+    /// key, which the parallel rebuild's sortedness precondition rides
+    /// on.
+    ///
+    /// [`grid_axis_bin`]: crate::core::resource_manager::grid_axis_bin
+    #[inline]
+    fn coords_of(&self, p: Vec3) -> [usize; 3] {
+        let rel = p - self.bounds.min;
+        [
+            grid_axis_bin(rel.x, self.cell, self.dims[0]),
+            grid_axis_bin(rel.y, self.cell, self.dims[1]),
+            grid_axis_bin(rel.z, self.cell, self.dims[2]),
+        ]
+    }
+
+    /// Morton cell index of grid coordinates: three lookups, two ORs.
+    #[inline]
+    fn cell_index(&self, c: [usize; 3]) -> usize {
+        (self.mx[c[0]] | self.my[c[1]] | self.mz[c[2]]) as usize
+    }
+
+    #[inline]
+    fn cell_of(&self, p: Vec3) -> usize {
+        self.cell_index(self.coords_of(p))
+    }
+}
+
+/// In-place insertion sort — the stencil buffers are ≤ 64 nearly-sorted
+/// `u32`s, where this beats a general sort and allocates nothing.
+#[inline]
+fn sort_small(v: &mut [u32]) {
+    for i in 1..v.len() {
+        let x = v[i];
+        let mut j = i;
+        while j > 0 && v[j - 1] > x {
+            v[j] = v[j - 1];
+            j -= 1;
+        }
+        v[j] = x;
+    }
+}
+
+/// Uniform grid over (a margin-inflated copy of) the local bounds.
+///
+/// # Example: the engine's add → query → sort loop
+///
+/// ```
+/// use teraagent::core::agent::{Agent, CellType};
+/// use teraagent::core::resource_manager::ResourceManager;
+/// use teraagent::engine::pool::ThreadPool;
+/// use teraagent::space::{Aabb, NeighborSearchGrid, NsgEntry};
+/// use teraagent::util::Vec3;
+///
+/// let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(100.0));
+/// let mut rm = ResourceManager::new(0);
+/// let mut nsg = NeighborSearchGrid::new(bounds, 10.0);
+///
+/// // Add agents to the store and mirror them into the grid.
+/// for i in 0..64 {
+///     let p = Vec3::new((i % 8) as f64 * 12.0, (i / 8) as f64 * 12.0, 0.0);
+///     let id = rm.add(Agent::cell(p, 8.0, CellType::A));
+///     nsg.add(NsgEntry::Owned(id), p);
+/// }
+///
+/// // Radius query: visits the Morton-ordered cell stencil.
+/// let hits = nsg.neighbors_of(Vec3::new(12.0, 12.0, 0.0), 15.0, None);
+/// assert!(!hits.is_empty());
+///
+/// // Periodic Morton sort + parallel wholesale rebuild (§2.5).
+/// rm.sort_by_grid(bounds.min, nsg.cell_size(), nsg.dims());
+/// let ids = rm.ids();
+/// nsg.rebuild_owned(&ids, rm.positions(), &ThreadPool::new(4));
+/// assert_eq!(nsg.len(), 64);
+/// ```
+#[derive(Debug)]
+pub struct NeighborSearchGrid {
+    map: CellMap,
     cells: Vec<CellHead>,
     // Owned side: persistent arena + free list + dense handle table.
     owned_buckets: Vec<OwnedBucket>,
@@ -165,25 +388,31 @@ pub struct NeighborSearchGrid {
     /// reset list for `clear_aura`).
     aura_cells: Vec<u32>,
     aura_len: usize,
+    /// Per-slot Morton cell indices, reused across [`rebuild_owned`]
+    /// calls (capacity-reuse only).
+    ///
+    /// [`rebuild_owned`]: NeighborSearchGrid::rebuild_owned
+    rebuild_cells: Vec<u32>,
+    /// Whether the last [`rebuild_owned`] took the sharded parallel path
+    /// (false: serial fallback, or no rebuild yet).
+    ///
+    /// [`rebuild_owned`]: NeighborSearchGrid::rebuild_owned
+    rebuild_was_parallel: bool,
 }
 
 impl NeighborSearchGrid {
     /// Build an empty grid covering `bounds` with cubic cells of edge
     /// `cell` (must be ≥ the maximum interaction radius for correct
-    /// 27-cell neighbor queries).
+    /// 27-cell neighbor queries). Extreme domains degrade instead of
+    /// failing: axes cap at 2^21 cells and the edge doubles until the
+    /// padded Morton index fits 31 bits — both keep queries correct
+    /// (cells only grow); check [`cell_size`](Self::cell_size) for the
+    /// effective edge.
     pub fn new(bounds: Aabb, cell: f64) -> Self {
-        assert!(cell > 0.0, "NSG cell size must be positive");
-        let e = bounds.extent();
-        let dims = [
-            ((e.x / cell).ceil() as usize).max(1),
-            ((e.y / cell).ceil() as usize).max(1),
-            ((e.z / cell).ceil() as usize).max(1),
-        ];
-        let n = dims[0] * dims[1] * dims[2];
+        let map = CellMap::new(bounds, cell);
+        let n = map.n_cells;
         NeighborSearchGrid {
-            bounds,
-            cell,
-            dims,
+            map,
             cells: vec![EMPTY_CELL; n],
             owned_buckets: Vec::new(),
             owned_free: Vec::new(),
@@ -194,19 +423,33 @@ impl NeighborSearchGrid {
             aura_handles: Vec::new(),
             aura_cells: Vec::new(),
             aura_len: 0,
+            rebuild_cells: Vec::new(),
+            rebuild_was_parallel: false,
         }
     }
 
+    /// Did the last [`rebuild_owned`](Self::rebuild_owned) run the
+    /// sharded parallel path (vs. the serial fallback)? The fallback is
+    /// correctness-equivalent, so nothing else observes the difference —
+    /// this exists so tests (and profiling) can assert the fast path
+    /// actually engages for the engine's sorted post-`sort_by_grid`
+    /// snapshots and doesn't silently rot away.
+    pub fn last_rebuild_was_parallel(&self) -> bool {
+        self.rebuild_was_parallel
+    }
+
     pub fn cell_size(&self) -> f64 {
-        self.cell
+        self.map.cell
     }
 
     pub fn bounds(&self) -> Aabb {
-        self.bounds
+        self.map.bounds
     }
 
+    /// Logical grid dimensions (cells per axis, before the power-of-two
+    /// padding of the Morton index range).
     pub fn dims(&self) -> [usize; 3] {
-        self.dims
+        self.map.dims
     }
 
     /// Number of entries currently stored.
@@ -222,25 +465,61 @@ impl NeighborSearchGrid {
     /// slightly outside land in the outermost cells).
     #[inline]
     fn coords_of(&self, p: Vec3) -> [usize; 3] {
-        let rel = p - self.bounds.min;
-        let cv = |v: f64, d: usize| -> usize {
-            if v <= 0.0 {
-                0
-            } else {
-                ((v / self.cell) as usize).min(d - 1)
-            }
-        };
-        [cv(rel.x, self.dims[0]), cv(rel.y, self.dims[1]), cv(rel.z, self.dims[2])]
+        self.map.coords_of(p)
     }
 
+    /// Morton (Z-order) cell index of grid coordinates.
     #[inline]
     fn cell_index(&self, c: [usize; 3]) -> usize {
-        (c[2] * self.dims[1] + c[1]) * self.dims[0] + c[0]
+        self.map.cell_index(c)
     }
 
     #[inline]
     fn cell_of(&self, p: Vec3) -> usize {
-        self.cell_index(self.coords_of(p))
+        self.map.cell_of(p)
+    }
+
+    /// Visit the cell indices of the coordinate box `lo..=hi` (inclusive)
+    /// in **ascending Morton order** when the box is small — the common
+    /// 3×3×3 stencil and its radius-capped relatives — so chain walks
+    /// stream the cell table and the bucket arena mostly forward. Large
+    /// boxes (rare: region queries spanning the rank) fall back to
+    /// coordinate order. The visit order is a pure function of `lo`/`hi`,
+    /// never of grid contents, so query callback order stays
+    /// deterministic.
+    #[inline]
+    fn visit_cells(&self, lo: [usize; 3], hi: [usize; 3], mut f: impl FnMut(usize)) {
+        const SORT_MAX: usize = 64;
+        if hi[0] < lo[0] || hi[1] < lo[1] || hi[2] < lo[2] {
+            return; // degenerate box (e.g. an empty region query)
+        }
+        let count = (hi[0] - lo[0] + 1) * (hi[1] - lo[1] + 1) * (hi[2] - lo[2] + 1);
+        if count <= SORT_MAX {
+            let mut buf = [0u32; SORT_MAX];
+            let mut k = 0;
+            for cz in lo[2]..=hi[2] {
+                let bz = self.map.mz[cz];
+                for cy in lo[1]..=hi[1] {
+                    let byz = bz | self.map.my[cy];
+                    for cx in lo[0]..=hi[0] {
+                        buf[k] = byz | self.map.mx[cx];
+                        k += 1;
+                    }
+                }
+            }
+            sort_small(&mut buf[..k]);
+            for &ci in &buf[..k] {
+                f(ci as usize);
+            }
+        } else {
+            for cz in lo[2]..=hi[2] {
+                for cy in lo[1]..=hi[1] {
+                    for cx in lo[0]..=hi[0] {
+                        f(self.map.cell_index([cx, cy, cz]));
+                    }
+                }
+            }
+        }
     }
 
     /// Insert an entry. Panics in debug builds if the entry already exists.
@@ -316,6 +595,151 @@ impl NeighborSearchGrid {
         self.aura_used = 0;
         self.aura_handles.clear();
         self.aura_len = 0;
+    }
+
+    // ----- wholesale parallel rebuild --------------------------------------
+
+    /// Rebuild the owned side wholesale from a post-sort snapshot: `ids`
+    /// are the live local ids in slot order and `pos_of_slot` is the
+    /// position column indexed by slot (`ResourceManager::positions`).
+    /// All previous entries — owned *and* aura — are dropped; arena
+    /// capacity is kept (the seed path allocated a brand-new grid here
+    /// every sort).
+    ///
+    /// When the snapshot is dense (slot `k` holds index `k`, the
+    /// guaranteed layout after `ResourceManager::sort_by_grid`) and the
+    /// per-slot Morton cell indices are non-decreasing (guaranteed when
+    /// the sort used the grid's own quantization — [`morton3_in_grid`]
+    /// with this grid's origin, cell size and dims), the rebuild runs in
+    /// parallel on `pool`:
+    ///
+    /// 1. compute each slot's cell index (parallel, disjoint writes);
+    /// 2. cut the slot range at cell boundaries into one part per worker
+    ///    and fill **private** bucket chains per part (`build_shard`);
+    /// 3. splice the shards into the shared arena serially by rebasing
+    ///    bucket links, chain heads and handle refs.
+    ///
+    /// Each cell's chain is filled by exactly one worker in ascending
+    /// slot order, so chain contents — and therefore every query result —
+    /// are identical for every thread count and identical to serial
+    /// insertion. Inputs that violate density or sortedness fall back to
+    /// the serial incremental path (correctness is never data-dependent).
+    ///
+    /// Returns the critical-path CPU seconds of the parallel regions (the
+    /// engine's parallel-runtime accounting, see
+    /// [`ThreadPool::map_parts_timed`]).
+    ///
+    /// [`morton3_in_grid`]: crate::core::resource_manager::morton3_in_grid
+    pub fn rebuild_owned(
+        &mut self,
+        ids: &[LocalId],
+        pos_of_slot: &[Vec3],
+        pool: &ThreadPool,
+    ) -> f64 {
+        // Wholesale reset, keeping arena capacity.
+        self.clear_aura();
+        self.cells.fill(EMPTY_CELL);
+        self.owned_buckets.clear();
+        self.owned_free.clear();
+        self.owned_handles.clear();
+        self.owned_len = 0;
+        self.rebuild_was_parallel = false;
+        let n = ids.len();
+        if n == 0 {
+            return 0.0;
+        }
+
+        let dense = ids.iter().enumerate().all(|(k, id)| id.index as usize == k);
+        let table = if dense {
+            n
+        } else {
+            ids.iter().map(|id| id.index as usize).max().unwrap() + 1
+        };
+        self.owned_handles.resize(table, EMPTY_HANDLE);
+
+        // Pass 1 (parallel): Morton cell index of every slot.
+        let mut cells_of = std::mem::take(&mut self.rebuild_cells);
+        cells_of.clear();
+        cells_of.resize(n, 0);
+        let map = &self.map;
+        let mut cpu = pool.for_each_mut_timed(&mut cells_of, |k, c| {
+            *c = map.cell_of(pos_of_slot[ids[k].index as usize]) as u32;
+        });
+
+        let sorted = cells_of.windows(2).all(|w| w[0] <= w[1]);
+        if !dense || !sorted {
+            // Serial fallback: plain incremental insertion (identical
+            // chains — owned_push appends in the same order).
+            for (k, &id) in ids.iter().enumerate() {
+                let ci = cells_of[k] as usize;
+                let slot = OwnedSlot {
+                    pos: pos_of_slot[id.index as usize],
+                    index: id.index,
+                    reuse: id.reuse,
+                };
+                debug_assert!(self.owned_handles[id.index as usize].slot_ref == NIL);
+                let slot_ref = self.owned_push(ci, slot);
+                self.owned_handles[id.index as usize] =
+                    OwnedHandle { reuse: id.reuse, slot_ref };
+                self.owned_len += 1;
+            }
+            self.rebuild_cells = cells_of;
+            return cpu;
+        }
+
+        self.rebuild_was_parallel = true;
+        // Part boundaries: near-equal slot chunks advanced to the next
+        // cell change, so every cell belongs to exactly one worker.
+        let parts = pool.threads().min(n);
+        let chunk = n.div_ceil(parts);
+        let mut bounds_v: Vec<usize> = Vec::with_capacity(parts + 1);
+        bounds_v.push(0);
+        for t in 1..parts {
+            let mut b = (t * chunk).min(n);
+            while b < n && cells_of[b] == cells_of[b - 1] {
+                b += 1;
+            }
+            let last = *bounds_v.last().unwrap();
+            bounds_v.push(b.max(last));
+        }
+        bounds_v.push(n);
+
+        // Pass 2 (parallel): private bucket chains per part.
+        let cells_ref = &cells_of;
+        let (shards, shard_cpu) = pool.map_parts_timed(&bounds_v, |_, s, e| {
+            build_shard(s, e, cells_ref, ids, pos_of_slot)
+        });
+        cpu += shard_cpu;
+
+        // Pass 3 (serial splice): append each shard's buckets and rebase
+        // its chain links, heads and handle refs by the bucket offset.
+        for (t, shard) in shards.into_iter().enumerate() {
+            let base = self.owned_buckets.len() as u32;
+            for mut b in shard.buckets {
+                if b.next != NIL {
+                    b.next += base;
+                }
+                if b.prev != NIL {
+                    b.prev += base;
+                }
+                self.owned_buckets.push(b);
+            }
+            for (ci, head, tail) in shard.chains {
+                let cell = &mut self.cells[ci as usize];
+                debug_assert!(cell.owned_head == NIL, "cell built by two workers");
+                cell.owned_head = head + base;
+                cell.owned_tail = tail + base;
+            }
+            let s = bounds_v[t];
+            for (j, &r) in shard.refs.iter().enumerate() {
+                let id = ids[s + j];
+                self.owned_handles[id.index as usize] =
+                    OwnedHandle { reuse: id.reuse, slot_ref: r + base * BUCKET_CAP as u32 };
+            }
+        }
+        self.owned_len = n;
+        self.rebuild_cells = cells_of;
+        cpu
     }
 
     // ----- owned arena internals -------------------------------------------
@@ -495,44 +919,41 @@ impl NeighborSearchGrid {
             None => (NIL, 0, NIL),
         };
         // The grid cell may be larger than the radius; compute the cell
-        // range covering the query sphere.
+        // range covering the query sphere and stream its cells in Morton
+        // (memory) order.
         let lo = self.coords_of(center - Vec3::splat(radius));
         let hi = self.coords_of(center + Vec3::splat(radius));
-        for cz in lo[2]..=hi[2] {
-            for cy in lo[1]..=hi[1] {
-                for cx in lo[0]..=hi[0] {
-                    let head = self.cells[self.cell_index([cx, cy, cz])];
-                    let mut b = head.owned_head;
-                    while b != NIL {
-                        let bucket = &self.owned_buckets[b as usize];
-                        for s in &bucket.slots[..bucket.len as usize] {
-                            if s.index == ex_index && s.reuse == ex_reuse {
-                                continue;
-                            }
-                            let d2 = s.pos.distance_sq(center);
-                            if d2 <= r2 {
-                                f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos, d2);
-                            }
-                        }
-                        b = bucket.next;
+        self.visit_cells(lo, hi, |ci| {
+            let head = self.cells[ci];
+            let mut b = head.owned_head;
+            while b != NIL {
+                let bucket = &self.owned_buckets[b as usize];
+                for s in &bucket.slots[..bucket.len as usize] {
+                    if s.index == ex_index && s.reuse == ex_reuse {
+                        continue;
                     }
-                    let mut b = head.aura_head;
-                    while b != NIL {
-                        let bucket = &self.aura_buckets[b as usize];
-                        for s in &bucket.slots[..bucket.len as usize] {
-                            if s.aura == NIL || s.aura == ex_aura {
-                                continue;
-                            }
-                            let d2 = s.pos.distance_sq(center);
-                            if d2 <= r2 {
-                                f(NsgEntry::Aura(s.aura), s.pos, d2);
-                            }
-                        }
-                        b = bucket.next;
+                    let d2 = s.pos.distance_sq(center);
+                    if d2 <= r2 {
+                        f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos, d2);
                     }
                 }
+                b = bucket.next;
             }
-        }
+            let mut b = head.aura_head;
+            while b != NIL {
+                let bucket = &self.aura_buckets[b as usize];
+                for s in &bucket.slots[..bucket.len as usize] {
+                    if s.aura == NIL || s.aura == ex_aura {
+                        continue;
+                    }
+                    let d2 = s.pos.distance_sq(center);
+                    if d2 <= r2 {
+                        f(NsgEntry::Aura(s.aura), s.pos, d2);
+                    }
+                }
+                b = bucket.next;
+            }
+        });
     }
 
     /// Collect neighbors within radius (convenience for tests/models).
@@ -551,33 +972,29 @@ impl NeighborSearchGrid {
     pub fn for_each_in_region(&self, region: &Aabb, mut f: impl FnMut(NsgEntry, Vec3)) {
         let lo = self.coords_of(region.min);
         let hi = self.coords_of(region.max - Vec3::splat(1e-12));
-        for cz in lo[2]..=hi[2] {
-            for cy in lo[1]..=hi[1] {
-                for cx in lo[0]..=hi[0] {
-                    let head = self.cells[self.cell_index([cx, cy, cz])];
-                    let mut b = head.owned_head;
-                    while b != NIL {
-                        let bucket = &self.owned_buckets[b as usize];
-                        for s in &bucket.slots[..bucket.len as usize] {
-                            if region.contains(s.pos) {
-                                f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos);
-                            }
-                        }
-                        b = bucket.next;
-                    }
-                    let mut b = head.aura_head;
-                    while b != NIL {
-                        let bucket = &self.aura_buckets[b as usize];
-                        for s in &bucket.slots[..bucket.len as usize] {
-                            if s.aura != NIL && region.contains(s.pos) {
-                                f(NsgEntry::Aura(s.aura), s.pos);
-                            }
-                        }
-                        b = bucket.next;
+        self.visit_cells(lo, hi, |ci| {
+            let head = self.cells[ci];
+            let mut b = head.owned_head;
+            while b != NIL {
+                let bucket = &self.owned_buckets[b as usize];
+                for s in &bucket.slots[..bucket.len as usize] {
+                    if region.contains(s.pos) {
+                        f(NsgEntry::Owned(LocalId::new(s.index, s.reuse)), s.pos);
                     }
                 }
+                b = bucket.next;
             }
-        }
+            let mut b = head.aura_head;
+            while b != NIL {
+                let bucket = &self.aura_buckets[b as usize];
+                for s in &bucket.slots[..bucket.len as usize] {
+                    if s.aura != NIL && region.contains(s.pos) {
+                        f(NsgEntry::Aura(s.aura), s.pos);
+                    }
+                }
+                b = bucket.next;
+            }
+        });
     }
 
     /// Entries inside a region (convenience).
@@ -598,7 +1015,10 @@ impl NeighborSearchGrid {
         let aura = self.aura_buckets.capacity() * std::mem::size_of::<AuraBucket>()
             + self.aura_handles.capacity() * 4
             + self.aura_cells.capacity() * 4;
-        (cells + owned + aura) as u64
+        let morton = (self.map.mx.capacity() + self.map.my.capacity() + self.map.mz.capacity()
+            + self.rebuild_cells.capacity())
+            * 4;
+        (cells + owned + aura + morton) as u64
     }
 
     /// Arena occupancy: (owned buckets in use, owned buckets free, aura
@@ -611,6 +1031,63 @@ impl NeighborSearchGrid {
             self.aura_buckets.len(),
         )
     }
+}
+
+/// Private per-worker arena for [`NeighborSearchGrid::rebuild_owned`]:
+/// bucket chains for a disjoint Morton range of cells, with bucket links
+/// and slot refs in *local* indices (rebased when spliced into the grid).
+struct Shard {
+    buckets: Vec<OwnedBucket>,
+    /// `(cell index, local head bucket, local tail bucket)` per chain.
+    chains: Vec<(u32, u32, u32)>,
+    /// Local packed slot ref per input slot, in input order.
+    refs: Vec<u32>,
+}
+
+/// Fill one worker's shard from the slot range `s..e`. `cells_of[k]` is
+/// non-decreasing over the range (checked by the caller), so a chain ends
+/// exactly when the cell index changes; chains replicate `owned_push`'s
+/// append discipline (every non-tail bucket full), which is what makes
+/// the spliced result identical to serial insertion.
+fn build_shard(s: usize, e: usize, cells_of: &[u32], ids: &[LocalId], pos: &[Vec3]) -> Shard {
+    let mut sh = Shard {
+        buckets: Vec::new(),
+        chains: Vec::new(),
+        refs: Vec::with_capacity(e - s),
+    };
+    for k in s..e {
+        let ci = cells_of[k];
+        let id = ids[k];
+        let new_chain = match sh.chains.last() {
+            Some(&(c, _, _)) => c != ci,
+            None => true,
+        };
+        if new_chain {
+            let b = sh.buckets.len() as u32;
+            sh.buckets.push(EMPTY_OWNED_BUCKET);
+            sh.chains.push((ci, b, b));
+        }
+        let chain = sh.chains.last_mut().unwrap();
+        let mut tail = chain.2;
+        if sh.buckets[tail as usize].len as usize == BUCKET_CAP {
+            let b = sh.buckets.len() as u32;
+            sh.buckets.push(EMPTY_OWNED_BUCKET);
+            sh.buckets[b as usize].prev = tail;
+            sh.buckets[tail as usize].next = b;
+            chain.2 = b;
+            tail = b;
+        }
+        let bucket = &mut sh.buckets[tail as usize];
+        let si = bucket.len as usize;
+        bucket.slots[si] = OwnedSlot {
+            pos: pos[id.index as usize],
+            index: id.index,
+            reuse: id.reuse,
+        };
+        bucket.len += 1;
+        sh.refs.push(tail * BUCKET_CAP as u32 + si as u32);
+    }
+    sh
 }
 
 #[cfg(test)]
@@ -911,6 +1388,226 @@ mod tests {
         // Stale-generation remove is refused.
         assert!(!g.remove(NsgEntry::Owned(LocalId::new(3, 0))));
         assert!(g.remove(NsgEntry::Owned(LocalId::new(3, 1))));
+    }
+
+    // ----- Morton cell indexing --------------------------------------------
+
+    #[test]
+    fn morton_index_bijective_and_covers_row_major_range() {
+        // Property: for randomized grids (non-power-of-two and degenerate
+        // dims included), the Z-order `cell_index` visits exactly the same
+        // set of cells as the seed row-major indexing — every coordinate
+        // triple maps to a unique index inside the padded table, and the
+        // number of distinct indices equals the row-major cell count.
+        check("morton cell_index is a bijection", 40, |g: &mut Gen| {
+            let dims = [g.usize_in(1..=23), g.usize_in(1..=23), g.usize_in(1..=23)];
+            let bounds = Aabb::new(
+                Vec3::ZERO,
+                Vec3::new(dims[0] as f64, dims[1] as f64, dims[2] as f64),
+            );
+            let map = CellMap::new(bounds, 1.0);
+            assert_eq!(map.dims, dims);
+            let row_major_cells = dims[0] * dims[1] * dims[2];
+            let mut seen = vec![false; map.n_cells];
+            let mut count = 0usize;
+            for cz in 0..dims[2] {
+                for cy in 0..dims[1] {
+                    for cx in 0..dims[0] {
+                        let ci = map.cell_index([cx, cy, cz]);
+                        assert!(ci < map.n_cells, "index {ci} outside padded table");
+                        assert!(!seen[ci], "coords ({cx},{cy},{cz}) collide at {ci}");
+                        seen[ci] = true;
+                        count += 1;
+                    }
+                }
+            }
+            assert_eq!(count, row_major_cells);
+            // Boundary cells in particular must round-trip: the row-major
+            // corner cells all landed on distinct Morton indices above;
+            // additionally the padded table is never more than 8x the
+            // logical one.
+            assert!(map.n_cells < 8 * row_major_cells.next_power_of_two());
+        });
+    }
+
+    #[test]
+    fn morton_index_order_matches_full_morton_key_order() {
+        // The squeeze-monotonicity property the parallel rebuild relies
+        // on: sorting coords by the grid's generalized Morton index gives
+        // the same order as sorting by the full 21-bit-per-axis morton3
+        // key (on in-domain coordinates).
+        use crate::core::resource_manager::morton3;
+        check("generalized Morton order == morton3 order", 20, |g: &mut Gen| {
+            let dims = [g.usize_in(1..=40), g.usize_in(1..=40), g.usize_in(1..=40)];
+            let bounds = Aabb::new(
+                Vec3::ZERO,
+                Vec3::new(dims[0] as f64, dims[1] as f64, dims[2] as f64),
+            );
+            let map = CellMap::new(bounds, 1.0);
+            for _ in 0..200 {
+                let a = [g.usize_in(0..=dims[0] - 1), g.usize_in(0..=dims[1] - 1), g.usize_in(0..=dims[2] - 1)];
+                let b = [g.usize_in(0..=dims[0] - 1), g.usize_in(0..=dims[1] - 1), g.usize_in(0..=dims[2] - 1)];
+                let key = |c: [usize; 3]| {
+                    morton3(
+                        Vec3::new(c[0] as f64 + 0.5, c[1] as f64 + 0.5, c[2] as f64 + 0.5),
+                        1.0,
+                    )
+                };
+                assert_eq!(
+                    map.cell_index(a).cmp(&map.cell_index(b)),
+                    key(a).cmp(&key(b)),
+                    "a={a:?} b={b:?}"
+                );
+            }
+        });
+    }
+
+    // ----- wholesale parallel rebuild --------------------------------------
+
+    /// Positions sorted the way `ResourceManager::sort_by_grid` sorts
+    /// them for this grid, with dense slot ids.
+    fn sorted_workload(g: &mut Gen, bounds: Aabb, cell: f64, n: usize) -> Vec<Vec3> {
+        // Effective edge + dims come from the map, as sort_phase reads
+        // them back off the grid (`cell_size()` / `dims()`).
+        let map = CellMap::new(bounds, cell);
+        let lo = [bounds.min.x - 3.0; 3];
+        let hi = [bounds.max.x + 3.0; 3]; // includes out-of-domain strays
+        let mut pos: Vec<Vec3> =
+            (0..n).map(|_| Vec3::from_array(g.rng().point_in(lo, hi))).collect();
+        pos.sort_by_key(|p| {
+            crate::core::resource_manager::morton3_in_grid(*p - bounds.min, map.cell, map.dims)
+        });
+        pos
+    }
+
+    #[test]
+    fn parallel_rebuild_identical_across_thread_counts() {
+        // Determinism: the rebuilt grid must answer every query with the
+        // exact same result list (same entries, same order) at 1, 2 and 8
+        // threads — and match serial incremental insertion.
+        check("rebuild deterministic at 1/2/8 threads", 12, |g: &mut Gen| {
+            let side = g.f64_in(20.0, 60.0);
+            let cell = g.f64_in(2.0, 9.0);
+            let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(side));
+            let n = g.usize_in(0..=600);
+            let pos = sorted_workload(g, bounds, cell, n);
+            let ids: Vec<LocalId> = (0..n).map(|i| LocalId::new(i as u32, 7)).collect();
+            // Oracle: serial incremental adds in slot order.
+            let mut serial = NeighborSearchGrid::new(bounds, cell);
+            for (k, p) in pos.iter().enumerate() {
+                serial.add(NsgEntry::Owned(ids[k]), *p);
+            }
+            let centers: Vec<(Vec3, f64)> = (0..30)
+                .map(|_| {
+                    (
+                        Vec3::from_array(g.rng().point_in([-2.0; 3], [side + 2.0; 3])),
+                        g.f64_in(0.5, side / 2.0),
+                    )
+                })
+                .collect();
+            for threads in [1usize, 2, 8] {
+                let pool = crate::engine::pool::ThreadPool::new(threads);
+                let mut grid = NeighborSearchGrid::new(bounds, cell);
+                // Pre-populate with stale entries + aura to prove the
+                // rebuild wipes wholesale.
+                grid.add(NsgEntry::Owned(LocalId::new(0, 1)), Vec3::splat(1.0));
+                grid.add(NsgEntry::Aura(0), Vec3::splat(2.0));
+                grid.rebuild_owned(&ids, &pos, &pool);
+                assert_eq!(grid.len(), n, "{threads} threads");
+                // The sorted dense snapshot must take the sharded path —
+                // a silent fallback would hide the PR's entire speedup.
+                assert_eq!(
+                    grid.last_rebuild_was_parallel(),
+                    n > 0,
+                    "{threads} threads: expected the sharded rebuild path"
+                );
+                // Same chains => same bucket usage as serial insertion,
+                // and a fresh rebuild leaves no free buckets behind.
+                assert_eq!(
+                    grid.bucket_stats().0,
+                    serial.bucket_stats().0,
+                    "{threads} threads: bucket usage"
+                );
+                assert_eq!(grid.bucket_stats().1, 0, "{threads} threads: free list");
+                for (c, r) in &centers {
+                    let got = grid.neighbors_of(*c, *r, None);
+                    let want = serial.neighbors_of(*c, *r, None);
+                    assert_eq!(got.len(), want.len(), "{threads} threads c={c:?} r={r}");
+                    for (ge, we) in got.iter().zip(&want) {
+                        assert_eq!(ge.0, we.0, "{threads} threads: entry order diverged");
+                        assert_eq!(ge.1, we.1);
+                        assert_eq!(ge.2, we.2);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rebuild_supports_incremental_ops_afterwards() {
+        let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(50.0));
+        let pool = crate::engine::pool::ThreadPool::new(4);
+        let mut rng = Rng::new(99);
+        let mut pos: Vec<Vec3> =
+            (0..200).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [50.0; 3]))).collect();
+        let map = CellMap::new(bounds, 5.0);
+        pos.sort_by_key(|p| {
+            crate::core::resource_manager::morton3_in_grid(*p, map.cell, map.dims)
+        });
+        let ids: Vec<LocalId> = (0..200).map(|i| LocalId::new(i, 3)).collect();
+        let mut g = NeighborSearchGrid::new(bounds, 5.0);
+        g.rebuild_owned(&ids, &pos, &pool);
+        assert!(g.last_rebuild_was_parallel());
+        // Every handle resolves: moves, stale-remove refusal, removal.
+        for (k, &id) in ids.iter().enumerate() {
+            g.update_position(NsgEntry::Owned(id), pos[k] * 0.5);
+        }
+        assert_eq!(g.len(), 200);
+        assert!(!g.remove(NsgEntry::Owned(LocalId::new(0, 2))), "stale reuse must not resolve");
+        for &id in &ids {
+            assert!(g.remove(NsgEntry::Owned(id)), "handle lost in rebuild");
+        }
+        assert!(g.is_empty());
+        // Second rebuild reuses capacity (no arena growth).
+        g.rebuild_owned(&ids, &pos, &pool);
+        let bytes = g.approx_bytes();
+        g.rebuild_owned(&ids, &pos, &pool);
+        assert_eq!(g.approx_bytes(), bytes, "repeat rebuild grew the arena");
+    }
+
+    #[test]
+    fn rebuild_falls_back_on_unsorted_or_sparse_input() {
+        let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(40.0));
+        let pool = crate::engine::pool::ThreadPool::new(8);
+        let mut rng = Rng::new(5);
+        let pos: Vec<Vec3> =
+            (0..150).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [40.0; 3]))).collect();
+        // Unsorted (random) order, dense ids.
+        let ids: Vec<LocalId> = (0..150).map(|i| LocalId::new(i, 0)).collect();
+        let mut g = NeighborSearchGrid::new(bounds, 4.0);
+        g.rebuild_owned(&ids, &pos, &pool);
+        assert!(!g.last_rebuild_was_parallel(), "unsorted input must take the fallback");
+        let mut serial = NeighborSearchGrid::new(bounds, 4.0);
+        for (k, p) in pos.iter().enumerate() {
+            serial.add(NsgEntry::Owned(ids[k]), *p);
+        }
+        for _ in 0..20 {
+            let c = Vec3::from_array(rng.point_in([0.0; 3], [40.0; 3]));
+            let got = g.neighbors_of(c, 6.0, None);
+            let want = serial.neighbors_of(c, 6.0, None);
+            assert_eq!(got, want, "fallback diverged from serial insertion");
+        }
+        // Sparse (non-dense) ids: slot 0 unused.
+        let sparse_ids: Vec<LocalId> = (0..150).map(|i| LocalId::new(i + 1, 2)).collect();
+        let mut sparse_pos = vec![Vec3::ZERO; 151];
+        for (k, p) in pos.iter().enumerate() {
+            sparse_pos[k + 1] = *p;
+        }
+        let mut gs = NeighborSearchGrid::new(bounds, 4.0);
+        gs.rebuild_owned(&sparse_ids, &sparse_pos, &pool);
+        assert!(!gs.last_rebuild_was_parallel(), "sparse ids must take the fallback");
+        assert_eq!(gs.len(), 150);
+        assert!(gs.remove(NsgEntry::Owned(LocalId::new(1, 2))));
     }
 
     // ----- randomized property suite vs a brute-force oracle ---------------

@@ -1,6 +1,14 @@
 //! Axis-aligned bounds and the `SimulationSpace` interface (§2.5,
 //! modularity improvements: "gather information about whole and local
 //! simulation space in one place").
+//!
+//! [`Aabb`] is the geometric vocabulary shared by every spatial layer:
+//! the whole domain and per-rank bounds here, partition boxes in
+//! [`super::partition`], the grid extent (and hence the Morton cell
+//! curve origin) in [`super::nsg`], and region queries from load
+//! balancing. Containment is min-inclusive / max-exclusive throughout,
+//! which is what makes box ownership a partition (no point belongs to
+//! two partition boxes).
 
 use crate::util::Vec3;
 

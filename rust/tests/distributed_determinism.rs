@@ -87,6 +87,47 @@ fn threads_do_not_change_results() {
 }
 
 #[test]
+fn thread_count_is_bitwise_transparent() {
+    // Stronger than `threads_do_not_change_results`: with periodic
+    // sorting enabled, every pool-parallel region — mechanics gather,
+    // per-destination aura encode, Morton NSG rebuild — must be
+    // *bit*-deterministic. The same 2-rank run at 1, 2 and 8 threads per
+    // rank has to produce identical final position bits and identical
+    // exchange byte counts.
+    let run = |threads: usize| {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: 600,
+            iterations: 10,
+            space_half_extent: 30.0,
+            interaction_radius: 10.0,
+            seed: 77,
+            sort_every: 3,
+            mode: ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: threads },
+            ..Default::default()
+        };
+        let result = run_simulation(&cfg, |_| CellClustering::new(&cfg));
+        let mut pos: Vec<[u64; 3]> = result
+            .final_snapshot
+            .iter()
+            .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+            .collect();
+        pos.sort();
+        let bytes = result
+            .report
+            .counter_total(teraagent::metrics::Counter::BytesSentWire);
+        (pos, bytes)
+    };
+    let (p1, b1) = run(1);
+    let (p2, b2) = run(2);
+    let (p8, b8) = run(8);
+    assert_eq!(p1, p2, "positions diverged between 1 and 2 threads per rank");
+    assert_eq!(p1, p8, "positions diverged between 1 and 8 threads per rank");
+    assert_eq!(b1, b2, "exchange bytes diverged between 1 and 2 threads per rank");
+    assert_eq!(b1, b8, "exchange bytes diverged between 1 and 8 threads per rank");
+}
+
+#[test]
 fn same_seed_same_run_exactly() {
     let cfg = clustering_cfg(ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: 2 });
     let a = final_positions(&cfg);
