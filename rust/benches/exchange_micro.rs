@@ -13,6 +13,12 @@
 //! A counting global allocator verifies the acceptance bar: after
 //! warm-up, one full aura exchange iteration (encode → wire → decode →
 //! recycle) on the fast path performs **zero** heap allocations.
+//!
+//! Receive-side rows (ROADMAP "parallel aura ingest" / "Morton-sharded
+//! aura fill"): serial decode + `add_source` + per-agent `nsg.add` vs
+//! the pooled pipeline (`decode_pooled_parallel` → `add_sources` →
+//! `add_aura_ranges`) at 1/2/8 threads, asserting the sharded fill
+//! engages; plus fork-join vs completion-ordered encode+send overlap.
 //! Emits `BENCH_exchange.json` at the repo root.
 
 #[path = "harness.rs"]
@@ -249,6 +255,165 @@ fn run_delta(w: &mut Workload) -> PathTimes {
 }
 
 // ---------------------------------------------------------------------------
+// Ingest throughput: serial receive pipeline vs pooled per-source ingest
+// ---------------------------------------------------------------------------
+
+const N_SOURCES: usize = 4;
+const INGEST_RADIUS: f64 = 8.0;
+
+/// Per-source Morton-sorted populations + their encoded aura wires (what
+/// the receive side sees after the senders' periodic sort).
+struct IngestWorkload {
+    wires: Vec<Vec<u8>>,
+    srcs: Vec<u32>,
+    bounds: teraagent::space::Aabb,
+}
+
+fn ingest_workload() -> IngestWorkload {
+    use teraagent::space::{Aabb, NeighborSearchGrid};
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let probe = NeighborSearchGrid::new(bounds, INGEST_RADIUS);
+    let mut rng = Rng::new(0x16E57);
+    let per_source = N_AGENTS / N_SOURCES;
+    let mut wires = Vec::new();
+    let mut srcs = Vec::new();
+    for s in 0..N_SOURCES {
+        let mut rm = ResourceManager::new(s as u32 + 1);
+        for _ in 0..per_source {
+            let p = Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3]));
+            let id = rm.add(Agent::cell(p, 8.0, CellType::A));
+            rm.ensure_global_id(id).unwrap();
+        }
+        rm.sort_by_grid(bounds.min, probe.cell_size(), probe.dims());
+        let ids = rm.ids();
+        let mut tx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut wire = Vec::new();
+        tx.encode_rm_into((0, 1), &rm, &ids, &mut wire);
+        wires.push(wire);
+        srcs.push(s as u32 + 1);
+    }
+    IngestWorkload { wires, srcs, bounds }
+}
+
+/// Serial receive pipeline (PR 2/3): per-source decode, `add_source`
+/// column mirror, per-agent `nsg.add` — vs the pooled pipeline: parallel
+/// decode, pre-reserved-range parallel mirror, Morton-sharded bulk NSG
+/// aura fill. Returns (serial, pooled at 1/2/8 threads).
+fn run_ingest(w: &IngestWorkload) -> (f64, [f64; 3]) {
+    use teraagent::engine::pool::ThreadPool;
+    use teraagent::engine::AuraStore;
+    use teraagent::io::codec::AuraDecodeJob;
+    use teraagent::space::{NeighborSearchGrid, NsgEntry};
+
+    // --- serial oracle pipeline
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+    let mut pool = ViewPool::new();
+    let mut aura = AuraStore::new();
+    let mut nsg = NeighborSearchGrid::new(w.bounds, INGEST_RADIUS);
+    let serial = measure(1, 5, || {
+        nsg.clear_aura();
+        aura.recycle_into(&mut pool);
+        for (k, wire) in w.wires.iter().enumerate() {
+            let (decoded, _) = rx.decode_pooled((w.srcs[k], 1), wire, &mut pool);
+            let range = aura.add_source(decoded);
+            for i in range {
+                nsg.add(NsgEntry::Aura(i), aura.position(i));
+            }
+        }
+        nsg.len()
+    })
+    .median;
+
+    // --- pooled pipeline at 1/2/8 threads
+    let mut pooled = [0.0f64; 3];
+    for (ti, threads) in [1usize, 2, 8].into_iter().enumerate() {
+        let tpool = ThreadPool::new(threads);
+        let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut view_pool = ViewPool::new();
+        let mut aura = AuraStore::new();
+        let mut nsg = NeighborSearchGrid::new(w.bounds, INGEST_RADIUS);
+        let mut jobs: Vec<AuraDecodeJob> = Vec::new();
+        let mut decoded = Vec::new();
+        let mut ranges = Vec::new();
+        pooled[ti] = measure(1, 5, || {
+            nsg.clear_aura();
+            aura.recycle_into(&mut view_pool);
+            rx.decode_pooled_parallel(1, &w.srcs, &w.wires, &mut jobs, &mut view_pool, &tpool);
+            decoded.clear();
+            for job in jobs.iter_mut() {
+                decoded.push(job.take().unwrap());
+            }
+            aura.add_sources(&mut decoded, &tpool, &mut ranges);
+            nsg.add_aura_ranges(&ranges, aura.positions(), &tpool);
+            // The acceptance probe: cell-sorted views must engage the
+            // Morton-sharded fill, not the serial fallback.
+            assert!(nsg.last_aura_fill_was_parallel(), "sharded aura fill did not engage");
+            nsg.len()
+        })
+        .median;
+    }
+    (serial, pooled)
+}
+
+// ---------------------------------------------------------------------------
+// Encode/send overlap: fork-join drain vs completion-ordered streaming
+// ---------------------------------------------------------------------------
+
+/// Fork-join (encode all, then send all) vs completion-ordered streaming
+/// (each wire sent the moment its encode finishes) over the in-process
+/// transport, 8 destinations. Returns (forkjoin, overlapped) seconds.
+fn run_overlap(w: &mut Workload) -> (f64, f64) {
+    use teraagent::comm::batching::send_batched;
+    use teraagent::comm::mpi::MpiWorld;
+    use teraagent::comm::NetworkModel;
+    use teraagent::engine::pool::ThreadPool;
+    use teraagent::io::codec::AuraEncodeJob;
+
+    const DESTS: usize = 8;
+    let per = N_AGENTS / DESTS;
+    let dests: Vec<(u32, Vec<LocalId>)> = (0..DESTS)
+        .map(|d| (d as u32 + 1, w.ids[d * per..(d + 1) * per].to_vec()))
+        .collect();
+    let tpool = ThreadPool::new(8);
+    let world = MpiWorld::new(DESTS + 1, NetworkModel::ideal());
+    let mut comm = world.communicator(0);
+    let mut jobs: Vec<AuraEncodeJob> = Vec::new();
+
+    let mut codec = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+    let mut flip = false;
+    let forkjoin = measure(1, 5, || {
+        drift(w, flip);
+        flip = !flip;
+        codec.encode_rm_parallel(1, &w.rm, &dests, &mut jobs, &tpool);
+        for ((dest, _), job) in dests.iter().zip(&jobs) {
+            send_batched(&mut comm, *dest, 1, 0, &job.wire, 1 << 20);
+        }
+        jobs.len()
+    })
+    .median;
+    for d in 1..=DESTS {
+        world.communicator(d as u32).cancel_pending(1);
+    }
+
+    let mut codec = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+    let mut flip = false;
+    let overlapped = measure(1, 5, || {
+        drift(w, flip);
+        flip = !flip;
+        let comm = &mut comm;
+        codec.encode_rm_overlapped(1, &w.rm, &dests, &mut jobs, &tpool, |i, wire, _| {
+            send_batched(comm, dests[i].0, 1, 0, wire, 1 << 20);
+        });
+        jobs.len()
+    })
+    .median;
+    for d in 1..=DESTS {
+        world.communicator(d as u32).cancel_pending(1);
+    }
+    (forkjoin, overlapped)
+}
+
+// ---------------------------------------------------------------------------
 // Steady-state allocation assertion (codec level, full exchange loop)
 // ---------------------------------------------------------------------------
 
@@ -318,6 +483,9 @@ fn main() {
     let plain = run_plain(&mut w);
     let delta = run_delta(&mut w);
     let (steady_allocs, refresh_allocs) = alloc_assertion(&mut w);
+    let ingest_w = ingest_workload();
+    let (ingest_serial, ingest_pooled) = run_ingest(&ingest_w);
+    let (overlap_fj, overlap_stream) = run_overlap(&mut w);
 
     row_strs(&["op", "seed", "fast", "speedup"]);
     let pr = |op: &str, s: f64, f: f64| {
@@ -334,6 +502,25 @@ fn main() {
         "aura exchange fast path must be allocation-free after warm-up"
     );
 
+    println!();
+    row_strs(&["ingest 100k / 4 src", "serial", "pooled", "speedup"]);
+    for (ti, threads) in [1usize, 2, 8].into_iter().enumerate() {
+        row(&[
+            format!("{threads} threads"),
+            fmt_secs(ingest_serial),
+            fmt_secs(ingest_pooled[ti]),
+            format!("{:.2}x", ratio(ingest_serial, ingest_pooled[ti])),
+        ]);
+    }
+    println!("  morton-sharded aura fill engaged on every pooled row (asserted)");
+    row_strs(&["encode+send 8 dests", "fork-join", "overlapped", "gain"]);
+    row(&[
+        "completion-ordered".into(),
+        fmt_secs(overlap_fj),
+        fmt_secs(overlap_stream),
+        format!("{:.2}x", ratio(overlap_fj, overlap_stream)),
+    ]);
+
     let json = format!(
         r#"{{
   "bench": "exchange_micro",
@@ -347,7 +534,17 @@ fn main() {
     "decode_seed_s": {:.6e}, "decode_fast_s": {:.6e}, "decode_speedup": {:.3}
   }},
   "steady_state_allocs_per_iteration": {steady_allocs},
-  "refresh_iteration_allocs": {refresh_allocs}
+  "refresh_iteration_allocs": {refresh_allocs},
+  "ingest": {{
+    "sources": {N_SOURCES},
+    "serial_s": {:.6e},
+    "pooled_1t_s": {:.6e}, "pooled_2t_s": {:.6e}, "pooled_8t_s": {:.6e},
+    "speedup_8t": {:.3},
+    "sharded_fill_engaged": true
+  }},
+  "overlap": {{
+    "forkjoin_s": {:.6e}, "overlapped_s": {:.6e}, "gain": {:.3}
+  }}
 }}
 "#,
         plain.encode_seed,
@@ -362,6 +559,14 @@ fn main() {
         delta.decode_seed,
         delta.decode_fast,
         ratio(delta.decode_seed, delta.decode_fast),
+        ingest_serial,
+        ingest_pooled[0],
+        ingest_pooled[1],
+        ingest_pooled[2],
+        ratio(ingest_serial, ingest_pooled[2]),
+        overlap_fj,
+        overlap_stream,
+        ratio(overlap_fj, overlap_stream),
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_exchange.json");
     match std::fs::write(&out, &json) {

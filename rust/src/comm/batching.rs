@@ -57,6 +57,72 @@ pub fn send_batched(
 pub struct Reassembler {
     /// (src, tag, msg_id) -> (received chunks, total)
     partial: HashMap<(u32, Tag, u32), (Vec<Option<Vec<u8>>>, u32)>,
+    /// Per-source completion flags for [`recv_all_batched_into`]
+    /// (capacity reused across iterations).
+    done_scratch: Vec<bool>,
+}
+
+/// What one [`recv_all_batched_into`] call spent where: wall-clock
+/// seconds blocked in the transport (the honest wait), thread-CPU seconds
+/// spent copying/reassembling frames, and the number of frames consumed.
+/// The engine charges the first to `Op::Transfer` and the second to
+/// `Op::Reassembly` — previously the whole blocking loop was timed as one
+/// CPU "transfer" bucket, skewing the op breakdown on slow peers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecvAllStats {
+    pub wait_secs: f64,
+    pub reassembly_secs: f64,
+    pub frames: u64,
+}
+
+/// Collect one complete batched message from **each** of `srcs` on `tag`,
+/// consuming frames in *arrival* order — no fixed-rank-order blocking
+/// wait: a slow first neighbor no longer stalls ingestion of everyone
+/// else's already-arrived frames. Source `srcs[k]`'s completed payload
+/// lands in `wires[k]` (cleared, capacity reused), so downstream
+/// consumers see wires in deterministic source order regardless of the
+/// order the network delivered them.
+///
+/// Protocol assumption (held by the engine's collective-gated iteration
+/// loop): at most one in-flight batched message per source on `tag`.
+/// Frames from sources outside `srcs` are reassembled and dropped
+/// (debug-asserted — they indicate a stale stream).
+pub fn recv_all_batched_into(
+    re: &mut Reassembler,
+    comm: &mut Communicator,
+    srcs: &[u32],
+    tag: Tag,
+    wires: &mut [Vec<u8>],
+) -> RecvAllStats {
+    assert_eq!(srcs.len(), wires.len(), "one wire slot per source");
+    let mut stats = RecvAllStats::default();
+    re.done_scratch.clear();
+    re.done_scratch.resize(srcs.len(), false);
+    let mut discard: Vec<u8> = Vec::new();
+    let mut pending = srcs.len();
+    while pending > 0 {
+        let (m, waited) = comm.recv_any_timed(tag);
+        stats.wait_secs += waited;
+        stats.frames += 1;
+        let t = crate::util::timing::CpuTimer::start();
+        match srcs.iter().position(|&s| s == m.src) {
+            Some(k) => {
+                if re.feed_into(m.src, m.tag, m.data, &mut wires[k]).is_some() {
+                    debug_assert!(!re.done_scratch[k], "second message completed for src {}", m.src);
+                    if !re.done_scratch[k] {
+                        re.done_scratch[k] = true;
+                        pending -= 1;
+                    }
+                }
+            }
+            None => {
+                debug_assert!(false, "aura frame from unexpected source {}", m.src);
+                re.feed_into(m.src, m.tag, m.data, &mut discard);
+            }
+        }
+        stats.reassembly_secs += t.elapsed_secs();
+    }
+    stats
 }
 
 impl Reassembler {
@@ -234,6 +300,59 @@ mod tests {
         re.recv_batched_into(&mut rx, 0, 7, &mut out);
         assert_eq!(out, vec![1, 2, 3]);
         assert_eq!(out.capacity(), cap, "steady-state receive must not realloc");
+    }
+
+    #[test]
+    fn recv_all_collects_every_source_in_any_arrival_order() {
+        // Three senders, chunked wires, three adversarial delivery orders
+        // (all sends happen before the receiver starts, so the mailbox
+        // arrival order IS the send order below). Results must land in
+        // source order regardless.
+        let payload = |s: u32| -> Vec<u8> { vec![s as u8; 700 * (s as usize + 1)] };
+        let orders: [[u32; 3]; 3] = [[1, 2, 3], [3, 2, 1], [2, 3, 1]];
+        for order in orders {
+            let world = MpiWorld::new(4, NetworkModel::ideal());
+            let mut rx = world.communicator(0);
+            for &s in &order {
+                let mut tx = world.communicator(s);
+                send_batched(&mut tx, 0, 7, 11, &payload(s), 256);
+            }
+            let mut re = Reassembler::new();
+            let srcs = [1u32, 2, 3];
+            let mut wires: Vec<Vec<u8>> = vec![Vec::new(); 3];
+            let stats = recv_all_batched_into(&mut re, &mut rx, &srcs, 7, &mut wires);
+            for (k, &s) in srcs.iter().enumerate() {
+                assert_eq!(wires[k], payload(s), "order {order:?}, src {s}");
+            }
+            // Frames: ceil(700(s+1)/256) per source.
+            let expect_frames: u64 = (1..=3u64).map(|s| (700 * (s + 1)).div_ceil(256)).sum();
+            assert_eq!(stats.frames, expect_frames);
+            assert_eq!(re.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn recv_all_overlaps_blocking_with_late_senders() {
+        // The receiver starts before the last sender has sent anything;
+        // it must ingest the early wires and block only for the rest.
+        let world = MpiWorld::new(3, NetworkModel::ideal());
+        let mut early = world.communicator(1);
+        let data1 = vec![1u8; 5000];
+        send_batched(&mut early, 0, 7, 3, &data1, 1024);
+        let world2 = Arc::clone(&world);
+        let late = std::thread::spawn(move || {
+            let mut tx = world2.communicator(2);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            send_batched(&mut tx, 0, 7, 3, &[42u8; 100], 1024);
+        });
+        let mut rx = world.communicator(0);
+        let mut re = Reassembler::new();
+        let mut wires: Vec<Vec<u8>> = vec![Vec::new(); 2];
+        let stats = recv_all_batched_into(&mut re, &mut rx, &[1, 2], 7, &mut wires);
+        late.join().unwrap();
+        assert_eq!(wires[0], data1);
+        assert_eq!(wires[1], vec![42u8; 100]);
+        assert!(stats.wait_secs > 0.0, "blocked wait on the late sender must be visible");
     }
 
     #[test]

@@ -200,6 +200,32 @@ impl Communicator {
         }
     }
 
+    /// Blocking receive of the next message with `tag` from **any**
+    /// source, reporting separately the wall-clock seconds actually spent
+    /// blocked (`0.0` when a matching message was already queued — the
+    /// `MPI_Probe`-hit case). This is the completion-aware receive the
+    /// overlapped aura ingest runs on: frames are consumed in *arrival*
+    /// order instead of a fixed source order, and the blocked wait is
+    /// measurable on its own so the engine can keep transport wait out of
+    /// its CPU-time op buckets (the receive-side clock-skew fix).
+    pub fn recv_any_timed(&mut self, tag: Tag) -> (RecvMsg, f64) {
+        let (lock, cv) = &self.world.mailboxes[self.rank as usize];
+        let mut mb = lock.lock().unwrap();
+        if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
+            let e = mb.queue.remove(idx).unwrap();
+            return (RecvMsg { src: e.src, tag: e.tag, data: e.data }, 0.0);
+        }
+        let start = std::time::Instant::now();
+        loop {
+            mb = cv.wait(mb).unwrap();
+            if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
+                let e = mb.queue.remove(idx).unwrap();
+                let waited = start.elapsed().as_secs_f64();
+                return (RecvMsg { src: e.src, tag: e.tag, data: e.data }, waited);
+            }
+        }
+    }
+
     /// Cancel (drain) all pending messages with `tag` — the paper's
     /// "obsolete speculative receives are cancelled" after rebalancing.
     pub fn cancel_pending(&mut self, tag: Tag) -> usize {
@@ -402,6 +428,43 @@ mod tests {
                 let m = c.try_recv(Some(0), Some(tags::MIGRATION)).unwrap();
                 assert_eq!(m.data.len(), 100);
                 assert!(c.try_recv(None, None).is_none());
+            }
+        }));
+    }
+
+    #[test]
+    fn recv_any_timed_takes_arrival_order_and_times_only_the_wait() {
+        join(spawn_ranks(3, |mut c| {
+            match c.rank() {
+                0 => {
+                    c.barrier(); // both senders' messages are queued
+                    let (m1, w1) = c.recv_any_timed(tags::AURA);
+                    let (m2, w2) = c.recv_any_timed(tags::AURA);
+                    // Queued messages: no blocking, zero wait reported.
+                    assert_eq!(w1, 0.0);
+                    assert_eq!(w2, 0.0);
+                    let mut srcs = [m1.src, m2.src];
+                    srcs.sort();
+                    assert_eq!(srcs, [1, 2]);
+                    // Now block on a message that arrives late (rank 1
+                    // holds it until we signal, then sleeps past our
+                    // entry into the wait).
+                    c.isend(1, tags::CONTROL, vec![0]);
+                    let (m3, w3) = c.recv_any_timed(tags::MIGRATION);
+                    assert_eq!(m3.data, vec![9]);
+                    assert!(w3 > 0.0, "blocked wait must be measured");
+                }
+                1 => {
+                    c.isend(0, tags::AURA, vec![1]);
+                    c.barrier();
+                    c.recv(Some(0), Some(tags::CONTROL));
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    c.isend(0, tags::MIGRATION, vec![9]);
+                }
+                _ => {
+                    c.isend(0, tags::AURA, vec![2]);
+                    c.barrier();
+                }
             }
         }));
     }

@@ -104,6 +104,90 @@ impl ThreadPool {
         });
     }
 
+    /// Completion-ordered parallel for-each: workers pull items one at a
+    /// time (`f(item_index, &mut item)`), and as each item finishes it is
+    /// handed back to the **calling thread**, which runs
+    /// `complete(item_index, &mut item)` immediately — while other items
+    /// are still being produced. This is the overlap primitive for the
+    /// aura exchange: per-destination encodes fan out on the pool and the
+    /// rank thread streams each finished wire into the transport without
+    /// waiting for the fork-join barrier (destination 0's send overlaps
+    /// destination N's encode).
+    ///
+    /// `complete` runs in *completion order*, which is scheduling-
+    /// dependent — callers must only do order-independent work there
+    /// (sends to distinct peers, counter bumps). Item contents are
+    /// produced by `f` exactly as in
+    /// [`for_each_mut_timed`](Self::for_each_mut_timed), so data stays
+    /// deterministic for any thread count. With one thread (or one item)
+    /// everything runs inline on the caller in index order — the serial
+    /// encode→send→encode→send interleaving.
+    ///
+    /// Returns the workers' critical-path CPU seconds; the caller's own
+    /// `complete` work is visible to its own CPU clock and is not
+    /// included.
+    pub fn for_each_mut_completion<T: Send>(
+        &self,
+        items: &mut [T],
+        f: impl Fn(usize, &mut T) + Sync,
+        mut complete: impl FnMut(usize, &mut T),
+    ) -> f64 {
+        let len = items.len();
+        if len == 0 {
+            return 0.0;
+        }
+        if self.threads == 1 || len == 1 {
+            // Inline on the caller: its own CPU clock sees the work.
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+                complete(i, item);
+            }
+            return 0.0;
+        }
+        let workers = self.threads.min(len);
+        // Hand-off queue: each `&mut` item is parked in a mutex slot,
+        // claimed by exactly one worker (unique `next` index), and sent
+        // back to the caller through the channel once `f` ran. The mutex
+        // only transfers ownership of the borrow; items are never shared.
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<Option<&mut T>>> =
+            items.iter_mut().map(|it| std::sync::Mutex::new(Some(it))).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, &mut T)>();
+        let mut cpu: Vec<f64> = vec![0.0; workers];
+        std::thread::scope(|s| {
+            let f = &f;
+            let next = &next;
+            let slots = &slots;
+            for cpu_slot in cpu.iter_mut() {
+                let tx = tx.clone();
+                s.spawn(move || {
+                    let t = crate::util::timing::CpuTimer::start();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= len {
+                            break;
+                        }
+                        let item = slots[i].lock().unwrap().take().expect("item claimed twice");
+                        f(i, item);
+                        // The caller outlives the scope; a send can only
+                        // fail if the receiver was dropped by a panic.
+                        if tx.send((i, item)).is_err() {
+                            break;
+                        }
+                    }
+                    *cpu_slot = t.elapsed_secs();
+                });
+            }
+            drop(tx);
+            // Stream completions as they land; ends when all worker
+            // senders hung up (every item delivered or a worker died).
+            while let Ok((i, item)) = rx.recv() {
+                complete(i, item);
+            }
+        });
+        cpu.into_iter().fold(0.0, f64::max)
+    }
+
     /// Parallel for-each over mutable items: workers receive disjoint
     /// contiguous sub-slices of `items`, so per-item scratch (e.g. reused
     /// mechanics gather batches) can be mutated in place without locking.
@@ -211,6 +295,40 @@ mod tests {
         assert!(none.is_empty() && cpu == 0.0);
         let (one, _) = pool.map_parts_timed(&[2, 7], |_, s, e| e - s);
         assert_eq!(one, vec![5]);
+    }
+
+    #[test]
+    fn for_each_mut_completion_produces_and_completes_every_item_once() {
+        for threads in [1, 3, 16] {
+            let pool = ThreadPool::new(threads);
+            let mut items: Vec<(u64, u64)> = vec![(0, 0); 29];
+            let mut completed = vec![false; 29];
+            let mut order: Vec<usize> = Vec::new();
+            pool.for_each_mut_completion(
+                &mut items,
+                |i, item| item.0 = i as u64 + 1,
+                |i, item| {
+                    assert_eq!(item.0, i as u64 + 1, "complete before produce");
+                    item.1 = item.0 * 2;
+                    assert!(!completed[i], "item {i} completed twice");
+                    completed[i] = true;
+                    order.push(i);
+                },
+            );
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(*item, (i as u64 + 1, (i as u64 + 1) * 2), "{threads} threads");
+            }
+            assert!(completed.iter().all(|&c| c), "{threads} threads: missing completion");
+            assert_eq!(order.len(), 29);
+            if threads == 1 {
+                // Inline path: strict index order.
+                assert!(order.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+        // Empty input is a no-op.
+        let pool = ThreadPool::new(4);
+        let mut empty: Vec<u64> = Vec::new();
+        assert_eq!(pool.for_each_mut_completion(&mut empty, |_, _| (), |_, _| ()), 0.0);
     }
 
     #[test]

@@ -5,13 +5,13 @@ use super::model::Model;
 use super::pool::ThreadPool;
 use super::world::{AuraStore, World};
 use crate::balance::{diffusive, rcb, weights};
-use crate::comm::batching::{send_batched, Reassembler};
+use crate::comm::batching::{recv_all_batched_into, send_batched, Reassembler};
 use crate::comm::mpi::{tags, Communicator};
 use crate::config::{BalanceMethod, SimConfig};
 use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
-use crate::io::codec::{AuraEncodeJob, Codec};
+use crate::io::codec::{AuraDecodeJob, AuraEncodeJob, Codec, Decoded};
 use crate::io::ta_io::ViewPool;
 use crate::io::Compression;
 use crate::metrics::{Counter, Op, RankMetrics};
@@ -112,8 +112,17 @@ pub struct RankSim<M: Model> {
     /// pool → decode → aura store → pool, so the exchange path allocates
     /// nothing in steady state.
     view_pool: ViewPool,
-    /// Reused wire buffer for aura encode/receive.
-    wire_scratch: Vec<u8>,
+    /// Per-source completed aura wires (aligned with `neighbors_cache`;
+    /// filled in arrival order, consumed in source order).
+    aura_rx_wires: Vec<Vec<u8>>,
+    /// Per-source parallel-decode slots (decoded views + stats).
+    aura_rx_jobs: Vec<AuraDecodeJob>,
+    /// Decoded messages in source order, handed to the aura store
+    /// (capacity reused; drained every iteration).
+    aura_decoded: Vec<Decoded>,
+    /// Per-source aura-id ranges of the current iteration (feeds the
+    /// NSG's Morton-sharded bulk aura fill).
+    aura_ranges: Vec<std::ops::Range<u32>>,
 }
 
 impl<M: Model> RankSim<M> {
@@ -172,7 +181,10 @@ impl<M: Model> RankSim<M> {
             migration_per_dest: Vec::new(),
             migration_ingest: Vec::new(),
             view_pool: ViewPool::new(),
-            wire_scratch: Vec::new(),
+            aura_rx_wires: Vec::new(),
+            aura_rx_jobs: Vec::new(),
+            aura_decoded: Vec::new(),
+            aura_ranges: Vec::new(),
             comm,
             grid,
             nsg,
@@ -299,56 +311,99 @@ impl<M: Model> RankSim<M> {
                 self.rm.ensure_global_id(id);
             }
         }
-        // Encode every destination in parallel on the rank's pool
-        // (ROADMAP "parallel aura encode"): the per-destination encodes
-        // are independent — each streams the selected agents straight out
-        // of the SoA columns through its own channel's delta reference
-        // and payload buffer into its own reused wire buffer — so they
-        // fan out as pool jobs while staying byte-identical to the serial
-        // path. The sends below then stream the finished wires in
-        // destination order, keeping the exchange deterministic for any
+        // Encode every destination in parallel on the rank's pool and
+        // stream each wire the moment its encode completes (ROADMAP
+        // "overlap encode with send"): the per-destination encodes are
+        // independent — each streams the selected agents straight out of
+        // the SoA columns through its own channel's delta reference and
+        // payload buffer into its own reused wire buffer — and the rank
+        // thread issues `send_batched` per finished wire while later
+        // encodes still run, so destination 0's send overlaps destination
+        // N's compression. Completion order only moves send *start*
+        // times; wire bytes per destination stay byte-identical for any
         // thread count.
         let mut jobs = std::mem::take(&mut self.aura_jobs);
-        let encode_cpu =
-            self.codec.encode_rm_parallel(tags::AURA, &self.rm, &per_dest, &mut jobs, &self.pool);
+        let encode_cpu = {
+            let comm = &mut self.comm;
+            let metrics = &mut self.metrics;
+            let iteration = self.iteration as u32;
+            let chunk_bytes = self.cfg.chunk_bytes;
+            self.codec.encode_rm_overlapped(
+                tags::AURA,
+                &self.rm,
+                &per_dest,
+                &mut jobs,
+                &self.pool,
+                |i, wire, stats| {
+                    let (dest, ids) = &per_dest[i];
+                    metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
+                    metrics.add_op(Op::Serialize, stats.serialize_secs);
+                    metrics.add_op(Op::Compress, stats.compress_secs);
+                    metrics.count(Counter::BytesSentRaw, stats.raw_bytes as u64);
+                    metrics.count(Counter::BytesSentWire, wire.len() as u64);
+                    let frames = metrics.timed_cpu(Op::Transfer, || {
+                        send_batched(comm, *dest, tags::AURA, iteration, wire, chunk_bytes)
+                    });
+                    // Chunked sends count per frame, so the wire/messages
+                    // ratio reflects what the fabric saw.
+                    metrics.count(Counter::MessagesSent, frames as u64);
+                },
+            )
+        };
         self.pool_cpu_secs += encode_cpu;
-        for ((dest, ids), job) in per_dest.iter().zip(&jobs) {
-            self.metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
-            self.metrics.add_op(Op::Serialize, job.stats.serialize_secs);
-            self.metrics.add_op(Op::Compress, job.stats.compress_secs);
-            self.metrics.count(Counter::BytesSentRaw, job.stats.raw_bytes as u64);
-            self.metrics.count(Counter::BytesSentWire, job.wire.len() as u64);
-            self.metrics.count(Counter::MessagesSent, 1);
-            self.metrics.timed_cpu(Op::Transfer, || {
-                send_batched(
-                    &mut self.comm,
-                    *dest,
-                    tags::AURA,
-                    self.iteration as u32,
-                    &job.wire,
-                    self.cfg.chunk_bytes,
-                )
-            });
-        }
         self.aura_jobs = jobs;
         self.aura_per_dest = per_dest;
-        // Receive from every neighbor; decode in place (pooled buffers,
-        // in-buffer delta restore) and register aura agents in the NSG.
-        let mut wire = std::mem::take(&mut self.wire_scratch);
-        for &src in &self.neighbors_cache {
-            self.metrics.timed_cpu(Op::Transfer, || {
-                self.reassembler.recv_batched_into(&mut self.comm, src, tags::AURA, &mut wire)
-            });
-            let (decoded, ds) =
-                self.codec.decode_pooled((src, tags::AURA), &wire, &mut self.view_pool);
-            self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
-            self.metrics.add_op(Op::Decompress, ds.decompress_secs);
-            let range = self.aura.add_source(decoded);
-            for i in range {
-                self.nsg.add(NsgEntry::Aura(i), self.aura.position(i));
-            }
+        // Receive in arrival order: frames from ANY neighbor are consumed
+        // as they land (no fixed-rank-order blocking wait), each
+        // completed wire parking in its source's slot. Blocked wall time
+        // and frame-copy CPU are metered separately (the clock-skew fix).
+        let nsrc = self.neighbors_cache.len();
+        let mut wires = std::mem::take(&mut self.aura_rx_wires);
+        wires.resize_with(nsrc, Vec::new);
+        let rstats = recv_all_batched_into(
+            &mut self.reassembler,
+            &mut self.comm,
+            &self.neighbors_cache,
+            tags::AURA,
+            &mut wires,
+        );
+        self.metrics.add_op(Op::Transfer, rstats.wait_secs);
+        self.metrics.add_op(Op::Reassembly, rstats.reassembly_secs);
+        self.metrics.count(Counter::MessagesReceived, rstats.frames);
+        // Decode all sources in parallel on the pool (pooled buffers,
+        // in-buffer delta restore; per-source channel state is disjoint).
+        // Jobs land in source order regardless of arrival order.
+        let mut rx_jobs = std::mem::take(&mut self.aura_rx_jobs);
+        let decode_cpu = self.codec.decode_pooled_parallel(
+            tags::AURA,
+            &self.neighbors_cache,
+            &wires,
+            &mut rx_jobs,
+            &mut self.view_pool,
+            &self.pool,
+        );
+        self.pool_cpu_secs += decode_cpu;
+        let mut decoded = std::mem::take(&mut self.aura_decoded);
+        decoded.clear();
+        for job in rx_jobs.iter_mut() {
+            self.metrics.add_op(Op::Deserialize, job.stats.deserialize_secs);
+            self.metrics.add_op(Op::Decompress, job.stats.decompress_secs);
+            decoded.push(job.take().expect("decoded aura message missing"));
         }
-        self.wire_scratch = wire;
+        self.aura_rx_jobs = rx_jobs;
+        self.aura_rx_wires = wires;
+        // Mirror the hot columns into per-source pre-reserved ranges
+        // (prefix sums in source order → aura ids are deterministic for
+        // any arrival order and thread count), then register the whole
+        // batch in the NSG through the Morton-sharded bulk fill (serial
+        // add_aura fallback when a source's view isn't cell-sorted).
+        let mut ranges = std::mem::take(&mut self.aura_ranges);
+        let mirror_cpu = self.aura.add_sources(&mut decoded, &self.pool, &mut ranges);
+        self.pool_cpu_secs += mirror_cpu;
+        self.aura_decoded = decoded;
+        let nsg_cpu = self.nsg.add_aura_ranges(&ranges, self.aura.positions(), &self.pool);
+        self.pool_cpu_secs += nsg_cpu;
+        self.aura_ranges = ranges;
         self.metrics.add_op(Op::AuraUpdate, t.elapsed_secs());
     }
 

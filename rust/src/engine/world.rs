@@ -17,7 +17,7 @@
 //! rank's pool via [`World::par_chunks`] (results are deterministic for
 //! any thread count — see `ARCHITECTURE.md`, "Determinism contract").
 
-use crate::core::agent::{Agent, AgentKind};
+use crate::core::agent::{Agent, AgentKind, CellType};
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::Decoded;
@@ -105,12 +105,113 @@ impl AuraStore {
         start..self.pos.len() as u32
     }
 
+    /// Ingest a whole iteration's decoded messages at once (drained from
+    /// `decoded`, which must be in **source order** — the engine's
+    /// neighbor-rank order). Ranges are assigned by prefix sums over the
+    /// decoded agent counts before any mirroring happens, so aura-id
+    /// assignment is deterministic regardless of the order the wires
+    /// *arrived* in and of the thread count; `out_ranges[k]` is exactly
+    /// what a serial [`AuraStore::add_source`] loop would have returned
+    /// for `decoded[k]`. The hot-attribute mirror then fans out on the
+    /// rank's pool, each source writing its own pre-reserved column
+    /// window (disjoint `split_at_mut` slices — no locks). Returns the
+    /// fan-out's critical-path CPU seconds.
+    pub fn add_sources(
+        &mut self,
+        decoded: &mut Vec<Decoded>,
+        pool: &crate::engine::pool::ThreadPool,
+        out_ranges: &mut Vec<std::ops::Range<u32>>,
+    ) -> f64 {
+        out_ranges.clear();
+        let start = self.pos.len();
+        // Sizes straight from the decoded headers: the parse walk already
+        // counted live (non-placeholder) agents, so range assignment is
+        // O(sources), not a second pass over every agent block.
+        let mut total = start;
+        for d in decoded.iter() {
+            let n = match d {
+                Decoded::View(v) => v.live_len(),
+                Decoded::Owned(a) => a.len(),
+            };
+            out_ranges.push(total as u32..(total + n) as u32);
+            total += n;
+        }
+        // Every slot below `total` is overwritten by exactly one mirror
+        // job; the fill value is never observable.
+        const FILL_KIND: AgentKind = AgentKind::Cell { cell_type: CellType::A, adhesion: 0.0 };
+        self.pos.resize(total, Vec3::ZERO);
+        self.diam.resize(total, 0.0);
+        self.kind.resize(total, FILL_KIND);
+        struct MirrorJob<'a> {
+            src: &'a Decoded,
+            pos: &'a mut [Vec3],
+            diam: &'a mut [f64],
+            kind: &'a mut [AgentKind],
+        }
+        let mut pos_rest: &mut [Vec3] = &mut self.pos[start..];
+        let mut diam_rest: &mut [f64] = &mut self.diam[start..];
+        let mut kind_rest: &mut [AgentKind] = &mut self.kind[start..];
+        let mut jobs: Vec<MirrorJob<'_>> = Vec::with_capacity(decoded.len());
+        for (d, r) in decoded.iter().zip(out_ranges.iter()) {
+            let n = (r.end - r.start) as usize;
+            let (p, pr) = std::mem::take(&mut pos_rest).split_at_mut(n);
+            let (dm, dr) = std::mem::take(&mut diam_rest).split_at_mut(n);
+            let (kd, kr) = std::mem::take(&mut kind_rest).split_at_mut(n);
+            pos_rest = pr;
+            diam_rest = dr;
+            kind_rest = kr;
+            jobs.push(MirrorJob { src: d, pos: p, diam: dm, kind: kd });
+        }
+        let cpu = pool.for_each_mut_timed(&mut jobs, |_, j| {
+            let mut w = 0;
+            match j.src {
+                Decoded::View(v) => {
+                    for i in 0..v.len() {
+                        let ab = v.agent(i);
+                        if ab.is_placeholder() {
+                            continue;
+                        }
+                        j.pos[w] = Vec3::from_array(ab.position);
+                        j.diam[w] = ab.diameter;
+                        j.kind[w] = ab.kind();
+                        w += 1;
+                    }
+                }
+                Decoded::Owned(agents) => {
+                    for a in agents {
+                        j.pos[w] = a.position;
+                        j.diam[w] = a.diameter;
+                        j.kind[w] = a.kind;
+                        w += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(w, j.pos.len(), "pre-reserved range mismatch");
+        });
+        drop(jobs);
+        // Keep the receive buffers alive for the iteration, source order.
+        for d in decoded.drain(..) {
+            match d {
+                Decoded::View(v) => self.views.push(v),
+                Decoded::Owned(a) => self.owned.push(a),
+            }
+        }
+        cpu
+    }
+
     pub fn len(&self) -> usize {
         self.pos.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.pos.is_empty()
+    }
+
+    /// The full position column (flat, indexed by aura id) — what the
+    /// NSG's bulk aura registration streams.
+    #[inline]
+    pub fn positions(&self) -> &[Vec3] {
+        &self.pos
     }
 
     /// Position of aura agent `i` (flat column read).
@@ -368,6 +469,54 @@ mod tests {
         assert_eq!(store.position(0), Vec3::new(9.0, 9.0, 9.0));
         store.clear();
         assert!(store.is_empty());
+    }
+
+    #[test]
+    fn add_sources_matches_serial_add_source_at_any_thread_count() {
+        use crate::engine::pool::ThreadPool;
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xA0A0);
+        let pops: Vec<Vec<Agent>> = (0..4)
+            .map(|k| {
+                (0..30 + 11 * k)
+                    .map(|i| {
+                        let mut a = Agent::cell(
+                            Vec3::from_array(rng.point_in([0.0; 3], [50.0; 3])),
+                            4.0 + i as f64 * 0.01,
+                            if i % 2 == 0 { CellType::A } else { CellType::B },
+                        );
+                        a.global_id = GlobalId::new(k as u32 + 1, i as u64);
+                        a
+                    })
+                    .collect()
+            })
+            .collect();
+        let mk_decoded = || -> Vec<Decoded> {
+            pops.iter()
+                .map(|p| {
+                    Decoded::View(ta_io::TaView::parse(ta_io::serialize(p.iter())).unwrap())
+                })
+                .collect()
+        };
+        // Serial oracle.
+        let mut serial = AuraStore::new();
+        let want_ranges: Vec<std::ops::Range<u32>> =
+            mk_decoded().into_iter().map(|d| serial.add_source(d)).collect();
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut bulk = AuraStore::new();
+            let mut decoded = mk_decoded();
+            let mut ranges = Vec::new();
+            bulk.add_sources(&mut decoded, &pool, &mut ranges);
+            assert!(decoded.is_empty(), "decoded views must be consumed");
+            assert_eq!(ranges, want_ranges, "{threads} threads: aura id ranges");
+            assert_eq!(bulk.len(), serial.len());
+            for i in 0..bulk.len() as u32 {
+                assert_eq!(bulk.position(i), serial.position(i), "{threads} threads, aura {i}");
+                assert_eq!(bulk.diameter(i), serial.diameter(i));
+                assert_eq!(bulk.kind(i), serial.kind(i));
+            }
+        }
     }
 
     #[test]

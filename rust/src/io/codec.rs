@@ -276,6 +276,92 @@ fn encode_one_rm(
     stats
 }
 
+/// Per-source output slot for [`Codec::decode_pooled_parallel`]: the
+/// decoded message (in source order, whatever the arrival order was),
+/// its decode stats, and a job-local buffer pool seeded from — and
+/// drained back into — the shared [`ViewPool`] around the fan-out.
+#[derive(Default)]
+pub struct AuraDecodeJob {
+    pub decoded: Option<Decoded>,
+    pub stats: DecodeStats,
+    pool: ViewPool,
+}
+
+impl AuraDecodeJob {
+    /// Move the decoded message out (ingest consumes it).
+    pub fn take(&mut self) -> Option<Decoded> {
+        self.decoded.take()
+    }
+}
+
+/// Does this wire's decode go through the per-channel [`DeltaDecoder`]?
+/// (TA IO under a delta-bearing configuration, or any non-Full message.)
+/// Lets [`Codec::decode_pooled`] keep channel creation lazy: ROOT IO and
+/// plain TA IO decodes — the migration path — never allocate rx state.
+/// `decode_one` expects a channel iff this returns true.
+fn wire_needs_delta_channel(compression: Compression, wire: &[u8]) -> bool {
+    wire.len() >= 2
+        && wire[0] != SerializerKind::RootIo.code()
+        && !(DeltaKind::from_code(wire[1] & 0x7F) == DeltaKind::Full
+            && !matches!(compression, Compression::Lz4Delta { .. }))
+}
+
+/// Decode one wire message on one already-created channel — the body of
+/// [`Codec::decode_pooled`], split out so
+/// [`Codec::decode_pooled_parallel`] can run it on pool workers over
+/// disjoint channels. Everything it mutates is per-channel / per-call
+/// state (the delta reference, the passed-in pool), so decodes on
+/// different channels are independent. Timings use the thread-CPU clock:
+/// this body runs on pool workers that time-slice against each other,
+/// and the Fig. 10/11 op breakdowns must not count preemption stalls.
+fn decode_one(
+    compression: Compression,
+    rx: Option<&mut DeltaDecoder>,
+    wire: &[u8],
+    pool: &mut ViewPool,
+) -> (Decoded, DecodeStats) {
+    let mut stats = DecodeStats::default();
+    assert!(wire.len() >= 6, "wire message too short");
+    let ser = wire[0];
+    let kind_byte = wire[1];
+    let compressed = kind_byte & 0x80 != 0;
+    let delta_kind = DeltaKind::from_code(kind_byte & 0x7F);
+    let raw_len = u32::from_le_bytes(wire[2..6].try_into().unwrap()) as usize;
+    let body = &wire[6..];
+
+    let t0 = crate::util::timing::CpuTimer::start();
+    let mut payload = pool.take_buf();
+    if compressed {
+        lz4::decompress_into(body, raw_len, &mut payload).expect("corrupt LZ4 payload");
+    } else {
+        payload.set_from_slice(body);
+    }
+    stats.decompress_secs = t0.elapsed_secs();
+
+    let t1 = crate::util::timing::CpuTimer::start();
+    let decoded = if ser == SerializerKind::RootIo.code() {
+        let agents = root_io::deserialize(payload.as_slice()).expect("corrupt ROOT IO payload");
+        pool.put_buf(payload);
+        Decoded::Owned(agents)
+    } else {
+        match delta_kind {
+            DeltaKind::Full if !matches!(compression, Compression::Lz4Delta { .. }) => {
+                Decoded::View(
+                    TaView::parse_with(payload, pool.take_offsets())
+                        .expect("corrupt TA IO payload"),
+                )
+            }
+            _ => Decoded::View(
+                rx.expect("delta wire without a channel (wire_needs_delta_channel drifted)")
+                    .decode_pooled(delta_kind, payload, pool)
+                    .expect("corrupt delta payload"),
+            ),
+        }
+    };
+    stats.deserialize_secs = t1.elapsed_secs();
+    (decoded, stats)
+}
+
 /// Stateful codec for one rank: owns the per-channel delta references and
 /// reused encode buffers.
 pub struct Codec {
@@ -403,6 +489,29 @@ impl Codec {
         jobs: &mut Vec<AuraEncodeJob>,
         pool: &ThreadPool,
     ) -> f64 {
+        self.encode_rm_overlapped(tag, rm, dests, jobs, pool, |_, _, _| {})
+    }
+
+    /// [`Codec::encode_rm_parallel`] without the fork-join barrier: as
+    /// each destination's encode completes, `on_ready(dest_index, wire,
+    /// stats)` runs on the **calling thread** while later encodes are
+    /// still in flight — the engine sends destination 0's wire while
+    /// destination N is still compressing (ROADMAP "overlap encode with
+    /// send"). Completion order is scheduling-dependent, so `on_ready`
+    /// must be order-independent across destinations (sends to distinct
+    /// peers are); wire bytes per destination are byte-identical to the
+    /// serial path for every thread count, exactly as for
+    /// [`Codec::encode_rm_parallel`]. With one pool thread everything
+    /// runs inline in destination order (encode → send → encode → send).
+    pub fn encode_rm_overlapped(
+        &mut self,
+        tag: u32,
+        rm: &ResourceManager,
+        dests: &[(u32, Vec<LocalId>)],
+        jobs: &mut Vec<AuraEncodeJob>,
+        pool: &ThreadPool,
+        mut on_ready: impl FnMut(usize, &[u8], &EncodeStats),
+    ) -> f64 {
         jobs.resize_with(dests.len(), AuraEncodeJob::default);
         if dests.is_empty() {
             return 0.0;
@@ -443,9 +552,13 @@ impl Codec {
             .collect();
         let serializer = self.serializer;
         let compression = self.compression;
-        pool.for_each_mut_timed(&mut work, |_, w| {
-            *w.stats = encode_one_rm(serializer, compression, w.ch, rm, w.ids, w.wire);
-        })
+        pool.for_each_mut_completion(
+            &mut work,
+            |_, w| {
+                *w.stats = encode_one_rm(serializer, compression, w.ch, rm, w.ids, w.wire);
+            },
+            |i, w| on_ready(i, w.wire, w.stats),
+        )
     }
 
     /// Decode a message received on (peer, tag).
@@ -465,49 +578,93 @@ impl Codec {
         wire: &[u8],
         pool: &mut ViewPool,
     ) -> (Decoded, DecodeStats) {
-        let mut stats = DecodeStats::default();
-        assert!(wire.len() >= 6, "wire message too short");
-        let ser = wire[0];
-        let kind_byte = wire[1];
-        let compressed = kind_byte & 0x80 != 0;
-        let delta_kind = DeltaKind::from_code(kind_byte & 0x7F);
-        let raw_len = u32::from_le_bytes(wire[2..6].try_into().unwrap()) as usize;
-        let body = &wire[6..];
-
-        let t0 = std::time::Instant::now();
-        let mut payload = pool.take_buf();
-        if compressed {
-            lz4::decompress_into(body, raw_len, &mut payload).expect("corrupt LZ4 payload");
+        // Channel creation stays lazy: only delta-bearing wires need the
+        // per-channel decoder state (ROOT IO / migration decodes don't).
+        let rx = if wire_needs_delta_channel(self.compression, wire) {
+            Some(self.rx.entry(key).or_insert_with(DeltaDecoder::new))
         } else {
-            payload.set_from_slice(body);
-        }
-        stats.decompress_secs = t0.elapsed().as_secs_f64();
-
-        let t1 = std::time::Instant::now();
-        let decoded = if ser == SerializerKind::RootIo.code() {
-            let agents =
-                root_io::deserialize(payload.as_slice()).expect("corrupt ROOT IO payload");
-            pool.put_buf(payload);
-            Decoded::Owned(agents)
-        } else {
-            match delta_kind {
-                DeltaKind::Full if !matches!(self.compression, Compression::Lz4Delta { .. }) => {
-                    Decoded::View(
-                        TaView::parse_with(payload, pool.take_offsets())
-                            .expect("corrupt TA IO payload"),
-                    )
-                }
-                _ => {
-                    let dec = self.rx.entry(key).or_insert_with(DeltaDecoder::new);
-                    Decoded::View(
-                        dec.decode_pooled(delta_kind, payload, pool)
-                            .expect("corrupt delta payload"),
-                    )
-                }
-            }
+            None
         };
-        stats.deserialize_secs = t1.elapsed().as_secs_f64();
-        (decoded, stats)
+        decode_one(self.compression, rx, wire, pool)
+    }
+
+    /// Decode one already-received wire per source **in parallel** on the
+    /// rank's thread pool — the receive-side mirror of
+    /// [`Codec::encode_rm_parallel`]. Each source decodes through its own
+    /// channel's [`DeltaDecoder`] into its own job-local buffer pool, so
+    /// the decodes are independent and the decoded bytes cannot depend on
+    /// which worker (or how many) ran them; `jobs[k]` afterwards holds
+    /// source `srcs[k]`'s [`Decoded`] view and stats in **source order**,
+    /// regardless of the order the wires arrived in.
+    ///
+    /// `jobs` is caller-owned scratch aligned with `srcs`. Buffer flow:
+    /// each job pool is seeded with one aligned buffer + one offset index
+    /// from `view_pool` before the fan-out and drained back after, so the
+    /// shared pool's closed recycle loop (pool → decode → aura store →
+    /// pool) is preserved and the steady state allocates nothing. Returns
+    /// the region's critical-path CPU seconds.
+    pub fn decode_pooled_parallel(
+        &mut self,
+        tag: u32,
+        srcs: &[u32],
+        wires: &[Vec<u8>],
+        jobs: &mut Vec<AuraDecodeJob>,
+        view_pool: &mut ViewPool,
+        pool: &ThreadPool,
+    ) -> f64 {
+        assert_eq!(srcs.len(), wires.len(), "one wire per source");
+        jobs.resize_with(srcs.len(), AuraDecodeJob::default);
+        if srcs.is_empty() {
+            return 0.0;
+        }
+        for &src in srcs {
+            self.rx.entry((src, tag)).or_insert_with(DeltaDecoder::new);
+        }
+        // Disjoint `&mut` decoder refs, reordered to match `srcs` (unique
+        // by construction: neighbor-rank sets).
+        let mut decs: Vec<Option<&mut DeltaDecoder>> = Vec::new();
+        decs.resize_with(srcs.len(), || None);
+        for (key, dec) in self.rx.iter_mut() {
+            if key.1 != tag {
+                continue;
+            }
+            if let Some(i) = srcs.iter().position(|&s| s == key.0) {
+                debug_assert!(decs[i].is_none(), "duplicate source in aura decode batch");
+                decs[i] = Some(dec);
+            }
+        }
+        struct Work<'a> {
+            wire: &'a [u8],
+            dec: &'a mut DeltaDecoder,
+            job: &'a mut AuraDecodeJob,
+        }
+        let mut work: Vec<Work<'_>> = decs
+            .into_iter()
+            .zip(wires)
+            .zip(jobs.iter_mut())
+            .map(|((dec, wire), job)| {
+                // Seed the job-local pool so the worker never touches the
+                // shared one (a decode consumes at most one buffer + one
+                // offset index).
+                job.pool.put_buf(view_pool.take_buf());
+                job.pool.put_offsets(view_pool.take_offsets());
+                job.decoded = None;
+                Work { wire, dec: dec.expect("channel created above"), job }
+            })
+            .collect();
+        let compression = self.compression;
+        let cpu = pool.for_each_mut_timed(&mut work, |_, w| {
+            let (decoded, stats) =
+                decode_one(compression, Some(&mut *w.dec), w.wire, &mut w.job.pool);
+            w.job.decoded = Some(decoded);
+            w.job.stats = stats;
+        });
+        // Unused seeds (and the ROOT IO path's returned payload buffer)
+        // go back to the shared pool.
+        for job in jobs.iter_mut() {
+            job.pool.drain_into(view_pool);
+        }
+        cpu
     }
 
     /// Bytes held by delta references (Fig. 11c's memory overhead).
@@ -689,6 +846,117 @@ mod tests {
                             comp.name()
                         );
                         assert!(job.stats.raw_bytes > 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_encode_streams_every_wire_exactly_once_with_serial_bytes() {
+        use crate::core::resource_manager::ResourceManager;
+        use crate::engine::pool::ThreadPool;
+        let comp = Compression::Lz4Delta { period: 3 };
+        let mut ags = agents(50, 91);
+        let mut rm = ResourceManager::new(0);
+        let ids: Vec<_> = ags.iter().map(|a| rm.add(a.clone())).collect();
+        let dests: Vec<(u32, Vec<_>)> = vec![
+            (1, ids[..30].to_vec()),
+            (2, ids[10..].to_vec()),
+            (4, ids.iter().copied().step_by(2).collect()),
+        ];
+        let mut serial = Codec::new(SerializerKind::TaIo, comp);
+        let mut overlapped = Codec::new(SerializerKind::TaIo, comp);
+        let mut jobs = Vec::new();
+        for iter in 0..4 {
+            for (a, &id) in ags.iter_mut().zip(&ids) {
+                a.position.x += 0.75;
+                assert!(rm.set_position(id, a.position));
+            }
+            let mut want: Vec<Vec<u8>> = Vec::new();
+            for (dest, sel) in &dests {
+                let mut wire = Vec::new();
+                serial.encode_rm_into((*dest, 7), &rm, sel, &mut wire);
+                want.push(wire);
+            }
+            let pool = ThreadPool::new(4);
+            let mut ready = vec![0u32; dests.len()];
+            overlapped.encode_rm_overlapped(7, &rm, &dests, &mut jobs, &pool, |i, wire, stats| {
+                // The streamed wire is the finished per-destination
+                // message, byte-identical to the serial path.
+                assert_eq!(wire, &want[i][..], "iter {iter}, dest {i}");
+                assert!(stats.raw_bytes > 0);
+                ready[i] += 1;
+            });
+            assert!(ready.iter().all(|&r| r == 1), "each destination streamed exactly once");
+            for (j, job) in jobs.iter().enumerate() {
+                assert_eq!(job.wire, want[j], "iter {iter}, dest {j} (post-join)");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_decode_matches_serial_in_source_order() {
+        use crate::engine::pool::ThreadPool;
+        use crate::io::ta_io::ViewPool;
+        for comp in [Compression::None, Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let srcs = [3u32, 7, 11];
+            let mut txs: Vec<Codec> =
+                srcs.iter().map(|_| Codec::new(SerializerKind::TaIo, comp)).collect();
+            let mut rx_serial = Codec::new(SerializerKind::TaIo, comp);
+            let mut rx_par: Vec<Codec> =
+                (0..3).map(|_| Codec::new(SerializerKind::TaIo, comp)).collect();
+            let mut pops: Vec<Vec<Agent>> =
+                (0..3).map(|k| agents(20 + 10 * k, 100 + k as u64)).collect();
+            let mut pool_serial = ViewPool::new();
+            let mut pools_par: Vec<ViewPool> = (0..3).map(|_| ViewPool::new()).collect();
+            let mut jobs_par: Vec<Vec<AuraDecodeJob>> = (0..3).map(|_| Vec::new()).collect();
+            for iter in 0..5 {
+                let mut wires: Vec<Vec<u8>> = Vec::new();
+                for (k, tx) in txs.iter_mut().enumerate() {
+                    for a in pops[k].iter_mut() {
+                        a.position.y += 0.25;
+                    }
+                    let (w, _) = tx.encode((0, 9), pops[k].iter());
+                    wires.push(w);
+                }
+                // Serial oracle: per-source decode_pooled in source order.
+                let want: Vec<Vec<(u64, [f64; 3])>> = srcs
+                    .iter()
+                    .zip(&wires)
+                    .map(|(&s, w)| {
+                        let (d, _) = rx_serial.decode_pooled((s, 9), w, &mut pool_serial);
+                        let out = d
+                            .into_agents()
+                            .iter()
+                            .map(|a| (a.global_id.counter, a.position.to_array()))
+                            .collect();
+                        out
+                    })
+                    .collect();
+                for (ti, threads) in [1usize, 2, 8].into_iter().enumerate() {
+                    let tpool = ThreadPool::new(threads);
+                    rx_par[ti].decode_pooled_parallel(
+                        9,
+                        &srcs,
+                        &wires,
+                        &mut jobs_par[ti],
+                        &mut pools_par[ti],
+                        &tpool,
+                    );
+                    for (k, job) in jobs_par[ti].iter_mut().enumerate() {
+                        let got: Vec<(u64, [f64; 3])> = job
+                            .take()
+                            .expect("decoded missing")
+                            .into_agents()
+                            .iter()
+                            .map(|a| (a.global_id.counter, a.position.to_array()))
+                            .collect();
+                        assert_eq!(
+                            got, want[k],
+                            "{}: iter {iter}, src {k}, {threads} threads",
+                            comp.name()
+                        );
                     }
                 }
             }

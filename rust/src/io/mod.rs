@@ -28,9 +28,13 @@
 //!   refresh) and LZ4 scratch; callers own the wire vectors
 //!   ([`codec::Codec::encode_rm_into`] and friends write into them).
 //!   Because all sender state is per-channel, the per-destination aura
-//!   encodes fan out on the rank's thread pool
-//!   ([`codec::Codec::encode_rm_parallel`]) with byte-identical output
-//!   at any thread count.
+//!   encodes fan out on the rank's thread pool with byte-identical
+//!   output at any thread count — fork-join
+//!   ([`codec::Codec::encode_rm_parallel`]) or completion-ordered, each
+//!   finished wire streamed to the transport while later encodes run
+//!   ([`codec::Codec::encode_rm_overlapped`]). Receiver state is
+//!   per-channel too, so per-source decodes fan out the same way
+//!   ([`codec::Codec::decode_pooled_parallel`]).
 //!
 //! # Receive path (zero-copy end to end)
 //!

@@ -597,6 +597,10 @@ pub struct TaView {
     agent_offsets: Vec<u32>,
     expected_blocks: u32,
     released_blocks: u32,
+    /// Non-placeholder agent count, counted during the parse walk — the
+    /// aura ingest sizes its pre-reserved ranges from this without a
+    /// second pass over the blocks.
+    live: u32,
     flags: u8,
 }
 
@@ -627,13 +631,15 @@ impl TaView {
         offsets.clear();
         offsets.reserve(h.agent_count as usize);
         let mut off = HEADER_BYTES;
+        let mut live = 0u32;
         for _ in 0..h.agent_count {
             if off + AGENT_BLOCK_BYTES > buf.len() {
                 return Err(TaError::Truncated);
             }
             offsets.push(off as u32);
-            let nb = unsafe { (*(buf.as_ptr().add(off) as *const AgentBlock)).n_behaviors };
-            off += AGENT_BLOCK_BYTES + nb as usize * BEHAVIOR_BLOCK_BYTES;
+            let block = unsafe { &*(buf.as_ptr().add(off) as *const AgentBlock) };
+            live += u32::from(!block.is_placeholder());
+            off += AGENT_BLOCK_BYTES + block.n_behaviors as usize * BEHAVIOR_BLOCK_BYTES;
             if off > buf.len() {
                 return Err(TaError::Truncated);
             }
@@ -643,6 +649,7 @@ impl TaView {
             agent_offsets: offsets,
             expected_blocks: h.block_count,
             released_blocks: 0,
+            live,
             flags: h.flags,
         })
     }
@@ -650,6 +657,11 @@ impl TaView {
     /// Number of agent slots (placeholders included).
     pub fn len(&self) -> usize {
         self.agent_offsets.len()
+    }
+
+    /// Number of non-placeholder agents (what materializes / mirrors).
+    pub fn live_len(&self) -> usize {
+        self.live as usize
     }
 
     pub fn is_empty(&self) -> bool {
@@ -804,6 +816,14 @@ impl ViewPool {
     pub fn put_offsets(&mut self, mut offs: Vec<u32>) {
         offs.clear();
         self.offs.push(offs);
+    }
+
+    /// Move all parked storage into `other` — used to drain the job-local
+    /// pools of the parallel aura decode back into the rank's shared pool
+    /// after the fan-out, keeping the buffer recycle loop closed.
+    pub fn drain_into(&mut self, other: &mut ViewPool) {
+        other.bufs.append(&mut self.bufs);
+        other.offs.append(&mut self.offs);
     }
 
     /// Recycle a spent view's storage.

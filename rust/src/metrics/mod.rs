@@ -41,10 +41,14 @@ pub enum Op {
     Visualization,
     /// Time blocked in the transport (waiting on sends/receives).
     Transfer,
+    /// CPU spent copying/reassembling received frames into whole wires —
+    /// split out of [`Op::Transfer`] so blocked wall-clock wait on a slow
+    /// peer and real copy work no longer share a bucket.
+    Reassembly,
 }
 
 impl Op {
-    pub const ALL: [Op; 11] = [
+    pub const ALL: [Op; 12] = [
         Op::AuraUpdate,
         Op::AgentOps,
         Op::Migration,
@@ -56,6 +60,7 @@ impl Op {
         Op::NsgUpdate,
         Op::Visualization,
         Op::Transfer,
+        Op::Reassembly,
     ];
 
     pub fn name(self) -> &'static str {
@@ -71,6 +76,7 @@ impl Op {
             Op::NsgUpdate => "nsg_update",
             Op::Visualization => "visualization",
             Op::Transfer => "transfer",
+            Op::Reassembly => "reassembly",
         }
     }
 }
@@ -82,8 +88,12 @@ pub enum Counter {
     BytesSentWire,
     /// Bytes of the serialized payload before compression.
     BytesSentRaw,
-    /// Number of messages sent.
+    /// Transport frames sent. Chunked sends (`send_batched`) count one
+    /// per frame, not one per logical message, so the
+    /// BytesSentWire/MessagesSent ratio reflects what the fabric saw.
     MessagesSent,
+    /// Transport frames received (framed streams only — the aura path).
+    MessagesReceived,
     /// Agents migrated away from this rank.
     AgentsMigratedOut,
     /// Aura agents sent.
@@ -95,10 +105,11 @@ pub enum Counter {
 }
 
 impl Counter {
-    pub const ALL: [Counter; 7] = [
+    pub const ALL: [Counter; 8] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
+        Counter::MessagesReceived,
         Counter::AgentsMigratedOut,
         Counter::AuraAgentsSent,
         Counter::AgentUpdates,
@@ -110,6 +121,7 @@ impl Counter {
             Counter::BytesSentWire => "bytes_sent_wire",
             Counter::BytesSentRaw => "bytes_sent_raw",
             Counter::MessagesSent => "messages_sent",
+            Counter::MessagesReceived => "messages_received",
             Counter::AgentsMigratedOut => "agents_migrated_out",
             Counter::AuraAgentsSent => "aura_agents_sent",
             Counter::AgentUpdates => "agent_updates",

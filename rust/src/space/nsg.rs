@@ -76,6 +76,17 @@
 //! bit-identical for every thread count, and identical to serial
 //! insertion.
 //!
+//! The **aura side** gets the same treatment each iteration:
+//! [`add_aura_ranges`] registers all received aura agents wholesale.
+//! Senders stream Morton-sorted slots, so each source's range arrives
+//! cell-sorted for *this* grid (all ranks share the whole-space cell
+//! map); the fill cuts the id space into same-cell runs, groups a cell's
+//! runs across sources in id order, and shard/splices private aura
+//! chains exactly like the owned rebuild — with the serial `add_aura`
+//! loop as the fallback and equivalence oracle.
+//!
+//! [`add_aura_ranges`]: NeighborSearchGrid::add_aura_ranges
+//!
 //! # Invariants
 //!
 //! 1. At most one live entry per owned slot `index`; re-adding an index
@@ -84,9 +95,10 @@
 //!    the unique packed slot holding the entry, and that slot's
 //!    `(index, reuse)` / `aura` field points back at the handle.
 //! 3. Non-tail owned buckets are always full; empty buckets are returned
-//!    to the free list immediately, so query walks never visit dead space
-//!    (aura tombstones from explicit `remove` are the one exception and
-//!    are skipped by key; the engine never takes that path).
+//!    to the free list immediately, so query walks never visit dead space.
+//!    Aura chains hold the same packing invariant (non-head buckets full,
+//!    no tombstones): explicit aura `remove` back-fills from the head
+//!    bucket's last slot, mirroring the owned swap-remove.
 //! 4. Entry positions are a denormalized copy owned by the grid; the
 //!    engine keeps them in sync via [`NeighborSearchGrid::update_position`]
 //!    (queries never chase agent storage).
@@ -398,6 +410,19 @@ pub struct NeighborSearchGrid {
     ///
     /// [`rebuild_owned`]: NeighborSearchGrid::rebuild_owned
     rebuild_was_parallel: bool,
+    /// Per-aura-id Morton cell indices, reused across
+    /// [`add_aura_ranges`] calls (capacity-reuse only).
+    ///
+    /// [`add_aura_ranges`]: NeighborSearchGrid::add_aura_ranges
+    aura_fill_cells: Vec<u32>,
+    /// Same-cell runs `(cell, start, end)` for the bulk aura fill
+    /// (capacity-reuse only).
+    aura_fill_runs: Vec<(u32, u32, u32)>,
+    /// Whether the last [`add_aura_ranges`] took the sharded parallel
+    /// path (false: serial fallback, or no bulk fill yet).
+    ///
+    /// [`add_aura_ranges`]: NeighborSearchGrid::add_aura_ranges
+    aura_fill_was_parallel: bool,
 }
 
 impl NeighborSearchGrid {
@@ -425,6 +450,9 @@ impl NeighborSearchGrid {
             aura_len: 0,
             rebuild_cells: Vec::new(),
             rebuild_was_parallel: false,
+            aura_fill_cells: Vec::new(),
+            aura_fill_runs: Vec::new(),
+            aura_fill_was_parallel: false,
         }
     }
 
@@ -436,6 +464,18 @@ impl NeighborSearchGrid {
     /// snapshots and doesn't silently rot away.
     pub fn last_rebuild_was_parallel(&self) -> bool {
         self.rebuild_was_parallel
+    }
+
+    /// Did the last [`add_aura_ranges`](Self::add_aura_ranges) run the
+    /// sharded parallel path (vs. the serial `add_aura` fallback)? Same
+    /// contract as [`last_rebuild_was_parallel`]: the fallback is
+    /// correctness-equivalent, and this probe exists so tests and the
+    /// micro-benchmark can assert the fast path actually engages for
+    /// cell-sorted received views and doesn't silently rot away.
+    ///
+    /// [`last_rebuild_was_parallel`]: Self::last_rebuild_was_parallel
+    pub fn last_aura_fill_was_parallel(&self) -> bool {
+        self.aura_fill_was_parallel
     }
 
     pub fn cell_size(&self) -> f64 {
@@ -845,12 +885,19 @@ impl NeighborSearchGrid {
     // ----- aura arena internals --------------------------------------------
 
     fn add_aura(&mut self, aura: u32, pos: Vec3) {
+        let ci = self.cell_of(pos);
+        self.add_aura_in_cell(aura, pos, ci);
+    }
+
+    /// [`add_aura`](Self::add_aura) with the cell precomputed — the body
+    /// shared by single adds and the bulk fill's serial fallback (which
+    /// already computed every entry's cell in its parallel first pass).
+    fn add_aura_in_cell(&mut self, aura: u32, pos: Vec3, ci: usize) {
         let idx = aura as usize;
         if idx >= self.aura_handles.len() {
             self.aura_handles.resize(idx + 1, NIL);
         }
         debug_assert!(self.aura_handles[idx] == NIL, "duplicate NSG entry Aura({aura})");
-        let ci = self.cell_of(pos);
         let head = self.cells[ci].aura_head;
         let b = if head == NIL || self.aura_buckets[head as usize].len as usize == BUCKET_CAP {
             let nb = self.alloc_aura_bucket();
@@ -884,20 +931,205 @@ impl NeighborSearchGrid {
         b as u32
     }
 
-    /// Individual aura removal leaves a tombstone (`aura == NIL`) that
-    /// queries skip; the slot is reclaimed by the next `clear_aura`. The
-    /// engine's aura lifecycle (bulk add, bulk clear) never takes this
-    /// path — it exists for API symmetry and tests.
+    /// Reserve `count` consecutive buckets from the bump arena (the bulk
+    /// aura fill's splice); returns the first bucket index. Contents are
+    /// overwritten wholesale by the caller.
+    fn alloc_aura_block(&mut self, count: usize) -> u32 {
+        let base = self.aura_used;
+        self.aura_used += count;
+        if self.aura_buckets.len() < self.aura_used {
+            self.aura_buckets.resize(self.aura_used, EMPTY_AURA_BUCKET);
+        }
+        base as u32
+    }
+
+    /// Individual aura removal back-fills the hole with the chain's most
+    /// recent slot (the head bucket's last entry — the aura mirror of the
+    /// owned swap-remove), so buckets stay packed and no tombstone is
+    /// left counted in a bucket's `len`. The emptied cell stays on
+    /// `aura_cells` (its head is `NIL`; `clear_aura` resets it
+    /// harmlessly, and a re-add before the next clear pushes a duplicate
+    /// entry, which is also harmless — the list is only ever used to
+    /// reset heads). The engine's aura lifecycle (bulk add, bulk clear)
+    /// never takes this path — it exists for API symmetry and tests.
     fn remove_aura(&mut self, aura: u32) -> bool {
         let idx = aura as usize;
         if idx >= self.aura_handles.len() || self.aura_handles[idx] == NIL {
             return false;
         }
         let (b, s) = unpack(self.aura_handles[idx]);
-        self.aura_buckets[b].slots[s].aura = NIL;
+        let ci = self.cell_of(self.aura_buckets[b].slots[s].pos);
+        let head = self.cells[ci].aura_head as usize;
+        let last = self.aura_buckets[head].len as usize - 1;
+        if (head, last) != (b, s) {
+            let moved = self.aura_buckets[head].slots[last];
+            debug_assert!(moved.aura != NIL, "tombstone in packed aura chain");
+            self.aura_buckets[b].slots[s] = moved;
+            self.aura_handles[moved.aura as usize] = pack(b, s);
+        }
+        self.aura_buckets[head].len -= 1;
+        if self.aura_buckets[head].len == 0 {
+            self.cells[ci].aura_head = self.aura_buckets[head].next;
+            // Reclaim the bump slot when it is the newest allocation.
+            if head + 1 == self.aura_used {
+                self.aura_used -= 1;
+            }
+        }
         self.aura_handles[idx] = NIL;
         self.aura_len -= 1;
         true
+    }
+
+    // ----- bulk aura fill (Morton-sharded) ---------------------------------
+
+    /// Register a whole iteration's aura agents at once. `ranges` are the
+    /// consecutive per-source aura-id ranges returned by the store's
+    /// ingest (`AuraStore::add_sources`) and `pos_of_aura` is the flat
+    /// position column indexed by aura id.
+    ///
+    /// Senders iterate Morton-sorted slots, so after the periodic agent
+    /// sort each received view's agents arrive in ascending cell order
+    /// *of this grid* (every rank quantizes the same whole-space bounds
+    /// with the same cell edge). When that holds for every source range —
+    /// and the touched cells hold no prior aura entries — the fill runs
+    /// the same shard/splice machinery as [`rebuild_owned`]:
+    ///
+    /// 1. compute each aura id's cell index (parallel, disjoint writes);
+    /// 2. cut the id space into same-cell runs, group each cell's runs in
+    ///    id order (stable sort — a cell straddling two sources keeps its
+    ///    sources' insertion order), and split the groups into one part
+    ///    per worker at cell boundaries;
+    /// 3. fill **private** bucket chains per part (`build_aura_shard`,
+    ///    replicating `add_aura`'s newest-bucket-first chain discipline)
+    ///    and splice them serially by rebasing links into the bump arena.
+    ///
+    /// Each cell's chain is built by exactly one worker from the same
+    /// entry sequence serial insertion would see, so chain traversal —
+    /// and therefore every query result — is identical to the serial
+    /// `add_aura` loop for every thread count and arrival order. Inputs
+    /// violating the preconditions take that serial loop as fallback
+    /// (correctness is never data-dependent); the handle table is
+    /// pre-reserved for the whole batch either way. Returns the parallel
+    /// regions' critical-path CPU seconds.
+    ///
+    /// [`rebuild_owned`]: Self::rebuild_owned
+    pub fn add_aura_ranges(
+        &mut self,
+        ranges: &[std::ops::Range<u32>],
+        pos_of_aura: &[Vec3],
+        pool: &ThreadPool,
+    ) -> f64 {
+        self.aura_fill_was_parallel = false;
+        let lo = ranges.first().map(|r| r.start).unwrap_or(0) as usize;
+        let hi = ranges.last().map(|r| r.end).unwrap_or(0) as usize;
+        debug_assert!(
+            ranges.windows(2).all(|w| w[0].end == w[1].start),
+            "aura ranges must be consecutive"
+        );
+        let n = hi - lo;
+        if n == 0 {
+            return 0.0;
+        }
+        // Pre-reserve the handle table once for the whole batch — the
+        // per-entry `resize(idx + 1)` growth pattern is gone.
+        if self.aura_handles.len() < hi {
+            self.aura_handles.resize(hi, NIL);
+        }
+        // Pass 1 (parallel): Morton cell index of every aura id.
+        let mut cells_of = std::mem::take(&mut self.aura_fill_cells);
+        cells_of.clear();
+        cells_of.resize(n, 0);
+        let map = &self.map;
+        let mut cpu = pool.for_each_mut_timed(&mut cells_of, |k, c| {
+            *c = map.cell_of(pos_of_aura[lo + k]) as u32;
+        });
+        // Preconditions for the sharded path: every source range is
+        // cell-sorted, and no touched cell already holds aura entries
+        // (the engine clears the aura side first; mixed incremental use
+        // falls back).
+        let sorted = ranges.iter().all(|r| {
+            let s = r.start as usize - lo;
+            let e = r.end as usize - lo;
+            cells_of[s..e].windows(2).all(|w| w[0] <= w[1])
+        });
+        let untouched = || {
+            cells_of
+                .iter()
+                .all(|&c| self.cells[c as usize].aura_head == NIL)
+        };
+        if !sorted || !untouched() {
+            for k in 0..n {
+                self.add_aura_in_cell((lo + k) as u32, pos_of_aura[lo + k], cells_of[k] as usize);
+            }
+            self.aura_fill_cells = cells_of;
+            return cpu;
+        }
+        self.aura_fill_was_parallel = true;
+        // Same-cell runs over the whole batch (runs may merge across a
+        // source boundary — ids stay consecutive — and one cell may own
+        // several runs, one per source that touches it).
+        let mut runs = std::mem::take(&mut self.aura_fill_runs);
+        runs.clear();
+        let mut s = 0usize;
+        for k in 1..=n {
+            if k == n || cells_of[k] != cells_of[s] {
+                runs.push((cells_of[s], s as u32, k as u32));
+                s = k;
+            }
+        }
+        // Group each cell's runs together, keeping id (= source) order
+        // within a cell — the exact sequence serial insertion would
+        // append. Run starts are unique and ascending, so the (cell,
+        // start) key makes the allocation-free unstable sort produce
+        // exactly the stable-by-cell order.
+        runs.sort_unstable_by_key(|&(c, s, _)| (c, s));
+        // Part boundaries: near-equal run chunks advanced past same-cell
+        // groups, so every cell belongs to exactly one worker.
+        let parts = pool.threads().min(runs.len());
+        let chunk = runs.len().div_ceil(parts);
+        let mut bounds_v: Vec<usize> = Vec::with_capacity(parts + 1);
+        bounds_v.push(0);
+        for t in 1..parts {
+            let mut b = (t * chunk).min(runs.len());
+            while b < runs.len() && runs[b].0 == runs[b - 1].0 {
+                b += 1;
+            }
+            let last = *bounds_v.last().unwrap();
+            bounds_v.push(b.max(last));
+        }
+        bounds_v.push(runs.len());
+        // Pass 2 (parallel): private aura bucket chains per part.
+        let runs_ref = &runs;
+        let (shards, shard_cpu) = pool.map_parts_timed(&bounds_v, |_, s, e| {
+            build_aura_shard(&runs_ref[s..e], lo, pos_of_aura)
+        });
+        cpu += shard_cpu;
+        // Pass 3 (serial splice): copy each shard's buckets into the bump
+        // arena and rebase chain links, heads and handle refs.
+        for shard in shards {
+            let base = self.alloc_aura_block(shard.buckets.len());
+            for (j, mut b) in shard.buckets.into_iter().enumerate() {
+                if b.next != NIL {
+                    b.next += base;
+                }
+                self.aura_buckets[base as usize + j] = b;
+            }
+            for (ci, head) in shard.chains {
+                debug_assert!(
+                    self.cells[ci as usize].aura_head == NIL,
+                    "aura cell filled by two workers"
+                );
+                self.cells[ci as usize].aura_head = head + base;
+                self.aura_cells.push(ci);
+            }
+            for (aura_idx, r) in shard.refs {
+                self.aura_handles[aura_idx as usize] = r + base * BUCKET_CAP as u32;
+            }
+        }
+        self.aura_len += n;
+        self.aura_fill_cells = cells_of;
+        self.aura_fill_runs = runs;
+        cpu
     }
 
     // ----- queries ----------------------------------------------------------
@@ -1016,8 +1248,10 @@ impl NeighborSearchGrid {
             + self.aura_handles.capacity() * 4
             + self.aura_cells.capacity() * 4;
         let morton = (self.map.mx.capacity() + self.map.my.capacity() + self.map.mz.capacity()
-            + self.rebuild_cells.capacity())
-            * 4;
+            + self.rebuild_cells.capacity()
+            + self.aura_fill_cells.capacity())
+            * 4
+            + self.aura_fill_runs.capacity() * std::mem::size_of::<(u32, u32, u32)>();
         (cells + owned + aura + morton) as u64
     }
 
@@ -1086,6 +1320,59 @@ fn build_shard(s: usize, e: usize, cells_of: &[u32], ids: &[LocalId], pos: &[Vec
         };
         bucket.len += 1;
         sh.refs.push(tail * BUCKET_CAP as u32 + si as u32);
+    }
+    sh
+}
+
+/// Private per-worker arena for
+/// [`NeighborSearchGrid::add_aura_ranges`]: aura bucket chains for a
+/// disjoint set of cells, with chain links and slot refs in *local*
+/// indices (rebased when spliced into the bump arena).
+struct AuraShard {
+    buckets: Vec<AuraBucket>,
+    /// `(cell index, local head bucket)` per chain.
+    chains: Vec<(u32, u32)>,
+    /// `(aura id, local packed slot ref)` per entry.
+    refs: Vec<(u32, u32)>,
+}
+
+/// Fill one worker's aura shard from `runs` (same-cell spans, grouped by
+/// cell, each group's runs in id order). The chain discipline replicates
+/// `add_aura` exactly — a fresh bucket whenever the head is absent or
+/// full, linked newest-first — so the spliced chains traverse in the
+/// same order serial insertion produces: last partial chunk first, then
+/// earlier full chunks newest to oldest, slots within a bucket in
+/// insertion order.
+fn build_aura_shard(runs: &[(u32, u32, u32)], lo: usize, pos: &[Vec3]) -> AuraShard {
+    let total: usize = runs.iter().map(|&(_, s, e)| (e - s) as usize).sum();
+    let mut sh = AuraShard {
+        buckets: Vec::with_capacity(total.div_ceil(BUCKET_CAP) + runs.len()),
+        chains: Vec::new(),
+        refs: Vec::with_capacity(total),
+    };
+    let mut i = 0;
+    while i < runs.len() {
+        let cell = runs[i].0;
+        let mut head = NIL;
+        while i < runs.len() && runs[i].0 == cell {
+            let (_, s, e) = runs[i];
+            for k in s..e {
+                let aura = (lo + k as usize) as u32;
+                if head == NIL || sh.buckets[head as usize].len as usize == BUCKET_CAP {
+                    let nb = sh.buckets.len() as u32;
+                    sh.buckets.push(EMPTY_AURA_BUCKET);
+                    sh.buckets[nb as usize].next = head;
+                    head = nb;
+                }
+                let bucket = &mut sh.buckets[head as usize];
+                let slot = bucket.len as usize;
+                bucket.slots[slot] = AuraSlot { pos: pos[lo + k as usize], aura };
+                bucket.len += 1;
+                sh.refs.push((aura, pack(head as usize, slot)));
+            }
+            i += 1;
+        }
+        sh.chains.push((cell, head));
     }
     sh
 }
@@ -1358,7 +1645,7 @@ mod tests {
     }
 
     #[test]
-    fn aura_remove_tombstone_skipped() {
+    fn aura_remove_back_fills_and_keeps_chain_packed() {
         let mut g = grid();
         g.add(NsgEntry::Aura(0), Vec3::new(1.0, 1.0, 1.0));
         g.add(NsgEntry::Aura(1), Vec3::new(1.5, 1.0, 1.0));
@@ -1368,9 +1655,211 @@ mod tests {
         let n = g.neighbors_of(Vec3::new(1.0, 1.0, 1.0), 3.0, None);
         assert_eq!(n.len(), 1);
         assert_eq!(n[0].0, NsgEntry::Aura(1));
-        // Update of a live aura entry across cells.
+        // The back-filled survivor's handle still resolves: update of a
+        // live aura entry across cells.
         g.update_position(NsgEntry::Aura(1), Vec3::new(44.0, 44.0, 44.0));
         assert_eq!(g.neighbors_of(Vec3::new(44.0, 44.0, 44.0), 1.0, None).len(), 1);
+        // Multi-bucket chain: drain from the middle, every survivor must
+        // stay reachable and the accounting exact.
+        let mut g = grid();
+        let n = (3 * BUCKET_CAP) as u32;
+        for i in 0..n {
+            g.add(NsgEntry::Aura(i), Vec3::new(2.0 + 0.01 * i as f64, 2.0, 2.0));
+        }
+        for i in (0..n).step_by(2) {
+            assert!(g.remove(NsgEntry::Aura(i)));
+        }
+        assert_eq!(g.len(), (n / 2) as usize);
+        let found = g.neighbors_of(Vec3::new(2.0, 2.0, 2.0), 2.0, None);
+        assert_eq!(found.len(), (n / 2) as usize, "no slot may be lost or double-counted");
+        for (e, _, _) in &found {
+            match e {
+                NsgEntry::Aura(i) => assert_eq!(i % 2, 1),
+                _ => unreachable!(),
+            }
+        }
+        // Emptying a cell entirely leaves the grid consistent for re-adds
+        // before the next clear.
+        for i in (1..n).step_by(2) {
+            assert!(g.remove(NsgEntry::Aura(i)));
+        }
+        assert_eq!(g.len(), 0);
+        g.add(NsgEntry::Aura(7), Vec3::new(2.0, 2.0, 2.0));
+        assert_eq!(g.neighbors_of(Vec3::new(2.0, 2.0, 2.0), 1.0, None).len(), 1);
+        g.clear_aura();
+        assert!(g.is_empty());
+    }
+
+    // ----- Morton-sharded bulk aura fill -----------------------------------
+
+    /// Per-source cell-sorted aura workload: `sources` populations, each
+    /// sorted by this grid's Morton curve (what senders produce after the
+    /// periodic agent sort), returned as consecutive ranges + flat
+    /// positions.
+    fn aura_workload(
+        g: &mut Gen,
+        bounds: Aabb,
+        cell: f64,
+        sources: usize,
+        per_source: std::ops::Range<usize>,
+    ) -> (Vec<std::ops::Range<u32>>, Vec<Vec3>) {
+        let map = CellMap::new(bounds, cell);
+        let mut pos: Vec<Vec3> = Vec::new();
+        let mut ranges = Vec::new();
+        for _ in 0..sources {
+            let n = g.usize_in(per_source.start..=per_source.end - 1);
+            let lo = [bounds.min.x - 2.0; 3];
+            let hi = [bounds.max.x + 2.0; 3];
+            let mut p: Vec<Vec3> = (0..n).map(|_| Vec3::from_array(g.rng().point_in(lo, hi))).collect();
+            p.sort_by_key(|q| {
+                crate::core::resource_manager::morton3_in_grid(*q - bounds.min, map.cell, map.dims)
+            });
+            let start = pos.len() as u32;
+            pos.extend(p);
+            ranges.push(start..pos.len() as u32);
+        }
+        (ranges, pos)
+    }
+
+    #[test]
+    fn bulk_aura_fill_identical_to_serial_add_at_any_thread_count() {
+        check("aura fill == serial add_aura at 1/2/8 threads", 12, |g: &mut Gen| {
+            let side = g.f64_in(20.0, 60.0);
+            let cell = g.f64_in(2.0, 9.0);
+            let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(side));
+            let sources = g.usize_in(1..=6);
+            let (ranges, pos) = aura_workload(g, bounds, cell, sources, 0..120);
+            let total = pos.len();
+            // Oracle: the serial per-agent loop, plus some owned entries
+            // to prove the two sides coexist.
+            let mut serial = NeighborSearchGrid::new(bounds, cell);
+            let mut owned_pos = Vec::new();
+            for i in 0..10u32 {
+                let p = Vec3::from_array(g.rng().point_in([0.0; 3], [side; 3]));
+                serial.add(oid(i), p);
+                owned_pos.push(p);
+            }
+            for (i, p) in pos.iter().enumerate() {
+                serial.add(NsgEntry::Aura(i as u32), *p);
+            }
+            let centers: Vec<(Vec3, f64)> = (0..25)
+                .map(|_| {
+                    (
+                        Vec3::from_array(g.rng().point_in([-2.0; 3], [side + 2.0; 3])),
+                        g.f64_in(0.5, side / 2.0),
+                    )
+                })
+                .collect();
+            for threads in [1usize, 2, 8] {
+                let pool = crate::engine::pool::ThreadPool::new(threads);
+                let mut grid = NeighborSearchGrid::new(bounds, cell);
+                for (i, p) in owned_pos.iter().enumerate() {
+                    grid.add(oid(i as u32), *p);
+                }
+                let cpu = grid.add_aura_ranges(&ranges, &pos, &pool);
+                assert!(cpu >= 0.0);
+                assert_eq!(grid.len(), serial.len(), "{threads} threads");
+                // Cell-sorted sources must take the sharded path (the
+                // probe the engine and bench assert on).
+                assert_eq!(
+                    grid.last_aura_fill_was_parallel(),
+                    total > 0,
+                    "{threads} threads: expected the sharded aura fill"
+                );
+                // Same chains => same bucket high-water as serial.
+                assert_eq!(
+                    grid.bucket_stats().2,
+                    serial.bucket_stats().2,
+                    "{threads} threads: aura bucket usage"
+                );
+                for (c, r) in &centers {
+                    let got = grid.neighbors_of(*c, *r, None);
+                    let want = serial.neighbors_of(*c, *r, None);
+                    assert_eq!(got, want, "{threads} threads c={c:?} r={r}");
+                }
+                // Handles resolve: every aura entry is individually
+                // removable afterwards (API symmetry).
+                for i in 0..total as u32 {
+                    assert!(grid.remove(NsgEntry::Aura(i)), "{threads} threads: handle {i}");
+                }
+                assert_eq!(grid.len(), 10);
+            }
+        });
+    }
+
+    #[test]
+    fn bulk_aura_fill_clear_cycle_reuses_capacity() {
+        // The engine's per-iteration lifecycle: clear_aura + bulk fill,
+        // repeated, must not grow the arenas after warm-up.
+        let mut g = grid();
+        let bounds = g.bounds();
+        let map = CellMap::new(bounds, g.cell_size());
+        let mut rng = Rng::new(0xF00D);
+        let mut pos: Vec<Vec3> =
+            (0..300).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [100.0; 3]))).collect();
+        pos.sort_by_key(|q| {
+            crate::core::resource_manager::morton3_in_grid(*q, map.cell, map.dims)
+        });
+        let ranges = vec![0u32..150, 150..300];
+        let pool = crate::engine::pool::ThreadPool::new(4);
+        let cycle = |g: &mut NeighborSearchGrid| {
+            g.clear_aura();
+            g.add_aura_ranges(&ranges, &pos, &pool);
+            assert!(g.last_aura_fill_was_parallel());
+            assert_eq!(g.len(), 300);
+        };
+        cycle(&mut g);
+        cycle(&mut g);
+        let bytes = g.approx_bytes();
+        for _ in 0..10 {
+            cycle(&mut g);
+        }
+        assert_eq!(g.approx_bytes(), bytes, "steady-state aura fill grew the arena");
+    }
+
+    #[test]
+    fn bulk_aura_fill_falls_back_on_unsorted_or_occupied_cells() {
+        let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(40.0));
+        let pool = crate::engine::pool::ThreadPool::new(8);
+        let mut rng = Rng::new(11);
+        // Unsorted positions: must fall back, still match serial adds.
+        let pos: Vec<Vec3> =
+            (0..120).map(|_| Vec3::from_array(rng.point_in([0.0; 3], [40.0; 3]))).collect();
+        let ranges = vec![0u32..120];
+        let mut g = NeighborSearchGrid::new(bounds, 4.0);
+        g.add_aura_ranges(&ranges, &pos, &pool);
+        assert!(!g.last_aura_fill_was_parallel(), "unsorted input must take the fallback");
+        let mut serial = NeighborSearchGrid::new(bounds, 4.0);
+        for (i, p) in pos.iter().enumerate() {
+            serial.add(NsgEntry::Aura(i as u32), *p);
+        }
+        for _ in 0..15 {
+            let c = Vec3::from_array(rng.point_in([0.0; 3], [40.0; 3]));
+            assert_eq!(
+                g.neighbors_of(c, 6.0, None),
+                serial.neighbors_of(c, 6.0, None),
+                "fallback diverged from serial insertion"
+            );
+        }
+        // Pre-occupied cells (incremental aura adds before the bulk
+        // fill): must fall back rather than clobber existing chains.
+        let map = CellMap::new(bounds, 4.0);
+        let mut sorted = pos.clone();
+        sorted.sort_by_key(|q| {
+            crate::core::resource_manager::morton3_in_grid(*q, map.cell, map.dims)
+        });
+        let mut g2 = NeighborSearchGrid::new(bounds, 4.0);
+        g2.add(NsgEntry::Aura(200), sorted[0]);
+        let shifted = vec![201u32..321];
+        let mut shifted_pos = vec![Vec3::ZERO; 321];
+        shifted_pos[201..].copy_from_slice(&sorted);
+        g2.add_aura_ranges(&shifted, &shifted_pos, &pool);
+        assert!(!g2.last_aura_fill_was_parallel(), "occupied cells must take the fallback");
+        assert_eq!(g2.len(), 121);
+        // Empty batch is a no-op.
+        let mut g3 = NeighborSearchGrid::new(bounds, 4.0);
+        assert_eq!(g3.add_aura_ranges(&[], &[], &pool), 0.0);
+        assert!(!g3.last_aura_fill_was_parallel());
     }
 
     #[test]
@@ -1714,12 +2203,21 @@ mod tests {
                         }
                     }
                     // add aura (fresh index only, like the engine)
-                    7 | 8 => {
+                    7 => {
                         let i = oracle.aura.len();
                         if i < max_aura {
                             let p = Vec3::from_array(g.rng().point_in(lo, hi));
                             nsg.add(NsgEntry::Aura(i as u32), p);
                             oracle.aura.push(Some(p));
+                        }
+                    }
+                    // remove aura (swap-remove back-fill; possibly absent)
+                    8 => {
+                        if !oracle.aura.is_empty() {
+                            let i = g.usize_in(0..=oracle.aura.len() - 1);
+                            let live = oracle.aura[i].is_some();
+                            assert_eq!(nsg.remove(NsgEntry::Aura(i as u32)), live);
+                            oracle.aura[i] = None;
                         }
                     }
                     // clear aura (rebuilt-every-iteration lifecycle)

@@ -1,0 +1,285 @@
+//! Arrival-order independence of the overlapped aura receive path.
+//!
+//! The engine ingests aura wires in *arrival* order (frames from any
+//! source as they land) but assigns aura ids, mirrors columns and fills
+//! the NSG in *source* order. This test drives the exact receive-side
+//! pipeline the engine runs — `recv_all_batched_into` →
+//! `Codec::decode_pooled_parallel` → `AuraStore::add_sources` →
+//! `NeighborSearchGrid::add_aura_ranges` — with sources completing in
+//! adversarial orders and at 1/2/8 ingest threads, over a two-iteration
+//! delta-encoded stream, and asserts bit-identical results against the
+//! rank-ordered serial ingest (PR 2/3's receive pipeline): aura-id
+//! ranges, position bits, and exact NSG query results. It also asserts
+//! the Morton-sharded aura fill actually engages for cell-sorted views.
+
+use teraagent::comm::batching::{recv_all_batched_into, send_batched, Reassembler};
+use teraagent::comm::mpi::{tags, MpiWorld};
+use teraagent::comm::NetworkModel;
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::core::ids::{GlobalId, LocalId};
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::engine::pool::ThreadPool;
+use teraagent::engine::AuraStore;
+use teraagent::io::codec::{AuraDecodeJob, Codec};
+use teraagent::io::ta_io::ViewPool;
+use teraagent::io::{Compression, SerializerKind};
+use teraagent::space::{Aabb, NeighborSearchGrid, NsgEntry};
+use teraagent::util::{Rng, Vec3};
+
+const SIDE: f64 = 60.0;
+const RADIUS: f64 = 8.0;
+const SOURCES: [u32; 3] = [1, 2, 3];
+
+/// One sender rank's population + codec; produces the per-iteration aura
+/// wire exactly like the engine's send side (Morton-sorted slots,
+/// SoA-direct encode, delta channel to the receiver).
+struct Sender {
+    rm: ResourceManager,
+    ids: Vec<LocalId>,
+    codec: Codec,
+}
+
+fn make_senders(bounds: Aabb, nsg: &NeighborSearchGrid) -> Vec<Sender> {
+    let mut rng = Rng::new(0x0DD_E12);
+    SOURCES
+        .iter()
+        .enumerate()
+        .map(|(k, &src)| {
+            let mut rm = ResourceManager::new(src);
+            for i in 0..(40 + 25 * k) {
+                let p = Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3]));
+                let mut a = Agent::cell(p, 4.0, if i % 2 == 0 { CellType::A } else { CellType::B });
+                a.global_id = GlobalId::new(src, i as u64);
+                rm.add(a);
+            }
+            // The engine's periodic sort: slot order == the receiver's
+            // Morton cell order (all ranks share the whole-space grid).
+            rm.sort_by_grid(bounds.min, nsg.cell_size(), nsg.dims());
+            let ids = rm.ids();
+            Sender { rm, ids, codec: Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 8 }) }
+        })
+        .collect()
+}
+
+/// Encode iteration wires for every sender, drifting positions between
+/// iterations (so the second message is a real delta) and re-sorting
+/// like the engine's periodic agent sort (so every view stays
+/// cell-sorted for the receiver's grid).
+fn encode_iteration(
+    senders: &mut [Sender],
+    bounds: Aabb,
+    nsg: &NeighborSearchGrid,
+    drift: f64,
+) -> Vec<Vec<u8>> {
+    senders
+        .iter_mut()
+        .map(|s| {
+            if drift != 0.0 {
+                let ids = s.ids.clone();
+                for id in ids {
+                    let p = s.rm.get(id).unwrap().position + Vec3::new(drift, -drift, drift);
+                    assert!(s.rm.set_position(id, p));
+                }
+                s.rm.sort_by_grid(bounds.min, nsg.cell_size(), nsg.dims());
+                s.ids = s.rm.ids();
+            }
+            let mut wire = Vec::new();
+            s.codec.encode_rm_into((0, tags::AURA), &s.rm, &s.ids, &mut wire);
+            wire
+        })
+        .collect()
+}
+
+/// Snapshot of one ingested iteration: aura-id ranges, position bits,
+/// and exact NSG query results at fixed probe centers.
+#[derive(PartialEq, Debug)]
+struct IngestSnapshot {
+    ranges: Vec<std::ops::Range<u32>>,
+    pos_bits: Vec<[u64; 3]>,
+    queries: Vec<Vec<(u32, [u64; 3], u64)>>,
+}
+
+fn probe_centers() -> Vec<(Vec3, f64)> {
+    let mut rng = Rng::new(0xCE17);
+    (0..40)
+        .map(|_| {
+            (
+                Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3])),
+                rng.uniform_range(1.0, SIDE / 3.0),
+            )
+        })
+        .collect()
+}
+
+fn snapshot(nsg: &NeighborSearchGrid, aura: &AuraStore, ranges: &[std::ops::Range<u32>]) -> IngestSnapshot {
+    let pos_bits = aura
+        .positions()
+        .iter()
+        .map(|p| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    let queries = probe_centers()
+        .iter()
+        .map(|(c, r)| {
+            nsg.neighbors_of(*c, *r, None)
+                .into_iter()
+                .map(|(e, p, d2)| {
+                    let i = match e {
+                        NsgEntry::Aura(i) => i,
+                        NsgEntry::Owned(_) => unreachable!("aura-only grid"),
+                    };
+                    (i, [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()], d2.to_bits())
+                })
+                .collect()
+        })
+        .collect();
+    IngestSnapshot { ranges: ranges.to_vec(), pos_bits, queries }
+}
+
+/// The seed (PR 2/3) receive pipeline: fixed rank order, serial decode,
+/// per-source `add_source`, per-agent `nsg.add` — the oracle.
+fn serial_ingest(wire_rounds: &[Vec<Vec<u8>>]) -> Vec<IngestSnapshot> {
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let mut nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 8 });
+    let mut pool = ViewPool::new();
+    let mut aura = AuraStore::new();
+    let mut out = Vec::new();
+    for wires in wire_rounds {
+        nsg.clear_aura();
+        aura.recycle_into(&mut pool);
+        let mut ranges = Vec::new();
+        for (k, wire) in wires.iter().enumerate() {
+            let (decoded, _) = rx.decode_pooled((SOURCES[k], tags::AURA), wire, &mut pool);
+            let range = aura.add_source(decoded);
+            for i in range.clone() {
+                nsg.add(NsgEntry::Aura(i), aura.position(i));
+            }
+            ranges.push(range);
+        }
+        out.push(snapshot(&nsg, &aura, &ranges));
+    }
+    out
+}
+
+/// The overlapped pipeline under test, with wires delivered in
+/// `order` and ingested at `threads` pool threads.
+fn overlapped_ingest(wire_rounds: &[Vec<Vec<u8>>], order: &[u32], threads: usize) -> Vec<IngestSnapshot> {
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let mut nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 8 });
+    let mut view_pool = ViewPool::new();
+    let mut aura = AuraStore::new();
+    let tpool = ThreadPool::new(threads);
+    let mut re = Reassembler::new();
+    let mut jobs: Vec<AuraDecodeJob> = Vec::new();
+    let mut out = Vec::new();
+    for (round, wires) in wire_rounds.iter().enumerate() {
+        nsg.clear_aura();
+        aura.recycle_into(&mut view_pool);
+        // Deliver in the adversarial order: all sends land in the
+        // receiver's mailbox before it starts, so mailbox arrival order
+        // IS `order`. Small chunks force multi-frame reassembly.
+        let world = MpiWorld::new(4, NetworkModel::ideal());
+        for &src in order {
+            let k = SOURCES.iter().position(|&s| s == src).unwrap();
+            let mut tx = world.communicator(src);
+            send_batched(&mut tx, 0, tags::AURA, round as u32, &wires[k], 512);
+        }
+        let mut comm = world.communicator(0);
+        let mut rx_wires: Vec<Vec<u8>> = vec![Vec::new(); SOURCES.len()];
+        let stats =
+            recv_all_batched_into(&mut re, &mut comm, &SOURCES, tags::AURA, &mut rx_wires);
+        assert!(stats.frames >= SOURCES.len() as u64);
+        if round == 0 {
+            // The Full reference wires exceed the chunk size: reassembly
+            // of interleavable multi-frame streams is exercised.
+            assert!(stats.frames > SOURCES.len() as u64, "round 0 must chunk");
+        }
+        // Wires must have landed in source order regardless of delivery.
+        for (k, w) in rx_wires.iter().enumerate() {
+            assert_eq!(w, &wires[k], "wire for source {} misplaced", SOURCES[k]);
+        }
+        rx.decode_pooled_parallel(tags::AURA, &SOURCES, &rx_wires, &mut jobs, &mut view_pool, &tpool);
+        let mut decoded = Vec::new();
+        for job in jobs.iter_mut() {
+            decoded.push(job.take().expect("decoded message missing"));
+        }
+        let mut ranges = Vec::new();
+        aura.add_sources(&mut decoded, &tpool, &mut ranges);
+        nsg.add_aura_ranges(&ranges, aura.positions(), &tpool);
+        assert!(
+            nsg.last_aura_fill_was_parallel(),
+            "cell-sorted views must take the Morton-sharded aura fill"
+        );
+        out.push(snapshot(&nsg, &aura, &ranges));
+    }
+    out
+}
+
+#[test]
+fn adversarial_arrival_orders_are_bitwise_transparent() {
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut senders = make_senders(bounds, &nsg);
+    // Two rounds over the same delta channels: round 0 is the Full
+    // reference, round 1 a real Delta — so receive-side channel state
+    // (the delta reference) must also be arrival-order independent for
+    // round 1 to decode identically.
+    let wire_rounds = vec![
+        encode_iteration(&mut senders, bounds, &nsg, 0.0),
+        encode_iteration(&mut senders, bounds, &nsg, 0.25),
+    ];
+    let want = serial_ingest(&wire_rounds);
+    assert!(
+        !want[0].pos_bits.is_empty() && want.iter().all(|s| !s.queries.is_empty()),
+        "workload must be non-trivial"
+    );
+    for order in [[1u32, 2, 3], [3, 2, 1], [2, 3, 1]] {
+        for threads in [1usize, 2, 8] {
+            let got = overlapped_ingest(&wire_rounds, &order, threads);
+            assert_eq!(
+                got, want,
+                "ingest diverged: arrival order {order:?}, {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn drifted_unsorted_views_fall_back_and_stay_equivalent() {
+    // Between periodic sorts agents drift out of Morton order; the bulk
+    // fill must take the serial fallback and still match the oracle.
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let nsg_probe = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut senders = make_senders(bounds, &nsg_probe);
+    // Scramble one sender's slot order so its view is NOT cell-sorted
+    // (swap two distant agents' positions).
+    {
+        let s = &mut senders[0];
+        let a = s.ids[0];
+        let b = *s.ids.last().unwrap();
+        let pa = s.rm.get(a).unwrap().position;
+        let pb = s.rm.get(b).unwrap().position;
+        assert!(s.rm.set_position(a, pb));
+        assert!(s.rm.set_position(b, pa));
+    }
+    let wires = vec![encode_iteration(&mut senders, bounds, &nsg_probe, 0.0)];
+    let want = serial_ingest(&wires);
+    let tpool = ThreadPool::new(4);
+    let mut nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 8 });
+    let mut view_pool = ViewPool::new();
+    let mut aura = AuraStore::new();
+    let mut jobs: Vec<AuraDecodeJob> = Vec::new();
+    rx.decode_pooled_parallel(tags::AURA, &SOURCES, &wires[0], &mut jobs, &mut view_pool, &tpool);
+    let mut decoded = Vec::new();
+    for job in jobs.iter_mut() {
+        decoded.push(job.take().unwrap());
+    }
+    let mut ranges = Vec::new();
+    aura.add_sources(&mut decoded, &tpool, &mut ranges);
+    nsg.add_aura_ranges(&ranges, aura.positions(), &tpool);
+    assert!(!nsg.last_aura_fill_was_parallel(), "unsorted view must take the fallback");
+    let got = snapshot(&nsg, &aura, &ranges);
+    assert_eq!(got, want[0], "fallback ingest diverged from the serial oracle");
+}

@@ -113,6 +113,17 @@ fn thread_count_is_bitwise_transparent() {
             .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
             .collect();
         pos.sort();
+        // Frame accounting is conserved: every aura frame sent is
+        // received exactly once (both now count real transport frames,
+        // not logical messages).
+        let sent = result
+            .report
+            .counter_total(teraagent::metrics::Counter::MessagesSent);
+        let received = result
+            .report
+            .counter_total(teraagent::metrics::Counter::MessagesReceived);
+        assert_eq!(sent, received, "aura frames sent vs received ({threads} threads)");
+        assert!(sent > 0);
         let bytes = result
             .report
             .counter_total(teraagent::metrics::Counter::BytesSentWire);
