@@ -5,9 +5,14 @@
 //! reduced agent base class, and (4) a compact neighbor-search grid. This
 //! driver reproduces the *capacity engineering*: it measures bytes/agent
 //! for the full engine agent vs the reduced [`CompactAgent`], runs the
-//! largest population that comfortably fits this machine, and extrapolates
-//! through the same arithmetic the paper uses — reporting what this
-//! engine would hold on the paper's 92 TB.
+//! largest population that comfortably fits this machine (through the
+//! real engine loop — including the pooled-frame exchange path, whose
+//! recycled transport buffers are part of the measured footprint), and
+//! extrapolates through the same arithmetic the paper uses — reporting
+//! what this engine would hold on the paper's 92 TB. The measured run's
+//! peak memory comes from the engine's own tracker (`ResourceManager` +
+//! NSG arenas + partition grid + codec references + buffer pools), i.e.
+//! the same accounting `SimReport::total_peak_mem_bytes` feeds.
 //!
 //! ```bash
 //! cargo run --release --example extreme_scale

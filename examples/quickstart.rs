@@ -1,7 +1,14 @@
 //! Quickstart: the smallest complete TeraAgent program.
 //!
-//! Defines a configuration, runs the cell-clustering benchmark across two
-//! simulated MPI ranks, and prints the aggregated report.
+//! Reproduces the paper's usage model (§3.3–§3.4): the *same* model code
+//! runs on one rank or many, and distribution is transparent — here the
+//! cell-clustering benchmark (§3.4's differential-adhesion workload) runs
+//! across two simulated MPI ranks with two threads each, exercising the
+//! full Fig. 1 iteration loop: zero-copy aura exchange over pooled
+//! transport frames, mechanics, behaviors, migration. The printed report
+//! is the per-operation breakdown the paper's figures are built from
+//! (aura update / agent ops / serialize / transfer / …), and the final
+//! segregation-index check is the §3.4 qualitative correctness probe.
 //!
 //! ```bash
 //! cargo run --release --example quickstart

@@ -1,28 +1,71 @@
 //! Large-message batching (§2.4.3: "we transmit large messages in smaller
 //! batches to reduce the memory needed for transmission buffers,
-//! compression, and serialization").
+//! compression, and serialization") over the pooled-frame transport.
 //!
 //! A payload larger than the configured chunk size is split into numbered
-//! chunks carried under [`tags::CHUNK`]-style framing; the receiver
-//! reassembles them in order. Framing: `[msg_id u32][chunk u32][total u32]
-//! [bytes...]`.
+//! chunks; the receiver reassembles them. Framing: `[msg_id u32]
+//! [chunk u32][total u32][bytes...]`, all little-endian.
+//!
+//! # Copy discipline
+//!
+//! The send side has two entry points. [`send_batched`] borrows the wire
+//! (`&[u8]`) and stages header + chunk into pooled frames — one copy per
+//! chunk, no allocation. [`send_batched_framed`] is the zero-copy fast
+//! path the aura exchange uses: the caller encodes the wire into its
+//! buffer **after a reserved [`FRAME_HEADER`]-byte gap**, the header is
+//! written into the gap in place, and the whole buffer is published as a
+//! pooled [`Frame`] — the bytes the encoder wrote are the bytes the
+//! decoder reads, with the pool lending the caller a recycled replacement
+//! buffer for the next iteration.
+//!
+//! The receive side mirrors this with [`WireSlot`]: a message that fit a
+//! single frame is handed over as [`WireSlot::Direct`] — the frame
+//! itself, body borrowed in place, **zero receive-side copies** — while a
+//! multi-chunk message is staged once into a pooled aligned buffer shared
+//! with the decode [`ViewPool`] ([`WireSlot::Staged`]; the per-frame
+//! copy is metered in [`RecvAllStats::copied_bytes`]). Either way the
+//! steady state allocates nothing.
 
-use super::mpi::{Communicator, Tag};
+use super::mpi::{Communicator, Frame, Tag};
+use crate::io::buffer::AlignedBuf;
+use crate::io::codec::WirePayload;
+use crate::io::ta_io::ViewPool;
 use std::collections::HashMap;
 
 /// Default chunk size (1 MiB) — bounds peak transmission-buffer memory.
 pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
 
-const FRAME_HEADER: usize = 12;
+/// Bytes of the per-chunk framing header (`msg_id`, `chunk`, `total`).
+/// [`send_batched_framed`] callers reserve this many bytes at the front
+/// of their wire buffer so single-chunk messages publish without a copy.
+pub const FRAME_HEADER: usize = 12;
+
+fn header(msg_id: u32, chunk: u32, total: u32) -> [u8; FRAME_HEADER] {
+    let mut h = [0u8; FRAME_HEADER];
+    h[0..4].copy_from_slice(&msg_id.to_le_bytes());
+    h[4..8].copy_from_slice(&chunk.to_le_bytes());
+    h[8..12].copy_from_slice(&total.to_le_bytes());
+    h
+}
+
+fn parse_header(frame: &[u8]) -> (u32, u32, u32) {
+    assert!(frame.len() >= FRAME_HEADER, "short chunk frame");
+    (
+        u32::from_le_bytes(frame[0..4].try_into().unwrap()),
+        u32::from_le_bytes(frame[4..8].try_into().unwrap()),
+        u32::from_le_bytes(frame[8..12].try_into().unwrap()),
+    )
+}
 
 /// Sender side: split `data` into frames and send them to `dst` on `tag`.
 /// `msg_id` must be unique per (sender, receiver, tag) stream position —
 /// the engine uses its iteration counter.
 ///
-/// The caller keeps ownership of `data` (the codec's reused wire buffer);
-/// each frame is a scatter-gather send of the stack header plus a chunk
-/// slice, so the payload is never staged through an intermediate frame
-/// buffer.
+/// The caller keeps ownership of `data`; each frame is staged (header +
+/// chunk slice) into a pooled transport frame — one copy per chunk, zero
+/// allocation. When the caller can reserve a [`FRAME_HEADER`] gap in its
+/// buffer, [`send_batched_framed`] skips even that copy for single-chunk
+/// messages.
 pub fn send_batched(
     comm: &mut Communicator,
     dst: u32,
@@ -33,96 +76,215 @@ pub fn send_batched(
 ) -> usize {
     let chunk_bytes = chunk_bytes.max(1);
     let total = data.len().div_ceil(chunk_bytes).max(1) as u32;
-    let header = |chunk: u32| -> [u8; FRAME_HEADER] {
-        let mut h = [0u8; FRAME_HEADER];
-        h[0..4].copy_from_slice(&msg_id.to_le_bytes());
-        h[4..8].copy_from_slice(&chunk.to_le_bytes());
-        h[8..12].copy_from_slice(&total.to_le_bytes());
-        h
-    };
     if data.is_empty() {
         // Zero-length messages still need one frame so the receiver can
         // match the stream position.
-        comm.isend_parts(dst, tag, &[&header(0)]);
+        comm.isend_parts(dst, tag, &[&header(msg_id, 0, 1)]);
         return 1;
     }
     for (i, chunk) in data.chunks(chunk_bytes).enumerate() {
-        comm.isend_parts(dst, tag, &[&header(i as u32), chunk]);
+        comm.isend_parts(dst, tag, &[&header(msg_id, i as u32, total), chunk]);
     }
     total as usize
 }
 
-/// Receiver-side reassembly buffer for interleaved chunked streams.
+/// The zero-copy batched send: `wire` holds `[FRAME_HEADER reserved gap]
+/// [message bytes]` (the gap is what [`Codec::encode_rm_overlapped`]
+/// leaves when asked for one). If the message fits one chunk, the header
+/// is written into the gap and the **whole buffer is published in place**
+/// as a pooled frame — no copy anywhere between the encoder's write and
+/// the decoder's read — while `wire` is swapped for a recycled buffer
+/// from the world's frame pool, keeping the caller's capacity cycling.
+/// Larger messages fall back to per-chunk staging like [`send_batched`]
+/// (the chunk split is itself the §2.4.3 memory cap) and leave `wire`
+/// with the caller. Returns the number of frames sent.
+///
+/// [`Codec::encode_rm_overlapped`]: crate::io::codec::Codec::encode_rm_overlapped
+pub fn send_batched_framed(
+    comm: &mut Communicator,
+    dst: u32,
+    tag: Tag,
+    msg_id: u32,
+    wire: &mut Vec<u8>,
+    chunk_bytes: usize,
+) -> usize {
+    assert!(wire.len() >= FRAME_HEADER, "framed wire is missing its header gap");
+    let chunk_bytes = chunk_bytes.max(1);
+    let body_len = wire.len() - FRAME_HEADER;
+    if body_len <= chunk_bytes {
+        wire[..FRAME_HEADER].copy_from_slice(&header(msg_id, 0, 1));
+        let pool = comm.frame_pool().clone();
+        let buf = std::mem::replace(wire, pool.take_vec());
+        comm.isend_frame(dst, tag, pool.seal(buf));
+        return 1;
+    }
+    let total = body_len.div_ceil(chunk_bytes) as u32;
+    for (i, chunk) in wire[FRAME_HEADER..].chunks(chunk_bytes).enumerate() {
+        comm.isend_parts(dst, tag, &[&header(msg_id, i as u32, total), chunk]);
+    }
+    total as usize
+}
+
+/// One source's completed wire on the receive side: either the published
+/// frame itself (single-chunk — the decode reads the sender's bytes in
+/// place) or a pooled staging buffer the chunks were assembled into.
+#[derive(Debug, Default)]
+pub enum WireSlot {
+    #[default]
+    Empty,
+    /// A complete single-frame message; the wire body follows the
+    /// [`FRAME_HEADER`] in the frame the sender published.
+    Direct(Frame),
+    /// A multi-chunk message assembled into a buffer from the decode
+    /// pool ([`ViewPool`]); recycle it back with
+    /// [`WireSlot::recycle_into`].
+    Staged(AlignedBuf),
+}
+
+impl WireSlot {
+    /// The wire message bytes (codec envelope + payload).
+    pub fn as_wire(&self) -> &[u8] {
+        match self {
+            WireSlot::Empty => &[],
+            WireSlot::Direct(f) => &f[FRAME_HEADER..],
+            WireSlot::Staged(b) => b.as_slice(),
+        }
+    }
+
+    /// Release the backing storage: a staged buffer returns to `pool`, a
+    /// direct frame recycles into its transport pool on drop.
+    pub fn recycle_into(self, pool: &mut ViewPool) {
+        if let WireSlot::Staged(buf) = self {
+            pool.put_buf(buf);
+        }
+    }
+}
+
+impl AsRef<[u8]> for WireSlot {
+    fn as_ref(&self) -> &[u8] {
+        self.as_wire()
+    }
+}
+
+impl WirePayload for WireSlot {
+    fn wire(&self) -> &[u8] {
+        self.as_wire()
+    }
+
+    fn recycle(self, pool: &mut ViewPool) {
+        self.recycle_into(pool);
+    }
+}
+
+/// Receiver-side reassembly state for interleaved chunked streams.
+/// Chunks are held as received frames (frame-granular, no copy) until a
+/// stream completes; only then is the payload assembled once into a
+/// pooled buffer. All scratch recycles across messages.
 #[derive(Debug, Default)]
 pub struct Reassembler {
-    /// (src, tag, msg_id) -> (received chunks, total)
-    partial: HashMap<(u32, Tag, u32), (Vec<Option<Vec<u8>>>, u32)>,
-    /// Per-source completion flags for [`recv_all_batched_into`]
+    /// (src, tag, msg_id) -> (received chunk frames, total)
+    partial: HashMap<(u32, Tag, u32), (Vec<Option<Frame>>, u32)>,
+    /// Freelist of chunk-slot vectors (capacity reused across streams).
+    chunk_scratch: Vec<Vec<Option<Frame>>>,
+    /// Per-source completion flags for [`recv_all_batched_streaming`]
     /// (capacity reused across iterations).
     done_scratch: Vec<bool>,
 }
 
-/// What one [`recv_all_batched_into`] call spent where: wall-clock
-/// seconds blocked in the transport (the honest wait), thread-CPU seconds
-/// spent copying/reassembling frames, and the number of frames consumed.
-/// The engine charges the first to `Op::Transfer` and the second to
-/// `Op::Reassembly` — previously the whole blocking loop was timed as one
-/// CPU "transfer" bucket, skewing the op breakdown on slow peers.
+/// What one receive-all call spent where: wall-clock seconds blocked in
+/// the transport (the honest wait), thread-CPU seconds spent parsing and
+/// assembling frames, bytes copied by multi-chunk staging (`0` when every
+/// message fit a single frame — the zero-copy fast path), and the number
+/// of frames consumed. The engine charges `wait_secs` to `Op::Transfer`
+/// and `reassembly_secs` to `Op::Reassembly`, and counts `copied_bytes`
+/// under `Counter::BytesReassembled`.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RecvAllStats {
     pub wait_secs: f64,
     pub reassembly_secs: f64,
+    pub copied_bytes: u64,
     pub frames: u64,
 }
 
 /// Collect one complete batched message from **each** of `srcs` on `tag`,
 /// consuming frames in *arrival* order — no fixed-rank-order blocking
-/// wait: a slow first neighbor no longer stalls ingestion of everyone
-/// else's already-arrived frames. Source `srcs[k]`'s completed payload
-/// lands in `wires[k]` (cleared, capacity reused), so downstream
-/// consumers see wires in deterministic source order regardless of the
-/// order the network delivered them.
+/// wait: a slow first neighbor never stalls ingestion of everyone else's
+/// already-arrived frames. The moment source `srcs[k]`'s message
+/// completes, `complete(k, slot)` runs **on the calling thread** with the
+/// finished [`WireSlot`] — this is the producer half of the streaming
+/// ingest: feed the slot to decode workers
+/// ([`Codec::decode_pooled_streamed`]) and the first source's decode
+/// overlaps the last source's network wait. Multi-chunk staging buffers
+/// come from `staging` (the decode pool, closing the recycle loop).
 ///
 /// Protocol assumption (held by the engine's collective-gated iteration
 /// loop): at most one in-flight batched message per source on `tag`.
 /// Frames from sources outside `srcs` are reassembled and dropped
 /// (debug-asserted — they indicate a stale stream).
-pub fn recv_all_batched_into(
+///
+/// [`Codec::decode_pooled_streamed`]: crate::io::codec::Codec::decode_pooled_streamed
+pub fn recv_all_batched_streaming(
     re: &mut Reassembler,
     comm: &mut Communicator,
     srcs: &[u32],
     tag: Tag,
-    wires: &mut [Vec<u8>],
+    staging: &mut ViewPool,
+    mut complete: impl FnMut(usize, WireSlot),
 ) -> RecvAllStats {
-    assert_eq!(srcs.len(), wires.len(), "one wire slot per source");
     let mut stats = RecvAllStats::default();
     re.done_scratch.clear();
     re.done_scratch.resize(srcs.len(), false);
-    let mut discard: Vec<u8> = Vec::new();
     let mut pending = srcs.len();
     while pending > 0 {
         let (m, waited) = comm.recv_any_timed(tag);
         stats.wait_secs += waited;
         stats.frames += 1;
         let t = crate::util::timing::CpuTimer::start();
-        match srcs.iter().position(|&s| s == m.src) {
-            Some(k) => {
-                if re.feed_into(m.src, m.tag, m.data, &mut wires[k]).is_some() {
-                    debug_assert!(!re.done_scratch[k], "second message completed for src {}", m.src);
-                    if !re.done_scratch[k] {
-                        re.done_scratch[k] = true;
-                        pending -= 1;
-                    }
-                }
-            }
+        let fed = match srcs.iter().position(|&s| s == m.src) {
+            Some(k) => re.feed_frame(m.src, m.tag, m.data, staging).map(|(_, slot)| (k, slot)),
             None => {
                 debug_assert!(false, "aura frame from unexpected source {}", m.src);
-                re.feed_into(m.src, m.tag, m.data, &mut discard);
+                // Reassemble and drop so the stale stream can't poison
+                // the partial map.
+                if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, staging) {
+                    slot.recycle_into(staging);
+                }
+                None
+            }
+        };
+        if let Some((_, slot)) = &fed {
+            if let WireSlot::Staged(buf) = slot {
+                stats.copied_bytes += buf.len() as u64;
             }
         }
         stats.reassembly_secs += t.elapsed_secs();
+        if let Some((k, slot)) = fed {
+            debug_assert!(!re.done_scratch[k], "second message completed for src {}", m.src);
+            if !re.done_scratch[k] {
+                re.done_scratch[k] = true;
+                pending -= 1;
+                complete(k, slot);
+            }
+        }
     }
     stats
+}
+
+/// [`recv_all_batched_streaming`] without the streaming consumer: every
+/// completed wire parks in its source's slot (`wires[k]` for `srcs[k]`,
+/// deterministic source order regardless of delivery order). Kept for
+/// callers that genuinely need all wires before acting; the engine uses
+/// the streaming form.
+pub fn recv_all_batched_into(
+    re: &mut Reassembler,
+    comm: &mut Communicator,
+    srcs: &[u32],
+    tag: Tag,
+    wires: &mut [WireSlot],
+    staging: &mut ViewPool,
+) -> RecvAllStats {
+    assert_eq!(srcs.len(), wires.len(), "one wire slot per source");
+    recv_all_batched_streaming(re, comm, srcs, tag, staging, |k, slot| wires[k] = slot)
 }
 
 impl Reassembler {
@@ -130,53 +292,109 @@ impl Reassembler {
         Self::default()
     }
 
-    /// Feed one received frame; returns the full payload once complete.
-    pub fn feed(&mut self, src: u32, tag: Tag, frame: Vec<u8>) -> Option<(u32, Vec<u8>)> {
+    /// Park one chunk frame; returns the stream's chunk frames once all
+    /// have arrived.
+    fn stash_chunk(
+        &mut self,
+        src: u32,
+        tag: Tag,
+        msg_id: u32,
+        chunk: u32,
+        total: u32,
+        frame: Frame,
+    ) -> Option<Vec<Option<Frame>>> {
+        let Reassembler { partial, chunk_scratch, .. } = self;
+        let key = (src, tag, msg_id);
+        let entry = partial.entry(key).or_insert_with(|| {
+            let mut v = chunk_scratch.pop().unwrap_or_default();
+            v.clear();
+            v.resize_with(total as usize, || None);
+            (v, total)
+        });
+        assert_eq!(entry.1, total, "inconsistent chunk totals");
+        assert!(entry.0[chunk as usize].is_none(), "duplicate chunk");
+        // The frame is parked whole (body offset fixed by the header
+        // size) — chunks stay in the sender's published buffers until
+        // the one assembly pass.
+        entry.0[chunk as usize] = Some(frame);
+        if entry.0.iter().all(|c| c.is_some()) {
+            Some(partial.remove(&key).unwrap().0)
+        } else {
+            None
+        }
+    }
+
+    fn recycle_chunks(&mut self, mut chunks: Vec<Option<Frame>>) {
+        chunks.clear();
+        self.chunk_scratch.push(chunks);
+    }
+
+    /// Feed one received frame. A single-chunk message completes with
+    /// **zero copies** — the returned [`WireSlot::Direct`] *is* the
+    /// published frame. A multi-chunk stream completes by assembling the
+    /// chunk bodies once into a buffer from `staging`
+    /// ([`WireSlot::Staged`]); the spent chunk frames recycle into the
+    /// transport pool as they drop.
+    pub fn feed_frame(
+        &mut self,
+        src: u32,
+        tag: Tag,
+        frame: Frame,
+        staging: &mut ViewPool,
+    ) -> Option<(u32, WireSlot)> {
+        let (msg_id, chunk, total) = parse_header(&frame);
+        if total == 1 {
+            debug_assert_eq!(chunk, 0);
+            return Some((msg_id, WireSlot::Direct(frame)));
+        }
+        let mut chunks = self.stash_chunk(src, tag, msg_id, chunk, total, frame)?;
+        let mut buf = staging.take_buf();
+        buf.clear();
+        let bytes: usize = chunks.iter().map(|c| c.as_ref().unwrap().len() - FRAME_HEADER).sum();
+        buf.reserve(bytes);
+        for c in chunks.iter_mut() {
+            let f = c.take().unwrap();
+            buf.extend_from_slice(&f[FRAME_HEADER..]);
+        }
+        self.recycle_chunks(chunks);
+        Some((msg_id, WireSlot::Staged(buf)))
+    }
+
+    /// Feed one received frame; returns the full payload once complete
+    /// (copying convenience wrapper around the frame-granular path).
+    pub fn feed(&mut self, src: u32, tag: Tag, frame: Frame) -> Option<(u32, Vec<u8>)> {
         let mut out = Vec::new();
         self.feed_into(src, tag, frame, &mut out).map(|id| (id, out))
     }
 
     /// Feed one received frame, assembling the completed payload into a
     /// caller-owned buffer (cleared first; capacity reused across
-    /// messages). The single-chunk common case copies the frame body
-    /// straight into `out` without touching the partial-stream map.
+    /// messages). This is the *copying* legacy surface — the streaming
+    /// receive path hands out [`WireSlot`]s via
+    /// [`Reassembler::feed_frame`] instead and copies nothing for
+    /// single-chunk messages.
     pub fn feed_into(
         &mut self,
         src: u32,
         tag: Tag,
-        frame: Vec<u8>,
+        frame: Frame,
         out: &mut Vec<u8>,
     ) -> Option<u32> {
-        assert!(frame.len() >= FRAME_HEADER, "short chunk frame");
-        let msg_id = u32::from_le_bytes(frame[0..4].try_into().unwrap());
-        let chunk = u32::from_le_bytes(frame[4..8].try_into().unwrap());
-        let total = u32::from_le_bytes(frame[8..12].try_into().unwrap());
+        let (msg_id, chunk, total) = parse_header(&frame);
         if total == 1 {
             debug_assert_eq!(chunk, 0);
             out.clear();
             out.extend_from_slice(&frame[FRAME_HEADER..]);
             return Some(msg_id);
         }
-        let key = (src, tag, msg_id);
-        let entry = self
-            .partial
-            .entry(key)
-            .or_insert_with(|| (vec![None; total as usize], total));
-        assert_eq!(entry.1, total, "inconsistent chunk totals");
-        assert!(entry.0[chunk as usize].is_none(), "duplicate chunk");
-        // Move the frame in whole (body offset recorded implicitly by the
-        // fixed header size) — no per-chunk copy until assembly.
-        entry.0[chunk as usize] = Some(frame);
-        if entry.0.iter().all(|c| c.is_some()) {
-            let (chunks, _) = self.partial.remove(&key).unwrap();
-            out.clear();
-            for c in chunks {
-                out.extend_from_slice(&c.unwrap()[FRAME_HEADER..]);
-            }
-            Some(msg_id)
-        } else {
-            None
+        let mut chunks = self.stash_chunk(src, tag, msg_id, chunk, total, frame)?;
+        out.clear();
+        for c in chunks.iter_mut() {
+            let f = c.take().unwrap();
+            out.extend_from_slice(&f[FRAME_HEADER..]);
         }
+        self.recycle_chunks(chunks);
+        Some(msg_id)
     }
 
     /// Receive a complete batched message from `src` on `tag` (blocking).
@@ -186,8 +404,8 @@ impl Reassembler {
         (id, out)
     }
 
-    /// [`Reassembler::recv_batched`] into a caller-owned buffer, for the
-    /// allocation-free aura receive path.
+    /// [`Reassembler::recv_batched`] into a caller-owned buffer, for
+    /// fixed-source receive loops.
     pub fn recv_batched_into(
         &mut self,
         comm: &mut Communicator,
@@ -216,6 +434,10 @@ mod tests {
     use crate::comm::network::NetworkModel;
     use crate::util::Rng;
     use std::sync::Arc;
+
+    fn empty_slots(n: usize) -> Vec<WireSlot> {
+        std::iter::repeat_with(WireSlot::default).take(n).collect()
+    }
 
     #[test]
     fn single_chunk_round_trip() {
@@ -259,6 +481,55 @@ mod tests {
     }
 
     #[test]
+    fn framed_send_publishes_single_chunk_without_copy() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let mut wire = vec![0u8; FRAME_HEADER];
+        wire.extend_from_slice(b"framed body");
+        let body_ptr = wire[FRAME_HEADER..].as_ptr();
+        let n = send_batched_framed(&mut tx, 1, 7, 3, &mut wire, 1024);
+        assert_eq!(n, 1);
+        // The caller's buffer was swapped for a pool lease.
+        assert!(wire.is_empty());
+        let (m, _) = rx.recv_any_timed(7);
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        let (id, slot) = re.feed_frame(m.src, m.tag, m.data, &mut staging).unwrap();
+        assert_eq!(id, 3);
+        assert_eq!(slot.as_wire(), b"framed body");
+        // Zero-copy end to end: the decoder-visible bytes live at the
+        // very address the sender wrote them to.
+        assert_eq!(slot.as_wire().as_ptr(), body_ptr);
+    }
+
+    #[test]
+    fn framed_send_chunks_large_wires_and_keeps_the_buffer() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let body: Vec<u8> = (0..3000u32).map(|i| i as u8).collect();
+        let mut wire = vec![0u8; FRAME_HEADER];
+        wire.extend_from_slice(&body);
+        let n = send_batched_framed(&mut tx, 1, 7, 8, &mut wire, 1000);
+        assert_eq!(n, 3);
+        assert_eq!(wire.len(), FRAME_HEADER + body.len(), "multi-chunk send keeps the wire");
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        let mut got = None;
+        while got.is_none() {
+            let (m, _) = rx.recv_any_timed(7);
+            got = re.feed_frame(m.src, m.tag, m.data, &mut staging);
+        }
+        let (id, slot) = got.unwrap();
+        assert_eq!(id, 8);
+        assert_eq!(slot.as_wire(), &body[..]);
+        assert!(matches!(slot, WireSlot::Staged(_)));
+        slot.recycle_into(&mut staging);
+        assert!(staging.approx_bytes() > 0, "staging buffer must recycle");
+    }
+
+    #[test]
     fn interleaved_streams_reassemble_independently() {
         let world = MpiWorld::new(3, NetworkModel::ideal());
         let mut a = world.communicator(0);
@@ -272,8 +543,9 @@ mod tests {
         let mut done = Vec::new();
         while done.len() < 2 {
             let m = rx.recv(None, Some(7));
-            if let Some((_, data)) = re.feed(m.src, m.tag, m.data) {
-                done.push((m.src, data));
+            let src = m.src;
+            if let Some((_, data)) = re.feed(src, m.tag, m.data) {
+                done.push((src, data));
             }
         }
         done.sort_by_key(|(s, _)| *s);
@@ -319,22 +591,74 @@ mod tests {
             }
             let mut re = Reassembler::new();
             let srcs = [1u32, 2, 3];
-            let mut wires: Vec<Vec<u8>> = vec![Vec::new(); 3];
-            let stats = recv_all_batched_into(&mut re, &mut rx, &srcs, 7, &mut wires);
+            let mut staging = ViewPool::new();
+            let mut wires = empty_slots(3);
+            let stats =
+                recv_all_batched_into(&mut re, &mut rx, &srcs, 7, &mut wires, &mut staging);
             for (k, &s) in srcs.iter().enumerate() {
-                assert_eq!(wires[k], payload(s), "order {order:?}, src {s}");
+                assert_eq!(wires[k].as_wire(), &payload(s)[..], "order {order:?}, src {s}");
             }
-            // Frames: ceil(700(s+1)/256) per source.
+            // Frames: ceil(700(s+1)/256) per source; every chunked stream
+            // is staged, so the copied bytes are the full payloads.
             let expect_frames: u64 = (1..=3u64).map(|s| (700 * (s + 1)).div_ceil(256)).sum();
             assert_eq!(stats.frames, expect_frames);
+            let expect_bytes: u64 = (1..=3u64).map(|s| 700 * (s + 1)).sum();
+            assert_eq!(stats.copied_bytes, expect_bytes);
             assert_eq!(re.pending(), 0);
         }
+    }
+
+    #[test]
+    fn recv_all_single_frame_messages_copy_nothing() {
+        let world = MpiWorld::new(3, NetworkModel::ideal());
+        let mut rx = world.communicator(0);
+        for s in [1u32, 2] {
+            let mut tx = world.communicator(s);
+            send_batched(&mut tx, 0, 7, 5, &[s as u8; 100], 1024);
+        }
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        let mut wires = empty_slots(2);
+        let stats = recv_all_batched_into(&mut re, &mut rx, &[1, 2], 7, &mut wires, &mut staging);
+        assert_eq!(stats.copied_bytes, 0, "single-frame wires must be handed over in place");
+        for (k, s) in [1u8, 2].iter().enumerate() {
+            assert!(matches!(wires[k], WireSlot::Direct(_)));
+            assert_eq!(wires[k].as_wire(), &vec![*s; 100][..]);
+        }
+        // Dropping the slots returns the frames to the transport pool.
+        wires.clear();
+        assert_eq!(world.frame_pool().stats().outstanding, 0);
+    }
+
+    #[test]
+    fn streaming_receive_completes_in_arrival_order() {
+        // Sources 2 and 3 send before 1; the streaming consumer must see
+        // their completions first even though slot order is source order.
+        let world = MpiWorld::new(4, NetworkModel::ideal());
+        let mut rx = world.communicator(0);
+        for &s in &[3u32, 2, 1] {
+            let mut tx = world.communicator(s);
+            send_batched(&mut tx, 0, 7, 1, &[s as u8; 50], 1024);
+        }
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        let mut seen = Vec::new();
+        recv_all_batched_streaming(&mut re, &mut rx, &[1, 2, 3], 7, &mut staging, |k, slot| {
+            assert_eq!(slot.as_wire()[0] as usize, k + 1, "slot index must map to source");
+            seen.push(k);
+        });
+        assert_eq!(seen, vec![2, 1, 0], "completions must stream in arrival order");
     }
 
     #[test]
     fn recv_all_overlaps_blocking_with_late_senders() {
         // The receiver starts before the last sender has sent anything;
         // it must ingest the early wires and block only for the rest.
+        // The late send is gated on a rendezvous the receiver fires just
+        // before entering the receive loop, so the blocked wait cannot be
+        // raced away by a descheduled receiver (the mpi.rs
+        // recv_any_timed test's handshake pattern).
+        const RDV: Tag = 99;
         let world = MpiWorld::new(3, NetworkModel::ideal());
         let mut early = world.communicator(1);
         let data1 = vec![1u8; 5000];
@@ -342,17 +666,45 @@ mod tests {
         let world2 = Arc::clone(&world);
         let late = std::thread::spawn(move || {
             let mut tx = world2.communicator(2);
-            std::thread::sleep(std::time::Duration::from_millis(10));
+            tx.recv(Some(0), Some(RDV));
+            std::thread::sleep(std::time::Duration::from_millis(20));
             send_batched(&mut tx, 0, 7, 3, &[42u8; 100], 1024);
         });
         let mut rx = world.communicator(0);
         let mut re = Reassembler::new();
-        let mut wires: Vec<Vec<u8>> = vec![Vec::new(); 2];
-        let stats = recv_all_batched_into(&mut re, &mut rx, &[1, 2], 7, &mut wires);
+        let mut staging = ViewPool::new();
+        let mut wires = empty_slots(2);
+        rx.isend(2, RDV, vec![0]);
+        let stats = recv_all_batched_into(&mut re, &mut rx, &[1, 2], 7, &mut wires, &mut staging);
         late.join().unwrap();
-        assert_eq!(wires[0], data1);
-        assert_eq!(wires[1], vec![42u8; 100]);
+        assert_eq!(wires[0].as_wire(), &data1[..]);
+        assert_eq!(wires[1].as_wire(), &[42u8; 100][..]);
         assert!(stats.wait_secs > 0.0, "blocked wait on the late sender must be visible");
+    }
+
+    #[test]
+    fn reassembler_scratch_recycles_across_streams() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        let data = vec![9u8; 4000];
+        for round in 0u32..6 {
+            send_batched(&mut tx, 1, 7, round, &data, 1000);
+            let mut got = None;
+            while got.is_none() {
+                let (m, _) = rx.recv_any_timed(7);
+                got = re.feed_frame(m.src, m.tag, m.data, &mut staging);
+            }
+            let (id, slot) = got.unwrap();
+            assert_eq!(id, round);
+            assert_eq!(slot.as_wire(), &data[..]);
+            slot.recycle_into(&mut staging);
+        }
+        assert_eq!(re.pending(), 0);
+        // The chunk-slot scratch and every transport frame recycled.
+        assert_eq!(world.frame_pool().stats().outstanding, 0);
     }
 
     #[test]

@@ -12,17 +12,29 @@
 //!
 //! Message framing: every engine transfer is `(peer, tag)`-addressed
 //! ([`mpi::tags`] — aura, migration, control), chunked by
-//! [`batching::send_batched`] on the way out and reassembled into a
-//! caller-reused buffer by [`batching::Reassembler`] on the way in.
+//! [`batching::send_batched`] / [`batching::send_batched_framed`] on the
+//! way out and reassembled by [`batching::Reassembler`] on the way in.
 //! All-to-all rounds carry a monotone round counter so barrier-free
 //! ranks pair up the same logical exchange even when they drift apart.
-//! Transport buffers are owned `Vec`s in the in-process mailboxes — see
-//! ROADMAP "shared-memory transport frames" for the planned zero-copy
-//! wire.
+//!
+//! Transport buffers are refcounted pooled [`mpi::Frame`]s drawn from the
+//! world's shared [`mpi::FramePool`] — the in-process model of an
+//! RDMA-style shared-memory wire. A message that fits one chunk travels
+//! **zero-copy**: the encoder writes its wire into a pool-leased buffer
+//! (after a reserved [`batching::FRAME_HEADER`] gap), the framed send
+//! publishes that very buffer to the receiver's mailbox, the receiver
+//! borrows it in place ([`batching::WireSlot::Direct`]) and decodes
+//! straight out of it; dropping the last reference recycles the buffer
+//! for the next sender. Multi-chunk messages stage each chunk into a
+//! pooled frame and reassemble once into a buffer shared with the decode
+//! pool — still allocation-free, with the copied bytes metered
+//! (`RecvAllStats::copied_bytes`). The wire format itself and the full
+//! frame lifecycle are documented in `ARCHITECTURE.md` §"Transport and
+//! frame lifecycle".
 
 pub mod batching;
 pub mod mpi;
 pub mod network;
 
-pub use mpi::{Communicator, MpiWorld, RecvMsg, Tag};
+pub use mpi::{Communicator, Frame, FrameBuf, FramePool, FramePoolStats, MpiWorld, RecvMsg, Tag};
 pub use network::NetworkModel;

@@ -1,4 +1,4 @@
-//! In-process simulated MPI.
+//! In-process simulated MPI with a zero-copy shared-memory wire.
 //!
 //! Semantics follow the subset of MPI the engine needs (§2.4.3):
 //! non-blocking point-to-point (`isend` / `try_recv` ≈ `MPI_Isend` +
@@ -8,13 +8,44 @@
 //!
 //! Each rank owns a [`Communicator`] handle; mailboxes are per-rank
 //! mutex-protected queues with condvar wakeups. Message payloads are
-//! opaque byte vectors — all typing happens in the serialization layer,
-//! exactly as with real MPI buffers. Every transfer is charged simulated
-//! network seconds per the configured [`NetworkModel`].
+//! opaque bytes — all typing happens in the serialization layer, exactly
+//! as with real MPI buffers. Every transfer is charged simulated network
+//! seconds per the configured [`NetworkModel`].
+//!
+//! # Frames: the zero-copy transport
+//!
+//! Mailbox messages are refcounted pooled [`Frame`]s drawn from the
+//! world's shared [`FramePool`] — the in-process model of an RDMA-style
+//! transport whose send buffers live in a shared segment. A sender either
+//! *publishes* a buffer it already owns ([`Communicator::isend_frame`] /
+//! [`Communicator::isend`]; no copy — the mailbox holds the very bytes
+//! the sender wrote) or *stages* borrowed slices into a pooled frame
+//! ([`Communicator::isend_parts`]; one copy, the modeled DMA write, but
+//! no allocation). The receiver gets the frame back by reference
+//! ([`RecvMsg::data`]); when the last reference drops, the buffer
+//! recycles into the pool for the next sender — so the steady state
+//! circulates a fixed set of buffers and allocates nothing.
+//!
+//! ```
+//! use teraagent::comm::mpi::{FramePool, Frame};
+//! let pool = FramePool::new();
+//! let mut buf = pool.take();           // pooled writable buffer
+//! buf.extend_from_slice(b"wire");
+//! let frame: Frame = buf.seal();       // refcounted, recycles on drop
+//! assert_eq!(&frame[..], b"wire");
+//! let stats = pool.stats();
+//! assert_eq!((stats.outstanding, stats.free), (1, 0));
+//! drop(frame);
+//! let stats = pool.stats();
+//! assert_eq!((stats.outstanding, stats.free), (0, 1)); // buffer recycled
+//! ```
+//!
+//! See `ARCHITECTURE.md` §"Transport and frame lifecycle" for the full
+//! journey of a frame through the aura exchange.
 
 use super::network::NetworkModel;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Message tag. The engine uses distinct tags per protocol step.
@@ -37,19 +68,256 @@ pub mod tags {
     }
 }
 
-/// A received message.
+/// Counters of one [`FramePool`]'s lifecycle (see [`FramePool::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FramePoolStats {
+    /// Recycled buffers currently parked in the pool.
+    pub free: usize,
+    /// Sealed [`Frame`]s alive right now (not yet dropped or unwrapped).
+    pub outstanding: usize,
+    /// Maximum `outstanding` ever observed — the pool's high-water mark.
+    /// Bounded by the peak number of in-flight messages, not by traffic
+    /// volume: a leak shows up here as unbounded growth.
+    pub high_water: usize,
+    /// Buffers ever created because the free list was empty (warm-up).
+    pub created: u64,
+    /// Buffer returns to the free list (drops of pooled frames/leases).
+    pub recycled: u64,
+}
+
+#[derive(Debug, Default)]
+struct PoolShared {
+    free: Mutex<Vec<Vec<u8>>>,
+    outstanding: AtomicUsize,
+    high_water: AtomicUsize,
+    created: AtomicU64,
+    recycled: AtomicU64,
+}
+
+/// A shared recycler of transport buffers — the in-process model of a
+/// shared-memory segment / registered RDMA region. Cloning is cheap
+/// (`Arc`); all ranks of an [`MpiWorld`] share one pool, so a buffer a
+/// receiver releases is immediately reusable by any sender.
+///
+/// Buffers move through three states: **leased** (a writable
+/// [`FrameBuf`] from [`take`](FramePool::take), or a raw `Vec<u8>` from
+/// [`take_vec`](FramePool::take_vec)), **sealed** (an immutable
+/// refcounted [`Frame`]), and **free** (parked in the pool). Every exit
+/// path returns the buffer: dropping an unsealed `FrameBuf` recycles it,
+/// and dropping the last `Frame` reference recycles it — a frame cannot
+/// leak or be recycled twice by construction (the recycle runs in the
+/// single `Drop` of its refcounted inner cell).
+#[derive(Clone, Debug, Default)]
+pub struct FramePool {
+    inner: Arc<PoolShared>,
+}
+
+impl FramePool {
+    pub fn new() -> FramePool {
+        FramePool::default()
+    }
+
+    fn pop_vec(&self) -> Vec<u8> {
+        let popped = self.inner.free.lock().unwrap().pop();
+        match popped {
+            Some(v) => v,
+            None => {
+                self.inner.created.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    fn put_back(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.inner.recycled.fetch_add(1, Ordering::Relaxed);
+        self.inner.free.lock().unwrap().push(buf);
+    }
+
+    /// Lease a writable buffer (empty; capacity recycled). Seal it into a
+    /// [`Frame`] to publish, or drop it to return it to the pool.
+    pub fn take(&self) -> FrameBuf {
+        FrameBuf { buf: self.pop_vec(), pool: Some(self.clone()) }
+    }
+
+    /// Lease a raw `Vec<u8>` (empty; capacity recycled) — for callers
+    /// that thread the buffer through an encoder before sealing it with
+    /// [`FramePool::seal`]. The lease is untracked: return it via
+    /// [`FramePool::recycle_vec`] or `seal` (dropping it instead merely
+    /// forfeits the capacity).
+    pub fn take_vec(&self) -> Vec<u8> {
+        self.pop_vec()
+    }
+
+    /// Return a leased raw buffer to the free list.
+    pub fn recycle_vec(&self, buf: Vec<u8>) {
+        self.put_back(buf);
+    }
+
+    /// Seal an owned buffer into a pooled [`Frame`]: the frame holds the
+    /// very bytes of `buf` (no copy), and the buffer recycles here when
+    /// the last reference drops.
+    pub fn seal(&self, buf: Vec<u8>) -> Frame {
+        let n = self.inner.outstanding.fetch_add(1, Ordering::Relaxed) + 1;
+        self.inner.high_water.fetch_max(n, Ordering::Relaxed);
+        Frame { inner: Arc::new(FrameInner { buf: Some(buf), pool: Some(self.clone()) }) }
+    }
+
+    /// Lifecycle counters (tests assert leak-freedom and bounded
+    /// high-water marks against these).
+    pub fn stats(&self) -> FramePoolStats {
+        FramePoolStats {
+            free: self.inner.free.lock().unwrap().len(),
+            outstanding: self.inner.outstanding.load(Ordering::Relaxed),
+            high_water: self.inner.high_water.load(Ordering::Relaxed),
+            created: self.inner.created.load(Ordering::Relaxed),
+            recycled: self.inner.recycled.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Bytes parked in the free list (memory accounting).
+    pub fn approx_bytes(&self) -> u64 {
+        self.inner.free.lock().unwrap().iter().map(|b| b.capacity() as u64).sum()
+    }
+}
+
+/// A writable pooled buffer, leased from a [`FramePool`]. Write the wire
+/// bytes, then [`seal`](FrameBuf::seal) it into an immutable [`Frame`];
+/// dropping it unsealed returns the buffer to the pool.
+#[derive(Debug)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// `None` once sealed (disarms the recycle-on-drop).
+    pool: Option<FramePool>,
+}
+
+impl FrameBuf {
+    /// Append bytes to the frame under construction.
+    pub fn extend_from_slice(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The underlying vector, for writers that need full `Vec` access.
+    pub fn as_mut_vec(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Freeze into an immutable refcounted [`Frame`] (no copy).
+    pub fn seal(mut self) -> Frame {
+        let buf = std::mem::take(&mut self.buf);
+        let pool = self.pool.take().expect("frame sealed twice");
+        pool.seal(buf)
+    }
+}
+
+impl Drop for FrameBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put_back(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+#[derive(Debug)]
+struct FrameInner {
+    buf: Option<Vec<u8>>,
+    /// `None` for frames wrapping a caller-owned vector ([`Frame::owned`]).
+    pool: Option<FramePool>,
+}
+
+impl Drop for FrameInner {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.inner.outstanding.fetch_sub(1, Ordering::Relaxed);
+            if let Some(buf) = self.buf.take() {
+                pool.put_back(buf);
+            }
+        }
+    }
+}
+
+/// An immutable, refcounted transport buffer — what the mailbox holds and
+/// what a receive hands back. Cloning shares the same bytes (an `Arc`
+/// bump, no copy); when the last clone drops, a pooled frame's buffer
+/// returns to its [`FramePool`].
+#[derive(Clone, Debug)]
+pub struct Frame {
+    inner: Arc<FrameInner>,
+}
+
+impl Frame {
+    /// Wrap a caller-owned vector without pooling (no copy; the vector is
+    /// simply freed when the last reference drops). Collectives and
+    /// one-shot sends use this.
+    pub fn owned(buf: Vec<u8>) -> Frame {
+        Frame { inner: Arc::new(FrameInner { buf: Some(buf), pool: None }) }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        self.inner.buf.as_deref().expect("frame buffer already taken")
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Move the bytes out as a plain `Vec<u8>`. Zero-copy when this is
+    /// the only reference (the buffer is *stolen* — a pooled frame's
+    /// buffer then does not return to its pool); copies otherwise.
+    pub fn into_vec(self) -> Vec<u8> {
+        match Arc::try_unwrap(self.inner) {
+            Ok(mut inner) => inner.buf.take().expect("frame buffer already taken"),
+            Err(shared) => shared.buf.as_deref().expect("frame buffer already taken").to_vec(),
+        }
+    }
+
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for Frame {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for Frame {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+/// A received message. `data` is a borrowed view of the very frame the
+/// sender published — dropping it recycles the buffer.
 #[derive(Debug, Clone)]
 pub struct RecvMsg {
     pub src: u32,
     pub tag: Tag,
-    pub data: Vec<u8>,
+    pub data: Frame,
 }
 
 #[derive(Debug)]
 struct Envelope {
     src: u32,
     tag: Tag,
-    data: Vec<u8>,
+    data: Frame,
 }
 
 #[derive(Debug, Default)]
@@ -75,6 +343,8 @@ pub struct MpiWorld {
     collective: Mutex<CollectiveSlot>,
     collective_cv: Condvar,
     network: NetworkModel,
+    /// Shared transport-buffer recycler (the modeled shared segment).
+    frames: FramePool,
     /// Total wire bytes moved (all ranks).
     pub total_wire_bytes: AtomicU64,
     /// Total messages.
@@ -97,9 +367,15 @@ impl MpiWorld {
             }),
             collective_cv: Condvar::new(),
             network,
+            frames: FramePool::new(),
             total_wire_bytes: AtomicU64::new(0),
             total_messages: AtomicU64::new(0),
         })
+    }
+
+    /// The world's shared [`FramePool`].
+    pub fn frame_pool(&self) -> &FramePool {
+        &self.frames
     }
 
     /// Handle for `rank`.
@@ -132,33 +408,50 @@ impl Communicator {
         self.world.size
     }
 
-    /// Non-blocking send (completes immediately in-process; the network
-    /// model charges the simulated wire time to the sender).
-    pub fn isend(&mut self, dst: u32, tag: Tag, data: Vec<u8>) {
+    /// The world's shared [`FramePool`] — senders lease publishable
+    /// buffers here; receivers' dropped frames recycle into it.
+    pub fn frame_pool(&self) -> &FramePool {
+        &self.world.frames
+    }
+
+    /// Publish a sealed frame to `dst` — the zero-copy send: the mailbox
+    /// holds the very buffer the sender wrote, and the receiver reads it
+    /// in place. The network model charges the simulated wire time to the
+    /// sender as for any send.
+    pub fn isend_frame(&mut self, dst: u32, tag: Tag, frame: Frame) {
         assert!((dst as usize) < self.world.size, "invalid destination rank {dst}");
-        let bytes = data.len();
+        let bytes = frame.len();
         self.network_secs += self.world.network.transfer_secs(bytes);
         self.world.total_wire_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.world.total_messages.fetch_add(1, Ordering::Relaxed);
         let (lock, cv) = &self.world.mailboxes[dst as usize];
         let mut mb = lock.lock().unwrap();
-        mb.queue.push_back(Envelope { src: self.rank, tag, data });
+        mb.queue.push_back(Envelope { src: self.rank, tag, data: frame });
         cv.notify_all();
     }
 
-    /// Scatter-gather send: assemble `parts` into a single message with
-    /// one exact-size allocation (the analog of an MPI derived datatype /
-    /// `IOV`-style send). The batching layer frames chunk headers around
-    /// caller-owned wire buffers with this, so encode → send performs no
-    /// intermediate copy of the payload besides the one into the mailbox
-    /// message itself.
+    /// Non-blocking send of an owned vector (completes immediately
+    /// in-process; no copy — the vector is published as an owned
+    /// [`Frame`]).
+    pub fn isend(&mut self, dst: u32, tag: Tag, data: Vec<u8>) {
+        self.isend_frame(dst, tag, Frame::owned(data));
+    }
+
+    /// Scatter-gather send: stage `parts` into one pooled frame (the
+    /// analog of an MPI derived datatype / `IOV`-style send, with the
+    /// single staging copy modeling the DMA write into the shared
+    /// segment). No allocation in steady state — the frame buffer is
+    /// recycled from the world's [`FramePool`]. Callers that already own
+    /// a publishable buffer should use [`Communicator::isend_frame`]
+    /// instead and skip the copy entirely.
     pub fn isend_parts(&mut self, dst: u32, tag: Tag, parts: &[&[u8]]) {
+        let mut frame = self.world.frames.take();
         let total: usize = parts.iter().map(|p| p.len()).sum();
-        let mut data = Vec::with_capacity(total);
+        frame.as_mut_vec().reserve(total);
         for p in parts {
-            data.extend_from_slice(p);
+            frame.extend_from_slice(p);
         }
-        self.isend(dst, tag, data);
+        self.isend_frame(dst, tag, frame.seal());
     }
 
     /// Probe: is a matching message available? (src/tag `None` = ANY).
@@ -342,13 +635,13 @@ impl Communicator {
                 // Local loopback: deliver directly without network charge.
                 let (lock, cv) = &self.world.mailboxes[d];
                 let mut mb = lock.lock().unwrap();
-                mb.queue.push_back(Envelope { src: self.rank, tag, data });
+                mb.queue.push_back(Envelope { src: self.rank, tag, data: Frame::owned(data) });
                 cv.notify_all();
             } else {
                 self.isend(d as u32, tag, data);
             }
         }
-        let mut out: Vec<Option<Vec<u8>>> = vec![None; self.world.size];
+        let mut out: Vec<Option<Frame>> = vec![None; self.world.size];
         let mut received = 0;
         while received < self.world.size {
             let m = self.recv(None, Some(tag));
@@ -356,7 +649,9 @@ impl Communicator {
             out[m.src as usize] = Some(m.data);
             received += 1;
         }
-        out.into_iter().map(|o| o.unwrap()).collect()
+        // Each frame is uniquely held here, so `into_vec` moves the
+        // sender's vector out without copying.
+        out.into_iter().map(|o| o.unwrap().into_vec()).collect()
     }
 }
 
@@ -393,7 +688,7 @@ mod tests {
                 c.isend(1, tags::AURA, vec![1, 2, 3]);
             } else {
                 let m = c.recv(Some(0), Some(tags::AURA));
-                assert_eq!(m.data, vec![1, 2, 3]);
+                assert_eq!(&m.data[..], [1, 2, 3]);
                 assert_eq!(m.src, 0);
             }
         }));
@@ -406,7 +701,7 @@ mod tests {
                 c.isend_parts(1, tags::AURA, &[&[1, 2], &[], &[3, 4, 5]]);
             } else {
                 let m = c.recv(Some(0), Some(tags::AURA));
-                assert_eq!(m.data, vec![1, 2, 3, 4, 5]);
+                assert_eq!(&m.data[..], [1, 2, 3, 4, 5]);
             }
         }));
     }
@@ -451,7 +746,7 @@ mod tests {
                     // entry into the wait).
                     c.isend(1, tags::CONTROL, vec![0]);
                     let (m3, w3) = c.recv_any_timed(tags::MIGRATION);
-                    assert_eq!(m3.data, vec![9]);
+                    assert_eq!(&m3.data[..], [9]);
                     assert!(w3 > 0.0, "blocked wait must be measured");
                 }
                 1 => {
@@ -478,9 +773,9 @@ mod tests {
             } else {
                 // Receive MIGRATION first although AURA arrived first.
                 let m = c.recv(None, Some(tags::MIGRATION));
-                assert_eq!(m.data, vec![2]);
+                assert_eq!(&m.data[..], [2]);
                 let a = c.recv(None, Some(tags::AURA));
-                assert_eq!(a.data, vec![1]);
+                assert_eq!(&a.data[..], [1]);
             }
         }));
     }
@@ -563,6 +858,79 @@ mod tests {
         assert!(c0.network_secs > 0.0009, "network_secs = {}", c0.network_secs);
         assert_eq!(world.total_messages.load(Ordering::Relaxed), 1);
         assert_eq!(world.total_wire_bytes.load(Ordering::Relaxed), 125_000);
+    }
+
+    #[test]
+    fn isend_frame_publishes_the_senders_bytes_in_place() {
+        // The receiver must see the very buffer the sender sealed — the
+        // zero-copy contract, asserted by pointer identity (valid
+        // in-process: ranks share one address space).
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        let mut buf = world.frame_pool().take();
+        buf.extend_from_slice(b"zero-copy wire");
+        let frame = buf.seal();
+        let sent_ptr = frame.as_slice().as_ptr();
+        tx.isend_frame(1, tags::AURA, frame);
+        let m = rx.recv(Some(0), Some(tags::AURA));
+        assert_eq!(&m.data[..], *b"zero-copy wire");
+        assert_eq!(m.data.as_slice().as_ptr(), sent_ptr, "mailbox must not copy the frame");
+        drop(m);
+        let stats = world.frame_pool().stats();
+        assert_eq!(stats.outstanding, 0);
+        assert_eq!(stats.free, 1, "dropped frame must recycle");
+    }
+
+    #[test]
+    fn frame_pool_circulates_buffers_without_growth() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        for round in 0u8..20 {
+            tx.isend_parts(1, tags::AURA, &[&[round], &[round, round]]);
+            let m = rx.recv(Some(0), Some(tags::AURA));
+            assert_eq!(&m.data[..], [round, round, round]);
+        }
+        let stats = world.frame_pool().stats();
+        assert_eq!(stats.outstanding, 0, "no frame may leak");
+        assert_eq!(stats.created, 1, "one in-flight message needs one buffer");
+        assert_eq!(stats.free, 1);
+        assert_eq!(stats.high_water, 1);
+        assert_eq!(stats.recycled, 20);
+    }
+
+    #[test]
+    fn frame_clones_share_bytes_and_recycle_once() {
+        let pool = FramePool::new();
+        let mut buf = pool.take();
+        buf.extend_from_slice(&[7; 32]);
+        let a = buf.seal();
+        let b = a.clone();
+        assert_eq!(a.as_slice().as_ptr(), b.as_slice().as_ptr());
+        drop(a);
+        assert_eq!(pool.stats().free, 0, "buffer still referenced");
+        assert_eq!(pool.stats().outstanding, 1);
+        drop(b);
+        let stats = pool.stats();
+        assert_eq!((stats.free, stats.outstanding, stats.recycled), (1, 0, 1));
+    }
+
+    #[test]
+    fn unsealed_lease_returns_to_the_pool() {
+        let pool = FramePool::new();
+        {
+            let mut buf = pool.take();
+            buf.extend_from_slice(&[1, 2, 3]);
+            // Dropped unsealed (e.g. an aborted send).
+        }
+        assert_eq!(pool.stats().free, 1);
+        // into_vec on a unique frame steals the buffer (no recycle).
+        let stolen = pool.take().seal().into_vec();
+        assert!(stolen.is_empty());
+        let stats = pool.stats();
+        assert_eq!(stats.outstanding, 0);
+        assert_eq!(stats.free, 0, "into_vec transfers ownership out of the pool");
     }
 
     #[test]

@@ -6,7 +6,19 @@
 //! the fast one (§3.11) — a pure bytes×(latency, bandwidth) effect, which
 //! this model reproduces: each message is charged
 //! `latency + bytes / bandwidth` seconds of *simulated* network time,
-//! accumulated per rank and reported next to wall time.
+//! accumulated per rank and reported next to wall time. The charge
+//! applies per transport frame — chunked and framed sends alike — so
+//! compression and delta savings show up as simulated seconds exactly as
+//! they would on the real fabric:
+//!
+//! ```
+//! use teraagent::comm::NetworkModel;
+//! let gige = NetworkModel::gige();
+//! // 1 MiB over 1 Gb/s: ~8.4 ms of wire time + 50 µs latency.
+//! let secs = gige.transfer_secs(1 << 20);
+//! assert!(secs > 8.0e-3 && secs < 9.0e-3);
+//! assert_eq!(NetworkModel::ideal().transfer_secs(1 << 30), 0.0);
+//! ```
 
 /// Latency/bandwidth model of one link class.
 #[derive(Clone, Copy, Debug, PartialEq)]

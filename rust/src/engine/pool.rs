@@ -188,6 +188,128 @@ impl ThreadPool {
         cpu.into_iter().fold(0.0, f64::max)
     }
 
+    /// Streaming parallel for-each — the receive-side mirror of
+    /// [`for_each_mut_completion`](Self::for_each_mut_completion): there
+    /// the *workers* produce and the **caller** consumes completions;
+    /// here the **caller** produces work and the *workers* consume it.
+    /// `produce` runs on the calling thread and hands out `(index,
+    /// payload)` pairs through its `feed` argument as they become ready
+    /// (e.g. a receive loop completing one source's wire at a time);
+    /// pool workers pick each pair up immediately and run
+    /// `f(index, payload, &mut items[index])` — so the first item's
+    /// processing overlaps whatever the producer is still waiting on.
+    /// This is the overlap primitive for the streaming aura ingest:
+    /// decode workers race the receiving rank thread
+    /// ([`Codec::decode_pooled_streamed`]).
+    ///
+    /// Contract: `produce` must feed every index in `0..items.len()`
+    /// exactly once before returning. Item `i` is claimed by exactly one
+    /// worker; per-index state stays deterministic for any thread count
+    /// because each item only ever sees its own `(index, payload)` pair —
+    /// scheduling moves *when* an item is processed, never *what* it
+    /// computes. With one thread (or one item) each fed pair is processed
+    /// inline on the caller the moment it is fed — the serial
+    /// receive→process interleaving, with no queueing and no allocation
+    /// (the multi-thread dispatch allocates bounded per-call scratch,
+    /// like every other fan-out here).
+    ///
+    /// Returns `produce`'s result plus the workers' critical-path CPU
+    /// seconds (see [`map_chunks_timed`](Self::map_chunks_timed); inline
+    /// work is visible to the caller's own CPU clock and reported as 0).
+    ///
+    /// [`Codec::decode_pooled_streamed`]: crate::io::codec::Codec::decode_pooled_streamed
+    pub fn for_each_mut_streamed<T: Send, W: Send, R>(
+        &self,
+        items: &mut [T],
+        f: impl Fn(usize, W, &mut T) + Sync,
+        produce: impl FnOnce(&mut dyn FnMut(usize, W)) -> R,
+    ) -> (R, f64) {
+        let len = items.len();
+        if len == 0 {
+            let r = produce(&mut |_, _| panic!("fed an index into an empty item set"));
+            return (r, 0.0);
+        }
+        if self.threads == 1 || len == 1 {
+            // Inline on the caller, immediately per fed pair: its own CPU
+            // clock sees the work. Duplicate feeds are caught exactly in
+            // debug builds (matching the threaded path's slot claim);
+            // release builds keep the count check only, so the hot path
+            // stays allocation-free.
+            let mut fed = 0usize;
+            #[cfg(debug_assertions)]
+            let mut seen = vec![false; len];
+            let r = {
+                let f = &f;
+                let fed = &mut fed;
+                #[cfg(debug_assertions)]
+                let seen = &mut seen;
+                produce(&mut |i, w| {
+                    #[cfg(debug_assertions)]
+                    {
+                        assert!(!seen[i], "index {i} fed twice");
+                        seen[i] = true;
+                    }
+                    *fed += 1;
+                    f(i, w, &mut items[i]);
+                })
+            };
+            assert_eq!(fed, len, "produce must feed every index exactly once");
+            return (r, 0.0);
+        }
+        let workers = self.threads.min(len);
+        // Hand-off: each `&mut` item is parked in a mutex slot and
+        // claimed by the worker that dequeues its index — the mutex only
+        // transfers ownership of the borrow; items are never shared.
+        let slots: Vec<std::sync::Mutex<Option<&mut T>>> =
+            items.iter_mut().map(|it| std::sync::Mutex::new(Some(it))).collect();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, W)>();
+        let rx = std::sync::Mutex::new(rx);
+        let mut cpu: Vec<f64> = vec![0.0; workers];
+        let r = std::thread::scope(|s| {
+            let f = &f;
+            let slots = &slots;
+            let rx = &rx;
+            for cpu_slot in cpu.iter_mut() {
+                s.spawn(move || {
+                    let t = crate::util::timing::CpuTimer::start();
+                    loop {
+                        // The dequeue lock is held across the blocking
+                        // recv — contending workers queue on the mutex,
+                        // so hand-out stays serialized but processing
+                        // (`f`) runs in parallel.
+                        let msg = rx.lock().unwrap().recv();
+                        match msg {
+                            Ok((i, w)) => {
+                                let item =
+                                    slots[i].lock().unwrap().take().expect("index fed twice");
+                                f(i, w, item);
+                            }
+                            Err(_) => break, // producer done, queue drained
+                        }
+                    }
+                    *cpu_slot = t.elapsed_secs();
+                });
+            }
+            let mut fed = 0usize;
+            let r = {
+                let fed = &mut fed;
+                let mut feed = |i: usize, w: W| {
+                    *fed += 1;
+                    // A send fails only if every worker died; surface that
+                    // as a panic at the producer rather than a silent drop.
+                    tx.send((i, w)).expect("streamed pool workers gone");
+                };
+                produce(&mut feed)
+            };
+            // Under-feeding would return with items silently unprocessed;
+            // duplicate feeds are caught by the slot claim in the workers.
+            assert_eq!(fed, len, "produce must feed every index exactly once");
+            drop(tx); // hang up: workers drain the queue and exit
+            r
+        });
+        (r, cpu.into_iter().fold(0.0, f64::max))
+    }
+
     /// Parallel for-each over mutable items: workers receive disjoint
     /// contiguous sub-slices of `items`, so per-item scratch (e.g. reused
     /// mechanics gather batches) can be mutated in place without locking.
@@ -329,6 +451,82 @@ mod tests {
         let pool = ThreadPool::new(4);
         let mut empty: Vec<u64> = Vec::new();
         assert_eq!(pool.for_each_mut_completion(&mut empty, |_, _| (), |_, _| ()), 0.0);
+    }
+
+    #[test]
+    fn for_each_mut_streamed_processes_every_fed_item_once() {
+        for threads in [1, 3, 16] {
+            let pool = ThreadPool::new(threads);
+            let mut items: Vec<(u64, u64)> = vec![(0, 0); 31];
+            // Feed indices in a scrambled order with payloads that the
+            // worker must pair with the right item.
+            let order: Vec<usize> = (0..31).map(|i| (i * 7) % 31).collect();
+            let (fed_count, _cpu) = pool.for_each_mut_streamed(
+                &mut items,
+                |i, payload: u64, item| {
+                    assert_eq!(payload, i as u64 * 3, "payload routed to wrong item");
+                    item.0 = payload;
+                    item.1 = 1;
+                },
+                |feed| {
+                    for &i in &order {
+                        feed(i, i as u64 * 3);
+                    }
+                    order.len()
+                },
+            );
+            assert_eq!(fed_count, 31);
+            for (i, item) in items.iter().enumerate() {
+                assert_eq!(*item, (i as u64 * 3, 1), "item {i} with {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_mut_streamed_overlaps_processing_with_production() {
+        // With real workers, an item fed early must be able to *finish*
+        // while the producer is still running — proven by having the
+        // producer wait for the first item's side effect.
+        let pool = ThreadPool::new(4);
+        let mut items = vec![0u8; 2];
+        let done = AtomicU64::new(0);
+        pool.for_each_mut_streamed(
+            &mut items,
+            |i, _: (), item| {
+                *item = 1;
+                done.fetch_add(1 << (i * 8), Ordering::SeqCst);
+            },
+            |feed| {
+                feed(0, ());
+                // The worker-side processing of item 0 completes while
+                // this producer is still "receiving".
+                while done.load(Ordering::SeqCst) & 0xFF == 0 {
+                    std::thread::yield_now();
+                }
+                feed(1, ());
+            },
+        );
+        assert_eq!(items, vec![1, 1]);
+    }
+
+    #[test]
+    fn for_each_mut_streamed_empty_and_single() {
+        let pool = ThreadPool::new(4);
+        let mut empty: Vec<u8> = Vec::new();
+        let (r, cpu) = pool.for_each_mut_streamed(&mut empty, |_, _: u8, _| (), |_| 42);
+        assert_eq!((r, cpu), (42, 0.0));
+        // One item runs deferred-inline on the caller.
+        let mut one = vec![0u64];
+        let (r, cpu) = pool.for_each_mut_streamed(
+            &mut one,
+            |_, w: u64, item| *item = w,
+            |feed| {
+                feed(0, 9);
+                "done"
+            },
+        );
+        assert_eq!((r, cpu), ("done", 0.0));
+        assert_eq!(one[0], 9);
     }
 
     #[test]

@@ -5,7 +5,9 @@ use super::model::Model;
 use super::pool::ThreadPool;
 use super::world::{AuraStore, World};
 use crate::balance::{diffusive, rcb, weights};
-use crate::comm::batching::{recv_all_batched_into, send_batched, Reassembler};
+use crate::comm::batching::{
+    recv_all_batched_streaming, send_batched_framed, Reassembler, WireSlot, FRAME_HEADER,
+};
 use crate::comm::mpi::{tags, Communicator};
 use crate::config::{BalanceMethod, SimConfig};
 use crate::core::agent::Agent;
@@ -112,10 +114,8 @@ pub struct RankSim<M: Model> {
     /// pool → decode → aura store → pool, so the exchange path allocates
     /// nothing in steady state.
     view_pool: ViewPool,
-    /// Per-source completed aura wires (aligned with `neighbors_cache`;
-    /// filled in arrival order, consumed in source order).
-    aura_rx_wires: Vec<Vec<u8>>,
-    /// Per-source parallel-decode slots (decoded views + stats).
+    /// Per-source streaming-decode slots (decoded views + stats, source
+    /// order; wires are decoded as they arrive, never parked).
     aura_rx_jobs: Vec<AuraDecodeJob>,
     /// Decoded messages in source order, handed to the aura store
     /// (capacity reused; drained every iteration).
@@ -181,7 +181,6 @@ impl<M: Model> RankSim<M> {
             migration_per_dest: Vec::new(),
             migration_ingest: Vec::new(),
             view_pool: ViewPool::new(),
-            aura_rx_wires: Vec::new(),
             aura_rx_jobs: Vec::new(),
             aura_decoded: Vec::new(),
             aura_ranges: Vec::new(),
@@ -317,11 +316,18 @@ impl<M: Model> RankSim<M> {
         // independent — each streams the selected agents straight out of
         // the SoA columns through its own channel's delta reference and
         // payload buffer into its own reused wire buffer — and the rank
-        // thread issues `send_batched` per finished wire while later
-        // encodes still run, so destination 0's send overlaps destination
-        // N's compression. Completion order only moves send *start*
-        // times; wire bytes per destination stay byte-identical for any
-        // thread count.
+        // thread publishes each finished wire while later encodes still
+        // run, so destination 0's send overlaps destination N's
+        // compression. Wires are encoded after a reserved FRAME_HEADER
+        // gap, so a single-chunk message is published to the transport
+        // *in place* (`send_batched_framed`): the mailbox frame is the
+        // very buffer the encoder wrote, and a recycled buffer from the
+        // shared frame pool is swapped back into the job for the next
+        // iteration — zero copies between encode and decode, and no
+        // data-bearing allocation (only the frame's fixed-size refcount
+        // cell, the MPI_Request analog). Completion order only moves
+        // send *start* times; wire bytes per destination stay
+        // byte-identical for any thread count.
         let mut jobs = std::mem::take(&mut self.aura_jobs);
         let encode_cpu = {
             let comm = &mut self.comm;
@@ -334,15 +340,16 @@ impl<M: Model> RankSim<M> {
                 &per_dest,
                 &mut jobs,
                 &self.pool,
+                FRAME_HEADER,
                 |i, wire, stats| {
                     let (dest, ids) = &per_dest[i];
                     metrics.count(Counter::AuraAgentsSent, ids.len() as u64);
                     metrics.add_op(Op::Serialize, stats.serialize_secs);
                     metrics.add_op(Op::Compress, stats.compress_secs);
                     metrics.count(Counter::BytesSentRaw, stats.raw_bytes as u64);
-                    metrics.count(Counter::BytesSentWire, wire.len() as u64);
+                    metrics.count(Counter::BytesSentWire, stats.wire_bytes as u64);
                     let frames = metrics.timed_cpu(Op::Transfer, || {
-                        send_batched(comm, *dest, tags::AURA, iteration, wire, chunk_bytes)
+                        send_batched_framed(comm, *dest, tags::AURA, iteration, wire, chunk_bytes)
                     });
                     // Chunked sends count per frame, so the wire/messages
                     // ratio reflects what the fabric saw.
@@ -353,35 +360,37 @@ impl<M: Model> RankSim<M> {
         self.pool_cpu_secs += encode_cpu;
         self.aura_jobs = jobs;
         self.aura_per_dest = per_dest;
-        // Receive in arrival order: frames from ANY neighbor are consumed
-        // as they land (no fixed-rank-order blocking wait), each
-        // completed wire parking in its source's slot. Blocked wall time
-        // and frame-copy CPU are metered separately (the clock-skew fix).
-        let nsrc = self.neighbors_cache.len();
-        let mut wires = std::mem::take(&mut self.aura_rx_wires);
-        wires.resize_with(nsrc, Vec::new);
-        let rstats = recv_all_batched_into(
-            &mut self.reassembler,
-            &mut self.comm,
-            &self.neighbors_cache,
-            tags::AURA,
-            &mut wires,
-        );
+        // Streaming ingest (ROADMAP "decode-on-arrival"): the rank thread
+        // keeps receiving frames from ANY neighbor in arrival order (no
+        // fixed-rank-order blocking wait) and hands each source's wire to
+        // a pool decode worker the moment it completes — a single-frame
+        // message is the sender's published buffer, borrowed in place
+        // (zero receive-side copies), so the first source's decompression
+        // and delta restore overlap the last source's network wait.
+        // Blocked wall time, staging-copy CPU and copied bytes are
+        // metered separately (the clock-skew fix + frame-granular
+        // reassembly accounting). Jobs land in source order regardless of
+        // arrival order and thread count.
+        let mut rx_jobs = std::mem::take(&mut self.aura_rx_jobs);
+        let (rstats, decode_cpu) = {
+            let reassembler = &mut self.reassembler;
+            let comm = &mut self.comm;
+            let srcs = &self.neighbors_cache;
+            self.codec.decode_pooled_streamed(
+                tags::AURA,
+                srcs,
+                &mut rx_jobs,
+                &mut self.view_pool,
+                &self.pool,
+                |staging, feed: &mut dyn FnMut(usize, WireSlot)| {
+                    recv_all_batched_streaming(reassembler, comm, srcs, tags::AURA, staging, feed)
+                },
+            )
+        };
         self.metrics.add_op(Op::Transfer, rstats.wait_secs);
         self.metrics.add_op(Op::Reassembly, rstats.reassembly_secs);
         self.metrics.count(Counter::MessagesReceived, rstats.frames);
-        // Decode all sources in parallel on the pool (pooled buffers,
-        // in-buffer delta restore; per-source channel state is disjoint).
-        // Jobs land in source order regardless of arrival order.
-        let mut rx_jobs = std::mem::take(&mut self.aura_rx_jobs);
-        let decode_cpu = self.codec.decode_pooled_parallel(
-            tags::AURA,
-            &self.neighbors_cache,
-            &wires,
-            &mut rx_jobs,
-            &mut self.view_pool,
-            &self.pool,
-        );
+        self.metrics.count(Counter::BytesReassembled, rstats.copied_bytes);
         self.pool_cpu_secs += decode_cpu;
         let mut decoded = std::mem::take(&mut self.aura_decoded);
         decoded.clear();
@@ -391,7 +400,6 @@ impl<M: Model> RankSim<M> {
             decoded.push(job.take().expect("decoded aura message missing"));
         }
         self.aura_rx_jobs = rx_jobs;
-        self.aura_rx_wires = wires;
         // Mirror the hot columns into per-source pre-reserved ranges
         // (prefix sums in source order → aura ids are deterministic for
         // any arrival order and thread count), then register the whole
@@ -770,12 +778,19 @@ impl<M: Model> RankSim<M> {
     }
 
     fn update_memory_accounting(&mut self) {
+        // The transport frame pool is world-shared; attribute it to rank 0
+        // so the cross-rank sum counts its parked buffers exactly once
+        // (in-flight frames are briefly outside the free list — this is
+        // the steady-state between-iteration footprint).
+        let frame_pool_bytes =
+            if self.rank == 0 { self.comm.frame_pool().approx_bytes() } else { 0 };
         let live = self.rm.approx_bytes()
             + self.nsg.approx_bytes()
             + self.grid.approx_bytes()
             + self.aura.approx_bytes()
             + self.codec.reference_bytes()
-            + self.view_pool.approx_bytes();
+            + self.view_pool.approx_bytes()
+            + frame_pool_bytes;
         if live > self.metrics.peak_mem_bytes {
             self.metrics.peak_mem_bytes = live;
         }

@@ -96,6 +96,16 @@ impl AlignedBuf {
         self.len = bytes;
     }
 
+    /// Reserve capacity for at least `additional` bytes beyond the
+    /// current length (so a known-size assembly — e.g. multi-chunk
+    /// reassembly staging — grows the storage once, not per append).
+    pub fn reserve(&mut self, additional: usize) {
+        let words = (self.len + additional).div_ceil(8);
+        if words > self.words.len() {
+            self.words.reserve(words - self.words.len());
+        }
+    }
+
     /// Append raw bytes.
     pub fn extend_from_slice(&mut self, bytes: &[u8]) {
         let old = self.len;
@@ -228,6 +238,17 @@ mod tests {
         assert_eq!(b.len(), 32);
         assert_eq!(b.capacity(), cap, "shrinking set must not reallocate");
         assert_eq!(b.as_slice(), &[2; 32]);
+    }
+
+    #[test]
+    fn reserve_grows_capacity_without_len() {
+        let mut b = AlignedBuf::from_bytes(&[1, 2, 3]);
+        b.reserve(100);
+        assert!(b.capacity() >= 103);
+        assert_eq!(b.len(), 3);
+        let cap = b.capacity();
+        b.extend_from_slice(&[0; 100]);
+        assert_eq!(b.capacity(), cap, "reserved append must not reallocate");
     }
 
     #[test]

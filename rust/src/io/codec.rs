@@ -148,6 +148,29 @@ impl Decoded {
 /// A channel key: (peer rank, message tag).
 pub type ChannelKey = (u32, u32);
 
+/// A wire message as delivered by the transport, consumed by the
+/// streaming decode ([`Codec::decode_pooled_streamed`]). Implementors
+/// expose the codec-visible bytes and say how their backing storage is
+/// recycled once decoded — `comm::batching::WireSlot` returns staged
+/// buffers to the [`ViewPool`] (direct frames recycle into the transport
+/// pool on drop); a plain `Vec<u8>` just drops.
+pub trait WirePayload: Send {
+    /// The wire bytes (envelope + payload).
+    fn wire(&self) -> &[u8];
+
+    /// Release the backing storage after decode (pooled implementations
+    /// recycle; the default for owned buffers is to drop).
+    fn recycle(self, pool: &mut ViewPool);
+}
+
+impl WirePayload for Vec<u8> {
+    fn wire(&self) -> &[u8] {
+        self
+    }
+
+    fn recycle(self, _pool: &mut ViewPool) {}
+}
+
 /// Per-(peer, tag) sender state: the delta encoder, a reused payload
 /// buffer (the delta encoder's reference double-buffers against it on
 /// refresh: the payload bytes become the reference copy, the buffer's
@@ -162,7 +185,11 @@ struct TxChannel {
 /// Assemble the wire envelope + (optionally compressed) body into a
 /// caller-owned vector: `[serializer u8][delta-kind u8][raw_len u32 LE]
 /// [payload]`. Compression appends directly after the envelope — no
-/// intermediate compressed buffer exists.
+/// intermediate compressed buffer exists. The message starts at byte
+/// `gap`: the first `gap` bytes are reserved (zeroed) for a transport
+/// header, so a framed send can publish the very same buffer without
+/// re-staging it (`comm::batching::send_batched_framed`); `gap = 0`
+/// yields the bare message.
 fn finish_wire(
     compression: Compression,
     ser_code: u8,
@@ -170,11 +197,13 @@ fn finish_wire(
     payload: &[u8],
     lz: &mut Lz4Scratch,
     wire: &mut Vec<u8>,
+    gap: usize,
     stats: &mut EncodeStats,
 ) {
     stats.raw_bytes = payload.len();
     let compressed = !matches!(compression, Compression::None);
     wire.clear();
+    wire.resize(gap, 0);
     // Worst-case LZ4 expansion bound, so appending the compressed body
     // never grows the buffer mid-stream.
     wire.reserve(payload.len() + payload.len() / 255 + 24);
@@ -193,7 +222,7 @@ fn finish_wire(
         // keep it out of the Op::Compress bucket like the seed pipeline.
         wire.extend_from_slice(payload);
     }
-    stats.wire_bytes = wire.len();
+    stats.wire_bytes = wire.len() - gap;
 }
 
 /// Per-destination output slot for [`Codec::encode_rm_parallel`]: the
@@ -217,6 +246,7 @@ fn encode_one_rm(
     rm: &ResourceManager,
     ids: &[LocalId],
     wire: &mut Vec<u8>,
+    gap: usize,
 ) -> EncodeStats {
     let mut stats = EncodeStats::default();
     // Thread-CPU clock (see `finish_wire`): this body runs on pool
@@ -235,6 +265,7 @@ fn encode_one_rm(
                 &payload,
                 &mut ch.lz,
                 wire,
+                gap,
                 &mut stats,
             );
         }
@@ -269,6 +300,7 @@ fn encode_one_rm(
                 payload.as_slice(),
                 lz,
                 wire,
+                gap,
                 &mut stats,
             );
         }
@@ -304,6 +336,33 @@ fn wire_needs_delta_channel(compression: Compression, wire: &[u8]) -> bool {
         && wire[0] != SerializerKind::RootIo.code()
         && !(DeltaKind::from_code(wire[1] & 0x7F) == DeltaKind::Full
             && !matches!(compression, Compression::Lz4Delta { .. }))
+}
+
+/// Create-if-missing the per-source delta channels for `tag` in `rx` and
+/// hand out disjoint `&mut` decoder refs reordered to match `srcs`
+/// (unique by construction: neighbor-rank sets). A free function over the
+/// channel map so callers keep the rest of `Codec` borrowable while the
+/// refs are live.
+fn rx_channels_for<'a>(
+    rx: &'a mut HashMap<ChannelKey, DeltaDecoder>,
+    tag: u32,
+    srcs: &[u32],
+) -> Vec<Option<&'a mut DeltaDecoder>> {
+    for &src in srcs {
+        rx.entry((src, tag)).or_insert_with(DeltaDecoder::new);
+    }
+    let mut decs: Vec<Option<&'a mut DeltaDecoder>> = Vec::new();
+    decs.resize_with(srcs.len(), || None);
+    for (key, dec) in rx.iter_mut() {
+        if key.1 != tag {
+            continue;
+        }
+        if let Some(i) = srcs.iter().position(|&s| s == key.0) {
+            debug_assert!(decs[i].is_none(), "duplicate source in aura decode batch");
+            decs[i] = Some(dec);
+        }
+    }
+    decs
 }
 
 /// Decode one wire message on one already-created channel — the body of
@@ -412,6 +471,7 @@ impl Codec {
                     &payload,
                     &mut ch.lz,
                     wire,
+                    0,
                     &mut stats,
                 );
             }
@@ -437,6 +497,7 @@ impl Codec {
                     payload.as_slice(),
                     lz,
                     wire,
+                    0,
                     &mut stats,
                 );
             }
@@ -458,10 +519,27 @@ impl Codec {
         ids: &[LocalId],
         wire: &mut Vec<u8>,
     ) -> EncodeStats {
+        self.encode_rm_into_gap(key, rm, ids, wire, 0)
+    }
+
+    /// [`Codec::encode_rm_into`] with `gap` transport-header bytes
+    /// reserved (zeroed) at the front of `wire` — the single-destination
+    /// form of the framed encode, for callers that publish the buffer in
+    /// place via `send_batched_framed`. Message bytes (`wire[gap..]`) are
+    /// identical to the `gap = 0` encode; [`EncodeStats::wire_bytes`]
+    /// counts only the message.
+    pub fn encode_rm_into_gap(
+        &mut self,
+        key: ChannelKey,
+        rm: &ResourceManager,
+        ids: &[LocalId],
+        wire: &mut Vec<u8>,
+        gap: usize,
+    ) -> EncodeStats {
         let serializer = self.serializer;
         let compression = self.compression;
         let ch = self.tx.entry(key).or_default();
-        encode_one_rm(serializer, compression, ch, rm, ids, wire)
+        encode_one_rm(serializer, compression, ch, rm, ids, wire, gap)
     }
 
     /// Run one [`Codec::encode_rm_into`] per destination **in parallel**
@@ -489,7 +567,7 @@ impl Codec {
         jobs: &mut Vec<AuraEncodeJob>,
         pool: &ThreadPool,
     ) -> f64 {
-        self.encode_rm_overlapped(tag, rm, dests, jobs, pool, |_, _, _| {})
+        self.encode_rm_overlapped(tag, rm, dests, jobs, pool, 0, |_, _, _| {})
     }
 
     /// [`Codec::encode_rm_parallel`] without the fork-join barrier: as
@@ -503,6 +581,16 @@ impl Codec {
     /// serial path for every thread count, exactly as for
     /// [`Codec::encode_rm_parallel`]. With one pool thread everything
     /// runs inline in destination order (encode → send → encode → send).
+    ///
+    /// Each wire is written after `gap` reserved bytes (see
+    /// [`finish_wire`]'s gap contract): the engine passes the transport's
+    /// `FRAME_HEADER` size so `on_ready` can hand the *same buffer* to
+    /// the zero-copy framed send (`send_batched_framed` writes the chunk
+    /// header into the gap and publishes the buffer in place, swapping a
+    /// recycled one back into the job). `on_ready` therefore receives the
+    /// wire `&mut`; replacing the vector is allowed, bytes before `gap`
+    /// are transport-owned, and [`EncodeStats::wire_bytes`] counts only
+    /// the message itself.
     pub fn encode_rm_overlapped(
         &mut self,
         tag: u32,
@@ -510,7 +598,8 @@ impl Codec {
         dests: &[(u32, Vec<LocalId>)],
         jobs: &mut Vec<AuraEncodeJob>,
         pool: &ThreadPool,
-        mut on_ready: impl FnMut(usize, &[u8], &EncodeStats),
+        gap: usize,
+        mut on_ready: impl FnMut(usize, &mut Vec<u8>, &EncodeStats),
     ) -> f64 {
         jobs.resize_with(dests.len(), AuraEncodeJob::default);
         if dests.is_empty() {
@@ -555,7 +644,7 @@ impl Codec {
         pool.for_each_mut_completion(
             &mut work,
             |_, w| {
-                *w.stats = encode_one_rm(serializer, compression, w.ch, rm, w.ids, w.wire);
+                *w.stats = encode_one_rm(serializer, compression, w.ch, rm, w.ids, w.wire, gap);
             },
             |i, w| on_ready(i, w.wire, w.stats),
         )
@@ -603,11 +692,15 @@ impl Codec {
     /// shared pool's closed recycle loop (pool → decode → aura store →
     /// pool) is preserved and the steady state allocates nothing. Returns
     /// the region's critical-path CPU seconds.
-    pub fn decode_pooled_parallel(
+    ///
+    /// `wires` is anything byte-viewable — owned vectors in tests, or the
+    /// transport's `WireSlot`s (whose single-frame variant borrows the
+    /// sender's published bytes in place).
+    pub fn decode_pooled_parallel<W: AsRef<[u8]> + Sync>(
         &mut self,
         tag: u32,
         srcs: &[u32],
-        wires: &[Vec<u8>],
+        wires: &[W],
         jobs: &mut Vec<AuraDecodeJob>,
         view_pool: &mut ViewPool,
         pool: &ThreadPool,
@@ -617,29 +710,14 @@ impl Codec {
         if srcs.is_empty() {
             return 0.0;
         }
-        for &src in srcs {
-            self.rx.entry((src, tag)).or_insert_with(DeltaDecoder::new);
-        }
-        // Disjoint `&mut` decoder refs, reordered to match `srcs` (unique
-        // by construction: neighbor-rank sets).
-        let mut decs: Vec<Option<&mut DeltaDecoder>> = Vec::new();
-        decs.resize_with(srcs.len(), || None);
-        for (key, dec) in self.rx.iter_mut() {
-            if key.1 != tag {
-                continue;
-            }
-            if let Some(i) = srcs.iter().position(|&s| s == key.0) {
-                debug_assert!(decs[i].is_none(), "duplicate source in aura decode batch");
-                decs[i] = Some(dec);
-            }
-        }
+        let mut decs = rx_channels_for(&mut self.rx, tag, srcs);
         struct Work<'a> {
             wire: &'a [u8],
             dec: &'a mut DeltaDecoder,
             job: &'a mut AuraDecodeJob,
         }
         let mut work: Vec<Work<'_>> = decs
-            .into_iter()
+            .drain(..)
             .zip(wires)
             .zip(jobs.iter_mut())
             .map(|((dec, wire), job)| {
@@ -649,7 +727,7 @@ impl Codec {
                 job.pool.put_buf(view_pool.take_buf());
                 job.pool.put_offsets(view_pool.take_offsets());
                 job.decoded = None;
-                Work { wire, dec: dec.expect("channel created above"), job }
+                Work { wire: wire.as_ref(), dec: dec.expect("channel created above"), job }
             })
             .collect();
         let compression = self.compression;
@@ -665,6 +743,80 @@ impl Codec {
             job.pool.drain_into(view_pool);
         }
         cpu
+    }
+
+    /// The decode-on-arrival pipeline (ROADMAP "decode-on-arrival
+    /// streaming ingest"): `produce` runs the *receive loop* on the
+    /// calling thread and feeds each source's completed wire the moment
+    /// it finishes reassembling (`feed(source_index, payload)` — the
+    /// producer half lives in `comm::batching::recv_all_batched_streaming`),
+    /// while pool workers decode fed wires immediately through the same
+    /// per-source channel state as [`Codec::decode_pooled_parallel`] —
+    /// so the first source's decompression and delta restore overlap the
+    /// last source's network wait. With one pool thread each fed wire is
+    /// decoded inline on the caller the moment the receive loop completes
+    /// it — the serial receive→decode interleaving (note for metering:
+    /// later frames keep queueing in the mailbox during an inline decode,
+    /// so the receive loop's measured blocked wait shrinks accordingly).
+    /// Decoded bytes are identical for any thread count and feed order,
+    /// because each wire only ever meets its own channel's state.
+    ///
+    /// `produce` also gets `view_pool` back (first argument) for staging
+    /// multi-chunk reassembly buffers; each wire's storage is recycled
+    /// via [`WirePayload::recycle`] into the decoding job's local pool,
+    /// which drains back into `view_pool` after the fan-out — the closed
+    /// buffer loop of the non-streamed path, extended to the transport.
+    /// Returns `produce`'s result (the receive stats) and the workers'
+    /// critical-path CPU seconds.
+    pub fn decode_pooled_streamed<W: WirePayload, R>(
+        &mut self,
+        tag: u32,
+        srcs: &[u32],
+        jobs: &mut Vec<AuraDecodeJob>,
+        view_pool: &mut ViewPool,
+        pool: &ThreadPool,
+        produce: impl FnOnce(&mut ViewPool, &mut dyn FnMut(usize, W)) -> R,
+    ) -> (R, f64) {
+        jobs.resize_with(srcs.len(), AuraDecodeJob::default);
+        if srcs.is_empty() {
+            let r = produce(view_pool, &mut |_, _| {
+                panic!("fed a wire for an empty source set")
+            });
+            return (r, 0.0);
+        }
+        let mut decs = rx_channels_for(&mut self.rx, tag, srcs);
+        struct Work<'a> {
+            dec: &'a mut DeltaDecoder,
+            job: &'a mut AuraDecodeJob,
+        }
+        let mut work: Vec<Work<'_>> = decs
+            .drain(..)
+            .zip(jobs.iter_mut())
+            .map(|(dec, job)| {
+                // Seed as in the non-streamed fan-out; one extra buffer
+                // slot may join via `recycle` when a wire was staged.
+                job.pool.put_buf(view_pool.take_buf());
+                job.pool.put_offsets(view_pool.take_offsets());
+                job.decoded = None;
+                Work { dec: dec.expect("channel created above"), job }
+            })
+            .collect();
+        let compression = self.compression;
+        let (r, cpu) = pool.for_each_mut_streamed(
+            &mut work,
+            |_, wire: W, w| {
+                let (decoded, stats) =
+                    decode_one(compression, Some(&mut *w.dec), wire.wire(), &mut w.job.pool);
+                w.job.decoded = Some(decoded);
+                w.job.stats = stats;
+                wire.recycle(&mut w.job.pool);
+            },
+            |feed| produce(&mut *view_pool, feed),
+        );
+        for job in jobs.iter_mut() {
+            job.pool.drain_into(view_pool);
+        }
+        (r, cpu)
     }
 
     /// Bytes held by delta references (Fig. 11c's memory overhead).
@@ -881,7 +1033,7 @@ mod tests {
             }
             let pool = ThreadPool::new(4);
             let mut ready = vec![0u32; dests.len()];
-            overlapped.encode_rm_overlapped(7, &rm, &dests, &mut jobs, &pool, |i, wire, stats| {
+            overlapped.encode_rm_overlapped(7, &rm, &dests, &mut jobs, &pool, 0, |i, wire, stats| {
                 // The streamed wire is the finished per-destination
                 // message, byte-identical to the serial path.
                 assert_eq!(wire, &want[i][..], "iter {iter}, dest {i}");
@@ -945,6 +1097,114 @@ mod tests {
                         &tpool,
                     );
                     for (k, job) in jobs_par[ti].iter_mut().enumerate() {
+                        let got: Vec<(u64, [f64; 3])> = job
+                            .take()
+                            .expect("decoded missing")
+                            .into_agents()
+                            .iter()
+                            .map(|a| (a.global_id.counter, a.position.to_array()))
+                            .collect();
+                        assert_eq!(
+                            got, want[k],
+                            "{}: iter {iter}, src {k}, {threads} threads",
+                            comp.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gap_encode_reserves_the_prefix_without_changing_message_bytes() {
+        use crate::core::resource_manager::ResourceManager;
+        use crate::engine::pool::ThreadPool;
+        const GAP: usize = 12;
+        for comp in [Compression::None, Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let mut ags = agents(35, 57);
+            let mut rm = ResourceManager::new(0);
+            let ids: Vec<_> = ags.iter().map(|a| rm.add(a.clone())).collect();
+            let dests: Vec<(u32, Vec<_>)> = vec![(1, ids[..25].to_vec()), (3, ids[5..].to_vec())];
+            let mut bare = Codec::new(SerializerKind::TaIo, comp);
+            let mut framed = Codec::new(SerializerKind::TaIo, comp);
+            let mut jobs = Vec::new();
+            let pool = ThreadPool::new(2);
+            for iter in 0..4 {
+                for (a, &id) in ags.iter_mut().zip(&ids) {
+                    a.position.z += 0.5;
+                    assert!(rm.set_position(id, a.position));
+                }
+                let mut want: Vec<Vec<u8>> = Vec::new();
+                for (dest, sel) in &dests {
+                    let mut wire = Vec::new();
+                    bare.encode_rm_into((*dest, 7), &rm, sel, &mut wire);
+                    want.push(wire);
+                }
+                framed.encode_rm_overlapped(7, &rm, &dests, &mut jobs, &pool, GAP, |i, w, s| {
+                    assert_eq!(&w[..GAP], &[0u8; GAP], "gap must be reserved (iter {iter})");
+                    assert_eq!(&w[GAP..], &want[i][..], "{}: iter {iter}", comp.name());
+                    assert_eq!(s.wire_bytes, w.len() - GAP, "wire_bytes excludes the gap");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_decode_matches_serial_for_any_feed_order_and_thread_count() {
+        use crate::engine::pool::ThreadPool;
+        use crate::io::ta_io::ViewPool;
+        for comp in [Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let srcs = [2u32, 5, 9];
+            let mut txs: Vec<Codec> =
+                srcs.iter().map(|_| Codec::new(SerializerKind::TaIo, comp)).collect();
+            let mut rx_serial = Codec::new(SerializerKind::TaIo, comp);
+            let mut rx_streamed: Vec<Codec> =
+                (0..3).map(|_| Codec::new(SerializerKind::TaIo, comp)).collect();
+            let mut pops: Vec<Vec<Agent>> =
+                (0..3).map(|k| agents(15 + 5 * k, 300 + k as u64)).collect();
+            let mut pool_serial = ViewPool::new();
+            let mut pools: Vec<ViewPool> = (0..3).map(|_| ViewPool::new()).collect();
+            let mut jobs: Vec<Vec<AuraDecodeJob>> = (0..3).map(|_| Vec::new()).collect();
+            let feed_orders = [[0usize, 1, 2], [2, 1, 0], [1, 2, 0]];
+            for (iter, feed_order) in feed_orders.into_iter().enumerate() {
+                let mut wires: Vec<Vec<u8>> = Vec::new();
+                for (k, tx) in txs.iter_mut().enumerate() {
+                    for a in pops[k].iter_mut() {
+                        a.position.x += 0.5;
+                    }
+                    let (w, _) = tx.encode((0, 9), pops[k].iter());
+                    wires.push(w);
+                }
+                let want: Vec<Vec<(u64, [f64; 3])>> = srcs
+                    .iter()
+                    .zip(&wires)
+                    .map(|(&s, w)| {
+                        let (d, _) = rx_serial.decode_pooled((s, 9), w, &mut pool_serial);
+                        d.into_agents()
+                            .iter()
+                            .map(|a| (a.global_id.counter, a.position.to_array()))
+                            .collect()
+                    })
+                    .collect();
+                for (ti, threads) in [1usize, 2, 8].into_iter().enumerate() {
+                    let tpool = ThreadPool::new(threads);
+                    // Feed wires in an adversarial "arrival" order; jobs
+                    // must land in source order with identical bytes.
+                    let (fed, _cpu) = rx_streamed[ti].decode_pooled_streamed(
+                        9,
+                        &srcs,
+                        &mut jobs[ti],
+                        &mut pools[ti],
+                        &tpool,
+                        |_staging, feed| {
+                            for &k in &feed_order {
+                                feed(k, wires[k].clone());
+                            }
+                            feed_order.len()
+                        },
+                    );
+                    assert_eq!(fed, 3);
+                    for (k, job) in jobs[ti].iter_mut().enumerate() {
                         let got: Vec<(u64, [f64; 3])> = job
                             .take()
                             .expect("decoded missing")

@@ -33,8 +33,11 @@
 //!   ([`codec::Codec::encode_rm_parallel`]) or completion-ordered, each
 //!   finished wire streamed to the transport while later encodes run
 //!   ([`codec::Codec::encode_rm_overlapped`]). Receiver state is
-//!   per-channel too, so per-source decodes fan out the same way
-//!   ([`codec::Codec::decode_pooled_parallel`]).
+//!   per-channel too, so per-source decodes fan out the same way —
+//!   fork-join over already-collected wires
+//!   ([`codec::Codec::decode_pooled_parallel`]) or decode-on-arrival,
+//!   with workers consuming each wire the moment the receive loop
+//!   completes it ([`codec::Codec::decode_pooled_streamed`]).
 //!
 //! # Receive path (zero-copy end to end)
 //!

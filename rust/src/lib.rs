@@ -15,7 +15,10 @@
 //!    [TeraAgent IO](io::ta_io) (optionally [delta-encoded](io::delta) and
 //!    [LZ4-compressed](io::lz4)) and exchanged with neighbor ranks; the
 //!    per-destination encodes run in parallel on the rank's
-//!    [thread pool](engine::pool).
+//!    [thread pool](engine::pool), each wire is published to the
+//!    transport the moment its encode completes, and received wires are
+//!    decoded the moment they finish arriving (decode workers race the
+//!    receive loop — see [`io::codec::Codec::decode_pooled_streamed`]).
 //! 2. **Agent operations** — each agent's behaviors run against its local
 //!    environment (neighbors from the [NSG](space::nsg), including aura
 //!    agents). The mechanical hot-spot optionally executes through an
@@ -29,6 +32,22 @@
 //!    ([`sort_by_grid`](core::resource_manager::ResourceManager::sort_by_grid)),
 //!    and the spatial index is rebuilt wholesale in parallel
 //!    ([`rebuild_owned`](space::NeighborSearchGrid::rebuild_owned)).
+//!
+//! # Wire format & transport
+//!
+//! Every cross-rank message is `[serializer u8][delta-kind u8]
+//! [raw_len u32 LE][payload]` (assembled by [`io::codec`]), carried over
+//! the chunk framing `[msg_id u32][chunk u32][total u32][bytes…]`
+//! ([`comm::batching`]; chunking bounds transmission-buffer memory,
+//! §2.4.3). The transport itself is a zero-copy shared-memory wire:
+//! mailbox messages are refcounted pooled [`comm::mpi::Frame`]s from the
+//! world's shared [`comm::mpi::FramePool`], a single-chunk wire is
+//! *published in place* (the encoder's buffer IS the mailbox message IS
+//! the decoder's input — the paper's "agents accessed directly from the
+//! receive buffer", extended to the whole wire), and spent buffers
+//! recycle on drop. The full frame lifecycle, with diagrams, is in
+//! `ARCHITECTURE.md` §"Transport and frame lifecycle"; the measured
+//! rows live in `BENCHMARKS.md`.
 //!
 //! A paper-to-code map — which module implements which design element of
 //! the paper, plus an end-to-end walkthrough of one iteration — lives in

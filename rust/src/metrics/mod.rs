@@ -94,6 +94,11 @@ pub enum Counter {
     MessagesSent,
     /// Transport frames received (framed streams only — the aura path).
     MessagesReceived,
+    /// Bytes copied by receive-side reassembly (multi-chunk staging).
+    /// Zero in the single-frame steady state — the zero-copy transport
+    /// hands the sender's published frame straight to the decoder, so a
+    /// nonzero value here means messages exceeded the chunk size.
+    BytesReassembled,
     /// Agents migrated away from this rank.
     AgentsMigratedOut,
     /// Aura agents sent.
@@ -105,11 +110,12 @@ pub enum Counter {
 }
 
 impl Counter {
-    pub const ALL: [Counter; 8] = [
+    pub const ALL: [Counter; 9] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
         Counter::MessagesReceived,
+        Counter::BytesReassembled,
         Counter::AgentsMigratedOut,
         Counter::AuraAgentsSent,
         Counter::AgentUpdates,
@@ -122,6 +128,7 @@ impl Counter {
             Counter::BytesSentRaw => "bytes_sent_raw",
             Counter::MessagesSent => "messages_sent",
             Counter::MessagesReceived => "messages_received",
+            Counter::BytesReassembled => "bytes_reassembled",
             Counter::AgentsMigratedOut => "agents_migrated_out",
             Counter::AuraAgentsSent => "aura_agents_sent",
             Counter::AgentUpdates => "agent_updates",

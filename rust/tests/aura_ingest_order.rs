@@ -12,7 +12,9 @@
 //! ranges, position bits, and exact NSG query results. It also asserts
 //! the Morton-sharded aura fill actually engages for cell-sorted views.
 
-use teraagent::comm::batching::{recv_all_batched_into, send_batched, Reassembler};
+use teraagent::comm::batching::{
+    recv_all_batched_into, recv_all_batched_streaming, send_batched, Reassembler, WireSlot,
+};
 use teraagent::comm::mpi::{tags, MpiWorld};
 use teraagent::comm::NetworkModel;
 use teraagent::core::agent::{Agent, CellType};
@@ -186,20 +188,31 @@ fn overlapped_ingest(wire_rounds: &[Vec<Vec<u8>>], order: &[u32], threads: usize
             send_batched(&mut tx, 0, tags::AURA, round as u32, &wires[k], 512);
         }
         let mut comm = world.communicator(0);
-        let mut rx_wires: Vec<Vec<u8>> = vec![Vec::new(); SOURCES.len()];
-        let stats =
-            recv_all_batched_into(&mut re, &mut comm, &SOURCES, tags::AURA, &mut rx_wires);
+        let mut rx_wires: Vec<WireSlot> =
+            std::iter::repeat_with(WireSlot::default).take(SOURCES.len()).collect();
+        let stats = recv_all_batched_into(
+            &mut re,
+            &mut comm,
+            &SOURCES,
+            tags::AURA,
+            &mut rx_wires,
+            &mut view_pool,
+        );
         assert!(stats.frames >= SOURCES.len() as u64);
         if round == 0 {
             // The Full reference wires exceed the chunk size: reassembly
             // of interleavable multi-frame streams is exercised.
             assert!(stats.frames > SOURCES.len() as u64, "round 0 must chunk");
+            assert!(stats.copied_bytes > 0, "chunked streams stage through pooled buffers");
         }
         // Wires must have landed in source order regardless of delivery.
         for (k, w) in rx_wires.iter().enumerate() {
-            assert_eq!(w, &wires[k], "wire for source {} misplaced", SOURCES[k]);
+            assert_eq!(w.as_wire(), &wires[k][..], "wire for source {} misplaced", SOURCES[k]);
         }
         rx.decode_pooled_parallel(tags::AURA, &SOURCES, &rx_wires, &mut jobs, &mut view_pool, &tpool);
+        for slot in rx_wires {
+            slot.recycle_into(&mut view_pool);
+        }
         let mut decoded = Vec::new();
         for job in jobs.iter_mut() {
             decoded.push(job.take().expect("decoded message missing"));
@@ -212,6 +225,74 @@ fn overlapped_ingest(wire_rounds: &[Vec<Vec<u8>>], order: &[u32], threads: usize
             "cell-sorted views must take the Morton-sharded aura fill"
         );
         out.push(snapshot(&nsg, &aura, &ranges));
+    }
+    out
+}
+
+/// The decode-on-arrival pipeline under test: senders run on REAL
+/// threads, staggered to complete roughly in `order`, while the
+/// receiver's decode workers race the receive loop
+/// (`recv_all_batched_streaming` feeding `Codec::decode_pooled_streamed`)
+/// — the overlap the engine runs in `aura_update`, with genuine
+/// scheduling races between frame arrival and decode.
+fn streamed_ingest(
+    wire_rounds: &[Vec<Vec<u8>>],
+    order: &[u32],
+    threads: usize,
+) -> Vec<IngestSnapshot> {
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let mut nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 8 });
+    let mut view_pool = ViewPool::new();
+    let mut aura = AuraStore::new();
+    let tpool = ThreadPool::new(threads);
+    let mut re = Reassembler::new();
+    let mut jobs: Vec<AuraDecodeJob> = Vec::new();
+    let mut out = Vec::new();
+    for (round, wires) in wire_rounds.iter().enumerate() {
+        nsg.clear_aura();
+        aura.recycle_into(&mut view_pool);
+        let world = MpiWorld::new(4, NetworkModel::ideal());
+        let handles: Vec<_> = order
+            .iter()
+            .enumerate()
+            .map(|(pos, &src)| {
+                let k = SOURCES.iter().position(|&s| s == src).unwrap();
+                let wire = wires[k].clone();
+                let world = std::sync::Arc::clone(&world);
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(3 * pos as u64));
+                    let mut tx = world.communicator(src);
+                    send_batched(&mut tx, 0, tags::AURA, round as u32, &wire, 512);
+                })
+            })
+            .collect();
+        let mut comm = world.communicator(0);
+        let (stats, _cpu) = rx.decode_pooled_streamed(
+            tags::AURA,
+            &SOURCES,
+            &mut jobs,
+            &mut view_pool,
+            &tpool,
+            |staging, feed: &mut dyn FnMut(usize, WireSlot)| {
+                recv_all_batched_streaming(&mut re, &mut comm, &SOURCES, tags::AURA, staging, feed)
+            },
+        );
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(stats.frames >= SOURCES.len() as u64);
+        let mut decoded = Vec::new();
+        for job in jobs.iter_mut() {
+            decoded.push(job.take().expect("decoded message missing"));
+        }
+        let mut ranges = Vec::new();
+        aura.add_sources(&mut decoded, &tpool, &mut ranges);
+        nsg.add_aura_ranges(&ranges, aura.positions(), &tpool);
+        out.push(snapshot(&nsg, &aura, &ranges));
+        // Every transport frame must have recycled: the decoders drop
+        // their Direct frames, the stagers their chunk frames.
+        assert_eq!(world.frame_pool().stats().outstanding, 0, "leaked transport frame");
     }
     out
 }
@@ -240,6 +321,33 @@ fn adversarial_arrival_orders_are_bitwise_transparent() {
             assert_eq!(
                 got, want,
                 "ingest diverged: arrival order {order:?}, {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_decode_workers_racing_the_receiver_stay_bitwise_transparent() {
+    // The streaming-ingest fuzz row: real sender threads deliver frames
+    // while decode workers consume completed wires concurrently, at
+    // 1/2/8 decode threads and three completion orders, over a live
+    // two-round delta stream. Results must be bit-identical to the
+    // rank-ordered serial ingest — receive AND decode scheduling are
+    // both covered by the determinism contract.
+    let bounds = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let nsg = NeighborSearchGrid::new(bounds, RADIUS);
+    let mut senders = make_senders(bounds, &nsg);
+    let wire_rounds = vec![
+        encode_iteration(&mut senders, bounds, &nsg, 0.0),
+        encode_iteration(&mut senders, bounds, &nsg, 0.25),
+    ];
+    let want = serial_ingest(&wire_rounds);
+    for order in [[1u32, 2, 3], [3, 2, 1], [2, 3, 1]] {
+        for threads in [1usize, 2, 8] {
+            let got = streamed_ingest(&wire_rounds, &order, threads);
+            assert_eq!(
+                got, want,
+                "streamed ingest diverged: completion order {order:?}, {threads} threads"
             );
         }
     }

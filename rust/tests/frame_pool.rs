@@ -1,0 +1,203 @@
+//! Frame-pool lifecycle properties.
+//!
+//! The transport's zero-copy contract rests on three invariants of
+//! [`FramePool`]: no frame is ever leaked (every sealed buffer returns to
+//! the free list once its last reference drops), no buffer is recycled
+//! twice (`free` can never exceed `created`), and the pool's high-water
+//! mark is bounded by the peak number of in-flight frames — never by
+//! traffic volume. This suite drives randomized send/receive/drop
+//! interleavings against an exact reference model of the outstanding
+//! count, then stresses the same invariants under real cross-thread
+//! races.
+
+use teraagent::comm::batching::{send_batched, Reassembler, WireSlot};
+use teraagent::comm::mpi::MpiWorld;
+use teraagent::comm::NetworkModel;
+use teraagent::io::ta_io::ViewPool;
+use teraagent::util::Rng;
+
+const TAG: u32 = 7;
+
+/// Deterministic interleaving property: a random op mix over one world —
+/// sends of single- and multi-chunk messages from three sources,
+/// frame-by-frame receives feeding the reassembler, and drops of held
+/// wire slots — with the pool's `outstanding` count checked after every
+/// op against an exactly tracked model, and the high-water mark checked
+/// against the model's peak at the end.
+#[test]
+fn randomized_interleavings_track_the_outstanding_model_exactly() {
+    const CHUNK: usize = 256;
+    for trial in 0..30u64 {
+        let mut rng = Rng::new(0xF8A3_E000 + trial);
+        let world = MpiWorld::new(4, NetworkModel::ideal());
+        let mut rx = world.communicator(0);
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        // Held completed wires (Direct slots keep their frame alive).
+        let mut held: Vec<WireSlot> = Vec::new();
+        // Model state.
+        let mut queued: Vec<(u32, u32)> = Vec::new(); // FIFO of (chunks-in-message, total)
+        let mut expected_outstanding: i64 = 0;
+        let mut peak: i64 = 0;
+        let mut msg_ids = [0u32; 4];
+        let mut total_frames = 0u64;
+
+        for _ in 0..200 {
+            let op = rng.next_u64() % 4;
+            match op {
+                // Send a message: 1..4 chunks from a random source.
+                0 | 1 => {
+                    let src = 1 + (rng.next_u64() % 3) as u32;
+                    let chunks = 1 + (rng.next_u64() % 4) as usize;
+                    let len = if chunks == 1 {
+                        (rng.next_u64() % CHUNK as u64) as usize
+                    } else {
+                        CHUNK * (chunks - 1) + 1 + (rng.next_u64() % (CHUNK as u64 - 1)) as usize
+                    };
+                    let payload = vec![src as u8; len];
+                    let mut tx = world.communicator(src);
+                    let n = send_batched(&mut tx, 0, TAG, msg_ids[src as usize], &payload, CHUNK);
+                    msg_ids[src as usize] += 1;
+                    assert_eq!(n, chunks, "chunk-count arithmetic drifted");
+                    for c in 0..chunks {
+                        queued.push(((chunks - c) as u32, chunks as u32));
+                    }
+                    expected_outstanding += chunks as i64;
+                    total_frames += chunks as u64;
+                }
+                // Receive one frame and feed the reassembler.
+                2 => {
+                    if queued.is_empty() {
+                        continue;
+                    }
+                    let (_remaining, total) = queued.remove(0);
+                    let (m, _) = rx.recv_any_timed(TAG);
+                    match re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+                        Some((_, slot)) => {
+                            if total > 1 {
+                                // Completing a chunked stream drops all
+                                // its parked chunk frames at once.
+                                expected_outstanding -= total as i64;
+                                assert!(matches!(slot, WireSlot::Staged(_)));
+                            }
+                            // A Direct slot keeps its frame alive in `held`.
+                            held.push(slot);
+                        }
+                        None => {
+                            // Parked partial: the frame stays outstanding.
+                            assert!(total > 1, "single-chunk frame failed to complete");
+                        }
+                    }
+                }
+                // Drop one held wire.
+                _ => {
+                    if held.is_empty() {
+                        continue;
+                    }
+                    let i = (rng.next_u64() as usize) % held.len();
+                    let slot = held.swap_remove(i);
+                    if matches!(slot, WireSlot::Direct(_)) {
+                        expected_outstanding -= 1;
+                    }
+                    slot.recycle_into(&mut staging);
+                }
+            }
+            peak = peak.max(expected_outstanding);
+            let stats = world.frame_pool().stats();
+            assert_eq!(
+                stats.outstanding as i64, expected_outstanding,
+                "trial {trial}: outstanding diverged from the model"
+            );
+        }
+        // Drain: receive everything still queued, drop everything held.
+        while !queued.is_empty() {
+            let (_, total) = queued.remove(0);
+            let (m, _) = rx.recv_any_timed(TAG);
+            if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+                if total > 1 {
+                    expected_outstanding -= total as i64;
+                }
+                held.push(slot);
+            }
+        }
+        for slot in held.drain(..) {
+            if matches!(slot, WireSlot::Direct(_)) {
+                expected_outstanding -= 1;
+            }
+            slot.recycle_into(&mut staging);
+        }
+        assert_eq!(re.pending(), 0, "trial {trial}: incomplete stream left behind");
+        assert_eq!(expected_outstanding, 0);
+        let stats = world.frame_pool().stats();
+        assert_eq!(stats.outstanding, 0, "trial {trial}: leaked frame");
+        assert_eq!(
+            stats.free as u64, stats.created,
+            "trial {trial}: free != created — a buffer leaked or double-recycled"
+        );
+        assert_eq!(stats.recycled, total_frames, "every frame recycles exactly once");
+        assert_eq!(
+            stats.high_water as i64, peak,
+            "trial {trial}: high-water mark must equal the model's in-flight peak"
+        );
+    }
+}
+
+/// Cross-thread stress: three sender threads blast messages of random
+/// sizes while the receiver ingests and immediately drops wires. Under
+/// real races the exact interleaving is unknowable, but quiescent
+/// invariants must hold: nothing outstanding, every created buffer back
+/// in the free list, and a bounded high-water mark.
+#[test]
+fn concurrent_senders_leave_no_frame_behind() {
+    const PER_SENDER: usize = 120;
+    const CHUNK: usize = 512;
+    let world = MpiWorld::new(4, NetworkModel::ideal());
+    let mut expected_frames = 0u64;
+    // Precompute per-sender payload sizes (deterministic totals).
+    let mut sizes: Vec<Vec<usize>> = Vec::new();
+    for s in 0..3u64 {
+        let mut rng = Rng::new(0xBEEF + s);
+        let v: Vec<usize> =
+            (0..PER_SENDER).map(|_| (rng.next_u64() % (3 * CHUNK as u64)) as usize).collect();
+        expected_frames += v.iter().map(|&n| n.div_ceil(CHUNK).max(1) as u64).sum::<u64>();
+        sizes.push(v);
+    }
+    let handles: Vec<_> = (1..=3u32)
+        .map(|src| {
+            let world = std::sync::Arc::clone(&world);
+            let sizes = sizes[src as usize - 1].clone();
+            std::thread::spawn(move || {
+                let mut tx = world.communicator(src);
+                for (i, &n) in sizes.iter().enumerate() {
+                    send_batched(&mut tx, 0, TAG, i as u32, &vec![src as u8; n], CHUNK);
+                    if i % 7 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+    let mut rx = world.communicator(0);
+    let mut re = Reassembler::new();
+    let mut staging = ViewPool::new();
+    let mut completed = 0usize;
+    while completed < 3 * PER_SENDER {
+        let (m, _) = rx.recv_any_timed(TAG);
+        if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+            completed += 1;
+            slot.recycle_into(&mut staging);
+        }
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = world.frame_pool().stats();
+    assert_eq!(stats.outstanding, 0, "leaked frame under concurrency");
+    assert_eq!(stats.free as u64, stats.created, "free != created after quiescence");
+    assert_eq!(stats.recycled, expected_frames, "every frame must recycle exactly once");
+    assert!(
+        stats.high_water as u64 <= expected_frames,
+        "high-water mark cannot exceed total frames"
+    );
+    assert_eq!(re.pending(), 0);
+}

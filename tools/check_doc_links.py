@@ -1,0 +1,63 @@
+#!/usr/bin/env python3
+"""Intra-repo link checker for the handbook markdown files.
+
+Scans the given markdown files (default: ARCHITECTURE.md, BENCHMARKS.md,
+ROADMAP.md) for inline links `[text](target)` and verifies that every
+*relative* target resolves to a file or directory in the repository.
+External links (http/https/mailto) and pure in-page anchors (`#…`) are
+skipped; a relative target's `#fragment` suffix is stripped before the
+existence check. Exits non-zero listing every broken link, so CI fails
+loudly when a file is moved without updating the docs.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DEFAULT_FILES = ["ARCHITECTURE.md", "BENCHMARKS.md", "ROADMAP.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_file(repo_root: Path, md_file: Path) -> list[str]:
+    errors = []
+    text = md_file.read_text(encoding="utf-8")
+    # Strip fenced code blocks: ASCII diagrams legitimately contain
+    # bracket-paren sequences that are not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for lineno_text in text.splitlines():
+        for match in LINK_RE.finditer(lineno_text):
+            target = match.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path_part = target.split("#", 1)[0]
+            if not path_part:
+                continue
+            resolved = (md_file.parent / path_part).resolve()
+            if not resolved.exists():
+                errors.append(f"{md_file.relative_to(repo_root)}: broken link -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    names = argv[1:] or DEFAULT_FILES
+    errors = []
+    for name in names:
+        md = repo_root / name
+        if not md.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(repo_root, md))
+    if errors:
+        print("broken intra-repo links:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"doc links OK ({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
