@@ -323,7 +323,8 @@ fn run_ingest(w: &IngestWorkload) -> (f64, [f64; 3]) {
         nsg.clear_aura();
         aura.recycle_into(&mut pool);
         for (k, wire) in w.wires.iter().enumerate() {
-            let (decoded, _) = rx.decode_pooled((w.srcs[k], 1), wire, &mut pool);
+            let (decoded, _) =
+                rx.decode_pooled((w.srcs[k], 1), wire, &mut pool).expect("clean wire");
             let range = aura.add_source(decoded);
             for i in range {
                 nsg.add(NsgEntry::Aura(i), aura.position(i));
@@ -437,11 +438,17 @@ fn run_overlap(w: &mut Workload) -> (f64, f64) {
 /// last two are the PR's acceptance bar — exactly one fixed-size
 /// refcount-cell allocation per published frame (the MPI_Request
 /// analog; nothing data-bearing) and zero receive-side copies.
+///
+/// Returns (staged s, framed s, framed+reliable s, checksum s/iter,
+/// framed-path steady-state allocations, reassembly-copied bytes): the
+/// third row prices retry-ready frame archiving on a clean link, the
+/// fourth the always-on CRC32 stamp+verify (read from the transport's
+/// own `checksum_secs` meters).
 /// Iterations of the transport alloc-assertion loop; the expected total
 /// is one refcount-cell allocation per iteration.
 const TRANSPORT_ALLOC_ITERS: u64 = 3;
 
-fn run_transport(w: &mut Workload) -> (f64, f64, u64, u64) {
+fn run_transport(w: &mut Workload) -> (f64, f64, f64, f64, u64, u64) {
     use teraagent::comm::batching::{
         send_batched, send_batched_framed, Reassembler, WireSlot, FRAME_HEADER,
     };
@@ -475,13 +482,16 @@ fn run_transport(w: &mut Workload) -> (f64, f64, u64, u64) {
             send_batched(tx_comm, 1, TAG, 0, wire, CHUNK);
         }
         let (m, _) = rx_comm.recv_any_timed(TAG);
-        let (_, slot) =
-            re.feed_frame(m.src, m.tag, m.data, view_pool).expect("single-chunk must complete");
+        let (_, slot) = re
+            .feed_frame(m.src, m.tag, m.data, view_pool)
+            .expect("clean link")
+            .expect("single-chunk must complete");
         let copied = match &slot {
             WireSlot::Staged(b) => b.len() as u64,
             _ => 0,
         };
-        let (decoded, _) = rx.decode_pooled((0, TAG), slot.as_wire(), view_pool);
+        let (decoded, _) =
+            rx.decode_pooled((0, TAG), slot.as_wire(), view_pool).expect("clean wire");
         assert_eq!(decoded.len(), N_AGENTS, "transport dropped agents");
         decoded.recycle_into(view_pool);
         slot.recycle_into(view_pool);
@@ -534,7 +544,40 @@ fn run_transport(w: &mut Workload) -> (f64, f64, u64, u64) {
         );
     }
     let transport_allocs = allocs() - before;
-    (staged, framed, transport_allocs, copied)
+
+    // --- clean-path integrity overhead: the CRC32 stamp (send) + verify
+    // (receive) wall seconds per framed iteration, read from the
+    // transport's own meters. Integrity is always on; this row prices it.
+    let cs_before = tx_comm.checksum_secs + re.checksum_secs;
+    const CK_ITERS: u64 = 5;
+    for i in 0..CK_ITERS {
+        run_one(
+            &mut tx, &mut rx, &mut tx_comm, &mut rx_comm, &mut re, &mut view_pool, &mut wire,
+            true, i % 2 == 0,
+        );
+    }
+    let checksum_s =
+        (tx_comm.checksum_secs + re.checksum_secs - cs_before) / CK_ITERS as f64;
+
+    // --- reliable mode (sender archives refcounted frame clones for
+    // retransmission): the cost of being retry-ready on a clean link.
+    tx_comm.set_reliable(true);
+    run_one(
+        &mut tx, &mut rx, &mut tx_comm, &mut rx_comm, &mut re, &mut view_pool, &mut wire, true,
+        true,
+    );
+    let mut flip = false;
+    let framed_reliable = measure(1, 5, || {
+        flip = !flip;
+        run_one(
+            &mut tx, &mut rx, &mut tx_comm, &mut rx_comm, &mut re, &mut view_pool, &mut wire,
+            true, flip,
+        )
+    })
+    .median;
+    tx_comm.set_reliable(false);
+
+    (staged, framed, framed_reliable, checksum_s, transport_allocs, copied)
 }
 
 // ---------------------------------------------------------------------------
@@ -640,7 +683,7 @@ fn exchange_iteration(
 ) -> usize {
     drift(w, flip);
     tx.encode_rm_into((1, 1), &w.rm, &w.ids, wire);
-    let (decoded, _) = rx.decode_pooled((0, 1), wire, pool);
+    let (decoded, _) = rx.decode_pooled((0, 1), wire, pool).expect("clean wire");
     let n = decoded.len();
     decoded.recycle_into(pool);
     n
@@ -697,8 +740,14 @@ fn main() {
     let ingest_w = ingest_workload();
     let (ingest_serial, ingest_pooled) = run_ingest(&ingest_w);
     let (overlap_fj, overlap_stream) = run_overlap(&mut w);
-    let (transport_staged, transport_framed, transport_allocs, transport_copied) =
-        run_transport(&mut w);
+    let (
+        transport_staged,
+        transport_framed,
+        transport_reliable,
+        transport_checksum,
+        transport_allocs,
+        transport_copied,
+    ) = run_transport(&mut w);
     let (ingest_collect, ingest_streamed) = run_streaming_ingest(&ingest_w);
 
     row_strs(&["op", "seed", "fast", "speedup"]);
@@ -748,6 +797,17 @@ fn main() {
         transport_allocs / TRANSPORT_ALLOC_ITERS
     );
     println!("  framed receive-side reassembly bytes copied: {transport_copied}");
+    row_strs(&["integrity overhead", "framed", "framed+reliable", "checksum s/iter"]);
+    row(&[
+        "crc32 + seq + archive".into(),
+        fmt_secs(transport_framed),
+        fmt_secs(transport_reliable),
+        fmt_secs(transport_checksum),
+    ]);
+    println!(
+        "  checksum share of framed iteration: {:.2}%",
+        100.0 * transport_checksum / transport_framed.max(1e-12)
+    );
     assert_eq!(
         transport_allocs, TRANSPORT_ALLOC_ITERS,
         "framed single-chunk exchange must allocate exactly one refcount cell per iteration \
@@ -794,6 +854,7 @@ fn main() {
   }},
   "transport": {{
     "staged_s": {:.6e}, "framed_s": {:.6e}, "gain": {:.3},
+    "framed_reliable_s": {:.6e}, "checksum_s_per_iter": {:.6e},
     "framed_steady_allocs_per_iteration": {},
     "framed_reassembly_bytes_copied": {transport_copied}
   }},
@@ -826,6 +887,8 @@ fn main() {
         transport_staged,
         transport_framed,
         ratio(transport_staged, transport_framed),
+        transport_reliable,
+        transport_checksum,
         transport_allocs / TRANSPORT_ALLOC_ITERS,
         ingest_collect[0],
         ingest_collect[1],

@@ -1,0 +1,411 @@
+//! Deterministic fault injection at the frame boundary (the chaos
+//! transport).
+//!
+//! A [`FaultPlan`] describes, per outgoing link, the probability of each
+//! fault class — drop, delay, duplicate, reorder, truncate, bit-flip —
+//! plus a hard budget ([`FaultPlan::max_faults`]) after which the link
+//! behaves perfectly. [`ChaosState`] applies the plan at the
+//! [`Communicator::isend_frame`](super::mpi::Communicator::isend_frame)
+//! seam, *below* the batching layer and *above* the mailbox: faults hit
+//! real pooled [`Frame`](super::mpi::Frame)s mid-lifecycle, so the
+//! recovery machinery is exercised against the same refcount/recycle
+//! discipline the clean path runs.
+//!
+//! Determinism: every decision draws from a per-destination
+//! [`Rng`] stream seeded from `(plan.seed, src, dst)`. A rank's send
+//! sequence is deterministic (the engine is), so the exact set of
+//! injected faults is a pure function of the seed — the chaos
+//! convergence suite pins seeds and asserts bit-identical recovery.
+//!
+//! Fault semantics:
+//! - **drop** — the frame never reaches the mailbox (recycles
+//!   immediately; the receiver recovers it via NACK + retransmit).
+//! - **delay** / **reorder** — the frame is *held* and released right
+//!   after the next frame published on the same `(dst, tag)` link, i.e.
+//!   it arrives late and out of order. (In a mailbox transport a delay
+//!   that preserves order is unobservable; the one-frame swap is the
+//!   minimal observable form of both faults, counted separately.)
+//! - **duplicate** — two references to the same frame are published; the
+//!   receiver must detect and drop the second copy.
+//! - **truncate** — a shortened *copy* is published (the sender's pooled
+//!   bytes are never mutated — other clones may still be archived).
+//! - **bit-flip** — a copy with one random bit inverted is published.
+//!
+//! At most one fault applies per frame, chosen by a single uniform draw
+//! against the cumulative probabilities.
+
+use super::mpi::{Frame, Tag};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Per-link fault probabilities and scope. All probabilities are
+/// independent per frame; their sum must be ≤ 1 (validated on install).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed for the per-link decision streams.
+    pub seed: u64,
+    pub p_drop: f64,
+    pub p_delay: f64,
+    pub p_duplicate: f64,
+    pub p_reorder: f64,
+    pub p_truncate: f64,
+    pub p_bit_flip: f64,
+    /// Tags subject to injection. Only checksummed, retransmittable
+    /// streams (the batched exchange tags) should be listed; control
+    /// tags are exempt regardless.
+    pub tags: Vec<Tag>,
+    /// Hard cap on total injected faults — guarantees that retry loops
+    /// converge (after the budget is spent the link is perfect).
+    pub max_faults: u64,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as a builder base).
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            p_drop: 0.0,
+            p_delay: 0.0,
+            p_duplicate: 0.0,
+            p_reorder: 0.0,
+            p_truncate: 0.0,
+            p_bit_flip: 0.0,
+            tags: vec![super::mpi::tags::AURA],
+            max_faults: u64::MAX,
+        }
+    }
+
+    pub fn with_drop(mut self, p: f64) -> FaultPlan {
+        self.p_drop = p;
+        self
+    }
+
+    pub fn with_delay(mut self, p: f64) -> FaultPlan {
+        self.p_delay = p;
+        self
+    }
+
+    pub fn with_duplicate(mut self, p: f64) -> FaultPlan {
+        self.p_duplicate = p;
+        self
+    }
+
+    pub fn with_reorder(mut self, p: f64) -> FaultPlan {
+        self.p_reorder = p;
+        self
+    }
+
+    pub fn with_truncate(mut self, p: f64) -> FaultPlan {
+        self.p_truncate = p;
+        self
+    }
+
+    pub fn with_bit_flip(mut self, p: f64) -> FaultPlan {
+        self.p_bit_flip = p;
+        self
+    }
+
+    pub fn with_max_faults(mut self, n: u64) -> FaultPlan {
+        self.max_faults = n;
+        self
+    }
+
+    pub fn with_tags(mut self, tags: Vec<Tag>) -> FaultPlan {
+        self.tags = tags;
+        self
+    }
+
+    fn total_p(&self) -> f64 {
+        self.p_drop
+            + self.p_delay
+            + self.p_duplicate
+            + self.p_reorder
+            + self.p_truncate
+            + self.p_bit_flip
+    }
+}
+
+/// Count of faults injected so far, by class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    pub dropped: u64,
+    pub delayed: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+    pub truncated: u64,
+    pub bit_flipped: u64,
+}
+
+impl ChaosStats {
+    /// Total faults injected.
+    pub fn injected(&self) -> u64 {
+        self.dropped
+            + self.delayed
+            + self.duplicated
+            + self.reordered
+            + self.truncated
+            + self.bit_flipped
+    }
+}
+
+/// The live injector installed on a `Communicator`.
+#[derive(Debug)]
+pub struct ChaosState {
+    plan: FaultPlan,
+    /// Per-destination decision stream (keyed by dst; the owning rank is
+    /// folded into the seed at creation).
+    rngs: HashMap<u32, Rng>,
+    /// Frames held back by delay/reorder, per `(dst, tag)` link —
+    /// released after the next frame published on that link.
+    held: HashMap<(u32, Tag), Vec<Frame>>,
+    stats: ChaosStats,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    Drop,
+    Delay,
+    Duplicate,
+    Reorder,
+    Truncate,
+    BitFlip,
+}
+
+impl ChaosState {
+    pub fn new(plan: FaultPlan) -> ChaosState {
+        assert!(
+            plan.total_p() <= 1.0 + 1e-12,
+            "fault probabilities must sum to <= 1 (got {})",
+            plan.total_p()
+        );
+        ChaosState { plan, rngs: HashMap::new(), held: HashMap::new(), stats: ChaosStats::default() }
+    }
+
+    pub fn stats(&self) -> ChaosStats {
+        self.stats
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Route one outgoing frame through the fault plan. Returns the
+    /// frames to actually publish, in order (possibly empty: dropped or
+    /// held; possibly several: duplicates and released held frames).
+    pub fn apply(&mut self, src: u32, dst: u32, tag: Tag, frame: Frame) -> Vec<Frame> {
+        // Frames previously held on this link release after the current
+        // frame — the observable delay/reorder.
+        let prior = self.held.remove(&(dst, tag)).unwrap_or_default();
+        let mut out = Vec::with_capacity(2 + prior.len());
+        let fault = self.decide(src, dst, tag);
+        match fault {
+            None => out.push(frame),
+            Some(Fault::Drop) => {
+                self.stats.dropped += 1;
+                drop(frame); // recycles (or frees) immediately
+            }
+            Some(Fault::Delay) => {
+                self.stats.delayed += 1;
+                self.held.entry((dst, tag)).or_default().push(frame);
+            }
+            Some(Fault::Reorder) => {
+                self.stats.reordered += 1;
+                self.held.entry((dst, tag)).or_default().push(frame);
+            }
+            Some(Fault::Duplicate) => {
+                self.stats.duplicated += 1;
+                out.push(frame.clone());
+                out.push(frame);
+            }
+            Some(Fault::Truncate) => {
+                self.stats.truncated += 1;
+                let rng = self.rng(src, dst);
+                let keep = if frame.is_empty() { 0 } else { rng.index(frame.len()) };
+                // Publish a shortened copy; never mutate the original
+                // bytes (archived clones must stay intact for retries).
+                out.push(Frame::owned(frame.as_slice()[..keep].to_vec()));
+            }
+            Some(Fault::BitFlip) => {
+                self.stats.bit_flipped += 1;
+                let rng = self.rng(src, dst);
+                let mut bytes = frame.to_vec();
+                if !bytes.is_empty() {
+                    let i = rng.index(bytes.len());
+                    let bit = rng.index(8);
+                    bytes[i] ^= 1 << bit;
+                }
+                out.push(Frame::owned(bytes));
+            }
+        }
+        out.extend(prior);
+        out
+    }
+
+    fn rng(&mut self, src: u32, dst: u32) -> &mut Rng {
+        let seed = self.plan.seed;
+        self.rngs
+            .entry(dst)
+            .or_insert_with(|| Rng::stream(seed, ((src as u64) << 32) | dst as u64))
+    }
+
+    fn decide(&mut self, src: u32, dst: u32, tag: Tag) -> Option<Fault> {
+        if !self.plan.tags.contains(&tag) || self.stats.injected() >= self.plan.max_faults {
+            return None;
+        }
+        // One uniform draw against the cumulative distribution. The draw
+        // happens for every eligible frame (faulted or not) so the
+        // decision stream advances deterministically with the traffic.
+        let plan = self.plan.clone();
+        let u = self.rng(src, dst).uniform();
+        let mut acc = plan.p_drop;
+        if u < acc {
+            return Some(Fault::Drop);
+        }
+        acc += plan.p_delay;
+        if u < acc {
+            return Some(Fault::Delay);
+        }
+        acc += plan.p_duplicate;
+        if u < acc {
+            return Some(Fault::Duplicate);
+        }
+        acc += plan.p_reorder;
+        if u < acc {
+            return Some(Fault::Reorder);
+        }
+        acc += plan.p_truncate;
+        if u < acc {
+            return Some(Fault::Truncate);
+        }
+        acc += plan.p_bit_flip;
+        if u < acc {
+            return Some(Fault::BitFlip);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::mpi::tags;
+
+    fn frame(bytes: &[u8]) -> Frame {
+        Frame::owned(bytes.to_vec())
+    }
+
+    #[test]
+    fn no_faults_passes_through() {
+        let mut c = ChaosState::new(FaultPlan::none(1));
+        for i in 0..50u8 {
+            let out = c.apply(0, 1, tags::AURA, frame(&[i]));
+            assert_eq!(out.len(), 1);
+            assert_eq!(&out[0][..], [i]);
+        }
+        assert_eq!(c.stats().injected(), 0);
+    }
+
+    #[test]
+    fn exempt_tags_never_fault() {
+        let mut c = ChaosState::new(FaultPlan::none(1).with_drop(1.0));
+        for _ in 0..50 {
+            assert_eq!(c.apply(0, 1, tags::MIGRATION, frame(&[1])).len(), 1);
+        }
+        assert_eq!(c.stats().injected(), 0);
+    }
+
+    #[test]
+    fn drop_all_drops_all() {
+        let mut c = ChaosState::new(FaultPlan::none(2).with_drop(1.0));
+        for i in 0..10u8 {
+            assert!(c.apply(0, 1, tags::AURA, frame(&[i])).is_empty());
+        }
+        assert_eq!(c.stats().dropped, 10);
+    }
+
+    #[test]
+    fn max_faults_caps_injection() {
+        let mut c = ChaosState::new(FaultPlan::none(3).with_drop(1.0).with_max_faults(3));
+        let mut delivered = 0;
+        for i in 0..10u8 {
+            delivered += c.apply(0, 1, tags::AURA, frame(&[i])).len();
+        }
+        assert_eq!(c.stats().dropped, 3);
+        assert_eq!(delivered, 7, "after the budget the link is perfect");
+    }
+
+    #[test]
+    fn reorder_swaps_with_next_frame() {
+        let mut c = ChaosState::new(FaultPlan::none(4).with_reorder(1.0).with_max_faults(1));
+        let out1 = c.apply(0, 1, tags::AURA, frame(&[1]));
+        assert!(out1.is_empty(), "reordered frame is held");
+        let out2 = c.apply(0, 1, tags::AURA, frame(&[2]));
+        assert_eq!(out2.len(), 2);
+        assert_eq!(&out2[0][..], [2], "the newer frame goes first");
+        assert_eq!(&out2[1][..], [1], "the held frame releases after it");
+        assert_eq!(c.stats().reordered, 1);
+    }
+
+    #[test]
+    fn duplicate_publishes_the_same_bytes_twice() {
+        let mut c = ChaosState::new(FaultPlan::none(5).with_duplicate(1.0).with_max_faults(1));
+        let out = c.apply(0, 1, tags::AURA, frame(&[7, 8]));
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].as_slice().as_ptr(), out[1].as_slice().as_ptr(), "clones share bytes");
+    }
+
+    #[test]
+    fn truncate_and_bit_flip_corrupt_a_copy_not_the_original() {
+        let mut c = ChaosState::new(FaultPlan::none(6).with_truncate(1.0).with_max_faults(1));
+        let original = frame(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        let keep = original.clone();
+        let out = c.apply(0, 1, tags::AURA, original);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].len() < 8);
+        assert_eq!(&keep[..], [1, 2, 3, 4, 5, 6, 7, 8], "archived clone intact");
+
+        let mut c = ChaosState::new(FaultPlan::none(7).with_bit_flip(1.0).with_max_faults(1));
+        let original = frame(&[0u8; 16]);
+        let keep = original.clone();
+        let out = c.apply(0, 1, tags::AURA, original);
+        assert_eq!(out[0].len(), 16);
+        let flipped: u32 = out[0].iter().map(|b| b.count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit flipped");
+        assert!(keep.iter().all(|&b| b == 0), "archived clone intact");
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let plan = FaultPlan::none(42).with_drop(0.3).with_duplicate(0.2).with_bit_flip(0.1);
+        let run = |plan: FaultPlan| {
+            let mut c = ChaosState::new(plan);
+            let mut counts = Vec::new();
+            for i in 0..200u32 {
+                let out = c.apply(0, 1, tags::AURA, frame(&i.to_le_bytes()));
+                counts.push(out.len());
+            }
+            (counts, c.stats())
+        };
+        let (a, sa) = run(plan.clone());
+        let (b, sb) = run(plan);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert!(sa.injected() > 0, "plan must actually inject at these odds");
+    }
+
+    #[test]
+    fn links_have_independent_streams() {
+        let plan = FaultPlan::none(42).with_drop(0.5);
+        let mut c = ChaosState::new(plan);
+        let mut kept = [0u32; 2];
+        for i in 0..100u32 {
+            kept[0] += c.apply(0, 1, tags::AURA, frame(&i.to_le_bytes())).len() as u32;
+            kept[1] += c.apply(0, 2, tags::AURA, frame(&i.to_le_bytes())).len() as u32;
+        }
+        assert_ne!(kept[0], 0);
+        assert_ne!(kept[1], 0);
+        // Not a strict requirement, but with 100 draws at p=0.5 identical
+        // outcomes on both links would indicate stream reuse.
+        assert!(kept[0] != 100 || kept[1] != 100);
+    }
+}

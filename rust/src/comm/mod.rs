@@ -32,9 +32,19 @@
 //! frame lifecycle are documented in `ARCHITECTURE.md` §"Transport and
 //! frame lifecycle".
 
+//! Fault tolerance: frames carry a CRC32 + per-link sequence number in
+//! their header; [`chaos`] injects deterministic faults (drop, delay,
+//! duplicate, reorder, truncate, bit-flip) at the send seam, and the
+//! reliable receive path recovers via NACK-driven retransmission from
+//! refcounted frame archives — see `ARCHITECTURE.md` §"Fault tolerance".
+
 pub mod batching;
+pub mod chaos;
 pub mod mpi;
 pub mod network;
 
-pub use mpi::{Communicator, Frame, FrameBuf, FramePool, FramePoolStats, MpiWorld, RecvMsg, Tag};
+pub use chaos::{ChaosStats, FaultPlan};
+pub use mpi::{
+    CommError, Communicator, Frame, FrameBuf, FramePool, FramePoolStats, MpiWorld, RecvMsg, Tag,
+};
 pub use network::NetworkModel;

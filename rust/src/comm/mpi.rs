@@ -42,11 +42,30 @@
 //!
 //! See `ARCHITECTURE.md` §"Transport and frame lifecycle" for the full
 //! journey of a frame through the aura exchange.
+//!
+//! # Fault tolerance
+//!
+//! The transport is the seam where faults are injected and survived:
+//! a [`Communicator`] can carry a [`ChaosState`](super::chaos::ChaosState)
+//! (deterministic, seed-driven frame faults applied at publish time), a
+//! bounded [`Communicator::recv_any_deadline`] replaces the infinite
+//! block with a typed [`CommError`], and *reliable mode*
+//! ([`Communicator::set_reliable`]) keeps a refcounted archive of the
+//! last published frames per `(dst, tag)` so receivers can request
+//! retransmission ([`Communicator::request_retry`] /
+//! [`Communicator::service_retry_queue`]). See `ARCHITECTURE.md`
+//! §"Fault tolerance" for the recovery ladder.
 
+// Wire path: panics on malformed remote input are forbidden; internal
+// invariants use `expect` with a justification.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
+use super::chaos::{ChaosState, ChaosStats, FaultPlan};
 use super::network::NetworkModel;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Message tag. The engine uses distinct tags per protocol step.
 pub type Tag = u32;
@@ -59,6 +78,13 @@ pub mod tags {
     pub const BALANCE: Tag = 3;
     pub const CONTROL: Tag = 4;
     pub const CHUNK: Tag = 5;
+    /// Retransmission requests (NACKs): payload `[orig_tag u32][msg_id u32]`
+    /// LE. Control-plane traffic — never subject to chaos injection.
+    pub const RETRY: Tag = 6;
+    /// Delta-stream resync requests: payload `[orig_tag u32]` LE. The
+    /// receiver asks the sender to fall back to a full (non-delta)
+    /// refresh on that channel. Control-plane traffic like [`RETRY`].
+    pub const RESYNC: Tag = 7;
     /// Per-round all-to-all tags live above this base.
     pub const ALLTOALL_BASE: Tag = 0x4000_0000;
 
@@ -67,6 +93,33 @@ pub mod tags {
         ALLTOALL_BASE + round
     }
 }
+
+/// Typed transport errors — what a bounded receive surfaces instead of
+/// deadlocking (the "no malformed byte sequence or lost frame can hang a
+/// rank" contract).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CommError {
+    /// No matching message arrived within the deadline.
+    Timeout { tag: Tag, waited_secs: f64 },
+    /// A batched receive exhausted its retry budget; `pending` lists the
+    /// sources whose messages never completed.
+    RetriesExhausted { tag: Tag, pending: Vec<u32> },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { tag, waited_secs } => {
+                write!(f, "receive timed out after {waited_secs:.3}s (tag {tag})")
+            }
+            CommError::RetriesExhausted { tag, pending } => {
+                write!(f, "retries exhausted on tag {tag}; incomplete sources {pending:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
 
 /// Counters of one [`FramePool`]'s lifecycle (see [`FramePool::stats`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -118,7 +171,9 @@ impl FramePool {
     }
 
     fn pop_vec(&self) -> Vec<u8> {
-        let popped = self.inner.free.lock().unwrap().pop();
+        // Lock poisoning means another rank thread panicked — propagating
+        // the panic here is the correct response, not a wire error.
+        let popped = self.inner.free.lock().expect("poisoned frame-pool lock").pop();
         match popped {
             Some(v) => v,
             None => {
@@ -131,7 +186,7 @@ impl FramePool {
     fn put_back(&self, mut buf: Vec<u8>) {
         buf.clear();
         self.inner.recycled.fetch_add(1, Ordering::Relaxed);
-        self.inner.free.lock().unwrap().push(buf);
+        self.inner.free.lock().expect("poisoned frame-pool lock").push(buf);
     }
 
     /// Lease a writable buffer (empty; capacity recycled). Seal it into a
@@ -167,7 +222,7 @@ impl FramePool {
     /// high-water marks against these).
     pub fn stats(&self) -> FramePoolStats {
         FramePoolStats {
-            free: self.inner.free.lock().unwrap().len(),
+            free: self.inner.free.lock().expect("poisoned frame-pool lock").len(),
             outstanding: self.inner.outstanding.load(Ordering::Relaxed),
             high_water: self.inner.high_water.load(Ordering::Relaxed),
             created: self.inner.created.load(Ordering::Relaxed),
@@ -177,7 +232,7 @@ impl FramePool {
 
     /// Bytes parked in the free list (memory accounting).
     pub fn approx_bytes(&self) -> u64 {
-        self.inner.free.lock().unwrap().iter().map(|b| b.capacity() as u64).sum()
+        self.inner.free.lock().expect("poisoned frame-pool lock").iter().map(|b| b.capacity() as u64).sum()
     }
 }
 
@@ -381,7 +436,17 @@ impl MpiWorld {
     /// Handle for `rank`.
     pub fn communicator(self: &Arc<Self>, rank: u32) -> Communicator {
         assert!((rank as usize) < self.size);
-        Communicator { world: Arc::clone(self), rank, network_secs: 0.0 }
+        Communicator {
+            world: Arc::clone(self),
+            rank,
+            network_secs: 0.0,
+            checksum_secs: 0.0,
+            seqs: HashMap::new(),
+            chaos: None,
+            reliable: false,
+            archive: HashMap::new(),
+            retransmits_served: 0,
+        }
     }
 
     pub fn size(&self) -> usize {
@@ -395,6 +460,21 @@ pub struct Communicator {
     rank: u32,
     /// Simulated network seconds charged to this rank.
     pub network_secs: f64,
+    /// Wall seconds this rank spent computing/verifying frame checksums
+    /// (send side; the receive side is metered by the reassembler).
+    pub checksum_secs: f64,
+    /// Per-`(dst, tag)` monotone frame sequence counters (stamped into
+    /// the frame header by the batching layer).
+    seqs: HashMap<(u32, Tag), u32>,
+    /// Deterministic fault injector, applied at frame-publish time.
+    chaos: Option<Box<ChaosState>>,
+    /// Reliable mode: archive published frames for retransmission.
+    reliable: bool,
+    /// Last archived message per `(dst, tag)`: `(msg_id, frames)`.
+    /// Frames are refcounted — archiving costs one `Arc` bump per frame.
+    archive: HashMap<(u32, Tag), (u32, Vec<Frame>)>,
+    /// Frames re-published in response to retry requests.
+    retransmits_served: u64,
 }
 
 impl Communicator {
@@ -418,16 +498,151 @@ impl Communicator {
     /// holds the very buffer the sender wrote, and the receiver reads it
     /// in place. The network model charges the simulated wire time to the
     /// sender as for any send.
+    ///
+    /// When a [`ChaosState`] is installed, data-plane frames route through
+    /// it first: the fault plan may drop, hold (delay/reorder), duplicate,
+    /// truncate, or bit-flip the frame before anything reaches the
+    /// mailbox. Control-plane tags ([`tags::RETRY`], [`tags::RESYNC`])
+    /// bypass injection so recovery itself cannot livelock.
     pub fn isend_frame(&mut self, dst: u32, tag: Tag, frame: Frame) {
         assert!((dst as usize) < self.world.size, "invalid destination rank {dst}");
+        if self.chaos.is_some() && tag != tags::RETRY && tag != tags::RESYNC {
+            let mut chaos = self.chaos.take().expect("chaos presence just checked");
+            let out = chaos.apply(self.rank, dst, tag, frame);
+            self.chaos = Some(chaos);
+            for f in out {
+                self.publish(dst, tag, f);
+            }
+        } else {
+            self.publish(dst, tag, frame);
+        }
+    }
+
+    /// Raw mailbox push + accounting (below the chaos seam).
+    fn publish(&mut self, dst: u32, tag: Tag, frame: Frame) {
         let bytes = frame.len();
         self.network_secs += self.world.network.transfer_secs(bytes);
         self.world.total_wire_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.world.total_messages.fetch_add(1, Ordering::Relaxed);
         let (lock, cv) = &self.world.mailboxes[dst as usize];
-        let mut mb = lock.lock().unwrap();
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
         mb.queue.push_back(Envelope { src: self.rank, tag, data: frame });
         cv.notify_all();
+    }
+
+    /// Install a deterministic fault injector on this rank's sends.
+    /// Implies reliable mode (frames are archived for retransmission).
+    pub fn install_chaos(&mut self, plan: FaultPlan) {
+        self.chaos = Some(Box::new(ChaosState::new(plan)));
+        self.reliable = true;
+    }
+
+    /// Counters of faults injected so far (zero when no chaos installed).
+    pub fn chaos_stats(&self) -> ChaosStats {
+        self.chaos.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Enable/disable reliable mode without fault injection. In reliable
+    /// mode batched sends archive their frames (refcount clones, no
+    /// copies) so [`Communicator::service_retry_queue`] can re-publish
+    /// them; the clean path keeps archiving off so the frame pool's
+    /// steady-state invariants (one circulating buffer) are untouched.
+    pub fn set_reliable(&mut self, on: bool) {
+        self.reliable = on;
+        if !on {
+            self.archive.clear();
+        }
+    }
+
+    #[inline]
+    pub fn reliable(&self) -> bool {
+        self.reliable
+    }
+
+    /// Next monotone sequence number for the `(dst, tag)` channel.
+    #[inline]
+    pub fn next_seq(&mut self, dst: u32, tag: Tag) -> u32 {
+        let c = self.seqs.entry((dst, tag)).or_insert(0);
+        let s = *c;
+        *c = c.wrapping_add(1);
+        s
+    }
+
+    /// Archive the frames of the message just sent on `(dst, tag)` for
+    /// retransmission (reliable mode only; refcount clones, no copy).
+    /// Only the latest message per channel is kept — the exchange
+    /// protocol has at most one in-flight batched message per channel.
+    pub fn archive_frames(&mut self, dst: u32, tag: Tag, msg_id: u32, frames: Vec<Frame>) {
+        if self.reliable && !frames.is_empty() {
+            self.archive.insert((dst, tag), (msg_id, frames));
+        }
+    }
+
+    /// Ask `src` to retransmit message `msg_id` of `tag` (a NACK). The
+    /// request travels on [`tags::RETRY`], exempt from chaos.
+    pub fn request_retry(&mut self, src: u32, tag: Tag, msg_id: u32) {
+        let mut p = Vec::with_capacity(8);
+        p.extend_from_slice(&tag.to_le_bytes());
+        p.extend_from_slice(&msg_id.to_le_bytes());
+        self.isend(src, tags::RETRY, p);
+    }
+
+    /// Serve queued retransmission requests from the archive. Returns the
+    /// number of frames re-published (also accumulated in
+    /// [`Communicator::retransmits_served`]). Malformed or unmatched
+    /// requests are ignored — the control plane is best-effort; the
+    /// requester's bounded retry loop is what guarantees progress.
+    pub fn service_retry_queue(&mut self) -> u64 {
+        let mut served = 0u64;
+        while let Some(m) = self.try_recv(None, Some(tags::RETRY)) {
+            let b = m.data.as_slice();
+            if b.len() != 8 {
+                continue;
+            }
+            let tag = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            let msg_id = u32::from_le_bytes([b[4], b[5], b[6], b[7]]);
+            let hit = self
+                .archive
+                .get(&(m.src, tag))
+                .filter(|(mid, _)| *mid == msg_id)
+                .map(|(_, fs)| fs.clone());
+            if let Some(frames) = hit {
+                for f in frames {
+                    // Retransmissions re-enter the chaos seam: a retried
+                    // frame can be faulted again; the bounded fault budget
+                    // (FaultPlan::max_faults) guarantees convergence.
+                    self.isend_frame(m.src, tag, f);
+                    served += 1;
+                }
+            }
+        }
+        self.retransmits_served += served;
+        served
+    }
+
+    /// Total frames re-published by [`Communicator::service_retry_queue`].
+    #[inline]
+    pub fn retransmits_served(&self) -> u64 {
+        self.retransmits_served
+    }
+
+    /// Ask `src` to restart the delta stream on `tag` with a full
+    /// refresh. Sent when this rank detected damage it cannot repair by
+    /// retransmission (e.g. a delta arrived for a reference the receiver
+    /// discarded). Travels on [`tags::RESYNC`], exempt from chaos.
+    pub fn request_resync(&mut self, src: u32, tag: Tag) {
+        self.isend(src, tags::RESYNC, tag.to_le_bytes().to_vec());
+    }
+
+    /// Drain pending resync requests into `out` as `(peer, tag)` pairs.
+    /// Malformed payloads are ignored (best-effort control plane).
+    pub fn drain_resync_requests(&mut self, out: &mut Vec<(u32, Tag)>) {
+        while let Some(m) = self.try_recv(None, Some(tags::RESYNC)) {
+            let b = m.data.as_slice();
+            if b.len() == 4 {
+                out.push((m.src, u32::from_le_bytes([b[0], b[1], b[2], b[3]])));
+            }
+        }
     }
 
     /// Non-blocking send of an owned vector (completes immediately
@@ -457,7 +672,7 @@ impl Communicator {
     /// Probe: is a matching message available? (src/tag `None` = ANY).
     pub fn probe(&self, src: Option<u32>, tag: Option<Tag>) -> Option<(u32, Tag, usize)> {
         let (lock, _) = &self.world.mailboxes[self.rank as usize];
-        let mb = lock.lock().unwrap();
+        let mb = lock.lock().expect("poisoned mailbox lock");
         mb.queue
             .iter()
             .find(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
@@ -467,29 +682,33 @@ impl Communicator {
     /// Non-blocking matched receive.
     pub fn try_recv(&mut self, src: Option<u32>, tag: Option<Tag>) -> Option<RecvMsg> {
         let (lock, _) = &self.world.mailboxes[self.rank as usize];
-        let mut mb = lock.lock().unwrap();
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
         let idx = mb
             .queue
             .iter()
             .position(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))?;
-        let e = mb.queue.remove(idx).unwrap();
+        let e = mb.queue.remove(idx).expect("position() yields an in-range index");
         Some(RecvMsg { src: e.src, tag: e.tag, data: e.data })
     }
 
     /// Blocking matched receive.
+    ///
+    /// Blocks forever if the message never arrives — use
+    /// [`Communicator::recv_any_deadline`] (or reliable batched receive)
+    /// on paths that must survive loss.
     pub fn recv(&mut self, src: Option<u32>, tag: Option<Tag>) -> RecvMsg {
         let (lock, cv) = &self.world.mailboxes[self.rank as usize];
-        let mut mb = lock.lock().unwrap();
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
         loop {
             if let Some(idx) = mb
                 .queue
                 .iter()
                 .position(|e| src.map_or(true, |s| e.src == s) && tag.map_or(true, |t| e.tag == t))
             {
-                let e = mb.queue.remove(idx).unwrap();
+                let e = mb.queue.remove(idx).expect("position() yields an in-range index");
                 return RecvMsg { src: e.src, tag: e.tag, data: e.data };
             }
-            mb = cv.wait(mb).unwrap();
+            mb = cv.wait(mb).expect("poisoned mailbox lock");
         }
     }
 
@@ -503,18 +722,57 @@ impl Communicator {
     /// its CPU-time op buckets (the receive-side clock-skew fix).
     pub fn recv_any_timed(&mut self, tag: Tag) -> (RecvMsg, f64) {
         let (lock, cv) = &self.world.mailboxes[self.rank as usize];
-        let mut mb = lock.lock().unwrap();
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
         if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
-            let e = mb.queue.remove(idx).unwrap();
+            let e = mb.queue.remove(idx).expect("position() yields an in-range index");
             return (RecvMsg { src: e.src, tag: e.tag, data: e.data }, 0.0);
         }
-        let start = std::time::Instant::now();
+        let start = Instant::now();
         loop {
-            mb = cv.wait(mb).unwrap();
+            mb = cv.wait(mb).expect("poisoned mailbox lock");
             if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
-                let e = mb.queue.remove(idx).unwrap();
+                let e = mb.queue.remove(idx).expect("position() yields an in-range index");
                 let waited = start.elapsed().as_secs_f64();
                 return (RecvMsg { src: e.src, tag: e.tag, data: e.data }, waited);
+            }
+        }
+    }
+
+    /// Bounded version of [`Communicator::recv_any_timed`]: block for at
+    /// most `timeout` for the next message with `tag` from any source.
+    /// Returns the message plus the seconds actually spent blocked, or
+    /// [`CommError::Timeout`] — the rank keeps running either way, which
+    /// is what turns a lost frame from a deadlock into a recoverable
+    /// event.
+    pub fn recv_any_deadline(
+        &mut self,
+        tag: Tag,
+        timeout: Duration,
+    ) -> Result<(RecvMsg, f64), CommError> {
+        let (lock, cv) = &self.world.mailboxes[self.rank as usize];
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
+        if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
+            let e = mb.queue.remove(idx).expect("position() yields an in-range index");
+            return Ok((RecvMsg { src: e.src, tag: e.tag, data: e.data }, 0.0));
+        }
+        let start = Instant::now();
+        loop {
+            let elapsed = start.elapsed();
+            let Some(remaining) = timeout.checked_sub(elapsed) else {
+                return Err(CommError::Timeout { tag, waited_secs: elapsed.as_secs_f64() });
+            };
+            let (guard, wres) =
+                cv.wait_timeout(mb, remaining).expect("poisoned mailbox lock");
+            mb = guard;
+            if let Some(idx) = mb.queue.iter().position(|e| e.tag == tag) {
+                let e = mb.queue.remove(idx).expect("position() yields an in-range index");
+                return Ok((
+                    RecvMsg { src: e.src, tag: e.tag, data: e.data },
+                    start.elapsed().as_secs_f64(),
+                ));
+            }
+            if wres.timed_out() {
+                return Err(CommError::Timeout { tag, waited_secs: start.elapsed().as_secs_f64() });
             }
         }
     }
@@ -523,7 +781,7 @@ impl Communicator {
     /// "obsolete speculative receives are cancelled" after rebalancing.
     pub fn cancel_pending(&mut self, tag: Tag) -> usize {
         let (lock, _) = &self.world.mailboxes[self.rank as usize];
-        let mut mb = lock.lock().unwrap();
+        let mut mb = lock.lock().expect("poisoned mailbox lock");
         let before = mb.queue.len();
         mb.queue.retain(|e| e.tag != tag);
         before - mb.queue.len()
@@ -544,19 +802,22 @@ impl Communicator {
         if size > 1 {
             self.network_secs += self.world.network.transfer_secs(bytes) * (size - 1) as f64;
         }
-        let mut slot = self.world.collective.lock().unwrap();
+        let mut slot = self.world.collective.lock().expect("poisoned collective lock");
         let my_round = slot.round;
         slot.deposits[self.rank as usize] = Some(data);
         if slot.deposits.iter().all(|d| d.is_some()) {
             // Last depositor publishes results and advances the round.
-            let results: Vec<Vec<u8>> =
-                slot.deposits.iter_mut().map(|d| d.take().unwrap()).collect();
+            let results: Vec<Vec<u8>> = slot
+                .deposits
+                .iter_mut()
+                .map(|d| d.take().expect("all deposits present (just checked)"))
+                .collect();
             slot.results = Some(results);
             slot.collected = 0;
             self.world.collective_cv.notify_all();
         } else {
             while slot.results.is_none() || slot.round != my_round {
-                slot = self.world.collective_cv.wait(slot).unwrap();
+                slot = self.world.collective_cv.wait(slot).expect("poisoned collective lock");
                 if slot.round != my_round {
                     break;
                 }
@@ -572,7 +833,7 @@ impl Communicator {
             // Wait for round completion to prevent a fast rank from
             // entering the next collective early and clobbering deposits.
             while slot.round == my_round && slot.results.is_some() {
-                slot = self.world.collective_cv.wait(slot).unwrap();
+                slot = self.world.collective_cv.wait(slot).expect("poisoned collective lock");
             }
         }
         out
@@ -588,7 +849,8 @@ impl Communicator {
         let mut out = vec![0.0; values.len()];
         for contrib in all {
             for (i, chunk) in contrib.chunks_exact(8).enumerate() {
-                out[i] += f64::from_bits(u64::from_le_bytes(chunk.try_into().unwrap()));
+                let bytes: [u8; 8] = chunk.try_into().expect("chunks_exact yields 8 bytes");
+                out[i] += f64::from_bits(u64::from_le_bytes(bytes));
             }
         }
         out
@@ -604,7 +866,8 @@ impl Communicator {
         let mut out = vec![0u64; values.len()];
         for contrib in all {
             for (i, chunk) in contrib.chunks_exact(8).enumerate() {
-                out[i] += u64::from_le_bytes(chunk.try_into().unwrap());
+                let bytes: [u8; 8] = chunk.try_into().expect("chunks_exact yields 8 bytes");
+                out[i] += u64::from_le_bytes(bytes);
             }
         }
         out
@@ -614,7 +877,10 @@ impl Communicator {
     pub fn allreduce_max_f64(&mut self, value: f64) -> f64 {
         let all = self.allgather(value.to_bits().to_le_bytes().to_vec());
         all.iter()
-            .map(|b| f64::from_bits(u64::from_le_bytes(b[..8].try_into().unwrap())))
+            .map(|b| {
+                let bytes: [u8; 8] = b[..8].try_into().expect("allgather preserves length");
+                f64::from_bits(u64::from_le_bytes(bytes))
+            })
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -634,7 +900,7 @@ impl Communicator {
             if d as u32 == self.rank {
                 // Local loopback: deliver directly without network charge.
                 let (lock, cv) = &self.world.mailboxes[d];
-                let mut mb = lock.lock().unwrap();
+                let mut mb = lock.lock().expect("poisoned mailbox lock");
                 mb.queue.push_back(Envelope { src: self.rank, tag, data: Frame::owned(data) });
                 cv.notify_all();
             } else {
@@ -644,14 +910,30 @@ impl Communicator {
         let mut out: Vec<Option<Frame>> = vec![None; self.world.size];
         let mut received = 0;
         while received < self.world.size {
-            let m = self.recv(None, Some(tag));
+            // In reliable mode, keep serving retransmission requests while
+            // blocked: a peer stuck in its (chaos-afflicted) aura receive
+            // may be NACKing us, and we must answer or the whole world
+            // deadlocks on this collective.
+            let m = if self.reliable {
+                loop {
+                    self.service_retry_queue();
+                    match self.recv_any_deadline(tag, Duration::from_millis(1)) {
+                        Ok((m, _)) => break m,
+                        Err(_) => continue,
+                    }
+                }
+            } else {
+                self.recv(None, Some(tag))
+            };
             assert!(out[m.src as usize].is_none(), "duplicate alltoallv message from {}", m.src);
             out[m.src as usize] = Some(m.data);
             received += 1;
         }
         // Each frame is uniquely held here, so `into_vec` moves the
         // sender's vector out without copying.
-        out.into_iter().map(|o| o.unwrap().into_vec()).collect()
+        out.into_iter()
+            .map(|o| o.expect("received == size implies every slot filled").into_vec())
+            .collect()
     }
 }
 
@@ -931,6 +1213,80 @@ mod tests {
         let stats = pool.stats();
         assert_eq!(stats.outstanding, 0);
         assert_eq!(stats.free, 0, "into_vec transfers ownership out of the pool");
+    }
+
+    #[test]
+    fn recv_any_deadline_times_out_instead_of_hanging() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut c = world.communicator(0);
+        let t0 = Instant::now();
+        let err = c.recv_any_deadline(tags::AURA, Duration::from_millis(10)).unwrap_err();
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        match err {
+            CommError::Timeout { tag, waited_secs } => {
+                assert_eq!(tag, tags::AURA);
+                assert!(waited_secs >= 0.009, "waited_secs = {waited_secs}");
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // A queued message is returned immediately with zero wait.
+        let mut tx = world.communicator(1);
+        tx.isend(0, tags::AURA, vec![5]);
+        let (m, w) = c.recv_any_deadline(tags::AURA, Duration::from_millis(10)).unwrap();
+        assert_eq!(&m.data[..], [5]);
+        assert_eq!(w, 0.0);
+    }
+
+    #[test]
+    fn sequence_counters_are_monotone_per_channel() {
+        let world = MpiWorld::new(3, NetworkModel::ideal());
+        let mut c = world.communicator(0);
+        assert_eq!(c.next_seq(1, tags::AURA), 0);
+        assert_eq!(c.next_seq(1, tags::AURA), 1);
+        assert_eq!(c.next_seq(2, tags::AURA), 0, "channels are independent");
+        assert_eq!(c.next_seq(1, tags::MIGRATION), 0, "tags are independent");
+        assert_eq!(c.next_seq(1, tags::AURA), 2);
+    }
+
+    #[test]
+    fn retry_queue_retransmits_archived_frames() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        tx.set_reliable(true);
+        let frame = Frame::owned(vec![1, 2, 3]);
+        tx.archive_frames(1, tags::AURA, 7, vec![frame]);
+        // Wrong msg_id: no retransmission.
+        rx.request_retry(0, tags::AURA, 99);
+        assert_eq!(tx.service_retry_queue(), 0);
+        // Matching request: the archived frame is re-published.
+        rx.request_retry(0, tags::AURA, 7);
+        assert_eq!(tx.service_retry_queue(), 1);
+        let m = rx.recv(Some(0), Some(tags::AURA));
+        assert_eq!(&m.data[..], [1, 2, 3]);
+        assert_eq!(tx.retransmits_served(), 1);
+        // Malformed retry payloads are ignored, not panicked on.
+        tx.isend(0, tags::RETRY, vec![1, 2, 3]);
+        assert_eq!(rx.service_retry_queue(), 0);
+    }
+
+    #[test]
+    fn clean_path_has_no_archive_or_chaos_overhead() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut tx = world.communicator(0);
+        let mut rx = world.communicator(1);
+        assert!(!tx.reliable());
+        assert_eq!(tx.chaos_stats().injected(), 0);
+        // archive_frames is a no-op outside reliable mode: the pooled
+        // frame recycles normally and pool stats keep the PR 5 shape.
+        let mut buf = world.frame_pool().take();
+        buf.extend_from_slice(b"x");
+        let f = buf.seal();
+        tx.archive_frames(1, tags::AURA, 0, vec![f.clone()]);
+        tx.isend_frame(1, tags::AURA, f);
+        drop(rx.recv(Some(0), Some(tags::AURA)));
+        let stats = world.frame_pool().stats();
+        assert_eq!((stats.outstanding, stats.free), (0, 1));
     }
 
     #[test]

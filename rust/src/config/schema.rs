@@ -133,6 +133,13 @@ pub struct SimConfig {
     /// §3.9 memory-reduction knob: single-precision agent payloads.
     pub single_precision: bool,
     pub artifacts_dir: String,
+    /// Write a recovery checkpoint every N iterations (0 = never). The
+    /// last rung of the fault-recovery ladder (retry → resync → restore).
+    pub checkpoint_every: usize,
+    /// Bounded aura receive: give up on a silent peer after this many
+    /// milliseconds of NACK-driven retrying (0 = classic infinite block,
+    /// no retransmission — the fault-free fast path).
+    pub recv_timeout_ms: u64,
 }
 
 impl Default for SimConfig {
@@ -159,6 +166,8 @@ impl Default for SimConfig {
             chunk_bytes: crate::comm::batching::DEFAULT_CHUNK_BYTES,
             single_precision: false,
             artifacts_dir: "artifacts".into(),
+            checkpoint_every: 0,
+            recv_timeout_ms: 0,
         }
     }
 }
@@ -230,6 +239,12 @@ impl SimConfig {
         }
         if let Some(v) = doc.str("engine.artifacts_dir") {
             c.artifacts_dir = v.into();
+        }
+        if let Some(v) = doc.int("engine.checkpoint_every") {
+            c.checkpoint_every = v as usize;
+        }
+        if let Some(v) = doc.int("io.recv_timeout_ms") {
+            c.recv_timeout_ms = v as u64;
         }
         if let Some(v) = doc.float("mechanics.k_rep") {
             c.mechanics.k_rep = v as f32;
@@ -321,12 +336,14 @@ balance_every = 5
 sort_every = 10
 pjrt = true
 single_precision = true
+checkpoint_every = 25
 
 [io]
 serializer = "ta_io"
 compression = "lz4+delta"
 network = "gige"
 chunk_kib = 256
+recv_timeout_ms = 40
 
 [mechanics]
 k_rep = 3.0
@@ -352,6 +369,8 @@ export = true
         assert!(c.single_precision);
         assert_eq!(c.mechanics.k_rep, 3.0);
         assert_eq!(c.mechanics.dt, 0.05);
+        assert_eq!(c.checkpoint_every, 25);
+        assert_eq!(c.recv_timeout_ms, 40);
         let v = c.vis.unwrap();
         assert_eq!((v.every, v.width, v.height, v.export), (2, 100, 80, true));
     }

@@ -4,18 +4,31 @@
 //! them; in the distributed engine this is also where local→global
 //! identifier translation happens ("if the agent ... is written to disk
 //! as part of a backup or checkpoint"). A checkpoint is one TA IO message
-//! per rank plus a small header (iteration, rank, agent count) — the same
-//! serialization path as the wire, so the format is exercised end-to-end.
+//! per rank plus a small header (iteration, rank, agent count, payload
+//! CRC) — the same serialization path as the wire, so the format is
+//! exercised end-to-end.
+//!
+//! Checkpoints are the last rung of the recovery ladder
+//! (retry → resync → restore), so they are written to survive the very
+//! failures they guard against: each file lands via `.tmp` + atomic
+//! rename (a crash mid-write leaves the previous checkpoint intact, never
+//! a half-written current one), and the header carries a CRC32 over
+//! header fields + payload so a torn or bit-rotted file is rejected on
+//! read. [`restore_latest_valid`] walks a rank's checkpoints newest-first
+//! and returns the first one that passes validation.
 
 use crate::core::agent::Agent;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::buffer::AlignedBuf;
 use crate::io::ta_io;
+use crate::util::crc32::Crc32;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: u32 = 0x5441_4350; // "TACP"
-const VERSION: u32 = 1;
+/// v2: 32-byte header ending in a CRC32 over bytes 0..28 + payload.
+const VERSION: u32 = 2;
+const HEADER_BYTES: usize = 32;
 
 /// Checkpoint metadata.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -28,6 +41,10 @@ pub struct CheckpointInfo {
 /// Write one rank's agents to `<dir>/rank_<rank>_iter_<iteration>.tacp`.
 /// Global-id translation happens here: every agent gets a global id if it
 /// does not have one yet (§2.5).
+///
+/// The bytes are staged in a `.tmp` sibling and atomically renamed into
+/// place, so a crash mid-write can only ever lose the checkpoint being
+/// written — never corrupt an existing one under the final name.
 pub fn write_checkpoint(
     dir: impl AsRef<Path>,
     rank: u32,
@@ -40,27 +57,40 @@ pub fn write_checkpoint(
     for id in &ids {
         rm.ensure_global_id(*id);
     }
-    let agents: Vec<&Agent> = ids.iter().map(|id| rm.get(*id).unwrap()).collect();
+    let agents: Vec<&Agent> = ids.iter().map(|id| rm.get(*id).expect("id from rm.ids()")).collect();
     let payload = ta_io::serialize(agents.iter().copied());
+    let mut head = [0u8; HEADER_BYTES];
+    head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    head[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    head[8..12].copy_from_slice(&rank.to_le_bytes());
+    head[12..20].copy_from_slice(&iteration.to_le_bytes());
+    head[20..28].copy_from_slice(&(agents.len() as u64).to_le_bytes());
+    let crc = Crc32::new().update(&head[..28]).update(payload.as_slice()).finalize();
+    head[28..32].copy_from_slice(&crc.to_le_bytes());
     let path = dir.join(format!("rank_{rank:04}_iter_{iteration:08}.tacp"));
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
-    f.write_all(&MAGIC.to_le_bytes())?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&rank.to_le_bytes())?;
-    f.write_all(&iteration.to_le_bytes())?;
-    f.write_all(&(agents.len() as u64).to_le_bytes())?;
-    f.write_all(payload.as_slice())?;
-    f.flush()?;
+    let tmp = dir.join(format!("rank_{rank:04}_iter_{iteration:08}.tacp.tmp"));
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(&head)?;
+        f.write_all(payload.as_slice())?;
+        f.flush()?;
+        f.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)?;
     Ok(path)
 }
 
-/// Read a checkpoint file back into (info, agents).
+/// Read a checkpoint file back into (info, agents). Rejects anything that
+/// fails validation — wrong magic/version, CRC mismatch (torn write, bit
+/// rot), unparsable payload, or an agent count disagreeing with the
+/// header — with `InvalidData`, so callers can fall back to an older
+/// checkpoint ([`restore_latest_valid`]).
 pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInfo, Vec<Agent>)> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut head = [0u8; 4 + 4 + 4 + 8 + 8];
+    let mut head = [0u8; HEADER_BYTES];
     f.read_exact(&mut head)?;
-    let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
-    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    let magic = u32::from_le_bytes(head[0..4].try_into().expect("fixed slice"));
+    let version = u32::from_le_bytes(head[4..8].try_into().expect("fixed slice"));
     if magic != MAGIC || version != VERSION {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -68,12 +98,20 @@ pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInf
         ));
     }
     let info = CheckpointInfo {
-        rank: u32::from_le_bytes(head[8..12].try_into().unwrap()),
-        iteration: u64::from_le_bytes(head[12..20].try_into().unwrap()),
-        agents: u64::from_le_bytes(head[20..28].try_into().unwrap()),
+        rank: u32::from_le_bytes(head[8..12].try_into().expect("fixed slice")),
+        iteration: u64::from_le_bytes(head[12..20].try_into().expect("fixed slice")),
+        agents: u64::from_le_bytes(head[20..28].try_into().expect("fixed slice")),
     };
+    let stored_crc = u32::from_le_bytes(head[28..32].try_into().expect("fixed slice"));
     let mut payload = Vec::new();
     f.read_to_end(&mut payload)?;
+    let actual_crc = Crc32::new().update(&head[..28]).update(&payload).finalize();
+    if actual_crc != stored_crc {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("checkpoint CRC mismatch: stored {stored_crc:#10x} actual {actual_crc:#10x}"),
+        ));
+    }
     let view = ta_io::TaView::parse(AlignedBuf::from_bytes(&payload))
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
     let agents = view.materialize_all();
@@ -104,6 +142,36 @@ pub fn find_checkpoints(dir: impl AsRef<Path>, iteration: u64) -> std::io::Resul
         .collect();
     out.sort();
     Ok(out)
+}
+
+/// Last-resort recovery: scan `dir` for this rank's checkpoints, newest
+/// iteration first, and return the first one that passes full validation
+/// (magic, version, CRC, payload parse, agent count). Invalid or torn
+/// files are skipped, not fatal — that is the point of keeping more than
+/// one. Returns `Ok(None)` when no valid checkpoint exists.
+pub fn restore_latest_valid(
+    dir: impl AsRef<Path>,
+    rank: u32,
+) -> std::io::Result<Option<(CheckpointInfo, Vec<Agent>)>> {
+    let prefix = format!("rank_{rank:04}_iter_");
+    let mut candidates: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with(&prefix) && n.ends_with(".tacp"))
+        })
+        .collect();
+    // Names embed a zero-padded iteration, so lexicographic order is
+    // iteration order; walk newest → oldest.
+    candidates.sort();
+    for path in candidates.iter().rev() {
+        if let Ok((info, agents)) = read_checkpoint(path) {
+            return Ok(Some((info, agents)));
+        }
+    }
+    Ok(None)
 }
 
 #[cfg(test)]
@@ -185,6 +253,53 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
         assert!(read_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_rot_anywhere_is_rejected_by_the_crc() {
+        let dir = tmpdir("bitrot");
+        let mut rm = ResourceManager::new(2);
+        populate(&mut rm, 12);
+        let path = write_checkpoint(&dir, 2, 9, &mut rm).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // Flip one bit at a few positions spread over header and payload.
+        for pos in [9usize, HEADER_BYTES + 1, clean.len() / 2, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(read_checkpoint(&path).is_err(), "flip at {pos} must be detected");
+        }
+        std::fs::write(&path, &clean).unwrap();
+        assert!(read_checkpoint(&path).is_ok(), "clean bytes still restore");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_latest_valid_skips_corrupt_newest() {
+        let dir = tmpdir("latest");
+        let mut rm = ResourceManager::new(0);
+        populate(&mut rm, 8);
+        write_checkpoint(&dir, 0, 10, &mut rm).unwrap();
+        populate(&mut rm, 4); // 12 agents at iteration 20
+        let newest = write_checkpoint(&dir, 0, 20, &mut rm).unwrap();
+        // Newest valid → picked.
+        let (info, agents) = restore_latest_valid(&dir, 0).unwrap().unwrap();
+        assert_eq!((info.iteration, agents.len()), (20, 12));
+        // Corrupt the newest → falls back to iteration 10.
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (info, agents) = restore_latest_valid(&dir, 0).unwrap().unwrap();
+        assert_eq!((info.iteration, agents.len()), (10, 8));
+        // A stray .tmp from a crashed write is never considered.
+        std::fs::remove_file(&newest).unwrap();
+        std::fs::write(dir.join("rank_0000_iter_00000030.tacp.tmp"), b"torn").unwrap();
+        let (info, _) = restore_latest_valid(&dir, 0).unwrap().unwrap();
+        assert_eq!(info.iteration, 10);
+        // Other ranks' files don't leak in.
+        assert!(restore_latest_valid(&dir, 5).unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

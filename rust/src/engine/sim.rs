@@ -5,10 +5,12 @@ use super::model::Model;
 use super::pool::ThreadPool;
 use super::world::{AuraStore, World};
 use crate::balance::{diffusive, rcb, weights};
+use super::checkpoint;
 use crate::comm::batching::{
-    recv_all_batched_streaming, send_batched_framed, Reassembler, WireSlot, FRAME_HEADER,
+    recv_all_batched_reliable, recv_all_batched_streaming, send_batched_framed, Reassembler,
+    RetryConfig, WireSlot, FRAME_HEADER,
 };
-use crate::comm::mpi::{tags, Communicator};
+use crate::comm::mpi::{tags, CommError, Communicator};
 use crate::config::{BalanceMethod, SimConfig};
 use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
@@ -123,6 +125,15 @@ pub struct RankSim<M: Model> {
     /// Per-source aura-id ranges of the current iteration (feeds the
     /// NSG's Morton-sharded bulk aura fill).
     aura_ranges: Vec<std::ops::Range<u32>>,
+    /// Resync-request drain scratch: (peer, tag) pairs.
+    resync_scratch: Vec<(u32, u32)>,
+    // --- fault-accounting watermarks: the transport/reassembler keep
+    // --- cumulative totals; each iteration harvests the delta since the
+    // --- previous sample into the rank metrics.
+    checksum_secs_seen: f64,
+    faults_detected_seen: u64,
+    retransmits_seen: u64,
+    faults_injected_seen: u64,
 }
 
 impl<M: Model> RankSim<M> {
@@ -184,6 +195,11 @@ impl<M: Model> RankSim<M> {
             aura_rx_jobs: Vec::new(),
             aura_decoded: Vec::new(),
             aura_ranges: Vec::new(),
+            resync_scratch: Vec::new(),
+            checksum_secs_seen: 0.0,
+            faults_detected_seen: 0,
+            retransmits_seen: 0,
+            faults_injected_seen: 0,
             comm,
             grid,
             nsg,
@@ -191,6 +207,11 @@ impl<M: Model> RankSim<M> {
             rm,
             cfg,
         };
+        // A bounded receive needs the sender side archiving frames for
+        // retransmission; chaos installs (tests) flip this on themselves.
+        if sim.cfg.recv_timeout_ms > 0 {
+            sim.comm.set_reliable(true);
+        }
         for a in agents {
             let id = sim.rm.add(a);
             let pos = sim.rm.get(id).unwrap().position;
@@ -253,6 +274,13 @@ impl<M: Model> RankSim<M> {
                 self.visualization_phase();
             }
         }
+        if self.cfg.checkpoint_every > 0
+            && self.iteration > 0
+            && self.iteration % self.cfg.checkpoint_every as u64 == 0
+        {
+            self.checkpoint_phase();
+        }
+        self.harvest_fault_metrics();
         self.record_stats();
         self.update_memory_accounting();
         self.iteration += 1;
@@ -279,6 +307,19 @@ impl<M: Model> RankSim<M> {
             self.neighbors_cache = self.grid.neighbor_ranks(me);
             self.neighbors_dirty = false;
         }
+
+        // Peers that detected stream damage they cannot repair by
+        // retransmission ask for a restart: drain their RESYNC requests
+        // before encoding so this iteration's wire to them is a full
+        // refresh (self-healing delta streams; see ARCHITECTURE.md
+        // "Fault tolerance").
+        let mut resyncs = std::mem::take(&mut self.resync_scratch);
+        resyncs.clear();
+        self.comm.drain_resync_requests(&mut resyncs);
+        for &(peer, tag) in &resyncs {
+            self.codec.force_full((peer, tag));
+        }
+        self.resync_scratch = resyncs;
 
         // Select aura agents per destination (§2.1: exact radius bands,
         // narrower than the partition box). All scratch is reused across
@@ -372,7 +413,9 @@ impl<M: Model> RankSim<M> {
         // reassembly accounting). Jobs land in source order regardless of
         // arrival order and thread count.
         let mut rx_jobs = std::mem::take(&mut self.aura_rx_jobs);
-        let (rstats, decode_cpu) = {
+        let recv_timeout_ms = self.cfg.recv_timeout_ms;
+        let msg_id = self.iteration as u32;
+        let (rres, decode_cpu) = {
             let reassembler = &mut self.reassembler;
             let comm = &mut self.comm;
             let srcs = &self.neighbors_cache;
@@ -383,21 +426,71 @@ impl<M: Model> RankSim<M> {
                 &mut self.view_pool,
                 &self.pool,
                 |staging, feed: &mut dyn FnMut(usize, WireSlot)| {
-                    recv_all_batched_streaming(reassembler, comm, srcs, tags::AURA, staging, feed)
+                    if recv_timeout_ms > 0 {
+                        // Bounded reliable receive: verify frames, NACK
+                        // missing chunks, give up after the deadline
+                        // instead of blocking the rank forever.
+                        let retry = RetryConfig {
+                            slice: std::time::Duration::from_millis(2),
+                            max_slices: (recv_timeout_ms / 2).max(1) as u32,
+                        };
+                        recv_all_batched_reliable(
+                            reassembler,
+                            comm,
+                            srcs,
+                            tags::AURA,
+                            msg_id,
+                            staging,
+                            retry,
+                            |k, slot| feed(k, slot),
+                        )
+                    } else {
+                        Ok(recv_all_batched_streaming(
+                            reassembler,
+                            comm,
+                            srcs,
+                            tags::AURA,
+                            staging,
+                            feed,
+                        ))
+                    }
                 },
             )
+        };
+        let rstats = match rres {
+            Ok(s) => s,
+            Err(e) => self.on_receive_failure(e),
         };
         self.metrics.add_op(Op::Transfer, rstats.wait_secs);
         self.metrics.add_op(Op::Reassembly, rstats.reassembly_secs);
         self.metrics.count(Counter::MessagesReceived, rstats.frames);
         self.metrics.count(Counter::BytesReassembled, rstats.copied_bytes);
+        self.metrics.count(Counter::RetriesRequested, rstats.retries_sent);
         self.pool_cpu_secs += decode_cpu;
         let mut decoded = std::mem::take(&mut self.aura_decoded);
         decoded.clear();
-        for job in rx_jobs.iter_mut() {
+        for (k, job) in rx_jobs.iter_mut().enumerate() {
             self.metrics.add_op(Op::Deserialize, job.stats.deserialize_secs);
             self.metrics.add_op(Op::Decompress, job.stats.decompress_secs);
-            decoded.push(job.take().expect("decoded aura message missing"));
+            if let Some(d) = job.take() {
+                decoded.push(d);
+                continue;
+            }
+            if job.error.take().is_some() {
+                // The wire survived the transport's frame checks but the
+                // decode failed (typically a delta against a reference
+                // this rank no longer holds). Drop the source's aura for
+                // this iteration, reset the channel and ask the peer to
+                // restart the stream with a full refresh.
+                let src = self.neighbors_cache[k];
+                self.metrics.count(Counter::FaultsDetected, 1);
+                self.metrics.count(Counter::StreamResyncs, 1);
+                self.codec.reset_rx((src, tags::AURA));
+                self.comm.request_resync(src, tags::AURA);
+            }
+            // No decoded view and no error: the bounded receive gave up
+            // on this source (already handled by on_receive_failure); it
+            // contributes no aura this iteration.
         }
         self.aura_rx_jobs = rx_jobs;
         // Mirror the hot columns into per-source pre-reserved ranges
@@ -618,11 +711,21 @@ impl<M: Model> RankSim<M> {
             if wire.is_empty() {
                 continue;
             }
-            let (decoded, ds) = self.migration_codec.decode_pooled(
+            let (decoded, ds) = match self.migration_codec.decode_pooled(
                 (src as u32, tags::MIGRATION),
                 &wire,
                 &mut self.view_pool,
-            );
+            ) {
+                Ok(ok) => ok,
+                Err(_) => {
+                    // Migration wires are delta-free one-shots; a decode
+                    // failure means the payload itself is damaged and
+                    // unrecoverable. Count it and keep the rank alive —
+                    // never panic on wire-derived bytes.
+                    self.metrics.count(Counter::FaultsDetected, 1);
+                    continue;
+                }
+            };
             self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
             self.metrics.add_op(Op::Decompress, ds.decompress_secs);
             // Migrated agents are moved out of the buffer into owned
@@ -639,6 +742,107 @@ impl<M: Model> RankSim<M> {
         }
         self.migration_ingest = ingest;
         self.metrics.add_op(Op::Migration, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Fault tolerance: recovery ladder (retry → resync → restore)
+    // -------------------------------------------------------------------
+
+    fn checkpoint_dir(&self) -> std::path::PathBuf {
+        std::path::Path::new(&self.cfg.artifacts_dir)
+            .join("checkpoints")
+            .join(&self.cfg.name)
+    }
+
+    /// Periodic safety net: write an atomic, CRC-protected snapshot of
+    /// the owned agents. A write failure is non-fatal — it only widens
+    /// the window the last rung of the recovery ladder can rewind to.
+    fn checkpoint_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        let dir = self.checkpoint_dir();
+        if std::fs::create_dir_all(&dir).is_ok() {
+            checkpoint::write_checkpoint(&dir, self.rank, self.iteration, &mut self.rm).ok();
+        }
+        self.metrics.add_op(Op::Checkpoint, t.elapsed_secs());
+    }
+
+    /// The bounded receive gave up: purge the half-assembled messages,
+    /// restart the damaged streams, and — as the last rung of the ladder
+    /// — rewind owned state to the newest valid checkpoint if one
+    /// exists. Returns empty stats so the iteration continues (the
+    /// failed sources contribute no aura); the rank never deadlocks or
+    /// panics on a dead peer.
+    fn on_receive_failure(&mut self, e: CommError) -> crate::comm::batching::RecvAllStats {
+        let failed: Vec<u32> = match e {
+            CommError::RetriesExhausted { pending, .. } => pending,
+            CommError::Timeout { .. } => self.neighbors_cache.clone(),
+        };
+        for &src in &failed {
+            self.metrics.count(Counter::FaultsDetected, 1);
+            self.metrics.count(Counter::StreamResyncs, 1);
+            self.reassembler.purge(src, tags::AURA);
+            // The skipped message leaves the incoming delta chain with a
+            // stale reference; restart it.
+            self.codec.reset_rx((src, tags::AURA));
+            self.comm.request_resync(src, tags::AURA);
+        }
+        self.recover_from_checkpoint();
+        crate::comm::batching::RecvAllStats::default()
+    }
+
+    /// Restore owned agents from the newest checkpoint that passes its
+    /// CRC, rebuild the search grid, and force every outgoing delta
+    /// stream to a full refresh (receivers hold references to the
+    /// pre-rewind state). Returns `false` when no valid checkpoint
+    /// exists — the simulation then continues degraded instead of dying.
+    pub fn recover_from_checkpoint(&mut self) -> bool {
+        let dir = self.checkpoint_dir();
+        let restored = match checkpoint::restore_latest_valid(&dir, self.rank) {
+            Ok(Some((_info, agents))) => {
+                self.rm = ResourceManager::new(self.rank);
+                checkpoint::restore_into(&mut self.rm, agents);
+                self.nsg =
+                    NeighborSearchGrid::new(self.grid.whole(), self.model.interaction_radius());
+                self.ids_scratch.clear();
+                self.rm.collect_ids(&mut self.ids_scratch);
+                for &id in &self.ids_scratch {
+                    self.nsg.add(NsgEntry::Owned(id), self.rm.col_position(id.index));
+                }
+                true
+            }
+            _ => false,
+        };
+        if restored {
+            self.codec.force_full_all();
+            self.metrics.count(Counter::CheckpointRestores, 1);
+        }
+        restored
+    }
+
+    /// Fold the transport's cumulative fault/overhead counters into the
+    /// rank metrics as per-iteration deltas (the counters live on the
+    /// communicator and reassembler and survive across iterations).
+    fn harvest_fault_metrics(&mut self) {
+        let cs = self.comm.checksum_secs + self.reassembler.checksum_secs;
+        if cs > self.checksum_secs_seen {
+            self.metrics.add_op(Op::Checksum, cs - self.checksum_secs_seen);
+            self.checksum_secs_seen = cs;
+        }
+        let det = self.reassembler.faults.detected();
+        if det > self.faults_detected_seen {
+            self.metrics.count(Counter::FaultsDetected, det - self.faults_detected_seen);
+            self.faults_detected_seen = det;
+        }
+        let served = self.comm.retransmits_served();
+        if served > self.retransmits_seen {
+            self.metrics.count(Counter::FramesRetransmitted, served - self.retransmits_seen);
+            self.retransmits_seen = served;
+        }
+        let injected = self.comm.chaos_stats().injected();
+        if injected > self.faults_injected_seen {
+            self.metrics.count(Counter::FaultsInjected, injected - self.faults_injected_seen);
+            self.faults_injected_seen = injected;
+        }
     }
 
     // -------------------------------------------------------------------

@@ -8,11 +8,20 @@
 //! Wire envelope: `[serializer u8][delta-kind u8][raw_len u32 LE][payload]`.
 //! Delta encoding is only defined on top of TA IO (it operates on the
 //! block layout); ROOT IO supports plain LZ4.
+//!
+//! Decoding never trusts the wire: every malformed byte sequence —
+//! truncated envelope, corrupt LZ4 stream, invalid block layout, delta
+//! against a missing reference — surfaces as a typed [`DecodeError`]
+//! instead of a panic, so a corrupted message can at worst cost a
+//! resync ([`Codec::force_full`] / [`Codec::reset_rx`]), never a rank.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 use super::buffer::AlignedBuf;
 use super::delta::{DeltaDecoder, DeltaEncoder, DeltaKind};
-use super::lz4::Lz4Scratch;
-use super::ta_io::{AgentRows, TaView, ViewPool};
+use super::lz4::{Lz4Error, Lz4Scratch};
+use super::root_io::RootError;
+use super::ta_io::{AgentRows, TaError, TaView, ViewPool};
 use super::{lz4, root_io, ta_io};
 use crate::core::agent::Agent;
 use crate::core::ids::LocalId;
@@ -308,14 +317,65 @@ fn encode_one_rm(
     stats
 }
 
+/// Typed decode failure: the wire bytes could not be turned back into
+/// agents. Every variant is reachable from corrupted (truncated,
+/// bit-flipped) network input — none of them is a programming error —
+/// so callers must treat a `DecodeError` as a damaged *message*, not a
+/// damaged *rank*: count it, resync the channel, and move on.
+#[derive(Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Wire shorter than the 6-byte envelope header.
+    ShortWire { len: usize },
+    /// The envelope's declared raw length is impossible for the payload
+    /// it carries (LZ4 cannot expand a block more than ~256×), so a
+    /// corrupt length field is rejected before it can drive a
+    /// multi-gigabyte buffer reservation.
+    BadRawLen { raw_len: usize, wire_len: usize },
+    /// LZ4 block stream failed to decompress.
+    Lz4(Lz4Error),
+    /// ROOT IO payload failed structural validation.
+    RootIo(RootError),
+    /// TA IO / delta payload failed structural validation.
+    Ta(TaError),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+impl From<Lz4Error> for DecodeError {
+    fn from(e: Lz4Error) -> Self {
+        DecodeError::Lz4(e)
+    }
+}
+
+impl From<RootError> for DecodeError {
+    fn from(e: RootError) -> Self {
+        DecodeError::RootIo(e)
+    }
+}
+
+impl From<TaError> for DecodeError {
+    fn from(e: TaError) -> Self {
+        DecodeError::Ta(e)
+    }
+}
+
 /// Per-source output slot for [`Codec::decode_pooled_parallel`]: the
 /// decoded message (in source order, whatever the arrival order was),
 /// its decode stats, and a job-local buffer pool seeded from — and
 /// drained back into — the shared [`ViewPool`] around the fan-out.
+/// A corrupt message leaves `decoded` empty and parks the failure in
+/// `error` for the ingest loop to handle (count + resync the source).
 #[derive(Default)]
 pub struct AuraDecodeJob {
     pub decoded: Option<Decoded>,
     pub stats: DecodeStats,
+    pub error: Option<DecodeError>,
     pool: ViewPool,
 }
 
@@ -378,20 +438,36 @@ fn decode_one(
     rx: Option<&mut DeltaDecoder>,
     wire: &[u8],
     pool: &mut ViewPool,
-) -> (Decoded, DecodeStats) {
+) -> Result<(Decoded, DecodeStats), DecodeError> {
     let mut stats = DecodeStats::default();
-    assert!(wire.len() >= 6, "wire message too short");
+    if wire.len() < 6 {
+        return Err(DecodeError::ShortWire { len: wire.len() });
+    }
     let ser = wire[0];
     let kind_byte = wire[1];
     let compressed = kind_byte & 0x80 != 0;
     let delta_kind = DeltaKind::from_code(kind_byte & 0x7F);
-    let raw_len = u32::from_le_bytes(wire[2..6].try_into().unwrap()) as usize;
+    // Infallible: the length check above guarantees 4 bytes.
+    let raw_len =
+        u32::from_le_bytes(wire[2..6].try_into().expect("length checked above")) as usize;
     let body = &wire[6..];
+    // Allocation guard: LZ4's format bounds expansion at ~255 literals
+    // per 2-byte token, so any honest raw_len fits within 257× the body
+    // (+ a small constant for tiny payloads). An uncompressed wire's
+    // raw_len must match the body exactly. Reject before reserving.
+    let plausible =
+        if compressed { raw_len <= body.len() * 257 + 1024 } else { raw_len == body.len() };
+    if !plausible {
+        return Err(DecodeError::BadRawLen { raw_len, wire_len: wire.len() });
+    }
 
     let t0 = crate::util::timing::CpuTimer::start();
     let mut payload = pool.take_buf();
     if compressed {
-        lz4::decompress_into(body, raw_len, &mut payload).expect("corrupt LZ4 payload");
+        if let Err(e) = lz4::decompress_into(body, raw_len, &mut payload) {
+            pool.put_buf(payload);
+            return Err(DecodeError::Lz4(e));
+        }
     } else {
         payload.set_from_slice(body);
     }
@@ -399,26 +475,26 @@ fn decode_one(
 
     let t1 = crate::util::timing::CpuTimer::start();
     let decoded = if ser == SerializerKind::RootIo.code() {
-        let agents = root_io::deserialize(payload.as_slice()).expect("corrupt ROOT IO payload");
+        let agents = root_io::deserialize(payload.as_slice());
         pool.put_buf(payload);
-        Decoded::Owned(agents)
+        Decoded::Owned(agents?)
     } else {
         match delta_kind {
             DeltaKind::Full if !matches!(compression, Compression::Lz4Delta { .. }) => {
-                Decoded::View(
-                    TaView::parse_with(payload, pool.take_offsets())
-                        .expect("corrupt TA IO payload"),
-                )
+                Decoded::View(TaView::parse_with(payload, pool.take_offsets())?)
             }
+            // Internal invariant, not wire-reachable: channel presence is
+            // decided by `wire_needs_delta_channel` on the same two bytes
+            // this match inspects, so a missing channel means the two
+            // predicates drifted apart — a bug, not corruption.
             _ => Decoded::View(
                 rx.expect("delta wire without a channel (wire_needs_delta_channel drifted)")
-                    .decode_pooled(delta_kind, payload, pool)
-                    .expect("corrupt delta payload"),
+                    .decode_pooled(delta_kind, payload, pool)?,
             ),
         }
     };
     stats.deserialize_secs = t1.elapsed_secs();
-    (decoded, stats)
+    Ok((decoded, stats))
 }
 
 /// Stateful codec for one rank: owns the per-channel delta references and
@@ -651,7 +727,11 @@ impl Codec {
     }
 
     /// Decode a message received on (peer, tag).
-    pub fn decode(&mut self, key: ChannelKey, wire: &[u8]) -> (Decoded, DecodeStats) {
+    pub fn decode(
+        &mut self,
+        key: ChannelKey,
+        wire: &[u8],
+    ) -> Result<(Decoded, DecodeStats), DecodeError> {
         let mut pool = ViewPool::new();
         self.decode_pooled(key, wire, &mut pool)
     }
@@ -666,7 +746,7 @@ impl Codec {
         key: ChannelKey,
         wire: &[u8],
         pool: &mut ViewPool,
-    ) -> (Decoded, DecodeStats) {
+    ) -> Result<(Decoded, DecodeStats), DecodeError> {
         // Channel creation stays lazy: only delta-bearing wires need the
         // per-channel decoder state (ROOT IO / migration decodes don't).
         let rx = if wire_needs_delta_channel(self.compression, wire) {
@@ -727,15 +807,19 @@ impl Codec {
                 job.pool.put_buf(view_pool.take_buf());
                 job.pool.put_offsets(view_pool.take_offsets());
                 job.decoded = None;
+                job.error = None;
                 Work { wire: wire.as_ref(), dec: dec.expect("channel created above"), job }
             })
             .collect();
         let compression = self.compression;
         let cpu = pool.for_each_mut_timed(&mut work, |_, w| {
-            let (decoded, stats) =
-                decode_one(compression, Some(&mut *w.dec), w.wire, &mut w.job.pool);
-            w.job.decoded = Some(decoded);
-            w.job.stats = stats;
+            match decode_one(compression, Some(&mut *w.dec), w.wire, &mut w.job.pool) {
+                Ok((decoded, stats)) => {
+                    w.job.decoded = Some(decoded);
+                    w.job.stats = stats;
+                }
+                Err(e) => w.job.error = Some(e),
+            }
         });
         // Unused seeds (and the ROOT IO path's returned payload buffer)
         // go back to the shared pool.
@@ -798,6 +882,7 @@ impl Codec {
                 job.pool.put_buf(view_pool.take_buf());
                 job.pool.put_offsets(view_pool.take_offsets());
                 job.decoded = None;
+                job.error = None;
                 Work { dec: dec.expect("channel created above"), job }
             })
             .collect();
@@ -805,10 +890,13 @@ impl Codec {
         let (r, cpu) = pool.for_each_mut_streamed(
             &mut work,
             |_, wire: W, w| {
-                let (decoded, stats) =
-                    decode_one(compression, Some(&mut *w.dec), wire.wire(), &mut w.job.pool);
-                w.job.decoded = Some(decoded);
-                w.job.stats = stats;
+                match decode_one(compression, Some(&mut *w.dec), wire.wire(), &mut w.job.pool) {
+                    Ok((decoded, stats)) => {
+                        w.job.decoded = Some(decoded);
+                        w.job.stats = stats;
+                    }
+                    Err(e) => w.job.error = Some(e),
+                }
                 wire.recycle(&mut w.job.pool);
             },
             |feed| produce(&mut *view_pool, feed),
@@ -823,6 +911,34 @@ impl Codec {
     pub fn reference_bytes(&self) -> u64 {
         self.tx.values().map(|c| c.delta.reference_bytes()).sum::<u64>()
             + self.rx.values().map(|d| d.reference_bytes()).sum::<u64>()
+    }
+
+    /// Self-healing, sender side: force the next encode on `key` to emit
+    /// a full refresh instead of a delta. Called when the peer reported a
+    /// damaged stream (a `RESYNC` control message) — the refresh
+    /// re-stamps both ends' references and the channel converges back to
+    /// the fault-free byte stream. No-op for channels that never sent.
+    pub fn force_full(&mut self, key: ChannelKey) {
+        if let Some(ch) = self.tx.get_mut(&key) {
+            ch.delta.force_refresh();
+        }
+    }
+
+    /// [`Codec::force_full`] over every tx channel — used after restoring
+    /// from a checkpoint, when no peer's rx reference can be trusted.
+    pub fn force_full_all(&mut self) {
+        for ch in self.tx.values_mut() {
+            ch.delta.force_refresh();
+        }
+    }
+
+    /// Self-healing, receiver side: discard the rx channel state for
+    /// `key` after a decode failure. The stale reference must not survive
+    /// — the peer's recovery refresh will rebuild it from scratch, and
+    /// any delta applied against the corrupt reference would silently
+    /// diverge. Returns whether there was state to drop.
+    pub fn reset_rx(&mut self, key: ChannelKey) -> bool {
+        self.rx.remove(&key).is_some()
     }
 }
 
@@ -859,7 +975,7 @@ mod tests {
             }
             let (wire, es) = tx.encode((1, 0), ags.iter());
             assert!(es.wire_bytes > 0 && es.raw_bytes > 0);
-            let (decoded, _) = rx.decode((0, 0), &wire);
+            let (decoded, _) = rx.decode((0, 0), &wire).expect("clean wire");
             let got = decoded.into_agents();
             assert_eq!(got.len(), ags.len(), "iter {iter}");
             let mut want: Vec<_> = ags.iter().map(|a| (a.global_id, a.position)).collect();
@@ -917,7 +1033,7 @@ mod tests {
         let (wire, es) = c.encode((1, 0), ags.iter());
         assert!(es.serialize_secs > 0.0);
         assert!(es.compress_secs > 0.0);
-        let (_, ds) = c.decode((0, 0), &wire);
+        let (_, ds) = c.decode((0, 0), &wire).expect("clean wire");
         assert!(ds.deserialize_secs > 0.0);
     }
 
@@ -1077,7 +1193,8 @@ mod tests {
                     .iter()
                     .zip(&wires)
                     .map(|(&s, w)| {
-                        let (d, _) = rx_serial.decode_pooled((s, 9), w, &mut pool_serial);
+                        let (d, _) =
+                            rx_serial.decode_pooled((s, 9), w, &mut pool_serial).expect("clean");
                         let out = d
                             .into_agents()
                             .iter()
@@ -1179,7 +1296,8 @@ mod tests {
                     .iter()
                     .zip(&wires)
                     .map(|(&s, w)| {
-                        let (d, _) = rx_serial.decode_pooled((s, 9), w, &mut pool_serial);
+                        let (d, _) =
+                            rx_serial.decode_pooled((s, 9), w, &mut pool_serial).expect("clean");
                         d.into_agents()
                             .iter()
                             .map(|a| (a.global_id.counter, a.position.to_array()))
@@ -1235,7 +1353,7 @@ mod tests {
                 a.position.y += 0.5;
             }
             let (wire, _) = tx.encode((1, 0), ags.iter());
-            let (decoded, _) = rx.decode_pooled((0, 0), &wire, &mut pool);
+            let (decoded, _) = rx.decode_pooled((0, 0), &wire, &mut pool).expect("clean wire");
             assert_eq!(decoded.len(), ags.len(), "iter {iter}");
             let got = decoded.into_agents();
             let mut want: Vec<_> = ags.iter().map(|a| (a.global_id, a.position)).collect();
@@ -1268,11 +1386,90 @@ mod tests {
         let mut c2 = Codec::new(SerializerKind::TaIo, Compression::Lz4Delta { period: 10 });
         let (f1, _) = c2.encode((1, 0), a1.iter());
         let (f2, _) = c2.encode((2, 0), a2.iter());
-        rx.decode((1, 0), &f1);
-        rx.decode((2, 0), &f2);
-        let (d1, _) = rx.decode((1, 0), &w1);
-        let (d2, _) = rx.decode((2, 0), &w2);
+        rx.decode((1, 0), &f1).expect("clean wire");
+        rx.decode((2, 0), &f2).expect("clean wire");
+        let (d1, _) = rx.decode((1, 0), &w1).expect("clean wire");
+        let (d2, _) = rx.decode((2, 0), &w2).expect("clean wire");
         assert_eq!(d1.len(), 20);
         assert_eq!(d2.len(), 30);
+    }
+
+    /// The decode stack's no-panic contract: short wires, truncations and
+    /// body bit-flips surface as typed errors (or decode to garbage a CRC
+    /// layer above rejects) — and the codec stays usable afterwards.
+    /// Header bytes 2..6 (raw_len) are left alone here: the transport CRC
+    /// rejects those flips before the codec ever sees them, and faking
+    /// them would just test the allocator.
+    #[test]
+    fn corrupt_wires_error_instead_of_panicking() {
+        let mut tx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let ags = agents(40, 77);
+        let (wire, _) = tx.encode((1, 0), ags.iter());
+        assert_eq!(rx.decode((0, 0), &wire[..4]).unwrap_err(), DecodeError::ShortWire { len: 4 });
+        for bit in 0..8 {
+            for pos in [6usize, wire.len() / 2, wire.len() - 1] {
+                let mut bad = wire.clone();
+                bad[pos] ^= 1 << bit;
+                let _ = rx.decode((0, 0), &bad);
+            }
+        }
+        for keep in 0..wire.len() {
+            let _ = rx.decode((0, 0), &wire[..keep]);
+        }
+        // The channel still works after all that abuse.
+        let (wire2, _) = tx.encode((1, 0), ags.iter());
+        let (d, _) = rx.decode((0, 0), &wire2).expect("clean wire after abuse");
+        assert_eq!(d.len(), ags.len());
+    }
+
+    /// The self-healing ladder's resync rung: after the receiver discards
+    /// a damaged channel ([`Codec::reset_rx`]), deltas fail loudly instead
+    /// of silently diverging, and a sender-side [`Codec::force_full`]
+    /// refresh converges the stream back to source truth.
+    #[test]
+    fn resync_heals_a_broken_delta_stream_with_a_full_refresh() {
+        let comp = Compression::Lz4Delta { period: 100 };
+        let mut tx = Codec::new(SerializerKind::TaIo, comp);
+        let mut rx = Codec::new(SerializerKind::TaIo, comp);
+        let mut ags = agents(25, 13);
+        // Establish the reference, then run one clean delta round.
+        let (w0, _) = tx.encode((1, 4), ags.iter());
+        assert_eq!(w0[1] & 0x7F, 0, "first wire is a full refresh");
+        rx.decode((0, 4), &w0).expect("reference");
+        for a in ags.iter_mut() {
+            a.position.x += 1.0;
+        }
+        let (w1, _) = tx.encode((1, 4), ags.iter());
+        assert_ne!(w1[1] & 0x7F, 0, "steady state sends deltas");
+        rx.decode((0, 4), &w1).expect("clean delta");
+        // Receiver detects corruption and drops its channel state: the
+        // next delta has no reference and must error, not diverge.
+        assert!(rx.reset_rx((0, 4)));
+        for a in ags.iter_mut() {
+            a.position.x += 1.0;
+        }
+        let (w2, _) = tx.encode((1, 4), ags.iter());
+        assert!(rx.decode((0, 4), &w2).is_err(), "delta without reference must fail");
+        // Sender is told to refresh (RESYNC): the stream converges.
+        tx.force_full((1, 4));
+        for a in ags.iter_mut() {
+            a.position.x += 1.0;
+        }
+        let (w3, _) = tx.encode((1, 4), ags.iter());
+        assert_eq!(w3[1] & 0x7F, 0, "forced refresh re-stamps the reference");
+        let (d, _) = rx.decode((0, 4), &w3).expect("refresh decodes cleanly");
+        let mut have: Vec<_> = d.into_agents().iter().map(|a| (a.global_id, a.position)).collect();
+        let mut want: Vec<_> = ags.iter().map(|a| (a.global_id, a.position)).collect();
+        have.sort_by_key(|(g, _)| *g);
+        want.sort_by_key(|(g, _)| *g);
+        assert_eq!(have, want, "healed stream matches source truth bit-for-bit");
+        // And the *following* round goes back to cheap deltas.
+        for a in ags.iter_mut() {
+            a.position.x += 1.0;
+        }
+        let (w4, _) = tx.encode((1, 4), ags.iter());
+        assert_ne!(w4[1] & 0x7F, 0);
+        rx.decode((0, 4), &w4).expect("delta resumes after refresh");
     }
 }

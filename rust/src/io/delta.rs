@@ -196,6 +196,15 @@ impl DeltaEncoder {
         DeltaEncoder { period, ..Default::default() }
     }
 
+    /// Force the next encode to emit a `Full` refresh, re-stamping the
+    /// reference on both ends. The self-healing hook: called when the
+    /// peer reports a damaged stream (gap, checksum failure, decode
+    /// error), since any delta against a reference the receiver no
+    /// longer holds — or holds corrupted — cannot be applied.
+    pub fn force_refresh(&mut self) {
+        self.reference = None;
+    }
+
     /// Encode agents for this channel (compatibility entry point; the
     /// migration path and tests use it). Allocates the returned buffer;
     /// the engine's aura hot path uses [`DeltaEncoder::encode_rows`] with
@@ -389,10 +398,13 @@ impl DeltaDecoder {
                 Ok(view)
             }
             DeltaKind::Delta => {
-                let rf = self
-                    .reference
-                    .as_ref()
-                    .expect("delta message received before any reference");
+                // Wire-reachable: a delta can legitimately arrive on a
+                // channel whose reference was discarded (resync) or that
+                // never saw the peer's Full (dropped frame). Error out;
+                // the engine answers with a RESYNC request.
+                let Some(rf) = self.reference.as_ref() else {
+                    return Err(ta_io::TaError::MissingReference);
+                };
                 let mut buf = buf;
                 // Restore: add the reference back over the shared prefix
                 // of each slot, in u64 chunks. The message's true behavior

@@ -63,4 +63,4 @@ pub mod root_io;
 pub mod ta_io;
 
 pub use buffer::AlignedBuf;
-pub use codec::{Codec, Compression, SerializerKind};
+pub use codec::{Codec, Compression, DecodeError, SerializerKind};

@@ -205,6 +205,11 @@ impl AgentBlock {
                 cycle: self.payload[0],
                 quiescent: self.payload_u != 0,
             },
+            // Not wire-reachable: `TaView::parse_with` rejects class ids
+            // outside 0..=4 (`TaError::BadClassId`) before any block is
+            // handed out, and 0 (placeholder) never reaches `kind()` —
+            // callers filter with `is_placeholder`. Hitting this means a
+            // locally-built block was constructed wrong: a bug.
             other => panic!("unknown agent class id {other}"),
         }
     }
@@ -255,6 +260,9 @@ impl BehaviorBlock {
                 recovery_iters: self.extra,
             },
             5 => Behavior::TumorGrowth { cycle_rate: self.params[0], max_diameter: self.params[1] },
+            // Not wire-reachable: `TaView::parse_with` rejects behavior
+            // class ids outside 1..=5 during the parse walk, so only a
+            // locally-miswritten block can land here: a bug.
             other => panic!("unknown behavior class id {other}"),
         }
     }
@@ -572,6 +580,13 @@ pub enum TaError {
     BadVersion(u16),
     EndianMismatch,
     Truncated,
+    /// An agent or behavior block carries a class id outside the schema —
+    /// corrupt bytes that would otherwise panic class dispatch later.
+    BadClassId(u16),
+    /// A delta payload arrived on a channel holding no reference (dropped
+    /// Full, or a reference discarded by a resync) — the delta cannot be
+    /// applied and the sender must re-stamp with a full refresh.
+    MissingReference,
 }
 
 impl std::fmt::Display for TaError {
@@ -629,6 +644,13 @@ impl TaView {
             return Err(TaError::EndianMismatch);
         }
         offsets.clear();
+        // A corrupt header must not drive allocation: no buffer can hold
+        // more agents than fit after the header, so a larger count is
+        // rejected before the reserve instead of asking the allocator for
+        // gigabytes and letting the walk discover the truncation later.
+        if h.agent_count as usize > (buf.len() - HEADER_BYTES) / AGENT_BLOCK_BYTES {
+            return Err(TaError::Truncated);
+        }
         offsets.reserve(h.agent_count as usize);
         let mut off = HEADER_BYTES;
         let mut live = 0u32;
@@ -638,10 +660,26 @@ impl TaView {
             }
             offsets.push(off as u32);
             let block = unsafe { &*(buf.as_ptr().add(off) as *const AgentBlock) };
+            // Class dispatch is validated here, in the single walk, so the
+            // in-place accessors ([`AgentBlock::kind`],
+            // [`BehaviorBlock::to_behavior`]) can trust any block handed
+            // out by a parsed view — corrupt class ids from the wire fail
+            // the parse instead of panicking dispatch later.
+            if block.class_id > 4 {
+                return Err(TaError::BadClassId(block.class_id));
+            }
             live += u32::from(!block.is_placeholder());
-            off += AGENT_BLOCK_BYTES + block.n_behaviors as usize * BEHAVIOR_BLOCK_BYTES;
+            let mut boff = off + AGENT_BLOCK_BYTES;
+            off = boff + block.n_behaviors as usize * BEHAVIOR_BLOCK_BYTES;
             if off > buf.len() {
                 return Err(TaError::Truncated);
+            }
+            for _ in 0..block.n_behaviors {
+                let b = unsafe { &*(buf.as_ptr().add(boff) as *const BehaviorBlock) };
+                if b.class_id == 0 || b.class_id > 5 {
+                    return Err(TaError::BadClassId(b.class_id));
+                }
+                boff += BEHAVIOR_BLOCK_BYTES;
             }
         }
         Ok(TaView {
@@ -983,6 +1021,35 @@ mod tests {
         let mut buf = serialize(agents.iter());
         buf.as_mut_slice()[4] = 99; // version field
         assert!(matches!(TaView::parse(buf).unwrap_err(), TaError::BadVersion(_)));
+    }
+
+    /// Corrupt class ids fail the parse walk instead of panicking class
+    /// dispatch in `kind()` / `to_behavior()` later.
+    #[test]
+    fn parse_rejects_bad_class_ids() {
+        let agents = sample_agents();
+        let clean = serialize(agents.iter());
+        // First agent block's class id (u16 at the start of the block).
+        let mut buf = AlignedBuf::from_bytes(clean.as_slice());
+        buf.as_mut_slice()[HEADER_BYTES] = 200;
+        assert_eq!(TaView::parse(buf).unwrap_err(), TaError::BadClassId(200));
+        // First behavior block of the first agent that has one: walk the
+        // clean message to find it, then corrupt its class id.
+        let view = TaView::parse(AlignedBuf::from_bytes(clean.as_slice())).unwrap();
+        let boff = (0..view.len())
+            .find(|&i| view.agent(i).n_behaviors > 0)
+            .map(|i| {
+                let mut off = HEADER_BYTES;
+                for j in 0..i {
+                    off += AGENT_BLOCK_BYTES
+                        + view.agent(j).n_behaviors as usize * BEHAVIOR_BLOCK_BYTES;
+                }
+                off + AGENT_BLOCK_BYTES
+            })
+            .expect("sample agents carry behaviors");
+        let mut buf = AlignedBuf::from_bytes(clean.as_slice());
+        buf.as_mut_slice()[boff] = 77;
+        assert_eq!(TaView::parse(buf).unwrap_err(), TaError::BadClassId(77));
     }
 
     #[test]

@@ -45,10 +45,15 @@ pub enum Op {
     /// split out of [`Op::Transfer`] so blocked wall-clock wait on a slow
     /// peer and real copy work no longer share a bucket.
     Reassembly,
+    /// CPU spent computing/verifying frame CRC32s — the clean-path price
+    /// of integrity checking, split out so the overhead is measurable.
+    Checksum,
+    /// Wall clock spent writing periodic recovery checkpoints.
+    Checkpoint,
 }
 
 impl Op {
-    pub const ALL: [Op; 12] = [
+    pub const ALL: [Op; 14] = [
         Op::AuraUpdate,
         Op::AgentOps,
         Op::Migration,
@@ -61,6 +66,8 @@ impl Op {
         Op::Visualization,
         Op::Transfer,
         Op::Reassembly,
+        Op::Checksum,
+        Op::Checkpoint,
     ];
 
     pub fn name(self) -> &'static str {
@@ -77,6 +84,8 @@ impl Op {
             Op::Visualization => "visualization",
             Op::Transfer => "transfer",
             Op::Reassembly => "reassembly",
+            Op::Checksum => "checksum",
+            Op::Checkpoint => "checkpoint",
         }
     }
 }
@@ -107,10 +116,26 @@ pub enum Counter {
     AgentUpdates,
     /// Partition boxes moved by load balancing.
     BoxesRebalanced,
+    /// Faults injected by the chaos transport (drop/delay/duplicate/
+    /// reorder/truncate/bit-flip). Zero on clean runs.
+    FaultsInjected,
+    /// Frame damage detected by the receive path: CRC failures, short
+    /// frames, bad chunk geometry, plus sequence gaps and out-of-order
+    /// arrivals observed on the link.
+    FaultsDetected,
+    /// Archived frames re-published in answer to NACKs (retry requests).
+    FramesRetransmitted,
+    /// Retry requests (NACKs) sent for incomplete messages.
+    RetriesRequested,
+    /// Delta-stream resyncs: decode failures answered with a RESYNC
+    /// request, forcing the peer's next encode to a full refresh.
+    StreamResyncs,
+    /// Checkpoint restores performed as last-resort recovery.
+    CheckpointRestores,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 9] = [
+    pub const ALL: [Counter; 15] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
@@ -120,6 +145,12 @@ impl Counter {
         Counter::AuraAgentsSent,
         Counter::AgentUpdates,
         Counter::BoxesRebalanced,
+        Counter::FaultsInjected,
+        Counter::FaultsDetected,
+        Counter::FramesRetransmitted,
+        Counter::RetriesRequested,
+        Counter::StreamResyncs,
+        Counter::CheckpointRestores,
     ];
 
     pub fn name(self) -> &'static str {
@@ -133,6 +164,12 @@ impl Counter {
             Counter::AuraAgentsSent => "aura_agents_sent",
             Counter::AgentUpdates => "agent_updates",
             Counter::BoxesRebalanced => "boxes_rebalanced",
+            Counter::FaultsInjected => "faults_injected",
+            Counter::FaultsDetected => "faults_detected",
+            Counter::FramesRetransmitted => "frames_retransmitted",
+            Counter::RetriesRequested => "retries_requested",
+            Counter::StreamResyncs => "stream_resyncs",
+            Counter::CheckpointRestores => "checkpoint_restores",
         }
     }
 }

@@ -1,0 +1,124 @@
+//! CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320).
+//!
+//! Table-driven, streaming-capable implementation for frame integrity
+//! checking on the transport path. The offline toolchain provides no
+//! `crc32fast`/`xxhash`; a 1 KiB lookup table processing one byte per
+//! step is plenty for the ≤ `DEFAULT_CHUNK_BYTES` frames it guards (the
+//! checksum cost is metered separately under `Op::Checksum` so the
+//! overhead stays observable).
+
+/// Reflected CRC32 polynomial (IEEE).
+const POLY: u32 = 0xEDB8_8320;
+
+/// 256-entry lookup table, built at compile time.
+const TABLE: [u32; 256] = build_table();
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC32 hasher.
+///
+/// ```
+/// use teraagent::util::crc32::Crc32;
+/// let whole = Crc32::hash(b"hello world");
+/// let split = Crc32::new().update(b"hello ").update(b"world").finalize();
+/// assert_eq!(whole, split);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    #[inline]
+    pub fn new() -> Self {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum; chainable.
+    #[inline]
+    #[must_use]
+    pub fn update(mut self, bytes: &[u8]) -> Self {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+        self
+    }
+
+    /// Finish and return the checksum.
+    #[inline]
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+
+    /// One-shot convenience over a single slice.
+    #[inline]
+    pub fn hash(bytes: &[u8]) -> u32 {
+        Crc32::new().update(bytes).finalize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard IEEE CRC32 test vectors.
+        assert_eq!(Crc32::hash(b""), 0);
+        assert_eq!(Crc32::hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(Crc32::hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 7 + 3) as u8).collect();
+        for split in [0, 1, 13, 500, 999, 1000] {
+            let s = Crc32::new().update(&data[..split]).update(&data[split..]).finalize();
+            assert_eq!(s, Crc32::hash(&data), "split at {split}");
+        }
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let data: Vec<u8> = (0..256u32).map(|i| i as u8).collect();
+        let clean = Crc32::hash(&data);
+        for byte in [0usize, 17, 128, 255] {
+            for bit in 0..8 {
+                let mut corrupt = data.clone();
+                corrupt[byte] ^= 1 << bit;
+                assert_ne!(Crc32::hash(&corrupt), clean, "flip byte {byte} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let data = vec![0xABu8; 64];
+        let clean = Crc32::hash(&data);
+        for cut in 0..64 {
+            assert_ne!(Crc32::hash(&data[..cut]), clean, "truncated to {cut}");
+        }
+    }
+}

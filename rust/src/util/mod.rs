@@ -4,6 +4,7 @@
 //! These exist in-repo because the offline toolchain provides no `rand`,
 //! `rayon`, `criterion`, or `proptest`; see DESIGN.md §2 (substitutions).
 
+pub mod crc32;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -151,7 +151,8 @@ fn serial_ingest(wire_rounds: &[Vec<Vec<u8>>]) -> Vec<IngestSnapshot> {
         aura.recycle_into(&mut pool);
         let mut ranges = Vec::new();
         for (k, wire) in wires.iter().enumerate() {
-            let (decoded, _) = rx.decode_pooled((SOURCES[k], tags::AURA), wire, &mut pool);
+            let (decoded, _) =
+                rx.decode_pooled((SOURCES[k], tags::AURA), wire, &mut pool).expect("clean wire");
             let range = aura.add_source(decoded);
             for i in range.clone() {
                 nsg.add(NsgEntry::Aura(i), aura.position(i));

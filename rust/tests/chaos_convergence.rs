@@ -1,0 +1,381 @@
+//! Chaos convergence suite (ISSUE 6 tentpole): under deterministic fault
+//! injection — drops, delays, duplicates, reorders, truncations, bit
+//! flips — the reliable exchange must re-converge **bit-identically** to
+//! the fault-free oracle, with every injected fault accounted for by the
+//! detection/retransmission counters. Seeds are pinned: a failure is a
+//! reproducible scenario, not a flake.
+//!
+//! Topology mirrors the engine's aura exchange: two ranks swap one
+//! delta-compressed batched message per round with `msg_id = round`, and
+//! a round ack on the chaos-exempt CONTROL tag plays the role the
+//! migration alltoallv plays in the engine — the sender never overwrites
+//! its retransmission archive until the peer confirmed the round, so a
+//! late NACK always finds the frames it asks for.
+
+use std::sync::Arc;
+
+use teraagent::comm::batching::{
+    recv_all_batched_reliable, send_batched, Reassembler, ReassemblyFaults, RetryConfig, WireSlot,
+};
+use teraagent::comm::mpi::{tags, MpiWorld};
+use teraagent::comm::{ChaosStats, FaultPlan, NetworkModel};
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::core::ids::GlobalId;
+use teraagent::engine::launcher::run_simulation;
+use teraagent::engine::{checkpoint, ThreadPool};
+use teraagent::io::codec::AuraDecodeJob;
+use teraagent::io::ta_io::ViewPool;
+use teraagent::io::{Codec, Compression, SerializerKind};
+use teraagent::metrics::Counter;
+use teraagent::models::cell_clustering::CellClustering;
+use teraagent::util::Vec3;
+
+const TAG: u32 = tags::AURA;
+const ROUNDS: u32 = 10;
+const N_AGENTS: usize = 256;
+const CHUNK: usize = 1024;
+const DELTA_PERIOD: u64 = 5;
+
+/// One round's received state: sorted (global counter, position bits).
+type Snapshot = Vec<(u64, [u64; 3])>;
+
+struct RankOutcome {
+    /// Per-round snapshots of the peer's decoded agents.
+    history: Vec<Snapshot>,
+    chaos: ChaosStats,
+    retransmits_served: u64,
+    faults: ReassemblyFaults,
+    retries_sent: u64,
+    stale_dropped: u64,
+}
+
+fn mk_agents(n: usize, rank: u32) -> Vec<Agent> {
+    (0..n)
+        .map(|i| {
+            let f = i as f64;
+            let p = Vec3::new(
+                (f * 0.37).sin() * 40.0,
+                (f * 0.11).cos() * 40.0,
+                f * 0.05 - 6.0,
+            );
+            let mut a = Agent::cell(p, 8.0, CellType::A);
+            a.global_id = GlobalId::new(rank, i as u64);
+            a
+        })
+        .collect()
+}
+
+/// Deterministic per-round drift so every round's message differs and the
+/// delta stream carries real updates.
+fn drift(ags: &mut [Agent], round: u32) {
+    for (i, a) in ags.iter_mut().enumerate() {
+        let s = ((i as u32 * 7 + round * 13) % 11) as f64 - 5.0;
+        a.position.x += 0.125 * s;
+        a.position.y -= 0.0625 * s;
+        a.position.z += 0.25;
+    }
+}
+
+fn snapshot(ags: &[Agent]) -> Snapshot {
+    let mut s: Snapshot = ags
+        .iter()
+        .map(|a| {
+            (
+                a.global_id.counter,
+                [a.position.x.to_bits(), a.position.y.to_bits(), a.position.z.to_bits()],
+            )
+        })
+        .collect();
+    s.sort();
+    s
+}
+
+/// Wait for the peer's ack of `round` on the chaos-exempt CONTROL tag,
+/// serving retransmission requests the whole time — the peer may still be
+/// NACKing this round's message.
+fn await_round_ack(comm: &mut teraagent::comm::mpi::Communicator, peer: u32, round: u32) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        comm.service_retry_queue();
+        if let Some(m) = comm.try_recv(Some(peer), Some(tags::CONTROL)) {
+            assert_eq!(m.data.as_slice(), &round.to_le_bytes()[..], "acks arrive in round order");
+            return;
+        }
+        assert!(std::time::Instant::now() < deadline, "peer never acked round {round}");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
+/// One rank of the symmetric exchange. `plan` installs chaos on this
+/// rank's *outgoing* frames; the peer's receiver has to recover.
+fn rank_body(
+    world: Arc<MpiWorld>,
+    me: u32,
+    peer: u32,
+    plan: Option<FaultPlan>,
+    threads: usize,
+) -> RankOutcome {
+    let mut comm = world.communicator(me);
+    comm.set_reliable(true);
+    if let Some(p) = plan {
+        comm.install_chaos(p);
+    }
+    let pool = ThreadPool::new(threads);
+    let comp = Compression::Lz4Delta { period: DELTA_PERIOD };
+    let mut tx = Codec::new(SerializerKind::TaIo, comp);
+    let mut rx = Codec::new(SerializerKind::TaIo, comp);
+    let mut re = Reassembler::new();
+    let mut view_pool = ViewPool::new();
+    let mut jobs: Vec<AuraDecodeJob> = Vec::new();
+    let mut ags = mk_agents(N_AGENTS, me);
+    let mut ingest: Vec<Agent> = Vec::new();
+    let srcs = [peer];
+    let mut history = Vec::new();
+    let mut retries_sent = 0u64;
+    let mut stale_dropped = 0u64;
+
+    for round in 0..ROUNDS {
+        drift(&mut ags, round);
+        let (wire, _) = tx.encode((peer, TAG), ags.iter());
+        send_batched(&mut comm, peer, TAG, round, &wire, CHUNK);
+
+        let (rres, _cpu) = {
+            let re = &mut re;
+            let comm = &mut comm;
+            rx.decode_pooled_streamed(
+                TAG,
+                &srcs,
+                &mut jobs,
+                &mut view_pool,
+                &pool,
+                |staging, feed: &mut dyn FnMut(usize, WireSlot)| {
+                    recv_all_batched_reliable(
+                        re,
+                        comm,
+                        &srcs,
+                        TAG,
+                        round,
+                        staging,
+                        RetryConfig::default(),
+                        |k, slot| feed(k, slot),
+                    )
+                },
+            )
+        };
+        let rstats = rres.unwrap_or_else(|e| {
+            panic!("rank {me} round {round}: bounded receive must converge, got {e:?}")
+        });
+        retries_sent += rstats.retries_sent;
+        stale_dropped += rstats.stale_dropped;
+
+        let job = &mut jobs[0];
+        assert!(job.error.is_none(), "rank {me} round {round}: CRC-verified wire must decode");
+        let d = job.take().unwrap_or_else(|| {
+            panic!("rank {me} round {round}: reliable receive must deliver the message")
+        });
+        ingest.clear();
+        d.drain_agents_into(&mut ingest, &mut view_pool);
+        history.push(snapshot(&ingest));
+
+        // Round barrier (the engine gets this from the migration
+        // alltoallv): only overwrite the retransmission archive once the
+        // peer no longer needs this round's frames.
+        comm.isend(peer, tags::CONTROL, round.to_le_bytes().to_vec());
+        await_round_ack(&mut comm, peer, round);
+    }
+
+    RankOutcome {
+        history,
+        chaos: comm.chaos_stats(),
+        retransmits_served: comm.retransmits_served(),
+        faults: re.faults,
+        retries_sent,
+        stale_dropped,
+    }
+}
+
+/// Run the two-rank exchange; chaos (if any) is installed on rank 0 so
+/// rank 1's receive path is the one under attack.
+fn run_pair(plan: Option<FaultPlan>, threads: usize) -> (RankOutcome, RankOutcome) {
+    let world = MpiWorld::new(2, NetworkModel::ideal());
+    let w0 = Arc::clone(&world);
+    let w1 = Arc::clone(&world);
+    let p0 = plan;
+    let h0 = std::thread::spawn(move || rank_body(w0, 0, 1, p0, threads));
+    let h1 = std::thread::spawn(move || rank_body(w1, 1, 0, None, threads));
+    (h0.join().expect("rank 0 panicked"), h1.join().expect("rank 1 panicked"))
+}
+
+fn assert_converged(tag: &str, got: &RankOutcome, oracle: &RankOutcome, which: &str) {
+    assert_eq!(got.history.len(), oracle.history.len(), "{tag}: {which} round count");
+    for (r, (g, o)) in got.history.iter().zip(oracle.history.iter()).enumerate() {
+        assert_eq!(g, o, "{tag}: {which} diverged from the fault-free oracle at round {r}");
+    }
+}
+
+#[test]
+fn clean_reliable_link_is_transparent() {
+    let (r0, r1) = run_pair(None, 1);
+    for (name, r) in [("rank0", &r0), ("rank1", &r1)] {
+        assert_eq!(r.history.len(), ROUNDS as usize);
+        for snap in &r.history {
+            assert_eq!(snap.len(), N_AGENTS, "{name}: every round delivers every agent");
+        }
+        assert_eq!(r.chaos.injected(), 0, "{name}: no chaos installed");
+        assert_eq!(r.faults.frames_rejected(), 0, "{name}: clean link rejects nothing");
+        assert_eq!(r.retransmits_served, 0, "{name}: clean link retransmits nothing");
+        assert_eq!(r.retries_sent, 0, "{name}: clean link NACKs nothing");
+        assert_eq!(r.stale_dropped, 0, "{name}: clean link drops nothing");
+    }
+}
+
+#[test]
+fn every_fault_class_converges_bit_identically() {
+    let (oracle0, oracle1) = run_pair(None, 1);
+    // (name, plan, destructive): destructive classes damage or remove
+    // frames, so recovery *must* go through the NACK/retransmit path;
+    // delay/duplicate/reorder only perturb arrival and may recover
+    // without a single retransmission.
+    let classes: Vec<(&str, FaultPlan, bool)> = vec![
+        ("drop", FaultPlan::none(0xC4A0_0001).with_drop(0.4), true),
+        ("delay", FaultPlan::none(0xC4A0_0002).with_delay(0.4), false),
+        ("duplicate", FaultPlan::none(0xC4A0_0003).with_duplicate(0.4), false),
+        ("reorder", FaultPlan::none(0xC4A0_0004).with_reorder(0.4), false),
+        ("truncate", FaultPlan::none(0xC4A0_0005).with_truncate(0.4), true),
+        ("bit_flip", FaultPlan::none(0xC4A0_0006).with_bit_flip(0.4), true),
+    ];
+    for (name, plan, destructive) in classes {
+        for threads in [1usize, 2, 8] {
+            let tag = format!("{name}/t{threads}");
+            let (r0, r1) = run_pair(Some(plan.clone().with_max_faults(8)), threads);
+            // Rank 1 receives over the faulted link; rank 0's own receive
+            // stays clean. Both must match the oracle exactly.
+            assert_converged(&tag, &r1, &oracle1, "rank1 (under attack)");
+            assert_converged(&tag, &r0, &oracle0, "rank0 (clean direction)");
+            assert!(r0.chaos.injected() > 0, "{tag}: plan must actually fire");
+            assert!(r0.chaos.injected() <= 8, "{tag}: budget respected");
+            assert_eq!(r1.chaos.injected(), 0, "{tag}: chaos lives on rank 0 only");
+            assert_eq!(r0.faults.frames_rejected(), 0, "{tag}: clean direction rejects nothing");
+            if destructive {
+                assert!(
+                    r0.retransmits_served >= 1,
+                    "{tag}: destroyed frames can only return via retransmission"
+                );
+                assert!(r1.retries_sent >= 1, "{tag}: the receiver must have NACKed");
+            }
+            if name == "truncate" || name == "bit_flip" {
+                assert!(
+                    r1.faults.frames_rejected() >= 1,
+                    "{tag}: corrupted frames must be caught by the integrity checks"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_chaos_accounting_is_closed() {
+    let (oracle0, oracle1) = run_pair(None, 1);
+    let plan = FaultPlan::none(0xC4A0_00FF)
+        .with_drop(0.1)
+        .with_delay(0.1)
+        .with_duplicate(0.1)
+        .with_reorder(0.1)
+        .with_truncate(0.1)
+        .with_bit_flip(0.1)
+        .with_max_faults(12);
+    let (r0, r1) = run_pair(Some(plan), 2);
+    assert_converged("mixed", &r1, &oracle1, "rank1");
+    assert_converged("mixed", &r0, &oracle0, "rank0");
+
+    let s = r0.chaos;
+    assert!(s.injected() > 0, "mixed plan must fire");
+    assert!(s.injected() <= 12, "fault budget respected");
+    assert_eq!(
+        s.injected(),
+        s.dropped + s.delayed + s.duplicated + s.reordered + s.truncated + s.bit_flipped,
+        "every injected fault is classified"
+    );
+    // Rejections can only come from damaged frames: the receiver never
+    // rejects more frames than were truncated or bit-flipped.
+    assert!(
+        r1.faults.frames_rejected() <= s.truncated + s.bit_flipped,
+        "rejections ({}) exceed damaged frames ({})",
+        r1.faults.frames_rejected(),
+        s.truncated + s.bit_flipped
+    );
+    // Anything destroyed had to be recovered through the NACK path.
+    if s.dropped + s.truncated + s.bit_flipped > 0 {
+        assert!(r0.retransmits_served >= 1, "destroyed frames require retransmission");
+        assert!(r1.retries_sent >= 1, "the receiver must have NACKed");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine level: the hardening knobs (reliable receive + periodic
+// checkpoints) must be result-transparent on a clean link, and the
+// checkpoints they write must be restorable.
+// ---------------------------------------------------------------------
+
+fn engine_cfg() -> SimConfig {
+    SimConfig {
+        name: "chaos_engine".into(),
+        num_agents: 900,
+        iterations: 9,
+        space_half_extent: 30.0,
+        interaction_radius: 10.0,
+        seed: 7,
+        mode: ParallelMode::MpiHybrid { ranks: 3, threads_per_rank: 1 },
+        serializer: SerializerKind::TaIo,
+        compression: Compression::Lz4Delta { period: 4 },
+        ..Default::default()
+    }
+}
+
+fn positions(result: &teraagent::engine::RunResult) -> Vec<[u64; 3]> {
+    let mut pos: Vec<[u64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    pos.sort();
+    pos
+}
+
+#[test]
+fn engine_hardening_knobs_are_result_transparent() {
+    let base = engine_cfg();
+    let reference = run_simulation(&base, |_| CellClustering::new(&base));
+
+    let dir = std::env::temp_dir().join(format!("teraagent_chaos_{}", std::process::id()));
+    let hardened = SimConfig {
+        checkpoint_every: 4,
+        recv_timeout_ms: 500,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        ..base.clone()
+    };
+    let result = run_simulation(&hardened, |_| CellClustering::new(&hardened));
+
+    assert_eq!(
+        positions(&result),
+        positions(&reference),
+        "reliable receive + checkpoints changed a clean-link simulation"
+    );
+    // Nothing faulted, nothing recovered, but checkpoints were written.
+    assert_eq!(result.report.counter_total(Counter::FaultsInjected), 0);
+    assert_eq!(result.report.counter_total(Counter::FaultsDetected), 0);
+    assert_eq!(result.report.counter_total(Counter::StreamResyncs), 0);
+    assert_eq!(result.report.counter_total(Counter::CheckpointRestores), 0);
+
+    let ckpt_dir = dir.join("checkpoints").join("chaos_engine");
+    let restored = checkpoint::restore_latest_valid(&ckpt_dir, 0)
+        .expect("checkpoint dir readable")
+        .expect("at least one valid checkpoint for rank 0");
+    assert!(restored.0.iteration > 0, "checkpoint records its iteration");
+    assert_eq!(restored.0.rank, 0);
+    assert!(!restored.1.is_empty(), "checkpoint restores agents");
+    assert_eq!(restored.0.agents as usize, restored.1.len());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

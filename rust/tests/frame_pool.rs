@@ -72,7 +72,7 @@ fn randomized_interleavings_track_the_outstanding_model_exactly() {
                     }
                     let (_remaining, total) = queued.remove(0);
                     let (m, _) = rx.recv_any_timed(TAG);
-                    match re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+                    match re.feed_frame(m.src, m.tag, m.data, &mut staging).expect("clean link") {
                         Some((_, slot)) => {
                             if total > 1 {
                                 // Completing a chunked stream drops all
@@ -113,7 +113,9 @@ fn randomized_interleavings_track_the_outstanding_model_exactly() {
         while !queued.is_empty() {
             let (_, total) = queued.remove(0);
             let (m, _) = rx.recv_any_timed(TAG);
-            if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+            if let Some((_, slot)) =
+                re.feed_frame(m.src, m.tag, m.data, &mut staging).expect("clean link")
+            {
                 if total > 1 {
                     expected_outstanding -= total as i64;
                 }
@@ -183,7 +185,9 @@ fn concurrent_senders_leave_no_frame_behind() {
     let mut completed = 0usize;
     while completed < 3 * PER_SENDER {
         let (m, _) = rx.recv_any_timed(TAG);
-        if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, &mut staging) {
+        if let Some((_, slot)) =
+            re.feed_frame(m.src, m.tag, m.data, &mut staging).expect("clean link")
+        {
             completed += 1;
             slot.recycle_into(&mut staging);
         }
