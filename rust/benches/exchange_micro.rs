@@ -668,6 +668,76 @@ fn run_streaming_ingest(w: &IngestWorkload) -> ([f64; 3], [f64; 3]) {
 }
 
 // ---------------------------------------------------------------------------
+// Recovery artifacts: checkpoint write, manifest scan, elastic reshard
+// ---------------------------------------------------------------------------
+
+/// Price the recovery ladder's disk stations at the 100k-agent scale
+/// (ROADMAP "rank-count-elastic restore"): one rank's checkpoint write
+/// (serialize + CRC + atomic rename), the survivors' manifest agreement
+/// scan over a populated checkpoint directory (manifest parse + CRC
+/// verify of every referenced checkpoint), and one survivor's elastic
+/// 4→3 reshard restore (read all old ranks' checkpoints, re-run RCB over
+/// the merged population, filter the owned share). Returns
+/// (checkpoint_write_s, manifest_scan_s, reshard_restore_s).
+fn run_recovery(w: &mut Workload) -> (f64, f64, f64) {
+    use teraagent::engine::checkpoint::{self, Manifest, ManifestEntry};
+    use teraagent::space::{Aabb, PartitionGrid};
+
+    let dir =
+        std::env::temp_dir().join(format!("teraagent_bench_recovery_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Checkpoint write: the full 100k-agent population from one rank.
+    let checkpoint_write = measure(1, 5, || {
+        checkpoint::write_checkpoint(&dir, 0, 6, &mut w.rm).expect("bench checkpoint write")
+    })
+    .median;
+
+    // A 4-rank round at iteration 8 (the population split four ways),
+    // plus its agreement manifest.
+    let (_, all) = checkpoint::read_checkpoint(dir.join(checkpoint::checkpoint_name(0, 6)))
+        .expect("read back bench checkpoint");
+    let per = all.len() / 4;
+    let mut agents = all.into_iter();
+    let mut entries = Vec::new();
+    for r in 0..4u32 {
+        let take = if r == 3 { usize::MAX } else { per };
+        let mut rm = ResourceManager::new(r);
+        for a in agents.by_ref().take(take) {
+            rm.add(a);
+        }
+        let path = checkpoint::write_checkpoint(&dir, r, 8, &mut rm).expect("bench round write");
+        let (info, crc) = checkpoint::verify_checkpoint(&path).expect("bench round verify");
+        entries.push(ManifestEntry { agents: info.agents, crc });
+    }
+    checkpoint::write_manifest(&dir, &Manifest { iteration: 8, rank_count: 4, ranks: entries })
+        .expect("bench manifest write");
+
+    // Manifest agreement scan: what every survivor runs on detection.
+    let manifest_scan = measure(1, 5, || {
+        checkpoint::latest_agreed_iteration(&dir)
+            .expect("bench manifest scan")
+            .expect("agreed round exists")
+            .iteration
+    })
+    .median;
+
+    // Elastic reshard restore, 4 old ranks → 3 survivors, one survivor.
+    let whole = Aabb::new(Vec3::ZERO, Vec3::splat(SIDE));
+    let reshard_restore = measure(1, 5, || {
+        let mut grid = PartitionGrid::new(whole, 25.0);
+        checkpoint::restore_resharded(&dir, 8, 4, 3, &mut grid, 0)
+            .expect("bench reshard restore")
+            .agents
+            .len()
+    })
+    .median;
+
+    let _ = std::fs::remove_dir_all(&dir);
+    (checkpoint_write, manifest_scan, reshard_restore)
+}
+
+// ---------------------------------------------------------------------------
 // Steady-state allocation assertion (codec level, full exchange loop)
 // ---------------------------------------------------------------------------
 
@@ -749,6 +819,7 @@ fn main() {
         transport_copied,
     ) = run_transport(&mut w);
     let (ingest_collect, ingest_streamed) = run_streaming_ingest(&ingest_w);
+    let (ckpt_write_s, manifest_scan_s, reshard_restore_s) = run_recovery(&mut w);
 
     row_strs(&["op", "seed", "fast", "speedup"]);
     let pr = |op: &str, s: f64, f: f64| {
@@ -828,6 +899,12 @@ fn main() {
         ]);
     }
 
+    println!();
+    row_strs(&["recovery 100k", "seconds", "", ""]);
+    row(&["checkpoint write".into(), fmt_secs(ckpt_write_s), "".into(), "".into()]);
+    row(&["manifest scan".into(), fmt_secs(manifest_scan_s), "".into(), "".into()]);
+    row(&["reshard restore 4->3".into(), fmt_secs(reshard_restore_s), "".into(), "".into()]);
+
     let json = format!(
         r#"{{
   "bench": "exchange_micro",
@@ -861,6 +938,9 @@ fn main() {
   "streaming_ingest": {{
     "collect_1t_s": {:.6e}, "collect_2t_s": {:.6e}, "collect_8t_s": {:.6e},
     "streamed_1t_s": {:.6e}, "streamed_2t_s": {:.6e}, "streamed_8t_s": {:.6e}
+  }},
+  "recovery": {{
+    "checkpoint_write_s": {:.6e}, "manifest_scan_s": {:.6e}, "reshard_restore_s": {:.6e}
   }}
 }}
 "#,
@@ -896,6 +976,9 @@ fn main() {
         ingest_streamed[0],
         ingest_streamed[1],
         ingest_streamed[2],
+        ckpt_write_s,
+        manifest_scan_s,
+        reshard_restore_s,
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_exchange.json");
     match std::fs::write(&out, &json) {

@@ -45,6 +45,10 @@ FLAGS (run):
   --half-extent <f>         space half extent
   --vis-every <n>           render a frame every n iterations
   --export-frames           write PPM frames to output/frames/
+  --checkpoint-every <n>    write a recovery checkpoint every n iterations
+  --recv-timeout-ms <n>     bounded aura receive deadline (0 = block forever)
+  --death-timeout-ms <n>    declare a peer dead after n ms of total silence
+                            and reshard its range over the survivors (0 = off)
 "
     .to_string()
 }
@@ -137,6 +141,15 @@ pub fn config_from_flags(flags: &BTreeMap<String, String>) -> Result<SimConfig, 
     if let Some(v) = geti("sort-every")? {
         cfg.sort_every = v;
     }
+    if let Some(v) = geti("checkpoint-every")? {
+        cfg.checkpoint_every = v;
+    }
+    if let Some(v) = geti("recv-timeout-ms")? {
+        cfg.recv_timeout_ms = v as u64;
+    }
+    if let Some(v) = geti("death-timeout-ms")? {
+        cfg.death_timeout_ms = v as u64;
+    }
     if flags.contains_key("pjrt") {
         cfg.use_pjrt = true;
     }
@@ -184,7 +197,7 @@ mod tests {
             "run --sim oncology --agents 500 --iterations 7 --mode mpi-only --ranks 8 \
              --serializer root_io --compression lz4 --network gige --balance diffusive \
              --balance-every 3 --sort-every 5 --seed 9 --radius 4.5 --half-extent 80 \
-             --vis-every 2",
+             --vis-every 2 --checkpoint-every 4 --recv-timeout-ms 500 --death-timeout-ms 120",
         ))
         .unwrap();
         let cfg = config_from_flags(&cli.flags).unwrap();
@@ -201,6 +214,9 @@ mod tests {
         assert_eq!(cfg.interaction_radius, 4.5);
         assert_eq!(cfg.space_half_extent, 80.0);
         assert_eq!(cfg.vis.unwrap().every, 2);
+        assert_eq!(cfg.checkpoint_every, 4);
+        assert_eq!(cfg.recv_timeout_ms, 500);
+        assert_eq!(cfg.death_timeout_ms, 120);
     }
 
     #[test]

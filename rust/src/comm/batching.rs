@@ -554,13 +554,38 @@ pub fn recv_all_batched_reliable(
             Err(CommError::Timeout { waited_secs, .. }) => {
                 stats.wait_secs += waited_secs;
                 slices_used += 1;
+                // While sitting in a long wait (e.g. waiting out a dead
+                // peer's silence) keep the liveness plane warm: peers
+                // stalled on *this* rank must not mistake the stall for
+                // death. Every 32nd empty slice (~64 ms at the default
+                // 2 ms slice) is frequent enough for any sane death
+                // timeout without flooding mailboxes.
+                if slices_used % 32 == 0 {
+                    comm.send_heartbeats();
+                }
+                let missing: Vec<u32> = srcs
+                    .iter()
+                    .enumerate()
+                    .filter(|(k, _)| !re.done_scratch[*k])
+                    .map(|(_, &s)| s)
+                    .collect();
+                // Liveness escalation (empty when the plane is off, so
+                // the plain retries-exhausted path is untouched): once
+                // every still-missing source has been silent past the
+                // death timeout, retrying is pointless — declare them
+                // dead and hand the failure to the reshard rung. A mix of
+                // overdue and merely-slow sources keeps retrying until
+                // the budget runs out, then escalates if any are overdue.
+                let dead = comm.overdue(&missing);
+                let escalate =
+                    dead.len() == missing.len() || (slices_used >= cfg.max_slices && !dead.is_empty());
+                if escalate {
+                    for &d in &dead {
+                        comm.mark_dead(d);
+                    }
+                    return Err(CommError::RankDead { tag, dead });
+                }
                 if slices_used >= cfg.max_slices {
-                    let missing = srcs
-                        .iter()
-                        .enumerate()
-                        .filter(|(k, _)| !re.done_scratch[*k])
-                        .map(|(_, &s)| s)
-                        .collect();
                     return Err(CommError::RetriesExhausted { tag, pending: missing });
                 }
                 for (k, &s) in srcs.iter().enumerate() {
@@ -1271,6 +1296,30 @@ mod tests {
         })
         .unwrap_err();
         assert_eq!(err, CommError::RetriesExhausted { tag: 7, pending: vec![0] });
+    }
+
+    #[test]
+    fn reliable_recv_escalates_a_silent_peer_to_rank_dead_with_liveness_on() {
+        let world = MpiWorld::new(2, NetworkModel::ideal());
+        let mut rx = world.communicator(1);
+        rx.enable_liveness(Duration::from_millis(20));
+        let mut re = Reassembler::new();
+        let mut staging = ViewPool::new();
+        // Budget far larger than the death timeout: escalation must come
+        // from liveness, not from retry exhaustion.
+        let cfg = RetryConfig { slice: Duration::from_millis(2), max_slices: 1000 };
+        let t0 = std::time::Instant::now();
+        let err = recv_all_batched_reliable(&mut re, &mut rx, &[0], 7, 1, &mut staging, cfg, |_, _| {
+            panic!("nothing can complete");
+        })
+        .unwrap_err();
+        assert_eq!(err, CommError::RankDead { tag: 7, dead: vec![0] });
+        assert!(
+            t0.elapsed() < Duration::from_millis(1500),
+            "escalation must come from the death timeout, not the 2s retry budget"
+        );
+        assert!(rx.is_dead(0), "escalation marks the peer dead");
+        assert_eq!(rx.dead_ranks(), vec![0]);
     }
 
     #[test]

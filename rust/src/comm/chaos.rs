@@ -57,6 +57,16 @@ pub struct FaultPlan {
     /// Hard cap on total injected faults — guarantees that retry loops
     /// converge (after the budget is spent the link is perfect).
     pub max_faults: u64,
+    /// Deterministic rank death: the first frame on an eligible tag whose
+    /// leading `msg_id` word (the engine stamps the iteration there for
+    /// aura traffic) reaches this iteration marks the sender dead, and
+    /// every frame after that — any tag — is swallowed. Unlike the
+    /// transient faults above, death is permanent: it ignores
+    /// [`FaultPlan::max_faults`] and never heals, so the peers' only way
+    /// out is the liveness → reshard ladder. The engine also consults
+    /// this field directly (`Communicator::chaos_plan`) to stop the
+    /// victim's iteration loop at the same boundary.
+    pub kill_at_iteration: Option<u64>,
 }
 
 impl FaultPlan {
@@ -72,6 +82,7 @@ impl FaultPlan {
             p_bit_flip: 0.0,
             tags: vec![super::mpi::tags::AURA],
             max_faults: u64::MAX,
+            kill_at_iteration: None,
         }
     }
 
@@ -115,6 +126,13 @@ impl FaultPlan {
         self
     }
 
+    /// Kill the owning rank once its eligible traffic reaches
+    /// `iteration` (see [`FaultPlan::kill_at_iteration`]).
+    pub fn with_kill_at_iteration(mut self, iteration: u64) -> FaultPlan {
+        self.kill_at_iteration = Some(iteration);
+        self
+    }
+
     fn total_p(&self) -> f64 {
         self.p_drop
             + self.p_delay
@@ -134,10 +152,15 @@ pub struct ChaosStats {
     pub reordered: u64,
     pub truncated: u64,
     pub bit_flipped: u64,
+    /// Frames swallowed after the rank-death trigger fired. Counted
+    /// apart from [`ChaosStats::injected`]: death is a permanent state,
+    /// not a budgeted link fault, and must never consume the
+    /// `max_faults` budget (which would resurrect the rank).
+    pub killed: u64,
 }
 
 impl ChaosStats {
-    /// Total faults injected.
+    /// Total transient faults injected (excludes `killed`; see above).
     pub fn injected(&self) -> u64 {
         self.dropped
             + self.delayed
@@ -158,6 +181,8 @@ pub struct ChaosState {
     /// Frames held back by delay/reorder, per `(dst, tag)` link —
     /// released after the next frame published on that link.
     held: HashMap<(u32, Tag), Vec<Frame>>,
+    /// Latched once the rank-death trigger fires; permanent.
+    dead: bool,
     stats: ChaosStats,
 }
 
@@ -178,11 +203,22 @@ impl ChaosState {
             "fault probabilities must sum to <= 1 (got {})",
             plan.total_p()
         );
-        ChaosState { plan, rngs: HashMap::new(), held: HashMap::new(), stats: ChaosStats::default() }
+        ChaosState {
+            plan,
+            rngs: HashMap::new(),
+            held: HashMap::new(),
+            dead: false,
+            stats: ChaosStats::default(),
+        }
     }
 
     pub fn stats(&self) -> ChaosStats {
         self.stats
+    }
+
+    /// Has the rank-death trigger fired?
+    pub fn is_dead(&self) -> bool {
+        self.dead
     }
 
     pub fn plan(&self) -> &FaultPlan {
@@ -193,6 +229,24 @@ impl ChaosState {
     /// frames to actually publish, in order (possibly empty: dropped or
     /// held; possibly several: duplicates and released held frames).
     pub fn apply(&mut self, src: u32, dst: u32, tag: Tag, frame: Frame) -> Vec<Frame> {
+        // Rank death precedes everything: the trigger is the leading
+        // `msg_id` word of an eligible frame reaching the kill
+        // iteration, after which no frame leaves this rank again.
+        if let Some(kill) = self.plan.kill_at_iteration {
+            if !self.dead && self.plan.tags.contains(&tag) && frame.len() >= 4 {
+                let msg_id =
+                    u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
+                if msg_id as u64 >= kill {
+                    self.dead = true;
+                }
+            }
+            if self.dead {
+                self.stats.killed += 1;
+                drop(frame);
+                self.held.clear(); // nothing held survives the death either
+                return Vec::new();
+            }
+        }
         // Frames previously held on this link release after the current
         // frame — the observable delay/reorder.
         let prior = self.held.remove(&(dst, tag)).unwrap_or_default();
@@ -407,5 +461,39 @@ mod tests {
         // Not a strict requirement, but with 100 draws at p=0.5 identical
         // outcomes on both links would indicate stream reuse.
         assert!(kept[0] != 100 || kept[1] != 100);
+    }
+
+    /// The kill trigger keys off the frame's leading msg_id word:
+    /// iterations before the kill pass untouched, the kill iteration and
+    /// everything after — any tag — is swallowed, forever.
+    #[test]
+    fn kill_at_iteration_silences_the_rank_permanently() {
+        let mut c = ChaosState::new(FaultPlan::none(8).with_kill_at_iteration(3));
+        for iter in 0..3u32 {
+            let out = c.apply(0, 1, tags::AURA, frame(&iter.to_le_bytes()));
+            assert_eq!(out.len(), 1, "iteration {iter} is before the kill");
+        }
+        assert!(!c.is_dead());
+        assert!(c.apply(0, 1, tags::AURA, frame(&3u32.to_le_bytes())).is_empty());
+        assert!(c.is_dead());
+        // Dead means dead on every tag, and the budget cannot resurrect.
+        assert!(c.apply(0, 1, tags::MIGRATION, frame(&[9])).is_empty());
+        assert!(c.apply(0, 2, tags::CONTROL, frame(&[9])).is_empty());
+        assert!(c.apply(0, 1, tags::AURA, frame(&0u32.to_le_bytes())).is_empty());
+        assert_eq!(c.stats().killed, 4);
+        assert_eq!(c.stats().injected(), 0, "death is not a budgeted fault");
+    }
+
+    /// Frames held by delay/reorder die with the rank instead of leaking
+    /// out after the death boundary.
+    #[test]
+    fn death_swallows_held_frames() {
+        let plan =
+            FaultPlan::none(9).with_delay(1.0).with_max_faults(1).with_kill_at_iteration(1);
+        let mut c = ChaosState::new(plan);
+        assert!(c.apply(0, 1, tags::AURA, frame(&0u32.to_le_bytes())).is_empty(), "held");
+        let out = c.apply(0, 1, tags::AURA, frame(&1u32.to_le_bytes()));
+        assert!(out.is_empty(), "kill frame and the held frame are both swallowed");
+        assert!(c.is_dead());
     }
 }

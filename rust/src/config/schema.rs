@@ -140,6 +140,11 @@ pub struct SimConfig {
     /// milliseconds of NACK-driven retrying (0 = classic infinite block,
     /// no retransmission — the fault-free fast path).
     pub recv_timeout_ms: u64,
+    /// Liveness plane: declare a peer dead after this many milliseconds
+    /// of total silence (on every tag) while a receive still wants its
+    /// messages, escalating the failure to the elastic reshard path
+    /// (0 = liveness off; silent peers only ever exhaust retries).
+    pub death_timeout_ms: u64,
 }
 
 impl Default for SimConfig {
@@ -168,6 +173,7 @@ impl Default for SimConfig {
             artifacts_dir: "artifacts".into(),
             checkpoint_every: 0,
             recv_timeout_ms: 0,
+            death_timeout_ms: 0,
         }
     }
 }
@@ -245,6 +251,9 @@ impl SimConfig {
         }
         if let Some(v) = doc.int("io.recv_timeout_ms") {
             c.recv_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.int("io.death_timeout_ms") {
+            c.death_timeout_ms = v as u64;
         }
         if let Some(v) = doc.float("mechanics.k_rep") {
             c.mechanics.k_rep = v as f32;
@@ -344,6 +353,7 @@ compression = "lz4+delta"
 network = "gige"
 chunk_kib = 256
 recv_timeout_ms = 40
+death_timeout_ms = 250
 
 [mechanics]
 k_rep = 3.0
@@ -371,6 +381,7 @@ export = true
         assert_eq!(c.mechanics.dt, 0.05);
         assert_eq!(c.checkpoint_every, 25);
         assert_eq!(c.recv_timeout_ms, 40);
+        assert_eq!(c.death_timeout_ms, 250);
         let v = c.vis.unwrap();
         assert_eq!((v.every, v.width, v.height, v.export), (2, 100, 80, true));
     }

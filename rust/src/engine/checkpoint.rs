@@ -16,11 +16,26 @@
 //! header fields + payload so a torn or bit-rotted file is rejected on
 //! read. [`restore_latest_valid`] walks a rank's checkpoints newest-first
 //! and returns the first one that passes validation.
+//!
+//! # Manifests: cross-rank agreement
+//!
+//! A per-rank newest-valid scan is not enough for a *distributed*
+//! restore: if rank 0's newest checkpoint is torn but rank 1's is fine,
+//! picking per-rank independently silently restores divergent iterations.
+//! Each completed checkpoint round therefore also writes a [`Manifest`]
+//! (`manifest_iter_<iteration>.tamf`) recording the rank count and every
+//! rank's agent count + checkpoint CRC. [`latest_agreed_iteration`]
+//! walks manifests newest-first and returns the first iteration at which
+//! **every** rank's file is present and CRC-valid — the agreement point
+//! survivors roll back to together, including after a rank death, when
+//! [`restore_resharded`] repartitions the merged population over the
+//! surviving rank count.
 
 use crate::core::agent::Agent;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::buffer::AlignedBuf;
 use crate::io::ta_io;
+use crate::space::partition::{PartitionGrid, RankId};
 use crate::util::crc32::Crc32;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -29,6 +44,26 @@ const MAGIC: u32 = 0x5441_4350; // "TACP"
 /// v2: 32-byte header ending in a CRC32 over bytes 0..28 + payload.
 const VERSION: u32 = 2;
 const HEADER_BYTES: usize = 32;
+
+const MANIFEST_MAGIC: u32 = 0x5441_4D46; // "TAMF"
+const MANIFEST_VERSION: u32 = 1;
+/// `[magic u32][version u32][rank_count u32][reserved u32][iteration u64]`.
+const MANIFEST_HEAD_BYTES: usize = 24;
+/// Per-rank record: `[agents u64][crc u32]`.
+const MANIFEST_ENTRY_BYTES: usize = 12;
+/// Upper bound on a plausible rank count — anything larger in a manifest
+/// header is corruption, rejected before it can size an allocation.
+const MANIFEST_MAX_RANKS: u32 = 1 << 20;
+
+/// Canonical checkpoint file name for `(rank, iteration)`.
+pub fn checkpoint_name(rank: u32, iteration: u64) -> String {
+    format!("rank_{rank:04}_iter_{iteration:08}.tacp")
+}
+
+/// Canonical manifest file name for `iteration`.
+pub fn manifest_name(iteration: u64) -> String {
+    format!("manifest_iter_{iteration:08}.tamf")
+}
 
 /// Checkpoint metadata.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,8 +102,8 @@ pub fn write_checkpoint(
     head[20..28].copy_from_slice(&(agents.len() as u64).to_le_bytes());
     let crc = Crc32::new().update(&head[..28]).update(payload.as_slice()).finalize();
     head[28..32].copy_from_slice(&crc.to_le_bytes());
-    let path = dir.join(format!("rank_{rank:04}_iter_{iteration:08}.tacp"));
-    let tmp = dir.join(format!("rank_{rank:04}_iter_{iteration:08}.tacp.tmp"));
+    let path = dir.join(checkpoint_name(rank, iteration));
+    let tmp = dir.join(format!("{}.tmp", checkpoint_name(rank, iteration)));
     {
         let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         f.write_all(&head)?;
@@ -124,12 +159,253 @@ pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInf
     Ok((info, agents))
 }
 
+/// Validate a checkpoint file's framing (magic, version, CRC over header
+/// + payload) without parsing the payload into agents. Returns the
+/// header info plus the file's CRC — what manifest writing and manifest
+/// verification need, at a fraction of [`read_checkpoint`]'s cost.
+pub fn verify_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInfo, u32)> {
+    let bytes = std::fs::read(path)?;
+    let Some(head) = bytes.get(..HEADER_BYTES) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("checkpoint shorter than its header: {} bytes", bytes.len()),
+        ));
+    };
+    let magic = u32::from_le_bytes(head[0..4].try_into().expect("fixed slice"));
+    let version = u32::from_le_bytes(head[4..8].try_into().expect("fixed slice"));
+    if magic != MAGIC || version != VERSION {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad checkpoint header: magic={magic:#x} version={version}"),
+        ));
+    }
+    let info = CheckpointInfo {
+        rank: u32::from_le_bytes(head[8..12].try_into().expect("fixed slice")),
+        iteration: u64::from_le_bytes(head[12..20].try_into().expect("fixed slice")),
+        agents: u64::from_le_bytes(head[20..28].try_into().expect("fixed slice")),
+    };
+    let stored_crc = u32::from_le_bytes(head[28..32].try_into().expect("fixed slice"));
+    let actual_crc =
+        Crc32::new().update(&bytes[..28]).update(&bytes[HEADER_BYTES..]).finalize();
+    if actual_crc != stored_crc {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("checkpoint CRC mismatch: stored {stored_crc:#10x} actual {actual_crc:#10x}"),
+        ));
+    }
+    Ok((info, stored_crc))
+}
+
 /// Restore agents into a fresh ResourceManager (fresh local ids; global
 /// ids preserved — the constant identifier of §2.5).
 pub fn restore_into(rm: &mut ResourceManager, agents: Vec<Agent>) {
     for a in agents {
         rm.add(a);
     }
+}
+
+/// One rank's record in a [`Manifest`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Agent count that rank checkpointed.
+    pub agents: u64,
+    /// The CRC32 stored in that rank's checkpoint header — binds the
+    /// manifest to the exact bytes on disk, so a later rewrite or
+    /// corruption of the file invalidates the agreement.
+    pub crc: u32,
+}
+
+/// Cross-rank checkpoint agreement record: "at `iteration`, all
+/// `rank_count` ranks wrote these checkpoints". Written once per
+/// completed checkpoint round (by rank 0, after an allgather of every
+/// rank's `(agents, crc)`), it is what lets survivors of a rank death
+/// agree on a rollback point without any collective — the manifest is
+/// on shared storage and self-validating.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub iteration: u64,
+    pub rank_count: u32,
+    /// One entry per rank, indexed by rank.
+    pub ranks: Vec<ManifestEntry>,
+}
+
+/// Write `m` to `<dir>/manifest_iter_<iteration>.tamf` (`.tmp` + atomic
+/// rename, like checkpoints). Layout: 24-byte header
+/// `[magic][version][rank_count][reserved][iteration u64]`, then
+/// `rank_count × [agents u64][crc u32]`, then a trailing CRC32 over all
+/// preceding bytes.
+pub fn write_manifest(dir: impl AsRef<Path>, m: &Manifest) -> std::io::Result<PathBuf> {
+    assert_eq!(m.ranks.len(), m.rank_count as usize, "one entry per rank");
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let mut bytes =
+        Vec::with_capacity(MANIFEST_HEAD_BYTES + m.ranks.len() * MANIFEST_ENTRY_BYTES + 4);
+    bytes.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
+    bytes.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    bytes.extend_from_slice(&m.rank_count.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&m.iteration.to_le_bytes());
+    for e in &m.ranks {
+        bytes.extend_from_slice(&e.agents.to_le_bytes());
+        bytes.extend_from_slice(&e.crc.to_le_bytes());
+    }
+    let crc = Crc32::new().update(&bytes).finalize();
+    bytes.extend_from_slice(&crc.to_le_bytes());
+    let path = dir.join(manifest_name(m.iteration));
+    let tmp = dir.join(format!("{}.tmp", manifest_name(m.iteration)));
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        f.write_all(&bytes)?;
+        f.flush()?;
+        f.into_inner().map_err(|e| e.into_error())?.sync_all()?;
+    }
+    std::fs::rename(&tmp, &path)?;
+    Ok(path)
+}
+
+/// Read and validate a manifest file. Every failure — truncation, wrong
+/// magic/version, an implausible rank count, a length that disagrees
+/// with the rank count, or a trailing-CRC mismatch — is a typed
+/// `InvalidData` error, never a panic: manifests sit on the same storage
+/// as checkpoints and get the same adversarial treatment.
+pub fn read_manifest(path: impl AsRef<Path>) -> std::io::Result<Manifest> {
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    let bytes = std::fs::read(path)?;
+    let Some(head) = bytes.get(..MANIFEST_HEAD_BYTES) else {
+        return Err(bad(format!("manifest shorter than its header: {} bytes", bytes.len())));
+    };
+    let magic = u32::from_le_bytes(head[0..4].try_into().expect("fixed slice"));
+    let version = u32::from_le_bytes(head[4..8].try_into().expect("fixed slice"));
+    if magic != MANIFEST_MAGIC || version != MANIFEST_VERSION {
+        return Err(bad(format!("bad manifest header: magic={magic:#x} version={version}")));
+    }
+    let rank_count = u32::from_le_bytes(head[8..12].try_into().expect("fixed slice"));
+    if rank_count == 0 || rank_count > MANIFEST_MAX_RANKS {
+        return Err(bad(format!("implausible manifest rank count {rank_count}")));
+    }
+    let iteration = u64::from_le_bytes(head[16..24].try_into().expect("fixed slice"));
+    let want_len =
+        MANIFEST_HEAD_BYTES + rank_count as usize * MANIFEST_ENTRY_BYTES + 4;
+    if bytes.len() != want_len {
+        return Err(bad(format!(
+            "manifest length {} disagrees with rank count {rank_count} (want {want_len})",
+            bytes.len()
+        )));
+    }
+    let body_len = want_len - 4;
+    let stored_crc =
+        u32::from_le_bytes(bytes[body_len..].try_into().expect("fixed 4-byte tail"));
+    let actual_crc = Crc32::new().update(&bytes[..body_len]).finalize();
+    if actual_crc != stored_crc {
+        return Err(bad(format!(
+            "manifest CRC mismatch: stored {stored_crc:#10x} actual {actual_crc:#10x}"
+        )));
+    }
+    let mut ranks = Vec::with_capacity(rank_count as usize);
+    for r in 0..rank_count as usize {
+        let off = MANIFEST_HEAD_BYTES + r * MANIFEST_ENTRY_BYTES;
+        ranks.push(ManifestEntry {
+            agents: u64::from_le_bytes(bytes[off..off + 8].try_into().expect("fixed slice")),
+            crc: u32::from_le_bytes(bytes[off + 8..off + 12].try_into().expect("fixed slice")),
+        });
+    }
+    Ok(Manifest { iteration, rank_count, ranks })
+}
+
+/// The agreement scan: walk manifests in `dir` newest-first and return
+/// the first whose referenced checkpoints are **all** present, CRC-valid,
+/// and consistent with the manifest (rank, iteration, agent count, CRC).
+/// A manifest whose own bytes fail validation, or that references a
+/// missing/torn/stale checkpoint, is skipped — survivors keep walking
+/// back until every rank's state exists at one iteration. `Ok(None)`
+/// when no agreed iteration exists.
+pub fn latest_agreed_iteration(dir: impl AsRef<Path>) -> std::io::Result<Option<Manifest>> {
+    let dir = dir.as_ref();
+    let mut manifests: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("manifest_iter_") && n.ends_with(".tamf"))
+        })
+        .collect();
+    // Zero-padded iterations: lexicographic order is iteration order.
+    manifests.sort();
+    'next_manifest: for path in manifests.iter().rev() {
+        let Ok(m) = read_manifest(path) else { continue };
+        for (r, want) in m.ranks.iter().enumerate() {
+            let ckpt = dir.join(checkpoint_name(r as u32, m.iteration));
+            let Ok((info, crc)) = verify_checkpoint(&ckpt) else { continue 'next_manifest };
+            let matches = info.rank == r as u32
+                && info.iteration == m.iteration
+                && info.agents == want.agents
+                && crc == want.crc;
+            if !matches {
+                continue 'next_manifest;
+            }
+        }
+        return Ok(Some(m));
+    }
+    Ok(None)
+}
+
+/// What an elastic restore hands back to one survivor.
+#[derive(Debug)]
+pub struct ReshardOutcome {
+    /// The agents this rank owns under the new partition, in a
+    /// deterministic order (old-rank-major checkpoint order) — identical
+    /// on every survivor that filters for the same rank.
+    pub agents: Vec<Agent>,
+    /// Total agents across all old ranks' checkpoints (accounting).
+    pub total_agents: u64,
+}
+
+/// Elastic restore: read **all** `old_ranks` checkpoint files at
+/// `iteration`, re-run RCB over the merged population for the surviving
+/// rank count, install the new ownership into `grid`, and return the
+/// agents `my_rank` owns under it.
+///
+/// Determinism across the rank-count change: the per-box weights are a
+/// pure function of the checkpointed agent positions, and
+/// [`rcb_partition`](crate::balance::rcb::rcb_partition) is
+/// deterministic, so every survivor — each running this independently,
+/// with no collective — computes the *same* ownership map and a
+/// partition of the *same* merged agent sequence. `new_ranks` is the
+/// surviving rank count; callers pass a grid sized for the world (its
+/// previous owners are irrelevant — ownership is recomputed from
+/// scratch, which is also what adopts the dead rank's orphaned boxes).
+pub fn restore_resharded(
+    dir: impl AsRef<Path>,
+    iteration: u64,
+    old_ranks: u32,
+    new_ranks: u32,
+    grid: &mut PartitionGrid,
+    my_rank: u32,
+) -> std::io::Result<ReshardOutcome> {
+    assert!(new_ranks >= 1 && my_rank < new_ranks);
+    let dir = dir.as_ref();
+    let mut all: Vec<Agent> = Vec::new();
+    for r in 0..old_ranks {
+        let (_info, agents) = read_checkpoint(dir.join(checkpoint_name(r, iteration)))?;
+        all.extend(agents);
+    }
+    let total_agents = all.len() as u64;
+    let mut weights = vec![0f64; grid.num_boxes()];
+    for a in &all {
+        weights[grid.box_of(a.position)] += 1.0;
+    }
+    grid.clear_weights();
+    for (i, w) in weights.iter().enumerate() {
+        if *w > 0.0 {
+            grid.set_weight(i, *w);
+        }
+    }
+    let owners: Vec<RankId> = crate::balance::rcb::rcb_partition(grid, new_ranks);
+    grid.set_owners(owners);
+    let agents: Vec<Agent> =
+        all.into_iter().filter(|a| grid.owner_of_pos(a.position) == my_rank).collect();
+    Ok(ReshardOutcome { agents, total_agents })
 }
 
 /// List checkpoint files for an iteration, ordered by rank.
@@ -149,10 +425,28 @@ pub fn find_checkpoints(dir: impl AsRef<Path>, iteration: u64) -> std::io::Resul
 /// (magic, version, CRC, payload parse, agent count). Invalid or torn
 /// files are skipped, not fatal — that is the point of keeping more than
 /// one. Returns `Ok(None)` when no valid checkpoint exists.
+///
+/// When manifests exist in `dir`, only a manifest-**agreed** iteration is
+/// eligible — the newest at which *every* rank's checkpoint validates
+/// ([`latest_agreed_iteration`]). This is the divergent-restore fix: if
+/// rank 0's newest file is torn, every rank rolls back together to the
+/// newest iteration all ranks still hold, instead of each rank silently
+/// picking its own newest-valid. The per-rank scan remains as the
+/// fallback for directories with no manifests (single-rank runs, old
+/// layouts).
 pub fn restore_latest_valid(
     dir: impl AsRef<Path>,
     rank: u32,
 ) -> std::io::Result<Option<(CheckpointInfo, Vec<Agent>)>> {
+    if let Some(m) = latest_agreed_iteration(&dir)? {
+        let path = dir.as_ref().join(checkpoint_name(rank, m.iteration));
+        return match read_checkpoint(&path) {
+            Ok(ok) => Ok(Some(ok)),
+            // This rank has no file at the agreed iteration (e.g. it
+            // joined after the manifest was written): nothing to restore.
+            Err(_) => Ok(None),
+        };
+    }
     let prefix = format!("rank_{rank:04}_iter_");
     let mut candidates: Vec<PathBuf> = std::fs::read_dir(dir)?
         .filter_map(|e| e.ok())
@@ -337,6 +631,169 @@ mod tests {
             restore_into(&mut merged, agents);
         }
         assert_eq!(merged.len(), 55);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Write checkpoints for `ranks` ranks at `iteration` plus the
+    /// matching manifest, populating each rank with `base + 10*r` agents.
+    fn checkpoint_round(dir: &Path, ranks: u32, iteration: u64, base: usize) {
+        let mut entries = Vec::new();
+        for r in 0..ranks {
+            let mut rm = ResourceManager::new(r);
+            populate(&mut rm, base + 10 * r as usize);
+            let path = write_checkpoint(dir, r, iteration, &mut rm).unwrap();
+            let (info, crc) = verify_checkpoint(&path).unwrap();
+            entries.push(ManifestEntry { agents: info.agents, crc });
+        }
+        write_manifest(dir, &Manifest { iteration, rank_count: ranks, ranks: entries })
+            .unwrap();
+    }
+
+    #[test]
+    fn manifest_round_trip_and_validation() {
+        let dir = tmpdir("manifest_rt");
+        let m = Manifest {
+            iteration: 42,
+            rank_count: 3,
+            ranks: vec![
+                ManifestEntry { agents: 10, crc: 0xDEAD_BEEF },
+                ManifestEntry { agents: 0, crc: 0 },
+                ManifestEntry { agents: u64::MAX, crc: 0xFFFF_FFFF },
+            ],
+        };
+        let path = write_manifest(&dir, &m).unwrap();
+        assert_eq!(read_manifest(&path).unwrap(), m);
+        // Any single-bit flip is rejected with InvalidData, never a panic.
+        let clean = std::fs::read(&path).unwrap();
+        for pos in 0..clean.len() {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x01;
+            std::fs::write(&path, &bad).unwrap();
+            let err = read_manifest(&path).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "flip at {pos}");
+        }
+        // Truncations too.
+        for len in 0..clean.len() {
+            std::fs::write(&path, &clean[..len]).unwrap();
+            let err = read_manifest(&path).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "truncated to {len}");
+        }
+        std::fs::write(&path, &clean).unwrap();
+        assert_eq!(read_manifest(&path).unwrap(), m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn agreement_walks_back_past_incomplete_rounds() {
+        let dir = tmpdir("agree");
+        assert!(latest_agreed_iteration(&dir).unwrap().is_none());
+        checkpoint_round(&dir, 2, 10, 8);
+        checkpoint_round(&dir, 2, 20, 12);
+        // Both rounds complete: newest wins.
+        let m = latest_agreed_iteration(&dir).unwrap().unwrap();
+        assert_eq!((m.iteration, m.rank_count), (20, 2));
+        assert_eq!(m.ranks[0].agents, 12);
+        assert_eq!(m.ranks[1].agents, 22);
+        // Corrupt rank 1's newest checkpoint: agreement falls back to 10
+        // even though rank 0's iteration-20 file is fine.
+        let victim = dir.join(checkpoint_name(1, 20));
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        let m = latest_agreed_iteration(&dir).unwrap().unwrap();
+        assert_eq!(m.iteration, 10);
+        // A manifest referencing a missing file (stale rank count: 3
+        // ranks claimed, 2 on disk) is skipped, not fatal.
+        write_manifest(
+            &dir,
+            &Manifest {
+                iteration: 30,
+                rank_count: 3,
+                ranks: vec![ManifestEntry { agents: 1, crc: 2 }; 3],
+            },
+        )
+        .unwrap();
+        assert_eq!(latest_agreed_iteration(&dir).unwrap().unwrap().iteration, 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn divergent_restore_regression_all_ranks_roll_back_together() {
+        // The PR 6 bug: rank 0's newest checkpoint corrupt, rank 1's
+        // fine — per-rank newest-valid would restore rank 0 at iteration
+        // 10 and rank 1 at iteration 20. With manifests, both roll back
+        // to 10 together.
+        let dir = tmpdir("divergent");
+        checkpoint_round(&dir, 2, 10, 8);
+        checkpoint_round(&dir, 2, 20, 12);
+        let victim = dir.join(checkpoint_name(0, 20));
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&victim, &bytes).unwrap();
+        let (i0, _) = restore_latest_valid(&dir, 0).unwrap().unwrap();
+        let (i1, _) = restore_latest_valid(&dir, 1).unwrap().unwrap();
+        assert_eq!(i0.iteration, 10, "rank 0 falls back past its torn file");
+        assert_eq!(
+            i1.iteration, 10,
+            "rank 1 must roll back WITH rank 0, not restore its own newest"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_resharded_covers_everything_exactly_once_and_is_deterministic() {
+        use crate::space::{Aabb, PartitionGrid};
+        let dir = tmpdir("reshard");
+        // 4 ranks checkpoint 200 agents total at iteration 6.
+        let mut entries = Vec::new();
+        let mut want_keys = Vec::new();
+        for r in 0..4u32 {
+            let mut rm = ResourceManager::new(r);
+            for i in 0..50usize {
+                let pos = Vec3::new(
+                    (r as f64) * 15.0 + (i % 7) as f64,
+                    (i % 11) as f64 * 5.0,
+                    (i % 5) as f64 * 9.0,
+                );
+                rm.add(Agent::cell(pos, 4.0, CellType::B));
+            }
+            let path = write_checkpoint(&dir, r, 6, &mut rm).unwrap();
+            want_keys.extend(rm.iter().map(|a| (a.global_id, a.position.x.to_bits())));
+            let (info, crc) = verify_checkpoint(&path).unwrap();
+            entries.push(ManifestEntry { agents: info.agents, crc });
+        }
+        write_manifest(&dir, &Manifest { iteration: 6, rank_count: 4, ranks: entries })
+            .unwrap();
+        let whole = Aabb::new(Vec3::ZERO, Vec3::splat(60.0));
+        // Every survivor computes the same ownership and together they
+        // partition the full population.
+        let mut got_keys = Vec::new();
+        let mut owner_maps: Vec<Vec<u32>> = Vec::new();
+        for me in 0..3u32 {
+            let mut grid = PartitionGrid::new(whole, 10.0);
+            let out = restore_resharded(&dir, 6, 4, 3, &mut grid, me).unwrap();
+            assert_eq!(out.total_agents, 200);
+            got_keys.extend(out.agents.iter().map(|a| (a.global_id, a.position.x.to_bits())));
+            owner_maps.push(grid.owners().to_vec());
+        }
+        assert_eq!(owner_maps[0], owner_maps[1]);
+        assert_eq!(owner_maps[1], owner_maps[2]);
+        assert!(owner_maps[0].iter().all(|&o| o < 3), "owners limited to survivors");
+        want_keys.sort_unstable();
+        got_keys.sort_unstable();
+        assert_eq!(want_keys, got_keys, "every agent owned exactly once");
+        // Running the same restore twice is bit-stable.
+        let mut grid = PartitionGrid::new(whole, 10.0);
+        let again = restore_resharded(&dir, 6, 4, 3, &mut grid, 1).unwrap();
+        let mut grid2 = PartitionGrid::new(whole, 10.0);
+        let again2 = restore_resharded(&dir, 6, 4, 3, &mut grid2, 1).unwrap();
+        let key = |a: &Agent| (a.global_id, a.position.x.to_bits(), a.position.y.to_bits());
+        assert_eq!(
+            again.agents.iter().map(key).collect::<Vec<_>>(),
+            again2.agents.iter().map(key).collect::<Vec<_>>()
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

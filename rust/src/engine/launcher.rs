@@ -9,6 +9,7 @@
 use super::model::Model;
 use super::sim::{MechBackend, RankOutcome, RankSim};
 use crate::comm::mpi::MpiWorld;
+use crate::comm::FaultPlan;
 use crate::config::SimConfig;
 use crate::metrics::SimReport;
 use crate::runtime::service::MechanicsService;
@@ -37,6 +38,19 @@ pub fn run_simulation<M: Model>(
     cfg: &SimConfig,
     factory: impl Fn(u32) -> M + Send + Sync,
 ) -> RunResult {
+    run_simulation_with_chaos(cfg, factory, |_| None)
+}
+
+/// [`run_simulation`] with a per-rank fault plan: `chaos(rank)` installs
+/// a deterministic fault injector on that rank's sends before the run
+/// starts. This is how the rank-death suite scripts a mid-run crash
+/// (`FaultPlan::with_kill_at_iteration`) inside an otherwise ordinary
+/// engine run; production paths pass no plans and are untouched.
+pub fn run_simulation_with_chaos<M: Model>(
+    cfg: &SimConfig,
+    factory: impl Fn(u32) -> M + Send + Sync,
+    chaos: impl Fn(u32) -> Option<FaultPlan> + Send + Sync,
+) -> RunResult {
     cfg.validate().expect("invalid SimConfig");
     let ranks = cfg.mode.ranks();
     let world = MpiWorld::new(ranks, cfg.network);
@@ -50,7 +64,10 @@ pub fn run_simulation<M: Model>(
     let outcomes: Vec<RankOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..ranks as u32)
             .map(|rank| {
-                let comm = world.communicator(rank);
+                let mut comm = world.communicator(rank);
+                if let Some(plan) = chaos(rank) {
+                    comm.install_chaos(plan);
+                }
                 let model = factory(rank);
                 let mech = match &service {
                     Some(svc) if svc.using_pjrt => MechBackend::Service(svc.handle()),

@@ -212,6 +212,14 @@ impl<M: Model> RankSim<M> {
         if sim.cfg.recv_timeout_ms > 0 {
             sim.comm.set_reliable(true);
         }
+        // Opt-in liveness plane: with a death timeout configured, a
+        // persistently silent peer escalates past the retry ladder to
+        // `RankDead` and the elastic reshard path (ARCHITECTURE.md
+        // "Elasticity").
+        if sim.cfg.death_timeout_ms > 0 {
+            sim.comm
+                .enable_liveness(std::time::Duration::from_millis(sim.cfg.death_timeout_ms));
+        }
         for a in agents {
             let id = sim.rm.add(a);
             let pos = sim.rm.get(id).unwrap().position;
@@ -227,15 +235,41 @@ impl<M: Model> RankSim<M> {
     /// Run the configured number of iterations.
     pub fn run(mut self) -> RankOutcome {
         for _ in 0..self.cfg.iterations {
+            // A scripted kill (chaos `kill_at_iteration`) silences this
+            // rank from iteration k on. Stop participating entirely —
+            // peers see exactly what a crashed rank looks like: its last
+            // message was iteration k-1, then nothing, on any tag — but
+            // return the outcome normally so the launcher can still join
+            // the thread.
+            if self
+                .comm
+                .chaos_plan()
+                .and_then(|p| p.kill_at_iteration)
+                .is_some_and(|k| self.iteration >= k)
+            {
+                break;
+            }
             self.iterate();
         }
+        // A killed rank's agents are gone with it — the survivors adopt
+        // its range from the checkpoint, so reporting its stale local
+        // population would double-count every adopted agent in the
+        // launcher's aggregate snapshot.
+        let killed = self
+            .comm
+            .chaos_plan()
+            .and_then(|p| p.kill_at_iteration)
+            .is_some_and(|k| self.iteration >= k);
         RankOutcome {
-            final_agents: self.rm.len() as u64,
-            final_snapshot: self
-                .rm
-                .iter()
-                .map(|a| (a.position, a.diameter, a.kind.class_id()))
-                .collect(),
+            final_agents: if killed { 0 } else { self.rm.len() as u64 },
+            final_snapshot: if killed {
+                Vec::new()
+            } else {
+                self.rm
+                    .iter()
+                    .map(|a| (a.position, a.diameter, a.kind.class_id()))
+                    .collect()
+            },
             metrics: self.take_metrics(),
             stats_history: std::mem::take(&mut self.stats_history),
             frames: std::mem::take(&mut self.frames),
@@ -296,6 +330,14 @@ impl<M: Model> RankSim<M> {
     // -------------------------------------------------------------------
 
     fn aura_update(&mut self) {
+        // Before anything that depends on the neighbor set: apply death
+        // notices from peers. A rank that never waits on the dead peer
+        // directly (not a neighbor of it) still learns of the death here
+        // and reshards exactly like the rank that detected it — the
+        // ownership map it computes is identical (a pure function of the
+        // agreed checkpoint), so the survivors converge on the same
+        // partition within an iteration of each other.
+        self.liveness_control_phase();
         let t = crate::util::timing::CpuTimer::start();
         self.nsg.clear_aura();
         // Last iteration's receive buffers go back to the pool — the
@@ -762,8 +804,65 @@ impl<M: Model> RankSim<M> {
         let dir = self.checkpoint_dir();
         if std::fs::create_dir_all(&dir).is_ok() {
             checkpoint::write_checkpoint(&dir, self.rank, self.iteration, &mut self.rm).ok();
+            self.write_due_manifests(&dir);
         }
         self.metrics.add_op(Op::Checkpoint, t.elapsed_secs());
+    }
+
+    /// Manifest any recent checkpoint round whose per-rank files are all
+    /// on disk and valid. Manifests lag checkpoints by up to one period:
+    /// a round is manifested only once every live rank's file verifies,
+    /// decided purely from the files themselves — no collective — so the
+    /// path keeps working while peers are slow or already dead. Any rank
+    /// may write: the manifest bytes are a pure function of the files,
+    /// so concurrent writers race to atomically rename identical
+    /// content.
+    fn write_due_manifests(&mut self, dir: &std::path::Path) {
+        let period = self.cfg.checkpoint_every as u64; // > 0 in this phase
+        // The manifest's per-rank table is dense, so the live set must
+        // form the rank prefix 0..n. That holds initially and is kept by
+        // elastic restore as long as deaths take the highest ranks; a
+        // mid-rank death stops manifesting (restore falls back to the
+        // newest pre-death manifest).
+        let size = self.comm.size() as u32;
+        let live: Vec<u32> = (0..size).filter(|&r| !self.comm.is_dead(r)).collect();
+        if live.iter().enumerate().any(|(i, &r)| r != i as u32) {
+            return;
+        }
+        let n = live.len() as u32;
+        let mut round = self.iteration - self.iteration % period;
+        for _ in 0..4 {
+            if round == 0 {
+                break;
+            }
+            if !dir.join(checkpoint::manifest_name(round)).exists()
+                // A file for rank n means this round predates a death and
+                // involved more ranks than are live now; manifesting it
+                // with today's narrower rank count would silently drop
+                // the extra ranks' agents on restore.
+                && !dir.join(checkpoint::checkpoint_name(n, round)).exists()
+            {
+                let mut ranks = Vec::with_capacity(n as usize);
+                for r in 0..n {
+                    match checkpoint::verify_checkpoint(
+                        dir.join(checkpoint::checkpoint_name(r, round)),
+                    ) {
+                        Ok((info, crc)) if info.rank == r && info.iteration == round => {
+                            ranks.push(checkpoint::ManifestEntry { agents: info.agents, crc });
+                        }
+                        _ => {
+                            ranks.clear();
+                            break;
+                        }
+                    }
+                }
+                if ranks.len() == n as usize {
+                    let m = checkpoint::Manifest { iteration: round, rank_count: n, ranks };
+                    checkpoint::write_manifest(dir, &m).ok();
+                }
+            }
+            round -= period;
+        }
     }
 
     /// The bounded receive gave up: purge the half-assembled messages,
@@ -776,6 +875,13 @@ impl<M: Model> RankSim<M> {
         let failed: Vec<u32> = match e {
             CommError::RetriesExhausted { pending, .. } => pending,
             CommError::Timeout { .. } => self.neighbors_cache.clone(),
+            CommError::RankDead { dead, .. } => {
+                // Silence escalated past the retry ladder: the peer is
+                // gone, not slow. Adopt its orphaned range instead of
+                // resyncing with it.
+                self.on_ranks_dead(&dead);
+                return crate::comm::batching::RecvAllStats::default();
+            }
         };
         for &src in &failed {
             self.metrics.count(Counter::FaultsDetected, 1);
@@ -817,6 +923,113 @@ impl<M: Model> RankSim<M> {
             self.metrics.count(Counter::CheckpointRestores, 1);
         }
         restored
+    }
+
+    /// Drain the liveness control plane (heartbeats, peer death notices)
+    /// and reshard if a notice named a rank not yet known dead. No-op
+    /// when liveness is off.
+    fn liveness_control_phase(&mut self) {
+        if !self.comm.liveness_enabled() {
+            return;
+        }
+        let mut newly_dead = Vec::new();
+        self.comm.drain_control_liveness(&mut newly_dead);
+        if !newly_dead.is_empty() {
+            self.on_ranks_dead(&newly_dead);
+        }
+    }
+
+    /// Peers were declared dead (local liveness escalation or another
+    /// rank's death notice): adopt their orphaned ranges. The ladder is
+    /// detect → agree (newest manifest whose checkpoints all verify) →
+    /// reshard (RCB over the merged checkpointed population across the
+    /// survivors) → resume. Falls back to the plain per-rank restore
+    /// when no manifest agreement exists, or when the survivor set is
+    /// one the dense manifest table cannot express (a mid-rank death);
+    /// either way the rank keeps running — rank death is a data-loss
+    /// boundary only in the degraded fallback.
+    fn on_ranks_dead(&mut self, dead: &[u32]) {
+        let t = crate::util::timing::CpuTimer::start();
+        self.metrics.count(Counter::RanksLost, dead.len() as u64);
+        // Tell everyone else before rebuilding: peers that never wait on
+        // the dead ranks directly must reshard too, or the survivors'
+        // neighbor sets stop agreeing.
+        self.comm.announce_dead(dead);
+        // The aborted exchange leaves half-assembled messages and broken
+        // delta chains behind; clear the transport state wholesale.
+        for src in 0..self.comm.size() as u32 {
+            self.reassembler.purge(src, tags::AURA);
+        }
+        for &d in dead {
+            self.codec.reset_rx((d, tags::AURA));
+        }
+        self.comm.cancel_pending(tags::AURA);
+        let dir = self.checkpoint_dir();
+        let size = self.comm.size() as u32;
+        let live: Vec<u32> = (0..size).filter(|&r| !self.comm.is_dead(r)).collect();
+        let prefix = !live.is_empty() && live.iter().enumerate().all(|(i, &r)| r == i as u32);
+        let agreed = checkpoint::latest_agreed_iteration(&dir).ok().flatten();
+        let resharded = match agreed {
+            Some(m) if prefix => self.reshard_restore(&dir, &m, live.len() as u32, dead),
+            _ => false,
+        };
+        if !resharded {
+            // Degraded rung: rewind locally like any other unrecoverable
+            // receive failure; the dead ranks' agents stay lost until an
+            // operator intervenes.
+            self.recover_from_checkpoint();
+            self.neighbors_dirty = true;
+        }
+        // The neighbor set changed: parked transport buffers sized for
+        // the old fan-in/fan-out may never be needed again.
+        self.view_pool.shrink_to_watermark();
+        self.comm.frame_pool().shrink_to_watermark();
+        self.metrics.add_op(Op::Reshard, t.elapsed_secs());
+    }
+
+    /// The elastic rung: re-run RCB over the merged population of the
+    /// agreed checkpoint across `new_ranks` survivors, rebuild this
+    /// rank's owned state from its share, and restart every stream.
+    fn reshard_restore(
+        &mut self,
+        dir: &std::path::Path,
+        m: &checkpoint::Manifest,
+        new_ranks: u32,
+        dead: &[u32],
+    ) -> bool {
+        let before: Vec<u32> = self.grid.owners().to_vec();
+        let out = match checkpoint::restore_resharded(
+            dir,
+            m.iteration,
+            m.rank_count,
+            new_ranks,
+            &mut self.grid,
+            self.rank,
+        ) {
+            Ok(out) => out,
+            Err(_) => return false,
+        };
+        let adopted = before
+            .iter()
+            .zip(self.grid.owners())
+            .filter(|(old, new)| dead.contains(old) && **new == self.rank)
+            .count() as u64;
+        self.metrics.count(Counter::OrphanedBoxesAdopted, adopted);
+        self.rm = ResourceManager::new(self.rank);
+        checkpoint::restore_into(&mut self.rm, out.agents);
+        self.nsg = NeighborSearchGrid::new(self.grid.whole(), self.model.interaction_radius());
+        self.ids_scratch.clear();
+        self.rm.collect_ids(&mut self.ids_scratch);
+        for &id in &self.ids_scratch {
+            self.nsg.add(NsgEntry::Owned(id), self.rm.col_position(id.index));
+        }
+        // Receivers hold delta references to the pre-reshard streams;
+        // every outgoing channel restarts with a full refresh, and the
+        // neighbor cache is rebuilt from the new ownership.
+        self.codec.force_full_all();
+        self.neighbors_dirty = true;
+        self.metrics.count(Counter::ReshardRestores, 1);
+        true
     }
 
     /// Fold the transport's cumulative fault/overhead counters into the
@@ -885,6 +1098,13 @@ impl<M: Model> RankSim<M> {
         if moved > 0 {
             self.comm.cancel_pending(tags::AURA);
             self.neighbors_dirty = true;
+            // The neighbor set is about to change: parked receive
+            // buffers and frames sized for the old fan-in/fan-out may
+            // never be needed again — trim both recycle pools to their
+            // recent high-water demand (ROADMAP "buffer-memory
+            // reclamation").
+            self.view_pool.shrink_to_watermark();
+            self.comm.frame_pool().shrink_to_watermark();
         }
         self.metrics.add_op(Op::Balancing, t.elapsed_secs());
         // Hand off agents whose boxes changed owner.

@@ -831,6 +831,13 @@ impl TaView {
 pub struct ViewPool {
     bufs: Vec<AlignedBuf>,
     offs: Vec<Vec<u32>>,
+    /// Fewest parked buffers observed since the last trim. Takes pop from
+    /// the end, so the bottom `buf_floor` entries were never leased in
+    /// the current epoch — exactly the storage
+    /// [`ViewPool::shrink_to_watermark`] may release.
+    buf_floor: usize,
+    /// Same watermark for the offset indices.
+    off_floor: usize,
 }
 
 impl ViewPool {
@@ -839,11 +846,15 @@ impl ViewPool {
     }
 
     pub fn take_buf(&mut self) -> AlignedBuf {
-        self.bufs.pop().unwrap_or_default()
+        let b = self.bufs.pop().unwrap_or_default();
+        self.buf_floor = self.buf_floor.min(self.bufs.len());
+        b
     }
 
     pub fn take_offsets(&mut self) -> Vec<u32> {
-        self.offs.pop().unwrap_or_default()
+        let o = self.offs.pop().unwrap_or_default();
+        self.off_floor = self.off_floor.min(self.offs.len());
+        o
     }
 
     pub fn put_buf(&mut self, mut buf: AlignedBuf) {
@@ -862,6 +873,29 @@ impl ViewPool {
     pub fn drain_into(&mut self, other: &mut ViewPool) {
         other.bufs.append(&mut self.bufs);
         other.offs.append(&mut self.offs);
+        // This pool is now empty (its floor resets); the receiver only
+        // gained storage, which cannot lower its observed minimum.
+        self.buf_floor = 0;
+        self.off_floor = 0;
+    }
+
+    /// Release the storage the recycle loop never touched since the last
+    /// trim and start a new observation epoch. The first call after a
+    /// demand drop releases nothing (it arms the watermark); the next
+    /// call releases whatever the lighter epoch left parked. Invoked
+    /// after neighbor-set changes (rebalance, reshard) when buffers
+    /// sized for the old fan-in may never be needed again. Returns the
+    /// number of buffers released.
+    pub fn shrink_to_watermark(&mut self) -> usize {
+        let nb = self.buf_floor.min(self.bufs.len());
+        let no = self.off_floor.min(self.offs.len());
+        // Pops lease from the end, so the bottom of each stack is the
+        // cold storage.
+        self.bufs.drain(..nb);
+        self.offs.drain(..no);
+        self.buf_floor = self.bufs.len();
+        self.off_floor = self.offs.len();
+        nb + no
     }
 
     /// Recycle a spent view's storage.
@@ -909,6 +943,32 @@ mod tests {
         assert_eq!(AGENT_BLOCK_BYTES % 8, 0);
         assert_eq!(BEHAVIOR_BLOCK_BYTES % 8, 0);
         assert_eq!(HEADER_BYTES % 8, 0);
+    }
+
+    #[test]
+    fn view_pool_trims_to_the_floor_of_recent_demand() {
+        let mut pool = ViewPool::new();
+        for _ in 0..4 {
+            pool.put_buf(AlignedBuf::with_capacity(64));
+            pool.put_offsets(Vec::with_capacity(8));
+        }
+        // First trim arms the watermark: nothing parked has been proven
+        // cold yet (the floor never dropped below its initial zero).
+        assert_eq!(pool.shrink_to_watermark(), 0);
+        // A lighter epoch: only one buffer circulates; three of the four
+        // stay parked the whole time.
+        for _ in 0..5 {
+            let b = pool.take_buf();
+            let o = pool.take_offsets();
+            pool.put_buf(b);
+            pool.put_offsets(o);
+        }
+        assert_eq!(pool.shrink_to_watermark(), 6, "3 cold bufs + 3 cold offset vecs");
+        // The surviving storage still circulates.
+        let b = pool.take_buf();
+        assert!(b.capacity() > 0, "survivor must be a recycled buffer, not a fresh one");
+        pool.put_buf(b);
+        assert_eq!(pool.shrink_to_watermark(), 1, "offs side kept one now-cold vec");
     }
 
     #[test]

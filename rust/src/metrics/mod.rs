@@ -50,10 +50,14 @@ pub enum Op {
     Checksum,
     /// Wall clock spent writing periodic recovery checkpoints.
     Checkpoint,
+    /// Wall clock of rank-death recovery: agreeing on a manifest
+    /// iteration, merging the dead rank's checkpoints and repartitioning
+    /// the world over the surviving rank count.
+    Reshard,
 }
 
 impl Op {
-    pub const ALL: [Op; 14] = [
+    pub const ALL: [Op; 15] = [
         Op::AuraUpdate,
         Op::AgentOps,
         Op::Migration,
@@ -68,6 +72,7 @@ impl Op {
         Op::Reassembly,
         Op::Checksum,
         Op::Checkpoint,
+        Op::Reshard,
     ];
 
     pub fn name(self) -> &'static str {
@@ -86,6 +91,7 @@ impl Op {
             Op::Reassembly => "reassembly",
             Op::Checksum => "checksum",
             Op::Checkpoint => "checkpoint",
+            Op::Reshard => "reshard",
         }
     }
 }
@@ -132,10 +138,18 @@ pub enum Counter {
     StreamResyncs,
     /// Checkpoint restores performed as last-resort recovery.
     CheckpointRestores,
+    /// Peers declared dead by the liveness plane. Zero on clean runs.
+    RanksLost,
+    /// Rank-count-elastic restores: the survivors merged the full
+    /// checkpointed population and repartitioned it among themselves.
+    ReshardRestores,
+    /// Partition boxes this rank adopted from dead ranks during a
+    /// resharded restore (orphaned-range repartitioning).
+    OrphanedBoxesAdopted,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 15] = [
+    pub const ALL: [Counter; 18] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
@@ -151,6 +165,9 @@ impl Counter {
         Counter::RetriesRequested,
         Counter::StreamResyncs,
         Counter::CheckpointRestores,
+        Counter::RanksLost,
+        Counter::ReshardRestores,
+        Counter::OrphanedBoxesAdopted,
     ];
 
     pub fn name(self) -> &'static str {
@@ -170,6 +187,9 @@ impl Counter {
             Counter::RetriesRequested => "retries_requested",
             Counter::StreamResyncs => "stream_resyncs",
             Counter::CheckpointRestores => "checkpoint_restores",
+            Counter::RanksLost => "ranks_lost",
+            Counter::ReshardRestores => "reshard_restores",
+            Counter::OrphanedBoxesAdopted => "orphaned_boxes_adopted",
         }
     }
 }

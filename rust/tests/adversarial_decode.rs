@@ -9,6 +9,8 @@
 
 use teraagent::core::agent::{Agent, CellType};
 use teraagent::core::ids::GlobalId;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::engine::checkpoint::{self, Manifest, ManifestEntry};
 use teraagent::io::codec::Codec;
 use teraagent::io::delta::{DeltaDecoder, DeltaEncoder, DeltaKind};
 use teraagent::io::ta_io::{self, TaView, ViewPool};
@@ -239,4 +241,112 @@ fn codec_decode_never_panics_and_stays_usable() {
     let (w_heal, _) = tx.encode((1, 7), ags.iter());
     let (d, _) = rx.decode((0, 7), &w_heal).expect("full refresh after abuse");
     assert_eq!(d.len(), ags.len());
+}
+
+/// The recovery artifacts get the same treatment as the wire: checkpoint
+/// and manifest files fed every truncation, every (checkpoint: sampled;
+/// manifest: every) single-bit flip, and pure noise must surface typed
+/// `io::Error`s — never a panic — because survivors of a rank death read
+/// whatever a crashed peer left on disk. Both formats carry a CRC over
+/// their entire contents, so *every* damaged variant must be rejected,
+/// and the agreement scan must skip a stale manifest (newer iteration,
+/// wrong rank count, no backing checkpoints) rather than restore from
+/// it.
+#[test]
+fn checkpoint_and_manifest_bytes_never_panic_and_agreement_skips_stale() {
+    let dir = std::env::temp_dir().join(format!("teraagent_adv_ckpt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A valid 3-rank round at iteration 6, with its manifest.
+    let mut entries = Vec::new();
+    for rank in 0..3u32 {
+        let mut rm = ResourceManager::new(rank);
+        for a in agents(16 + rank as usize, 0xAD_0009 + u64::from(rank)) {
+            rm.add(a);
+        }
+        let path = checkpoint::write_checkpoint(&dir, rank, 6, &mut rm).expect("write checkpoint");
+        let (info, crc) = checkpoint::verify_checkpoint(&path).expect("fresh checkpoint verifies");
+        entries.push(ManifestEntry { agents: info.agents, crc });
+    }
+    checkpoint::write_manifest(&dir, &Manifest { iteration: 6, rank_count: 3, ranks: entries })
+        .expect("write manifest");
+    let ckpt_path = dir.join(checkpoint::checkpoint_name(0, 6));
+    let mani_path = dir.join(checkpoint::manifest_name(6));
+    let ckpt_clean = std::fs::read(&ckpt_path).expect("read back checkpoint");
+    let mani_clean = std::fs::read(&mani_path).expect("read back manifest");
+
+    // Every truncation of both artifacts is a typed error.
+    let scratch_ckpt = dir.join("scratch.tacp");
+    let scratch_mani = dir.join("scratch.tamf");
+    for keep in 0..ckpt_clean.len() {
+        std::fs::write(&scratch_ckpt, &ckpt_clean[..keep]).expect("write scratch");
+        assert!(checkpoint::read_checkpoint(&scratch_ckpt).is_err(), "ckpt truncated at {keep}");
+        assert!(checkpoint::verify_checkpoint(&scratch_ckpt).is_err(), "ckpt truncated at {keep}");
+    }
+    for keep in 0..mani_clean.len() {
+        std::fs::write(&scratch_mani, &mani_clean[..keep]).expect("write scratch");
+        assert!(checkpoint::read_manifest(&scratch_mani).is_err(), "manifest truncated at {keep}");
+    }
+
+    // Single-bit flips: the whole checkpoint header plus sampled payload
+    // positions, and every bit of the manifest.
+    let mut rng = Rng::new(0xAD_000A);
+    let mut ckpt_positions: Vec<usize> = (0..32.min(ckpt_clean.len())).collect();
+    for _ in 0..32 {
+        ckpt_positions.push(rng.index(ckpt_clean.len()));
+    }
+    for pos in ckpt_positions {
+        for bit in 0..8 {
+            let mut bad = ckpt_clean.clone();
+            bad[pos] ^= 1 << bit;
+            std::fs::write(&scratch_ckpt, &bad).expect("write scratch");
+            assert!(checkpoint::read_checkpoint(&scratch_ckpt).is_err(), "ckpt flip {pos}:{bit}");
+            assert!(
+                checkpoint::verify_checkpoint(&scratch_ckpt).is_err(),
+                "ckpt flip {pos}:{bit}"
+            );
+        }
+    }
+    for pos in 0..mani_clean.len() {
+        for bit in 0..8 {
+            let mut bad = mani_clean.clone();
+            bad[pos] ^= 1 << bit;
+            std::fs::write(&scratch_mani, &bad).expect("write scratch");
+            assert!(checkpoint::read_manifest(&scratch_mani).is_err(), "manifest flip {pos}:{bit}");
+        }
+    }
+
+    // Pure noise at assorted sizes (including exactly header-sized).
+    for len in [0usize, 5, 24, 32, 100, 800] {
+        let noise = random_bytes(&mut rng, len);
+        std::fs::write(&scratch_ckpt, &noise).expect("write scratch");
+        std::fs::write(&scratch_mani, &noise).expect("write scratch");
+        let _ = checkpoint::read_checkpoint(&scratch_ckpt);
+        let _ = checkpoint::verify_checkpoint(&scratch_ckpt);
+        let _ = checkpoint::read_manifest(&scratch_mani);
+    }
+
+    // A stale manifest — newer iteration, pre-death rank count, no
+    // backing checkpoints — must be skipped by the agreement scan in
+    // favor of the older fully-valid round.
+    let stale = Manifest {
+        iteration: 8,
+        rank_count: 4,
+        ranks: vec![ManifestEntry { agents: 10, crc: 0xDEAD_BEEF }; 4],
+    };
+    checkpoint::write_manifest(&dir, &stale).expect("write stale manifest");
+    let agreed = checkpoint::latest_agreed_iteration(&dir)
+        .expect("agreement scan succeeds")
+        .expect("the valid round is still agreed");
+    assert_eq!(
+        (agreed.iteration, agreed.rank_count),
+        (6, 3),
+        "agreement must skip the stale manifest"
+    );
+
+    // The genuine artifacts still parse after all the abuse.
+    assert!(checkpoint::read_checkpoint(&ckpt_path).is_ok(), "clean checkpoint stays readable");
+    assert!(checkpoint::read_manifest(&mani_path).is_ok(), "clean manifest stays readable");
+
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,119 @@
+//! Property tests for the load balancers — the reshard path leans on
+//! both: `rcb_partition` re-partitions the merged population after a
+//! rank death (so it must behave at awkward, non-power-of-two survivor
+//! counts), and `diffusive_step` trims hot spots afterwards (so its
+//! transfers must provably flow downhill and stay bounded).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use teraagent::balance::diffusive::{apply_transfers, diffusive_step};
+use teraagent::balance::rcb::{imbalance, rcb_partition};
+use teraagent::space::{Aabb, PartitionGrid};
+use teraagent::util::{Rng, Vec3};
+
+/// RCB over random weight fields at rank counts a rank death actually
+/// produces (4→3, 8→7, 6→5, …): every box gets exactly one valid owner,
+/// every rank gets work, the imbalance stays within tolerance, and the
+/// assignment is a pure function of its inputs (the property elastic
+/// restore's "every survivor computes the same owners" rests on).
+#[test]
+fn rcb_balances_within_tolerance_at_non_power_of_two_rank_counts() {
+    let mut rng = Rng::new(0xBA1A_0001);
+    for nranks in [3u32, 5, 6, 7, 9, 11] {
+        for trial in 0..8 {
+            // 6×6×6 = 216 boxes, weights bounded away from zero.
+            let mut g = PartitionGrid::new(Aabb::new(Vec3::ZERO, Vec3::splat(60.0)), 10.0);
+            for i in 0..g.num_boxes() {
+                g.set_weight(i, rng.uniform_range(0.5, 4.0));
+            }
+            let owners = rcb_partition(&g, nranks);
+
+            // Exactly one owner per box, and only valid ranks.
+            assert_eq!(owners.len(), g.num_boxes(), "nranks={nranks} trial={trial}");
+            assert!(
+                owners.iter().all(|&o| o < nranks),
+                "nranks={nranks} trial={trial}: out-of-range owner"
+            );
+            // With far more boxes than ranks, no rank may be left empty.
+            for r in 0..nranks {
+                assert!(owners.contains(&r), "nranks={nranks} trial={trial}: rank {r} empty");
+            }
+
+            let f = imbalance(&g, &owners, nranks);
+            assert!(f <= 1.5, "nranks={nranks} trial={trial}: imbalance {f} above tolerance");
+
+            // Determinism: same grid, same rank count, same owners.
+            assert_eq!(
+                owners,
+                rcb_partition(&g, nranks),
+                "nranks={nranks} trial={trial}: rcb must be deterministic"
+            );
+        }
+    }
+}
+
+/// Diffusive transfers flow strictly downhill: only a rank running above
+/// its neighborhood average (by the threshold) sends, only to a neighbor
+/// running below that average, never more than `max_boxes_per_step`
+/// boxes per sender, never the same box twice — and applying the step
+/// leaves a valid partition behind.
+#[test]
+fn diffusive_step_moves_only_overloaded_to_underloaded_neighbors() {
+    let mut rng = Rng::new(0xBA1A_0002);
+    let threshold = 0.1;
+    for trial in 0..40 {
+        let nranks = 2 + rng.index(5) as u32;
+        let nx = 3 + rng.index(4);
+        let ny = 2 + rng.index(3);
+        let mut g = PartitionGrid::new(
+            Aabb::new(Vec3::ZERO, Vec3::new(nx as f64 * 10.0, ny as f64 * 10.0, 10.0)),
+            10.0,
+        );
+        for i in 0..g.num_boxes() {
+            g.set_owner(i, rng.index(nranks as usize) as u32);
+            g.set_weight(i, rng.uniform_range(0.1, 5.0));
+        }
+        let runtimes: Vec<f64> = (0..nranks).map(|_| rng.uniform_range(0.1, 4.0)).collect();
+        let cap = 1 + rng.index(3);
+
+        let transfers = diffusive_step(&g, &runtimes, threshold, cap);
+
+        let mut moved: BTreeSet<usize> = BTreeSet::new();
+        let mut per_sender: BTreeMap<u32, usize> = BTreeMap::new();
+        for t in &transfers {
+            assert!(moved.insert(t.box_index), "trial {trial}: box {} moved twice", t.box_index);
+            assert_eq!(
+                g.owner_of_box(t.box_index),
+                t.from,
+                "trial {trial}: sender does not own the box"
+            );
+            let neighbors = g.neighbor_ranks(t.from);
+            assert!(neighbors.contains(&t.to), "trial {trial}: receiver is not a neighbor");
+            let mut local = neighbors.clone();
+            local.push(t.from);
+            let avg =
+                local.iter().map(|&r| runtimes[r as usize]).sum::<f64>() / local.len() as f64;
+            assert!(
+                runtimes[t.from as usize] > avg * (1.0 + threshold),
+                "trial {trial}: rank {} sent while not overloaded",
+                t.from
+            );
+            assert!(
+                runtimes[t.to as usize] < avg,
+                "trial {trial}: rank {} received while not underloaded",
+                t.to
+            );
+            *per_sender.entry(t.from).or_insert(0) += 1;
+        }
+        for (&from, &n) in &per_sender {
+            assert!(n <= cap, "trial {trial}: rank {from} moved {n} boxes, cap {cap}");
+        }
+
+        // Applying the step leaves every box with exactly one valid owner.
+        let mut g2 = g.clone();
+        apply_transfers(&mut g2, &transfers);
+        for i in 0..g2.num_boxes() {
+            assert!(g2.owner_of_box(i) < nranks, "trial {trial}: invalid owner after apply");
+        }
+    }
+}

@@ -11,7 +11,7 @@
 //! races.
 
 use teraagent::comm::batching::{send_batched, Reassembler, WireSlot};
-use teraagent::comm::mpi::MpiWorld;
+use teraagent::comm::mpi::{Communicator, MpiWorld};
 use teraagent::comm::NetworkModel;
 use teraagent::io::ta_io::ViewPool;
 use teraagent::util::Rng;
@@ -204,4 +204,83 @@ fn concurrent_senders_leave_no_frame_behind() {
         "high-water mark cannot exceed total frames"
     );
     assert_eq!(re.pending(), 0);
+}
+
+/// Send `burst` single-chunk messages, then receive and immediately drop
+/// them all — `burst` frames concurrently outstanding at the peak.
+fn pump(
+    tx: &mut Communicator,
+    rx: &mut Communicator,
+    re: &mut Reassembler,
+    staging: &mut ViewPool,
+    msg_id: &mut u32,
+    burst: usize,
+) {
+    for _ in 0..burst {
+        send_batched(tx, 0, TAG, *msg_id, &[7u8; 64], 256);
+        *msg_id += 1;
+    }
+    for _ in 0..burst {
+        let (m, _) = rx.recv_any_timed(TAG);
+        if let Some((_, slot)) = re.feed_frame(m.src, m.tag, m.data, staging).expect("clean link")
+        {
+            slot.recycle_into(staging);
+        }
+    }
+}
+
+/// Watermark trim: after a heavy epoch the free list holds buffers sized
+/// for the old neighbor set; `shrink_to_watermark` must release exactly
+/// the buffers the *new* epoch's peak demand no longer justifies, keep
+/// the rest warm (no re-allocation), and re-arm the high-water mark so
+/// each epoch measures its own peak. This is the policy the engine
+/// invokes after a rebalance or a rank-death reshard shrinks the
+/// neighbor set.
+#[test]
+fn shrink_to_watermark_trims_the_free_list_to_epoch_demand() {
+    let world = MpiWorld::new(2, NetworkModel::ideal());
+    let mut tx = world.communicator(1);
+    let mut rx = world.communicator(0);
+    let mut re = Reassembler::new();
+    let mut staging = ViewPool::new();
+    let mut msg_id = 0u32;
+    let pool = world.frame_pool();
+
+    // Heavy epoch: 12 frames in flight at once.
+    pump(&mut tx, &mut rx, &mut re, &mut staging, &mut msg_id, 12);
+    let s = pool.stats();
+    assert_eq!(s.outstanding, 0);
+    assert_eq!(s.high_water, 12, "peak demand of the heavy epoch");
+    assert_eq!(s.free, 12);
+    let created_after_heavy = s.created;
+
+    // First trim covers the heavy epoch: demand justified every buffer,
+    // so nothing is released — but the watermark is re-armed.
+    assert_eq!(pool.shrink_to_watermark(), 0, "heavy epoch justified the whole free list");
+    assert_eq!(pool.stats().free, 12);
+    assert_eq!(pool.stats().high_water, 0, "watermark re-arms from current outstanding");
+
+    // Light epochs (the shrunken neighbor set): never more than 2 frames
+    // in flight.
+    for _ in 0..3 {
+        pump(&mut tx, &mut rx, &mut re, &mut staging, &mut msg_id, 2);
+    }
+    let s = pool.stats();
+    assert_eq!(s.high_water, 2, "the new epoch measured its own, smaller peak");
+    assert_eq!(s.created, created_after_heavy, "light epochs reuse parked buffers");
+
+    // Second trim: keep the 2 buffers the light epoch actually needed,
+    // release the 10 parked for the departed peers.
+    assert_eq!(pool.shrink_to_watermark(), 10, "trim releases exactly the excess");
+    assert_eq!(pool.stats().free, 2);
+
+    // The kept buffers still serve the light load without allocating.
+    pump(&mut tx, &mut rx, &mut re, &mut staging, &mut msg_id, 2);
+    let s = pool.stats();
+    assert_eq!(s.created, created_after_heavy, "kept buffers are warm — no new allocations");
+    assert_eq!(s.outstanding, 0);
+
+    // A trim at steady state is a no-op.
+    assert_eq!(pool.shrink_to_watermark(), 0, "steady state: nothing to release");
+    assert_eq!(pool.stats().free, 2);
 }

@@ -1,0 +1,201 @@
+//! Rank-death recovery suite (ISSUE 7 tentpole): a scripted chaos kill
+//! silences one of four ranks mid-run. The survivors must detect the
+//! death through the liveness plane (bounded silence on every tag, with
+//! heartbeats and mailbox probes suppressing false positives), agree on
+//! the newest checkpoint round every rank completed (via the on-disk
+//! manifests), reshard the dead rank's range over the surviving trio
+//! with `restore_resharded`, and resume — ending bit-identical to a
+//! fresh 3-rank elastic restore from an agreed checkpoint round.
+//!
+//! The model is deliberately stationary (no mechanics, empty step): the
+//! population never moves, so "the survivors' final world state" and
+//! "what an elastic restore hands each survivor" must be *exactly* the
+//! same position multiset, making the bit-identity assertion sharp.
+
+use teraagent::balance::rcb_partition;
+use teraagent::comm::FaultPlan;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::engine::init::InitCtx;
+use teraagent::engine::{checkpoint, run_simulation_with_chaos, Model, RunResult, World};
+use teraagent::io::{Compression, SerializerKind};
+use teraagent::metrics::Counter;
+use teraagent::space::{Aabb, PartitionGrid};
+
+const N_AGENTS: usize = 600;
+const RADIUS: f64 = 10.0;
+const HALF_EXTENT: f64 = 30.0;
+const KILL_AT: u64 = 7;
+const ITERATIONS: usize = 12;
+const RANKS: usize = 4;
+const SURVIVORS: u32 = 3;
+
+/// Agents that never move: no mechanics, no behaviors. With
+/// `space_half_extent = 30` and the default `partition_factor = 3`, the
+/// partition grid is 2×2×2 boxes, so all four ranks are mutual
+/// neighbors and every survivor observes the victim's silence directly.
+struct Still;
+
+impl Model for Still {
+    fn name(&self) -> &'static str {
+        "still"
+    }
+    fn interaction_radius(&self) -> f64 {
+        RADIUS
+    }
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let region = ctx.whole;
+        ctx.scatter_uniform(N_AGENTS, region, |p, _| Agent::cell(p, 8.0, CellType::A));
+    }
+    fn step(&mut self, _world: &mut World) {}
+}
+
+fn cfg(threads: usize, dir: &std::path::Path) -> SimConfig {
+    SimConfig {
+        name: "rank_death".into(),
+        num_agents: N_AGENTS,
+        iterations: ITERATIONS,
+        space_half_extent: HALF_EXTENT,
+        interaction_radius: RADIUS,
+        seed: 11,
+        mode: ParallelMode::MpiHybrid { ranks: RANKS, threads_per_rank: threads },
+        serializer: SerializerKind::TaIo,
+        compression: Compression::Lz4Delta { period: 4 },
+        checkpoint_every: 2,
+        recv_timeout_ms: 4000,
+        death_timeout_ms: 250,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    }
+}
+
+fn run_killed(threads: usize) -> (RunResult, std::path::PathBuf) {
+    let dir = std::env::temp_dir()
+        .join(format!("teraagent_rank_death_{}_t{threads}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = cfg(threads, &dir);
+    let result = run_simulation_with_chaos(
+        &cfg,
+        |_| Still,
+        |rank| {
+            (rank == SURVIVORS)
+                .then(|| FaultPlan::none(0xDEAD_0007).with_kill_at_iteration(KILL_AT))
+        },
+    );
+    (result, dir)
+}
+
+fn positions(result: &RunResult) -> Vec<[u64; 3]> {
+    let mut pos: Vec<[u64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    pos.sort();
+    pos
+}
+
+/// How many partition boxes the initial uniform-weight RCB gives the
+/// victim — every one of them must be adopted by exactly one survivor.
+fn victim_box_count(cfg: &SimConfig) -> usize {
+    let mut grid =
+        PartitionGrid::new(Aabb::cube(cfg.space_half_extent), RADIUS * cfg.partition_factor);
+    for i in 0..grid.num_boxes() {
+        grid.set_weight(i, 1.0);
+    }
+    let owners = rcb_partition(&grid, RANKS as u32);
+    owners.iter().filter(|&&o| o == SURVIVORS).count()
+}
+
+/// What a fresh 3-rank elastic restore from the agreed round hands each
+/// survivor, unioned and sorted. This is the oracle the recovered world
+/// state must match bit-for-bit.
+fn fresh_restore_union(
+    ckpt: &std::path::Path,
+    m: &checkpoint::Manifest,
+    cfg: &SimConfig,
+) -> Vec<[u64; 3]> {
+    let whole = Aabb::cube(cfg.space_half_extent);
+    let box_len = RADIUS * cfg.partition_factor;
+    let mut union: Vec<[u64; 3]> = Vec::new();
+    for rank in 0..SURVIVORS {
+        let mut grid = PartitionGrid::new(whole, box_len);
+        let out =
+            checkpoint::restore_resharded(ckpt, m.iteration, m.rank_count, SURVIVORS, &mut grid, rank)
+                .expect("fresh elastic restore from the agreed round");
+        assert_eq!(out.total_agents, N_AGENTS as u64, "restore accounts for every agent");
+        assert!(!out.agents.is_empty(), "every survivor owns part of the space");
+        union.extend(
+            out.agents
+                .iter()
+                .map(|a| [a.position.x.to_bits(), a.position.y.to_bits(), a.position.z.to_bits()]),
+        );
+    }
+    union.sort();
+    union
+}
+
+#[test]
+fn rank_death_is_detected_reshared_and_bit_identical_across_thread_counts() {
+    let mut runs: Vec<Vec<[u64; 3]>> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let (result, dir) = run_killed(threads);
+        let cfg = cfg(threads, &dir);
+        let ckpt = dir.join("checkpoints").join("rank_death");
+
+        // Each of the three survivors detected exactly one dead rank and
+        // recovered through the elastic reshard rung — never the local
+        // rewind fallback, and never by misreading the kill as a frame
+        // fault.
+        let t = |c| result.report.counter_total(c);
+        assert_eq!(t(Counter::RanksLost), 3, "t{threads}: one detection per survivor");
+        assert_eq!(t(Counter::ReshardRestores), 3, "t{threads}: one reshard per survivor");
+        assert_eq!(t(Counter::CheckpointRestores), 0, "t{threads}: fallback rung not taken");
+        assert_eq!(t(Counter::FaultsInjected), 0, "t{threads}: a kill is not a frame fault");
+
+        // Orphan accounting closes: every box the victim owned was
+        // adopted by exactly one survivor.
+        let orphaned = victim_box_count(&cfg);
+        assert!(orphaned > 0, "the victim must own part of the space");
+        assert_eq!(
+            t(Counter::OrphanedBoxesAdopted),
+            orphaned as u64,
+            "t{threads}: every orphaned box adopted exactly once"
+        );
+
+        // No agent went down with the rank: the survivors' aggregate
+        // (the victim reports an empty outcome) is the full population.
+        assert_eq!(result.final_agents, N_AGENTS as u64, "t{threads}");
+
+        // Manifest history tells the story: rounds agreed while all four
+        // ranks lived carry rank_count 4; the newest agreement was
+        // written by the surviving trio after the death.
+        let early = checkpoint::read_manifest(ckpt.join(checkpoint::manifest_name(4)))
+            .expect("pre-death round 4 was agreed by all four ranks");
+        assert_eq!((early.iteration, early.rank_count, early.ranks.len()), (4, 4, 4));
+        let m = checkpoint::latest_agreed_iteration(&ckpt)
+            .expect("manifest dir readable")
+            .expect("an agreed round exists");
+        assert_eq!(m.rank_count, SURVIVORS, "t{threads}: newest agreement is post-death");
+        assert!(m.iteration > KILL_AT, "t{threads}: survivors kept checkpointing");
+
+        // Bit-identity: the recovered world equals a fresh 3-rank
+        // elastic restore from an agreed round (stationary model, so the
+        // round does not matter — every round holds the same positions).
+        let expected = fresh_restore_union(&ckpt, &m, &cfg);
+        assert_eq!(expected.len(), N_AGENTS);
+        let got = positions(&result);
+        assert_eq!(
+            got, expected,
+            "t{threads}: survivors diverged from the fresh 3-rank restore"
+        );
+        runs.push(got);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    assert_eq!(runs[0], runs[1], "recovery must be identical with 1 vs 2 decode threads");
+    assert_eq!(runs[0], runs[2], "recovery must be identical with 1 vs 8 decode threads");
+}
