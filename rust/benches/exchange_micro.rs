@@ -792,6 +792,123 @@ fn alloc_assertion(w: &mut Workload) -> (u64, u64) {
 }
 
 // ---------------------------------------------------------------------------
+// Transport backends (ISSUE 8): the same two-rank exchange measured
+// through every `Transport` implementation — in-process mailboxes, the
+// Unix-domain-socket mesh, and the shared-memory slab. Same harness
+// shape as `tests/transport_conformance.rs`: what the conformance suite
+// proves correct, these rows price.
+// ---------------------------------------------------------------------------
+
+const BACKEND_ROUNDS: usize = 200;
+const BACKEND_MSG: usize = 64 << 10;
+const BACKEND_BULK_FRAMES: usize = 32;
+const BACKEND_BULK_FRAME: usize = 256 << 10;
+
+/// (ping-pong round-trip seconds, one-way bulk MB/s) for one backend.
+fn run_backend(kind: teraagent::comm::TransportKind) -> (f64, f64) {
+    use std::time::Instant;
+    use teraagent::comm::mpi::{tags, MpiWorld};
+    use teraagent::comm::{
+        Communicator, NetworkModel, ShmTransport, TransportKind, UdsTransport,
+    };
+
+    fn body(rank: u32, comm: &mut Communicator) -> (f64, f64) {
+        let msg = vec![0xA5u8; BACKEND_MSG];
+        let peer = 1 - rank;
+        // Warm-up: mesh dial, pool fill, socket buffers.
+        for _ in 0..3 {
+            if rank == 0 {
+                comm.isend(peer, tags::AURA, msg.clone());
+                comm.recv(Some(peer), Some(tags::AURA));
+            } else {
+                comm.recv(Some(peer), Some(tags::AURA));
+                comm.isend(peer, tags::AURA, msg.clone());
+            }
+        }
+        let t0 = Instant::now();
+        for _ in 0..BACKEND_ROUNDS {
+            if rank == 0 {
+                comm.isend(peer, tags::AURA, msg.clone());
+                comm.recv(Some(peer), Some(tags::AURA));
+            } else {
+                comm.recv(Some(peer), Some(tags::AURA));
+                comm.isend(peer, tags::AURA, msg.clone());
+            }
+        }
+        let rtt = t0.elapsed().as_secs_f64() / BACKEND_ROUNDS as f64;
+        comm.barrier();
+        // One-way bulk: rank 0 streams frames, rank 1 drains and acks.
+        let bulk = vec![0x5Au8; BACKEND_BULK_FRAME];
+        let t0 = Instant::now();
+        if rank == 0 {
+            for _ in 0..BACKEND_BULK_FRAMES {
+                comm.isend(peer, tags::MIGRATION, bulk.clone());
+            }
+            comm.recv(Some(peer), Some(tags::CONTROL));
+        } else {
+            for _ in 0..BACKEND_BULK_FRAMES {
+                comm.recv(Some(peer), Some(tags::MIGRATION));
+            }
+            comm.isend(peer, tags::CONTROL, vec![1]);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let mbps = (BACKEND_BULK_FRAMES * BACKEND_BULK_FRAME) as f64 / (1 << 20) as f64 / secs;
+        comm.barrier();
+        (rtt, mbps)
+    }
+
+    let dir = kind.multiprocess().then(|| {
+        let dir = std::env::temp_dir().join(format!(
+            "ta-bench-{}-{}-{:x}",
+            kind.name(),
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap_or_default()
+                .subsec_nanos()
+        ));
+        std::fs::create_dir_all(&dir).expect("bench scratch dir");
+        dir
+    });
+    let world =
+        (kind == TransportKind::InProcess).then(|| MpiWorld::new(2, NetworkModel::ideal()));
+    let result = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2u32)
+            .map(|rank| {
+                let world = world.clone();
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let mut comm = match kind {
+                        TransportKind::InProcess => world.unwrap().communicator(rank),
+                        TransportKind::Uds => {
+                            let t = UdsTransport::connect(dir.as_deref().unwrap(), rank, 2)
+                                .expect("uds rendezvous");
+                            Communicator::new(Box::new(t), NetworkModel::ideal())
+                        }
+                        TransportKind::Shm => {
+                            let t = ShmTransport::connect(dir.as_deref().unwrap(), rank, 2)
+                                .expect("shm rendezvous");
+                            Communicator::new(Box::new(t), NetworkModel::ideal())
+                        }
+                    };
+                    body(rank, &mut comm)
+                })
+            })
+            .collect();
+        let mut out = (0.0, 0.0);
+        for (rank, h) in handles.into_iter().enumerate() {
+            let r = h.join().expect("backend bench rank panicked");
+            if rank == 0 {
+                out = r;
+            }
+        }
+        out
+    });
+    if let Some(d) = dir {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    result
+}
 
 fn ratio(base: f64, new: f64) -> f64 {
     if new > 0.0 { base / new } else { f64::INFINITY }
@@ -820,6 +937,10 @@ fn main() {
     ) = run_transport(&mut w);
     let (ingest_collect, ingest_streamed) = run_streaming_ingest(&ingest_w);
     let (ckpt_write_s, manifest_scan_s, reshard_restore_s) = run_recovery(&mut w);
+    use teraagent::comm::TransportKind;
+    let backend_kinds =
+        [TransportKind::InProcess, TransportKind::Uds, TransportKind::Shm];
+    let backends: Vec<(f64, f64)> = backend_kinds.iter().map(|&k| run_backend(k)).collect();
 
     row_strs(&["op", "seed", "fast", "speedup"]);
     let pr = |op: &str, s: f64, f: f64| {
@@ -900,6 +1021,12 @@ fn main() {
     }
 
     println!();
+    row_strs(&["backend (2 ranks)", "64KiB rtt", "bulk MB/s", ""]);
+    for (kind, (rtt, mbps)) in backend_kinds.iter().zip(&backends) {
+        row(&[kind.name().into(), fmt_secs(*rtt), format!("{mbps:.0}"), "".into()]);
+    }
+
+    println!();
     row_strs(&["recovery 100k", "seconds", "", ""]);
     row(&["checkpoint write".into(), fmt_secs(ckpt_write_s), "".into(), "".into()]);
     row(&["manifest scan".into(), fmt_secs(manifest_scan_s), "".into(), "".into()]);
@@ -934,6 +1061,11 @@ fn main() {
     "framed_reliable_s": {:.6e}, "checksum_s_per_iter": {:.6e},
     "framed_steady_allocs_per_iteration": {},
     "framed_reassembly_bytes_copied": {transport_copied}
+  }},
+  "transport_backends": {{
+    "inprocess": {{ "pingpong_64k_rtt_s": {:.6e}, "oneway_bulk_mb_per_s": {:.1} }},
+    "uds": {{ "pingpong_64k_rtt_s": {:.6e}, "oneway_bulk_mb_per_s": {:.1} }},
+    "shm": {{ "pingpong_64k_rtt_s": {:.6e}, "oneway_bulk_mb_per_s": {:.1} }}
   }},
   "streaming_ingest": {{
     "collect_1t_s": {:.6e}, "collect_2t_s": {:.6e}, "collect_8t_s": {:.6e},
@@ -970,6 +1102,12 @@ fn main() {
         transport_reliable,
         transport_checksum,
         transport_allocs / TRANSPORT_ALLOC_ITERS,
+        backends[0].0,
+        backends[0].1,
+        backends[1].0,
+        backends[1].1,
+        backends[2].0,
+        backends[2].1,
         ingest_collect[0],
         ingest_collect[1],
         ingest_collect[2],

@@ -2,7 +2,7 @@
 //! parser). `teraagent run --sim epidemiology --ranks 4 ...` — see
 //! [`usage`] for the full surface.
 
-use crate::comm::NetworkModel;
+use crate::comm::{NetworkModel, TransportKind};
 use crate::config::{BalanceMethod, ParallelMode, SimConfig, VisConfig};
 use crate::io::{Compression, SerializerKind};
 use std::collections::BTreeMap;
@@ -49,6 +49,14 @@ FLAGS (run):
   --recv-timeout-ms <n>     bounded aura receive deadline (0 = block forever)
   --death-timeout-ms <n>    declare a peer dead after n ms of total silence
                             and reshard its range over the survivors (0 = off)
+  --transport <t>           inprocess | uds | shm — uds/shm spawn one real
+                            OS process per rank over the chosen wire
+  --stream-audit            keep a CRC digest of every data-plane send
+                            (cross-backend determinism witness)
+
+The hidden `_rank` command is the multiprocess child entry point; the
+launcher invokes it with --rendezvous/--rank/--size/--config-file plus
+optional --chaos-* fault-injection flags. Not part of the public surface.
 "
     .to_string()
 }
@@ -63,7 +71,7 @@ pub fn parse(args: &[String]) -> Result<Cli, String> {
             return Err(format!("unexpected argument {arg:?}"));
         };
         // Boolean flags.
-        if matches!(name, "pjrt" | "export-frames" | "single-precision") {
+        if matches!(name, "pjrt" | "export-frames" | "single-precision" | "stream-audit") {
             flags.insert(name.to_string(), "true".to_string());
             continue;
         }
@@ -156,6 +164,12 @@ pub fn config_from_flags(flags: &BTreeMap<String, String>) -> Result<SimConfig, 
     if flags.contains_key("single-precision") {
         cfg.single_precision = true;
     }
+    if let Some(v) = flags.get("transport") {
+        cfg.transport = TransportKind::parse(v).ok_or(format!("--transport: {v:?}"))?;
+    }
+    if flags.contains_key("stream-audit") {
+        cfg.stream_audit = true;
+    }
     if let Some(v) = geti("vis-every")? {
         let mut vc = cfg.vis.unwrap_or_default();
         vc.every = v.max(1);
@@ -225,6 +239,19 @@ mod tests {
         assert!(config_from_flags(&cli.flags).is_err());
         let cli = parse(&argv("run --compression weird")).unwrap();
         assert!(config_from_flags(&cli.flags).is_err());
+        let cli = parse(&argv("run --transport weird")).unwrap();
+        assert!(config_from_flags(&cli.flags).is_err());
+    }
+
+    #[test]
+    fn transport_and_audit_flags() {
+        let cli = parse(&argv("run --transport uds --stream-audit")).unwrap();
+        let cfg = config_from_flags(&cli.flags).unwrap();
+        assert_eq!(cfg.transport, TransportKind::Uds);
+        assert!(cfg.stream_audit);
+        let cfg = config_from_flags(&parse(&argv("run")).unwrap().flags).unwrap();
+        assert_eq!(cfg.transport, TransportKind::InProcess);
+        assert!(!cfg.stream_audit);
     }
 
     #[test]

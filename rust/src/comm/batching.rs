@@ -1061,9 +1061,13 @@ mod tests {
     }
 
     #[test]
-    fn streaming_receive_completes_in_arrival_order() {
-        // Sources 2 and 3 send before 1; the streaming consumer must see
-        // their completions first even though slot order is source order.
+    fn streaming_receive_completes_as_wires_arrive_not_in_slot_order() {
+        // All three wires are queued before the receiver starts; the
+        // streaming consumer must see one completion per take, served in
+        // the mailbox's fair rotation across sources (cursor order), not
+        // gated on slot 0 finishing first. A flooding source can
+        // therefore never starve the others' completions — the recv_any
+        // fairness contract.
         let world = MpiWorld::new(4, NetworkModel::ideal());
         let mut rx = world.communicator(0);
         for &s in &[3u32, 2, 1] {
@@ -1077,7 +1081,9 @@ mod tests {
             assert_eq!(slot.as_wire()[0] as usize, k + 1, "slot index must map to source");
             seen.push(k);
         });
-        assert_eq!(seen, vec![2, 1, 0], "completions must stream in arrival order");
+        // Rotation starts below the receiver's own rank and rises: the
+        // single-frame wires complete in source order 1, 2, 3.
+        assert_eq!(seen, vec![0, 1, 2], "completions must stream in rotation order");
     }
 
     #[test]

@@ -37,14 +37,32 @@
 //! duplicate, reorder, truncate, bit-flip) at the send seam, and the
 //! reliable receive path recovers via NACK-driven retransmission from
 //! refcounted frame archives — see `ARCHITECTURE.md` §"Fault tolerance".
+//!
+//! # Transport backends
+//!
+//! Everything above runs against the pluggable [`transport::Transport`]
+//! seam. Three backends ship: the in-process thread-per-rank mailboxes
+//! ([`mpi::InProcTransport`]), real OS processes over Unix-domain
+//! sockets ([`uds::UdsTransport`]), and real OS processes over a
+//! shared-memory slab + UDS control stream ([`shm::ShmTransport`]). The
+//! protocol layers (chaos, retries, liveness, collectives) are
+//! backend-independent; `rust/tests/transport_conformance.rs` asserts
+//! the shared contract over all three. See `ARCHITECTURE.md`
+//! §"Transport backends".
 
 pub mod batching;
 pub mod chaos;
 pub mod mpi;
 pub mod network;
+pub mod shm;
+pub mod transport;
+pub mod uds;
 
 pub use chaos::{ChaosStats, FaultPlan};
 pub use mpi::{
     CommError, Communicator, Frame, FrameBuf, FramePool, FramePoolStats, MpiWorld, RecvMsg, Tag,
 };
 pub use network::NetworkModel;
+pub use shm::ShmTransport;
+pub use transport::{MailboxCore, Transport, TransportKind, TransportStats};
+pub use uds::UdsTransport;

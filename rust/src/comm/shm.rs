@@ -1,0 +1,613 @@
+//! Shared-memory slab transport: one OS process per rank; payload bytes
+//! travel through per-rank slab files on tmpfs, only tiny descriptors
+//! cross the control sockets.
+//!
+//! # Layout and lifecycle
+//!
+//! Every rank owns one slab file (`dir/slab{r}`: [`SLOT_BYTES`] ×
+//! [`SLOT_COUNT`], sparse) and a first-fit slot allocator over it. The
+//! `FramePool` seal-to-publish discipline maps onto the slab as:
+//!
+//! 1. **publish** — the sender copies the sealed frame's bytes into a
+//!    free extent of its *own* slab (`write_all_at`; the modeled DMA
+//!    write) and queues a [`DESC`] record `(tag, offset, len)` on the
+//!    control stream to the destination. The pooled frame drops
+//!    immediately — the slab extent *is* the in-flight buffer now.
+//! 2. **receive** — the destination's reader thread sees the `DESC`,
+//!    reads `len` bytes at `offset` from the *sender's* slab
+//!    (`read_exact_at`) into a pool-leased buffer, pushes it into the
+//!    mailbox, and queues a [`RELEASE`] record back.
+//! 3. **recycle** — the sender's reader thread frees the extent when the
+//!    `RELEASE` arrives (counted in [`TransportStats::slab_releases`]).
+//!
+//! **Documented deviation from the shared-header-refcount design:** with
+//! no `libc`/`mmap` in this environment the slab cannot hold atomic
+//! refcounts that both processes touch; ownership is explicit instead —
+//! an extent belongs to the sender until the receiver's `RELEASE` record
+//! hands it back. Same invariant (an extent is never reused while the
+//! receiver may still read it), different mechanism, and the ordering
+//! guarantee is free: the slab write completes before the `DESC` is
+//! queued, and the control stream is FIFO.
+//!
+//! When the slab has no free extent (all slots in flight), the payload
+//! falls back to traveling **inline** over the control stream like the
+//! UDS backend (counted in [`TransportStats::inline_fallbacks`], never
+//! an error) — backpressure degrades throughput, not correctness.
+//!
+//! The control mesh, nonblocking writes, bounded completion window and
+//! reader threads are shared with the UDS backend
+//! ([`connect_mesh`](super::uds)); everything above the
+//! [`Transport`] seam (CRC/seq framing, chaos, retries, liveness,
+//! collectives) is identical across backends by construction.
+
+use super::mpi::{Frame, FramePool, Tag};
+use super::transport::{MailboxCore, Transport, TransportKind, TransportStats};
+use super::uds::connect_mesh;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Slab slot granularity. One extent = 1+ contiguous slots.
+pub const SLOT_BYTES: usize = 16 << 10;
+/// Slots per rank slab (total slab: 16 MiB, sparse until touched).
+pub const SLOT_COUNT: usize = 1024;
+
+/// Control-record kinds.
+const DESC: u8 = 0;
+const INLINE: u8 = 1;
+const RELEASE: u8 = 2;
+
+/// Completion-window caps (control records are tiny except inline
+/// fallbacks, so the byte cap is what matters under fallback pressure).
+const WINDOW_RECORDS: usize = 256;
+const WINDOW_BYTES: usize = 8 << 20;
+const STALL_DEADLINE: Duration = Duration::from_secs(1);
+const STALL_SLEEP: Duration = Duration::from_micros(50);
+/// Send-side retries (pump + microsleep) for a free extent before the
+/// inline fallback kicks in.
+const ALLOC_RETRIES: usize = 20;
+/// Reader-side sanity cap on one payload length.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Slab path of `rank` under the rendezvous directory.
+pub fn slab_path(dir: &Path, rank: u32) -> PathBuf {
+    dir.join(format!("slab{rank}"))
+}
+
+/// First-fit extent allocator over the slab's slot bitmap, with a rover
+/// so steady-state allocation doesn't rescan freed prefixes every time.
+struct SlabAlloc {
+    used: Vec<bool>,
+    rover: usize,
+}
+
+impl SlabAlloc {
+    fn new() -> SlabAlloc {
+        SlabAlloc { used: vec![false; SLOT_COUNT], rover: 0 }
+    }
+
+    /// Allocate `nslots` contiguous slots; returns the first slot index.
+    fn alloc(&mut self, nslots: usize) -> Option<usize> {
+        if nslots == 0 || nslots > SLOT_COUNT {
+            return None;
+        }
+        let n = self.used.len();
+        let mut start = self.rover % n;
+        for _ in 0..n {
+            // A run reaching past the end can't be contiguous; skip ahead.
+            if start + nslots > n {
+                start = 0;
+            }
+            let mut run = 0;
+            while run < nslots && !self.used[start + run] {
+                run += 1;
+            }
+            if run == nslots {
+                for s in &mut self.used[start..start + nslots] {
+                    *s = true;
+                }
+                self.rover = (start + nslots) % n;
+                return Some(start);
+            }
+            start = (start + run + 1) % n;
+        }
+        None
+    }
+
+    fn free(&mut self, first: usize, nslots: usize) {
+        for slot in first..(first + nslots).min(self.used.len()) {
+            self.used[slot] = false;
+        }
+    }
+}
+
+fn slots_for(len: usize) -> usize {
+    len.div_ceil(SLOT_BYTES).max(1)
+}
+
+/// One control record mid-write.
+struct PendingRec {
+    data: Vec<u8>,
+    sent: usize,
+}
+
+struct Peer {
+    stream: UnixStream,
+    queue: VecDeque<PendingRec>,
+    queued_bytes: usize,
+    closed: bool,
+    /// Releases owed to this peer for extents of *its* slab we consumed,
+    /// queued by our reader thread and drained into `queue` on pump.
+    releases: Arc<Mutex<Vec<(u64, u32)>>>,
+}
+
+/// The shared-memory slab backend. See the module docs for the protocol.
+pub struct ShmTransport {
+    rank: u32,
+    size: usize,
+    pool: FramePool,
+    mailbox: Arc<MailboxCore>,
+    peers: Vec<Option<Peer>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    /// Our slab file (writable) and its allocator. The allocator is
+    /// shared with our reader threads: they free extents when RELEASE
+    /// records arrive.
+    own_slab: File,
+    own_alloc: Arc<Mutex<SlabAlloc>>,
+    slab_releases: Arc<AtomicU64>,
+    own_slab_path: PathBuf,
+    stats: TransportStats,
+    shut: bool,
+}
+
+impl ShmTransport {
+    /// Create `rank`'s slab, join the control mesh and spawn readers.
+    /// Every rank creates its slab *before* touching the mesh, so by the
+    /// time any stream is up every peer's slab exists — readers open
+    /// them without retries.
+    pub fn connect(dir: &Path, rank: u32, size: usize) -> std::io::Result<ShmTransport> {
+        assert!((rank as usize) < size);
+        let own_slab_path = slab_path(dir, rank);
+        let own_slab =
+            OpenOptions::new().read(true).write(true).create(true).open(&own_slab_path)?;
+        own_slab.set_len((SLOT_BYTES * SLOT_COUNT) as u64)?;
+
+        let pool = FramePool::new();
+        let mailbox = Arc::new(MailboxCore::new(size));
+        let own_alloc = Arc::new(Mutex::new(SlabAlloc::new()));
+        let slab_releases = Arc::new(AtomicU64::new(0));
+        let streams = connect_mesh(dir, rank, size)?;
+
+        let mut peers: Vec<Option<Peer>> = (0..size).map(|_| None).collect();
+        let mut readers = Vec::with_capacity(size.saturating_sub(1));
+        for (src, slot) in streams.into_iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            // The peer created its slab before joining the mesh; if the
+            // file is briefly missing we retry (a crashed peer surfaces
+            // through the stream error path instead).
+            let peer_slab = open_retry(&slab_path(dir, src as u32))?;
+            let releases = Arc::new(Mutex::new(Vec::new()));
+            let read_half = stream.try_clone()?;
+            readers.push(spawn_reader(ReaderCtx {
+                src: src as u32,
+                stream: read_half,
+                peer_slab,
+                pool: pool.clone(),
+                mailbox: Arc::clone(&mailbox),
+                own_alloc: Arc::clone(&own_alloc),
+                releases: Arc::clone(&releases),
+                slab_releases: Arc::clone(&slab_releases),
+            }));
+            stream.set_nonblocking(true)?;
+            peers[src] = Some(Peer {
+                stream,
+                queue: VecDeque::new(),
+                queued_bytes: 0,
+                closed: false,
+                releases,
+            });
+        }
+
+        Ok(ShmTransport {
+            rank,
+            size,
+            pool,
+            mailbox,
+            peers,
+            readers,
+            own_slab,
+            own_alloc,
+            slab_releases,
+            own_slab_path,
+            stats: TransportStats::default(),
+            shut: false,
+        })
+    }
+
+    fn enqueue(peer: &mut Peer, data: Vec<u8>) {
+        peer.queued_bytes += data.len();
+        peer.queue.push_back(PendingRec { data, sent: 0 });
+    }
+
+    /// Move reader-queued RELEASE records into the peer's write queue.
+    /// Runs on every pump so receivers return extents even when this
+    /// rank has nothing of its own to send.
+    fn drain_releases(peer: &mut Peer) {
+        let pending: Vec<(u64, u32)> =
+            std::mem::take(&mut *peer.releases.lock().expect("poisoned release queue"));
+        for (off, len) in pending {
+            let mut rec = Vec::with_capacity(13);
+            rec.push(RELEASE);
+            rec.extend_from_slice(&off.to_le_bytes());
+            rec.extend_from_slice(&len.to_le_bytes());
+            Self::enqueue(peer, rec);
+        }
+    }
+
+    fn flush_peer(peer: &mut Peer, stats: &mut TransportStats) -> usize {
+        if peer.closed {
+            return 0;
+        }
+        let mut completed = 0;
+        while let Some(p) = peer.queue.front_mut() {
+            while p.sent < p.data.len() {
+                match peer.stream.write(&p.data[p.sent..]) {
+                    Ok(0) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                    Ok(n) => p.sent += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return completed,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                }
+            }
+            let done = peer.queue.pop_front().expect("front_mut() just yielded this entry");
+            peer.queued_bytes -= done.data.len();
+            completed += 1;
+        }
+        completed
+    }
+
+    fn close_peer(peer: &mut Peer, stats: &mut TransportStats) {
+        peer.closed = true;
+        stats.frames_dropped_peer_closed += peer.queue.len() as u64;
+        peer.queued_bytes = 0;
+        peer.queue.clear();
+    }
+
+    fn window_full(&self) -> bool {
+        let (mut recs, mut bytes) = (0usize, 0usize);
+        for p in self.peers.iter().flatten() {
+            recs += p.queue.len();
+            bytes += p.queued_bytes;
+        }
+        recs > WINDOW_RECORDS || bytes > WINDOW_BYTES
+    }
+
+    /// Reserve an extent and write `payload` into our slab. `None` when
+    /// the slab is exhausted or the write failed (callers fall back
+    /// inline).
+    fn stage_in_slab(&mut self, payload: &[u8]) -> Option<(u64, u32)> {
+        let nslots = slots_for(payload.len());
+        let mut retries = 0;
+        let first = loop {
+            let got = self.own_alloc.lock().expect("poisoned slab allocator").alloc(nslots);
+            match got {
+                Some(f) => break f,
+                None => {
+                    // Extents free up when RELEASE records arrive on our
+                    // reader threads; give them a moment before giving up.
+                    retries += 1;
+                    if retries > ALLOC_RETRIES {
+                        return None;
+                    }
+                    self.stats.send_stalls += 1;
+                    std::thread::sleep(STALL_SLEEP);
+                }
+            }
+        };
+        let off = (first * SLOT_BYTES) as u64;
+        if self.own_slab.write_all_at(payload, off).is_err() {
+            self.own_alloc.lock().expect("poisoned slab allocator").free(first, nslots);
+            return None;
+        }
+        Some((off, payload.len() as u32))
+    }
+}
+
+fn open_retry(path: &Path) -> std::io::Result<File> {
+    let start = Instant::now();
+    loop {
+        match File::open(path) {
+            Ok(f) => return Ok(f),
+            Err(e) => {
+                if start.elapsed() > Duration::from_secs(30) {
+                    return Err(e);
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+struct ReaderCtx {
+    src: u32,
+    stream: UnixStream,
+    peer_slab: File,
+    pool: FramePool,
+    mailbox: Arc<MailboxCore>,
+    own_alloc: Arc<Mutex<SlabAlloc>>,
+    releases: Arc<Mutex<Vec<(u64, u32)>>>,
+    slab_releases: Arc<AtomicU64>,
+}
+
+fn spawn_reader(mut ctx: ReaderCtx) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("shm-rx-{}", ctx.src))
+        .spawn(move || {
+            let mut kind = [0u8; 1];
+            loop {
+                if ctx.stream.read_exact(&mut kind).is_err() {
+                    return;
+                }
+                match kind[0] {
+                    DESC => {
+                        let mut hdr = [0u8; 16]; // tag u32 | off u64 | len u32
+                        if ctx.stream.read_exact(&mut hdr).is_err() {
+                            return;
+                        }
+                        let tag = u32::from_le_bytes(hdr[..4].try_into().expect("4 bytes"));
+                        let off = u64::from_le_bytes(hdr[4..12].try_into().expect("8 bytes"));
+                        let len =
+                            u32::from_le_bytes(hdr[12..].try_into().expect("4 bytes")) as usize;
+                        if len > MAX_FRAME_BYTES {
+                            return;
+                        }
+                        let mut buf = ctx.pool.take_vec();
+                        buf.resize(len, 0);
+                        if ctx.peer_slab.read_exact_at(&mut buf, off).is_err() {
+                            ctx.pool.recycle_vec(buf);
+                            return;
+                        }
+                        ctx.mailbox.push(ctx.src, tag, ctx.pool.seal(buf));
+                        // Hand the extent back; the next pump ships it.
+                        ctx.releases
+                            .lock()
+                            .expect("poisoned release queue")
+                            .push((off, len as u32));
+                    }
+                    INLINE => {
+                        let mut hdr = [0u8; 8]; // tag u32 | len u32
+                        if ctx.stream.read_exact(&mut hdr).is_err() {
+                            return;
+                        }
+                        let tag = u32::from_le_bytes(hdr[..4].try_into().expect("4 bytes"));
+                        let len =
+                            u32::from_le_bytes(hdr[4..].try_into().expect("4 bytes")) as usize;
+                        if len > MAX_FRAME_BYTES {
+                            return;
+                        }
+                        let mut buf = ctx.pool.take_vec();
+                        buf.resize(len, 0);
+                        if ctx.stream.read_exact(&mut buf).is_err() {
+                            ctx.pool.recycle_vec(buf);
+                            return;
+                        }
+                        ctx.mailbox.push(ctx.src, tag, ctx.pool.seal(buf));
+                    }
+                    RELEASE => {
+                        let mut hdr = [0u8; 12]; // off u64 | len u32
+                        if ctx.stream.read_exact(&mut hdr).is_err() {
+                            return;
+                        }
+                        let off = u64::from_le_bytes(hdr[..8].try_into().expect("8 bytes"));
+                        let len =
+                            u32::from_le_bytes(hdr[8..].try_into().expect("4 bytes")) as usize;
+                        let first = (off as usize) / SLOT_BYTES;
+                        ctx.own_alloc
+                            .lock()
+                            .expect("poisoned slab allocator")
+                            .free(first, slots_for(len));
+                        ctx.slab_releases.fetch_add(1, Ordering::Relaxed);
+                    }
+                    _ => return, // Corrupt control stream: abandon it.
+                }
+            }
+        })
+        .expect("spawning a reader thread")
+}
+
+impl Transport for ShmTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Shm
+    }
+
+    fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn frame_pool(&self) -> &FramePool {
+        &self.pool
+    }
+
+    fn mailbox(&self) -> &Arc<MailboxCore> {
+        &self.mailbox
+    }
+
+    fn send(&mut self, dst: u32, tag: Tag, frame: Frame) {
+        assert!((dst as usize) < self.size);
+        if dst == self.rank {
+            self.mailbox.push(self.rank, tag, frame);
+            return;
+        }
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += frame.len() as u64;
+        let peer_open =
+            self.peers[dst as usize].as_ref().is_some_and(|p| !p.closed);
+        if !peer_open {
+            self.stats.frames_dropped_peer_closed += 1;
+            return;
+        }
+        // Slab path first; inline only when no extent frees up in time.
+        let staged =
+            if frame.is_empty() { None } else { self.stage_in_slab(frame.as_slice()) };
+        let rec = match staged {
+            Some((off, len)) => {
+                let mut rec = Vec::with_capacity(17);
+                rec.push(DESC);
+                rec.extend_from_slice(&tag.to_le_bytes());
+                rec.extend_from_slice(&off.to_le_bytes());
+                rec.extend_from_slice(&len.to_le_bytes());
+                rec
+            }
+            None => {
+                if !frame.is_empty() {
+                    self.stats.inline_fallbacks += 1;
+                }
+                let mut rec = Vec::with_capacity(9 + frame.len());
+                rec.push(INLINE);
+                rec.extend_from_slice(&tag.to_le_bytes());
+                rec.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+                rec.extend_from_slice(frame.as_slice());
+                rec
+            }
+        };
+        // The payload is in the slab (or copied into the record): the
+        // pooled frame recycles as soon as `frame` drops at return.
+        {
+            let peer = self.peers[dst as usize].as_mut().expect("presence checked above");
+            Self::drain_releases(peer);
+            Self::enqueue(peer, rec);
+            Self::flush_peer(peer, &mut self.stats);
+        }
+        if self.window_full() {
+            let start = Instant::now();
+            while self.window_full() && start.elapsed() < STALL_DEADLINE {
+                self.stats.send_stalls += 1;
+                std::thread::sleep(STALL_SLEEP);
+                self.pump();
+            }
+        }
+    }
+
+    fn pump(&mut self) -> usize {
+        let mut completed = 0;
+        for peer in self.peers.iter_mut().flatten() {
+            // Always drain releases, even with an empty send queue: the
+            // peer's slab starves otherwise.
+            Self::drain_releases(peer);
+            completed += Self::flush_peer(peer, &mut self.stats);
+        }
+        completed
+    }
+
+    fn inflight(&self) -> usize {
+        self.peers.iter().flatten().map(|p| p.queue.len()).sum()
+    }
+
+    fn poll_interval(&self) -> Option<Duration> {
+        if self.inflight() > 0 {
+            Some(Duration::from_millis(1))
+        } else {
+            Some(Duration::from_millis(5))
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        let mut s = self.stats;
+        s.slab_releases = self.slab_releases.load(Ordering::Relaxed);
+        s
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let pumped = self.pump();
+            if (self.inflight() == 0
+                && self.peers.iter().flatten().all(|p| {
+                    p.releases.lock().expect("poisoned release queue").is_empty()
+                }))
+                || Instant::now() >= deadline
+            {
+                break;
+            }
+            if pumped == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        for peer in self.peers.iter_mut().flatten() {
+            let _ = peer.stream.shutdown(std::net::Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        self.mailbox.close();
+        // Unlinking doesn't disturb peers still holding the open file.
+        let _ = std::fs::remove_file(&self.own_slab_path);
+    }
+}
+
+impl Drop for ShmTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_alloc_first_fit_with_rover() {
+        let mut a = SlabAlloc::new();
+        let x = a.alloc(4).unwrap();
+        let y = a.alloc(2).unwrap();
+        assert_ne!(x, y);
+        assert!(x + 4 <= y || y + 2 <= x, "extents must not overlap");
+        a.free(x, 4);
+        // A request larger than any remaining hole fails cleanly.
+        assert!(a.alloc(SLOT_COUNT + 1).is_none());
+        // Everything freed: a full-slab extent fits again.
+        a.free(y, 2);
+        assert_eq!(a.alloc(SLOT_COUNT), Some(0));
+    }
+
+    #[test]
+    fn slab_alloc_exhaustion_and_reuse() {
+        let mut a = SlabAlloc::new();
+        let mut got = Vec::new();
+        while let Some(f) = a.alloc(1) {
+            got.push(f);
+        }
+        assert_eq!(got.len(), SLOT_COUNT);
+        assert!(a.alloc(1).is_none());
+        a.free(got[7], 1);
+        assert_eq!(a.alloc(1), Some(got[7]));
+    }
+
+    #[test]
+    fn slots_for_rounds_up_and_floors_at_one() {
+        assert_eq!(slots_for(0), 1);
+        assert_eq!(slots_for(1), 1);
+        assert_eq!(slots_for(SLOT_BYTES), 1);
+        assert_eq!(slots_for(SLOT_BYTES + 1), 2);
+    }
+}

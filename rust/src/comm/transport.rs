@@ -1,0 +1,438 @@
+//! The pluggable transport seam under [`Communicator`](super::Communicator).
+//!
+//! Everything above this line — chaos injection, CRC/seq framing, the
+//! NACK retry archive, delta resync, the liveness plane, the collectives
+//! protocol — lives in `Communicator` and is **backend-independent**. A
+//! [`Transport`] only answers two questions: *how do published frames
+//! reach the destination rank's mailbox* and *where do my own arrivals
+//! land*. Three implementations ship:
+//!
+//! * [`InProcTransport`](super::mpi::InProcTransport) — the simulated MPI
+//!   of PRs 1–7: ranks are threads, a send is a mailbox push, delivery is
+//!   a pointer move (zero-copy, the modeled RDMA segment).
+//! * [`UdsTransport`](super::uds::UdsTransport) — real OS processes over
+//!   Unix-domain sockets, true nonblocking sends with a bounded
+//!   completion window and per-peer reader threads.
+//! * [`ShmTransport`](super::shm::ShmTransport) — real OS processes over
+//!   a per-rank shared-memory slab file (tmpfs): payload bytes travel
+//!   through the slab, only tiny descriptors cross the socket, and slab
+//!   slots recycle on explicit release records (the `FramePool`
+//!   publish/recycle discipline mapped onto shared memory).
+//!
+//! # The mailbox: per-source queues with a round-robin cursor
+//!
+//! Every backend delivers into the same [`MailboxCore`]: one FIFO queue
+//! per source rank plus a rotating ANY-source cursor. Matching a
+//! specific source scans only that source's queue (per-channel FIFO is
+//! preserved exactly); matching ANY source starts at the cursor and
+//! advances it past each hit, so a source that floods the mailbox can
+//! delay a quiet source's frame by at most one full rotation — the
+//! "recv_any fairness" contract the conformance suite asserts. The old
+//! single-queue mailbox served ANY-receives in strict global arrival
+//! order, which let one fast peer starve the rest indefinitely.
+
+use super::mpi::{Frame, FramePool, RecvMsg, Tag};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Which backend a [`Transport`] is (config/CLI facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Thread-per-rank simulated MPI (single process).
+    InProcess,
+    /// One OS process per rank over Unix-domain sockets.
+    Uds,
+    /// One OS process per rank over a shared-memory slab + UDS control.
+    Shm,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inprocess" | "in-process" | "threads" => Some(TransportKind::InProcess),
+            "uds" | "socket" => Some(TransportKind::Uds),
+            "shm" | "shared-memory" => Some(TransportKind::Shm),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inprocess",
+            TransportKind::Uds => "uds",
+            TransportKind::Shm => "shm",
+        }
+    }
+
+    /// Whether this backend runs each rank in its own OS process.
+    pub fn multiprocess(self) -> bool {
+        !matches!(self, TransportKind::InProcess)
+    }
+}
+
+/// Lifetime counters of one transport endpoint (all backends; fields a
+/// backend has no concept of stay zero).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frames handed to [`Transport::send`] (loopback excluded).
+    pub frames_sent: u64,
+    /// Payload bytes handed to [`Transport::send`] (loopback excluded).
+    pub bytes_sent: u64,
+    /// Times a send blocked briefly because the bounded completion
+    /// window was full (backpressure events, not an error).
+    pub send_stalls: u64,
+    /// Frames dropped because the peer's connection closed (a dead rank;
+    /// the liveness plane handles the consequences).
+    pub frames_dropped_peer_closed: u64,
+    /// Shm only: payloads that travelled inline over the control socket
+    /// because the slab had no free extent (counted fallback, never an
+    /// error).
+    pub inline_fallbacks: u64,
+    /// Shm only: slab extents released back by receivers.
+    pub slab_releases: u64,
+}
+
+/// One rank's inbound mailbox: per-source FIFO queues plus the rotating
+/// ANY-source cursor. Shared (`Arc`) between the owning [`Transport`] /
+/// [`Communicator`](super::Communicator) and any backend reader threads.
+#[derive(Debug)]
+pub struct MailboxCore {
+    state: Mutex<MailboxState>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct MailboxState {
+    /// `per_src[s]` holds frames from rank `s` in arrival order.
+    per_src: Vec<VecDeque<(Tag, Frame)>>,
+    /// Total queued messages (all sources).
+    queued: usize,
+    /// Next source the ANY-source scan starts from.
+    cursor: usize,
+    /// Set by [`MailboxCore::close`]: blocking receives stop sleeping.
+    closed: bool,
+}
+
+impl MailboxCore {
+    pub fn new(sources: usize) -> MailboxCore {
+        MailboxCore {
+            state: Mutex::new(MailboxState {
+                per_src: (0..sources).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                cursor: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Deliver a frame from `src` (any thread).
+    pub fn push(&self, src: u32, tag: Tag, data: Frame) {
+        let mut st = self.state.lock().expect("poisoned mailbox lock");
+        st.per_src[src as usize].push_back((tag, data));
+        st.queued += 1;
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking matched take (src/tag `None` = ANY). ANY-source
+    /// matching rotates the fairness cursor; specific-source matching
+    /// takes the first tag match of that source's FIFO.
+    pub fn try_take(&self, src: Option<u32>, tag: Option<Tag>) -> Option<RecvMsg> {
+        let mut st = self.state.lock().expect("poisoned mailbox lock");
+        Self::take_locked(&mut st, src, tag)
+    }
+
+    /// Matched take; if nothing matches, wait for a push (or `max_wait`
+    /// when given) and try once more. Callers loop — the two-phase shape
+    /// lets them run work (e.g. [`Transport::pump`]) between sleeps
+    /// without holding the lock.
+    pub fn take_or_wait(
+        &self,
+        src: Option<u32>,
+        tag: Option<Tag>,
+        max_wait: Option<Duration>,
+    ) -> Option<RecvMsg> {
+        let mut st = self.state.lock().expect("poisoned mailbox lock");
+        if let Some(m) = Self::take_locked(&mut st, src, tag) {
+            return Some(m);
+        }
+        if st.closed {
+            return None;
+        }
+        let mut st = match max_wait {
+            Some(d) => self.cv.wait_timeout(st, d).expect("poisoned mailbox lock").0,
+            None => self.cv.wait(st).expect("poisoned mailbox lock"),
+        };
+        Self::take_locked(&mut st, src, tag)
+    }
+
+    fn take_locked(st: &mut MailboxState, src: Option<u32>, tag: Option<Tag>) -> Option<RecvMsg> {
+        if st.queued == 0 {
+            return None;
+        }
+        let n = st.per_src.len();
+        match src {
+            Some(s) => {
+                let q = &mut st.per_src[s as usize];
+                let idx = q.iter().position(|(t, _)| tag.map_or(true, |want| *t == want))?;
+                let (t, data) = q.remove(idx).expect("position() yields an in-range index");
+                st.queued -= 1;
+                Some(RecvMsg { src: s, tag: t, data })
+            }
+            None => {
+                for step in 0..n {
+                    let s = (st.cursor + step) % n;
+                    let q = &mut st.per_src[s];
+                    if let Some(idx) =
+                        q.iter().position(|(t, _)| tag.map_or(true, |want| *t == want))
+                    {
+                        let (t, data) =
+                            q.remove(idx).expect("position() yields an in-range index");
+                        st.queued -= 1;
+                        // Advance past the source we just served so the
+                        // next ANY-receive starts at its successor.
+                        st.cursor = (s + 1) % n;
+                        return Some(RecvMsg { src: s as u32, tag: t, data });
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Probe without removal (does not move the fairness cursor).
+    pub fn peek(&self, src: Option<u32>, tag: Option<Tag>) -> Option<(u32, Tag, usize)> {
+        let st = self.state.lock().expect("poisoned mailbox lock");
+        for (s, q) in st.per_src.iter().enumerate() {
+            if src.is_some_and(|want| want as usize != s) {
+                continue;
+            }
+            if let Some((t, f)) = q.iter().find(|(t, _)| tag.map_or(true, |want| *t == want)) {
+                return Some((s as u32, *t, f.len()));
+            }
+        }
+        None
+    }
+
+    /// Whether anything (any tag) is queued from `src` — the liveness
+    /// plane's "queued message proves the peer alive" probe.
+    pub fn has_from(&self, src: u32) -> bool {
+        let st = self.state.lock().expect("poisoned mailbox lock");
+        !st.per_src[src as usize].is_empty()
+    }
+
+    /// Drop every queued message with `tag`; returns how many.
+    pub fn cancel(&self, tag: Tag) -> usize {
+        let mut st = self.state.lock().expect("poisoned mailbox lock");
+        let mut dropped = 0;
+        for q in st.per_src.iter_mut() {
+            let before = q.len();
+            q.retain(|(t, _)| *t != tag);
+            dropped += before - q.len();
+        }
+        st.queued -= dropped;
+        dropped
+    }
+
+    /// Total queued messages.
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("poisoned mailbox lock").queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Mark the mailbox closed (shutdown): blocked receivers wake and
+    /// stop sleeping on the condvar. Queued messages remain takeable.
+    pub fn close(&self) {
+        let mut st = self.state.lock().expect("poisoned mailbox lock");
+        st.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether [`MailboxCore::close`] has been called. Receive loops use
+    /// this to turn "blocked on a mailbox that will never fill" into a
+    /// typed timeout instead of a hot spin.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().expect("poisoned mailbox lock").closed
+    }
+}
+
+/// The backend contract. Object-safe and `Send` — a
+/// [`Communicator`](super::Communicator) owns one as `Box<dyn Transport>`
+/// and moves with it into its rank thread/process.
+///
+/// Invariants every backend must provide (the conformance suite in
+/// `rust/tests/transport_conformance.rs` asserts them over all
+/// implementations):
+///
+/// * **Per-channel FIFO**: frames sent on one `(src, dst, tag)` channel
+///   are delivered into `dst`'s mailbox in send order.
+/// * **Integrity**: delivered bytes equal sent bytes (corruption may only
+///   come from the chaos seam *above* the transport).
+/// * **Loopback**: `send(self_rank, ..)` delivers into the own mailbox
+///   without touching the wire.
+/// * **Bounded completion**: after a send is accepted, a bounded number
+///   of [`Transport::pump`] calls (or subsequent sends) completes its
+///   write and releases the frame back to its pool — no completion may
+///   depend on unbounded future traffic.
+pub trait Transport: Send {
+    fn kind(&self) -> TransportKind;
+    fn rank(&self) -> u32;
+    fn size(&self) -> usize;
+
+    /// The pool send-side leases publish buffers from. In-process this is
+    /// the world-shared pool (receiver drops recycle to the sender);
+    /// multiprocess backends have one pool per process.
+    fn frame_pool(&self) -> &FramePool;
+
+    /// This endpoint's inbound mailbox (all arrivals land here).
+    fn mailbox(&self) -> &std::sync::Arc<MailboxCore>;
+
+    /// Move `frame` to `dst`'s mailbox. Accepts `dst == rank()`
+    /// (loopback: a plain local push). Never blocks indefinitely: a full
+    /// completion window may stall briefly (counted in
+    /// [`TransportStats::send_stalls`]); a closed peer drops the frame
+    /// (counted in [`TransportStats::frames_dropped_peer_closed`]).
+    fn send(&mut self, dst: u32, tag: Tag, frame: Frame);
+
+    /// Drive pending nonblocking work (flush queued writes, harvest
+    /// completion/release records). Returns the number of sends completed
+    /// by this call. In-process: no-op returning 0.
+    fn pump(&mut self) -> usize;
+
+    /// Sends accepted but not yet fully written to the wire.
+    fn inflight(&self) -> usize;
+
+    /// How often a blocked receive should wake to [`Transport::pump`].
+    /// `None` = never (pure condvar waits; the in-process backend has no
+    /// pending work by construction).
+    fn poll_interval(&self) -> Option<Duration> {
+        None
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+
+    /// Backend-native allgather, if the backend has one (the in-process
+    /// condvar rendezvous). `None` ⇒ the communicator runs its p2p
+    /// gather+broadcast fallback over plain sends.
+    fn native_allgather(&mut self, _data: &[u8]) -> Option<Vec<Vec<u8>>> {
+        None
+    }
+
+    /// Backend-native barrier; `false` ⇒ the communicator synthesizes a
+    /// barrier from an empty allgather.
+    fn native_barrier(&mut self) -> bool {
+        false
+    }
+
+    /// Flush best-effort and release OS resources. Idempotent; called on
+    /// communicator drop.
+    fn shutdown(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(b: &[u8]) -> Frame {
+        Frame::owned(b.to_vec())
+    }
+
+    #[test]
+    fn specific_source_take_preserves_fifo_and_tag_selectivity() {
+        let mb = MailboxCore::new(2);
+        mb.push(1, 5, frame(b"a"));
+        mb.push(1, 9, frame(b"b"));
+        mb.push(1, 5, frame(b"c"));
+        // Tag-selective take skips the non-matching head.
+        let m = mb.try_take(Some(1), Some(9)).unwrap();
+        assert_eq!(&m.data[..], b"b");
+        // Remaining tag-5 messages still come in FIFO order.
+        assert_eq!(&mb.try_take(Some(1), Some(5)).unwrap().data[..], b"a");
+        assert_eq!(&mb.try_take(Some(1), Some(5)).unwrap().data[..], b"c");
+        assert!(mb.try_take(Some(1), None).is_none());
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn any_source_take_round_robins_across_sources() {
+        let mb = MailboxCore::new(3);
+        // Source 1 floods; source 2 contributes one message.
+        for i in 0..10u8 {
+            mb.push(1, 7, frame(&[i]));
+        }
+        mb.push(2, 7, frame(b"quiet"));
+        // First ANY-take serves source 1 (cursor at 0 → first nonempty).
+        assert_eq!(mb.try_take(None, Some(7)).unwrap().src, 1);
+        // The cursor now sits past source 1, so the quiet source is next
+        // despite the 9 flooded messages still queued ahead of it in
+        // arrival order.
+        let m = mb.try_take(None, Some(7)).unwrap();
+        assert_eq!(m.src, 2);
+        assert_eq!(&m.data[..], b"quiet");
+        // Then the rotation wraps back to the flooder.
+        assert_eq!(mb.try_take(None, Some(7)).unwrap().src, 1);
+    }
+
+    #[test]
+    fn peek_reports_without_consuming_or_rotating() {
+        let mb = MailboxCore::new(2);
+        mb.push(0, 3, frame(b"xyz"));
+        assert_eq!(mb.peek(None, None), Some((0, 3, 3)));
+        assert_eq!(mb.peek(Some(1), None), None);
+        assert_eq!(mb.peek(None, Some(4)), None);
+        assert_eq!(mb.len(), 1);
+    }
+
+    #[test]
+    fn cancel_drops_only_the_given_tag() {
+        let mb = MailboxCore::new(2);
+        mb.push(0, 1, frame(b"a"));
+        mb.push(1, 1, frame(b"b"));
+        mb.push(1, 2, frame(b"c"));
+        assert_eq!(mb.cancel(1), 2);
+        assert_eq!(mb.len(), 1);
+        assert_eq!(mb.try_take(None, None).unwrap().tag, 2);
+    }
+
+    #[test]
+    fn has_from_sees_any_tag() {
+        let mb = MailboxCore::new(2);
+        assert!(!mb.has_from(1));
+        mb.push(1, 99, frame(b""));
+        assert!(mb.has_from(1));
+        assert!(!mb.has_from(0));
+    }
+
+    #[test]
+    fn take_or_wait_honors_timeout_and_close() {
+        use std::time::Instant;
+        let mb = MailboxCore::new(1);
+        let t0 = Instant::now();
+        assert!(mb.take_or_wait(None, None, Some(Duration::from_millis(20))).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // Closed mailboxes stop sleeping but still drain their queue.
+        mb.push(0, 1, frame(b"last"));
+        mb.close();
+        assert_eq!(&mb.take_or_wait(None, None, None).unwrap().data[..], b"last");
+        let t1 = Instant::now();
+        assert!(mb.take_or_wait(None, None, None).is_none());
+        assert!(t1.elapsed() < Duration::from_millis(50), "closed mailbox must not block");
+    }
+
+    #[test]
+    fn kind_parse_round_trips() {
+        for k in [TransportKind::InProcess, TransportKind::Uds, TransportKind::Shm] {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+        assert!(TransportKind::parse("smoke-signals").is_none());
+        assert!(!TransportKind::InProcess.multiprocess());
+        assert!(TransportKind::Uds.multiprocess());
+        assert!(TransportKind::Shm.multiprocess());
+    }
+}

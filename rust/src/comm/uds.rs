@@ -1,0 +1,431 @@
+//! Unix-domain-socket transport: one OS process per rank, true
+//! nonblocking sends with a bounded completion window.
+//!
+//! # Rendezvous
+//!
+//! All ranks agree on a rendezvous directory. Rank `r` binds
+//! `dir/rank{r}.sock` and accepts one connection from every *higher*
+//! rank; it then dials every *lower* rank (retrying while the peer's
+//! socket file is still appearing). The first 4 bytes on a dialed
+//! connection are the dialer's rank LE — after that, both directions
+//! carry only frames. The result is a full mesh of `size·(size-1)/2`
+//! streams, each serving one rank pair in both directions.
+//!
+//! # Framing
+//!
+//! `[tag u32 LE][len u32 LE][payload len bytes]`. This is *below* the
+//! 20-byte CRC/seq frame header of `batching` — the transport moves
+//! opaque payloads; integrity, sequencing, retransmission, chaos and
+//! liveness all live above the [`Transport`] seam, unchanged from the
+//! in-process backend.
+//!
+//! # Nonblocking sends and the completion window
+//!
+//! The write half of every stream is nonblocking. [`UdsTransport::send`]
+//! enqueues the frame and flushes as far as the socket accepts; the rest
+//! drains on subsequent [`UdsTransport::pump`] calls (the communicator
+//! pumps in every sliced receive wait and once per engine iteration, so
+//! completion latency is bounded by one poll interval even if the rank
+//! never sends again). A bounded completion window
+//! ([`WINDOW_FRAMES`]/[`WINDOW_BYTES`]) applies backpressure: a send
+//! over the window spins pump-with-microsleeps (counted in
+//! [`TransportStats::send_stalls`]) for at most [`STALL_DEADLINE`], then
+//! accepts the overshoot — sends never block indefinitely, and frames
+//! queued to a peer whose connection died are dropped and counted
+//! ([`TransportStats::frames_dropped_peer_closed`]), leaving the
+//! consequences to the liveness plane.
+//!
+//! # Receiving
+//!
+//! One detached reader thread per peer blocks on its stream, leases a
+//! buffer from the (per-process) [`FramePool`], reads one frame and
+//! pushes it into the shared [`MailboxCore`]. Readers exit on EOF or
+//! error; [`UdsTransport::shutdown`] flushes best-effort, shuts the
+//! sockets down and joins them.
+
+use super::mpi::{Frame, FramePool, Tag};
+use super::transport::{MailboxCore, Transport, TransportKind, TransportStats};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Completion-window cap on queued (unflushed) frames per transport.
+pub const WINDOW_FRAMES: usize = 64;
+/// Completion-window cap on queued (unflushed) payload bytes.
+pub const WINDOW_BYTES: usize = 8 << 20;
+/// How long an over-window send keeps pumping before accepting the
+/// overshoot (sends must never block indefinitely).
+const STALL_DEADLINE: Duration = Duration::from_secs(1);
+/// Microsleep between pump attempts while the window is full.
+const STALL_SLEEP: Duration = Duration::from_micros(50);
+/// How long rendezvous keeps retrying a peer that has not bound yet.
+const CONNECT_DEADLINE: Duration = Duration::from_secs(30);
+/// Reader-side sanity cap on one frame's length: a corrupt stream must
+/// not OOM the process (the stream is abandoned instead).
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Socket path of `rank` under the rendezvous directory.
+pub fn socket_path(dir: &Path, rank: u32) -> PathBuf {
+    dir.join(format!("rank{rank}.sock"))
+}
+
+/// Establish the pairwise full mesh for `rank` of `size` under `dir`:
+/// bind `rank`'s socket, accept one hello-identified connection from
+/// every higher rank (on a helper thread, so mid-mesh ranks dialing each
+/// other cannot deadlock), dial every lower rank (retrying while its
+/// socket file appears). Returns streams indexed by peer rank, `None` at
+/// `rank` itself. Shared by the UDS and shm backends — shm runs the
+/// same mesh as its control plane.
+pub(crate) fn connect_mesh(
+    dir: &Path,
+    rank: u32,
+    size: usize,
+) -> std::io::Result<Vec<Option<UnixStream>>> {
+    let mut streams: Vec<Option<UnixStream>> = (0..size).map(|_| None).collect();
+
+    let expect_accepts = size - 1 - rank as usize;
+    let listener = if expect_accepts > 0 {
+        let path = socket_path(dir, rank);
+        let _ = std::fs::remove_file(&path);
+        Some(UnixListener::bind(&path)?)
+    } else {
+        None
+    };
+
+    let acceptor = listener.map(|l| {
+        std::thread::spawn(move || -> std::io::Result<Vec<(u32, UnixStream)>> {
+            let mut got = Vec::with_capacity(expect_accepts);
+            for _ in 0..expect_accepts {
+                let (mut s, _) = l.accept()?;
+                let mut hello = [0u8; 4];
+                s.read_exact(&mut hello)?;
+                got.push((u32::from_le_bytes(hello), s));
+            }
+            Ok(got)
+        })
+    });
+
+    for peer in 0..rank {
+        let path = socket_path(dir, peer);
+        let start = Instant::now();
+        let mut stream = loop {
+            match UnixStream::connect(&path) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if start.elapsed() > CONNECT_DEADLINE {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        stream.write_all(&rank.to_le_bytes())?;
+        streams[peer as usize] = Some(stream);
+    }
+
+    if let Some(h) = acceptor {
+        let accepted = h
+            .join()
+            .map_err(|_| std::io::Error::new(ErrorKind::Other, "acceptor thread panicked"))??;
+        for (src, s) in accepted {
+            if (src as usize) >= size || src <= rank || streams[src as usize].is_some() {
+                return Err(std::io::Error::new(
+                    ErrorKind::InvalidData,
+                    format!("bogus hello from peer claiming rank {src}"),
+                ));
+            }
+            streams[src as usize] = Some(s);
+        }
+    }
+    Ok(streams)
+}
+
+/// One frame mid-write: header + payload, with resume offsets.
+struct Pending {
+    header: [u8; 8],
+    hdr_sent: usize,
+    frame: Frame,
+    data_sent: usize,
+}
+
+impl Pending {
+    fn new(tag: Tag, frame: Frame) -> Pending {
+        let len = frame.len() as u32;
+        let mut header = [0u8; 8];
+        header[..4].copy_from_slice(&tag.to_le_bytes());
+        header[4..].copy_from_slice(&len.to_le_bytes());
+        Pending { header, hdr_sent: 0, frame, data_sent: 0 }
+    }
+}
+
+/// Outbound state of one peer connection.
+struct Peer {
+    /// Nonblocking write half (the reader thread owns a blocking clone).
+    stream: UnixStream,
+    queue: VecDeque<Pending>,
+    queued_bytes: usize,
+    /// Set when a write failed hard: the peer is gone; frames to it drop.
+    closed: bool,
+}
+
+/// The Unix-domain-socket backend. See the module docs for the protocol.
+pub struct UdsTransport {
+    rank: u32,
+    size: usize,
+    pool: FramePool,
+    mailbox: Arc<MailboxCore>,
+    /// Indexed by peer rank; `None` at `rank` (loopback never dials).
+    peers: Vec<Option<Peer>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    stats: TransportStats,
+    shut: bool,
+}
+
+impl UdsTransport {
+    /// Bind, dial and join the full mesh for `rank` of `size` under
+    /// `dir`. Blocks until every pairwise connection is up (bounded by
+    /// [`CONNECT_DEADLINE`] per peer), so a returned transport is fully
+    /// connected — no send can race an unestablished stream.
+    pub fn connect(dir: &Path, rank: u32, size: usize) -> std::io::Result<UdsTransport> {
+        assert!((rank as usize) < size);
+        let pool = FramePool::new();
+        let mailbox = Arc::new(MailboxCore::new(size));
+        let streams = connect_mesh(dir, rank, size)?;
+
+        let mut peers: Vec<Option<Peer>> = (0..size).map(|_| None).collect();
+        let mut readers = Vec::with_capacity(size.saturating_sub(1));
+        for (src, slot) in streams.into_iter().enumerate() {
+            let Some(stream) = slot else { continue };
+            let read_half = stream.try_clone()?;
+            readers.push(spawn_reader(
+                src as u32,
+                read_half,
+                pool.clone(),
+                Arc::clone(&mailbox),
+            ));
+            stream.set_nonblocking(true)?;
+            peers[src] =
+                Some(Peer { stream, queue: VecDeque::new(), queued_bytes: 0, closed: false });
+        }
+
+        Ok(UdsTransport {
+            rank,
+            size,
+            pool,
+            mailbox,
+            peers,
+            readers,
+            stats: TransportStats::default(),
+            shut: false,
+        })
+    }
+
+    /// Flush one peer's queue as far as the socket accepts right now.
+    /// Returns frames fully written. A hard write error closes the peer
+    /// and drops its queue (counted).
+    fn flush_peer(peer: &mut Peer, stats: &mut TransportStats) -> usize {
+        if peer.closed {
+            return 0;
+        }
+        let mut completed = 0;
+        while let Some(p) = peer.queue.front_mut() {
+            while p.hdr_sent < 8 {
+                match peer.stream.write(&p.header[p.hdr_sent..]) {
+                    Ok(0) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                    Ok(n) => p.hdr_sent += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return completed,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                }
+            }
+            let data = p.frame.as_slice();
+            while p.data_sent < data.len() {
+                match peer.stream.write(&data[p.data_sent..]) {
+                    Ok(0) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                    Ok(n) => p.data_sent += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return completed,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        Self::close_peer(peer, stats);
+                        return completed;
+                    }
+                }
+            }
+            let done = peer.queue.pop_front().expect("front_mut() just yielded this entry");
+            peer.queued_bytes -= done.frame.len();
+            completed += 1; // Frame drops here: its buffer recycles.
+        }
+        completed
+    }
+
+    fn close_peer(peer: &mut Peer, stats: &mut TransportStats) {
+        peer.closed = true;
+        stats.frames_dropped_peer_closed += peer.queue.len() as u64;
+        peer.queued_bytes = 0;
+        peer.queue.clear();
+    }
+
+    fn window_full(&self) -> bool {
+        let (mut frames, mut bytes) = (0usize, 0usize);
+        for p in self.peers.iter().flatten() {
+            frames += p.queue.len();
+            bytes += p.queued_bytes;
+        }
+        frames > WINDOW_FRAMES || bytes > WINDOW_BYTES
+    }
+}
+
+fn spawn_reader(
+    src: u32,
+    mut stream: UnixStream,
+    pool: FramePool,
+    mailbox: Arc<MailboxCore>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("uds-rx-{src}"))
+        .spawn(move || {
+            let mut header = [0u8; 8];
+            loop {
+                if stream.read_exact(&mut header).is_err() {
+                    return; // EOF or shutdown: the stream is done.
+                }
+                let tag = u32::from_le_bytes(header[..4].try_into().expect("4-byte slice"));
+                let len =
+                    u32::from_le_bytes(header[4..].try_into().expect("4-byte slice")) as usize;
+                if len > MAX_FRAME_BYTES {
+                    return; // Corrupt stream: abandon rather than OOM.
+                }
+                let mut buf = pool.take_vec();
+                buf.resize(len, 0);
+                if stream.read_exact(&mut buf).is_err() {
+                    pool.recycle_vec(buf);
+                    return;
+                }
+                mailbox.push(src, tag, pool.seal(buf));
+            }
+        })
+        .expect("spawning a reader thread")
+}
+
+impl Transport for UdsTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Uds
+    }
+
+    fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn frame_pool(&self) -> &FramePool {
+        &self.pool
+    }
+
+    fn mailbox(&self) -> &Arc<MailboxCore> {
+        &self.mailbox
+    }
+
+    fn send(&mut self, dst: u32, tag: Tag, frame: Frame) {
+        assert!((dst as usize) < self.size);
+        if dst == self.rank {
+            self.mailbox.push(self.rank, tag, frame);
+            return;
+        }
+        self.stats.frames_sent += 1;
+        self.stats.bytes_sent += frame.len() as u64;
+        {
+            let peer = self.peers[dst as usize]
+                .as_mut()
+                .expect("connect() established every non-self peer");
+            if peer.closed {
+                self.stats.frames_dropped_peer_closed += 1;
+                return;
+            }
+            peer.queued_bytes += frame.len();
+            peer.queue.push_back(Pending::new(tag, frame));
+            Self::flush_peer(peer, &mut self.stats);
+        }
+        // Backpressure: over the completion window, keep pumping (briefly
+        // sleeping) until it drains — bounded by STALL_DEADLINE so a send
+        // can never block indefinitely.
+        if self.window_full() {
+            let start = Instant::now();
+            while self.window_full() && start.elapsed() < STALL_DEADLINE {
+                self.stats.send_stalls += 1;
+                std::thread::sleep(STALL_SLEEP);
+                self.pump();
+            }
+        }
+    }
+
+    fn pump(&mut self) -> usize {
+        let mut completed = 0;
+        for peer in self.peers.iter_mut().flatten() {
+            completed += Self::flush_peer(peer, &mut self.stats);
+        }
+        completed
+    }
+
+    fn inflight(&self) -> usize {
+        self.peers.iter().flatten().map(|p| p.queue.len()).sum()
+    }
+
+    fn poll_interval(&self) -> Option<Duration> {
+        // Blocked receives wake this often to pump. Tighter while writes
+        // are pending (the bounded completion-latency contract), relaxed
+        // when idle.
+        if self.inflight() > 0 {
+            Some(Duration::from_millis(1))
+        } else {
+            Some(Duration::from_millis(5))
+        }
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+
+    fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        // Best-effort flush of everything still queued.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.inflight() > 0 && Instant::now() < deadline {
+            if self.pump() == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        // Closing the sockets unblocks our reader threads (clones share
+        // the underlying socket), so the joins below are bounded.
+        for peer in self.peers.iter_mut().flatten() {
+            let _ = peer.stream.shutdown(std::net::Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+        self.mailbox.close();
+    }
+}
+
+impl Drop for UdsTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -7,7 +7,7 @@
 //! (§2.4.5), network model, and the §3.9 memory-reduction knobs.
 
 use super::toml::TomlDoc;
-use crate::comm::NetworkModel;
+use crate::comm::{NetworkModel, TransportKind};
 use crate::io::{Compression, SerializerKind};
 use crate::runtime::MechanicsParams;
 use crate::space::BoundaryCondition;
@@ -145,6 +145,13 @@ pub struct SimConfig {
     /// messages, escalating the failure to the elastic reshard path
     /// (0 = liveness off; silent peers only ever exhaust retries).
     pub death_timeout_ms: u64,
+    /// Which wire carries cross-rank frames: in-process mailboxes
+    /// (thread-per-rank), Unix-domain sockets, or a shared-memory slab.
+    /// The multiprocess backends spawn one OS process per rank.
+    pub transport: TransportKind,
+    /// Keep a running CRC over every data-plane send; backends must
+    /// produce identical digests for the same seeded run.
+    pub stream_audit: bool,
 }
 
 impl Default for SimConfig {
@@ -174,6 +181,8 @@ impl Default for SimConfig {
             checkpoint_every: 0,
             recv_timeout_ms: 0,
             death_timeout_ms: 0,
+            transport: TransportKind::InProcess,
+            stream_audit: false,
         }
     }
 }
@@ -225,6 +234,11 @@ impl SimConfig {
         if let Some(v) = doc.int("io.chunk_kib") {
             c.chunk_bytes = (v as usize) * 1024;
         }
+        // Exact-byte override; `to_toml` emits this key so child-process
+        // configs round-trip losslessly even for non-KiB chunk sizes.
+        if let Some(v) = doc.int("io.chunk_bytes") {
+            c.chunk_bytes = v as usize;
+        }
         if let Some(v) = doc.float("engine.partition_factor") {
             c.partition_factor = v;
         }
@@ -248,6 +262,12 @@ impl SimConfig {
         }
         if let Some(v) = doc.int("engine.checkpoint_every") {
             c.checkpoint_every = v as usize;
+        }
+        if let Some(v) = doc.str("engine.transport") {
+            c.transport = TransportKind::parse(v).ok_or(format!("bad transport {v:?}"))?;
+        }
+        if let Some(v) = doc.bool("engine.stream_audit") {
+            c.stream_audit = v;
         }
         if let Some(v) = doc.int("io.recv_timeout_ms") {
             c.recv_timeout_ms = v as u64;
@@ -312,6 +332,57 @@ impl SimConfig {
     /// The whole simulation space.
     pub fn whole_space(&self) -> crate::space::Aabb {
         crate::space::Aabb::cube(self.space_half_extent)
+    }
+
+    /// Serialize to the same TOML-subset dialect [`SimConfig::from_toml`]
+    /// reads. Every field is emitted explicitly (using the exact-valued
+    /// `io.chunk_bytes` key, not the KiB-lossy `chunk_kib`), so the
+    /// multiprocess launcher can hand each spawned rank a byte-faithful
+    /// copy of the parent's configuration.
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "name = {:?}", self.name);
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "iterations = {}", self.iterations);
+        let _ = writeln!(s, "num_agents = {}", self.num_agents);
+        let _ = writeln!(s, "space_half_extent = {:?}", self.space_half_extent);
+        let _ = writeln!(s, "interaction_radius = {:?}", self.interaction_radius);
+        let _ = writeln!(s, "boundary = {:?}", self.boundary.name());
+        let _ = writeln!(s, "\n[engine]");
+        let _ = writeln!(s, "mode = {:?}", self.mode.name());
+        let _ = writeln!(s, "ranks = {}", self.mode.ranks());
+        let _ = writeln!(s, "threads = {}", self.mode.threads_per_rank());
+        let _ = writeln!(s, "partition_factor = {:?}", self.partition_factor);
+        let _ = writeln!(s, "balance = {:?}", self.balance_method.name());
+        let _ = writeln!(s, "balance_every = {}", self.balance_every);
+        let _ = writeln!(s, "sort_every = {}", self.sort_every);
+        let _ = writeln!(s, "pjrt = {}", self.use_pjrt);
+        let _ = writeln!(s, "single_precision = {}", self.single_precision);
+        let _ = writeln!(s, "artifacts_dir = {:?}", self.artifacts_dir);
+        let _ = writeln!(s, "checkpoint_every = {}", self.checkpoint_every);
+        let _ = writeln!(s, "transport = {:?}", self.transport.name());
+        let _ = writeln!(s, "stream_audit = {}", self.stream_audit);
+        let _ = writeln!(s, "\n[io]");
+        let _ = writeln!(s, "serializer = {:?}", self.serializer.name());
+        let _ = writeln!(s, "compression = {:?}", self.compression.name());
+        let _ = writeln!(s, "network = {:?}", self.network.name);
+        let _ = writeln!(s, "chunk_bytes = {}", self.chunk_bytes);
+        let _ = writeln!(s, "recv_timeout_ms = {}", self.recv_timeout_ms);
+        let _ = writeln!(s, "death_timeout_ms = {}", self.death_timeout_ms);
+        let _ = writeln!(s, "\n[mechanics]");
+        let _ = writeln!(s, "k_rep = {:?}", self.mechanics.k_rep as f64);
+        let _ = writeln!(s, "k_adh = {:?}", self.mechanics.k_adh as f64);
+        let _ = writeln!(s, "dt = {:?}", self.mechanics.dt as f64);
+        let _ = writeln!(s, "max_disp = {:?}", self.mechanics.max_disp as f64);
+        if let Some(v) = &self.vis {
+            let _ = writeln!(s, "\n[vis]");
+            let _ = writeln!(s, "every = {}", v.every);
+            let _ = writeln!(s, "width = {}", v.width);
+            let _ = writeln!(s, "height = {}", v.height);
+            let _ = writeln!(s, "export = {}", v.export);
+        }
+        s
     }
 }
 
@@ -400,6 +471,86 @@ export = true
         assert!(SimConfig::from_toml("boundary = \"weird\"").is_err());
         assert!(SimConfig::from_toml("[engine]\nmode = \"weird\"").is_err());
         assert!(SimConfig::from_toml("[io]\nnetwork = \"weird\"").is_err());
+        assert!(SimConfig::from_toml("[engine]\ntransport = \"carrier-pigeon\"").is_err());
+    }
+
+    #[test]
+    fn parses_transport_kinds() {
+        for (txt, want) in [
+            ("uds", TransportKind::Uds),
+            ("shm", TransportKind::Shm),
+            ("inprocess", TransportKind::InProcess),
+        ] {
+            let c =
+                SimConfig::from_toml(&format!("[engine]\ntransport = \"{txt}\"")).unwrap();
+            assert_eq!(c.transport, want);
+        }
+    }
+
+    #[test]
+    fn chunk_bytes_key_overrides_chunk_kib() {
+        let c = SimConfig::from_toml("[io]\nchunk_kib = 4\nchunk_bytes = 5000").unwrap();
+        assert_eq!(c.chunk_bytes, 5000);
+    }
+
+    #[test]
+    fn to_toml_round_trips_every_field() {
+        let mut c = SimConfig::default();
+        c.name = "tumor_spheroid".into();
+        c.seed = 99;
+        c.iterations = 17;
+        c.num_agents = 12_345;
+        c.space_half_extent = 55.5;
+        c.interaction_radius = 3.25;
+        c.boundary = BoundaryCondition::Toroidal;
+        c.mode = ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 3 };
+        c.serializer = SerializerKind::TaIo;
+        c.compression = Compression::Lz4Delta { period: 16 };
+        c.network = NetworkModel::parse("gige").unwrap();
+        c.partition_factor = 2.5;
+        c.balance_method = BalanceMethod::Diffusive;
+        c.balance_every = 6;
+        c.sort_every = 4;
+        c.single_precision = true;
+        c.mechanics.dt = 0.05;
+        c.vis = Some(VisConfig { every: 3, width: 64, height: 48, export: true });
+        c.chunk_bytes = 7777; // not a KiB multiple: needs the exact key
+        c.artifacts_dir = "out/run1".into();
+        c.checkpoint_every = 9;
+        c.recv_timeout_ms = 41;
+        c.death_timeout_ms = 333;
+        c.transport = TransportKind::Uds;
+        c.stream_audit = true;
+        let back = SimConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.name, c.name);
+        assert_eq!(back.seed, c.seed);
+        assert_eq!(back.iterations, c.iterations);
+        assert_eq!(back.num_agents, c.num_agents);
+        assert_eq!(back.space_half_extent, c.space_half_extent);
+        assert_eq!(back.interaction_radius, c.interaction_radius);
+        assert_eq!(back.boundary, c.boundary);
+        assert_eq!(back.mode, c.mode);
+        assert_eq!(back.serializer, c.serializer);
+        assert_eq!(back.compression, c.compression);
+        assert_eq!(back.network.name, c.network.name);
+        assert_eq!(back.partition_factor, c.partition_factor);
+        assert_eq!(back.balance_method, c.balance_method);
+        assert_eq!(back.balance_every, c.balance_every);
+        assert_eq!(back.sort_every, c.sort_every);
+        assert_eq!(back.use_pjrt, c.use_pjrt);
+        assert_eq!(back.mechanics.k_rep, c.mechanics.k_rep);
+        assert_eq!(back.mechanics.k_adh, c.mechanics.k_adh);
+        assert_eq!(back.mechanics.dt, c.mechanics.dt);
+        assert_eq!(back.mechanics.max_disp, c.mechanics.max_disp);
+        assert_eq!(back.vis, c.vis);
+        assert_eq!(back.chunk_bytes, c.chunk_bytes);
+        assert_eq!(back.single_precision, c.single_precision);
+        assert_eq!(back.artifacts_dir, c.artifacts_dir);
+        assert_eq!(back.checkpoint_every, c.checkpoint_every);
+        assert_eq!(back.recv_timeout_ms, c.recv_timeout_ms);
+        assert_eq!(back.death_timeout_ms, c.death_timeout_ms);
+        assert_eq!(back.transport, c.transport);
+        assert_eq!(back.stream_audit, c.stream_audit);
     }
 
     #[test]

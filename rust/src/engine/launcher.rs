@@ -1,20 +1,29 @@
-//! The launcher: spawn rank threads, wire the transport and the mechanics
-//! service, run the simulation, aggregate results.
+//! The launcher: spawn rank threads (or real OS processes), wire the
+//! transport and the mechanics service, run the simulation, aggregate
+//! results.
 //!
 //! This is the "seamless laptop → supercomputer" entry point (§3.4): the
 //! same model code runs under any [`ParallelMode`](crate::config::ParallelMode)
 //! without modification — switching modes is a config change, not a
-//! recompilation (§2.5).
+//! recompilation (§2.5). The same holds for the wire: `cfg.transport`
+//! picks in-process mailboxes, Unix-domain sockets or the shared-memory
+//! slab, and [`run_simulation`] threads the chosen backend through the
+//! identical rank loop. [`run_multiprocess`] goes one step further and
+//! spawns one *real OS process per rank* (the hidden `_rank` CLI command),
+//! rendezvousing over a temporary directory and collecting per-rank
+//! outcomes from binary files.
 
 use super::model::Model;
 use super::sim::{MechBackend, RankOutcome, RankSim};
 use crate::comm::mpi::MpiWorld;
-use crate::comm::FaultPlan;
+use crate::comm::{Communicator, FaultPlan, ShmTransport, TransportKind, UdsTransport};
 use crate::config::SimConfig;
-use crate::metrics::SimReport;
+use crate::metrics::{Counter, Op, RankMetrics, SimReport};
 use crate::runtime::service::MechanicsService;
+use crate::util::Vec3;
 use crate::vis::insitu::Image;
-use std::path::PathBuf;
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
 
 /// Aggregated result of a run.
 pub struct RunResult {
@@ -31,6 +40,54 @@ pub struct RunResult {
     /// class id) — the §3.4 "positions to the master rank" step used for
     /// the convex-hull diameter and the qualitative sorting check.
     pub final_snapshot: Vec<(crate::util::Vec3, f64, u16)>,
+    /// Per-rank send-stream audit digests (rank order; empty unless
+    /// `cfg.stream_audit`). Identical seeded runs must produce identical
+    /// digests on every transport backend — the determinism witness the
+    /// multiprocess suite compares across in-process, UDS and shm runs.
+    pub stream_crcs: Vec<u32>,
+}
+
+/// Build one rank's communicator for the configured transport. The
+/// in-process backend draws from the shared `world`; the multiprocess
+/// backends rendezvous over `dir` (socket + slab files) and work equally
+/// from rank threads (tests) or separate OS processes (`_rank` children).
+fn build_communicator(
+    cfg: &SimConfig,
+    world: Option<&std::sync::Arc<MpiWorld>>,
+    dir: Option<&Path>,
+    rank: u32,
+) -> Communicator {
+    let ranks = cfg.mode.ranks();
+    match cfg.transport {
+        TransportKind::InProcess => world.expect("in-process world").communicator(rank),
+        TransportKind::Uds => {
+            let dir = dir.expect("uds rendezvous dir");
+            let t = UdsTransport::connect(dir, rank, ranks).expect("uds transport connect");
+            Communicator::new(Box::new(t), cfg.network)
+        }
+        TransportKind::Shm => {
+            let dir = dir.expect("shm rendezvous dir");
+            let t = ShmTransport::connect(dir, rank, ranks).expect("shm transport connect");
+            Communicator::new(Box::new(t), cfg.network)
+        }
+    }
+}
+
+/// A process-private rendezvous directory (sockets, slabs, outcome
+/// files). Uniqueness comes from the pid plus a wall-clock nonce, so
+/// concurrent test processes never collide.
+fn fresh_rendezvous_dir(label: &str) -> io::Result<PathBuf> {
+    let nonce = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "teraagent-{label}-{}-{:x}",
+        std::process::id(),
+        nonce
+    ));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
 }
 
 /// Run a simulation: one model instance per rank from `factory(rank)`.
@@ -46,6 +103,12 @@ pub fn run_simulation<M: Model>(
 /// starts. This is how the rank-death suite scripts a mid-run crash
 /// (`FaultPlan::with_kill_at_iteration`) inside an otherwise ordinary
 /// engine run; production paths pass no plans and are untouched.
+///
+/// Ranks are OS threads here under every transport: with `cfg.transport`
+/// set to UDS/shm the threads talk through the real wire (socket/slab
+/// files in a private rendezvous dir) — the conformance suite's
+/// cheap-to-spawn configuration. For real one-process-per-rank execution
+/// use [`run_multiprocess`].
 pub fn run_simulation_with_chaos<M: Model>(
     cfg: &SimConfig,
     factory: impl Fn(u32) -> M + Send + Sync,
@@ -53,7 +116,12 @@ pub fn run_simulation_with_chaos<M: Model>(
 ) -> RunResult {
     cfg.validate().expect("invalid SimConfig");
     let ranks = cfg.mode.ranks();
-    let world = MpiWorld::new(ranks, cfg.network);
+    let world =
+        (cfg.transport == TransportKind::InProcess).then(|| MpiWorld::new(ranks, cfg.network));
+    let rendezvous = cfg
+        .transport
+        .multiprocess()
+        .then(|| fresh_rendezvous_dir("threads").expect("rendezvous dir"));
     // One PJRT service per "node" shared by all ranks (the client is not
     // Send; it lives on its own thread).
     let service = cfg
@@ -64,23 +132,41 @@ pub fn run_simulation_with_chaos<M: Model>(
     let outcomes: Vec<RankOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..ranks as u32)
             .map(|rank| {
-                let mut comm = world.communicator(rank);
-                if let Some(plan) = chaos(rank) {
-                    comm.install_chaos(plan);
-                }
+                let world = world.as_ref();
+                let dir = rendezvous.as_deref();
+                let chaos = &chaos;
+                let factory = &factory;
                 let model = factory(rank);
                 let mech = match &service {
                     Some(svc) if svc.using_pjrt => MechBackend::Service(svc.handle()),
                     _ => MechBackend::Native,
                 };
                 let cfg = cfg.clone();
-                s.spawn(move || RankSim::new(rank, cfg, comm, model, mech).run())
+                s.spawn(move || {
+                    let mut comm = build_communicator(&cfg, world, dir, rank);
+                    if let Some(plan) = chaos(rank) {
+                        comm.install_chaos(plan);
+                    }
+                    RankSim::new(rank, cfg, comm, model, mech).run()
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
     });
+    if let Some(dir) = rendezvous {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    aggregate_outcomes(cfg, outcomes, &factory, used_pjrt)
+}
 
-    // Aggregate.
+/// Fold per-rank outcomes into the run-level result (shared by the
+/// thread launcher and the multiprocess parent).
+fn aggregate_outcomes<M: Model>(
+    _cfg: &SimConfig,
+    outcomes: Vec<RankOutcome>,
+    factory: &(impl Fn(u32) -> M + Send + Sync),
+    used_pjrt: bool,
+) -> RunResult {
     let per_rank_metrics: Vec<_> = outcomes.iter().map(|o| o.metrics.clone()).collect();
     let report = SimReport::aggregate(&per_rank_metrics);
     let model = factory(u32::MAX); // combiner instance
@@ -94,6 +180,7 @@ pub fn run_simulation_with_chaos<M: Model>(
         stats_history.push(model.combine_stats(&per_rank));
     }
     let final_agents = outcomes.iter().map(|o| o.final_agents).sum();
+    let stream_crcs = outcomes.iter().filter_map(|o| o.aura_stream_crc).collect();
     let mut frames = Vec::new();
     let mut final_snapshot = Vec::new();
     for o in outcomes {
@@ -110,5 +197,468 @@ pub fn run_simulation_with_chaos<M: Model>(
         frames,
         used_pjrt,
         final_snapshot,
+        stream_crcs,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multiprocess execution: one real OS process per rank
+// ---------------------------------------------------------------------
+
+/// The `_rank` child's working loop: connect the configured multiprocess
+/// transport over `rendezvous`, run the rank to completion, return its
+/// outcome. Panics if `cfg.transport` is the in-process backend (a child
+/// process has nobody to share mailboxes with).
+pub fn run_rank_process<M: Model>(
+    cfg: &SimConfig,
+    rank: u32,
+    rendezvous: &Path,
+    model: M,
+    chaos: Option<FaultPlan>,
+) -> RankOutcome {
+    assert!(
+        cfg.transport.multiprocess(),
+        "rank child needs a multiprocess transport, got {}",
+        cfg.transport.name()
+    );
+    cfg.validate().expect("invalid SimConfig");
+    let service = cfg
+        .use_pjrt
+        .then(|| MechanicsService::start(PathBuf::from(&cfg.artifacts_dir), true));
+    let mech = match &service {
+        Some(svc) if svc.using_pjrt => MechBackend::Service(svc.handle()),
+        _ => MechBackend::Native,
+    };
+    let mut comm = build_communicator(cfg, None, Some(rendezvous), rank);
+    if let Some(plan) = chaos {
+        comm.install_chaos(plan);
+    }
+    RankSim::new(rank, cfg.clone(), comm, model, mech).run()
+}
+
+/// Spawn one real OS process per rank (the hidden `_rank` CLI command),
+/// wait for all of them, read back their outcome files and aggregate
+/// exactly like the thread launcher. `exe` overrides the child binary
+/// (integration tests pass `env!("CARGO_BIN_EXE_teraagent")`; the CLI
+/// itself re-executes `current_exe()`); `factory` is only consulted for
+/// the stats combiner — each child rebuilds its model from the config's
+/// benchmark name.
+pub fn run_multiprocess<M: Model>(
+    cfg: &SimConfig,
+    factory: impl Fn(u32) -> M + Send + Sync,
+    exe: Option<&Path>,
+    chaos: &dyn Fn(u32) -> Option<FaultPlan>,
+) -> Result<RunResult, String> {
+    cfg.validate()?;
+    if !cfg.transport.multiprocess() {
+        return Err(format!(
+            "transport {} has no multiprocess launcher (pick uds or shm)",
+            cfg.transport.name()
+        ));
+    }
+    let ranks = cfg.mode.ranks();
+    let exe = match exe {
+        Some(p) => p.to_path_buf(),
+        None => std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?,
+    };
+    let dir = fresh_rendezvous_dir("mp").map_err(|e| format!("rendezvous dir: {e}"))?;
+    let result = run_multiprocess_in(cfg, &factory, &exe, chaos, &dir, ranks);
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+fn run_multiprocess_in<M: Model>(
+    cfg: &SimConfig,
+    factory: &(impl Fn(u32) -> M + Send + Sync),
+    exe: &Path,
+    chaos: &dyn Fn(u32) -> Option<FaultPlan>,
+    dir: &Path,
+    ranks: usize,
+) -> Result<RunResult, String> {
+    let config_path = dir.join("config.toml");
+    std::fs::write(&config_path, cfg.to_toml()).map_err(|e| format!("write config: {e}"))?;
+    let mut children = Vec::with_capacity(ranks);
+    for rank in 0..ranks as u32 {
+        let mut cmd = std::process::Command::new(exe);
+        cmd.arg("_rank")
+            .arg("--rendezvous")
+            .arg(dir)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--size")
+            .arg(ranks.to_string())
+            .arg("--config-file")
+            .arg(&config_path);
+        if let Some(plan) = chaos(rank) {
+            for arg in chaos_plan_to_flags(&plan) {
+                cmd.arg(arg);
+            }
+        }
+        let child = cmd
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .map_err(|e| format!("spawn rank {rank}: {e}"))?;
+        children.push((rank, child));
+    }
+    let mut failures = Vec::new();
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} wait: {e}")),
+        }
+    }
+    if !failures.is_empty() {
+        return Err(failures.join("; "));
+    }
+    let mut outcomes = Vec::with_capacity(ranks);
+    for rank in 0..ranks as u32 {
+        let path = dir.join(outcome_file_name(rank));
+        let (file_rank, _killed, outcome) =
+            read_rank_outcome(&path).map_err(|e| format!("outcome {rank}: {e}"))?;
+        if file_rank != rank {
+            return Err(format!("outcome file {path:?} names rank {file_rank}, want {rank}"));
+        }
+        outcomes.push(outcome);
+    }
+    // Children run their own PJRT services; the parent only reports the
+    // configuration (whether the artifact was actually used is visible in
+    // each child's logs, not collected here).
+    Ok(aggregate_outcomes(cfg, outcomes, factory, cfg.use_pjrt))
+}
+
+/// Serialize the supported fault-plan subset into `_rank` child flags.
+/// (Delay/reorder/truncate are thread-timing fault classes exercised by
+/// the in-process chaos suites; the cross-process scripting surface
+/// carries the categories the multiprocess chaos tests need.)
+fn chaos_plan_to_flags(plan: &FaultPlan) -> Vec<String> {
+    let mut args = vec!["--chaos-seed".into(), plan.seed.to_string()];
+    if plan.p_drop > 0.0 {
+        args.push("--chaos-drop".into());
+        args.push(plan.p_drop.to_string());
+    }
+    if plan.p_duplicate > 0.0 {
+        args.push("--chaos-dup".into());
+        args.push(plan.p_duplicate.to_string());
+    }
+    if plan.p_bit_flip > 0.0 {
+        args.push("--chaos-flip".into());
+        args.push(plan.p_bit_flip.to_string());
+    }
+    if plan.max_faults > 0 {
+        args.push("--chaos-max-faults".into());
+        args.push(plan.max_faults.to_string());
+    }
+    if let Some(k) = plan.kill_at_iteration {
+        args.push("--chaos-kill-iter".into());
+        args.push(k.to_string());
+    }
+    // Tag scope travels only when it differs from the builder default
+    // ([`FaultPlan::none`] already targets the aura stream).
+    if plan.tags != FaultPlan::none(0).tags {
+        args.push("--chaos-tags".into());
+        let spec: Vec<String> = plan.tags.iter().map(|t| t.to_string()).collect();
+        args.push(spec.join(","));
+    }
+    args
+}
+
+/// Name of rank `r`'s binary outcome file inside the rendezvous dir.
+pub fn outcome_file_name(rank: u32) -> String {
+    format!("outcome{rank}.bin")
+}
+
+const OUTCOME_MAGIC: &[u8; 4] = b"TAO1";
+
+/// Write a rank outcome to its binary file (the `_rank` child's last
+/// act). Format `TAO1`: all integers little-endian; floats as f64 bits.
+/// Frames are not shipped — vis export already writes PPMs to disk.
+pub fn write_rank_outcome(
+    path: &Path,
+    rank: u32,
+    killed: bool,
+    o: &RankOutcome,
+) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(256 + o.final_snapshot.len() * 34);
+    buf.extend_from_slice(OUTCOME_MAGIC);
+    buf.extend_from_slice(&rank.to_le_bytes());
+    buf.push(killed as u8);
+    buf.extend_from_slice(&o.final_agents.to_le_bytes());
+    match o.aura_stream_crc {
+        Some(crc) => {
+            buf.push(1);
+            buf.extend_from_slice(&crc.to_le_bytes());
+        }
+        None => {
+            buf.push(0);
+            buf.extend_from_slice(&0u32.to_le_bytes());
+        }
+    }
+    buf.extend_from_slice(&o.wire_bytes_sent.to_le_bytes());
+    buf.extend_from_slice(&(o.final_snapshot.len() as u64).to_le_bytes());
+    for (pos, diam, kind) in &o.final_snapshot {
+        for v in [pos.x, pos.y, pos.z, *diam] {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        buf.extend_from_slice(&kind.to_le_bytes());
+    }
+    buf.extend_from_slice(&(o.stats_history.len() as u64).to_le_bytes());
+    for row in &o.stats_history {
+        buf.extend_from_slice(&(row.len() as u64).to_le_bytes());
+        for v in row {
+            buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+    write_metrics(&mut buf, &o.metrics);
+    // Write-then-rename so the parent never reads a torn file.
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(&buf)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+}
+
+fn write_metrics(buf: &mut Vec<u8>, m: &RankMetrics) {
+    buf.extend_from_slice(&(m.iteration_secs.len() as u64).to_le_bytes());
+    for v in &m.iteration_secs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf.extend_from_slice(&(m.iteration_cpu_secs.len() as u64).to_le_bytes());
+    for v in &m.iteration_cpu_secs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    buf.extend_from_slice(&m.network_secs.to_bits().to_le_bytes());
+    buf.extend_from_slice(&m.peak_mem_bytes.to_le_bytes());
+    buf.extend_from_slice(&(Op::ALL.len() as u64).to_le_bytes());
+    for op in Op::ALL {
+        buf.extend_from_slice(&m.op_secs(op).to_bits().to_le_bytes());
+    }
+    buf.extend_from_slice(&(Counter::ALL.len() as u64).to_le_bytes());
+    for c in Counter::ALL {
+        buf.extend_from_slice(&m.counter(c).to_le_bytes());
+    }
+}
+
+/// Read a `TAO1` outcome file back: `(rank, killed, outcome)`.
+pub fn read_rank_outcome(path: &Path) -> io::Result<(u32, bool, RankOutcome)> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    let mut r = Cursor { bytes: &bytes, off: 0 };
+    let magic = r.take(4)?;
+    if magic != OUTCOME_MAGIC {
+        return Err(bad_data("bad outcome magic"));
+    }
+    let rank = r.u32()?;
+    let killed = r.u8()? != 0;
+    let final_agents = r.u64()?;
+    let has_crc = r.u8()? != 0;
+    let crc = r.u32()?;
+    let wire_bytes_sent = r.u64()?;
+    let n_snap = r.u64()? as usize;
+    if n_snap > bytes.len() {
+        return Err(bad_data("snapshot length exceeds file"));
+    }
+    let mut final_snapshot = Vec::with_capacity(n_snap);
+    for _ in 0..n_snap {
+        let x = r.f64()?;
+        let y = r.f64()?;
+        let z = r.f64()?;
+        let diam = r.f64()?;
+        let kind = r.u16()?;
+        final_snapshot.push((Vec3 { x, y, z }, diam, kind));
+    }
+    let n_rows = r.u64()? as usize;
+    if n_rows > bytes.len() {
+        return Err(bad_data("stats row count exceeds file"));
+    }
+    let mut stats_history = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let n_cols = r.u64()? as usize;
+        if n_cols > bytes.len() {
+            return Err(bad_data("stats column count exceeds file"));
+        }
+        let mut row = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            row.push(r.f64()?);
+        }
+        stats_history.push(row);
+    }
+    let metrics = read_metrics(&mut r)?;
+    let outcome = RankOutcome {
+        metrics,
+        stats_history,
+        final_agents,
+        frames: Vec::new(),
+        final_snapshot,
+        aura_stream_crc: has_crc.then_some(crc),
+        wire_bytes_sent,
+    };
+    Ok((rank, killed, outcome))
+}
+
+fn read_metrics(r: &mut Cursor<'_>) -> io::Result<RankMetrics> {
+    let mut m = RankMetrics::new();
+    let n = r.u64()? as usize;
+    if n > r.bytes.len() {
+        return Err(bad_data("iteration count exceeds file"));
+    }
+    for _ in 0..n {
+        m.iteration_secs.push(r.f64()?);
+    }
+    let n = r.u64()? as usize;
+    if n > r.bytes.len() {
+        return Err(bad_data("cpu iteration count exceeds file"));
+    }
+    for _ in 0..n {
+        m.iteration_cpu_secs.push(r.f64()?);
+    }
+    m.network_secs = r.f64()?;
+    m.peak_mem_bytes = r.u64()?;
+    let n_ops = r.u64()? as usize;
+    if n_ops != Op::ALL.len() {
+        return Err(bad_data("op table size mismatch"));
+    }
+    for op in Op::ALL {
+        let secs = r.f64()?;
+        if secs > 0.0 {
+            m.add_op(op, secs);
+        }
+    }
+    let n_ctrs = r.u64()? as usize;
+    if n_ctrs != Counter::ALL.len() {
+        return Err(bad_data("counter table size mismatch"));
+    }
+    for c in Counter::ALL {
+        let v = r.u64()?;
+        if v > 0 {
+            m.count(c, v);
+        }
+    }
+    Ok(m)
+}
+
+fn bad_data(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Bounds-checked little-endian reader over the outcome bytes.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.bytes.len());
+        let end = end.ok_or_else(|| bad_data("truncated outcome file"))?;
+        let out = &self.bytes[self.off..end];
+        self.off = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_file_round_trips() {
+        let mut metrics = RankMetrics::new();
+        metrics.add_op(Op::AuraUpdate, 1.25);
+        metrics.count(Counter::MessagesSent, 42);
+        metrics.iteration_secs = vec![0.5, 0.25];
+        metrics.iteration_cpu_secs = vec![0.4, 0.2];
+        metrics.network_secs = 0.125;
+        metrics.peak_mem_bytes = 1 << 20;
+        let o = RankOutcome {
+            metrics,
+            stats_history: vec![vec![1.0, 2.0], vec![3.0]],
+            final_agents: 7,
+            frames: Vec::new(),
+            final_snapshot: vec![(Vec3 { x: 1.0, y: -2.0, z: 3.5 }, 10.0, 3)],
+            aura_stream_crc: Some(0xDEAD_BEEF),
+            wire_bytes_sent: 9001,
+        };
+        let dir = fresh_rendezvous_dir("outcometest").unwrap();
+        let path = dir.join(outcome_file_name(2));
+        write_rank_outcome(&path, 2, true, &o).unwrap();
+        let (rank, killed, back) = read_rank_outcome(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(rank, 2);
+        assert!(killed);
+        assert_eq!(back.final_agents, 7);
+        assert_eq!(back.aura_stream_crc, Some(0xDEAD_BEEF));
+        assert_eq!(back.wire_bytes_sent, 9001);
+        assert_eq!(back.final_snapshot, o.final_snapshot);
+        assert_eq!(back.stats_history, o.stats_history);
+        assert_eq!(back.metrics.op_secs(Op::AuraUpdate), 1.25);
+        assert_eq!(back.metrics.counter(Counter::MessagesSent), 42);
+        assert_eq!(back.metrics.iteration_secs, vec![0.5, 0.25]);
+        assert_eq!(back.metrics.network_secs, 0.125);
+        assert_eq!(back.metrics.peak_mem_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn outcome_reader_rejects_garbage() {
+        let dir = fresh_rendezvous_dir("outcomebad").unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(read_rank_outcome(&path).is_err());
+        std::fs::write(&path, b"TAO1\x01").unwrap();
+        assert!(read_rank_outcome(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_flags_cover_scripted_plan() {
+        let plan = crate::comm::FaultPlan::none(9)
+            .with_drop(0.25)
+            .with_duplicate(0.5)
+            .with_bit_flip(0.125)
+            .with_max_faults(3)
+            .with_kill_at_iteration(7);
+        let flags = chaos_plan_to_flags(&plan);
+        let joined = flags.join(" ");
+        assert!(joined.contains("--chaos-seed 9"));
+        assert!(joined.contains("--chaos-drop 0.25"));
+        assert!(joined.contains("--chaos-dup 0.5"));
+        assert!(joined.contains("--chaos-flip 0.125"));
+        assert!(joined.contains("--chaos-max-faults 3"));
+        assert!(joined.contains("--chaos-kill-iter 7"));
+        // Default tag scope (aura) travels implicitly; a widened scope
+        // must be spelled out.
+        assert!(!joined.contains("--chaos-tags"));
+        let widened = crate::comm::FaultPlan::none(9).with_tags(vec![
+            crate::comm::mpi::tags::AURA,
+            crate::comm::mpi::tags::MIGRATION,
+        ]);
+        let joined = chaos_plan_to_flags(&widened).join(" ");
+        assert!(joined.contains("--chaos-tags"));
+        assert!(joined.contains(&format!(
+            "{},{}",
+            crate::comm::mpi::tags::AURA,
+            crate::comm::mpi::tags::MIGRATION
+        )));
     }
 }

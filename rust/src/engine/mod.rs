@@ -32,7 +32,9 @@ pub mod pool;
 pub mod sim;
 pub mod world;
 
-pub use launcher::{run_simulation, run_simulation_with_chaos, RunResult};
+pub use launcher::{
+    run_multiprocess, run_rank_process, run_simulation, run_simulation_with_chaos, RunResult,
+};
 pub use model::Model;
 pub use pool::ThreadPool;
 pub use world::{AuraStore, NeighborInfo, World};

@@ -59,6 +59,13 @@ pub struct RankOutcome {
     /// class id). Used by verification/hull post-processing — the
     /// "transmit agent positions to the master rank" step of §3.4.
     pub final_snapshot: Vec<(Vec3, f64, u16)>,
+    /// Running CRC over every data-plane send (present when
+    /// `SimConfig::stream_audit` is on): the cross-backend determinism
+    /// witness — identical runs must produce identical digests on every
+    /// transport.
+    pub aura_stream_crc: Option<u32>,
+    /// Total data-plane bytes this rank handed to the transport.
+    pub wire_bytes_sent: u64,
 }
 
 /// One rank's simulation state.
@@ -134,6 +141,8 @@ pub struct RankSim<M: Model> {
     faults_detected_seen: u64,
     retransmits_seen: u64,
     faults_injected_seen: u64,
+    transport_stalls_seen: u64,
+    inline_fallbacks_seen: u64,
 }
 
 impl<M: Model> RankSim<M> {
@@ -200,6 +209,8 @@ impl<M: Model> RankSim<M> {
             faults_detected_seen: 0,
             retransmits_seen: 0,
             faults_injected_seen: 0,
+            transport_stalls_seen: 0,
+            inline_fallbacks_seen: 0,
             comm,
             grid,
             nsg,
@@ -219,6 +230,11 @@ impl<M: Model> RankSim<M> {
         if sim.cfg.death_timeout_ms > 0 {
             sim.comm
                 .enable_liveness(std::time::Duration::from_millis(sim.cfg.death_timeout_ms));
+        }
+        // The determinism witness: a running digest over every data-plane
+        // send. Backends must agree digest-for-digest on a seeded run.
+        if sim.cfg.stream_audit {
+            sim.comm.enable_stream_audit();
         }
         for a in agents {
             let id = sim.rm.add(a);
@@ -270,6 +286,8 @@ impl<M: Model> RankSim<M> {
                     .map(|a| (a.position, a.diameter, a.kind.class_id()))
                     .collect()
             },
+            aura_stream_crc: self.comm.stream_audit_crc(),
+            wire_bytes_sent: self.comm.wire_bytes_sent,
             metrics: self.take_metrics(),
             stats_history: std::mem::take(&mut self.stats_history),
             frames: std::mem::take(&mut self.frames),
@@ -286,6 +304,12 @@ impl<M: Model> RankSim<M> {
         let iter_timer = Timer::start();
         let cpu_timer = crate::util::timing::CpuTimer::start();
         self.pool_cpu_secs = 0.0;
+        // Flush the transport's bounded completion window up front: on the
+        // nonblocking UDS/shm paths a frame queued behind a slow peer last
+        // iteration must not wait for the next receive to make progress
+        // (the bounded completion-callback latency contract — see
+        // `Transport::pump`). A no-op on the in-process backend.
+        self.comm.pump();
         self.aura_update();
         if self.model.uses_mechanics() {
             self.mechanics_phase();
@@ -1055,6 +1079,19 @@ impl<M: Model> RankSim<M> {
         if injected > self.faults_injected_seen {
             self.metrics.count(Counter::FaultsInjected, injected - self.faults_injected_seen);
             self.faults_injected_seen = injected;
+        }
+        let ts = self.comm.transport_stats();
+        if ts.send_stalls > self.transport_stalls_seen {
+            self.metrics
+                .count(Counter::TransportSendStalls, ts.send_stalls - self.transport_stalls_seen);
+            self.transport_stalls_seen = ts.send_stalls;
+        }
+        if ts.inline_fallbacks > self.inline_fallbacks_seen {
+            self.metrics.count(
+                Counter::TransportInlineFallbacks,
+                ts.inline_fallbacks - self.inline_fallbacks_seen,
+            );
+            self.inline_fallbacks_seen = ts.inline_fallbacks;
         }
     }
 

@@ -5,8 +5,10 @@
 //! Half a Trillion Agents"* (CS.DC 2025).
 //!
 //! The engine executes a single agent-based simulation across many *ranks*
-//! (the paper's MPI processes; here isolated OS threads connected by a
-//! simulated MPI transport). The simulation space is divided by a
+//! (the paper's MPI processes; here rank threads over in-process
+//! mailboxes, or **real OS processes** connected by the Unix-socket or
+//! shared-memory [`comm::Transport`] backends — `teraagent run
+//! --transport uds|shm`). The simulation space is divided by a
 //! [partitioning grid](space::partition) into mutually exclusive volumes;
 //! each rank is authoritative for its volume and the agents inside it.
 //! Every iteration performs:
@@ -45,9 +47,14 @@
 //! *published in place* (the encoder's buffer IS the mailbox message IS
 //! the decoder's input — the paper's "agents accessed directly from the
 //! receive buffer", extended to the whole wire), and spent buffers
-//! recycle on drop. The full frame lifecycle, with diagrams, is in
-//! `ARCHITECTURE.md` §"Transport and frame lifecycle"; the measured
-//! rows live in `BENCHMARKS.md`.
+//! recycle on drop. Behind the [`comm::Transport`] seam the same
+//! contract is carried by two real backends — a Unix-domain-socket mesh
+//! and a shared-memory slab — proven equivalent by the backend
+//! conformance suite (`tests/transport_conformance.rs`) and the
+//! 4-real-process bit-identity suite (`tests/multiprocess.rs`). The full
+//! frame lifecycle, with diagrams, is in `ARCHITECTURE.md` §"Transport
+//! and frame lifecycle" and §"Transport backends"; the measured rows
+//! live in `BENCHMARKS.md`.
 //!
 //! A paper-to-code map — which module implements which design element of
 //! the paper, plus an end-to-end walkthrough of one iteration — lives in

@@ -21,11 +21,90 @@ fn main() {
         "help" | "--help" | "-h" => print!("{}", cli::usage()),
         "info" => info(),
         "run" => run(&parsed.flags),
+        // Hidden: one rank of a multiprocess run (spawned by the
+        // launcher, never invoked by hand).
+        "_rank" => rank_child(&parsed.flags),
         other => {
             eprintln!("error: unknown command {other:?}\n\n{}", cli::usage());
             std::process::exit(2);
         }
     }
+}
+
+/// The `_rank` child: connect the multiprocess transport, run one rank to
+/// completion, write the binary outcome file the parent collects.
+fn rank_child(flags: &std::collections::BTreeMap<String, String>) {
+    use teraagent::comm::FaultPlan;
+    use teraagent::engine::launcher;
+
+    fn fail(msg: String) -> ! {
+        eprintln!("_rank error: {msg}");
+        std::process::exit(3);
+    }
+    let get = |k: &str| -> &String {
+        flags.get(k).unwrap_or_else(|| fail(format!("--{k} is required")))
+    };
+    let rendezvous = std::path::PathBuf::from(get("rendezvous"));
+    let rank: u32 = get("rank").parse().unwrap_or_else(|_| fail("--rank: bad number".into()));
+    let size: usize =
+        get("size").parse().unwrap_or_else(|_| fail("--size: bad number".into()));
+    let config_text = std::fs::read_to_string(get("config-file"))
+        .unwrap_or_else(|e| fail(format!("--config-file: {e}")));
+    let cfg = teraagent::config::SimConfig::from_toml(&config_text)
+        .unwrap_or_else(|e| fail(format!("config: {e}")));
+    if cfg.mode.ranks() != size {
+        fail(format!("--size {size} disagrees with config ranks {}", cfg.mode.ranks()));
+    }
+    if rank as usize >= size {
+        fail(format!("--rank {rank} out of range for size {size}"));
+    }
+    // Rebuild the scripted fault plan (if any) from the --chaos-* flags
+    // the parent serialized.
+    let getf = |k: &str| -> Option<f64> {
+        flags.get(k).map(|v| {
+            v.parse::<f64>().unwrap_or_else(|_| fail(format!("--{k}: bad number {v:?}")))
+        })
+    };
+    let geti = |k: &str| -> Option<u64> {
+        flags.get(k).map(|v| {
+            v.parse::<u64>().unwrap_or_else(|_| fail(format!("--{k}: bad number {v:?}")))
+        })
+    };
+    let has_chaos = flags.keys().any(|k| k.starts_with("chaos-"));
+    let chaos = has_chaos.then(|| {
+        let mut plan = FaultPlan::none(geti("chaos-seed").unwrap_or(cfg.seed));
+        if let Some(p) = getf("chaos-drop") {
+            plan = plan.with_drop(p);
+        }
+        if let Some(p) = getf("chaos-dup") {
+            plan = plan.with_duplicate(p);
+        }
+        if let Some(p) = getf("chaos-flip") {
+            plan = plan.with_bit_flip(p);
+        }
+        if let Some(n) = geti("chaos-max-faults") {
+            plan = plan.with_max_faults(n);
+        }
+        if let Some(k) = geti("chaos-kill-iter") {
+            plan = plan.with_kill_at_iteration(k);
+        }
+        if let Some(spec) = flags.get("chaos-tags") {
+            let tags: Vec<u32> = spec
+                .split(',')
+                .map(|t| {
+                    t.parse().unwrap_or_else(|_| fail(format!("--chaos-tags: bad tag {t:?}")))
+                })
+                .collect();
+            plan = plan.with_tags(tags);
+        }
+        plan
+    });
+    let killed = chaos.as_ref().and_then(|p| p.kill_at_iteration).is_some();
+    let outcome = models::run_rank_by_name(&cfg, rank, &rendezvous, chaos)
+        .unwrap_or_else(|e| fail(e));
+    let path = rendezvous.join(launcher::outcome_file_name(rank));
+    launcher::write_rank_outcome(&path, rank, killed, &outcome)
+        .unwrap_or_else(|e| fail(format!("write outcome: {e}")));
 }
 
 fn info() {

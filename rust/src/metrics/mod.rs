@@ -146,10 +146,17 @@ pub enum Counter {
     /// Partition boxes this rank adopted from dead ranks during a
     /// resharded restore (orphaned-range repartitioning).
     OrphanedBoxesAdopted,
+    /// Sends that hit the transport's bounded completion window and had
+    /// to spin/pump before the peer drained (UDS/shm backpressure).
+    /// Always zero on the in-process backend.
+    TransportSendStalls,
+    /// Shared-memory sends that fell back to inline-over-socket framing
+    /// because the slab was (transiently) full. Zero on non-shm backends.
+    TransportInlineFallbacks,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 18] = [
+    pub const ALL: [Counter; 20] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
@@ -168,6 +175,8 @@ impl Counter {
         Counter::RanksLost,
         Counter::ReshardRestores,
         Counter::OrphanedBoxesAdopted,
+        Counter::TransportSendStalls,
+        Counter::TransportInlineFallbacks,
     ];
 
     pub fn name(self) -> &'static str {
@@ -190,6 +199,8 @@ impl Counter {
             Counter::RanksLost => "ranks_lost",
             Counter::ReshardRestores => "reshard_restores",
             Counter::OrphanedBoxesAdopted => "orphaned_boxes_adopted",
+            Counter::TransportSendStalls => "transport_send_stalls",
+            Counter::TransportInlineFallbacks => "transport_inline_fallbacks",
         }
     }
 }

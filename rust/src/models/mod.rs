@@ -16,19 +16,80 @@ pub use cell_proliferation::CellProliferation;
 pub use epidemiology::Epidemiology;
 pub use oncology::TumorSpheroid;
 
+use crate::comm::FaultPlan;
 use crate::config::SimConfig;
-use crate::engine::launcher::{run_simulation, RunResult};
+use crate::engine::launcher::{
+    run_multiprocess, run_rank_process, run_simulation, RunResult,
+};
+use crate::engine::sim::RankOutcome;
+use std::path::Path;
 
-/// Run a benchmark by name (the CLI / bench entry point).
+/// Run a benchmark by name (the CLI / bench entry point). A multiprocess
+/// transport (`uds`/`shm`) routes through [`run_multiprocess_by_name`]:
+/// one real OS process per rank; the in-process transport spawns rank
+/// threads as before.
 pub fn run_by_name(cfg: &SimConfig) -> Result<RunResult, String> {
+    if cfg.transport.multiprocess() {
+        return run_multiprocess_by_name(cfg, None, &|_| None);
+    }
     match cfg.name.as_str() {
         "cell_clustering" => Ok(run_simulation(cfg, |_| CellClustering::new(cfg))),
         "cell_proliferation" => Ok(run_simulation(cfg, |_| CellProliferation::new(cfg))),
         "epidemiology" => Ok(run_simulation(cfg, |_| Epidemiology::new(cfg))),
         "oncology" => Ok(run_simulation(cfg, |_| TumorSpheroid::new(cfg))),
-        other => Err(format!(
-            "unknown simulation {other:?}; available: cell_clustering, cell_proliferation, epidemiology, oncology"
-        )),
+        other => Err(unknown_simulation(other)),
+    }
+}
+
+fn unknown_simulation(other: &str) -> String {
+    format!(
+        "unknown simulation {other:?}; available: cell_clustering, cell_proliferation, epidemiology, oncology"
+    )
+}
+
+/// Spawn one real OS process per rank for the named benchmark. `exe`
+/// overrides the child binary (integration tests pass
+/// `env!("CARGO_BIN_EXE_teraagent")`; `None` re-executes the current
+/// binary); `chaos(rank)` scripts per-rank fault plans onto the children.
+pub fn run_multiprocess_by_name(
+    cfg: &SimConfig,
+    exe: Option<&Path>,
+    chaos: &dyn Fn(u32) -> Option<FaultPlan>,
+) -> Result<RunResult, String> {
+    match cfg.name.as_str() {
+        "cell_clustering" => run_multiprocess(cfg, |_| CellClustering::new(cfg), exe, chaos),
+        "cell_proliferation" => {
+            run_multiprocess(cfg, |_| CellProliferation::new(cfg), exe, chaos)
+        }
+        "epidemiology" => run_multiprocess(cfg, |_| Epidemiology::new(cfg), exe, chaos),
+        "oncology" => run_multiprocess(cfg, |_| TumorSpheroid::new(cfg), exe, chaos),
+        other => Err(unknown_simulation(other)),
+    }
+}
+
+/// Run a single rank of the named benchmark inside the current process —
+/// the `_rank` child entry point, paired with [`run_multiprocess_by_name`]
+/// in the parent.
+pub fn run_rank_by_name(
+    cfg: &SimConfig,
+    rank: u32,
+    rendezvous: &Path,
+    chaos: Option<FaultPlan>,
+) -> Result<RankOutcome, String> {
+    match cfg.name.as_str() {
+        "cell_clustering" => {
+            Ok(run_rank_process(cfg, rank, rendezvous, CellClustering::new(cfg), chaos))
+        }
+        "cell_proliferation" => {
+            Ok(run_rank_process(cfg, rank, rendezvous, CellProliferation::new(cfg), chaos))
+        }
+        "epidemiology" => {
+            Ok(run_rank_process(cfg, rank, rendezvous, Epidemiology::new(cfg), chaos))
+        }
+        "oncology" => {
+            Ok(run_rank_process(cfg, rank, rendezvous, TumorSpheroid::new(cfg), chaos))
+        }
+        other => Err(unknown_simulation(other)),
     }
 }
 

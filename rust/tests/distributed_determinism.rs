@@ -190,3 +190,45 @@ fn epidemiology_population_statistics_stable_across_ranks() {
     assert!(a1 > 0.5 && a4 > 0.5, "epidemic must take off: {a1} {a4}");
     assert!((a1 - a4).abs() < 0.15, "attack rates must agree: {a1} vs {a4}");
 }
+
+#[test]
+fn transport_backend_is_bitwise_transparent() {
+    // The Transport seam must be invisible to the simulation: the same
+    // seeded 4-rank run over in-process mailboxes, the Unix-socket mesh,
+    // and the shared-memory slab (thread-per-rank over real wires here;
+    // the multiprocess suite covers separate OS processes) produces
+    // identical final position bits and identical per-rank send-stream
+    // CRCs.
+    use teraagent::comm::TransportKind;
+    let run = |transport: TransportKind| {
+        let cfg = SimConfig {
+            name: "cell_clustering".into(),
+            num_agents: 800,
+            iterations: 10,
+            space_half_extent: 30.0,
+            interaction_radius: 10.0,
+            seed: 2025,
+            sort_every: 3,
+            mode: ParallelMode::MpiOnly { ranks: 4 },
+            transport,
+            stream_audit: true,
+            ..Default::default()
+        };
+        let result = run_simulation(&cfg, |_| CellClustering::new(&cfg));
+        let mut pos: Vec<[u64; 3]> = result
+            .final_snapshot
+            .iter()
+            .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+            .collect();
+        pos.sort();
+        assert_eq!(result.stream_crcs.len(), 4, "audit digest per rank");
+        (pos, result.stream_crcs)
+    };
+    let (p_in, crc_in) = run(TransportKind::InProcess);
+    let (p_uds, crc_uds) = run(TransportKind::Uds);
+    let (p_shm, crc_shm) = run(TransportKind::Shm);
+    assert_eq!(p_in, p_uds, "positions diverged between in-process and uds");
+    assert_eq!(p_in, p_shm, "positions diverged between in-process and shm");
+    assert_eq!(crc_in, crc_uds, "send streams diverged between in-process and uds");
+    assert_eq!(crc_in, crc_shm, "send streams diverged between in-process and shm");
+}

@@ -1,0 +1,199 @@
+//! True multi-process determinism (ISSUE 8 acceptance): the same seeded
+//! simulation, run as 4 **real OS processes** over the UDS and shm
+//! transports, must be bit-identical to the in-process thread run — same
+//! final agent positions (exact bit patterns), same per-rank send-stream
+//! CRCs (the exchange byte-stream witness), same stats history. Chaos
+//! plans (drop / duplicate / bit-flip, and a scripted rank kill) thread
+//! through the real transports and the recovery ladder converges exactly
+//! as it does in-process.
+//!
+//! Children are spawned from the real `teraagent` binary
+//! (`CARGO_BIN_EXE_teraagent`) via the hidden `_rank` subcommand — no
+//! thread-simulated ranks anywhere in this file's multiprocess runs.
+
+use std::path::{Path, PathBuf};
+
+use teraagent::comm::mpi::tags;
+use teraagent::comm::{FaultPlan, TransportKind};
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher::run_simulation_with_chaos;
+use teraagent::engine::RunResult;
+use teraagent::models::cell_clustering::CellClustering;
+use teraagent::models::{run_by_name, run_multiprocess_by_name};
+
+const RANKS: usize = 4;
+
+fn exe() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_teraagent"))
+}
+
+fn clustering_cfg(transport: TransportKind) -> SimConfig {
+    SimConfig {
+        name: "cell_clustering".into(),
+        num_agents: 1_200,
+        iterations: 10,
+        space_half_extent: 40.0,
+        interaction_radius: 10.0,
+        seed: 2024,
+        mode: ParallelMode::MpiOnly { ranks: RANKS },
+        transport,
+        stream_audit: true,
+        ..Default::default()
+    }
+}
+
+/// Sorted final agent positions as exact bit patterns — the acceptance
+/// criterion is *bit*-identity, not tolerance.
+fn position_bits(result: &RunResult) -> Vec<[u64; 3]> {
+    let mut pos: Vec<[u64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    pos.sort();
+    pos
+}
+
+fn assert_bit_identical(oracle: &RunResult, got: &RunResult, label: &str) {
+    assert_eq!(oracle.final_agents, got.final_agents, "{label}: agent counts differ");
+    assert_eq!(
+        position_bits(oracle),
+        position_bits(got),
+        "{label}: final agent positions are not bit-identical"
+    );
+    assert_eq!(
+        oracle.stats_history, got.stats_history,
+        "{label}: per-iteration stats diverged"
+    );
+}
+
+/// Per-rank send-stream digests: the byte streams each rank handed to
+/// the transport must be identical, not just the final state.
+fn assert_streams_identical(oracle: &RunResult, got: &RunResult, label: &str) {
+    assert_eq!(oracle.stream_crcs.len(), RANKS, "{label}: oracle audit incomplete");
+    assert_eq!(
+        oracle.stream_crcs, got.stream_crcs,
+        "{label}: per-rank exchange byte streams diverged"
+    );
+}
+
+#[test]
+fn four_process_uds_matches_in_process_bit_for_bit() {
+    let oracle = run_by_name(&clustering_cfg(TransportKind::InProcess))
+        .expect("in-process oracle run");
+    let mp = run_multiprocess_by_name(&clustering_cfg(TransportKind::Uds), Some(exe()), &|_| {
+        None
+    })
+    .expect("4-process uds run");
+    assert_bit_identical(&oracle, &mp, "uds");
+    assert_streams_identical(&oracle, &mp, "uds");
+}
+
+#[test]
+fn four_process_shm_matches_in_process_bit_for_bit() {
+    let oracle = run_by_name(&clustering_cfg(TransportKind::InProcess))
+        .expect("in-process oracle run");
+    let mp = run_multiprocess_by_name(&clustering_cfg(TransportKind::Shm), Some(exe()), &|_| {
+        None
+    })
+    .expect("4-process shm run");
+    assert_bit_identical(&oracle, &mp, "shm");
+    assert_streams_identical(&oracle, &mp, "shm");
+}
+
+#[test]
+fn multiprocess_launcher_rejects_in_process_transport() {
+    let err = run_multiprocess_by_name(
+        &clustering_cfg(TransportKind::InProcess),
+        Some(exe()),
+        &|_| None,
+    )
+    .expect_err("in-process transport has no multiprocess launcher");
+    assert!(err.contains("multiprocess"), "unhelpful error: {err}");
+}
+
+/// Chaos through real wires: drop + duplicate + bit-flip plans installed
+/// on every child; the reliable exchange (NACK + archived retransmits)
+/// must converge the 4-process UDS run to the *clean* in-process oracle
+/// — bit-identical state and identical pre-chaos stream digests.
+#[test]
+fn chaos_faults_through_uds_converge_to_clean_oracle() {
+    let reliable = |transport: TransportKind| {
+        SimConfig {
+            recv_timeout_ms: 4_000,
+            ..clustering_cfg(transport)
+        }
+    };
+    let oracle =
+        run_by_name(&reliable(TransportKind::InProcess)).expect("clean reliable oracle");
+    let chaotic = run_multiprocess_by_name(&reliable(TransportKind::Uds), Some(exe()), &|rank| {
+        Some(
+            FaultPlan::none(0xFAB_0000 + u64::from(rank))
+                .with_drop(0.05)
+                .with_duplicate(0.05)
+                .with_bit_flip(0.05)
+                // The aura exchange is the reliable (NACK + archive)
+                // path; faults land there, same scoping as the comm-level
+                // convergence suite.
+                .with_tags(vec![tags::AURA])
+                .with_max_faults(40),
+        )
+    })
+    .expect("chaotic 4-process uds run");
+    assert_bit_identical(&oracle, &chaotic, "uds+chaos");
+    // The audit hashes what each rank *published* (pre-chaos, retransmits
+    // excluded), so recovery must leave the digests untouched too.
+    assert_streams_identical(&oracle, &chaotic, "uds+chaos");
+}
+
+/// Rank death through real processes: `kill_at_iteration` silences one
+/// child mid-run; the survivors detect it, restore from checkpoint, and
+/// adopt the orphaned space — landing bit-identically where the
+/// in-process (thread) recovery lands with the same script.
+#[test]
+fn killed_rank_through_uds_matches_thread_mode_recovery() {
+    const VICTIM: u32 = 3;
+    const KILL_AT: u64 = 3;
+    let scratch = |tag: &str| -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("teraagent_mp_death_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    };
+    let cfg = |transport: TransportKind, dir: &Path| {
+        SimConfig {
+            iterations: 8,
+            num_agents: 800,
+            checkpoint_every: 2,
+            recv_timeout_ms: 4_000,
+            death_timeout_ms: 250,
+            stream_audit: false,
+            artifacts_dir: dir.to_string_lossy().into_owned(),
+            ..clustering_cfg(transport)
+        }
+    };
+    let plan =
+        |rank: u32| (rank == VICTIM).then(|| FaultPlan::none(0xDEAD_0008).with_kill_at_iteration(KILL_AT));
+
+    let thread_dir = scratch("threads");
+    let thread_cfg = cfg(TransportKind::InProcess, &thread_dir);
+    let oracle = run_simulation_with_chaos(&thread_cfg, |_| CellClustering::new(&thread_cfg), plan);
+
+    let mp_dir = scratch("uds");
+    let mp_cfg = cfg(TransportKind::Uds, &mp_dir);
+    let mp = run_multiprocess_by_name(&mp_cfg, Some(exe()), &plan)
+        .expect("killed 4-process uds run");
+
+    // No agent goes down with the rank: survivors adopt the victim's
+    // checkpointed agents in both execution models.
+    assert_eq!(oracle.final_agents, mp.final_agents, "kill: survivor agent totals");
+    assert_eq!(oracle.final_agents, 800, "kill: orphaned agents must be adopted");
+    assert_eq!(
+        position_bits(&oracle),
+        position_bits(&mp),
+        "kill: multiprocess recovery diverged from thread-mode recovery"
+    );
+
+    let _ = std::fs::remove_dir_all(&thread_dir);
+    let _ = std::fs::remove_dir_all(&mp_dir);
+}

@@ -1,0 +1,508 @@
+//! Backend conformance battery (ISSUE 8 tentpole proof): every
+//! [`Transport`] implementation — in-process mailboxes, the Unix-domain-
+//! socket mesh, and the shared-memory slab — must satisfy the *same*
+//! behavioral contract the engine's exchange is built on. Each test below
+//! runs once per backend via [`all_backends`]; a failure names the
+//! backend, so a regression in one implementation cannot hide behind the
+//! others passing.
+//!
+//! Contract dimensions covered:
+//! - per-channel `(src, tag)` FIFO ordering;
+//! - ANY-source receive fairness under a flooding peer (the rotating
+//!   cursor in `MailboxCore`);
+//! - multi-chunk reassembly through real wires;
+//! - end-to-end integrity + NACK recovery under truncation/bit-flip
+//!   chaos (reliable path);
+//! - retry-archive semantics: retransmits are the archived originals,
+//!   byte-identical, served raw;
+//! - frame pool recycle lifecycle: no leaked `outstanding` frames once
+//!   traffic drains;
+//! - bounded completion latency: a sender blocked in `recv` still
+//!   flushes its queued frames to a slow destination (PR 4 follow-on);
+//! - p2p collective fallback (barrier / allgather / allreduce) over real
+//!   transports.
+//!
+//! [`Transport`]: teraagent::comm::Transport
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use teraagent::comm::batching::{
+    recv_all_batched_reliable, send_batched, Reassembler, RetryConfig, FRAME_HEADER,
+};
+use teraagent::comm::mpi::{tags, MpiWorld};
+use teraagent::comm::{
+    Communicator, FaultPlan, NetworkModel, ShmTransport, TransportKind, UdsTransport,
+};
+use teraagent::io::ta_io::ViewPool;
+
+// ---------------------------------------------------------------------
+// Harness: one factory per backend, each running a closure as `size`
+// concurrent ranks over a freshly built communicator mesh.
+// ---------------------------------------------------------------------
+
+trait TransportFactory: Sync {
+    fn kind(&self) -> TransportKind;
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+    /// Run `body(rank, comm)` on `size` concurrent ranks; panics in any
+    /// rank propagate (scoped threads re-raise on join).
+    fn run(&self, size: usize, body: &(dyn Fn(u32, &mut Communicator) + Sync));
+}
+
+struct InProcFactory;
+
+impl TransportFactory for InProcFactory {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProcess
+    }
+    fn run(&self, size: usize, body: &(dyn Fn(u32, &mut Communicator) + Sync)) {
+        let world = MpiWorld::new(size, NetworkModel::ideal());
+        std::thread::scope(|s| {
+            for rank in 0..size as u32 {
+                let world = Arc::clone(&world);
+                s.spawn(move || {
+                    let mut comm = world.communicator(rank);
+                    body(rank, &mut comm);
+                });
+            }
+        });
+    }
+}
+
+/// A scratch rendezvous directory unique across concurrently running
+/// tests in this process and across stale leftovers from older runs.
+fn scratch_dir(label: &str) -> PathBuf {
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    let pid = std::process::id();
+    let n = NONCE.fetch_add(1, Ordering::Relaxed);
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().subsec_nanos();
+    let dir = std::env::temp_dir().join(format!("ta-conf-{label}-{pid}-{n}-{t:x}"));
+    std::fs::create_dir_all(&dir).expect("create scratch rendezvous dir");
+    dir
+}
+
+struct UdsFactory;
+
+impl TransportFactory for UdsFactory {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Uds
+    }
+    fn run(&self, size: usize, body: &(dyn Fn(u32, &mut Communicator) + Sync)) {
+        let dir = scratch_dir("uds");
+        std::thread::scope(|s| {
+            for rank in 0..size as u32 {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let t = UdsTransport::connect(&dir, rank, size)
+                        .expect("uds mesh rendezvous");
+                    let mut comm = Communicator::new(Box::new(t), NetworkModel::ideal());
+                    body(rank, &mut comm);
+                });
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+struct ShmFactory;
+
+impl TransportFactory for ShmFactory {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Shm
+    }
+    fn run(&self, size: usize, body: &(dyn Fn(u32, &mut Communicator) + Sync)) {
+        let dir = scratch_dir("shm");
+        std::thread::scope(|s| {
+            for rank in 0..size as u32 {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    let t = ShmTransport::connect(&dir, rank, size)
+                        .expect("shm mesh rendezvous");
+                    let mut comm = Communicator::new(Box::new(t), NetworkModel::ideal());
+                    body(rank, &mut comm);
+                });
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn all_backends() -> Vec<Box<dyn TransportFactory>> {
+    vec![Box::new(InProcFactory), Box::new(UdsFactory), Box::new(ShmFactory)]
+}
+
+/// Run one battery item over every backend, labeling failures.
+fn for_each_backend(size: usize, body: impl Fn(u32, &mut Communicator) + Sync) {
+    for backend in all_backends() {
+        eprintln!("[conformance] backend={} size={size}", backend.name());
+        backend.run(size, &body);
+    }
+}
+
+fn pattern(len: usize, salt: u8) -> Vec<u8> {
+    (0..len).map(|i| (i as u8).wrapping_mul(31).wrapping_add(salt)).collect()
+}
+
+/// Spin until `cond` holds, pumping the transport each poll; panics with
+/// `what` after `deadline`. Transports deliver asynchronously, so
+/// draining assertions must wait, not sample.
+fn await_with_pump(
+    comm: &mut Communicator,
+    deadline: Duration,
+    what: &str,
+    mut cond: impl FnMut(&mut Communicator) -> bool,
+) {
+    let start = Instant::now();
+    loop {
+        comm.pump();
+        if cond(comm) {
+            return;
+        }
+        assert!(start.elapsed() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Battery
+// ---------------------------------------------------------------------
+
+/// Messages on the same `(src, tag)` channel arrive in send order, and
+/// interleaving channels (two tags, multiple peers) never bleed into each
+/// other.
+#[test]
+fn per_channel_fifo_ordering() {
+    const N: u32 = 25;
+    const TAGS: [u32; 2] = [tags::AURA, tags::MIGRATION];
+    for_each_backend(3, |rank, comm| {
+        let size = comm.size() as u32;
+        for dst in 0..size {
+            if dst == rank {
+                continue;
+            }
+            for (ti, &tag) in TAGS.iter().enumerate() {
+                for i in 0..N {
+                    let mut payload = vec![rank as u8, ti as u8];
+                    payload.extend_from_slice(&i.to_le_bytes());
+                    payload.extend_from_slice(&pattern(64 + i as usize, rank as u8));
+                    comm.isend(dst, tag, payload);
+                }
+            }
+        }
+        for src in 0..size {
+            if src == rank {
+                continue;
+            }
+            for (ti, &tag) in TAGS.iter().enumerate() {
+                for i in 0..N {
+                    let m = comm.recv(Some(src), Some(tag));
+                    assert_eq!(m.src, src, "wrong source on selective recv");
+                    assert_eq!(m.tag, tag, "wrong tag on selective recv");
+                    assert_eq!(m.data[0], src as u8, "payload source marker");
+                    assert_eq!(m.data[1], ti as u8, "payload tag marker");
+                    let seq = u32::from_le_bytes(m.data[2..6].try_into().unwrap());
+                    assert_eq!(seq, i, "out-of-order delivery on ({src},{tag:#x})");
+                    assert_eq!(
+                        &m.data[6..],
+                        &pattern(64 + i as usize, src as u8)[..],
+                        "payload corrupted in flight"
+                    );
+                }
+            }
+        }
+        comm.barrier();
+    });
+}
+
+/// A peer flooding one channel must not starve ANY-source receives of a
+/// quieter peer: the rotating mailbox cursor serves both sources within
+/// any two consecutive takes once both queues are non-empty.
+#[test]
+fn any_source_fairness_under_flooding() {
+    const FLOOD: usize = 50;
+    for_each_backend(3, |rank, comm| {
+        match rank {
+            1 => {
+                for i in 0..FLOOD {
+                    comm.isend(0, tags::AURA, pattern(128, i as u8));
+                }
+            }
+            2 => {
+                comm.isend(0, tags::AURA, b"quiet-peer".to_vec());
+            }
+            _ => {}
+        }
+        // Per-source FIFO streams order each peer's data frames before
+        // its barrier legs, so after the barrier rank 0's mailbox holds
+        // everything.
+        comm.barrier();
+        if rank == 0 {
+            let first = comm.recv(None, Some(tags::AURA));
+            let second = comm.recv(None, Some(tags::AURA));
+            let mut srcs = [first.src, second.src];
+            srcs.sort_unstable();
+            assert_eq!(
+                srcs,
+                [1, 2],
+                "rotating cursor must serve the quiet source within two takes"
+            );
+            let mut remaining = 0;
+            for _ in 0..FLOOD - 1 {
+                let m = comm.recv(Some(1), Some(tags::AURA));
+                assert_eq!(m.data.len(), 128);
+                remaining += 1;
+            }
+            assert_eq!(remaining, FLOOD - 1);
+        }
+        comm.barrier();
+    });
+}
+
+/// A chunked message reassembles bit-identically through real wires, on
+/// both the multi-chunk staging path and the single-frame direct path.
+#[test]
+fn multi_chunk_reassembly_round_trips() {
+    for_each_backend(2, |rank, comm| {
+        let big = pattern(50_000, 3);
+        let small = pattern(900, 4);
+        if rank == 0 {
+            // 50 KB / 4 KiB chunks: forces the staged multi-chunk path.
+            send_batched(comm, 1, tags::AURA, 7, &big, 4096);
+            // Fits one frame: the zero-copy direct path.
+            send_batched(comm, 1, tags::AURA, 8, &small, 4096);
+        } else {
+            let mut re = Reassembler::new();
+            let (id, bytes) = re.recv_batched(comm, 0, tags::AURA);
+            assert_eq!(id, 7);
+            assert_eq!(bytes, big, "multi-chunk payload mismatch");
+            let (id, bytes) = re.recv_batched(comm, 0, tags::AURA);
+            assert_eq!(id, 8);
+            assert_eq!(bytes, small, "single-frame payload mismatch");
+            assert_eq!(re.pending(), 0, "no partial streams may linger");
+        }
+        comm.barrier();
+    });
+}
+
+/// Reliable exchange under truncation + bit-flip chaos: the receiver
+/// detects corrupt frames by CRC, NACKs, and the sender's archived
+/// retransmissions converge the message to the exact sent bytes.
+#[test]
+fn integrity_recovers_from_truncation_and_bit_flips() {
+    const MSG_ID: u32 = 3;
+    for_each_backend(2, |rank, comm| {
+        comm.set_reliable(true);
+        let payload = pattern(40_000, 9);
+        if rank == 0 {
+            comm.install_chaos(
+                FaultPlan::none(0xC0FFEE)
+                    .with_truncate(0.35)
+                    .with_bit_flip(0.35)
+                    .with_tags(vec![tags::AURA])
+                    .with_max_faults(6),
+            );
+            send_batched(comm, 1, tags::AURA, MSG_ID, &payload, 2048);
+            // Serve NACKs until the receiver confirms completion.
+            let start = Instant::now();
+            loop {
+                comm.service_retry_queue();
+                if comm.try_recv(Some(1), Some(tags::CONTROL)).is_some() {
+                    break;
+                }
+                assert!(
+                    start.elapsed() < Duration::from_secs(20),
+                    "receiver never confirmed the chaos exchange"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert!(
+                comm.chaos_stats().injected() > 0,
+                "seeded plan must actually corrupt frames"
+            );
+            assert!(
+                comm.retransmits_served() > 0,
+                "corrupted frames must be re-served from the archive"
+            );
+        } else {
+            let mut re = Reassembler::new();
+            let mut staging = ViewPool::new();
+            let mut got = Vec::new();
+            let stats = recv_all_batched_reliable(
+                &mut re,
+                comm,
+                &[0],
+                tags::AURA,
+                MSG_ID,
+                &mut staging,
+                RetryConfig::default(),
+                |_k, slot| {
+                    got = slot.as_wire().to_vec();
+                    slot.recycle_into(&mut staging);
+                },
+            )
+            .expect("reliable receive must converge");
+            assert_eq!(got, payload, "recovered message must be bit-identical");
+            assert!(
+                stats.faults_detected + stats.retries_sent > 0,
+                "chaos plan injected faults the receiver never saw"
+            );
+            comm.isend(0, tags::CONTROL, vec![1]);
+        }
+        comm.barrier();
+    });
+}
+
+/// Retry-archive semantics: an explicit NACK for an already-delivered
+/// message replays the archived originals — same count, same bytes, same
+/// order — and the sender counts them as retransmits served.
+#[test]
+fn retry_archive_replays_identical_frames() {
+    const MSG_ID: u32 = 11;
+    const CHUNK: usize = 1024;
+    let payload = pattern(10_000, 5);
+    let n_frames = payload.len().div_ceil(CHUNK);
+    for_each_backend(2, |rank, comm| {
+        comm.set_reliable(true);
+        if rank == 0 {
+            let sent = send_batched(comm, 1, tags::AURA, MSG_ID, &payload, CHUNK);
+            assert_eq!(sent, n_frames);
+            let start = Instant::now();
+            loop {
+                comm.service_retry_queue();
+                if comm.try_recv(Some(1), Some(tags::CONTROL)).is_some() {
+                    break;
+                }
+                assert!(
+                    start.elapsed() < Duration::from_secs(20),
+                    "receiver never confirmed the replay"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            assert_eq!(
+                comm.retransmits_served() as usize, n_frames,
+                "every archived frame must be re-served exactly once"
+            );
+        } else {
+            let originals: Vec<Vec<u8>> = (0..n_frames)
+                .map(|_| comm.recv(Some(0), Some(tags::AURA)).data.to_vec())
+                .collect();
+            for f in &originals {
+                assert!(f.len() > FRAME_HEADER, "frame must carry header + chunk");
+            }
+            comm.request_retry(0, tags::AURA, MSG_ID);
+            let replayed: Vec<Vec<u8>> = (0..n_frames)
+                .map(|_| comm.recv(Some(0), Some(tags::AURA)).data.to_vec())
+                .collect();
+            assert_eq!(
+                originals, replayed,
+                "retransmits must be the archived originals, byte-identical"
+            );
+            comm.isend(0, tags::CONTROL, vec![1]);
+        }
+        comm.barrier();
+    });
+}
+
+/// Frame pool lifecycle: after traffic drains, every leased frame has
+/// been dropped and recycled — `outstanding` returns to zero on every
+/// rank, on every backend.
+#[test]
+fn frame_pool_recycles_to_zero_outstanding() {
+    const N: usize = 16;
+    for_each_backend(2, |rank, comm| {
+        let peer = 1 - rank;
+        for i in 0..N {
+            comm.isend(peer, tags::AURA, pattern(8 << 10, i as u8));
+        }
+        for _ in 0..N {
+            let m = comm.recv(Some(peer), Some(tags::AURA));
+            assert_eq!(m.data.len(), 8 << 10);
+            // Dropping `m` here returns the frame to its pool.
+        }
+        comm.barrier();
+        await_with_pump(comm, Duration::from_secs(5), "pool to drain", |c| {
+            c.frame_pool().stats().outstanding == 0
+        });
+        let stats = comm.frame_pool().stats();
+        assert!(stats.created > 0, "traffic must have leased pool frames");
+        assert!(stats.recycled > 0, "dropped frames must recycle, not leak");
+        comm.barrier();
+    });
+}
+
+/// Bounded completion latency (PR 4 follow-on): a sender whose frames
+/// are still queued behind a slow destination must complete them while
+/// blocked in `recv` — the pump-per-slice contract — rather than holding
+/// them hostage until its next send.
+#[test]
+fn queued_sends_complete_behind_slow_destination() {
+    const N: usize = 4;
+    const BIG: usize = 1 << 20;
+    for_each_backend(2, |rank, comm| {
+        if rank == 0 {
+            for i in 0..N {
+                comm.isend(1, tags::AURA, pattern(BIG, i as u8));
+            }
+            // The receiver is asleep: on the real backends these frames
+            // sit in the completion window. recv() must pump them out.
+            let ack = comm.recv(Some(1), Some(tags::CONTROL));
+            assert_eq!(&*ack.data, b"all-received");
+            await_with_pump(comm, Duration::from_secs(5), "send window to drain", |c| {
+                c.send_inflight() == 0
+            });
+        } else {
+            // Slow destination: don't touch the mailbox while the sender
+            // queues its burst.
+            std::thread::sleep(Duration::from_millis(250));
+            for i in 0..N {
+                let m = comm.recv(Some(0), Some(tags::AURA));
+                assert_eq!(&*m.data, &pattern(BIG, i as u8)[..], "big frame corrupted");
+            }
+            comm.isend(0, tags::CONTROL, b"all-received".to_vec());
+        }
+        comm.barrier();
+    });
+}
+
+/// Collectives (barrier, allgather, allreduce) agree across backends —
+/// on the real transports these exercise the p2p gather+bcast fallback
+/// over actual wires.
+#[test]
+fn collectives_agree_across_backends() {
+    for_each_backend(3, |rank, comm| {
+        let size = comm.size();
+        let mine = pattern(100 + rank as usize * 13, rank as u8);
+        let all = comm.allgather(mine);
+        assert_eq!(all.len(), size);
+        for (r, part) in all.iter().enumerate() {
+            assert_eq!(
+                part,
+                &pattern(100 + r * 13, r as u8),
+                "allgather slot {r} mismatch"
+            );
+        }
+        let sums = comm.allreduce_sum_f64(&[rank as f64, 1.0]);
+        let expect: f64 = (0..size as u32).map(f64::from).sum();
+        assert_eq!(sums, vec![expect, size as f64]);
+        comm.barrier();
+        comm.barrier();
+    });
+}
+
+/// The factory list itself is part of the contract: all three backends
+/// must be present and report the kinds the config layer names.
+#[test]
+fn all_backends_covers_every_transport_kind() {
+    let kinds: Vec<TransportKind> = all_backends().iter().map(|b| b.kind()).collect();
+    assert_eq!(
+        kinds,
+        vec![TransportKind::InProcess, TransportKind::Uds, TransportKind::Shm]
+    );
+    for backend in all_backends() {
+        assert_eq!(backend.name(), backend.kind().name());
+    }
+}
