@@ -1,0 +1,114 @@
+//! Social dynamics over the flat behavior arena (ROADMAP "flat behavior
+//! arena"): a heterogeneous workload where per-citizen behavior sets
+//! differ and churn at runtime — trade and reputation modules attach and
+//! drop as each citizen's wealth cycles — exercising the arena's
+//! free-extent allocator, the columnar wire path for behavior tails, and
+//! migration of multi-behavior agents across ranks.
+//!
+//! The run doubles as the distribution-transparency acceptance check:
+//! the same configuration executes at 1/2/8 threads per rank over the
+//! in-process transport and again over the Unix-domain-socket transport
+//! (one real OS process per rank), and every stats history must be
+//! **bit-identical**.
+//!
+//! ```bash
+//! cargo run --release --example social_dynamics
+//! ```
+
+use teraagent::cli;
+use teraagent::comm::TransportKind;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::engine::launcher;
+use teraagent::models;
+use teraagent::space::BoundaryCondition;
+
+const RANKS: usize = 2;
+
+fn config(threads: usize, transport: TransportKind) -> SimConfig {
+    SimConfig {
+        name: "social".into(),
+        num_agents: 2_000,
+        iterations: 40,
+        space_half_extent: 20.0,
+        interaction_radius: 2.0,
+        boundary: BoundaryCondition::Toroidal,
+        mode: ParallelMode::MpiHybrid { ranks: RANKS, threads_per_rank: threads },
+        transport,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    // A `uds` run re-executes this binary once per rank with the hidden
+    // `_rank` command; dispatch those children before doing anything else.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("_rank") {
+        rank_child(&args);
+        return;
+    }
+
+    println!("=== social dynamics: churning behavior sets over the flat arena ===");
+    let mut histories = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let cfg = config(threads, TransportKind::InProcess);
+        let result = models::run_by_name(&cfg).expect("in-process run");
+        println!(
+            "in-process  {RANKS} ranks x {threads} threads | {:7.3}s | final {:?}",
+            result.report.parallel_runtime_secs,
+            summarize(result.stats_history.last().unwrap()),
+        );
+        histories.push((format!("in-process {threads}t"), result.stats_history));
+    }
+    {
+        let cfg = config(2, TransportKind::Uds);
+        let result = models::run_by_name(&cfg).expect("uds run");
+        println!(
+            "uds         {RANKS} ranks x 2 threads | {:7.3}s | final {:?}",
+            result.report.parallel_runtime_secs,
+            summarize(result.stats_history.last().unwrap()),
+        );
+        histories.push(("uds 2t".into(), result.stats_history));
+    }
+
+    // The acceptance bar: every run is bit-identical — same rank count,
+    // so identical gid-keyed RNG streams, and nothing else may depend on
+    // threads or transport.
+    let (ref_name, reference) = &histories[0];
+    for (name, h) in &histories[1..] {
+        assert_eq!(h, reference, "{name} diverged from {ref_name}");
+    }
+    println!(
+        "bit-identity held across {} runs ({} iterations each)",
+        histories.len(),
+        reference.len()
+    );
+
+    let first = &reference[0];
+    let last = reference.last().unwrap();
+    println!(
+        "citizens {:.0} -> {:.0} | wealth {:.0} -> {:.0} | behaviors {:.0} -> {:.0}",
+        first[0], last[0], first[1], last[1], first[3], last[3]
+    );
+    println!("social_dynamics done");
+}
+
+/// One `_rank` child of the uds run: rebuild the config, run the rank,
+/// write the outcome file the parent collects (the same protocol as the
+/// `teraagent` binary's hidden `_rank` command, minus chaos scripting).
+fn rank_child(args: &[String]) {
+    let parsed = cli::parse(args).expect("_rank flags");
+    let get = |k: &str| -> &String {
+        parsed.flags.get(k).unwrap_or_else(|| panic!("_rank: --{k} is required"))
+    };
+    let rendezvous = std::path::PathBuf::from(get("rendezvous"));
+    let rank: u32 = get("rank").parse().expect("--rank");
+    let text = std::fs::read_to_string(get("config-file")).expect("--config-file");
+    let cfg = SimConfig::from_toml(&text).expect("child config");
+    let outcome = models::run_rank_by_name(&cfg, rank, &rendezvous, None).expect("rank run");
+    let path = rendezvous.join(launcher::outcome_file_name(rank));
+    launcher::write_rank_outcome(&path, rank, false, &outcome).expect("write outcome");
+}
+
+fn summarize(row: &[f64]) -> Vec<f64> {
+    row.iter().map(|v| (v * 100.0).round() / 100.0).collect()
+}

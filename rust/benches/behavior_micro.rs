@@ -1,0 +1,200 @@
+//! Behavior-dispatch micro-benchmark (ROADMAP "flat behavior arena").
+//!
+//! The arena refactor's claim: running every agent's behavior list out of
+//! one flat, slot-ordered pool beats resolving a boxed `Vec<Behavior>`
+//! per agent — and keeps most of its edge even after heavy attach/detach
+//! churn has scattered the extents, because a Morton resort compacts the
+//! pool back to sweep order.
+//!
+//! Rows, at 100k heterogeneous agents (every citizen walks, a third
+//! trades, a fifth tracks reputation — the `social` workload's mix):
+//! * **dispatch** — per-slot boxed `Vec<Vec<Behavior>>` serial sweep vs
+//!   the arena sweep ([`ResourceManager::behavior_sweep`]) at 1/2/8
+//!   threads, identical in-place parameter-update kernel;
+//! * **layout** — the arena sweep on the compacted (post-sort) pool vs
+//!   the same pool after churn fragmented the extents, and again after
+//!   the resort reclaims contiguity.
+//!
+//! Emits `BENCH_behavior.json` at the repo root; schema in
+//! `BENCHMARKS.md`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use teraagent::core::agent::{Agent, Behavior};
+use teraagent::core::ids::LocalId;
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::engine::pool::ThreadPool;
+use teraagent::util::{Rng, Vec3};
+
+const N_AGENTS: usize = 100_000;
+const SIDE: f64 = 400.0;
+
+/// The measured kernel: cheap in-place parameter updates, one match per
+/// behavior — dispatch and memory layout dominate, not arithmetic.
+fn bump(bs: &mut [Behavior]) {
+    for b in bs {
+        match b {
+            Behavior::RandomWalk { speed } => *speed *= 1.000_001,
+            Behavior::Trade { cooldown, gain, .. } => {
+                *cooldown = (*cooldown + 1) % 7;
+                *gain += 1e-9;
+            }
+            Behavior::Reputation { score, decay } => *score += *decay * 1e-6,
+            Behavior::Growth { rate, .. } => *rate += 1e-9,
+            _ => {}
+        }
+    }
+}
+
+fn workload() -> (ResourceManager, Vec<LocalId>) {
+    let mut rng = Rng::new(0xBE4A_10);
+    let mut rm = ResourceManager::new(0);
+    let mut scratch = Vec::new();
+    for i in 0..N_AGENTS {
+        let p = Vec3::from_array(rng.point_in([0.0; 3], [SIDE; 3]));
+        scratch.clear();
+        scratch.push(Behavior::RandomWalk { speed: 1.0 });
+        if i % 3 == 0 {
+            scratch.push(Behavior::Trade { radius: 2.0, gain: 0.5, cooldown: 0 });
+        }
+        if i % 5 == 0 {
+            scratch.push(Behavior::Reputation { score: 0.0, decay: 0.2 });
+        }
+        let id = rm.add_with_behaviors(Agent::citizen(p, 50.0), &scratch);
+        rm.ensure_global_id(id);
+    }
+    rm.sort_by_grid(Vec3::ZERO, 8.0, [50, 50, 50]);
+    let ids = rm.ids();
+    (rm, ids)
+}
+
+/// Arena sweep seconds at `threads` decode threads.
+fn sweep(rm: &mut ResourceManager, ids: &[LocalId], threads: usize) -> f64 {
+    let pool = ThreadPool::new(threads);
+    measure(2, 7, || {
+        let (effects, _) = rm.behavior_sweep(&pool, ids, |_, _, _, bs| {
+            bump(bs);
+            None::<()>
+        });
+        effects.len()
+    })
+    .median
+}
+
+/// Attach/detach churn: relocates every agent's extent several times so
+/// arena order no longer matches slot order.
+fn churn(rm: &mut ResourceManager, ids: &[LocalId]) {
+    for _ in 0..3 {
+        for &id in ids {
+            rm.attach_behavior(id, Behavior::Divide);
+        }
+        for &id in ids {
+            let n = rm.behaviors(id).unwrap().len();
+            rm.detach_behavior(id, n - 1);
+        }
+    }
+}
+
+fn main() {
+    header(
+        "behavior_micro — flat arena behavior dispatch",
+        "Fig. 2A block-tree layout; ROADMAP flat behavior arena",
+    );
+    let (mut rm, ids) = workload();
+    let n_behaviors = rm.behavior_count();
+    println!("  {} agents, {} behaviors", ids.len(), n_behaviors);
+
+    // --- boxed baseline: per-slot Vec<Behavior>, serial slot-resolved
+    // dispatch (the pre-refactor shape: one heap hop per agent).
+    let slots = ids.iter().map(|id| id.index).max().unwrap_or(0) as usize + 1;
+    let mut boxed: Vec<Vec<Behavior>> = vec![Vec::new(); slots];
+    for &id in &ids {
+        boxed[id.index as usize] = rm.behaviors(id).unwrap().to_vec();
+    }
+    let boxed_serial = measure(2, 7, || {
+        let mut touched = 0usize;
+        for &id in &ids {
+            let bs = &mut boxed[id.index as usize];
+            if !bs.is_empty() {
+                bump(bs);
+                touched += 1;
+            }
+        }
+        touched
+    })
+    .median;
+
+    // --- arena sweep, compacted pool
+    let arena_1t = sweep(&mut rm, &ids, 1);
+    let arena_2t = sweep(&mut rm, &ids, 2);
+    let arena_8t = sweep(&mut rm, &ids, 8);
+
+    // --- layout sensitivity: fragment the extents, then resort.
+    churn(&mut rm, &ids);
+    let churned_1t = sweep(&mut rm, &ids, 1);
+    rm.sort_by_grid(Vec3::ZERO, 8.0, [50, 50, 50]);
+    let sorted_ids = rm.ids();
+    let resorted_1t = sweep(&mut rm, &sorted_ids, 1);
+
+    let ratio = |base: f64, new: f64| if new > 0.0 { base / new } else { f64::INFINITY };
+    row_strs(&["dispatch 100k", "boxed serial", "arena", "speedup"]);
+    for (label, t) in [("1 thread", arena_1t), ("2 threads", arena_2t), ("8 threads", arena_8t)]
+    {
+        row(&[
+            label.into(),
+            fmt_secs(boxed_serial),
+            fmt_secs(t),
+            format!("{:.2}x", ratio(boxed_serial, t)),
+        ]);
+    }
+    row_strs(&["layout (1t)", "seconds", "vs sorted", ""]);
+    row(&["sorted".into(), fmt_secs(arena_1t), "1.00x".into(), "".into()]);
+    row(&[
+        "churned".into(),
+        fmt_secs(churned_1t),
+        format!("{:.2}x", ratio(churned_1t, arena_1t)),
+        "".into(),
+    ]);
+    row(&[
+        "resorted".into(),
+        fmt_secs(resorted_1t),
+        format!("{:.2}x", ratio(resorted_1t, arena_1t)),
+        "".into(),
+    ]);
+
+    let json = format!(
+        r#"{{
+  "bench": "behavior_micro",
+  "agents": {N_AGENTS},
+  "behaviors": {n_behaviors},
+  "dispatch": {{
+    "boxed_serial_s": {:.6e},
+    "arena_1t_s": {:.6e}, "arena_2t_s": {:.6e}, "arena_8t_s": {:.6e},
+    "speedup_1t": {:.3}, "speedup_8t": {:.3}
+  }},
+  "layout": {{
+    "sorted_1t_s": {:.6e}, "churned_1t_s": {:.6e}, "resorted_1t_s": {:.6e},
+    "churn_penalty": {:.3}
+  }}
+}}
+"#,
+        boxed_serial,
+        arena_1t,
+        arena_2t,
+        arena_8t,
+        ratio(boxed_serial, arena_1t),
+        ratio(boxed_serial, arena_8t),
+        arena_1t,
+        churned_1t,
+        resorted_1t,
+        ratio(churned_1t, arena_1t),
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_behavior.json");
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("  wrote {}", out.display()),
+        Err(e) => eprintln!("  could not write {}: {e}", out.display()),
+    }
+    println!("\nbehavior_micro done");
+}

@@ -150,12 +150,12 @@ fn run_plain(w: &mut Workload) -> PathTimes {
     let mut lz = lz4::Lz4Scratch::new();
     {
         // warm capacities
-        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, &mut payload);
         wire.clear();
         lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
     }
     t.encode_fast = measure(1, 5, || {
-        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        ta_io::serialize_columns_into(&w.rm.columns(), &w.ids, &mut payload);
         wire.clear();
         lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
         wire.len()
@@ -213,12 +213,12 @@ fn run_delta(w: &mut Workload) -> PathTimes {
     let mut payload = AlignedBuf::new();
     let mut wire: Vec<u8> = Vec::new();
     let mut lz = lz4::Lz4Scratch::new();
-    enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+    enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, &mut payload);
     let mut flip = false;
     t.encode_fast = measure(1, 5, || {
         drift(w, flip);
         flip = !flip;
-        enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, |s| w.rm.behaviors_of_slot(s), &mut payload);
+        enc_fast.encode_cols_into(&w.rm.columns(), &w.ids, &mut payload);
         wire.clear();
         lz4::compress_into(payload.as_slice(), &mut wire, &mut lz);
         wire.len()

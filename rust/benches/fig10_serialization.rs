@@ -10,14 +10,17 @@ mod harness;
 
 use harness::*;
 use teraagent::config::{ParallelMode, SimConfig};
-use teraagent::core::agent::{Agent, CellType, SirState};
+use teraagent::core::agent::{
+    growing_cell_behaviors, person_behaviors, tumor_cell_behaviors, Agent, Behavior, CellType,
+    SirState,
+};
 use teraagent::core::ids::GlobalId;
 use teraagent::io::{root_io, ta_io};
 use teraagent::metrics::{Counter, Op};
 use teraagent::models;
 use teraagent::util::{Rng, Vec3};
 
-fn payload(n: usize, seed: u64) -> Vec<Agent> {
+fn payload(n: usize, seed: u64) -> Vec<(Agent, Vec<Behavior>)> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|i| {
@@ -26,24 +29,25 @@ fn payload(n: usize, seed: u64) -> Vec<Agent> {
                 rng.uniform_range(-100.0, 100.0),
                 rng.uniform_range(-100.0, 100.0),
             );
-            let mut a = match i % 4 {
-                0 => Agent::cell(pos, 10.0, CellType::A),
-                1 => Agent::growing_cell(pos, 8.0),
-                2 => Agent::person(pos, SirState::Susceptible),
-                _ => Agent::tumor_cell(pos, 6.0),
+            let (mut a, bs) = match i % 4 {
+                0 => (Agent::cell(pos, 10.0, CellType::A), Vec::new()),
+                1 => (Agent::growing_cell(pos, 8.0), growing_cell_behaviors(8.0).to_vec()),
+                2 => (Agent::person(pos, SirState::Susceptible), person_behaviors().to_vec()),
+                _ => (Agent::tumor_cell(pos, 6.0), tumor_cell_behaviors(6.0).to_vec()),
             };
             a.global_id = GlobalId::new(0, i as u64);
-            a
+            (a, bs)
         })
         .collect()
 }
 
 fn micro(n: usize) {
     let agents = payload(n, 7);
-    let ser_ta = measure(3, 15, || ta_io::serialize(agents.iter()));
-    let ser_root = measure(3, 15, || root_io::serialize(agents.iter()));
-    let ta_buf = ta_io::serialize(agents.iter());
-    let root_buf = root_io::serialize(agents.iter());
+    let ser_ta = measure(3, 15, || ta_io::serialize_pairs(&agents));
+    let ser_root =
+        measure(3, 15, || root_io::serialize(agents.iter().map(|(a, b)| (a, &b[..]))));
+    let ta_buf = ta_io::serialize_pairs(&agents);
+    let root_buf = root_io::serialize(agents.iter().map(|(a, b)| (a, &b[..])));
     // TA IO timing includes the buffer clone: a just-received buffer is
     // cache-hot from the transport's write, which the clone emulates; the
     // copy is charged to TA IO, making the reported speedup conservative.

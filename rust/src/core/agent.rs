@@ -1,10 +1,16 @@
 //! The agent data model.
 //!
 //! An [`Agent`] is a fixed-layout header (ids, position, diameter, kind
-//! payload) plus a variable-length list of [`Behavior`]s — the same
+//! payload). Its variable-length list of [`Behavior`]s — the same
 //! block-tree shape (Fig. 2A of the paper: agent node with 0..n behavior
 //! children) that [TeraAgent IO](crate::io::ta_io) serializes by in-order
-//! traversal. "Polymorphism" (the paper's virtual classes) is enum-based:
+//! traversal — does NOT live on the agent: behaviors are pool-allocated in
+//! the [`BehaviorArena`](crate::core::resource_manager::BehaviorArena)
+//! owned by the `ResourceManager`, addressed by per-slot offset/length
+//! columns. The header itself is `Copy`; an agent in flight between ranks
+//! travels with its behavior slice in an [`AgentBatch`].
+//!
+//! "Polymorphism" (the paper's virtual classes) is enum-based:
 //! [`AgentKind`] carries the per-class payload, and its discriminant plays
 //! the role of the *class id written in place of the vtable pointer*.
 
@@ -85,6 +91,9 @@ pub enum AgentKind {
         /// Probability per iteration to be quiescent (no growth).
         quiescent: bool,
     },
+    /// A citizen in the social-dynamics model: carries wealth and a
+    /// reputation score that behaviors (Trade / Reputation) evolve.
+    Citizen { wealth: f64, reputation: f64 },
 }
 
 impl AgentKind {
@@ -95,6 +104,7 @@ impl AgentKind {
             AgentKind::GrowingCell { .. } => 2,
             AgentKind::Person { .. } => 3,
             AgentKind::TumorCell { .. } => 4,
+            AgentKind::Citizen { .. } => 5,
         }
     }
 
@@ -104,12 +114,18 @@ impl AgentKind {
             AgentKind::GrowingCell { .. } => "GrowingCell",
             AgentKind::Person { .. } => "Person",
             AgentKind::TumorCell { .. } => "TumorCell",
+            AgentKind::Citizen { .. } => "Citizen",
         }
     }
 }
 
 /// A behavior attached to an agent (the paper's behavior objects; the
 /// variable-length children of the agent's block tree).
+///
+/// Behaviors live in the
+/// [`BehaviorArena`](crate::core::resource_manager::BehaviorArena), not on
+/// the agent, so the type is deliberately `Copy`: arena compaction and
+/// extent relocation are plain memmoves.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Behavior {
     /// Deterministic diameter growth up to a maximum.
@@ -126,6 +142,11 @@ pub enum Behavior {
     },
     /// Tumor growth + division cycle (TumorCell).
     TumorGrowth { cycle_rate: f64, max_diameter: f64 },
+    /// Wealth exchange with nearby citizens; `cooldown` iterations of
+    /// rest after each trade (Citizen).
+    Trade { radius: f64, gain: f64, cooldown: u32 },
+    /// Reputation tracking toward wealth (Citizen).
+    Reputation { score: f64, decay: f64 },
 }
 
 impl Behavior {
@@ -137,13 +158,19 @@ impl Behavior {
             Behavior::RandomWalk { .. } => 3,
             Behavior::Infection { .. } => 4,
             Behavior::TumorGrowth { .. } => 5,
+            Behavior::Trade { .. } => 6,
+            Behavior::Reputation { .. } => 7,
         }
     }
 }
 
-/// An agent: fixed-layout header + behavior list (+ optional const pointer
+/// An agent header: fixed layout, `Copy` (+ optional const pointer
 /// to another agent, exercising the [`AgentPointer`] indirection).
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Behaviors are NOT stored here — they live in the owning
+/// `ResourceManager`'s behavior arena (or alongside the header in an
+/// [`AgentBatch`] while in transit).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Agent {
     /// Local identifier on the owning rank; reassigned on migration.
     pub local_id: LocalId,
@@ -152,7 +179,6 @@ pub struct Agent {
     pub position: Vec3,
     pub diameter: f64,
     pub kind: AgentKind,
-    pub behaviors: Vec<Behavior>,
     /// Optional reference to another agent (e.g. mother cell); const-only.
     pub neighbor_ref: AgentPointer,
 }
@@ -166,12 +192,12 @@ impl Agent {
             position,
             diameter,
             kind: AgentKind::Cell { cell_type, adhesion: 0.4 },
-            behaviors: Vec::new(),
             neighbor_ref: AgentPointer::NULL,
         }
     }
 
-    /// New growing/dividing cell.
+    /// New growing/dividing cell. Attach [`growing_cell_behaviors`] when
+    /// the cell should grow/divide through the behavior sweep.
     pub fn growing_cell(position: Vec3, diameter: f64) -> Agent {
         let volume = sphere_volume(diameter);
         Agent {
@@ -184,12 +210,12 @@ impl Agent {
                 growth_rate: volume * 0.05,
                 division_volume: volume * 2.0,
             },
-            behaviors: vec![Behavior::Growth { rate: 1.0, max_diameter: diameter * 2.0 }, Behavior::Divide],
             neighbor_ref: AgentPointer::NULL,
         }
     }
 
-    /// New person for the epidemiology model.
+    /// New person for the epidemiology model. Attach
+    /// [`person_behaviors`] when SIR dynamics should run in the sweep.
     pub fn person(position: Vec3, state: SirState) -> Agent {
         Agent {
             local_id: LocalId::INVALID,
@@ -197,15 +223,11 @@ impl Agent {
             position,
             diameter: 1.0,
             kind: AgentKind::Person { state, infected_for: 0 },
-            behaviors: vec![
-                Behavior::RandomWalk { speed: 1.0 },
-                Behavior::Infection { radius: 1.0, prob: 0.05, recovery_iters: 50 },
-            ],
             neighbor_ref: AgentPointer::NULL,
         }
     }
 
-    /// New tumor cell.
+    /// New tumor cell. Attach [`tumor_cell_behaviors`] for cycle dynamics.
     pub fn tumor_cell(position: Vec3, diameter: f64) -> Agent {
         Agent {
             local_id: LocalId::INVALID,
@@ -213,7 +235,18 @@ impl Agent {
             position,
             diameter,
             kind: AgentKind::TumorCell { cycle: 0.0, quiescent: false },
-            behaviors: vec![Behavior::TumorGrowth { cycle_rate: 0.04, max_diameter: diameter * 1.26 }],
+            neighbor_ref: AgentPointer::NULL,
+        }
+    }
+
+    /// New citizen for the social-dynamics model.
+    pub fn citizen(position: Vec3, wealth: f64) -> Agent {
+        Agent {
+            local_id: LocalId::INVALID,
+            global_id: GlobalId::UNSET,
+            position,
+            diameter: 1.0,
+            kind: AgentKind::Citizen { wealth, reputation: 0.0 },
             neighbor_ref: AgentPointer::NULL,
         }
     }
@@ -223,10 +256,144 @@ impl Agent {
         sphere_volume(self.diameter)
     }
 
-    /// Approximate heap size of this agent (header + behavior block).
+    /// Approximate size of this agent header. Behaviors are accounted by
+    /// the owning arena
+    /// ([`BehaviorArena::approx_bytes`](crate::core::resource_manager::BehaviorArena::approx_bytes)),
+    /// not per agent.
     pub fn approx_bytes(&self) -> u64 {
-        (std::mem::size_of::<Agent>() + self.behaviors.capacity() * std::mem::size_of::<Behavior>())
-            as u64
+        std::mem::size_of::<Agent>() as u64
+    }
+}
+
+/// The behavior set historically attached by `Agent::growing_cell`.
+pub fn growing_cell_behaviors(diameter: f64) -> [Behavior; 2] {
+    [Behavior::Growth { rate: 1.0, max_diameter: diameter * 2.0 }, Behavior::Divide]
+}
+
+/// The behavior set historically attached by `Agent::person`.
+pub fn person_behaviors() -> [Behavior; 2] {
+    [
+        Behavior::RandomWalk { speed: 1.0 },
+        Behavior::Infection { radius: 1.0, prob: 0.05, recovery_iters: 50 },
+    ]
+}
+
+/// The behavior set historically attached by `Agent::tumor_cell`.
+pub fn tumor_cell_behaviors(diameter: f64) -> [Behavior; 1] {
+    [Behavior::TumorGrowth { cycle_rate: 0.04, max_diameter: diameter * 1.26 }]
+}
+
+/// A set of agents in transit (checkpoint restore, spawn queue, owned
+/// decode) together with their behavior slices, stored flat: one
+/// `Vec<Behavior>` pool and a prefix-offset column — the same
+/// traversal-ordered layout as the wire and the arena, so batch ↔ arena
+/// moves are slice copies.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AgentBatch {
+    /// Agent headers, in batch order.
+    pub agents: Vec<Agent>,
+    beh: Vec<Behavior>,
+    /// Prefix offsets into `beh`; `off.len() == agents.len() + 1`.
+    off: Vec<u32>,
+}
+
+impl AgentBatch {
+    pub fn new() -> AgentBatch {
+        AgentBatch { agents: Vec::new(), beh: Vec::new(), off: vec![0] }
+    }
+
+    pub fn with_capacity(n: usize) -> AgentBatch {
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0);
+        AgentBatch { agents: Vec::with_capacity(n), beh: Vec::new(), off }
+    }
+
+    /// Wrap behavior-less agents.
+    pub fn from_agents(agents: Vec<Agent>) -> AgentBatch {
+        let off = vec![0; agents.len() + 1];
+        AgentBatch { agents, beh: Vec::new(), off }
+    }
+
+    pub fn len(&self) -> usize {
+        self.agents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.agents.is_empty()
+    }
+
+    /// Append an agent with its behavior slice.
+    pub fn push(&mut self, agent: Agent, behaviors: &[Behavior]) {
+        self.agents.push(agent);
+        self.beh.extend_from_slice(behaviors);
+        self.off.push(self.beh.len() as u32);
+    }
+
+    /// Append an agent, filling its behaviors from an iterator.
+    pub fn push_from(&mut self, agent: Agent, behaviors: impl Iterator<Item = Behavior>) {
+        self.agents.push(agent);
+        self.beh.extend(behaviors);
+        self.off.push(self.beh.len() as u32);
+    }
+
+    /// The behavior slice of batch entry `i`.
+    pub fn behaviors(&self, i: usize) -> &[Behavior] {
+        &self.beh[self.off[i] as usize..self.off[i + 1] as usize]
+    }
+
+    /// Total behaviors across all entries.
+    pub fn behavior_count(&self) -> usize {
+        self.beh.len()
+    }
+
+    /// Iterate `(header, behavior slice)` pairs in batch order.
+    pub fn iter(&self) -> impl Iterator<Item = (&Agent, &[Behavior])> {
+        self.agents
+            .iter()
+            .enumerate()
+            .map(move |(i, a)| (a, &self.beh[self.off[i] as usize..self.off[i + 1] as usize]))
+    }
+
+    pub fn clear(&mut self) {
+        self.agents.clear();
+        self.beh.clear();
+        self.off.clear();
+        self.off.push(0);
+    }
+
+    /// Keep only entries whose header satisfies `f`, compacting the
+    /// behavior pool in place (stable order).
+    pub fn retain(&mut self, mut f: impl FnMut(&Agent) -> bool) {
+        let mut w = 0usize;
+        let mut bw = 0usize;
+        for i in 0..self.agents.len() {
+            if f(&self.agents[i]) {
+                let (s, e) = (self.off[i] as usize, self.off[i + 1] as usize);
+                self.agents[w] = self.agents[i];
+                self.off[w] = bw as u32;
+                for j in s..e {
+                    self.beh[bw] = self.beh[j];
+                    bw += 1;
+                }
+                w += 1;
+            }
+        }
+        self.agents.truncate(w);
+        self.beh.truncate(bw);
+        self.off.truncate(w);
+        self.off.push(bw as u32);
+    }
+
+    /// Move all entries of `other` to the end of `self`.
+    pub fn append(&mut self, other: &mut AgentBatch) {
+        for i in 0..other.len() {
+            let a = other.agents[i];
+            self.agents.push(a);
+            self.beh
+                .extend_from_slice(&other.beh[other.off[i] as usize..other.off[i + 1] as usize]);
+            self.off.push(self.beh.len() as u32);
+        }
+        other.clear();
     }
 }
 
@@ -253,11 +420,13 @@ mod tests {
         assert!(matches!(c.kind, AgentKind::Cell { cell_type: CellType::B, .. }));
         let g = Agent::growing_cell(Vec3::ZERO, 10.0);
         assert_eq!(g.kind.class_id(), 2);
-        assert_eq!(g.behaviors.len(), 2);
+        assert_eq!(growing_cell_behaviors(10.0).len(), 2);
         let p = Agent::person(Vec3::ZERO, SirState::Infected);
         assert_eq!(p.kind.class_id(), 3);
         let t = Agent::tumor_cell(Vec3::ZERO, 10.0);
         assert_eq!(t.kind.class_id(), 4);
+        let z = Agent::citizen(Vec3::ZERO, 5.0);
+        assert_eq!(z.kind.class_id(), 5);
     }
 
     #[test]
@@ -267,6 +436,7 @@ mod tests {
             Agent::growing_cell(Vec3::ZERO, 1.0).kind.class_id(),
             Agent::person(Vec3::ZERO, SirState::Susceptible).kind.class_id(),
             Agent::tumor_cell(Vec3::ZERO, 1.0).kind.class_id(),
+            Agent::citizen(Vec3::ZERO, 1.0).kind.class_id(),
         ];
         let mut sorted = kinds.to_vec();
         sorted.sort();
@@ -294,11 +464,11 @@ mod tests {
     }
 
     #[test]
-    fn approx_bytes_counts_behaviors() {
-        let mut a = Agent::cell(Vec3::ZERO, 1.0, CellType::A);
-        let base = a.approx_bytes();
-        a.behaviors.push(Behavior::Divide);
-        assert!(a.approx_bytes() > base);
+    fn agent_header_is_fixed_size() {
+        // Behaviors live in the arena; the header's reported footprint must
+        // not depend on any behavior set.
+        let a = Agent::cell(Vec3::ZERO, 1.0, CellType::A);
+        assert_eq!(a.approx_bytes(), std::mem::size_of::<Agent>() as u64);
     }
 
     #[test]
@@ -309,10 +479,42 @@ mod tests {
             Behavior::RandomWalk { speed: 0.0 }.class_id(),
             Behavior::Infection { radius: 0.0, prob: 0.0, recovery_iters: 0 }.class_id(),
             Behavior::TumorGrowth { cycle_rate: 0.0, max_diameter: 0.0 }.class_id(),
+            Behavior::Trade { radius: 0.0, gain: 0.0, cooldown: 0 }.class_id(),
+            Behavior::Reputation { score: 0.0, decay: 0.0 }.class_id(),
         ];
         let mut s = ids.to_vec();
         s.sort();
         s.dedup();
         assert_eq!(s.len(), ids.len());
+    }
+
+    #[test]
+    fn batch_push_retain_append() {
+        let mut b = AgentBatch::new();
+        b.push(Agent::cell(Vec3::ZERO, 1.0, CellType::A), &[]);
+        b.push(Agent::person(Vec3::new(1.0, 0.0, 0.0), SirState::Susceptible), &person_behaviors());
+        b.push(Agent::tumor_cell(Vec3::new(2.0, 0.0, 0.0), 3.0), &tumor_cell_behaviors(3.0));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.behaviors(0).len(), 0);
+        assert_eq!(b.behaviors(1).len(), 2);
+        assert_eq!(b.behaviors(2).len(), 1);
+        assert_eq!(b.behavior_count(), 3);
+
+        // Drop the middle entry; the tumor cell's slice must survive intact.
+        b.retain(|a| a.kind.class_id() != 3);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.behaviors(0).len(), 0);
+        assert_eq!(b.behaviors(1), &tumor_cell_behaviors(3.0));
+
+        let mut c = AgentBatch::new();
+        c.push(Agent::citizen(Vec3::ZERO, 2.0), &[Behavior::RandomWalk { speed: 0.5 }]);
+        b.append(&mut c);
+        assert_eq!(b.len(), 3);
+        assert!(c.is_empty());
+        assert_eq!(b.behaviors(2), &[Behavior::RandomWalk { speed: 0.5 }]);
+        for (i, (a, bs)) in b.iter().enumerate() {
+            assert_eq!(bs.len(), b.behaviors(i).len());
+            assert_eq!(a.position, b.agents[i].position);
+        }
     }
 }

@@ -27,9 +27,25 @@
 //! through it without knowing the mirror exists. Columns of freed slots
 //! hold stale values by design; they are only read through live `LocalId`s
 //! (the NSG handle protocol guarantees liveness on the query path).
+//!
+//! # Behavior arena
+//!
+//! Agents do **not** own their behaviors: every behavior of every owned
+//! agent lives in one flat [`BehaviorArena`] pool, addressed per slot by
+//! the `beh_off`/`beh_len` columns (`beh_len` doubles as the columnar
+//! writer's `nbeh` column). The arena is the *whole-agent* completion of
+//! the SoA story — the variable-length behavior tail becomes columnar too,
+//! so the TA IO writer, the codec and the behavior-execution sweep stream
+//! behaviors from contiguous memory instead of chasing per-agent `Vec`s.
+//! Churn between sorts (attach/detach/remove) is served by a
+//! first-fit free-extent list with coalescing; the periodic Morton sort
+//! ([`sort_by_grid`](ResourceManager::sort_by_grid)) re-packs the pool in
+//! slot order in the same pass that compacts the slot vector, restoring
+//! perfect traversal order. See ARCHITECTURE.md §"Behavior arena".
 
 use super::agent::{Agent, AgentKind, Behavior, CellType};
 use super::ids::{AgentPointer, GlobalId, GlobalIdSource, LocalId};
+use crate::engine::pool::ThreadPool;
 use crate::io::ta_io::ColumnSource;
 use crate::util::Vec3;
 use std::collections::HashMap;
@@ -37,6 +53,270 @@ use std::ops::{Deref, DerefMut};
 
 /// Column filler for never-written slots (only live slots are ever read).
 const KIND_FILL: AgentKind = AgentKind::Cell { cell_type: CellType::A, adhesion: 0.0 };
+
+/// Flat pool of every behavior of every owned agent, in per-agent extents.
+///
+/// Invariant: the pool is exactly partitioned into live extents (addressed
+/// by the owning `ResourceManager`'s `beh_off`/`beh_len` columns) and the
+/// extents on the `free` list — pairwise disjoint, jointly covering
+/// `0..pool.len()`. The free list is kept sorted by offset and coalesced,
+/// and a freed extent that ends the pool is truncated away instead of
+/// parked, so steady-state churn cannot grow the pool's span beyond its
+/// high-water live size + fragmentation.
+#[derive(Debug, Default)]
+pub struct BehaviorArena {
+    pool: Vec<Behavior>,
+    /// Free extents `(offset, len)`, sorted by offset, coalesced.
+    free: Vec<(u32, u32)>,
+    /// Number of live (reachable) behaviors in the pool.
+    live: u32,
+    /// Spare buffer double-buffering the compaction pass (allocation-free
+    /// in steady state).
+    spare: Vec<Behavior>,
+}
+
+impl BehaviorArena {
+    pub fn new() -> BehaviorArena {
+        BehaviorArena::default()
+    }
+
+    /// The whole pool (live and free extents interleaved; index only
+    /// through live `(off, len)` extents).
+    #[inline]
+    pub fn pool(&self) -> &[Behavior] {
+        &self.pool
+    }
+
+    /// Length of the pool span (live + free slots).
+    #[inline]
+    pub fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Number of live behaviors.
+    #[inline]
+    pub fn live_len(&self) -> u32 {
+        self.live
+    }
+
+    /// Number of free extents (fragmentation view).
+    #[inline]
+    pub fn free_extents(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Borrow a live extent.
+    #[inline]
+    pub fn slice(&self, off: u32, len: u32) -> &[Behavior] {
+        &self.pool[off as usize..(off + len) as usize]
+    }
+
+    /// Mutably borrow a live extent.
+    #[inline]
+    pub fn slice_mut(&mut self, off: u32, len: u32) -> &mut [Behavior] {
+        &mut self.pool[off as usize..(off + len) as usize]
+    }
+
+    /// Allocate an extent holding `bs` (first-fit from the free list, else
+    /// appended at the pool end). Returns the extent offset.
+    pub fn alloc(&mut self, bs: &[Behavior]) -> u32 {
+        let len = bs.len() as u32;
+        if len == 0 {
+            return 0;
+        }
+        let off = self.reserve(len);
+        self.pool[off as usize..(off + len) as usize].copy_from_slice(bs);
+        off
+    }
+
+    /// [`alloc`](Self::alloc) filling the extent from an iterator (used by
+    /// wire decode to move behavior blocks straight into the pool).
+    pub fn alloc_from(&mut self, it: impl ExactSizeIterator<Item = Behavior>) -> (u32, u32) {
+        let len = it.len() as u32;
+        if len == 0 {
+            return (0, 0);
+        }
+        let off = self.reserve(len);
+        for (j, b) in it.enumerate() {
+            self.pool[off as usize + j] = b;
+        }
+        (off, len)
+    }
+
+    /// Reserve a `len`-slot extent (contents unspecified until written).
+    fn reserve(&mut self, len: u32) -> u32 {
+        debug_assert!(len > 0);
+        self.live += len;
+        if let Some(k) = self.free.iter().position(|&(_, l)| l >= len) {
+            let (fo, fl) = self.free[k];
+            if fl == len {
+                self.free.remove(k);
+            } else {
+                self.free[k] = (fo + len, fl - len);
+            }
+            fo
+        } else {
+            let fo = self.pool.len() as u32;
+            // `Divide` carries no payload and is the cheapest filler.
+            self.pool.resize(self.pool.len() + len as usize, Behavior::Divide);
+            fo
+        }
+    }
+
+    /// Return a live extent to the free list (coalescing with adjacent
+    /// free extents; an extent ending the pool is truncated away).
+    pub fn free_extent(&mut self, off: u32, len: u32) {
+        if len == 0 {
+            return;
+        }
+        debug_assert!(self.live >= len);
+        self.live -= len;
+        let mut off = off;
+        let mut len = len;
+        let mut k = self.free.partition_point(|&(o, _)| o < off);
+        if k > 0 {
+            let (po, pl) = self.free[k - 1];
+            debug_assert!(po + pl <= off, "freeing an extent overlapping a free one");
+            if po + pl == off {
+                off = po;
+                len += pl;
+                self.free.remove(k - 1);
+                k -= 1;
+            }
+        }
+        if k < self.free.len() {
+            let (no, nl) = self.free[k];
+            debug_assert!(off + len <= no, "freeing an extent overlapping a free one");
+            if off + len == no {
+                len += nl;
+                self.free.remove(k);
+            }
+        }
+        if (off + len) as usize == self.pool.len() {
+            self.pool.truncate(off as usize);
+        } else {
+            self.free.insert(k, (off, len));
+        }
+    }
+
+    /// Reallocate extent `(off, len)` to `(off', len + 1)` with `b`
+    /// appended; returns the new offset. Extends in place when the extent
+    /// ends the pool.
+    pub fn grow_extent(&mut self, off: u32, len: u32, b: Behavior) -> u32 {
+        if len > 0 && (off + len) as usize == self.pool.len() {
+            self.pool.push(b);
+            self.live += 1;
+            return off;
+        }
+        let need = len + 1;
+        let noff = if let Some(k) = self.free.iter().position(|&(_, l)| l >= need) {
+            let (fo, fl) = self.free[k];
+            if fl == need {
+                self.free.remove(k);
+            } else {
+                self.free[k] = (fo + need, fl - need);
+            }
+            for j in 0..len {
+                self.pool[(fo + j) as usize] = self.pool[(off + j) as usize];
+            }
+            self.pool[(fo + len) as usize] = b;
+            fo
+        } else {
+            let fo = self.pool.len() as u32;
+            for j in 0..len {
+                let v = self.pool[(off + j) as usize];
+                self.pool.push(v);
+            }
+            self.pool.push(b);
+            fo
+        };
+        // The new extent is live (`need` slots); freeing the old one below
+        // subtracts its `len`, netting the +1.
+        self.live += need;
+        self.free_extent(off, len);
+        noff
+    }
+
+    /// Remove the `k`-th behavior of extent `(off, len)` in place
+    /// (order-preserving shift; the vacated tail slot is freed).
+    pub fn remove_at(&mut self, off: u32, len: u32, k: u32) -> Behavior {
+        debug_assert!(k < len);
+        let b = self.pool[(off + k) as usize];
+        for j in k..len - 1 {
+            self.pool[(off + j) as usize] = self.pool[(off + j + 1) as usize];
+        }
+        self.free_extent(off + len - 1, 1);
+        b
+    }
+
+    /// Begin a compaction pass: swap the pool out (returned to the caller
+    /// for reading old extents), reset the free list. Pair with
+    /// [`end_compaction`](Self::end_compaction).
+    pub(crate) fn begin_compaction(&mut self) -> Vec<Behavior> {
+        let mut old = std::mem::take(&mut self.spare);
+        old.clear();
+        std::mem::swap(&mut old, &mut self.pool);
+        self.free.clear();
+        self.live = 0;
+        old
+    }
+
+    /// Append one agent's extent during compaction; returns its offset.
+    pub(crate) fn append_extent(&mut self, bs: &[Behavior]) -> u32 {
+        let off = self.pool.len() as u32;
+        self.pool.extend_from_slice(bs);
+        self.live += bs.len() as u32;
+        off
+    }
+
+    /// Finish a compaction pass, keeping the old pool's capacity as the
+    /// spare buffer for the next pass.
+    pub(crate) fn end_compaction(&mut self, mut old: Vec<Behavior>) {
+        old.clear();
+        self.spare = old;
+    }
+
+    /// Bytes held by the arena (pool + spare + free list), for memory
+    /// accounting — this replaces the old per-agent `Vec` capacity sums.
+    pub fn approx_bytes(&self) -> u64 {
+        ((self.pool.capacity() + self.spare.capacity()) * std::mem::size_of::<Behavior>()
+            + self.free.capacity() * std::mem::size_of::<(u32, u32)>()) as u64
+    }
+
+    /// Check the partition invariant against the owner's columns: live
+    /// extents + free extents tile the pool exactly, without overlap.
+    /// Test/debug aid; O(n log n).
+    pub fn check_coherent(&self, live_extents: impl Iterator<Item = (u32, u32)>) {
+        let mut ext: Vec<(u32, u32, bool)> =
+            live_extents.filter(|&(_, l)| l > 0).map(|(o, l)| (o, l, true)).collect();
+        let live_sum: u32 = ext.iter().map(|e| e.1).sum();
+        assert_eq!(live_sum, self.live, "live count mismatch");
+        ext.extend(self.free.iter().map(|&(o, l)| (o, l, false)));
+        ext.sort_unstable();
+        let mut cursor = 0u32;
+        for (o, l, _) in ext {
+            assert_eq!(o, cursor, "gap or overlap at pool offset {o}");
+            cursor = o + l;
+        }
+        assert_eq!(cursor as usize, self.pool.len(), "pool tail not covered");
+    }
+}
+
+/// Shared hot columns handed to each behavior-sweep closure invocation
+/// (read-only snapshot of the pre-sweep state; indexed by slot).
+pub struct SweepCols<'a> {
+    pub pos: &'a [Vec3],
+    pub diam: &'a [f64],
+    pub kind: &'a [AgentKind],
+    pub gid: &'a [GlobalId],
+}
+
+/// Mutable raw pointer into the arena pool, shared across sweep workers.
+/// Sound because live extents are pairwise disjoint and each live id is
+/// visited exactly once (see [`ResourceManager::behavior_sweep`]).
+struct PoolPtr(*mut Behavior);
+unsafe impl Send for PoolPtr {}
+unsafe impl Sync for PoolPtr {}
 
 /// Mutable agent borrow that writes the hot-path SoA columns back on drop,
 /// so arbitrary model mutations keep the mirror coherent.
@@ -47,7 +327,6 @@ pub struct AgentRefMut<'a> {
     kind: &'a mut AgentKind,
     gid: &'a mut GlobalId,
     nref: &'a mut AgentPointer,
-    nbeh: &'a mut u32,
 }
 
 impl Deref for AgentRefMut<'_> {
@@ -74,7 +353,6 @@ impl Drop for AgentRefMut<'_> {
         *self.kind = self.agent.kind;
         *self.gid = self.agent.global_id;
         *self.nref = self.agent.neighbor_ref;
-        *self.nbeh = self.agent.behaviors.len() as u32;
     }
 }
 
@@ -83,7 +361,7 @@ impl Drop for AgentRefMut<'_> {
 /// # Example: add, read through the SoA mirror, sort
 ///
 /// ```
-/// use teraagent::core::agent::{Agent, CellType};
+/// use teraagent::core::agent::{Agent, Behavior, CellType};
 /// use teraagent::core::resource_manager::ResourceManager;
 /// use teraagent::util::Vec3;
 ///
@@ -97,11 +375,16 @@ impl Drop for AgentRefMut<'_> {
 /// rm.get_mut(id).unwrap().diameter = 12.5;
 /// assert_eq!(rm.col_diameter(id.index), 12.5);
 ///
+/// // Behaviors live in the manager's flat arena, not on the agent.
+/// rm.attach_behavior(id, Behavior::RandomWalk { speed: 2.0 });
+/// assert_eq!(rm.behaviors(id).unwrap().len(), 1);
+///
 /// // The periodic Morton sort (§2.5) reassigns local ids: stale ids
-/// // stop resolving, agents and global ids survive.
+/// // stop resolving, agents, global ids and behaviors survive.
 /// rm.sort_by_position(Vec3::ZERO, 10.0);
 /// assert!(rm.get(id).is_none());
 /// assert_eq!(rm.len(), 2);
+/// assert_eq!(rm.arena().live_len(), 1);
 /// ```
 #[derive(Debug)]
 pub struct ResourceManager {
@@ -118,11 +401,17 @@ pub struct ResourceManager {
     diam_col: Vec<f64>,
     kind_col: Vec<AgentKind>,
     /// Exchange-path mirror columns: global id, agent reference and
-    /// behavior count — everything the columnar TA IO writer needs to
-    /// assemble an `AgentBlock` without reading the `Agent` struct.
+    /// behavior extent — everything the columnar TA IO writer needs to
+    /// assemble an `AgentBlock` (and stream its behavior children) without
+    /// reading the `Agent` struct.
     gid_col: Vec<GlobalId>,
     ref_col: Vec<AgentPointer>,
+    /// Behavior extent offset per slot (into the arena pool).
+    beh_off_col: Vec<u32>,
+    /// Behavior extent length per slot (the writer's `nbeh` column).
     nbeh_col: Vec<u32>,
+    /// Flat pool of all owned agents' behaviors.
+    arena: BehaviorArena,
     /// Aura agents (read-only copies of neighbor-rank agents).
     aura: Vec<Agent>,
     /// GlobalId -> owned slot index, for pointer resolution.
@@ -143,7 +432,9 @@ impl ResourceManager {
             kind_col: Vec::new(),
             gid_col: Vec::new(),
             ref_col: Vec::new(),
+            beh_off_col: Vec::new(),
             nbeh_col: Vec::new(),
+            arena: BehaviorArena::new(),
             aura: Vec::new(),
             global_map: HashMap::new(),
             id_source: GlobalIdSource::new(rank),
@@ -166,8 +457,31 @@ impl ResourceManager {
         self.slots.len()
     }
 
-    /// Add an agent, assigning its local id. Returns the id.
-    pub fn add(&mut self, mut agent: Agent) -> LocalId {
+    /// Add an agent with no behaviors, assigning its local id.
+    pub fn add(&mut self, agent: Agent) -> LocalId {
+        self.add_with_behaviors(agent, &[])
+    }
+
+    /// Add an agent together with its behavior set (copied into the
+    /// arena). Returns the assigned local id.
+    pub fn add_with_behaviors(&mut self, agent: Agent, behaviors: &[Behavior]) -> LocalId {
+        let off = self.arena.alloc(behaviors);
+        self.add_inner(agent, off, behaviors.len() as u32)
+    }
+
+    /// Add an agent, filling its behavior extent from an iterator — the
+    /// wire-ingest path (behavior blocks decode straight into the arena,
+    /// no intermediate `Vec`).
+    pub fn add_with_behaviors_from(
+        &mut self,
+        agent: Agent,
+        behaviors: impl ExactSizeIterator<Item = Behavior>,
+    ) -> LocalId {
+        let (off, len) = self.arena.alloc_from(behaviors);
+        self.add_inner(agent, off, len)
+    }
+
+    fn add_inner(&mut self, mut agent: Agent, beh_off: u32, beh_len: u32) -> LocalId {
         let index = match self.free.pop() {
             Some(i) => i,
             None => {
@@ -178,6 +492,7 @@ impl ResourceManager {
                 self.kind_col.push(KIND_FILL);
                 self.gid_col.push(GlobalId::UNSET);
                 self.ref_col.push(AgentPointer::NULL);
+                self.beh_off_col.push(0);
                 self.nbeh_col.push(0);
                 (self.slots.len() - 1) as u32
             }
@@ -193,19 +508,24 @@ impl ResourceManager {
         self.kind_col[index as usize] = agent.kind;
         self.gid_col[index as usize] = agent.global_id;
         self.ref_col[index as usize] = agent.neighbor_ref;
-        self.nbeh_col[index as usize] = agent.behaviors.len() as u32;
+        self.beh_off_col[index as usize] = beh_off;
+        self.nbeh_col[index as usize] = beh_len;
         self.slots[index as usize] = Some(agent);
         self.live += 1;
         id
     }
 
-    /// Remove an agent by local id; returns it if the id was live.
+    /// Remove an agent by local id; returns it if the id was live. The
+    /// agent's behavior extent returns to the arena free list.
     pub fn remove(&mut self, id: LocalId) -> Option<Agent> {
         let idx = id.index as usize;
         if idx >= self.slots.len() || self.reuse[idx] != id.reuse {
             return None;
         }
         let agent = self.slots[idx].take()?;
+        self.arena.free_extent(self.beh_off_col[idx], self.nbeh_col[idx]);
+        self.beh_off_col[idx] = 0;
+        self.nbeh_col[idx] = 0;
         // Bump reuse so stale ids can't resolve; recycle the slot. (The
         // SoA columns keep their now-stale values; only live ids read
         // them.)
@@ -244,7 +564,6 @@ impl ResourceManager {
             kind: &mut self.kind_col[idx],
             gid: &mut self.gid_col[idx],
             nref: &mut self.ref_col[idx],
-            nbeh: &mut self.nbeh_col[idx],
         })
     }
 
@@ -308,6 +627,8 @@ impl ResourceManager {
 
     /// Column view for the TA IO SoA-direct encoder. Slots of freed
     /// agents hold stale values; callers index only through live ids.
+    /// Behavior tails stream straight from the arena pool through the
+    /// `beh_off`/`nbeh` extent columns — no per-slot indirection.
     #[inline]
     pub fn columns(&self) -> ColumnSource<'_> {
         ColumnSource {
@@ -317,14 +638,157 @@ impl ResourceManager {
             gid: &self.gid_col,
             nref: &self.ref_col,
             nbeh: &self.nbeh_col,
+            beh_off: &self.beh_off_col,
+            beh: self.arena.pool(),
         }
     }
 
+    // ----- behavior arena --------------------------------------------------
+
+    /// The behavior arena (read view).
+    #[inline]
+    pub fn arena(&self) -> &BehaviorArena {
+        &self.arena
+    }
+
     /// Behavior slice of the agent in slot `index` (empty for holes) —
-    /// the variable-length tail the columnar writer resolves per agent.
+    /// an O(1) arena extent lookup.
     #[inline]
     pub fn behaviors_of_slot(&self, index: u32) -> &[Behavior] {
-        self.slots[index as usize].as_ref().map_or(&[], |a| &a.behaviors[..])
+        let i = index as usize;
+        if self.slots[i].is_none() {
+            return &[];
+        }
+        self.arena.slice(self.beh_off_col[i], self.nbeh_col[i])
+    }
+
+    /// Behavior slice of a live agent (None if the id is stale).
+    #[inline]
+    pub fn behaviors(&self, id: LocalId) -> Option<&[Behavior]> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse || self.slots[idx].is_none() {
+            return None;
+        }
+        Some(self.arena.slice(self.beh_off_col[idx], self.nbeh_col[idx]))
+    }
+
+    /// Mutable behavior slice of a live agent (in-place parameter
+    /// mutation; the extent length cannot change through this view —
+    /// use [`attach_behavior`](Self::attach_behavior) /
+    /// [`detach_behavior`](Self::detach_behavior) for that).
+    #[inline]
+    pub fn behaviors_mut(&mut self, id: LocalId) -> Option<&mut [Behavior]> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse || self.slots[idx].is_none() {
+            return None;
+        }
+        Some(self.arena.slice_mut(self.beh_off_col[idx], self.nbeh_col[idx]))
+    }
+
+    /// Append a behavior to a live agent's set (extent grows in place
+    /// when possible, else relocates within the arena). Returns `false`
+    /// for stale ids.
+    pub fn attach_behavior(&mut self, id: LocalId, b: Behavior) -> bool {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse || self.slots[idx].is_none() {
+            return false;
+        }
+        let (off, len) = (self.beh_off_col[idx], self.nbeh_col[idx]);
+        self.beh_off_col[idx] = self.arena.grow_extent(off, len, b);
+        self.nbeh_col[idx] = len + 1;
+        true
+    }
+
+    /// Remove the `k`-th behavior of a live agent (order-preserving).
+    /// Returns the removed behavior, or None for stale ids / bad index.
+    pub fn detach_behavior(&mut self, id: LocalId, k: usize) -> Option<Behavior> {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse || self.slots[idx].is_none() {
+            return None;
+        }
+        let (off, len) = (self.beh_off_col[idx], self.nbeh_col[idx]);
+        if k as u32 >= len {
+            return None;
+        }
+        let b = self.arena.remove_at(off, len, k as u32);
+        self.nbeh_col[idx] = len - 1;
+        if len == 1 {
+            self.beh_off_col[idx] = 0;
+        }
+        Some(b)
+    }
+
+    /// Replace a live agent's behavior set wholesale. Returns `false` for
+    /// stale ids.
+    pub fn set_behaviors(&mut self, id: LocalId, bs: &[Behavior]) -> bool {
+        let idx = id.index as usize;
+        if idx >= self.slots.len() || self.reuse[idx] != id.reuse || self.slots[idx].is_none() {
+            return false;
+        }
+        let (off, len) = (self.beh_off_col[idx], self.nbeh_col[idx]);
+        if len as usize == bs.len() {
+            self.arena.slice_mut(off, len).copy_from_slice(bs);
+            return true;
+        }
+        self.arena.free_extent(off, len);
+        self.beh_off_col[idx] = self.arena.alloc(bs);
+        self.nbeh_col[idx] = bs.len() as u32;
+        true
+    }
+
+    /// Total live behaviors across all owned agents.
+    #[inline]
+    pub fn behavior_count(&self) -> usize {
+        self.arena.live_len() as usize
+    }
+
+    /// Run `f` over every id in `ids` that carries behaviors, in parallel
+    /// chunks, handing each invocation the shared pre-sweep hot columns
+    /// and a **mutable** view of that agent's arena extent (in-place
+    /// parameter updates are free; structural changes are returned as
+    /// effects `E` and applied serially by the caller). Effects come back
+    /// flattened in `ids` order regardless of thread count — chunk
+    /// boundaries only partition the index space — so the sweep is
+    /// bit-deterministic at any parallelism.
+    ///
+    /// Safety: live extents are pairwise disjoint (arena partition
+    /// invariant) and `ids` contains unique live ids, so each extent is
+    /// mutably borrowed by exactly one closure invocation.
+    pub fn behavior_sweep<E: Send>(
+        &mut self,
+        pool: &ThreadPool,
+        ids: &[LocalId],
+        f: impl Fn(usize, LocalId, &SweepCols<'_>, &mut [Behavior]) -> Option<E> + Sync,
+    ) -> (Vec<E>, f64) {
+        let ptr = PoolPtr(self.arena.pool.as_mut_ptr());
+        let cols = SweepCols {
+            pos: &self.pos_col,
+            diam: &self.diam_col,
+            kind: &self.kind_col,
+            gid: &self.gid_col,
+        };
+        let beh_off = &self.beh_off_col;
+        let beh_len = &self.nbeh_col;
+        let ptr = &ptr;
+        let (chunks, cpu) = pool.map_chunks_timed(ids.len(), |_c, s, e| {
+            let mut out: Vec<E> = Vec::new();
+            for k in s..e {
+                let id = ids[k];
+                let i = id.index as usize;
+                let len = beh_len[i] as usize;
+                if len == 0 {
+                    continue;
+                }
+                let off = beh_off[i] as usize;
+                // SAFETY: disjoint live extents, unique ids (see above).
+                let bs = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(off), len) };
+                if let Some(eff) = f(k, id, &cols, bs) {
+                    out.push(eff);
+                }
+            }
+            out
+        });
+        (chunks.into_iter().flatten().collect(), cpu)
     }
 
     // -----------------------------------------------------------------------
@@ -399,7 +863,9 @@ impl ResourceManager {
     /// the point where buffers of migrated-in agents are compacted away
     /// (the paper's deferred-deallocation story). The SoA mirror is
     /// rebuilt in the same pass, so after sorting the hot columns stream
-    /// in Morton order too.
+    /// in Morton order too — and the behavior arena is re-packed in the
+    /// new slot order (extents contiguous, free list empty), restoring
+    /// perfect traversal locality for the sweep and the columnar writer.
     pub fn sort_by_position(&mut self, origin: Vec3, cell: f64) {
         self.resort(|a| morton3(a.position - origin, cell));
     }
@@ -416,15 +882,17 @@ impl ResourceManager {
         self.resort(|a| morton3_in_grid(a.position - origin, cell, dims));
     }
 
-    /// Shared resort body: drain, order by `key`, rebuild storage and the
-    /// SoA mirror from scratch.
+    /// Shared resort body: drain, order by `key`, rebuild storage, the
+    /// SoA mirror and the behavior arena from scratch.
     fn resort(&mut self, key: impl Fn(&Agent) -> u64) {
-        let mut agents: Vec<Agent> = self
-            .slots
-            .iter_mut()
-            .filter_map(|s| s.take())
-            .collect();
-        agents.sort_by_key(|a| key(a));
+        let old_pool = self.arena.begin_compaction();
+        let mut agents: Vec<(Agent, u32, u32)> = Vec::with_capacity(self.live);
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if let Some(a) = s.take() {
+                agents.push((a, self.beh_off_col[i], self.nbeh_col[i]));
+            }
+        }
+        agents.sort_by_key(|(a, _, _)| key(a));
         // Rebuild storage from scratch; reuse counters keep increasing per
         // slot so stale ids remain invalid.
         for r in self.reuse.iter_mut() {
@@ -443,13 +911,15 @@ impl ResourceManager {
         self.gid_col.resize(agents.len(), GlobalId::UNSET);
         self.ref_col.clear();
         self.ref_col.resize(agents.len(), AgentPointer::NULL);
+        self.beh_off_col.clear();
+        self.beh_off_col.resize(agents.len(), 0);
         self.nbeh_col.clear();
         self.nbeh_col.resize(agents.len(), 0);
         self.free.clear();
         self.global_map.clear();
         self.live = 0;
         let reuse_snapshot: Vec<u32> = self.reuse.clone();
-        for (i, mut a) in agents.into_iter().enumerate() {
+        for (i, (mut a, old_off, beh_len)) in agents.into_iter().enumerate() {
             let id = LocalId::new(i as u32, reuse_snapshot[i]);
             a.local_id = id;
             if a.global_id.is_set() {
@@ -460,13 +930,20 @@ impl ResourceManager {
             self.kind_col[i] = a.kind;
             self.gid_col[i] = a.global_id;
             self.ref_col[i] = a.neighbor_ref;
-            self.nbeh_col[i] = a.behaviors.len() as u32;
+            self.beh_off_col[i] = self
+                .arena
+                .append_extent(&old_pool[old_off as usize..(old_off + beh_len) as usize]);
+            self.nbeh_col[i] = beh_len;
             self.slots[i] = Some(a);
             self.live += 1;
         }
+        self.arena.end_compaction(old_pool);
     }
 
     /// Approximate live bytes of this container (for memory accounting).
+    /// Behavior memory is the arena's pool + free-list footprint
+    /// ([`BehaviorArena::approx_bytes`]) — there are no per-agent heap
+    /// blocks to sum anymore.
     pub fn approx_bytes(&self) -> u64 {
         let slot_bytes = self.slots.capacity() * std::mem::size_of::<Option<Agent>>();
         let aux = self.reuse.capacity() * 4
@@ -476,14 +953,22 @@ impl ResourceManager {
             + self.kind_col.capacity() * std::mem::size_of::<AgentKind>()
             + self.gid_col.capacity() * std::mem::size_of::<GlobalId>()
             + self.ref_col.capacity() * std::mem::size_of::<AgentPointer>()
+            + self.beh_off_col.capacity() * 4
             + self.nbeh_col.capacity() * 4
             + self.global_map.len() * (std::mem::size_of::<GlobalId>() + 8);
-        let behaviors: usize = self
-            .iter()
-            .map(|a| a.behaviors.capacity() * std::mem::size_of::<super::agent::Behavior>())
-            .sum();
         let aura = self.aura.capacity() * std::mem::size_of::<Agent>();
-        (slot_bytes + aux + behaviors + aura) as u64
+        (slot_bytes + aux + aura) as u64 + self.arena.approx_bytes()
+    }
+
+    /// Assert the arena partition invariant (test/debug aid).
+    pub fn check_arena_coherent(&self) {
+        self.arena.check_coherent(
+            self.slots
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.is_some())
+                .map(|(i, _)| (self.beh_off_col[i], self.nbeh_col[i])),
+        );
     }
 }
 
@@ -582,6 +1067,9 @@ mod tests {
         assert!(rm.get_mut(id1).is_none());
         assert!(rm.remove(id1).is_none());
         assert!(!rm.set_position(id1, Vec3::splat(1.0)));
+        assert!(rm.behaviors(id1).is_none());
+        assert!(!rm.attach_behavior(id1, Behavior::Divide));
+        assert!(rm.detach_behavior(id1, 0).is_none());
     }
 
     #[test]
@@ -664,6 +1152,22 @@ mod tests {
         assert!(rm.approx_bytes() > 0);
     }
 
+    #[test]
+    fn approx_bytes_tracks_arena_not_agents() {
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add(mk(Vec3::ZERO));
+        let base = rm.approx_bytes();
+        // Attaching enough behaviors to force a pool allocation must show
+        // up in the container accounting (via the arena), even though the
+        // Agent struct itself never changes size.
+        for _ in 0..64 {
+            rm.attach_behavior(id, Behavior::Divide);
+        }
+        assert!(rm.approx_bytes() > base);
+        assert_eq!(rm.arena().live_len(), 64);
+        assert!(rm.arena().approx_bytes() >= 64 * std::mem::size_of::<Behavior>() as u64);
+    }
+
     // ----- SoA mirror coherence --------------------------------------------
 
     #[test]
@@ -724,11 +1228,11 @@ mod tests {
         // ensure_global_id writes through to the gid column.
         let gid = rm.ensure_global_id(id).unwrap();
         assert_eq!(rm.columns().gid[id.index as usize], gid);
-        // Guard drop flushes behaviors count and neighbor ref.
+        // Attach writes the extent columns; the guard flushes neighbor ref.
         let target = crate::core::ids::GlobalId::new(1, 9);
+        rm.attach_behavior(id, crate::core::agent::Behavior::Divide);
         {
             let mut a = rm.get_mut(id).unwrap();
-            a.behaviors.push(crate::core::agent::Behavior::Divide);
             a.neighbor_ref = AgentPointer::to(target);
         }
         assert_eq!(rm.columns().nbeh[id.index as usize], 1);
@@ -741,6 +1245,8 @@ mod tests {
         assert_eq!(rm.columns().gid[idx], gid);
         assert_eq!(rm.columns().nbeh[idx], 1);
         assert_eq!(rm.columns().nref[idx].target, target);
+        assert_eq!(rm.behaviors_of_slot(a.local_id.index), &[Behavior::Divide]);
+        rm.check_arena_coherent();
     }
 
     #[test]
@@ -758,5 +1264,148 @@ mod tests {
         assert_eq!(buf.len(), 5);
         assert_eq!(buf.capacity(), cap, "steady-state collect must not realloc");
         assert_eq!(buf, rm.ids());
+    }
+
+    // ----- behavior arena --------------------------------------------------
+
+    #[test]
+    fn arena_alloc_free_coalesce_truncate() {
+        let mut ar = BehaviorArena::new();
+        let a = ar.alloc(&[Behavior::Divide, Behavior::Divide]);
+        let b = ar.alloc(&[Behavior::RandomWalk { speed: 1.0 }]);
+        let c = ar.alloc(&[Behavior::Divide; 3]);
+        assert_eq!((a, b, c), (0, 2, 3));
+        assert_eq!(ar.live_len(), 6);
+        assert_eq!(ar.pool_len(), 6);
+        // Free the middle extent: parked on the free list.
+        ar.free_extent(b, 1);
+        assert_eq!(ar.free_extents(), 1);
+        assert_eq!(ar.pool_len(), 6);
+        // Free the tail extent: coalesces with the parked hole and the
+        // whole merged span ends the pool, so it truncates away.
+        ar.free_extent(c, 3);
+        assert_eq!(ar.free_extents(), 0);
+        assert_eq!(ar.pool_len(), 2);
+        assert_eq!(ar.live_len(), 2);
+        // Free the head extent: pool fully returns.
+        ar.free_extent(a, 2);
+        assert_eq!(ar.pool_len(), 0);
+        assert_eq!(ar.live_len(), 0);
+    }
+
+    #[test]
+    fn arena_first_fit_reuses_hole() {
+        let mut ar = BehaviorArena::new();
+        let a = ar.alloc(&[Behavior::Divide; 3]);
+        let _b = ar.alloc(&[Behavior::Divide; 2]);
+        ar.free_extent(a, 3);
+        assert_eq!(ar.free_extents(), 1);
+        // A 2-slot alloc fits in the 3-slot hole (split, prefix reused).
+        let c = ar.alloc(&[Behavior::RandomWalk { speed: 2.0 }; 2]);
+        assert_eq!(c, 0);
+        assert_eq!(ar.pool_len(), 5, "no growth while a fitting hole exists");
+        assert_eq!(ar.free_extents(), 1);
+        // The remaining 1-slot hole serves a 1-slot alloc exactly.
+        let d = ar.alloc(&[Behavior::Divide]);
+        assert_eq!(d, 2);
+        assert_eq!(ar.free_extents(), 0);
+        assert_eq!(ar.pool_len(), 5);
+    }
+
+    #[test]
+    fn attach_detach_roundtrip() {
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add(mk(Vec3::ZERO));
+        let other = rm.add(mk(Vec3::ZERO));
+        rm.attach_behavior(other, Behavior::Divide); // interleave extents
+        assert!(rm.attach_behavior(id, Behavior::Growth { rate: 1.0, max_diameter: 2.0 }));
+        assert!(rm.attach_behavior(id, Behavior::RandomWalk { speed: 0.5 }));
+        assert!(rm.attach_behavior(id, Behavior::Divide));
+        assert_eq!(rm.behaviors(id).unwrap().len(), 3);
+        rm.check_arena_coherent();
+        // Detach the middle one: order of the rest is preserved.
+        let removed = rm.detach_behavior(id, 1).unwrap();
+        assert_eq!(removed, Behavior::RandomWalk { speed: 0.5 });
+        assert_eq!(
+            rm.behaviors(id).unwrap(),
+            &[Behavior::Growth { rate: 1.0, max_diameter: 2.0 }, Behavior::Divide]
+        );
+        assert_eq!(rm.behavior_count(), 3); // 2 here + 1 on `other`
+        rm.check_arena_coherent();
+        // In-place parameter mutation through the mutable slice.
+        if let Behavior::Growth { rate, .. } = &mut rm.behaviors_mut(id).unwrap()[0] {
+            *rate = 9.0;
+        }
+        assert!(matches!(rm.behaviors(id).unwrap()[0], Behavior::Growth { rate, .. } if rate == 9.0));
+        // Wholesale replacement with a different length reallocates.
+        assert!(rm.set_behaviors(id, &[Behavior::Divide]));
+        assert_eq!(rm.behaviors(id).unwrap(), &[Behavior::Divide]);
+        rm.check_arena_coherent();
+        // Removing the agent frees its extent.
+        rm.remove(id).unwrap();
+        assert_eq!(rm.behavior_count(), 1);
+        rm.check_arena_coherent();
+    }
+
+    #[test]
+    fn sort_compacts_arena_in_slot_order() {
+        let mut rm = ResourceManager::new(0);
+        // Reverse-x agents with distinct behavior counts (i % 3).
+        for i in 0..30u32 {
+            let id = rm.add(mk(Vec3::new((30 - i) as f64, 0.0, 0.0)));
+            for _ in 0..(i % 3) {
+                rm.attach_behavior(id, Behavior::RandomWalk { speed: i as f64 });
+            }
+        }
+        // Churn a few holes into the pool.
+        let ids = rm.ids();
+        rm.remove(ids[4]);
+        rm.remove(ids[17]);
+        let live_behaviors = rm.behavior_count();
+        rm.sort_by_position(Vec3::ZERO, 1.0);
+        rm.check_arena_coherent();
+        // After the sort the pool is exactly the live behaviors, extents
+        // are contiguous in slot order, and the free list is empty.
+        assert_eq!(rm.arena().pool_len(), live_behaviors);
+        assert_eq!(rm.arena().free_extents(), 0);
+        let mut cursor = 0u32;
+        for a in rm.iter() {
+            let i = a.local_id.index as usize;
+            assert_eq!(rm.columns().beh_off[i], cursor);
+            cursor += rm.columns().nbeh[i];
+            // Extent contents follow the agent (speed == original x key).
+            for b in rm.behaviors_of_slot(a.local_id.index) {
+                assert!(matches!(b, Behavior::RandomWalk { speed } if (30.0 - speed) == a.position.x));
+            }
+        }
+    }
+
+    #[test]
+    fn behavior_sweep_mutates_in_place_and_orders_effects() {
+        let mut rm = ResourceManager::new(0);
+        let mut expect = Vec::new();
+        for i in 0..40u32 {
+            let id = rm.add(mk(Vec3::new(i as f64, 0.0, 0.0)));
+            if i % 2 == 0 {
+                rm.attach_behavior(id, Behavior::RandomWalk { speed: i as f64 });
+                expect.push(i as f64);
+            }
+        }
+        let ids = rm.ids();
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let (effects, _cpu) = rm.behavior_sweep(&pool, &ids, |_k, _id, cols, bs| {
+                let mut out = None;
+                for b in bs.iter_mut() {
+                    if let Behavior::RandomWalk { speed } = b {
+                        out = Some(*speed);
+                        *speed += 0.0; // in-place mutation is allowed
+                        let _ = cols.pos; // columns are readable
+                    }
+                }
+                out
+            });
+            assert_eq!(effects, expect, "effects must come back in ids order");
+        }
     }
 }

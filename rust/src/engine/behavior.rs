@@ -1,0 +1,399 @@
+//! Arena-resident behavior execution (the engine phase between mechanics
+//! and the model step).
+//!
+//! Behaviors live in the `ResourceManager`'s flat
+//! [`BehaviorArena`](crate::core::resource_manager::BehaviorArena), so
+//! executing them is a cache-linear sweep over `(slot, extent)` pairs:
+//! [`ResourceManager::behavior_sweep`] hands each closure invocation the
+//! shared read-only hot columns plus a *mutable* view of that agent's
+//! extent. Parameter updates (trade cooldowns, reputation scores) mutate
+//! the arena in place; structural changes — moves, kind transitions,
+//! divisions — come back as [`SlotEffect`]s, flattened in slot order
+//! regardless of thread count, and are applied serially by the engine.
+//! That split is what keeps the phase bit-deterministic at any
+//! parallelism: the parallel part only reads shared state and writes
+//! disjoint extents, while everything order-sensitive happens on the rank
+//! thread in slot order.
+//!
+//! Determinism across thread counts and transports also requires the
+//! per-agent randomness to be independent of slot index and sweep
+//! schedule: each slot draws from an [`Rng`] stream keyed by the agent's
+//! *global* id and the iteration number (the engine ensures global ids
+//! exist before the sweep). Neighbor-dependent behaviors (infection,
+//! trade) reduce their neighborhood to an integer count — an
+//! order-independent quantity — before consuming any randomness.
+
+use crate::core::agent::{Agent, AgentKind, Behavior, SirState};
+use crate::core::ids::{AgentPointer, GlobalId, LocalId};
+use crate::core::resource_manager::SweepCols;
+use crate::engine::world::AuraStore;
+use crate::space::{NeighborSearchGrid, NsgEntry};
+use crate::util::{Rng, Vec3};
+
+/// Diameter at which a [`Behavior::Divide`] cell splits.
+pub const DIVIDE_DIAMETER: f64 = 8.0;
+/// Iterations a citizen rests after a completed trade.
+pub const TRADE_REST: u32 = 5;
+
+/// Read-only context shared by every sweep invocation.
+pub struct BehaviorCtx<'a> {
+    pub iteration: u64,
+    pub seed: u64,
+    pub nsg: &'a NeighborSearchGrid,
+    pub aura: &'a AuraStore,
+}
+
+/// Structural changes one agent's behaviors requested this sweep. Applied
+/// serially in slot order by the engine (position moves go through the
+/// boundary condition and the NSG; a division child inherits the parent's
+/// behavior set from the arena).
+pub struct SlotEffect {
+    pub id: LocalId,
+    pub new_pos: Option<Vec3>,
+    pub new_diameter: Option<f64>,
+    pub new_kind: Option<AgentKind>,
+    /// Division child (position not yet boundary-applied). The parent's
+    /// post-division diameter rides in `new_diameter`.
+    pub child: Option<Agent>,
+}
+
+impl SlotEffect {
+    fn new(id: LocalId) -> Self {
+        SlotEffect { id, new_pos: None, new_diameter: None, new_kind: None, child: None }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.new_pos.is_none()
+            && self.new_diameter.is_none()
+            && self.new_kind.is_none()
+            && self.child.is_none()
+    }
+}
+
+/// Stream key for one agent's per-iteration RNG: a pure function of the
+/// (constant) global id, so the draw sequence is independent of slot
+/// index, thread count and arrival order.
+#[inline]
+fn gid_key(gid: GlobalId) -> u64 {
+    ((gid.rank as u64) << 40) ^ gid.counter
+}
+
+/// Execute every behavior of one agent. `bs` is the agent's live arena
+/// extent: in-place writes are the parameter-update fast path. Returns
+/// `None` when nothing structural changed.
+pub fn run_slot(
+    id: LocalId,
+    cols: &SweepCols<'_>,
+    bs: &mut [Behavior],
+    ctx: &BehaviorCtx<'_>,
+) -> Option<SlotEffect> {
+    let i = id.index as usize;
+    // Later behaviors of the same agent see earlier ones' writes — the
+    // classic sequential-within-agent, parallel-across-agents contract.
+    let mut pos = cols.pos[i];
+    let mut diam = cols.diam[i];
+    let mut kind = cols.kind[i];
+    let mut rng = Rng::stream(
+        ctx.seed ^ ctx.iteration.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        gid_key(cols.gid[i]),
+    );
+    let mut eff = SlotEffect::new(id);
+    for b in bs.iter_mut() {
+        match b {
+            Behavior::Growth { rate, max_diameter } => {
+                diam = (diam + 0.1 * *rate).min(*max_diameter);
+            }
+            Behavior::Divide => {
+                if diam >= DIVIDE_DIAMETER {
+                    // Volume-halving split; the child lands a quarter
+                    // diameter away in a random direction.
+                    let half = 0.5f64.powf(1.0 / 3.0);
+                    let child_diam = diam * half;
+                    let dir = random_unit(&mut rng);
+                    eff.child = Some(Agent {
+                        local_id: LocalId::INVALID,
+                        global_id: GlobalId::UNSET,
+                        position: pos + dir * (diam * 0.25),
+                        diameter: child_diam,
+                        kind,
+                        neighbor_ref: AgentPointer::NULL,
+                    });
+                    diam = child_diam;
+                }
+            }
+            Behavior::RandomWalk { speed } => {
+                let s = *speed / 3f64.sqrt();
+                pos += Vec3::new(rng.normal() * s, rng.normal() * s, rng.normal() * s);
+            }
+            Behavior::Infection { radius, prob, recovery_iters } => match kind {
+                AgentKind::Person { state: SirState::Susceptible, infected_for } => {
+                    let n = count_neighbors(ctx, cols, pos, *radius, id, |k| {
+                        matches!(k, AgentKind::Person { state: SirState::Infected, .. })
+                    });
+                    // One draw against the aggregate exposure — the count
+                    // is order-independent, so the draw is too.
+                    if n > 0 && rng.uniform() < 1.0 - (1.0 - *prob).powi(n as i32) {
+                        kind = AgentKind::Person { state: SirState::Infected, infected_for };
+                    }
+                }
+                AgentKind::Person { state: SirState::Infected, infected_for } => {
+                    kind = if infected_for + 1 >= *recovery_iters {
+                        AgentKind::Person { state: SirState::Recovered, infected_for: 0 }
+                    } else {
+                        AgentKind::Person {
+                            state: SirState::Infected,
+                            infected_for: infected_for + 1,
+                        }
+                    };
+                }
+                _ => {}
+            },
+            Behavior::TumorGrowth { cycle_rate, max_diameter } => {
+                if let AgentKind::TumorCell { cycle, quiescent } = kind {
+                    if !quiescent {
+                        let mut c = cycle + *cycle_rate;
+                        let mut q = quiescent;
+                        if c >= 1.0 {
+                            c -= 1.0;
+                            diam = (diam * 2f64.powf(1.0 / 3.0)).min(*max_diameter);
+                            if diam >= *max_diameter {
+                                q = true;
+                            }
+                        }
+                        kind = AgentKind::TumorCell { cycle: c, quiescent: q };
+                    }
+                }
+            }
+            Behavior::Trade { radius, gain, cooldown } => {
+                if let AgentKind::Citizen { wealth, reputation } = kind {
+                    if *cooldown > 0 {
+                        // In-place arena write — no effect, no allocation.
+                        *cooldown -= 1;
+                    } else {
+                        let n = count_neighbors(ctx, cols, pos, *radius, id, |k| {
+                            matches!(k, AgentKind::Citizen { .. })
+                        });
+                        if n > 0 {
+                            kind = AgentKind::Citizen {
+                                wealth: wealth + *gain * n as f64,
+                                reputation,
+                            };
+                            *cooldown = TRADE_REST;
+                        }
+                    }
+                }
+            }
+            Behavior::Reputation { score, decay } => {
+                if let AgentKind::Citizen { wealth, .. } = kind {
+                    // Exponential relaxation toward log-wealth; the score
+                    // is mirrored into the kind payload so it travels on
+                    // the wire with the agent header.
+                    *score += *decay * (wealth.max(1.0).ln() - *score);
+                    kind = AgentKind::Citizen { wealth, reputation: *score };
+                }
+            }
+        }
+    }
+    if pos != cols.pos[i] {
+        eff.new_pos = Some(pos);
+    }
+    if diam != cols.diam[i] {
+        eff.new_diameter = Some(diam);
+    }
+    if kind != cols.kind[i] {
+        eff.new_kind = Some(kind);
+    }
+    if eff.is_empty() { None } else { Some(eff) }
+}
+
+/// Random unit vector (isotropic via normalized Gaussian triple).
+fn random_unit(rng: &mut Rng) -> Vec3 {
+    let v = Vec3::new(rng.normal(), rng.normal(), rng.normal());
+    let n = (v.x * v.x + v.y * v.y + v.z * v.z).sqrt();
+    if n > 1e-12 { v * (1.0 / n) } else { Vec3::new(1.0, 0.0, 0.0) }
+}
+
+/// Count neighbors within `radius` matching `pred`. Owned neighbors read
+/// their kind from the shared sweep columns (the NSG guarantees live
+/// entries), aura neighbors from the aura store's SoA mirror.
+fn count_neighbors(
+    ctx: &BehaviorCtx<'_>,
+    cols: &SweepCols<'_>,
+    center: Vec3,
+    radius: f64,
+    exclude: LocalId,
+    pred: impl Fn(&AgentKind) -> bool,
+) -> usize {
+    let mut n = 0usize;
+    ctx.nsg.for_each_neighbor(center, radius, Some(NsgEntry::Owned(exclude)), |entry, _, _| {
+        let kind = match entry {
+            NsgEntry::Owned(nid) => cols.kind[nid.index as usize],
+            NsgEntry::Aura(ai) => ctx.aura.kind(ai),
+        };
+        if pred(&kind) {
+            n += 1;
+        }
+    });
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::agent::CellType;
+    use crate::core::resource_manager::ResourceManager;
+    use crate::engine::pool::ThreadPool;
+    use crate::space::Aabb;
+
+    fn sweep_once(
+        rm: &mut ResourceManager,
+        nsg: &NeighborSearchGrid,
+        threads: usize,
+        iteration: u64,
+    ) -> Vec<SlotEffect> {
+        let aura = AuraStore::new();
+        let ctx = BehaviorCtx { iteration, seed: 42, nsg, aura: &aura };
+        let ids = rm.ids();
+        for &id in &ids {
+            rm.ensure_global_id(id);
+        }
+        let pool = ThreadPool::new(threads);
+        let (effects, _) =
+            rm.behavior_sweep(&pool, &ids, |_k, id, cols, bs| run_slot(id, cols, bs, &ctx));
+        effects
+    }
+
+    #[test]
+    fn growth_caps_at_max_and_divide_splits() {
+        let whole = Aabb::cube(100.0);
+        let nsg = NeighborSearchGrid::new(whole, 10.0);
+        let mut rm = ResourceManager::new(0);
+        let id = rm.add_with_behaviors(
+            Agent::growing_cell(Vec3::new(50.0, 50.0, 50.0), 7.99),
+            &[Behavior::Growth { rate: 1.0, max_diameter: 9.0 }, Behavior::Divide],
+        );
+        let effects = sweep_once(&mut rm, &nsg, 1, 0);
+        assert_eq!(effects.len(), 1);
+        let eff = &effects[0];
+        assert_eq!(eff.id, id);
+        // Growth pushed 7.99 past the divide threshold, so the division
+        // fired in the same sweep; the parent keeps the child diameter.
+        let child = eff.child.as_ref().expect("division fired");
+        let half = 0.5f64.powf(1.0 / 3.0);
+        let grown = (7.99f64 + 0.1).min(9.0);
+        assert_eq!(eff.new_diameter.unwrap(), grown * half);
+        assert_eq!(child.diameter, grown * half);
+        assert!(matches!(child.kind, AgentKind::GrowingCell { .. }));
+    }
+
+    #[test]
+    fn trade_counts_citizen_neighbors_and_rests() {
+        let whole = Aabb::cube(100.0);
+        let mut nsg = NeighborSearchGrid::new(whole, 10.0);
+        let mut rm = ResourceManager::new(0);
+        let trader = rm.add_with_behaviors(
+            Agent::citizen(Vec3::new(50.0, 50.0, 50.0), 100.0),
+            &[Behavior::Trade { radius: 5.0, gain: 2.0, cooldown: 0 }],
+        );
+        nsg.add(NsgEntry::Owned(trader), Vec3::new(50.0, 50.0, 50.0));
+        // Two citizen partners in range, one cell (ignored), one citizen
+        // out of range.
+        for (p, citizen) in [
+            (Vec3::new(52.0, 50.0, 50.0), true),
+            (Vec3::new(50.0, 52.0, 50.0), true),
+            (Vec3::new(50.0, 50.0, 52.0), false),
+            (Vec3::new(80.0, 50.0, 50.0), true),
+        ] {
+            let a = if citizen {
+                Agent::citizen(p, 10.0)
+            } else {
+                Agent::cell(p, 1.0, CellType::A)
+            };
+            let id = rm.add(a);
+            nsg.add(NsgEntry::Owned(id), p);
+        }
+        let effects = sweep_once(&mut rm, &nsg, 1, 0);
+        assert_eq!(effects.len(), 1);
+        match effects[0].new_kind.unwrap() {
+            AgentKind::Citizen { wealth, .. } => assert_eq!(wealth, 100.0 + 2.0 * 2.0),
+            other => panic!("trader stayed a citizen, got {other:?}"),
+        }
+        // The completed trade armed the cooldown *in the arena*.
+        match rm.behaviors(trader).unwrap()[0] {
+            Behavior::Trade { cooldown, .. } => assert_eq!(cooldown, TRADE_REST),
+            other => panic!("unexpected behavior {other:?}"),
+        }
+        // Next sweep: resting — cooldown ticks down in place, no effect.
+        let effects = sweep_once(&mut rm, &nsg, 1, 1);
+        assert!(effects.iter().all(|e| e.id != trader || e.new_kind.is_none()));
+        match rm.behaviors(trader).unwrap()[0] {
+            Behavior::Trade { cooldown, .. } => assert_eq!(cooldown, TRADE_REST - 1),
+            other => panic!("unexpected behavior {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_effects_identical_at_any_thread_count() {
+        let whole = Aabb::cube(200.0);
+        let mut nsg = NeighborSearchGrid::new(whole, 10.0);
+        let build = || {
+            let mut rm = ResourceManager::new(0);
+            let mut rng = Rng::new(7);
+            for i in 0..120usize {
+                let p = Vec3::from_array(rng.point_in([5.0; 3], [195.0; 3]));
+                match i % 3 {
+                    0 => {
+                        rm.add_with_behaviors(
+                            Agent::citizen(p, 50.0 + i as f64),
+                            &[
+                                Behavior::RandomWalk { speed: 0.5 },
+                                Behavior::Trade { radius: 8.0, gain: 1.0, cooldown: 0 },
+                                Behavior::Reputation { score: 0.0, decay: 0.1 },
+                            ],
+                        );
+                    }
+                    1 => {
+                        rm.add_with_behaviors(
+                            Agent::growing_cell(p, 6.0 + (i % 5) as f64),
+                            &[
+                                Behavior::Growth { rate: 5.0, max_diameter: 12.0 },
+                                Behavior::Divide,
+                            ],
+                        );
+                    }
+                    _ => {
+                        rm.add(Agent::cell(p, 2.0, CellType::B));
+                    }
+                }
+            }
+            rm
+        };
+        // Shared NSG over the common position set.
+        {
+            let rm = build();
+            for id in rm.ids() {
+                nsg.add(NsgEntry::Owned(id), rm.col_position(id.index));
+            }
+        }
+        let key = |e: &SlotEffect| {
+            (
+                e.id.pack(),
+                e.new_pos.map(|p| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()]),
+                e.new_diameter.map(f64::to_bits),
+                e.child.map(|c| c.diameter.to_bits()),
+            )
+        };
+        let mut rm1 = build();
+        let base: Vec<_> = sweep_once(&mut rm1, &nsg, 1, 3).iter().map(key).collect();
+        assert!(!base.is_empty());
+        for threads in [2usize, 8] {
+            let mut rm = build();
+            let got: Vec<_> = sweep_once(&mut rm, &nsg, threads, 3).iter().map(key).collect();
+            assert_eq!(got, base, "{threads} threads");
+            // Arena contents (in-place mutations) agree too.
+            for (a, b) in rm.ids().iter().zip(rm1.ids().iter()) {
+                assert_eq!(rm.behaviors(*a), rm1.behaviors(*b));
+            }
+        }
+    }
+}

@@ -31,7 +31,7 @@
 //! [`restore_resharded`] repartitions the merged population over the
 //! surviving rank count.
 
-use crate::core::agent::Agent;
+use crate::core::agent::AgentBatch;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::buffer::AlignedBuf;
 use crate::io::ta_io;
@@ -92,14 +92,17 @@ pub fn write_checkpoint(
     for id in &ids {
         rm.ensure_global_id(*id);
     }
-    let agents: Vec<&Agent> = ids.iter().map(|id| rm.get(*id).expect("id from rm.ids()")).collect();
-    let payload = ta_io::serialize(agents.iter().copied());
+    // Columnar encode straight out of the SoA store — behavior tails
+    // stream from the flat arena, so checkpoints carry the whole agent.
+    let cols = rm.columns();
+    let mut payload = AlignedBuf::new();
+    ta_io::serialize_columns_into(&cols, &ids, &mut payload);
     let mut head = [0u8; HEADER_BYTES];
     head[0..4].copy_from_slice(&MAGIC.to_le_bytes());
     head[4..8].copy_from_slice(&VERSION.to_le_bytes());
     head[8..12].copy_from_slice(&rank.to_le_bytes());
     head[12..20].copy_from_slice(&iteration.to_le_bytes());
-    head[20..28].copy_from_slice(&(agents.len() as u64).to_le_bytes());
+    head[20..28].copy_from_slice(&(ids.len() as u64).to_le_bytes());
     let crc = Crc32::new().update(&head[..28]).update(payload.as_slice()).finalize();
     head[28..32].copy_from_slice(&crc.to_le_bytes());
     let path = dir.join(checkpoint_name(rank, iteration));
@@ -115,12 +118,13 @@ pub fn write_checkpoint(
     Ok(path)
 }
 
-/// Read a checkpoint file back into (info, agents). Rejects anything that
-/// fails validation — wrong magic/version, CRC mismatch (torn write, bit
-/// rot), unparsable payload, or an agent count disagreeing with the
-/// header — with `InvalidData`, so callers can fall back to an older
-/// checkpoint ([`restore_latest_valid`]).
-pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInfo, Vec<Agent>)> {
+/// Read a checkpoint file back into (info, batch) — agent headers plus
+/// their behavior sets. Rejects anything that fails validation — wrong
+/// magic/version, CRC mismatch (torn write, bit rot), unparsable payload,
+/// or an agent count disagreeing with the header — with `InvalidData`,
+/// so callers can fall back to an older checkpoint
+/// ([`restore_latest_valid`]).
+pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInfo, AgentBatch)> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut head = [0u8; HEADER_BYTES];
     f.read_exact(&mut head)?;
@@ -149,14 +153,15 @@ pub fn read_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointInf
     }
     let view = ta_io::TaView::parse(AlignedBuf::from_bytes(&payload))
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
-    let agents = view.materialize_all();
-    if agents.len() as u64 != info.agents {
+    let mut batch = AgentBatch::new();
+    view.materialize_batch_into(&mut batch);
+    if batch.len() as u64 != info.agents {
         return Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
-            format!("agent count mismatch: header {} payload {}", info.agents, agents.len()),
+            format!("agent count mismatch: header {} payload {}", info.agents, batch.len()),
         ));
     }
-    Ok((info, agents))
+    Ok((info, batch))
 }
 
 /// Validate a checkpoint file's framing (magic, version, CRC over header
@@ -196,11 +201,12 @@ pub fn verify_checkpoint(path: impl AsRef<Path>) -> std::io::Result<(CheckpointI
     Ok((info, stored_crc))
 }
 
-/// Restore agents into a fresh ResourceManager (fresh local ids; global
-/// ids preserved — the constant identifier of §2.5).
-pub fn restore_into(rm: &mut ResourceManager, agents: Vec<Agent>) {
-    for a in agents {
-        rm.add(a);
+/// Restore a batch into a fresh ResourceManager (fresh local ids; global
+/// ids preserved — the constant identifier of §2.5). Behavior sets land
+/// in the manager's flat arena.
+pub fn restore_into(rm: &mut ResourceManager, batch: AgentBatch) {
+    for (a, bs) in batch.iter() {
+        rm.add_with_behaviors(*a, bs);
     }
 }
 
@@ -353,10 +359,11 @@ pub fn latest_agreed_iteration(dir: impl AsRef<Path>) -> std::io::Result<Option<
 /// What an elastic restore hands back to one survivor.
 #[derive(Debug)]
 pub struct ReshardOutcome {
-    /// The agents this rank owns under the new partition, in a
-    /// deterministic order (old-rank-major checkpoint order) — identical
-    /// on every survivor that filters for the same rank.
-    pub agents: Vec<Agent>,
+    /// The agents (with behavior sets) this rank owns under the new
+    /// partition, in a deterministic order (old-rank-major checkpoint
+    /// order) — identical on every survivor that filters for the same
+    /// rank.
+    pub agents: AgentBatch,
     /// Total agents across all old ranks' checkpoints (accounting).
     pub total_agents: u64,
 }
@@ -385,14 +392,14 @@ pub fn restore_resharded(
 ) -> std::io::Result<ReshardOutcome> {
     assert!(new_ranks >= 1 && my_rank < new_ranks);
     let dir = dir.as_ref();
-    let mut all: Vec<Agent> = Vec::new();
+    let mut all = AgentBatch::new();
     for r in 0..old_ranks {
-        let (_info, agents) = read_checkpoint(dir.join(checkpoint_name(r, iteration)))?;
-        all.extend(agents);
+        let (_info, mut batch) = read_checkpoint(dir.join(checkpoint_name(r, iteration)))?;
+        all.append(&mut batch);
     }
     let total_agents = all.len() as u64;
     let mut weights = vec![0f64; grid.num_boxes()];
-    for a in &all {
+    for a in &all.agents {
         weights[grid.box_of(a.position)] += 1.0;
     }
     grid.clear_weights();
@@ -403,9 +410,8 @@ pub fn restore_resharded(
     }
     let owners: Vec<RankId> = crate::balance::rcb::rcb_partition(grid, new_ranks);
     grid.set_owners(owners);
-    let agents: Vec<Agent> =
-        all.into_iter().filter(|a| grid.owner_of_pos(a.position) == my_rank).collect();
-    Ok(ReshardOutcome { agents, total_agents })
+    all.retain(|a| grid.owner_of_pos(a.position) == my_rank);
+    Ok(ReshardOutcome { agents: all, total_agents })
 }
 
 /// List checkpoint files for an iteration, ordered by rank.
@@ -437,7 +443,7 @@ pub fn find_checkpoints(dir: impl AsRef<Path>, iteration: u64) -> std::io::Resul
 pub fn restore_latest_valid(
     dir: impl AsRef<Path>,
     rank: u32,
-) -> std::io::Result<Option<(CheckpointInfo, Vec<Agent>)>> {
+) -> std::io::Result<Option<(CheckpointInfo, AgentBatch)>> {
     if let Some(m) = latest_agreed_iteration(&dir)? {
         let path = dir.as_ref().join(checkpoint_name(rank, m.iteration));
         return match read_checkpoint(&path) {
@@ -471,7 +477,7 @@ pub fn restore_latest_valid(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::agent::{CellType, SirState};
+    use crate::core::agent::{Agent, CellType, SirState};
     use crate::util::Vec3;
 
     fn tmpdir(name: &str) -> PathBuf {
@@ -481,14 +487,22 @@ mod tests {
     }
 
     fn populate(rm: &mut ResourceManager, n: usize) {
+        use crate::core::agent::{person_behaviors, tumor_cell_behaviors};
         for i in 0..n {
             let pos = Vec3::new(i as f64, 2.0 * i as f64, -(i as f64));
-            let a = match i % 3 {
-                0 => Agent::cell(pos, 5.0, CellType::B),
-                1 => Agent::person(pos, SirState::Infected),
-                _ => Agent::tumor_cell(pos, 3.0),
+            // Heterogeneous behavior sets (0, 2, 1 entries) so checkpoints
+            // exercise the behavior-tail round-trip, not just headers.
+            match i % 3 {
+                0 => rm.add(Agent::cell(pos, 5.0, CellType::B)),
+                1 => rm.add_with_behaviors(
+                    Agent::person(pos, SirState::Infected),
+                    &person_behaviors(),
+                ),
+                _ => rm.add_with_behaviors(
+                    Agent::tumor_cell(pos, 3.0),
+                    &tumor_cell_behaviors(3.0),
+                ),
             };
-            rm.add(a);
         }
     }
 
@@ -500,16 +514,22 @@ mod tests {
         let path = write_checkpoint(&dir, 3, 17, &mut rm).unwrap();
         // Translation happened: every agent now has a global id.
         assert!(rm.iter().all(|a| a.global_id.is_set()));
-        let (info, agents) = read_checkpoint(&path).unwrap();
+        let (info, batch) = read_checkpoint(&path).unwrap();
         assert_eq!(info, CheckpointInfo { rank: 3, iteration: 17, agents: 50 });
-        assert_eq!(agents.len(), 50);
+        assert_eq!(batch.len(), 50);
         // Same multiset of (global id, position, kind).
         let key = |a: &Agent| (a.global_id, a.position.x.to_bits(), a.kind.class_id());
         let mut want: Vec<_> = rm.iter().map(key).collect();
-        let mut got: Vec<_> = agents.iter().map(key).collect();
+        let mut got: Vec<_> = batch.agents.iter().map(key).collect();
         want.sort();
         got.sort();
         assert_eq!(want, got);
+        // Behavior sets ride along: match each restored entry to its
+        // source by global id and compare the slices.
+        for (a, bs) in batch.iter() {
+            let src = rm.iter().find(|s| s.global_id == a.global_id).unwrap();
+            assert_eq!(rm.behaviors(src.local_id).unwrap(), bs);
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -519,10 +539,13 @@ mod tests {
         let mut rm = ResourceManager::new(0);
         populate(&mut rm, 20);
         let path = write_checkpoint(&dir, 0, 5, &mut rm).unwrap();
-        let (_, agents) = read_checkpoint(&path).unwrap();
+        let (_, batch) = read_checkpoint(&path).unwrap();
+        let restored_behaviors = batch.behavior_count();
+        assert_eq!(restored_behaviors, rm.behavior_count(), "behaviors survive the trip");
         let mut fresh = ResourceManager::new(0);
-        restore_into(&mut fresh, agents);
+        restore_into(&mut fresh, batch);
         assert_eq!(fresh.len(), 20);
+        assert_eq!(fresh.behavior_count(), restored_behaviors);
         // Global ids still resolve (constant across restore).
         let gid = rm.iter().next().unwrap().global_id;
         assert!(fresh.get_by_global(gid).is_some());
@@ -775,7 +798,8 @@ mod tests {
             let mut grid = PartitionGrid::new(whole, 10.0);
             let out = restore_resharded(&dir, 6, 4, 3, &mut grid, me).unwrap();
             assert_eq!(out.total_agents, 200);
-            got_keys.extend(out.agents.iter().map(|a| (a.global_id, a.position.x.to_bits())));
+            got_keys
+                .extend(out.agents.iter().map(|(a, _)| (a.global_id, a.position.x.to_bits())));
             owner_maps.push(grid.owners().to_vec());
         }
         assert_eq!(owner_maps[0], owner_maps[1]);
@@ -791,8 +815,8 @@ mod tests {
         let again2 = restore_resharded(&dir, 6, 4, 3, &mut grid2, 1).unwrap();
         let key = |a: &Agent| (a.global_id, a.position.x.to_bits(), a.position.y.to_bits());
         assert_eq!(
-            again.agents.iter().map(key).collect::<Vec<_>>(),
-            again2.agents.iter().map(key).collect::<Vec<_>>()
+            again.agents.iter().map(|(a, _)| key(a)).collect::<Vec<_>>(),
+            again2.agents.iter().map(|(a, _)| key(a)).collect::<Vec<_>>()
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -9,7 +9,7 @@
 //! optimization for very large populations trades this identity for O(n/R)
 //! generation time; see `scatter_uniform_fraction`.)
 
-use crate::core::agent::Agent;
+use crate::core::agent::{Agent, AgentBatch, Behavior};
 use crate::space::{Aabb, PartitionGrid};
 use crate::util::{Rng, Vec3};
 
@@ -19,7 +19,9 @@ pub struct InitCtx<'a> {
     pub whole: Aabb,
     grid: &'a PartitionGrid,
     rng: Rng,
-    kept: Vec<Agent>,
+    kept: AgentBatch,
+    /// Scratch for the per-agent behavior set (capacity reused).
+    beh_scratch: Vec<Behavior>,
     total_generated: u64,
 }
 
@@ -31,36 +33,58 @@ impl<'a> InitCtx<'a> {
             grid,
             // Same stream on every rank — identity across rank counts.
             rng: Rng::stream(seed, 0xD157_0000),
-            kept: Vec::new(),
+            kept: AgentBatch::new(),
+            beh_scratch: Vec::new(),
             total_generated: 0,
         }
     }
 
-    /// Generate `n` agents at uniform random positions in `region` via
-    /// `make(position, rng)`; keep those owned by this rank.
+    /// Generate `n` behavior-less agents at uniform random positions in
+    /// `region` via `make(position, rng)`; keep those owned by this rank.
     pub fn scatter_uniform(
         &mut self,
         n: usize,
         region: Aabb,
         mut make: impl FnMut(Vec3, &mut Rng) -> Agent,
     ) {
+        self.scatter_uniform_with(n, region, |p, rng, _| make(p, rng));
+    }
+
+    /// [`InitCtx::scatter_uniform`] for agents that carry behaviors:
+    /// `make(position, rng, behaviors)` fills the (pre-cleared) behavior
+    /// vector alongside building the agent. `make` runs for every
+    /// generated agent on every rank — before the ownership test — so
+    /// the shared RNG stream stays identical across rank counts.
+    pub fn scatter_uniform_with(
+        &mut self,
+        n: usize,
+        region: Aabb,
+        mut make: impl FnMut(Vec3, &mut Rng, &mut Vec<Behavior>) -> Agent,
+    ) {
         for _ in 0..n {
             let p = Vec3::from_array(
                 self.rng.point_in(region.min.to_array(), region.max.to_array()),
             );
-            let agent = make(p, &mut self.rng);
+            self.beh_scratch.clear();
+            let agent = make(p, &mut self.rng, &mut self.beh_scratch);
             self.total_generated += 1;
             if self.grid.owner_of_pos(agent.position) == self.rank {
-                self.kept.push(agent);
+                self.kept.push(agent, &self.beh_scratch);
             }
         }
     }
 
-    /// Add one agent at an explicit position (kept only on the owner).
+    /// Add one behavior-less agent at an explicit position (kept only on
+    /// the owner).
     pub fn place(&mut self, agent: Agent) {
+        self.place_with(agent, &[]);
+    }
+
+    /// [`InitCtx::place`] with an initial behavior set.
+    pub fn place_with(&mut self, agent: Agent, behaviors: &[Behavior]) {
         self.total_generated += 1;
         if self.grid.owner_of_pos(agent.position) == self.rank {
-            self.kept.push(agent);
+            self.kept.push(agent, behaviors);
         }
     }
 
@@ -69,8 +93,8 @@ impl<'a> InitCtx<'a> {
         &mut self.rng
     }
 
-    /// Agents this rank keeps.
-    pub fn into_agents(self) -> Vec<Agent> {
+    /// The batch of agents (with behavior sets) this rank keeps.
+    pub fn into_batch(self) -> AgentBatch {
         self.kept
     }
 
@@ -104,8 +128,8 @@ mod tests {
         let mut c1 = InitCtx::new(1, &g, 99);
         c0.scatter_uniform(1000, g.whole(), make);
         c1.scatter_uniform(1000, g.whole(), make);
-        let a0 = c0.into_agents();
-        let a1 = c1.into_agents();
+        let a0 = c0.into_batch().agents;
+        let a1 = c1.into_batch().agents;
         assert_eq!(a0.len() + a1.len(), 1000, "every agent on exactly one rank");
         // Each agent is on its owner.
         assert!(a0.iter().all(|a| g.owner_of_pos(a.position) == 0));
@@ -129,13 +153,14 @@ mod tests {
         r0.scatter_uniform(500, g2.whole(), make);
         r1.scatter_uniform(500, g2.whole(), make);
         let mut union: Vec<[f64; 3]> = r0
-            .into_agents()
+            .into_batch()
+            .agents
             .iter()
-            .chain(r1.into_agents().iter())
+            .chain(r1.into_batch().agents.iter())
             .map(|a| a.position.to_array())
             .collect();
         let mut all: Vec<[f64; 3]> =
-            single.into_agents().iter().map(|a| a.position.to_array()).collect();
+            single.into_batch().agents.iter().map(|a| a.position.to_array()).collect();
         let key = |p: &[f64; 3]| (p[0].to_bits(), p[1].to_bits(), p[2].to_bits());
         union.sort_by_key(key);
         all.sort_by_key(key);
@@ -149,6 +174,35 @@ mod tests {
         c0.place(Agent::cell(Vec3::new(-15.0, 0.0, 0.0), 1.0, CellType::A)); // rank 0 side
         c0.place(Agent::cell(Vec3::new(15.0, 0.0, 0.0), 1.0, CellType::A)); // rank 1 side
         assert_eq!(c0.generated(), 2);
-        assert_eq!(c0.into_agents().len(), 1);
+        assert_eq!(c0.into_batch().len(), 1);
+    }
+
+    #[test]
+    fn scatter_with_behaviors_keeps_sets_aligned_and_streams_identically() {
+        use crate::core::agent::Behavior;
+        let g = grid_halves();
+        let mk = |p: Vec3, rng: &mut Rng, bs: &mut Vec<Behavior>| {
+            bs.push(Behavior::RandomWalk { speed: rng.uniform_range(0.5, 1.5) });
+            if rng.uniform() < 0.5 {
+                bs.push(Behavior::Divide);
+            }
+            Agent::cell(p, 1.0, CellType::A)
+        };
+        let mut c0 = InitCtx::new(0, &g, 123);
+        let mut c1 = InitCtx::new(1, &g, 123);
+        c0.scatter_uniform_with(300, g.whole(), mk);
+        c1.scatter_uniform_with(300, g.whole(), mk);
+        let b0 = c0.into_batch();
+        let b1 = c1.into_batch();
+        assert_eq!(b0.len() + b1.len(), 300);
+        // Behavior sets travel with their agent: every kept agent has 1–2
+        // behaviors, the first always a RandomWalk.
+        for b in [&b0, &b1] {
+            for i in 0..b.len() {
+                let bs = b.behaviors(i);
+                assert!((1..=2).contains(&bs.len()));
+                assert!(matches!(bs[0], Behavior::RandomWalk { .. }));
+            }
+        }
     }
 }

@@ -24,6 +24,7 @@
 //! MPI-hybrid modes distribution-transparent (§3.3). See
 //! `ARCHITECTURE.md` for the end-to-end iteration walkthrough.
 
+pub mod behavior;
 pub mod checkpoint;
 pub mod init;
 pub mod launcher;

@@ -1,5 +1,6 @@
 //! The per-rank simulation: state and the iteration loop (Fig. 1).
 
+use super::behavior::{self, BehaviorCtx};
 use super::init::InitCtx;
 use super::model::Model;
 use super::pool::ThreadPool;
@@ -12,7 +13,7 @@ use crate::comm::batching::{
 };
 use crate::comm::mpi::{tags, CommError, Communicator};
 use crate::config::{BalanceMethod, SimConfig};
-use crate::core::agent::Agent;
+use crate::core::agent::Behavior;
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::{AuraDecodeJob, AuraEncodeJob, Codec, Decoded};
@@ -114,11 +115,11 @@ pub struct RankSim<M: Model> {
     neighbors_cache: Vec<u32>,
     neighbors_dirty: bool,
     /// Migration scratch: (destination rank, leaving id) and the
-    /// per-destination agent buffers.
+    /// per-destination id buffers. Ids, not agents: leavers are encoded
+    /// columnar straight out of the store (behavior tails from the
+    /// arena) *before* removal, so no owned copy is ever materialized.
     migration_leaving: Vec<(u32, LocalId)>,
-    migration_per_dest: Vec<Vec<Agent>>,
-    /// Migration ingest scratch (agents drained out of decoded views).
-    migration_ingest: Vec<Agent>,
+    migration_per_dest: Vec<Vec<LocalId>>,
     /// Recycler for receive buffers + view offset indices: buffers cycle
     /// pool → decode → aura store → pool, so the exchange path allocates
     /// nothing in steady state.
@@ -167,7 +168,7 @@ impl<M: Model> RankSim<M> {
         // Distributed initialization (§2.4.4).
         let mut ctx = InitCtx::new(rank, &grid, cfg.seed);
         model.create_agents(&mut ctx);
-        let agents = ctx.into_agents();
+        let batch = ctx.into_batch();
         let mut sim = RankSim {
             rank,
             migration_codec: Codec::new(
@@ -199,7 +200,6 @@ impl<M: Model> RankSim<M> {
             neighbors_dirty: true,
             migration_leaving: Vec::new(),
             migration_per_dest: Vec::new(),
-            migration_ingest: Vec::new(),
             view_pool: ViewPool::new(),
             aura_rx_jobs: Vec::new(),
             aura_decoded: Vec::new(),
@@ -236,8 +236,8 @@ impl<M: Model> RankSim<M> {
         if sim.cfg.stream_audit {
             sim.comm.enable_stream_audit();
         }
-        for a in agents {
-            let id = sim.rm.add(a);
+        for (a, bs) in batch.iter() {
+            let id = sim.rm.add_with_behaviors(*a, bs);
             let pos = sim.rm.get(id).unwrap().position;
             sim.nsg.add(NsgEntry::Owned(id), pos);
         }
@@ -314,6 +314,7 @@ impl<M: Model> RankSim<M> {
         if self.model.uses_mechanics() {
             self.mechanics_phase();
         }
+        self.behavior_phase();
         self.model_phase();
         self.migration_phase();
         if self.cfg.balance_every > 0
@@ -675,7 +676,78 @@ impl<M: Model> RankSim<M> {
     }
 
     // -------------------------------------------------------------------
-    // Step 3: model behaviors
+    // Step 3a: arena behavior sweep
+    // -------------------------------------------------------------------
+
+    /// Execute every agent-attached behavior in one cache-linear pass
+    /// over the flat arena: the parallel sweep mutates behavior
+    /// parameters in place and returns structural effects in slot order;
+    /// the rank thread then applies those effects serially (moves through
+    /// the boundary + NSG, kind/diameter writes through the SoA guard,
+    /// division children inheriting the parent's behavior set). Models
+    /// whose agents carry no behaviors skip the phase entirely.
+    fn behavior_phase(&mut self) {
+        if self.rm.behavior_count() == 0 {
+            return;
+        }
+        let t = crate::util::timing::CpuTimer::start();
+        let executed = self.rm.behavior_count() as u64;
+        self.ids_scratch.clear();
+        self.rm.collect_ids(&mut self.ids_scratch);
+        // Per-agent RNG streams key on the (constant) global id; mint ids
+        // up front so the sweep itself never draws from the slot index.
+        for &id in &self.ids_scratch {
+            self.rm.ensure_global_id(id);
+        }
+        let ids = std::mem::take(&mut self.ids_scratch);
+        let pool = self.pool;
+        let ctx = BehaviorCtx {
+            iteration: self.iteration,
+            seed: self.cfg.seed,
+            nsg: &self.nsg,
+            aura: &self.aura,
+        };
+        let (effects, sweep_cpu) = self
+            .rm
+            .behavior_sweep(&pool, &ids, |_k, id, cols, bs| behavior::run_slot(id, cols, bs, &ctx));
+        self.pool_cpu_secs += sweep_cpu;
+        self.ids_scratch = ids;
+        let whole = self.grid.whole();
+        for eff in effects {
+            if let Some(d) = eff.new_diameter {
+                if let Some(mut a) = self.rm.get_mut(eff.id) {
+                    a.diameter = d;
+                }
+            }
+            if let Some(kind) = eff.new_kind {
+                if let Some(mut a) = self.rm.get_mut(eff.id) {
+                    a.kind = kind;
+                }
+            }
+            if let Some(p) = eff.new_pos {
+                let p = self.cfg.boundary.apply(p, &whole);
+                if self.rm.set_position(eff.id, p) {
+                    self.nsg.update_position(NsgEntry::Owned(eff.id), p);
+                }
+            }
+            if let Some(mut child) = eff.child {
+                // The child inherits the parent's (post-sweep) behavior
+                // set — copied out of the arena before the add can grow
+                // the pool under us.
+                let bs: Vec<Behavior> =
+                    self.rm.behaviors(eff.id).map(<[Behavior]>::to_vec).unwrap_or_default();
+                child.position = self.cfg.boundary.apply(child.position, &whole);
+                let cid = self.rm.add_with_behaviors(child, &bs);
+                let pos = self.rm.get(cid).unwrap().position;
+                self.nsg.add(NsgEntry::Owned(cid), pos);
+            }
+        }
+        self.metrics.count(Counter::BehaviorsExecuted, executed);
+        self.metrics.add_op(Op::Behavior, t.elapsed_secs());
+    }
+
+    // -------------------------------------------------------------------
+    // Step 3b: model behaviors
     // -------------------------------------------------------------------
 
     fn model_phase(&mut self) {
@@ -704,8 +776,8 @@ impl<M: Model> RankSim<M> {
                 self.nsg.remove(NsgEntry::Owned(id));
             }
         }
-        for agent in spawns {
-            let id = self.rm.add(agent);
+        for (agent, bs) in spawns.iter() {
+            let id = self.rm.add_with_behaviors(*agent, bs);
             let pos = self.rm.get(id).unwrap().position;
             self.nsg.add(NsgEntry::Owned(id), pos);
         }
@@ -735,26 +807,32 @@ impl<M: Model> RankSim<M> {
         let mut per_dest = std::mem::take(&mut self.migration_per_dest);
         if per_dest.len() != size {
             per_dest = (0..size).map(|_| Vec::new()).collect();
+        } else {
+            for v in per_dest.iter_mut() {
+                v.clear();
+            }
         }
         for (dest, id) in leaving.drain(..) {
             self.rm.ensure_global_id(id);
-            let agent = self.rm.remove(id).expect("migrating agent");
-            self.nsg.remove(NsgEntry::Owned(id));
-            per_dest[dest as usize].push(agent);
+            per_dest[dest as usize].push(id);
         }
         self.migration_leaving = leaving;
         let migrated: u64 = per_dest.iter().map(|v| v.len() as u64).sum();
         self.metrics.count(Counter::AgentsMigratedOut, migrated);
-        // Exchange (all-to-all; empty payloads for idle pairs).
+        // Encode while the leavers are still resident (all-to-all; empty
+        // payloads for idle pairs): the columnar writer streams agent
+        // headers out of the SoA columns and behavior tails straight out
+        // of the flat arena — no owned `Agent` copy, no per-agent
+        // behavior Vec.
         let payloads: Vec<Vec<u8>> = per_dest
             .iter()
             .enumerate()
-            .map(|(d, agents)| {
+            .map(|(d, ids)| {
                 if d == me as usize {
                     return Vec::new();
                 }
                 let (wire, es) =
-                    self.migration_codec.encode((d as u32, tags::MIGRATION), agents.iter());
+                    self.migration_codec.encode_rm((d as u32, tags::MIGRATION), &self.rm, ids);
                 self.metrics.add_op(Op::Serialize, es.serialize_secs);
                 self.metrics.add_op(Op::Compress, es.compress_secs);
                 self.metrics.count(Counter::BytesSentRaw, es.raw_bytes as u64);
@@ -762,17 +840,19 @@ impl<M: Model> RankSim<M> {
                 wire
             })
             .collect();
-        // Drop the migrated-out agents now; the buffers keep their
-        // capacity for the next iteration.
-        for v in per_dest.iter_mut() {
-            v.clear();
+        // Now the wires exist: drop the migrated-out agents (their arena
+        // extents free for reuse); the id buffers keep their capacity.
+        for ids in per_dest.iter_mut() {
+            for id in ids.drain(..) {
+                self.rm.remove(id);
+                self.nsg.remove(NsgEntry::Owned(id));
+            }
         }
         self.migration_per_dest = per_dest;
         let round = self.a2a_round;
         self.a2a_round += 1;
         let received =
             self.metrics.timed_cpu(Op::Transfer, || self.comm.alltoallv(payloads, round));
-        let mut ingest = std::mem::take(&mut self.migration_ingest);
         for (src, wire) in received.into_iter().enumerate() {
             if wire.is_empty() {
                 continue;
@@ -794,19 +874,15 @@ impl<M: Model> RankSim<M> {
             };
             self.metrics.add_op(Op::Deserialize, ds.deserialize_secs);
             self.metrics.add_op(Op::Decompress, ds.decompress_secs);
-            // Migrated agents are moved out of the buffer into owned
-            // storage (they get fresh local ids here — the local/global
-            // id translation of §2.5); the decode buffer goes straight
-            // back to the pool, and the ingest scratch is reused.
-            ingest.clear();
-            decoded.drain_agents_into(&mut ingest, &mut self.view_pool);
-            for agent in ingest.drain(..) {
-                let id = self.rm.add(agent);
-                let pos = self.rm.get(id).unwrap().position;
-                self.nsg.add(NsgEntry::Owned(id), pos);
-            }
+            // Migrated agents move from the wire straight into owned
+            // storage (fresh local ids — the local/global id translation
+            // of §2.5) with their behavior tails ingested directly into
+            // the arena; the decode buffer goes back to the pool.
+            let nsg = &mut self.nsg;
+            decoded.ingest_into_rm(&mut self.rm, &mut self.view_pool, |id, pos| {
+                nsg.add(NsgEntry::Owned(id), pos);
+            });
         }
-        self.migration_ingest = ingest;
         self.metrics.add_op(Op::Migration, t.elapsed_secs());
     }
 

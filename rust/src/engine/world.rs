@@ -17,7 +17,7 @@
 //! rank's pool via [`World::par_chunks`] (results are deterministic for
 //! any thread count — see `ARCHITECTURE.md`, "Determinism contract").
 
-use crate::core::agent::{Agent, AgentKind, CellType};
+use crate::core::agent::{Agent, AgentBatch, AgentKind, Behavior, CellType};
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::io::codec::Decoded;
@@ -31,8 +31,8 @@ use crate::util::{Rng, Vec3};
 pub struct AuraStore {
     /// Receive buffers kept alive for the iteration (in-buffer storage).
     views: Vec<TaView>,
-    /// Owned agents from the ROOT IO baseline path.
-    owned: Vec<Vec<Agent>>,
+    /// Owned agent batches from the ROOT IO baseline path.
+    owned: Vec<AgentBatch>,
     /// Flat SoA mirror of the hot attributes, one entry per aura agent.
     pos: Vec<Vec3>,
     diam: Vec<f64>,
@@ -90,16 +90,16 @@ impl AuraStore {
                 }
                 self.views.push(view);
             }
-            Decoded::Owned(agents) => {
-                self.pos.reserve(agents.len());
-                self.diam.reserve(agents.len());
-                self.kind.reserve(agents.len());
-                for a in &agents {
+            Decoded::Owned(batch) => {
+                self.pos.reserve(batch.len());
+                self.diam.reserve(batch.len());
+                self.kind.reserve(batch.len());
+                for a in &batch.agents {
                     self.pos.push(a.position);
                     self.diam.push(a.diameter);
                     self.kind.push(a.kind);
                 }
-                self.owned.push(agents);
+                self.owned.push(batch);
             }
         }
         start..self.pos.len() as u32
@@ -177,8 +177,8 @@ impl AuraStore {
                         w += 1;
                     }
                 }
-                Decoded::Owned(agents) => {
-                    for a in agents {
+                Decoded::Owned(batch) => {
+                    for a in &batch.agents {
                         j.pos[w] = a.position;
                         j.diam[w] = a.diameter;
                         j.kind[w] = a.kind;
@@ -236,7 +236,10 @@ impl AuraStore {
         let owned: usize = self
             .owned
             .iter()
-            .map(|v| v.len() * std::mem::size_of::<Agent>())
+            .map(|b| {
+                b.len() * std::mem::size_of::<Agent>()
+                    + b.behavior_count() * std::mem::size_of::<Behavior>()
+            })
             .sum();
         let cols = self.pos.capacity() * std::mem::size_of::<Vec3>()
             + self.diam.capacity() * 8
@@ -266,8 +269,9 @@ pub struct World<'a> {
     pub whole: Aabb,
     pub boundary: BoundaryCondition,
     pub interaction_radius: f64,
-    /// Agents queued for creation (applied after the model step).
-    pub spawns: Vec<Agent>,
+    /// Agents queued for creation, each with its behavior set (applied
+    /// after the model step).
+    pub spawns: AgentBatch,
     /// Agents queued for removal.
     pub removals: Vec<LocalId>,
     /// Intra-rank thread pool (the paper's OpenMP parallelism): models use
@@ -303,7 +307,7 @@ impl<'a> World<'a> {
             whole,
             boundary,
             interaction_radius,
-            spawns: Vec::new(),
+            spawns: AgentBatch::new(),
             removals: Vec::new(),
             pool,
             pool_cpu_bits: std::sync::atomic::AtomicU64::new(0),
@@ -407,10 +411,17 @@ impl<'a> World<'a> {
         }
     }
 
-    /// Queue a spawn (applied by the engine after the model step).
-    pub fn spawn(&mut self, mut agent: Agent) {
+    /// Queue a behavior-less spawn (applied by the engine after the
+    /// model step).
+    pub fn spawn(&mut self, agent: Agent) {
+        self.spawn_with(agent, &[]);
+    }
+
+    /// Queue a spawn carrying an initial behavior set; the behaviors land
+    /// in the store's arena when the engine applies the queue.
+    pub fn spawn_with(&mut self, mut agent: Agent, behaviors: &[Behavior]) {
         agent.position = self.boundary.apply(agent.position, &self.whole);
-        self.spawns.push(agent);
+        self.spawns.push(agent, behaviors);
     }
 
     /// Queue a removal.
@@ -464,7 +475,7 @@ mod tests {
     fn aura_store_owned_path() {
         let mut store = AuraStore::new();
         let a = Agent::cell(Vec3::new(9.0, 9.0, 9.0), 2.0, CellType::A);
-        store.add_source(Decoded::Owned(vec![a]));
+        store.add_source(Decoded::Owned(AgentBatch::from_agents(vec![a])));
         assert_eq!(store.len(), 1);
         assert_eq!(store.position(0), Vec3::new(9.0, 9.0, 9.0));
         store.clear();

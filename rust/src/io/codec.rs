@@ -21,9 +21,9 @@ use super::buffer::AlignedBuf;
 use super::delta::{DeltaDecoder, DeltaEncoder, DeltaKind};
 use super::lz4::{Lz4Error, Lz4Scratch};
 use super::root_io::RootError;
-use super::ta_io::{AgentRows, TaError, TaView, ViewPool};
+use super::ta_io::{AgentRows, BehaviorBlock, TaError, TaView, ViewPool};
 use super::{lz4, root_io, ta_io};
-use crate::core::agent::Agent;
+use crate::core::agent::{Agent, AgentBatch, Behavior};
 use crate::core::ids::LocalId;
 use crate::core::resource_manager::ResourceManager;
 use crate::engine::pool::ThreadPool;
@@ -106,32 +106,75 @@ pub struct DecodeStats {
     pub decompress_secs: f64,
 }
 
-/// Decoded message: a zero-copy view (TA IO) or owned agents (ROOT IO).
+/// Decoded message: a zero-copy view (TA IO) or an owned batch (ROOT IO).
 pub enum Decoded {
     View(ta_io::TaView),
-    Owned(Vec<Agent>),
+    Owned(AgentBatch),
 }
 
 impl Decoded {
-    /// Materialize into owned agents (copies out of the view if needed).
+    /// Materialize into owned agent headers (copies out of the view if
+    /// needed; behavior tails are dropped — use
+    /// [`Decoded::ingest_into_rm`] to carry them into a store).
     pub fn into_agents(self) -> Vec<Agent> {
         match self {
             Decoded::View(v) => v.materialize_all(),
-            Decoded::Owned(a) => a,
+            Decoded::Owned(b) => b.agents,
         }
     }
 
-    /// Drain the agents into a caller-owned vector and recycle the view's
-    /// storage — the migration ingest path: the per-message `Vec<Agent>`
-    /// and the view's buffer/offset allocations disappear; only each
-    /// agent's own behavior vector remains (inherent to owning it).
+    /// Drain the agent headers into a caller-owned vector and recycle the
+    /// view's storage (aura consumers that only need headers).
     pub fn drain_agents_into(self, out: &mut Vec<Agent>, pool: &mut ViewPool) {
         match self {
             Decoded::View(v) => {
                 v.materialize_all_into(out);
                 pool.put_view(v);
             }
-            Decoded::Owned(mut a) => out.append(&mut a),
+            Decoded::Owned(mut b) => out.append(&mut b.agents),
+        }
+    }
+
+    /// The migration ingest path: add every decoded agent *and its
+    /// behavior tail* to `rm` — behaviors stream from the wire blocks
+    /// straight into the arena, no per-agent `Vec` is built. `on_add`
+    /// runs per inserted agent (its new local id + position) so the
+    /// caller can register it with the neighbor grid in arrival order.
+    /// Returns the number of agents ingested; view storage recycles into
+    /// `pool`.
+    pub fn ingest_into_rm(
+        self,
+        rm: &mut ResourceManager,
+        pool: &mut ViewPool,
+        mut on_add: impl FnMut(LocalId, crate::util::Vec3),
+    ) -> usize {
+        match self {
+            Decoded::View(v) => {
+                let mut n = 0;
+                for i in 0..v.len() {
+                    if v.agent(i).is_placeholder() {
+                        continue;
+                    }
+                    let a = v.materialize(i);
+                    let pos = a.position;
+                    let id = rm.add_with_behaviors_from(
+                        a,
+                        v.behaviors(i).iter().map(BehaviorBlock::to_behavior),
+                    );
+                    on_add(id, pos);
+                    n += 1;
+                }
+                pool.put_view(v);
+                n
+            }
+            Decoded::Owned(b) => {
+                let n = b.len();
+                for (a, bs) in b.iter() {
+                    let id = rm.add_with_behaviors(*a, bs);
+                    on_add(id, a.position);
+                }
+                n
+            }
         }
     }
 
@@ -263,9 +306,11 @@ fn encode_one_rm(
     let t0 = crate::util::timing::CpuTimer::start();
     match serializer {
         SerializerKind::RootIo => {
-            // The generic baseline honestly keeps its per-object walk.
-            let payload =
-                root_io::serialize(ids.iter().map(|&id| rm.get(id).expect("stale aura id")));
+            // The generic baseline honestly keeps its per-object walk; the
+            // behavior tail comes from the arena slice per slot.
+            let payload = root_io::serialize(ids.iter().map(|&id| {
+                (rm.get(id).expect("stale aura id"), rm.behaviors_of_slot(id.index))
+            }));
             stats.serialize_secs = t0.elapsed_secs();
             finish_wire(
                 compression,
@@ -283,20 +328,10 @@ fn encode_one_rm(
             let kind = match compression {
                 Compression::Lz4Delta { period } => {
                     ch.delta.period = period;
-                    ch.delta.encode_cols_into(
-                        &cols,
-                        ids,
-                        |s| rm.behaviors_of_slot(s),
-                        &mut ch.payload,
-                    )
+                    ch.delta.encode_cols_into(&cols, ids, &mut ch.payload)
                 }
                 _ => {
-                    ta_io::serialize_columns_into(
-                        &cols,
-                        ids,
-                        |s| rm.behaviors_of_slot(s),
-                        &mut ch.payload,
-                    );
+                    ta_io::serialize_columns_into(&cols, ids, &mut ch.payload);
                     DeltaKind::Full
                 }
             };
@@ -537,7 +572,10 @@ impl Codec {
         let compression = self.compression;
         match self.serializer {
             SerializerKind::RootIo => {
-                let payload = root_io::serialize(agents);
+                // Bare agents carry no behavior tail (behaviors live in
+                // the arena; store-backed sends use `encode_rm_into`).
+                const NO_BEHAVIORS: &[Behavior] = &[];
+                let payload = root_io::serialize(agents.map(|a| (a, NO_BEHAVIORS)));
                 stats.serialize_secs = t0.elapsed().as_secs_f64();
                 let ch = self.tx.entry(key).or_default();
                 finish_wire(
@@ -596,6 +634,21 @@ impl Codec {
         wire: &mut Vec<u8>,
     ) -> EncodeStats {
         self.encode_rm_into_gap(key, rm, ids, wire, 0)
+    }
+
+    /// [`Codec::encode_rm_into`] allocating the wire vector — the
+    /// single-destination migration encode: agents *and their arena
+    /// behavior slices* stream onto the wire while still resident in the
+    /// store (encode before removal).
+    pub fn encode_rm(
+        &mut self,
+        key: ChannelKey,
+        rm: &ResourceManager,
+        ids: &[LocalId],
+    ) -> (Vec<u8>, EncodeStats) {
+        let mut wire = Vec::new();
+        let stats = self.encode_rm_into(key, rm, ids, &mut wire);
+        (wire, stats)
     }
 
     /// [`Codec::encode_rm_into`] with `gap` transport-header bytes
@@ -1067,6 +1120,140 @@ mod tests {
                 by_iter.encode_into((1, 0), ags.iter(), &mut wire_iter);
                 by_cols.encode_rm_into((1, 0), &rm, &ids, &mut wire_cols);
                 assert_eq!(wire_iter, wire_cols, "{}: iteration {iter}", comp.name());
+            }
+        }
+    }
+
+    /// The store-backed encode must be byte-identical to an independent
+    /// pairs-based oracle when agents carry heterogeneous, churning
+    /// behavior sets — the wire contract of the arena refactor.
+    #[test]
+    fn rm_encode_with_behaviors_matches_pairs_oracle_and_round_trips() {
+        use crate::core::agent::AgentBatch;
+        use crate::core::resource_manager::ResourceManager;
+        use crate::io::ta_io::ViewPool;
+        for comp in [Compression::None, Compression::Lz4, Compression::Lz4Delta { period: 3 }] {
+            let mut pairs: Vec<(Agent, Vec<Behavior>)> = agents(30, 71)
+                .into_iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    let bs: Vec<Behavior> = (0..i % 3)
+                        .map(|k| Behavior::Trade {
+                            radius: 1.0 + k as f64,
+                            gain: 0.1,
+                            cooldown: k as u32,
+                        })
+                        .collect();
+                    (a, bs)
+                })
+                .collect();
+            let mut rm = ResourceManager::new(0);
+            let ids: Vec<_> =
+                pairs.iter().map(|(a, bs)| rm.add_with_behaviors(*a, bs)).collect();
+            let mut by_rm = Codec::new(SerializerKind::TaIo, comp);
+            let mut rx = Codec::new(SerializerKind::TaIo, comp);
+            // Independent oracle: the pairs-based encoders feeding the
+            // same envelope assembly.
+            let mut oracle_delta = crate::io::delta::DeltaEncoder::new(1);
+            let mut oracle_lz = Lz4Scratch::default();
+            let mut oracle_payload = AlignedBuf::default();
+            let mut pool = ViewPool::new();
+            let mut batch = AgentBatch::new();
+            for iter in 0..5usize {
+                for ((a, _), &id) in pairs.iter_mut().zip(&ids) {
+                    a.position.x += 0.25;
+                    assert!(rm.set_position(id, a.position));
+                }
+                // Churn behavior counts: grow agent 0, shrink agent 1.
+                let extra = Behavior::Reputation { score: iter as f64, decay: 0.5 };
+                assert!(rm.attach_behavior(ids[0], extra));
+                pairs[0].1.push(extra);
+                if !pairs[1].1.is_empty() {
+                    let want = pairs[1].1.remove(0);
+                    assert_eq!(rm.detach_behavior(ids[1], 0), Some(want));
+                }
+                let mut wire_rm = Vec::new();
+                by_rm.encode_rm_into((1, 0), &rm, &ids, &mut wire_rm);
+                let kind = match comp {
+                    Compression::Lz4Delta { period } => {
+                        oracle_delta.period = period;
+                        let (k, b) = oracle_delta.encode_pairs(&pairs);
+                        oracle_payload.set_from_slice(b.as_slice());
+                        k
+                    }
+                    _ => {
+                        ta_io::serialize_pairs_into(&pairs, &mut oracle_payload);
+                        DeltaKind::Full
+                    }
+                };
+                let mut wire_oracle = Vec::new();
+                let mut st = EncodeStats::default();
+                finish_wire(
+                    comp,
+                    SerializerKind::TaIo.code(),
+                    kind,
+                    oracle_payload.as_slice(),
+                    &mut oracle_lz,
+                    &mut wire_oracle,
+                    0,
+                    &mut st,
+                );
+                assert_eq!(wire_rm, wire_oracle, "{}: iteration {iter}", comp.name());
+                // And the decoded message round-trips the behavior tails.
+                let (decoded, _) =
+                    rx.decode_pooled((0, 0), &wire_rm, &mut pool).expect("clean wire");
+                match decoded {
+                    Decoded::View(v) => {
+                        batch.clear();
+                        v.materialize_batch_into(&mut batch);
+                        pool.put_view(v);
+                    }
+                    Decoded::Owned(b) => batch = b,
+                }
+                assert_eq!(batch.len(), pairs.len(), "{}: iteration {iter}", comp.name());
+                for (i, (a, bs)) in pairs.iter().enumerate() {
+                    assert_eq!(batch.agents[i].global_id, a.global_id);
+                    assert_eq!(batch.agents[i].position, a.position);
+                    assert_eq!(batch.behaviors(i), &bs[..], "{}: iteration {iter}", comp.name());
+                }
+            }
+        }
+    }
+
+    /// Migration's receive half: a decoded message ingests agents and
+    /// behavior tails straight into a destination store's arena.
+    #[test]
+    fn ingest_into_rm_carries_behaviors_for_both_serializers() {
+        use crate::core::resource_manager::ResourceManager;
+        use crate::io::ta_io::ViewPool;
+        for ser in [SerializerKind::TaIo, SerializerKind::RootIo] {
+            let pairs: Vec<(Agent, Vec<Behavior>)> = agents(12, 81)
+                .into_iter()
+                .enumerate()
+                .map(|(i, a)| {
+                    let bs: Vec<Behavior> = (0..i % 4)
+                        .map(|k| Behavior::RandomWalk { speed: 1.0 + k as f64 })
+                        .collect();
+                    (a, bs)
+                })
+                .collect();
+            let mut src = ResourceManager::new(0);
+            let ids: Vec<_> =
+                pairs.iter().map(|(a, bs)| src.add_with_behaviors(*a, bs)).collect();
+            let mut tx = Codec::new(ser, Compression::Lz4);
+            let mut rx = Codec::new(ser, Compression::Lz4);
+            let (wire, _) = tx.encode_rm((1, 2), &src, &ids);
+            let mut pool = ViewPool::new();
+            let (decoded, _) = rx.decode_pooled((0, 2), &wire, &mut pool).expect("clean wire");
+            let mut dst = ResourceManager::new(1);
+            let mut added = Vec::new();
+            let n = decoded.ingest_into_rm(&mut dst, &mut pool, |id, pos| added.push((id, pos)));
+            assert_eq!(n, pairs.len(), "{}", ser.name());
+            for (k, (a, bs)) in pairs.iter().enumerate() {
+                let (id, pos) = added[k];
+                assert_eq!(pos, a.position, "{}", ser.name());
+                assert_eq!(dst.get(id).expect("live").global_id, a.global_id);
+                assert_eq!(dst.behaviors(id).expect("live"), &bs[..], "{}", ser.name());
             }
         }
     }

@@ -205,13 +205,13 @@ impl DeltaEncoder {
         self.reference = None;
     }
 
-    /// Encode agents for this channel (compatibility entry point; the
-    /// migration path and tests use it). Allocates the returned buffer;
+    /// Encode bare agent headers for this channel (zero behaviors per
+    /// row — a compatibility entry point). Allocates the returned buffer;
     /// the engine's aura hot path uses [`DeltaEncoder::encode_rows`] with
     /// a reused buffer instead.
     pub fn encode<'a>(
         &mut self,
-        agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+        agents: impl ExactSizeIterator<Item = &'a Agent>,
     ) -> (DeltaKind, AlignedBuf) {
         let list: Vec<&Agent> = agents.collect();
         let mut out = AlignedBuf::new();
@@ -219,17 +219,25 @@ impl DeltaEncoder {
         (kind, out)
     }
 
+    /// Encode `(agent, behaviors)` pairs — the behavior-carrying owned
+    /// path (tests, oracles).
+    pub fn encode_pairs(&mut self, pairs: &[(Agent, Vec<Behavior>)]) -> (DeltaKind, AlignedBuf) {
+        let mut out = AlignedBuf::new();
+        let kind = self.encode_rows(&ta_io::PairRows(pairs), &mut out);
+        (kind, out)
+    }
+
     /// Columnar fast path: encode the agents selected by `ids` straight
     /// out of the SoA columns into `out` (capacity reused across
-    /// iterations).
-    pub fn encode_cols_into<'a, F: Fn(u32) -> &'a [Behavior]>(
+    /// iterations). Behavior tails stream from the arena pool carried by
+    /// `cols` — no per-slot resolver.
+    pub fn encode_cols_into<'a>(
         &mut self,
         cols: &ColumnSource<'a>,
         ids: &'a [LocalId],
-        behaviors: F,
         out: &mut AlignedBuf,
     ) -> DeltaKind {
-        self.encode_rows(&ta_io::ColumnRows { cols: *cols, ids, behaviors }, out)
+        self.encode_rows(&ta_io::ColumnRows { cols: *cols, ids }, out)
     }
 
     /// Core: encode `rows` into `out`, returning the message kind. Wire
@@ -501,7 +509,7 @@ pub mod seed {
     use super::super::buffer::AlignedBuf;
     use super::super::ta_io::{self, AgentBlock, BehaviorBlock, TaView};
     use super::DeltaKind;
-    use crate::core::agent::Agent;
+    use crate::core::agent::{Agent, Behavior};
     use crate::core::ids::GlobalId;
     use std::collections::HashMap;
 
@@ -549,16 +557,14 @@ pub mod seed {
             SeedDeltaEncoder { reference: None, since_refresh: 0, period }
         }
 
-        /// Encode agents for this channel. Returns the kind tag and payload.
-        pub fn encode<'a>(
-            &mut self,
-            agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
-        ) -> (DeltaKind, AlignedBuf) {
+        /// Encode `(agent, behaviors)` pairs for this channel. Returns the
+        /// kind tag and payload.
+        pub fn encode_pairs(&mut self, pairs: &[(Agent, Vec<Behavior>)]) -> (DeltaKind, AlignedBuf) {
             let need_full = self.period == 0
                 || self.reference.is_none()
                 || self.since_refresh >= self.period;
             if need_full {
-                let buf = ta_io::serialize(agents.clone());
+                let buf = ta_io::serialize_pairs(pairs);
                 let view = TaView::parse(buf.clone()).expect("self-produced message must parse");
                 let slots: Vec<Slot> = (0..view.len()).map(|i| view.blocks(i)).collect();
                 self.reference = Some(Reference::from_slots(slots));
@@ -569,10 +575,10 @@ pub mod seed {
             // (B) match & reorder to reference order.
             let mut slots: Vec<Option<Slot>> = vec![None; reference.len()];
             let mut appended: Vec<Slot> = Vec::new();
-            for a in agents {
-                let ab = AgentBlock::from_agent(a);
+            for (a, bs) in pairs {
+                let ab = AgentBlock::from_agent(a, bs.len() as u32);
                 let bbs: Vec<BehaviorBlock> =
-                    a.behaviors.iter().map(BehaviorBlock::from_behavior).collect();
+                    bs.iter().map(BehaviorBlock::from_behavior).collect();
                 match reference.index.get(&ab.global_id()) {
                     Some(&i) if slots[i].is_none() => slots[i] = Some((ab, bbs)),
                     _ => appended.push((ab, bbs)),
@@ -687,10 +693,10 @@ pub mod seed {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::agent::{Agent, CellType};
+    use crate::core::agent::{Agent, AgentBatch, CellType};
     use crate::util::{Rng, Vec3};
 
-    fn make_agents(n: usize, seed: u64) -> Vec<Agent> {
+    fn make_pairs(n: usize, seed: u64) -> Vec<(Agent, Vec<Behavior>)> {
         let mut rng = Rng::new(seed);
         (0..n)
             .map(|i| {
@@ -700,14 +706,13 @@ mod tests {
                     if i % 2 == 0 { CellType::A } else { CellType::B },
                 );
                 a.global_id = GlobalId::new(0, i as u64);
-                a.behaviors.push(crate::core::agent::Behavior::RandomWalk { speed: 1.0 });
-                a
+                (a, vec![Behavior::RandomWalk { speed: 1.0 }])
             })
             .collect()
     }
 
-    fn drift(agents: &mut [Agent], rng: &mut Rng, amount: f64) {
-        for a in agents.iter_mut() {
+    fn drift(pairs: &mut [(Agent, Vec<Behavior>)], rng: &mut Rng, amount: f64) {
+        for (a, _) in pairs.iter_mut() {
             a.position += Vec3::new(
                 rng.uniform_range(-amount, amount),
                 rng.uniform_range(-amount, amount),
@@ -745,27 +750,28 @@ mod tests {
 
     #[test]
     fn first_message_is_full() {
-        let agents = make_agents(10, 1);
+        let agents = make_pairs(10, 1);
         let mut enc = DeltaEncoder::new(8);
-        let (kind, _) = enc.encode(agents.iter());
+        let (kind, _) = enc.encode_pairs(&agents);
         assert_eq!(kind, DeltaKind::Full);
     }
 
     #[test]
     fn second_message_is_delta_and_round_trips() {
-        let mut agents = make_agents(20, 2);
+        let mut agents = make_pairs(20, 2);
         let mut enc = DeltaEncoder::new(8);
         let mut dec = DeltaDecoder::new();
-        let (k1, b1) = enc.encode(agents.iter());
+        let (k1, b1) = enc.encode_pairs(&agents);
         dec.decode(k1, b1).unwrap();
         let mut rng = Rng::new(3);
         drift(&mut agents, &mut rng, 0.5);
-        let (k2, b2) = enc.encode(agents.iter());
+        let (k2, b2) = enc.encode_pairs(&agents);
         assert_eq!(k2, DeltaKind::Delta);
         let view = dec.decode(k2, b2).unwrap();
         let restored = view.materialize_all();
         assert_eq!(restored.len(), agents.len());
-        let mut want: Vec<_> = agents.iter().map(|a| (a.global_id, a.position)).collect();
+        let mut want: Vec<_> =
+            agents.iter().map(|(a, _)| (a.global_id, a.position)).collect();
         want.sort_by_key(|(g, _)| *g);
         let mut got: Vec<_> = restored.iter().map(|a| (a.global_id, a.position)).collect();
         got.sort_by_key(|(g, _)| *g);
@@ -774,11 +780,11 @@ mod tests {
 
     #[test]
     fn delta_buffer_is_mostly_zeros_for_small_drift() {
-        let mut agents = make_agents(100, 4);
+        let mut agents = make_pairs(100, 4);
         let mut enc = DeltaEncoder::new(100);
-        enc.encode(agents.iter());
+        enc.encode_pairs(&agents);
         // No drift at all: everything but the header should diff to zero.
-        let (kind, buf) = enc.encode(agents.iter());
+        let (kind, buf) = enc.encode_pairs(&agents);
         assert_eq!(kind, DeltaKind::Delta);
         assert!(
             zero_fraction(buf.as_slice()) > 0.95,
@@ -790,7 +796,7 @@ mod tests {
         assert!(lz.len() < buf.len() / 20);
         // Sanity: identical agents decode identically.
         let mut dec = DeltaDecoder::new();
-        let (k1, b1) = DeltaEncoder::new(100).encode(agents.iter());
+        let (k1, b1) = DeltaEncoder::new(100).encode_pairs(&agents);
         dec.decode(k1, b1).unwrap();
         let view = dec.decode(kind, buf).unwrap();
         drift(&mut agents, &mut Rng::new(5), 0.0);
@@ -799,40 +805,40 @@ mod tests {
 
     #[test]
     fn handles_removed_agents_via_placeholders() {
-        let agents = make_agents(10, 6);
+        let agents = make_pairs(10, 6);
         let mut enc = DeltaEncoder::new(100);
         let mut dec = DeltaDecoder::new();
-        let (k1, b1) = enc.encode(agents.iter());
+        let (k1, b1) = enc.encode_pairs(&agents);
         dec.decode(k1, b1).unwrap();
         // Drop agents 2 and 7.
-        let reduced: Vec<Agent> = agents
+        let reduced: Vec<(Agent, Vec<Behavior>)> = agents
             .iter()
             .enumerate()
             .filter(|(i, _)| *i != 2 && *i != 7)
-            .map(|(_, a)| a.clone())
+            .map(|(_, p)| p.clone())
             .collect();
-        let (k2, b2) = enc.encode(reduced.iter());
+        let (k2, b2) = enc.encode_pairs(&reduced);
         assert_eq!(k2, DeltaKind::Delta);
         let view = dec.decode(k2, b2).unwrap();
         assert_eq!(view.len(), reduced.len(), "placeholders must be defragmented away");
         let got = ids(&view);
-        let mut want: Vec<GlobalId> = reduced.iter().map(|a| a.global_id).collect();
+        let mut want: Vec<GlobalId> = reduced.iter().map(|(a, _)| a.global_id).collect();
         want.sort();
         assert_eq!(got, want);
     }
 
     #[test]
     fn handles_new_agents_appended() {
-        let agents = make_agents(10, 7);
+        let agents = make_pairs(10, 7);
         let mut enc = DeltaEncoder::new(100);
         let mut dec = DeltaDecoder::new();
-        let (k1, b1) = enc.encode(agents.iter());
+        let (k1, b1) = enc.encode_pairs(&agents);
         dec.decode(k1, b1).unwrap();
         let mut extended = agents.clone();
         let mut extra = Agent::cell(Vec3::new(55.0, 55.0, 0.0), 10.0, CellType::A);
         extra.global_id = GlobalId::new(1, 999);
-        extended.push(extra);
-        let (k2, b2) = enc.encode(extended.iter());
+        extended.push((extra, vec![]));
+        let (k2, b2) = enc.encode_pairs(&extended);
         let view = dec.decode(k2, b2).unwrap();
         assert_eq!(view.len(), extended.len());
         let got = ids(&view);
@@ -841,33 +847,34 @@ mod tests {
 
     #[test]
     fn handles_churn_removed_and_added_and_reordered() {
-        let agents = make_agents(30, 8);
+        let agents = make_pairs(30, 8);
         let mut enc = DeltaEncoder::new(100);
         let mut dec = DeltaDecoder::new();
-        let (k1, b1) = enc.encode(agents.iter());
+        let (k1, b1) = enc.encode_pairs(&agents);
         dec.decode(k1, b1).unwrap();
         // Shuffle order, drop a third, add five new.
         let mut rng = Rng::new(9);
-        let mut msg: Vec<Agent> = agents.iter().skip(10).cloned().collect();
+        let mut msg: Vec<(Agent, Vec<Behavior>)> =
+            agents.iter().skip(10).cloned().collect();
         rng.shuffle(&mut msg);
         for j in 0..5 {
             let mut a = Agent::cell(Vec3::new(j as f64, 0.0, 0.0), 10.0, CellType::B);
             a.global_id = GlobalId::new(2, j as u64);
-            msg.push(a);
+            msg.push((a, vec![]));
         }
-        let (k2, b2) = enc.encode(msg.iter());
+        let (k2, b2) = enc.encode_pairs(&msg);
         let view = dec.decode(k2, b2).unwrap();
         let got = ids(&view);
-        let mut want: Vec<GlobalId> = msg.iter().map(|a| a.global_id).collect();
+        let mut want: Vec<GlobalId> = msg.iter().map(|(a, _)| a.global_id).collect();
         want.sort();
         assert_eq!(got, want);
     }
 
     #[test]
     fn reference_refresh_period_respected() {
-        let agents = make_agents(5, 10);
+        let agents = make_pairs(5, 10);
         let mut enc = DeltaEncoder::new(3);
-        let kinds: Vec<DeltaKind> = (0..7).map(|_| enc.encode(agents.iter()).0).collect();
+        let kinds: Vec<DeltaKind> = (0..7).map(|_| enc.encode_pairs(&agents).0).collect();
         assert_eq!(
             kinds,
             vec![
@@ -884,10 +891,10 @@ mod tests {
 
     #[test]
     fn period_zero_disables_delta() {
-        let agents = make_agents(5, 11);
+        let agents = make_pairs(5, 11);
         let mut enc = DeltaEncoder::new(0);
         for _ in 0..3 {
-            assert_eq!(enc.encode(agents.iter()).0, DeltaKind::Full);
+            assert_eq!(enc.encode_pairs(&agents).0, DeltaKind::Full);
         }
     }
 
@@ -895,7 +902,7 @@ mod tests {
     fn multi_iteration_stream_consistency() {
         // Simulate 20 iterations of drifting agents with churn over one
         // channel; each decoded message must equal the sent set.
-        let mut agents = make_agents(40, 12);
+        let mut agents = make_pairs(40, 12);
         let mut enc = DeltaEncoder::new(5);
         let mut dec = DeltaDecoder::new();
         let mut rng = Rng::new(13);
@@ -909,18 +916,20 @@ mod tests {
                 let mut a = Agent::cell(Vec3::new(1.0, 1.0, 0.0), 10.0, CellType::A);
                 a.global_id = GlobalId::new(3, next_gid);
                 next_gid += 1;
-                agents.push(a);
+                agents.push((a, vec![]));
             }
-            let (k, b) = enc.encode(agents.iter());
+            let (k, b) = enc.encode_pairs(&agents);
             let view = dec.decode(k, b).unwrap();
             let got = ids(&view);
-            let mut want: Vec<GlobalId> = agents.iter().map(|a| a.global_id).collect();
+            let mut want: Vec<GlobalId> =
+                agents.iter().map(|(a, _)| a.global_id).collect();
             want.sort();
             assert_eq!(got, want, "iteration {iter}");
             // Positions too.
             let restored = view.materialize_all();
             for r in &restored {
-                let orig = agents.iter().find(|a| a.global_id == r.global_id).unwrap();
+                let (orig, _) =
+                    agents.iter().find(|(a, _)| a.global_id == r.global_id).unwrap();
                 assert_eq!(orig.position, r.position, "iteration {iter}");
             }
         }
@@ -930,7 +939,7 @@ mod tests {
     fn fast_encoder_wire_identical_to_seed() {
         // The fast path must be indistinguishable on the wire from the
         // seed pipeline across a churning multi-iteration stream.
-        let mut agents = make_agents(40, 21);
+        let mut agents = make_pairs(40, 21);
         let mut fast = DeltaEncoder::new(4);
         let mut slow = seed::SeedDeltaEncoder::new(4);
         let mut rng = Rng::new(22);
@@ -944,13 +953,13 @@ mod tests {
                 let mut a = Agent::cell(Vec3::new(2.0, 2.0, 0.0), 10.0, CellType::B);
                 a.global_id = GlobalId::new(1, next_gid);
                 next_gid += 1;
-                agents.push(a);
+                agents.push((a, vec![]));
             }
             if iter % 4 == 3 {
                 rng.shuffle(&mut agents);
             }
-            let (kf, bf) = fast.encode(agents.iter());
-            let (ks, bs) = slow.encode(agents.iter());
+            let (kf, bf) = fast.encode_pairs(&agents);
+            let (ks, bs) = slow.encode_pairs(&agents);
             assert_eq!(kf, ks, "iteration {iter}: kind diverged");
             assert_eq!(bf.as_slice(), bs.as_slice(), "iteration {iter}: wire bytes diverged");
         }
@@ -958,7 +967,7 @@ mod tests {
 
     #[test]
     fn fast_decoder_accepts_seed_stream_and_vice_versa() {
-        let mut agents = make_agents(25, 31);
+        let mut agents = make_pairs(25, 31);
         let mut enc_fast = DeltaEncoder::new(6);
         let mut enc_seed = seed::SeedDeltaEncoder::new(6);
         let mut dec_fast = DeltaDecoder::new();
@@ -970,10 +979,10 @@ mod tests {
                 agents.remove(0);
             }
             // Seed-encoded stream into the fast decoder.
-            let (k, b) = enc_seed.encode(agents.iter());
+            let (k, b) = enc_seed.encode_pairs(&agents);
             let fast_view = dec_fast.decode(k, b).unwrap();
             // Fast-encoded stream into the seed decoder.
-            let (k2, b2) = enc_fast.encode(agents.iter());
+            let (k2, b2) = enc_fast.encode_pairs(&agents);
             let seed_view = dec_seed.decode(k2, b2).unwrap();
             assert_eq!(ids(&fast_view), ids(&seed_view), "iteration {iter}");
             assert_eq!(
@@ -988,7 +997,7 @@ mod tests {
     fn incremental_match_table_survives_refresh_churn() {
         // Heavy churn across multiple refresh cycles: the retained match
         // table must never match a departed agent or miss a present one.
-        let mut agents = make_agents(30, 41);
+        let mut agents = make_pairs(30, 41);
         let mut enc = DeltaEncoder::new(3);
         let mut dec = DeltaDecoder::new();
         let mut rng = Rng::new(42);
@@ -1006,13 +1015,14 @@ mod tests {
                 );
                 a.global_id = GlobalId::new(2, next_gid);
                 next_gid += 1;
-                agents.push(a);
+                agents.push((a, vec![]));
             }
             drift(&mut agents, &mut rng, 0.5);
-            let (k, b) = enc.encode(agents.iter());
+            let (k, b) = enc.encode_pairs(&agents);
             let view = dec.decode(k, b).unwrap();
             let got = ids(&view);
-            let mut want: Vec<GlobalId> = agents.iter().map(|a| a.global_id).collect();
+            let mut want: Vec<GlobalId> =
+                agents.iter().map(|(a, _)| a.global_id).collect();
             want.sort();
             assert_eq!(got, want, "iteration {iter}");
         }
@@ -1020,15 +1030,59 @@ mod tests {
 
     #[test]
     fn reference_memory_is_tracked() {
-        let agents = make_agents(50, 14);
+        let agents = make_pairs(50, 14);
         let mut enc = DeltaEncoder::new(10);
         assert_eq!(enc.reference_bytes(), 0);
-        enc.encode(agents.iter());
+        enc.encode_pairs(&agents);
         assert!(enc.reference_bytes() > 0);
         let mut dec = DeltaDecoder::new();
-        let (k, b) = DeltaEncoder::new(10).encode(agents.iter());
+        let (k, b) = DeltaEncoder::new(10).encode_pairs(&agents);
         dec.decode(k, b).unwrap();
         assert!(dec.reference_bytes() > 0);
+    }
+
+    #[test]
+    fn behavior_count_churn_wire_identical_and_round_trips() {
+        // Attaching/detaching behaviors between messages changes per-row
+        // block counts, stressing the shared-prefix diff rule (the delta
+        // covers min(msg, ref) behavior blocks; the rest is copied raw).
+        let mut agents = make_pairs(20, 55);
+        let mut fast = DeltaEncoder::new(5);
+        let mut slow = seed::SeedDeltaEncoder::new(5);
+        let mut dec = DeltaDecoder::new();
+        let mut rng = Rng::new(56);
+        let mut batch = AgentBatch::new();
+        for iter in 0..15u32 {
+            drift(&mut agents, &mut rng, 0.3);
+            for (_, bs) in agents.iter_mut() {
+                match rng.index(4) {
+                    0 => bs.push(Behavior::Trade {
+                        radius: 1.0,
+                        gain: 0.1,
+                        cooldown: iter,
+                    }),
+                    1 if !bs.is_empty() => {
+                        let k = rng.index(bs.len());
+                        bs.remove(k);
+                    }
+                    _ => {}
+                }
+            }
+            let (kf, bf) = fast.encode_pairs(&agents);
+            let (ks, bsl) = slow.encode_pairs(&agents);
+            assert_eq!(kf, ks, "iteration {iter}: kind diverged");
+            assert_eq!(bf.as_slice(), bsl.as_slice(), "iteration {iter}: wire diverged");
+            let view = dec.decode(kf, bf).unwrap();
+            batch.clear();
+            view.materialize_batch_into(&mut batch);
+            assert_eq!(batch.len(), agents.len(), "iteration {iter}");
+            for (i, (a, _)) in batch.iter().enumerate() {
+                let (orig, obs) =
+                    agents.iter().find(|(o, _)| o.global_id == a.global_id).unwrap();
+                assert_eq!(orig.position, a.position, "iteration {iter}");
+                assert_eq!(&obs[..], batch.behaviors(i), "iteration {iter}");
+            }
+        }
     }
 
     #[test]

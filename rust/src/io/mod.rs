@@ -5,10 +5,11 @@
 //!   accounting. Two encoders share one wire format: the seed per-agent
 //!   walker ([`ta_io::serialize`]) and the **SoA-direct columnar writer**
 //!   ([`ta_io::serialize_columns_into`]), which streams the
-//!   `ResourceManager`'s `pos`/`diam`/`kind`/`gid`/`ref` columns for a
-//!   per-destination id list into a reused [`AlignedBuf`] without
-//!   touching an `Agent` struct — byte-identical output, proven by
-//!   property tests. [`ta_io::ViewPool`] recycles receive buffers and
+//!   `ResourceManager`'s `pos`/`diam`/`kind`/`gid`/`ref` columns and
+//!   each agent's behavior tail straight out of the flat behavior arena
+//!   for a per-destination id list into a reused [`AlignedBuf`] without
+//!   materializing an `Agent` struct or a behavior `Vec` —
+//!   byte-identical output, proven by property tests. [`ta_io::ViewPool`] recycles receive buffers and
 //!   view offset indices so the steady-state exchange allocates nothing.
 //! * [`root_io`] — the **ROOT IO baseline**: a generic, self-describing
 //!   serializer that honestly performs the four costs TA IO avoids
@@ -51,9 +52,11 @@
 //! the iteration, then recycles it into the same pool
 //! (`AuraStore::recycle_into`) — buffers cycle pool → decode → aura →
 //! pool, so the steady-state exchange allocates nothing. Migration
-//! ingest instead drains owned `Agent`s out of the view
-//! ([`codec::Decoded::drain_agents_into`]) and recycles the storage
-//! immediately.
+//! ingest streams the view's headers into fresh `ResourceManager` slots
+//! and behavior tails into fresh arena extents
+//! ([`codec::Decoded::ingest_into_rm`]) and recycles the storage
+//! immediately; [`codec::Decoded::drain_agents_into`] survives for
+//! callers that want headers-only owned `Agent`s (recovery tooling).
 
 pub mod buffer;
 pub mod codec;

@@ -21,7 +21,7 @@
 //! The point is an honest *relative* comparison: both serializers move the
 //! same logical agent payload; this one pays the generic machinery.
 
-use crate::core::agent::{Agent, AgentKind, Behavior, CellType, SirState};
+use crate::core::agent::{Agent, AgentBatch, AgentKind, Behavior, CellType, SirState};
 use crate::core::ids::{AgentPointer, GlobalId, LocalId};
 use crate::util::Vec3;
 use std::collections::HashMap;
@@ -84,6 +84,8 @@ impl Writer {
             "Behavior::RandomWalk",
             "Behavior::Infection",
             "Behavior::TumorGrowth",
+            "Behavior::Trade",
+            "Behavior::Reputation",
         ] {
             streamers.insert(name.to_string(), SCHEMA_VERSION);
         }
@@ -168,12 +170,17 @@ fn agent_fields() -> Vec<(&'static str, u8)> {
     ]
 }
 
-/// Serialize agents with the generic streamer.
-pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent>) -> Vec<u8> {
+/// Serialize `(agent, behaviors)` pairs with the generic streamer. The
+/// behavior slice rides alongside the agent header because agents no
+/// longer own their behaviors — callers hand the arena slice (or an
+/// empty one) per agent.
+pub fn serialize<'a>(
+    pairs: impl ExactSizeIterator<Item = (&'a Agent, &'a [Behavior])>,
+) -> Vec<u8> {
     let mut w = Writer::new();
     w.raw_u32(MESSAGE_MAGIC);
     // Schema section: descriptors for every class that may appear.
-    w.raw_u32(6); // descriptor count
+    w.raw_u32(8); // descriptor count
     w.class_descriptor("Agent", &agent_fields());
     w.class_descriptor("Behavior::Growth", &[("rate", tag::F64), ("max_diameter", tag::F64)]);
     w.class_descriptor("Behavior::Divide", &[]);
@@ -186,14 +193,19 @@ pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent>) -> Vec<u8
         "Behavior::TumorGrowth",
         &[("cycle_rate", tag::F64), ("max_diameter", tag::F64)],
     );
-    w.raw_u32(agents.len() as u32);
-    for a in agents {
-        write_agent(&mut w, a);
+    w.class_descriptor(
+        "Behavior::Trade",
+        &[("radius", tag::F64), ("gain", tag::F64), ("cooldown", tag::U32)],
+    );
+    w.class_descriptor("Behavior::Reputation", &[("score", tag::F64), ("decay", tag::F64)]);
+    w.raw_u32(pairs.len() as u32);
+    for (a, bs) in pairs {
+        write_agent(&mut w, a, bs);
     }
     w.out
 }
 
-fn write_agent(w: &mut Writer, a: &Agent) {
+fn write_agent(w: &mut Writer, a: &Agent, behaviors: &[Behavior]) {
     w.out.push(tag::OBJ);
     // Pointer-dedup registration (cost 1): agents are objects with identity.
     let stream_index = w.next_stream_index;
@@ -228,12 +240,16 @@ fn write_agent(w: &mut Writer, a: &Agent) {
             w.f64(cycle);
             w.u8(quiescent as u8);
         }
+        AgentKind::Citizen { wealth, reputation } => {
+            w.f64(wealth);
+            w.f64(reputation);
+        }
     }
     // Behavior vector: each element is an object with its own streamer
     // lookup and byte-count record (polymorphic container streaming).
     w.out.push(tag::VEC);
-    w.raw_u32(a.behaviors.len() as u32);
-    for b in &a.behaviors {
+    w.raw_u32(behaviors.len() as u32);
+    for b in behaviors {
         let bobj = w.begin_object(behavior_class_name(b));
         w.u16(b.class_id());
         match *b {
@@ -251,6 +267,15 @@ fn write_agent(w: &mut Writer, a: &Agent) {
             Behavior::TumorGrowth { cycle_rate, max_diameter } => {
                 w.f64(cycle_rate);
                 w.f64(max_diameter);
+            }
+            Behavior::Trade { radius, gain, cooldown } => {
+                w.f64(radius);
+                w.f64(gain);
+                w.u32(cooldown);
+            }
+            Behavior::Reputation { score, decay } => {
+                w.f64(score);
+                w.f64(decay);
             }
         }
         w.end_object(bobj);
@@ -278,6 +303,8 @@ fn behavior_class_name(b: &Behavior) -> &'static str {
         Behavior::RandomWalk { .. } => "Behavior::RandomWalk",
         Behavior::Infection { .. } => "Behavior::Infection",
         Behavior::TumorGrowth { .. } => "Behavior::TumorGrowth",
+        Behavior::Trade { .. } => "Behavior::Trade",
+        Behavior::Reputation { .. } => "Behavior::Reputation",
     }
 }
 
@@ -376,8 +403,9 @@ impl<'a> Reader<'a> {
 }
 
 /// Deserialize a message produced by [`serialize`]. Every agent and every
-/// behavior vector is a fresh allocation (cost 4).
-pub fn deserialize(buf: &[u8]) -> Result<Vec<Agent>, RootError> {
+/// behavior vector is a fresh allocation (cost 4); the result lands in a
+/// batch pairing each header with its behavior tail.
+pub fn deserialize(buf: &[u8]) -> Result<AgentBatch, RootError> {
     let mut r = Reader::new(buf);
     if r.raw_u32()? != MESSAGE_MAGIC {
         return Err(RootError::BadMagic);
@@ -387,14 +415,15 @@ pub fn deserialize(buf: &[u8]) -> Result<Vec<Agent>, RootError> {
         r.class_descriptor()?;
     }
     let n = r.raw_u32()? as usize;
-    let mut agents = Vec::with_capacity(n);
+    let mut batch = AgentBatch::with_capacity(n);
     for _ in 0..n {
-        agents.push(read_agent(&mut r)?);
+        let (agent, behaviors) = read_agent(&mut r)?;
+        batch.push(agent, &behaviors);
     }
-    Ok(agents)
+    Ok(batch)
 }
 
-fn read_agent(r: &mut Reader) -> Result<Agent, RootError> {
+fn read_agent(r: &mut Reader) -> Result<(Agent, Vec<Behavior>), RootError> {
     r.expect_tag(tag::OBJ)?;
     r.begin_object()?;
     let class_id = r.u16()?;
@@ -411,6 +440,7 @@ fn read_agent(r: &mut Reader) -> Result<Agent, RootError> {
         },
         3 => AgentKind::Person { state: SirState::from_code(r.u8()?), infected_for: r.u32()? },
         4 => AgentKind::TumorCell { cycle: r.f64()?, quiescent: r.u8()? != 0 },
+        5 => AgentKind::Citizen { wealth: r.f64()?, reputation: r.f64()? },
         other => return Err(RootError::UnknownClass(format!("agent#{other}"))),
     };
     r.expect_tag(tag::VEC)?;
@@ -429,6 +459,8 @@ fn read_agent(r: &mut Reader) -> Result<Agent, RootError> {
                 recovery_iters: r.u32()?,
             },
             5 => Behavior::TumorGrowth { cycle_rate: r.f64()?, max_diameter: r.f64()? },
+            6 => Behavior::Trade { radius: r.f64()?, gain: r.f64()?, cooldown: r.u32()? },
+            7 => Behavior::Reputation { score: r.f64()?, decay: r.f64()? },
             other => return Err(RootError::UnknownClass(format!("behavior#{other}"))),
         });
     }
@@ -446,23 +478,18 @@ fn read_agent(r: &mut Reader) -> Result<Agent, RootError> {
         tag::OBJ => AgentPointer::to(GlobalId::new(r.u32()?, r.u64()?)),
         got => return Err(RootError::TypeMismatch { expected: tag::OBJ, got }),
     };
-    Ok(Agent {
-        local_id: LocalId::INVALID,
-        global_id: gid,
-        position,
-        diameter,
-        kind,
+    Ok((
+        Agent { local_id: LocalId::INVALID, global_id: gid, position, diameter, kind, neighbor_ref },
         behaviors,
-        neighbor_ref,
-    })
+    ))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::agent::Agent;
+    use crate::core::agent::{growing_cell_behaviors, person_behaviors, Agent};
 
-    fn sample() -> Vec<Agent> {
+    fn sample() -> Vec<(Agent, Vec<Behavior>)> {
         let mut a = Agent::cell(Vec3::new(1.0, 2.0, 3.0), 10.0, CellType::A);
         a.global_id = GlobalId::new(0, 1);
         let mut b = Agent::person(Vec3::new(4.0, 5.0, 6.0), SirState::Recovered);
@@ -471,20 +498,38 @@ mod tests {
         let mut c = Agent::growing_cell(Vec3::new(7.0, 8.0, 9.0), 12.0);
         c.global_id = GlobalId::new(1, 3);
         c.neighbor_ref = AgentPointer::to(GlobalId::new(9, 99)); // forward ref
-        vec![a, b, c]
+        let mut d = Agent::citizen(Vec3::new(10.0, 11.0, 12.0), 250.0);
+        d.global_id = GlobalId::new(1, 4);
+        vec![
+            (a, vec![]),
+            (b, person_behaviors().to_vec()),
+            (c, growing_cell_behaviors(12.0).to_vec()),
+            (
+                d,
+                vec![
+                    Behavior::Trade { radius: 2.0, gain: 0.5, cooldown: 3 },
+                    Behavior::Reputation { score: 0.25, decay: 0.01 },
+                ],
+            ),
+        ]
+    }
+
+    fn ser(pairs: &[(Agent, Vec<Behavior>)]) -> Vec<u8> {
+        serialize(pairs.iter().map(|(a, bs)| (a, &bs[..])))
     }
 
     #[test]
     fn round_trip() {
         let agents = sample();
-        let buf = serialize(agents.iter());
+        let buf = ser(&agents);
         let restored = deserialize(&buf).unwrap();
         assert_eq!(agents.len(), restored.len());
-        for (o, r) in agents.iter().zip(&restored) {
+        for (i, (o, obs)) in agents.iter().enumerate() {
+            let r = &restored.agents[i];
             assert_eq!(o.global_id, r.global_id);
             assert_eq!(o.position, r.position);
             assert_eq!(o.kind, r.kind);
-            assert_eq!(o.behaviors, r.behaviors);
+            assert_eq!(&obs[..], restored.behaviors(i));
             assert_eq!(o.neighbor_ref, r.neighbor_ref);
         }
     }
@@ -492,19 +537,20 @@ mod tests {
     #[test]
     fn backref_resolves_to_same_identity() {
         let agents = sample();
-        let buf = serialize(agents.iter());
+        let buf = ser(&agents);
         let restored = deserialize(&buf).unwrap();
         // b's pointer target equals a's id after dedup resolution.
-        assert_eq!(restored[1].neighbor_ref.target, restored[0].global_id);
+        assert_eq!(restored.agents[1].neighbor_ref.target, restored.agents[0].global_id);
     }
 
     #[test]
     fn message_is_self_describing() {
         // Schema strings are physically in the message (cost 2).
-        let buf = serialize(sample().iter());
+        let buf = ser(&sample());
         let hay = String::from_utf8_lossy(&buf);
         assert!(hay.contains("Agent"));
         assert!(hay.contains("Behavior::Infection"));
+        assert!(hay.contains("Behavior::Trade"));
         assert!(hay.contains("recovery_iters"));
     }
 
@@ -512,7 +558,7 @@ mod tests {
     fn values_are_big_endian_on_wire() {
         let mut a = Agent::cell(Vec3::ZERO, 0.0, CellType::A);
         a.global_id = GlobalId::new(0x0102_0304, 0);
-        let buf = serialize([&a].into_iter().cloned().collect::<Vec<_>>().iter());
+        let buf = serialize([(&a, &[][..])].into_iter());
         // The rank 0x01020304 must appear big-endian somewhere after the
         // schema; search for the byte pattern.
         assert!(
@@ -524,7 +570,7 @@ mod tests {
     #[test]
     fn type_mismatch_detected() {
         let agents = sample();
-        let mut buf = serialize(agents.iter());
+        let mut buf = ser(&agents);
         // Find the first F64 tag after the schema and corrupt it.
         let schema_end = {
             // agent count sits right before the first OBJ tag; find "OBJ".
@@ -537,21 +583,21 @@ mod tests {
 
     #[test]
     fn truncation_detected() {
-        let buf = serialize(sample().iter());
+        let buf = ser(&sample());
         assert_eq!(deserialize(&buf[..buf.len() - 3]).unwrap_err(), RootError::Truncated);
     }
 
     #[test]
     fn bad_magic_detected() {
-        let mut buf = serialize(sample().iter());
+        let mut buf = ser(&sample());
         buf[0] ^= 0xFF;
         assert_eq!(deserialize(&buf).unwrap_err(), RootError::BadMagic);
     }
 
     #[test]
     fn empty_message_round_trip() {
-        let agents: Vec<Agent> = vec![];
-        let buf = serialize(agents.iter());
+        let agents: Vec<(Agent, Vec<Behavior>)> = vec![];
+        let buf = ser(&agents);
         assert!(deserialize(&buf).unwrap().is_empty());
     }
 
@@ -562,8 +608,8 @@ mod tests {
         // the runtime cost dominating elsewhere. (Schema is per-message,
         // tags per field.)
         let agents = sample();
-        let root = serialize(agents.iter()).len();
-        let ta = crate::io::ta_io::serialize(agents.iter()).len();
+        let root = ser(&agents).len();
+        let ta = crate::io::ta_io::serialize_pairs(&agents).len();
         assert!(root > ta / 2, "root={root} ta={ta}"); // same order of magnitude
     }
 }

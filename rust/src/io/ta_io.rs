@@ -21,15 +21,25 @@
 //! ids, the analog of the paper's labelled-and-invalidated (`0x1`)
 //! pointers.
 //!
-//! Mutability and deallocation mirror §2.2.1: in-place attribute writes are
-//! free; *growing* a behavior vector copies the agent out of the buffer
-//! (the "vector notices capacity is reached and reallocates outside the
-//! buffer" path), and [`TaView::release`] implements the intercepted-
-//! delete accounting — the buffer is reclaimable exactly when every block
-//! has been released.
+//! Since the behavior-arena refactor, agents no longer own a behavior
+//! vector: the sender's behaviors live in the `ResourceManager`'s flat
+//! [`BehaviorArena`](crate::core::resource_manager::BehaviorArena),
+//! addressed by the `beh_off`/`nbeh` columns exposed through
+//! [`ColumnSource`]. The columnar writer streams each agent's behavior
+//! tail as one contiguous `&[Behavior]` extent — no per-agent indirection
+//! at all. Callers holding agents *outside* a manager pair them with
+//! explicit behavior slices ([`serialize_pairs`], [`PairRows`]); a bare
+//! `&Agent` iterator ([`serialize`]) encodes zero-behavior rows.
+//!
+//! Mutability and deallocation mirror §2.2.1: in-place attribute writes
+//! are free; structural changes copy out of the buffer (the "vector
+//! notices capacity is reached and reallocates outside the buffer" path —
+//! here, ingestion into an arena or [`AgentBatch`]), and
+//! [`TaView::release`] implements the intercepted-delete accounting — the
+//! buffer is reclaimable exactly when every block has been released.
 
 use super::buffer::AlignedBuf;
-use crate::core::agent::{Agent, AgentKind, Behavior, CellType, SirState};
+use crate::core::agent::{Agent, AgentBatch, AgentKind, Behavior, CellType, SirState};
 use crate::core::ids::{AgentPointer, GlobalId, LocalId};
 use crate::util::Vec3;
 
@@ -44,6 +54,12 @@ pub const MAGIC: u32 = 0x5441_494F;
 const ENDIAN_TAG: u8 = 1;
 #[cfg(target_endian = "big")]
 const ENDIAN_TAG: u8 = 2;
+
+/// Highest agent class id the schema knows (see `AgentKind::class_id`).
+pub const MAX_AGENT_CLASS_ID: u16 = 5;
+
+/// Highest behavior class id the schema knows (see `Behavior::class_id`).
+pub const MAX_BEHAVIOR_CLASS_ID: u16 = 7;
 
 /// Fixed message header.
 #[repr(C)]
@@ -130,16 +146,11 @@ impl AgentBlock {
         self.class_id == 0
     }
 
-    /// Encode an agent header (behaviors are written separately).
-    pub fn from_agent(a: &Agent) -> AgentBlock {
-        Self::from_parts(
-            &a.kind,
-            a.global_id,
-            a.position,
-            a.diameter,
-            a.neighbor_ref,
-            a.behaviors.len() as u32,
-        )
+    /// Encode an agent header with `n_behaviors` behavior children to
+    /// follow (the caller writes them; the agent itself carries none —
+    /// behavior storage lives in the sender's arena or batch).
+    pub fn from_agent(a: &Agent, n_behaviors: u32) -> AgentBlock {
+        Self::from_parts(&a.kind, a.global_id, a.position, a.diameter, a.neighbor_ref, n_behaviors)
     }
 
     /// Build a block from the hot attributes alone — the entry point for
@@ -166,6 +177,9 @@ impl AgentBlock {
             }
             AgentKind::TumorCell { cycle, quiescent } => {
                 ([cycle, 0.0, 0.0], quiescent as u64)
+            }
+            AgentKind::Citizen { wealth, reputation } => {
+                ([wealth, reputation, 0.0], 0)
             }
         };
         AgentBlock {
@@ -205,11 +219,15 @@ impl AgentBlock {
                 cycle: self.payload[0],
                 quiescent: self.payload_u != 0,
             },
+            5 => AgentKind::Citizen {
+                wealth: self.payload[0],
+                reputation: self.payload[1],
+            },
             // Not wire-reachable: `TaView::parse_with` rejects class ids
-            // outside 0..=4 (`TaError::BadClassId`) before any block is
-            // handed out, and 0 (placeholder) never reaches `kind()` —
-            // callers filter with `is_placeholder`. Hitting this means a
-            // locally-built block was constructed wrong: a bug.
+            // outside 0..=MAX_AGENT_CLASS_ID (`TaError::BadClassId`) before
+            // any block is handed out, and 0 (placeholder) never reaches
+            // `kind()` — callers filter with `is_placeholder`. Hitting this
+            // means a locally-built block was constructed wrong: a bug.
             other => panic!("unknown agent class id {other}"),
         }
     }
@@ -218,16 +236,17 @@ impl AgentBlock {
         GlobalId::new(self.gid_rank, self.gid_counter)
     }
 
-    /// Reconstruct an owned [`Agent`] (used when the higher layer needs to
-    /// move the agent out of the buffer — e.g. migration ingestion).
-    pub fn to_agent(&self, behaviors: &[BehaviorBlock]) -> Agent {
+    /// Reconstruct an owned [`Agent`] header (used when the higher layer
+    /// needs to move the agent out of the buffer — e.g. migration
+    /// ingestion). Behaviors are not part of the agent anymore; ingest
+    /// them from [`TaView::behaviors`] into the destination arena/batch.
+    pub fn to_agent(&self) -> Agent {
         Agent {
             local_id: LocalId::INVALID,
             global_id: self.global_id(),
             position: Vec3::from_array(self.position),
             diameter: self.diameter,
             kind: self.kind(),
-            behaviors: behaviors.iter().map(BehaviorBlock::to_behavior).collect(),
             neighbor_ref: AgentPointer::to(GlobalId::new(self.ref_rank, self.ref_counter)),
         }
     }
@@ -245,6 +264,8 @@ impl BehaviorBlock {
             Behavior::TumorGrowth { cycle_rate, max_diameter } => {
                 ([cycle_rate, max_diameter, 0.0], 0)
             }
+            Behavior::Trade { radius, gain, cooldown } => ([radius, gain, 0.0], cooldown),
+            Behavior::Reputation { score, decay } => ([score, decay, 0.0], 0),
         };
         BehaviorBlock { class_id: b.class_id(), _pad: 0, extra, params }
     }
@@ -260,9 +281,15 @@ impl BehaviorBlock {
                 recovery_iters: self.extra,
             },
             5 => Behavior::TumorGrowth { cycle_rate: self.params[0], max_diameter: self.params[1] },
+            6 => Behavior::Trade {
+                radius: self.params[0],
+                gain: self.params[1],
+                cooldown: self.extra,
+            },
+            7 => Behavior::Reputation { score: self.params[0], decay: self.params[1] },
             // Not wire-reachable: `TaView::parse_with` rejects behavior
-            // class ids outside 1..=5 during the parse walk, so only a
-            // locally-miswritten block can land here: a bug.
+            // class ids outside 1..=MAX_BEHAVIOR_CLASS_ID during the parse
+            // walk, so only a locally-miswritten block can land here: a bug.
             other => panic!("unknown behavior class id {other}"),
         }
     }
@@ -272,11 +299,14 @@ impl BehaviorBlock {
 // Serialization
 // ---------------------------------------------------------------------------
 
-/// Serialize agents into a TA IO message. The hot path sizes the buffer
-/// once (no reallocation, no redundant zero-fill) and does straight-line
+/// Serialize bare agent headers into a TA IO message (every row has zero
+/// behavior children). The hot path sizes the buffer once (no
+/// reallocation, no redundant zero-fill) and does straight-line
 /// `copy_nonoverlapping` block writes — this is where the paper's 110×
-/// serialization speedup over the generic baseline comes from.
-pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent> + Clone) -> AlignedBuf {
+/// serialization speedup over the generic baseline comes from. Agents
+/// carrying behaviors are encoded with [`serialize_pairs`] or the
+/// columnar writer ([`serialize_columns_into`]).
+pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent>) -> AlignedBuf {
     let mut buf = AlignedBuf::new();
     serialize_into(agents, &mut buf);
     buf
@@ -286,22 +316,16 @@ pub fn serialize<'a>(agents: impl ExactSizeIterator<Item = &'a Agent> + Clone) -
 /// across messages — the per-channel variant for allocation-free steady
 /// state.
 pub fn serialize_into<'a>(
-    agents: impl ExactSizeIterator<Item = &'a Agent> + Clone,
+    agents: impl ExactSizeIterator<Item = &'a Agent>,
     buf: &mut AlignedBuf,
 ) {
-    // Exact-size pass (cheap: one length read per agent).
-    let total: usize = HEADER_BYTES
-        + agents
-            .clone()
-            .map(|a| AGENT_BLOCK_BYTES + a.behaviors.len() * BEHAVIOR_BLOCK_BYTES)
-            .sum::<usize>();
+    let n = agents.len();
+    let total = HEADER_BYTES + n * AGENT_BLOCK_BYTES;
     buf.resize_for_overwrite(total);
     let base = buf.as_mut_ptr();
     let mut off = HEADER_BYTES;
-    let mut block_count = 0u32;
-    let mut agent_count = 0u32;
     for a in agents {
-        let ab = AgentBlock::from_agent(a);
+        let ab = AgentBlock::from_agent(a, 0);
         unsafe {
             std::ptr::copy_nonoverlapping(
                 &ab as *const AgentBlock as *const u8,
@@ -310,26 +334,24 @@ pub fn serialize_into<'a>(
             );
         }
         off += AGENT_BLOCK_BYTES;
-        block_count += 1;
-        if !a.behaviors.is_empty() {
-            // One child block allocation (the behavior vector) per agent.
-            block_count += 1;
-            for b in &a.behaviors {
-                let bb = BehaviorBlock::from_behavior(b);
-                unsafe {
-                    std::ptr::copy_nonoverlapping(
-                        &bb as *const BehaviorBlock as *const u8,
-                        base.add(off),
-                        BEHAVIOR_BLOCK_BYTES,
-                    );
-                }
-                off += BEHAVIOR_BLOCK_BYTES;
-            }
-        }
-        agent_count += 1;
     }
     debug_assert_eq!(off, total);
-    write_header(buf, agent_count, block_count, 0);
+    write_header(buf, n as u32, n as u32, 0);
+}
+
+/// Serialize `(agent, behaviors)` pairs — the compatibility path for
+/// callers holding agents outside a `ResourceManager` (tests, oracles,
+/// ROOT comparisons). Byte-identical to the columnar writer over the
+/// same agents in the same order.
+pub fn serialize_pairs(pairs: &[(Agent, Vec<Behavior>)]) -> AlignedBuf {
+    let mut buf = AlignedBuf::new();
+    serialize_pairs_into(pairs, &mut buf);
+    buf
+}
+
+/// [`serialize_pairs`] into a caller-owned buffer.
+pub fn serialize_pairs_into(pairs: &[(Agent, Vec<Behavior>)], buf: &mut AlignedBuf) {
+    serialize_rows_into(&PairRows(pairs), buf);
 }
 
 // ---------------------------------------------------------------------------
@@ -339,7 +361,9 @@ pub fn serialize_into<'a>(
 /// Borrowed view over the hot-attribute columns of an agent store,
 /// indexed by *slot*. The `ResourceManager` SoA mirror produces one of
 /// these; the columnar writer streams blocks straight out of the columns
-/// without assembling (or even reading) an `Agent` struct.
+/// without assembling (or even reading) an `Agent` struct. Behavior
+/// tails stream from the flat arena pool (`beh`) through the per-slot
+/// extent columns (`beh_off`/`nbeh`) — the whole agent is columnar.
 #[derive(Clone, Copy)]
 pub struct ColumnSource<'a> {
     pub pos: &'a [Vec3],
@@ -347,8 +371,21 @@ pub struct ColumnSource<'a> {
     pub kind: &'a [AgentKind],
     pub gid: &'a [GlobalId],
     pub nref: &'a [AgentPointer],
-    /// Behavior-child count per slot (mirrors `agent.behaviors.len()`).
+    /// Behavior-child count per slot (the extent length).
     pub nbeh: &'a [u32],
+    /// Behavior extent offset per slot (into `beh`).
+    pub beh_off: &'a [u32],
+    /// The flat behavior pool the extents index into.
+    pub beh: &'a [Behavior],
+}
+
+impl<'a> ColumnSource<'a> {
+    /// Behavior extent of slot `s` (what the writer streams as the row's
+    /// child blocks).
+    #[inline]
+    pub fn behaviors_of(&self, s: usize) -> &'a [Behavior] {
+        &self.beh[self.beh_off[s] as usize..(self.beh_off[s] + self.nbeh[s]) as usize]
+    }
 }
 
 /// A random-access source of wire rows (one row = agent block + behavior
@@ -378,17 +415,44 @@ pub trait RowSource {
     unsafe fn write_row(&self, i: usize, dst: *mut u8);
 }
 
-/// Rows drawn from SoA columns for an id list (the aura fast path: the
-/// per-destination selection indexes the columns by `LocalId::index`).
-/// `behaviors` resolves a slot's behavior slice — the only per-agent
-/// indirection left; the fixed-size block streams purely from columns.
-pub struct ColumnRows<'a, F> {
-    pub cols: ColumnSource<'a>,
-    pub ids: &'a [LocalId],
-    pub behaviors: F,
+/// Write an agent block followed by its behavior child blocks at `dst`.
+///
+/// # Safety
+/// `dst` must be valid for `AGENT_BLOCK_BYTES + bs.len() *
+/// BEHAVIOR_BLOCK_BYTES` bytes of writes.
+#[inline]
+unsafe fn write_row_raw(ab: &AgentBlock, bs: &[Behavior], dst: *mut u8) {
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            ab as *const AgentBlock as *const u8,
+            dst,
+            AGENT_BLOCK_BYTES,
+        );
+    }
+    let mut off = AGENT_BLOCK_BYTES;
+    for b in bs {
+        let bb = BehaviorBlock::from_behavior(b);
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                &bb as *const BehaviorBlock as *const u8,
+                dst.add(off),
+                BEHAVIOR_BLOCK_BYTES,
+            );
+        }
+        off += BEHAVIOR_BLOCK_BYTES;
+    }
 }
 
-impl<'a, F: Fn(u32) -> &'a [Behavior]> RowSource for ColumnRows<'a, F> {
+/// Rows drawn from SoA columns for an id list (the aura fast path: the
+/// per-destination selection indexes the columns by `LocalId::index`).
+/// Behavior tails come straight from the arena pool via the extent
+/// columns — no per-agent indirection at all.
+pub struct ColumnRows<'a> {
+    pub cols: ColumnSource<'a>,
+    pub ids: &'a [LocalId],
+}
+
+impl RowSource for ColumnRows<'_> {
     #[inline]
     fn len(&self) -> usize {
         self.ids.len()
@@ -414,32 +478,12 @@ impl<'a, F: Fn(u32) -> &'a [Behavior]> RowSource for ColumnRows<'a, F> {
             self.cols.nref[s],
             self.cols.nbeh[s],
         );
-        unsafe {
-            std::ptr::copy_nonoverlapping(
-                &ab as *const AgentBlock as *const u8,
-                dst,
-                AGENT_BLOCK_BYTES,
-            );
-        }
-        let bs = (self.behaviors)(self.ids[i].index);
-        debug_assert_eq!(bs.len() as u32, self.cols.nbeh[s], "behavior column out of sync");
-        let mut off = AGENT_BLOCK_BYTES;
-        for b in bs {
-            let bb = BehaviorBlock::from_behavior(b);
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    &bb as *const BehaviorBlock as *const u8,
-                    dst.add(off),
-                    BEHAVIOR_BLOCK_BYTES,
-                );
-            }
-            off += BEHAVIOR_BLOCK_BYTES;
-        }
+        unsafe { write_row_raw(&ab, self.cols.behaviors_of(s), dst) };
     }
 }
 
-/// Rows drawn from a slice of borrowed agents (the compatibility path for
-/// callers that hold owned `Agent`s, e.g. migration).
+/// Rows drawn from a slice of borrowed bare agents (zero behaviors per
+/// row — the delta layer's bare-iterator compatibility path).
 pub struct AgentRows<'a>(pub &'a [&'a Agent]);
 
 impl RowSource for AgentRows<'_> {
@@ -454,38 +498,45 @@ impl RowSource for AgentRows<'_> {
     }
 
     #[inline]
-    fn n_behaviors(&self, i: usize) -> u32 {
-        self.0[i].behaviors.len() as u32
+    fn n_behaviors(&self, _i: usize) -> u32 {
+        0
     }
 
     unsafe fn write_row(&self, i: usize, dst: *mut u8) {
-        let a = self.0[i];
-        let ab = AgentBlock::from_agent(a);
-        unsafe {
-            std::ptr::copy_nonoverlapping(
-                &ab as *const AgentBlock as *const u8,
-                dst,
-                AGENT_BLOCK_BYTES,
-            );
-        }
-        let mut off = AGENT_BLOCK_BYTES;
-        for b in &a.behaviors {
-            let bb = BehaviorBlock::from_behavior(b);
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    &bb as *const BehaviorBlock as *const u8,
-                    dst.add(off),
-                    BEHAVIOR_BLOCK_BYTES,
-                );
-            }
-            off += BEHAVIOR_BLOCK_BYTES;
-        }
+        let ab = AgentBlock::from_agent(self.0[i], 0);
+        unsafe { write_row_raw(&ab, &[], dst) };
     }
 }
 
-/// Serialize rows in order into `buf` — byte-identical to [`serialize`]
-/// over the same agents. Single exact-size pass, then straight-line block
-/// writes; no allocation when `buf` capacity suffices.
+/// Rows drawn from owned `(agent, behaviors)` pairs.
+pub struct PairRows<'a>(pub &'a [(Agent, Vec<Behavior>)]);
+
+impl RowSource for PairRows<'_> {
+    #[inline]
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    #[inline]
+    fn gid(&self, i: usize) -> GlobalId {
+        self.0[i].0.global_id
+    }
+
+    #[inline]
+    fn n_behaviors(&self, i: usize) -> u32 {
+        self.0[i].1.len() as u32
+    }
+
+    unsafe fn write_row(&self, i: usize, dst: *mut u8) {
+        let (a, bs) = &self.0[i];
+        let ab = AgentBlock::from_agent(a, bs.len() as u32);
+        unsafe { write_row_raw(&ab, bs, dst) };
+    }
+}
+
+/// Serialize rows in order into `buf`. Single exact-size pass, then
+/// straight-line block writes; no allocation when `buf` capacity
+/// suffices.
 pub fn serialize_rows_into<R: RowSource>(rows: &R, buf: &mut AlignedBuf) {
     let n = rows.len();
     let mut total = HEADER_BYTES;
@@ -507,15 +558,15 @@ pub fn serialize_rows_into<R: RowSource>(rows: &R, buf: &mut AlignedBuf) {
 
 /// SoA-direct encode: stream the agents selected by `ids` out of the hot
 /// columns into `buf`. This is the zero-copy aura fast path — no `Agent`
-/// reads, no per-field pushes, wire output byte-identical to
-/// [`serialize`] over the same agents in the same order.
-pub fn serialize_columns_into<'a, F: Fn(u32) -> &'a [Behavior]>(
+/// reads, no per-field pushes, behavior tails streamed from the flat
+/// arena; wire output byte-identical to [`serialize_pairs`] over the
+/// same agents in the same order.
+pub fn serialize_columns_into<'a>(
     cols: &ColumnSource<'a>,
     ids: &'a [LocalId],
-    behaviors: F,
     buf: &mut AlignedBuf,
 ) {
-    serialize_rows_into(&ColumnRows { cols: *cols, ids, behaviors }, buf);
+    serialize_rows_into(&ColumnRows { cols: *cols, ids }, buf);
 }
 
 /// Serialize from pre-built blocks (used by the delta layer's reorder
@@ -665,7 +716,7 @@ impl TaView {
             // [`BehaviorBlock::to_behavior`]) can trust any block handed
             // out by a parsed view — corrupt class ids from the wire fail
             // the parse instead of panicking dispatch later.
-            if block.class_id > 4 {
+            if block.class_id > MAX_AGENT_CLASS_ID {
                 return Err(TaError::BadClassId(block.class_id));
             }
             live += u32::from(!block.is_placeholder());
@@ -676,7 +727,7 @@ impl TaView {
             }
             for _ in 0..block.n_behaviors {
                 let b = unsafe { &*(buf.as_ptr().add(boff) as *const BehaviorBlock) };
-                if b.class_id == 0 || b.class_id > 5 {
+                if b.class_id == 0 || b.class_id > MAX_BEHAVIOR_CLASS_ID {
                     return Err(TaError::BadClassId(b.class_id));
                 }
                 boff += BEHAVIOR_BLOCK_BYTES;
@@ -751,17 +802,16 @@ impl TaView {
         }
     }
 
-    /// Copy agent `i` out of the buffer as an owned [`Agent`]. This is the
-    /// grow/realloc escape hatch: any structural change (adding a
-    /// behavior) goes through an owned copy, exactly like the paper's
-    /// vector reallocating outside the deserialized buffer.
+    /// Copy agent `i` out of the buffer as an owned [`Agent`] header. Its
+    /// behavior tail stays in the buffer — ingest it separately (e.g.
+    /// [`TaView::materialize_batch_into`] or straight into an arena via
+    /// `ResourceManager::add_with_behaviors_from`).
     pub fn materialize(&self, i: usize) -> Agent {
-        self.agent(i).to_agent(self.behaviors(i))
+        self.agent(i).to_agent()
     }
 
-    /// Materialize all non-placeholder agents. Pre-reserves for the full
-    /// message length (placeholders are rare), avoiding growth reallocs
-    /// on the migration receive path.
+    /// Materialize all non-placeholder agent headers (behaviors not
+    /// included — use [`TaView::materialize_batch_into`] to carry them).
     pub fn materialize_all(&self) -> Vec<Agent> {
         let mut out = Vec::new();
         self.materialize_all_into(&mut out);
@@ -769,9 +819,7 @@ impl TaView {
     }
 
     /// [`TaView::materialize_all`] appending into a caller-owned vector
-    /// whose capacity persists across iterations (the migration ingest
-    /// scratch). Each agent still owns its behavior vector — that
-    /// allocation is inherent to moving the agent out of the buffer.
+    /// whose capacity persists across iterations.
     pub fn materialize_all_into(&self, out: &mut Vec<Agent>) {
         out.reserve(self.len());
         out.extend(
@@ -779,6 +827,21 @@ impl TaView {
                 .filter(|&i| !self.agent(i).is_placeholder())
                 .map(|i| self.materialize(i)),
         );
+    }
+
+    /// Materialize all non-placeholder agents *with* their behavior tails
+    /// into a batch — the migration/checkpoint ingest path when the
+    /// destination is not a `ResourceManager`.
+    pub fn materialize_batch_into(&self, out: &mut AgentBatch) {
+        for i in 0..self.len() {
+            if self.agent(i).is_placeholder() {
+                continue;
+            }
+            out.push_from(
+                self.materialize(i),
+                self.behaviors(i).iter().map(BehaviorBlock::to_behavior),
+            );
+        }
     }
 
     /// Release the blocks of agent `i` (the intercepted `delete`).
@@ -915,10 +978,12 @@ impl ViewPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::agent::{Agent, CellType, SirState};
+    use crate::core::agent::{
+        growing_cell_behaviors, person_behaviors, tumor_cell_behaviors, Agent, CellType, SirState,
+    };
     use crate::util::prop::{check, Gen};
 
-    fn sample_agents() -> Vec<Agent> {
+    fn sample_pairs() -> Vec<(Agent, Vec<Behavior>)> {
         let mut a = Agent::cell(Vec3::new(1.0, 2.0, 3.0), 10.0, CellType::B);
         a.global_id = GlobalId::new(3, 77);
         let mut b = Agent::person(Vec3::new(-4.0, 5.5, 0.25), SirState::Infected);
@@ -931,7 +996,65 @@ mod tests {
         c.neighbor_ref = AgentPointer::to(GlobalId::new(3, 77));
         let mut d = Agent::tumor_cell(Vec3::ZERO, 5.0);
         d.global_id = GlobalId::new(0, 1);
-        vec![a, b, c, d]
+        let mut e = Agent::citizen(Vec3::new(2.0, 4.0, 6.0), 120.5);
+        e.global_id = GlobalId::new(1, 3);
+        vec![
+            (a, vec![]),
+            (b, person_behaviors().to_vec()),
+            (c, growing_cell_behaviors(7.0).to_vec()),
+            (d, tumor_cell_behaviors(5.0).to_vec()),
+            (
+                e,
+                vec![
+                    Behavior::Trade { radius: 2.0, gain: 0.5, cooldown: 3 },
+                    Behavior::Reputation { score: 0.25, decay: 0.01 },
+                ],
+            ),
+        ]
+    }
+
+    /// Random `(agent, behaviors)` pair covering every kind and behavior
+    /// class (shared by the round-trip and byte-identity properties).
+    fn gen_pair(g: &mut Gen, i: usize) -> (Agent, Vec<Behavior>) {
+        let pos = Vec3::new(g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3));
+        let mut a = match g.usize_in(0..=4) {
+            0 => Agent::cell(pos, g.f64_in(0.1, 50.0), if g.bool() { CellType::A } else { CellType::B }),
+            1 => Agent::growing_cell(pos, g.f64_in(0.1, 50.0)),
+            2 => Agent::person(pos, SirState::from_code(g.usize_in(0..=2) as u8)),
+            3 => Agent::tumor_cell(pos, g.f64_in(0.1, 50.0)),
+            _ => Agent::citizen(pos, g.f64_in(0.0, 1e4)),
+        };
+        if g.bool() {
+            a.global_id = GlobalId::new(g.usize_in(0..=7) as u32, i as u64);
+        }
+        if g.bool() {
+            a.neighbor_ref = AgentPointer::to(GlobalId::new(1, g.u64() % 100));
+        }
+        let nb = g.usize_in(0..=4);
+        let mut bs = Vec::new();
+        for _ in 0..nb {
+            bs.push(match g.usize_in(0..=6) {
+                0 => Behavior::Growth { rate: g.f64_in(0.0, 2.0), max_diameter: g.f64_in(1.0, 99.0) },
+                1 => Behavior::Divide,
+                2 => Behavior::RandomWalk { speed: g.f64_in(0.0, 5.0) },
+                3 => Behavior::Infection {
+                    radius: g.f64_in(0.1, 9.0),
+                    prob: g.f64_in(0.0, 1.0),
+                    recovery_iters: g.usize_in(1..=99) as u32,
+                },
+                4 => Behavior::TumorGrowth {
+                    cycle_rate: g.f64_in(0.0, 1.0),
+                    max_diameter: g.f64_in(1.0, 99.0),
+                },
+                5 => Behavior::Trade {
+                    radius: g.f64_in(0.1, 9.0),
+                    gain: g.f64_in(0.0, 2.0),
+                    cooldown: g.usize_in(0..=20) as u32,
+                },
+                _ => Behavior::Reputation { score: g.f64_in(-1.0, 1.0), decay: g.f64_in(0.0, 0.2) },
+            });
+        }
+        (a, bs)
     }
 
     #[test]
@@ -973,37 +1096,45 @@ mod tests {
 
     #[test]
     fn round_trip_all_kinds() {
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let view = TaView::parse(buf).unwrap();
-        assert_eq!(view.len(), agents.len());
-        let restored = view.materialize_all();
-        for (orig, rest) in agents.iter().zip(&restored) {
+        assert_eq!(view.len(), pairs.len());
+        let mut batch = AgentBatch::new();
+        view.materialize_batch_into(&mut batch);
+        assert_eq!(batch.len(), pairs.len());
+        for (i, (orig, obs)) in pairs.iter().enumerate() {
+            let rest = &batch.agents[i];
             assert_eq!(orig.global_id, rest.global_id);
             assert_eq!(orig.position, rest.position);
             assert_eq!(orig.diameter, rest.diameter);
             assert_eq!(orig.kind, rest.kind);
-            assert_eq!(orig.behaviors, rest.behaviors);
             assert_eq!(orig.neighbor_ref, rest.neighbor_ref);
+            assert_eq!(&obs[..], batch.behaviors(i));
         }
     }
 
     #[test]
     fn zero_copy_read_access() {
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let view = TaView::parse(buf).unwrap();
         // Direct block reads without materialization.
         assert_eq!(view.agent(0).position, [1.0, 2.0, 3.0]);
         assert_eq!(view.agent(0).class_id, 1);
         assert_eq!(view.behaviors(1).len(), 2);
         assert_eq!(view.behaviors(3)[0].class_id, 5);
+        // Citizen row: new kind + new behavior classes.
+        assert_eq!(view.agent(4).class_id, 5);
+        assert_eq!(view.behaviors(4)[0].class_id, 6);
+        assert_eq!(view.behaviors(4)[1].class_id, 7);
+        assert_eq!(view.behaviors(4)[0].extra, 3, "trade cooldown rides in extra");
     }
 
     #[test]
     fn in_place_mutation() {
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let mut view = TaView::parse(buf).unwrap();
         view.agent_mut(0).position[0] = 99.0;
         view.agent_mut(0).diameter = 123.0;
@@ -1011,26 +1142,28 @@ mod tests {
         assert_eq!(view.agent(0).position[0], 99.0);
         let m = view.materialize(0);
         assert_eq!(m.diameter, 123.0);
-        let p = view.materialize(1);
-        assert_eq!(p.behaviors[0], Behavior::RandomWalk { speed: 42.0 });
+        assert_eq!(
+            view.behaviors(1)[0].to_behavior(),
+            Behavior::RandomWalk { speed: 42.0 }
+        );
     }
 
     #[test]
-    fn grow_escapes_buffer() {
-        // Structural growth copies out; the buffer stays untouched.
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+    fn materialize_is_a_copy() {
+        // Structural changes happen on the copy; the buffer stays
+        // untouched (the §2.2.1 realloc-outside-the-buffer path).
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let view = TaView::parse(buf).unwrap();
         let mut owned = view.materialize(0);
-        owned.behaviors.push(Behavior::Divide);
-        assert_eq!(view.behaviors(0).len(), 0, "buffer must be unchanged");
-        assert_eq!(owned.behaviors.len(), 1);
+        owned.diameter = 555.0;
+        assert_eq!(view.agent(0).diameter, 10.0, "buffer must be unchanged");
     }
 
     #[test]
     fn release_accounting() {
-        let agents = sample_agents(); // blocks: a=1 (no behaviors), b=2, c=2, d=2 -> 7
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs(); // blocks: 1 + 2 + 2 + 2 + 2 = 9
+        let buf = serialize_pairs(&pairs);
         let mut view = TaView::parse(buf).unwrap();
         assert!(!view.fully_released());
         for i in 0..view.len() {
@@ -1041,8 +1174,8 @@ mod tests {
 
     #[test]
     fn partial_release_leaks() {
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let mut view = TaView::parse(buf).unwrap();
         view.release(0);
         view.release(1);
@@ -1060,6 +1193,22 @@ mod tests {
     }
 
     #[test]
+    fn bare_serialize_encodes_zero_behavior_rows() {
+        let agents: Vec<Agent> =
+            sample_pairs().into_iter().map(|(a, _)| a).collect();
+        let buf = serialize(agents.iter());
+        let view = TaView::parse(buf).unwrap();
+        assert_eq!(view.len(), agents.len());
+        for i in 0..view.len() {
+            assert_eq!(view.agent(i).n_behaviors, 0);
+        }
+        // Identical to pairing every agent with an empty behavior set.
+        let empty_pairs: Vec<(Agent, Vec<Behavior>)> =
+            agents.iter().map(|a| (*a, Vec::new())).collect();
+        assert_eq!(serialize(agents.iter()).as_slice(), serialize_pairs(&empty_pairs).as_slice());
+    }
+
+    #[test]
     fn parse_rejects_garbage() {
         assert_eq!(TaView::parse(AlignedBuf::from_bytes(&[1, 2, 3])).unwrap_err(), TaError::TooShort);
         let mut buf = AlignedBuf::new();
@@ -1069,16 +1218,16 @@ mod tests {
 
     #[test]
     fn parse_rejects_truncation() {
-        let agents = sample_agents();
-        let buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let buf = serialize_pairs(&pairs);
         let cut = AlignedBuf::from_bytes(&buf.as_slice()[..buf.len() - 8]);
         assert_eq!(TaView::parse(cut).unwrap_err(), TaError::Truncated);
     }
 
     #[test]
     fn parse_rejects_wrong_version() {
-        let agents = sample_agents();
-        let mut buf = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let mut buf = serialize_pairs(&pairs);
         buf.as_mut_slice()[4] = 99; // version field
         assert!(matches!(TaView::parse(buf).unwrap_err(), TaError::BadVersion(_)));
     }
@@ -1087,8 +1236,8 @@ mod tests {
     /// dispatch in `kind()` / `to_behavior()` later.
     #[test]
     fn parse_rejects_bad_class_ids() {
-        let agents = sample_agents();
-        let clean = serialize(agents.iter());
+        let pairs = sample_pairs();
+        let clean = serialize_pairs(&pairs);
         // First agent block's class id (u16 at the start of the block).
         let mut buf = AlignedBuf::from_bytes(clean.as_slice());
         buf.as_mut_slice()[HEADER_BYTES] = 200;
@@ -1110,18 +1259,25 @@ mod tests {
         let mut buf = AlignedBuf::from_bytes(clean.as_slice());
         buf.as_mut_slice()[boff] = 77;
         assert_eq!(TaView::parse(buf).unwrap_err(), TaError::BadClassId(77));
+        // One past the widened ceiling is still rejected.
+        let mut buf = AlignedBuf::from_bytes(clean.as_slice());
+        buf.as_mut_slice()[boff] = (MAX_BEHAVIOR_CLASS_ID + 1) as u8;
+        assert_eq!(
+            TaView::parse(buf).unwrap_err(),
+            TaError::BadClassId(MAX_BEHAVIOR_CLASS_ID + 1)
+        );
     }
 
     #[test]
     fn serialize_blocks_matches_serialize() {
-        let agents = sample_agents();
-        let direct = serialize(agents.iter());
-        let slots: Vec<(AgentBlock, Vec<BehaviorBlock>)> = agents
+        let pairs = sample_pairs();
+        let direct = serialize_pairs(&pairs);
+        let slots: Vec<(AgentBlock, Vec<BehaviorBlock>)> = pairs
             .iter()
-            .map(|a| {
+            .map(|(a, bs)| {
                 (
-                    AgentBlock::from_agent(a),
-                    a.behaviors.iter().map(BehaviorBlock::from_behavior).collect(),
+                    AgentBlock::from_agent(a, bs.len() as u32),
+                    bs.iter().map(BehaviorBlock::from_behavior).collect(),
                 )
             })
             .collect();
@@ -1129,76 +1285,84 @@ mod tests {
         assert_eq!(direct.as_slice(), from_blocks.as_slice());
     }
 
-    /// Build a column set mirroring `agents` (slot i = agent i) — what the
-    /// ResourceManager SoA mirror maintains incrementally.
-    fn columns_of(agents: &[Agent]) -> (Vec<Vec3>, Vec<f64>, Vec<AgentKind>, Vec<GlobalId>, Vec<AgentPointer>, Vec<u32>) {
-        (
-            agents.iter().map(|a| a.position).collect(),
-            agents.iter().map(|a| a.diameter).collect(),
-            agents.iter().map(|a| a.kind).collect(),
-            agents.iter().map(|a| a.global_id).collect(),
-            agents.iter().map(|a| a.neighbor_ref).collect(),
-            agents.iter().map(|a| a.behaviors.len() as u32).collect(),
-        )
+    /// Flat columns mirroring `pairs` (slot i = agent i), behaviors packed
+    /// into one pool in slot order — what the ResourceManager's SoA mirror
+    /// and arena maintain incrementally.
+    struct Cols {
+        pos: Vec<Vec3>,
+        diam: Vec<f64>,
+        kind: Vec<AgentKind>,
+        gid: Vec<GlobalId>,
+        nref: Vec<AgentPointer>,
+        nbeh: Vec<u32>,
+        beh_off: Vec<u32>,
+        beh: Vec<Behavior>,
     }
 
-    fn column_encode(agents: &[Agent], ids: &[LocalId]) -> AlignedBuf {
-        let (pos, diam, kind, gid, nref, nbeh) = columns_of(agents);
+    fn columns_of(pairs: &[(Agent, Vec<Behavior>)]) -> Cols {
+        let mut beh = Vec::new();
+        let mut beh_off = Vec::new();
+        for (_, bs) in pairs {
+            beh_off.push(beh.len() as u32);
+            beh.extend_from_slice(bs);
+        }
+        Cols {
+            pos: pairs.iter().map(|(a, _)| a.position).collect(),
+            diam: pairs.iter().map(|(a, _)| a.diameter).collect(),
+            kind: pairs.iter().map(|(a, _)| a.kind).collect(),
+            gid: pairs.iter().map(|(a, _)| a.global_id).collect(),
+            nref: pairs.iter().map(|(a, _)| a.neighbor_ref).collect(),
+            nbeh: pairs.iter().map(|(_, bs)| bs.len() as u32).collect(),
+            beh_off,
+            beh,
+        }
+    }
+
+    fn column_encode(pairs: &[(Agent, Vec<Behavior>)], ids: &[LocalId]) -> AlignedBuf {
+        let c = columns_of(pairs);
         let cols = ColumnSource {
-            pos: &pos,
-            diam: &diam,
-            kind: &kind,
-            gid: &gid,
-            nref: &nref,
-            nbeh: &nbeh,
+            pos: &c.pos,
+            diam: &c.diam,
+            kind: &c.kind,
+            gid: &c.gid,
+            nref: &c.nref,
+            nbeh: &c.nbeh,
+            beh_off: &c.beh_off,
+            beh: &c.beh,
         };
         let mut buf = AlignedBuf::new();
-        serialize_columns_into(&cols, ids, |s| &agents[s as usize].behaviors[..], &mut buf);
+        serialize_columns_into(&cols, ids, &mut buf);
         buf
     }
 
     #[test]
     fn columnar_encode_is_byte_identical() {
-        let agents = sample_agents();
-        let ids: Vec<LocalId> = (0..agents.len()).map(|i| LocalId::new(i as u32, 0)).collect();
-        let direct = serialize(agents.iter());
-        let cols = column_encode(&agents, &ids);
+        let pairs = sample_pairs();
+        let ids: Vec<LocalId> = (0..pairs.len()).map(|i| LocalId::new(i as u32, 0)).collect();
+        let direct = serialize_pairs(&pairs);
+        let cols = column_encode(&pairs, &ids);
         assert_eq!(direct.as_slice(), cols.as_slice());
     }
 
     #[test]
     fn columnar_encode_respects_id_selection_order() {
-        let agents = sample_agents();
+        let pairs = sample_pairs();
         // Send a subset in shuffled order, as the per-destination aura
         // selection does.
         let ids = [LocalId::new(2, 0), LocalId::new(0, 0), LocalId::new(3, 0)];
-        let selected: Vec<&Agent> = ids.iter().map(|id| &agents[id.index as usize]).collect();
-        let direct = serialize(selected.iter().copied());
-        let cols = column_encode(&agents, &ids);
+        let selected: Vec<(Agent, Vec<Behavior>)> =
+            ids.iter().map(|id| pairs[id.index as usize].clone()).collect();
+        let direct = serialize_pairs(&selected);
+        let cols = column_encode(&pairs, &ids);
         assert_eq!(direct.as_slice(), cols.as_slice());
     }
 
     #[test]
-    fn prop_columnar_matches_seed_encoder() {
-        check("columnar vs seed encode", 32, |g: &mut Gen| {
+    fn prop_columnar_matches_pair_encoder() {
+        check("columnar vs pair encode", 32, |g: &mut Gen| {
             let n = g.usize_in(0..=60);
-            let mut agents = Vec::new();
-            for i in 0..n {
-                let pos = Vec3::new(g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3));
-                let mut a = match g.usize_in(0..=3) {
-                    0 => Agent::cell(pos, g.f64_in(0.1, 50.0), if g.bool() { CellType::A } else { CellType::B }),
-                    1 => Agent::growing_cell(pos, g.f64_in(0.1, 50.0)),
-                    2 => Agent::person(pos, SirState::from_code(g.usize_in(0..=2) as u8)),
-                    _ => Agent::tumor_cell(pos, g.f64_in(0.1, 50.0)),
-                };
-                if g.bool() {
-                    a.global_id = GlobalId::new(g.usize_in(0..=7) as u32, i as u64);
-                }
-                if g.bool() {
-                    a.neighbor_ref = AgentPointer::to(GlobalId::new(1, g.u64() % 100));
-                }
-                agents.push(a);
-            }
+            let pairs: Vec<(Agent, Vec<Behavior>)> =
+                (0..n).map(|i| gen_pair(g, i)).collect();
             // Random subset, random order.
             let mut ids: Vec<LocalId> =
                 (0..n).filter(|_| g.bool()).map(|i| LocalId::new(i as u32, 0)).collect();
@@ -1206,54 +1370,47 @@ mod tests {
                 let k = g.usize_in(0..=ids.len() - 1);
                 ids.rotate_left(k);
             }
-            let selected: Vec<&Agent> = ids.iter().map(|id| &agents[id.index as usize]).collect();
-            let direct = serialize(selected.iter().copied());
-            let cols = column_encode(&agents, &ids);
+            let selected: Vec<(Agent, Vec<Behavior>)> =
+                ids.iter().map(|id| pairs[id.index as usize].clone()).collect();
+            let direct = serialize_pairs(&selected);
+            let cols = column_encode(&pairs, &ids);
             assert_eq!(direct.as_slice(), cols.as_slice());
         });
     }
 
     #[test]
     fn view_pool_recycles_storage() {
-        let agents = sample_agents();
+        let pairs = sample_pairs();
         let mut pool = ViewPool::new();
-        let view = TaView::parse_with(serialize(agents.iter()), pool.take_offsets()).unwrap();
-        assert_eq!(view.len(), agents.len());
+        let view = TaView::parse_with(serialize_pairs(&pairs), pool.take_offsets()).unwrap();
+        assert_eq!(view.len(), pairs.len());
         pool.put_view(view);
         assert!(pool.approx_bytes() > 0);
         // The next parse reuses the recycled buffer + offsets.
         let mut buf = pool.take_buf();
         let cap = buf.capacity();
-        buf.set_from_slice(serialize(agents.iter()).as_slice());
+        buf.set_from_slice(serialize_pairs(&pairs).as_slice());
         assert_eq!(buf.capacity(), cap);
         let view2 = TaView::parse_with(buf, pool.take_offsets()).unwrap();
-        assert_eq!(view2.len(), agents.len());
+        assert_eq!(view2.len(), pairs.len());
     }
 
     #[test]
     fn prop_round_trip_random_agents() {
         check("ta_io round trip", 32, |g: &mut Gen| {
             let n = g.usize_in(0..=40);
-            let mut agents = Vec::new();
-            for i in 0..n {
-                let pos = Vec3::new(g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3), g.f64_in(-1e3, 1e3));
-                let mut a = match g.usize_in(0..=3) {
-                    0 => Agent::cell(pos, g.f64_in(0.1, 50.0), if g.bool() { CellType::A } else { CellType::B }),
-                    1 => Agent::growing_cell(pos, g.f64_in(0.1, 50.0)),
-                    2 => Agent::person(pos, SirState::from_code(g.usize_in(0..=2) as u8)),
-                    _ => Agent::tumor_cell(pos, g.f64_in(0.1, 50.0)),
-                };
-                a.global_id = GlobalId::new(g.usize_in(0..=7) as u32, i as u64);
-                agents.push(a);
-            }
-            let view = TaView::parse(serialize(agents.iter())).unwrap();
-            let restored = view.materialize_all();
-            assert_eq!(restored.len(), agents.len());
-            for (o, r) in agents.iter().zip(&restored) {
+            let pairs: Vec<(Agent, Vec<Behavior>)> =
+                (0..n).map(|i| gen_pair(g, i)).collect();
+            let view = TaView::parse(serialize_pairs(&pairs)).unwrap();
+            let mut batch = AgentBatch::new();
+            view.materialize_batch_into(&mut batch);
+            assert_eq!(batch.len(), pairs.len());
+            for (i, (o, obs)) in pairs.iter().enumerate() {
+                let r = &batch.agents[i];
                 assert_eq!(o.global_id, r.global_id);
                 assert_eq!(o.kind, r.kind);
                 assert_eq!(o.position, r.position);
-                assert_eq!(o.behaviors, r.behaviors);
+                assert_eq!(&obs[..], batch.behaviors(i));
             }
         });
     }

@@ -23,6 +23,9 @@ pub enum Op {
     AuraUpdate,
     /// The model's behaviors over all owned agents (the "agent operations").
     AgentOps,
+    /// The arena behavior sweep (cache-linear execution of agent-attached
+    /// behaviors) plus serial effect application.
+    Behavior,
     /// Moving agents whose position left the owned volume.
     Migration,
     /// Load balancing (partitioning updates + box transfers).
@@ -57,9 +60,10 @@ pub enum Op {
 }
 
 impl Op {
-    pub const ALL: [Op; 15] = [
+    pub const ALL: [Op; 16] = [
         Op::AuraUpdate,
         Op::AgentOps,
+        Op::Behavior,
         Op::Migration,
         Op::Balancing,
         Op::Serialize,
@@ -79,6 +83,7 @@ impl Op {
         match self {
             Op::AuraUpdate => "aura_update",
             Op::AgentOps => "agent_ops",
+            Op::Behavior => "behavior",
             Op::Migration => "migration",
             Op::Balancing => "balancing",
             Op::Serialize => "serialize",
@@ -120,6 +125,9 @@ pub enum Counter {
     AuraAgentsSent,
     /// Agents updated (one per agent per iteration).
     AgentUpdates,
+    /// Behaviors executed by the arena sweep (one per live behavior per
+    /// iteration, summed over agents).
+    BehaviorsExecuted,
     /// Partition boxes moved by load balancing.
     BoxesRebalanced,
     /// Faults injected by the chaos transport (drop/delay/duplicate/
@@ -156,7 +164,7 @@ pub enum Counter {
 }
 
 impl Counter {
-    pub const ALL: [Counter; 20] = [
+    pub const ALL: [Counter; 21] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
@@ -165,6 +173,7 @@ impl Counter {
         Counter::AgentsMigratedOut,
         Counter::AuraAgentsSent,
         Counter::AgentUpdates,
+        Counter::BehaviorsExecuted,
         Counter::BoxesRebalanced,
         Counter::FaultsInjected,
         Counter::FaultsDetected,
@@ -189,6 +198,7 @@ impl Counter {
             Counter::AgentsMigratedOut => "agents_migrated_out",
             Counter::AuraAgentsSent => "aura_agents_sent",
             Counter::AgentUpdates => "agent_updates",
+            Counter::BehaviorsExecuted => "behaviors_executed",
             Counter::BoxesRebalanced => "boxes_rebalanced",
             Counter::FaultsInjected => "faults_injected",
             Counter::FaultsDetected => "faults_detected",

@@ -1,8 +1,10 @@
 //! The paper's benchmark simulations (§3.1, from BioDynaMo's suite):
 //! cell clustering (sorting), cell proliferation, epidemiology (SIR), and
-//! oncology (tumor spheroid growth). Plus the analytic references used for
-//! the Fig. 5 correctness verification and the convex-hull machinery for
-//! the tumor-diameter measurement.
+//! oncology (tumor spheroid growth) — plus the social-dynamics workload
+//! that stresses the flat behavior arena with heterogeneous, churning
+//! behavior sets. Also the analytic references used for the Fig. 5
+//! correctness verification and the convex-hull machinery for the
+//! tumor-diameter measurement.
 
 pub mod analytic;
 pub mod cell_clustering;
@@ -10,11 +12,13 @@ pub mod cell_proliferation;
 pub mod epidemiology;
 pub mod hull;
 pub mod oncology;
+pub mod social;
 
 pub use cell_clustering::CellClustering;
 pub use cell_proliferation::CellProliferation;
 pub use epidemiology::Epidemiology;
 pub use oncology::TumorSpheroid;
+pub use social::SocialDynamics;
 
 use crate::comm::FaultPlan;
 use crate::config::SimConfig;
@@ -37,13 +41,14 @@ pub fn run_by_name(cfg: &SimConfig) -> Result<RunResult, String> {
         "cell_proliferation" => Ok(run_simulation(cfg, |_| CellProliferation::new(cfg))),
         "epidemiology" => Ok(run_simulation(cfg, |_| Epidemiology::new(cfg))),
         "oncology" => Ok(run_simulation(cfg, |_| TumorSpheroid::new(cfg))),
+        "social" => Ok(run_simulation(cfg, |_| SocialDynamics::new(cfg))),
         other => Err(unknown_simulation(other)),
     }
 }
 
 fn unknown_simulation(other: &str) -> String {
     format!(
-        "unknown simulation {other:?}; available: cell_clustering, cell_proliferation, epidemiology, oncology"
+        "unknown simulation {other:?}; available: cell_clustering, cell_proliferation, epidemiology, oncology, social"
     )
 }
 
@@ -63,6 +68,7 @@ pub fn run_multiprocess_by_name(
         }
         "epidemiology" => run_multiprocess(cfg, |_| Epidemiology::new(cfg), exe, chaos),
         "oncology" => run_multiprocess(cfg, |_| TumorSpheroid::new(cfg), exe, chaos),
+        "social" => run_multiprocess(cfg, |_| SocialDynamics::new(cfg), exe, chaos),
         other => Err(unknown_simulation(other)),
     }
 }
@@ -89,10 +95,11 @@ pub fn run_rank_by_name(
         "oncology" => {
             Ok(run_rank_process(cfg, rank, rendezvous, TumorSpheroid::new(cfg), chaos))
         }
+        "social" => Ok(run_rank_process(cfg, rank, rendezvous, SocialDynamics::new(cfg), chaos)),
         other => Err(unknown_simulation(other)),
     }
 }
 
 /// All benchmark names (for sweeps over the suite).
-pub const BENCHMARKS: [&str; 4] =
-    ["cell_clustering", "cell_proliferation", "epidemiology", "oncology"];
+pub const BENCHMARKS: [&str; 5] =
+    ["cell_clustering", "cell_proliferation", "epidemiology", "oncology", "social"];

@@ -1,0 +1,213 @@
+//! Social dynamics: the behavior-arena proof workload (ROADMAP "flat
+//! behavior arena").
+//!
+//! Citizens random-walk through a toroidal space, trade with neighbors
+//! and build reputation — but unlike the biology benchmarks, their
+//! behavior *sets* differ per agent and churn at runtime: a citizen
+//! attaches a [`Behavior::Trade`] when taxation pushes its wealth below
+//! the working threshold, detaches it once trading has made it rich, and
+//! carries a [`Behavior::Reputation`] tracker only while wealthy. That
+//! cycle (poor → trade → rich → retire → decay → poor) keeps the arena's
+//! free-extent allocator under constant attach/detach load while the
+//! random walk drives cross-rank migrations of agents with 1–3-entry
+//! behavior tails.
+//!
+//! Everything that consumes randomness runs in the engine's behavior
+//! phase under per-agent gid-keyed RNG streams; the model step itself is
+//! a deterministic function of per-agent state. Together that makes the
+//! simulation bit-identical across thread counts and transports — the
+//! acceptance bar the `social_dynamics` example asserts.
+
+use crate::config::SimConfig;
+use crate::core::agent::{Agent, AgentKind, Behavior};
+use crate::engine::init::InitCtx;
+use crate::engine::model::Model;
+use crate::engine::world::World;
+
+pub struct SocialDynamics {
+    num_agents: usize,
+    radius: f64,
+    /// Multiplicative wealth decay per iteration (taxation).
+    pub tax: f64,
+    /// Attach a `Trade` when wealth falls below this.
+    pub work_threshold: f64,
+    /// Detach the `Trade` once wealth exceeds this.
+    pub retire_threshold: f64,
+    /// Carry a `Reputation` tracker while wealth exceeds this.
+    pub fame_threshold: f64,
+    /// Wealth gained per in-range trading partner.
+    pub trade_gain: f64,
+}
+
+impl SocialDynamics {
+    pub fn new(cfg: &SimConfig) -> Self {
+        SocialDynamics {
+            num_agents: cfg.num_agents,
+            radius: cfg.interaction_radius,
+            tax: 0.98,
+            work_threshold: 40.0,
+            retire_threshold: 80.0,
+            fame_threshold: 60.0,
+            trade_gain: 2.0,
+        }
+    }
+
+    fn trade(&self) -> Behavior {
+        Behavior::Trade { radius: self.radius, gain: self.trade_gain, cooldown: 0 }
+    }
+
+    fn reputation(&self) -> Behavior {
+        Behavior::Reputation { score: 0.0, decay: 0.2 }
+    }
+}
+
+impl Model for SocialDynamics {
+    fn name(&self) -> &'static str {
+        "social"
+    }
+
+    fn interaction_radius(&self) -> f64 {
+        self.radius
+    }
+
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let n = self.num_agents;
+        let whole = ctx.whole;
+        let speed = self.radius * 0.4;
+        let trade = self.trade();
+        let rep = self.reputation();
+        let mut made = 0usize;
+        ctx.scatter_uniform_with(n, whole, |pos, rng, bs| {
+            // Heterogeneous from iteration 0: everyone walks, a third
+            // starts employed, a fifth starts famous. `made` advances on
+            // every rank identically (generation runs before the
+            // ownership test), so the sets are rank-count independent.
+            bs.push(Behavior::RandomWalk { speed });
+            if made % 3 == 0 {
+                bs.push(trade);
+            }
+            if made % 5 == 0 {
+                bs.push(rep);
+            }
+            made += 1;
+            Agent::citizen(pos, rng.uniform_range(10.0, 90.0))
+        });
+    }
+
+    fn step(&mut self, world: &mut World) {
+        // The random walk, trading and reputation tracking already ran in
+        // the engine's behavior phase. The model step is the economy's
+        // deterministic part: taxation, then behavior-set churn from each
+        // citizen's own state — no RNG, no neighbor reads, so iteration
+        // order cannot leak into the result.
+        let ids = world.rm.ids();
+        for id in ids {
+            let Some(a) = world.rm.get(id) else { continue };
+            let AgentKind::Citizen { wealth, reputation } = a.kind else { continue };
+            let wealth = wealth * self.tax;
+            if let Some(mut a) = world.rm.get_mut(id) {
+                a.kind = AgentKind::Citizen { wealth, reputation };
+            }
+            let bs = world.rm.behaviors(id).unwrap_or(&[]);
+            let trade_at = bs.iter().position(|b| matches!(b, Behavior::Trade { .. }));
+            let rep_at = bs.iter().position(|b| matches!(b, Behavior::Reputation { .. }));
+            if wealth < self.work_threshold && trade_at.is_none() {
+                world.rm.attach_behavior(id, self.trade());
+            } else if wealth > self.retire_threshold {
+                if let Some(k) = trade_at {
+                    world.rm.detach_behavior(id, k);
+                }
+            }
+            // Re-read positions: the detach above may have shifted them.
+            let bs = world.rm.behaviors(id).unwrap_or(&[]);
+            let rep_at = if rep_at.is_some() {
+                bs.iter().position(|b| matches!(b, Behavior::Reputation { .. }))
+            } else {
+                None
+            };
+            if wealth > self.fame_threshold && rep_at.is_none() {
+                world.rm.attach_behavior(id, self.reputation());
+            } else if wealth <= self.work_threshold {
+                if let Some(k) = rep_at {
+                    world.rm.detach_behavior(id, k);
+                }
+            }
+        }
+    }
+
+    fn local_stats(&self, world: &World) -> Vec<f64> {
+        let (mut pop, mut wealth, mut rep) = (0.0, 0.0, 0.0);
+        for a in world.rm.iter() {
+            if let AgentKind::Citizen { wealth: w, reputation: r } = a.kind {
+                pop += 1.0;
+                wealth += w;
+                rep += r;
+            }
+        }
+        vec![pop, wealth, rep, world.rm.behavior_count() as f64]
+    }
+
+    fn stat_names(&self) -> Vec<&'static str> {
+        vec!["population", "wealth", "reputation", "behaviors"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+    use crate::engine::launcher::run_simulation;
+    use crate::space::BoundaryCondition;
+
+    fn cfg(mode: ParallelMode) -> SimConfig {
+        SimConfig {
+            name: "social".into(),
+            num_agents: 600,
+            iterations: 40,
+            space_half_extent: 14.0,
+            interaction_radius: 2.0,
+            boundary: BoundaryCondition::Toroidal,
+            mode,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn economy_conserves_population_and_churns_behavior_sets() {
+        let c = cfg(ParallelMode::OpenMp { threads: 2 });
+        let result = run_simulation(&c, |_| SocialDynamics::new(&c));
+        for row in &result.stats_history {
+            assert_eq!(row[0] as usize, 600, "citizens are never created or destroyed: {row:?}");
+            assert!(row[1] > 0.0, "economy-wide wealth stays positive: {row:?}");
+        }
+        // The workload's point: behavior sets must actually churn.
+        let behaviors: Vec<f64> = result.stats_history.iter().map(|r| r[3]).collect();
+        let (lo, hi) = behaviors
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(lo, hi), &b| (lo.min(b), hi.max(b)));
+        assert!(hi > lo, "behavior count never changed: {behaviors:?}");
+        // Everyone keeps the random walk, so the floor is one per citizen.
+        assert!(lo >= 600.0, "walk behaviors must persist: {lo}");
+    }
+
+    #[test]
+    fn thread_count_never_changes_the_economy() {
+        // Per-agent RNG streams are keyed by global id, which encodes the
+        // creating rank — so the identity contract is over *thread*
+        // counts and transports at a fixed rank count (the same contract
+        // the distributed-determinism suite asserts engine-wide).
+        let runs: Vec<_> = [1usize, 2, 4]
+            .into_iter()
+            .map(|threads| {
+                let c = cfg(ParallelMode::MpiHybrid { ranks: 2, threads_per_rank: threads });
+                run_simulation(&c, |_| SocialDynamics::new(&c)).stats_history
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "1 vs 2 threads per rank diverged");
+        assert_eq!(runs[0], runs[2], "1 vs 4 threads per rank diverged");
+    }
+}

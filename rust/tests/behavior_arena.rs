@@ -1,0 +1,273 @@
+//! Behavior-arena property suite (ROADMAP "flat behavior arena").
+//!
+//! Three contracts guard the arena:
+//! * under randomized churn — attach/detach/replace, divide-style clones,
+//!   wire-round-trip migrations, removals and Morton resorts — every live
+//!   agent's arena slice stays identical to a boxed `Vec<Behavior>`
+//!   oracle, and the columnar wire stays byte-identical to the owned
+//!   pairs encoder;
+//! * a steady churn load reaches an allocation fixed point: repeating an
+//!   identical churn phase never grows the manager's footprint after the
+//!   first phase established the high-water mark;
+//! * the engine's behavior-execution sweep is bit-identical across
+//!   thread counts (the social-dynamics workload end to end).
+
+use std::collections::HashMap;
+
+use teraagent::core::agent::{Agent, Behavior, CellType, SirState};
+use teraagent::core::ids::{GlobalId, LocalId};
+use teraagent::core::resource_manager::ResourceManager;
+use teraagent::io::codec::Codec;
+use teraagent::io::ta_io::{self, ViewPool};
+use teraagent::io::{AlignedBuf, Compression, SerializerKind};
+use teraagent::util::prop::{check, Gen};
+use teraagent::util::Vec3;
+
+const SIDE: f64 = 100.0;
+
+fn random_behavior(g: &mut Gen) -> Behavior {
+    match g.usize_in(0..=6) {
+        0 => Behavior::Growth { rate: g.f64_in(0.1, 2.0), max_diameter: g.f64_in(5.0, 20.0) },
+        1 => Behavior::Divide,
+        2 => Behavior::RandomWalk { speed: g.f64_in(0.1, 3.0) },
+        3 => Behavior::Infection {
+            radius: g.f64_in(1.0, 4.0),
+            prob: g.f64_in(0.0, 1.0),
+            recovery_iters: g.usize_in(1..=50) as u32,
+        },
+        4 => Behavior::TumorGrowth {
+            cycle_rate: g.f64_in(0.01, 0.2),
+            max_diameter: g.f64_in(5.0, 20.0),
+        },
+        5 => Behavior::Trade {
+            radius: g.f64_in(1.0, 4.0),
+            gain: g.f64_in(0.1, 2.0),
+            cooldown: g.usize_in(0..=9) as u32,
+        },
+        _ => Behavior::Reputation { score: g.f64_in(0.0, 5.0), decay: g.f64_in(0.01, 0.5) },
+    }
+}
+
+fn random_agent(g: &mut Gen) -> Agent {
+    let pos = Vec3::new(g.f64_in(0.0, SIDE), g.f64_in(0.0, SIDE), g.f64_in(0.0, SIDE));
+    match g.usize_in(0..=2) {
+        0 => Agent::cell(pos, g.f64_in(0.5, 20.0), CellType::A),
+        1 => Agent::person(pos, SirState::from_code(g.usize_in(0..=2) as u8)),
+        _ => Agent::citizen(pos, g.f64_in(1.0, 100.0)),
+    }
+}
+
+fn random_set(g: &mut Gen) -> Vec<Behavior> {
+    (0..g.usize_in(0..=4)).map(|_| random_behavior(g)).collect()
+}
+
+/// Add an agent with a behavior set to both the manager and the oracle.
+fn add(
+    rm: &mut ResourceManager,
+    oracle: &mut HashMap<GlobalId, Vec<Behavior>>,
+    a: Agent,
+    bs: Vec<Behavior>,
+) -> LocalId {
+    let id = rm.add_with_behaviors(a, &bs);
+    let gid = rm.ensure_global_id(id).expect("fresh id is live");
+    oracle.insert(gid, bs);
+    id
+}
+
+#[test]
+fn prop_churn_matches_boxed_oracle_and_pairs_wire() {
+    check("arena churn vs boxed Vec<Behavior> oracle", 24, |g: &mut Gen| {
+        let mut rm = ResourceManager::new(0);
+        let mut oracle: HashMap<GlobalId, Vec<Behavior>> = HashMap::new();
+        let mut live: Vec<LocalId> = Vec::new();
+        for _ in 0..g.usize_in(5..=40) {
+            let (a, bs) = (random_agent(g), random_set(g));
+            live.push(add(&mut rm, &mut oracle, a, bs));
+        }
+        let mut tx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut rx = Codec::new(SerializerKind::TaIo, Compression::Lz4);
+        let mut pool = ViewPool::new();
+
+        let rounds = g.usize_in(4..=10);
+        for _ in 0..rounds {
+            for _ in 0..g.usize_in(1..=12) {
+                match g.usize_in(0..=6) {
+                    // Births (fresh sets) and divide-style clones.
+                    0 => {
+                        let (a, bs) = (random_agent(g), random_set(g));
+                        live.push(add(&mut rm, &mut oracle, a, bs));
+                    }
+                    1 if !live.is_empty() => {
+                        let src = live[g.usize_in(0..=live.len() - 1)];
+                        let bs = rm.behaviors(src).unwrap().to_vec();
+                        live.push(add(&mut rm, &mut oracle, random_agent(g), bs));
+                    }
+                    // Churn: attach / detach / replace.
+                    2 if !live.is_empty() => {
+                        let id = live[g.usize_in(0..=live.len() - 1)];
+                        let b = random_behavior(g);
+                        assert!(rm.attach_behavior(id, b));
+                        let gid = rm.get(id).unwrap().global_id;
+                        oracle.get_mut(&gid).unwrap().push(b);
+                    }
+                    3 if !live.is_empty() => {
+                        let id = live[g.usize_in(0..=live.len() - 1)];
+                        let n = rm.behaviors(id).unwrap().len();
+                        if n > 0 {
+                            let k = g.usize_in(0..=n - 1);
+                            let got = rm.detach_behavior(id, k).expect("in range");
+                            let gid = rm.get(id).unwrap().global_id;
+                            let want = oracle.get_mut(&gid).unwrap().remove(k);
+                            assert_eq!(got, want, "detached behavior diverged");
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        let id = live[g.usize_in(0..=live.len() - 1)];
+                        let bs = random_set(g);
+                        assert!(rm.set_behaviors(id, &bs));
+                        let gid = rm.get(id).unwrap().global_id;
+                        oracle.insert(gid, bs);
+                    }
+                    // Deaths free the extent.
+                    5 if live.len() > 2 => {
+                        let id = live.swap_remove(g.usize_in(0..=live.len() - 1));
+                        let gid = rm.get(id).unwrap().global_id;
+                        rm.remove(id).expect("live id");
+                        oracle.remove(&gid);
+                    }
+                    // Migration: a random subset rides the wire out and
+                    // back in, landing in fresh slots with the behavior
+                    // tails streamed straight into the arena.
+                    6 if !live.is_empty() => {
+                        let subset: Vec<LocalId> =
+                            live.iter().copied().filter(|_| g.bool()).collect();
+                        if subset.is_empty() {
+                            continue;
+                        }
+                        let (wire, _) = tx.encode_rm((1, 9), &rm, &subset);
+                        for &id in &subset {
+                            rm.remove(id).expect("migrating id");
+                        }
+                        live.retain(|id| !subset.contains(id));
+                        let (decoded, _) =
+                            rx.decode_pooled((1, 9), &wire, &mut pool).expect("clean wire");
+                        let before = live.len();
+                        decoded.ingest_into_rm(&mut rm, &mut pool, |id, _| live.push(id));
+                        assert_eq!(live.len() - before, subset.len(), "migration lost agents");
+                    }
+                    _ => {}
+                }
+            }
+            // Periodic Morton resort compacts the arena; ids are reissued.
+            if g.bool() {
+                rm.sort_by_grid(Vec3::ZERO, 5.0, [20, 20, 20]);
+                live.clear();
+                rm.collect_ids(&mut live);
+            }
+
+            // Invariant: every live slice equals the oracle's boxed set.
+            assert_eq!(live.len(), oracle.len());
+            for &id in &live {
+                let gid = rm.get(id).unwrap().global_id;
+                let want = oracle.get(&gid).unwrap_or_else(|| panic!("unknown gid {gid:?}"));
+                assert_eq!(rm.behaviors(id).unwrap(), &want[..], "slice diverged for {gid:?}");
+            }
+            assert_eq!(rm.behavior_count(), oracle.values().map(Vec::len).sum::<usize>());
+
+            // Invariant: the columnar wire over the live set is
+            // byte-identical to the owned pairs encoder.
+            let pairs: Vec<(Agent, Vec<Behavior>)> = live
+                .iter()
+                .map(|&id| (*rm.get(id).unwrap(), rm.behaviors(id).unwrap().to_vec()))
+                .collect();
+            let want = ta_io::serialize_pairs(&pairs);
+            let mut got = AlignedBuf::new();
+            ta_io::serialize_columns_into(&rm.columns(), &live, &mut got);
+            assert_eq!(want.as_slice(), got.as_slice(), "wire bytes diverged");
+        }
+    });
+}
+
+#[test]
+fn identical_churn_phases_reach_an_allocation_fixed_point() {
+    // One churn phase: every agent's set grows by two behaviors and
+    // shrinks back, with a mid-phase resort. The first phase establishes
+    // the arena's high-water mark (pool + free list + columns); repeating
+    // the *identical* phase afterwards must not move the footprint at
+    // all — steady-state churn is allocation-free at the manager level.
+    let mut rm = ResourceManager::new(0);
+    for i in 0..400 {
+        let f = i as f64;
+        let pos = Vec3::new(f % 10.0, (f / 10.0) % 10.0, f / 100.0);
+        let bs = if i % 3 == 0 {
+            vec![Behavior::RandomWalk { speed: 1.0 }]
+        } else {
+            Vec::new()
+        };
+        rm.add_with_behaviors(Agent::citizen(pos, 50.0), &bs);
+    }
+    let mut ids = Vec::new();
+    let phase = |rm: &mut ResourceManager, ids: &mut Vec<LocalId>| {
+        for round in 0..6 {
+            ids.clear();
+            rm.collect_ids(ids);
+            for &id in ids.iter() {
+                rm.attach_behavior(id, Behavior::Divide);
+                if id.index % 2 == 0 {
+                    rm.attach_behavior(id, Behavior::Reputation { score: 0.0, decay: 0.1 });
+                }
+            }
+            for &id in ids.iter() {
+                let n = rm.behaviors(id).unwrap().len();
+                rm.detach_behavior(id, n - 1);
+                if id.index % 2 == 0 {
+                    let n = rm.behaviors(id).unwrap().len();
+                    rm.detach_behavior(id, n - 1);
+                }
+            }
+            if round == 2 {
+                rm.sort_by_grid(Vec3::ZERO, 2.0, [8, 8, 8]);
+            }
+        }
+        rm.sort_by_grid(Vec3::ZERO, 2.0, [8, 8, 8]);
+    };
+    phase(&mut rm, &mut ids);
+    let highwater = rm.approx_bytes();
+    let behaviors = rm.behavior_count();
+    phase(&mut rm, &mut ids);
+    phase(&mut rm, &mut ids);
+    assert_eq!(rm.behavior_count(), behaviors, "churn phases must be behavior-neutral");
+    assert_eq!(
+        rm.approx_bytes(),
+        highwater,
+        "identical churn phases may not grow the manager footprint"
+    );
+}
+
+#[test]
+fn social_workload_is_bit_identical_across_thread_counts() {
+    use teraagent::config::{ParallelMode, SimConfig};
+    use teraagent::engine::launcher::run_simulation;
+    use teraagent::models::SocialDynamics;
+    use teraagent::space::BoundaryCondition;
+
+    let run = |threads: usize| {
+        let c = SimConfig {
+            name: "social".into(),
+            num_agents: 500,
+            iterations: 30,
+            space_half_extent: 12.0,
+            interaction_radius: 2.0,
+            boundary: BoundaryCondition::Toroidal,
+            mode: ParallelMode::OpenMp { threads },
+            ..Default::default()
+        };
+        let r = run_simulation(&c, |_| SocialDynamics::new(&c));
+        (r.stats_history, r.final_agents)
+    };
+    let r1 = run(1);
+    let r2 = run(2);
+    let r8 = run(8);
+    assert_eq!(r1, r2, "1 vs 2 threads diverged");
+    assert_eq!(r1, r8, "1 vs 8 threads diverged");
+}

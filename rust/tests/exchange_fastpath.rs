@@ -17,7 +17,7 @@ use teraagent::io::ta_io::{self, ViewPool};
 use teraagent::util::prop::{check, Gen};
 use teraagent::util::Vec3;
 
-fn random_agent(g: &mut Gen, i: u64) -> Agent {
+fn random_agent(g: &mut Gen, i: u64) -> (Agent, Vec<Behavior>) {
     let pos = Vec3::new(g.f64_in(-500.0, 500.0), g.f64_in(-500.0, 500.0), g.f64_in(-500.0, 500.0));
     let mut a = match g.usize_in(0..=3) {
         0 => Agent::cell(pos, g.f64_in(0.1, 40.0), if g.bool() { CellType::A } else { CellType::B }),
@@ -29,10 +29,12 @@ fn random_agent(g: &mut Gen, i: u64) -> Agent {
     if g.bool() {
         a.neighbor_ref = AgentPointer::to(GlobalId::new(0, g.u64() % 50));
     }
-    if g.bool() {
-        a.behaviors.push(Behavior::RandomWalk { speed: g.f64_in(0.1, 3.0) });
-    }
-    a
+    let bs = if g.bool() {
+        vec![Behavior::RandomWalk { speed: g.f64_in(0.1, 3.0) }]
+    } else {
+        Vec::new()
+    };
+    (a, bs)
 }
 
 #[test]
@@ -40,10 +42,15 @@ fn prop_soa_direct_encode_matches_seed_encoder() {
     check("SoA-direct vs seed encode over random populations", 48, |g: &mut Gen| {
         let mut rm = ResourceManager::new(0);
         let n = g.usize_in(0..=80);
-        let mut live: Vec<LocalId> = (0..n).map(|i| rm.add(random_agent(g, i as u64))).collect();
-        // Punch holes (freed slots keep stale column values by design)
-        // and refill some, so selection spans fresh, reused and aged
-        // slots.
+        let mut live: Vec<LocalId> = (0..n)
+            .map(|i| {
+                let (a, bs) = random_agent(g, i as u64);
+                rm.add_with_behaviors(a, &bs)
+            })
+            .collect();
+        // Punch holes (freed slots keep stale column values by design,
+        // and their arena extents return to the free list) and refill
+        // some, so selection spans fresh, reused and aged slots.
         for _ in 0..g.usize_in(0..=n / 3) {
             if live.len() > 1 {
                 let k = g.usize_in(0..=live.len() - 1);
@@ -51,15 +58,17 @@ fn prop_soa_direct_encode_matches_seed_encoder() {
             }
         }
         for j in 0..g.usize_in(0..=10) {
-            live.push(rm.add(random_agent(g, 10_000 + j as u64)));
+            let (a, bs) = random_agent(g, 10_000 + j as u64);
+            live.push(rm.add_with_behaviors(a, &bs));
         }
-        // Random mutations through the guard keep the mirror in sync.
+        // Random mutations: headers through the write-back guard (keeps
+        // the column mirror in sync), behavior sets through the arena
+        // (relocates the extent when it grows).
         for &id in live.iter() {
             if g.bool() {
-                let mut a = rm.get_mut(id).unwrap();
-                a.position.x += 1.5;
-                if a.behaviors.is_empty() && g.bool() {
-                    a.behaviors.push(Behavior::Divide);
+                rm.get_mut(id).unwrap().position.x += 1.5;
+                if rm.behaviors(id).unwrap().is_empty() && g.bool() {
+                    rm.attach_behavior(id, Behavior::Divide);
                 }
             }
         }
@@ -70,17 +79,16 @@ fn prop_soa_direct_encode_matches_seed_encoder() {
             ids.rotate_left(k);
         }
 
-        // Seed path: per-agent reads through the slot vector.
-        let selected: Vec<&Agent> = ids.iter().map(|&id| rm.get(id).unwrap()).collect();
-        let seed_buf = ta_io::serialize(selected.iter().copied());
-        // Fast path: straight out of the columns.
+        // Seed path: owned (agent, behaviors) pairs materialized out of
+        // the slot vector and the arena.
+        let pairs: Vec<(Agent, Vec<Behavior>)> = ids
+            .iter()
+            .map(|&id| (*rm.get(id).unwrap(), rm.behaviors(id).unwrap().to_vec()))
+            .collect();
+        let seed_buf = ta_io::serialize_pairs(&pairs);
+        // Fast path: straight out of the columns and the flat arena.
         let mut col_buf = teraagent::io::AlignedBuf::new();
-        ta_io::serialize_columns_into(
-            &rm.columns(),
-            &ids,
-            |s| rm.behaviors_of_slot(s),
-            &mut col_buf,
-        );
+        ta_io::serialize_columns_into(&rm.columns(), &ids, &mut col_buf);
         assert_eq!(seed_buf.as_slice(), col_buf.as_slice(), "wire bytes diverged");
     });
 }
@@ -98,9 +106,10 @@ fn churn(g: &mut Gen, agents: &mut Vec<Agent>, next_gid: &mut u64) {
             agents.remove(k);
         }
     }
-    // Arrivals (migrated-in or newly created agents).
+    // Arrivals (migrated-in or newly created agents). The bare delta
+    // pipeline carries agent headers only, so behaviors are dropped.
     for _ in 0..g.usize_in(0..=3) {
-        let mut a = random_agent(g, *next_gid);
+        let (mut a, _) = random_agent(g, *next_gid);
         a.global_id = GlobalId::new(7, *next_gid);
         *next_gid += 1;
         agents.push(a);
@@ -117,7 +126,7 @@ fn prop_delta_fuzz_fast_vs_seed_pipeline() {
     check("delta churn fuzz: fast == seed, round trips", 24, |g: &mut Gen| {
         let mut next_gid = 100_000u64;
         let mut agents: Vec<Agent> = (0..g.usize_in(1..=40))
-            .map(|i| random_agent(g, i as u64))
+            .map(|i| random_agent(g, i as u64).0)
             .collect();
         let period = g.usize_in(1..=6) as u32;
         let mut enc_fast = DeltaEncoder::new(period);
