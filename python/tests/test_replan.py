@@ -1,0 +1,223 @@
+"""1:1 oracle port of the online repartition planner.
+
+Mirrors ``rust/src/balance/replan.rs`` (and the RCB split it calls,
+``rust/src/balance/rcb.rs``) line for line: same longest-axis choice
+(ties resolved to the *last* axis, matching ``Iterator::max_by``), same
+stable sort, same weighted-median cut with the same clamping, same
+Morton-curve range grouping. The golden-fixture test at the bottom pins
+the exact owner map and move ranges the Rust unit test
+``golden_fixture_matches_python_oracle`` asserts — edit both together.
+"""
+
+import random
+
+# --------------------------------------------------------------------------
+# RCB (port of rcb.rs)
+# --------------------------------------------------------------------------
+
+
+def rcb_partition(centers, weights, nranks):
+    """centers: list of (x, y, z); weights: list of float; -> owner list."""
+    assert nranks >= 1
+    items = [(i, centers[i], max(weights[i], 1e-9)) for i in range(len(centers))]
+    owners = [0] * len(centers)
+    _rcb_recurse(items, 0, nranks, owners)
+    return owners
+
+
+def _rcb_recurse(items, first_rank, nranks, owners):
+    if nranks <= 1 or len(items) <= 1:
+        for i, _, _ in items:
+            owners[i] = first_rank
+        return
+    lo = [min(c[d] for _, c, _ in items) for d in range(3)]
+    hi = [max(c[d] for _, c, _ in items) for d in range(3)]
+    # Rust's Iterator::max_by returns the LAST maximum on ties.
+    axis, best = 0, hi[0] - lo[0]
+    for d in (1, 2):
+        if hi[d] - lo[d] >= best:
+            axis, best = d, hi[d] - lo[d]
+    items.sort(key=lambda it: it[1][axis])  # stable, like slice::sort_by
+    left_ranks = nranks // 2
+    right_ranks = nranks - left_ranks
+    total_w = sum(w for _, _, w in items)
+    target = total_w * left_ranks / nranks
+    acc, cut = 0.0, 0
+    for k, (_, _, w) in enumerate(items):
+        if acc + w / 2.0 >= target and k > 0:
+            break
+        acc += w
+        cut = k + 1
+    cut = min(max(cut, min(1, len(items) - 1)), len(items) - 1)
+    _rcb_recurse(items[:cut], first_rank, left_ranks, owners)
+    _rcb_recurse(items[cut:], first_rank + left_ranks, right_ranks, owners)
+
+
+# --------------------------------------------------------------------------
+# Planner (port of replan.rs)
+# --------------------------------------------------------------------------
+
+
+def _spread21(v):
+    x = v & 0x1F_FFFF
+    x = (x | x << 32) & 0x1F_0000_0000_FFFF
+    x = (x | x << 16) & 0x1F_0000_FF00_00FF
+    x = (x | x << 8) & 0x100F_00F0_0F00_F00F
+    x = (x | x << 4) & 0x10C3_0C30_C30C_30C3
+    x = (x | x << 2) & 0x1249_2492_4924_9249
+    return x
+
+
+def morton_key(c):
+    return _spread21(c[0]) | _spread21(c[1]) << 1 | _spread21(c[2]) << 2
+
+
+class Grid:
+    """Unit-box partition grid, row-major like space/partition.rs."""
+
+    def __init__(self, nx, ny, nz):
+        self.dims = (nx, ny, nz)
+        n = nx * ny * nz
+        self.owners = [0] * n
+        self.weights = [0.0] * n
+
+    def num_boxes(self):
+        return self.dims[0] * self.dims[1] * self.dims[2]
+
+    def unflat(self, i):
+        nx, ny, _ = self.dims
+        return (i % nx, (i // nx) % ny, i // (nx * ny))
+
+    def center(self, i):
+        x, y, z = self.unflat(i)
+        return (x + 0.5, y + 0.5, z + 0.5)
+
+
+def imbalance_over(grid, owners, active):
+    per_rank = [0.0] * len(active)
+    pos = {a: k for k, a in enumerate(active)}
+    for i, o in enumerate(owners):
+        if o in pos:
+            per_rank[pos[o]] += grid.weights[i]
+    total = sum(per_rank)
+    if total <= 0.0:
+        return 1.0
+    mean = total / len(active)
+    return max(per_rank) / mean
+
+
+def plan_rebalance(grid, active, threshold):
+    assert active and threshold >= 1.0
+    old = grid.owners
+    before = imbalance_over(grid, old, active)
+    if set(old) == set(active) and before <= threshold:
+        return None
+    centers = [grid.center(i) for i in range(grid.num_boxes())]
+    idx_owners = rcb_partition(centers, grid.weights, len(active))
+    owners = [active[i] for i in idx_owners]
+    after = imbalance_over(grid, owners, active)
+    order = sorted(range(grid.num_boxes()), key=lambda i: morton_key(grid.unflat(i)))
+    moves = []  # each: [from, to, boxes, weight]
+    prev_pos = None
+    for pos_i, b in enumerate(order):
+        if owners[b] == old[b]:
+            continue
+        frm, to = old[b], owners[b]
+        if moves and moves[-1][0] == frm and moves[-1][1] == to and prev_pos == pos_i - 1:
+            moves[-1][2].append(b)
+            moves[-1][3] += grid.weights[b]
+        else:
+            moves.append([frm, to, [b], grid.weights[b]])
+        prev_pos = pos_i
+    return {
+        "owners": owners,
+        "moves": [tuple(m[:3]) for m in moves],
+        "moved_weight": sum(m[3] for m in moves),
+        "imbalance_before": before,
+        "imbalance_after": after,
+    }
+
+
+# --------------------------------------------------------------------------
+# Tests (mirror rust/src/balance/replan.rs::tests)
+# --------------------------------------------------------------------------
+
+
+def _split_x(grid, a, b):
+    half = grid.dims[0] // 2
+    for i in range(grid.num_boxes()):
+        grid.owners[i] = a if grid.unflat(i)[0] < half else b
+
+
+def test_balanced_world_yields_no_plan():
+    g = Grid(4, 4, 1)
+    _split_x(g, 0, 1)
+    g.weights = [1.0] * g.num_boxes()
+    assert plan_rebalance(g, [0, 1], 1.25) is None
+    skewed = Grid(4, 4, 1)
+    _split_x(skewed, 0, 1)
+    skewed.weights = [50.0 if skewed.unflat(i)[0] == 0 else 1.0 for i in range(16)]
+    assert plan_rebalance(skewed, [0, 1], 1.25) is not None
+
+
+def test_rank_set_change_plans_even_when_balanced():
+    g = Grid(4, 4, 1)
+    _split_x(g, 0, 1)
+    g.weights = [1.0] * g.num_boxes()
+    grown = plan_rebalance(g, [0, 1, 2], 1.25)
+    assert grown is not None and 2 in grown["owners"]
+    shrunk = plan_rebalance(g, [0, 2], 1.25)
+    assert shrunk is not None and set(shrunk["owners"]) <= {0, 2}
+
+
+def test_moves_cover_changed_boxes_exactly_once():
+    rng = random.Random(42)
+    for trial in range(40):
+        g = Grid(4, 4, 2)
+        g.owners = [rng.randrange(3) for _ in range(g.num_boxes())]
+        g.weights = [rng.random() * 10.0 for _ in range(g.num_boxes())]
+        active = [0, 1, 2] if trial % 2 == 0 else [0, 2, 3]
+        plan = plan_rebalance(g, active, 1.0)
+        if plan is None:
+            continue
+        changed = sorted(i for i in range(g.num_boxes()) if plan["owners"][i] != g.owners[i])
+        seen = sorted(b for _, _, boxes in plan["moves"] for b in boxes)
+        assert seen == changed
+        for frm, to, boxes in plan["moves"]:
+            assert frm != to and to in active
+            keys = [morton_key(g.unflat(b)) for b in boxes]
+            assert keys == sorted(keys)
+
+
+def test_moved_weight_is_monotone_in_skew():
+    prev = -1.0
+    for s in range(30):
+        g = Grid(8, 1, 1)
+        _split_x(g, 0, 1)
+        g.weights = [1.0 + s if g.unflat(i)[0] == 0 else 1.0 for i in range(8)]
+        plan = plan_rebalance(g, [0, 1], 1.0)
+        moved = plan["moved_weight"] if plan else 0.0
+        assert moved + 1e-9 >= prev, f"fell from {prev} to {moved} at skew {s}"
+        prev = moved
+    assert prev > 0.0
+
+
+def test_golden_fixture_matches_rust():
+    """Shared fixture with replan.rs::golden_fixture_matches_python_oracle."""
+    g = Grid(4, 4, 1)
+    _split_x(g, 0, 2)
+    g.weights = [1.0 + x + 4.0 * y for x, y in ((g.unflat(i)[0], g.unflat(i)[1]) for i in range(16))]
+    plan = plan_rebalance(g, [0, 2, 3], 1.0)
+    assert plan is not None
+    assert plan["owners"] == [
+        0, 0, 0, 0,
+        0, 0, 0, 0,
+        0, 2, 2, 3,
+        2, 2, 3, 3,
+    ]
+    assert plan["moves"] == [
+        (2, 0, [2, 3, 6, 7]),
+        (0, 2, [9, 12, 13]),
+        (2, 3, [11, 14, 15]),
+    ]
+    assert abs(plan["moved_weight"] - 102.0) < 1e-12

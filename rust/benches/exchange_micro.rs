@@ -708,7 +708,7 @@ fn run_recovery(w: &mut Workload) -> (f64, f64, f64) {
         }
         let path = checkpoint::write_checkpoint(&dir, r, 8, &mut rm).expect("bench round write");
         let (info, crc) = checkpoint::verify_checkpoint(&path).expect("bench round verify");
-        entries.push(ManifestEntry { agents: info.agents, crc });
+        entries.push(ManifestEntry { rank: r, agents: info.agents, crc });
     }
     checkpoint::write_manifest(&dir, &Manifest { iteration: 8, rank_count: 4, ranks: entries })
         .expect("bench manifest write");

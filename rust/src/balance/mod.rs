@@ -20,7 +20,9 @@
 
 pub mod diffusive;
 pub mod rcb;
+pub mod replan;
 pub mod weights;
 
 pub use diffusive::diffusive_step;
 pub use rcb::rcb_partition;
+pub use replan::{plan_rebalance, CellRangeMove, RebalancePlan};

@@ -1,0 +1,327 @@
+//! Online repartition planning: when the per-rank weight field drifts
+//! past a threshold, or the live rank set no longer matches the owner
+//! set (growth, non-prefix death), compute a fresh RCB split over the
+//! *live* ranks and emit a minimal plan of Morton-contiguous cell-range
+//! moves between them. The plan is pure data — every rank derives the
+//! identical plan from the allreduced weight field, and the engine's
+//! `rebalance_phase` ships the ranges over the regular migration wire
+//! with zero checkpoint involvement.
+//!
+//! Mirrored 1:1 by the python oracle in `python/tests/test_replan.py`;
+//! the golden-fixture tests on both sides pin the exact split and range
+//! grouping so the ports cannot drift apart silently.
+
+use super::rcb;
+use crate::space::PartitionGrid;
+use std::collections::BTreeSet;
+
+/// One Morton-contiguous run of partition boxes changing owner.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellRangeMove {
+    /// Current owner (a live rank) donating the range.
+    pub from: u32,
+    /// New owner receiving it.
+    pub to: u32,
+    /// Flat box indices of the range, ascending in Morton order. The
+    /// boxes are consecutive on the Morton curve over the partition
+    /// grid — the same locality the agent sort and the NSG shards use —
+    /// so a range is one spatially-compact slab, not a scatter.
+    pub boxes: Vec<usize>,
+    /// Summed weight of the range (global weight-field units).
+    pub weight: f64,
+}
+
+/// The full plan: the new ownership map plus the minimal move set that
+/// produces it from the current map.
+#[derive(Clone, Debug)]
+pub struct RebalancePlan {
+    /// New owner per box (real rank ids, all members of the active set).
+    pub owners: Vec<u32>,
+    /// Changed boxes, grouped into Morton-contiguous `(from, to)` runs.
+    /// Every changed box appears in exactly one move; unchanged boxes in
+    /// none.
+    pub moves: Vec<CellRangeMove>,
+    /// max/mean per-rank weight before replanning.
+    pub imbalance_before: f64,
+    /// Same measure under the new owners.
+    pub imbalance_after: f64,
+}
+
+impl RebalancePlan {
+    /// Total weight changing hands.
+    pub fn moved_weight(&self) -> f64 {
+        self.moves.iter().map(|m| m.weight).sum()
+    }
+
+    /// Total boxes changing hands.
+    pub fn moved_boxes(&self) -> usize {
+        self.moves.iter().map(|m| m.boxes.len()).sum()
+    }
+}
+
+/// Spread the low 21 bits of `v` so two zero bits separate each (one
+/// axis of a 3-D Morton key).
+fn spread21(v: u64) -> u64 {
+    let mut x = v & 0x1f_ffff;
+    x = (x | x << 32) & 0x1f_0000_0000_ffff;
+    x = (x | x << 16) & 0x1f_0000_ff00_00ff;
+    x = (x | x << 8) & 0x100f_00f0_0f00_f00f;
+    x = (x | x << 4) & 0x10c3_0c30_c30c_30c3;
+    x = (x | x << 2) & 0x1249_2492_4924_9249;
+    x
+}
+
+/// Morton (Z-order) key of partition-box coordinates. The partition grid
+/// itself is row-major; the planner orders boxes on the Morton curve so
+/// emitted ranges are spatially compact (matching the NSG cell order).
+pub fn morton_key(c: [usize; 3]) -> u64 {
+    spread21(c[0] as u64) | spread21(c[1] as u64) << 1 | spread21(c[2] as u64) << 2
+}
+
+/// max/mean per-rank weight over the `active` rank set (1.0 = perfect;
+/// 1.0 when the total weight is zero). Boxes owned by ranks outside the
+/// active set are ignored — they are about to be re-owned anyway.
+pub fn imbalance_over(grid: &PartitionGrid, owners: &[u32], active: &[u32]) -> f64 {
+    let mut per_rank = vec![0.0f64; active.len()];
+    for (i, &o) in owners.iter().enumerate() {
+        if let Some(k) = active.iter().position(|&a| a == o) {
+            per_rank[k] += grid.weight_of(i);
+        }
+    }
+    let total: f64 = per_rank.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let mean = total / active.len() as f64;
+    per_rank.iter().fold(0.0f64, |m, &w| m.max(w)) / mean
+}
+
+/// Plan an online repartition of `grid` (current owners + merged global
+/// weights) over the live rank set `active` (sorted, deduplicated real
+/// rank ids).
+///
+/// Returns `None` — *no moves at all* — when the owner set already
+/// equals the active set and the imbalance is within `threshold`. This
+/// is the minimality contract the determinism battery leans on: a
+/// balanced world is left bit-for-bit untouched, so a run with
+/// rebalancing enabled is indistinguishable from one without.
+///
+/// Otherwise the new map is RCB over the active set (index `i` of the
+/// split maps to rank `active[i]`), and the moves are the changed boxes
+/// grouped into Morton-contiguous `(from, to)` runs.
+pub fn plan_rebalance(
+    grid: &PartitionGrid,
+    active: &[u32],
+    threshold: f64,
+) -> Option<RebalancePlan> {
+    assert!(!active.is_empty(), "need at least one live rank");
+    assert!(threshold >= 1.0, "threshold is a max/mean ratio");
+    debug_assert!(active.windows(2).all(|w| w[0] < w[1]), "active must be sorted+dedup");
+    let old = grid.owners();
+    let owner_set: BTreeSet<u32> = old.iter().copied().collect();
+    let active_set: BTreeSet<u32> = active.iter().copied().collect();
+    let imbalance_before = imbalance_over(grid, old, active);
+    if owner_set == active_set && imbalance_before <= threshold {
+        return None;
+    }
+    let idx_owners = rcb::rcb_partition(grid, active.len() as u32);
+    let owners: Vec<u32> = idx_owners.iter().map(|&i| active[i as usize]).collect();
+    let imbalance_after = imbalance_over(grid, &owners, active);
+
+    // Walk the boxes on the Morton curve; open a new move whenever the
+    // (from, to) pair changes or the curve position jumps.
+    let mut order: Vec<usize> = (0..grid.num_boxes()).collect();
+    order.sort_by_key(|&i| morton_key(grid.unflat(i)));
+    let mut moves: Vec<CellRangeMove> = Vec::new();
+    let mut prev_pos = usize::MAX;
+    for (pos, &b) in order.iter().enumerate() {
+        if owners[b] == old[b] {
+            continue;
+        }
+        let (from, to) = (old[b], owners[b]);
+        match moves.last_mut() {
+            Some(m) if m.from == from && m.to == to && prev_pos + 1 == pos => {
+                m.boxes.push(b);
+                m.weight += grid.weight_of(b);
+            }
+            _ => moves.push(CellRangeMove {
+                from,
+                to,
+                boxes: vec![b],
+                weight: grid.weight_of(b),
+            }),
+        }
+        prev_pos = pos;
+    }
+    Some(RebalancePlan { owners, moves, imbalance_before, imbalance_after })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::Aabb;
+    use crate::util::{Rng, Vec3};
+
+    /// `nx × ny × nz` grid with unit boxes.
+    fn grid(nx: usize, ny: usize, nz: usize) -> PartitionGrid {
+        PartitionGrid::new(
+            Aabb::new(Vec3::ZERO, Vec3::new(nx as f64, ny as f64, nz as f64)),
+            1.0,
+        )
+    }
+
+    /// Left half to rank `a`, right half to rank `b` along x.
+    fn split_x(g: &mut PartitionGrid, a: u32, b: u32) {
+        let half = g.dims()[0] / 2;
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_owner(i, if c[0] < half { a } else { b });
+        }
+    }
+
+    #[test]
+    fn balanced_world_yields_no_plan() {
+        let mut g = grid(4, 4, 1);
+        split_x(&mut g, 0, 1);
+        for i in 0..g.num_boxes() {
+            g.set_weight(i, 1.0);
+        }
+        assert!(plan_rebalance(&g, &[0, 1], 1.25).is_none());
+        // Sanity: the same world past the threshold does plan.
+        let mut skewed = grid(4, 4, 1);
+        split_x(&mut skewed, 0, 1);
+        for i in 0..skewed.num_boxes() {
+            let c = skewed.unflat(i);
+            skewed.set_weight(i, if c[0] == 0 { 50.0 } else { 1.0 });
+        }
+        assert!(plan_rebalance(&skewed, &[0, 1], 1.25).is_some());
+    }
+
+    #[test]
+    fn rank_set_change_plans_even_when_balanced() {
+        let mut g = grid(4, 4, 1);
+        split_x(&mut g, 0, 1);
+        for i in 0..g.num_boxes() {
+            g.set_weight(i, 1.0);
+        }
+        // Growth: rank 2 is live but owns nothing.
+        let plan = plan_rebalance(&g, &[0, 1, 2], 1.25).expect("grow must replan");
+        assert!(plan.owners.contains(&2));
+        // Death: rank 1's boxes are orphaned onto the survivors.
+        let plan = plan_rebalance(&g, &[0, 2], 1.25).expect("death must replan");
+        assert!(!plan.owners.contains(&1));
+        assert!(plan.owners.iter().all(|&o| o == 0 || o == 2));
+    }
+
+    #[test]
+    fn moves_cover_changed_boxes_exactly_once() {
+        let mut rng = Rng::stream(42, 0xBEEF);
+        for trial in 0..40 {
+            let mut g = grid(4, 4, 2);
+            for i in 0..g.num_boxes() {
+                g.set_owner(i, (rng.index(3)) as u32);
+                g.set_weight(i, rng.uniform() * 10.0);
+            }
+            let active: &[u32] = if trial % 2 == 0 { &[0, 1, 2] } else { &[0, 2, 3] };
+            let Some(plan) = plan_rebalance(&g, active, 1.0) else {
+                continue;
+            };
+            let old = g.owners();
+            let changed: Vec<usize> =
+                (0..g.num_boxes()).filter(|&i| plan.owners[i] != old[i]).collect();
+            let mut seen: Vec<usize> = plan.moves.iter().flat_map(|m| m.boxes.clone()).collect();
+            seen.sort_unstable();
+            let mut want = changed.clone();
+            want.sort_unstable();
+            assert_eq!(seen, want, "trial {trial}: moves must cover changes exactly once");
+            for m in &plan.moves {
+                assert_ne!(m.from, m.to, "no self-moves");
+                assert!(active.contains(&m.to), "receiver must be live");
+                for &b in &m.boxes {
+                    assert_eq!(old[b], m.from);
+                    assert_eq!(plan.owners[b], m.to);
+                }
+                // Morton contiguity within the emitted range.
+                for w in m.boxes.windows(2) {
+                    assert!(
+                        morton_key(g.unflat(w[0])) < morton_key(g.unflat(w[1])),
+                        "range boxes ascend the Morton curve"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn moved_weight_is_monotone_in_skew() {
+        // 1-D world, two ranks, all the skew piled on box 0: as the skew
+        // grows the RCB cut can only move left, so the weight crossing
+        // the wire is non-decreasing.
+        let mut prev = -1.0f64;
+        for s in 0..30 {
+            let mut g = grid(8, 1, 1);
+            split_x(&mut g, 0, 1);
+            for i in 0..g.num_boxes() {
+                let c = g.unflat(i);
+                g.set_weight(i, if c[0] == 0 { 1.0 + s as f64 } else { 1.0 });
+            }
+            let moved = match plan_rebalance(&g, &[0, 1], 1.0) {
+                Some(p) => p.moved_weight(),
+                None => 0.0,
+            };
+            assert!(
+                moved + 1e-9 >= prev,
+                "moved weight fell from {prev} to {moved} at skew {s}"
+            );
+            prev = moved;
+        }
+        assert!(prev > 0.0, "the steepest skew must move something");
+    }
+
+    #[test]
+    fn morton_keys_interleave() {
+        assert_eq!(morton_key([0, 0, 0]), 0);
+        assert_eq!(morton_key([1, 0, 0]), 1);
+        assert_eq!(morton_key([0, 1, 0]), 2);
+        assert_eq!(morton_key([0, 0, 1]), 4);
+        assert_eq!(morton_key([1, 1, 1]), 7);
+        assert_eq!(morton_key([2, 0, 0]), 8);
+    }
+
+    /// Golden fixture shared verbatim with `python/tests/test_replan.py`
+    /// (`test_golden_fixture_matches_rust`): 4×4×1 unit grid, weights
+    /// `1 + x + 4*y`, old owners split along x between ranks 0 and 2,
+    /// active set {0, 2, 3}. Keep the two in lockstep when editing.
+    #[test]
+    fn golden_fixture_matches_python_oracle() {
+        let mut g = grid(4, 4, 1);
+        split_x(&mut g, 0, 2);
+        for i in 0..g.num_boxes() {
+            let c = g.unflat(i);
+            g.set_weight(i, 1.0 + c[0] as f64 + 4.0 * c[1] as f64);
+        }
+        let plan = plan_rebalance(&g, &[0, 2, 3], 1.0).expect("active set grew");
+        let expected_owners: Vec<u32> = vec![
+            0, 0, 0, 0, //
+            0, 0, 0, 0, //
+            0, 2, 2, 3, //
+            2, 2, 3, 3,
+        ];
+        assert_eq!(plan.owners, expected_owners);
+        let summary: Vec<(u32, u32, Vec<usize>)> = plan
+            .moves
+            .iter()
+            .map(|m| (m.from, m.to, m.boxes.clone()))
+            .collect();
+        assert_eq!(
+            summary,
+            vec![
+                (2u32, 0u32, vec![2, 3, 6, 7]),
+                (0u32, 2u32, vec![9, 12, 13]),
+                (2u32, 3u32, vec![11, 14, 15]),
+            ],
+            "python oracle pins the same ranges"
+        );
+        assert!((plan.moved_weight() - 102.0).abs() < 1e-12);
+    }
+}

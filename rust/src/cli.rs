@@ -38,6 +38,13 @@ FLAGS (run):
   --network <n>             ideal | infiniband | gige
   --balance <b>             rcb | diffusive | off
   --balance-every <n>       rebalance cadence (0 = off)
+  --rebalance-every <n>     online repartitioning cadence: live-migrate
+                            Morton cell ranges between ranks, no
+                            checkpoint rollback (0 = off)
+  --rebalance-threshold <f> replan only past this max/mean weight
+                            imbalance (>= 1.0)
+  --active-ranks <n>        start the world on only the first n ranks;
+                            the rest join at the first rebalance (0 = all)
   --sort-every <n>          agent-sorting cadence (0 = off)
   --pjrt                    run mechanics through the AOT PJRT artifact
   --seed <n>                RNG seed
@@ -146,6 +153,15 @@ pub fn config_from_flags(flags: &BTreeMap<String, String>) -> Result<SimConfig, 
     if let Some(v) = geti("balance-every")? {
         cfg.balance_every = v;
     }
+    if let Some(v) = geti("rebalance-every")? {
+        cfg.rebalance_every = v;
+    }
+    if let Some(v) = getf("rebalance-threshold")? {
+        cfg.rebalance_threshold = v;
+    }
+    if let Some(v) = geti("active-ranks")? {
+        cfg.active_ranks = v;
+    }
     if let Some(v) = geti("sort-every")? {
         cfg.sort_every = v;
     }
@@ -210,7 +226,8 @@ mod tests {
         let cli = parse(&argv(
             "run --sim oncology --agents 500 --iterations 7 --mode mpi-only --ranks 8 \
              --serializer root_io --compression lz4 --network gige --balance diffusive \
-             --balance-every 3 --sort-every 5 --seed 9 --radius 4.5 --half-extent 80 \
+             --balance-every 3 --rebalance-every 6 --rebalance-threshold 1.5 \
+             --active-ranks 4 --sort-every 5 --seed 9 --radius 4.5 --half-extent 80 \
              --vis-every 2 --checkpoint-every 4 --recv-timeout-ms 500 --death-timeout-ms 120",
         ))
         .unwrap();
@@ -223,6 +240,9 @@ mod tests {
         assert_eq!(cfg.network.name, "gige");
         assert_eq!(cfg.balance_method, BalanceMethod::Diffusive);
         assert_eq!(cfg.balance_every, 3);
+        assert_eq!(cfg.rebalance_every, 6);
+        assert_eq!(cfg.rebalance_threshold, 1.5);
+        assert_eq!(cfg.active_ranks, 4);
         assert_eq!(cfg.sort_every, 5);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.interaction_radius, 4.5);

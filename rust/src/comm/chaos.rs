@@ -133,6 +133,20 @@ impl FaultPlan {
         self
     }
 
+    /// Is `tag` within this plan's fault scope? Listed tags match
+    /// exactly; listing [`tags::MIGRATION`](super::mpi::tags::MIGRATION)
+    /// additionally covers the whole per-round alltoallv tag range
+    /// (`ALLTOALL_BASE + r` — one fresh tag per exchange round, so the
+    /// rounds can never be enumerated in the list itself). Control tags
+    /// stay exempt through the [`is_control`](super::mpi::tags::is_control)
+    /// gate at the send seam, not here.
+    pub fn matches_tag(&self, tag: Tag) -> bool {
+        use super::mpi::tags;
+        self.tags.contains(&tag)
+            || ((tags::ALLTOALL_BASE..tags::COLLECTIVE_BASE).contains(&tag)
+                && self.tags.contains(&tags::MIGRATION))
+    }
+
     fn total_p(&self) -> f64 {
         self.p_drop
             + self.p_delay
@@ -233,7 +247,7 @@ impl ChaosState {
         // `msg_id` word of an eligible frame reaching the kill
         // iteration, after which no frame leaves this rank again.
         if let Some(kill) = self.plan.kill_at_iteration {
-            if !self.dead && self.plan.tags.contains(&tag) && frame.len() >= 4 {
+            if !self.dead && self.plan.matches_tag(tag) && frame.len() >= 4 {
                 let msg_id =
                     u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]]);
                 if msg_id as u64 >= kill {
@@ -303,7 +317,7 @@ impl ChaosState {
     }
 
     fn decide(&mut self, src: u32, dst: u32, tag: Tag) -> Option<Fault> {
-        if !self.plan.tags.contains(&tag) || self.stats.injected() >= self.plan.max_faults {
+        if !self.plan.matches_tag(tag) || self.stats.injected() >= self.plan.max_faults {
             return None;
         }
         // One uniform draw against the cumulative distribution. The draw
@@ -366,6 +380,22 @@ mod tests {
             assert_eq!(c.apply(0, 1, tags::MIGRATION, frame(&[1])).len(), 1);
         }
         assert_eq!(c.stats().injected(), 0);
+    }
+
+    #[test]
+    fn migration_scope_covers_the_alltoall_round_tags() {
+        let plan = FaultPlan::none(1).with_tags(vec![tags::MIGRATION]).with_drop(1.0);
+        assert!(plan.matches_tag(tags::MIGRATION));
+        assert!(plan.matches_tag(tags::alltoall_round(0)));
+        assert!(plan.matches_tag(tags::alltoall_round(12345)));
+        assert!(!plan.matches_tag(tags::AURA));
+        assert!(!plan.matches_tag(tags::collective_gather(0)));
+        let mut c = ChaosState::new(plan);
+        assert!(c.apply(0, 1, tags::alltoall_round(7), frame(&[1, 2, 3])).is_empty());
+        assert_eq!(c.stats().dropped, 1);
+        // AURA is not listed: exempt even though MIGRATION widens scope.
+        assert_eq!(c.apply(0, 1, tags::AURA, frame(&[1])).len(), 1);
+        assert_eq!(c.stats().injected(), 1);
     }
 
     #[test]

@@ -685,6 +685,10 @@ pub struct Communicator {
     archive: HashMap<(u32, Tag), (u32, Vec<Frame>)>,
     /// Frames re-published in response to retry requests.
     retransmits_served: u64,
+    /// alltoallv envelopes rejected on receive (CRC/round/shape damage).
+    a2a_rejects: u64,
+    /// Retry requests (NACKs) sent from the alltoallv receive loop.
+    a2a_nacks: u64,
     /// Opt-in peer-liveness tracking (None = feature off, zero cost).
     liveness: Option<Liveness>,
     /// Monotone p2p-collective round counter (tags the fallback legs).
@@ -727,6 +731,8 @@ impl Communicator {
             reliable: false,
             archive: HashMap::new(),
             retransmits_served: 0,
+            a2a_rejects: 0,
+            a2a_nacks: 0,
             liveness: None,
             collective_round: 0,
             audit: None,
@@ -1461,31 +1467,64 @@ impl Communicator {
     /// message may arrive while a slow rank is still collecting round `r`.
     /// The round is folded into the message tag, so mismatched messages
     /// simply wait in the mailbox.
+    ///
+    /// Every payload travels in an integrity envelope —
+    /// `[round u32][crc32(payload) u32] ++ payload` — so in-flight damage
+    /// (chaos truncate/bit-flip on the per-round alltoall tags) is
+    /// detected on receive instead of corrupting the decode. In reliable
+    /// mode the sender archives each envelope; a receiver that sees a
+    /// damaged or missing message NACKs on [`tags::RETRY`] and the
+    /// archived frame is re-published, same ladder as the batched
+    /// exchange. Duplicates (chaos or a retransmission racing its
+    /// original) are dropped by the filled-slot check.
     pub fn alltoallv(&mut self, per_dst: Vec<Vec<u8>>, round: u32) -> Vec<Vec<u8>> {
         assert_eq!(per_dst.len(), self.size);
         let tag = tags::alltoall_round(round);
-        let mut out: Vec<Option<Frame>> = vec![None; self.size];
+        // Alltoall tags are unique per round, so the latest-per-channel
+        // archive replacement never fires for them: evict prior rounds
+        // explicitly or the archive grows with the iteration count.
+        if self.reliable {
+            self.archive.retain(|&(_, t), _| {
+                !(tags::ALLTOALL_BASE..tags::COLLECTIVE_BASE).contains(&t) || t == tag
+            });
+        }
+        let mut out: Vec<Option<Vec<u8>>> = vec![None; self.size];
         let mut received = 0;
         // Peers already declared dead contribute nothing: skip the send
         // (the mailbox of an exited rank is never drained) and pre-fill
         // their slot with an empty payload so the receive loop terminates.
         for d in self.dead_ranks() {
-            out[d as usize] = Some(Frame::owned(Vec::new()));
+            out[d as usize] = Some(Vec::new());
             received += 1;
         }
         for (d, data) in per_dst.into_iter().enumerate() {
             if out[d].is_some() {
                 continue; // dead peer
             }
+            let crc = {
+                let t0 = Instant::now();
+                let crc = Crc32::new().update(&data).finalize();
+                self.checksum_secs += t0.elapsed().as_secs_f64();
+                crc
+            };
+            let mut envelope = Vec::with_capacity(8 + data.len());
+            envelope.extend_from_slice(&round.to_le_bytes());
+            envelope.extend_from_slice(&crc.to_le_bytes());
+            envelope.extend_from_slice(&data);
+            let frame = Frame::owned(envelope);
             if d as u32 == self.rank {
                 // Local loopback: every backend delivers a self-send
                 // straight into the own mailbox, off the wire and without
                 // network charge.
-                self.transport.send(self.rank, tag, Frame::owned(data));
+                self.transport.send(self.rank, tag, frame);
             } else {
-                self.isend(d as u32, tag, data);
+                // Archive before publishing (refcount clone): a NACK can
+                // arrive any time after the faulted original was dropped.
+                self.archive_frames(d as u32, tag, round, vec![frame.clone()]);
+                self.isend_frame(d as u32, tag, frame);
             }
         }
+        let mut idle_slices = 0u32;
         while received < self.size {
             // In reliable mode, keep serving retransmission requests while
             // blocked: a peer stuck in its (chaos-afflicted) aura receive
@@ -1498,21 +1537,35 @@ impl Communicator {
                     match self.recv_any_deadline(tag, Duration::from_millis(1)) {
                         Ok((m, _)) => got = Some(m),
                         Err(_) => {
-                            // A peer that died *mid-collective* would hang
-                            // this loop forever: once the liveness plane
-                            // says a still-missing source is overdue,
-                            // declare it dead and take an empty payload in
-                            // its place.
+                            idle_slices += 1;
                             let pending: Vec<u32> = out
                                 .iter()
                                 .enumerate()
                                 .filter(|(_, o)| o.is_none())
                                 .map(|(i, _)| i as u32)
                                 .collect();
+                            // A dropped envelope leaves its source silent
+                            // forever: after a few empty slices, NACK every
+                            // still-missing live source. Sources that have
+                            // not reached this round yet ignore the request
+                            // (archive miss) and send normally later.
+                            if idle_slices % 4 == 0 {
+                                for &s in &pending {
+                                    if s != self.rank && !self.is_dead(s) {
+                                        self.request_retry(s, tag, round);
+                                        self.a2a_nacks += 1;
+                                    }
+                                }
+                            }
+                            // A peer that died *mid-collective* would hang
+                            // this loop forever: once the liveness plane
+                            // says a still-missing source is overdue,
+                            // declare it dead and take an empty payload in
+                            // its place.
                             for d in self.overdue(&pending) {
                                 self.mark_dead(d);
                                 if out[d as usize].is_none() {
-                                    out[d as usize] = Some(Frame::owned(Vec::new()));
+                                    out[d as usize] = Some(Vec::new());
                                     received += 1;
                                 }
                             }
@@ -1526,25 +1579,68 @@ impl Communicator {
             } else {
                 self.recv(None, Some(tag))
             };
-            if out[m.src as usize].is_some() {
-                // Tolerated only for a peer we gave up on: its pre-death
-                // frame raced our empty placeholder. Anything else is a
-                // protocol violation.
+            let src = m.src as usize;
+            let bytes = m.data.as_slice();
+            let intact = bytes.len() >= 8
+                && u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) == round
+                && {
+                    let want = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+                    let t0 = Instant::now();
+                    let got = Crc32::new().update(&bytes[8..]).finalize();
+                    self.checksum_secs += t0.elapsed().as_secs_f64();
+                    got == want
+                };
+            if !intact {
+                // Damaged in flight. Reliable mode NACKs and waits for the
+                // archived envelope; outside reliable mode nothing can
+                // damage a frame, so this is a protocol violation.
                 assert!(
-                    self.is_dead(m.src),
+                    self.reliable,
+                    "corrupt alltoallv envelope from {} outside reliable mode",
+                    m.src
+                );
+                self.a2a_rejects += 1;
+                if out[src].is_none() && !self.is_dead(m.src) {
+                    self.request_retry(m.src, tag, round);
+                    self.a2a_nacks += 1;
+                }
+                continue;
+            }
+            if out[src].is_some() {
+                // A chaos duplicate, a retransmission whose original was
+                // merely late, or a pre-death frame racing the empty
+                // placeholder of a peer we gave up on. Outside reliable
+                // mode only the death race is possible.
+                assert!(
+                    self.reliable || self.is_dead(m.src),
                     "duplicate alltoallv message from {}",
                     m.src
                 );
                 continue;
             }
-            out[m.src as usize] = Some(m.data);
+            // Strip the envelope in place: `into_vec` moves the buffer out
+            // without copying when it is uniquely held (the steady state).
+            let mut payload = m.data.into_vec();
+            payload.drain(..8);
+            out[src] = Some(payload);
             received += 1;
         }
-        // Each frame is uniquely held here, so `into_vec` moves the
-        // sender's vector out without copying.
         out.into_iter()
-            .map(|o| o.expect("received == size implies every slot filled").into_vec())
+            .map(|o| o.expect("received == size implies every slot filled"))
             .collect()
+    }
+
+    /// alltoallv envelopes rejected on receive (CRC/round/shape damage).
+    #[inline]
+    pub fn alltoall_rejects(&self) -> u64 {
+        self.a2a_rejects
+    }
+
+    /// NACKs sent from the alltoallv receive loop (missing or damaged
+    /// envelopes).
+    #[inline]
+    pub fn alltoall_nacks(&self) -> u64 {
+        self.a2a_nacks
     }
 }
 

@@ -122,6 +122,18 @@ pub struct SimConfig {
     pub balance_method: BalanceMethod,
     /// Rebalance every N iterations (0 = never).
     pub balance_every: usize,
+    /// Online repartitioning cadence: every N iterations, allreduce box
+    /// weights, replan (RCB over the live rank set) and live-migrate the
+    /// moved cell ranges with zero checkpoint involvement (0 = never).
+    pub rebalance_every: usize,
+    /// Online repartitioning trigger: replan only when max/mean per-rank
+    /// weight exceeds this factor (>= 1.0), or when the live rank set
+    /// differs from the owner set (growth, death).
+    pub rebalance_threshold: f64,
+    /// Initially partition the space over only the first N ranks (0 = all
+    /// ranks). The remaining ranks start empty and join the world at the
+    /// first online rebalance — the grow-a-live-run path.
+    pub active_ranks: usize,
     /// Agent sorting cadence (0 = never).
     pub sort_every: usize,
     /// Execute mechanics through the AOT PJRT artifact.
@@ -171,6 +183,9 @@ impl Default for SimConfig {
             partition_factor: 3.0,
             balance_method: BalanceMethod::Rcb,
             balance_every: 0,
+            rebalance_every: 0,
+            rebalance_threshold: 1.25,
+            active_ranks: 0,
             sort_every: 0,
             use_pjrt: false,
             mechanics: MechanicsParams::default(),
@@ -248,6 +263,15 @@ impl SimConfig {
         if let Some(v) = doc.int("engine.balance_every") {
             c.balance_every = v as usize;
         }
+        if let Some(v) = doc.int("engine.rebalance_every") {
+            c.rebalance_every = v as usize;
+        }
+        if let Some(v) = doc.float("engine.rebalance_threshold") {
+            c.rebalance_threshold = v;
+        }
+        if let Some(v) = doc.int("engine.active_ranks") {
+            c.active_ranks = v as usize;
+        }
         if let Some(v) = doc.int("engine.sort_every") {
             c.sort_every = v as usize;
         }
@@ -321,6 +345,12 @@ impl SimConfig {
         if self.mode.ranks() == 0 || self.mode.threads_per_rank() == 0 {
             return Err("ranks/threads must be positive".into());
         }
+        if self.rebalance_threshold < 1.0 {
+            return Err("rebalance_threshold must be >= 1 (max/mean weight ratio)".into());
+        }
+        if self.active_ranks > self.mode.ranks() {
+            return Err("active_ranks must not exceed engine.ranks".into());
+        }
         if self.serializer == SerializerKind::RootIo
             && matches!(self.compression, Compression::Lz4Delta { .. })
         {
@@ -356,6 +386,9 @@ impl SimConfig {
         let _ = writeln!(s, "partition_factor = {:?}", self.partition_factor);
         let _ = writeln!(s, "balance = {:?}", self.balance_method.name());
         let _ = writeln!(s, "balance_every = {}", self.balance_every);
+        let _ = writeln!(s, "rebalance_every = {}", self.rebalance_every);
+        let _ = writeln!(s, "rebalance_threshold = {:?}", self.rebalance_threshold);
+        let _ = writeln!(s, "active_ranks = {}", self.active_ranks);
         let _ = writeln!(s, "sort_every = {}", self.sort_every);
         let _ = writeln!(s, "pjrt = {}", self.use_pjrt);
         let _ = writeln!(s, "single_precision = {}", self.single_precision);
@@ -510,6 +543,9 @@ export = true
         c.partition_factor = 2.5;
         c.balance_method = BalanceMethod::Diffusive;
         c.balance_every = 6;
+        c.rebalance_every = 5;
+        c.rebalance_threshold = 1.75;
+        c.active_ranks = 3;
         c.sort_every = 4;
         c.single_precision = true;
         c.mechanics.dt = 0.05;
@@ -536,6 +572,9 @@ export = true
         assert_eq!(back.partition_factor, c.partition_factor);
         assert_eq!(back.balance_method, c.balance_method);
         assert_eq!(back.balance_every, c.balance_every);
+        assert_eq!(back.rebalance_every, c.rebalance_every);
+        assert_eq!(back.rebalance_threshold, c.rebalance_threshold);
+        assert_eq!(back.active_ranks, c.active_ranks);
         assert_eq!(back.sort_every, c.sort_every);
         assert_eq!(back.use_pjrt, c.use_pjrt);
         assert_eq!(back.mechanics.k_rep, c.mechanics.k_rep);

@@ -26,10 +26,11 @@
 //! (`manifest_iter_<iteration>.tamf`) recording the rank count and every
 //! rank's agent count + checkpoint CRC. [`latest_agreed_iteration`]
 //! walks manifests newest-first and returns the first iteration at which
-//! **every** rank's file is present and CRC-valid — the agreement point
-//! survivors roll back to together, including after a rank death, when
-//! [`restore_resharded`] repartitions the merged population over the
-//! surviving rank count.
+//! **every** listed rank's file is present and CRC-valid — the agreement
+//! point survivors roll back to together, including after a rank death,
+//! when [`restore_resharded_mapped`] repartitions the merged population
+//! over the surviving rank ids (any set, not just a prefix — manifest
+//! entries carry explicit rank ids since v2).
 
 use crate::core::agent::AgentBatch;
 use crate::core::resource_manager::ResourceManager;
@@ -46,11 +47,16 @@ const VERSION: u32 = 2;
 const HEADER_BYTES: usize = 32;
 
 const MANIFEST_MAGIC: u32 = 0x5441_4D46; // "TAMF"
-const MANIFEST_VERSION: u32 = 1;
+/// v2: per-rank records carry an explicit rank id, so a manifest can
+/// describe *any* survivor set — not just the dense prefix 0..n. v1
+/// (dense, rank implied by index) is still read.
+const MANIFEST_VERSION: u32 = 2;
 /// `[magic u32][version u32][rank_count u32][reserved u32][iteration u64]`.
 const MANIFEST_HEAD_BYTES: usize = 24;
-/// Per-rank record: `[agents u64][crc u32]`.
-const MANIFEST_ENTRY_BYTES: usize = 12;
+/// v1 per-rank record: `[agents u64][crc u32]` (rank implied by index).
+const MANIFEST_ENTRY_BYTES_V1: usize = 12;
+/// v2 per-rank record: `[rank u32][agents u64][crc u32]`.
+const MANIFEST_ENTRY_BYTES: usize = 16;
 /// Upper bound on a plausible rank count — anything larger in a manifest
 /// header is corruption, rejected before it can size an allocation.
 const MANIFEST_MAX_RANKS: u32 = 1 << 20;
@@ -213,6 +219,10 @@ pub fn restore_into(rm: &mut ResourceManager, batch: AgentBatch) {
 /// One rank's record in a [`Manifest`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
+    /// The rank id that wrote the checkpoint. Explicit (not an index)
+    /// so a manifest written after a mid-rank death can describe the
+    /// surviving set, e.g. `{0, 2, 3}`.
+    pub rank: u32,
     /// Agent count that rank checkpointed.
     pub agents: u64,
     /// The CRC32 stored in that rank's checkpoint header — binds the
@@ -221,27 +231,39 @@ pub struct ManifestEntry {
     pub crc: u32,
 }
 
-/// Cross-rank checkpoint agreement record: "at `iteration`, all
-/// `rank_count` ranks wrote these checkpoints". Written once per
-/// completed checkpoint round (by rank 0, after an allgather of every
-/// rank's `(agents, crc)`), it is what lets survivors of a rank death
-/// agree on a rollback point without any collective — the manifest is
-/// on shared storage and self-validating.
+/// Cross-rank checkpoint agreement record: "at `iteration`, the listed
+/// ranks wrote these checkpoints". Written once per completed
+/// checkpoint round, it is what lets survivors of a rank death agree on
+/// a rollback point without any collective — the manifest is on shared
+/// storage and self-validating. Since v2 the listed ranks need not form
+/// the prefix `0..rank_count`: entries carry explicit, strictly
+/// ascending rank ids.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Manifest {
     pub iteration: u64,
     pub rank_count: u32,
-    /// One entry per rank, indexed by rank.
+    /// One entry per listed rank, ascending by rank id.
     pub ranks: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// The rank ids this manifest covers, ascending.
+    pub fn rank_ids(&self) -> Vec<u32> {
+        self.ranks.iter().map(|e| e.rank).collect()
+    }
 }
 
 /// Write `m` to `<dir>/manifest_iter_<iteration>.tamf` (`.tmp` + atomic
 /// rename, like checkpoints). Layout: 24-byte header
 /// `[magic][version][rank_count][reserved][iteration u64]`, then
-/// `rank_count × [agents u64][crc u32]`, then a trailing CRC32 over all
-/// preceding bytes.
+/// `rank_count × [rank u32][agents u64][crc u32]`, then a trailing
+/// CRC32 over all preceding bytes.
 pub fn write_manifest(dir: impl AsRef<Path>, m: &Manifest) -> std::io::Result<PathBuf> {
-    assert_eq!(m.ranks.len(), m.rank_count as usize, "one entry per rank");
+    assert_eq!(m.ranks.len(), m.rank_count as usize, "one entry per listed rank");
+    assert!(
+        m.ranks.windows(2).all(|w| w[0].rank < w[1].rank),
+        "manifest entries must ascend by rank id"
+    );
     let dir = dir.as_ref();
     std::fs::create_dir_all(dir)?;
     let mut bytes =
@@ -252,6 +274,7 @@ pub fn write_manifest(dir: impl AsRef<Path>, m: &Manifest) -> std::io::Result<Pa
     bytes.extend_from_slice(&0u32.to_le_bytes());
     bytes.extend_from_slice(&m.iteration.to_le_bytes());
     for e in &m.ranks {
+        bytes.extend_from_slice(&e.rank.to_le_bytes());
         bytes.extend_from_slice(&e.agents.to_le_bytes());
         bytes.extend_from_slice(&e.crc.to_le_bytes());
     }
@@ -282,7 +305,7 @@ pub fn read_manifest(path: impl AsRef<Path>) -> std::io::Result<Manifest> {
     };
     let magic = u32::from_le_bytes(head[0..4].try_into().expect("fixed slice"));
     let version = u32::from_le_bytes(head[4..8].try_into().expect("fixed slice"));
-    if magic != MANIFEST_MAGIC || version != MANIFEST_VERSION {
+    if magic != MANIFEST_MAGIC || !(1..=MANIFEST_VERSION).contains(&version) {
         return Err(bad(format!("bad manifest header: magic={magic:#x} version={version}")));
     }
     let rank_count = u32::from_le_bytes(head[8..12].try_into().expect("fixed slice"));
@@ -290,8 +313,9 @@ pub fn read_manifest(path: impl AsRef<Path>) -> std::io::Result<Manifest> {
         return Err(bad(format!("implausible manifest rank count {rank_count}")));
     }
     let iteration = u64::from_le_bytes(head[16..24].try_into().expect("fixed slice"));
-    let want_len =
-        MANIFEST_HEAD_BYTES + rank_count as usize * MANIFEST_ENTRY_BYTES + 4;
+    let entry_bytes =
+        if version == 1 { MANIFEST_ENTRY_BYTES_V1 } else { MANIFEST_ENTRY_BYTES };
+    let want_len = MANIFEST_HEAD_BYTES + rank_count as usize * entry_bytes + 4;
     if bytes.len() != want_len {
         return Err(bad(format!(
             "manifest length {} disagrees with rank count {rank_count} (want {want_len})",
@@ -309,11 +333,21 @@ pub fn read_manifest(path: impl AsRef<Path>) -> std::io::Result<Manifest> {
     }
     let mut ranks = Vec::with_capacity(rank_count as usize);
     for r in 0..rank_count as usize {
-        let off = MANIFEST_HEAD_BYTES + r * MANIFEST_ENTRY_BYTES;
+        let off = MANIFEST_HEAD_BYTES + r * entry_bytes;
+        // v1 manifests are dense: the rank id is the entry index.
+        let (rank, off) = if version == 1 {
+            (r as u32, off)
+        } else {
+            (u32::from_le_bytes(bytes[off..off + 4].try_into().expect("fixed slice")), off + 4)
+        };
         ranks.push(ManifestEntry {
+            rank,
             agents: u64::from_le_bytes(bytes[off..off + 8].try_into().expect("fixed slice")),
             crc: u32::from_le_bytes(bytes[off + 8..off + 12].try_into().expect("fixed slice")),
         });
+    }
+    if ranks.windows(2).any(|w| w[0].rank >= w[1].rank) {
+        return Err(bad("manifest rank ids not strictly ascending".to_string()));
     }
     Ok(Manifest { iteration, rank_count, ranks })
 }
@@ -340,10 +374,10 @@ pub fn latest_agreed_iteration(dir: impl AsRef<Path>) -> std::io::Result<Option<
     manifests.sort();
     'next_manifest: for path in manifests.iter().rev() {
         let Ok(m) = read_manifest(path) else { continue };
-        for (r, want) in m.ranks.iter().enumerate() {
-            let ckpt = dir.join(checkpoint_name(r as u32, m.iteration));
+        for want in &m.ranks {
+            let ckpt = dir.join(checkpoint_name(want.rank, m.iteration));
             let Ok((info, crc)) = verify_checkpoint(&ckpt) else { continue 'next_manifest };
-            let matches = info.rank == r as u32
+            let matches = info.rank == want.rank
                 && info.iteration == m.iteration
                 && info.agents == want.agents
                 && crc == want.crc;
@@ -391,9 +425,31 @@ pub fn restore_resharded(
     my_rank: u32,
 ) -> std::io::Result<ReshardOutcome> {
     assert!(new_ranks >= 1 && my_rank < new_ranks);
+    let old: Vec<u32> = (0..old_ranks).collect();
+    let new: Vec<u32> = (0..new_ranks).collect();
+    restore_resharded_mapped(dir, iteration, &old, &new, grid, my_rank)
+}
+
+/// The general elastic restore: `old_rank_ids` names the checkpoint
+/// files to merge (usually a manifest's [`Manifest::rank_ids`]) and
+/// `survivors` the — not necessarily contiguous — rank ids to
+/// repartition onto. RCB runs over `survivors.len()` parts; part `i`
+/// maps to rank id `survivors[i]`, so a mid-rank death (`{0, 2, 3}`
+/// surviving from 4) reshards exactly like a tail death. Every survivor
+/// runs this independently on the same inputs and computes the same
+/// ownership map.
+pub fn restore_resharded_mapped(
+    dir: impl AsRef<Path>,
+    iteration: u64,
+    old_rank_ids: &[u32],
+    survivors: &[u32],
+    grid: &mut PartitionGrid,
+    my_rank: u32,
+) -> std::io::Result<ReshardOutcome> {
+    assert!(!survivors.is_empty() && survivors.contains(&my_rank));
     let dir = dir.as_ref();
     let mut all = AgentBatch::new();
-    for r in 0..old_ranks {
+    for &r in old_rank_ids {
         let (_info, mut batch) = read_checkpoint(dir.join(checkpoint_name(r, iteration)))?;
         all.append(&mut batch);
     }
@@ -408,7 +464,8 @@ pub fn restore_resharded(
             grid.set_weight(i, *w);
         }
     }
-    let owners: Vec<RankId> = crate::balance::rcb::rcb_partition(grid, new_ranks);
+    let parts = crate::balance::rcb::rcb_partition(grid, survivors.len() as u32);
+    let owners: Vec<RankId> = parts.into_iter().map(|i| survivors[i as usize]).collect();
     grid.set_owners(owners);
     all.retain(|a| grid.owner_of_pos(a.position) == my_rank);
     Ok(ReshardOutcome { agents: all, total_agents })
@@ -666,7 +723,7 @@ mod tests {
             populate(&mut rm, base + 10 * r as usize);
             let path = write_checkpoint(dir, r, iteration, &mut rm).unwrap();
             let (info, crc) = verify_checkpoint(&path).unwrap();
-            entries.push(ManifestEntry { agents: info.agents, crc });
+            entries.push(ManifestEntry { rank: r, agents: info.agents, crc });
         }
         write_manifest(dir, &Manifest { iteration, rank_count: ranks, ranks: entries })
             .unwrap();
@@ -678,10 +735,11 @@ mod tests {
         let m = Manifest {
             iteration: 42,
             rank_count: 3,
+            // Non-prefix rank set on purpose: v2's reason to exist.
             ranks: vec![
-                ManifestEntry { agents: 10, crc: 0xDEAD_BEEF },
-                ManifestEntry { agents: 0, crc: 0 },
-                ManifestEntry { agents: u64::MAX, crc: 0xFFFF_FFFF },
+                ManifestEntry { rank: 0, agents: 10, crc: 0xDEAD_BEEF },
+                ManifestEntry { rank: 2, agents: 0, crc: 0 },
+                ManifestEntry { rank: 7, agents: u64::MAX, crc: 0xFFFF_FFFF },
             ],
         };
         let path = write_manifest(&dir, &m).unwrap();
@@ -733,7 +791,9 @@ mod tests {
             &Manifest {
                 iteration: 30,
                 rank_count: 3,
-                ranks: vec![ManifestEntry { agents: 1, crc: 2 }; 3],
+                ranks: (0..3)
+                    .map(|r| ManifestEntry { rank: r, agents: 1, crc: 2 })
+                    .collect(),
             },
         )
         .unwrap();
@@ -785,7 +845,7 @@ mod tests {
             let path = write_checkpoint(&dir, r, 6, &mut rm).unwrap();
             want_keys.extend(rm.iter().map(|a| (a.global_id, a.position.x.to_bits())));
             let (info, crc) = verify_checkpoint(&path).unwrap();
-            entries.push(ManifestEntry { agents: info.agents, crc });
+            entries.push(ManifestEntry { rank: r, agents: info.agents, crc });
         }
         write_manifest(&dir, &Manifest { iteration: 6, rank_count: 4, ranks: entries })
             .unwrap();
@@ -818,6 +878,80 @@ mod tests {
             again.agents.iter().map(|(a, _)| key(a)).collect::<Vec<_>>(),
             again2.agents.iter().map(|(a, _)| key(a)).collect::<Vec<_>>()
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_dense_manifests_still_read() {
+        // Hand-assemble a version-1 manifest (12-byte entries, rank
+        // implied by index) and check the v2 reader parses it with the
+        // implied prefix rank ids.
+        let dir = tmpdir("manifest_v1");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MANIFEST_MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version 1
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank_count
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&99u64.to_le_bytes()); // iteration
+        for (agents, crc) in [(7u64, 0x1111u32), (9, 0x2222)] {
+            bytes.extend_from_slice(&agents.to_le_bytes());
+            bytes.extend_from_slice(&crc.to_le_bytes());
+        }
+        let crc = Crc32::new().update(&bytes).finalize();
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        let path = dir.join(manifest_name(99));
+        std::fs::write(&path, &bytes).unwrap();
+        let m = read_manifest(&path).unwrap();
+        assert_eq!((m.iteration, m.rank_count), (99, 2));
+        assert_eq!(m.rank_ids(), vec![0, 1]);
+        assert_eq!(m.ranks[0], ManifestEntry { rank: 0, agents: 7, crc: 0x1111 });
+        assert_eq!(m.ranks[1], ManifestEntry { rank: 1, agents: 9, crc: 0x2222 });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mapped_reshard_handles_a_non_prefix_survivor_set() {
+        use crate::space::{Aabb, PartitionGrid};
+        let dir = tmpdir("reshard_mapped");
+        // 4 ranks checkpoint at iteration 5; rank 1 then dies, so the
+        // survivors are the non-prefix set {0, 2, 3}.
+        let mut want_keys = Vec::new();
+        for r in 0..4u32 {
+            let mut rm = ResourceManager::new(r);
+            for i in 0..40usize {
+                let pos = Vec3::new(
+                    (r as f64) * 15.0 + (i % 7) as f64,
+                    (i % 11) as f64 * 5.0,
+                    (i % 5) as f64 * 9.0,
+                );
+                rm.add(Agent::cell(pos, 4.0, CellType::B));
+            }
+            write_checkpoint(&dir, r, 5, &mut rm).unwrap();
+            want_keys.extend(rm.iter().map(|a| (a.global_id, a.position.x.to_bits())));
+        }
+        let whole = Aabb::new(Vec3::ZERO, Vec3::splat(60.0));
+        let survivors = [0u32, 2, 3];
+        let old_ids = [0u32, 1, 2, 3];
+        let mut got_keys = Vec::new();
+        let mut owner_maps: Vec<Vec<u32>> = Vec::new();
+        for &me in &survivors {
+            let mut grid = PartitionGrid::new(whole, 10.0);
+            let out =
+                restore_resharded_mapped(&dir, 5, &old_ids, &survivors, &mut grid, me).unwrap();
+            assert_eq!(out.total_agents, 160);
+            got_keys
+                .extend(out.agents.iter().map(|(a, _)| (a.global_id, a.position.x.to_bits())));
+            owner_maps.push(grid.owners().to_vec());
+        }
+        assert_eq!(owner_maps[0], owner_maps[1]);
+        assert_eq!(owner_maps[1], owner_maps[2]);
+        // The dead rank owns nothing; every box lands on a survivor.
+        assert!(owner_maps[0].iter().all(|o| survivors.contains(o)));
+        // The dead rank's agents were adopted: exactly-once coverage of
+        // the full 4-rank population, rank 1's included.
+        want_keys.sort_unstable();
+        got_keys.sort_unstable();
+        assert_eq!(want_keys, got_keys);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

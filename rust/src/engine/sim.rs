@@ -5,7 +5,7 @@ use super::init::InitCtx;
 use super::model::Model;
 use super::pool::ThreadPool;
 use super::world::{AuraStore, World};
-use crate::balance::{diffusive, rcb, weights};
+use crate::balance::{diffusive, rcb, replan, weights};
 use super::checkpoint;
 use crate::comm::batching::{
     recv_all_batched_reliable, recv_all_batched_streaming, send_batched_framed, Reassembler,
@@ -144,6 +144,8 @@ pub struct RankSim<M: Model> {
     faults_injected_seen: u64,
     transport_stalls_seen: u64,
     inline_fallbacks_seen: u64,
+    a2a_rejects_seen: u64,
+    a2a_nacks_seen: u64,
 }
 
 impl<M: Model> RankSim<M> {
@@ -153,12 +155,19 @@ impl<M: Model> RankSim<M> {
         let radius = model.interaction_radius();
         let box_len = radius * cfg.partition_factor;
         let mut grid = PartitionGrid::new(whole, box_len);
-        // Initial partition: uniform-weight RCB over all ranks (identical
-        // deterministic result on every rank).
+        // Initial partition: uniform-weight RCB over the active ranks
+        // (identical deterministic result on every rank). `active_ranks`
+        // < size starts the run on a rank prefix — the remaining ranks
+        // own nothing and idle in the collectives until a rebalance
+        // spreads the world onto them (ARCHITECTURE.md "Elasticity").
         for i in 0..grid.num_boxes() {
             grid.set_weight(i, 1.0);
         }
-        let owners = rcb::rcb_partition(&grid, comm.size() as u32);
+        let init_ranks = match cfg.active_ranks {
+            n if n >= 1 && n < comm.size() => n as u32,
+            _ => comm.size() as u32,
+        };
+        let owners = rcb::rcb_partition(&grid, init_ranks);
         grid.set_owners(owners);
         grid.clear_weights();
 
@@ -211,6 +220,8 @@ impl<M: Model> RankSim<M> {
             faults_injected_seen: 0,
             transport_stalls_seen: 0,
             inline_fallbacks_seen: 0,
+            a2a_rejects_seen: 0,
+            a2a_nacks_seen: 0,
             comm,
             grid,
             nsg,
@@ -323,6 +334,12 @@ impl<M: Model> RankSim<M> {
             && self.cfg.balance_method != BalanceMethod::Off
         {
             self.balance_phase();
+        }
+        if self.cfg.rebalance_every > 0
+            && self.iteration > 0
+            && self.iteration % self.cfg.rebalance_every as u64 == 0
+        {
+            self.rebalance_phase();
         }
         if self.cfg.sort_every > 0 && self.iteration > 0 && self.iteration % self.cfg.sort_every as u64 == 0
         {
@@ -919,36 +936,38 @@ impl<M: Model> RankSim<M> {
     /// content.
     fn write_due_manifests(&mut self, dir: &std::path::Path) {
         let period = self.cfg.checkpoint_every as u64; // > 0 in this phase
-        // The manifest's per-rank table is dense, so the live set must
-        // form the rank prefix 0..n. That holds initially and is kept by
-        // elastic restore as long as deaths take the highest ranks; a
-        // mid-rank death stops manifesting (restore falls back to the
-        // newest pre-death manifest).
+        // Manifest entries carry explicit rank ids (format v2), so any
+        // live set manifests — including the non-prefix survivor set a
+        // mid-rank death leaves behind.
         let size = self.comm.size() as u32;
         let live: Vec<u32> = (0..size).filter(|&r| !self.comm.is_dead(r)).collect();
-        if live.iter().enumerate().any(|(i, &r)| r != i as u32) {
+        if live.is_empty() {
             return;
         }
-        let n = live.len() as u32;
         let mut round = self.iteration - self.iteration % period;
         for _ in 0..4 {
             if round == 0 {
                 break;
             }
-            if !dir.join(checkpoint::manifest_name(round)).exists()
-                // A file for rank n means this round predates a death and
-                // involved more ranks than are live now; manifesting it
-                // with today's narrower rank count would silently drop
-                // the extra ranks' agents on restore.
-                && !dir.join(checkpoint::checkpoint_name(n, round)).exists()
-            {
-                let mut ranks = Vec::with_capacity(n as usize);
-                for r in 0..n {
+            // A checkpoint file from a now-dead rank means this round
+            // predates the death and involved more ranks than are live
+            // now; manifesting it with today's narrower rank set would
+            // silently drop the dead ranks' agents on restore.
+            let predates_death = (0..size).filter(|&r| self.comm.is_dead(r)).any(|r| {
+                dir.join(checkpoint::checkpoint_name(r, round)).exists()
+            });
+            if !dir.join(checkpoint::manifest_name(round)).exists() && !predates_death {
+                let mut ranks = Vec::with_capacity(live.len());
+                for &r in &live {
                     match checkpoint::verify_checkpoint(
                         dir.join(checkpoint::checkpoint_name(r, round)),
                     ) {
                         Ok((info, crc)) if info.rank == r && info.iteration == round => {
-                            ranks.push(checkpoint::ManifestEntry { agents: info.agents, crc });
+                            ranks.push(checkpoint::ManifestEntry {
+                                rank: r,
+                                agents: info.agents,
+                                crc,
+                            });
                         }
                         _ => {
                             ranks.clear();
@@ -956,8 +975,12 @@ impl<M: Model> RankSim<M> {
                         }
                     }
                 }
-                if ranks.len() == n as usize {
-                    let m = checkpoint::Manifest { iteration: round, rank_count: n, ranks };
+                if ranks.len() == live.len() {
+                    let m = checkpoint::Manifest {
+                        iteration: round,
+                        rank_count: live.len() as u32,
+                        ranks,
+                    };
                     checkpoint::write_manifest(dir, &m).ok();
                 }
             }
@@ -1043,11 +1066,11 @@ impl<M: Model> RankSim<M> {
     /// rank's death notice): adopt their orphaned ranges. The ladder is
     /// detect → agree (newest manifest whose checkpoints all verify) →
     /// reshard (RCB over the merged checkpointed population across the
-    /// survivors) → resume. Falls back to the plain per-rank restore
-    /// when no manifest agreement exists, or when the survivor set is
-    /// one the dense manifest table cannot express (a mid-rank death);
-    /// either way the rank keeps running — rank death is a data-loss
-    /// boundary only in the degraded fallback.
+    /// survivor rank ids — *any* set, prefix or not, since manifest
+    /// entries carry explicit ranks) → resume. Falls back to the plain
+    /// per-rank restore only when no manifest agreement exists; either
+    /// way the rank keeps running — rank death is a data-loss boundary
+    /// only in the degraded fallback.
     fn on_ranks_dead(&mut self, dead: &[u32]) {
         let t = crate::util::timing::CpuTimer::start();
         self.metrics.count(Counter::RanksLost, dead.len() as u64);
@@ -1067,10 +1090,9 @@ impl<M: Model> RankSim<M> {
         let dir = self.checkpoint_dir();
         let size = self.comm.size() as u32;
         let live: Vec<u32> = (0..size).filter(|&r| !self.comm.is_dead(r)).collect();
-        let prefix = !live.is_empty() && live.iter().enumerate().all(|(i, &r)| r == i as u32);
         let agreed = checkpoint::latest_agreed_iteration(&dir).ok().flatten();
         let resharded = match agreed {
-            Some(m) if prefix => self.reshard_restore(&dir, &m, live.len() as u32, dead),
+            Some(m) if live.contains(&self.rank) => self.reshard_restore(&dir, &m, &live, dead),
             _ => false,
         };
         if !resharded {
@@ -1088,21 +1110,22 @@ impl<M: Model> RankSim<M> {
     }
 
     /// The elastic rung: re-run RCB over the merged population of the
-    /// agreed checkpoint across `new_ranks` survivors, rebuild this
+    /// agreed checkpoint across the `survivors` rank ids, rebuild this
     /// rank's owned state from its share, and restart every stream.
     fn reshard_restore(
         &mut self,
         dir: &std::path::Path,
         m: &checkpoint::Manifest,
-        new_ranks: u32,
+        survivors: &[u32],
         dead: &[u32],
     ) -> bool {
         let before: Vec<u32> = self.grid.owners().to_vec();
-        let out = match checkpoint::restore_resharded(
+        let old_ids = m.rank_ids();
+        let out = match checkpoint::restore_resharded_mapped(
             dir,
             m.iteration,
-            m.rank_count,
-            new_ranks,
+            &old_ids,
+            survivors,
             &mut self.grid,
             self.rank,
         ) {
@@ -1169,6 +1192,16 @@ impl<M: Model> RankSim<M> {
             );
             self.inline_fallbacks_seen = ts.inline_fallbacks;
         }
+        let a2a_rej = self.comm.alltoall_rejects();
+        if a2a_rej > self.a2a_rejects_seen {
+            self.metrics.count(Counter::FaultsDetected, a2a_rej - self.a2a_rejects_seen);
+            self.a2a_rejects_seen = a2a_rej;
+        }
+        let a2a_nacks = self.comm.alltoall_nacks();
+        if a2a_nacks > self.a2a_nacks_seen {
+            self.metrics.count(Counter::RetriesRequested, a2a_nacks - self.a2a_nacks_seen);
+            self.a2a_nacks_seen = a2a_nacks;
+        }
     }
 
     // -------------------------------------------------------------------
@@ -1223,6 +1256,82 @@ impl<M: Model> RankSim<M> {
         // Hand off agents whose boxes changed owner.
         if moved > 0 {
             self.migration_phase();
+        }
+    }
+
+    // -------------------------------------------------------------------
+    // Periodic: online repartitioning (live cell-range migration)
+    // -------------------------------------------------------------------
+
+    /// Plan → ship → splice → resync, with zero checkpoint involvement.
+    ///
+    /// Every live rank allreduces the measured box-weight field, runs the
+    /// same deterministic [`replan::plan_rebalance`], and — when the plan
+    /// is non-trivial — installs the new owner map and hands the affected
+    /// agents off through the regular migration path (columnar TA IO
+    /// wire format over whatever `Transport` backend the run uses,
+    /// behavior tails streamed arena-to-arena). Donor and receiver NSG
+    /// shards are updated incrementally by `migration_phase` itself;
+    /// afterwards the delta channels restart with a full refresh because
+    /// receivers hold references to pre-move stream state, and the
+    /// buffer pools trim to their new fan-in/fan-out watermarks.
+    ///
+    /// The plan also fires when the live rank set differs from the
+    /// current owner set regardless of imbalance — that is how a run
+    /// started on `active_ranks < size` grows onto the idle ranks.
+    fn rebalance_phase(&mut self) {
+        let t = crate::util::timing::CpuTimer::start();
+        // Zero runtime on purpose: the weight field must be a pure
+        // function of simulation state (agent counts per box), never
+        // wall-clock, so every rank — and every rerun — computes the
+        // identical plan. Runtime-scaled heterogeneous balancing stays
+        // the classic `balance_phase`'s job.
+        let local = weights::compute_box_weights(&self.grid, &self.nsg, self.rank, 0.0);
+        let global = self.comm.allreduce_sum_f64(&local);
+        for (i, w) in global.iter().enumerate() {
+            self.grid.set_weight(i, *w);
+        }
+        let live: Vec<u32> =
+            (0..self.comm.size() as u32).filter(|&r| !self.comm.is_dead(r)).collect();
+        let plan = replan::plan_rebalance(&self.grid, &live, self.cfg.rebalance_threshold);
+        self.grid.clear_weights();
+        let moved = match plan {
+            Some(plan) if !plan.moves.is_empty() => {
+                self.metrics.count(Counter::RebalancePlans, 1);
+                let donated =
+                    plan.moves.iter().filter(|m| m.from == self.rank).count() as u64;
+                self.metrics.count(Counter::CellRangesMigrated, donated);
+                self.grid.set_owners(plan.owners);
+                let leaving = self
+                    .rm
+                    .iter()
+                    .filter(|a| self.grid.owner_of_pos(a.position) != self.rank)
+                    .count() as u64;
+                self.metrics.count(Counter::AgentsRebalanced, leaving);
+                true
+            }
+            _ => false,
+        };
+        if moved {
+            // Obsolete speculative receives for the old neighbor set, and
+            // the cached neighbor-rank set must be recomputed before the
+            // next aura exchange.
+            self.comm.cancel_pending(tags::AURA);
+            self.neighbors_dirty = true;
+            self.view_pool.shrink_to_watermark();
+            self.comm.frame_pool().shrink_to_watermark();
+        }
+        self.metrics.add_op(Op::Rebalance, t.elapsed_secs());
+        if moved {
+            // Ship the affected agents over the regular migration path —
+            // the columnar encode (behavior tails straight out of the
+            // arena) and the incremental NSG remove/add on both sides
+            // live there. Every rank participates in the alltoallv even
+            // with nothing to donate.
+            self.migration_phase();
+            // Receivers hold delta references to pre-move stream state;
+            // restart every outgoing channel with a full refresh.
+            self.codec.force_full_all();
         }
     }
 

@@ -57,10 +57,14 @@ pub enum Op {
     /// iteration, merging the dead rank's checkpoints and repartitioning
     /// the world over the surviving rank count.
     Reshard,
+    /// Wall clock of planned online repartitioning: weight allreduce,
+    /// replan, live cell-range migration and channel resync — zero
+    /// checkpoint involvement (contrast [`Op::Reshard`]).
+    Rebalance,
 }
 
 impl Op {
-    pub const ALL: [Op; 16] = [
+    pub const ALL: [Op; 17] = [
         Op::AuraUpdate,
         Op::AgentOps,
         Op::Behavior,
@@ -77,6 +81,7 @@ impl Op {
         Op::Checksum,
         Op::Checkpoint,
         Op::Reshard,
+        Op::Rebalance,
     ];
 
     pub fn name(self) -> &'static str {
@@ -97,6 +102,7 @@ impl Op {
             Op::Checksum => "checksum",
             Op::Checkpoint => "checkpoint",
             Op::Reshard => "reshard",
+            Op::Rebalance => "rebalance",
         }
     }
 }
@@ -161,10 +167,18 @@ pub enum Counter {
     /// Shared-memory sends that fell back to inline-over-socket framing
     /// because the slab was (transiently) full. Zero on non-shm backends.
     TransportInlineFallbacks,
+    /// Non-empty online-repartition plans executed (every rank counts the
+    /// same deterministic plan, so the aggregate is plans × ranks).
+    RebalancePlans,
+    /// Morton-contiguous cell ranges this rank donated in rebalance plans.
+    CellRangesMigrated,
+    /// Agents this rank shipped to a new owner during planned rebalances
+    /// (a subset of [`Counter::AgentsMigratedOut`]).
+    AgentsRebalanced,
 }
 
 impl Counter {
-    pub const ALL: [Counter; 21] = [
+    pub const ALL: [Counter; 24] = [
         Counter::BytesSentWire,
         Counter::BytesSentRaw,
         Counter::MessagesSent,
@@ -186,6 +200,9 @@ impl Counter {
         Counter::OrphanedBoxesAdopted,
         Counter::TransportSendStalls,
         Counter::TransportInlineFallbacks,
+        Counter::RebalancePlans,
+        Counter::CellRangesMigrated,
+        Counter::AgentsRebalanced,
     ];
 
     pub fn name(self) -> &'static str {
@@ -211,6 +228,9 @@ impl Counter {
             Counter::OrphanedBoxesAdopted => "orphaned_boxes_adopted",
             Counter::TransportSendStalls => "transport_send_stalls",
             Counter::TransportInlineFallbacks => "transport_inline_fallbacks",
+            Counter::RebalancePlans => "rebalance_plans",
+            Counter::CellRangesMigrated => "cell_ranges_migrated",
+            Counter::AgentsRebalanced => "agents_rebalanced",
         }
     }
 }

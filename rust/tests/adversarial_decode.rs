@@ -266,7 +266,7 @@ fn checkpoint_and_manifest_bytes_never_panic_and_agreement_skips_stale() {
         }
         let path = checkpoint::write_checkpoint(&dir, rank, 6, &mut rm).expect("write checkpoint");
         let (info, crc) = checkpoint::verify_checkpoint(&path).expect("fresh checkpoint verifies");
-        entries.push(ManifestEntry { agents: info.agents, crc });
+        entries.push(ManifestEntry { rank, agents: info.agents, crc });
     }
     checkpoint::write_manifest(&dir, &Manifest { iteration: 6, rank_count: 3, ranks: entries })
         .expect("write manifest");
@@ -332,7 +332,7 @@ fn checkpoint_and_manifest_bytes_never_panic_and_agreement_skips_stale() {
     let stale = Manifest {
         iteration: 8,
         rank_count: 4,
-        ranks: vec![ManifestEntry { agents: 10, crc: 0xDEAD_BEEF }; 4],
+        ranks: (0..4).map(|r| ManifestEntry { rank: r, agents: 10, crc: 0xDEAD_BEEF }).collect(),
     };
     checkpoint::write_manifest(&dir, &stale).expect("write stale manifest");
     let agreed = checkpoint::latest_agreed_iteration(&dir)

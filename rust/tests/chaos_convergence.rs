@@ -22,8 +22,10 @@ use teraagent::comm::{ChaosStats, FaultPlan, NetworkModel};
 use teraagent::config::{ParallelMode, SimConfig};
 use teraagent::core::agent::{Agent, CellType};
 use teraagent::core::ids::GlobalId;
-use teraagent::engine::launcher::run_simulation;
-use teraagent::engine::{checkpoint, ThreadPool};
+use teraagent::engine::init::InitCtx;
+use teraagent::engine::launcher::{run_simulation, run_simulation_with_chaos};
+use teraagent::engine::{checkpoint, Model, ThreadPool, World};
+use teraagent::space::Aabb;
 use teraagent::io::codec::AuraDecodeJob;
 use teraagent::io::ta_io::ViewPool;
 use teraagent::io::{Codec, Compression, SerializerKind};
@@ -378,4 +380,90 @@ fn engine_hardening_knobs_are_result_transparent() {
     assert_eq!(restored.0.agents as usize, restored.1.len());
 
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Engine level: faults on the rebalance wire (ISSUE 10). An online
+// repartition ships its cell ranges through the agent-transfer
+// alltoallv; the MIGRATION chaos scope lands drops and bit flips on
+// exactly those frames, and the envelope CRC + NACK recovery must
+// converge the run to the clean oracle with the *same* rebalance plans.
+// ---------------------------------------------------------------------
+
+/// Stationary skewed population (no mechanics, empty step): guarantees
+/// the rebalance planner fires, and makes "a migrated agent was lost,
+/// duplicated or corrupted" show up as a position-multiset mismatch.
+struct SkewedStill;
+
+impl Model for SkewedStill {
+    fn name(&self) -> &'static str {
+        "chaos_rebalance"
+    }
+    fn interaction_radius(&self) -> f64 {
+        10.0
+    }
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let whole = ctx.whole;
+        let corner = Aabb::new(whole.min, whole.min + (whole.max - whole.min) * 0.35);
+        ctx.scatter_uniform(600, corner, |p, _| Agent::cell(p, 8.0, CellType::A));
+        ctx.scatter_uniform(200, whole, |p, _| Agent::cell(p, 8.0, CellType::B));
+    }
+    fn step(&mut self, _world: &mut World) {}
+}
+
+#[test]
+fn faulted_rebalance_migration_converges_to_the_clean_oracle() {
+    let cfg = SimConfig {
+        name: "chaos_rebalance".into(),
+        num_agents: 800,
+        iterations: 9,
+        space_half_extent: 40.0,
+        interaction_radius: 10.0,
+        seed: 19,
+        mode: ParallelMode::MpiHybrid { ranks: 4, threads_per_rank: 1 },
+        rebalance_every: 3,
+        rebalance_threshold: 1.25,
+        recv_timeout_ms: 4_000,
+        ..Default::default()
+    };
+    let oracle = run_simulation(&cfg, |_| SkewedStill);
+    assert!(
+        oracle.report.counter_total(Counter::RebalancePlans) > 0,
+        "the scenario must actually rebalance"
+    );
+
+    let faulted = run_simulation_with_chaos(
+        &cfg,
+        |_| SkewedStill,
+        |rank| {
+            Some(
+                FaultPlan::none(0xC0A5_0010 + u64::from(rank))
+                    .with_drop(0.1)
+                    .with_bit_flip(0.05)
+                    // MIGRATION scope covers the per-round alltoallv tags,
+                    // so faults land on the shipped cell ranges themselves.
+                    .with_tags(vec![tags::AURA, tags::MIGRATION])
+                    .with_max_faults(30),
+            )
+        },
+    );
+
+    let t = |c| faulted.report.counter_total(c);
+    assert!(t(Counter::FaultsInjected) > 0, "the chaos plan must fire");
+    assert_eq!(
+        t(Counter::RebalancePlans),
+        oracle.report.counter_total(Counter::RebalancePlans),
+        "recovery must not change what the planner decides"
+    );
+    assert_eq!(t(Counter::CheckpointRestores), 0, "recovery stays on the NACK rung");
+    assert_eq!(t(Counter::RanksLost), 0, "faults must not be misread as a death");
+    assert_eq!(faulted.final_agents, 800, "every agent survives the faulted migration");
+    assert_eq!(
+        positions(&faulted),
+        positions(&oracle),
+        "faulted rebalance diverged from the clean oracle"
+    );
 }

@@ -132,10 +132,12 @@ fn chaos_faults_through_uds_converge_to_clean_oracle() {
                 .with_drop(0.05)
                 .with_duplicate(0.05)
                 .with_bit_flip(0.05)
-                // The aura exchange is the reliable (NACK + archive)
-                // path; faults land there, same scoping as the comm-level
-                // convergence suite.
-                .with_tags(vec![tags::AURA])
+                // Faults land on both reliable paths: the aura exchange
+                // and — via the MIGRATION scope, which covers the
+                // per-round alltoallv tags — the agent-transfer
+                // alltoallv, so drop/dup/bit-flip exercise the envelope
+                // CRC + NACK recovery on the migration wire too.
+                .with_tags(vec![tags::AURA, tags::MIGRATION])
                 .with_max_faults(40),
         )
     })

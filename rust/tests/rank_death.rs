@@ -199,3 +199,94 @@ fn rank_death_is_detected_reshared_and_bit_identical_across_thread_counts() {
     assert_eq!(runs[0], runs[1], "recovery must be identical with 1 vs 2 decode threads");
     assert_eq!(runs[0], runs[2], "recovery must be identical with 1 vs 8 decode threads");
 }
+
+/// Non-prefix death (ISSUE 10): kill rank **1** of four, so the
+/// survivors `{0, 2, 3}` are *not* a contiguous prefix. PR 7's restore
+/// only handled prefix survivor sets; the v2 manifests carry explicit
+/// rank ids and `restore_resharded_mapped` reshards onto an arbitrary
+/// survivor list, so a mid-list victim must recover exactly like the
+/// tail-rank kill above — reshard rung, full adoption, bit-identity
+/// against a fresh mapped restore.
+#[test]
+fn mid_list_rank_death_reshards_onto_the_non_prefix_survivors() {
+    const VICTIM: u32 = 1;
+    let dir = std::env::temp_dir()
+        .join(format!("teraagent_rank_death_mid_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = cfg(1, &dir);
+    let result = run_simulation_with_chaos(
+        &cfg,
+        |_| Still,
+        |rank| {
+            (rank == VICTIM).then(|| FaultPlan::none(0xDEAD_0010).with_kill_at_iteration(KILL_AT))
+        },
+    );
+    let ckpt = dir.join("checkpoints").join("rank_death");
+    let survivors: Vec<u32> = (0..RANKS as u32).filter(|&r| r != VICTIM).collect();
+
+    // Same recovery ladder as the prefix kill: every survivor detects
+    // the death once and takes the reshard rung, never the fallback.
+    let t = |c| result.report.counter_total(c);
+    assert_eq!(t(Counter::RanksLost), 3, "one detection per survivor");
+    assert_eq!(t(Counter::ReshardRestores), 3, "one mapped reshard per survivor");
+    assert_eq!(t(Counter::CheckpointRestores), 0, "fallback rung not taken");
+    assert_eq!(result.final_agents, N_AGENTS as u64, "no agent goes down with rank 1");
+
+    // The victim's boxes — rank 1's share of the initial split this
+    // time — are each adopted by exactly one survivor.
+    let mut grid =
+        PartitionGrid::new(Aabb::cube(cfg.space_half_extent), RADIUS * cfg.partition_factor);
+    for i in 0..grid.num_boxes() {
+        grid.set_weight(i, 1.0);
+    }
+    let owners = rcb_partition(&grid, RANKS as u32);
+    let orphaned = owners.iter().filter(|&&o| o == VICTIM).count();
+    assert!(orphaned > 0, "the victim must own part of the space");
+    assert_eq!(t(Counter::OrphanedBoxesAdopted), orphaned as u64);
+
+    // The newest agreement was written by the non-prefix trio: the v2
+    // manifest names the survivor ids explicitly — `{0, 2, 3}` is not
+    // expressible as a dense prefix and is exactly why the format grew
+    // a rank column.
+    let m = checkpoint::latest_agreed_iteration(&ckpt)
+        .expect("manifest dir readable")
+        .expect("an agreed round exists");
+    assert_eq!(m.rank_count, SURVIVORS, "newest agreement is post-death");
+    assert_eq!(m.rank_ids(), survivors, "the agreement names the non-prefix survivors");
+    assert!(m.iteration > KILL_AT, "survivors kept checkpointing after the death");
+
+    // Bit-identity against a fresh mapped restore from that round: the
+    // recovered world is exactly what `restore_resharded_mapped` hands
+    // the trio, unioned (stationary model — positions never move).
+    let whole = Aabb::cube(cfg.space_half_extent);
+    let box_len = RADIUS * cfg.partition_factor;
+    let mut union: Vec<[u64; 3]> = Vec::new();
+    for &rank in &survivors {
+        let mut g = PartitionGrid::new(whole, box_len);
+        let out = checkpoint::restore_resharded_mapped(
+            &ckpt,
+            m.iteration,
+            &m.rank_ids(),
+            &survivors,
+            &mut g,
+            rank,
+        )
+        .expect("fresh mapped restore from the agreed round");
+        assert_eq!(out.total_agents, N_AGENTS as u64, "restore accounts for every agent");
+        assert!(!out.agents.is_empty(), "every survivor owns part of the space");
+        union.extend(
+            out.agents
+                .iter()
+                .map(|a| [a.position.x.to_bits(), a.position.y.to_bits(), a.position.z.to_bits()]),
+        );
+    }
+    union.sort();
+    assert_eq!(union.len(), N_AGENTS);
+    assert_eq!(
+        positions(&result),
+        union,
+        "mid-list kill recovery diverged from the fresh mapped restore"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

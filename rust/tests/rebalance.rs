@@ -1,0 +1,312 @@
+//! Rebalance determinism battery (ISSUE 10 tentpole): online
+//! repartitioning — plan → ship → splice → resync, with **zero
+//! checkpoint involvement** — must be invisible to the simulation.
+//!
+//! Scenarios:
+//! * **shrink-skew**: a population piled into one corner forces a real
+//!   plan; the rebalanced run must end with the identical position
+//!   multiset as a never-rebalanced oracle, bit-identical to itself
+//!   (positions *and* per-rank send-stream CRCs) at 1, 2 and 8 threads
+//!   per rank.
+//! * **uniform no-op**: a balanced world must never plan, and the
+//!   rebalance machinery must be fully transparent — identical
+//!   positions *and* stream CRCs vs. the oracle with the knob off.
+//! * **cross-backend**: the same rebalancing run over in-process
+//!   mailboxes, the Unix-socket mesh and the shared-memory slab agrees
+//!   bit-for-bit (positions + stream CRCs).
+//! * **grow 3→4**: a run started on `active_ranks = 3` of 4 spreads
+//!   onto the idle rank at the first rebalance gate and converges to
+//!   the fresh 4-rank run.
+//! * **moving model**: with real mechanics the rebalanced trajectory
+//!   matches the never-rebalanced oracle within float-associativity
+//!   tolerance, and is bitwise reproducible across thread counts.
+//!
+//! The stationary scenarios use the same trick as the rank-death suite:
+//! agents that never move make "migration lost/duplicated/corrupted an
+//! agent" indistinguishable from a position-multiset mismatch, so the
+//! bit-identity assertion is sharp.
+
+use teraagent::comm::TransportKind;
+use teraagent::config::{ParallelMode, SimConfig};
+use teraagent::core::agent::{Agent, CellType};
+use teraagent::engine::init::InitCtx;
+use teraagent::engine::launcher::run_simulation;
+use teraagent::engine::{Model, RunResult, World};
+use teraagent::metrics::Counter;
+use teraagent::models::cell_clustering::CellClustering;
+use teraagent::space::Aabb;
+
+const N_AGENTS: usize = 800;
+const RADIUS: f64 = 10.0;
+const HALF_EXTENT: f64 = 40.0;
+const RANKS: usize = 4;
+
+/// Stationary agents, three quarters of them piled into one corner
+/// octant: the initial uniform-weight RCB is maximally wrong, so the
+/// weight-driven replan must fire and ship real cell ranges.
+struct SkewedStill;
+
+impl Model for SkewedStill {
+    fn name(&self) -> &'static str {
+        "skewed_still"
+    }
+    fn interaction_radius(&self) -> f64 {
+        RADIUS
+    }
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let whole = ctx.whole;
+        let corner = Aabb::new(whole.min, whole.min + (whole.max - whole.min) * 0.35);
+        ctx.scatter_uniform(N_AGENTS * 3 / 4, corner, |p, _| Agent::cell(p, 8.0, CellType::A));
+        ctx.scatter_uniform(N_AGENTS / 4, whole, |p, _| Agent::cell(p, 8.0, CellType::B));
+    }
+    fn step(&mut self, _world: &mut World) {}
+}
+
+/// Stationary agents spread uniformly: the world is already balanced, so
+/// the planner must never produce a plan.
+struct UniformStill;
+
+impl Model for UniformStill {
+    fn name(&self) -> &'static str {
+        "uniform_still"
+    }
+    fn interaction_radius(&self) -> f64 {
+        RADIUS
+    }
+    fn uses_mechanics(&self) -> bool {
+        false
+    }
+    fn create_agents(&self, ctx: &mut InitCtx) {
+        let whole = ctx.whole;
+        ctx.scatter_uniform(N_AGENTS, whole, |p, _| Agent::cell(p, 8.0, CellType::A));
+    }
+    fn step(&mut self, _world: &mut World) {}
+}
+
+fn base_cfg(name: &str, threads: usize) -> SimConfig {
+    SimConfig {
+        name: name.into(),
+        num_agents: N_AGENTS,
+        iterations: 10,
+        space_half_extent: HALF_EXTENT,
+        interaction_radius: RADIUS,
+        seed: 31,
+        mode: ParallelMode::MpiHybrid { ranks: RANKS, threads_per_rank: threads },
+        stream_audit: true,
+        ..Default::default()
+    }
+}
+
+fn rebalancing(mut cfg: SimConfig) -> SimConfig {
+    cfg.rebalance_every = 3;
+    cfg.rebalance_threshold = 1.25;
+    cfg
+}
+
+fn positions(result: &RunResult) -> Vec<[u64; 3]> {
+    let mut pos: Vec<[u64; 3]> = result
+        .final_snapshot
+        .iter()
+        .map(|(p, _, _)| [p.x.to_bits(), p.y.to_bits(), p.z.to_bits()])
+        .collect();
+    pos.sort();
+    pos
+}
+
+fn assert_no_checkpoint_involvement(result: &RunResult, label: &str) {
+    let t = |c| result.report.counter_total(c);
+    assert_eq!(t(Counter::CheckpointRestores), 0, "{label}: rebalance must not restore");
+    assert_eq!(t(Counter::ReshardRestores), 0, "{label}: rebalance must not reshard-restore");
+    assert_eq!(t(Counter::RanksLost), 0, "{label}: no rank may be misread as dead");
+    assert_eq!(t(Counter::FaultsDetected), 0, "{label}: clean link detects no faults");
+}
+
+#[test]
+fn skewed_world_rebalances_and_matches_the_never_rebalanced_oracle() {
+    // The oracle never rebalances; the planner's transparency contract
+    // is that shipping cell ranges around changes *where* agents live,
+    // never *what* the simulation computes.
+    let oracle = run_simulation(&base_cfg("rebalance_oracle", 1), |_| SkewedStill);
+    assert_eq!(oracle.final_agents, N_AGENTS as u64);
+    assert_eq!(
+        oracle.report.counter_total(Counter::RebalancePlans),
+        0,
+        "oracle: knob off means no plans"
+    );
+
+    let mut runs: Vec<(Vec<[u64; 3]>, Vec<u32>)> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let cfg = rebalancing(base_cfg("rebalance_skew", threads));
+        let result = run_simulation(&cfg, |_| SkewedStill);
+        let label = format!("t{threads}");
+
+        // The skew must actually fire the planner, on every live rank
+        // identically (each rank counts the same deterministic plan).
+        let t = |c| result.report.counter_total(c);
+        let plans = t(Counter::RebalancePlans);
+        assert!(plans > 0, "{label}: skewed world must produce a plan");
+        assert_eq!(plans % RANKS as u64, 0, "{label}: every rank counts the same plan");
+        assert!(t(Counter::CellRangesMigrated) > 0, "{label}: ranges must be donated");
+        let rebalanced = t(Counter::AgentsRebalanced);
+        assert!(rebalanced > 0, "{label}: agents must move with their ranges");
+        assert!(
+            t(Counter::AgentsMigratedOut) >= rebalanced,
+            "{label}: rebalanced agents travel the regular migration path"
+        );
+        assert_no_checkpoint_involvement(&result, &label);
+
+        // Conservation + transparency: every agent on exactly one rank,
+        // and the world state is exactly the oracle's.
+        assert_eq!(result.final_agents, N_AGENTS as u64, "{label}: agent conservation");
+        assert_eq!(
+            positions(&result),
+            positions(&oracle),
+            "{label}: rebalanced run diverged from the never-rebalanced oracle"
+        );
+        assert_eq!(result.stream_crcs.len(), RANKS, "{label}: audit digest per rank");
+        runs.push((positions(&result), result.stream_crcs));
+    }
+
+    // The rebalanced run itself is bit-reproducible across thread
+    // counts: identical positions *and* identical per-rank send-stream
+    // CRCs (the migration wire bytes included).
+    assert_eq!(runs[0], runs[1], "rebalanced run diverged between 1 and 2 threads");
+    assert_eq!(runs[0], runs[2], "rebalanced run diverged between 1 and 8 threads");
+}
+
+#[test]
+fn balanced_world_never_plans_and_the_machinery_is_fully_transparent() {
+    let oracle = run_simulation(&base_cfg("rebalance_noop_oracle", 1), |_| UniformStill);
+    let mut cfg = rebalancing(base_cfg("rebalance_noop", 1));
+    // Headroom over box-granularity sampling noise: a uniform scatter
+    // still leaves a few percent of per-rank skew, which is exactly the
+    // drift the planner must shrug off rather than churn on.
+    cfg.rebalance_threshold = 1.5;
+    let result = run_simulation(&cfg, |_| UniformStill);
+
+    let t = |c| result.report.counter_total(c);
+    assert_eq!(t(Counter::RebalancePlans), 0, "balanced world must not plan");
+    assert_eq!(t(Counter::CellRangesMigrated), 0, "no ranges move without a plan");
+    assert_eq!(t(Counter::AgentsRebalanced), 0, "no agents move without a plan");
+    assert_no_checkpoint_involvement(&result, "noop");
+
+    // With no plan, the weight allreduce is the only extra traffic and
+    // it rides the unaudited collective plane: the data-plane byte
+    // streams must be *identical* to the oracle's, not just the state.
+    assert_eq!(result.final_agents, N_AGENTS as u64);
+    assert_eq!(positions(&result), positions(&oracle), "no-op rebalance changed the world");
+    assert_eq!(
+        result.stream_crcs, oracle.stream_crcs,
+        "no-op rebalance perturbed the send streams"
+    );
+}
+
+#[test]
+fn rebalance_is_transparent_across_transport_backends() {
+    let run = |transport: TransportKind| {
+        let mut cfg = rebalancing(base_cfg("rebalance_backend", 1));
+        cfg.mode = ParallelMode::MpiOnly { ranks: RANKS };
+        cfg.transport = transport;
+        let result = run_simulation(&cfg, |_| SkewedStill);
+        assert!(
+            result.report.counter_total(Counter::RebalancePlans) > 0,
+            "{transport:?}: the scenario must actually rebalance"
+        );
+        assert_eq!(result.final_agents, N_AGENTS as u64, "{transport:?}");
+        assert_eq!(result.stream_crcs.len(), RANKS, "{transport:?}: audit digest per rank");
+        (positions(&result), result.stream_crcs)
+    };
+    let (p_in, crc_in) = run(TransportKind::InProcess);
+    let (p_uds, crc_uds) = run(TransportKind::Uds);
+    let (p_shm, crc_shm) = run(TransportKind::Shm);
+    assert_eq!(p_in, p_uds, "positions diverged between in-process and uds");
+    assert_eq!(p_in, p_shm, "positions diverged between in-process and shm");
+    assert_eq!(crc_in, crc_uds, "send streams diverged between in-process and uds");
+    assert_eq!(crc_in, crc_shm, "send streams diverged between in-process and shm");
+}
+
+#[test]
+fn growing_from_three_active_ranks_onto_four_matches_the_fresh_wide_run() {
+    // Fresh 4-rank oracle: all ranks active from iteration 0.
+    let oracle = run_simulation(&base_cfg("rebalance_grow_oracle", 1), |_| SkewedStill);
+
+    let mut runs: Vec<(Vec<[u64; 3]>, Vec<u32>)> = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let mut cfg = rebalancing(base_cfg("rebalance_grow", threads));
+        // Start the world on a 3-rank prefix of the 4-rank communicator;
+        // rank 3 idles in the collectives owning nothing.
+        cfg.active_ranks = 3;
+        let result = run_simulation(&cfg, |_| SkewedStill);
+        let label = format!("grow/t{threads}");
+
+        // The very first rebalance gate must notice owner set ≠ live
+        // set and spread the run onto rank 3 — regardless of imbalance.
+        let t = |c| result.report.counter_total(c);
+        assert!(t(Counter::RebalancePlans) >= RANKS as u64, "{label}: the grow plan must fire");
+        assert!(t(Counter::AgentsRebalanced) > 0, "{label}: growing ships agents");
+        assert_no_checkpoint_involvement(&result, &label);
+
+        // After the grow round the run is indistinguishable from one
+        // that was 4 ranks wide all along.
+        assert_eq!(result.final_agents, N_AGENTS as u64, "{label}: agent conservation");
+        assert_eq!(
+            positions(&result),
+            positions(&oracle),
+            "{label}: grown run diverged from the fresh 4-rank run"
+        );
+        runs.push((positions(&result), result.stream_crcs));
+    }
+    assert_eq!(runs[0], runs[1], "grown run diverged between 1 and 2 threads");
+    assert_eq!(runs[0], runs[2], "grown run diverged between 1 and 8 threads");
+}
+
+#[test]
+fn moving_model_rebalance_matches_oracle_within_tolerance_and_is_thread_bitwise() {
+    // With real mechanics the gather order changes when ownership
+    // changes, so oracle equality is up to float associativity (same
+    // contract as the cross-rank-count determinism suite); the
+    // rebalanced schedule itself must still be bit-reproducible.
+    let cfg0 = base_cfg("rebalance_moving_oracle", 1);
+    let oracle = run_simulation(&cfg0, |_| CellClustering::new(&cfg0));
+
+    let run = |threads: usize| {
+        let mut cfg = rebalancing(base_cfg("rebalance_moving", threads));
+        cfg.rebalance_threshold = 1.05;
+        let result = run_simulation(&cfg, |_| CellClustering::new(&cfg));
+        assert_eq!(result.final_agents, N_AGENTS as u64, "t{threads}");
+        assert_no_checkpoint_involvement(&result, &format!("moving/t{threads}"));
+        result
+    };
+    let r1 = run(1);
+    let r2 = run(2);
+    let r8 = run(8);
+
+    // Bitwise across thread counts of the same rebalancing schedule.
+    assert_eq!(positions(&r1), positions(&r2), "moving rebalance diverged at 2 threads");
+    assert_eq!(positions(&r1), positions(&r8), "moving rebalance diverged at 8 threads");
+    assert_eq!(r1.stream_crcs, r2.stream_crcs, "streams diverged at 2 threads");
+    assert_eq!(r1.stream_crcs, r8.stream_crcs, "streams diverged at 8 threads");
+
+    // Tolerance vs the never-rebalanced oracle.
+    let sort = |r: &RunResult| {
+        let mut p: Vec<[f64; 3]> =
+            r.final_snapshot.iter().map(|(p, _, _)| p.to_array()).collect();
+        p.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        p
+    };
+    let (a, b) = (sort(&r1), sort(&oracle));
+    assert_eq!(a.len(), b.len(), "moving: agent counts differ");
+    for (i, (pa, pb)) in a.iter().zip(&b).enumerate() {
+        for d in 0..3 {
+            assert!(
+                (pa[d] - pb[d]).abs() < 1e-6,
+                "moving: agent {i} axis {d}: {} vs {}",
+                pa[d],
+                pb[d]
+            );
+        }
+    }
+}
